@@ -1,0 +1,85 @@
+//! Ablation A — BLAS-1 offload break-even (paper §4: "level 1 operations
+//! start to have a speedup > 1 only for very large vectors (N>5e5)"
+//! citing Morris 2016 — the reason gmatrix/gputools keep vector updates on
+//! the CPU).
+//!
+//! Modeled curve on the paper testbed + measured XLA-vs-host comparison on
+//! this machine for the artifact sizes.
+
+use gmres_rs::backend::rvec;
+use gmres_rs::linalg::{blas, generators};
+use gmres_rs::report::sweep;
+use gmres_rs::runtime::Runtime;
+use gmres_rs::util::bench::{black_box, Bencher, Table};
+
+fn main() -> anyhow::Result<()> {
+    // ---- modeled break-even curve (Morris-2016 regime) ----
+    let mut t = Table::new(&["N", "modeled offload speedup"]);
+    for k in 12..=23 {
+        let n = 1usize << k;
+        t.row(&[n.to_string(), format!("{:.3}", sweep::blas1_offload_speedup(n))]);
+    }
+    println!("Ablation A — modeled gvector-op speedup vs plain R (840M testbed):\n");
+    println!("{}", t.render());
+    let be = sweep::blas1_breakeven_n();
+    println!("break-even N = {be}  (paper/Morris 2016 claim: > 5e5)\n");
+    assert!(be > 100_000, "break-even must be in the paper's regime");
+
+    // ---- measured on this host: native axpy/dot vs R-semantics ----
+    let b = Bencher::default();
+    let mut t =
+        Table::new(&["N", "native axpy", "rvec axpy", "native dot", "rvec dot", "rvec/native"]);
+    for &n in &[1_000usize, 10_000, 100_000, 1_000_000] {
+        let x = generators::random_vector(n, 1);
+        let mut y = generators::random_vector(n, 2);
+        let native_axpy = b.run(|| {
+            blas::axpy(1.0001, &x, &mut y);
+        });
+        let rvec_axpy = b.run(|| black_box(rvec::sub_scaled(&y, 1.0001, &x)));
+        let native_dot = b.run(|| black_box(blas::dot(&x, &y)));
+        let rvec_dot = b.run(|| black_box(rvec::dot(&x, &y)));
+        t.row(&[
+            n.to_string(),
+            native_axpy.human(),
+            rvec_axpy.human(),
+            native_dot.human(),
+            rvec_dot.human(),
+            format!("{:.1}x", rvec_axpy.mean / native_axpy.mean.max(1e-12)),
+        ]);
+    }
+    println!("measured host BLAS-1 (native in-place vs R copy-on-modify semantics):\n");
+    println!("{}", t.render());
+
+    // ---- measured XLA dispatch cost for blas1 (why offload loses small) ----
+    match Runtime::from_env() {
+        Ok(rt) => {
+            let mut t = Table::new(&["N", "xla axpy (e2e)", "native axpy", "xla/native"]);
+            for n in rt.manifest().sizes() {
+                let x = generators::random_vector(n, 3);
+                let mut y2 = generators::random_vector(n, 4);
+                let exe = rt.load(&format!("axpy_{n}"))?;
+                let xl = Bencher::default().run(|| {
+                    let a = Runtime::scalar_literal(1.0001);
+                    let xv = Runtime::vector_literal(&x);
+                    let yv = Runtime::vector_literal(&y2);
+                    let out = rt.execute_literals(&exe, &[a, xv, yv]).unwrap();
+                    black_box(Runtime::tuple1_vec(out).unwrap())
+                });
+                let nat = Bencher::default().run(|| {
+                    blas::axpy(1.0001, &x, &mut y2);
+                });
+                t.row(&[
+                    n.to_string(),
+                    xl.human(),
+                    nat.human(),
+                    format!("{:.0}x", xl.mean / nat.mean.max(1e-12)),
+                ]);
+            }
+            println!("measured offloaded axpy (PJRT round-trip) vs native — the measured");
+            println!("analogue of the break-even effect:\n");
+            println!("{}", t.render());
+        }
+        Err(e) => eprintln!("[measured xla] skipped: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Ablation D — restart length m: cycles-to-converge, total work, and
+//! modeled per-policy solve time as m varies (the knob the paper fixes
+//! silently; it moves the device-residency working set AND the host-op
+//! count quadratically).
+
+use gmres_rs::backend::{build_engine, Policy};
+use gmres_rs::device::costs;
+use gmres_rs::device::memory::working_set_bytes;
+use gmres_rs::gmres::{GmresConfig, RestartedGmres};
+use gmres_rs::linalg::generators;
+use gmres_rs::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let n = 600;
+    println!("Ablation D — restart length sweep at N={n} (tol 1e-8):\n");
+    let mut t = Table::new(&[
+        "m",
+        "cycles",
+        "matvecs",
+        "native wall [ms]",
+        "modeled serial-R [s]",
+        "modeled gpuR [s]",
+        "vcl working set [MB]",
+    ]);
+    for &m in &[2usize, 5, 10, 20, 30, 60] {
+        let (a, b, _) = generators::table1_system(n, 11);
+        let mut engine = build_engine(Policy::SerialNative, a, b, m, None, false)?;
+        let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-8, max_restarts: 500 });
+        let rep = solver.solve(engine.as_mut(), None)?;
+        assert!(rep.converged, "m={m} did not converge");
+        let matvecs = rep.cycles * (m + 2);
+        t.row(&[
+            m.to_string(),
+            rep.cycles.to_string(),
+            matvecs.to_string(),
+            format!("{:.2}", rep.wall_seconds * 1e3),
+            format!("{:.3}", costs::predict_seconds(Policy::SerialR, n, m, rep.cycles)),
+            format!("{:.3}", costs::predict_seconds(Policy::GpurVclLike, n, m, rep.cycles)),
+            format!("{:.2}", working_set_bytes(n, m, Policy::GpurVclLike) as f64 / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("larger m: fewer cycles but quadratically more orthogonalization work");
+    println!("and a larger device working set (the paper's memory cap bites sooner).");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Table 1 + Figure 5 regeneration bench (the paper's headline evaluation).
+//!
+//! Two parts:
+//!  1. **modeled** — the full paper sweep N=1000..10000 on the calibrated
+//!     840M/interpreted-R cost model (cycle counts from real native solves).
+//!  2. **measured** — real wallclock on this host over the artifact sizes,
+//!     PJRT CPU as the device (skipped when artifacts are missing).
+//!
+//! `cargo bench --bench bench_table1` — also writes figure5.csv.
+
+use std::rc::Rc;
+
+use gmres_rs::report::{figure5, sweep, table1, SweepConfig};
+use gmres_rs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // ---- modeled full sweep (the Table 1 / Figure 5 reproduction) ----
+    let cfg = SweepConfig::default(); // paper sizes, m=30, modeled
+    eprintln!("[modeled] sweeping {:?} ...", cfg.sizes);
+    let records = sweep::table1_sweep(&cfg, None)?;
+    println!("{}", table1::render(&records, false));
+    println!("{}", table1::render_shape_checks(&records, false));
+    println!("{}", figure5::render_ascii(&records, false));
+    let csv_path = "figure5.csv";
+    figure5::write_csv(&records, false, std::fs::File::create(csv_path)?)?;
+    println!("wrote {csv_path}\n");
+
+    // ---- measured sweep over whatever artifacts exist ----
+    match Runtime::from_env() {
+        Ok(rt) => {
+            let rt = Rc::new(rt);
+            let sizes = rt.manifest().sizes();
+            let m = rt.manifest().m;
+            let cfg = SweepConfig { sizes, m, measured: true, ..Default::default() };
+            eprintln!("[measured] sweeping {:?} (m={m}) ...", cfg.sizes);
+            let records = sweep::table1_sweep(&cfg, Some(rt))?;
+            println!("{}", table1::render(&records, true));
+            println!("(measured axis: XLA-CPU device vs R-semantics host on this machine)");
+            let csv_path = "figure5_measured.csv";
+            figure5::write_csv(&records, true, std::fs::File::create(csv_path)?)?;
+            println!("wrote {csv_path}");
+        }
+        Err(e) => eprintln!("[measured] skipped: {e}"),
+    }
+    Ok(())
+}

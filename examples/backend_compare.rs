@@ -1,0 +1,91 @@
+//! Compare all five offload policies on one system — the Table-1 experiment
+//! at a single size, with the modeled cost breakdown per policy.
+//!
+//! ```bash
+//! make artifacts SIZES="256" M=8   # device policies need AOT artifacts
+//! cargo run --release --example backend_compare -- --n 256 --m 8
+//! ```
+
+use std::rc::Rc;
+
+use gmres_rs::backend::{build_engine, Policy};
+use gmres_rs::gmres::{GmresConfig, RestartedGmres};
+use gmres_rs::linalg::generators;
+use gmres_rs::runtime::Runtime;
+use gmres_rs::util::bench::Table;
+use gmres_rs::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let n = args.get_parse("n", 256usize)?;
+    let m = args.get_parse("m", 8usize)?;
+    let seed = args.get_parse("seed", 42u64)?;
+
+    let runtime = match Runtime::from_env() {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("note: runtime unavailable ({e}); GPU policies skipped");
+            None
+        }
+    };
+
+    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-8, max_restarts: 100 });
+    let mut table = Table::new(&[
+        "policy",
+        "cycles",
+        "rel_res",
+        "wall [ms]",
+        "modeled [ms]",
+        "speedup",
+        "kernel%",
+        "transfer%",
+        "host%",
+        "dispatch%",
+    ]);
+
+    let mut serial_sim = None;
+    for policy in Policy::all() {
+        if policy.needs_runtime() && runtime.is_none() {
+            continue;
+        }
+        let (a, b, _) = generators::table1_system(n, seed);
+        let mut engine = build_engine(policy, a, b, m, runtime.clone(), /* trace */ true)?;
+        let report = solver.solve(engine.as_mut(), None)?;
+        assert!(report.converged, "{policy} failed to converge");
+
+        let sim = engine.sim();
+        let total = sim.elapsed();
+        if policy == Policy::SerialR {
+            serial_sim = Some(total);
+        }
+        let pct = |part: f64| {
+            if total > 0.0 {
+                format!("{:.0}%", 100.0 * part / total)
+            } else {
+                "-".into()
+            }
+        };
+        let speedup = match serial_sim {
+            Some(s) if total > 0.0 => format!("{:.2}", s / total),
+            _ => "-".into(),
+        };
+        table.row(&[
+            policy.name().into(),
+            report.cycles.to_string(),
+            format!("{:.1e}", report.rel_resnorm),
+            format!("{:.2}", report.wall_seconds * 1e3),
+            format!("{:.2}", total * 1e3),
+            speedup,
+            pct(sim.trace().kernel_seconds()),
+            pct(sim.trace().transfer_seconds()),
+            pct(sim.trace().host_seconds()),
+            pct(sim.trace().overhead_seconds()),
+        ]);
+    }
+
+    println!("backend comparison at N={n}, m={m} (modeled = paper testbed):\n");
+    println!("{}", table.render());
+    println!("(the speedup column reproduces one Table-1 row; run");
+    println!(" `gmres-rs sweep --what table1` for the full table)");
+    Ok(())
+}

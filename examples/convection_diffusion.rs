@@ -1,0 +1,114 @@
+//! Domain workload: 2-D convection–diffusion (the nonsymmetric PDE system
+//! GMRES was built for), with and without preconditioning.
+//!
+//! ```bash
+//! cargo run --release --example convection_diffusion -- --nx 40 --ny 40 --cx 20 --cy 10
+//! ```
+//!
+//! Demonstrates the CSR substrate + preconditioner composition with the
+//! plain Arnoldi/Givens core (host path; the paper's dense offload policies
+//! apply to the densified operator — see `backend_compare`).
+
+use gmres_rs::gmres::arnoldi::{arnoldi, Ortho};
+use gmres_rs::gmres::givens;
+use gmres_rs::gmres::precond::{Ilu0, Jacobi, PreconditionedOperator, Preconditioner};
+use gmres_rs::linalg::{blas, generators, LinearOperator};
+use gmres_rs::util::bench::Table;
+use gmres_rs::util::cli::Args;
+
+/// Restarted GMRES over any LinearOperator via the plain Arnoldi core.
+fn gmres_operator(
+    op: &dyn LinearOperator,
+    b: &[f64],
+    m: usize,
+    tol: f64,
+    max_restarts: usize,
+) -> (Vec<f64>, f64, usize) {
+    let n = b.len();
+    let mut x = vec![0.0; n];
+    let bnorm = blas::nrm2(b).max(f64::MIN_POSITIVE);
+    let mut cycles = 0;
+    loop {
+        let mut r = b.to_vec();
+        let ax = op.apply(&x);
+        for (ri, ai) in r.iter_mut().zip(&ax) {
+            *ri -= ai;
+        }
+        let f = arnoldi(op, &r, m, Ortho::Mgs);
+        if f.k == 0 {
+            return (x, blas::nrm2(&r), cycles);
+        }
+        let (y, _) = givens::solve_ls(&f.h, f.beta, f.k);
+        for (j, &yj) in y.iter().enumerate() {
+            blas::axpy(yj, &f.v[j], &mut x);
+        }
+        cycles += 1;
+        let mut r2 = b.to_vec();
+        let ax2 = op.apply(&x);
+        for (ri, ai) in r2.iter_mut().zip(&ax2) {
+            *ri -= ai;
+        }
+        let res = blas::nrm2(&r2);
+        if res <= tol * bnorm || cycles >= max_restarts {
+            return (x, res, cycles);
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let nx = args.get_parse("nx", 40usize)?;
+    let ny = args.get_parse("ny", 40usize)?;
+    let cx = args.get_parse("cx", 20.0f64)?;
+    let cy = args.get_parse("cy", 10.0f64)?;
+    let m = args.get_parse("m", 30usize)?;
+    let tol = 1e-8;
+
+    let a = generators::convection_diffusion_2d(nx, ny, cx, cy);
+    let n = a.nrows();
+    let x_true = generators::random_vector(n, 3);
+    let b = a.apply(&x_true);
+    println!(
+        "convection–diffusion: {nx}x{ny} grid (N={n}), convection ({cx}, {cy}), nnz={}",
+        a.nnz()
+    );
+
+    let preconds: Vec<(&str, Option<Box<dyn Preconditioner>>)> = vec![
+        ("none", None),
+        ("jacobi", Some(Box::new(Jacobi::from_csr(&a)))),
+        ("ilu0", Some(Box::new(Ilu0::from_csr(&a)?))),
+    ];
+
+    let mut table =
+        Table::new(&["preconditioner", "cycles", "rel_res", "err vs truth", "wall [ms]"]);
+    for (name, pre) in preconds {
+        let t0 = std::time::Instant::now();
+        let (x, res, cycles) = match &pre {
+            None => gmres_operator(&a, &b, m, tol, 500),
+            Some(p) => {
+                let op = PreconditionedOperator { op: &a, m: p.as_ref() };
+                let pb = p.apply(&b);
+                let (x, _res_pre, cycles) = gmres_operator(&op, &pb, m, tol, 500);
+                // report the TRUE residual, not the preconditioned one
+                let mut r = b.clone();
+                let ax = a.apply(&x);
+                for (ri, ai) in r.iter_mut().zip(&ax) {
+                    *ri -= ai;
+                }
+                (x, blas::nrm2(&r), cycles)
+            }
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        table.row(&[
+            name.into(),
+            cycles.to_string(),
+            format!("{:.1e}", res / blas::nrm2(&b)),
+            format!("{:.1e}", gmres_rs::linalg::vector::rel_err(&x, &x_true)),
+            format!("{:.1}", wall * 1e3),
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!("ILU(0) collapses the cycle count — the extension the paper's §5");
+    println!("points to for fitting bigger effective problems on-device.");
+    Ok(())
+}

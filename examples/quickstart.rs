@@ -1,0 +1,34 @@
+//! Quickstart: solve a dense nonsymmetric system with restarted GMRES.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the pure-host native backend (no artifacts needed).  See
+//! `backend_compare.rs` for the GPU offload policies and
+//! `solver_service.rs` for the full L3 service.
+
+use gmres_rs::backend::{build_engine, Policy};
+use gmres_rs::gmres::{GmresConfig, RestartedGmres};
+use gmres_rs::linalg::generators;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A reproducible test system: dense nonsymmetric, known solution.
+    let n = 500;
+    let (a, b, x_true) = generators::table1_system(n, /* seed */ 7);
+
+    // 2. Pick an offload policy.  SerialNative = compiled host baseline.
+    let mut engine = build_engine(Policy::SerialNative, a, b, /* m */ 30, None, false)?;
+
+    // 3. Configure and run restarted GMRES(30).
+    let solver = RestartedGmres::new(GmresConfig { m: 30, tol: 1e-8, max_restarts: 100 });
+    let report = solver.solve(engine.as_mut(), None)?;
+
+    println!("{}", report.summary());
+    println!("residual trail: {:?}", report.history.resnorms);
+    let err = gmres_rs::linalg::vector::rel_err(&report.x, &x_true);
+    println!("error vs known solution: {err:.2e}");
+    assert!(report.converged && err < 1e-6);
+    println!("quickstart OK");
+    Ok(())
+}

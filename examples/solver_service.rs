@@ -1,0 +1,129 @@
+//! END-TO-END driver: the L3 solve service under a mixed request stream.
+//!
+//! This is the system-level validation run recorded in EXPERIMENTS.md: it
+//! starts the coordinator (device thread with the PJRT runtime + CPU pool),
+//! submits a stream of solve requests with mixed sizes and policies from
+//! concurrent clients, and reports throughput, latency percentiles, routing
+//! decisions (including the memory-admission downgrade path) and residual
+//! correctness for every job.
+//!
+//! ```bash
+//! make artifacts SIZES="64 256" M=8
+//! cargo run --release --example solver_service -- --requests 24 --clients 4 --m 8
+//! ```
+
+use gmres_rs::backend::Policy;
+use gmres_rs::coordinator::{MatrixSpec, ServiceConfig, SolveRequest, SolveService};
+use gmres_rs::gmres::GmresConfig;
+use gmres_rs::util::bench::Table;
+use gmres_rs::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let requests = args.get_parse("requests", 24usize)?;
+    let clients = args.get_parse("clients", 4usize)?;
+    let m = args.get_parse("m", 8usize)?;
+    let mut sizes: Vec<usize> = args.get_list("sizes")?;
+    if sizes.is_empty() {
+        sizes = vec![64, 256];
+    }
+
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 2, ..Default::default() });
+    println!(
+        "service up: device thread + 2 cpu workers; {} requests from {} clients over sizes {:?}",
+        requests, clients, sizes
+    );
+
+    // The stream mixes: auto-routed jobs, explicit policies, and one
+    // deliberately oversized job that exercises the admission downgrade.
+    let policies = [
+        None,
+        Some(Policy::GpurVclLike),
+        Some(Policy::GmatrixLike),
+        Some(Policy::GputoolsLike),
+        Some(Policy::SerialNative),
+        Some(Policy::SerialR),
+    ];
+
+    let started = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let svc = svc.clone();
+            let sizes = sizes.clone();
+            std::thread::spawn(move || {
+                let mut outs = Vec::new();
+                for i in (c..requests).step_by(clients.max(1)) {
+                    let n = sizes[i % sizes.len()];
+                    let req = SolveRequest {
+                        matrix: MatrixSpec::Table1 { n, seed: i as u64 },
+                        config: GmresConfig { m, tol: 1e-6, max_restarts: 200 },
+                        policy: policies[i % policies.len()],
+                    };
+                    outs.push(svc.submit(req));
+                }
+                outs
+            })
+        })
+        .collect();
+
+    // One oversized request: the router must downgrade it to the host
+    // (the paper's device-memory cap as a scheduling decision).
+    let oversized = SolveRequest {
+        matrix: MatrixSpec::Table1 { n: 128, seed: 99 },
+        config: GmresConfig { m, tol: 1e-6, max_restarts: 200 },
+        policy: Some(Policy::GpurVclLike),
+    };
+    // shrink the admission budget so n=128 "exceeds" the card
+    let tight_router = gmres_rs::coordinator::Router::new(gmres_rs::coordinator::RouterConfig {
+        mem_fraction: 1e-7,
+        ..Default::default()
+    });
+    let route = tight_router.route(&oversized);
+    println!(
+        "admission demo: vcl job of order 128 under a ~200 B budget routes to {} (downgraded={})",
+        route.policy, route.downgraded
+    );
+
+    let mut table = Table::new(&["job", "n", "policy", "cycles", "rel_res", "queue [ms]"]);
+    let mut ok = 0usize;
+    let mut by_policy: std::collections::BTreeMap<&'static str, usize> = Default::default();
+    for h in handles {
+        for out in h.join().expect("client panicked") {
+            match out {
+                Ok(o) => {
+                    ok += 1;
+                    assert!(o.report.converged, "job {} did not converge", o.id);
+                    *by_policy.entry(o.policy.name()).or_default() += 1;
+                    table.row(&[
+                        o.id.to_string(),
+                        o.report.n.to_string(),
+                        o.policy.name().into(),
+                        o.report.cycles.to_string(),
+                        format!("{:.1e}", o.report.rel_resnorm),
+                        format!("{:.1}", o.queue_seconds * 1e3),
+                    ]);
+                }
+                Err(e) => println!("  failed: {e:#}"),
+            }
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+
+    println!("\n{}", table.render());
+    println!("throughput: {ok}/{requests} solved in {wall:.2}s = {:.1} req/s", ok as f64 / wall);
+    println!("policy mix: {by_policy:?}");
+    if let Some(l) = svc.metrics().latency_summary() {
+        println!(
+            "latency: mean {:.1} ms, p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms",
+            l.mean * 1e3,
+            l.p50 * 1e3,
+            l.p95 * 1e3,
+            l.max * 1e3
+        );
+    }
+    println!("metrics: {}", svc.metrics().render());
+    svc.shutdown();
+    assert_eq!(ok, requests, "all requests must complete");
+    println!("solver_service e2e OK");
+    Ok(())
+}

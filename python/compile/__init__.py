@@ -1,0 +1,9 @@
+"""Compile-path package: L1 Pallas kernels + L2 JAX graphs + AOT lowering.
+
+Build-time only — nothing here is imported on the Rust request path.
+float64 is enabled before any other jax use (R's numeric type is double).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,160 @@
+"""AOT lowering: L2 graphs -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and /opt/xla-example/README.md.
+
+Usage (from python/):
+
+    python -m compile.aot --outdir ../artifacts --sizes 256 512 1000 2000 --m 30
+
+Artifacts written per size N:
+
+    gemv_<N>.hlo.txt            (A[N,N], x[N])      -> (y[N],)
+    gemv_nm_<N>_<m>.hlo.txt     (V[N,m+1], y[m+1])  -> (x[N],)   panel gemv
+    gemv_t_<N>_<m>.hlo.txt      (V[N,m+1], w[N])    -> (h[m+1],) projections
+    dot_<N>.hlo.txt             (x[N], y[N])        -> (s,)
+    axpy_<N>.hlo.txt            (a[], x[N], y[N])   -> (z[N],)
+    nrm2_<N>.hlo.txt            (x[N],)             -> (s,)
+    residual_<N>.hlo.txt        (A[N,N], b[N], x[N])-> (r[N], s)
+    arnoldi_cycle_<N>_<m>.hlo.txt (A[N,N], b[N], x0[N]) -> (x[N], s)
+
+plus ``manifest.json`` describing every artifact (op, shapes, dtype) —
+the Rust artifact registry validates against it at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def artifact_plan(n: int, m: int):
+    """(name, fn, arg_specs, result_arity) for every artifact at size n."""
+    return [
+        (f"gemv_{n}", model.gemv_fn, [spec(n, n), spec(n)], 1),
+        (f"gemv_nm_{n}_{m}", model.gemv_fn, [spec(n, m + 1), spec(m + 1)], 1),
+        (f"gemv_t_{n}_{m}", model.gemv_t_fn, [spec(n, m + 1), spec(n)], 1),
+        (f"dot_{n}", model.dot_fn, [spec(n), spec(n)], 1),
+        (f"axpy_{n}", model.axpy_fn, [spec(), spec(n), spec(n)], 1),
+        (f"scal_{n}", model.scal_fn, [spec(), spec(n)], 1),
+        (f"nrm2_{n}", model.nrm2_fn, [spec(n)], 1),
+        (f"residual_{n}", model.residual_fn, [spec(n, n), spec(n), spec(n)], 2),
+        (
+            f"arnoldi_cycle_{n}_{m}",
+            model.arnoldi_cycle_fn(m),
+            [spec(n, n), spec(n), spec(n)],
+            2,
+        ),
+    ]
+
+
+def lower_one(name, fn, arg_specs, arity, outdir: pathlib.Path, manifest: dict):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = outdir / f"{name}.hlo.txt"
+    path.write_text(text)
+    manifest["artifacts"][name] = {
+        "file": path.name,
+        "args": [list(s.shape) for s in arg_specs],
+        "dtype": "f64",
+        "results": arity,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "bytes": len(text),
+    }
+    print(f"  {name}: {len(text)} chars in {time.time() - t0:.1f}s", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat alias for --outdir (file's parent)")
+    ap.add_argument("--sizes", type=int, nargs="+", default=[64, 256, 512, 1000, 2000])
+    ap.add_argument("--m", type=int, default=30, help="GMRES restart length")
+    ap.add_argument("--only", nargs="*", default=None, help="artifact-name prefixes to emit")
+    ap.add_argument(
+        "--flavor",
+        choices=["pallas", "xla"],
+        default="xla",
+        help="kernel lowering: pallas (TPU-tiled L1, interpret) or xla "
+        "(XLA-native CPU hot path; default — see EXPERIMENTS.md Perf)",
+    )
+    args = ap.parse_args(argv)
+    model.set_flavor(args.flavor)
+
+    outdir = pathlib.Path(args.out).parent if args.out else pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    manifest_path = outdir / "manifest.json"
+    manifest = {"dtype": "f64", "m": args.m, "sizes": args.sizes,
+                "flavor": args.flavor, "artifacts": {}}
+    if manifest_path.exists():
+        try:
+            old = json.loads(manifest_path.read_text())
+            manifest["artifacts"].update(old.get("artifacts", {}))
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    for n in args.sizes:
+        print(f"lowering size N={n} (m={args.m})", flush=True)
+        for name, fn, specs_, arity in artifact_plan(n, args.m):
+            if args.only and not any(name.startswith(p) for p in args.only):
+                continue
+            lower_one(name, fn, specs_, arity, outdir, manifest)
+
+    manifest_path.write_text(json.dumps(manifest, indent=1, sort_keys=True))
+    write_tsv(outdir / "manifest.tsv", manifest)
+    print(f"manifest: {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+    return 0
+
+
+def write_tsv(path: pathlib.Path, manifest: dict) -> None:
+    """TSV manifest for the Rust runtime (offline build: no JSON dep).
+
+    Columns: name, file, results, sha256, arg shapes ("RxC" dims, "-" for
+    rank-0 scalars, space-separated).
+    """
+    lines = [f"#dtype\t{manifest['dtype']}", f"#m\t{manifest['m']}"]
+    for name in sorted(manifest["artifacts"]):
+        meta = manifest["artifacts"][name]
+        shapes = " ".join(
+            "x".join(str(d) for d in shape) if shape else "-" for shape in meta["args"]
+        )
+        lines.append(
+            f"{name}\t{meta['file']}\t{meta['results']}\t{meta['sha256']}\t{shapes}"
+        )
+    path.write_text("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

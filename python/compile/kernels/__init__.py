@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for the GMRES offload-policy study.
+
+Every kernel here is the TPU-minded reimplementation of the CUDA kernels
+the R packages (gmatrix / gputools / gpuR) dispatch to.  The GPU -> TPU
+mapping is described in DESIGN.md section Hardware-Adaptation: threadblock
+tiling becomes BlockSpec HBM->VMEM scheduling, warp reductions become
+grid-dimension accumulators, and the MXU is engaged through panel
+contractions on (8,128)-aligned tiles.
+
+All kernels are lowered with ``interpret=True`` -- the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode traces to plain HLO
+so the AOT artifacts run anywhere (see /opt/xla-example/README.md).
+
+Public entry points (all operate on float64, padding internally to tile
+multiples):
+
+- ``gemv.gemv``    -- ``y = A @ x``    (BLAS-2, the GMRES hot spot)
+- ``gemv.gemv_t``  -- ``y = A.T @ x``  (Arnoldi projections)
+- ``blas1.axpy``   -- ``y = a*x + y``
+- ``blas1.dot``    -- ``<x, y>``
+- ``blas1.nrm2``   -- ``||x||_2``
+- ``blas1.scal``   -- ``a * x``
+"""
+
+from . import blas1, gemv, ref  # noqa: F401

@@ -1,0 +1,107 @@
+"""Level-1 BLAS Pallas kernels (axpy / dot / nrm2 / scal).
+
+The paper keeps these on the CPU for the gmatrix/gputools policies because
+offloading them only breaks even for N > 5e5 (Morris 2016); the gpuR ``vcl``
+policy runs them on the device to avoid round-trips.  We implement them as
+kernels anyway so (a) the full-offload policy is faithful and (b) the
+break-even ablation (DESIGN.md Ablation A) has a real kernel to model.
+
+Reductions (dot, nrm2) use the grid-dimension-accumulator idiom: the scalar
+output block is revisited on every grid step and accumulated in place,
+zero-initialised on step 0 — the declarative TPU analogue of the two-stage
+(intra-block shared memory, inter-block atomics) CUDA reduction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemv import _pad_to
+
+# One VREG-friendly sliver per step; f64 so 8 KiB per input block.
+TILE = 1024
+
+
+def _axpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+@jax.jit
+def axpy(a: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """``a*x + y`` elementwise; ``a`` is a scalar passed as shape-(1,)."""
+    n = x.shape[0]
+    x_p = _pad_to(x, 0, TILE)
+    y_p = _pad_to(y, 0, TILE)
+    a1 = jnp.reshape(a, (1,)).astype(x.dtype)
+    out = pl.pallas_call(
+        _axpy_kernel,
+        grid=(x_p.shape[0] // TILE,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x_p.shape, x.dtype),
+        interpret=True,
+    )(a1, x_p, y_p)
+    return out[:n]
+
+
+def _scal_kernel(a_ref, x_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...]
+
+
+@jax.jit
+def scal(a: jax.Array, x: jax.Array) -> jax.Array:
+    """``a * x`` elementwise; ``a`` is a scalar passed as shape-(1,)."""
+    n = x.shape[0]
+    x_p = _pad_to(x, 0, TILE)
+    a1 = jnp.reshape(a, (1,)).astype(x.dtype)
+    out = pl.pallas_call(
+        _scal_kernel,
+        grid=(x_p.shape[0] // TILE,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x_p.shape, x.dtype),
+        interpret=True,
+    )(a1, x_p)
+    return out[:n]
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...] * y_ref[...], keepdims=True)
+
+
+@jax.jit
+def dot(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``<x, y>`` returned as a scalar."""
+    x_p = _pad_to(x, 0, TILE)
+    y_p = _pad_to(y, 0, TILE)
+    out = pl.pallas_call(
+        _dot_kernel,
+        grid=(x_p.shape[0] // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x_p, y_p)
+    return out[0]
+
+
+@jax.jit
+def nrm2(x: jax.Array) -> jax.Array:
+    """Euclidean norm ``||x||_2`` via the dot-reduction kernel."""
+    return jnp.sqrt(dot(x, x))

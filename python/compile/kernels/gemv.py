@@ -1,0 +1,122 @@
+"""Tiled GEMV Pallas kernels — the GMRES hot spot (level-2 BLAS).
+
+The CUDA kernels behind ``gmatrix``/``gputools``/``gpuR`` tile the
+matrix-vector product over threadblocks with shared-memory staging and
+warp-level reductions.  The TPU re-think (DESIGN.md section
+Hardware-Adaptation):
+
+* BlockSpec declares the HBM->VMEM schedule: A is streamed as
+  ``(TILE_R, TILE_C)`` panels, the vector as ``(TILE_C,)`` slivers.
+* The reduction over column tiles is carried by a *grid dimension*: the
+  output block is revisited for every column step and accumulated in
+  place (``pl.when`` zero-init on the first step) — the TPU analogue of a
+  warp-shuffle reduction tree.
+* The panel product ``A_tile @ x_tile`` is a (TILE_R, TILE_C) x (TILE_C,)
+  contraction the Mosaic compiler maps onto the MXU systolic array; tiles
+  are (8,128)-aligned so no relayout is needed.
+
+f64 everywhere: the paper's R baseline is double precision, and GMRES
+orthogonalization is not f32-safe at N=10^4.
+
+VMEM budget per grid step (f64): A tile 128x512 = 512 KiB, x sliver 4 KiB,
+y tile 1 KiB — comfortably within a 16 MiB VMEM with double-buffering
+headroom (see DESIGN.md section Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row tile: 8-sublane multiple; column tile: 128-lane multiple.  512 columns
+# amortizes the accumulator revisit while keeping the A panel at 512 KiB.
+TILE_R = 128
+TILE_C = 512
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple.
+
+    Zero padding is exact for every kernel in this package: padded rows
+    produce y entries that are sliced away, padded columns contribute 0 to
+    every dot product.
+    """
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref):
+    # Grid is (row_tiles, col_tiles); dim 1 is the reduction dimension.
+    @pl.when(pl.program_id(1) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (TILE_R, TILE_C) @ (TILE_C,) panel contraction -> MXU.
+    o_ref[...] += a_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gemv(a: jax.Array, x: jax.Array) -> jax.Array:
+    """``y = A @ x`` for a dense (rows, cols) f64 matrix via the tiled kernel."""
+    rows, cols = a.shape
+    a_p = _pad_to(_pad_to(a, 0, TILE_R), 1, TILE_C)
+    x_p = _pad_to(x, 0, TILE_C)
+    pr, pc = a_p.shape
+    grid = (pr // TILE_R, pc // TILE_C)
+    y = pl.pallas_call(
+        _gemv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_C,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pr,), a.dtype),
+        interpret=True,
+    )(a_p, x_p)
+    return y[:rows]
+
+
+def _gemv_t_kernel(a_ref, x_ref, o_ref):
+    # Grid is (col_tiles, row_tiles); dim 1 (rows of A) is the reduction.
+    @pl.when(pl.program_id(1) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (TILE_C,) += (TILE_R, TILE_C).T @ (TILE_R,)
+    o_ref[...] += a_ref[...].T @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gemv_t(a: jax.Array, x: jax.Array) -> jax.Array:
+    """``y = A.T @ x`` for a dense (rows, cols) f64 matrix.
+
+    Used for the Arnoldi projection block ``h = V^T w`` where V is the
+    (N, m+1) Krylov basis — the transpose contraction keeps V in its
+    natural layout instead of materializing V^T in HBM.
+    """
+    rows, cols = a.shape
+    a_p = _pad_to(_pad_to(a, 0, TILE_R), 1, TILE_C)
+    x_p = _pad_to(x, 0, TILE_R)
+    pr, pc = a_p.shape
+    grid = (pc // TILE_C, pr // TILE_R)
+    y = pl.pallas_call(
+        _gemv_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_R, TILE_C), lambda j, i: (i, j)),
+            pl.BlockSpec((TILE_R,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_C,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((pc,), a.dtype),
+        interpret=True,
+    )(a_p, x_p)
+    return y[:cols]

@@ -1,0 +1,94 @@
+"""Pure-jnp / numpy correctness oracles for every kernel and L2 graph.
+
+These are the CORE correctness signal of the compile path: pytest asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated shapes
+and contents before any artifact is trusted (python/tests/).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# BLAS oracles (pure jnp — same dtype semantics as the kernels)
+# ---------------------------------------------------------------------------
+
+def gemv(a, x):
+    return jnp.asarray(a) @ jnp.asarray(x)
+
+
+def gemv_t(a, x):
+    return jnp.asarray(a).T @ jnp.asarray(x)
+
+
+def axpy(alpha, x, y):
+    return jnp.asarray(alpha) * jnp.asarray(x) + jnp.asarray(y)
+
+
+def scal(alpha, x):
+    return jnp.asarray(alpha) * jnp.asarray(x)
+
+
+def dot(x, y):
+    return jnp.dot(jnp.asarray(x), jnp.asarray(y))
+
+
+def nrm2(x):
+    return jnp.linalg.norm(jnp.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Restarted GMRES oracle (numpy, Kelley 1995 — the paper's algorithm 1)
+# ---------------------------------------------------------------------------
+
+def gmres_cycle(a: np.ndarray, b: np.ndarray, x0: np.ndarray, m: int):
+    """One GMRES(m) cycle with modified Gram-Schmidt Arnoldi.
+
+    Returns ``(x_m, resnorm)`` — the same contract as the fused
+    ``arnoldi_cycle`` L2 graph, so the two can be compared directly.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    x0 = np.asarray(x0, dtype=np.float64)
+    n = b.shape[0]
+    r0 = b - a @ x0
+    beta = np.linalg.norm(r0)
+    if beta == 0.0:
+        return x0, 0.0
+    v = np.zeros((n, m + 1))
+    h = np.zeros((m + 1, m))
+    v[:, 0] = r0 / beta
+    k = m
+    for j in range(m):
+        w = a @ v[:, j]
+        for i in range(j + 1):
+            h[i, j] = v[:, i] @ w
+            w = w - h[i, j] * v[:, i]
+        h[j + 1, j] = np.linalg.norm(w)
+        if h[j + 1, j] <= 1e-14 * beta:
+            k = j + 1
+            break
+        v[:, j + 1] = w / h[j + 1, j]
+    # Least squares min || beta e1 - H y ||, H is (k+1, k).
+    e1 = np.zeros(k + 1)
+    e1[0] = beta
+    y, *_ = np.linalg.lstsq(h[: k + 1, :k], e1, rcond=None)
+    x = x0 + v[:, :k] @ y
+    return x, float(np.linalg.norm(b - a @ x))
+
+
+def gmres(a, b, x0=None, m: int = 30, tol: float = 1e-8, max_restarts: int = 50):
+    """Full restarted GMRES oracle.  Returns ``(x, resnorm, n_cycles)``."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    x = np.zeros_like(b) if x0 is None else np.asarray(x0, dtype=np.float64)
+    bnorm = np.linalg.norm(b)
+    target = tol * (bnorm if bnorm > 0 else 1.0)
+    res = float(np.linalg.norm(b - a @ x))
+    cycles = 0
+    while res > target and cycles < max_restarts:
+        x, res = gmres_cycle(a, b, x, m)
+        cycles += 1
+    return x, res, cycles

@@ -1,0 +1,234 @@
+"""Layer-2 JAX compute graphs for the GMRES offload-policy study.
+
+Each public builder returns a function suitable for ``jax.jit(...).lower()``
+at a fixed shape; ``aot.py`` lowers them to HLO text artifacts the Rust
+runtime loads.  All functions return tuples (the Rust loader unwraps with
+``to_tuple1``/``to_tupleN``).
+
+Graphs and the offload policy they serve (DESIGN.md section 4):
+
+- ``gemv_fn``          -- ``y = A @ x``; the only graph the gmatrix-like and
+  gputools-like policies use (matvec-only offload).
+- ``dot_fn`` / ``axpy_fn`` / ``nrm2_fn`` / ``scal_fn`` -- BLAS-1 graphs for
+  the full-offload policy and the break-even ablation (Ablation A).
+- ``arnoldi_cycle_fn`` -- one fused GMRES(m) cycle: Arnoldi with classical
+  Gram-Schmidt projections expressed as GEMV-T/GEMV panel ops (the paper's
+  pseudocode lines 3-4), Givens least squares, new iterate, new residual
+  norm.  This is the device-resident graph behind the gpuR-vcl-like policy:
+  one dispatch per restart cycle, 8 bytes (the residual norm) read back.
+
+Everything is float64 -- enabled in :mod:`compile` before other jax use.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import blas1, gemv  # noqa: E402
+
+BREAKDOWN_EPS = 1e-14
+
+# ---------------------------------------------------------------------------
+# Kernel flavor (EXPERIMENTS.md section Perf)
+#
+# "pallas"  — the L1 tiled kernels under interpret=True.  The TPU target:
+#             BlockSpec tiling is the deliverable; on CPU the interpreted
+#             grid lowers to an XLA while-loop the CPU backend cannot fuse.
+# "xla"     — the same L2 graphs over XLA-native ops (jnp).  The CPU
+#             deployment flavor: XLA fuses the whole cycle; measured-axis
+#             hot path.  Numerics agree to f64 round-off (pytest).
+#
+# Selected at lowering time by aot.py (--flavor) via set_flavor().
+# ---------------------------------------------------------------------------
+
+_FLAVOR = "pallas"
+
+
+def set_flavor(flavor: str) -> None:
+    global _FLAVOR
+    assert flavor in ("pallas", "xla"), flavor
+    _FLAVOR = flavor
+
+
+def _gemv(a, x):
+    if _FLAVOR == "xla":
+        return a @ x
+    return gemv.gemv(a, x)
+
+
+def _gemv_t(a, x):
+    if _FLAVOR == "xla":
+        return a.T @ x
+    return gemv.gemv_t(a, x)
+
+
+def _dot(x, y):
+    if _FLAVOR == "xla":
+        return jnp.dot(x, y)
+    return blas1.dot(x, y)
+
+
+def _axpy(alpha, x, y):
+    if _FLAVOR == "xla":
+        return alpha * x + y
+    return blas1.axpy(alpha, x, y)
+
+
+def _scal(alpha, x):
+    if _FLAVOR == "xla":
+        return alpha * x
+    return blas1.scal(alpha, x)
+
+
+def _nrm2(x):
+    if _FLAVOR == "xla":
+        return jnp.sqrt(jnp.dot(x, x))
+    return blas1.nrm2(x)
+
+
+# ---------------------------------------------------------------------------
+# BLAS graphs (thin wrappers so each lowers to a standalone artifact)
+# ---------------------------------------------------------------------------
+
+def gemv_fn(a, x):
+    return (_gemv(a, x),)
+
+
+def gemv_t_fn(a, x):
+    return (_gemv_t(a, x),)
+
+
+def dot_fn(x, y):
+    return (_dot(x, y),)
+
+
+def axpy_fn(alpha, x, y):
+    return (_axpy(alpha, x, y),)
+
+
+def scal_fn(alpha, x):
+    return (_scal(alpha, x),)
+
+
+def nrm2_fn(x):
+    return (_nrm2(x),)
+
+
+def residual_fn(a, b, x):
+    """``r = b - A x`` and its norm — the per-restart check (line 9-10)."""
+    r = b - _gemv(a, x)
+    return (r, _nrm2(r))
+
+
+# ---------------------------------------------------------------------------
+# Givens least-squares (device-side, small dense (m+1, m) problem)
+# ---------------------------------------------------------------------------
+
+def givens_lstsq(h, beta, m: int):
+    """Solve ``min_y || beta*e1 - H y ||`` for Hessenberg H of shape (m+1, m).
+
+    QR by Givens rotations, unrolled at trace time (m is static and small —
+    O(m^2) scalar graph, negligible next to the O(N m) panel ops).  Singular
+    / breakdown columns are guarded with a tiny diagonal floor so the graph
+    never emits NaN; the Rust driver treats the returned residual norm as
+    authoritative.
+    """
+    r = h
+    g = jnp.zeros(m + 1, dtype=h.dtype).at[0].set(beta)
+    for j in range(m):
+        a_ = r[j, j]
+        b_ = r[j + 1, j]
+        denom = jnp.sqrt(a_ * a_ + b_ * b_)
+        safe = denom > BREAKDOWN_EPS
+        denom = jnp.where(safe, denom, 1.0)
+        c = jnp.where(safe, a_ / denom, 1.0)
+        s = jnp.where(safe, b_ / denom, 0.0)
+        row_j = c * r[j, :] + s * r[j + 1, :]
+        row_j1 = -s * r[j, :] + c * r[j + 1, :]
+        r = r.at[j, :].set(row_j).at[j + 1, :].set(row_j1)
+        gj = c * g[j] + s * g[j + 1]
+        gj1 = -s * g[j] + c * g[j + 1]
+        g = g.at[j].set(gj).at[j + 1].set(gj1)
+    # Back substitution on the (m, m) upper triangle with a diagonal floor.
+    # Unrolled by hand: jax.scipy.solve_triangular lowers to a LAPACK FFI
+    # custom-call on CPU, which the Rust-side xla_extension 0.5.1 cannot
+    # execute — this loop stays pure HLO.
+    idx = jnp.arange(m)
+    rd = r[:m, :m][idx, idx]
+    floor = jnp.where(jnp.abs(rd) > BREAKDOWN_EPS, rd, BREAKDOWN_EPS)
+    rm = r[:m, :m].at[idx, idx].set(floor)
+    y = jnp.zeros(m, dtype=h.dtype)
+    for i in range(m - 1, -1, -1):
+        acc = g[i] - (rm[i, i + 1:] @ y[i + 1:] if i + 1 < m else 0.0)
+        y = y.at[i].set(acc / rm[i, i])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Fused GMRES(m) cycle — the gpuR/vcl device-resident graph
+# ---------------------------------------------------------------------------
+
+def arnoldi_cycle_fn(m: int):
+    """Build the fused cycle graph for restart length ``m``.
+
+    ``fn(A, b, x0) -> (x_m, resnorm)`` — one call performs:
+      r0 = b - A x0; beta = ||r0||; m Arnoldi steps (classical Gram-Schmidt,
+      the paper's lines 3-4, as two panel products V^T w and V h); Givens
+      least squares; x_m = x0 + V_m y; resnorm = ||b - A x_m||.
+
+    The Arnoldi loop is a ``lax.scan`` so the artifact contains ONE copy of
+    the step graph regardless of m (no unrolled blow-up); the Krylov basis V
+    and Hessenberg H live in the carry — device-resident state, exactly the
+    vcl-object semantics the paper describes for gpuR.
+    """
+
+    def fn(a, b, x0):
+        n = b.shape[0]
+        dtype = b.dtype
+        r0 = b - _gemv(a, x0)
+        beta = _nrm2(r0)
+        beta_safe = jnp.where(beta > BREAKDOWN_EPS, beta, 1.0)
+        v0 = r0 / beta_safe
+        v_basis = jnp.zeros((n, m + 1), dtype=dtype).at[:, 0].set(v0)
+        h_mat = jnp.zeros((m + 1, m), dtype=dtype)
+        iota = jnp.arange(m + 1)
+
+        def step(carry, j):
+            v_b, h_m = carry
+            vj = jax.lax.dynamic_slice_in_dim(v_b, j, 1, axis=1)[:, 0]
+            w = _gemv(a, vj)
+            # Classical Gram-Schmidt projections against the first j+1
+            # basis vectors as ONE panel product (columns > j of V are
+            # zero, the mask keeps h exact even after a breakdown).
+            h_full = _gemv_t(v_b, w)
+            h_col = jnp.where(iota <= j, h_full, 0.0)
+            w = w - _gemv(v_b, h_col)
+            hj1 = _nrm2(w)
+            broke = hj1 <= BREAKDOWN_EPS
+            vnext = jnp.where(broke, jnp.zeros_like(w), w / jnp.where(broke, 1.0, hj1))
+            v_b = jax.lax.dynamic_update_slice_in_dim(
+                v_b, vnext[:, None], j + 1, axis=1
+            )
+            h_col = jnp.where(iota == j + 1, jnp.where(broke, 0.0, hj1), h_col)
+            h_m = jax.lax.dynamic_update_slice_in_dim(
+                h_m, h_col[:, None], j, axis=1
+            )
+            return (v_b, h_m), hj1
+
+        (v_basis, h_mat), _ = jax.lax.scan(step, (v_basis, h_mat), jnp.arange(m))
+        y = givens_lstsq(h_mat, beta, m)
+        # x = x0 + V[:, :m] @ y — pad y to m+1 so the panel GEMV reuses V.
+        y_pad = jnp.zeros(m + 1, dtype=dtype).at[:m].set(y)
+        x = x0 + _gemv(v_basis, y_pad)
+        res = _nrm2(b - _gemv(a, x))
+        # beta == 0 means x0 was already exact; pass it through untouched.
+        exact = beta <= BREAKDOWN_EPS
+        x = jnp.where(exact, x0, x)
+        res = jnp.where(exact, 0.0, res)
+        return (x, res)
+
+    return fn

@@ -1,0 +1,79 @@
+"""AOT path tests: lowering produces parseable HLO text with the right
+entry signature, the manifest is consistent, and the CLI is idempotent."""
+
+import json
+import pathlib
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    rc = aot.main(["--outdir", str(d), "--sizes", "16", "--m", "4"])
+    assert rc == 0
+    return d
+
+
+def manifest(outdir):
+    return json.loads((outdir / "manifest.json").read_text())
+
+
+class TestAotOutputs:
+    def test_all_artifacts_written(self, outdir):
+        m = manifest(outdir)
+        names = set(m["artifacts"])
+        expected = {
+            "gemv_16", "gemv_nm_16_4", "gemv_t_16_4", "dot_16", "axpy_16",
+            "scal_16", "nrm2_16", "residual_16", "arnoldi_cycle_16_4",
+        }
+        assert expected <= names
+        for meta in m["artifacts"].values():
+            assert (outdir / meta["file"]).exists()
+
+    def test_hlo_text_is_parseable_hlo(self, outdir):
+        text = (outdir / "gemv_16.hlo.txt").read_text()
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        assert "f64" in text  # double precision throughout
+
+    def test_entry_signature_gemv(self, outdir):
+        # Signature is recorded in the entry_computation_layout header.
+        header = (outdir / "gemv_16.hlo.txt").read_text().splitlines()[0]
+        assert "f64[16,16]" in header and "f64[16]" in header
+        assert re.search(r"->\s*\(f64\[16\]", header)
+
+    def test_entry_signature_cycle(self, outdir):
+        header = (outdir / "arnoldi_cycle_16_4.hlo.txt").read_text().splitlines()[0]
+        assert header.count("f64[16,16]") >= 1
+        assert re.search(r"->\s*\(f64\[16\]\{0\},\s*f64\[\]\)", header)
+
+    def test_manifest_hashes_match_files(self, outdir):
+        import hashlib
+        m = manifest(outdir)
+        for meta in m["artifacts"].values():
+            text = (outdir / meta["file"]).read_text()
+            assert hashlib.sha256(text.encode()).hexdigest() == meta["sha256"]
+
+    def test_no_custom_call_in_artifacts(self, outdir):
+        # interpret=True must lower pallas to plain HLO — a custom-call
+        # would be unloadable by the CPU PJRT client.
+        for f in outdir.glob("*.hlo.txt"):
+            assert "custom-call" not in f.read_text(), f.name
+
+    def test_scan_not_unrolled(self, outdir):
+        # The m-step Arnoldi loop must stay a while loop (one step body),
+        # not m inlined copies — that is the no-blow-up guarantee.
+        text = (outdir / "arnoldi_cycle_16_4.hlo.txt").read_text()
+        assert "while(" in text or "while (" in text
+
+    def test_rerun_merges_manifest(self, outdir):
+        rc = aot.main(["--outdir", str(outdir), "--sizes", "8", "--m", "4",
+                       "--only", "gemv_8"])
+        assert rc == 0
+        m = manifest(outdir)
+        assert "gemv_8" in m["artifacts"]
+        assert "gemv_16" in m["artifacts"]  # old entries preserved

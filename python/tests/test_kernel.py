@@ -1,0 +1,156 @@
+"""Kernel vs pure-jnp oracle — the CORE correctness signal of the compile path.
+
+Hypothesis sweeps shapes (including non-tile-multiple and degenerate sizes)
+and contents; every kernel must match ``ref.py`` to f64 round-off.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blas1, gemv, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _mat(rng, rows, cols, scale=1.0):
+    return scale * rng.standard_normal((rows, cols))
+
+
+# sizes deliberately straddle the 128/512/1024 tile boundaries
+DIMS = st.sampled_from([1, 2, 7, 64, 127, 128, 129, 200, 511, 513, 1025])
+
+
+@st.composite
+def gemv_case(draw):
+    rows = draw(DIMS)
+    cols = draw(DIMS)
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return _mat(rng, rows, cols), rng.standard_normal(cols), rng.standard_normal(rows)
+
+
+class TestGemv:
+    @settings(**SETTINGS)
+    @given(gemv_case())
+    def test_matches_ref(self, case):
+        a, x, _ = case
+        np.testing.assert_allclose(gemv.gemv(a, x), ref.gemv(a, x), rtol=1e-12, atol=1e-12)
+
+    @settings(**SETTINGS)
+    @given(gemv_case())
+    def test_transpose_matches_ref(self, case):
+        a, _, w = case
+        np.testing.assert_allclose(gemv.gemv_t(a, w), ref.gemv_t(a, w), rtol=1e-12, atol=1e-12)
+
+    def test_zero_matrix(self):
+        a = np.zeros((130, 70))
+        x = np.ones(70)
+        np.testing.assert_array_equal(np.asarray(gemv.gemv(a, x)), np.zeros(130))
+
+    def test_identity(self):
+        n = 200
+        x = np.arange(n, dtype=np.float64)
+        np.testing.assert_allclose(gemv.gemv(np.eye(n), x), x, rtol=0, atol=0)
+
+    def test_exact_tile_multiple(self):
+        rng = np.random.default_rng(7)
+        a = _mat(rng, gemv.TILE_R * 2, gemv.TILE_C)
+        x = rng.standard_normal(gemv.TILE_C)
+        np.testing.assert_allclose(gemv.gemv(a, x), a @ x, rtol=1e-12, atol=1e-12)
+
+    def test_large_values_no_overflow_from_padding(self):
+        # Padding must contribute exactly zero even for large magnitudes.
+        rng = np.random.default_rng(8)
+        a = _mat(rng, 100, 100, scale=1e150)
+        x = rng.standard_normal(100)
+        np.testing.assert_allclose(gemv.gemv(a, x), a @ x, rtol=1e-12)
+
+    def test_f64_dtype_preserved(self):
+        rng = np.random.default_rng(9)
+        a = _mat(rng, 10, 10)
+        out = gemv.gemv(a, rng.standard_normal(10))
+        assert str(out.dtype) == "float64"
+
+
+@st.composite
+def vec_pair(draw):
+    n = draw(DIMS)
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(n), rng.standard_normal(n), rng.standard_normal()
+
+
+class TestBlas1:
+    @settings(**SETTINGS)
+    @given(vec_pair())
+    def test_axpy(self, case):
+        x, y, a = case
+        np.testing.assert_allclose(blas1.axpy(a, x, y), ref.axpy(a, x, y), rtol=1e-12, atol=1e-12)
+
+    @settings(**SETTINGS)
+    @given(vec_pair())
+    def test_scal(self, case):
+        x, _, a = case
+        np.testing.assert_allclose(blas1.scal(a, x), ref.scal(a, x), rtol=1e-12, atol=1e-12)
+
+    @settings(**SETTINGS)
+    @given(vec_pair())
+    def test_dot(self, case):
+        x, y, _ = case
+        np.testing.assert_allclose(blas1.dot(x, y), ref.dot(x, y), rtol=1e-10, atol=1e-10)
+
+    @settings(**SETTINGS)
+    @given(vec_pair())
+    def test_nrm2(self, case):
+        x, _, _ = case
+        np.testing.assert_allclose(blas1.nrm2(x), ref.nrm2(x), rtol=1e-12, atol=1e-12)
+
+    def test_dot_orthogonal(self):
+        x = np.array([1.0, 0.0, 1.0, 0.0])
+        y = np.array([0.0, 1.0, 0.0, 1.0])
+        assert float(blas1.dot(x, y)) == 0.0
+
+    def test_nrm2_zero_vector(self):
+        assert float(blas1.nrm2(np.zeros(1000))) == 0.0
+
+    def test_axpy_alpha_zero_is_y(self):
+        rng = np.random.default_rng(3)
+        x, y = rng.standard_normal(333), rng.standard_normal(333)
+        np.testing.assert_array_equal(np.asarray(blas1.axpy(0.0, x, y)), y)
+
+    def test_padding_does_not_leak(self):
+        # n=1 pads 1023 zeros; the reduction must ignore all of them.
+        assert float(blas1.dot(np.array([3.0]), np.array([4.0]))) == 12.0
+
+
+class TestRefOracle:
+    """Sanity checks on the oracle itself (it guards everything else)."""
+
+    def test_gmres_ref_solves_dd_system(self):
+        rng = np.random.default_rng(0)
+        n = 60
+        a = rng.standard_normal((n, n)) + n * np.eye(n)
+        b = rng.standard_normal(n)
+        x, res, cycles = ref.gmres(a, b, m=20, tol=1e-10)
+        assert res <= 1e-10 * np.linalg.norm(b)
+        np.testing.assert_allclose(a @ x, b, rtol=0, atol=1e-8)
+
+    def test_gmres_ref_identity_one_cycle(self):
+        b = np.arange(1.0, 9.0)
+        x, res, cycles = ref.gmres(np.eye(8), b, m=8, tol=1e-12)
+        np.testing.assert_allclose(x, b, rtol=1e-12)
+        assert cycles == 1
+
+    def test_gmres_cycle_zero_rhs(self):
+        a = np.eye(5)
+        x, res = ref.gmres_cycle(a, np.zeros(5), np.zeros(5), 3)
+        assert res == 0.0
+
+    def test_gmres_ref_exact_after_n_steps(self):
+        rng = np.random.default_rng(5)
+        n = 12
+        a = rng.standard_normal((n, n)) + 3 * np.eye(n)
+        b = rng.standard_normal(n)
+        _, res = ref.gmres_cycle(a, b, np.zeros(n), n)
+        assert res <= 1e-9 * np.linalg.norm(b)

@@ -1,0 +1,120 @@
+//! `gpuR`/vcl policy engine — everything on the device.
+//!
+//! The paper (§4): *“For GMRES we implemented all numerical operations on
+//! GPU using vcl objects and methods: this approach speeds up the
+//! computation but put a limit through the available GPU memory.”*
+//!
+//! Reproduction: the whole GMRES(m) cycle is ONE AOT artifact
+//! (`arnoldi_cycle_<n>_<m>.hlo.txt`, a `lax.scan` over Arnoldi steps with
+//! device-side Givens least squares).  The matrix, RHS and Krylov state are
+//! device-resident; one cycle = one dispatch; the only mandatory readback
+//! is the residual norm (8 bytes) the host needs for the restart decision —
+//! the same asynchronous pattern `vclMatrix` gives R.
+//!
+//! PJRT note: the executable returns a tuple and the `xla` crate cannot
+//! keep tuple elements as device buffers, so the *measured* path reads `x`
+//! back and re-uploads it each restart (extra 16N bytes/cycle on this
+//! testbed); the *modeled* path charges only the 8-byte readback that vcl
+//! would incur.  DESIGN.md §2 records this substitution.
+
+use std::rc::Rc;
+
+use anyhow::anyhow;
+
+use crate::device::DeviceSim;
+use crate::linalg::{blas, DenseMatrix};
+use crate::runtime::Runtime;
+use crate::Result;
+
+use super::{CycleEngine, CycleResult, Policy};
+
+/// Fused-cycle device engine (see module docs).
+pub struct GpurVclEngine {
+    rt: Rc<Runtime>,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    a_buf: xla::PjRtBuffer,
+    b_buf: xla::PjRtBuffer,
+    bnorm: f64,
+    n: usize,
+    m: usize,
+    sim: DeviceSim,
+    charged_setup: bool,
+}
+
+impl GpurVclEngine {
+    pub fn new(rt: Rc<Runtime>, a: DenseMatrix, b: Vec<f64>, m: usize, trace: bool) -> Result<Self> {
+        let n = a.nrows();
+        anyhow::ensure!(a.ncols() == n, "square systems only");
+        anyhow::ensure!(b.len() == n, "rhs length mismatch");
+        let name = format!("arnoldi_cycle_{n}_{m}");
+        let exe = rt.load(&name)?;
+        let a_buf = rt.upload_matrix(&a)?;
+        let b_buf = rt.upload_vector(&b)?;
+        let bnorm = blas::nrm2(&b);
+        Ok(Self {
+            rt,
+            exe,
+            a_buf,
+            b_buf,
+            bnorm,
+            n,
+            m,
+            sim: DeviceSim::paper_testbed(trace),
+            charged_setup: false,
+        })
+    }
+
+    fn charge_setup_once(&mut self) -> Result<()> {
+        if self.charged_setup {
+            return Ok(());
+        }
+        // residency + uploads, via the canonical charge table
+        if !self
+            .sim
+            .would_fit(crate::device::memory::working_set_bytes(self.n, self.m, Policy::GpurVclLike))
+        {
+            return Err(anyhow!("vcl working set exceeds device memory"));
+        }
+        crate::device::costs::charge_setup(&mut self.sim, Policy::GpurVclLike, self.n, self.m);
+        self.charged_setup = true;
+        Ok(())
+    }
+}
+
+impl CycleEngine for GpurVclEngine {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn policy(&self) -> Policy {
+        Policy::GpurVclLike
+    }
+
+    fn bnorm(&self) -> f64 {
+        self.bnorm
+    }
+
+    fn sim(&self) -> &DeviceSim {
+        &self.sim
+    }
+
+    fn cycle(&mut self, x0: &[f64]) -> Result<CycleResult> {
+        anyhow::ensure!(x0.len() == self.n, "x0 length mismatch");
+        self.charge_setup_once()?;
+        // modeled: gpuR's per-operator vcl dispatch pattern (the canonical
+        // charge table; our fused artifact is faster — Ablation E)
+        crate::device::costs::charge_cycle(&mut self.sim, Policy::GpurVclLike, self.n, self.m);
+        // measured: execute with device-resident A, b (x re-staged per the
+        // module-docs substitution)
+        let x_buf = self.rt.upload_vector(x0)?;
+        let out = self
+            .rt
+            .execute_buffers(&self.exe, &[&self.a_buf, &self.b_buf, &x_buf])?;
+        let (x, resnorm) = Runtime::tuple2_vec_scalar(out)?;
+        Ok(CycleResult { x, resnorm })
+    }
+}

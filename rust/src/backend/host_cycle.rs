@@ -1,0 +1,388 @@
+//! Host-orchestrated GMRES(m) cycle — the engine shape shared by the
+//! `serial-r`, `serial-native`, `gmatrix` and `gputools` policies.
+//!
+//! The R implementations in the paper keep the *algorithm* on the host (the
+//! R interpreter) and differ only in where `A v` runs; this engine mirrors
+//! that exactly: one [`MatVecProvider`] (host/device) + one [`HostMode`]
+//! (R-semantics or native) for everything else — projections, vector
+//! updates, norms, the Givens least squares.
+//!
+//! Orthogonalization defaults to classical Gram-Schmidt (the paper's
+//! pseudocode lines 3–4); MGS is available for Ablation C.
+
+use crate::device::DeviceSim;
+use crate::gmres::arnoldi::{Ortho, BREAKDOWN_RTOL};
+use crate::gmres::givens;
+use crate::linalg::blas;
+use crate::Result;
+
+use super::providers::{HostMode, MatVecProvider};
+use super::rvec;
+use super::{CycleEngine, CycleResult, Policy};
+
+/// Host-orchestrated engine.  See module docs.
+pub struct HostCycleEngine<P: MatVecProvider> {
+    policy: Policy,
+    provider: P,
+    b: Vec<f64>,
+    bnorm: f64,
+    n: usize,
+    m: usize,
+    mode: HostMode,
+    ortho: Ortho,
+    sim: DeviceSim,
+}
+
+impl<P: MatVecProvider> HostCycleEngine<P> {
+    pub fn new(
+        policy: Policy,
+        provider: P,
+        b: Vec<f64>,
+        m: usize,
+        mode: HostMode,
+        trace: bool,
+    ) -> Result<Self> {
+        let n = provider.n();
+        anyhow::ensure!(b.len() == n, "rhs length {} != system order {}", b.len(), n);
+        anyhow::ensure!(m >= 1, "restart length must be >= 1");
+        let bnorm = blas::nrm2(&b);
+        Ok(Self {
+            policy,
+            provider,
+            b,
+            bnorm,
+            n,
+            m,
+            mode,
+            ortho: Ortho::Cgs,
+            sim: DeviceSim::paper_testbed(trace),
+        })
+    }
+
+    /// Select the orthogonalization variant (Ablation C).
+    pub fn with_ortho(mut self, ortho: Ortho) -> Self {
+        self.ortho = ortho;
+        self
+    }
+
+    // -- host ops under the selected mode (measured + modeled) --------------
+
+    fn host_sub(&mut self, x: &[f64], y: &[f64]) -> Vec<f64> {
+        match self.mode {
+            HostMode::RSemantics => {
+                self.sim.host_vecop("sub", rvec::vecop_bytes(2, self.n));
+                rvec::sub(x, y)
+            }
+            HostMode::Native => {
+                let mut z = vec![0.0; x.len()];
+                blas::sub_into(x, y, &mut z);
+                z
+            }
+        }
+    }
+
+    fn host_dot(&mut self, x: &[f64], y: &[f64]) -> f64 {
+        match self.mode {
+            HostMode::RSemantics => {
+                self.sim.host_vecop("dot", rvec::vecop_bytes(2, self.n));
+                rvec::dot(x, y)
+            }
+            HostMode::Native => blas::dot(x, y),
+        }
+    }
+
+    fn host_nrm2(&mut self, x: &[f64]) -> f64 {
+        match self.mode {
+            HostMode::RSemantics => {
+                self.sim.host_vecop("nrm2", rvec::vecop_bytes(1, self.n));
+                rvec::nrm2(x)
+            }
+            HostMode::Native => blas::nrm2(x),
+        }
+    }
+
+    /// `w <- w - h*v` under host semantics.
+    fn host_sub_scaled(&mut self, w: Vec<f64>, h: f64, v: &[f64]) -> Vec<f64> {
+        match self.mode {
+            HostMode::RSemantics => {
+                // two fresh allocations: `h*v`, then the subtraction
+                self.sim.host_vecop("scale", rvec::vecop_bytes(1, self.n));
+                self.sim.host_vecop("sub", rvec::vecop_bytes(2, self.n));
+                rvec::sub_scaled(&w, h, v)
+            }
+            HostMode::Native => {
+                let mut w = w;
+                blas::axpy(-h, v, &mut w);
+                w
+            }
+        }
+    }
+
+    fn host_scale(&mut self, a: f64, x: &[f64]) -> Vec<f64> {
+        match self.mode {
+            HostMode::RSemantics => {
+                self.sim.host_vecop("scale", rvec::vecop_bytes(1, self.n));
+                rvec::scale(a, x)
+            }
+            HostMode::Native => {
+                let mut y = x.to_vec();
+                blas::scal(a, &mut y);
+                y
+            }
+        }
+    }
+
+    /// `x <- x + a*v` under host semantics.
+    fn host_axpy(&mut self, x: Vec<f64>, a: f64, v: &[f64]) -> Vec<f64> {
+        match self.mode {
+            HostMode::RSemantics => {
+                self.sim.host_vecop("scale", rvec::vecop_bytes(1, self.n));
+                self.sim.host_vecop("add", rvec::vecop_bytes(2, self.n));
+                rvec::add(&x, &rvec::scale(a, v))
+            }
+            HostMode::Native => {
+                let mut x = x;
+                blas::axpy(a, v, &mut x);
+                x
+            }
+        }
+    }
+}
+
+impl<P: MatVecProvider> CycleEngine for HostCycleEngine<P> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    fn bnorm(&self) -> f64 {
+        self.bnorm
+    }
+
+    fn sim(&self) -> &DeviceSim {
+        &self.sim
+    }
+
+    fn cycle(&mut self, x0: &[f64]) -> Result<CycleResult> {
+        anyhow::ensure!(x0.len() == self.n, "x0 length mismatch");
+        let m = self.m;
+
+        // r0 = b - A x0
+        let ax0 = self.provider.matvec(x0, &mut self.sim)?;
+        let b = self.b.clone();
+        let r0 = self.host_sub(&b, &ax0);
+        let beta = self.host_nrm2(&r0);
+        if beta == 0.0 {
+            return Ok(CycleResult { x: x0.to_vec(), resnorm: 0.0 });
+        }
+
+        // v_1 = r0 / beta
+        let mut v: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+        v.push(self.host_scale(1.0 / beta, &r0));
+        let mut h = givens::zero_hessenberg(m);
+
+        let mut k = m;
+        for j in 0..m {
+            let mut w = self.provider.matvec(&v[j], &mut self.sim)?;
+            match self.ortho {
+                Ortho::Cgs => {
+                    // paper lines 3–4: all h_ij from the unmodified A v_j
+                    let mut coeffs = Vec::with_capacity(j + 1);
+                    for i in 0..=j {
+                        coeffs.push(self.host_dot(&w, &v[i]));
+                    }
+                    for (i, &hij) in coeffs.iter().enumerate() {
+                        h[i][j] = hij;
+                        w = self.host_sub_scaled(w, hij, &v[i]);
+                    }
+                }
+                Ortho::Mgs => {
+                    for i in 0..=j {
+                        let hij = self.host_dot(&w, &v[i]);
+                        h[i][j] = hij;
+                        w = self.host_sub_scaled(w, hij, &v[i]);
+                    }
+                }
+            }
+            let hj1 = self.host_nrm2(&w);
+            h[j + 1][j] = hj1;
+            if hj1 <= BREAKDOWN_RTOL * beta {
+                k = j + 1;
+                break;
+            }
+            v.push(self.host_scale(1.0 / hj1, &w));
+        }
+
+        // least squares on the host (R does this with small dense ops)
+        if self.mode == HostMode::RSemantics {
+            self.sim.host_scalar_ops("givens-ls", givens::flops(k));
+        }
+        let (y, _implied) = givens::solve_ls(&h, beta, k);
+
+        // x = x0 + V_k y
+        let mut x = x0.to_vec();
+        for (j, &yj) in y.iter().enumerate() {
+            x = self.host_axpy(x, yj, &v[j]);
+        }
+
+        // true residual for the restart test (paper line 9)
+        let ax = self.provider.matvec(&x, &mut self.sim)?;
+        let r = self.host_sub(&b, &ax);
+        let resnorm = self.host_nrm2(&r);
+        Ok(CycleResult { x, resnorm })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::providers::{NativeMatVec, RVecMatVec};
+    use crate::linalg::generators;
+
+    fn engine_native(n: usize, m: usize, seed: u64) -> (HostCycleEngine<NativeMatVec>, Vec<f64>) {
+        let (a, b, xt) = generators::table1_system(n, seed);
+        let e = HostCycleEngine::new(
+            Policy::SerialNative,
+            NativeMatVec::new(a),
+            b,
+            m,
+            HostMode::Native,
+            false,
+        )
+        .unwrap();
+        (e, xt)
+    }
+
+    #[test]
+    fn native_cycle_reduces_residual() {
+        let (mut e, _) = engine_native(60, 12, 0);
+        let r = e.cycle(&vec![0.0; 60]).unwrap();
+        assert!(r.resnorm < e.bnorm());
+    }
+
+    #[test]
+    fn repeated_cycles_converge_to_truth() {
+        let (mut e, xt) = engine_native(50, 10, 1);
+        let mut x = vec![0.0; 50];
+        for _ in 0..8 {
+            let r = e.cycle(&x).unwrap();
+            x = r.x;
+        }
+        let err = crate::linalg::vector::rel_err(&x, &xt);
+        assert!(err < 1e-8, "err {err}");
+    }
+
+    #[test]
+    fn rsemantics_equals_native_numerics() {
+        // R semantics changes COST, never VALUES (CGS order is identical)
+        let (a, b, _) = generators::table1_system(40, 2);
+        let mut en = HostCycleEngine::new(
+            Policy::SerialNative,
+            NativeMatVec::new(a.clone()),
+            b.clone(),
+            8,
+            HostMode::Native,
+            false,
+        )
+        .unwrap();
+        let mut er = HostCycleEngine::new(
+            Policy::SerialR,
+            RVecMatVec::new(a),
+            b,
+            8,
+            HostMode::RSemantics,
+            false,
+        )
+        .unwrap();
+        let x0 = vec![0.0; 40];
+        let rn = en.cycle(&x0).unwrap();
+        let rr = er.cycle(&x0).unwrap();
+        let d = crate::linalg::vector::max_abs_diff(&rn.x, &rr.x);
+        assert!(d < 1e-12, "diff {d}");
+    }
+
+    #[test]
+    fn rsemantics_charges_modeled_time_native_does_not() {
+        let (a, b, _) = generators::table1_system(30, 3);
+        let mut er = HostCycleEngine::new(
+            Policy::SerialR,
+            RVecMatVec::new(a.clone()),
+            b.clone(),
+            5,
+            HostMode::RSemantics,
+            false,
+        )
+        .unwrap();
+        er.cycle(&vec![0.0; 30]).unwrap();
+        assert!(er.sim().elapsed() > 0.0);
+
+        let mut en = HostCycleEngine::new(
+            Policy::SerialNative,
+            NativeMatVec::new(a),
+            b,
+            5,
+            HostMode::Native,
+            false,
+        )
+        .unwrap();
+        en.cycle(&vec![0.0; 30]).unwrap();
+        assert_eq!(en.sim().elapsed(), 0.0);
+    }
+
+    #[test]
+    fn mgs_variant_also_converges() {
+        let (a, b, xt) = generators::table1_system(50, 4);
+        let mut e = HostCycleEngine::new(
+            Policy::SerialNative,
+            NativeMatVec::new(a),
+            b,
+            10,
+            HostMode::Native,
+            false,
+        )
+        .unwrap()
+        .with_ortho(Ortho::Mgs);
+        let mut x = vec![0.0; 50];
+        for _ in 0..8 {
+            x = e.cycle(&x).unwrap().x;
+        }
+        assert!(crate::linalg::vector::rel_err(&x, &xt) < 1e-8);
+    }
+
+    #[test]
+    fn exact_x0_returns_zero_residual() {
+        let (a, b, xt) = generators::table1_system(20, 5);
+        let mut e = HostCycleEngine::new(
+            Policy::SerialNative,
+            NativeMatVec::new(a),
+            b,
+            4,
+            HostMode::Native,
+            false,
+        )
+        .unwrap();
+        let r = e.cycle(&xt).unwrap();
+        assert!(r.resnorm < 1e-10);
+    }
+
+    #[test]
+    fn rhs_length_mismatch_rejected() {
+        let a = crate::linalg::DenseMatrix::identity(4);
+        assert!(HostCycleEngine::new(
+            Policy::SerialNative,
+            NativeMatVec::new(a),
+            vec![1.0; 5],
+            2,
+            HostMode::Native,
+            false
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Offload-policy backends — the system contribution of the paper, made
+//! explicit.
+//!
+//! Each of the paper's four R implementations is reproduced as a
+//! [`CycleEngine`]: an object that owns the system matrix (wherever its
+//! policy says it lives), runs one restarted-GMRES(m) cycle per call, and
+//! charges every modeled cost to its [`DeviceSim`].
+//!
+//! | engine               | paper analogue        | matvec            | host ops | device-resident |
+//! |----------------------|-----------------------|-------------------|----------|-----------------|
+//! | [`serial_r`]         | `pracma::gmres` in R  | interpreted host  | R-sem    | —               |
+//! | [`serial_native`]    | tuned C/BLAS baseline | native host       | native   | —               |
+//! | [`gmatrix_like`]     | `gmatrix`             | device (resident A)| R-sem   | A               |
+//! | [`gputools_like`]    | `gputools`            | device (A per call)| R-sem   | transient       |
+//! | [`gpur_vcl_like`]    | `gpuR` vcl objects    | fused device cycle| —        | A, V, H, x      |
+//!
+//! The measured numerics of device policies run on the PJRT executor
+//! ([`crate::runtime::Runtime`]); the modeled times come from
+//! [`crate::device::DeviceSim`].
+
+pub mod fused;
+pub mod host_cycle;
+pub mod providers;
+pub mod rvec;
+
+pub use fused::GpurVclEngine;
+pub use host_cycle::HostCycleEngine;
+
+use std::rc::Rc;
+
+use crate::device::DeviceSim;
+use crate::linalg::DenseMatrix;
+use crate::runtime::Runtime;
+use crate::Result;
+
+/// The paper's four implementations (plus the tuned-native extra baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Serial interpreted R (`pracma::gmres`) — the Table-1 denominator.
+    SerialR,
+    /// Serial compiled Rust — the "tuned linear algebra library" the paper's
+    /// §5 compares against.
+    SerialNative,
+    /// Matrix resident on device, matvec-only offload, vector transfers per
+    /// call (`gmatrix`).
+    GmatrixLike,
+    /// Matrix + vector transferred every call (`gputools::gpuMatMult`).
+    GputoolsLike,
+    /// Everything device-resident and asynchronous (`gpuR` vcl objects).
+    GpurVclLike,
+}
+
+impl Policy {
+    pub fn all() -> [Policy; 5] {
+        [
+            Policy::SerialR,
+            Policy::SerialNative,
+            Policy::GmatrixLike,
+            Policy::GputoolsLike,
+            Policy::GpurVclLike,
+        ]
+    }
+
+    /// The three GPU policies of Table 1.
+    pub fn gpu_policies() -> [Policy; 3] {
+        [Policy::GmatrixLike, Policy::GputoolsLike, Policy::GpurVclLike]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::SerialR => "serial-r",
+            Policy::SerialNative => "serial-native",
+            Policy::GmatrixLike => "gmatrix",
+            Policy::GputoolsLike => "gputools",
+            Policy::GpurVclLike => "gpuR",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "serial-r" | "serial" | "pracma" => Some(Policy::SerialR),
+            "serial-native" | "native" => Some(Policy::SerialNative),
+            "gmatrix" => Some(Policy::GmatrixLike),
+            "gputools" => Some(Policy::GputoolsLike),
+            "gpuR" | "gpur" | "vcl" => Some(Policy::GpurVclLike),
+            _ => None,
+        }
+    }
+
+    /// Does this policy need the PJRT runtime (i.e. offload anything)?
+    pub fn needs_runtime(&self) -> bool {
+        !matches!(self, Policy::SerialR | Policy::SerialNative)
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Result of one GMRES(m) cycle.
+#[derive(Clone, Debug)]
+pub struct CycleResult {
+    /// Iterate after the cycle.
+    pub x: Vec<f64>,
+    /// `||b - A x||_2` after the cycle.
+    pub resnorm: f64,
+}
+
+/// One restarted-GMRES cycle under a fixed offload policy.
+///
+/// Engines are stateful: construction uploads whatever the policy keeps
+/// device-resident and charges those costs once (exactly like the R code
+/// creating `gmatrix()`/`vclMatrix()` objects before iterating).
+pub trait CycleEngine {
+    /// Problem order.
+    fn n(&self) -> usize;
+    /// Restart length m.
+    fn m(&self) -> usize;
+    /// Which policy this engine implements.
+    fn policy(&self) -> Policy;
+    /// Run one GMRES(m) cycle from `x0` for the engine's `(A, b)`.
+    fn cycle(&mut self, x0: &[f64]) -> Result<CycleResult>;
+    /// The engine's cost simulator (modeled clock + trace).
+    fn sim(&self) -> &DeviceSim;
+    /// `||b||` (engines precompute it).
+    fn bnorm(&self) -> f64;
+}
+
+/// Build the engine for `policy` over dense `(a, b)` with restart `m`.
+///
+/// `runtime` may be `None` for the serial policies; GPU policies fail fast
+/// with a helpful message if it is missing.
+pub fn build_engine(
+    policy: Policy,
+    a: DenseMatrix,
+    b: Vec<f64>,
+    m: usize,
+    runtime: Option<Rc<Runtime>>,
+    trace: bool,
+) -> Result<Box<dyn CycleEngine>> {
+    use providers::{DeviceResidentMatVec, DeviceTransferMatVec, HostMode, NativeMatVec, RVecMatVec};
+    let mk_rt = || {
+        runtime
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("policy {policy} needs the PJRT runtime (artifacts)"))
+    };
+    match policy {
+        Policy::SerialR => {
+            let mv = RVecMatVec::new(a);
+            Ok(Box::new(HostCycleEngine::new(policy, mv, b, m, HostMode::RSemantics, trace)?))
+        }
+        Policy::SerialNative => {
+            let mv = NativeMatVec::new(a);
+            Ok(Box::new(HostCycleEngine::new(policy, mv, b, m, HostMode::Native, trace)?))
+        }
+        Policy::GmatrixLike => {
+            let mv = DeviceResidentMatVec::new(mk_rt()?, a)?;
+            Ok(Box::new(HostCycleEngine::new(policy, mv, b, m, HostMode::RSemantics, trace)?))
+        }
+        Policy::GputoolsLike => {
+            let mv = DeviceTransferMatVec::new(mk_rt()?, a)?;
+            Ok(Box::new(HostCycleEngine::new(policy, mv, b, m, HostMode::RSemantics, trace)?))
+        }
+        Policy::GpurVclLike => Ok(Box::new(GpurVclEngine::new(mk_rt()?, a, b, m, trace)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in Policy::all() {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("nope"), None);
+    }
+
+    #[test]
+    fn runtime_requirements() {
+        assert!(!Policy::SerialR.needs_runtime());
+        assert!(Policy::GpurVclLike.needs_runtime());
+        assert!(Policy::GputoolsLike.needs_runtime());
+    }
+
+    #[test]
+    fn gpu_policy_build_without_runtime_fails() {
+        let a = DenseMatrix::identity(4);
+        let err = build_engine(Policy::GmatrixLike, a, vec![1.0; 4], 2, None, false);
+        assert!(err.is_err());
+    }
+}

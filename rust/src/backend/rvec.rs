@@ -1,0 +1,129 @@
+//! R-semantics vector engine — the honest serial baseline.
+//!
+//! The paper's denominator is `pracma::gmres` running in the R interpreter.
+//! R's performance character comes from two mechanical properties we
+//! reproduce rather than hand-wave:
+//!
+//! 1. **copy-on-modify**: every arithmetic expression allocates a fresh
+//!    vector (`w <- w - h*v` builds `h*v`, then a second full vector for the
+//!    subtraction, then rebinds).  We allocate exactly the intermediates R
+//!    would.
+//! 2. **scalar interpreted loops with boxing** cannot happen inside
+//!    vectorized primitives (those call C), so vector primitives are the
+//!    unit of dispatch; each primitive pays a dispatch overhead.  The
+//!    *modeled* cost of that dispatch is charged by the caller via
+//!    [`crate::device::DeviceSim::host_vecop`]; the *measured* cost here is
+//!    the genuine allocation traffic.
+//!
+//! The matvec mirrors R's `%*%`: a call into single-threaded reference
+//! dgemv — a plain row-wise loop, allocating the result.
+
+/// `x + y` allocating (R: `x + y`).
+pub fn add(x: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len(), "R would recycle; we require equal length");
+    let mut out = Vec::with_capacity(x.len());
+    for i in 0..x.len() {
+        out.push(x[i] + y[i]);
+    }
+    out
+}
+
+/// `x - y` allocating.
+pub fn sub(x: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    let mut out = Vec::with_capacity(x.len());
+    for i in 0..x.len() {
+        out.push(x[i] - y[i]);
+    }
+    out
+}
+
+/// `a * x` allocating (R: `a * x`).
+pub fn scale(a: f64, x: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(x.len());
+    for i in 0..x.len() {
+        out.push(a * x[i]);
+    }
+    out
+}
+
+/// `w - h*v` as R evaluates it: TWO allocations (the `h*v` temporary, then
+/// the subtraction result).
+pub fn sub_scaled(w: &[f64], h: f64, v: &[f64]) -> Vec<f64> {
+    let tmp = scale(h, v);
+    sub(w, &tmp)
+}
+
+/// `sum(x * y)` as R evaluates `crossprod`-free code: allocate `x * y`,
+/// then reduce.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut prod = Vec::with_capacity(x.len());
+    for i in 0..x.len() {
+        prod.push(x[i] * y[i]);
+    }
+    let mut s = 0.0;
+    for v in &prod {
+        s += v;
+    }
+    s
+}
+
+/// `sqrt(sum(x^2))` — two allocations and a reduction, like `norm(x, "2")`
+/// in plain R code.
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// `A %*% x` via reference dgemv (single-threaded row loop, allocating).
+pub fn matvec(a: &crate::linalg::DenseMatrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), a.ncols());
+    let mut y = Vec::with_capacity(a.nrows());
+    for i in 0..a.nrows() {
+        let row = a.row(i);
+        let mut acc = 0.0;
+        for j in 0..row.len() {
+            acc += row[j] * x[j];
+        }
+        y.push(acc);
+    }
+    y
+}
+
+/// Bytes of memory traffic an R vecop of length n generates (read inputs +
+/// write the fresh result) — the quantity charged to the host cost model.
+pub fn vecop_bytes(n_inputs: usize, n: usize) -> usize {
+    8 * n * (n_inputs + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+
+    #[test]
+    fn arithmetic_matches_native() {
+        let x = vec![1.0, 2.0, 3.0];
+        let y = vec![0.5, -1.0, 2.0];
+        assert_eq!(add(&x, &y), vec![1.5, 1.0, 5.0]);
+        assert_eq!(sub(&x, &y), vec![0.5, 3.0, 1.0]);
+        assert_eq!(scale(2.0, &x), vec![2.0, 4.0, 6.0]);
+        assert_eq!(sub_scaled(&x, 2.0, &y), vec![0.0, 4.0, -1.0]);
+        assert!((dot(&x, &y) - 4.5).abs() < 1e-15);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn matvec_matches_linalg() {
+        let a = DenseMatrix::from_fn(5, 5, |i, j| (i + j) as f64);
+        let x = vec![1.0, -1.0, 2.0, 0.0, 3.0];
+        let expect = crate::linalg::LinearOperator::apply(&a, &x);
+        assert_eq!(matvec(&a, &x), expect);
+    }
+
+    #[test]
+    fn vecop_bytes_counts_result() {
+        // axpy-like: 2 inputs + result = 3 vectors of 8n bytes
+        assert_eq!(vecop_bytes(2, 100), 2400);
+    }
+}

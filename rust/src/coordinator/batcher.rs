@@ -1,0 +1,171 @@
+//! Device-job batching: group queued jobs by `(policy, n, m)` so one
+//! compiled executable / resident matrix ensemble serves a whole batch
+//! before the device switches shape.
+//!
+//! Shape switches are expensive on the real device (executable swap,
+//! matrix re-upload) and on this testbed (PJRT compile per shape), so the
+//! batcher is a classic "batch by compatibility key, bounded size and age"
+//! scheduler — the GMRES analogue of an inference server's dynamic batcher.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::backend::Policy;
+
+/// Batch compatibility key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub policy: Policy,
+    pub n: usize,
+    pub m: usize,
+}
+
+/// A queued item with arrival time.
+#[derive(Clone, Debug)]
+pub struct Pending<T> {
+    pub key: BatchKey,
+    pub item: T,
+    pub enqueued_at: Instant,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Max jobs drained per batch.
+    pub max_batch: usize,
+    /// A batch is released when its oldest member reaches this age even if
+    /// not full (bounded latency).
+    pub max_age: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_age: Duration::from_millis(20) }
+    }
+}
+
+/// FIFO-fair batcher.  Single-threaded logic (the worker loop owns it);
+/// concurrency lives in the channels around it.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queue: VecDeque<Pending<T>>,
+    config: BatcherConfig,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(config: BatcherConfig) -> Self {
+        Self { queue: VecDeque::new(), config }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn push(&mut self, key: BatchKey, item: T) {
+        self.queue.push_back(Pending { key, item, enqueued_at: Instant::now() });
+    }
+
+    #[cfg(test)]
+    fn push_at(&mut self, key: BatchKey, item: T, at: Instant) {
+        self.queue.push_back(Pending { key, item, enqueued_at: at });
+    }
+
+    /// Is a batch ready?  (full batch available for the head key, or the
+    /// head has aged out)
+    pub fn ready(&self, now: Instant) -> bool {
+        match self.queue.front() {
+            None => false,
+            Some(head) => {
+                if now.duration_since(head.enqueued_at) >= self.config.max_age {
+                    return true;
+                }
+                self.queue.iter().filter(|p| p.key == head.key).count() >= self.config.max_batch
+            }
+        }
+    }
+
+    /// Drain the next batch: all jobs matching the head's key, FIFO order,
+    /// up to `max_batch`.  Returns `None` when empty.
+    pub fn next_batch(&mut self) -> Option<(BatchKey, Vec<Pending<T>>)> {
+        let key = self.queue.front()?.key;
+        let mut batch = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        for p in self.queue.drain(..) {
+            if p.key == key && batch.len() < self.config.max_batch {
+                batch.push(p);
+            } else {
+                rest.push_back(p);
+            }
+        }
+        self.queue = rest;
+        Some((key, batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: usize) -> BatchKey {
+        BatchKey { policy: Policy::GmatrixLike, n, m: 30 }
+    }
+
+    #[test]
+    fn drains_by_head_key_fifo() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 10, max_age: Duration::ZERO });
+        b.push(key(100), 1);
+        b.push(key(200), 2);
+        b.push(key(100), 3);
+        let (k, batch) = b.next_batch().unwrap();
+        assert_eq!(k, key(100));
+        assert_eq!(batch.iter().map(|p| p.item).collect::<Vec<_>>(), vec![1, 3]);
+        let (k2, batch2) = b.next_batch().unwrap();
+        assert_eq!(k2, key(200));
+        assert_eq!(batch2.len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_age: Duration::ZERO });
+        for i in 0..5 {
+            b.push(key(100), i);
+        }
+        let (_, batch) = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn ready_on_age() {
+        let mut b: Batcher<u32> = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_age: Duration::from_millis(5),
+        });
+        let past = Instant::now() - Duration::from_millis(50);
+        b.push_at(key(1), 1, past);
+        assert!(b.ready(Instant::now()), "aged-out head must release");
+    }
+
+    #[test]
+    fn ready_on_full_batch() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 2,
+            max_age: Duration::from_secs(3600),
+        });
+        b.push(key(1), 1);
+        assert!(!b.ready(Instant::now()));
+        b.push(key(1), 2);
+        assert!(b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn empty_not_ready() {
+        let b: Batcher<u32> = Batcher::new(BatcherConfig::default());
+        assert!(!b.ready(Instant::now()));
+    }
+}

@@ -1,0 +1,121 @@
+//! Solve-request / response types.
+
+
+use crate::backend::Policy;
+use crate::gmres::{GmresConfig, SolveReport};
+use crate::linalg::{generators, DenseMatrix, LinearOperator};
+
+/// Unique request id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// How the worker materializes the system matrix — requests stay small and
+/// `Send` even for N=10000 workloads.
+#[derive(Clone, Debug)]
+pub enum MatrixSpec {
+    /// The Table-1 dense diagonally-dominant ensemble.
+    Table1 { n: usize, seed: u64 },
+    /// 2-D convection–diffusion (densified for device policies).
+    ConvectionDiffusion { nx: usize, ny: usize, cx: f64, cy: f64 },
+    /// Explicit dense payload (row-major).
+    Dense { n: usize, data: Vec<f64> },
+}
+
+impl MatrixSpec {
+    pub fn order(&self) -> usize {
+        match self {
+            MatrixSpec::Table1 { n, .. } => *n,
+            MatrixSpec::ConvectionDiffusion { nx, ny, .. } => nx * ny,
+            MatrixSpec::Dense { n, .. } => *n,
+        }
+    }
+
+    /// Materialize `(A, b)`.  `b` comes with the spec's ensemble (Table1)
+    /// or is a deterministic random RHS otherwise.
+    pub fn materialize(&self) -> (DenseMatrix, Vec<f64>) {
+        match self {
+            MatrixSpec::Table1 { n, seed } => {
+                let (a, b, _) = generators::table1_system(*n, *seed);
+                (a, b)
+            }
+            MatrixSpec::ConvectionDiffusion { nx, ny, cx, cy } => {
+                let a = generators::convection_diffusion_2d(*nx, *ny, *cx, *cy).to_dense();
+                let n = a.nrows();
+                let x = generators::random_vector(n, 17);
+                let b = a.apply(&x);
+                (a, b)
+            }
+            MatrixSpec::Dense { n, data } => {
+                let a = DenseMatrix::from_vec(*n, *n, data.clone());
+                let b = generators::random_vector(*n, 23);
+                (a, b)
+            }
+        }
+    }
+}
+
+/// A solve request.
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    pub matrix: MatrixSpec,
+    pub config: GmresConfig,
+    /// Explicit policy, or `None` for router auto-selection.
+    pub policy: Option<Policy>,
+}
+
+impl SolveRequest {
+    pub fn table1(n: usize, seed: u64) -> Self {
+        Self { matrix: MatrixSpec::Table1 { n, seed }, config: GmresConfig::default(), policy: None }
+    }
+}
+
+/// What the service returns.
+#[derive(Clone, Debug)]
+pub struct SolveOutcome {
+    pub id: JobId,
+    /// The policy the router actually ran (may differ from the request on
+    /// memory-admission fallback).
+    pub policy: Policy,
+    /// Fell back from the requested policy (device memory admission).
+    pub downgraded: bool,
+    pub report: SolveReport,
+    /// Seconds spent queued before a worker picked the job up.
+    pub queue_seconds: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_materialize_consistent_shapes() {
+        let (a, b) = MatrixSpec::Table1 { n: 32, seed: 0 }.materialize();
+        assert_eq!(a.nrows(), 32);
+        assert_eq!(b.len(), 32);
+        let spec = MatrixSpec::ConvectionDiffusion { nx: 4, ny: 5, cx: 1.0, cy: 0.0 };
+        assert_eq!(spec.order(), 20);
+        let (a, b) = spec.materialize();
+        assert_eq!((a.nrows(), b.len()), (20, 20));
+    }
+
+    #[test]
+    fn dense_spec_roundtrip() {
+        let data = vec![1.0, 0.0, 0.0, 1.0];
+        let spec = MatrixSpec::Dense { n: 2, data: data.clone() };
+        let (a, _) = spec.materialize();
+        assert_eq!(a.data(), &data[..]);
+    }
+
+    #[test]
+    fn request_default_is_auto_policy() {
+        let r = SolveRequest::table1(64, 1);
+        assert!(r.policy.is_none());
+        assert_eq!(r.config.m, 30);
+    }
+}

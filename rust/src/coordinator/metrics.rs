@@ -1,0 +1,161 @@
+//! Service metrics: counters + latency summaries, lock-free on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Aggregated service metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    downgraded: AtomicU64,
+    rejected: AtomicU64,
+    /// completed-solve latencies, microseconds (mutex: cold path only)
+    latencies_us: Mutex<Vec<u64>>,
+    queue_us: Mutex<Vec<u64>>,
+}
+
+/// Latency summary in seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_complete(&self, latency_seconds: f64, queue_seconds: f64, downgraded: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if downgraded {
+            self.downgraded.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latencies_us
+            .lock()
+            .unwrap()
+            .push((latency_seconds * 1e6) as u64);
+        self.queue_us.lock().unwrap().push((queue_seconds * 1e6) as u64);
+    }
+
+    pub fn on_fail(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    pub fn downgraded(&self) -> u64 {
+        self.downgraded.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn latency_summary(&self) -> Option<LatencySummary> {
+        summarize(&self.latencies_us.lock().unwrap())
+    }
+
+    pub fn queue_summary(&self) -> Option<LatencySummary> {
+        summarize(&self.queue_us.lock().unwrap())
+    }
+
+    /// One-line human summary.
+    pub fn render(&self) -> String {
+        let lat = self
+            .latency_summary()
+            .map(|l| format!("p50={:.3}s p95={:.3}s max={:.3}s", l.p50, l.p95, l.max))
+            .unwrap_or_else(|| "n/a".into());
+        format!(
+            "submitted={} completed={} failed={} downgraded={} rejected={} latency[{}]",
+            self.submitted(),
+            self.completed(),
+            self.failed(),
+            self.downgraded(),
+            self.rejected(),
+            lat
+        )
+    }
+}
+
+fn summarize(us: &[u64]) -> Option<LatencySummary> {
+    if us.is_empty() {
+        return None;
+    }
+    let mut v = us.to_vec();
+    v.sort_unstable();
+    let q = |p: f64| -> f64 {
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        v[idx] as f64 / 1e6
+    };
+    let mean = v.iter().sum::<u64>() as f64 / v.len() as f64 / 1e6;
+    Some(LatencySummary {
+        count: v.len(),
+        mean,
+        p50: q(0.50),
+        p95: q(0.95),
+        p99: q(0.99),
+        max: *v.last().unwrap() as f64 / 1e6,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_complete(0.5, 0.1, true);
+        m.on_fail();
+        m.on_reject();
+        assert_eq!(m.submitted(), 2);
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.failed(), 1);
+        assert_eq!(m.downgraded(), 1);
+        assert_eq!(m.rejected(), 1);
+    }
+
+    #[test]
+    fn latency_percentiles_ordered() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.on_complete(i as f64 / 100.0, 0.0, false);
+        }
+        let s = m.latency_summary().unwrap();
+        assert_eq!(s.count, 100);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.max - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_none() {
+        assert!(Metrics::new().latency_summary().is_none());
+    }
+}

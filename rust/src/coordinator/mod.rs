@@ -1,0 +1,32 @@
+//! L3 solve service — the coordination layer.
+//!
+//! The paper's system-level lesson is that *offload policy and device
+//! residency decide performance*; this coordinator operationalizes it as a
+//! linear-solver service in the style of an inference router:
+//!
+//! * **[`job`]** — solve requests (matrix spec + GMRES config + policy
+//!   preference) and responses.
+//! * **[`router`]** — picks the backend for each request: honours explicit
+//!   policy requests, performs *device-memory admission control* (a job
+//!   whose working set exceeds the card falls back to the host — the
+//!   paper's capacity cap, turned into scheduling logic), and auto-selects
+//!   the modeled-fastest policy otherwise.
+//! * **[`batcher`]** — groups queued device jobs by `(policy, n, m)` so one
+//!   compiled executable and one resident matrix serve a whole batch.
+//! * **[`worker`]** — a dedicated *device thread* owning the PJRT runtime
+//!   (one GPU, one stream; `PjRtLoadedExecutable` is not `Send`) plus a CPU
+//!   pool for serial jobs.
+//! * **[`service`]** — the tokio facade: `submit().await`, graceful
+//!   shutdown, metrics.
+
+pub mod batcher;
+pub mod job;
+pub mod metrics;
+pub mod router;
+pub mod service;
+pub mod worker;
+
+pub use job::{JobId, MatrixSpec, SolveOutcome, SolveRequest};
+pub use metrics::Metrics;
+pub use router::{Route, Router, RouterConfig};
+pub use service::{ServiceConfig, SolveService};

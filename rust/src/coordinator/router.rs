@@ -1,0 +1,170 @@
+//! Routing & admission: which backend runs a request, and may it use the
+//! device at all.
+//!
+//! The paper's device-memory cap ("the limited amount of memory on the
+//! graphics card precluded us to use bigger matrices") becomes *admission
+//! control*: a request whose working set does not fit the card is
+//! downgraded to the serial host backend instead of failing — and that
+//! decision is visible in the response (`downgraded`).
+
+
+use crate::backend::Policy;
+use crate::device::memory::working_set_bytes;
+use crate::device::GpuSpec;
+use crate::report::model;
+
+use super::job::SolveRequest;
+
+/// Router decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    pub policy: Policy,
+    /// True when the requested/auto policy was replaced by a host fallback.
+    pub downgraded: bool,
+}
+
+/// Router configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Device spec used for admission (capacity) and auto-selection
+    /// (modeled times).
+    pub gpu: GpuSpec,
+    /// Fraction of device memory a single job may claim (leave headroom for
+    /// batching).
+    pub mem_fraction: f64,
+    /// Policy used when a device policy cannot be admitted.
+    pub fallback: Policy,
+    /// Reference cycle count used for auto-selection cost prediction.
+    pub assumed_cycles: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            gpu: GpuSpec::geforce_840m(),
+            mem_fraction: 0.9,
+            fallback: Policy::SerialR,
+            assumed_cycles: 5,
+        }
+    }
+}
+
+/// Stateless routing logic (admission is against *configured* capacity; the
+/// live allocator guards the worker side).
+#[derive(Clone, Debug)]
+pub struct Router {
+    config: RouterConfig,
+}
+
+impl Router {
+    pub fn new(config: RouterConfig) -> Self {
+        Self { config }
+    }
+
+    pub fn config(&self) -> &RouterConfig {
+        &self.config
+    }
+
+    /// Admission test for one policy at order n, restart m.
+    pub fn admits(&self, policy: Policy, n: usize, m: usize) -> bool {
+        let budget = (self.config.gpu.mem_capacity as f64 * self.config.mem_fraction) as usize;
+        working_set_bytes(n, m, policy) <= budget
+    }
+
+    /// Auto-select the modeled-fastest admissible policy.
+    pub fn auto_policy(&self, n: usize, m: usize) -> Policy {
+        let mut best = self.config.fallback;
+        let mut best_t = model::predict_seconds(best, n, m, self.config.assumed_cycles);
+        for p in Policy::gpu_policies() {
+            if !self.admits(p, n, m) {
+                continue;
+            }
+            let t = model::predict_seconds(p, n, m, self.config.assumed_cycles);
+            if t < best_t {
+                best = p;
+                best_t = t;
+            }
+        }
+        best
+    }
+
+    /// Route a request.
+    pub fn route(&self, req: &SolveRequest) -> Route {
+        let n = req.matrix.order();
+        let m = req.config.m;
+        match req.policy {
+            Some(p) if !p.needs_runtime() => Route { policy: p, downgraded: false },
+            Some(p) => {
+                if self.admits(p, n, m) {
+                    Route { policy: p, downgraded: false }
+                } else {
+                    Route { policy: self.config.fallback, downgraded: true }
+                }
+            }
+            None => Route { policy: self.auto_policy(n, m), downgraded: false },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::MatrixSpec;
+    use crate::gmres::GmresConfig;
+
+    fn req(n: usize, policy: Option<Policy>) -> SolveRequest {
+        SolveRequest {
+            matrix: MatrixSpec::Table1 { n, seed: 0 },
+            config: GmresConfig::default(),
+            policy,
+        }
+    }
+
+    #[test]
+    fn explicit_serial_always_honoured() {
+        let r = Router::new(RouterConfig::default());
+        let route = r.route(&req(1_000_000, Some(Policy::SerialR)));
+        assert_eq!(route.policy, Policy::SerialR);
+        assert!(!route.downgraded);
+    }
+
+    #[test]
+    fn oversized_device_request_downgrades() {
+        let r = Router::new(RouterConfig::default());
+        // N=20000 dense f64 = 3.2 GB > 2 GB card
+        let route = r.route(&req(20_000, Some(Policy::GpurVclLike)));
+        assert_eq!(route.policy, Policy::SerialR);
+        assert!(route.downgraded);
+    }
+
+    #[test]
+    fn fitting_device_request_admitted() {
+        let r = Router::new(RouterConfig::default());
+        let route = r.route(&req(5000, Some(Policy::GmatrixLike)));
+        assert_eq!(route.policy, Policy::GmatrixLike);
+        assert!(!route.downgraded);
+    }
+
+    #[test]
+    fn auto_selects_gpur_at_large_n() {
+        let r = Router::new(RouterConfig::default());
+        let route = r.route(&req(10_000, None));
+        assert_eq!(route.policy, Policy::GpurVclLike, "modeled-fastest at N=10000");
+    }
+
+    #[test]
+    fn auto_never_selects_inadmissible() {
+        let r = Router::new(RouterConfig::default());
+        let p = r.auto_policy(50_000, 30);
+        assert!(!p.needs_runtime() || r.admits(p, 50_000, 30));
+    }
+
+    #[test]
+    fn mem_fraction_shrinks_admission() {
+        let tight = Router::new(RouterConfig { mem_fraction: 0.1, ..Default::default() });
+        // 0.1 * 2GB = 200MB; N=10000 needs 800MB
+        assert!(!tight.admits(Policy::GmatrixLike, 10_000, 30));
+        let loose = Router::new(RouterConfig::default());
+        assert!(loose.admits(Policy::GmatrixLike, 10_000, 30));
+    }
+}

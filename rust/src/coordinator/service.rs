@@ -1,0 +1,263 @@
+//! The solve service facade: submit/await over the router, batcher and
+//! worker threads.
+//!
+//! Plain threads + channels (no async runtime is available offline, and the
+//! paper's workload — long CPU/device-bound solves — gains nothing from
+//! one): `submit` blocks the calling thread; concurrency comes from calling
+//! it from many threads, as the end-to-end driver does.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::job::{JobId, SolveOutcome, SolveRequest};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{Router, RouterConfig};
+use crate::coordinator::worker::{spawn_cpu_pool, spawn_device_thread, WorkItem};
+use crate::Result;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub router: RouterConfig,
+    pub batcher: BatcherConfig,
+    /// CPU pool size for serial jobs.
+    pub cpu_workers: usize,
+    /// Where artifacts live (None = discover via GMRES_RS_ARTIFACTS/cwd).
+    pub artifacts_dir: Option<PathBuf>,
+    /// Bounded queue capacity (backpressure: submits fail fast beyond it).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            router: RouterConfig::default(),
+            batcher: BatcherConfig::default(),
+            cpu_workers: 2,
+            artifacts_dir: None,
+            queue_capacity: 256,
+        }
+    }
+}
+
+/// Running service handle.  Call [`SolveService::shutdown`] for a graceful
+/// stop (queued jobs drain first).
+pub struct SolveService {
+    router: Router,
+    metrics: Arc<Metrics>,
+    device_tx: Mutex<Option<mpsc::Sender<WorkItem>>>,
+    cpu_tx: Mutex<Option<mpsc::Sender<WorkItem>>>,
+    next_id: AtomicU64,
+    inflight: Arc<AtomicU64>,
+    queue_capacity: u64,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl SolveService {
+    /// Start workers and return the handle.
+    pub fn start(config: ServiceConfig) -> Arc<Self> {
+        let metrics = Arc::new(Metrics::new());
+        let (device_tx, device_rx) = mpsc::channel();
+        let (cpu_tx, cpu_rx) = mpsc::channel();
+        let mut handles = Vec::new();
+        handles.push(spawn_device_thread(
+            config.artifacts_dir.clone(),
+            device_rx,
+            config.batcher,
+            metrics.clone(),
+        ));
+        handles.extend(spawn_cpu_pool(config.cpu_workers, cpu_rx, metrics.clone()));
+        Arc::new(Self {
+            router: Router::new(config.router),
+            metrics,
+            device_tx: Mutex::new(Some(device_tx)),
+            cpu_tx: Mutex::new(Some(cpu_tx)),
+            next_id: AtomicU64::new(1),
+            inflight: Arc::new(AtomicU64::new(0)),
+            queue_capacity: config.queue_capacity as u64,
+            handles: Mutex::new(handles),
+        })
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Jobs admitted but not yet completed.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Submit a request and block until its outcome is ready.
+    ///
+    /// Backpressure: fails fast with an error when the queue is full.
+    pub fn submit(&self, request: SolveRequest) -> Result<SolveOutcome> {
+        let rx = self.submit_nowait(request)?;
+        let out = rx.recv().map_err(|_| anyhow!("worker dropped reply"))?;
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+
+    /// Submit without waiting; returns the reply channel.  The caller must
+    /// eventually `recv()`; in-flight accounting is released on completion
+    /// via [`SolveService::finish`] or by using [`SolveService::submit`].
+    pub fn submit_nowait(
+        &self,
+        request: SolveRequest,
+    ) -> Result<mpsc::Receiver<Result<SolveOutcome>>> {
+        // admission by queue depth (backpressure)
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.queue_capacity {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.on_reject();
+            return Err(anyhow!(
+                "queue full ({} in flight >= capacity {})",
+                prev,
+                self.queue_capacity
+            ));
+        }
+        self.metrics.on_submit();
+        let route = self.router.route(&request);
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        let item = WorkItem {
+            id,
+            request,
+            policy: route.policy,
+            downgraded: route.downgraded,
+            submitted_at: Instant::now(),
+            reply: reply_tx,
+        };
+        let send_result = {
+            let guard = if route.policy.needs_runtime() {
+                self.device_tx.lock().unwrap()
+            } else {
+                self.cpu_tx.lock().unwrap()
+            };
+            match guard.as_ref() {
+                Some(tx) => tx.send(item).map_err(|_| anyhow!("worker channel closed")),
+                None => Err(anyhow!("service shut down")),
+            }
+        };
+        if let Err(e) = send_result {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(e);
+        }
+        Ok(reply_rx)
+    }
+
+    /// Release in-flight accounting for a `submit_nowait` reply that has
+    /// been received by the caller.
+    pub fn finish(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Graceful shutdown: close intake, join workers.
+    pub fn shutdown(&self) {
+        *self.device_tx.lock().unwrap() = None;
+        *self.cpu_tx.lock().unwrap() = None;
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Policy;
+    use crate::coordinator::job::MatrixSpec;
+    use crate::gmres::GmresConfig;
+
+    fn service() -> Arc<SolveService> {
+        SolveService::start(ServiceConfig { cpu_workers: 2, ..Default::default() })
+    }
+
+    fn req(n: usize, policy: Option<Policy>) -> SolveRequest {
+        SolveRequest {
+            matrix: MatrixSpec::Table1 { n, seed: 0 },
+            config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 100 },
+            policy,
+        }
+    }
+
+    #[test]
+    fn serial_solve_roundtrip() {
+        let svc = service();
+        let out = svc.submit(req(48, Some(Policy::SerialNative))).unwrap();
+        assert!(out.report.converged);
+        assert_eq!(out.policy, Policy::SerialNative);
+        assert_eq!(svc.metrics().completed(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_serial_solves() {
+        let svc = service();
+        let threads: Vec<_> = (0..8)
+            .map(|i| {
+                let svc = svc.clone();
+                std::thread::spawn(move || svc.submit(req(32 + i, Some(Policy::SerialNative))))
+            })
+            .collect();
+        for t in threads {
+            assert!(t.join().unwrap().unwrap().report.converged);
+        }
+        assert_eq!(svc.metrics().completed(), 8);
+        assert_eq!(svc.inflight(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn oversized_device_job_routes_to_fallback() {
+        let svc = service();
+        // N=20000 exceeds the 2 GB card: router must fall back to serial-R.
+        let route = svc.router().route(&req(20_000, Some(Policy::GpurVclLike)));
+        assert!(route.downgraded);
+        assert_eq!(route.policy, Policy::SerialR);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_beyond_capacity() {
+        let svc = SolveService::start(ServiceConfig {
+            cpu_workers: 1,
+            queue_capacity: 2,
+            ..Default::default()
+        });
+        // hold two slots without receiving (deterministic saturation)
+        let r1 = svc.submit_nowait(req(48, Some(Policy::SerialNative))).unwrap();
+        let r2 = svc.submit_nowait(req(48, Some(Policy::SerialNative))).unwrap();
+        assert_eq!(svc.inflight(), 2);
+        // third submit must be rejected while two are in flight
+        assert!(svc.submit(req(16, Some(Policy::SerialNative))).is_err());
+        assert!(svc.metrics().rejected() >= 1);
+        // drain the held slots
+        assert!(r1.recv().unwrap().is_ok());
+        svc.finish();
+        assert!(r2.recv().unwrap().is_ok());
+        svc.finish();
+        assert_eq!(svc.inflight(), 0);
+        // capacity restored: submits succeed again
+        assert!(svc.submit(req(16, Some(Policy::SerialNative))).is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let svc = service();
+        svc.shutdown();
+        assert!(svc.submit(req(16, Some(Policy::SerialNative))).is_err());
+        assert_eq!(svc.inflight(), 0);
+    }
+}

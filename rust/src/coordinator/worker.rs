@@ -1,0 +1,208 @@
+//! Worker threads: one *device thread* owning the PJRT runtime (the single
+//! simulated GPU) and a small CPU pool for serial jobs.
+//!
+//! The device thread batches compatible jobs ([`super::batcher`]) so a
+//! resident executable serves consecutive solves; the CPU pool is plain
+//! work stealing off a shared channel.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::backend::{build_engine, Policy};
+use crate::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
+use crate::coordinator::job::{JobId, SolveOutcome, SolveRequest};
+use crate::coordinator::metrics::Metrics;
+use crate::gmres::RestartedGmres;
+use crate::runtime::Runtime;
+use crate::Result;
+
+/// Unit of work flowing to workers.
+pub struct WorkItem {
+    pub id: JobId,
+    pub request: SolveRequest,
+    pub policy: Policy,
+    pub downgraded: bool,
+    pub submitted_at: Instant,
+    pub reply: mpsc::SyncSender<Result<SolveOutcome>>,
+}
+
+/// Execute one item to completion (shared by device + cpu paths).
+fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics) {
+    let started = Instant::now();
+    let queue_seconds = started.duration_since(item.submitted_at).as_secs_f64();
+    let outcome = (|| -> Result<SolveOutcome> {
+        let (a, b) = item.request.matrix.materialize();
+        let mut engine = build_engine(item.policy, a, b, item.request.config.m, runtime, false)?;
+        let solver = RestartedGmres::new(item.request.config);
+        let report = solver.solve(engine.as_mut(), None)?;
+        Ok(SolveOutcome {
+            id: item.id,
+            policy: item.policy,
+            downgraded: item.downgraded,
+            report,
+            queue_seconds,
+        })
+    })();
+    match &outcome {
+        Ok(_) => metrics.on_complete(started.elapsed().as_secs_f64(), queue_seconds, item.downgraded),
+        Err(_) => metrics.on_fail(),
+    }
+    // receiver may have gone away (client cancelled); that's fine
+    let _ = item.reply.send(outcome);
+}
+
+/// Spawn the device thread.  Owns the (non-`Send`) PJRT runtime; receives
+/// items, batches by shape, executes sequentially (one GPU, one stream).
+pub fn spawn_device_thread(
+    artifacts_dir: Option<PathBuf>,
+    rx: mpsc::Receiver<WorkItem>,
+    batcher_config: BatcherConfig,
+    metrics: Arc<Metrics>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("gmres-device".into())
+        .spawn(move || {
+            let runtime: Option<Rc<Runtime>> = match artifacts_dir {
+                Some(dir) => match Runtime::new(&dir) {
+                    Ok(rt) => Some(Rc::new(rt)),
+                    Err(e) => {
+                        eprintln!("device thread: runtime unavailable: {e:#}");
+                        None
+                    }
+                },
+                None => Runtime::from_env().ok().map(Rc::new),
+            };
+            let mut batcher: Batcher<WorkItem> = Batcher::new(batcher_config);
+            loop {
+                // Block for the next item when idle; otherwise poll with the
+                // batch-age deadline so partial batches release on time.
+                if batcher.is_empty() {
+                    match rx.recv() {
+                        Ok(item) => push(&mut batcher, item),
+                        Err(_) => break, // channel closed, drain below
+                    }
+                }
+                while !batcher.ready(Instant::now()) {
+                    match rx.recv_timeout(batcher_config.max_age) {
+                        Ok(item) => push(&mut batcher, item),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                while let Some((_key, batch)) = batcher.next_batch() {
+                    for pending in batch {
+                        run_item(pending.item, runtime.clone(), &metrics);
+                    }
+                }
+            }
+            // drain anything left after channel close
+            while let Some((_k, batch)) = batcher.next_batch() {
+                for pending in batch {
+                    run_item(pending.item, runtime.clone(), &metrics);
+                }
+            }
+        })
+        .expect("spawn device thread")
+}
+
+fn push(batcher: &mut Batcher<WorkItem>, item: WorkItem) {
+    let key = BatchKey {
+        policy: item.policy,
+        n: item.request.matrix.order(),
+        m: item.request.config.m,
+    };
+    batcher.push(key, item);
+}
+
+/// Spawn `count` CPU workers sharing one receiver.
+pub fn spawn_cpu_pool(
+    count: usize,
+    rx: mpsc::Receiver<WorkItem>,
+    metrics: Arc<Metrics>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let rx = Arc::new(Mutex::new(rx));
+    (0..count.max(1))
+        .map(|i| {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name(format!("gmres-cpu-{i}"))
+                .spawn(move || loop {
+                    let item = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match item {
+                        Ok(item) => run_item(item, None, &metrics),
+                        Err(_) => break,
+                    }
+                })
+                .expect("spawn cpu worker")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::MatrixSpec;
+    use crate::gmres::GmresConfig;
+
+    fn item(n: usize, policy: Policy) -> (WorkItem, mpsc::Receiver<Result<SolveOutcome>>) {
+        let (tx, rx) = mpsc::sync_channel(1);
+        (
+            WorkItem {
+                id: JobId(1),
+                request: SolveRequest {
+                    matrix: MatrixSpec::Table1 { n, seed: 0 },
+                    config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 100 },
+                    policy: Some(policy),
+                },
+                policy,
+                downgraded: false,
+                submitted_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn cpu_pool_executes_serial_jobs() {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel();
+        let handles = spawn_cpu_pool(2, rx, metrics.clone());
+        let (it, reply) = item(48, Policy::SerialNative);
+        tx.send(it).unwrap();
+        let outcome = reply.recv().unwrap().unwrap();
+        assert!(outcome.report.converged);
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(metrics.completed(), 1);
+    }
+
+    #[test]
+    fn cpu_pool_survives_failed_job() {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel();
+        let handles = spawn_cpu_pool(1, rx, metrics.clone());
+        // GPU policy without runtime -> job errors, worker must keep going
+        let (bad, bad_reply) = item(16, Policy::GmatrixLike);
+        tx.send(bad).unwrap();
+        assert!(bad_reply.recv().unwrap().is_err());
+        let (ok, ok_reply) = item(32, Policy::SerialNative);
+        tx.send(ok).unwrap();
+        assert!(ok_reply.recv().unwrap().is_ok());
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(metrics.failed(), 1);
+        assert_eq!(metrics.completed(), 1);
+    }
+}

@@ -1,0 +1,190 @@
+//! Capacity-capped device-memory allocator.
+//!
+//! Reproduces the paper's operative constraint: *“The size of the problem
+//! was limited by the available amount of the graphics card memory”* —
+//! admission control in the coordinator asks this allocator whether a
+//! solve's working set fits before scheduling it (DESIGN.md Ablation B).
+//!
+//! Accounting-only: no real buffers are held, just sizes, so it can model a
+//! 2 GB card on any host.
+
+use std::collections::HashMap;
+
+/// Handle to a live allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AllocId(u64);
+
+/// Allocation failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AllocError {
+    /// Requested bytes exceed remaining capacity.
+    OutOfMemory { requested: usize, free: usize },
+    /// Freeing an id that is not live (double free or corruption).
+    InvalidFree,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::OutOfMemory { requested, free } => {
+                write!(f, "device OOM: requested {requested} B, {free} B free")
+            }
+            AllocError::InvalidFree => write!(f, "invalid device free"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+/// Accounting allocator with a hard capacity.
+#[derive(Debug)]
+pub struct DeviceMemory {
+    capacity: usize,
+    used: usize,
+    peak: usize,
+    next_id: u64,
+    live: HashMap<AllocId, usize>,
+    /// Count of failed allocations (OOM events) — an ablation metric.
+    oom_events: u64,
+}
+
+impl DeviceMemory {
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, used: 0, peak: 0, next_id: 0, live: HashMap::new(), oom_events: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    /// High-water mark since construction.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn oom_events(&self) -> u64 {
+        self.oom_events
+    }
+
+    pub fn live_allocations(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Try to allocate `bytes`; OOM if it does not fit.
+    pub fn alloc(&mut self, bytes: usize) -> Result<AllocId, AllocError> {
+        if bytes > self.free_bytes() {
+            self.oom_events += 1;
+            return Err(AllocError::OutOfMemory { requested: bytes, free: self.free_bytes() });
+        }
+        let id = AllocId(self.next_id);
+        self.next_id += 1;
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        self.live.insert(id, bytes);
+        Ok(id)
+    }
+
+    /// Release a live allocation; returns the freed byte count.
+    pub fn release(&mut self, id: AllocId) -> Result<usize, AllocError> {
+        let bytes = self.live.remove(&id).ok_or(AllocError::InvalidFree)?;
+        self.used -= bytes;
+        Ok(bytes)
+    }
+
+    /// Would a working set of `bytes` fit right now?
+    pub fn would_fit(&self, bytes: usize) -> bool {
+        bytes <= self.free_bytes()
+    }
+
+    /// Release everything (end of a solve).
+    pub fn reset(&mut self) {
+        self.live.clear();
+        self.used = 0;
+    }
+}
+
+/// Working-set sizes (bytes) for a GMRES(m) solve of order n under each
+/// offload policy — used by admission control and Ablation B.
+pub fn working_set_bytes(n: usize, m: usize, policy: crate::backend::Policy) -> usize {
+    use crate::backend::Policy;
+    let f = std::mem::size_of::<f64>();
+    match policy {
+        // nothing device-resident
+        Policy::SerialR | Policy::SerialNative => 0,
+        // A + in/out vectors
+        Policy::GmatrixLike => f * (n * n + 2 * n),
+        // transient A + vectors per call (peak equals gmatrix's)
+        Policy::GputoolsLike => f * (n * n + 2 * n),
+        // A + V (n x (m+1)) + H + b + x + scratch w
+        Policy::GpurVclLike => f * (n * n + n * (m + 1) + (m + 1) * m + 3 * n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut mem = DeviceMemory::new(1000);
+        let a = mem.alloc(400).unwrap();
+        let b = mem.alloc(600).unwrap();
+        assert_eq!(mem.free_bytes(), 0);
+        assert_eq!(mem.release(a).unwrap(), 400);
+        assert_eq!(mem.used(), 600);
+        mem.release(b).unwrap();
+        assert_eq!(mem.used(), 0);
+        assert_eq!(mem.peak(), 1000);
+    }
+
+    #[test]
+    fn oom_when_over_capacity() {
+        let mut mem = DeviceMemory::new(100);
+        assert!(matches!(
+            mem.alloc(101),
+            Err(AllocError::OutOfMemory { requested: 101, free: 100 })
+        ));
+        assert_eq!(mem.oom_events(), 1);
+        // a failed alloc must not consume capacity
+        assert!(mem.alloc(100).is_ok());
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut mem = DeviceMemory::new(10);
+        let a = mem.alloc(5).unwrap();
+        mem.release(a).unwrap();
+        assert_eq!(mem.release(a), Err(AllocError::InvalidFree));
+    }
+
+    #[test]
+    fn paper_scale_capacity_check() {
+        // N=10000 dense f64 = 800 MB: fits the 840M's 2 GB (the paper's max);
+        // N=17000 = 2.3 GB: does not — the cap that stopped the sweep.
+        let spec = crate::device::GpuSpec::geforce_840m();
+        let mut mem = DeviceMemory::new(spec.mem_capacity);
+        assert!(mem.alloc(8 * 10_000 * 10_000).is_ok());
+        mem.reset();
+        assert!(mem.alloc(8 * 17_000 * 17_000).is_err());
+    }
+
+    #[test]
+    fn working_sets_ordered_by_policy() {
+        use crate::backend::Policy;
+        let n = 1000;
+        let m = 30;
+        let serial = working_set_bytes(n, m, Policy::SerialR);
+        let gm = working_set_bytes(n, m, Policy::GmatrixLike);
+        let vcl = working_set_bytes(n, m, Policy::GpurVclLike);
+        assert_eq!(serial, 0);
+        assert!(vcl > gm, "vcl keeps the Krylov basis on device");
+    }
+}

@@ -1,0 +1,35 @@
+//! Simulated accelerator substrate.
+//!
+//! The paper ran on an NVIDIA GeForce 840M (2 GB VRAM, 16 GB/s memory
+//! bandwidth, 384 shaders @ 1029 MHz) behind a laptop PCIe link.  We have no
+//! GPU, so per DESIGN.md §2 the *numerics* of offloaded graphs run on the
+//! PJRT CPU executor while the *costs* the paper measures — H2D/D2H
+//! transfers, kernel time, launch overhead, device-memory capacity — are
+//! produced by this analytic simulator.
+//!
+//! The simulator is deliberately simple and fully inspectable:
+//!
+//! * [`spec::GpuSpec`] / [`spec::HostSpec`] — the calibrated hardware
+//!   parameters (840M + the paper's i7-4710HQ running interpreted R).
+//! * [`memory::DeviceMemory`] — a capacity-capped bump-accounting allocator
+//!   reproducing the paper's "size of the problem was limited by the
+//!   available amount of graphics card memory".
+//! * [`transfer::TransferModel`] — per-call latency + bytes/bandwidth.
+//! * [`timing::KernelTimingModel`] — roofline max(compute, memory) + launch.
+//! * [`sim::DeviceSim`] — ties the above together and accumulates a modeled
+//!   clock plus an op [`trace::Trace`] for debugging and ablations.
+
+pub mod costs;
+pub mod memory;
+pub mod sim;
+pub mod spec;
+pub mod timing;
+pub mod transfer;
+pub mod trace;
+
+pub use memory::{AllocError, DeviceMemory};
+pub use sim::DeviceSim;
+pub use spec::{GpuSpec, HostSpec};
+pub use timing::KernelTimingModel;
+pub use transfer::TransferModel;
+pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,253 @@
+//! The composed device simulator: allocator + transfer model + kernel model
+//! + modeled clock + trace.
+//!
+//! Each offload-policy backend owns one `DeviceSim` and charges every
+//! modeled action to it; the accumulated [`DeviceSim::elapsed`] is the
+//! *modeled* wallclock that the Table-1 harness compares across policies
+//! (DESIGN.md §2: measured vs modeled duality).
+
+use super::memory::{AllocError, AllocId, DeviceMemory};
+use super::spec::{GpuSpec, HostSpec};
+use super::timing::{KernelKind, KernelTimingModel};
+use super::trace::{Trace, TraceEvent};
+use super::transfer::{Direction, TransferModel};
+
+/// Simulated accelerator with a modeled clock.
+#[derive(Debug)]
+pub struct DeviceSim {
+    memory: DeviceMemory,
+    transfer: TransferModel,
+    timing: KernelTimingModel,
+    host: HostSpec,
+    clock: f64,
+    trace: Trace,
+}
+
+impl DeviceSim {
+    pub fn new(spec: GpuSpec, host: HostSpec, trace_enabled: bool) -> Self {
+        Self {
+            memory: DeviceMemory::new(spec.mem_capacity),
+            transfer: TransferModel::from_spec(&spec),
+            timing: KernelTimingModel::new(spec),
+            host,
+            clock: 0.0,
+            trace: Trace::new(trace_enabled),
+        }
+    }
+
+    /// The paper's testbed: 840M device + interpreted-R host.
+    pub fn paper_testbed(trace_enabled: bool) -> Self {
+        Self::new(GpuSpec::geforce_840m(), HostSpec::r_interpreter_i7_4710hq(), trace_enabled)
+    }
+
+    /// Modeled seconds elapsed since construction/reset.
+    pub fn elapsed(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn memory(&self) -> &DeviceMemory {
+        self.memory_ref()
+    }
+
+    fn memory_ref(&self) -> &DeviceMemory {
+        &self.memory
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    pub fn host_spec(&self) -> &HostSpec {
+        &self.host
+    }
+
+    pub fn gpu_spec(&self) -> &GpuSpec {
+        self.timing.spec()
+    }
+
+    pub fn reset_clock(&mut self) {
+        self.clock = 0.0;
+        self.trace.clear();
+    }
+
+    // -- device memory ------------------------------------------------------
+
+    pub fn alloc(&mut self, bytes: usize) -> Result<AllocId, AllocError> {
+        let id = self.memory.alloc(bytes)?;
+        self.trace.push(TraceEvent::Alloc { bytes });
+        Ok(id)
+    }
+
+    pub fn release(&mut self, id: AllocId) -> Result<usize, AllocError> {
+        let bytes = self.memory.release(id)?;
+        self.trace.push(TraceEvent::Free { bytes });
+        Ok(bytes)
+    }
+
+    pub fn would_fit(&self, bytes: usize) -> bool {
+        self.memory.would_fit(bytes)
+    }
+
+    // -- modeled actions (advance the clock) --------------------------------
+
+    /// Charge a host->device transfer of `bytes`.
+    pub fn h2d(&mut self, bytes: usize) {
+        let s = self.transfer.time(bytes);
+        self.clock += s;
+        self.trace.push(TraceEvent::Transfer { dir: Direction::HostToDevice, bytes, seconds: s });
+    }
+
+    /// Charge a device->host transfer of `bytes`.
+    pub fn d2h(&mut self, bytes: usize) {
+        let s = self.transfer.time(bytes);
+        self.clock += s;
+        self.trace.push(TraceEvent::Transfer { dir: Direction::DeviceToHost, bytes, seconds: s });
+    }
+
+    /// Charge a device GEMV kernel.
+    pub fn kernel_gemv(&mut self, rows: usize, cols: usize) {
+        let s = self.timing.gemv(rows, cols);
+        self.clock += s;
+        self.trace.push(TraceEvent::Kernel { kind: KernelKind::Gemv, seconds: s });
+    }
+
+    /// Charge a device BLAS-1 kernel.
+    pub fn kernel_blas1(&mut self, n_in: usize, n_out: usize) {
+        let s = self.timing.blas1(n_in, n_out);
+        self.clock += s;
+        self.trace.push(TraceEvent::Kernel { kind: KernelKind::Blas1, seconds: s });
+    }
+
+    /// Charge a device reduction kernel.
+    pub fn kernel_reduce(&mut self, n: usize) {
+        let s = self.timing.reduce(n);
+        self.clock += s;
+        self.trace.push(TraceEvent::Kernel { kind: KernelKind::Reduce, seconds: s });
+    }
+
+    /// Charge one fused Arnoldi cycle (the gpuR policy's single dispatch).
+    pub fn kernel_fused_cycle(&mut self, n: usize, m: usize) {
+        let s = self.timing.fused_cycle(n, m);
+        self.clock += s;
+        self.trace.push(TraceEvent::Kernel { kind: KernelKind::FusedCycle, seconds: s });
+    }
+
+    /// Charge an interpreted-R host matvec.
+    pub fn host_gemv(&mut self, rows: usize, cols: usize) {
+        let s = self.host.gemv_time(rows, cols);
+        self.clock += s;
+        self.trace.push(TraceEvent::HostOp { what: "gemv", seconds: s });
+    }
+
+    /// Charge an interpreted-R host vector op touching `bytes`.
+    pub fn host_vecop(&mut self, what: &'static str, bytes: usize) {
+        let s = self.host.vecop_time(bytes);
+        self.clock += s;
+        self.trace.push(TraceEvent::HostOp { what, seconds: s });
+    }
+
+    /// Charge host scalar work (least-squares etc.): `ops` interpreted
+    /// floating ops at dispatch-dominated cost.
+    pub fn host_scalar_ops(&mut self, what: &'static str, ops: usize) {
+        let s = ops as f64 * self.host.op_overhead * 0.1;
+        self.clock += s;
+        self.trace.push(TraceEvent::HostOp { what, seconds: s });
+    }
+
+    /// Charge a *standalone* R vector op (Morris-2016 microbenchmark
+    /// regime — no GMRES bookkeeping traffic).
+    pub fn host_plain_vecop(&mut self, what: &'static str, bytes: usize) {
+        let s = self.host.op_overhead + bytes as f64 / self.host.plain_vec_bw;
+        self.clock += s;
+        self.trace.push(TraceEvent::HostOp { what, seconds: s });
+    }
+
+    /// Charge one synchronous R -> CUDA library call's dispatch overhead
+    /// (gmatrix `%*%` / `gpuMatMult`).
+    pub fn r_call(&mut self) {
+        let s = self.host.r_call_overhead;
+        self.clock += s;
+        self.trace.push(TraceEvent::Overhead { what: "r-call", seconds: s });
+    }
+
+    /// Charge one vcl-path op dispatch (gpuR asynchronous enqueue).
+    pub fn vcl_dispatch(&mut self) {
+        let s = self.timing.spec().vcl_op_overhead;
+        self.clock += s;
+        self.trace.push(TraceEvent::Overhead { what: "vcl-enqueue", seconds: s });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> DeviceSim {
+        DeviceSim::paper_testbed(true)
+    }
+
+    #[test]
+    fn clock_accumulates() {
+        let mut s = sim();
+        assert_eq!(s.elapsed(), 0.0);
+        s.h2d(8_000_000);
+        let t1 = s.elapsed();
+        assert!(t1 > 0.0);
+        s.kernel_gemv(1000, 1000);
+        assert!(s.elapsed() > t1);
+    }
+
+    #[test]
+    fn reset_clears_clock_and_trace() {
+        let mut s = sim();
+        s.h2d(1000);
+        s.kernel_blas1(10, 10);
+        s.reset_clock();
+        assert_eq!(s.elapsed(), 0.0);
+        assert!(s.trace().events().is_empty());
+    }
+
+    #[test]
+    fn trace_matches_clock() {
+        let mut s = sim();
+        s.h2d(1 << 20);
+        s.kernel_gemv(500, 500);
+        s.d2h(4000);
+        s.host_vecop("axpy", 24_000);
+        s.r_call();
+        s.vcl_dispatch();
+        let total = s.trace().transfer_seconds()
+            + s.trace().kernel_seconds()
+            + s.trace().host_seconds()
+            + s.trace().overhead_seconds();
+        assert!((total - s.elapsed()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_goes_through_allocator() {
+        let mut s = sim();
+        let id = s.alloc(1024).unwrap();
+        assert_eq!(s.memory().used(), 1024);
+        s.release(id).unwrap();
+        assert_eq!(s.memory().used(), 0);
+    }
+
+    #[test]
+    fn transfer_everything_is_slower_than_resident() {
+        // the core Table-1 mechanism, as a unit test: per-call matrix upload
+        // (gputools) must cost more than vector-only traffic (gmatrix).
+        let n = 2000;
+        let mut gputools = sim();
+        gputools.h2d(8 * n * n);
+        gputools.h2d(8 * n);
+        gputools.kernel_gemv(n, n);
+        gputools.d2h(8 * n);
+
+        let mut gmatrix = sim();
+        gmatrix.h2d(8 * n);
+        gmatrix.kernel_gemv(n, n);
+        gmatrix.d2h(8 * n);
+
+        assert!(gputools.elapsed() > 2.0 * gmatrix.elapsed());
+    }
+}

@@ -1,0 +1,151 @@
+//! Hardware specifications for the analytic cost models.
+//!
+//! Calibration notes (EXPERIMENTS.md §Calibration): the GPU numbers are the
+//! published GeForce 840M datasheet values from the paper's §4 setup list;
+//! the host numbers model *interpreted R* running reference BLAS — R's `%*%`
+//! dispatches to the single-threaded reference `dgemv` (memory-bound well
+//! below peak), and R vector arithmetic allocates a fresh result per op
+//! (copy-on-modify), which caps its effective bandwidth.
+
+
+/// GPU-side parameters (the simulated device).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Device memory capacity in bytes (2 GB on the 840M).
+    pub mem_capacity: usize,
+    /// Device memory bandwidth, bytes/s (16 GB/s on the 840M).
+    pub mem_bw: f64,
+    /// Peak f64 FLOP rate, flops/s.  Maxwell runs f64 at 1/32 of f32:
+    /// 384 shaders * 1029 MHz * 2 / 32 ≈ 24.7 GFLOP/s.
+    pub flops_f64: f64,
+    /// Host<->device link bandwidth, bytes/s (PCIe 3.0 x16 effective —
+    /// fitted to the paper's gputools column, see EXPERIMENTS.md
+    /// §Calibration).
+    pub pcie_bw: f64,
+    /// Fixed per-transfer latency, seconds (driver + DMA setup).
+    pub transfer_latency: f64,
+    /// Fixed kernel-launch overhead, seconds.
+    pub launch_latency: f64,
+    /// Per-operation overhead of the gpuR/vcl path (OpenCL enqueue +
+    /// gpuR dispatch, amortized by the asynchronous vcl queue).
+    pub vcl_op_overhead: f64,
+}
+
+impl GpuSpec {
+    /// The paper's card: NVIDIA GeForce 840M (Maxwell).
+    pub fn geforce_840m() -> Self {
+        Self {
+            name: "GeForce 840M".into(),
+            mem_capacity: 2 * 1024 * 1024 * 1024,
+            mem_bw: 16.0e9,
+            flops_f64: 24.7e9,
+            pcie_bw: 13.5e9,
+            transfer_latency: 15e-6,
+            launch_latency: 20e-6,
+            vcl_op_overhead: 60e-6,
+        }
+    }
+
+    /// A datacenter card for the extrapolation ablation (V100 PCIe).
+    pub fn tesla_v100() -> Self {
+        Self {
+            name: "Tesla V100".into(),
+            mem_capacity: 16 * 1024 * 1024 * 1024,
+            mem_bw: 900.0e9,
+            flops_f64: 7.0e12,
+            pcie_bw: 12.0e9,
+            transfer_latency: 10e-6,
+            launch_latency: 8e-6,
+            vcl_op_overhead: 30e-6,
+        }
+    }
+}
+
+/// Host-side parameters (the simulated interpreted-R CPU baseline).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostSpec {
+    pub name: String,
+    /// Effective FLOP rate of R's `%*%` (reference dgemv, single thread,
+    /// memory-bound on DDR3).  Fitted: 1.1 GFLOP/s (EXPERIMENTS.md
+    /// §Calibration pins the gmatrix column with it).
+    pub blas2_flops: f64,
+    /// Effective bytes/s of R vector arithmetic *inside pracma's GMRES
+    /// loop*: copy-on-modify allocation, `V[, i]` column-extraction copies
+    /// and GC pressure included.  Fitted: 0.65 GB/s.
+    pub vec_bw: f64,
+    /// Effective bytes/s of a *standalone* R vector op (the
+    /// microbenchmark regime of Morris 2016, no GMRES bookkeeping): ~6 GB/s.
+    pub plain_vec_bw: f64,
+    /// Per-operation interpreter dispatch overhead, seconds (~1 µs: symbol
+    /// lookup, argument boxing, dispatch).
+    pub op_overhead: f64,
+    /// Overhead of one synchronous R -> CUDA library call
+    /// (`gpuMatMult`, gmatrix `%*%`): .Call marshalling + driver sync,
+    /// ~1 ms.  This is what floors the gmatrix/gputools speedups at small N
+    /// (Table 1 row 1).
+    pub r_call_overhead: f64,
+}
+
+impl HostSpec {
+    /// The paper's host: Intel i7-4710HQ @2.5 GHz, DDR3, R 3.2.3.
+    pub fn r_interpreter_i7_4710hq() -> Self {
+        Self {
+            name: "i7-4710HQ / R 3.2.3".into(),
+            blas2_flops: 1.1e9,
+            vec_bw: 0.65e9,
+            plain_vec_bw: 6.0e9,
+            op_overhead: 1.0e-6,
+            r_call_overhead: 1.0e-3,
+        }
+    }
+
+    /// Modeled time for an R dense matvec of order (rows x cols).
+    pub fn gemv_time(&self, rows: usize, cols: usize) -> f64 {
+        let flops = 2.0 * rows as f64 * cols as f64;
+        self.op_overhead + flops / self.blas2_flops
+    }
+
+    /// Modeled time for an R vector op touching `bytes` of memory
+    /// (reads + the copy-on-modify write of the fresh result).
+    pub fn vecop_time(&self, bytes: usize) -> f64 {
+        self.op_overhead + bytes as f64 / self.vec_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_sane() {
+        let g = GpuSpec::geforce_840m();
+        assert_eq!(g.mem_capacity, 2 << 30);
+        assert!(g.flops_f64 < 100e9, "Maxwell f64 is crippled");
+        let v = GpuSpec::tesla_v100();
+        assert!(v.mem_bw > 10.0 * g.mem_bw);
+    }
+
+    #[test]
+    fn host_gemv_scales_quadratically() {
+        let h = HostSpec::r_interpreter_i7_4710hq();
+        let t1 = h.gemv_time(1000, 1000);
+        let t2 = h.gemv_time(2000, 2000);
+        assert!(t2 / t1 > 3.5 && t2 / t1 < 4.5);
+    }
+
+    #[test]
+    fn host_vecop_has_floor() {
+        let h = HostSpec::r_interpreter_i7_4710hq();
+        // tiny op is dominated by interpreter dispatch
+        assert!(h.vecop_time(8) >= h.op_overhead);
+        assert!(h.vecop_time(8) < 2.0 * h.op_overhead);
+    }
+
+    #[test]
+    fn specs_clone_eq() {
+        let g = GpuSpec::geforce_840m();
+        assert_eq!(g.clone(), g);
+        assert_ne!(g, GpuSpec::tesla_v100());
+    }
+}

@@ -1,0 +1,129 @@
+//! Roofline kernel-timing model for the simulated GPU.
+//!
+//! `time = launch_latency + max(flops / peak_flops, bytes / mem_bw)` — the
+//! standard roofline.  GEMV is memory-bound on every GPU (2 flops per 8-byte
+//! element), so on the 840M the model is dominated by `8N² / 16 GB/s`, which
+//! is exactly why the paper's speedups stay modest (§5).
+
+use super::spec::GpuSpec;
+
+/// Classified kernel shapes so the trace can aggregate per-op statistics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Dense matvec (rows, cols).
+    Gemv,
+    /// Transposed matvec.
+    GemvT,
+    /// BLAS-1 (axpy / scal / elementwise).
+    Blas1,
+    /// Reduction (dot / nrm2).
+    Reduce,
+    /// Fused full Arnoldi cycle (gpuR policy).
+    FusedCycle,
+}
+
+/// Analytic roofline model.
+#[derive(Clone, Debug)]
+pub struct KernelTimingModel {
+    spec: GpuSpec,
+}
+
+impl KernelTimingModel {
+    pub fn new(spec: GpuSpec) -> Self {
+        Self { spec }
+    }
+
+    pub fn spec(&self) -> &GpuSpec {
+        &self.spec
+    }
+
+    /// Roofline time for a kernel doing `flops` work over `bytes` of device
+    /// memory traffic.
+    pub fn kernel_time(&self, flops: f64, bytes: f64) -> f64 {
+        self.spec.launch_latency + (flops / self.spec.flops_f64).max(bytes / self.spec.mem_bw)
+    }
+
+    /// Dense matvec y = A x, A is rows x cols f64.
+    pub fn gemv(&self, rows: usize, cols: usize) -> f64 {
+        let flops = 2.0 * rows as f64 * cols as f64;
+        // A streamed once + x + y (x is tiny next to A)
+        let bytes = 8.0 * (rows as f64 * cols as f64 + rows as f64 + cols as f64);
+        self.kernel_time(flops, bytes)
+    }
+
+    /// BLAS-1 op streaming `n_in` input and `n_out` output f64s.
+    pub fn blas1(&self, n_in: usize, n_out: usize) -> f64 {
+        let flops = n_in as f64;
+        let bytes = 8.0 * (n_in + n_out) as f64;
+        self.kernel_time(flops, bytes)
+    }
+
+    /// Reduction over n f64 (dot: 2n reads, scalar out).
+    pub fn reduce(&self, n: usize) -> f64 {
+        self.kernel_time(2.0 * n as f64, 8.0 * (2 * n) as f64)
+    }
+
+    /// One fused GMRES(m) Arnoldi cycle on order-n dense A: m matvecs +
+    /// per-step panel projections (V^T w and V h, each streaming an
+    /// n x (m+1) panel) + vector ops, all in one launch.
+    pub fn fused_cycle(&self, n: usize, m: usize) -> f64 {
+        let nf = n as f64;
+        let mf = m as f64;
+        let panel = nf * (mf + 1.0);
+        // matvecs: m * (2n^2 flops, 8n^2 bytes)
+        let mv_flops = mf * 2.0 * nf * nf;
+        let mv_bytes = mf * 8.0 * nf * nf;
+        // projections: per step two panel products
+        let pr_flops = mf * 2.0 * 2.0 * panel;
+        let pr_bytes = mf * 2.0 * 8.0 * panel;
+        // vector updates/norms per step ~ 6n
+        let v_flops = mf * 6.0 * nf;
+        let v_bytes = mf * 6.0 * 8.0 * nf;
+        // single launch for the whole cycle (the scan is one executable) —
+        // plus per-step internal dispatch modeled at 1/4 launch cost.
+        let internal = mf * self.spec.launch_latency * 0.25;
+        self.kernel_time(mv_flops + pr_flops + v_flops, mv_bytes + pr_bytes + v_bytes) + internal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> KernelTimingModel {
+        KernelTimingModel::new(GpuSpec::geforce_840m())
+    }
+
+    #[test]
+    fn gemv_is_memory_bound_on_840m() {
+        let m = model();
+        let n = 4000;
+        let t = m.gemv(n, n);
+        let mem_time = 8.0 * (n * n) as f64 / m.spec().mem_bw;
+        // within 10% of the pure memory roofline (launch + vector terms)
+        assert!((t - mem_time) / mem_time < 0.1);
+    }
+
+    #[test]
+    fn launch_latency_floors_small_kernels() {
+        let m = model();
+        assert!(m.blas1(8, 8) >= m.spec().launch_latency);
+    }
+
+    #[test]
+    fn fused_cycle_close_to_m_gemvs() {
+        // the cycle is matvec-dominated: between m gemvs and ~1.6x that
+        let m = model();
+        let t_cycle = m.fused_cycle(2000, 30);
+        let t_mv = 30.0 * m.gemv(2000, 2000);
+        assert!(t_cycle > 0.9 * t_mv && t_cycle < 1.8 * t_mv, "cycle {t_cycle} vs mv {t_mv}");
+    }
+
+    #[test]
+    fn monotone_in_n() {
+        let m = model();
+        assert!(m.gemv(2000, 2000) > m.gemv(1000, 1000));
+        assert!(m.fused_cycle(2000, 30) > m.fused_cycle(1000, 30));
+        assert!(m.reduce(1 << 20) > m.reduce(1 << 10));
+    }
+}

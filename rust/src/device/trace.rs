@@ -1,0 +1,157 @@
+//! Operation trace for the device simulator — every modeled transfer and
+//! kernel is recorded so ablations can attribute time (e.g. "what fraction
+//! of gputools' cycle is PCIe?") and tests can assert policy behaviour
+//! ("gmatrix uploads A exactly once").
+
+use super::timing::KernelKind;
+use super::transfer::Direction;
+
+/// One modeled event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    Transfer { dir: Direction, bytes: usize, seconds: f64 },
+    Kernel { kind: KernelKind, seconds: f64 },
+    HostOp { what: &'static str, seconds: f64 },
+    /// Dispatch/queueing overhead (R .Call, OpenCL enqueue) — neither
+    /// transfer nor kernel nor host compute.
+    Overhead { what: &'static str, seconds: f64 },
+    Alloc { bytes: usize },
+    Free { bytes: usize },
+}
+
+impl TraceEvent {
+    pub fn seconds(&self) -> f64 {
+        match self {
+            TraceEvent::Transfer { seconds, .. }
+            | TraceEvent::Kernel { seconds, .. }
+            | TraceEvent::HostOp { seconds, .. }
+            | TraceEvent::Overhead { seconds, .. } => *seconds,
+            _ => 0.0,
+        }
+    }
+}
+
+/// Append-only event log with aggregate views.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+    enabled: bool,
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Self {
+        Self { events: Vec::new(), enabled }
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.enabled {
+            self.events.push(ev);
+        }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+
+    /// Total modeled seconds in transfers.
+    pub fn transfer_seconds(&self) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Transfer { .. }))
+            .map(TraceEvent::seconds)
+            .sum()
+    }
+
+    /// Total modeled seconds in device kernels.
+    pub fn kernel_seconds(&self) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Kernel { .. }))
+            .map(TraceEvent::seconds)
+            .sum()
+    }
+
+    /// Total modeled seconds in host (R-interpreter) ops.
+    pub fn host_seconds(&self) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::HostOp { .. }))
+            .map(TraceEvent::seconds)
+            .sum()
+    }
+
+    /// Total modeled seconds in dispatch overheads.
+    pub fn overhead_seconds(&self) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Overhead { .. }))
+            .map(TraceEvent::seconds)
+            .sum()
+    }
+
+    /// Bytes moved host->device.
+    pub fn h2d_bytes(&self) -> usize {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Transfer { dir: Direction::HostToDevice, bytes, .. } => Some(*bytes),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Bytes moved device->host.
+    pub fn d2h_bytes(&self) -> usize {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Transfer { dir: Direction::DeviceToHost, bytes, .. } => Some(*bytes),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Count of kernel launches of a given kind.
+    pub fn kernel_count(&self, kind: KernelKind) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Kernel { kind: k, .. } if *k == kind))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut t = Trace::new(true);
+        t.push(TraceEvent::Transfer { dir: Direction::HostToDevice, bytes: 100, seconds: 1.0 });
+        t.push(TraceEvent::Transfer { dir: Direction::DeviceToHost, bytes: 50, seconds: 0.5 });
+        t.push(TraceEvent::Kernel { kind: KernelKind::Gemv, seconds: 2.0 });
+        t.push(TraceEvent::HostOp { what: "axpy", seconds: 0.25 });
+        assert_eq!(t.transfer_seconds(), 1.5);
+        assert_eq!(t.kernel_seconds(), 2.0);
+        assert_eq!(t.host_seconds(), 0.25);
+        assert_eq!(t.h2d_bytes(), 100);
+        assert_eq!(t.d2h_bytes(), 50);
+        assert_eq!(t.kernel_count(KernelKind::Gemv), 1);
+        assert_eq!(t.kernel_count(KernelKind::Blas1), 0);
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::new(false);
+        t.push(TraceEvent::Alloc { bytes: 1 });
+        assert!(t.events().is_empty());
+    }
+}

@@ -1,0 +1,80 @@
+//! Host<->device transfer cost model.
+//!
+//! The paper (§3): *“the overhead of memory transfers between main memory
+//! and device memory is high”* — this model is what makes the
+//! transfer-everything `gputools` policy lose at small N (Table 1, first
+//! rows < 1.0).  Cost = fixed latency + bytes / link bandwidth.
+
+use super::spec::GpuSpec;
+
+/// Direction of a modeled transfer (kept in traces for ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    HostToDevice,
+    DeviceToHost,
+}
+
+/// Analytic PCIe-link model.
+#[derive(Clone, Debug)]
+pub struct TransferModel {
+    latency: f64,
+    bandwidth: f64,
+}
+
+impl TransferModel {
+    pub fn new(latency: f64, bandwidth: f64) -> Self {
+        assert!(bandwidth > 0.0);
+        assert!(latency >= 0.0);
+        Self { latency, bandwidth }
+    }
+
+    pub fn from_spec(spec: &GpuSpec) -> Self {
+        Self::new(spec.transfer_latency, spec.pcie_bw)
+    }
+
+    /// Modeled seconds to move `bytes` across the link (either direction —
+    /// PCIe is symmetric at this fidelity).
+    pub fn time(&self, bytes: usize) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Bytes for `n` f64 values — the unit every policy reasons in.
+    pub fn f64_bytes(n: usize) -> usize {
+        n * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_bytes() {
+        let t = TransferModel::new(1e-5, 4e9);
+        assert!(t.time(0) == 1e-5);
+        assert!(t.time(1000) < t.time(10_000));
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let t = TransferModel::from_spec(&GpuSpec::geforce_840m());
+        // an 8-byte scalar readback is pure latency
+        let small = t.time(8);
+        assert!((small - 15e-6) / small < 0.01);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_transfers() {
+        let t = TransferModel::from_spec(&GpuSpec::geforce_840m());
+        // 800 MB matrix (N=10000) ≈ 59 ms at the fitted 13.5 GB/s
+        let big = t.time(800_000_000);
+        let expect = 800_000_000.0 / 13.5e9;
+        assert!((big - expect).abs() / expect < 0.01, "{big} vs {expect}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bandwidth_rejected() {
+        TransferModel::new(0.0, 0.0);
+    }
+}

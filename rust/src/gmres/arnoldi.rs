@@ -1,0 +1,202 @@
+//! Pure native Arnoldi process — the reference implementation used by tests
+//! (orthogonality/Hessenberg invariants) and by anything that wants a clean
+//! Krylov factorization without policy cost accounting.
+//!
+//! Both orthogonalization variants are provided because the paper's
+//! pseudocode is *classical* Gram-Schmidt (line 3 computes all `h_ij` from
+//! the unmodified `Av_j`) while Kelley's reference implementation — and
+//! `pracma::gmres` — use *modified* Gram-Schmidt.  Ablation C benchmarks
+//! the numerical difference.
+
+use crate::linalg::{blas, LinearOperator};
+
+use super::givens::{zero_hessenberg, Hessenberg};
+
+/// Orthogonalization variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ortho {
+    /// Classical Gram-Schmidt (the paper's pseudocode, lines 3–4).
+    Cgs,
+    /// Modified Gram-Schmidt (Kelley 1995; better orthogonality).
+    Mgs,
+}
+
+/// Result of an Arnoldi factorization `A V_k = V_{k+1} H_k`.
+#[derive(Clone, Debug)]
+pub struct ArnoldiFactorization {
+    /// Basis vectors, `k+1` columns each of length n (row `j` = v_j).
+    pub v: Vec<Vec<f64>>,
+    /// `(k+1) x k` Hessenberg (allocated (m+1) x m; only k columns valid).
+    pub h: Hessenberg,
+    /// Steps completed (k <= m; k < m on happy breakdown).
+    pub k: usize,
+    /// `||r0||`.
+    pub beta: f64,
+    /// Happy breakdown occurred (Krylov space closed; solution is exact).
+    pub breakdown: bool,
+}
+
+/// Breakdown tolerance relative to beta.
+pub const BREAKDOWN_RTOL: f64 = 1e-14;
+
+/// Run up to `m` Arnoldi steps from residual `r0` (NOT normalized).
+pub fn arnoldi(op: &dyn LinearOperator, r0: &[f64], m: usize, ortho: Ortho) -> ArnoldiFactorization {
+    let n = r0.len();
+    let beta = blas::nrm2(r0);
+    let mut v: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+    let mut h = zero_hessenberg(m);
+    if beta == 0.0 {
+        return ArnoldiFactorization { v, h, k: 0, beta, breakdown: true };
+    }
+    let mut v0 = r0.to_vec();
+    blas::scal(1.0 / beta, &mut v0);
+    v.push(v0);
+
+    let mut k = m;
+    let mut breakdown = false;
+    for j in 0..m {
+        let mut w = op.apply(&v[j]);
+        match ortho {
+            Ortho::Cgs => {
+                // all projections from the unmodified w
+                let coeffs: Vec<f64> = (0..=j).map(|i| blas::dot(&w, &v[i])).collect();
+                for (i, &hij) in coeffs.iter().enumerate() {
+                    h[i][j] = hij;
+                    blas::axpy(-hij, &v[i], &mut w);
+                }
+            }
+            Ortho::Mgs => {
+                for i in 0..=j {
+                    let hij = blas::dot(&w, &v[i]);
+                    h[i][j] = hij;
+                    blas::axpy(-hij, &v[i], &mut w);
+                }
+            }
+        }
+        let hj1 = blas::nrm2(&w);
+        h[j + 1][j] = hj1;
+        if hj1 <= BREAKDOWN_RTOL * beta {
+            k = j + 1;
+            breakdown = true;
+            break;
+        }
+        blas::scal(1.0 / hj1, &mut w);
+        v.push(w);
+    }
+    let _ = n;
+    ArnoldiFactorization { v, h, k, beta, breakdown }
+}
+
+impl ArnoldiFactorization {
+    /// Max |v_i . v_j - delta_ij| over the basis — the orthogonality defect.
+    pub fn orthogonality_defect(&self) -> f64 {
+        let mut worst: f64 = 0.0;
+        for i in 0..self.v.len() {
+            for j in i..self.v.len() {
+                let d = blas::dot(&self.v[i], &self.v[j]);
+                let target = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((d - target).abs());
+            }
+        }
+        worst
+    }
+
+    /// Max residual of the Arnoldi relation `A v_j = sum_i h_ij v_i`
+    /// (column-wise, relative to ||A v_j||).
+    pub fn relation_defect(&self, op: &dyn LinearOperator) -> f64 {
+        let mut worst: f64 = 0.0;
+        for j in 0..self.k.min(self.v.len()) {
+            let mut av = op.apply(&self.v[j]);
+            let scale = blas::nrm2(&av).max(1.0);
+            for i in 0..=(j + 1).min(self.v.len() - 1) {
+                blas::axpy(-self.h[i][j], &self.v[i], &mut av);
+            }
+            // if v_{j+1} is missing (breakdown), h[j+1][j] ~ 0 so fine
+            worst = worst.max(blas::nrm2(&av) / scale);
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::generators;
+
+    fn system(n: usize, seed: u64) -> (crate::linalg::DenseMatrix, Vec<f64>) {
+        let (a, b, _) = generators::table1_system(n, seed);
+        (a, b)
+    }
+
+    #[test]
+    fn mgs_basis_is_orthonormal() {
+        // small diagonal shift => slow convergence => subdiagonals stay
+        // healthy and the basis well conditioned for all 20 steps
+        let a = generators::dense_shifted_random(60, 2.0, 1);
+        let b = generators::random_vector(60, 11);
+        let f = arnoldi(&a, &b, 20, Ortho::Mgs);
+        assert_eq!(f.v.len(), 21);
+        assert!(f.orthogonality_defect() < 1e-10, "defect {}", f.orthogonality_defect());
+    }
+
+    #[test]
+    fn cgs_satisfies_arnoldi_relation() {
+        let (a, b) = system(50, 2);
+        let f = arnoldi(&a, &b, 15, Ortho::Cgs);
+        assert!(f.relation_defect(&a) < 1e-12, "defect {}", f.relation_defect(&a));
+    }
+
+    #[test]
+    fn mgs_satisfies_arnoldi_relation() {
+        let (a, b) = system(50, 3);
+        let f = arnoldi(&a, &b, 15, Ortho::Mgs);
+        assert!(f.relation_defect(&a) < 1e-12);
+    }
+
+    #[test]
+    fn hessenberg_structure_below_subdiagonal_zero() {
+        let (a, b) = system(40, 4);
+        let f = arnoldi(&a, &b, 10, Ortho::Mgs);
+        for j in 0..f.k {
+            for i in j + 2..=10 {
+                assert_eq!(f.h[i][j], 0.0, "h[{i}][{j}] nonzero");
+            }
+        }
+    }
+
+    #[test]
+    fn happy_breakdown_on_closed_krylov_space() {
+        // identity: K_1 = span{b} closes immediately
+        let a = crate::linalg::DenseMatrix::identity(10);
+        let b = vec![1.0; 10];
+        let f = arnoldi(&a, &b, 5, Ortho::Mgs);
+        assert!(f.breakdown);
+        assert_eq!(f.k, 1);
+    }
+
+    #[test]
+    fn zero_residual_short_circuits() {
+        let a = crate::linalg::DenseMatrix::identity(4);
+        let f = arnoldi(&a, &[0.0; 4], 3, Ortho::Mgs);
+        assert_eq!(f.k, 0);
+        assert!(f.breakdown);
+        assert_eq!(f.beta, 0.0);
+    }
+
+    #[test]
+    fn cgs_and_mgs_agree_on_well_conditioned() {
+        let (a, b) = system(30, 5);
+        let fc = arnoldi(&a, &b, 8, Ortho::Cgs);
+        let fm = arnoldi(&a, &b, 8, Ortho::Mgs);
+        for j in 0..8 {
+            for i in 0..=j + 1 {
+                assert!(
+                    (fc.h[i][j] - fm.h[i][j]).abs() < 1e-8,
+                    "h[{i}][{j}]: cgs {} mgs {}",
+                    fc.h[i][j],
+                    fm.h[i][j]
+                );
+            }
+        }
+    }
+}

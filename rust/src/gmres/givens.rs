@@ -1,0 +1,162 @@
+//! Givens-rotation least squares for the Arnoldi Hessenberg system.
+//!
+//! Solves `min_y || beta*e1 - H y ||` for upper-Hessenberg `H` of shape
+//! `(k+1, k)` in O(k^2) — the method Kelley (1995) prescribes for GMRES
+//! step 8 (the paper's line 8).  Also returns the implied residual norm
+//! `|g_{k+1}|`, which equals `||b - A x_k||` in exact arithmetic — the
+//! cheap convergence signal GMRES monitors without forming `x`.
+
+/// Dense column-major-free little Hessenberg container: `h[i][j]`.
+pub type Hessenberg = Vec<Vec<f64>>;
+
+/// Allocate a zero (m+1) x m Hessenberg as row vectors.
+pub fn zero_hessenberg(m: usize) -> Hessenberg {
+    vec![vec![0.0; m]; m + 1]
+}
+
+/// Solve the (k+1, k) Hessenberg least-squares problem.
+///
+/// Returns `(y, implied_resnorm)`.  `k` may be less than the allocated `m`
+/// (early breakdown).  Breakdown-safe: zero pivots are floored.
+pub fn solve_ls(h: &Hessenberg, beta: f64, k: usize) -> (Vec<f64>, f64) {
+    assert!(h.len() >= k + 1, "h must have at least k+1 rows");
+    const EPS: f64 = 1e-300;
+    // working copies
+    let mut r: Vec<Vec<f64>> = (0..=k).map(|i| h[i][..k].to_vec()).collect();
+    let mut g = vec![0.0; k + 1];
+    g[0] = beta;
+    for j in 0..k {
+        let a = r[j][j];
+        let b = r[j + 1][j];
+        let denom = (a * a + b * b).sqrt();
+        let (c, s) = if denom > EPS { (a / denom, b / denom) } else { (1.0, 0.0) };
+        for col in j..k {
+            let t0 = c * r[j][col] + s * r[j + 1][col];
+            let t1 = -s * r[j][col] + c * r[j + 1][col];
+            r[j][col] = t0;
+            r[j + 1][col] = t1;
+        }
+        let t0 = c * g[j] + s * g[j + 1];
+        let t1 = -s * g[j] + c * g[j + 1];
+        g[j] = t0;
+        g[j + 1] = t1;
+    }
+    // back substitution
+    let mut y = vec![0.0; k];
+    for i in (0..k).rev() {
+        let mut acc = g[i];
+        for jj in i + 1..k {
+            acc -= r[i][jj] * y[jj];
+        }
+        let d = if r[i][i].abs() > EPS { r[i][i] } else { EPS };
+        y[i] = acc / d;
+    }
+    (y, g[k].abs())
+}
+
+/// FLOP estimate of the solve (for host cost charging): ~3k^2 mul-adds for
+/// the rotations + k^2/2 for back substitution.
+pub fn flops(k: usize) -> usize {
+    3 * k * k + k * k / 2 + 10 * k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_ls_residual(h: &Hessenberg, beta: f64, k: usize, y: &[f64]) -> f64 {
+        // || beta e1 - H y ||
+        let mut r = vec![0.0; k + 1];
+        r[0] = beta;
+        for i in 0..=k {
+            for j in 0..k {
+                r[i] -= h[i][j] * y[j];
+            }
+        }
+        r.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    fn random_hessenberg(m: usize, seed: u64) -> Hessenberg {
+        // deterministic LCG; subdiagonal kept away from zero
+        let mut state = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f64 / (1u64 << 31) as f64) - 1.0
+        };
+        let mut h = zero_hessenberg(m);
+        for j in 0..m {
+            for i in 0..=j + 1 {
+                h[i][j] = next();
+            }
+            h[j + 1][j] += 2.0_f64.copysign(h[j + 1][j]);
+        }
+        h
+    }
+
+    #[test]
+    fn exact_square_solve_when_consistent() {
+        // H = [[2],[0]] (k=1): min || beta e1 - H y || -> y = beta/2, res 0
+        let mut h = zero_hessenberg(1);
+        h[0][0] = 2.0;
+        let (y, res) = solve_ls(&h, 4.0, 1);
+        assert!((y[0] - 2.0).abs() < 1e-15);
+        assert!(res < 1e-15);
+    }
+
+    #[test]
+    fn implied_resnorm_matches_direct() {
+        for seed in 0..8 {
+            let m = 7;
+            let h = random_hessenberg(m, seed);
+            let (y, implied) = solve_ls(&h, 1.5, m);
+            let direct = dense_ls_residual(&h, 1.5, m, &y);
+            assert!(
+                (implied - direct).abs() < 1e-10,
+                "seed {seed}: implied {implied} direct {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn optimality_vs_perturbations() {
+        let m = 5;
+        let h = random_hessenberg(m, 3);
+        let (y, _) = solve_ls(&h, 2.0, m);
+        let base = dense_ls_residual(&h, 2.0, m, &y);
+        let mut state = 99u64;
+        for _ in 0..20 {
+            state = state.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+            let idx = (state >> 48) as usize % m;
+            let mut y2 = y.clone();
+            y2[idx] += 1e-4;
+            assert!(dense_ls_residual(&h, 2.0, m, &y2) >= base - 1e-12);
+        }
+    }
+
+    #[test]
+    fn truncated_k_less_than_alloc() {
+        let m = 6;
+        let h = random_hessenberg(m, 5);
+        let (y, res) = solve_ls(&h, 1.0, 3);
+        assert_eq!(y.len(), 3);
+        let direct = dense_ls_residual(&h, 1.0, 3, &y);
+        assert!((res - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_column_does_not_nan() {
+        let mut h = zero_hessenberg(2);
+        h[0][0] = 0.0;
+        h[1][0] = 0.0; // totally degenerate first column
+        h[0][1] = 1.0;
+        h[1][1] = 0.5;
+        let (y, res) = solve_ls(&h, 1.0, 2);
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert!(res.is_finite());
+    }
+
+    #[test]
+    fn flops_grows_quadratically() {
+        assert!(flops(20) >= 3 * flops(10), "{} vs {}", flops(20), flops(10));
+    }
+}

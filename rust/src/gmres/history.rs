@@ -1,0 +1,108 @@
+//! Convergence history and solve reports — the record every experiment in
+//! EXPERIMENTS.md is built from.
+
+
+use crate::backend::Policy;
+
+/// Per-cycle residual trail.
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceHistory {
+    /// `||b - A x_k||` after each restart cycle (starting with cycle 1).
+    pub resnorms: Vec<f64>,
+}
+
+impl ConvergenceHistory {
+    pub fn push(&mut self, r: f64) {
+        self.resnorms.push(r);
+    }
+
+    pub fn cycles(&self) -> usize {
+        self.resnorms.len()
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.resnorms.last().copied()
+    }
+
+    /// Is the trail non-increasing (the GMRES guarantee, up to round-off)?
+    pub fn is_monotone(&self, rtol: f64) -> bool {
+        self.resnorms
+            .windows(2)
+            .all(|w| w[1] <= w[0] * (1.0 + rtol))
+    }
+
+    /// Geometric-mean residual reduction per cycle (convergence factor).
+    pub fn convergence_factor(&self, beta0: f64) -> Option<f64> {
+        let last = self.last()?;
+        if beta0 <= 0.0 || self.cycles() == 0 || last <= 0.0 {
+            return None;
+        }
+        Some((last / beta0).powf(1.0 / self.cycles() as f64))
+    }
+}
+
+/// Everything a solve produced.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    pub policy: Policy,
+    pub n: usize,
+    pub m: usize,
+    /// Final iterate.
+    pub x: Vec<f64>,
+    /// Final true residual norm.
+    pub resnorm: f64,
+    /// Relative residual `||r|| / ||b||`.
+    pub rel_resnorm: f64,
+    pub converged: bool,
+    pub cycles: usize,
+    /// Host wallclock seconds (this testbed).
+    pub wall_seconds: f64,
+    /// Modeled seconds on the paper's testbed (DeviceSim clock).
+    pub sim_seconds: f64,
+    pub history: ConvergenceHistory,
+}
+
+impl SolveReport {
+    /// One human line for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:>14}  n={:<6} m={:<3} cycles={:<4} rel_res={:.2e} conv={} wall={:.4}s sim={:.4}s",
+            self.policy.name(),
+            self.n,
+            self.m,
+            self.cycles,
+            self.rel_resnorm,
+            self.converged,
+            self.wall_seconds,
+            self.sim_seconds
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_detection() {
+        let h = ConvergenceHistory { resnorms: vec![1.0, 0.5, 0.25] };
+        assert!(h.is_monotone(0.0));
+        let bad = ConvergenceHistory { resnorms: vec![1.0, 1.5] };
+        assert!(!bad.is_monotone(1e-12));
+    }
+
+    #[test]
+    fn convergence_factor_halving() {
+        let h = ConvergenceHistory { resnorms: vec![0.5, 0.25, 0.125] };
+        let f = h.convergence_factor(1.0).unwrap();
+        assert!((f - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn convergence_factor_degenerate_cases() {
+        let empty = ConvergenceHistory::default();
+        assert!(empty.convergence_factor(1.0).is_none());
+        let zero = ConvergenceHistory { resnorms: vec![0.0] };
+        assert!(zero.convergence_factor(1.0).is_none());
+    }
+}

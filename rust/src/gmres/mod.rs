@@ -1,0 +1,14 @@
+//! Restarted GMRES — the paper's algorithm (Saad & Schultz 1986; pseudocode
+//! from Kelley 1995) plus the surrounding machinery: Arnoldi factorizations,
+//! Givens least squares, preconditioners, convergence history, and the
+//! restart driver that runs any offload-policy [`crate::backend::CycleEngine`].
+
+pub mod arnoldi;
+pub mod givens;
+pub mod history;
+pub mod precond;
+pub mod solver;
+
+pub use arnoldi::Ortho;
+pub use history::{ConvergenceHistory, SolveReport};
+pub use solver::{GmresConfig, RestartedGmres};

@@ -1,0 +1,247 @@
+//! Preconditioners — the standard GMRES companions (left preconditioning
+//! `M^{-1} A x = M^{-1} b`).
+//!
+//! The paper runs unpreconditioned GMRES; these are the "future work"
+//! extension its conclusions point at (bigger effective problems within the
+//! same device memory).  They compose with the host-orchestrated policies
+//! by wrapping the system operator.
+
+use crate::linalg::{CsrMatrix, DenseMatrix, LinearOperator};
+
+/// Applies `z = M^{-1} r`.
+pub trait Preconditioner {
+    fn apply_into(&self, r: &[f64], z: &mut [f64]);
+
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        let mut z = vec![0.0; r.len()];
+        self.apply_into(r, &mut z);
+        z
+    }
+}
+
+/// No-op preconditioner.
+#[derive(Clone, Debug, Default)]
+pub struct Identity;
+
+impl Preconditioner for Identity {
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
+        z.copy_from_slice(r);
+    }
+}
+
+/// Jacobi (diagonal) preconditioner.
+#[derive(Clone, Debug)]
+pub struct Jacobi {
+    inv_diag: Vec<f64>,
+}
+
+impl Jacobi {
+    pub fn from_dense(a: &DenseMatrix) -> Self {
+        let inv_diag = (0..a.nrows())
+            .map(|i| {
+                let d = a.get(i, i);
+                if d.abs() > 0.0 {
+                    1.0 / d
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Self { inv_diag }
+    }
+
+    pub fn from_csr(a: &CsrMatrix) -> Self {
+        let inv_diag = a
+            .diagonal()
+            .into_iter()
+            .map(|d| if d.abs() > 0.0 { 1.0 / d } else { 1.0 })
+            .collect();
+        Self { inv_diag }
+    }
+}
+
+impl Preconditioner for Jacobi {
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
+        for ((zi, ri), di) in z.iter_mut().zip(r).zip(&self.inv_diag) {
+            *zi = ri * di;
+        }
+    }
+}
+
+/// ILU(0): incomplete LU with zero fill-in on a CSR pattern.
+#[derive(Clone, Debug)]
+pub struct Ilu0 {
+    n: usize,
+    // LU factors stored dense-row sparse: same sparsity as A
+    lu: CsrFactors,
+}
+
+#[derive(Clone, Debug)]
+struct CsrFactors {
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    values: Vec<f64>,
+    diag_ptr: Vec<usize>,
+}
+
+impl Ilu0 {
+    /// Factor A ≈ L U with no fill-in.  Requires nonzero diagonal.
+    pub fn from_csr(a: &CsrMatrix) -> crate::Result<Self> {
+        let n = a.nrows();
+        anyhow::ensure!(a.ncols() == n, "square only");
+        // copy the pattern
+        let mut row_ptr = vec![0usize];
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..n {
+            for (r, c, v) in a.triplets().filter(|(r, _, _)| *r == i) {
+                debug_assert_eq!(r, i);
+                col_idx.push(c);
+                values.push(v);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        let mut diag_ptr = vec![0usize; n];
+        for i in 0..n {
+            let lo = row_ptr[i];
+            let hi = row_ptr[i + 1];
+            let d = col_idx[lo..hi]
+                .binary_search(&i)
+                .map_err(|_| anyhow::anyhow!("ILU(0): zero diagonal entry at row {i}"))?;
+            diag_ptr[i] = lo + d;
+        }
+        // ikj factorization restricted to the pattern
+        for i in 1..n {
+            let (lo, hi) = (row_ptr[i], row_ptr[i + 1]);
+            for kk in lo..hi {
+                let k = col_idx[kk];
+                if k >= i {
+                    break;
+                }
+                let pivot = values[diag_ptr[k]];
+                anyhow::ensure!(pivot.abs() > 1e-300, "ILU(0): zero pivot at {k}");
+                let lik = values[kk] / pivot;
+                values[kk] = lik;
+                // subtract lik * U(k, j) for j in pattern(i), j > k
+                let (klo, khi) = (row_ptr[k], row_ptr[k + 1]);
+                for jj in kk + 1..hi {
+                    let j = col_idx[jj];
+                    // find U(k, j)
+                    if let Ok(p) = col_idx[klo..khi].binary_search(&j) {
+                        let ukj = values[klo + p];
+                        if j > k {
+                            values[jj] -= lik * ukj;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Self { n, lu: CsrFactors { row_ptr, col_idx, values, diag_ptr } })
+    }
+}
+
+impl Preconditioner for Ilu0 {
+    fn apply_into(&self, r: &[f64], z: &mut [f64]) {
+        let f = &self.lu;
+        // forward solve L z = r (unit lower triangular)
+        for i in 0..self.n {
+            let mut acc = r[i];
+            for kk in f.row_ptr[i]..f.diag_ptr[i] {
+                acc -= f.values[kk] * z[f.col_idx[kk]];
+            }
+            z[i] = acc;
+        }
+        // backward solve U z = z
+        for i in (0..self.n).rev() {
+            let mut acc = z[i];
+            for kk in f.diag_ptr[i] + 1..f.row_ptr[i + 1] {
+                acc -= f.values[kk] * z[f.col_idx[kk]];
+            }
+            z[i] = acc / f.values[f.diag_ptr[i]];
+        }
+    }
+}
+
+/// Left-preconditioned operator `M^{-1} A` for host-orchestrated GMRES.
+pub struct PreconditionedOperator<'a, O: LinearOperator + ?Sized, M: Preconditioner + ?Sized> {
+    pub op: &'a O,
+    pub m: &'a M,
+}
+
+impl<'a, O: LinearOperator + ?Sized, M: Preconditioner + ?Sized> LinearOperator
+    for PreconditionedOperator<'a, O, M>
+{
+    fn nrows(&self) -> usize {
+        self.op.nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.op.ncols()
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        let ax = self.op.apply(x);
+        self.m.apply_into(&ax, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::generators;
+
+    #[test]
+    fn identity_is_noop() {
+        let r = vec![1.0, -2.0, 3.0];
+        assert_eq!(Identity.apply(&r), r);
+    }
+
+    #[test]
+    fn jacobi_inverts_diagonal_matrix_exactly() {
+        let a = DenseMatrix::from_fn(4, 4, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let p = Jacobi::from_dense(&a);
+        let r = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(p.apply(&r), vec![1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn ilu0_exact_for_triangular_pattern() {
+        // tridiagonal: ILU(0) == full LU, so M^{-1}A ≈ I on application
+        let a = generators::laplacian_1d(20);
+        let p = Ilu0::from_csr(&a).unwrap();
+        let x_true = generators::random_vector(20, 7);
+        let b = a.apply(&x_true);
+        let x = p.apply(&b);
+        let err = crate::linalg::vector::rel_err(&x, &x_true);
+        assert!(err < 1e-12, "err {err}");
+    }
+
+    #[test]
+    fn ilu0_reduces_gmres_cycles_on_convection_diffusion() {
+        use crate::gmres::arnoldi::{arnoldi, Ortho};
+        let a = generators::convection_diffusion_2d(12, 12, 8.0, 4.0);
+        let b = generators::random_vector(144, 9);
+        let p = Ilu0::from_csr(&a).unwrap();
+        let pre = PreconditionedOperator { op: &a, m: &p };
+        let pb = p.apply(&b);
+        // residual after 10 Arnoldi steps, with vs without preconditioning
+        let f_plain = arnoldi(&a, &b, 10, Ortho::Mgs);
+        let f_pre = arnoldi(&pre, &pb, 10, Ortho::Mgs);
+        let (_, r_plain) = crate::gmres::givens::solve_ls(&f_plain.h, f_plain.beta, f_plain.k);
+        let (_, r_pre) = crate::gmres::givens::solve_ls(&f_pre.h, f_pre.beta, f_pre.k);
+        assert!(
+            r_pre / f_pre.beta < r_plain / f_plain.beta,
+            "pre {} plain {}",
+            r_pre / f_pre.beta,
+            r_plain / f_plain.beta
+        );
+    }
+
+    #[test]
+    fn ilu0_zero_diagonal_rejected() {
+        let a = CsrMatrix::from_triplets(2, 2, vec![(0, 1, 1.0), (1, 0, 1.0)]);
+        assert!(Ilu0::from_csr(&a).is_err());
+    }
+
+    use crate::linalg::CsrMatrix;
+}

@@ -1,0 +1,153 @@
+//! The restart driver (paper lines 9–11): run cycles of any
+//! [`CycleEngine`] until `||r|| <= tol * ||b||` or the restart budget is
+//! exhausted, collecting wallclock + modeled time and the residual trail.
+
+use std::time::Instant;
+
+
+use crate::backend::CycleEngine;
+use crate::gmres::history::{ConvergenceHistory, SolveReport};
+use crate::Result;
+
+/// Solver configuration (defaults mirror the paper's setup: GMRES(30),
+/// relative tolerance 1e-6).
+#[derive(Clone, Copy, Debug)]
+pub struct GmresConfig {
+    /// Restart length m.
+    pub m: usize,
+    /// Relative residual tolerance (`||r|| <= tol * ||b||`).
+    pub tol: f64,
+    /// Max restart cycles before giving up.
+    pub max_restarts: usize,
+}
+
+impl Default for GmresConfig {
+    fn default() -> Self {
+        Self { m: 30, tol: 1e-6, max_restarts: 200 }
+    }
+}
+
+/// Restarted GMRES over a policy engine.
+pub struct RestartedGmres {
+    config: GmresConfig,
+}
+
+impl RestartedGmres {
+    pub fn new(config: GmresConfig) -> Self {
+        Self { config }
+    }
+
+    pub fn config(&self) -> &GmresConfig {
+        &self.config
+    }
+
+    /// Drive `engine` from initial guess `x0` (zeros if `None`).
+    pub fn solve(
+        &self,
+        engine: &mut dyn CycleEngine,
+        x0: Option<Vec<f64>>,
+    ) -> Result<SolveReport> {
+        let n = engine.n();
+        anyhow::ensure!(
+            engine.m() == self.config.m,
+            "engine restart length {} != config m {}",
+            engine.m(),
+            self.config.m
+        );
+        let bnorm = engine.bnorm();
+        let target = self.config.tol * if bnorm > 0.0 { bnorm } else { 1.0 };
+
+        let mut x = x0.unwrap_or_else(|| vec![0.0; n]);
+        anyhow::ensure!(x.len() == n, "x0 length mismatch");
+        let mut history = ConvergenceHistory::default();
+        let mut resnorm = f64::INFINITY;
+        let mut converged = false;
+
+        let start = Instant::now();
+        for _cycle in 0..self.config.max_restarts {
+            let r = engine.cycle(&x)?;
+            x = r.x;
+            resnorm = r.resnorm;
+            history.push(resnorm);
+            if resnorm <= target {
+                converged = true;
+                break;
+            }
+        }
+        let wall_seconds = start.elapsed().as_secs_f64();
+
+        Ok(SolveReport {
+            policy: engine.policy(),
+            n,
+            m: self.config.m,
+            x,
+            resnorm,
+            rel_resnorm: if bnorm > 0.0 { resnorm / bnorm } else { resnorm },
+            converged,
+            cycles: history.cycles(),
+            wall_seconds,
+            sim_seconds: engine.sim().elapsed(),
+            history,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::providers::{HostMode, NativeMatVec};
+    use crate::backend::{HostCycleEngine, Policy};
+    use crate::linalg::generators;
+
+    fn native_engine(n: usize, m: usize, seed: u64) -> (HostCycleEngine<NativeMatVec>, Vec<f64>) {
+        let (a, b, xt) = generators::table1_system(n, seed);
+        (
+            HostCycleEngine::new(Policy::SerialNative, NativeMatVec::new(a), b, m, HostMode::Native, false)
+                .unwrap(),
+            xt,
+        )
+    }
+
+    #[test]
+    fn solves_to_tolerance() {
+        let (mut e, xt) = native_engine(80, 20, 0);
+        let solver = RestartedGmres::new(GmresConfig { m: 20, tol: 1e-10, max_restarts: 50 });
+        let rep = solver.solve(&mut e, None).unwrap();
+        assert!(rep.converged, "cycles {} res {}", rep.cycles, rep.rel_resnorm);
+        assert!(rep.rel_resnorm <= 1e-10);
+        assert!(crate::linalg::vector::rel_err(&rep.x, &xt) < 1e-7);
+    }
+
+    #[test]
+    fn residual_trail_is_monotone() {
+        let (mut e, _) = native_engine(60, 5, 1);
+        let solver = RestartedGmres::new(GmresConfig { m: 5, tol: 1e-12, max_restarts: 100 });
+        let rep = solver.solve(&mut e, None).unwrap();
+        assert!(rep.history.is_monotone(1e-10), "{:?}", rep.history.resnorms);
+    }
+
+    #[test]
+    fn restart_budget_respected() {
+        let (mut e, _) = native_engine(60, 2, 2);
+        let solver = RestartedGmres::new(GmresConfig { m: 2, tol: 1e-300, max_restarts: 3 });
+        let rep = solver.solve(&mut e, None).unwrap();
+        assert!(!rep.converged);
+        assert_eq!(rep.cycles, 3);
+    }
+
+    #[test]
+    fn warm_start_from_solution_converges_immediately() {
+        let (mut e, xt) = native_engine(40, 10, 3);
+        let solver = RestartedGmres::new(GmresConfig { m: 10, tol: 1e-8, max_restarts: 10 });
+        let rep = solver.solve(&mut e, Some(xt)).unwrap();
+        assert!(rep.converged);
+        assert_eq!(rep.cycles, 1);
+    }
+
+    #[test]
+    fn mismatched_m_rejected() {
+        let (mut e, _) = native_engine(20, 4, 4);
+        let solver = RestartedGmres::new(GmresConfig { m: 5, tol: 1e-8, max_restarts: 10 });
+        assert!(solver.solve(&mut e, None).is_err());
+    }
+}

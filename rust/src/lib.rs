@@ -1,0 +1,42 @@
+//! # gmres-rs
+//!
+//! Reproduction of *“The performances of R GPU implementations of the GMRES
+//! method”* (Oancea & Pospisil, 2018) as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! The paper benchmarks restarted GMRES(m) under four *offload policies* —
+//! serial R (`pracma::gmres`), `gmatrix` (device-resident matrix, matvec-only
+//! offload), `gputools` (transfer-everything matvec offload) and `gpuR`/vcl
+//! (everything device-resident) — and reports the speedup of each GPU policy
+//! over the serial baseline (Table 1 / Figure 5).
+//!
+//! Layer map (see `DESIGN.md`):
+//!
+//! * **[`linalg`]** — dense/CSR matrices, generators, MatrixMarket I/O,
+//!   native BLAS-1/2 (the numerical substrate).
+//! * **[`device`]** — the simulated accelerator: capacity-capped memory
+//!   allocator, PCIe transfer model, roofline kernel-timing model
+//!   parameterized by the paper's GeForce 840M.
+//! * **[`runtime`]** — PJRT executor: loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`, produced by `python/compile/aot.py`) and runs
+//!   them; the "device" that executes real numerics.
+//! * **[`backend`]** — the four offload policies as [`backend::CycleEngine`]
+//!   implementations, including the R-semantics host engine ([`backend::rvec`]).
+//! * **[`gmres`]** — restarted GMRES driver, host Arnoldi (MGS/CGS), Givens
+//!   least squares, preconditioners.
+//! * **[`coordinator`]** — the L3 solve service: request router, admission
+//!   by device memory, batcher, worker pool, metrics.
+//! * **[`report`]** — Table 1 / Figure 5 regeneration harness, ablations,
+//!   paper reference data.
+
+pub mod backend;
+pub mod coordinator;
+pub mod device;
+pub mod gmres;
+pub mod linalg;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type (anyhow for ergonomic error context).
+pub type Result<T> = anyhow::Result<T>;

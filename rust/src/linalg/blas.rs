@@ -1,0 +1,117 @@
+//! Native BLAS-1/2 on slices — the compiled-host reference implementations.
+//!
+//! These are what a *tuned native* baseline looks like (the paper's §5
+//! comparison to "a tuned linear algebra library"); the interpreted-R
+//! semantics live in [`crate::backend::rvec`] instead.  `dot` uses 4-way
+//! unrolled accumulators so the compiler can keep independent FMA chains in
+//! flight (see EXPERIMENTS.md §Perf).
+
+/// `<x, y>` with four independent accumulator chains.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot length mismatch");
+    let mut acc = [0.0f64; 4];
+    let chunks = x.len() / 4;
+    for k in 0..chunks {
+        let i = k * 4;
+        acc[0] += x[i] * y[i];
+        acc[1] += x[i + 1] * y[i + 1];
+        acc[2] += x[i + 2] * y[i + 2];
+        acc[3] += x[i + 3] * y[i + 3];
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..x.len() {
+        tail += x[i] * y[i];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// `y += a * x` in place.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `x *= a` in place.
+#[inline]
+pub fn scal(a: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Euclidean norm `||x||_2`.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// `z = x - y` into a caller buffer.
+#[inline]
+pub fn sub_into(x: &[f64], y: &[f64], z: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), z.len());
+    for ((zi, xi), yi) in z.iter_mut().zip(x).zip(y) {
+        *zi = xi - yi;
+    }
+}
+
+/// `y = x` copy helper.
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_small_and_unrolled_tail() {
+        // length 7 exercises both the unrolled body and the tail loop
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let y = [1.0; 7];
+        assert_eq!(dot(&x, &y), 28.0);
+    }
+
+    #[test]
+    fn dot_empty_is_zero() {
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn axpy_in_place() {
+        let x = [1.0, -1.0, 2.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, [10.5, 9.5, 11.0]);
+    }
+
+    #[test]
+    fn scal_zero_annihilates() {
+        let mut x = [3.0, -4.0];
+        scal(0.0, &mut x);
+        assert_eq!(x, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn nrm2_pythagorean() {
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sub_into_basic() {
+        let mut z = [0.0; 2];
+        sub_into(&[5.0, 1.0], &[2.0, 1.0], &mut z);
+        assert_eq!(z, [3.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dot length mismatch")]
+    fn dot_length_mismatch_panics() {
+        dot(&[1.0], &[1.0, 2.0]);
+    }
+}

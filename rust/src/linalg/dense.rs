@@ -1,0 +1,230 @@
+//! Row-major dense `f64` matrix.
+//!
+//! Row-major matches the default HLO layout `{1,0}` of the AOT artifacts, so
+//! `DenseMatrix::data` can be handed to the PJRT runtime byte-for-byte.
+
+use super::LinearOperator;
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    nrows: usize,
+    ncols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix of the given shape.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    /// Identity of order `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major buffer.  Panics if `data.len() != nrows*ncols`.
+    pub fn from_vec(nrows: usize, ncols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), nrows * ncols, "shape/buffer mismatch");
+        Self { nrows, ncols, data }
+    }
+
+    /// Build from a closure `f(i, j) -> a_ij`.
+    pub fn from_fn(nrows: usize, ncols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(nrows * ncols);
+        for i in 0..nrows {
+            for j in 0..ncols {
+                data.push(f(i, j));
+            }
+        }
+        Self { nrows, ncols, data }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Row-major backing buffer.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.data[i * self.ncols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.data[i * self.ncols + j] = v;
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.ncols..(i + 1) * self.ncols]
+    }
+
+    /// Extract column `j` (allocates).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.nrows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Self {
+        Self::from_fn(self.ncols, self.nrows, |i, j| self.get(j, i))
+    }
+
+    /// `y = A^T x` (x has len nrows, y has len ncols).
+    pub fn apply_transpose_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.nrows);
+        assert_eq!(y.len(), self.ncols);
+        y.fill(0.0);
+        for i in 0..self.nrows {
+            let xi = x[i];
+            let row = self.row(i);
+            for (yj, aij) in y.iter_mut().zip(row) {
+                *yj += aij * xi;
+            }
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Infinity norm (max row sum of |a_ij|).
+    pub fn norm_inf(&self) -> f64 {
+        (0..self.nrows)
+            .map(|i| self.row(i).iter().map(|v| v.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// Bytes of the backing f64 buffer (for device-memory accounting).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Strict diagonal dominance factor: min_i (|a_ii| - sum_{j!=i} |a_ij|).
+    /// Positive means strictly diagonally dominant (GMRES-friendly).
+    pub fn diagonal_dominance(&self) -> f64 {
+        assert_eq!(self.nrows, self.ncols);
+        (0..self.nrows)
+            .map(|i| {
+                let off: f64 = self
+                    .row(i)
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| *j != i)
+                    .map(|(_, v)| v.abs())
+                    .sum();
+                self.get(i, i).abs() - off
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+impl LinearOperator for DenseMatrix {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols, "gemv dimension mismatch");
+        assert_eq!(y.len(), self.nrows, "gemv output mismatch");
+        for (yi, row) in y.iter_mut().zip(self.data.chunks_exact(self.ncols)) {
+            *yi = super::blas::dot(row, x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_apply_is_noop() {
+        let a = DenseMatrix::identity(7);
+        let x: Vec<f64> = (0..7).map(|i| i as f64).collect();
+        assert_eq!(a.apply(&x), x);
+    }
+
+    #[test]
+    fn from_fn_and_get_agree() {
+        let a = DenseMatrix::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(a.get(2, 3), 23.0);
+        assert_eq!(a.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(a.col(0), vec![0.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = DenseMatrix::from_fn(5, 3, |i, j| (i + 7 * j) as f64);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn apply_matches_manual() {
+        let a = DenseMatrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let y = a.apply(&[1.0, 0.0, -1.0]);
+        assert_eq!(y, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn apply_transpose_matches_transpose_apply() {
+        let a = DenseMatrix::from_fn(4, 6, |i, j| ((i * j) as f64).sin());
+        let x: Vec<f64> = (0..4).map(|i| (i as f64) - 1.5).collect();
+        let mut y = vec![0.0; 6];
+        a.apply_transpose_into(&x, &mut y);
+        let yt = a.transpose().apply(&x);
+        for (a, b) in y.iter().zip(&yt) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn norms() {
+        let a = DenseMatrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((a.norm_fro() - 5.0).abs() < 1e-15);
+        assert_eq!(a.norm_inf(), 4.0);
+    }
+
+    #[test]
+    fn diagonal_dominance_sign() {
+        let dd = DenseMatrix::from_vec(2, 2, vec![5.0, 1.0, -1.0, 4.0]);
+        assert!(dd.diagonal_dominance() > 0.0);
+        let not_dd = DenseMatrix::from_vec(2, 2, vec![1.0, 5.0, 5.0, 1.0]);
+        assert!(not_dd.diagonal_dominance() < 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/buffer mismatch")]
+    fn from_vec_bad_shape_panics() {
+        DenseMatrix::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn nbytes_accounting() {
+        assert_eq!(DenseMatrix::zeros(10, 20).nbytes(), 1600);
+    }
+}

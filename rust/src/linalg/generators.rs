@@ -1,0 +1,153 @@
+//! Workload generators.
+//!
+//! The paper benchmarks GMRES on dense nonsymmetric matrices of order
+//! 1000–10000 (Table 1).  It does not publish the matrix ensemble, so we use
+//! the standard choice for GMRES studies: dense random nonsymmetric with a
+//! diagonal shift guaranteeing convergence (eigenvalues clustered around the
+//! shift).  The convection–diffusion stencil generator provides the
+//! domain-specific workload for `examples/convection_diffusion.rs`.
+//!
+//! All generators take an explicit seed (xoshiro256**, [`crate::util::rng`])
+//! so every experiment in EXPERIMENTS.md is bit-reproducible.
+
+use crate::util::rng::Rng;
+
+use super::{CsrMatrix, DenseMatrix};
+
+/// Uniform(-1, 1) dense nonsymmetric matrix with `shift` added on the
+/// diagonal.  `shift >= n` makes it strictly diagonally dominant.
+pub fn dense_shifted_random(n: usize, shift: f64, seed: u64) -> DenseMatrix {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut m = DenseMatrix::from_fn(n, n, |_, _| rng.uniform(-1.0, 1.0));
+    for i in 0..n {
+        let v = m.get(i, i) + shift;
+        m.set(i, i, v);
+    }
+    m
+}
+
+/// The Table-1 workload: dense nonsymmetric random system with a diagonal
+/// shift of `0.9*sqrt(n) + 4` — about 1.6x the circular-law spectral radius
+/// `sqrt(n/3)`, so GMRES(m) converges over a handful of restart cycles
+/// (neither trivially in one cycle nor stagnating).  Returns
+/// `(A, b, x_true)` with `b = A x_true` so solves verify against a known
+/// solution.
+pub fn table1_system(n: usize, seed: u64) -> (DenseMatrix, Vec<f64>, Vec<f64>) {
+    let a = dense_shifted_random(n, 0.9 * (n as f64).sqrt() + 4.0, seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0x9e37_79b9_7f4a_7c15);
+    let x_true: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let b = super::LinearOperator::apply(&a, &x_true);
+    (a, b, x_true)
+}
+
+/// Random vector in Uniform(-1,1).
+pub fn random_vector(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+/// 2-D convection–diffusion operator on a `nx x ny` grid (5-point upwind
+/// stencil), the canonical nonsymmetric GMRES test problem:
+///
+/// `-Δu + (cx, cy)·∇u = f` on the unit square, Dirichlet boundary.
+///
+/// Larger `cx`/`cy` increase nonsymmetry (and GMRES difficulty).
+pub fn convection_diffusion_2d(nx: usize, ny: usize, cx: f64, cy: f64) -> CsrMatrix {
+    let n = nx * ny;
+    let hx = 1.0 / (nx as f64 + 1.0);
+    let hy = 1.0 / (ny as f64 + 1.0);
+    let idx = |i: usize, j: usize| i * ny + j;
+    let mut trips = Vec::with_capacity(5 * n);
+    for i in 0..nx {
+        for j in 0..ny {
+            let row = idx(i, j);
+            // diffusion
+            let dx = 1.0 / (hx * hx);
+            let dy = 1.0 / (hy * hy);
+            // first-order upwind convection (assumes cx, cy >= 0)
+            let ux = cx / hx;
+            let uy = cy / hy;
+            trips.push((row, row, 2.0 * dx + 2.0 * dy + ux + uy));
+            if i > 0 {
+                trips.push((row, idx(i - 1, j), -dx - ux));
+            }
+            if i + 1 < nx {
+                trips.push((row, idx(i + 1, j), -dx));
+            }
+            if j > 0 {
+                trips.push((row, idx(i, j - 1), -dy - uy));
+            }
+            if j + 1 < ny {
+                trips.push((row, idx(i, j + 1), -dy));
+            }
+        }
+    }
+    CsrMatrix::from_triplets(n, n, trips)
+}
+
+/// 1-D Laplacian tridiagonal matrix (SPD; the easy sanity workload).
+pub fn laplacian_1d(n: usize) -> CsrMatrix {
+    let mut trips = Vec::with_capacity(3 * n);
+    for i in 0..n {
+        trips.push((i, i, 2.0));
+        if i > 0 {
+            trips.push((i, i - 1, -1.0));
+        }
+        if i + 1 < n {
+            trips.push((i, i + 1, -1.0));
+        }
+    }
+    CsrMatrix::from_triplets(n, n, trips)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::LinearOperator;
+
+    #[test]
+    fn dense_random_is_reproducible() {
+        let a = dense_shifted_random(50, 10.0, 42);
+        let b = dense_shifted_random(50, 10.0, 42);
+        assert_eq!(a, b);
+        let c = dense_shifted_random(50, 10.0, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn table1_system_is_consistent_and_shifted() {
+        let (a, b, x) = table1_system(64, 0);
+        // diagonal carries the shift: |a_ii| >> typical off-diagonal
+        for i in 0..64 {
+            assert!(a.get(i, i).abs() > 5.0, "diag[{i}] = {}", a.get(i, i));
+        }
+        let r = crate::linalg::vector::sub(&b, &a.apply(&x));
+        assert!(crate::linalg::blas::nrm2(&r) < 1e-10);
+    }
+
+    #[test]
+    fn convection_diffusion_shape_and_dominance() {
+        let a = convection_diffusion_2d(8, 8, 10.0, 5.0);
+        assert_eq!(a.nrows(), 64);
+        // upwind discretization is weakly diagonally dominant by rows
+        let d = a.to_dense();
+        assert!(d.diagonal_dominance() >= -1e-9);
+    }
+
+    #[test]
+    fn laplacian_rowsums() {
+        let a = laplacian_1d(10);
+        // interior row sums are 0, boundary rows 1
+        let ones = vec![1.0; 10];
+        let y = a.apply(&ones);
+        assert_eq!(y[0], 1.0);
+        assert!(y[1..9].iter().all(|v| v.abs() < 1e-15));
+        assert_eq!(y[9], 1.0);
+    }
+
+    #[test]
+    fn laplacian_is_symmetric() {
+        let d = laplacian_1d(12).to_dense();
+        assert_eq!(d, d.transpose());
+    }
+}

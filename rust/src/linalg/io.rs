@@ -1,0 +1,202 @@
+//! MatrixMarket I/O (coordinate & array formats) so external test matrices
+//! (SuiteSparse etc.) can be fed to every backend and solver.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+use super::{CsrMatrix, DenseMatrix};
+use crate::Result;
+
+/// Parse a MatrixMarket file.  Supports `matrix coordinate real
+/// {general,symmetric}` and `matrix array real general` headers.
+pub fn read_matrix_market(path: impl AsRef<Path>) -> Result<CsrMatrix> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    read_matrix_market_from(BufReader::new(file))
+}
+
+/// Parse MatrixMarket from any reader (used by tests with in-memory data).
+pub fn read_matrix_market_from(reader: impl BufRead) -> Result<CsrMatrix> {
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow!("empty MatrixMarket file"))??;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() < 5 || !h[0].starts_with("%%MatrixMarket") || h[1] != "matrix" {
+        bail!("bad MatrixMarket header: {header}");
+    }
+    let coordinate = match h[2] {
+        "coordinate" => true,
+        "array" => false,
+        other => bail!("unsupported format {other}"),
+    };
+    if h[3] != "real" && h[3] != "integer" {
+        bail!("unsupported field {}", h[3]);
+    }
+    let symmetric = match h[4] {
+        "general" => false,
+        "symmetric" => true,
+        other => bail!("unsupported symmetry {other}"),
+    };
+
+    // skip comments, read size line
+    let size_line = loop {
+        let line = lines.next().ok_or_else(|| anyhow!("missing size line"))??;
+        if !line.trim_start().starts_with('%') && !line.trim().is_empty() {
+            break line;
+        }
+    };
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>().map_err(|e| anyhow!("bad size token {t}: {e}")))
+        .collect::<Result<_>>()?;
+
+    if coordinate {
+        let (&nrows, &ncols, &nnz) = match dims.as_slice() {
+            [r, c, n] => (r, c, n),
+            _ => bail!("coordinate size line needs 3 ints"),
+        };
+        let mut trips = Vec::with_capacity(if symmetric { 2 * nnz } else { nnz });
+        let mut seen = 0usize;
+        for line in lines {
+            let line = line?;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            let toks: Vec<&str> = t.split_whitespace().collect();
+            if toks.len() < 3 {
+                bail!("bad entry line: {t}");
+            }
+            let i: usize = toks[0].parse()?;
+            let j: usize = toks[1].parse()?;
+            let v: f64 = toks[2].parse()?;
+            if i == 0 || j == 0 || i > nrows || j > ncols {
+                bail!("1-based index ({i},{j}) out of range");
+            }
+            trips.push((i - 1, j - 1, v));
+            if symmetric && i != j {
+                trips.push((j - 1, i - 1, v));
+            }
+            seen += 1;
+        }
+        if seen != nnz {
+            bail!("expected {nnz} entries, found {seen}");
+        }
+        Ok(CsrMatrix::from_triplets(nrows, ncols, trips))
+    } else {
+        let (&nrows, &ncols) = match dims.as_slice() {
+            [r, c] => (r, c),
+            _ => bail!("array size line needs 2 ints"),
+        };
+        // array format is column-major dense
+        let mut vals = Vec::with_capacity(nrows * ncols);
+        for line in lines {
+            let line = line?;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            for tok in t.split_whitespace() {
+                vals.push(tok.parse::<f64>()?);
+            }
+        }
+        if vals.len() != nrows * ncols {
+            bail!("expected {} values, found {}", nrows * ncols, vals.len());
+        }
+        let trips = (0..ncols).flat_map(|j| {
+            let vals = &vals;
+            (0..nrows).map(move |i| (i, j, vals[j * nrows + i]))
+        });
+        Ok(CsrMatrix::from_triplets(nrows, ncols, trips.collect::<Vec<_>>()))
+    }
+}
+
+/// Write CSR as `coordinate real general`.
+pub fn write_matrix_market(m: &CsrMatrix, mut w: impl Write) -> Result<()> {
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by gmres-rs")?;
+    writeln!(w, "{} {} {}", m.nrows(), m.ncols(), m.nnz())?;
+    for (i, j, v) in m.triplets() {
+        writeln!(w, "{} {} {:.17e}", i + 1, j + 1, v)?;
+    }
+    Ok(())
+}
+
+/// Write a dense matrix in `array real general` format.
+pub fn write_matrix_market_dense(m: &DenseMatrix, mut w: impl Write) -> Result<()> {
+    writeln!(w, "%%MatrixMarket matrix array real general")?;
+    writeln!(w, "{} {}", m.nrows(), m.ncols())?;
+    for j in 0..m.ncols() {
+        for i in 0..m.nrows() {
+            writeln!(w, "{:.17e}", m.get(i, j))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const COO: &str = "%%MatrixMarket matrix coordinate real general\n\
+                       % comment\n\
+                       2 3 3\n\
+                       1 1 2.0\n1 3 1.0\n2 2 3.0\n";
+
+    #[test]
+    fn parse_coordinate_general() {
+        let m = read_matrix_market_from(Cursor::new(COO)).unwrap();
+        assert_eq!((m.nrows(), m.ncols(), m.nnz()), (2, 3, 3));
+        assert_eq!(m.get(0, 2), 1.0);
+    }
+
+    #[test]
+    fn parse_symmetric_mirrors() {
+        let mm = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 4.0\n2 1 1.5\n";
+        let m = read_matrix_market_from(Cursor::new(mm)).unwrap();
+        assert_eq!(m.get(0, 1), 1.5);
+        assert_eq!(m.get(1, 0), 1.5);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn parse_array_format() {
+        let mm = "%%MatrixMarket matrix array real general\n2 2\n1.0\n2.0\n3.0\n4.0\n";
+        let m = read_matrix_market_from(Cursor::new(mm)).unwrap();
+        // column-major: a11=1, a21=2, a12=3, a22=4
+        assert_eq!(m.get(0, 1), 3.0);
+        assert_eq!(m.get(1, 0), 2.0);
+    }
+
+    #[test]
+    fn roundtrip_coo() {
+        let m = read_matrix_market_from(Cursor::new(COO)).unwrap();
+        let mut buf = Vec::new();
+        write_matrix_market(&m, &mut buf).unwrap();
+        let m2 = read_matrix_market_from(Cursor::new(buf)).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn nnz_mismatch_rejected() {
+        let mm = "%%MatrixMarket matrix coordinate real general\n1 1 2\n1 1 1.0\n";
+        assert!(read_matrix_market_from(Cursor::new(mm)).is_err());
+    }
+
+    #[test]
+    fn bad_header_rejected() {
+        assert!(read_matrix_market_from(Cursor::new("nope\n")).is_err());
+        let complex = "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 0\n";
+        assert!(read_matrix_market_from(Cursor::new(complex)).is_err());
+    }
+
+    #[test]
+    fn zero_based_index_rejected() {
+        let mm = "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n";
+        assert!(read_matrix_market_from(Cursor::new(mm)).is_err());
+    }
+}

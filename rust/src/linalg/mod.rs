@@ -1,0 +1,34 @@
+//! Numerical substrate: dense & sparse matrices, vectors, BLAS, generators,
+//! MatrixMarket I/O.
+//!
+//! Everything is `f64` (R's `numeric`).  Dense storage is **row-major**: the
+//! HLO artifacts take `f64[N,N]` in row-major default layout `{1,0}`, so the
+//! same buffer feeds the PJRT executor without relayout.
+
+pub mod blas;
+pub mod dense;
+pub mod generators;
+pub mod io;
+pub mod sparse;
+pub mod vector;
+
+pub use dense::DenseMatrix;
+pub use sparse::CsrMatrix;
+
+/// A linear operator that can apply itself to a vector: the only thing the
+/// Arnoldi process needs from the system matrix.
+pub trait LinearOperator {
+    /// Number of rows (= vector length for square systems).
+    fn nrows(&self) -> usize;
+    /// Number of columns.
+    fn ncols(&self) -> usize;
+    /// `y = A x` into a caller-provided buffer (len = nrows).
+    fn apply_into(&self, x: &[f64], y: &mut [f64]);
+
+    /// Convenience allocating apply.
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows()];
+        self.apply_into(x, &mut y);
+        y
+    }
+}

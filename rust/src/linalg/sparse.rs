@@ -1,0 +1,179 @@
+//! Compressed-sparse-row matrix.
+//!
+//! The paper's benchmark uses dense matrices (that is what the R packages
+//! offload), but the convection–diffusion workload the GMRES literature
+//! motivates is sparse; the stencil generators build CSR directly and the
+//! dense benchmark densifies it.  The serial backends accept any
+//! [`LinearOperator`], so CSR solves run end-to-end too.
+
+use super::{DenseMatrix, LinearOperator};
+
+/// CSR matrix with sorted column indices within each row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    nrows: usize,
+    ncols: usize,
+    /// len = nrows + 1
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from COO triplets; duplicates are summed, entries sorted.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, f64)>,
+    ) -> Self {
+        let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); nrows];
+        for (i, j, v) in triplets {
+            assert!(i < nrows && j < ncols, "triplet ({i},{j}) out of bounds");
+            per_row[i].push((j, v));
+        }
+        let mut row_ptr = Vec::with_capacity(nrows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for row in &mut per_row {
+            row.sort_by_key(|(j, _)| *j);
+            let mut k = 0;
+            while k < row.len() {
+                let j = row[k].0;
+                let mut v = 0.0;
+                while k < row.len() && row[k].0 == j {
+                    v += row[k].1;
+                    k += 1;
+                }
+                if v != 0.0 {
+                    col_idx.push(j);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Self { nrows, ncols, row_ptr, col_idx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Entry accessor (O(log nnz_row)).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        match self.col_idx[lo..hi].binary_search(&j) {
+            Ok(k) => self.values[lo + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Diagonal as a vector (missing entries are 0).
+    pub fn diagonal(&self) -> Vec<f64> {
+        (0..self.nrows.min(self.ncols)).map(|i| self.get(i, i)).collect()
+    }
+
+    /// Densify (for the dense-offload benchmark path).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut d = DenseMatrix::zeros(self.nrows, self.ncols);
+        for i in 0..self.nrows {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                d.set(i, self.col_idx[k], self.values[k]);
+            }
+        }
+        d
+    }
+
+    /// Iterate `(row, col, value)` triplets.
+    pub fn triplets(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.nrows).flat_map(move |i| {
+            (self.row_ptr[i]..self.row_ptr[i + 1])
+                .map(move |k| (i, self.col_idx[k], self.values[k]))
+        })
+    }
+}
+
+impl LinearOperator for CsrMatrix {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let mut acc = 0.0;
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.values[k] * x[self.col_idx[k]];
+            }
+            y[i] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [2 0 1]
+        // [0 3 0]
+        CsrMatrix::from_triplets(2, 3, vec![(0, 0, 2.0), (0, 2, 1.0), (1, 1, 3.0)])
+    }
+
+    #[test]
+    fn get_and_nnz() {
+        let a = sample();
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.get(0, 0), 2.0);
+        assert_eq!(a.get(0, 1), 0.0);
+        assert_eq!(a.get(1, 1), 3.0);
+    }
+
+    #[test]
+    fn duplicates_summed_zeros_dropped() {
+        let a = CsrMatrix::from_triplets(1, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (0, 1, 5.0), (0, 1, -5.0)]);
+        assert_eq!(a.get(0, 0), 3.0);
+        assert_eq!(a.nnz(), 1); // the (0,1) pair cancels to 0 and is dropped
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let x = vec![1.0, -1.0, 2.0];
+        assert_eq!(a.apply(&x), d.apply(&x));
+    }
+
+    #[test]
+    fn diagonal_extraction() {
+        let a = sample();
+        assert_eq!(a.diagonal(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn triplets_roundtrip() {
+        let a = sample();
+        let b = CsrMatrix::from_triplets(2, 3, a.triplets());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_triplet_panics() {
+        CsrMatrix::from_triplets(1, 1, vec![(0, 5, 1.0)]);
+    }
+}

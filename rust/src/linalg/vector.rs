@@ -1,0 +1,76 @@
+//! Small owned-vector conveniences layered over [`super::blas`].
+
+use super::blas;
+
+/// `x + y` (allocates).
+pub fn add(x: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a + b).collect()
+}
+
+/// `x - y` (allocates).
+pub fn sub(x: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a - b).collect()
+}
+
+/// `a * x` (allocates).
+pub fn scale(a: f64, x: &[f64]) -> Vec<f64> {
+    x.iter().map(|v| a * v).collect()
+}
+
+/// Normalize to unit 2-norm; returns the original norm.  A zero vector is
+/// left untouched and 0.0 is returned (the caller decides about breakdown).
+pub fn normalize(x: &mut [f64]) -> f64 {
+    let n = blas::nrm2(x);
+    if n > 0.0 {
+        blas::scal(1.0 / n, x);
+    }
+    n
+}
+
+/// Maximum absolute difference — the test-friendly distance.
+pub fn max_abs_diff(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max)
+}
+
+/// Relative 2-norm error `||x - y|| / max(||y||, eps)`.
+pub fn rel_err(x: &[f64], y: &[f64]) -> f64 {
+    let d = blas::nrm2(&sub(x, y));
+    let n = blas::nrm2(y);
+    d / n.max(f64::MIN_POSITIVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let x = vec![1.0, 2.0];
+        let y = vec![0.5, -0.5];
+        assert_eq!(sub(&add(&x, &y), &y), x);
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut x = vec![3.0, 4.0];
+        let n = normalize(&mut x);
+        assert!((n - 5.0).abs() < 1e-15);
+        assert!((blas::nrm2(&x) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn normalize_zero_vector_is_noop() {
+        let mut x = vec![0.0; 4];
+        assert_eq!(normalize(&mut x), 0.0);
+        assert_eq!(x, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn distances() {
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.0, 2.0]), 3.0);
+        assert!(rel_err(&[1.0, 0.0], &[1.0, 0.0]) == 0.0);
+    }
+}

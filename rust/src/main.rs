@@ -1,0 +1,208 @@
+//! `gmres-rs` — CLI for the GMRES offload-policy reproduction.
+//!
+//! Subcommands map onto the experiment index in DESIGN.md:
+//!
+//! ```text
+//! gmres-rs solve  [--n 512] [--policy serial-native] [--m 30] [--tol 1e-6] [--seed 42]
+//! gmres-rs sweep  [--what table1|figure5|blas1|memcap] [--measured] [--sizes a,b,..]
+//!                 [--m 30] [--csv out.csv]
+//! gmres-rs serve  [--requests 16] [--sizes 256,512] [--cpu-workers 2] [--m 8]
+//! gmres-rs info
+//! ```
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail};
+
+use gmres_rs::backend::{build_engine, Policy};
+use gmres_rs::coordinator::{ServiceConfig, SolveRequest, SolveService};
+use gmres_rs::device::GpuSpec;
+use gmres_rs::gmres::{GmresConfig, RestartedGmres};
+use gmres_rs::linalg::generators;
+use gmres_rs::report::{figure5, sweep, table1, SweepConfig};
+use gmres_rs::runtime::Runtime;
+use gmres_rs::util::cli::Args;
+
+const USAGE: &str = "\
+gmres-rs — R-GPU GMRES reproduction (Oancea & Pospisil 2018)
+
+USAGE:
+  gmres-rs solve [--n N] [--policy P] [--m M] [--tol T] [--seed S]
+  gmres-rs sweep [--what table1|figure5|blas1|memcap] [--measured]
+                 [--sizes a,b,..] [--m M] [--csv PATH]
+  gmres-rs serve [--requests R] [--sizes a,b,..] [--cpu-workers W] [--m M]
+  gmres-rs info
+
+POLICIES: serial-r | serial-native | gmatrix | gputools | gpuR
+";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(String::as_str) {
+        Some("solve") => cmd_solve(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprint!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn runtime_if_needed(policy: Policy) -> anyhow::Result<Option<Rc<Runtime>>> {
+    if policy.needs_runtime() {
+        Ok(Some(Rc::new(Runtime::from_env()?)))
+    } else {
+        Ok(None)
+    }
+}
+
+fn cmd_solve(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_parse("n", 512usize)?;
+    let m = args.get_parse("m", 30usize)?;
+    let tol = args.get_parse("tol", 1e-6f64)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let policy_s = args.get_or("policy", "serial-native");
+    let policy = Policy::parse(policy_s).ok_or_else(|| anyhow!("unknown policy `{policy_s}`"))?;
+
+    let (a, b, x_true) = generators::table1_system(n, seed);
+    let runtime = runtime_if_needed(policy)?;
+    let mut engine = build_engine(policy, a, b, m, runtime, false)?;
+    let solver = RestartedGmres::new(GmresConfig { m, tol, max_restarts: 200 });
+    let report = solver.solve(engine.as_mut(), None)?;
+    println!("{}", report.summary());
+    let err = gmres_rs::linalg::vector::rel_err(&report.x, &x_true);
+    println!("  error vs known solution: {err:.2e}");
+    println!("  residual trail: {:?}", &report.history.resnorms);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let what = args.get_or("what", "table1");
+    let measured = args.flag("measured");
+    let sizes: Vec<usize> = args.get_list("sizes")?;
+    let m = args.get_parse("m", 30usize)?;
+
+    match what {
+        "table1" | "figure5" => {
+            let runtime = if measured { Some(Rc::new(Runtime::from_env()?)) } else { None };
+            let default_sizes = if measured {
+                runtime.as_ref().unwrap().manifest().sizes()
+            } else {
+                SweepConfig::default().sizes
+            };
+            let cfg = SweepConfig {
+                sizes: if sizes.is_empty() { default_sizes } else { sizes },
+                m,
+                measured,
+                ..Default::default()
+            };
+            eprintln!("sweeping sizes {:?} (measured={measured}) ...", cfg.sizes);
+            let records = sweep::table1_sweep(&cfg, runtime)?;
+            if what == "table1" {
+                println!("{}", table1::render(&records, measured));
+                println!("{}", table1::render_shape_checks(&records, measured));
+            } else {
+                println!("{}", figure5::render_ascii(&records, measured));
+                if let Some(path) = args.get("csv") {
+                    let f = std::fs::File::create(path)?;
+                    figure5::write_csv(&records, measured, f)?;
+                    println!("wrote {path}");
+                }
+            }
+        }
+        "blas1" => {
+            println!("Ablation A — BLAS-1 offload break-even (modeled, paper testbed)");
+            println!("{:>10} {:>10}", "N", "speedup");
+            for k in 10..=23 {
+                let n = 1usize << k;
+                println!("{n:>10} {:>10.3}", sweep::blas1_offload_speedup(n));
+            }
+            println!(
+                "break-even N = {} (paper/Morris 2016: > 5e5)",
+                sweep::blas1_breakeven_n()
+            );
+        }
+        "memcap" => {
+            println!("Ablation B — max solvable order vs device memory");
+            for spec in [GpuSpec::geforce_840m(), GpuSpec::tesla_v100()] {
+                println!("{} ({} GB):", spec.name, spec.mem_capacity >> 30);
+                for p in Policy::gpu_policies() {
+                    println!("  {:>10}: N_max = {}", p.name(), sweep::max_order(p, m, &spec));
+                }
+            }
+        }
+        other => bail!("unknown sweep `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let requests = args.get_parse("requests", 16usize)?;
+    let mut sizes: Vec<usize> = args.get_list("sizes")?;
+    if sizes.is_empty() {
+        sizes = vec![256, 512];
+    }
+    let cpu_workers = args.get_parse("cpu-workers", 2usize)?;
+    let m = args.get_parse("m", 8usize)?;
+
+    let svc = SolveService::start(ServiceConfig { cpu_workers, ..Default::default() });
+    let started = std::time::Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|i| {
+            let n = sizes[i % sizes.len()];
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut req = SolveRequest::table1(n, i as u64);
+                req.config = GmresConfig { m, tol: 1e-6, max_restarts: 200 };
+                svc.submit(req)
+            })
+        })
+        .collect();
+    let mut ok = 0usize;
+    for h in handles {
+        match h.join().expect("request thread panicked") {
+            Ok(out) => {
+                ok += 1;
+                println!(
+                    "  {} n={} policy={} cycles={} queue={:.3}s{}",
+                    out.id,
+                    out.report.n,
+                    out.policy,
+                    out.report.cycles,
+                    out.queue_seconds,
+                    if out.downgraded { " (downgraded)" } else { "" }
+                );
+            }
+            Err(e) => println!("  failed: {e:#}"),
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    println!("{ok} / {requests} solved in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
+    println!("metrics: {}", svc.metrics().render());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    match Runtime::from_env() {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform_name());
+            let man = rt.manifest();
+            println!("artifact sizes: {:?} (m={})", man.sizes(), man.m);
+            println!("artifacts: {}", man.artifacts.len());
+        }
+        Err(e) => println!("runtime unavailable: {e:#}"),
+    }
+    let g = GpuSpec::geforce_840m();
+    println!(
+        "device model: {} — {} GB, {:.0} GB/s mem, {:.1} GF f64, {:.0} GB/s pcie",
+        g.name,
+        g.mem_capacity >> 30,
+        g.mem_bw / 1e9,
+        g.flops_f64 / 1e9,
+        g.pcie_bw / 1e9
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Minimal ASCII line plot for terminal figure output (Figure 5).
+
+/// Plot one or more named series over a shared x axis.
+///
+/// Returns the rendered plot as a string (rows x cols characters plus
+/// axes/legend); callers print it.
+pub fn plot(
+    title: &str,
+    x: &[f64],
+    series: &[(&str, Vec<f64>)],
+    width: usize,
+    height: usize,
+) -> String {
+    assert!(width >= 16 && height >= 4, "plot too small");
+    assert!(!x.is_empty());
+    for (name, ys) in series {
+        assert_eq!(ys.len(), x.len(), "series {name} length mismatch");
+    }
+    let markers = ['*', '+', 'o', 'x', '#', '@'];
+
+    let (xmin, xmax) = min_max(x);
+    let mut all_y: Vec<f64> = series.iter().flat_map(|(_, ys)| ys.iter().copied()).collect();
+    all_y.retain(|v| v.is_finite());
+    let (ymin, ymax) = if all_y.is_empty() { (0.0, 1.0) } else { min_max(&all_y) };
+    let (ymin, ymax) = pad_range(ymin, ymax);
+
+    let mut grid = vec![vec![' '; width]; height];
+    let to_col = |xv: f64| -> usize {
+        if xmax > xmin {
+            (((xv - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize
+        } else {
+            0
+        }
+    };
+    let to_row = |yv: f64| -> usize {
+        let frac = (yv - ymin) / (ymax - ymin);
+        let r = ((1.0 - frac) * (height - 1) as f64).round();
+        (r.max(0.0) as usize).min(height - 1)
+    };
+
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let marker = markers[si % markers.len()];
+        for (xv, yv) in x.iter().zip(ys) {
+            if yv.is_finite() {
+                grid[to_row(*yv)][to_col(*xv)] = marker;
+            }
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:8.2} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:8} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:9} {:<10.0}{:>w$.0}\n", "", xmin, xmax, w = width - 10));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", markers[si % markers.len()], name));
+    }
+    out
+}
+
+fn min_max(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in v {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+fn pad_range(lo: f64, hi: f64) -> (f64, f64) {
+    if hi > lo {
+        (lo, hi)
+    } else {
+        (lo - 0.5, hi + 0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_series_markers() {
+        let x = vec![1.0, 2.0, 3.0];
+        let s = vec![("a", vec![1.0, 2.0, 3.0]), ("b", vec![3.0, 2.0, 1.0])];
+        let p = plot("t", &x, &s, 40, 10);
+        assert!(p.contains('*') && p.contains('+'));
+        assert!(p.contains("a") && p.contains("b"));
+    }
+
+    #[test]
+    fn constant_series_does_not_panic() {
+        let x = vec![1.0, 2.0];
+        let s = vec![("c", vec![5.0, 5.0])];
+        let p = plot("t", &x, &s, 30, 5);
+        assert!(p.contains('*'));
+    }
+
+    #[test]
+    fn nan_points_skipped() {
+        let x = vec![1.0, 2.0];
+        let s = vec![("n", vec![f64::NAN, 1.0])];
+        let p = plot("t", &x, &s, 30, 5);
+        // one plotted point + one legend marker
+        assert!(p.matches('*').count() == 2, "{p}");
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_series_rejected() {
+        plot("t", &[1.0], &[("a", vec![1.0, 2.0])], 30, 5);
+    }
+}

@@ -1,0 +1,106 @@
+//! Figure 5: speedup-vs-N line series (the same data as Table 1, as the
+//! paper plots it).  Emits CSV for external plotting plus an ASCII render.
+
+use std::io::Write;
+
+use crate::backend::Policy;
+use crate::Result;
+
+use super::ascii_plot;
+use super::sweep::{speedup, SweepRecord};
+
+/// Extract the (sizes, per-policy speedup series) from sweep records.
+pub fn series(records: &[SweepRecord], measured: bool) -> (Vec<usize>, Vec<(Policy, Vec<f64>)>) {
+    let mut sizes: Vec<usize> = records.iter().map(|r| r.n).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let mut out = Vec::new();
+    for p in Policy::gpu_policies() {
+        let ys: Vec<f64> = sizes
+            .iter()
+            .map(|&n| speedup(records, p, n, measured).unwrap_or(f64::NAN))
+            .collect();
+        out.push((p, ys));
+    }
+    (sizes, out)
+}
+
+/// Write the Figure-5 CSV: `n,gmatrix,gputools,gpuR` (+ paper columns).
+pub fn write_csv(records: &[SweepRecord], measured: bool, mut w: impl Write) -> Result<()> {
+    let (sizes, ser) = series(records, measured);
+    write!(w, "n")?;
+    for (p, _) in &ser {
+        write!(w, ",{p}")?;
+    }
+    for (p, _) in &ser {
+        write!(w, ",paper_{p}")?;
+    }
+    writeln!(w)?;
+    for (i, &n) in sizes.iter().enumerate() {
+        write!(w, "{n}")?;
+        for (_, ys) in &ser {
+            write!(w, ",{:.4}", ys[i])?;
+        }
+        for (p, _) in &ser {
+            let v = super::paper::table1_row(n).and_then(|r| r.speedup(*p));
+            match v {
+                Some(v) => write!(w, ",{v:.2}")?,
+                None => write!(w, ",")?,
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// ASCII Figure 5.
+pub fn render_ascii(records: &[SweepRecord], measured: bool) -> String {
+    let (sizes, ser) = series(records, measured);
+    let x: Vec<f64> = sizes.iter().map(|&n| n as f64).collect();
+    let named: Vec<(&str, Vec<f64>)> =
+        ser.iter().map(|(p, ys)| (p.name(), ys.clone())).collect();
+    let axis = if measured { "measured" } else { "modeled" };
+    ascii_plot::plot(
+        &format!("Figure 5 — GMRES GPU speedup vs N [{axis}]"),
+        &x,
+        &named,
+        64,
+        16,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::sweep::{table1_sweep, SweepConfig};
+
+    fn recs() -> Vec<SweepRecord> {
+        let cfg = SweepConfig { sizes: vec![48, 64], m: 6, measured: false, ..Default::default() };
+        table1_sweep(&cfg, None).unwrap()
+    }
+
+    #[test]
+    fn series_has_three_policies() {
+        let (sizes, s) = series(&recs(), false);
+        assert_eq!(sizes, vec![48, 64]);
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(|(_, ys)| ys.len() == 2));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut buf = Vec::new();
+        write_csv(&recs(), false, &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("n,gmatrix,gputools,gpuR"));
+        assert!(lines[1].starts_with("48,"));
+    }
+
+    #[test]
+    fn ascii_render_mentions_policies() {
+        let p = render_ascii(&recs(), false);
+        assert!(p.contains("gmatrix") && p.contains("gpuR"));
+    }
+}

@@ -1,0 +1,19 @@
+//! Experiment-regeneration harness: Table 1, Figure 5 and the ablations
+//! (DESIGN.md per-experiment index).
+//!
+//! Two time axes everywhere, per DESIGN.md §2:
+//!
+//! * **measured** — wallclock on this host, with the PJRT CPU executor as
+//!   the device (real numerics, real transfers).
+//! * **modeled**  — the analytic clock of [`crate::device::DeviceSim`]
+//!   calibrated to the paper's testbed (840M + interpreted R); this is the
+//!   axis compared against the paper's Table 1 numbers.
+
+pub mod ascii_plot;
+pub mod figure5;
+pub mod model;
+pub mod paper;
+pub mod sweep;
+pub mod table1;
+
+pub use sweep::{SweepConfig, SweepRecord};

@@ -1,0 +1,9 @@
+//! Analytic cost replay — re-exported from [`crate::device::costs`], the
+//! single source of truth shared with the live engines.
+//!
+//! `tests/model_consistency.rs` asserts the replay equals the engines'
+//! actual [`crate::device::DeviceSim`] clocks at small N.
+
+pub use crate::device::costs::{
+    charge_cycle, charge_matvec, charge_setup, charge_solve, predict_seconds, predict_speedup,
+};

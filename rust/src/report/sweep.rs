@@ -1,0 +1,286 @@
+//! Sweep driver: runs the Table-1 experiment (measured and/or modeled) and
+//! the ablations, producing [`SweepRecord`]s the table/figure formatters
+//! consume.
+
+use std::rc::Rc;
+
+
+use crate::backend::{build_engine, Policy};
+use crate::device::{DeviceSim, GpuSpec};
+use crate::gmres::{GmresConfig, RestartedGmres};
+use crate::linalg::generators;
+use crate::runtime::Runtime;
+use crate::Result;
+
+use super::model;
+
+/// One (policy, N) measurement.
+#[derive(Clone, Debug)]
+pub struct SweepRecord {
+    pub policy: Policy,
+    pub n: usize,
+    pub m: usize,
+    pub cycles: usize,
+    pub converged: bool,
+    pub rel_resnorm: f64,
+    /// Host wallclock (None for modeled-only records).
+    pub wall_seconds: Option<f64>,
+    /// Modeled paper-testbed seconds.
+    pub sim_seconds: f64,
+}
+
+/// Sweep parameters.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub sizes: Vec<usize>,
+    pub m: usize,
+    pub tol: f64,
+    pub max_restarts: usize,
+    pub seed: u64,
+    /// Run real numerics (needs artifacts for GPU policies).  When false the
+    /// sweep is modeled-only: one cheap native solve per N for the cycle
+    /// count, then the analytic replay for every policy.
+    pub measured: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            sizes: vec![1000, 2000, 3000, 4000, 5000, 6000, 7000, 8000, 9000, 10000],
+            m: 30,
+            tol: 1e-6,
+            max_restarts: 200,
+            seed: 42,
+            measured: false,
+        }
+    }
+}
+
+/// Cycle count for size `n` via the cheap native engine (all policies run
+/// the same numerics, so one count serves all).
+pub fn reference_cycles(n: usize, cfg: &SweepConfig) -> Result<usize> {
+    let (a, b, _) = generators::table1_system(n, cfg.seed);
+    let mut engine = build_engine(Policy::SerialNative, a, b, cfg.m, None, false)?;
+    let solver = RestartedGmres::new(GmresConfig {
+        m: cfg.m,
+        tol: cfg.tol,
+        max_restarts: cfg.max_restarts,
+    });
+    let rep = solver.solve(engine.as_mut(), None)?;
+    anyhow::ensure!(rep.converged, "reference solve did not converge at n={n}");
+    Ok(rep.cycles)
+}
+
+/// Run one policy at one size, measured (real numerics + real wallclock).
+pub fn run_measured(
+    policy: Policy,
+    n: usize,
+    cfg: &SweepConfig,
+    runtime: Option<Rc<Runtime>>,
+) -> Result<SweepRecord> {
+    let (a, b, _) = generators::table1_system(n, cfg.seed);
+    let mut engine = build_engine(policy, a, b, cfg.m, runtime, false)?;
+    let solver = RestartedGmres::new(GmresConfig {
+        m: cfg.m,
+        tol: cfg.tol,
+        max_restarts: cfg.max_restarts,
+    });
+    let rep = solver.solve(engine.as_mut(), None)?;
+    Ok(SweepRecord {
+        policy,
+        n,
+        m: cfg.m,
+        cycles: rep.cycles,
+        converged: rep.converged,
+        rel_resnorm: rep.rel_resnorm,
+        wall_seconds: Some(rep.wall_seconds),
+        sim_seconds: rep.sim_seconds,
+    })
+}
+
+/// Modeled-only record via the analytic replay.
+pub fn run_modeled(policy: Policy, n: usize, cycles: usize, cfg: &SweepConfig) -> SweepRecord {
+    SweepRecord {
+        policy,
+        n,
+        m: cfg.m,
+        cycles,
+        converged: true,
+        rel_resnorm: f64::NAN,
+        wall_seconds: None,
+        sim_seconds: model::predict_seconds(policy, n, cfg.m, cycles),
+    }
+}
+
+/// The full Table-1 sweep.  Returns records for serial-R + the three GPU
+/// policies at every size (plus serial-native when measured).
+pub fn table1_sweep(cfg: &SweepConfig, runtime: Option<Rc<Runtime>>) -> Result<Vec<SweepRecord>> {
+    let mut out = Vec::new();
+    for &n in &cfg.sizes {
+        if cfg.measured {
+            for p in [
+                Policy::SerialR,
+                Policy::SerialNative,
+                Policy::GmatrixLike,
+                Policy::GputoolsLike,
+                Policy::GpurVclLike,
+            ] {
+                out.push(run_measured(p, n, cfg, runtime.clone())?);
+            }
+        } else {
+            let cycles = reference_cycles(n, cfg)?;
+            for p in [
+                Policy::SerialR,
+                Policy::GmatrixLike,
+                Policy::GputoolsLike,
+                Policy::GpurVclLike,
+            ] {
+                out.push(run_modeled(p, n, cycles, cfg));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Speedup of `policy` vs serial-R at size `n`, on the chosen time axis.
+pub fn speedup(records: &[SweepRecord], policy: Policy, n: usize, measured: bool) -> Option<f64> {
+    let pick = |p: Policy| {
+        records
+            .iter()
+            .find(|r| r.policy == p && r.n == n)
+            .and_then(|r| if measured { r.wall_seconds } else { Some(r.sim_seconds) })
+    };
+    let base = pick(Policy::SerialR)?;
+    let t = pick(policy)?;
+    if t > 0.0 {
+        Some(base / t)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ablation A: BLAS-1 offload break-even (the Morris-2016 N > 5e5 claim)
+// ---------------------------------------------------------------------------
+
+/// Modeled speedup of one gmatrix `gvector` op (device-resident operands,
+/// the Morris-2016 microbenchmark regime) vs the same op on plain R
+/// vectors.  Break-even is overhead-dominated: the R->CUDA call costs
+/// ~1 ms, so the device only wins once `24N` bytes at the host's 6 GB/s
+/// exceed it — N in the several-1e5 range, exactly the Morris claim the
+/// paper cites for keeping level-1 ops on the CPU.
+pub fn blas1_offload_speedup(n: usize) -> f64 {
+    let mut dev = DeviceSim::paper_testbed(false);
+    dev.r_call();
+    dev.kernel_blas1(2 * n, n);
+    let mut host = DeviceSim::paper_testbed(false);
+    host.host_plain_vecop("axpy", 8 * n * 3);
+    host.elapsed() / dev.elapsed()
+}
+
+/// The break-even N where offload speedup crosses 1.0 (bisection over a
+/// log-spaced grid).
+pub fn blas1_breakeven_n() -> usize {
+    let mut lo = 1usize << 10;
+    let mut hi = 1usize << 26;
+    if blas1_offload_speedup(lo) >= 1.0 {
+        return lo;
+    }
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if blas1_offload_speedup(mid) < 1.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    hi
+}
+
+// ---------------------------------------------------------------------------
+// Ablation B: device-memory capacity cap
+// ---------------------------------------------------------------------------
+
+/// Max solvable order under each policy for a given device memory capacity.
+pub fn max_order(policy: Policy, m: usize, spec: &GpuSpec) -> usize {
+    // monotone working set -> binary search
+    let fits = |n: usize| {
+        crate::device::memory::working_set_bytes(n, m, policy) <= spec.mem_capacity
+    };
+    if !fits(1) {
+        return 0;
+    }
+    let mut lo = 1usize;
+    let mut hi = 1usize << 22;
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SweepConfig {
+        SweepConfig { sizes: vec![64], m: 8, tol: 1e-8, max_restarts: 100, seed: 1, measured: false }
+    }
+
+    #[test]
+    fn modeled_sweep_produces_all_policies() {
+        let cfg = small_cfg();
+        let recs = table1_sweep(&cfg, None).unwrap();
+        assert_eq!(recs.len(), 4);
+        assert!(recs.iter().all(|r| r.n == 64 && r.converged));
+    }
+
+    #[test]
+    fn speedup_extraction() {
+        let cfg = small_cfg();
+        let recs = table1_sweep(&cfg, None).unwrap();
+        let s = speedup(&recs, Policy::GpurVclLike, 64, false).unwrap();
+        assert!(s.is_finite() && s > 0.0);
+        assert!(speedup(&recs, Policy::GpurVclLike, 999, false).is_none());
+    }
+
+    #[test]
+    fn measured_serial_sweep_runs_without_runtime() {
+        let cfg = SweepConfig { sizes: vec![48], m: 6, measured: true, ..small_cfg() };
+        // GPU policies would need a runtime; run the two serial ones directly
+        let r1 = run_measured(Policy::SerialR, 48, &cfg, None).unwrap();
+        let r2 = run_measured(Policy::SerialNative, 48, &cfg, None).unwrap();
+        assert!(r1.converged && r2.converged);
+        assert!(r1.wall_seconds.unwrap() > 0.0);
+        assert!(r1.sim_seconds > 0.0);
+        assert_eq!(r2.sim_seconds, 0.0);
+    }
+
+    #[test]
+    fn blas1_breakeven_is_large_like_the_paper_says() {
+        // Morris (2016): level-1 ops only pay off for N > 5e5; our model
+        // must land in that order of magnitude (1e5..1e7).
+        let n = blas1_breakeven_n();
+        assert!(n > 100_000 && n < 10_000_000, "break-even N = {n}");
+    }
+
+    #[test]
+    fn blas1_speedup_monotone() {
+        assert!(blas1_offload_speedup(1 << 22) > blas1_offload_speedup(1 << 12));
+    }
+
+    #[test]
+    fn memcap_max_order_brackets_paper_limit() {
+        // the paper stopped at N=10000 on a 2 GB card with everything resident
+        let spec = GpuSpec::geforce_840m();
+        let n_vcl = max_order(Policy::GpurVclLike, 30, &spec);
+        assert!(n_vcl >= 10_000, "vcl max order {n_vcl}");
+        assert!(n_vcl < 20_000, "vcl max order {n_vcl}");
+        // serial has no device footprint
+        assert!(max_order(Policy::SerialR, 30, &spec) > 1 << 20);
+    }
+}

@@ -1,0 +1,142 @@
+//! Table 1 formatter: paper vs reproduction, side by side.
+
+use crate::backend::Policy;
+
+use super::paper;
+use super::sweep::{speedup, SweepRecord};
+
+/// Render the Table-1 comparison.  `measured` selects the time axis for the
+/// reproduction columns (wallclock vs modeled paper-testbed).
+pub fn render(records: &[SweepRecord], measured: bool) -> String {
+    let mut sizes: Vec<usize> = records.iter().map(|r| r.n).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+
+    let axis = if measured { "measured wallclock (this host)" } else { "modeled (paper testbed)" };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 1 — GMRES speedup vs serial R implementation [{axis}]\n"
+    ));
+    out.push_str(&format!(
+        "{:>7} | {:>8} {:>8} | {:>8} {:>8} | {:>8} {:>8}\n",
+        "N", "gmatrix", "(paper)", "gputools", "(paper)", "gpuR", "(paper)"
+    ));
+    out.push_str(&"-".repeat(70));
+    out.push('\n');
+    for &n in &sizes {
+        let p = paper::table1_row(n);
+        let cell = |pol: Policy| -> (String, String) {
+            let ours = speedup(records, pol, n, measured)
+                .map(|s| format!("{s:8.2}"))
+                .unwrap_or_else(|| format!("{:>8}", "-"));
+            let theirs = p
+                .and_then(|r| r.speedup(pol))
+                .map(|s| format!("{s:8.2}"))
+                .unwrap_or_else(|| format!("{:>8}", "-"));
+            (ours, theirs)
+        };
+        let (gm, gm_p) = cell(Policy::GmatrixLike);
+        let (gp, gp_p) = cell(Policy::GputoolsLike);
+        let (gr, gr_p) = cell(Policy::GpurVclLike);
+        out.push_str(&format!("{n:>7} | {gm} {gm_p} | {gp} {gp_p} | {gr} {gr_p}\n"));
+    }
+    out
+}
+
+/// The shape checks of `paper::SHAPE_CLAIMS` evaluated on a record set.
+/// Returns a list of (claim, pass) pairs.
+pub fn shape_checks(records: &[SweepRecord], measured: bool) -> Vec<(String, bool)> {
+    let mut sizes: Vec<usize> = records.iter().map(|r| r.n).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let s = |p: Policy, n: usize| speedup(records, p, n, measured);
+    let mut checks = Vec::new();
+
+    if let (Some(&first), Some(&last)) = (sizes.first(), sizes.last()) {
+        for p in Policy::gpu_policies() {
+            if let (Some(a), Some(b)) = (s(p, first), s(p, last)) {
+                checks.push((format!("{p} speedup grows with N ({a:.2} -> {b:.2})"), b > a));
+            }
+        }
+        if let Some(gp) = s(Policy::GputoolsLike, first) {
+            checks.push((
+                format!("gputools < 1 at smallest N (= {gp:.2})"),
+                gp < 1.0,
+            ));
+        }
+        if let (Some(gp), Some(gm), Some(gr)) = (
+            s(Policy::GputoolsLike, last),
+            s(Policy::GmatrixLike, last),
+            s(Policy::GpurVclLike, last),
+        ) {
+            checks.push((
+                format!("ordering at largest N: gputools ({gp:.2}) < gmatrix ({gm:.2}) < gpuR ({gr:.2})"),
+                gp < gm && gm < gr,
+            ));
+        }
+        // crossover: gpuR starts below gmatrix, ends above
+        if let (Some(gr0), Some(gm0), Some(gr1), Some(gm1)) = (
+            s(Policy::GpurVclLike, first),
+            s(Policy::GmatrixLike, first),
+            s(Policy::GpurVclLike, last),
+            s(Policy::GmatrixLike, last),
+        ) {
+            checks.push((
+                format!(
+                    "gpuR/gmatrix crossover (start {:.2} vs {:.2}, end {:.2} vs {:.2})",
+                    gr0, gm0, gr1, gm1
+                ),
+                gr0 < gm0 * 1.15 && gr1 > gm1,
+            ));
+        }
+    }
+    checks
+}
+
+/// Render shape checks as a pass/fail block.
+pub fn render_shape_checks(records: &[SweepRecord], measured: bool) -> String {
+    let mut out = String::from("Shape checks vs the paper's Table 1:\n");
+    for (claim, ok) in shape_checks(records, measured) {
+        out.push_str(&format!("  [{}] {}\n", if ok { "PASS" } else { "FAIL" }, claim));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::sweep::{table1_sweep, SweepConfig};
+
+    fn records() -> Vec<SweepRecord> {
+        let cfg = SweepConfig {
+            sizes: vec![1000, 4000, 10000],
+            m: 30,
+            tol: 1e-6,
+            max_restarts: 200,
+            seed: 7,
+            measured: false,
+        };
+        // modeled sweep needs a real cycle count: use a small reference size
+        // by monkey-patching cycles — instead just run the true path; the
+        // n=1000 native solve is fast and cycle counts carry over.
+        table1_sweep(&cfg, None).unwrap()
+    }
+
+    #[test]
+    #[ignore = "n=10000 reference solve is slow in debug; covered by release benches"]
+    fn render_contains_all_rows() {
+        let r = render(&records(), false);
+        assert!(r.contains("1000") && r.contains("10000"));
+        assert!(r.contains("gmatrix") && r.contains("gpuR"));
+    }
+
+    #[test]
+    fn render_small_modeled() {
+        let cfg = SweepConfig { sizes: vec![64], m: 8, measured: false, ..Default::default() };
+        let recs = table1_sweep(&cfg, None).unwrap();
+        let out = render(&recs, false);
+        assert!(out.contains("64"));
+        // paper columns show '-' for sizes not in the paper
+        assert!(out.contains('-'));
+    }
+}

@@ -1,0 +1,184 @@
+//! `artifacts/manifest.tsv` — written by `python/compile/aot.py`, validated
+//! here so shape mismatches fail at load time with a clear message instead
+//! of a PJRT argument error at execute time.
+//!
+//! Format (tab-separated, `#key value` header lines first):
+//!
+//! ```text
+//! #dtype  f64
+//! #m      30
+//! gemv_1000   gemv_1000.hlo.txt   1   <sha256>   1000x1000 1000
+//! axpy_1000   axpy_1000.hlo.txt   1   <sha256>   - 1000 1000
+//! ```
+//!
+//! The last column is the space-separated argument shape list; dims within a
+//! shape are joined by `x`, and a rank-0 scalar is `-`.  (A JSON manifest is
+//! also emitted for humans/python, but the offline Rust build has no JSON
+//! dependency, so TSV is the interchange.)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::Result;
+
+/// Per-artifact metadata (one entry per `*.hlo.txt`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub file: String,
+    /// Argument shapes, e.g. `[[1000,1000],[1000]]`; scalars are `[]`.
+    pub args: Vec<Vec<usize>>,
+    /// Number of results in the output tuple.
+    pub results: usize,
+    pub sha256: String,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dtype: String,
+    /// GMRES restart length the `arnoldi_cycle_*` artifacts were built with.
+    pub m: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read manifest {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse the TSV format (see module docs).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut dtype = String::from("f64");
+        let mut m = 0usize;
+        let mut artifacts = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(header) = line.strip_prefix('#') {
+                let mut it = header.split_whitespace();
+                match (it.next(), it.next()) {
+                    (Some("dtype"), Some(v)) => dtype = v.to_string(),
+                    (Some("m"), Some(v)) => {
+                        m = v.parse().with_context(|| format!("line {}: bad m", lineno + 1))?
+                    }
+                    _ => {} // unknown headers ignored (forward compat)
+                }
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                bail!(
+                    "manifest line {}: expected 5 tab-separated columns, got {}",
+                    lineno + 1,
+                    cols.len()
+                );
+            }
+            let args = cols[4]
+                .split_whitespace()
+                .map(parse_shape)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("manifest line {}", lineno + 1))?;
+            artifacts.insert(
+                cols[0].to_string(),
+                ArtifactMeta {
+                    file: cols[1].to_string(),
+                    results: cols[2]
+                        .parse()
+                        .with_context(|| format!("line {}: results", lineno + 1))?,
+                    sha256: cols[3].to_string(),
+                    args,
+                },
+            );
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifact rows");
+        }
+        Ok(Self { dtype, m, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.get(name)
+    }
+
+    /// Matrix orders with a gemv artifact available.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("gemv_").and_then(|s| s.parse().ok()))
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+
+    /// Does the manifest carry every artifact the given policy needs at
+    /// order `n` (restart `m`)?
+    pub fn supports(&self, n: usize, m: usize, fused: bool) -> bool {
+        if fused {
+            self.get(&format!("arnoldi_cycle_{n}_{m}")).is_some()
+        } else {
+            self.get(&format!("gemv_{n}")).is_some()
+        }
+    }
+}
+
+fn parse_shape(tok: &str) -> Result<Vec<usize>> {
+    if tok == "-" {
+        return Ok(Vec::new());
+    }
+    tok.split('x')
+        .map(|d| d.parse::<usize>().with_context(|| format!("bad dim `{d}` in `{tok}`")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+#dtype\tf64
+#m\t30
+gemv_64\tgemv_64.hlo.txt\t1\tabc\t64x64 64
+gemv_1000\tgemv_1000.hlo.txt\t1\tdef\t1000x1000 1000
+axpy_64\taxpy_64.hlo.txt\t1\tghi\t- 64 64
+arnoldi_cycle_64_30\ta.hlo.txt\t2\tjkl\t64x64 64 64
+";
+
+    #[test]
+    fn parse_and_query() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dtype, "f64");
+        assert_eq!(m.m, 30);
+        assert_eq!(m.get("gemv_64").unwrap().args, vec![vec![64, 64], vec![64]]);
+        assert_eq!(m.get("axpy_64").unwrap().args[0], Vec::<usize>::new());
+        assert_eq!(m.sizes(), vec![64, 1000]);
+        assert!(m.supports(64, 30, true));
+        assert!(m.supports(1000, 30, false));
+        assert!(!m.supports(1000, 30, true));
+        assert!(!m.supports(128, 30, false));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("just one line no tabs").is_err());
+        assert!(Manifest::parse("a\tb\tc\td\t5y5").is_err());
+    }
+
+    #[test]
+    fn load_from_file() {
+        let dir = crate::util::tempdir::TempDir::new("manifest").unwrap();
+        let p = dir.path().join("manifest.tsv");
+        std::fs::write(&p, SAMPLE).unwrap();
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.m, 30);
+        assert!(Manifest::load(dir.path().join("nope.tsv")).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT runtime: loads AOT artifacts (`artifacts/*.hlo.txt`) and executes
+//! them on the CPU PJRT client — the "device" of this reproduction.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! Device residency is real here, not only simulated: `gmatrix`-like and
+//! `gpuR`-like policies upload the matrix once with
+//! [`Runtime::upload_matrix`] and then call [`Runtime::execute_buffers`],
+//! mirroring `gmatrix()`/`vclMatrix()` device objects; the `gputools`-like
+//! policy passes host literals every call, mirroring `gpuMatMult(A, B)`.
+//!
+//! `PjRtLoadedExecutable` wraps a raw pointer without `Send`/`Sync`, so a
+//! `Runtime` is single-threaded by construction; the coordinator owns one on
+//! a dedicated device thread (one GPU, one stream — see
+//! [`crate::coordinator::device_thread`]).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail};
+
+use crate::linalg::DenseMatrix;
+use crate::Result;
+pub use manifest::{ArtifactMeta, Manifest};
+
+/// Artifact-loading PJRT wrapper with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.tsv`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.tsv"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Locate the artifact directory: `$GMRES_RS_ARTIFACTS`, else
+    /// `./artifacts`, else `../artifacts` relative to the executable.
+    pub fn from_env() -> Result<Self> {
+        if let Ok(dir) = std::env::var("GMRES_RS_ARTIFACTS") {
+            return Self::new(dir);
+        }
+        for cand in ["artifacts", "../artifacts"] {
+            if Path::new(cand).join("manifest.tsv").exists() {
+                return Self::new(cand);
+            }
+        }
+        bail!(
+            "no artifacts found: run `make artifacts` (or set GMRES_RS_ARTIFACTS) \
+             to AOT-compile the HLO graphs"
+        )
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load + compile an artifact by name (e.g. `gemv_1000`), cached.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact `{name}` not in manifest; available sizes {:?} — \
+                 regenerate with `make artifacts SIZES=\"... <missing N>\"`",
+                self.manifest.sizes()
+            )
+        })?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile artifact `{name}`: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (cache introspection).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    // -- host <-> device marshalling ----------------------------------------
+
+    /// Upload a dense matrix as a device-resident buffer (row-major f64).
+    pub fn upload_matrix(&self, m: &DenseMatrix) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f64>(m.data(), &[m.nrows(), m.ncols()], None)
+            .map_err(|e| anyhow!("upload matrix: {e:?}"))
+    }
+
+    /// Upload a vector as a device-resident buffer.
+    pub fn upload_vector(&self, v: &[f64]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f64>(v, &[v.len()], None)
+            .map_err(|e| anyhow!("upload vector: {e:?}"))
+    }
+
+    /// Upload a scalar as a rank-0 device buffer.
+    pub fn upload_scalar(&self, s: f64) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f64>(&[s], &[], None)
+            .map_err(|e| anyhow!("upload scalar: {e:?}"))
+    }
+
+    /// Execute with device-resident buffers (no host->device transfer of the
+    /// buffer args).  Returns the single tuple-shaped output literal.
+    pub fn execute_buffers(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::Literal> {
+        let out = exe.execute_b(args).map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        out[0][0].to_literal_sync().map_err(|e| anyhow!("readback: {e:?}"))
+    }
+
+    /// Execute with host literals (models the transfer-everything policy).
+    pub fn execute_literals(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let out = exe.execute(args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        out[0][0].to_literal_sync().map_err(|e| anyhow!("readback: {e:?}"))
+    }
+
+    // -- literal helpers -----------------------------------------------------
+
+    /// Row-major dense matrix -> 2-D literal.
+    pub fn matrix_literal(m: &DenseMatrix) -> Result<xla::Literal> {
+        xla::Literal::vec1(m.data())
+            .reshape(&[m.nrows() as i64, m.ncols() as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    /// Vector -> 1-D literal.
+    pub fn vector_literal(v: &[f64]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    /// Scalar -> rank-0 literal.
+    pub fn scalar_literal(s: f64) -> xla::Literal {
+        xla::Literal::scalar(s)
+    }
+
+    /// Unwrap a 1-tuple output into a Vec<f64>.
+    pub fn tuple1_vec(result: xla::Literal) -> Result<Vec<f64>> {
+        let l = result.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        l.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Unwrap a (vector, scalar) 2-tuple output.
+    pub fn tuple2_vec_scalar(result: xla::Literal) -> Result<(Vec<f64>, f64)> {
+        let (a, b) = result.to_tuple2().map_err(|e| anyhow!("to_tuple2: {e:?}"))?;
+        let v = a.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let s = b
+            .get_first_element::<f64>()
+            .map_err(|e| anyhow!("scalar readback: {e:?}"))?;
+        Ok((v, s))
+    }
+
+    /// Unwrap a scalar 1-tuple output.
+    pub fn tuple1_scalar(result: xla::Literal) -> Result<f64> {
+        let l = result.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        l.get_first_element::<f64>().map_err(|e| anyhow!("scalar readback: {e:?}"))
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("platform", &self.client.platform_name())
+            .field("compiled", &self.compiled_count())
+            .finish()
+    }
+}

@@ -1,0 +1,182 @@
+//! Minimal benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` runs the `benches/*.rs` binaries (`harness = false`); each
+//! uses this module for warmup + repeated timing with mean/min/p50/stddev
+//! reporting, in aligned rows the EXPERIMENTS.md tables are pasted from.
+
+use std::time::Instant;
+
+/// Timing statistics over the measured iterations, seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            iters: samples.len(),
+            mean,
+            min: sorted[0],
+            p50: sorted[sorted.len() / 2],
+            stddev: var.sqrt(),
+        }
+    }
+
+    /// `1.234 ms ± 0.1` style rendering.
+    pub fn human(&self) -> String {
+        format!("{} ± {}", human_time(self.mean), human_time(self.stddev))
+    }
+}
+
+/// Human-readable seconds.
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark config: `warmup` unmeasured runs, then up to `iters` measured
+/// runs or `max_seconds` of wallclock, whichever first.
+#[derive(Clone, Copy, Debug)]
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    pub max_seconds: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup: 1, iters: 10, max_seconds: 10.0 }
+    }
+}
+
+impl Bencher {
+    /// Fast profile for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Self { warmup: 1, iters: 3, max_seconds: 20.0 }
+    }
+
+    /// Time `f`, which must do one full unit of work per call.  The closure
+    /// may return a value; it is black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let started = Instant::now();
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if started.elapsed().as_secs_f64() > self.max_seconds {
+                break;
+            }
+        }
+        Stats::from_samples(&samples)
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box re-export for stable rust).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Aligned table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples(&[1.0, 1.0, 1.0]);
+        assert_eq!(s.mean, 1.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.p50, 1.0);
+    }
+
+    #[test]
+    fn bencher_runs_and_counts() {
+        let mut count = 0;
+        let b = Bencher { warmup: 2, iters: 5, max_seconds: 10.0 };
+        let s = b.run(|| count += 1);
+        assert_eq!(count, 7); // 2 warmup + 5 measured
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.0).ends_with(" s"));
+        assert!(human_time(2e-3).ends_with(" ms"));
+        assert!(human_time(2e-6).ends_with("µs"));
+        assert!(human_time(2e-10).ends_with("ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["n", "time"]);
+        t.row(&["100".into(), "1.0 ms".into()]);
+        let r = t.render();
+        assert!(r.contains("n") && r.contains("100"));
+        assert_eq!(r.lines().count(), 3);
+    }
+}

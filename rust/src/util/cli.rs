@@ -1,0 +1,127 @@
+//! Tiny CLI flag parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) or `std::env::args` (main).
+    pub fn parse(tokens: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| anyhow!("--{name}: cannot parse `{s}`")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>> {
+        match self.get(name) {
+            None => Ok(Vec::new()),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| t.parse::<T>().map_err(|_| anyhow!("--{name}: bad element `{t}`")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("solve --n 100 --policy gpuR --trace");
+        assert_eq!(a.positional, vec!["solve"]);
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(a.get("policy"), Some("gpuR"));
+        assert!(a.flag("trace"));
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--m=30 --tol=1e-6");
+        assert_eq!(a.get_parse("m", 0usize).unwrap(), 30);
+        assert_eq!(a.get_parse("tol", 0.0f64).unwrap(), 1e-6);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("--n ten");
+        assert!(a.get_parse("n", 5usize).is_err());
+        assert_eq!(a.get_parse("missing", 5usize).unwrap(), 5);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("--sizes 100,200,300");
+        assert_eq!(a.get_list::<usize>("sizes").unwrap(), vec![100, 200, 300]);
+        let empty = parse("solve");
+        assert!(empty.get_list::<usize>("sizes").unwrap().is_empty());
+    }
+
+    #[test]
+    fn trailing_flag_before_option() {
+        let a = parse("--measured --n 8");
+        assert!(a.flag("measured"));
+        assert_eq!(a.get("n"), Some("8"));
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree utility substrate.
+//!
+//! The build is fully offline and only the `xla` crate's vendored dependency
+//! closure exists, so the usual ecosystem helpers are implemented here
+//! instead of pulled in: a seeded PRNG ([`rng`]), a property-based test
+//! driver ([`check`]), a CLI flag parser ([`cli`]), and test temp-dir
+//! helpers ([`tempdir`]).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod rng;
+pub mod tempdir;

@@ -1,0 +1,235 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! Skipped gracefully when artifacts are missing (`make artifacts` first);
+//! `make test` always runs them.
+
+use std::rc::Rc;
+
+use gmres_rs::backend::{build_engine, CycleEngine, Policy};
+use gmres_rs::gmres::{GmresConfig, RestartedGmres};
+use gmres_rs::linalg::{generators, vector, LinearOperator};
+use gmres_rs::runtime::Runtime;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    match Runtime::from_env() {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn gemv_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    for n in rt.manifest().sizes() {
+        let (a, _, _) = generators::table1_system(n, 1);
+        let x = generators::random_vector(n, 2);
+        let exe = rt.load(&format!("gemv_{n}")).unwrap();
+        let a_lit = Runtime::matrix_literal(&a).unwrap();
+        let out = rt
+            .execute_literals(&exe, &[a_lit, Runtime::vector_literal(&x)])
+            .unwrap();
+        let y = Runtime::tuple1_vec(out).unwrap();
+        let y_native = a.apply(&x);
+        assert!(
+            vector::rel_err(&y, &y_native) < 1e-12,
+            "gemv_{n} mismatch: {}",
+            vector::rel_err(&y, &y_native)
+        );
+    }
+}
+
+#[test]
+fn blas1_artifacts_match_native() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().sizes()[0];
+    let x = generators::random_vector(n, 3);
+    let y = generators::random_vector(n, 4);
+
+    let dot_exe = rt.load(&format!("dot_{n}")).unwrap();
+    let out = rt
+        .execute_literals(
+            &dot_exe,
+            &[Runtime::vector_literal(&x), Runtime::vector_literal(&y)],
+        )
+        .unwrap();
+    let d = Runtime::tuple1_scalar(out).unwrap();
+    assert!((d - gmres_rs::linalg::blas::dot(&x, &y)).abs() < 1e-10);
+
+    let nrm_exe = rt.load(&format!("nrm2_{n}")).unwrap();
+    let out = rt.execute_literals(&nrm_exe, &[Runtime::vector_literal(&x)]).unwrap();
+    let nn = Runtime::tuple1_scalar(out).unwrap();
+    assert!((nn - gmres_rs::linalg::blas::nrm2(&x)).abs() < 1e-12);
+
+    let axpy_exe = rt.load(&format!("axpy_{n}")).unwrap();
+    let out = rt
+        .execute_literals(
+            &axpy_exe,
+            &[
+                Runtime::scalar_literal(0.75),
+                Runtime::vector_literal(&x),
+                Runtime::vector_literal(&y),
+            ],
+        )
+        .unwrap();
+    let z = Runtime::tuple1_vec(out).unwrap();
+    for i in 0..n {
+        assert!((z[i] - (0.75 * x[i] + y[i])).abs() < 1e-13);
+    }
+}
+
+#[test]
+fn residual_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().sizes()[0];
+    let (a, b, _) = generators::table1_system(n, 5);
+    let x = generators::random_vector(n, 6);
+    let exe = rt.load(&format!("residual_{n}")).unwrap();
+    let out = rt
+        .execute_literals(
+            &exe,
+            &[
+                Runtime::matrix_literal(&a).unwrap(),
+                Runtime::vector_literal(&b),
+                Runtime::vector_literal(&x),
+            ],
+        )
+        .unwrap();
+    let (r, s) = Runtime::tuple2_vec_scalar(out).unwrap();
+    let r_native = vector::sub(&b, &a.apply(&x));
+    assert!(vector::rel_err(&r, &r_native) < 1e-12);
+    assert!((s - gmres_rs::linalg::blas::nrm2(&r_native)).abs() < 1e-9);
+}
+
+#[test]
+fn all_policies_agree_on_the_solution() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().sizes()[0];
+    let m = rt.manifest().m;
+    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-10, max_restarts: 200 });
+    let mut solutions = Vec::new();
+    for policy in Policy::all() {
+        let (a, b, _) = generators::table1_system(n, 7);
+        let mut engine = build_engine(policy, a, b, m, Some(rt.clone()), false).unwrap();
+        let rep = solver.solve(engine.as_mut(), None).unwrap();
+        assert!(rep.converged, "{policy} did not converge");
+        solutions.push((policy, rep.x));
+    }
+    let (_, ref reference) = solutions[0];
+    for (policy, x) in &solutions[1..] {
+        let d = vector::rel_err(x, reference);
+        assert!(d < 1e-8, "{policy} diverges from serial-r by {d}");
+    }
+}
+
+#[test]
+fn fused_cycle_engine_matches_host_cycle() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().sizes()[0];
+    let m = rt.manifest().m;
+    let (a, b, _) = generators::table1_system(n, 8);
+    let mut host =
+        build_engine(Policy::SerialNative, a.clone(), b.clone(), m, None, false).unwrap();
+    let mut fused = build_engine(Policy::GpurVclLike, a, b, m, Some(rt), false).unwrap();
+    let x0 = vec![0.0; n];
+    let rh = host.cycle(&x0).unwrap();
+    let rf = fused.cycle(&x0).unwrap();
+    assert!(
+        vector::rel_err(&rf.x, &rh.x) < 1e-9,
+        "cycle iterates differ: {}",
+        vector::rel_err(&rf.x, &rh.x)
+    );
+    // residuals may both be at machine-eps scale where relative comparison
+    // is meaningless; compare against the problem scale instead
+    let bnorm = gmres_rs::backend::CycleEngine::bnorm(host.as_ref());
+    assert!(
+        (rf.resnorm - rh.resnorm).abs() <= 1e-9 * bnorm,
+        "resnorms differ: fused {} vs host {}",
+        rf.resnorm,
+        rh.resnorm
+    );
+}
+
+#[test]
+fn warm_start_cycles_compose_through_the_runtime() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().sizes()[0];
+    let m = rt.manifest().m;
+    let (a, b, xt) = generators::table1_system(n, 9);
+    let mut engine = build_engine(Policy::GpurVclLike, a, b, m, Some(rt), false).unwrap();
+    let mut x = vec![0.0; n];
+    let mut last = f64::INFINITY;
+    for _ in 0..10 {
+        let r = engine.cycle(&x).unwrap();
+        assert!(r.resnorm <= last * (1.0 + 1e-9), "residual must not increase");
+        last = r.resnorm;
+        x = r.x;
+        if last < 1e-9 {
+            break;
+        }
+    }
+    assert!(vector::rel_err(&x, &xt) < 1e-6);
+}
+
+#[test]
+fn missing_artifact_gives_actionable_error() {
+    let Some(rt) = runtime() else { return };
+    let err = match rt.load("gemv_123457") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("bogus artifact must not load"),
+    };
+    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().sizes()[0];
+    let before = rt.compiled_count();
+    let _a = rt.load(&format!("gemv_{n}")).unwrap();
+    let _b = rt.load(&format!("gemv_{n}")).unwrap();
+    assert_eq!(rt.compiled_count(), before + 1, "second load must hit cache");
+}
+
+#[test]
+fn gmatrix_trace_uploads_matrix_exactly_once() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().sizes()[0];
+    let m = rt.manifest().m;
+    let (a, b, _) = generators::table1_system(n, 10);
+    let mut engine = build_engine(Policy::GmatrixLike, a, b, m, Some(rt), true).unwrap();
+    let x0 = vec![0.0; n];
+    engine.cycle(&x0).unwrap();
+    engine.cycle(&x0).unwrap();
+    // exactly one 8n² H2D (the resident upload); all others are vectors
+    let sim = engine.sim();
+    let big = 8 * n * n;
+    let big_uploads = sim
+        .trace()
+        .events()
+        .iter()
+        .filter(|e| matches!(e, gmres_rs::device::TraceEvent::Transfer { bytes, .. } if *bytes == big))
+        .count();
+    assert_eq!(big_uploads, 1, "gmatrix must upload A exactly once");
+}
+
+#[test]
+fn gputools_trace_uploads_matrix_every_matvec() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().sizes()[0];
+    let m = rt.manifest().m;
+    let (a, b, _) = generators::table1_system(n, 11);
+    let mut engine = build_engine(Policy::GputoolsLike, a, b, m, Some(rt), true).unwrap();
+    engine.cycle(&vec![0.0; n]).unwrap();
+    let sim = engine.sim();
+    let big = 8 * n * n;
+    let big_uploads = sim
+        .trace()
+        .events()
+        .iter()
+        .filter(|e| matches!(e, gmres_rs::device::TraceEvent::Transfer { bytes, .. } if *bytes == big))
+        .count();
+    assert_eq!(big_uploads, m + 2, "gputools re-uploads A on every matvec");
+}

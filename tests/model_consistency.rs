@@ -1,0 +1,76 @@
+//! The analytic cost replay (`device::costs`) must equal the live engines'
+//! modeled clocks — otherwise the full-size Table-1 sweep (which uses the
+//! replay) would drift from what the engines actually charge.
+//!
+//! Serial policies are checked always; device policies when artifacts are
+//! present (`make artifacts`).
+
+use std::rc::Rc;
+
+use gmres_rs::backend::{build_engine, Policy};
+use gmres_rs::device::costs;
+use gmres_rs::gmres::{GmresConfig, RestartedGmres};
+use gmres_rs::linalg::generators;
+use gmres_rs::runtime::Runtime;
+
+fn engine_clock(policy: Policy, n: usize, m: usize, rt: Option<Rc<Runtime>>) -> (f64, usize) {
+    let (a, b, _) = generators::table1_system(n, 5);
+    let mut engine = build_engine(policy, a, b, m, rt, false).unwrap();
+    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-10, max_restarts: 100 });
+    let rep = solver.solve(engine.as_mut(), None).unwrap();
+    assert!(rep.converged);
+    (engine.sim().elapsed(), rep.cycles)
+}
+
+fn assert_replay_matches(policy: Policy, n: usize, m: usize, rt: Option<Rc<Runtime>>) {
+    let (clock, cycles) = engine_clock(policy, n, m, rt);
+    let predicted = costs::predict_seconds(policy, n, m, cycles);
+    let rel = (clock - predicted).abs() / predicted.max(1e-30);
+    assert!(
+        rel < 1e-9,
+        "{policy} at n={n}, m={m}, cycles={cycles}: engine {clock} vs replay {predicted} (rel {rel})"
+    );
+}
+
+#[test]
+fn serial_r_replay_matches_engine() {
+    assert_replay_matches(Policy::SerialR, 96, 6, None);
+    assert_replay_matches(Policy::SerialR, 150, 10, None);
+}
+
+#[test]
+fn serial_native_models_zero() {
+    let (clock, _) = engine_clock(Policy::SerialNative, 96, 6, None);
+    assert_eq!(clock, 0.0);
+}
+
+#[test]
+fn device_policy_replays_match_engines() {
+    let Ok(rt) = Runtime::from_env() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let rt = Rc::new(rt);
+    let sizes = rt.manifest().sizes();
+    let n = sizes[0];
+    let m = rt.manifest().m;
+    assert_replay_matches(Policy::GmatrixLike, n, m, Some(rt.clone()));
+    assert_replay_matches(Policy::GputoolsLike, n, m, Some(rt.clone()));
+    assert_replay_matches(Policy::GpurVclLike, n, m, Some(rt));
+}
+
+#[test]
+fn predicted_speedup_reproduces_table1_shape() {
+    // the six shape claims of DESIGN.md on the pure replay (fast)
+    let s = |p: Policy, n: usize| costs::predict_speedup(p, n, 30, 4);
+    for p in Policy::gpu_policies() {
+        assert!(s(p, 10_000) > s(p, 1000), "{p} must grow with N");
+    }
+    assert!(s(Policy::GputoolsLike, 1000) < 1.05);
+    let (gm, gp, gr) = (
+        s(Policy::GmatrixLike, 10_000),
+        s(Policy::GputoolsLike, 10_000),
+        s(Policy::GpurVclLike, 10_000),
+    );
+    assert!(gp < gm && gm < gr, "ordering at N=10000: {gp} {gm} {gr}");
+}

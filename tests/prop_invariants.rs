@@ -1,0 +1,286 @@
+//! Property-based invariants (in-tree driver `util::check`; proptest is not
+//! available offline).  Each property runs 32–64 seeded random cases; a
+//! failure reports the case seed for exact reproduction.
+
+use gmres_rs::backend::providers::{HostMode, NativeMatVec};
+use gmres_rs::backend::{rvec, CycleEngine, HostCycleEngine, Policy};
+use gmres_rs::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
+use gmres_rs::device::memory::{working_set_bytes, DeviceMemory};
+use gmres_rs::device::{GpuSpec, TransferModel};
+use gmres_rs::gmres::arnoldi::{arnoldi, Ortho};
+use gmres_rs::gmres::givens;
+use gmres_rs::linalg::{blas, generators, vector, LinearOperator};
+use gmres_rs::prop_assert;
+use gmres_rs::util::check::{check, Config};
+use gmres_rs::util::rng::Rng;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0x6789_ABCD }
+}
+
+fn random_system(rng: &mut Rng, max_n: usize) -> (gmres_rs::linalg::DenseMatrix, Vec<f64>) {
+    let n = 4 + rng.below(max_n - 4);
+    let shift = 2.0 + rng.uniform(0.0, 2.0) * (n as f64).sqrt();
+    let a = generators::dense_shifted_random(n, shift, rng.next_u64());
+    let b = generators::random_vector(n, rng.next_u64());
+    (a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Arnoldi invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_arnoldi_basis_orthonormal_mgs() {
+    check(cfg(32), "arnoldi-mgs-orthonormal", |rng| {
+        // weak shift => slow Krylov closure => healthy subdiagonals; m well
+        // below n so the factorization never runs into near-breakdown,
+        // where MGS legitimately loses digits.
+        let n = 16 + rng.below(64);
+        let a = generators::dense_shifted_random(n, 1.0 + rng.uniform(0.0, 2.0), rng.next_u64());
+        let b = generators::random_vector(n, rng.next_u64());
+        let m = 1 + rng.below(n / 2);
+        let f = arnoldi(&a, &b, m, Ortho::Mgs);
+        let defect = f.orthogonality_defect();
+        prop_assert!(defect < 1e-7, "defect {defect} at n={n}, m={m}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arnoldi_relation_holds_both_variants() {
+    check(cfg(32), "arnoldi-relation", |rng| {
+        let (a, b) = random_system(rng, 60);
+        let m = 1 + rng.below(10);
+        for ortho in [Ortho::Cgs, Ortho::Mgs] {
+            let f = arnoldi(&a, &b, m, ortho);
+            let defect = f.relation_defect(&a);
+            prop_assert!(defect < 1e-10, "{ortho:?} relation defect {defect}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hessenberg_structure() {
+    check(cfg(32), "hessenberg-structure", |rng| {
+        let (a, b) = random_system(rng, 50);
+        let m = 1 + rng.below(8);
+        let f = arnoldi(&a, &b, m, Ortho::Mgs);
+        for j in 0..f.k {
+            for i in j + 2..=m {
+                prop_assert!(f.h[i][j] == 0.0, "h[{i}][{j}] = {}", f.h[i][j]);
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Givens least-squares invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_givens_solution_is_optimal() {
+    check(cfg(48), "givens-optimal", |rng| {
+        let m = 2 + rng.below(10);
+        let mut h = givens::zero_hessenberg(m);
+        for j in 0..m {
+            for i in 0..=j + 1 {
+                h[i][j] = rng.uniform(-1.0, 1.0);
+            }
+            h[j + 1][j] += 1.5_f64.copysign(h[j + 1][j]);
+        }
+        let beta = rng.uniform(0.1, 3.0);
+        let (y, implied) = givens::solve_ls(&h, beta, m);
+        // residual via direct evaluation
+        let direct = {
+            let mut r = vec![0.0; m + 1];
+            r[0] = beta;
+            for i in 0..=m {
+                for j in 0..m {
+                    r[i] -= h[i][j] * y[j];
+                }
+            }
+            blas::nrm2(&r)
+        };
+        prop_assert!((implied - direct).abs() < 1e-9, "implied {implied} direct {direct}");
+        // random perturbations never improve the residual
+        for _ in 0..5 {
+            let mut y2 = y.clone();
+            let idx = rng.below(m);
+            y2[idx] += rng.uniform(-1e-3, 1e-3);
+            let pert = {
+                let mut r = vec![0.0; m + 1];
+                r[0] = beta;
+                for i in 0..=m {
+                    for j in 0..m {
+                        r[i] -= h[i][j] * y2[j];
+                    }
+                }
+                blas::nrm2(&r)
+            };
+            prop_assert!(pert >= direct - 1e-10, "perturbation improved residual");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Solver invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gmres_residual_monotone_and_converges() {
+    check(cfg(24), "gmres-monotone", |rng| {
+        // shift comfortably above the spectral radius so restarted GMRES
+        // with small m cannot stagnate (stagnation with indefinite spectra
+        // is real GMRES behaviour, not a bug — out of scope here)
+        let n = 10 + rng.below(50);
+        let shift = (n as f64 / 3.0).sqrt() * (1.6 + rng.uniform(0.0, 1.0));
+        let a = generators::dense_shifted_random(n, shift, rng.next_u64());
+        let b = generators::random_vector(n, rng.next_u64());
+        let m = 3 + rng.below(8);
+        let mut engine = HostCycleEngine::new(
+            Policy::SerialNative,
+            NativeMatVec::new(a),
+            b,
+            m,
+            HostMode::Native,
+            false,
+        )
+        .map_err(|e| e.to_string())?;
+        let mut x = vec![0.0; n];
+        let mut last = f64::INFINITY;
+        for _ in 0..60 {
+            let r = engine.cycle(&x).map_err(|e| e.to_string())?;
+            prop_assert!(
+                r.resnorm <= last * (1.0 + 1e-9),
+                "residual increased: {last} -> {}",
+                r.resnorm
+            );
+            last = r.resnorm;
+            x = r.x;
+            if last <= 1e-9 * engine.bnorm() {
+                return Ok(());
+            }
+        }
+        Err(format!("no convergence in 60 cycles (res {last})"))
+    });
+}
+
+#[test]
+fn prop_rvec_ops_equal_native() {
+    check(cfg(64), "rvec-equals-native", |rng| {
+        let n = 1 + rng.below(200);
+        let x = generators::random_vector(n, rng.next_u64());
+        let y = generators::random_vector(n, rng.next_u64());
+        let alpha = rng.uniform(-2.0, 2.0);
+        prop_assert!((rvec::dot(&x, &y) - blas::dot(&x, &y)).abs() < 1e-10);
+        let mut z = y.clone();
+        blas::axpy(-alpha, &x, &mut z);
+        let d = vector::max_abs_diff(&rvec::sub_scaled(&y, alpha, &x), &z);
+        prop_assert!(d < 1e-14, "sub_scaled diff {d}");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Device allocator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allocator_never_exceeds_capacity() {
+    check(cfg(48), "allocator-capacity", |rng| {
+        let cap = 1000 + rng.below(100_000);
+        let mut mem = DeviceMemory::new(cap);
+        let mut live = Vec::new();
+        for _ in 0..200 {
+            prop_assert!(mem.used() <= cap, "used {} > cap {cap}", mem.used());
+            if rng.next_f64() < 0.6 {
+                let req = rng.below(cap / 4 + 1);
+                if let Ok(id) = mem.alloc(req) {
+                    live.push((id, req));
+                }
+            } else if !live.is_empty() {
+                let idx = rng.below(live.len());
+                let (id, bytes) = live.swap_remove(idx);
+                let freed = mem.release(id).map_err(|e| e.to_string())?;
+                prop_assert!(freed == bytes, "freed {freed} != alloc {bytes}");
+            }
+        }
+        let total: usize = live.iter().map(|(_, b)| b).sum();
+        prop_assert!(mem.used() == total, "accounting drift: {} vs {total}", mem.used());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_working_set_monotone_in_n_and_m() {
+    check(cfg(48), "working-set-monotone", |rng| {
+        let n = 2 + rng.below(5000);
+        let m = 1 + rng.below(60);
+        for p in Policy::all() {
+            prop_assert!(
+                working_set_bytes(n + 1, m, p) >= working_set_bytes(n, m, p),
+                "{p} not monotone in n"
+            );
+            prop_assert!(
+                working_set_bytes(n, m + 1, p) >= working_set_bytes(n, m, p),
+                "{p} not monotone in m"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transfer_model_monotone_and_superadditive_free() {
+    check(cfg(48), "transfer-monotone", |rng| {
+        let t = TransferModel::from_spec(&GpuSpec::geforce_840m());
+        let a = rng.below(1 << 30);
+        let b = rng.below(1 << 30);
+        prop_assert!(t.time(a.max(b)) >= t.time(a.min(b)), "not monotone");
+        // one batched transfer beats two (latency amortization)
+        prop_assert!(
+            t.time(a + b) <= t.time(a) + t.time(b),
+            "batching must not lose"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Batcher invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_and_respects_keys() {
+    check(cfg(48), "batcher-conservation", |rng| {
+        let max_batch = 1 + rng.below(8);
+        let mut b: Batcher<u64> = Batcher::new(BatcherConfig {
+            max_batch,
+            max_age: std::time::Duration::ZERO,
+        });
+        let n_items = rng.below(40);
+        let mut pushed = Vec::new();
+        for i in 0..n_items {
+            let key = BatchKey {
+                policy: if rng.next_f64() < 0.5 { Policy::GmatrixLike } else { Policy::GpurVclLike },
+                n: 64 * (1 + rng.below(3)),
+                m: 8,
+            };
+            b.push(key, i as u64);
+            pushed.push(i as u64);
+        }
+        let mut drained = Vec::new();
+        while let Some((key, batch)) = b.next_batch() {
+            prop_assert!(batch.len() <= max_batch, "batch over max");
+            prop_assert!(batch.iter().all(|p| p.key == key), "mixed keys in batch");
+            drained.extend(batch.iter().map(|p| p.item));
+        }
+        drained.sort_unstable();
+        prop_assert!(drained == pushed, "items lost or duplicated");
+        Ok(())
+    });
+}

@@ -1,0 +1,114 @@
+//! End-to-end coordinator tests: mixed policy streams through the running
+//! service, device jobs included when artifacts exist.
+
+use std::sync::Arc;
+
+use gmres_rs::backend::Policy;
+use gmres_rs::coordinator::{MatrixSpec, ServiceConfig, SolveRequest, SolveService};
+use gmres_rs::gmres::GmresConfig;
+use gmres_rs::runtime::Runtime;
+
+fn artifact_dims() -> Option<(usize, usize)> {
+    match Runtime::from_env() {
+        Ok(rt) => Some((rt.manifest().sizes()[0], rt.manifest().m)),
+        Err(e) => {
+            eprintln!("skipping device jobs: {e}");
+            None
+        }
+    }
+}
+
+fn req(n: usize, m: usize, policy: Option<Policy>, seed: u64) -> SolveRequest {
+    SolveRequest {
+        matrix: MatrixSpec::Table1 { n, seed },
+        config: GmresConfig { m, tol: 1e-8, max_restarts: 200 },
+        policy,
+    }
+}
+
+#[test]
+fn mixed_policy_stream_completes() {
+    let Some((n, m)) = artifact_dims() else { return };
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 2, ..Default::default() });
+    let policies = [
+        Some(Policy::SerialNative),
+        Some(Policy::SerialR),
+        Some(Policy::GmatrixLike),
+        Some(Policy::GputoolsLike),
+        Some(Policy::GpurVclLike),
+    ];
+    let handles: Vec<_> = (0..10)
+        .map(|i| {
+            let svc = svc.clone();
+            let policy = policies[i % policies.len()];
+            std::thread::spawn(move || svc.submit(req(n, m, policy, i as u64)))
+        })
+        .collect();
+    for h in handles {
+        let out = h.join().unwrap().unwrap();
+        assert!(out.report.converged, "{} failed", out.policy);
+        assert!(out.report.rel_resnorm <= 1e-8);
+    }
+    assert_eq!(svc.metrics().completed(), 10);
+    assert_eq!(svc.metrics().failed(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn device_batching_groups_same_shape_jobs() {
+    let Some((n, m)) = artifact_dims() else { return };
+    let svc = Arc::new(SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        ..Default::default()
+    }));
+    // a burst of same-shape device jobs: all must complete through the
+    // single device thread (batcher path)
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let svc = svc.clone();
+            std::thread::spawn(move || svc.submit(req(n, m, Some(Policy::GmatrixLike), i)))
+        })
+        .collect();
+    for h in handles {
+        assert!(h.join().unwrap().unwrap().report.converged);
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn auto_routing_picks_a_policy_and_solves() {
+    let Some((n, m)) = artifact_dims() else { return };
+    let svc = SolveService::start(ServiceConfig::default());
+    let out = svc.submit(req(n, m, None, 1)).unwrap();
+    assert!(out.report.converged);
+    assert!(!out.downgraded);
+    svc.shutdown();
+}
+
+#[test]
+fn downgrade_path_executes_on_host() {
+    // tiny admission budget: every device request must downgrade AND still
+    // complete on the serial fallback — no artifacts needed.
+    let svc = SolveService::start(ServiceConfig {
+        router: gmres_rs::coordinator::RouterConfig {
+            mem_fraction: 1e-9,
+            ..Default::default()
+        },
+        cpu_workers: 1,
+        ..Default::default()
+    });
+    let out = svc.submit(req(48, 6, Some(Policy::GpurVclLike), 2)).unwrap();
+    assert!(out.downgraded, "must downgrade under a ~2 B budget");
+    assert_eq!(out.policy, Policy::SerialR);
+    assert!(out.report.converged);
+    assert_eq!(svc.metrics().downgraded(), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn queue_seconds_reported() {
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    let out = svc.submit(req(48, 6, Some(Policy::SerialNative), 3)).unwrap();
+    assert!(out.queue_seconds >= 0.0 && out.queue_seconds < 10.0);
+    svc.shutdown();
+}
