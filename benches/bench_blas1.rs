@@ -50,11 +50,11 @@ fn main() -> anyhow::Result<()> {
     println!("measured host BLAS-1 (native in-place vs R copy-on-modify semantics):\n");
     println!("{}", t.render());
 
-    // ---- measured XLA dispatch cost for blas1 (why offload loses small) ----
+    // ---- measured executor dispatch cost for blas1 (why offload loses small) ----
     match Runtime::from_env() {
         Ok(rt) => {
-            let mut t = Table::new(&["N", "xla axpy (e2e)", "native axpy", "xla/native"]);
-            for n in rt.manifest().sizes() {
+            let mut t = Table::new(&["N", "device axpy (e2e)", "native axpy", "device/native"]);
+            for n in rt.sizes() {
                 let x = generators::random_vector(n, 3);
                 let mut y2 = generators::random_vector(n, 4);
                 let exe = rt.load(&format!("axpy_{n}"))?;
@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
                     format!("{:.0}x", xl.mean / nat.mean.max(1e-12)),
                 ]);
             }
-            println!("measured offloaded axpy (PJRT round-trip) vs native — the measured");
+            println!("measured offloaded axpy (executor round-trip) vs native — the measured");
             println!("analogue of the break-even effect:\n");
             println!("{}", t.render());
         }

@@ -7,7 +7,7 @@ use gmres_rs::backend::{build_engine, Policy};
 use gmres_rs::device::costs;
 use gmres_rs::device::memory::working_set_bytes;
 use gmres_rs::gmres::{GmresConfig, RestartedGmres};
-use gmres_rs::linalg::generators;
+use gmres_rs::linalg::{generators, SystemShape};
 use gmres_rs::util::bench::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -24,7 +24,8 @@ fn main() -> anyhow::Result<()> {
     ]);
     for &m in &[2usize, 5, 10, 20, 30, 60] {
         let (a, b, _) = generators::table1_system(n, 11);
-        let mut engine = build_engine(Policy::SerialNative, a, b, m, None, false)?;
+        let shape = SystemShape::dense(n);
+        let mut engine = build_engine(Policy::SerialNative, a.into(), b, m, None, false)?;
         let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-8, max_restarts: 500 });
         let rep = solver.solve(engine.as_mut(), None)?;
         assert!(rep.converged, "m={m} did not converge");
@@ -34,9 +35,9 @@ fn main() -> anyhow::Result<()> {
             rep.cycles.to_string(),
             matvecs.to_string(),
             format!("{:.2}", rep.wall_seconds * 1e3),
-            format!("{:.3}", costs::predict_seconds(Policy::SerialR, n, m, rep.cycles)),
-            format!("{:.3}", costs::predict_seconds(Policy::GpurVclLike, n, m, rep.cycles)),
-            format!("{:.2}", working_set_bytes(n, m, Policy::GpurVclLike) as f64 / 1e6),
+            format!("{:.3}", costs::predict_seconds(Policy::SerialR, &shape, m, rep.cycles)),
+            format!("{:.3}", costs::predict_seconds(Policy::GpurVclLike, &shape, m, rep.cycles)),
+            format!("{:.2}", working_set_bytes(&shape, m, Policy::GpurVclLike) as f64 / 1e6),
         ]);
     }
     println!("{}", t.render());

@@ -1,28 +1,43 @@
-//! Ablation E — what the three-layer AOT architecture buys over the
-//! per-operator dispatch pattern gpuR/vcl uses: one fused arnoldi-cycle
-//! executable vs composing the same cycle from individual gemv/blas1
-//! executables on the PJRT runtime, plus raw dispatch-overhead
-//! microbenchmarks of the runtime layer.
+//! Ablation E — what the fused-cycle architecture buys over per-operator
+//! dispatch, plus the NEW sparse-vs-dense matvec crossover sweep that
+//! baselines the SpMV hot path for the next optimization round.
 //!
-//! Needs artifacts (`make artifacts`).
+//! Part 1: dispatch overhead — literal-staged vs buffer-resident gemv, and
+//! one fused `arnoldi_cycle` dispatch vs composing a cycle from individual
+//! gemv/dot/axpy dispatches.
+//!
+//! Part 2: fixed n, varying nnz density — measured host SpMV vs dense GEMV
+//! wallclock and the modeled device kernel times, reporting the density at
+//! which dense wins back (the crossover the SpMV provider must beat).
 
-use gmres_rs::linalg::generators;
+use gmres_rs::backend::providers::{MatVecProvider, NativeMatVec, NativeSpMV};
+use gmres_rs::device::DeviceSim;
+use gmres_rs::linalg::{generators, CsrMatrix, SystemShape};
 use gmres_rs::runtime::Runtime;
 use gmres_rs::util::bench::{black_box, human_time, Bencher, Table};
+use gmres_rs::util::rng::Rng;
+
+/// Random CSR with ~density·n² nonzeros (diagonal always present so the
+/// operator stays nonsingular-ish and row sweeps never degenerate).
+fn random_csr(n: usize, density: f64, seed: u64) -> CsrMatrix {
+    let mut rng = Rng::seed_from_u64(seed);
+    let per_row = ((density * n as f64) as usize).max(1);
+    let mut trips = Vec::with_capacity(n * (per_row + 1));
+    for i in 0..n {
+        trips.push((i, i, (n as f64).sqrt() + 1.0));
+        for _ in 0..per_row.saturating_sub(1) {
+            trips.push((i, rng.below(n), rng.uniform(-1.0, 1.0)));
+        }
+    }
+    CsrMatrix::from_triplets(n, n, trips)
+}
 
 fn main() -> anyhow::Result<()> {
-    let rt = match Runtime::from_env() {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipped: {e}");
-            return Ok(());
-        }
-    };
-    let m = rt.manifest().m;
+    let rt = Runtime::from_env()?;
     let b = Bencher::default();
 
-    // ---- dispatch overhead: smallest artifact, literal vs buffer args ----
-    let sizes = rt.manifest().sizes();
+    // ---- dispatch overhead: smallest executable, literal vs buffer args ----
+    let sizes = rt.sizes();
     let n0 = sizes[0];
     let (a, _, _) = generators::table1_system(n0, 1);
     let x = generators::random_vector(n0, 2);
@@ -49,12 +64,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- fused cycle vs composed cycle ----
-    println!("Ablation E — fused AOT cycle vs per-op dispatch (ours vs vcl pattern):\n");
+    let m = rt.default_m();
+    println!("Ablation E — fused cycle vs per-op dispatch (ours vs vcl pattern):\n");
     let mut t = Table::new(&["N", "fused cycle", "composed (per-op)", "fused advantage"]);
     for &n in &sizes {
-        if !rt.manifest().supports(n, m, true) {
-            continue;
-        }
         let (a, bvec, _) = generators::table1_system(n, 3);
         let x0 = vec![0.0; n];
 
@@ -67,15 +80,11 @@ fn main() -> anyhow::Result<()> {
             black_box(Runtime::tuple2_vec_scalar(out).unwrap())
         });
 
-        // composed: m+2 gemv dispatches + per-step blas1/dot dispatches,
-        // host-orchestrated (exactly the vcl per-operator pattern)
+        // composed: one Arnoldi step worth of dispatches, scaled by m
         let gemv_exe = rt.load(&format!("gemv_{n}"))?;
         let dot_exe = rt.load(&format!("dot_{n}"))?;
         let axpy_exe = rt.load(&format!("axpy_{n}"))?;
         let composed = Bencher::quick().run(|| {
-            // one Arnoldi step worth of dispatches, scaled by m afterwards —
-            // full m-step composition is prohibitively slow at larger N,
-            // which is itself the point being measured.
             let xb = rt.upload_vector(&x0).unwrap();
             let w = {
                 let out = rt.execute_buffers(&gemv_exe, &[&a_buf, &xb]).unwrap();
@@ -109,7 +118,58 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
-    println!("the fused artifact amortizes dispatch exactly as DESIGN.md section 5");
-    println!("argues — the advantage our L2 scan-fusion has over gpuR's vcl path.");
+
+    // ---- sparse-vs-dense matvec crossover (fixed n, varying density) ----
+    let n = 1024usize;
+    let (dense_a, _, _) = generators::table1_system(n, 7);
+    let x = generators::random_vector(n, 8);
+    let mut dense_mv = NativeMatVec::new(dense_a);
+    let mut sim = DeviceSim::paper_testbed(false);
+    let dense_stats = b.run(|| black_box(dense_mv.matvec(&x, &mut sim).unwrap()));
+    let dense_model = {
+        let mut s = DeviceSim::paper_testbed(false);
+        s.kernel_gemv(n, n);
+        s.elapsed()
+    };
+
+    println!("\nSpMV crossover at N={n} (host wallclock + modeled 840M kernel):\n");
+    println!("  dense gemv: {} measured, {} modeled", dense_stats.human(), human_time(dense_model));
+    let mut t = Table::new(&[
+        "density",
+        "nnz",
+        "spmv measured",
+        "spmv modeled",
+        "vs dense (measured)",
+    ]);
+    let mut crossover: Option<f64> = None;
+    for &density in &[0.005f64, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5] {
+        let csr = random_csr(n, density, 11);
+        let nnz = csr.nnz();
+        let mut spmv = NativeSpMV::new(csr);
+        let stats = b.run(|| black_box(spmv.matvec(&x, &mut sim).unwrap()));
+        let modeled = {
+            let mut s = DeviceSim::paper_testbed(false);
+            s.kernel_spmv(nnz, n);
+            s.elapsed()
+        };
+        let ratio = stats.mean / dense_stats.mean.max(1e-12);
+        if ratio >= 1.0 && crossover.is_none() {
+            crossover = Some(density);
+        }
+        let shape = SystemShape::csr(n, nnz);
+        t.row(&[
+            format!("{density:.3} ({:.3} actual)", shape.density()),
+            nnz.to_string(),
+            stats.human(),
+            human_time(modeled),
+            format!("{ratio:.2}x"),
+        ]);
+    }
+    println!("{}", t.render());
+    match crossover {
+        Some(d) => println!("measured crossover: dense wins from density ≈ {d}"),
+        None => println!("measured crossover: SpMV stayed ahead through density 0.5"),
+    }
+    println!("(this is the SpMV hot-path baseline for the next optimization PR)");
     Ok(())
 }

@@ -25,17 +25,17 @@ fn main() -> anyhow::Result<()> {
     figure5::write_csv(&records, false, std::fs::File::create(csv_path)?)?;
     println!("wrote {csv_path}\n");
 
-    // ---- measured sweep over whatever artifacts exist ----
+    // ---- measured sweep on the executor (native or artifact-validated) ----
     match Runtime::from_env() {
         Ok(rt) => {
             let rt = Rc::new(rt);
-            let sizes = rt.manifest().sizes();
-            let m = rt.manifest().m;
+            let sizes = rt.sizes();
+            let m = rt.default_m();
             let cfg = SweepConfig { sizes, m, measured: true, ..Default::default() };
             eprintln!("[measured] sweeping {:?} (m={m}) ...", cfg.sizes);
             let records = sweep::table1_sweep(&cfg, Some(rt))?;
             println!("{}", table1::render(&records, true));
-            println!("(measured axis: XLA-CPU device vs R-semantics host on this machine)");
+            println!("(measured axis: virtual device vs R-semantics host on this machine)");
             let csv_path = "figure5_measured.csv";
             figure5::write_csv(&records, true, std::fs::File::create(csv_path)?)?;
             println!("wrote {csv_path}");

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI gate: format check (advisory), tier-1 build+test, sparse bench smoke.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo fmt --check (advisory)"
+if command -v rustfmt >/dev/null 2>&1; then
+    cargo fmt --check || echo "WARN: rustfmt differences (non-blocking)"
+else
+    echo "rustfmt not installed; skipping"
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> sparse-vs-dense smoke (5s budget)"
+# a CSR solve through a device policy and the dense twin of the same order;
+# both must converge through the native virtual device
+./target/release/gmres-rs solve --n 512 --format csr --policy gpuR --m 10
+./target/release/gmres-rs solve --n 512 --format dense --policy gpuR --m 10
+
+echo "CI OK"

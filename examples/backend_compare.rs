@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
             continue;
         }
         let (a, b, _) = generators::table1_system(n, seed);
-        let mut engine = build_engine(policy, a, b, m, runtime.clone(), /* trace */ true)?;
+        let mut engine = build_engine(policy, a.into(), b, m, runtime.clone(), /* trace */ true)?;
         let report = solver.solve(engine.as_mut(), None)?;
         assert!(report.converged, "{policy} failed to converge");
 

@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     let (a, b, x_true) = generators::table1_system(n, /* seed */ 7);
 
     // 2. Pick an offload policy.  SerialNative = compiled host baseline.
-    let mut engine = build_engine(Policy::SerialNative, a, b, /* m */ 30, None, false)?;
+    let mut engine = build_engine(Policy::SerialNative, a.into(), b, /* m */ 30, None, false)?;
 
     // 3. Configure and run restarted GMRES(30).
     let solver = RestartedGmres::new(GmresConfig { m: 30, tol: 1e-8, max_restarts: 100 });

@@ -4,26 +4,25 @@
 //! GPU using vcl objects and methods: this approach speeds up the
 //! computation but put a limit through the available GPU memory.”*
 //!
-//! Reproduction: the whole GMRES(m) cycle is ONE AOT artifact
-//! (`arnoldi_cycle_<n>_<m>.hlo.txt`, a `lax.scan` over Arnoldi steps with
-//! device-side Givens least squares).  The matrix, RHS and Krylov state are
-//! device-resident; one cycle = one dispatch; the only mandatory readback
-//! is the residual norm (8 bytes) the host needs for the restart decision —
-//! the same asynchronous pattern `vclMatrix` gives R.
+//! Reproduction: the whole GMRES(m) cycle is ONE executable
+//! (`arnoldi_cycle_<n>_<m>`, a fused CGS cycle with device-side Givens
+//! least squares).  The matrix, RHS and Krylov state are device-resident;
+//! one cycle = one dispatch; the only mandatory readback is the residual
+//! norm (8 bytes) the host needs for the restart decision — the same
+//! asynchronous pattern `vclMatrix` gives R.
 //!
-//! PJRT note: the executable returns a tuple and the `xla` crate cannot
-//! keep tuple elements as device buffers, so the *measured* path reads `x`
-//! back and re-uploads it each restart (extra 16N bytes/cycle on this
-//! testbed); the *modeled* path charges only the 8-byte readback that vcl
-//! would incur.  DESIGN.md §2 records this substitution.
+//! The matrix stays in its source format: a CSR system uploads its
+//! nnz-sized device layout and the fused cycle's matvecs run as SpMV, so
+//! the vcl memory cap scales with nnz instead of n² (the whole point of
+//! the `SystemMatrix` refactor).
 
 use std::rc::Rc;
 
 use anyhow::anyhow;
 
 use crate::device::DeviceSim;
-use crate::linalg::{blas, DenseMatrix};
-use crate::runtime::Runtime;
+use crate::linalg::{blas, SystemMatrix, SystemShape};
+use crate::runtime::{DeviceBuffer, Executable, Runtime};
 use crate::Result;
 
 use super::{CycleEngine, CycleResult, Policy};
@@ -31,24 +30,34 @@ use super::{CycleEngine, CycleResult, Policy};
 /// Fused-cycle device engine (see module docs).
 pub struct GpurVclEngine {
     rt: Rc<Runtime>,
-    exe: Rc<xla::PjRtLoadedExecutable>,
-    a_buf: xla::PjRtBuffer,
-    b_buf: xla::PjRtBuffer,
+    exe: Rc<Executable>,
+    a_buf: DeviceBuffer,
+    b_buf: DeviceBuffer,
     bnorm: f64,
-    n: usize,
+    shape: SystemShape,
     m: usize,
     sim: DeviceSim,
     charged_setup: bool,
 }
 
 impl GpurVclEngine {
-    pub fn new(rt: Rc<Runtime>, a: DenseMatrix, b: Vec<f64>, m: usize, trace: bool) -> Result<Self> {
-        let n = a.nrows();
-        anyhow::ensure!(a.ncols() == n, "square systems only");
+    pub fn new(
+        rt: Rc<Runtime>,
+        a: SystemMatrix,
+        b: Vec<f64>,
+        m: usize,
+        trace: bool,
+    ) -> Result<Self> {
+        let n = a.n();
+        anyhow::ensure!(a.is_square(), "square systems only");
         anyhow::ensure!(b.len() == n, "rhs length mismatch");
         let name = format!("arnoldi_cycle_{n}_{m}");
         let exe = rt.load(&name)?;
-        let a_buf = rt.upload_matrix(&a)?;
+        let shape = a.shape();
+        let a_buf = match &a {
+            SystemMatrix::Dense(d) => rt.upload_matrix(d)?,
+            SystemMatrix::Csr(c) => rt.upload_csr(c)?,
+        };
         let b_buf = rt.upload_vector(&b)?;
         let bnorm = blas::nrm2(&b);
         Ok(Self {
@@ -57,7 +66,7 @@ impl GpurVclEngine {
             a_buf,
             b_buf,
             bnorm,
-            n,
+            shape,
             m,
             sim: DeviceSim::paper_testbed(trace),
             charged_setup: false,
@@ -69,13 +78,15 @@ impl GpurVclEngine {
             return Ok(());
         }
         // residency + uploads, via the canonical charge table
-        if !self
-            .sim
-            .would_fit(crate::device::memory::working_set_bytes(self.n, self.m, Policy::GpurVclLike))
-        {
-            return Err(anyhow!("vcl working set exceeds device memory"));
+        let working_set =
+            crate::device::memory::working_set_bytes(&self.shape, self.m, Policy::GpurVclLike);
+        if !self.sim.would_fit(working_set) {
+            return Err(anyhow!(
+                "vcl working set ({working_set} B, format {}) exceeds device memory",
+                self.shape.format
+            ));
         }
-        crate::device::costs::charge_setup(&mut self.sim, Policy::GpurVclLike, self.n, self.m);
+        crate::device::costs::charge_setup(&mut self.sim, Policy::GpurVclLike, &self.shape, self.m);
         self.charged_setup = true;
         Ok(())
     }
@@ -83,7 +94,7 @@ impl GpurVclEngine {
 
 impl CycleEngine for GpurVclEngine {
     fn n(&self) -> usize {
-        self.n
+        self.shape.n
     }
 
     fn m(&self) -> usize {
@@ -103,13 +114,13 @@ impl CycleEngine for GpurVclEngine {
     }
 
     fn cycle(&mut self, x0: &[f64]) -> Result<CycleResult> {
-        anyhow::ensure!(x0.len() == self.n, "x0 length mismatch");
+        anyhow::ensure!(x0.len() == self.shape.n, "x0 length mismatch");
         self.charge_setup_once()?;
         // modeled: gpuR's per-operator vcl dispatch pattern (the canonical
         // charge table; our fused artifact is faster — Ablation E)
-        crate::device::costs::charge_cycle(&mut self.sim, Policy::GpurVclLike, self.n, self.m);
-        // measured: execute with device-resident A, b (x re-staged per the
-        // module-docs substitution)
+        crate::device::costs::charge_cycle(&mut self.sim, Policy::GpurVclLike, &self.shape, self.m);
+        // measured: execute with device-resident A, b (x re-staged per
+        // restart — the paper-noted readback substitution)
         let x_buf = self.rt.upload_vector(x0)?;
         let out = self
             .rt

@@ -14,9 +14,10 @@
 //! | [`gputools_like`]    | `gputools`            | device (A per call)| R-sem   | transient       |
 //! | [`gpur_vcl_like`]    | `gpuR` vcl objects    | fused device cycle| —        | A, V, H, x      |
 //!
-//! The measured numerics of device policies run on the PJRT executor
-//! ([`crate::runtime::Runtime`]); the modeled times come from
-//! [`crate::device::DeviceSim`].
+//! The measured numerics of device policies run on the virtual-device
+//! executor ([`crate::runtime::Runtime`]); the modeled times come from
+//! [`crate::device::DeviceSim`].  Every engine is format-aware: dense and
+//! CSR systems flow through unchanged via [`crate::linalg::SystemMatrix`].
 
 pub mod fused;
 pub mod host_cycle;
@@ -29,7 +30,7 @@ pub use host_cycle::HostCycleEngine;
 use std::rc::Rc;
 
 use crate::device::DeviceSim;
-use crate::linalg::DenseMatrix;
+use crate::linalg::SystemMatrix;
 use crate::runtime::Runtime;
 use crate::Result;
 
@@ -76,18 +77,25 @@ impl Policy {
         }
     }
 
+    /// Case-insensitive parse of a policy name (plus the usual aliases).
     pub fn parse(s: &str) -> Option<Policy> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "serial-r" | "serial" | "pracma" => Some(Policy::SerialR),
             "serial-native" | "native" => Some(Policy::SerialNative),
             "gmatrix" => Some(Policy::GmatrixLike),
             "gputools" => Some(Policy::GputoolsLike),
-            "gpuR" | "gpur" | "vcl" => Some(Policy::GpurVclLike),
+            "gpur" | "vcl" => Some(Policy::GpurVclLike),
             _ => None,
         }
     }
 
-    /// Does this policy need the PJRT runtime (i.e. offload anything)?
+    /// Comma-separated list of every valid policy name (for error messages
+    /// and CLI help).
+    pub fn names() -> String {
+        Policy::all().iter().map(|p| p.name()).collect::<Vec<_>>().join(", ")
+    }
+
+    /// Does this policy need the device runtime (i.e. offload anything)?
     pub fn needs_runtime(&self) -> bool {
         !matches!(self, Policy::SerialR | Policy::SerialNative)
     }
@@ -128,33 +136,49 @@ pub trait CycleEngine {
     fn bnorm(&self) -> f64;
 }
 
-/// Build the engine for `policy` over dense `(a, b)` with restart `m`.
+/// Build the engine for `policy` over `(a, b)` with restart `m`.  The
+/// system matrix stays in whatever format the workload provided — nothing
+/// on this path densifies a CSR system.
 ///
 /// `runtime` may be `None` for the serial policies; GPU policies fail fast
-/// with a helpful message if it is missing.
+/// with a message enumerating the valid policy names if it is missing.
 pub fn build_engine(
     policy: Policy,
-    a: DenseMatrix,
+    a: SystemMatrix,
     b: Vec<f64>,
     m: usize,
     runtime: Option<Rc<Runtime>>,
     trace: bool,
 ) -> Result<Box<dyn CycleEngine>> {
-    use providers::{DeviceResidentMatVec, DeviceTransferMatVec, HostMode, NativeMatVec, RVecMatVec};
+    use providers::{
+        DeviceResidentMatVec, DeviceTransferMatVec, HostMode, NativeMatVec, NativeSpMV,
+        RVecMatVec,
+    };
     let mk_rt = || {
-        runtime
-            .clone()
-            .ok_or_else(|| anyhow::anyhow!("policy {policy} needs the PJRT runtime (artifacts)"))
+        runtime.clone().ok_or_else(|| {
+            anyhow::anyhow!(
+                "policy `{policy}` needs the device runtime and none was provided; \
+                 serial-r and serial-native run without one \
+                 (valid policies: {})",
+                Policy::names()
+            )
+        })
     };
     match policy {
         Policy::SerialR => {
             let mv = RVecMatVec::new(a);
             Ok(Box::new(HostCycleEngine::new(policy, mv, b, m, HostMode::RSemantics, trace)?))
         }
-        Policy::SerialNative => {
-            let mv = NativeMatVec::new(a);
-            Ok(Box::new(HostCycleEngine::new(policy, mv, b, m, HostMode::Native, trace)?))
-        }
+        Policy::SerialNative => match a {
+            SystemMatrix::Dense(d) => {
+                let mv = NativeMatVec::new(d);
+                Ok(Box::new(HostCycleEngine::new(policy, mv, b, m, HostMode::Native, trace)?))
+            }
+            SystemMatrix::Csr(c) => {
+                let mv = NativeSpMV::new(c);
+                Ok(Box::new(HostCycleEngine::new(policy, mv, b, m, HostMode::Native, trace)?))
+            }
+        },
         Policy::GmatrixLike => {
             let mv = DeviceResidentMatVec::new(mk_rt()?, a)?;
             Ok(Box::new(HostCycleEngine::new(policy, mv, b, m, HostMode::RSemantics, trace)?))
@@ -180,6 +204,23 @@ mod tests {
     }
 
     #[test]
+    fn policy_parse_is_case_insensitive() {
+        assert_eq!(Policy::parse("GPUR"), Some(Policy::GpurVclLike));
+        assert_eq!(Policy::parse("GmAtRiX"), Some(Policy::GmatrixLike));
+        assert_eq!(Policy::parse("Serial-R"), Some(Policy::SerialR));
+        assert_eq!(Policy::parse("NATIVE"), Some(Policy::SerialNative));
+        assert_eq!(Policy::parse("VCL"), Some(Policy::GpurVclLike));
+    }
+
+    #[test]
+    fn names_enumerates_all_policies() {
+        let names = Policy::names();
+        for p in Policy::all() {
+            assert!(names.contains(p.name()), "{names} missing {p}");
+        }
+    }
+
+    #[test]
     fn runtime_requirements() {
         assert!(!Policy::SerialR.needs_runtime());
         assert!(Policy::GpurVclLike.needs_runtime());
@@ -187,9 +228,29 @@ mod tests {
     }
 
     #[test]
-    fn gpu_policy_build_without_runtime_fails() {
-        let a = DenseMatrix::identity(4);
-        let err = build_engine(Policy::GmatrixLike, a, vec![1.0; 4], 2, None, false);
-        assert!(err.is_err());
+    fn gpu_policy_build_without_runtime_fails_with_policy_list() {
+        let a = SystemMatrix::Dense(crate::linalg::DenseMatrix::identity(4));
+        let err = build_engine(Policy::GmatrixLike, a, vec![1.0; 4], 2, None, false)
+            .err()
+            .expect("must fail without a runtime");
+        let msg = format!("{err:#}");
+        for p in Policy::all() {
+            assert!(msg.contains(p.name()), "error must list `{p}`: {msg}");
+        }
+    }
+
+    #[test]
+    fn csr_and_dense_build_through_every_policy() {
+        let rt = Rc::new(Runtime::native());
+        let csr = crate::linalg::generators::laplacian_1d(12);
+        let dense = csr.to_dense();
+        let b = vec![1.0; 12];
+        for p in Policy::all() {
+            for a in [SystemMatrix::Csr(csr.clone()), SystemMatrix::Dense(dense.clone())] {
+                let e = build_engine(p, a, b.clone(), 4, Some(rt.clone()), false).unwrap();
+                assert_eq!(e.n(), 12);
+                assert_eq!(e.policy(), p);
+            }
+        }
     }
 }

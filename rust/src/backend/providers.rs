@@ -2,17 +2,26 @@
 //! the host-op mode.  The host-orchestrated engines compose one provider
 //! with one host mode; the full matrix of combinations is what Table 1
 //! varies.
+//!
+//! Every provider is format-aware: the device providers hold a
+//! [`SystemMatrix`] and charge nnz-sized transfers/kernels for CSR systems
+//! (the modeled charges route through [`crate::device::costs`], the same
+//! table the analytic replay uses, so engines and replay cannot drift);
+//! the host side has a dense [`NativeMatVec`], a sparse [`NativeSpMV`]
+//! with a chunked multi-threaded path, and the R-semantics [`RVecMatVec`]
+//! over either format.
 
 use std::rc::Rc;
 
 use anyhow::anyhow;
 
-use crate::device::DeviceSim;
-use crate::linalg::{DenseMatrix, LinearOperator};
-use crate::runtime::Runtime;
+use crate::device::{costs, DeviceSim};
+use crate::linalg::{CsrMatrix, DenseMatrix, LinearOperator, SystemMatrix, SystemShape};
+use crate::runtime::{DeviceBuffer, Executable, Literal, Runtime};
 use crate::Result;
 
 use super::rvec;
+use super::Policy;
 
 /// How host-side vector work is executed / charged.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,11 +44,19 @@ pub trait MatVecProvider {
     fn resident_bytes(&self) -> usize;
 }
 
+/// The executable name a matvec of this shape dispatches to.
+fn matvec_exe_name(a: &SystemMatrix) -> String {
+    match a {
+        SystemMatrix::Dense(_) => format!("gemv_{}", a.n()),
+        SystemMatrix::Csr(_) => format!("spmv_{}", a.n()),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Host providers
 // ---------------------------------------------------------------------------
 
-/// Native compiled matvec (the tuned-library baseline).
+/// Native compiled dense matvec (the tuned-library baseline).
 pub struct NativeMatVec {
     a: DenseMatrix,
     /// preallocated output to keep the hot loop allocation-free
@@ -68,25 +85,98 @@ impl MatVecProvider for NativeMatVec {
     }
 }
 
-/// Interpreted-R matvec (`A %*% v` -> reference dgemv), modeled via HostSpec.
+/// Stored-entry count below which the chunked SpMV stays single-threaded.
+/// The sweep is nnz-proportional (a low-fill stencil at large n is still a
+/// tiny sweep), so the gate is on nnz — not rows — to keep thread
+/// spawn/join from dwarfing the work it parallelizes.
+pub const SPMV_PARALLEL_MIN_NNZ: usize = 1 << 20;
+
+/// Native CSR matvec: cache-friendly row-major sweep, with a chunked
+/// multi-threaded path (`std::thread::scope` over contiguous row blocks)
+/// once the system is large enough to amortize spawning.  Row blocks are
+/// computed independently, so the parallel result is bit-identical to the
+/// serial one.
+pub struct NativeSpMV {
+    a: CsrMatrix,
+    y: Vec<f64>,
+    threads: usize,
+    parallel_min_nnz: usize,
+}
+
+impl NativeSpMV {
+    pub fn new(a: CsrMatrix) -> Self {
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let n = a.nrows();
+        Self { a, y: vec![0.0; n], threads, parallel_min_nnz: SPMV_PARALLEL_MIN_NNZ }
+    }
+
+    /// Override the worker count (tests pin this to exercise both paths).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Override the parallelism threshold (tests/tuning).
+    pub fn with_parallel_min_nnz(mut self, nnz: usize) -> Self {
+        self.parallel_min_nnz = nnz;
+        self
+    }
+
+    fn compute(&mut self, x: &[f64]) {
+        let n = self.a.nrows();
+        if self.threads <= 1 || self.a.nnz() < self.parallel_min_nnz || n < 2 {
+            self.a.apply_rows_into(0, x, &mut self.y);
+            return;
+        }
+        let a = &self.a;
+        let chunk = (n + self.threads - 1) / self.threads;
+        std::thread::scope(|s| {
+            for (ci, yc) in self.y.chunks_mut(chunk).enumerate() {
+                let start = ci * chunk;
+                s.spawn(move || a.apply_rows_into(start, x, yc));
+            }
+        });
+    }
+}
+
+impl MatVecProvider for NativeSpMV {
+    fn n(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn matvec(&mut self, x: &[f64], _sim: &mut DeviceSim) -> Result<Vec<f64>> {
+        self.compute(x);
+        Ok(self.y.clone())
+    }
+
+    fn resident_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Interpreted-R matvec (`A %*% v` -> reference dgemv for dense, Matrix
+/// package SpMV for CSR), modeled via HostSpec.
 pub struct RVecMatVec {
-    a: DenseMatrix,
+    a: SystemMatrix,
 }
 
 impl RVecMatVec {
-    pub fn new(a: DenseMatrix) -> Self {
-        Self { a }
+    pub fn new(a: impl Into<SystemMatrix>) -> Self {
+        Self { a: a.into() }
     }
 }
 
 impl MatVecProvider for RVecMatVec {
     fn n(&self) -> usize {
-        self.a.nrows()
+        self.a.n()
     }
 
     fn matvec(&mut self, x: &[f64], sim: &mut DeviceSim) -> Result<Vec<f64>> {
-        sim.host_gemv(self.a.nrows(), self.a.ncols());
-        Ok(rvec::matvec(&self.a, x))
+        costs::charge_matvec(sim, Policy::SerialR, &self.a.shape());
+        Ok(match &self.a {
+            SystemMatrix::Dense(d) => rvec::matvec(d, x),
+            SystemMatrix::Csr(c) => rvec::spmv(c, x),
+        })
     }
 
     fn resident_bytes(&self) -> usize {
@@ -99,34 +189,44 @@ impl MatVecProvider for RVecMatVec {
 // ---------------------------------------------------------------------------
 
 /// `gmatrix` policy: A uploaded once as a device buffer; per call the input
-/// vector goes up (8N) and the result comes down (8N).
+/// vector goes up (8N) and the result comes down (8N).  A CSR system
+/// uploads its nnz-sized device layout instead of the dense 8N² buffer.
 pub struct DeviceResidentMatVec {
     rt: Rc<Runtime>,
-    exe: Rc<xla::PjRtLoadedExecutable>,
-    a_buf: xla::PjRtBuffer,
-    n: usize,
+    exe: Rc<Executable>,
+    a_buf: DeviceBuffer,
+    shape: SystemShape,
     uploaded: bool,
 }
 
 impl DeviceResidentMatVec {
-    pub fn new(rt: Rc<Runtime>, a: DenseMatrix) -> Result<Self> {
-        let n = a.nrows();
-        if a.ncols() != n {
-            return Err(anyhow!("square systems only, got {}x{}", n, a.ncols()));
+    pub fn new(rt: Rc<Runtime>, a: SystemMatrix) -> Result<Self> {
+        let n = a.n();
+        if !a.is_square() {
+            return Err(anyhow!("square systems only, got order {n} non-square"));
         }
-        let exe = rt.load(&format!("gemv_{n}"))?;
-        let a_buf = rt.upload_matrix(&a)?;
-        Ok(Self { rt, exe, a_buf, n, uploaded: false })
+        let exe = rt.load(&matvec_exe_name(&a))?;
+        let shape = a.shape();
+        let a_buf = match &a {
+            SystemMatrix::Dense(d) => rt.upload_matrix(d)?,
+            SystemMatrix::Csr(c) => rt.upload_csr(c)?,
+        };
+        Ok(Self { rt, exe, a_buf, shape, uploaded: false })
     }
 
     /// Charge the one-time upload + residency (done lazily on first matvec
-    /// so the engine constructor can own the sim).
+    /// so the engine constructor can own the sim).  Fails fast when the
+    /// matrix cannot fit the modeled card.
     fn charge_upload_once(&mut self, sim: &mut DeviceSim) -> Result<()> {
         if !self.uploaded {
-            let bytes = 8 * self.n * self.n;
-            sim.alloc(bytes).map_err(|e| anyhow!("device alloc A: {e}"))?;
-            sim.r_call();
-            sim.h2d(bytes);
+            let bytes = self.shape.matrix_device_bytes();
+            if !sim.would_fit(bytes) {
+                return Err(anyhow!(
+                    "device alloc A ({bytes} B, format {}) exceeds device memory",
+                    self.shape.format
+                ));
+            }
+            costs::charge_matrix_upload(sim, &self.shape);
             self.uploaded = true;
         }
         Ok(())
@@ -135,16 +235,13 @@ impl DeviceResidentMatVec {
 
 impl MatVecProvider for DeviceResidentMatVec {
     fn n(&self) -> usize {
-        self.n
+        self.shape.n
     }
 
     fn matvec(&mut self, x: &[f64], sim: &mut DeviceSim) -> Result<Vec<f64>> {
         self.charge_upload_once(sim)?;
         // modeled: R->CUDA call dispatch, vector up, kernel, result down
-        sim.r_call();
-        sim.h2d(8 * self.n);
-        sim.kernel_gemv(self.n, self.n);
-        sim.d2h(8 * self.n);
+        costs::charge_matvec(sim, Policy::GmatrixLike, &self.shape);
         // measured: really upload the vector, execute with the resident A
         let x_buf = self.rt.upload_vector(x)?;
         let out = self.rt.execute_buffers(&self.exe, &[&self.a_buf, &x_buf])?;
@@ -152,57 +249,59 @@ impl MatVecProvider for DeviceResidentMatVec {
     }
 
     fn resident_bytes(&self) -> usize {
-        8 * self.n * self.n
+        self.shape.matrix_device_bytes()
     }
 }
 
 /// `gputools` policy: `gpuMatMult(A, v)` — A and v cross the bus on EVERY
-/// call, result comes back; nothing stays resident.
+/// call, result comes back; nothing stays resident.  The per-call matrix
+/// staging is format-sized: 8N² dense, nnz-sized CSR.
 pub struct DeviceTransferMatVec {
     rt: Rc<Runtime>,
-    exe: Rc<xla::PjRtLoadedExecutable>,
+    exe: Rc<Executable>,
     /// Host-side literal of A, re-staged to the device on every call.
-    a_lit: xla::Literal,
-    n: usize,
+    a_lit: Literal,
+    shape: SystemShape,
 }
 
 impl DeviceTransferMatVec {
-    pub fn new(rt: Rc<Runtime>, a: DenseMatrix) -> Result<Self> {
-        let n = a.nrows();
-        if a.ncols() != n {
-            return Err(anyhow!("square systems only, got {}x{}", n, a.ncols()));
+    pub fn new(rt: Rc<Runtime>, a: SystemMatrix) -> Result<Self> {
+        let n = a.n();
+        if !a.is_square() {
+            return Err(anyhow!("square systems only, got order {n} non-square"));
         }
-        let exe = rt.load(&format!("gemv_{n}"))?;
-        let a_lit = Runtime::matrix_literal(&a)?;
-        Ok(Self { rt, exe, a_lit, n })
+        let exe = rt.load(&matvec_exe_name(&a))?;
+        let shape = a.shape();
+        let a_lit = match &a {
+            SystemMatrix::Dense(d) => Runtime::matrix_literal(d)?,
+            SystemMatrix::Csr(c) => Runtime::csr_literal(c),
+        };
+        Ok(Self { rt, exe, a_lit, shape })
     }
 }
 
 impl MatVecProvider for DeviceTransferMatVec {
     fn n(&self) -> usize {
-        self.n
+        self.shape.n
     }
 
     fn matvec(&mut self, x: &[f64], sim: &mut DeviceSim) -> Result<Vec<f64>> {
+        // fail fast when the transient working set cannot fit the card
+        let transient = self.shape.matrix_device_bytes() + 8 * self.shape.n;
+        if !sim.would_fit(transient) {
+            return Err(anyhow!(
+                "transient device alloc ({transient} B, format {}) exceeds device memory",
+                self.shape.format
+            ));
+        }
         // modeled: transient A allocation + R->CUDA dispatch + full A and v
         // upload per call (`gpuMatMult(A, v)`)
-        let a_bytes = 8 * self.n * self.n;
-        let id = sim.alloc(a_bytes + 8 * self.n).map_err(|e| anyhow!("device alloc: {e}"))?;
-        sim.r_call();
-        sim.h2d(a_bytes);
-        sim.h2d(8 * self.n);
-        sim.kernel_gemv(self.n, self.n);
-        sim.d2h(8 * self.n);
-        sim.release(id).map_err(|e| anyhow!("release: {e}"))?;
-        // measured: execute from host literals (PJRT copies them in — the
-        // real transfer-everything cost on this testbed)
+        costs::charge_matvec(sim, Policy::GputoolsLike, &self.shape);
+        // measured: execute from host literals (the literal handle is a
+        // cheap refcount clone, but every execute re-stages the payload —
+        // the transfer-everything behaviour being reproduced)
         let x_lit = Runtime::vector_literal(x);
-        // Literal clone of A is cheap (refcount) but execute() re-stages it
-        // on device each call, which is the behaviour being reproduced.
-        let out = self.rt.execute_literals(
-            &self.exe,
-            &[self.a_lit.clone(), x_lit],
-        )?;
+        let out = self.rt.execute_literals(&self.exe, &[self.a_lit.clone(), x_lit])?;
         Runtime::tuple1_vec(out)
     }
 
@@ -214,6 +313,7 @@ impl MatVecProvider for DeviceTransferMatVec {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::generators;
 
     #[test]
     fn native_matvec_matches_operator() {
@@ -228,6 +328,30 @@ mod tests {
     }
 
     #[test]
+    fn native_spmv_serial_and_parallel_agree() {
+        let a = generators::convection_diffusion_1d(5000, 4.0);
+        let n = a.nrows();
+        let x = generators::random_vector(n, 5);
+        let mut sim = DeviceSim::paper_testbed(false);
+        let serial = NativeSpMV::new(a.clone()).with_threads(1).matvec(&x, &mut sim).unwrap();
+        let parallel = NativeSpMV::new(a)
+            .with_threads(4)
+            .with_parallel_min_nnz(1) // force the chunked path
+            .matvec(&x, &mut sim)
+            .unwrap();
+        assert_eq!(serial, parallel, "row-block parallelism must be bit-identical");
+        assert_eq!(sim.elapsed(), 0.0, "native spmv models zero time");
+    }
+
+    #[test]
+    fn native_spmv_low_fill_stays_serial_by_default() {
+        // a stencil system's nnz is far below the parallel gate even at
+        // large n — the provider must not spawn threads for it
+        let a = generators::convection_diffusion_1d(100_000, 4.0);
+        assert!(a.nnz() < SPMV_PARALLEL_MIN_NNZ);
+    }
+
+    #[test]
     fn rvec_matvec_charges_host_time() {
         let a = DenseMatrix::identity(8);
         let x = vec![1.0; 8];
@@ -236,5 +360,45 @@ mod tests {
         let y = mv.matvec(&x, &mut sim).unwrap();
         assert_eq!(y, x);
         assert!(sim.elapsed() > 0.0);
+    }
+
+    #[test]
+    fn rvec_sparse_charges_less_than_dense() {
+        let csr = generators::laplacian_1d(200);
+        let dense = csr.to_dense();
+        let x = generators::random_vector(200, 2);
+
+        let mut sim_s = DeviceSim::paper_testbed(false);
+        let ys = RVecMatVec::new(csr).matvec(&x, &mut sim_s).unwrap();
+        let mut sim_d = DeviceSim::paper_testbed(false);
+        let yd = RVecMatVec::new(dense).matvec(&x, &mut sim_d).unwrap();
+
+        assert_eq!(ys, yd, "same system, same values");
+        assert!(
+            sim_s.elapsed() < sim_d.elapsed(),
+            "sparse host matvec must charge nnz-propotional time"
+        );
+    }
+
+    #[test]
+    fn device_providers_run_both_formats() {
+        let rt = Rc::new(Runtime::native());
+        let csr = generators::laplacian_1d(10);
+        let expect_csr = csr.apply(&vec![1.0; 10]);
+        let dense = generators::dense_shifted_random(10, 12.0, 3);
+        let expect_dense = dense.apply(&vec![1.0; 10]);
+
+        let mut sim = DeviceSim::paper_testbed(false);
+        let mut r1 = DeviceResidentMatVec::new(rt.clone(), SystemMatrix::Csr(csr.clone())).unwrap();
+        assert_eq!(r1.matvec(&vec![1.0; 10], &mut sim).unwrap(), expect_csr);
+        assert_eq!(r1.resident_bytes(), SystemShape::csr(10, csr.nnz()).matrix_device_bytes());
+
+        let mut r2 =
+            DeviceTransferMatVec::new(rt.clone(), SystemMatrix::Dense(dense.clone())).unwrap();
+        assert_eq!(r2.matvec(&vec![1.0; 10], &mut sim).unwrap(), expect_dense);
+        assert_eq!(r2.resident_bytes(), 0);
+
+        let mut r3 = DeviceTransferMatVec::new(rt, SystemMatrix::Csr(csr)).unwrap();
+        assert_eq!(r3.matvec(&vec![1.0; 10], &mut sim).unwrap(), expect_csr);
     }
 }

@@ -90,6 +90,17 @@ pub fn matvec(a: &crate::linalg::DenseMatrix, x: &[f64]) -> Vec<f64> {
     y
 }
 
+/// `A %*% x` for a CSR matrix, as the R `Matrix` package evaluates it: a
+/// call into compiled C doing the plain per-row accumulation, allocating
+/// the result (same nonzero visit order as the native CSR apply, so dense
+/// and sparse solves of the same system agree bit-for-bit on this path).
+pub fn spmv(a: &crate::linalg::CsrMatrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), a.ncols());
+    let mut y = vec![0.0; a.nrows()];
+    a.apply_rows_into(0, x, &mut y);
+    y
+}
+
 /// Bytes of memory traffic an R vecop of length n generates (read inputs +
 /// write the fresh result) — the quantity charged to the host cost model.
 pub fn vecop_bytes(n_inputs: usize, n: usize) -> usize {
@@ -119,6 +130,13 @@ mod tests {
         let x = vec![1.0, -1.0, 2.0, 0.0, 3.0];
         let expect = crate::linalg::LinearOperator::apply(&a, &x);
         assert_eq!(matvec(&a, &x), expect);
+    }
+
+    #[test]
+    fn spmv_matches_dense_matvec() {
+        let a = crate::linalg::generators::laplacian_1d(9);
+        let x: Vec<f64> = (0..9).map(|i| (i as f64) - 4.0).collect();
+        assert_eq!(spmv(&a, &x), matvec(&a.to_dense(), &x));
     }
 
     #[test]

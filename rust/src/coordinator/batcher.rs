@@ -11,13 +11,17 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::backend::Policy;
+use crate::linalg::MatrixFormat;
 
-/// Batch compatibility key.
+/// Batch compatibility key.  Format is part of compatibility: a resident
+/// dense `gemv` executable cannot serve a CSR job and vice versa, so the
+/// device only switches layout between batches, never inside one.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub policy: Policy,
     pub n: usize,
     pub m: usize,
+    pub format: MatrixFormat,
 }
 
 /// A queued item with arrival time.
@@ -111,7 +115,21 @@ mod tests {
     use super::*;
 
     fn key(n: usize) -> BatchKey {
-        BatchKey { policy: Policy::GmatrixLike, n, m: 30 }
+        BatchKey { policy: Policy::GmatrixLike, n, m: 30, format: MatrixFormat::Dense }
+    }
+
+    #[test]
+    fn format_splits_batches() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 10, max_age: Duration::ZERO });
+        b.push(key(100), 1);
+        b.push(BatchKey { format: MatrixFormat::Csr, ..key(100) }, 2);
+        b.push(key(100), 3);
+        let (k, batch) = b.next_batch().unwrap();
+        assert_eq!(k.format, MatrixFormat::Dense);
+        assert_eq!(batch.iter().map(|p| p.item).collect::<Vec<_>>(), vec![1, 3]);
+        let (k2, batch2) = b.next_batch().unwrap();
+        assert_eq!(k2.format, MatrixFormat::Csr);
+        assert_eq!(batch2.len(), 1);
     }
 
     #[test]

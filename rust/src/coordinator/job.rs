@@ -1,9 +1,8 @@
 //! Solve-request / response types.
 
-
 use crate::backend::Policy;
 use crate::gmres::{GmresConfig, SolveReport};
-use crate::linalg::{generators, DenseMatrix, LinearOperator};
+use crate::linalg::{generators, DenseMatrix, LinearOperator, MatrixFormat, SystemMatrix, SystemShape};
 
 /// Unique request id.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -16,13 +15,20 @@ impl std::fmt::Display for JobId {
 }
 
 /// How the worker materializes the system matrix — requests stay small and
-/// `Send` even for N=10000 workloads.
+/// `Send` even for N=10000 workloads, and they carry the storage *format*
+/// so the router, batcher and cost model reason about what will actually
+/// cross the bus (nnz-sized for CSR) without materializing anything.
 #[derive(Clone, Debug)]
 pub enum MatrixSpec {
     /// The Table-1 dense diagonally-dominant ensemble.
     Table1 { n: usize, seed: u64 },
-    /// 2-D convection–diffusion (densified for device policies).
-    ConvectionDiffusion { nx: usize, ny: usize, cx: f64, cy: f64 },
+    /// 2-D convection–diffusion in the requested format (CSR stays CSR all
+    /// the way through the solve; Dense is the explicit dense-benchmark
+    /// comparison).
+    ConvectionDiffusion { nx: usize, ny: usize, cx: f64, cy: f64, format: MatrixFormat },
+    /// 1-D convection–diffusion of exact order `n` (the sparse sweep
+    /// workload).
+    ConvDiff1d { n: usize, seed: u64 },
     /// Explicit dense payload (row-major).
     Dense { n: usize, data: Vec<f64> },
 }
@@ -32,29 +38,66 @@ impl MatrixSpec {
         match self {
             MatrixSpec::Table1 { n, .. } => *n,
             MatrixSpec::ConvectionDiffusion { nx, ny, .. } => nx * ny,
+            MatrixSpec::ConvDiff1d { n, .. } => *n,
             MatrixSpec::Dense { n, .. } => *n,
         }
     }
 
+    /// Storage format of the materialized matrix.
+    pub fn format(&self) -> MatrixFormat {
+        match self {
+            MatrixSpec::Table1 { .. } | MatrixSpec::Dense { .. } => MatrixFormat::Dense,
+            MatrixSpec::ConvectionDiffusion { format, .. } => *format,
+            MatrixSpec::ConvDiff1d { .. } => MatrixFormat::Csr,
+        }
+    }
+
+    /// Shape metadata for routing/admission — exact without materializing:
+    /// the 5-point stencil stores `5·n − 2(nx+ny)` entries, the 1-D stencil
+    /// `3n − 2`.
+    pub fn shape(&self) -> SystemShape {
+        let n = self.order();
+        match self {
+            MatrixSpec::Table1 { .. } | MatrixSpec::Dense { .. } => SystemShape::dense(n),
+            MatrixSpec::ConvectionDiffusion { nx, ny, format, .. } => match format {
+                MatrixFormat::Dense => SystemShape::dense(n),
+                MatrixFormat::Csr => SystemShape::csr(n, 5 * n - 2 * (nx + ny)),
+            },
+            MatrixSpec::ConvDiff1d { .. } => SystemShape::csr(n, 3 * n - 2),
+        }
+    }
+
     /// Materialize `(A, b)`.  `b` comes with the spec's ensemble (Table1)
-    /// or is a deterministic random RHS otherwise.
-    pub fn materialize(&self) -> (DenseMatrix, Vec<f64>) {
+    /// or is derived from a deterministic known solution otherwise.
+    pub fn materialize(&self) -> (SystemMatrix, Vec<f64>) {
         match self {
             MatrixSpec::Table1 { n, seed } => {
                 let (a, b, _) = generators::table1_system(*n, *seed);
-                (a, b)
+                (SystemMatrix::Dense(a), b)
             }
-            MatrixSpec::ConvectionDiffusion { nx, ny, cx, cy } => {
-                let a = generators::convection_diffusion_2d(*nx, *ny, *cx, *cy).to_dense();
-                let n = a.nrows();
+            MatrixSpec::ConvectionDiffusion { nx, ny, cx, cy, format } => {
+                let csr = generators::convection_diffusion_2d(*nx, *ny, *cx, *cy);
+                let n = csr.nrows();
                 let x = generators::random_vector(n, 17);
-                let b = a.apply(&x);
-                (a, b)
+                let b = csr.apply(&x);
+                match format {
+                    MatrixFormat::Csr => (SystemMatrix::Csr(csr), b),
+                    MatrixFormat::Dense => (
+                        SystemMatrix::Dense(generators::convection_diffusion_2d_dense(
+                            *nx, *ny, *cx, *cy,
+                        )),
+                        b,
+                    ),
+                }
+            }
+            MatrixSpec::ConvDiff1d { n, seed } => {
+                let (a, b, _) = generators::convdiff_1d_system(*n, *seed);
+                (SystemMatrix::Csr(a), b)
             }
             MatrixSpec::Dense { n, data } => {
                 let a = DenseMatrix::from_vec(*n, *n, data.clone());
                 let b = generators::random_vector(*n, 23);
-                (a, b)
+                (SystemMatrix::Dense(a), b)
             }
         }
     }
@@ -72,6 +115,15 @@ pub struct SolveRequest {
 impl SolveRequest {
     pub fn table1(n: usize, seed: u64) -> Self {
         Self { matrix: MatrixSpec::Table1 { n, seed }, config: GmresConfig::default(), policy: None }
+    }
+
+    /// A sparse 1-D convection–diffusion request of exact order `n`.
+    pub fn sparse(n: usize, seed: u64) -> Self {
+        Self {
+            matrix: MatrixSpec::ConvDiff1d { n, seed },
+            config: GmresConfig::default(),
+            policy: None,
+        }
     }
 }
 
@@ -96,12 +148,52 @@ mod tests {
     #[test]
     fn specs_materialize_consistent_shapes() {
         let (a, b) = MatrixSpec::Table1 { n: 32, seed: 0 }.materialize();
-        assert_eq!(a.nrows(), 32);
+        assert_eq!(a.n(), 32);
         assert_eq!(b.len(), 32);
-        let spec = MatrixSpec::ConvectionDiffusion { nx: 4, ny: 5, cx: 1.0, cy: 0.0 };
+        let spec = MatrixSpec::ConvectionDiffusion {
+            nx: 4,
+            ny: 5,
+            cx: 1.0,
+            cy: 0.0,
+            format: MatrixFormat::Csr,
+        };
         assert_eq!(spec.order(), 20);
         let (a, b) = spec.materialize();
-        assert_eq!((a.nrows(), b.len()), (20, 20));
+        assert_eq!((a.n(), b.len()), (20, 20));
+        assert_eq!(a.format(), MatrixFormat::Csr);
+    }
+
+    #[test]
+    fn spec_shape_matches_materialized_matrix() {
+        let specs = [
+            MatrixSpec::Table1 { n: 16, seed: 1 },
+            MatrixSpec::ConvectionDiffusion {
+                nx: 6,
+                ny: 7,
+                cx: 2.0,
+                cy: 1.0,
+                format: MatrixFormat::Csr,
+            },
+            MatrixSpec::ConvDiff1d { n: 25, seed: 2 },
+        ];
+        for spec in specs {
+            let predicted = spec.shape();
+            let (a, _) = spec.materialize();
+            assert_eq!(predicted, a.shape(), "spec {spec:?}");
+        }
+    }
+
+    #[test]
+    fn dense_and_csr_convdiff_share_rhs() {
+        let mk = |format| MatrixSpec::ConvectionDiffusion { nx: 5, ny: 5, cx: 3.0, cy: 1.0, format };
+        let (ad, bd) = mk(MatrixFormat::Dense).materialize();
+        let (ac, bc) = mk(MatrixFormat::Csr).materialize();
+        assert_eq!(bd, bc, "both formats solve the same system");
+        assert_eq!(ad.format(), MatrixFormat::Dense);
+        assert_eq!(ac.format(), MatrixFormat::Csr);
+        let x = generators::random_vector(25, 3);
+        let d = crate::linalg::vector::max_abs_diff(&ad.apply(&x), &ac.apply(&x));
+        assert!(d < 1e-10, "formats must agree on the operator (diff {d})");
     }
 
     #[test]
@@ -109,7 +201,10 @@ mod tests {
         let data = vec![1.0, 0.0, 0.0, 1.0];
         let spec = MatrixSpec::Dense { n: 2, data: data.clone() };
         let (a, _) = spec.materialize();
-        assert_eq!(a.data(), &data[..]);
+        match a {
+            SystemMatrix::Dense(d) => assert_eq!(d.data(), &data[..]),
+            other => panic!("expected dense, got {other:?}"),
+        }
     }
 
     #[test]
@@ -117,5 +212,7 @@ mod tests {
         let r = SolveRequest::table1(64, 1);
         assert!(r.policy.is_none());
         assert_eq!(r.config.m, 30);
+        let s = SolveRequest::sparse(64, 1);
+        assert_eq!(s.matrix.format(), MatrixFormat::Csr);
     }
 }

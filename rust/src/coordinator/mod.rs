@@ -11,13 +11,14 @@
 //!   whose working set exceeds the card falls back to the host — the
 //!   paper's capacity cap, turned into scheduling logic), and auto-selects
 //!   the modeled-fastest policy otherwise.
-//! * **[`batcher`]** — groups queued device jobs by `(policy, n, m)` so one
-//!   compiled executable and one resident matrix serve a whole batch.
-//! * **[`worker`]** — a dedicated *device thread* owning the PJRT runtime
-//!   (one GPU, one stream; `PjRtLoadedExecutable` is not `Send`) plus a CPU
-//!   pool for serial jobs.
-//! * **[`service`]** — the tokio facade: `submit().await`, graceful
-//!   shutdown, metrics.
+//! * **[`batcher`]** — groups queued device jobs by `(policy, n, m,
+//!   format)` so one compiled executable and one resident matrix (dense or
+//!   CSR — never mixed in a batch) serve a whole batch.
+//! * **[`worker`]** — a dedicated *device thread* owning the (deliberately
+//!   `!Send`, single-stream) device runtime plus a CPU pool for serial
+//!   jobs.
+//! * **[`service`]** — the blocking facade: `submit`, graceful shutdown,
+//!   metrics.
 
 pub mod batcher;
 pub mod job;

@@ -6,11 +6,16 @@
 //! control*: a request whose working set does not fit the card is
 //! downgraded to the serial host backend instead of failing — and that
 //! decision is visible in the response (`downgraded`).
-
+//!
+//! Admission and auto-selection are [`SystemShape`]-aware: a sparse job is
+//! budgeted by its nnz-sized device layout and priced by the SpMV cost
+//! model, so CSR systems admit (and route sensibly) at orders whose dense
+//! form would be rejected outright.
 
 use crate::backend::Policy;
 use crate::device::memory::working_set_bytes;
 use crate::device::GpuSpec;
+use crate::linalg::SystemShape;
 use crate::report::model;
 
 use super::job::SolveRequest;
@@ -65,21 +70,21 @@ impl Router {
         &self.config
     }
 
-    /// Admission test for one policy at order n, restart m.
-    pub fn admits(&self, policy: Policy, n: usize, m: usize) -> bool {
+    /// Admission test for one policy over a system shape, restart m.
+    pub fn admits(&self, policy: Policy, shape: &SystemShape, m: usize) -> bool {
         let budget = (self.config.gpu.mem_capacity as f64 * self.config.mem_fraction) as usize;
-        working_set_bytes(n, m, policy) <= budget
+        working_set_bytes(shape, m, policy) <= budget
     }
 
     /// Auto-select the modeled-fastest admissible policy.
-    pub fn auto_policy(&self, n: usize, m: usize) -> Policy {
+    pub fn auto_policy(&self, shape: &SystemShape, m: usize) -> Policy {
         let mut best = self.config.fallback;
-        let mut best_t = model::predict_seconds(best, n, m, self.config.assumed_cycles);
+        let mut best_t = model::predict_seconds(best, shape, m, self.config.assumed_cycles);
         for p in Policy::gpu_policies() {
-            if !self.admits(p, n, m) {
+            if !self.admits(p, shape, m) {
                 continue;
             }
-            let t = model::predict_seconds(p, n, m, self.config.assumed_cycles);
+            let t = model::predict_seconds(p, shape, m, self.config.assumed_cycles);
             if t < best_t {
                 best = p;
                 best_t = t;
@@ -90,18 +95,18 @@ impl Router {
 
     /// Route a request.
     pub fn route(&self, req: &SolveRequest) -> Route {
-        let n = req.matrix.order();
+        let shape = req.matrix.shape();
         let m = req.config.m;
         match req.policy {
             Some(p) if !p.needs_runtime() => Route { policy: p, downgraded: false },
             Some(p) => {
-                if self.admits(p, n, m) {
+                if self.admits(p, &shape, m) {
                     Route { policy: p, downgraded: false }
                 } else {
                     Route { policy: self.config.fallback, downgraded: true }
                 }
             }
-            None => Route { policy: self.auto_policy(n, m), downgraded: false },
+            None => Route { policy: self.auto_policy(&shape, m), downgraded: false },
         }
     }
 }
@@ -115,6 +120,14 @@ mod tests {
     fn req(n: usize, policy: Option<Policy>) -> SolveRequest {
         SolveRequest {
             matrix: MatrixSpec::Table1 { n, seed: 0 },
+            config: GmresConfig::default(),
+            policy,
+        }
+    }
+
+    fn sparse_req(n: usize, policy: Option<Policy>) -> SolveRequest {
+        SolveRequest {
+            matrix: MatrixSpec::ConvDiff1d { n, seed: 0 },
             config: GmresConfig::default(),
             policy,
         }
@@ -138,6 +151,16 @@ mod tests {
     }
 
     #[test]
+    fn same_order_sparse_request_admits_where_dense_cannot() {
+        // the refactor's payoff: a 20000-order system that downgrades dense
+        // is admitted in CSR because its working set is nnz-sized
+        let r = Router::new(RouterConfig::default());
+        let route = r.route(&sparse_req(20_000, Some(Policy::GpurVclLike)));
+        assert_eq!(route.policy, Policy::GpurVclLike);
+        assert!(!route.downgraded);
+    }
+
+    #[test]
     fn fitting_device_request_admitted() {
         let r = Router::new(RouterConfig::default());
         let route = r.route(&req(5000, Some(Policy::GmatrixLike)));
@@ -155,16 +178,27 @@ mod tests {
     #[test]
     fn auto_never_selects_inadmissible() {
         let r = Router::new(RouterConfig::default());
-        let p = r.auto_policy(50_000, 30);
-        assert!(!p.needs_runtime() || r.admits(p, 50_000, 30));
+        let shape = SystemShape::dense(50_000);
+        let p = r.auto_policy(&shape, 30);
+        assert!(!p.needs_runtime() || r.admits(p, &shape, 30));
+    }
+
+    #[test]
+    fn auto_keeps_small_sparse_on_host() {
+        // a 3-point stencil matvec is microseconds on the host; the ~1 ms
+        // R->CUDA call can never pay for itself at small n
+        let r = Router::new(RouterConfig::default());
+        let route = r.route(&sparse_req(1000, None));
+        assert!(!route.policy.needs_runtime(), "sparse n=1000 must stay serial, got {}", route.policy);
     }
 
     #[test]
     fn mem_fraction_shrinks_admission() {
         let tight = Router::new(RouterConfig { mem_fraction: 0.1, ..Default::default() });
-        // 0.1 * 2GB = 200MB; N=10000 needs 800MB
-        assert!(!tight.admits(Policy::GmatrixLike, 10_000, 30));
+        // 0.1 * 2GB = 200MB; N=10000 dense needs 800MB
+        let dense10k = SystemShape::dense(10_000);
+        assert!(!tight.admits(Policy::GmatrixLike, &dense10k, 30));
         let loose = Router::new(RouterConfig::default());
-        assert!(loose.admits(Policy::GmatrixLike, 10_000, 30));
+        assert!(loose.admits(Policy::GmatrixLike, &dense10k, 30));
     }
 }

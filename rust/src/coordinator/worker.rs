@@ -1,5 +1,5 @@
-//! Worker threads: one *device thread* owning the PJRT runtime (the single
-//! simulated GPU) and a small CPU pool for serial jobs.
+//! Worker threads: one *device thread* owning the device runtime (the
+//! single simulated GPU) and a small CPU pool for serial jobs.
 //!
 //! The device thread batches compatible jobs ([`super::batcher`]) so a
 //! resident executable serves consecutive solves; the CPU pool is plain
@@ -113,6 +113,7 @@ fn push(batcher: &mut Batcher<WorkItem>, item: WorkItem) {
         policy: item.policy,
         n: item.request.matrix.order(),
         m: item.request.config.m,
+        format: item.request.matrix.format(),
     };
     batcher.push(key, item);
 }

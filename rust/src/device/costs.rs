@@ -4,87 +4,120 @@
 //! the full-size Table-1 sweep and the router's auto-selection.
 //!
 //! Keeping one implementation is what makes the replay honest:
-//! `tests/model_consistency.rs` asserts engine clocks equal the replay.
+//! `tests/model_consistency.rs` asserts engine clocks equal the replay —
+//! the live providers call these same functions, so they cannot drift.
 //!
-//! Policy cost anatomy (per GMRES(m) cycle on order-n dense A):
+//! Everything is parameterized by [`SystemShape`], so dense and CSR systems
+//! are priced by what they actually move: a dense matvec uploads/streams
+//! `8n²`-sized buffers, a sparse one nnz-sized CSR arrays with an SpMV
+//! kernel.  Policy cost anatomy (per GMRES(m) cycle):
 //!
-//! * `serial-r`    — every op on the interpreted host: m+2 `%*%` matvecs
-//!   plus ~1.5 m² copy-on-modify vector ops plus the Givens LS.
+//! * `serial-r`    — every op on the interpreted host: m+2 matvecs
+//!   (`%*%` dense, Matrix-package SpMV sparse) plus ~1.5 m² copy-on-modify
+//!   vector ops plus the Givens LS.
 //! * `gmatrix`     — matvec: 8n up, kernel, 8n down + one R->CUDA call
 //!   (`r_call`) each; A uploaded once at setup; host ops as serial-r.
-//! * `gputools`    — matvec: 8n² + 8n up, kernel, 8n down + `r_call` each;
-//!   nothing resident; host ops as serial-r.
+//! * `gputools`    — matvec: whole A (dense 8n², sparse nnz-sized) + 8n up,
+//!   kernel, 8n down + `r_call` each; nothing resident; host ops as
+//!   serial-r.
 //! * `gpuR` (vcl)  — every vector op is a device kernel with a per-op
 //!   asynchronous enqueue overhead (`vcl_dispatch`); state device-resident;
 //!   the small Hessenberg LS runs in R after an O(m²) readback.
 //!
 //! The gpuR policy is deliberately modeled *as gpuR behaves* (one enqueue
-//! per overloaded operator), not as our fused AOT artifact executes (one
+//! per overloaded operator), not as our fused artifact executes (one
 //! dispatch per cycle).  The fused artifact's advantage over per-op vcl is
 //! Ablation E (`benches/bench_runtime.rs`).
 
 use crate::backend::Policy;
+use crate::linalg::{MatrixFormat, SystemShape};
 
 use super::sim::DeviceSim;
 
 /// Replay the modeled charges of one full solve on a fresh paper-testbed
 /// simulator and return the modeled seconds.
-pub fn predict_seconds(policy: Policy, n: usize, m: usize, cycles: usize) -> f64 {
+pub fn predict_seconds(policy: Policy, shape: &SystemShape, m: usize, cycles: usize) -> f64 {
     let mut sim = DeviceSim::paper_testbed(false);
-    charge_solve(&mut sim, policy, n, m, cycles);
+    charge_solve(&mut sim, policy, shape, m, cycles);
     sim.elapsed()
 }
 
 /// Modeled speedup of `policy` vs the serial-R baseline.
-pub fn predict_speedup(policy: Policy, n: usize, m: usize, cycles: usize) -> f64 {
-    predict_seconds(Policy::SerialR, n, m, cycles) / predict_seconds(policy, n, m, cycles)
+pub fn predict_speedup(policy: Policy, shape: &SystemShape, m: usize, cycles: usize) -> f64 {
+    predict_seconds(Policy::SerialR, shape, m, cycles)
+        / predict_seconds(policy, shape, m, cycles)
 }
 
 /// Charge a whole solve onto `sim` (setup + `cycles` cycles).
-pub fn charge_solve(sim: &mut DeviceSim, policy: Policy, n: usize, m: usize, cycles: usize) {
-    charge_setup(sim, policy, n, m);
+pub fn charge_solve(
+    sim: &mut DeviceSim,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    cycles: usize,
+) {
+    charge_setup(sim, policy, shape, m);
     for _ in 0..cycles {
-        charge_cycle(sim, policy, n, m);
+        charge_cycle(sim, policy, shape, m);
     }
 }
 
+/// The one-time residency establishment of the system matrix: device
+/// allocation + one R->CUDA call + the format-sized upload.  Shared by the
+/// gmatrix setup and the resident provider's lazy first-matvec charge.
+pub fn charge_matrix_upload(sim: &mut DeviceSim, shape: &SystemShape) {
+    let bytes = shape.matrix_device_bytes();
+    let _ = sim.alloc(bytes);
+    sim.r_call();
+    sim.h2d(bytes);
+}
+
 /// One-time setup charges (device residency establishment).
-pub fn charge_setup(sim: &mut DeviceSim, policy: Policy, n: usize, m: usize) {
+pub fn charge_setup(sim: &mut DeviceSim, policy: Policy, shape: &SystemShape, m: usize) {
     match policy {
         Policy::SerialR | Policy::SerialNative | Policy::GputoolsLike => {}
-        Policy::GmatrixLike => {
-            let _ = sim.alloc(8 * n * n);
-            sim.r_call();
-            sim.h2d(8 * n * n);
-        }
+        Policy::GmatrixLike => charge_matrix_upload(sim, shape),
         Policy::GpurVclLike => {
-            let bytes = super::memory::working_set_bytes(n, m, policy);
+            let bytes = super::memory::working_set_bytes(shape, m, policy);
             let _ = sim.alloc(bytes);
             sim.r_call();
-            sim.h2d(8 * n * n);
-            sim.h2d(8 * n);
-            sim.h2d(8 * n);
+            sim.h2d(shape.matrix_device_bytes());
+            sim.h2d(8 * shape.n);
+            sim.h2d(8 * shape.n);
         }
+    }
+}
+
+/// The device kernel for one matvec of the given shape.
+fn kernel_matvec(sim: &mut DeviceSim, shape: &SystemShape) {
+    match shape.format {
+        MatrixFormat::Dense => sim.kernel_gemv(shape.n, shape.n),
+        MatrixFormat::Csr => sim.kernel_spmv(shape.nnz, shape.n),
     }
 }
 
 /// One matvec under the policy (host-orchestrated policies only).
-pub fn charge_matvec(sim: &mut DeviceSim, policy: Policy, n: usize) {
+pub fn charge_matvec(sim: &mut DeviceSim, policy: Policy, shape: &SystemShape) {
+    let n = shape.n;
     match policy {
-        Policy::SerialR => sim.host_gemv(n, n),
+        Policy::SerialR => match shape.format {
+            MatrixFormat::Dense => sim.host_gemv(n, n),
+            MatrixFormat::Csr => sim.host_spmv(shape.nnz),
+        },
         Policy::SerialNative => {}
         Policy::GmatrixLike => {
             sim.r_call();
             sim.h2d(8 * n);
-            sim.kernel_gemv(n, n);
+            kernel_matvec(sim, shape);
             sim.d2h(8 * n);
         }
         Policy::GputoolsLike => {
-            let id = sim.alloc(8 * n * n + 8 * n);
+            let a_bytes = shape.matrix_device_bytes();
+            let id = sim.alloc(a_bytes + 8 * n);
             sim.r_call();
-            sim.h2d(8 * n * n);
+            sim.h2d(a_bytes);
             sim.h2d(8 * n);
-            sim.kernel_gemv(n, n);
+            kernel_matvec(sim, shape);
             sim.d2h(8 * n);
             if let Ok(id) = id {
                 let _ = sim.release(id);
@@ -92,7 +125,7 @@ pub fn charge_matvec(sim: &mut DeviceSim, policy: Policy, n: usize) {
         }
         Policy::GpurVclLike => {
             sim.vcl_dispatch();
-            sim.kernel_gemv(n, n);
+            kernel_matvec(sim, shape);
         }
     }
 }
@@ -116,7 +149,8 @@ fn vcl_vecop(sim: &mut DeviceSim, reduce: bool, inputs: usize, n: usize) {
 
 /// One GMRES(m) cycle under the policy — charge-for-charge identical to
 /// what `backend::host_cycle` / `backend::fused` execute.
-pub fn charge_cycle(sim: &mut DeviceSim, policy: Policy, n: usize, m: usize) {
+pub fn charge_cycle(sim: &mut DeviceSim, policy: Policy, shape: &SystemShape, m: usize) {
+    let n = shape.n;
     let host_r = matches!(
         policy,
         Policy::SerialR | Policy::GmatrixLike | Policy::GputoolsLike
@@ -124,7 +158,7 @@ pub fn charge_cycle(sim: &mut DeviceSim, policy: Policy, n: usize, m: usize) {
     let vcl = policy == Policy::GpurVclLike;
 
     // r0 = b - A x0; beta = ||r0||; v1 = r0/beta
-    charge_matvec(sim, policy, n);
+    charge_matvec(sim, policy, shape);
     if host_r {
         host_vecop(sim, "sub", 2, n);
         host_vecop(sim, "nrm2", 1, n);
@@ -138,7 +172,7 @@ pub fn charge_cycle(sim: &mut DeviceSim, policy: Policy, n: usize, m: usize) {
 
     // m Arnoldi steps (CGS): j+1 dots + j+1 (scale+sub) + nrm2 + scale
     for j in 0..m {
-        charge_matvec(sim, policy, n);
+        charge_matvec(sim, policy, shape);
         for _ in 0..=j {
             if host_r {
                 host_vecop(sim, "dot", 2, n);
@@ -189,7 +223,7 @@ pub fn charge_cycle(sim: &mut DeviceSim, policy: Policy, n: usize, m: usize) {
     }
 
     // true residual for the restart test (paper line 9)
-    charge_matvec(sim, policy, n);
+    charge_matvec(sim, policy, shape);
     if host_r {
         host_vecop(sim, "sub", 2, n);
         host_vecop(sim, "nrm2", 1, n);
@@ -204,38 +238,42 @@ pub fn charge_cycle(sim: &mut DeviceSim, policy: Policy, n: usize, m: usize) {
 mod tests {
     use super::*;
 
+    fn d(n: usize) -> SystemShape {
+        SystemShape::dense(n)
+    }
+
     #[test]
     fn serial_native_models_zero() {
-        assert_eq!(predict_seconds(Policy::SerialNative, 1000, 30, 5), 0.0);
+        assert_eq!(predict_seconds(Policy::SerialNative, &d(1000), 30, 5), 0.0);
     }
 
     #[test]
     fn gputools_loses_at_small_n() {
         // the paper's first-row phenomenon (0.75 at N=1000)
-        let s = predict_speedup(Policy::GputoolsLike, 1000, 30, 5);
+        let s = predict_speedup(Policy::GputoolsLike, &d(1000), 30, 5);
         assert!(s < 1.05, "gputools speedup at n=1000 was {s}");
     }
 
     #[test]
     fn gpur_wins_at_large_n() {
-        let s = predict_speedup(Policy::GpurVclLike, 10_000, 30, 5);
+        let s = predict_speedup(Policy::GpurVclLike, &d(10_000), 30, 5);
         assert!(s > 3.0, "gpuR speedup at n=10000 was {s}");
     }
 
     #[test]
     fn speedups_grow_with_n() {
         for p in Policy::gpu_policies() {
-            let s1 = predict_speedup(p, 1000, 30, 5);
-            let s2 = predict_speedup(p, 10_000, 30, 5);
+            let s1 = predict_speedup(p, &d(1000), 30, 5);
+            let s2 = predict_speedup(p, &d(10_000), 30, 5);
             assert!(s2 > s1, "{p}: {s1} -> {s2}");
         }
     }
 
     #[test]
     fn ordering_at_n10000_matches_paper() {
-        let gm = predict_speedup(Policy::GmatrixLike, 10_000, 30, 5);
-        let gp = predict_speedup(Policy::GputoolsLike, 10_000, 30, 5);
-        let gr = predict_speedup(Policy::GpurVclLike, 10_000, 30, 5);
+        let gm = predict_speedup(Policy::GmatrixLike, &d(10_000), 30, 5);
+        let gp = predict_speedup(Policy::GputoolsLike, &d(10_000), 30, 5);
+        let gr = predict_speedup(Policy::GpurVclLike, &d(10_000), 30, 5);
         assert!(gp < gm && gm < gr, "gputools {gp} gmatrix {gm} gpuR {gr}");
     }
 
@@ -245,12 +283,34 @@ mod tests {
         // speedup within a factor 2 of the published number
         for (n, paper) in [(1000usize, [1.06, 0.75, 0.99]), (10_000, [2.95, 1.58, 4.25])] {
             for (p, target) in Policy::gpu_policies().iter().zip(paper) {
-                let s = predict_speedup(*p, n, 30, 5);
+                let s = predict_speedup(*p, &d(n), 30, 5);
                 assert!(
                     s > target / 2.0 && s < target * 2.0,
                     "{p} at n={n}: modeled {s:.2} vs paper {target}"
                 );
             }
         }
+    }
+
+    #[test]
+    fn sparse_transfer_everything_is_nnz_priced() {
+        // gputools re-uploads the matrix per matvec: for a stencil system
+        // the sparse upload is nnz-sized, so the modeled solve must be far
+        // cheaper than the same-order dense solve.
+        let n = 4000;
+        let sparse = SystemShape::csr(n, 5 * n);
+        let dense = d(n);
+        let ts = predict_seconds(Policy::GputoolsLike, &sparse, 30, 5);
+        let td = predict_seconds(Policy::GputoolsLike, &dense, 30, 5);
+        assert!(ts < td / 2.0, "sparse {ts} vs dense {td}");
+    }
+
+    #[test]
+    fn sparse_serial_host_is_nnz_priced() {
+        let n = 4000;
+        let sparse = SystemShape::csr(n, 5 * n);
+        let ts = predict_seconds(Policy::SerialR, &sparse, 30, 5);
+        let td = predict_seconds(Policy::SerialR, &d(n), 30, 5);
+        assert!(ts < td, "sparse serial {ts} must beat dense {td}");
     }
 }

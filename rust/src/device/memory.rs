@@ -111,20 +111,28 @@ impl DeviceMemory {
     }
 }
 
-/// Working-set sizes (bytes) for a GMRES(m) solve of order n under each
-/// offload policy — used by admission control and Ablation B.
-pub fn working_set_bytes(n: usize, m: usize, policy: crate::backend::Policy) -> usize {
+/// Working-set sizes (bytes) for a GMRES(m) solve of the given system
+/// shape under each offload policy — used by admission control and
+/// Ablation B.  The matrix term is format-aware (`8n²` dense, nnz-sized
+/// CSR), so sparse jobs admit at orders that would blow the card densified.
+pub fn working_set_bytes(
+    shape: &crate::linalg::SystemShape,
+    m: usize,
+    policy: crate::backend::Policy,
+) -> usize {
     use crate::backend::Policy;
     let f = std::mem::size_of::<f64>();
+    let n = shape.n;
+    let a_bytes = shape.matrix_device_bytes();
     match policy {
         // nothing device-resident
         Policy::SerialR | Policy::SerialNative => 0,
         // A + in/out vectors
-        Policy::GmatrixLike => f * (n * n + 2 * n),
+        Policy::GmatrixLike => a_bytes + f * 2 * n,
         // transient A + vectors per call (peak equals gmatrix's)
-        Policy::GputoolsLike => f * (n * n + 2 * n),
+        Policy::GputoolsLike => a_bytes + f * 2 * n,
         // A + V (n x (m+1)) + H + b + x + scratch w
-        Policy::GpurVclLike => f * (n * n + n * (m + 1) + (m + 1) * m + 3 * n),
+        Policy::GpurVclLike => a_bytes + f * (n * (m + 1) + (m + 1) * m + 3 * n),
     }
 }
 
@@ -179,12 +187,26 @@ mod tests {
     #[test]
     fn working_sets_ordered_by_policy() {
         use crate::backend::Policy;
-        let n = 1000;
+        use crate::linalg::SystemShape;
+        let shape = SystemShape::dense(1000);
         let m = 30;
-        let serial = working_set_bytes(n, m, Policy::SerialR);
-        let gm = working_set_bytes(n, m, Policy::GmatrixLike);
-        let vcl = working_set_bytes(n, m, Policy::GpurVclLike);
+        let serial = working_set_bytes(&shape, m, Policy::SerialR);
+        let gm = working_set_bytes(&shape, m, Policy::GmatrixLike);
+        let vcl = working_set_bytes(&shape, m, Policy::GpurVclLike);
         assert_eq!(serial, 0);
         assert!(vcl > gm, "vcl keeps the Krylov basis on device");
+    }
+
+    #[test]
+    fn sparse_working_set_is_nnz_sized() {
+        use crate::backend::Policy;
+        use crate::linalg::SystemShape;
+        // a 5-point stencil at n=100k admits where dense would need 80 GB
+        let sparse = SystemShape::csr(100_000, 5 * 100_000);
+        let ws = working_set_bytes(&sparse, 30, Policy::GpurVclLike);
+        let spec = crate::device::GpuSpec::geforce_840m();
+        assert!(ws < spec.mem_capacity, "sparse N=100k must fit the 2 GB card");
+        let dense = SystemShape::dense(100_000);
+        assert!(working_set_bytes(&dense, 30, Policy::GpurVclLike) > spec.mem_capacity);
     }
 }

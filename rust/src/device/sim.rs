@@ -111,6 +111,13 @@ impl DeviceSim {
         self.trace.push(TraceEvent::Kernel { kind: KernelKind::Gemv, seconds: s });
     }
 
+    /// Charge a device CSR SpMV kernel over `nnz` entries, `rows` outputs.
+    pub fn kernel_spmv(&mut self, nnz: usize, rows: usize) {
+        let s = self.timing.spmv(nnz, rows);
+        self.clock += s;
+        self.trace.push(TraceEvent::Kernel { kind: KernelKind::SpMv, seconds: s });
+    }
+
     /// Charge a device BLAS-1 kernel.
     pub fn kernel_blas1(&mut self, n_in: usize, n_out: usize) {
         let s = self.timing.blas1(n_in, n_out);
@@ -137,6 +144,13 @@ impl DeviceSim {
         let s = self.host.gemv_time(rows, cols);
         self.clock += s;
         self.trace.push(TraceEvent::HostOp { what: "gemv", seconds: s });
+    }
+
+    /// Charge a host CSR matvec over `nnz` stored entries.
+    pub fn host_spmv(&mut self, nnz: usize) {
+        let s = self.host.spmv_time(nnz);
+        self.clock += s;
+        self.trace.push(TraceEvent::HostOp { what: "spmv", seconds: s });
     }
 
     /// Charge an interpreted-R host vector op touching `bytes`.

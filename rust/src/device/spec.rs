@@ -111,6 +111,14 @@ impl HostSpec {
     pub fn vecop_time(&self, bytes: usize) -> f64 {
         self.op_overhead + bytes as f64 / self.vec_bw
     }
+
+    /// Modeled time for a host CSR matvec over `nnz` stored entries
+    /// (R's `Matrix` package dispatches to compiled C like `%*%` does, so
+    /// the same effective FLOP rate applies — just 2·nnz flops instead of
+    /// 2·n²).
+    pub fn spmv_time(&self, nnz: usize) -> f64 {
+        self.op_overhead + 2.0 * nnz as f64 / self.blas2_flops
+    }
 }
 
 #[cfg(test)]

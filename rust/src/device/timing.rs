@@ -12,6 +12,8 @@ use super::spec::GpuSpec;
 pub enum KernelKind {
     /// Dense matvec (rows, cols).
     Gemv,
+    /// Sparse CSR matvec (nnz, rows).
+    SpMv,
     /// Transposed matvec.
     GemvT,
     /// BLAS-1 (axpy / scal / elementwise).
@@ -48,6 +50,17 @@ impl KernelTimingModel {
         let flops = 2.0 * rows as f64 * cols as f64;
         // A streamed once + x + y (x is tiny next to A)
         let bytes = 8.0 * (rows as f64 * cols as f64 + rows as f64 + cols as f64);
+        self.kernel_time(flops, bytes)
+    }
+
+    /// CSR matvec over `nnz` stored entries producing `rows` outputs:
+    /// 2·nnz flops; traffic = CSR arrays (12 B/entry: f64 value + i32
+    /// column index + amortized row pointer) + the gathered x reads
+    /// (8 B/entry, uncoalesced) + the y writes.  nnz-proportional, which is
+    /// the whole point of threading the format through the cost model.
+    pub fn spmv(&self, nnz: usize, rows: usize) -> f64 {
+        let flops = 2.0 * nnz as f64;
+        let bytes = 20.0 * nnz as f64 + 8.0 * rows as f64;
         self.kernel_time(flops, bytes)
     }
 
@@ -125,5 +138,15 @@ mod tests {
         assert!(m.gemv(2000, 2000) > m.gemv(1000, 1000));
         assert!(m.fused_cycle(2000, 30) > m.fused_cycle(1000, 30));
         assert!(m.reduce(1 << 20) > m.reduce(1 << 10));
+        assert!(m.spmv(20_000, 2000) > m.spmv(10_000, 2000));
+    }
+
+    #[test]
+    fn sparse_kernel_beats_dense_at_low_fill() {
+        // 5-point stencil at n=4000: nnz ≈ 5n ≪ n² — SpMV must be far
+        // cheaper than the dense GEMV the seed forced it through.
+        let m = model();
+        let n = 4000;
+        assert!(m.spmv(5 * n, n) < m.gemv(n, n) / 10.0);
     }
 }

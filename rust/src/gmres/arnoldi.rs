@@ -87,6 +87,66 @@ pub fn arnoldi(op: &dyn LinearOperator, r0: &[f64], m: usize, ortho: Ortho) -> A
     ArnoldiFactorization { v, h, k, beta, breakdown }
 }
 
+/// One full restarted-GMRES(m) cycle with classical Gram-Schmidt and native
+/// BLAS ops: `x0 -> (x, ||b - A x||)`.
+///
+/// This is the numerical content of the fused `arnoldi_cycle` artifact the
+/// gpuR/vcl engine dispatches — kept here so the device executor and any
+/// host path share one op-for-op identical implementation (the step order
+/// matches `backend::host_cycle` in native mode exactly).
+pub fn cgs_cycle(op: &dyn LinearOperator, b: &[f64], x0: &[f64], m: usize) -> (Vec<f64>, f64) {
+    let n = b.len();
+    assert_eq!(x0.len(), n, "x0 length mismatch");
+
+    // r0 = b - A x0
+    let ax0 = op.apply(x0);
+    let mut r0 = vec![0.0; n];
+    blas::sub_into(b, &ax0, &mut r0);
+    let beta = blas::nrm2(&r0);
+    if beta == 0.0 {
+        return (x0.to_vec(), 0.0);
+    }
+
+    // v_1 = r0 / beta
+    let mut v: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+    blas::scal(1.0 / beta, &mut r0);
+    v.push(r0);
+    let mut h = zero_hessenberg(m);
+
+    let mut k = m;
+    for j in 0..m {
+        let mut w = op.apply(&v[j]);
+        // CGS: all h_ij from the unmodified A v_j (paper lines 3-4)
+        let coeffs: Vec<f64> = (0..=j).map(|i| blas::dot(&w, &v[i])).collect();
+        for (i, &hij) in coeffs.iter().enumerate() {
+            h[i][j] = hij;
+            blas::axpy(-hij, &v[i], &mut w);
+        }
+        let hj1 = blas::nrm2(&w);
+        h[j + 1][j] = hj1;
+        if hj1 <= BREAKDOWN_RTOL * beta {
+            k = j + 1;
+            break;
+        }
+        blas::scal(1.0 / hj1, &mut w);
+        v.push(w);
+    }
+
+    let (y, _implied) = super::givens::solve_ls(&h, beta, k);
+
+    // x = x0 + V_k y
+    let mut x = x0.to_vec();
+    for (j, &yj) in y.iter().enumerate() {
+        blas::axpy(yj, &v[j], &mut x);
+    }
+
+    // true residual (paper line 9)
+    let ax = op.apply(&x);
+    let mut r = vec![0.0; n];
+    blas::sub_into(b, &ax, &mut r);
+    (x, blas::nrm2(&r))
+}
+
 impl ArnoldiFactorization {
     /// Max |v_i . v_j - delta_ij| over the basis — the orthogonality defect.
     pub fn orthogonality_defect(&self) -> f64 {
@@ -181,6 +241,28 @@ mod tests {
         assert_eq!(f.k, 0);
         assert!(f.breakdown);
         assert_eq!(f.beta, 0.0);
+    }
+
+    #[test]
+    fn cgs_cycle_reduces_residual_and_converges() {
+        let (a, b, xt) = generators::table1_system(40, 6);
+        let mut x = vec![0.0; 40];
+        let mut last = f64::INFINITY;
+        for _ in 0..12 {
+            let (xn, res) = cgs_cycle(&a, &b, &x, 8);
+            assert!(res <= last * (1.0 + 1e-9));
+            last = res;
+            x = xn;
+        }
+        assert!(crate::linalg::vector::rel_err(&x, &xt) < 1e-8);
+    }
+
+    #[test]
+    fn cgs_cycle_exact_start_returns_zero() {
+        let (a, b, xt) = generators::table1_system(20, 7);
+        let (x, res) = cgs_cycle(&a, &b, &xt, 4);
+        assert!(res < 1e-9);
+        assert!(crate::linalg::vector::rel_err(&x, &xt) < 1e-9);
     }
 
     #[test]

@@ -12,14 +12,18 @@
 //!
 //! Layer map (see `DESIGN.md`):
 //!
-//! * **[`linalg`]** — dense/CSR matrices, generators, MatrixMarket I/O,
-//!   native BLAS-1/2 (the numerical substrate).
+//! * **[`linalg`]** — dense/CSR matrices unified behind
+//!   [`linalg::SystemMatrix`], generators, MatrixMarket I/O, native
+//!   BLAS-1/2 (the numerical substrate).  Every layer above speaks
+//!   `SystemMatrix`, so sparse systems flow end-to-end without
+//!   densification.
 //! * **[`device`]** — the simulated accelerator: capacity-capped memory
 //!   allocator, PCIe transfer model, roofline kernel-timing model
-//!   parameterized by the paper's GeForce 840M.
-//! * **[`runtime`]** — PJRT executor: loads the AOT artifacts
-//!   (`artifacts/*.hlo.txt`, produced by `python/compile/aot.py`) and runs
-//!   them; the "device" that executes real numerics.
+//!   (GEMV and nnz-sized SpMV) parameterized by the paper's GeForce 840M.
+//! * **[`runtime`]** — the virtual-device executor: name-addressed
+//!   executables (`gemv_<n>`, `spmv_<n>`, `arnoldi_cycle_<n>_<m>`, ...)
+//!   with real buffer-residency semantics, validated against the AOT
+//!   artifact manifest when one exists.
 //! * **[`backend`]** — the four offload policies as [`backend::CycleEngine`]
 //!   implementations, including the R-semantics host engine ([`backend::rvec`]).
 //! * **[`gmres`]** — restarted GMRES driver, host Arnoldi (MGS/CGS), Givens

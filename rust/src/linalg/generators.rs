@@ -85,6 +85,49 @@ pub fn convection_diffusion_2d(nx: usize, ny: usize, cx: f64, cy: f64) -> CsrMat
     CsrMatrix::from_triplets(n, n, trips)
 }
 
+/// Densified 2-D convection–diffusion operator — the *dense-benchmark
+/// helper* for experiments that deliberately compare the dense offload
+/// policies against the same stencil system.  Solve paths must take the CSR
+/// operator directly (via [`crate::linalg::SystemMatrix::Csr`]); this exists
+/// only so dense-vs-sparse comparisons share one ground truth.
+pub fn convection_diffusion_2d_dense(nx: usize, ny: usize, cx: f64, cy: f64) -> DenseMatrix {
+    convection_diffusion_2d(nx, ny, cx, cy).to_dense()
+}
+
+/// 1-D convection–diffusion–reaction operator of order exactly `n`
+/// (tridiagonal, upwind convection `c >= 0`, reaction σ = 1/h²) — the
+/// sparse sweep workload: unlike the 2-D stencil it hits any requested
+/// order, so sparse and dense sweeps share the same size grid, and the
+/// reaction term keeps it strictly diagonally dominant (restarted GMRES
+/// converges in a handful of cycles at any n, like the Table-1 shift).
+pub fn convection_diffusion_1d(n: usize, c: f64) -> CsrMatrix {
+    let h = 1.0 / (n as f64 + 1.0);
+    let d = 1.0 / (h * h);
+    let u = c / h;
+    let sigma = d;
+    let mut trips = Vec::with_capacity(3 * n);
+    for i in 0..n {
+        trips.push((i, i, 2.0 * d + u + sigma));
+        if i > 0 {
+            trips.push((i, i - 1, -d - u));
+        }
+        if i + 1 < n {
+            trips.push((i, i + 1, -d));
+        }
+    }
+    CsrMatrix::from_triplets(n, n, trips)
+}
+
+/// The sparse analogue of [`table1_system`]: a 1-D convection–diffusion
+/// system of order `n` with a seeded known solution.  Returns
+/// `(A, b, x_true)` with `b = A x_true`.
+pub fn convdiff_1d_system(n: usize, seed: u64) -> (CsrMatrix, Vec<f64>, Vec<f64>) {
+    let a = convection_diffusion_1d(n, 8.0);
+    let x_true = random_vector(n, seed ^ 0x5bd1_e995);
+    let b = a.apply(&x_true);
+    (a, b, x_true)
+}
+
 /// 1-D Laplacian tridiagonal matrix (SPD; the easy sanity workload).
 pub fn laplacian_1d(n: usize) -> CsrMatrix {
     let mut trips = Vec::with_capacity(3 * n);
@@ -132,6 +175,26 @@ mod tests {
         // upwind discretization is weakly diagonally dominant by rows
         let d = a.to_dense();
         assert!(d.diagonal_dominance() >= -1e-9);
+    }
+
+    #[test]
+    fn convdiff_1d_shape_and_consistency() {
+        let (a, b, x) = convdiff_1d_system(50, 4);
+        assert_eq!(a.nrows(), 50);
+        assert_eq!(a.nnz(), 3 * 50 - 2);
+        let r = crate::linalg::vector::sub(&b, &a.apply(&x));
+        assert!(crate::linalg::blas::nrm2(&r) == 0.0, "b is defined as A x_true");
+        // upwind 1-D operator is diagonally dominant by rows
+        assert!(a.to_dense().diagonal_dominance() >= -1e-9);
+    }
+
+    #[test]
+    fn dense_helper_matches_csr() {
+        let s = convection_diffusion_2d(4, 3, 2.0, 1.0);
+        let d = convection_diffusion_2d_dense(4, 3, 2.0, 1.0);
+        let x = random_vector(12, 1);
+        let diff = crate::linalg::vector::max_abs_diff(&s.apply(&x), &d.apply(&x));
+        assert!(diff < 1e-10, "diff {diff}");
     }
 
     #[test]

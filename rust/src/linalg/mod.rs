@@ -10,10 +10,12 @@ pub mod dense;
 pub mod generators;
 pub mod io;
 pub mod sparse;
+pub mod sysmat;
 pub mod vector;
 
 pub use dense::DenseMatrix;
 pub use sparse::CsrMatrix;
+pub use sysmat::{MatrixFormat, SystemMatrix, SystemShape};
 
 /// A linear operator that can apply itself to a vector: the only thing the
 /// Arnoldi process needs from the system matrix.

@@ -93,6 +93,39 @@ impl CsrMatrix {
         d
     }
 
+    /// Row-pointer array (len `nrows + 1`).
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    /// Column indices, sorted within each row.
+    pub fn col_idx(&self) -> &[usize] {
+        &self.col_idx
+    }
+
+    /// Nonzero values, aligned with [`CsrMatrix::col_idx`].
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Compute `y[i - start_row] = (A x)_i` for the row block starting at
+    /// `start_row` and spanning `y.len()` rows — the unit of work of the
+    /// chunked multi-threaded SpMV provider.  Identical per-row accumulation
+    /// order to [`LinearOperator::apply_into`], so the parallel path is
+    /// bit-identical to the serial one.
+    pub fn apply_rows_into(&self, start_row: usize, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert!(start_row + y.len() <= self.nrows, "row block out of bounds");
+        for (k, yi) in y.iter_mut().enumerate() {
+            let i = start_row + k;
+            let mut acc = 0.0;
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.values[p] * x[self.col_idx[p]];
+            }
+            *yi = acc;
+        }
+    }
+
     /// Iterate `(row, col, value)` triplets.
     pub fn triplets(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
         (0..self.nrows).flat_map(move |i| {
@@ -148,6 +181,18 @@ mod tests {
         let a = CsrMatrix::from_triplets(1, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (0, 1, 5.0), (0, 1, -5.0)]);
         assert_eq!(a.get(0, 0), 3.0);
         assert_eq!(a.nnz(), 1); // the (0,1) pair cancels to 0 and is dropped
+    }
+
+    #[test]
+    fn apply_rows_into_matches_full_apply() {
+        let a = crate::linalg::generators::convection_diffusion_2d(5, 4, 3.0, 1.0);
+        let x = crate::linalg::generators::random_vector(20, 9);
+        let full = a.apply(&x);
+        let mut blocked = vec![0.0; 20];
+        a.apply_rows_into(0, &x, &mut blocked[0..7]);
+        a.apply_rows_into(7, &x, &mut blocked[7..15]);
+        a.apply_rows_into(15, &x, &mut blocked[15..20]);
+        assert_eq!(full, blocked, "block decomposition must be bit-identical");
     }
 
     #[test]

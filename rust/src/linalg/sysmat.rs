@@ -1,0 +1,235 @@
+//! The unified system-matrix operator: one type every layer speaks.
+//!
+//! The seed hard-coded [`DenseMatrix`] from `backend::build_engine` down
+//! through every matvec provider and coordinator job, so the CSR type was
+//! densified (`to_dense()`) before any GPU-policy or service solve — an
+//! O(n²)-memory cap on sparse workloads.  [`SystemMatrix`] ends that: the
+//! backend engines, the device cost model, the coordinator router and the
+//! report sweeps all take a `SystemMatrix` and stay format-aware end to end.
+//!
+//! [`SystemShape`] is the *metadata* view (`n`, `nnz`, format) the cost and
+//! admission layers reason about without holding the matrix itself —
+//! requests stay small and `Send`, and the analytic replay can price a
+//! solve it never materializes.
+
+use super::{CsrMatrix, DenseMatrix, LinearOperator};
+
+/// Storage format of a system matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MatrixFormat {
+    /// Row-major dense `f64` (the paper's Table-1 regime).
+    Dense,
+    /// Compressed sparse row (the convection–diffusion regime).
+    Csr,
+}
+
+impl MatrixFormat {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatrixFormat::Dense => "dense",
+            MatrixFormat::Csr => "csr",
+        }
+    }
+
+    /// Case-insensitive parse of `dense` / `csr` (plus `sparse` alias).
+    pub fn parse(s: &str) -> Option<MatrixFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Some(MatrixFormat::Dense),
+            "csr" | "sparse" => Some(MatrixFormat::Csr),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for MatrixFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Shape + format metadata of a (square) system matrix — everything the
+/// cost model, transfer charging and admission control need to know.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SystemShape {
+    /// Problem order.
+    pub n: usize,
+    /// Stored nonzeros (`n*n` for dense).
+    pub nnz: usize,
+    pub format: MatrixFormat,
+}
+
+impl SystemShape {
+    pub fn dense(n: usize) -> Self {
+        Self { n, nnz: n * n, format: MatrixFormat::Dense }
+    }
+
+    pub fn csr(n: usize, nnz: usize) -> Self {
+        Self { n, nnz, format: MatrixFormat::Csr }
+    }
+
+    /// Bytes the matrix occupies on the device (and crosses the bus when
+    /// uploaded whole): dense is the full `8n²` buffer; CSR is the standard
+    /// device layout — f64 values (8·nnz) + i32 column indices (4·nnz) +
+    /// i32 row pointers (4·(n+1)).
+    pub fn matrix_device_bytes(&self) -> usize {
+        match self.format {
+            MatrixFormat::Dense => 8 * self.n * self.n,
+            MatrixFormat::Csr => 12 * self.nnz + 4 * (self.n + 1),
+        }
+    }
+
+    /// Fill fraction `nnz / n²` (1.0 for dense).
+    pub fn density(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.nnz as f64 / (self.n as f64 * self.n as f64)
+    }
+}
+
+/// A square system matrix in whichever format the workload provides.
+///
+/// Implements [`LinearOperator`], so everything built on the operator
+/// abstraction (Arnoldi, preconditioners) works unchanged; the backend and
+/// device layers additionally match on the variant to pick per-format
+/// kernels, transfer sizes and providers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SystemMatrix {
+    Dense(DenseMatrix),
+    Csr(CsrMatrix),
+}
+
+impl SystemMatrix {
+    /// Problem order (rows).
+    pub fn n(&self) -> usize {
+        match self {
+            SystemMatrix::Dense(a) => a.nrows(),
+            SystemMatrix::Csr(a) => a.nrows(),
+        }
+    }
+
+    pub fn is_square(&self) -> bool {
+        match self {
+            SystemMatrix::Dense(a) => a.nrows() == a.ncols(),
+            SystemMatrix::Csr(a) => a.nrows() == a.ncols(),
+        }
+    }
+
+    /// Stored nonzeros (dense counts every slot).
+    pub fn nnz(&self) -> usize {
+        match self {
+            SystemMatrix::Dense(a) => a.nrows() * a.ncols(),
+            SystemMatrix::Csr(a) => a.nnz(),
+        }
+    }
+
+    pub fn format(&self) -> MatrixFormat {
+        match self {
+            SystemMatrix::Dense(_) => MatrixFormat::Dense,
+            SystemMatrix::Csr(_) => MatrixFormat::Csr,
+        }
+    }
+
+    /// Metadata view for the cost/admission layers.
+    pub fn shape(&self) -> SystemShape {
+        SystemShape { n: self.n(), nnz: self.nnz(), format: self.format() }
+    }
+
+    /// Main diagonal (missing CSR entries are 0).
+    pub fn diagonal(&self) -> Vec<f64> {
+        match self {
+            SystemMatrix::Dense(a) => (0..a.nrows().min(a.ncols())).map(|i| a.get(i, i)).collect(),
+            SystemMatrix::Csr(a) => a.diagonal(),
+        }
+    }
+}
+
+impl From<DenseMatrix> for SystemMatrix {
+    fn from(a: DenseMatrix) -> Self {
+        SystemMatrix::Dense(a)
+    }
+}
+
+impl From<CsrMatrix> for SystemMatrix {
+    fn from(a: CsrMatrix) -> Self {
+        SystemMatrix::Csr(a)
+    }
+}
+
+impl LinearOperator for SystemMatrix {
+    fn nrows(&self) -> usize {
+        match self {
+            SystemMatrix::Dense(a) => a.nrows(),
+            SystemMatrix::Csr(a) => LinearOperator::nrows(a),
+        }
+    }
+
+    fn ncols(&self) -> usize {
+        match self {
+            SystemMatrix::Dense(a) => a.ncols(),
+            SystemMatrix::Csr(a) => LinearOperator::ncols(a),
+        }
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            SystemMatrix::Dense(a) => a.apply_into(x, y),
+            SystemMatrix::Csr(a) => a.apply_into(x, y),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::generators;
+
+    #[test]
+    fn format_parse_case_insensitive() {
+        assert_eq!(MatrixFormat::parse("Dense"), Some(MatrixFormat::Dense));
+        assert_eq!(MatrixFormat::parse("CSR"), Some(MatrixFormat::Csr));
+        assert_eq!(MatrixFormat::parse("sparse"), Some(MatrixFormat::Csr));
+        assert_eq!(MatrixFormat::parse("coo"), None);
+    }
+
+    #[test]
+    fn shape_device_bytes_by_format() {
+        let d = SystemShape::dense(100);
+        assert_eq!(d.matrix_device_bytes(), 80_000);
+        let s = SystemShape::csr(100, 500);
+        assert_eq!(s.matrix_device_bytes(), 12 * 500 + 4 * 101);
+        assert!(s.matrix_device_bytes() < d.matrix_device_bytes());
+        assert!((s.density() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variants_agree_on_apply() {
+        let csr = generators::laplacian_1d(16);
+        let dense = csr.to_dense();
+        let x = generators::random_vector(16, 3);
+        let sd = SystemMatrix::Dense(dense);
+        let ss = SystemMatrix::Csr(csr);
+        let yd = sd.apply(&x);
+        let ys = ss.apply(&x);
+        for (a, b) in yd.iter().zip(&ys) {
+            assert!((a - b).abs() < 1e-13);
+        }
+        assert_eq!(sd.n(), 16);
+        assert_eq!(ss.format(), MatrixFormat::Csr);
+        assert_eq!(sd.format(), MatrixFormat::Dense);
+        assert_eq!(sd.nnz(), 256);
+        assert_eq!(ss.nnz(), 16 * 3 - 2);
+    }
+
+    #[test]
+    fn shape_roundtrip_and_diagonal() {
+        let csr = generators::laplacian_1d(8);
+        let s = SystemMatrix::Csr(csr);
+        let shape = s.shape();
+        assert_eq!(shape.n, 8);
+        assert_eq!(shape.nnz, 22);
+        assert_eq!(shape.format, MatrixFormat::Csr);
+        assert_eq!(s.diagonal(), vec![2.0; 8]);
+        assert!(s.is_square());
+    }
+}

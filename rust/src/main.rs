@@ -3,10 +3,12 @@
 //! Subcommands map onto the experiment index in DESIGN.md:
 //!
 //! ```text
-//! gmres-rs solve  [--n 512] [--policy serial-native] [--m 30] [--tol 1e-6] [--seed 42]
-//! gmres-rs sweep  [--what table1|figure5|blas1|memcap] [--measured] [--sizes a,b,..]
-//!                 [--m 30] [--csv out.csv]
+//! gmres-rs solve  [--n 512] [--policy serial-native] [--format dense|csr]
+//!                 [--m 30] [--tol 1e-6] [--seed 42]
+//! gmres-rs sweep  [--what table1|figure5|blas1|memcap] [--measured]
+//!                 [--format dense|csr] [--sizes a,b,..] [--m 30] [--csv out.csv]
 //! gmres-rs serve  [--requests 16] [--sizes 256,512] [--cpu-workers 2] [--m 8]
+//!                 [--format dense|csr]
 //! gmres-rs info
 //! ```
 
@@ -15,10 +17,10 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail};
 
 use gmres_rs::backend::{build_engine, Policy};
-use gmres_rs::coordinator::{ServiceConfig, SolveRequest, SolveService};
+use gmres_rs::coordinator::{MatrixSpec, ServiceConfig, SolveRequest, SolveService};
 use gmres_rs::device::GpuSpec;
 use gmres_rs::gmres::{GmresConfig, RestartedGmres};
-use gmres_rs::linalg::generators;
+use gmres_rs::linalg::{generators, MatrixFormat, SystemMatrix};
 use gmres_rs::report::{figure5, sweep, table1, SweepConfig};
 use gmres_rs::runtime::Runtime;
 use gmres_rs::util::cli::Args;
@@ -27,13 +29,15 @@ const USAGE: &str = "\
 gmres-rs — R-GPU GMRES reproduction (Oancea & Pospisil 2018)
 
 USAGE:
-  gmres-rs solve [--n N] [--policy P] [--m M] [--tol T] [--seed S]
+  gmres-rs solve [--n N] [--policy P] [--format dense|csr] [--m M] [--tol T] [--seed S]
   gmres-rs sweep [--what table1|figure5|blas1|memcap] [--measured]
-                 [--sizes a,b,..] [--m M] [--csv PATH]
+                 [--format dense|csr] [--sizes a,b,..] [--m M] [--csv PATH]
   gmres-rs serve [--requests R] [--sizes a,b,..] [--cpu-workers W] [--m M]
+                 [--format dense|csr]
   gmres-rs info
 
 POLICIES: serial-r | serial-native | gmatrix | gputools | gpuR
+FORMATS:  dense (Table-1 random ensemble) | csr (convection-diffusion stencil)
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -58,15 +62,39 @@ fn runtime_if_needed(policy: Policy) -> anyhow::Result<Option<Rc<Runtime>>> {
     }
 }
 
+fn parse_format(args: &Args) -> anyhow::Result<MatrixFormat> {
+    let s = args.get_choice("format", &["dense", "csr", "sparse"], "dense")?;
+    MatrixFormat::parse(&s).ok_or_else(|| anyhow!("bad format `{s}`"))
+}
+
 fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     let n = args.get_parse("n", 512usize)?;
     let m = args.get_parse("m", 30usize)?;
     let tol = args.get_parse("tol", 1e-6f64)?;
     let seed = args.get_parse("seed", 42u64)?;
+    let format = parse_format(args)?;
     let policy_s = args.get_or("policy", "serial-native");
-    let policy = Policy::parse(policy_s).ok_or_else(|| anyhow!("unknown policy `{policy_s}`"))?;
+    let policy = Policy::parse(policy_s).ok_or_else(|| {
+        anyhow!("unknown policy `{policy_s}` (valid: {})", Policy::names())
+    })?;
 
-    let (a, b, x_true) = generators::table1_system(n, seed);
+    let (a, b, x_true) = match format {
+        MatrixFormat::Dense => {
+            let (a, b, x) = generators::table1_system(n, seed);
+            (SystemMatrix::Dense(a), b, x)
+        }
+        MatrixFormat::Csr => {
+            let (a, b, x) = generators::convdiff_1d_system(n, seed);
+            (SystemMatrix::Csr(a), b, x)
+        }
+    };
+    let shape = a.shape();
+    println!(
+        "system: n={n} format={} nnz={} ({} B on device)",
+        shape.format,
+        shape.nnz,
+        shape.matrix_device_bytes()
+    );
     let runtime = runtime_if_needed(policy)?;
     let mut engine = build_engine(policy, a, b, m, runtime, false)?;
     let solver = RestartedGmres::new(GmresConfig { m, tol, max_restarts: 200 });
@@ -83,22 +111,27 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let measured = args.flag("measured");
     let sizes: Vec<usize> = args.get_list("sizes")?;
     let m = args.get_parse("m", 30usize)?;
+    let format = parse_format(args)?;
 
     match what {
         "table1" | "figure5" => {
             let runtime = if measured { Some(Rc::new(Runtime::from_env()?)) } else { None };
             let default_sizes = if measured {
-                runtime.as_ref().unwrap().manifest().sizes()
+                runtime.as_ref().unwrap().sizes()
             } else {
                 SweepConfig::default().sizes
             };
             let cfg = SweepConfig {
                 sizes: if sizes.is_empty() { default_sizes } else { sizes },
                 m,
+                format,
                 measured,
                 ..Default::default()
             };
-            eprintln!("sweeping sizes {:?} (measured={measured}) ...", cfg.sizes);
+            eprintln!(
+                "sweeping sizes {:?} (measured={measured}, format={format}) ...",
+                cfg.sizes
+            );
             let records = sweep::table1_sweep(&cfg, runtime)?;
             if what == "table1" {
                 println!("{}", table1::render(&records, measured));
@@ -129,7 +162,12 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             for spec in [GpuSpec::geforce_840m(), GpuSpec::tesla_v100()] {
                 println!("{} ({} GB):", spec.name, spec.mem_capacity >> 30);
                 for p in Policy::gpu_policies() {
-                    println!("  {:>10}: N_max = {}", p.name(), sweep::max_order(p, m, &spec));
+                    println!(
+                        "  {:>10}: N_max = {} dense, {} csr (5-point fill)",
+                        p.name(),
+                        sweep::max_order(p, m, &spec),
+                        sweep::max_order_sparse(p, m, &spec)
+                    );
                 }
             }
         }
@@ -146,6 +184,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let cpu_workers = args.get_parse("cpu-workers", 2usize)?;
     let m = args.get_parse("m", 8usize)?;
+    let format = parse_format(args)?;
 
     let svc = SolveService::start(ServiceConfig { cpu_workers, ..Default::default() });
     let started = std::time::Instant::now();
@@ -154,8 +193,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             let n = sizes[i % sizes.len()];
             let svc = svc.clone();
             std::thread::spawn(move || {
-                let mut req = SolveRequest::table1(n, i as u64);
-                req.config = GmresConfig { m, tol: 1e-6, max_restarts: 200 };
+                let matrix = match format {
+                    MatrixFormat::Dense => MatrixSpec::Table1 { n, seed: i as u64 },
+                    MatrixFormat::Csr => MatrixSpec::ConvDiff1d { n, seed: i as u64 },
+                };
+                let req = SolveRequest {
+                    matrix,
+                    config: GmresConfig { m, tol: 1e-6, max_restarts: 200 },
+                    policy: None,
+                };
                 svc.submit(req)
             })
         })
@@ -186,14 +232,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info() -> anyhow::Result<()> {
-    match Runtime::from_env() {
-        Ok(rt) => {
-            println!("platform: {}", rt.platform_name());
-            let man = rt.manifest();
+    let rt = Runtime::from_env()?;
+    println!("platform: {}", rt.platform_name());
+    match rt.manifest() {
+        Some(man) => {
             println!("artifact sizes: {:?} (m={})", man.sizes(), man.m);
             println!("artifacts: {}", man.artifacts.len());
         }
-        Err(e) => println!("runtime unavailable: {e:#}"),
+        None => println!(
+            "no artifacts: native virtual device, any gemv_<n>/spmv_<n>/arnoldi_cycle_<n>_<m> \
+             executable synthesizes on demand (default sizes {:?}, m={})",
+            rt.sizes(),
+            rt.default_m()
+        ),
     }
     let g = GpuSpec::geforce_840m();
     println!(

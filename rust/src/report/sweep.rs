@@ -1,14 +1,18 @@
 //! Sweep driver: runs the Table-1 experiment (measured and/or modeled) and
 //! the ablations, producing [`SweepRecord`]s the table/figure formatters
 //! consume.
+//!
+//! Sweeps are format-aware: `--format csr` runs the 1-D convection–
+//! diffusion stencil (exact order n, nnz = 3n−2) through the same policy
+//! matrix, and every record carries `format` + `nnz` so the formatters can
+//! report what actually moved.
 
 use std::rc::Rc;
-
 
 use crate::backend::{build_engine, Policy};
 use crate::device::{DeviceSim, GpuSpec};
 use crate::gmres::{GmresConfig, RestartedGmres};
-use crate::linalg::generators;
+use crate::linalg::{generators, MatrixFormat, SystemMatrix, SystemShape};
 use crate::runtime::Runtime;
 use crate::Result;
 
@@ -20,6 +24,10 @@ pub struct SweepRecord {
     pub policy: Policy,
     pub n: usize,
     pub m: usize,
+    /// Storage format of the swept system.
+    pub format: MatrixFormat,
+    /// Stored nonzeros (n² for dense).
+    pub nnz: usize,
     pub cycles: usize,
     pub converged: bool,
     pub rel_resnorm: f64,
@@ -37,9 +45,12 @@ pub struct SweepConfig {
     pub tol: f64,
     pub max_restarts: usize,
     pub seed: u64,
-    /// Run real numerics (needs artifacts for GPU policies).  When false the
-    /// sweep is modeled-only: one cheap native solve per N for the cycle
-    /// count, then the analytic replay for every policy.
+    /// Matrix format of the swept workload (dense Table-1 ensemble or the
+    /// sparse convection–diffusion stencil).
+    pub format: MatrixFormat,
+    /// Run real numerics (device policies execute on the runtime).  When
+    /// false the sweep is modeled-only: one cheap native solve per N for
+    /// the cycle count, then the analytic replay for every policy.
     pub measured: bool,
 }
 
@@ -51,7 +62,22 @@ impl Default for SweepConfig {
             tol: 1e-6,
             max_restarts: 200,
             seed: 42,
+            format: MatrixFormat::Dense,
             measured: false,
+        }
+    }
+}
+
+/// The swept system at one size under the configured format.
+pub fn sweep_system(n: usize, cfg: &SweepConfig) -> (SystemMatrix, Vec<f64>) {
+    match cfg.format {
+        MatrixFormat::Dense => {
+            let (a, b, _) = generators::table1_system(n, cfg.seed);
+            (SystemMatrix::Dense(a), b)
+        }
+        MatrixFormat::Csr => {
+            let (a, b, _) = generators::convdiff_1d_system(n, cfg.seed);
+            (SystemMatrix::Csr(a), b)
         }
     }
 }
@@ -59,7 +85,7 @@ impl Default for SweepConfig {
 /// Cycle count for size `n` via the cheap native engine (all policies run
 /// the same numerics, so one count serves all).
 pub fn reference_cycles(n: usize, cfg: &SweepConfig) -> Result<usize> {
-    let (a, b, _) = generators::table1_system(n, cfg.seed);
+    let (a, b) = sweep_system(n, cfg);
     let mut engine = build_engine(Policy::SerialNative, a, b, cfg.m, None, false)?;
     let solver = RestartedGmres::new(GmresConfig {
         m: cfg.m,
@@ -78,7 +104,8 @@ pub fn run_measured(
     cfg: &SweepConfig,
     runtime: Option<Rc<Runtime>>,
 ) -> Result<SweepRecord> {
-    let (a, b, _) = generators::table1_system(n, cfg.seed);
+    let (a, b) = sweep_system(n, cfg);
+    let shape = a.shape();
     let mut engine = build_engine(policy, a, b, cfg.m, runtime, false)?;
     let solver = RestartedGmres::new(GmresConfig {
         m: cfg.m,
@@ -90,6 +117,8 @@ pub fn run_measured(
         policy,
         n,
         m: cfg.m,
+        format: shape.format,
+        nnz: shape.nnz,
         cycles: rep.cycles,
         converged: rep.converged,
         rel_resnorm: rep.rel_resnorm,
@@ -99,16 +128,31 @@ pub fn run_measured(
 }
 
 /// Modeled-only record via the analytic replay.
-pub fn run_modeled(policy: Policy, n: usize, cycles: usize, cfg: &SweepConfig) -> SweepRecord {
+pub fn run_modeled(
+    policy: Policy,
+    shape: &SystemShape,
+    cycles: usize,
+    cfg: &SweepConfig,
+) -> SweepRecord {
     SweepRecord {
         policy,
-        n,
+        n: shape.n,
         m: cfg.m,
+        format: shape.format,
+        nnz: shape.nnz,
         cycles,
         converged: true,
         rel_resnorm: f64::NAN,
         wall_seconds: None,
-        sim_seconds: model::predict_seconds(policy, n, cfg.m, cycles),
+        sim_seconds: model::predict_seconds(policy, shape, cfg.m, cycles),
+    }
+}
+
+/// The configured shape at order `n` without materializing the system.
+pub fn sweep_shape(n: usize, cfg: &SweepConfig) -> SystemShape {
+    match cfg.format {
+        MatrixFormat::Dense => SystemShape::dense(n),
+        MatrixFormat::Csr => SystemShape::csr(n, 3 * n - 2),
     }
 }
 
@@ -129,13 +173,14 @@ pub fn table1_sweep(cfg: &SweepConfig, runtime: Option<Rc<Runtime>>) -> Result<V
             }
         } else {
             let cycles = reference_cycles(n, cfg)?;
+            let shape = sweep_shape(n, cfg);
             for p in [
                 Policy::SerialR,
                 Policy::GmatrixLike,
                 Policy::GputoolsLike,
                 Policy::GpurVclLike,
             ] {
-                out.push(run_modeled(p, n, cycles, cfg));
+                out.push(run_modeled(p, &shape, cycles, cfg));
             }
         }
     }
@@ -201,17 +246,32 @@ pub fn blas1_breakeven_n() -> usize {
 // Ablation B: device-memory capacity cap
 // ---------------------------------------------------------------------------
 
-/// Max solvable order under each policy for a given device memory capacity.
+/// Max solvable dense order under each policy for a given device memory
+/// capacity.
 pub fn max_order(policy: Policy, m: usize, spec: &GpuSpec) -> usize {
+    max_order_with(policy, m, spec, |n| SystemShape::dense(n))
+}
+
+/// Max solvable sparse order assuming a 5-point-stencil fill (nnz ≈ 5n).
+pub fn max_order_sparse(policy: Policy, m: usize, spec: &GpuSpec) -> usize {
+    max_order_with(policy, m, spec, |n| SystemShape::csr(n, 5 * n))
+}
+
+fn max_order_with(
+    policy: Policy,
+    m: usize,
+    spec: &GpuSpec,
+    shape_of: impl Fn(usize) -> SystemShape,
+) -> usize {
     // monotone working set -> binary search
     let fits = |n: usize| {
-        crate::device::memory::working_set_bytes(n, m, policy) <= spec.mem_capacity
+        crate::device::memory::working_set_bytes(&shape_of(n), m, policy) <= spec.mem_capacity
     };
     if !fits(1) {
         return 0;
     }
     let mut lo = 1usize;
-    let mut hi = 1usize << 22;
+    let mut hi = 1usize << 26;
     while hi - lo > 1 {
         let mid = lo + (hi - lo) / 2;
         if fits(mid) {
@@ -228,7 +288,15 @@ mod tests {
     use super::*;
 
     fn small_cfg() -> SweepConfig {
-        SweepConfig { sizes: vec![64], m: 8, tol: 1e-8, max_restarts: 100, seed: 1, measured: false }
+        SweepConfig {
+            sizes: vec![64],
+            m: 8,
+            tol: 1e-8,
+            max_restarts: 100,
+            seed: 1,
+            format: MatrixFormat::Dense,
+            measured: false,
+        }
     }
 
     #[test]
@@ -237,6 +305,32 @@ mod tests {
         let recs = table1_sweep(&cfg, None).unwrap();
         assert_eq!(recs.len(), 4);
         assert!(recs.iter().all(|r| r.n == 64 && r.converged));
+        assert!(recs.iter().all(|r| r.format == MatrixFormat::Dense && r.nnz == 64 * 64));
+    }
+
+    #[test]
+    fn sparse_modeled_sweep_carries_format_and_nnz() {
+        let cfg = SweepConfig { format: MatrixFormat::Csr, ..small_cfg() };
+        let recs = table1_sweep(&cfg, None).unwrap();
+        assert_eq!(recs.len(), 4);
+        assert!(recs.iter().all(|r| r.format == MatrixFormat::Csr && r.nnz == 3 * 64 - 2));
+        // at equal cycle count, the sparse replay is cheaper than dense
+        let cycles = recs[0].cycles;
+        let sparse = run_modeled(Policy::SerialR, &sweep_shape(64, &cfg), cycles, &cfg);
+        let dense_cfg = small_cfg();
+        let dense = run_modeled(Policy::SerialR, &sweep_shape(64, &dense_cfg), cycles, &dense_cfg);
+        assert!(sparse.sim_seconds < dense.sim_seconds);
+    }
+
+    #[test]
+    fn sweep_shape_matches_materialized_system() {
+        for format in [MatrixFormat::Dense, MatrixFormat::Csr] {
+            let cfg = SweepConfig { format, ..small_cfg() };
+            for n in [17usize, 64] {
+                let (a, _) = sweep_system(n, &cfg);
+                assert_eq!(a.shape(), sweep_shape(n, &cfg), "format {format} n {n}");
+            }
+        }
     }
 
     #[test]
@@ -251,13 +345,28 @@ mod tests {
     #[test]
     fn measured_serial_sweep_runs_without_runtime() {
         let cfg = SweepConfig { sizes: vec![48], m: 6, measured: true, ..small_cfg() };
-        // GPU policies would need a runtime; run the two serial ones directly
+        // device policies would need a runtime; run the two serial ones directly
         let r1 = run_measured(Policy::SerialR, 48, &cfg, None).unwrap();
         let r2 = run_measured(Policy::SerialNative, 48, &cfg, None).unwrap();
         assert!(r1.converged && r2.converged);
         assert!(r1.wall_seconds.unwrap() > 0.0);
         assert!(r1.sim_seconds > 0.0);
         assert_eq!(r2.sim_seconds, 0.0);
+    }
+
+    #[test]
+    fn measured_sparse_sweep_runs_all_policies_on_native_runtime() {
+        let cfg = SweepConfig {
+            sizes: vec![60],
+            m: 6,
+            measured: true,
+            format: MatrixFormat::Csr,
+            ..small_cfg()
+        };
+        let rt = Rc::new(Runtime::native());
+        let recs = table1_sweep(&cfg, Some(rt)).unwrap();
+        assert_eq!(recs.len(), 5);
+        assert!(recs.iter().all(|r| r.converged && r.format == MatrixFormat::Csr));
     }
 
     #[test]
@@ -282,5 +391,8 @@ mod tests {
         assert!(n_vcl < 20_000, "vcl max order {n_vcl}");
         // serial has no device footprint
         assert!(max_order(Policy::SerialR, 30, &spec) > 1 << 20);
+        // sparse residency scales far beyond the dense cap
+        let n_sparse = max_order_sparse(Policy::GpurVclLike, 30, &spec);
+        assert!(n_sparse > 10 * n_vcl, "sparse max order {n_sparse} vs dense {n_vcl}");
     }
 }

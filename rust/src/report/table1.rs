@@ -13,17 +13,23 @@ pub fn render(records: &[SweepRecord], measured: bool) -> String {
     sizes.dedup();
 
     let axis = if measured { "measured wallclock (this host)" } else { "modeled (paper testbed)" };
+    let format = records.first().map(|r| r.format.name()).unwrap_or("dense");
     let mut out = String::new();
     out.push_str(&format!(
-        "Table 1 — GMRES speedup vs serial R implementation [{axis}]\n"
+        "Table 1 — GMRES speedup vs serial R implementation [{axis}] (format: {format})\n"
     ));
     out.push_str(&format!(
-        "{:>7} | {:>8} {:>8} | {:>8} {:>8} | {:>8} {:>8}\n",
-        "N", "gmatrix", "(paper)", "gputools", "(paper)", "gpuR", "(paper)"
+        "{:>7} {:>10} | {:>8} {:>8} | {:>8} {:>8} | {:>8} {:>8}\n",
+        "N", "nnz", "gmatrix", "(paper)", "gputools", "(paper)", "gpuR", "(paper)"
     ));
-    out.push_str(&"-".repeat(70));
+    out.push_str(&"-".repeat(81));
     out.push('\n');
     for &n in &sizes {
+        let nnz = records
+            .iter()
+            .find(|r| r.n == n)
+            .map(|r| r.nnz.to_string())
+            .unwrap_or_else(|| "-".into());
         let p = paper::table1_row(n);
         let cell = |pol: Policy| -> (String, String) {
             let ours = speedup(records, pol, n, measured)
@@ -38,7 +44,7 @@ pub fn render(records: &[SweepRecord], measured: bool) -> String {
         let (gm, gm_p) = cell(Policy::GmatrixLike);
         let (gp, gp_p) = cell(Policy::GputoolsLike);
         let (gr, gr_p) = cell(Policy::GpurVclLike);
-        out.push_str(&format!("{n:>7} | {gm} {gm_p} | {gp} {gp_p} | {gr} {gr_p}\n"));
+        out.push_str(&format!("{n:>7} {nnz:>10} | {gm} {gm_p} | {gp} {gp_p} | {gr} {gr_p}\n"));
     }
     out
 }
@@ -114,6 +120,7 @@ mod tests {
             tol: 1e-6,
             max_restarts: 200,
             seed: 7,
+            format: crate::linalg::MatrixFormat::Dense,
             measured: false,
         };
         // modeled sweep needs a real cycle count: use a small reference size
@@ -136,7 +143,24 @@ mod tests {
         let recs = table1_sweep(&cfg, None).unwrap();
         let out = render(&recs, false);
         assert!(out.contains("64"));
+        assert!(out.contains("format: dense"));
+        assert!(out.contains("nnz"));
         // paper columns show '-' for sizes not in the paper
         assert!(out.contains('-'));
+    }
+
+    #[test]
+    fn render_sparse_reports_format_and_nnz() {
+        let cfg = SweepConfig {
+            sizes: vec![64],
+            m: 8,
+            measured: false,
+            format: crate::linalg::MatrixFormat::Csr,
+            ..Default::default()
+        };
+        let recs = table1_sweep(&cfg, None).unwrap();
+        let out = render(&recs, false);
+        assert!(out.contains("format: csr"), "{out}");
+        assert!(out.contains(&(3 * 64 - 2).to_string()), "{out}");
     }
 }

@@ -1,20 +1,30 @@
-//! PJRT runtime: loads AOT artifacts (`artifacts/*.hlo.txt`) and executes
-//! them on the CPU PJRT client — the "device" of this reproduction.
+//! Device runtime: the executor the offload-policy backends dispatch to.
 //!
-//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//! The seed bound this layer to a PJRT client from the external `xla`
+//! crate, which does not exist in the offline build — so the runtime is now
+//! a *native virtual device*: executables are recognized by artifact name
+//! (`gemv_<n>`, `spmv_<n>`, `dot_<n>`, `nrm2_<n>`, `axpy_<n>`,
+//! `residual_<n>`, `arnoldi_cycle_<n>_<m>`) and executed by bit-reproducible
+//! native kernels.  The *costs* the paper measures stay the job of
+//! [`crate::device::DeviceSim`]; this layer supplies the numerics and the
+//! residency semantics:
 //!
-//! Device residency is real here, not only simulated: `gmatrix`-like and
-//! `gpuR`-like policies upload the matrix once with
-//! [`Runtime::upload_matrix`] and then call [`Runtime::execute_buffers`],
-//! mirroring `gmatrix()`/`vclMatrix()` device objects; the `gputools`-like
-//! policy passes host literals every call, mirroring `gpuMatMult(A, B)`.
+//! * [`Runtime::upload_matrix`] / [`Runtime::upload_csr`] create
+//!   device-resident [`DeviceBuffer`]s (the `gmatrix()` / `vclMatrix()`
+//!   object analogue); [`Runtime::execute_buffers`] runs against them.
+//! * [`Runtime::execute_literals`] stages host [`Literal`]s per call — the
+//!   `gpuMatMult(A, v)` transfer-everything analogue.
 //!
-//! `PjRtLoadedExecutable` wraps a raw pointer without `Send`/`Sync`, so a
-//! `Runtime` is single-threaded by construction; the coordinator owns one on
-//! a dedicated device thread (one GPU, one stream — see
-//! [`crate::coordinator::device_thread`]).
+//! Both dense and CSR matrices flow through: a `gemv_<n>` executable takes
+//! a dense matrix operand, `spmv_<n>` takes CSR, and `arnoldi_cycle_<n>_<m>`
+//! accepts either, so every policy engine is format-agnostic above this
+//! line.
+//!
+//! When an `artifacts/manifest.tsv` is present (the AOT flow of
+//! `python/compile/aot.py`), the runtime validates executable names against
+//! it — shape mismatches fail at load time with an actionable message.
+//! Without artifacts it runs in native mode and synthesizes any
+//! well-formed executable name.
 
 pub mod manifest;
 
@@ -25,29 +35,197 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail};
 
-use crate::linalg::DenseMatrix;
+use crate::linalg::{blas, CsrMatrix, DenseMatrix, LinearOperator};
 use crate::Result;
 pub use manifest::{ArtifactMeta, Manifest};
 
-/// Artifact-loading PJRT wrapper with an executable cache.
+/// Default executable sizes the native runtime advertises when no artifact
+/// manifest pins the set (tests and demos use these).
+pub const NATIVE_SIZES: [usize; 2] = [64, 256];
+
+/// Default restart length advertised in native mode.
+pub const NATIVE_M: usize = 8;
+
+/// A compiled virtual-device program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Program {
+    /// Dense matvec `y = A x`.
+    Gemv { n: usize },
+    /// CSR matvec `y = A x`.
+    SpMv { n: usize },
+    /// `<x, y>`.
+    Dot { n: usize },
+    /// `||x||_2`.
+    Nrm2 { n: usize },
+    /// `a*x + y`.
+    Axpy { n: usize },
+    /// `(b - A x, ||b - A x||)`.
+    Residual { n: usize },
+    /// One fused GMRES(m) CGS cycle `(A, b, x0) -> (x, ||b - A x||)`.
+    ArnoldiCycle { n: usize, m: usize },
+}
+
+fn parse_program(name: &str) -> Option<Program> {
+    if let Some(rest) = name.strip_prefix("arnoldi_cycle_") {
+        let (ns, ms) = rest.split_once('_')?;
+        let n: usize = ns.parse().ok()?;
+        let m: usize = ms.parse().ok()?;
+        if n == 0 || m == 0 {
+            return None;
+        }
+        return Some(Program::ArnoldiCycle { n, m });
+    }
+    let (kind, num) = name.rsplit_once('_')?;
+    let n: usize = num.parse().ok()?;
+    if n == 0 {
+        return None;
+    }
+    match kind {
+        "gemv" => Some(Program::Gemv { n }),
+        "spmv" => Some(Program::SpMv { n }),
+        "dot" => Some(Program::Dot { n }),
+        "nrm2" => Some(Program::Nrm2 { n }),
+        "axpy" => Some(Program::Axpy { n }),
+        "residual" => Some(Program::Residual { n }),
+        _ => None,
+    }
+}
+
+/// A loaded executable (name-addressed, cached by the runtime).
+#[derive(Clone, Debug)]
+pub struct Executable {
+    name: String,
+    program: Program,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// A device-resident tensor: uploads copy host data once; subsequent
+/// executions read it in place (no per-call staging).
+#[derive(Clone, Debug)]
+pub enum DeviceBuffer {
+    Dense { data: Rc<Vec<f64>>, dims: Vec<usize> },
+    Csr(Rc<CsrMatrix>),
+}
+
+/// A host-side value handed to the transfer-everything execution path.
+/// Clones are cheap (refcounted), mirroring PJRT literal semantics: the
+/// *handle* is shared, but every [`Runtime::execute_literals`] call models
+/// a fresh staging of the payload.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Tensor { data: Rc<Vec<f64>>, dims: Vec<usize> },
+    Csr(Rc<CsrMatrix>),
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    fn tensor(data: Vec<f64>, dims: Vec<usize>) -> Literal {
+        Literal::Tensor { data: Rc::new(data), dims }
+    }
+
+    /// Flat f64 payload of a tensor literal.
+    pub fn to_vec(&self) -> Result<Vec<f64>> {
+        match self {
+            Literal::Tensor { data, .. } => Ok((**data).clone()),
+            other => Err(anyhow!("expected tensor literal, got {other:?}")),
+        }
+    }
+
+    /// Owning payload extraction — no copy when the literal holds the only
+    /// reference (the common case for executor outputs).
+    pub fn into_vec(self) -> Result<Vec<f64>> {
+        match self {
+            Literal::Tensor { data, .. } => {
+                Ok(Rc::try_unwrap(data).unwrap_or_else(|rc| (*rc).clone()))
+            }
+            other => Err(anyhow!("expected tensor literal, got {other:?}")),
+        }
+    }
+
+    /// First element of a tensor literal (scalar readback).
+    pub fn first_element(&self) -> Result<f64> {
+        match self {
+            Literal::Tensor { data, .. } => {
+                data.first().copied().ok_or_else(|| anyhow!("empty literal"))
+            }
+            other => Err(anyhow!("expected tensor literal, got {other:?}")),
+        }
+    }
+}
+
+/// Borrowed operand view shared by the buffer and literal execution paths.
+enum Arg<'a> {
+    Dense { data: &'a [f64], dims: &'a [usize] },
+    Csr(&'a CsrMatrix),
+}
+
+/// Matrix operand as a [`LinearOperator`], dense or CSR.
+enum OperatorView<'a> {
+    Dense { data: &'a [f64], n: usize },
+    Csr(&'a CsrMatrix),
+}
+
+impl LinearOperator for OperatorView<'_> {
+    fn nrows(&self) -> usize {
+        match self {
+            OperatorView::Dense { n, .. } => *n,
+            OperatorView::Csr(c) => LinearOperator::nrows(*c),
+        }
+    }
+
+    fn ncols(&self) -> usize {
+        match self {
+            OperatorView::Dense { n, .. } => *n,
+            OperatorView::Csr(c) => LinearOperator::ncols(*c),
+        }
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            // same per-row blas::dot accumulation as DenseMatrix::apply_into
+            OperatorView::Dense { data, n } => {
+                assert_eq!(x.len(), *n);
+                assert_eq!(y.len(), *n);
+                for (yi, row) in y.iter_mut().zip(data.chunks_exact(*n)) {
+                    *yi = blas::dot(row, x);
+                }
+            }
+            OperatorView::Csr(c) => c.apply_into(x, y),
+        }
+    }
+}
+
+/// Name-addressed executor with an executable cache (the compile step of
+/// PJRT becomes name parsing + manifest validation).
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    dir: Option<PathBuf>,
+    manifest: Option<Manifest>,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
 }
 
 impl Runtime {
-    /// Open the artifact directory (must contain `manifest.tsv`).
+    /// Native virtual device: no artifacts needed, every well-formed
+    /// executable name loads.
+    pub fn native() -> Self {
+        Self { dir: None, manifest: None, cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Open an artifact directory (must contain `manifest.tsv`); loads are
+    /// then validated against the manifest.
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.tsv"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Self { dir: Some(dir), manifest: Some(manifest), cache: RefCell::new(HashMap::new()) })
     }
 
-    /// Locate the artifact directory: `$GMRES_RS_ARTIFACTS`, else
-    /// `./artifacts`, else `../artifacts` relative to the executable.
+    /// Locate artifacts via `$GMRES_RS_ARTIFACTS`, `./artifacts` or
+    /// `../artifacts`; fall back to the native virtual device when none
+    /// exist (the common offline case).
     pub fn from_env() -> Result<Self> {
         if let Ok(dir) = std::env::var("GMRES_RS_ARTIFACTS") {
             return Self::new(dir);
@@ -57,41 +235,66 @@ impl Runtime {
                 return Self::new(cand);
             }
         }
-        bail!(
-            "no artifacts found: run `make artifacts` (or set GMRES_RS_ARTIFACTS) \
-             to AOT-compile the HLO graphs"
-        )
+        Ok(Self::native())
     }
 
     pub fn platform_name(&self) -> String {
-        self.client.platform_name()
+        if self.manifest.is_some() {
+            "artifact-validated native executor".to_string()
+        } else {
+            "native virtual device".to_string()
+        }
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+    /// The artifact manifest, when running in artifact mode.
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
     }
 
-    /// Load + compile an artifact by name (e.g. `gemv_1000`), cached.
-    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    pub fn artifact_dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Matrix orders with a gemv executable available.
+    pub fn sizes(&self) -> Vec<usize> {
+        match &self.manifest {
+            Some(m) => m.sizes(),
+            None => NATIVE_SIZES.to_vec(),
+        }
+    }
+
+    /// Restart length of the fused-cycle executables.
+    pub fn default_m(&self) -> usize {
+        match &self.manifest {
+            Some(m) => m.m,
+            None => NATIVE_M,
+        }
+    }
+
+    /// Load an executable by artifact name (e.g. `gemv_1000`), cached.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
         if let Some(exe) = self.cache.borrow().get(name) {
             return Ok(exe.clone());
         }
-        let meta = self.manifest.get(name).ok_or_else(|| {
+        let program = parse_program(name).ok_or_else(|| {
             anyhow!(
-                "artifact `{name}` not in manifest; available sizes {:?} — \
-                 regenerate with `make artifacts SIZES=\"... <missing N>\"`",
-                self.manifest.sizes()
+                "unknown executable `{name}`: expected gemv_<n> | spmv_<n> | dot_<n> | \
+                 nrm2_<n> | axpy_<n> | residual_<n> | arnoldi_cycle_<n>_<m>"
             )
         })?;
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse HLO text {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile artifact `{name}`: {e:?}"))?;
-        let exe = Rc::new(exe);
+        if let Some(man) = &self.manifest {
+            // spmv is native-synthesized even in artifact mode (the AOT flow
+            // predates sparse); everything else must be in the manifest.
+            let synthesized = matches!(program, Program::SpMv { .. });
+            if !synthesized && man.get(name).is_none() {
+                bail!(
+                    "artifact `{name}` not in manifest; available sizes {:?} — \
+                     regenerate with `make artifacts SIZES=\"... <missing N>\"`",
+                    man.sizes()
+                );
+            }
+        }
+        let exe = Rc::new(Executable { name: name.to_string(), program });
         self.cache.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
@@ -104,86 +307,214 @@ impl Runtime {
     // -- host <-> device marshalling ----------------------------------------
 
     /// Upload a dense matrix as a device-resident buffer (row-major f64).
-    pub fn upload_matrix(&self, m: &DenseMatrix) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<f64>(m.data(), &[m.nrows(), m.ncols()], None)
-            .map_err(|e| anyhow!("upload matrix: {e:?}"))
+    pub fn upload_matrix(&self, m: &DenseMatrix) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer::Dense {
+            data: Rc::new(m.data().to_vec()),
+            dims: vec![m.nrows(), m.ncols()],
+        })
+    }
+
+    /// Upload a CSR matrix as a device-resident buffer.
+    pub fn upload_csr(&self, m: &CsrMatrix) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer::Csr(Rc::new(m.clone())))
     }
 
     /// Upload a vector as a device-resident buffer.
-    pub fn upload_vector(&self, v: &[f64]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<f64>(v, &[v.len()], None)
-            .map_err(|e| anyhow!("upload vector: {e:?}"))
+    pub fn upload_vector(&self, v: &[f64]) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer::Dense { data: Rc::new(v.to_vec()), dims: vec![v.len()] })
     }
 
     /// Upload a scalar as a rank-0 device buffer.
-    pub fn upload_scalar(&self, s: f64) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<f64>(&[s], &[], None)
-            .map_err(|e| anyhow!("upload scalar: {e:?}"))
+    pub fn upload_scalar(&self, s: f64) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer::Dense { data: Rc::new(vec![s]), dims: vec![] })
     }
 
-    /// Execute with device-resident buffers (no host->device transfer of the
-    /// buffer args).  Returns the single tuple-shaped output literal.
-    pub fn execute_buffers(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[&xla::PjRtBuffer],
-    ) -> Result<xla::Literal> {
-        let out = exe.execute_b(args).map_err(|e| anyhow!("execute_b: {e:?}"))?;
-        out[0][0].to_literal_sync().map_err(|e| anyhow!("readback: {e:?}"))
+    /// Execute with device-resident buffers (no per-call staging of the
+    /// buffer args).  Returns the tuple-shaped output literal.
+    pub fn execute_buffers(&self, exe: &Executable, args: &[&DeviceBuffer]) -> Result<Literal> {
+        let views: Vec<Arg> = args
+            .iter()
+            .map(|b| match b {
+                DeviceBuffer::Dense { data, dims } => {
+                    Arg::Dense { data: &data[..], dims: &dims[..] }
+                }
+                DeviceBuffer::Csr(c) => Arg::Csr(c),
+            })
+            .collect();
+        self.execute_args(exe, &views)
     }
 
-    /// Execute with host literals (models the transfer-everything policy).
-    pub fn execute_literals(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[xla::Literal],
-    ) -> Result<xla::Literal> {
-        let out = exe.execute(args).map_err(|e| anyhow!("execute: {e:?}"))?;
-        out[0][0].to_literal_sync().map_err(|e| anyhow!("readback: {e:?}"))
+    /// Execute with host literals (the transfer-everything policy path:
+    /// every argument is modeled as re-staged to the device per call).
+    pub fn execute_literals(&self, exe: &Executable, args: &[Literal]) -> Result<Literal> {
+        let views: Vec<Arg> = args
+            .iter()
+            .map(|l| match l {
+                Literal::Tensor { data, dims } => {
+                    Ok(Arg::Dense { data: &data[..], dims: &dims[..] })
+                }
+                Literal::Csr(c) => Ok(Arg::Csr(c)),
+                Literal::Tuple(_) => Err(anyhow!("tuple literal is not a valid argument")),
+            })
+            .collect::<Result<_>>()?;
+        self.execute_args(exe, &views)
+    }
+
+    fn execute_args(&self, exe: &Executable, args: &[Arg]) -> Result<Literal> {
+        let argc = |want: usize| -> Result<()> {
+            if args.len() != want {
+                bail!("executable `{}` takes {want} args, got {}", exe.name, args.len());
+            }
+            Ok(())
+        };
+        match exe.program {
+            Program::Gemv { n } | Program::SpMv { n } => {
+                argc(2)?;
+                let op = op_arg(&args[0], n, &exe.name)?;
+                let x = vec_arg(&args[1], n, &exe.name)?;
+                let mut y = vec![0.0; n];
+                op.apply_into(x, &mut y);
+                Ok(Literal::Tuple(vec![Literal::tensor(y, vec![n])]))
+            }
+            Program::Dot { n } => {
+                argc(2)?;
+                let x = vec_arg(&args[0], n, &exe.name)?;
+                let y = vec_arg(&args[1], n, &exe.name)?;
+                Ok(Literal::Tuple(vec![Literal::tensor(vec![blas::dot(x, y)], vec![])]))
+            }
+            Program::Nrm2 { n } => {
+                argc(1)?;
+                let x = vec_arg(&args[0], n, &exe.name)?;
+                Ok(Literal::Tuple(vec![Literal::tensor(vec![blas::nrm2(x)], vec![])]))
+            }
+            Program::Axpy { n } => {
+                argc(3)?;
+                let a = scalar_arg(&args[0], &exe.name)?;
+                let x = vec_arg(&args[1], n, &exe.name)?;
+                let y = vec_arg(&args[2], n, &exe.name)?;
+                let z: Vec<f64> = x.iter().zip(y).map(|(xi, yi)| a * xi + yi).collect();
+                Ok(Literal::Tuple(vec![Literal::tensor(z, vec![n])]))
+            }
+            Program::Residual { n } => {
+                argc(3)?;
+                let op = op_arg(&args[0], n, &exe.name)?;
+                let b = vec_arg(&args[1], n, &exe.name)?;
+                let x = vec_arg(&args[2], n, &exe.name)?;
+                let ax = op.apply(x);
+                let mut r = vec![0.0; n];
+                blas::sub_into(b, &ax, &mut r);
+                let rn = blas::nrm2(&r);
+                Ok(Literal::Tuple(vec![
+                    Literal::tensor(r, vec![n]),
+                    Literal::tensor(vec![rn], vec![]),
+                ]))
+            }
+            Program::ArnoldiCycle { n, m } => {
+                argc(3)?;
+                let op = op_arg(&args[0], n, &exe.name)?;
+                let b = vec_arg(&args[1], n, &exe.name)?;
+                let x0 = vec_arg(&args[2], n, &exe.name)?;
+                let (x, resnorm) = crate::gmres::arnoldi::cgs_cycle(&op, b, x0, m);
+                Ok(Literal::Tuple(vec![
+                    Literal::tensor(x, vec![n]),
+                    Literal::tensor(vec![resnorm], vec![]),
+                ]))
+            }
+        }
     }
 
     // -- literal helpers -----------------------------------------------------
 
     /// Row-major dense matrix -> 2-D literal.
-    pub fn matrix_literal(m: &DenseMatrix) -> Result<xla::Literal> {
-        xla::Literal::vec1(m.data())
-            .reshape(&[m.nrows() as i64, m.ncols() as i64])
-            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    pub fn matrix_literal(m: &DenseMatrix) -> Result<Literal> {
+        Ok(Literal::Tensor {
+            data: Rc::new(m.data().to_vec()),
+            dims: vec![m.nrows(), m.ncols()],
+        })
+    }
+
+    /// CSR matrix -> sparse literal.
+    pub fn csr_literal(m: &CsrMatrix) -> Literal {
+        Literal::Csr(Rc::new(m.clone()))
     }
 
     /// Vector -> 1-D literal.
-    pub fn vector_literal(v: &[f64]) -> xla::Literal {
-        xla::Literal::vec1(v)
+    pub fn vector_literal(v: &[f64]) -> Literal {
+        Literal::tensor(v.to_vec(), vec![v.len()])
     }
 
     /// Scalar -> rank-0 literal.
-    pub fn scalar_literal(s: f64) -> xla::Literal {
-        xla::Literal::scalar(s)
+    pub fn scalar_literal(s: f64) -> Literal {
+        Literal::tensor(vec![s], vec![])
     }
 
-    /// Unwrap a 1-tuple output into a Vec<f64>.
-    pub fn tuple1_vec(result: xla::Literal) -> Result<Vec<f64>> {
-        let l = result.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
-        l.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    /// Unwrap a 1-tuple output into a `Vec<f64>` (no copy: the executor
+    /// output holds the only reference).
+    pub fn tuple1_vec(result: Literal) -> Result<Vec<f64>> {
+        match result {
+            Literal::Tuple(mut items) if items.len() == 1 => {
+                items.pop().expect("len checked").into_vec()
+            }
+            other => Err(anyhow!("expected 1-tuple output, got {other:?}")),
+        }
     }
 
     /// Unwrap a (vector, scalar) 2-tuple output.
-    pub fn tuple2_vec_scalar(result: xla::Literal) -> Result<(Vec<f64>, f64)> {
-        let (a, b) = result.to_tuple2().map_err(|e| anyhow!("to_tuple2: {e:?}"))?;
-        let v = a.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        let s = b
-            .get_first_element::<f64>()
-            .map_err(|e| anyhow!("scalar readback: {e:?}"))?;
-        Ok((v, s))
+    pub fn tuple2_vec_scalar(result: Literal) -> Result<(Vec<f64>, f64)> {
+        match result {
+            Literal::Tuple(mut items) if items.len() == 2 => {
+                let s = items.pop().expect("len checked").first_element()?;
+                let v = items.pop().expect("len checked").into_vec()?;
+                Ok((v, s))
+            }
+            other => Err(anyhow!("expected 2-tuple output, got {other:?}")),
+        }
     }
 
     /// Unwrap a scalar 1-tuple output.
-    pub fn tuple1_scalar(result: xla::Literal) -> Result<f64> {
-        let l = result.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
-        l.get_first_element::<f64>().map_err(|e| anyhow!("scalar readback: {e:?}"))
+    pub fn tuple1_scalar(result: Literal) -> Result<f64> {
+        match result {
+            Literal::Tuple(items) if items.len() == 1 => items[0].first_element(),
+            other => Err(anyhow!("expected 1-tuple output, got {other:?}")),
+        }
+    }
+}
+
+fn vec_arg<'a>(arg: &Arg<'a>, n: usize, exe: &str) -> Result<&'a [f64]> {
+    match arg {
+        Arg::Dense { data, dims } if dims.len() == 1 && dims[0] == n && data.len() == n => {
+            Ok(*data)
+        }
+        Arg::Dense { dims, .. } => {
+            Err(anyhow!("`{exe}`: expected vector of length {n}, got dims {dims:?}"))
+        }
+        Arg::Csr(_) => Err(anyhow!("`{exe}`: expected vector, got CSR matrix")),
+    }
+}
+
+fn scalar_arg(arg: &Arg, exe: &str) -> Result<f64> {
+    match arg {
+        Arg::Dense { data, dims } if dims.is_empty() && data.len() == 1 => Ok(data[0]),
+        _ => Err(anyhow!("`{exe}`: expected rank-0 scalar operand")),
+    }
+}
+
+fn op_arg<'a>(arg: &Arg<'a>, n: usize, exe: &str) -> Result<OperatorView<'a>> {
+    match arg {
+        Arg::Dense { data, dims }
+            if dims.len() == 2 && dims[0] == n && dims[1] == n && data.len() == n * n =>
+        {
+            Ok(OperatorView::Dense { data: *data, n })
+        }
+        Arg::Csr(c) if c.nrows() == n && c.ncols() == n => Ok(OperatorView::Csr(*c)),
+        Arg::Dense { dims, .. } => {
+            Err(anyhow!("`{exe}`: expected {n}x{n} matrix operand, got dims {dims:?}"))
+        }
+        Arg::Csr(c) => Err(anyhow!(
+            "`{exe}`: expected order-{n} matrix operand, got {}x{} CSR",
+            c.nrows(),
+            c.ncols()
+        )),
     }
 }
 
@@ -191,8 +522,99 @@ impl std::fmt::Debug for Runtime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Runtime")
             .field("dir", &self.dir)
-            .field("platform", &self.client.platform_name())
+            .field("platform", &self.platform_name())
             .field("compiled", &self.compiled_count())
             .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::generators;
+
+    #[test]
+    fn program_names_parse() {
+        assert_eq!(parse_program("gemv_1000"), Some(Program::Gemv { n: 1000 }));
+        assert_eq!(parse_program("spmv_64"), Some(Program::SpMv { n: 64 }));
+        assert_eq!(
+            parse_program("arnoldi_cycle_64_30"),
+            Some(Program::ArnoldiCycle { n: 64, m: 30 })
+        );
+        assert_eq!(parse_program("gemv_0"), None);
+        assert_eq!(parse_program("bogus_12"), None);
+        assert_eq!(parse_program("gemv_abc"), None);
+        assert_eq!(parse_program("arnoldi_cycle_64"), None);
+    }
+
+    #[test]
+    fn gemv_executes_like_native_apply() {
+        let rt = Runtime::native();
+        let (a, _, _) = generators::table1_system(16, 1);
+        let x = generators::random_vector(16, 2);
+        let exe = rt.load("gemv_16").unwrap();
+        let a_buf = rt.upload_matrix(&a).unwrap();
+        let x_buf = rt.upload_vector(&x).unwrap();
+        let out = rt.execute_buffers(&exe, &[&a_buf, &x_buf]).unwrap();
+        let y = Runtime::tuple1_vec(out).unwrap();
+        assert_eq!(y, a.apply(&x), "executor must be bit-identical to native");
+    }
+
+    #[test]
+    fn spmv_executes_csr() {
+        let rt = Runtime::native();
+        let a = generators::laplacian_1d(12);
+        let x = generators::random_vector(12, 3);
+        let exe = rt.load("spmv_12").unwrap();
+        let out = rt
+            .execute_literals(&exe, &[Runtime::csr_literal(&a), Runtime::vector_literal(&x)])
+            .unwrap();
+        assert_eq!(Runtime::tuple1_vec(out).unwrap(), a.apply(&x));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let rt = Runtime::native();
+        let exe = rt.load("gemv_8").unwrap();
+        let a = DenseMatrix::identity(4);
+        let a_buf = rt.upload_matrix(&a).unwrap();
+        let x_buf = rt.upload_vector(&[1.0; 8]).unwrap();
+        assert!(rt.execute_buffers(&exe, &[&a_buf, &x_buf]).is_err());
+    }
+
+    #[test]
+    fn cache_compiles_once() {
+        let rt = Runtime::native();
+        assert_eq!(rt.compiled_count(), 0);
+        rt.load("gemv_32").unwrap();
+        rt.load("gemv_32").unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+        rt.load("dot_32").unwrap();
+        assert_eq!(rt.compiled_count(), 2);
+    }
+
+    #[test]
+    fn native_mode_advertises_defaults() {
+        let rt = Runtime::native();
+        assert_eq!(rt.sizes(), NATIVE_SIZES.to_vec());
+        assert_eq!(rt.default_m(), NATIVE_M);
+        assert!(rt.manifest().is_none());
+    }
+
+    #[test]
+    fn manifest_mode_validates_names() {
+        let dir = crate::util::tempdir::TempDir::new("rt-manifest").unwrap();
+        std::fs::write(
+            dir.path().join("manifest.tsv"),
+            "#dtype\tf64\n#m\t30\ngemv_64\tgemv_64.hlo.txt\t1\tabc\t64x64 64\n",
+        )
+        .unwrap();
+        let rt = Runtime::new(dir.path()).unwrap();
+        assert!(rt.load("gemv_64").is_ok());
+        let err = rt.load("gemv_128").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+        // spmv is synthesized even in artifact mode
+        assert!(rt.load("spmv_64").is_ok());
+        assert_eq!(rt.sizes(), vec![64]);
     }
 }

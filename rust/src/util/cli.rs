@@ -65,6 +65,17 @@ impl Args {
         }
     }
 
+    /// Constrained-choice option: the value (or `default`) must be one of
+    /// `allowed`, matched case-insensitively; errors list the choices.
+    pub fn get_choice(&self, name: &str, allowed: &[&str], default: &str) -> Result<String> {
+        let v = self.get_or(name, default).to_ascii_lowercase();
+        if allowed.iter().any(|a| a.eq_ignore_ascii_case(&v)) {
+            Ok(v)
+        } else {
+            bail!("--{name}: `{v}` is not one of {}", allowed.join(" | "))
+        }
+    }
+
     /// Comma-separated list option.
     pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>> {
         match self.get(name) {
@@ -116,6 +127,16 @@ mod tests {
         assert_eq!(a.get_list::<usize>("sizes").unwrap(), vec![100, 200, 300]);
         let empty = parse("solve");
         assert!(empty.get_list::<usize>("sizes").unwrap().is_empty());
+    }
+
+    #[test]
+    fn choice_validation() {
+        let a = parse("--format CSR");
+        assert_eq!(a.get_choice("format", &["dense", "csr"], "dense").unwrap(), "csr");
+        let missing = parse("solve");
+        assert_eq!(missing.get_choice("format", &["dense", "csr"], "dense").unwrap(), "dense");
+        let bad = parse("--format coo");
+        assert!(bad.get_choice("format", &["dense", "csr"], "dense").is_err());
     }
 
     #[test]

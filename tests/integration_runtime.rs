@@ -1,29 +1,23 @@
-//! Integration tests over the real PJRT runtime + AOT artifacts.
-//!
-//! Skipped gracefully when artifacts are missing (`make artifacts` first);
-//! `make test` always runs them.
+//! Integration tests over the virtual-device runtime: executor numerics,
+//! residency semantics, and the policy engines' trace behaviour, dense and
+//! sparse.
 
 use std::rc::Rc;
 
 use gmres_rs::backend::{build_engine, CycleEngine, Policy};
+use gmres_rs::device::TraceEvent;
 use gmres_rs::gmres::{GmresConfig, RestartedGmres};
-use gmres_rs::linalg::{generators, vector, LinearOperator};
+use gmres_rs::linalg::{generators, vector, LinearOperator, SystemMatrix};
 use gmres_rs::runtime::Runtime;
 
-fn runtime() -> Option<Rc<Runtime>> {
-    match Runtime::from_env() {
-        Ok(rt) => Some(Rc::new(rt)),
-        Err(e) => {
-            eprintln!("skipping: {e}");
-            None
-        }
-    }
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::native())
 }
 
 #[test]
-fn gemv_artifact_matches_native() {
-    let Some(rt) = runtime() else { return };
-    for n in rt.manifest().sizes() {
+fn gemv_executable_matches_native() {
+    let rt = runtime();
+    for n in rt.sizes() {
         let (a, _, _) = generators::table1_system(n, 1);
         let x = generators::random_vector(n, 2);
         let exe = rt.load(&format!("gemv_{n}")).unwrap();
@@ -42,9 +36,22 @@ fn gemv_artifact_matches_native() {
 }
 
 #[test]
-fn blas1_artifacts_match_native() {
-    let Some(rt) = runtime() else { return };
-    let n = rt.manifest().sizes()[0];
+fn spmv_executable_matches_csr_apply() {
+    let rt = runtime();
+    let a = generators::convection_diffusion_2d(8, 8, 5.0, 2.0);
+    let n = a.nrows();
+    let x = generators::random_vector(n, 12);
+    let exe = rt.load(&format!("spmv_{n}")).unwrap();
+    let a_buf = rt.upload_csr(&a).unwrap();
+    let x_buf = rt.upload_vector(&x).unwrap();
+    let out = rt.execute_buffers(&exe, &[&a_buf, &x_buf]).unwrap();
+    assert_eq!(Runtime::tuple1_vec(out).unwrap(), a.apply(&x));
+}
+
+#[test]
+fn blas1_executables_match_native() {
+    let rt = runtime();
+    let n = rt.sizes()[0];
     let x = generators::random_vector(n, 3);
     let y = generators::random_vector(n, 4);
 
@@ -81,9 +88,9 @@ fn blas1_artifacts_match_native() {
 }
 
 #[test]
-fn residual_artifact_matches_native() {
-    let Some(rt) = runtime() else { return };
-    let n = rt.manifest().sizes()[0];
+fn residual_executable_matches_native() {
+    let rt = runtime();
+    let n = rt.sizes()[0];
     let (a, b, _) = generators::table1_system(n, 5);
     let x = generators::random_vector(n, 6);
     let exe = rt.load(&format!("residual_{n}")).unwrap();
@@ -105,14 +112,15 @@ fn residual_artifact_matches_native() {
 
 #[test]
 fn all_policies_agree_on_the_solution() {
-    let Some(rt) = runtime() else { return };
-    let n = rt.manifest().sizes()[0];
-    let m = rt.manifest().m;
+    let rt = runtime();
+    let n = rt.sizes()[0];
+    let m = rt.default_m();
     let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-10, max_restarts: 200 });
     let mut solutions = Vec::new();
     for policy in Policy::all() {
         let (a, b, _) = generators::table1_system(n, 7);
-        let mut engine = build_engine(policy, a, b, m, Some(rt.clone()), false).unwrap();
+        let mut engine =
+            build_engine(policy, SystemMatrix::Dense(a), b, m, Some(rt.clone()), false).unwrap();
         let rep = solver.solve(engine.as_mut(), None).unwrap();
         assert!(rep.converged, "{policy} did not converge");
         solutions.push((policy, rep.x));
@@ -126,13 +134,21 @@ fn all_policies_agree_on_the_solution() {
 
 #[test]
 fn fused_cycle_engine_matches_host_cycle() {
-    let Some(rt) = runtime() else { return };
-    let n = rt.manifest().sizes()[0];
-    let m = rt.manifest().m;
+    let rt = runtime();
+    let n = rt.sizes()[0];
+    let m = rt.default_m();
     let (a, b, _) = generators::table1_system(n, 8);
-    let mut host =
-        build_engine(Policy::SerialNative, a.clone(), b.clone(), m, None, false).unwrap();
-    let mut fused = build_engine(Policy::GpurVclLike, a, b, m, Some(rt), false).unwrap();
+    let mut host = build_engine(
+        Policy::SerialNative,
+        SystemMatrix::Dense(a.clone()),
+        b.clone(),
+        m,
+        None,
+        false,
+    )
+    .unwrap();
+    let mut fused =
+        build_engine(Policy::GpurVclLike, SystemMatrix::Dense(a), b, m, Some(rt), false).unwrap();
     let x0 = vec![0.0; n];
     let rh = host.cycle(&x0).unwrap();
     let rf = fused.cycle(&x0).unwrap();
@@ -154,11 +170,12 @@ fn fused_cycle_engine_matches_host_cycle() {
 
 #[test]
 fn warm_start_cycles_compose_through_the_runtime() {
-    let Some(rt) = runtime() else { return };
-    let n = rt.manifest().sizes()[0];
-    let m = rt.manifest().m;
+    let rt = runtime();
+    let n = rt.sizes()[0];
+    let m = rt.default_m();
     let (a, b, xt) = generators::table1_system(n, 9);
-    let mut engine = build_engine(Policy::GpurVclLike, a, b, m, Some(rt), false).unwrap();
+    let mut engine =
+        build_engine(Policy::GpurVclLike, SystemMatrix::Dense(a), b, m, Some(rt), false).unwrap();
     let mut x = vec![0.0; n];
     let mut last = f64::INFINITY;
     for _ in 0..10 {
@@ -174,62 +191,66 @@ fn warm_start_cycles_compose_through_the_runtime() {
 }
 
 #[test]
-fn missing_artifact_gives_actionable_error() {
-    let Some(rt) = runtime() else { return };
-    let err = match rt.load("gemv_123457") {
+fn unknown_executable_gives_actionable_error() {
+    let rt = runtime();
+    let err = match rt.load("bogus_123457") {
         Err(e) => e.to_string(),
-        Ok(_) => panic!("bogus artifact must not load"),
+        Ok(_) => panic!("bogus executable must not load"),
     };
-    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+    assert!(err.contains("gemv_<n>"), "unhelpful error: {err}");
 }
 
 #[test]
 fn executable_cache_compiles_once() {
-    let Some(rt) = runtime() else { return };
-    let n = rt.manifest().sizes()[0];
+    let rt = runtime();
+    let n = rt.sizes()[0];
     let before = rt.compiled_count();
     let _a = rt.load(&format!("gemv_{n}")).unwrap();
     let _b = rt.load(&format!("gemv_{n}")).unwrap();
     assert_eq!(rt.compiled_count(), before + 1, "second load must hit cache");
 }
 
+fn big_h2d_count(engine: &dyn CycleEngine, bytes: usize) -> usize {
+    engine
+        .sim()
+        .trace()
+        .events()
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::Transfer { bytes: b, .. } if *b == bytes))
+        .count()
+}
+
 #[test]
 fn gmatrix_trace_uploads_matrix_exactly_once() {
-    let Some(rt) = runtime() else { return };
-    let n = rt.manifest().sizes()[0];
-    let m = rt.manifest().m;
+    let rt = runtime();
+    let n = rt.sizes()[0];
+    let m = rt.default_m();
     let (a, b, _) = generators::table1_system(n, 10);
-    let mut engine = build_engine(Policy::GmatrixLike, a, b, m, Some(rt), true).unwrap();
+    let mut engine =
+        build_engine(Policy::GmatrixLike, SystemMatrix::Dense(a), b, m, Some(rt), true).unwrap();
     let x0 = vec![0.0; n];
     engine.cycle(&x0).unwrap();
     engine.cycle(&x0).unwrap();
     // exactly one 8n² H2D (the resident upload); all others are vectors
-    let sim = engine.sim();
-    let big = 8 * n * n;
-    let big_uploads = sim
-        .trace()
-        .events()
-        .iter()
-        .filter(|e| matches!(e, gmres_rs::device::TraceEvent::Transfer { bytes, .. } if *bytes == big))
-        .count();
-    assert_eq!(big_uploads, 1, "gmatrix must upload A exactly once");
+    assert_eq!(
+        big_h2d_count(engine.as_ref(), 8 * n * n),
+        1,
+        "gmatrix must upload A exactly once"
+    );
 }
 
 #[test]
 fn gputools_trace_uploads_matrix_every_matvec() {
-    let Some(rt) = runtime() else { return };
-    let n = rt.manifest().sizes()[0];
-    let m = rt.manifest().m;
+    let rt = runtime();
+    let n = rt.sizes()[0];
+    let m = rt.default_m();
     let (a, b, _) = generators::table1_system(n, 11);
-    let mut engine = build_engine(Policy::GputoolsLike, a, b, m, Some(rt), true).unwrap();
+    let mut engine =
+        build_engine(Policy::GputoolsLike, SystemMatrix::Dense(a), b, m, Some(rt), true).unwrap();
     engine.cycle(&vec![0.0; n]).unwrap();
-    let sim = engine.sim();
-    let big = 8 * n * n;
-    let big_uploads = sim
-        .trace()
-        .events()
-        .iter()
-        .filter(|e| matches!(e, gmres_rs::device::TraceEvent::Transfer { bytes, .. } if *bytes == big))
-        .count();
-    assert_eq!(big_uploads, m + 2, "gputools re-uploads A on every matvec");
+    assert_eq!(
+        big_h2d_count(engine.as_ref(), 8 * n * n),
+        m + 2,
+        "gputools re-uploads A on every matvec"
+    );
 }

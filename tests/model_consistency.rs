@@ -2,67 +2,94 @@
 //! modeled clocks — otherwise the full-size Table-1 sweep (which uses the
 //! replay) would drift from what the engines actually charge.
 //!
-//! Serial policies are checked always; device policies when artifacts are
-//! present (`make artifacts`).
+//! Checked for every policy, dense AND sparse, on the native runtime.
 
 use std::rc::Rc;
 
 use gmres_rs::backend::{build_engine, Policy};
 use gmres_rs::device::costs;
 use gmres_rs::gmres::{GmresConfig, RestartedGmres};
-use gmres_rs::linalg::generators;
+use gmres_rs::linalg::{generators, MatrixFormat, SystemMatrix, SystemShape};
 use gmres_rs::runtime::Runtime;
 
-fn engine_clock(policy: Policy, n: usize, m: usize, rt: Option<Rc<Runtime>>) -> (f64, usize) {
-    let (a, b, _) = generators::table1_system(n, 5);
+fn system(format: MatrixFormat, n: usize) -> (SystemMatrix, Vec<f64>) {
+    match format {
+        MatrixFormat::Dense => {
+            let (a, b, _) = generators::table1_system(n, 5);
+            (SystemMatrix::Dense(a), b)
+        }
+        MatrixFormat::Csr => {
+            let (a, b, _) = generators::convdiff_1d_system(n, 5);
+            (SystemMatrix::Csr(a), b)
+        }
+    }
+}
+
+fn engine_clock(
+    policy: Policy,
+    format: MatrixFormat,
+    n: usize,
+    m: usize,
+    rt: Option<Rc<Runtime>>,
+) -> (f64, usize, SystemShape) {
+    let (a, b) = system(format, n);
+    let shape = a.shape();
     let mut engine = build_engine(policy, a, b, m, rt, false).unwrap();
     let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-10, max_restarts: 100 });
     let rep = solver.solve(engine.as_mut(), None).unwrap();
     assert!(rep.converged);
-    (engine.sim().elapsed(), rep.cycles)
+    (engine.sim().elapsed(), rep.cycles, shape)
 }
 
-fn assert_replay_matches(policy: Policy, n: usize, m: usize, rt: Option<Rc<Runtime>>) {
-    let (clock, cycles) = engine_clock(policy, n, m, rt);
-    let predicted = costs::predict_seconds(policy, n, m, cycles);
+fn assert_replay_matches(
+    policy: Policy,
+    format: MatrixFormat,
+    n: usize,
+    m: usize,
+    rt: Option<Rc<Runtime>>,
+) {
+    let (clock, cycles, shape) = engine_clock(policy, format, n, m, rt);
+    let predicted = costs::predict_seconds(policy, &shape, m, cycles);
     let rel = (clock - predicted).abs() / predicted.max(1e-30);
     assert!(
         rel < 1e-9,
-        "{policy} at n={n}, m={m}, cycles={cycles}: engine {clock} vs replay {predicted} (rel {rel})"
+        "{policy}/{format} at n={n}, m={m}, cycles={cycles}: engine {clock} vs replay {predicted} (rel {rel})"
     );
 }
 
 #[test]
 fn serial_r_replay_matches_engine() {
-    assert_replay_matches(Policy::SerialR, 96, 6, None);
-    assert_replay_matches(Policy::SerialR, 150, 10, None);
+    assert_replay_matches(Policy::SerialR, MatrixFormat::Dense, 96, 6, None);
+    assert_replay_matches(Policy::SerialR, MatrixFormat::Dense, 150, 10, None);
+}
+
+#[test]
+fn serial_r_sparse_replay_matches_engine() {
+    assert_replay_matches(Policy::SerialR, MatrixFormat::Csr, 120, 6, None);
 }
 
 #[test]
 fn serial_native_models_zero() {
-    let (clock, _) = engine_clock(Policy::SerialNative, 96, 6, None);
+    let (clock, _, _) = engine_clock(Policy::SerialNative, MatrixFormat::Dense, 96, 6, None);
+    assert_eq!(clock, 0.0);
+    let (clock, _, _) = engine_clock(Policy::SerialNative, MatrixFormat::Csr, 96, 6, None);
     assert_eq!(clock, 0.0);
 }
 
 #[test]
 fn device_policy_replays_match_engines() {
-    let Ok(rt) = Runtime::from_env() else {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return;
-    };
-    let rt = Rc::new(rt);
-    let sizes = rt.manifest().sizes();
-    let n = sizes[0];
-    let m = rt.manifest().m;
-    assert_replay_matches(Policy::GmatrixLike, n, m, Some(rt.clone()));
-    assert_replay_matches(Policy::GputoolsLike, n, m, Some(rt.clone()));
-    assert_replay_matches(Policy::GpurVclLike, n, m, Some(rt));
+    let rt = Rc::new(Runtime::native());
+    for format in [MatrixFormat::Dense, MatrixFormat::Csr] {
+        assert_replay_matches(Policy::GmatrixLike, format, 64, 8, Some(rt.clone()));
+        assert_replay_matches(Policy::GputoolsLike, format, 64, 8, Some(rt.clone()));
+        assert_replay_matches(Policy::GpurVclLike, format, 64, 8, Some(rt.clone()));
+    }
 }
 
 #[test]
 fn predicted_speedup_reproduces_table1_shape() {
     // the six shape claims of DESIGN.md on the pure replay (fast)
-    let s = |p: Policy, n: usize| costs::predict_speedup(p, n, 30, 4);
+    let s = |p: Policy, n: usize| costs::predict_speedup(p, &SystemShape::dense(n), 30, 4);
     for p in Policy::gpu_policies() {
         assert!(s(p, 10_000) > s(p, 1000), "{p} must grow with N");
     }
@@ -73,4 +100,19 @@ fn predicted_speedup_reproduces_table1_shape() {
         s(Policy::GpurVclLike, 10_000),
     );
     assert!(gp < gm && gm < gr, "ordering at N=10000: {gp} {gm} {gr}");
+}
+
+#[test]
+fn sparse_device_solve_is_priced_below_dense() {
+    // same order, same cycles: a stencil system's modeled device solve must
+    // be cheaper than the dense one under every GPU policy (nnz-sized
+    // transfers + SpMV kernels)
+    let n = 2000;
+    let sparse = SystemShape::csr(n, 3 * n - 2);
+    let dense = SystemShape::dense(n);
+    for p in Policy::gpu_policies() {
+        let ts = costs::predict_seconds(p, &sparse, 30, 4);
+        let td = costs::predict_seconds(p, &dense, 30, 4);
+        assert!(ts < td, "{p}: sparse {ts} must be cheaper than dense {td}");
+    }
 }

@@ -3,14 +3,18 @@
 //! failure reports the case seed for exact reproduction.
 
 use gmres_rs::backend::providers::{HostMode, NativeMatVec};
-use gmres_rs::backend::{rvec, CycleEngine, HostCycleEngine, Policy};
+use gmres_rs::backend::{build_engine, rvec, CycleEngine, HostCycleEngine, Policy};
 use gmres_rs::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
 use gmres_rs::device::memory::{working_set_bytes, DeviceMemory};
 use gmres_rs::device::{GpuSpec, TransferModel};
 use gmres_rs::gmres::arnoldi::{arnoldi, Ortho};
 use gmres_rs::gmres::givens;
-use gmres_rs::linalg::{blas, generators, vector, LinearOperator};
+use gmres_rs::gmres::{GmresConfig, RestartedGmres};
+use gmres_rs::linalg::{
+    blas, generators, vector, CsrMatrix, LinearOperator, MatrixFormat, SystemMatrix, SystemShape,
+};
 use gmres_rs::prop_assert;
+use gmres_rs::runtime::Runtime;
 use gmres_rs::util::check::{check, Config};
 use gmres_rs::util::rng::Rng;
 
@@ -220,14 +224,28 @@ fn prop_working_set_monotone_in_n_and_m() {
     check(cfg(48), "working-set-monotone", |rng| {
         let n = 2 + rng.below(5000);
         let m = 1 + rng.below(60);
+        let shapes = |n: usize| {
+            [SystemShape::dense(n), SystemShape::csr(n, 5 * n)]
+        };
         for p in Policy::all() {
+            for (s, s_bigger) in shapes(n).iter().zip(shapes(n + 1).iter()) {
+                prop_assert!(
+                    working_set_bytes(s_bigger, m, p) >= working_set_bytes(s, m, p),
+                    "{p} not monotone in n ({:?})",
+                    s.format
+                );
+                prop_assert!(
+                    working_set_bytes(s, m + 1, p) >= working_set_bytes(s, m, p),
+                    "{p} not monotone in m ({:?})",
+                    s.format
+                );
+            }
+            // sparser never costs more device memory at equal order
+            let lo = SystemShape::csr(n, 3 * n);
+            let hi = SystemShape::csr(n, 7 * n);
             prop_assert!(
-                working_set_bytes(n + 1, m, p) >= working_set_bytes(n, m, p),
-                "{p} not monotone in n"
-            );
-            prop_assert!(
-                working_set_bytes(n, m + 1, p) >= working_set_bytes(n, m, p),
-                "{p} not monotone in m"
+                working_set_bytes(&lo, m, p) <= working_set_bytes(&hi, m, p),
+                "{p} not monotone in nnz"
             );
         }
         Ok(())
@@ -251,6 +269,142 @@ fn prop_transfer_model_monotone_and_superadditive_free() {
 }
 
 // ---------------------------------------------------------------------------
+// CSR invariants
+// ---------------------------------------------------------------------------
+
+/// Seeded random COO triplets: duplicates, out-of-order columns and
+/// explicit zeros included on purpose.
+fn random_triplets(rng: &mut Rng, nrows: usize, ncols: usize) -> Vec<(usize, usize, f64)> {
+    let count = rng.below(4 * nrows.max(1) + 1);
+    (0..count)
+        .map(|_| {
+            let v = if rng.next_f64() < 0.1 { 0.0 } else { rng.uniform(-2.0, 2.0) };
+            (rng.below(nrows), rng.below(ncols), v)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_csr_matvec_equals_densified_matvec() {
+    check(cfg(48), "csr-matvec-vs-dense", |rng| {
+        let nrows = 1 + rng.below(40);
+        let ncols = 1 + rng.below(40);
+        let a = CsrMatrix::from_triplets(nrows, ncols, random_triplets(rng, nrows, ncols));
+        let d = a.to_dense();
+        let x = generators::random_vector(ncols, rng.next_u64());
+        let ys = a.apply(&x);
+        let yd = d.apply(&x);
+        let diff = vector::max_abs_diff(&ys, &yd);
+        prop_assert!(diff < 1e-12, "CSR vs densified matvec diff {diff}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_duplicates_summed() {
+    check(cfg(48), "csr-duplicate-summing", |rng| {
+        let n = 1 + rng.below(20);
+        let trips = random_triplets(rng, n, n);
+        let a = CsrMatrix::from_triplets(n, n, trips.clone());
+        // reference accumulation in a dense table
+        let mut dense = vec![0.0f64; n * n];
+        for (i, j, v) in &trips {
+            dense[i * n + j] += v;
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let got = a.get(i, j);
+                let want = dense[i * n + j];
+                prop_assert!(
+                    (got - want).abs() < 1e-14,
+                    "entry ({i},{j}): csr {got} vs accumulated {want}"
+                );
+            }
+        }
+        // every stored value is a nonzero (cancellations dropped)
+        prop_assert!(a.values().iter().all(|v| *v != 0.0), "stored explicit zero");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_column_order_irrelevant() {
+    check(cfg(48), "csr-out-of-order-columns", |rng| {
+        let n = 2 + rng.below(20);
+        let mut trips = random_triplets(rng, n, n);
+        let a = CsrMatrix::from_triplets(n, n, trips.clone());
+        // shuffle the triplet order (Fisher-Yates on the seeded rng)
+        for i in (1..trips.len()).rev() {
+            trips.swap(i, rng.below(i + 1));
+        }
+        let b = CsrMatrix::from_triplets(n, n, trips);
+        prop_assert!(a == b, "triplet order must not change the built matrix");
+        // column indices sorted within every row
+        for i in 0..n {
+            let lo = a.row_ptr()[i];
+            let hi = a.row_ptr()[i + 1];
+            let cols = &a.col_idx()[lo..hi];
+            prop_assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i} unsorted: {cols:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_policies_solve_csr_like_dense() {
+    // the acceptance property: a CSR convection–diffusion system solves
+    // through all five policies with the same residual trail as its
+    // densified twin, to 1e-10 of the problem scale
+    let rt = std::rc::Rc::new(Runtime::native());
+    let csr = generators::convection_diffusion_2d(7, 7, 6.0, 3.0);
+    let dense = generators::convection_diffusion_2d_dense(7, 7, 6.0, 3.0);
+    let n = csr.nrows();
+    let x_true = generators::random_vector(n, 21);
+    let b = csr.apply(&x_true);
+    let m = 20;
+    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-9, max_restarts: 500 });
+    let bnorm = blas::nrm2(&b);
+
+    for policy in Policy::all() {
+        let mut ec = build_engine(
+            policy,
+            SystemMatrix::Csr(csr.clone()),
+            b.clone(),
+            m,
+            Some(rt.clone()),
+            false,
+        )
+        .unwrap();
+        let rc = solver.solve(ec.as_mut(), None).unwrap();
+        assert!(rc.converged, "{policy} CSR did not converge");
+
+        let mut ed = build_engine(
+            policy,
+            SystemMatrix::Dense(dense.clone()),
+            b.clone(),
+            m,
+            Some(rt.clone()),
+            false,
+        )
+        .unwrap();
+        let rd = solver.solve(ed.as_mut(), None).unwrap();
+        assert!(rd.converged, "{policy} dense did not converge");
+
+        assert_eq!(
+            rc.history.resnorms.len(),
+            rd.history.resnorms.len(),
+            "{policy}: cycle counts differ"
+        );
+        for (k, (rs, rdn)) in rc.history.resnorms.iter().zip(&rd.history.resnorms).enumerate() {
+            assert!(
+                (rs - rdn).abs() <= 1e-10 * bnorm,
+                "{policy} cycle {k}: csr {rs} vs dense {rdn}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Batcher invariants
 // ---------------------------------------------------------------------------
 
@@ -269,6 +423,7 @@ fn prop_batcher_conserves_and_respects_keys() {
                 policy: if rng.next_f64() < 0.5 { Policy::GmatrixLike } else { Policy::GpurVclLike },
                 n: 64 * (1 + rng.below(3)),
                 m: 8,
+                format: if rng.next_f64() < 0.5 { MatrixFormat::Dense } else { MatrixFormat::Csr },
             };
             b.push(key, i as u64);
             pushed.push(i as u64);

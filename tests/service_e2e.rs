@@ -1,22 +1,15 @@
 //! End-to-end coordinator tests: mixed policy streams through the running
-//! service, device jobs included when artifacts exist.
+//! service, device jobs included (the native runtime needs no artifacts).
 
 use std::sync::Arc;
 
 use gmres_rs::backend::Policy;
 use gmres_rs::coordinator::{MatrixSpec, ServiceConfig, SolveRequest, SolveService};
 use gmres_rs::gmres::GmresConfig;
-use gmres_rs::runtime::Runtime;
+use gmres_rs::linalg::MatrixFormat;
 
-fn artifact_dims() -> Option<(usize, usize)> {
-    match Runtime::from_env() {
-        Ok(rt) => Some((rt.manifest().sizes()[0], rt.manifest().m)),
-        Err(e) => {
-            eprintln!("skipping device jobs: {e}");
-            None
-        }
-    }
-}
+const N: usize = 64;
+const M: usize = 8;
 
 fn req(n: usize, m: usize, policy: Option<Policy>, seed: u64) -> SolveRequest {
     SolveRequest {
@@ -26,9 +19,16 @@ fn req(n: usize, m: usize, policy: Option<Policy>, seed: u64) -> SolveRequest {
     }
 }
 
+fn sparse_req(n: usize, m: usize, policy: Option<Policy>, seed: u64) -> SolveRequest {
+    SolveRequest {
+        matrix: MatrixSpec::ConvDiff1d { n, seed },
+        config: GmresConfig { m, tol: 1e-8, max_restarts: 200 },
+        policy,
+    }
+}
+
 #[test]
 fn mixed_policy_stream_completes() {
-    let Some((n, m)) = artifact_dims() else { return };
     let svc = SolveService::start(ServiceConfig { cpu_workers: 2, ..Default::default() });
     let policies = [
         Some(Policy::SerialNative),
@@ -41,7 +41,7 @@ fn mixed_policy_stream_completes() {
         .map(|i| {
             let svc = svc.clone();
             let policy = policies[i % policies.len()];
-            std::thread::spawn(move || svc.submit(req(n, m, policy, i as u64)))
+            std::thread::spawn(move || svc.submit(req(N, M, policy, i as u64)))
         })
         .collect();
     for h in handles {
@@ -55,8 +55,33 @@ fn mixed_policy_stream_completes() {
 }
 
 #[test]
+fn mixed_format_stream_completes() {
+    // dense and CSR jobs interleave through the same device thread; the
+    // batcher keeps formats in separate batches and every job solves
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 2, ..Default::default() });
+    let handles: Vec<_> = (0..10)
+        .map(|i| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let policy = Some(Policy::GmatrixLike);
+                if i % 2 == 0 {
+                    svc.submit(req(N, M, policy, i as u64))
+                } else {
+                    svc.submit(sparse_req(N, M, policy, i as u64))
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        let out = h.join().unwrap().unwrap();
+        assert!(out.report.converged, "{} failed", out.policy);
+    }
+    assert_eq!(svc.metrics().completed(), 10);
+    svc.shutdown();
+}
+
+#[test]
 fn device_batching_groups_same_shape_jobs() {
-    let Some((n, m)) = artifact_dims() else { return };
     let svc = Arc::new(SolveService::start(ServiceConfig {
         cpu_workers: 1,
         ..Default::default()
@@ -66,7 +91,7 @@ fn device_batching_groups_same_shape_jobs() {
     let handles: Vec<_> = (0..6)
         .map(|i| {
             let svc = svc.clone();
-            std::thread::spawn(move || svc.submit(req(n, m, Some(Policy::GmatrixLike), i)))
+            std::thread::spawn(move || svc.submit(req(N, M, Some(Policy::GmatrixLike), i)))
         })
         .collect();
     for h in handles {
@@ -77,18 +102,36 @@ fn device_batching_groups_same_shape_jobs() {
 
 #[test]
 fn auto_routing_picks_a_policy_and_solves() {
-    let Some((n, m)) = artifact_dims() else { return };
     let svc = SolveService::start(ServiceConfig::default());
-    let out = svc.submit(req(n, m, None, 1)).unwrap();
+    let out = svc.submit(req(N, M, None, 1)).unwrap();
     assert!(out.report.converged);
     assert!(!out.downgraded);
     svc.shutdown();
 }
 
 #[test]
+fn sparse_auto_request_solves() {
+    let svc = SolveService::start(ServiceConfig::default());
+    let out = svc.submit(sparse_req(200, M, None, 2)).unwrap();
+    assert!(out.report.converged);
+    assert_eq!(out.report.n, 200);
+    svc.shutdown();
+}
+
+#[test]
+fn sparse_explicit_device_request_solves_on_device() {
+    let svc = SolveService::start(ServiceConfig::default());
+    let out = svc.submit(sparse_req(N, M, Some(Policy::GpurVclLike), 3)).unwrap();
+    assert!(out.report.converged);
+    assert!(!out.downgraded, "sparse n=64 fits the card easily");
+    assert_eq!(out.policy, Policy::GpurVclLike);
+    svc.shutdown();
+}
+
+#[test]
 fn downgrade_path_executes_on_host() {
     // tiny admission budget: every device request must downgrade AND still
-    // complete on the serial fallback — no artifacts needed.
+    // complete on the serial fallback.
     let svc = SolveService::start(ServiceConfig {
         router: gmres_rs::coordinator::RouterConfig {
             mem_fraction: 1e-9,
@@ -111,4 +154,14 @@ fn queue_seconds_reported() {
     let out = svc.submit(req(48, 6, Some(Policy::SerialNative), 3)).unwrap();
     assert!(out.queue_seconds >= 0.0 && out.queue_seconds < 10.0);
     svc.shutdown();
+}
+
+#[test]
+fn format_is_visible_to_request_shape() {
+    let sparse = sparse_req(100, M, None, 1);
+    assert_eq!(sparse.matrix.format(), MatrixFormat::Csr);
+    assert_eq!(sparse.matrix.shape().nnz, 3 * 100 - 2);
+    let dense = req(100, M, None, 1);
+    assert_eq!(dense.matrix.format(), MatrixFormat::Dense);
+    assert_eq!(dense.matrix.shape().nnz, 100 * 100);
 }
