@@ -1,0 +1,102 @@
+//! Planner overhead + calibration convergence.
+//!
+//! Two questions: (1) what does planning cost per request — it sits on the
+//! submit path, so steady-state (memoized cost splits) must stay in the
+//! microsecond range; (2) how fast does online calibration squeeze the
+//! cost table's bias out of the served predictions over a stream of real
+//! solves.
+
+use gmres_rs::backend::{build_engine, Policy};
+use gmres_rs::coordinator::MatrixSpec;
+use gmres_rs::gmres::{GmresConfig, RestartedGmres};
+use gmres_rs::linalg::{generators, MatrixFormat, SystemMatrix, SystemShape};
+use gmres_rs::planner::Planner;
+use gmres_rs::util::bench::{black_box, human_time, Bencher, Table};
+
+fn main() -> anyhow::Result<()> {
+    planning_overhead();
+    calibration_convergence()?;
+    Ok(())
+}
+
+fn planning_overhead() {
+    println!("planning overhead per request (auto enumeration, 32 candidates)\n");
+    let planner = Planner::default();
+    let config = GmresConfig::default();
+    let shapes: Vec<SystemShape> = [512usize, 1000, 4000, 10_000]
+        .iter()
+        .flat_map(|&n| [SystemShape::dense(n), MatrixSpec::ConvDiff1d { n, seed: 0 }.shape()])
+        .collect();
+
+    // cold: every (policy, shape, m) cost split computed from the charge
+    // replay; warm: memoized — the steady state a serving router sees
+    let cold = Bencher { warmup: 0, iters: 1, max_seconds: 30.0 }.run(|| {
+        let fresh = Planner::default();
+        for s in &shapes {
+            black_box(fresh.plan(s, &config, None));
+        }
+    });
+    for s in &shapes {
+        planner.plan(s, &config, None);
+    }
+    let rounds = 100usize;
+    let warm = Bencher { warmup: 2, iters: 10, max_seconds: 30.0 }.run(|| {
+        for _ in 0..rounds {
+            for s in &shapes {
+                black_box(planner.plan(s, &config, None));
+            }
+        }
+    });
+    let per_plan = warm.mean / (rounds * shapes.len()) as f64;
+    let mut t = Table::new(&["path", "per plan"]);
+    t.row(&["cold (first sight of shape)".into(), human_time(cold.mean / shapes.len() as f64)]);
+    t.row(&["warm (memoized splits)".into(), human_time(per_plan)]);
+    println!("{}", t.render());
+    assert!(
+        per_plan < 1e-3,
+        "warm planning must stay far under a millisecond, got {}",
+        human_time(per_plan)
+    );
+    println!(
+        "warm planning is {} per request — {}\n",
+        human_time(per_plan),
+        if per_plan < 100e-6 { "microsecond range, OK" } else { "WARN: above 100 µs" }
+    );
+}
+
+fn calibration_convergence() -> anyhow::Result<()> {
+    println!("calibration convergence: served prediction error over a solve stream\n");
+    let planner = Planner::default();
+    let config = GmresConfig { m: 8, tol: 1e-8, max_restarts: 200, ..Default::default() };
+    let sizes = [48usize, 64, 80];
+    let mut t = Table::new(&["solves", "window mean |pred-meas|/meas", "coeff(serial-r)"]);
+    let mut window_err = 0.0;
+    let window = 8usize;
+    for i in 0..40 {
+        let n = sizes[i % sizes.len()];
+        let shape = SystemShape::dense(n);
+        let plan = planner.plan(&shape, &config, Some(Policy::SerialR));
+        let (a, b, _) = generators::table1_system(n, 7000 + i as u64);
+        let mut engine =
+            build_engine(Policy::SerialR, SystemMatrix::Dense(a), b, config.m, None, false)?;
+        let report = RestartedGmres::new(config).solve(engine.as_mut(), None)?;
+        let measured = report.sim_seconds;
+        window_err += ((plan.predicted_seconds - measured) / measured).abs();
+        planner.observe(&plan, MatrixFormat::Dense, measured);
+        if (i + 1) % window == 0 {
+            t.row(&[
+                (i + 1).to_string(),
+                format!("{:.1}%", window_err / window as f64 * 100.0),
+                format!("{:.3}", planner.coeff(Policy::SerialR, MatrixFormat::Dense)),
+            ]);
+            window_err = 0.0;
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "running mean error after {} solves: {:.1}%",
+        planner.observations(),
+        planner.mean_abs_rel_error().unwrap_or(f64::NAN) * 100.0
+    );
+    Ok(())
+}

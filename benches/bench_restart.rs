@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
         let (a, b, _) = generators::table1_system(n, 11);
         let shape = SystemShape::dense(n);
         let mut engine = build_engine(Policy::SerialNative, a.into(), b, m, None, false)?;
-        let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-8, max_restarts: 500 });
+        let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-8, max_restarts: 500, ..Default::default() });
         let rep = solver.solve(engine.as_mut(), None)?;
         assert!(rep.converged, "m={m} did not converge");
         let matvecs = rep.cycles * (m + 2);

@@ -1,13 +1,21 @@
 #!/usr/bin/env bash
-# CI gate: format check (advisory), tier-1 build+test, sparse bench smoke.
+# CI gate: format check (blocking), clippy (blocking), tier-1 build+test,
+# sparse bench smoke, planner explain smoke.
 set -euo pipefail
 cd "$(dirname "$0")"
 
-echo "==> cargo fmt --check (advisory)"
+echo "==> cargo fmt --check"
 if command -v rustfmt >/dev/null 2>&1; then
-    cargo fmt --check || echo "WARN: rustfmt differences (non-blocking)"
+    cargo fmt --check
 else
-    echo "rustfmt not installed; skipping"
+    echo "rustfmt not installed; skipping (install the rustfmt component)"
+fi
+
+echo "==> cargo clippy --all-targets -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "clippy not installed; skipping (install the clippy component)"
 fi
 
 echo "==> cargo build --release"
@@ -21,5 +29,10 @@ echo "==> sparse-vs-dense smoke (5s budget)"
 # both must converge through the native virtual device
 ./target/release/gmres-rs solve --n 512 --format csr --policy gpuR --m 10
 ./target/release/gmres-rs solve --n 512 --format dense --policy gpuR --m 10
+
+echo "==> planner smoke"
+# ranked candidate table + preconditioned solve must both run
+./target/release/gmres-rs plan --n 4000 --format dense
+./target/release/gmres-rs solve --n 512 --format csr --precond jacobi --m 10
 
 echo "CI OK"

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-8, max_restarts: 100 });
+    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-8, max_restarts: 100, ..Default::default() });
     let mut table = Table::new(&[
         "policy",
         "cycles",

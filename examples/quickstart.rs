@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let mut engine = build_engine(Policy::SerialNative, a.into(), b, /* m */ 30, None, false)?;
 
     // 3. Configure and run restarted GMRES(30).
-    let solver = RestartedGmres::new(GmresConfig { m: 30, tol: 1e-8, max_restarts: 100 });
+    let solver = RestartedGmres::new(GmresConfig { m: 30, tol: 1e-8, max_restarts: 100, ..Default::default() });
     let report = solver.solve(engine.as_mut(), None)?;
 
     println!("{}", report.summary());

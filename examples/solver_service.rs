@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
                     let n = sizes[i % sizes.len()];
                     let req = SolveRequest {
                         matrix: MatrixSpec::Table1 { n, seed: i as u64 },
-                        config: GmresConfig { m, tol: 1e-6, max_restarts: 200 },
+                        config: GmresConfig { m, tol: 1e-6, max_restarts: 200, ..Default::default() },
                         policy: policies[i % policies.len()],
                     };
                     outs.push(svc.submit(req));
@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     // (the paper's device-memory cap as a scheduling decision).
     let oversized = SolveRequest {
         matrix: MatrixSpec::Table1 { n: 128, seed: 99 },
-        config: GmresConfig { m, tol: 1e-6, max_restarts: 200 },
+        config: GmresConfig { m, tol: 1e-6, max_restarts: 200, ..Default::default() },
         policy: Some(Policy::GpurVclLike),
     };
     // shrink the admission budget so n=128 "exceeds" the card
@@ -122,6 +122,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("metrics: {}", svc.metrics().render());
+    println!("{}", gmres_rs::report::plan_table::render_calibration(svc.router().planner()));
     svc.shutdown();
     assert_eq!(ok, requests, "all requests must complete");
     println!("solver_service e2e OK");

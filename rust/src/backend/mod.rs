@@ -191,6 +191,29 @@ pub fn build_engine(
     }
 }
 
+/// [`build_engine`] with the solve config's preconditioner applied first.
+///
+/// Left preconditioning is materialized *explicitly* (`M⁻¹A x = M⁻¹b`, a
+/// one-time `O(nnz)` row scaling for Jacobi), so every policy — including
+/// the fused device cycle — runs the preconditioned system through its
+/// unchanged engine, provider and cost-charging paths.
+///
+/// Taking the whole [`GmresConfig`] keeps one source of truth: the engine
+/// is built with exactly the `m` and `precond` the solver (and thus the
+/// [`crate::gmres::SolveReport`]) will carry, so a report can never claim
+/// a preconditioner the engine did not run.
+pub fn build_engine_preconditioned(
+    policy: Policy,
+    a: SystemMatrix,
+    b: Vec<f64>,
+    config: &crate::gmres::GmresConfig,
+    runtime: Option<Rc<Runtime>>,
+    trace: bool,
+) -> Result<Box<dyn CycleEngine>> {
+    let (a, b) = config.precond.apply_to_system(a, b);
+    build_engine(policy, a, b, config.m, runtime, trace)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

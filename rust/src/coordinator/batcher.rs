@@ -11,17 +11,21 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::backend::Policy;
+use crate::gmres::PrecondKind;
 use crate::linalg::MatrixFormat;
 
 /// Batch compatibility key.  Format is part of compatibility: a resident
 /// dense `gemv` executable cannot serve a CSR job and vice versa, so the
-/// device only switches layout between batches, never inside one.
+/// device only switches layout between batches, never inside one.  The
+/// preconditioner is too: a Jacobi job's resident matrix is the row-scaled
+/// `D⁻¹A`, not `A`, so it can never share residency with an identity job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub policy: Policy,
     pub n: usize,
     pub m: usize,
     pub format: MatrixFormat,
+    pub precond: PrecondKind,
 }
 
 /// A queued item with arrival time.
@@ -115,7 +119,13 @@ mod tests {
     use super::*;
 
     fn key(n: usize) -> BatchKey {
-        BatchKey { policy: Policy::GmatrixLike, n, m: 30, format: MatrixFormat::Dense }
+        BatchKey {
+            policy: Policy::GmatrixLike,
+            n,
+            m: 30,
+            format: MatrixFormat::Dense,
+            precond: PrecondKind::Identity,
+        }
     }
 
     #[test]

@@ -136,6 +136,9 @@ pub struct SolveOutcome {
     pub policy: Policy,
     /// Fell back from the requested policy (device memory admission).
     pub downgraded: bool,
+    /// The execution plan that ran: restart, preconditioner and the
+    /// planner's predicted seconds (compare with `report.sim_seconds`).
+    pub plan: crate::planner::Plan,
     pub report: SolveReport,
     /// Seconds spent queued before a worker picked the job up.
     pub queue_seconds: f64,

@@ -9,8 +9,10 @@
 //! * **[`router`]** — picks the backend for each request: honours explicit
 //!   policy requests, performs *device-memory admission control* (a job
 //!   whose working set exceeds the card falls back to the host — the
-//!   paper's capacity cap, turned into scheduling logic), and auto-selects
-//!   the modeled-fastest policy otherwise.
+//!   paper's capacity cap, turned into scheduling logic), and otherwise
+//!   delegates to the shared [`crate::planner::Planner`], which enumerates
+//!   and prices candidate plans (policy × restart × preconditioner) and
+//!   learns cost coefficients online from worker feedback.
 //! * **[`batcher`]** — groups queued device jobs by `(policy, n, m,
 //!   format)` so one compiled executable and one resident matrix (dense or
 //!   CSR — never mixed in a batch) serve a whole batch.

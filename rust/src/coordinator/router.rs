@@ -7,107 +7,101 @@
 //! downgraded to the serial host backend instead of failing — and that
 //! decision is visible in the response (`downgraded`).
 //!
-//! Admission and auto-selection are [`SystemShape`]-aware: a sparse job is
-//! budgeted by its nnz-sized device layout and priced by the SpMV cost
-//! model, so CSR systems admit (and route sensibly) at orders whose dense
-//! form would be rejected outright.
+//! Cost prediction and auto-selection are owned by the
+//! [`crate::planner::Planner`]: the router hands every request to it and
+//! gets back a full [`Plan`] (policy + restart + preconditioner + predicted
+//! seconds), which rides with the work item so the worker can execute it
+//! and report the measured seconds back for online calibration.
+
+use std::sync::Arc;
 
 use crate::backend::Policy;
-use crate::device::memory::working_set_bytes;
 use crate::device::GpuSpec;
+use crate::gmres::GmresConfig;
 use crate::linalg::SystemShape;
-use crate::report::model;
+use crate::planner::{Plan, Planner, PlannerConfig};
 
 use super::job::SolveRequest;
 
-/// Router decision.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Router decision: the policy that runs, plus the full execution plan the
+/// planner produced for it.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Route {
     pub policy: Policy,
     /// True when the requested/auto policy was replaced by a host fallback.
     pub downgraded: bool,
+    /// The plan the worker executes (restart, preconditioner, prediction).
+    pub plan: Plan,
 }
 
 /// Router configuration.
 #[derive(Clone, Debug)]
 pub struct RouterConfig {
-    /// Device spec used for admission (capacity) and auto-selection
-    /// (modeled times).
+    /// Device spec used for admission (capacity) and planner pricing.
     pub gpu: GpuSpec,
     /// Fraction of device memory a single job may claim (leave headroom for
     /// batching).
     pub mem_fraction: f64,
     /// Policy used when a device policy cannot be admitted.
     pub fallback: Policy,
-    /// Reference cycle count used for auto-selection cost prediction.
-    pub assumed_cycles: usize,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self {
-            gpu: GpuSpec::geforce_840m(),
-            mem_fraction: 0.9,
-            fallback: Policy::SerialR,
-            assumed_cycles: 5,
-        }
+        Self { gpu: GpuSpec::geforce_840m(), mem_fraction: 0.9, fallback: Policy::SerialR }
     }
 }
 
 /// Stateless routing logic (admission is against *configured* capacity; the
-/// live allocator guards the worker side).
+/// live allocator guards the worker side).  Owns the shared planner, which
+/// holds the single live copy of the configuration ([`Router::new`] converts
+/// the [`RouterConfig`] input into the planner's config).
 #[derive(Clone, Debug)]
 pub struct Router {
-    config: RouterConfig,
+    planner: Arc<Planner>,
 }
 
 impl Router {
     pub fn new(config: RouterConfig) -> Self {
-        Self { config }
+        let planner = Arc::new(Planner::new(PlannerConfig {
+            gpu: config.gpu,
+            mem_fraction: config.mem_fraction,
+            fallback: config.fallback,
+            ..PlannerConfig::default()
+        }));
+        Self { planner }
     }
 
-    pub fn config(&self) -> &RouterConfig {
-        &self.config
+    /// The shared planner (workers clone this to feed measurements back;
+    /// `planner().config()` is the live routing configuration).
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
     }
 
     /// Admission test for one policy over a system shape, restart m.
     pub fn admits(&self, policy: Policy, shape: &SystemShape, m: usize) -> bool {
-        let budget = (self.config.gpu.mem_capacity as f64 * self.config.mem_fraction) as usize;
-        working_set_bytes(shape, m, policy) <= budget
+        self.planner.admits(policy, shape, m)
     }
 
-    /// Auto-select the modeled-fastest admissible policy.
+    /// Auto-select the modeled-fastest admissible policy *at this restart,
+    /// unpreconditioned* (candidates at other restart lengths or precond
+    /// settings are excluded; full multi-axis plans come from
+    /// [`Router::route`]).
     pub fn auto_policy(&self, shape: &SystemShape, m: usize) -> Policy {
-        let mut best = self.config.fallback;
-        let mut best_t = model::predict_seconds(best, shape, m, self.config.assumed_cycles);
-        for p in Policy::gpu_policies() {
-            if !self.admits(p, shape, m) {
-                continue;
-            }
-            let t = model::predict_seconds(p, shape, m, self.config.assumed_cycles);
-            if t < best_t {
-                best = p;
-                best_t = t;
-            }
-        }
-        best
+        let config = GmresConfig { m, ..GmresConfig::default() };
+        self.planner
+            .enumerate(shape, &config)
+            .into_iter()
+            .find(|c| c.admitted && c.plan.m == m && c.plan.precond == config.precond)
+            .map(|c| c.plan.policy)
+            .unwrap_or(self.planner.config().fallback)
     }
 
-    /// Route a request.
+    /// Route a request through the planner.
     pub fn route(&self, req: &SolveRequest) -> Route {
         let shape = req.matrix.shape();
-        let m = req.config.m;
-        match req.policy {
-            Some(p) if !p.needs_runtime() => Route { policy: p, downgraded: false },
-            Some(p) => {
-                if self.admits(p, &shape, m) {
-                    Route { policy: p, downgraded: false }
-                } else {
-                    Route { policy: self.config.fallback, downgraded: true }
-                }
-            }
-            None => Route { policy: self.auto_policy(&shape, m), downgraded: false },
-        }
+        let plan = self.planner.plan(&shape, &req.config, req.policy);
+        Route { policy: plan.policy, downgraded: plan.downgraded, plan }
     }
 }
 
@@ -200,5 +194,21 @@ mod tests {
         assert!(!tight.admits(Policy::GmatrixLike, &dense10k, 30));
         let loose = Router::new(RouterConfig::default());
         assert!(loose.admits(Policy::GmatrixLike, &dense10k, 30));
+    }
+
+    #[test]
+    fn route_carries_an_executable_plan() {
+        let r = Router::new(RouterConfig::default());
+        // explicit: plan pins the request's restart + preconditioner
+        let mut request = req(400, Some(Policy::SerialR));
+        request.config.m = 12;
+        let route = r.route(&request);
+        assert_eq!(route.plan.policy, route.policy);
+        assert_eq!(route.plan.m, 12);
+        assert!(route.plan.predicted_seconds > 0.0);
+        // auto: plan comes from enumeration and is always admissible
+        let auto = r.route(&req(10_000, None));
+        assert!(auto.plan.predicted_cycles >= 1);
+        assert!(r.admits(auto.plan.policy, &SystemShape::dense(10_000), auto.plan.m));
     }
 }

@@ -62,6 +62,8 @@ impl SolveService {
     /// Start workers and return the handle.
     pub fn start(config: ServiceConfig) -> Arc<Self> {
         let metrics = Arc::new(Metrics::new());
+        let router = Router::new(config.router);
+        let planner = router.planner().clone();
         let (device_tx, device_rx) = mpsc::channel();
         let (cpu_tx, cpu_rx) = mpsc::channel();
         let mut handles = Vec::new();
@@ -70,10 +72,11 @@ impl SolveService {
             device_rx,
             config.batcher,
             metrics.clone(),
+            planner.clone(),
         ));
-        handles.extend(spawn_cpu_pool(config.cpu_workers, cpu_rx, metrics.clone()));
+        handles.extend(spawn_cpu_pool(config.cpu_workers, cpu_rx, metrics.clone(), planner));
         Arc::new(Self {
-            router: Router::new(config.router),
+            router,
             metrics,
             device_tx: Mutex::new(Some(device_tx)),
             cpu_tx: Mutex::new(Some(cpu_tx)),
@@ -132,7 +135,7 @@ impl SolveService {
         let item = WorkItem {
             id,
             request,
-            policy: route.policy,
+            plan: route.plan,
             downgraded: route.downgraded,
             submitted_at: Instant::now(),
             reply: reply_tx,
@@ -186,7 +189,7 @@ mod tests {
     fn req(n: usize, policy: Option<Policy>) -> SolveRequest {
         SolveRequest {
             matrix: MatrixSpec::Table1 { n, seed: 0 },
-            config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 100 },
+            config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 100, ..Default::default() },
             policy,
         }
     }

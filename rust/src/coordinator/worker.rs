@@ -4,6 +4,11 @@
 //! The device thread batches compatible jobs ([`super::batcher`]) so a
 //! resident executable serves consecutive solves; the CPU pool is plain
 //! work stealing off a shared channel.
+//!
+//! Every worker executes the *plan* the router attached (policy + restart +
+//! preconditioner) and closes the planner's feedback loop: after each solve
+//! it reports the modeled seconds the engine actually accumulated, which
+//! the [`Planner`] folds into its per-policy cost coefficients.
 
 use std::path::PathBuf;
 use std::rc::Rc;
@@ -11,11 +16,12 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::backend::{build_engine, Policy};
+use crate::backend::build_engine_preconditioned;
 use crate::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
 use crate::coordinator::job::{JobId, SolveOutcome, SolveRequest};
 use crate::coordinator::metrics::Metrics;
-use crate::gmres::RestartedGmres;
+use crate::gmres::{GmresConfig, RestartedGmres};
+use crate::planner::{Plan, Planner};
 use crate::runtime::Runtime;
 use crate::Result;
 
@@ -23,25 +29,33 @@ use crate::Result;
 pub struct WorkItem {
     pub id: JobId,
     pub request: SolveRequest,
-    pub policy: Policy,
+    /// The execution plan the router/planner produced for this request.
+    pub plan: Plan,
     pub downgraded: bool,
     pub submitted_at: Instant,
     pub reply: mpsc::SyncSender<Result<SolveOutcome>>,
 }
 
 /// Execute one item to completion (shared by device + cpu paths).
-fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics) {
+fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, planner: &Planner) {
     let started = Instant::now();
     let queue_seconds = started.duration_since(item.submitted_at).as_secs_f64();
+    let plan = item.plan;
     let outcome = (|| -> Result<SolveOutcome> {
         let (a, b) = item.request.matrix.materialize();
-        let mut engine = build_engine(item.policy, a, b, item.request.config.m, runtime, false)?;
-        let solver = RestartedGmres::new(item.request.config);
+        let format = a.format();
+        let config = GmresConfig { m: plan.m, precond: plan.precond, ..item.request.config };
+        let mut engine =
+            build_engine_preconditioned(plan.policy, a, b, &config, runtime, false)?;
+        let solver = RestartedGmres::new(config);
         let report = solver.solve(engine.as_mut(), None)?;
+        // feedback: predicted vs measured modeled seconds -> calibration
+        planner.observe(&plan, format, report.sim_seconds);
         Ok(SolveOutcome {
             id: item.id,
-            policy: item.policy,
+            policy: plan.policy,
             downgraded: item.downgraded,
+            plan,
             report,
             queue_seconds,
         })
@@ -54,13 +68,14 @@ fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics) {
     let _ = item.reply.send(outcome);
 }
 
-/// Spawn the device thread.  Owns the (non-`Send`) PJRT runtime; receives
+/// Spawn the device thread.  Owns the (non-`Send`) device runtime; receives
 /// items, batches by shape, executes sequentially (one GPU, one stream).
 pub fn spawn_device_thread(
     artifacts_dir: Option<PathBuf>,
     rx: mpsc::Receiver<WorkItem>,
     batcher_config: BatcherConfig,
     metrics: Arc<Metrics>,
+    planner: Arc<Planner>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
         .name("gmres-device".into())
@@ -94,14 +109,14 @@ pub fn spawn_device_thread(
                 }
                 while let Some((_key, batch)) = batcher.next_batch() {
                     for pending in batch {
-                        run_item(pending.item, runtime.clone(), &metrics);
+                        run_item(pending.item, runtime.clone(), &metrics, &planner);
                     }
                 }
             }
             // drain anything left after channel close
             while let Some((_k, batch)) = batcher.next_batch() {
                 for pending in batch {
-                    run_item(pending.item, runtime.clone(), &metrics);
+                    run_item(pending.item, runtime.clone(), &metrics, &planner);
                 }
             }
         })
@@ -109,11 +124,14 @@ pub fn spawn_device_thread(
 }
 
 fn push(batcher: &mut Batcher<WorkItem>, item: WorkItem) {
+    // batch by what actually executes: the plan's policy, restart and
+    // preconditioner (a Jacobi job's resident matrix is D⁻¹A, not A)
     let key = BatchKey {
-        policy: item.policy,
+        policy: item.plan.policy,
         n: item.request.matrix.order(),
-        m: item.request.config.m,
+        m: item.plan.m,
         format: item.request.matrix.format(),
+        precond: item.plan.precond,
     };
     batcher.push(key, item);
 }
@@ -123,12 +141,14 @@ pub fn spawn_cpu_pool(
     count: usize,
     rx: mpsc::Receiver<WorkItem>,
     metrics: Arc<Metrics>,
+    planner: Arc<Planner>,
 ) -> Vec<std::thread::JoinHandle<()>> {
     let rx = Arc::new(Mutex::new(rx));
     (0..count.max(1))
         .map(|i| {
             let rx = rx.clone();
             let metrics = metrics.clone();
+            let planner = planner.clone();
             std::thread::Builder::new()
                 .name(format!("gmres-cpu-{i}"))
                 .spawn(move || loop {
@@ -137,7 +157,7 @@ pub fn spawn_cpu_pool(
                         guard.recv()
                     };
                     match item {
-                        Ok(item) => run_item(item, None, &metrics),
+                        Ok(item) => run_item(item, None, &metrics, &planner),
                         Err(_) => break,
                     }
                 })
@@ -149,6 +169,7 @@ pub fn spawn_cpu_pool(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::Policy;
     use crate::coordinator::job::MatrixSpec;
     use crate::gmres::GmresConfig;
 
@@ -159,10 +180,10 @@ mod tests {
                 id: JobId(1),
                 request: SolveRequest {
                     matrix: MatrixSpec::Table1 { n, seed: 0 },
-                    config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 100 },
+                    config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 100, ..Default::default() },
                     policy: Some(policy),
                 },
-                policy,
+                plan: Plan::pinned(policy, 8),
                 downgraded: false,
                 submitted_at: Instant::now(),
                 reply: tx,
@@ -174,8 +195,9 @@ mod tests {
     #[test]
     fn cpu_pool_executes_serial_jobs() {
         let metrics = Arc::new(Metrics::new());
+        let planner = Arc::new(Planner::default());
         let (tx, rx) = mpsc::channel();
-        let handles = spawn_cpu_pool(2, rx, metrics.clone());
+        let handles = spawn_cpu_pool(2, rx, metrics.clone(), planner);
         let (it, reply) = item(48, Policy::SerialNative);
         tx.send(it).unwrap();
         let outcome = reply.recv().unwrap().unwrap();
@@ -190,8 +212,9 @@ mod tests {
     #[test]
     fn cpu_pool_survives_failed_job() {
         let metrics = Arc::new(Metrics::new());
+        let planner = Arc::new(Planner::default());
         let (tx, rx) = mpsc::channel();
-        let handles = spawn_cpu_pool(1, rx, metrics.clone());
+        let handles = spawn_cpu_pool(1, rx, metrics.clone(), planner);
         // GPU policy without runtime -> job errors, worker must keep going
         let (bad, bad_reply) = item(16, Policy::GmatrixLike);
         tx.send(bad).unwrap();
@@ -205,5 +228,29 @@ mod tests {
         }
         assert_eq!(metrics.failed(), 1);
         assert_eq!(metrics.completed(), 1);
+    }
+
+    #[test]
+    fn worker_reports_measurements_to_the_planner() {
+        let metrics = Arc::new(Metrics::new());
+        let planner = Arc::new(Planner::default());
+        let (tx, rx) = mpsc::channel();
+        let handles = spawn_cpu_pool(1, rx, metrics.clone(), planner.clone());
+        // a *priced* plan (serial-r models nonzero seconds) closes the loop
+        let (mut it, reply) = item(40, Policy::SerialR);
+        it.plan = planner.plan(
+            &it.request.matrix.shape(),
+            &it.request.config,
+            Some(Policy::SerialR),
+        );
+        tx.send(it).unwrap();
+        let outcome = reply.recv().unwrap().unwrap();
+        assert!(outcome.report.sim_seconds > 0.0);
+        assert_eq!(planner.observations(), 1);
+        assert!(outcome.plan.predicted_seconds > 0.0);
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

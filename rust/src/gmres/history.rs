@@ -3,6 +3,7 @@
 
 
 use crate::backend::Policy;
+use crate::gmres::precond::PrecondKind;
 
 /// Per-cycle residual trail.
 #[derive(Clone, Debug, Default)]
@@ -47,11 +48,19 @@ pub struct SolveReport {
     pub policy: Policy,
     pub n: usize,
     pub m: usize,
+    /// Preconditioner the solve ran under.
+    pub precond: PrecondKind,
     /// Final iterate.
     pub x: Vec<f64>,
     /// Final true residual norm.
+    ///
+    /// Left-preconditioned solves (`precond != Identity`) measure the
+    /// residual of the preconditioned system `M⁻¹A x = M⁻¹b` — the
+    /// standard left-preconditioned GMRES convergence test.  Check
+    /// `precond` to know which norm this (and `rel_resnorm`) is in.
     pub resnorm: f64,
-    /// Relative residual `||r|| / ||b||`.
+    /// Relative residual `||r|| / ||b||` (in the preconditioned norm when
+    /// `precond != Identity`; see `resnorm`).
     pub rel_resnorm: f64,
     pub converged: bool,
     pub cycles: usize,
@@ -66,10 +75,11 @@ impl SolveReport {
     /// One human line for CLI output.
     pub fn summary(&self) -> String {
         format!(
-            "{:>14}  n={:<6} m={:<3} cycles={:<4} rel_res={:.2e} conv={} wall={:.4}s sim={:.4}s",
+            "{:>14}  n={:<6} m={:<3} pre={:<8} cycles={:<4} rel_res={:.2e} conv={} wall={:.4}s sim={:.4}s",
             self.policy.name(),
             self.n,
             self.m,
+            self.precond.name(),
             self.cycles,
             self.rel_resnorm,
             self.converged,

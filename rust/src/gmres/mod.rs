@@ -11,4 +11,5 @@ pub mod solver;
 
 pub use arnoldi::Ortho;
 pub use history::{ConvergenceHistory, SolveReport};
+pub use precond::PrecondKind;
 pub use solver::{GmresConfig, RestartedGmres};

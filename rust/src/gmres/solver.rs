@@ -7,10 +7,11 @@ use std::time::Instant;
 
 use crate::backend::CycleEngine;
 use crate::gmres::history::{ConvergenceHistory, SolveReport};
+use crate::gmres::precond::PrecondKind;
 use crate::Result;
 
 /// Solver configuration (defaults mirror the paper's setup: GMRES(30),
-/// relative tolerance 1e-6).
+/// relative tolerance 1e-6, unpreconditioned).
 #[derive(Clone, Copy, Debug)]
 pub struct GmresConfig {
     /// Restart length m.
@@ -19,11 +20,14 @@ pub struct GmresConfig {
     pub tol: f64,
     /// Max restart cycles before giving up.
     pub max_restarts: usize,
+    /// Preconditioner the engine was (or should be) built with — carried so
+    /// plans, reports and the service agree on what actually ran.
+    pub precond: PrecondKind,
 }
 
 impl Default for GmresConfig {
     fn default() -> Self {
-        Self { m: 30, tol: 1e-6, max_restarts: 200 }
+        Self { m: 30, tol: 1e-6, max_restarts: 200, precond: PrecondKind::Identity }
     }
 }
 
@@ -80,6 +84,7 @@ impl RestartedGmres {
             policy: engine.policy(),
             n,
             m: self.config.m,
+            precond: self.config.precond,
             x,
             resnorm,
             rel_resnorm: if bnorm > 0.0 { resnorm / bnorm } else { resnorm },
@@ -111,7 +116,7 @@ mod tests {
     #[test]
     fn solves_to_tolerance() {
         let (mut e, xt) = native_engine(80, 20, 0);
-        let solver = RestartedGmres::new(GmresConfig { m: 20, tol: 1e-10, max_restarts: 50 });
+        let solver = RestartedGmres::new(GmresConfig { m: 20, tol: 1e-10, max_restarts: 50, ..Default::default() });
         let rep = solver.solve(&mut e, None).unwrap();
         assert!(rep.converged, "cycles {} res {}", rep.cycles, rep.rel_resnorm);
         assert!(rep.rel_resnorm <= 1e-10);
@@ -121,7 +126,7 @@ mod tests {
     #[test]
     fn residual_trail_is_monotone() {
         let (mut e, _) = native_engine(60, 5, 1);
-        let solver = RestartedGmres::new(GmresConfig { m: 5, tol: 1e-12, max_restarts: 100 });
+        let solver = RestartedGmres::new(GmresConfig { m: 5, tol: 1e-12, max_restarts: 100, ..Default::default() });
         let rep = solver.solve(&mut e, None).unwrap();
         assert!(rep.history.is_monotone(1e-10), "{:?}", rep.history.resnorms);
     }
@@ -129,7 +134,7 @@ mod tests {
     #[test]
     fn restart_budget_respected() {
         let (mut e, _) = native_engine(60, 2, 2);
-        let solver = RestartedGmres::new(GmresConfig { m: 2, tol: 1e-300, max_restarts: 3 });
+        let solver = RestartedGmres::new(GmresConfig { m: 2, tol: 1e-300, max_restarts: 3, ..Default::default() });
         let rep = solver.solve(&mut e, None).unwrap();
         assert!(!rep.converged);
         assert_eq!(rep.cycles, 3);
@@ -138,7 +143,7 @@ mod tests {
     #[test]
     fn warm_start_from_solution_converges_immediately() {
         let (mut e, xt) = native_engine(40, 10, 3);
-        let solver = RestartedGmres::new(GmresConfig { m: 10, tol: 1e-8, max_restarts: 10 });
+        let solver = RestartedGmres::new(GmresConfig { m: 10, tol: 1e-8, max_restarts: 10, ..Default::default() });
         let rep = solver.solve(&mut e, Some(xt)).unwrap();
         assert!(rep.converged);
         assert_eq!(rep.cycles, 1);
@@ -147,7 +152,7 @@ mod tests {
     #[test]
     fn mismatched_m_rejected() {
         let (mut e, _) = native_engine(20, 4, 4);
-        let solver = RestartedGmres::new(GmresConfig { m: 5, tol: 1e-8, max_restarts: 10 });
+        let solver = RestartedGmres::new(GmresConfig { m: 5, tol: 1e-8, max_restarts: 10, ..Default::default() });
         assert!(solver.solve(&mut e, None).is_err());
     }
 }

@@ -28,8 +28,13 @@
 //!   implementations, including the R-semantics host engine ([`backend::rvec`]).
 //! * **[`gmres`]** — restarted GMRES driver, host Arnoldi (MGS/CGS), Givens
 //!   least squares, preconditioners.
-//! * **[`coordinator`]** — the L3 solve service: request router, admission
-//!   by device memory, batcher, worker pool, metrics.
+//! * **[`planner`]** — the plan-and-calibrate subsystem: enumerates
+//!   candidate plans over policy × format × restart × preconditioner,
+//!   prices them through the shared cost table plus a convergence model,
+//!   and refines per-policy coefficients online from worker feedback.
+//! * **[`coordinator`]** — the L3 solve service: request router (delegating
+//!   auto-selection to the planner), admission by device memory, batcher,
+//!   worker pool, metrics.
 //! * **[`report`]** — Table 1 / Figure 5 regeneration harness, ablations,
 //!   paper reference data.
 
@@ -38,6 +43,7 @@ pub mod coordinator;
 pub mod device;
 pub mod gmres;
 pub mod linalg;
+pub mod planner;
 pub mod report;
 pub mod runtime;
 pub mod util;

@@ -58,6 +58,17 @@ impl DenseMatrix {
         &self.data
     }
 
+    /// Scale row `i` by `d[i]` in place — the explicit form of left
+    /// diagonal (Jacobi) preconditioning `D⁻¹ A`.
+    pub fn scale_rows(&mut self, d: &[f64]) {
+        assert_eq!(d.len(), self.nrows, "diagonal length mismatch");
+        for (row, &di) in self.data.chunks_mut(self.ncols).zip(d) {
+            for v in row {
+                *v *= di;
+            }
+        }
+    }
+
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data
     }
@@ -167,6 +178,14 @@ mod tests {
         let a = DenseMatrix::identity(7);
         let x: Vec<f64> = (0..7).map(|i| i as f64).collect();
         assert_eq!(a.apply(&x), x);
+    }
+
+    #[test]
+    fn scale_rows_multiplies_each_row() {
+        let mut a = DenseMatrix::from_fn(2, 3, |_, j| (j + 1) as f64);
+        a.scale_rows(&[2.0, 10.0]);
+        assert_eq!(a.row(0), &[2.0, 4.0, 6.0]);
+        assert_eq!(a.row(1), &[10.0, 20.0, 30.0]);
     }
 
     #[test]

@@ -128,6 +128,35 @@ pub fn convdiff_1d_system(n: usize, seed: u64) -> (CsrMatrix, Vec<f64>, Vec<f64>
     (a, b, x_true)
 }
 
+/// Variable-coefficient 1-D convection–diffusion–reaction operator of order
+/// `n`: `-(k(x) u')' + c u' + k(x)/h² u` on the unit interval with
+/// `k(x) = 1 + kvar·x²` (tridiagonal, upwind convection `c >= 0`).
+///
+/// Unlike [`convection_diffusion_1d`] the diagonal varies with `kvar` over
+/// orders of magnitude, so unpreconditioned restarted GMRES stalls on the
+/// spread-out spectrum while Jacobi scaling collapses it — the workload the
+/// preconditioner tests and the planner's precond axis are exercised on.
+pub fn convection_diffusion_1d_varcoef(n: usize, c: f64, kvar: f64) -> CsrMatrix {
+    let h = 1.0 / (n as f64 + 1.0);
+    let kappa = |x: f64| 1.0 + kvar * x * x;
+    let mut trips = Vec::with_capacity(3 * n);
+    for i in 0..n {
+        let x = (i as f64 + 1.0) * h;
+        let dm = kappa(x - 0.5 * h) / (h * h);
+        let dp = kappa(x + 0.5 * h) / (h * h);
+        let u = c / h;
+        let sigma = kappa(x) / (h * h);
+        trips.push((i, i, dm + dp + u + sigma));
+        if i > 0 {
+            trips.push((i, i - 1, -dm - u));
+        }
+        if i + 1 < n {
+            trips.push((i, i + 1, -dp));
+        }
+    }
+    CsrMatrix::from_triplets(n, n, trips)
+}
+
 /// 1-D Laplacian tridiagonal matrix (SPD; the easy sanity workload).
 pub fn laplacian_1d(n: usize) -> CsrMatrix {
     let mut trips = Vec::with_capacity(3 * n);
@@ -195,6 +224,19 @@ mod tests {
         let x = random_vector(12, 1);
         let diff = crate::linalg::vector::max_abs_diff(&s.apply(&x), &d.apply(&x));
         assert!(diff < 1e-10, "diff {diff}");
+    }
+
+    #[test]
+    fn varcoef_diagonal_actually_varies() {
+        // the point of the workload: diag spread of orders of magnitude
+        let a = convection_diffusion_1d_varcoef(64, 8.0, 1000.0);
+        assert_eq!(a.nnz(), 3 * 64 - 2);
+        let d = a.diagonal();
+        let (lo, hi) = d.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), &v| {
+            (lo.min(v), hi.max(v))
+        });
+        assert!(hi / lo > 50.0, "diag spread {lo}..{hi}");
+        assert!(a.to_dense().diagonal_dominance() >= -1e-9);
     }
 
     #[test]

@@ -126,6 +126,17 @@ impl CsrMatrix {
         }
     }
 
+    /// Scale row `i` by `d[i]` in place — the explicit form of left
+    /// diagonal (Jacobi) preconditioning `D⁻¹ A`.
+    pub fn scale_rows(&mut self, d: &[f64]) {
+        assert_eq!(d.len(), self.nrows, "diagonal length mismatch");
+        for (i, &di) in d.iter().enumerate() {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                self.values[k] *= di;
+            }
+        }
+    }
+
     /// Iterate `(row, col, value)` triplets.
     pub fn triplets(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
         (0..self.nrows).flat_map(move |i| {
@@ -207,6 +218,15 @@ mod tests {
     fn diagonal_extraction() {
         let a = sample();
         assert_eq!(a.diagonal(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn scale_rows_multiplies_each_row() {
+        let mut a = sample();
+        a.scale_rows(&[0.5, 2.0]);
+        assert_eq!(a.get(0, 0), 1.0);
+        assert_eq!(a.get(0, 2), 0.5);
+        assert_eq!(a.get(1, 1), 6.0);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //!
 //! ```text
 //! gmres-rs solve  [--n 512] [--policy serial-native] [--format dense|csr]
-//!                 [--m 30] [--tol 1e-6] [--seed 42]
+//!                 [--m 30] [--tol 1e-6] [--precond identity|jacobi] [--seed 42]
+//! gmres-rs plan   [--n 512] [--format dense|csr] [--m 30] [--tol 1e-6]
+//!                 [--policy P]           (alias: explain)
 //! gmres-rs sweep  [--what table1|figure5|blas1|memcap] [--measured]
 //!                 [--format dense|csr] [--sizes a,b,..] [--m 30] [--csv out.csv]
 //! gmres-rs serve  [--requests 16] [--sizes 256,512] [--cpu-workers 2] [--m 8]
@@ -16,12 +18,13 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail};
 
-use gmres_rs::backend::{build_engine, Policy};
+use gmres_rs::backend::{build_engine_preconditioned, Policy};
 use gmres_rs::coordinator::{MatrixSpec, ServiceConfig, SolveRequest, SolveService};
 use gmres_rs::device::GpuSpec;
-use gmres_rs::gmres::{GmresConfig, RestartedGmres};
-use gmres_rs::linalg::{generators, MatrixFormat, SystemMatrix};
-use gmres_rs::report::{figure5, sweep, table1, SweepConfig};
+use gmres_rs::gmres::{GmresConfig, PrecondKind, RestartedGmres};
+use gmres_rs::linalg::{generators, MatrixFormat, SystemMatrix, SystemShape};
+use gmres_rs::planner::{Planner, PlannerConfig};
+use gmres_rs::report::{figure5, plan_table, sweep, table1, SweepConfig};
 use gmres_rs::runtime::Runtime;
 use gmres_rs::util::cli::Args;
 
@@ -29,7 +32,10 @@ const USAGE: &str = "\
 gmres-rs — R-GPU GMRES reproduction (Oancea & Pospisil 2018)
 
 USAGE:
-  gmres-rs solve [--n N] [--policy P] [--format dense|csr] [--m M] [--tol T] [--seed S]
+  gmres-rs solve [--n N] [--policy P] [--format dense|csr] [--m M] [--tol T]
+                 [--precond identity|jacobi] [--seed S]
+  gmres-rs plan  [--n N] [--format dense|csr] [--m M] [--tol T] [--policy P]
+                 (alias: explain — show ranked candidate plans + prediction)
   gmres-rs sweep [--what table1|figure5|blas1|memcap] [--measured]
                  [--format dense|csr] [--sizes a,b,..] [--m M] [--csv PATH]
   gmres-rs serve [--requests R] [--sizes a,b,..] [--cpu-workers W] [--m M]
@@ -38,12 +44,14 @@ USAGE:
 
 POLICIES: serial-r | serial-native | gmatrix | gputools | gpuR
 FORMATS:  dense (Table-1 random ensemble) | csr (convection-diffusion stencil)
+PRECONDS: identity | jacobi (left diagonal scaling)
 ";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     match args.positional.first().map(String::as_str) {
         Some("solve") => cmd_solve(&args),
+        Some("plan") | Some("explain") => cmd_plan(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(),
@@ -67,12 +75,18 @@ fn parse_format(args: &Args) -> anyhow::Result<MatrixFormat> {
     MatrixFormat::parse(&s).ok_or_else(|| anyhow!("bad format `{s}`"))
 }
 
+fn parse_precond(args: &Args) -> anyhow::Result<PrecondKind> {
+    let s = args.get_choice("precond", &["identity", "none", "jacobi", "diag"], "identity")?;
+    PrecondKind::parse(&s).ok_or_else(|| anyhow!("bad precond `{s}`"))
+}
+
 fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     let n = args.get_parse("n", 512usize)?;
     let m = args.get_parse("m", 30usize)?;
     let tol = args.get_parse("tol", 1e-6f64)?;
     let seed = args.get_parse("seed", 42u64)?;
     let format = parse_format(args)?;
+    let precond = parse_precond(args)?;
     let policy_s = args.get_or("policy", "serial-native");
     let policy = Policy::parse(policy_s).ok_or_else(|| {
         anyhow!("unknown policy `{policy_s}` (valid: {})", Policy::names())
@@ -90,19 +104,53 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     };
     let shape = a.shape();
     println!(
-        "system: n={n} format={} nnz={} ({} B on device)",
+        "system: n={n} format={} nnz={} ({} B on device) precond={precond}",
         shape.format,
         shape.nnz,
         shape.matrix_device_bytes()
     );
     let runtime = runtime_if_needed(policy)?;
-    let mut engine = build_engine(policy, a, b, m, runtime, false)?;
-    let solver = RestartedGmres::new(GmresConfig { m, tol, max_restarts: 200 });
+    let config = GmresConfig { m, tol, max_restarts: 200, precond };
+    let mut engine = build_engine_preconditioned(policy, a, b, &config, runtime, false)?;
+    let solver = RestartedGmres::new(config);
     let report = solver.solve(engine.as_mut(), None)?;
     println!("{}", report.summary());
     let err = gmres_rs::linalg::vector::rel_err(&report.x, &x_true);
     println!("  error vs known solution: {err:.2e}");
     println!("  residual trail: {:?}", &report.history.resnorms);
+    Ok(())
+}
+
+/// `plan` / `explain`: show the planner's ranked candidate plans for a
+/// request without running it.
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_parse("n", 512usize)?;
+    let m = args.get_parse("m", 30usize)?;
+    let tol = args.get_parse("tol", 1e-6f64)?;
+    let format = parse_format(args)?;
+    let precond = parse_precond(args)?;
+    let policy = match args.get("policy") {
+        None => None,
+        Some(s) => Some(
+            Policy::parse(s)
+                .ok_or_else(|| anyhow!("unknown policy `{s}` (valid: {})", Policy::names()))?,
+        ),
+    };
+
+    // price the exact workload `solve --format csr` executes
+    let shape = match format {
+        MatrixFormat::Dense => SystemShape::dense(n),
+        MatrixFormat::Csr => MatrixSpec::ConvDiff1d { n, seed: 0 }.shape(),
+    };
+    let config = GmresConfig { m, tol, max_restarts: 200, precond };
+    let planner = Planner::new(PlannerConfig::default());
+    println!("{}", plan_table::render_candidates(&planner, &shape, &config));
+    let plan = planner.plan(&shape, &config, policy);
+    match policy {
+        Some(p) => println!("requested {p}: plan {}", plan.summary()),
+        None => println!("auto plan: {}", plan.summary()),
+    }
+    // (calibration state lives in a *served* planner — `serve` prints it)
     Ok(())
 }
 
@@ -199,7 +247,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 };
                 let req = SolveRequest {
                     matrix,
-                    config: GmresConfig { m, tol: 1e-6, max_restarts: 200 },
+                    config: GmresConfig { m, tol: 1e-6, max_restarts: 200, ..Default::default() },
                     policy: None,
                 };
                 svc.submit(req)
@@ -212,11 +260,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             Ok(out) => {
                 ok += 1;
                 println!(
-                    "  {} n={} policy={} cycles={} queue={:.3}s{}",
+                    "  {} n={} policy={} m={} pre={} cycles={} predicted={:.4}s measured={:.4}s queue={:.3}s{}",
                     out.id,
                     out.report.n,
                     out.policy,
+                    out.plan.m,
+                    out.plan.precond,
                     out.report.cycles,
+                    out.plan.predicted_seconds,
+                    out.report.sim_seconds,
                     out.queue_seconds,
                     if out.downgraded { " (downgraded)" } else { "" }
                 );
@@ -227,6 +279,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let wall = started.elapsed().as_secs_f64();
     println!("{ok} / {requests} solved in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
     println!("metrics: {}", svc.metrics().render());
+    println!(
+        "{}",
+        gmres_rs::report::plan_table::render_calibration(svc.router().planner())
+    );
     svc.shutdown();
     Ok(())
 }

@@ -1,0 +1,167 @@
+//! Online cost calibration: exponentially-weighted per-(policy, format)
+//! coefficients refined from (predicted, measured) pairs the worker reports
+//! after every solve.
+//!
+//! The estimator is deliberately one number per cell: the cost table gets
+//! the *shape* of each policy's cost right (it is charge-for-charge the
+//! engines' own accounting), so what live traffic corrects is a
+//! multiplicative bias — dominated by the convergence model's
+//! cycles-to-tolerance error.  `coeff ← (1-α)·coeff + α·(measured/base)`
+//! converges to that bias and routing sharpens as traffic flows.
+
+use std::collections::HashMap;
+
+use crate::backend::Policy;
+use crate::linalg::MatrixFormat;
+
+#[derive(Clone, Copy, Debug)]
+struct Cell {
+    coeff: f64,
+    observations: u64,
+}
+
+/// One row of a calibration snapshot (for reports and `explain`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationEntry {
+    pub policy: Policy,
+    pub format: MatrixFormat,
+    pub coeff: f64,
+    pub observations: u64,
+}
+
+/// Per-(policy, format) EWMA coefficient store.
+#[derive(Clone, Debug)]
+pub struct Calibrator {
+    alpha: f64,
+    cells: HashMap<(Policy, MatrixFormat), Cell>,
+    observations: u64,
+    abs_rel_err_sum: f64,
+}
+
+impl Calibrator {
+    /// `alpha` is the weight of each new observation (0 < alpha <= 1).
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Self { alpha, cells: HashMap::new(), observations: 0, abs_rel_err_sum: 0.0 }
+    }
+
+    /// Current coefficient for a cell (1.0 until observed).
+    pub fn coeff(&self, policy: Policy, format: MatrixFormat) -> f64 {
+        self.cells.get(&(policy, format)).map_or(1.0, |c| c.coeff)
+    }
+
+    /// Ingest one solve: `base_seconds` is the uncalibrated cost-table
+    /// prediction, `predicted_seconds` the calibrated prediction that was
+    /// served, `measured_seconds` the modeled clock the engine actually
+    /// accumulated.  Degenerate pairs (zero/NaN) are ignored — the
+    /// serial-native policy models zero seconds by design.
+    pub fn observe(
+        &mut self,
+        policy: Policy,
+        format: MatrixFormat,
+        base_seconds: f64,
+        predicted_seconds: f64,
+        measured_seconds: f64,
+    ) {
+        let usable = base_seconds > 0.0
+            && measured_seconds > 0.0
+            && base_seconds.is_finite()
+            && predicted_seconds.is_finite()
+            && measured_seconds.is_finite();
+        if !usable {
+            return;
+        }
+        let cell = self
+            .cells
+            .entry((policy, format))
+            .or_insert(Cell { coeff: 1.0, observations: 0 });
+        cell.coeff = (1.0 - self.alpha) * cell.coeff + self.alpha * measured_seconds / base_seconds;
+        cell.observations += 1;
+        self.observations += 1;
+        self.abs_rel_err_sum += ((predicted_seconds - measured_seconds) / measured_seconds).abs();
+    }
+
+    /// Total usable observations ingested.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Mean |predicted − measured| / measured over everything observed.
+    pub fn mean_abs_rel_error(&self) -> Option<f64> {
+        if self.observations == 0 {
+            None
+        } else {
+            Some(self.abs_rel_err_sum / self.observations as f64)
+        }
+    }
+
+    /// Snapshot of every observed cell, deterministically ordered.
+    pub fn snapshot(&self) -> Vec<CalibrationEntry> {
+        let mut out: Vec<CalibrationEntry> = self
+            .cells
+            .iter()
+            .map(|(&(policy, format), c)| CalibrationEntry {
+                policy,
+                format,
+                coeff: c.coeff,
+                observations: c.observations,
+            })
+            .collect();
+        out.sort_by_key(|e| (e.policy.name(), e.format.name()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unobserved_cells_predict_unity() {
+        let c = Calibrator::new(0.3);
+        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Dense), 1.0);
+        assert_eq!(c.observations(), 0);
+        assert!(c.mean_abs_rel_error().is_none());
+    }
+
+    #[test]
+    fn coeff_converges_to_observed_ratio() {
+        let mut c = Calibrator::new(0.5);
+        for _ in 0..32 {
+            // consistently measures 40% of the base prediction
+            c.observe(Policy::SerialR, MatrixFormat::Dense, 1.0, 1.0, 0.4);
+        }
+        let k = c.coeff(Policy::SerialR, MatrixFormat::Dense);
+        assert!((k - 0.4).abs() < 1e-4, "coeff {k}");
+        assert_eq!(c.observations(), 32);
+    }
+
+    #[test]
+    fn cells_are_independent() {
+        let mut c = Calibrator::new(1.0);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, 1.0, 1.0, 2.0);
+        c.observe(Policy::GpurVclLike, MatrixFormat::Csr, 1.0, 1.0, 0.5);
+        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Dense), 2.0);
+        assert_eq!(c.coeff(Policy::GpurVclLike, MatrixFormat::Csr), 0.5);
+        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Csr), 1.0);
+        assert_eq!(c.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn degenerate_observations_ignored() {
+        let mut c = Calibrator::new(0.5);
+        c.observe(Policy::SerialNative, MatrixFormat::Dense, 0.0, 0.0, 0.0);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, 1.0, 1.0, f64::NAN);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, -1.0, 1.0, 1.0);
+        assert_eq!(c.observations(), 0);
+    }
+
+    #[test]
+    fn error_tally_tracks_served_predictions() {
+        let mut c = Calibrator::new(0.5);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, 1.0, 2.0, 1.0);
+        assert!((c.mean_abs_rel_error().unwrap() - 1.0).abs() < 1e-12);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, 1.0, 1.0, 1.0);
+        assert!((c.mean_abs_rel_error().unwrap() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,427 @@
+//! Plan-and-calibrate: the cost-based execution planner.
+//!
+//! The paper's whole story is that *which* implementation wins flips with
+//! problem size; the crossover points move again with storage format,
+//! restart length and preconditioning.  This subsystem owns that decision:
+//!
+//! * **enumeration** — for a solve (shape + GMRES config) it generates
+//!   candidate plans over policy × restart `m` × preconditioner, dropping
+//!   candidates whose working set fails device-memory admission
+//!   ([`Planner::enumerate`]).
+//! * **pricing** — each candidate is priced through the shared
+//!   [`crate::device::costs`] table plus a [`ConvergenceModel`] estimating
+//!   cycles-to-tolerance, replacing the router's old hard-coded
+//!   `assumed_cycles`.  Setup/per-cycle cost splits are memoized per
+//!   `(policy, shape, m)`, so steady-state planning is microseconds.
+//! * **online calibration** — the worker reports `(plan, measured seconds)`
+//!   after every solve; a per-(policy, format) EWMA [`Calibrator`] learns
+//!   the cost table's multiplicative bias so routing sharpens under live
+//!   traffic.
+//! * **explainability** — [`crate::report::plan_table`] renders the ranked
+//!   candidates (the CLI `plan` / `explain` subcommands).
+//!
+//! The planner sits below the coordinator: [`crate::coordinator::Router`]
+//! delegates auto-selection to it and shares it (via `Arc`) with the
+//! workers that feed measurements back.
+
+pub mod calibrate;
+pub mod convergence;
+pub mod plan;
+
+pub use calibrate::{CalibrationEntry, Calibrator};
+pub use convergence::ConvergenceModel;
+pub use plan::{Plan, PlanCandidate};
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::backend::Policy;
+use crate::device::costs;
+use crate::device::memory::working_set_bytes;
+use crate::device::{DeviceSim, GpuSpec};
+use crate::gmres::{GmresConfig, PrecondKind};
+use crate::linalg::{MatrixFormat, SystemShape};
+
+/// Planner configuration.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Device spec used for admission (capacity) and pricing context.
+    pub gpu: GpuSpec,
+    /// Fraction of device memory a single job may claim.
+    pub mem_fraction: f64,
+    /// Policy used when a device policy cannot be admitted (and the
+    /// always-available host candidate in enumeration).
+    pub fallback: Policy,
+    /// Candidate restart lengths explored for auto requests (the request's
+    /// own `m` is always included).
+    pub restarts: Vec<usize>,
+    /// Candidate preconditioners explored for auto requests.
+    pub preconds: Vec<PrecondKind>,
+    /// Cycles-to-tolerance model.
+    pub convergence: ConvergenceModel,
+    /// EWMA weight of each calibration observation.
+    pub alpha: f64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        Self {
+            gpu: GpuSpec::geforce_840m(),
+            mem_fraction: 0.9,
+            fallback: Policy::SerialR,
+            restarts: vec![10, 30, 60],
+            preconds: vec![PrecondKind::Identity, PrecondKind::Jacobi],
+            convergence: ConvergenceModel::default(),
+            alpha: 0.25,
+        }
+    }
+}
+
+/// Memoized cost split of one `(policy, shape, m)` point.
+#[derive(Clone, Copy, Debug)]
+struct CostSplit {
+    setup_seconds: f64,
+    cycle_seconds: f64,
+}
+
+/// The planner: enumeration + pricing + online calibration.  Shared between
+/// the router (plans requests) and the workers (report measurements), so
+/// all interior mutability is behind mutexes.
+#[derive(Debug)]
+pub struct Planner {
+    config: PlannerConfig,
+    calibrator: Mutex<Calibrator>,
+    price_cache: Mutex<HashMap<(Policy, SystemShape, usize), CostSplit>>,
+}
+
+impl Planner {
+    /// Price-cache bound (~16 splits per novel shape; the cap comfortably
+    /// covers thousands of concurrently-hot shapes in a few MB).
+    const PRICE_CACHE_CAP: usize = 65_536;
+
+    pub fn new(config: PlannerConfig) -> Self {
+        let alpha = config.alpha;
+        Self {
+            config,
+            calibrator: Mutex::new(Calibrator::new(alpha)),
+            price_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn config(&self) -> &PlannerConfig {
+        &self.config
+    }
+
+    pub fn convergence(&self) -> &ConvergenceModel {
+        &self.config.convergence
+    }
+
+    /// Admission test: does the policy's working set at restart `m` fit the
+    /// configured device-memory budget?
+    pub fn admits(&self, policy: Policy, shape: &SystemShape, m: usize) -> bool {
+        let budget = (self.config.gpu.mem_capacity as f64 * self.config.mem_fraction) as usize;
+        working_set_bytes(shape, m, policy) <= budget
+    }
+
+    /// Memoized `(setup, per-cycle)` cost split — identical charges to
+    /// [`costs::predict_seconds`], paid once per distinct point.
+    ///
+    /// Bounded: a long-lived service seeing arbitrarily many distinct
+    /// shapes must not grow memory forever, so past `PRICE_CACHE_CAP`
+    /// entries the cache resets (recomputing a split is milliseconds;
+    /// steady traffic re-warms instantly).
+    fn cost_split(&self, policy: Policy, shape: &SystemShape, m: usize) -> CostSplit {
+        let key = (policy, *shape, m);
+        if let Some(split) = self.price_cache.lock().unwrap().get(&key) {
+            return *split;
+        }
+        let mut sim = DeviceSim::paper_testbed(false);
+        costs::charge_setup(&mut sim, policy, shape, m);
+        let setup_seconds = sim.elapsed();
+        costs::charge_cycle(&mut sim, policy, shape, m);
+        let split = CostSplit { setup_seconds, cycle_seconds: sim.elapsed() - setup_seconds };
+        let mut cache = self.price_cache.lock().unwrap();
+        if cache.len() >= Self::PRICE_CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert(key, split);
+        split
+    }
+
+    /// Price one plan point: convergence model → cycles, cost table →
+    /// base seconds, calibrator → served prediction.
+    fn price(
+        &self,
+        policy: Policy,
+        shape: &SystemShape,
+        m: usize,
+        precond: PrecondKind,
+        config: &GmresConfig,
+    ) -> Plan {
+        let predicted_cycles = self.config.convergence.cycles_to_tolerance(
+            m,
+            config.tol,
+            precond,
+            config.max_restarts,
+        );
+        let split = self.cost_split(policy, shape, m);
+        let base_seconds = split.setup_seconds + predicted_cycles as f64 * split.cycle_seconds;
+        let coeff = self.coeff(policy, shape.format);
+        Plan {
+            policy,
+            m,
+            precond,
+            predicted_cycles,
+            base_seconds,
+            predicted_seconds: base_seconds * coeff,
+            downgraded: false,
+        }
+    }
+
+    /// Candidate restart lengths for a request: the configured grid plus
+    /// the request's own `m`.
+    fn restart_grid(&self, config: &GmresConfig) -> Vec<usize> {
+        let mut ms: Vec<usize> = self.config.restarts.clone();
+        ms.push(config.m);
+        ms.retain(|&m| m >= 1);
+        ms.sort_unstable();
+        ms.dedup();
+        ms
+    }
+
+    /// Enumerate and price the full candidate space for an auto request,
+    /// ranked admissible-first by predicted seconds (deterministic
+    /// tie-break on policy order, then m, then precond).
+    pub fn enumerate(&self, shape: &SystemShape, config: &GmresConfig) -> Vec<PlanCandidate> {
+        let mut policies = vec![self.config.fallback];
+        for p in Policy::gpu_policies() {
+            if p != self.config.fallback {
+                policies.push(p);
+            }
+        }
+        // a non-default precond in the request is an explicit choice: pin
+        // the axis to it (the planner must not silently override it);
+        // default requests explore the configured axis
+        let preconds = if config.precond != PrecondKind::default() || self.config.preconds.is_empty()
+        {
+            vec![config.precond]
+        } else {
+            self.config.preconds.clone()
+        };
+        let mut out = Vec::new();
+        for &m in &self.restart_grid(config) {
+            for &precond in &preconds {
+                for &policy in &policies {
+                    let admitted = !policy.needs_runtime() || self.admits(policy, shape, m);
+                    out.push(PlanCandidate {
+                        plan: self.price(policy, shape, m, precond, config),
+                        admitted,
+                    });
+                }
+            }
+        }
+        let rank = |p: Policy| Policy::all().iter().position(|&q| q == p).unwrap_or(usize::MAX);
+        out.sort_by(|a, b| {
+            b.admitted
+                .cmp(&a.admitted)
+                .then(a.plan.predicted_seconds.total_cmp(&b.plan.predicted_seconds))
+                .then(rank(a.plan.policy).cmp(&rank(b.plan.policy)))
+                .then(a.plan.m.cmp(&b.plan.m))
+                .then(a.plan.precond.name().cmp(b.plan.precond.name()))
+        });
+        out
+    }
+
+    /// Plan one solve.  Explicit policy requests keep their requested
+    /// restart and preconditioner (downgrading to the fallback when the
+    /// device budget rejects them); auto requests take the best-ranked
+    /// admissible candidate from [`Planner::enumerate`].
+    pub fn plan(
+        &self,
+        shape: &SystemShape,
+        config: &GmresConfig,
+        requested: Option<Policy>,
+    ) -> Plan {
+        match requested {
+            Some(p) if !p.needs_runtime() || self.admits(p, shape, config.m) => {
+                self.price(p, shape, config.m, config.precond, config)
+            }
+            Some(_) => {
+                let mut plan =
+                    self.price(self.config.fallback, shape, config.m, config.precond, config);
+                plan.downgraded = true;
+                plan
+            }
+            None => self
+                .enumerate(shape, config)
+                .into_iter()
+                .find(|c| c.admitted)
+                .map(|c| c.plan)
+                .unwrap_or_else(|| {
+                    self.price(self.config.fallback, shape, config.m, config.precond, config)
+                }),
+        }
+    }
+
+    /// Worker feedback: one executed plan and the modeled seconds its
+    /// engine actually accumulated.
+    pub fn observe(&self, plan: &Plan, format: MatrixFormat, measured_seconds: f64) {
+        self.calibrator.lock().unwrap().observe(
+            plan.policy,
+            format,
+            plan.base_seconds,
+            plan.predicted_seconds,
+            measured_seconds,
+        );
+    }
+
+    /// Current calibration coefficient for a cell (1.0 until observed).
+    pub fn coeff(&self, policy: Policy, format: MatrixFormat) -> f64 {
+        self.calibrator.lock().unwrap().coeff(policy, format)
+    }
+
+    /// Total usable observations ingested so far.
+    pub fn observations(&self) -> u64 {
+        self.calibrator.lock().unwrap().observations()
+    }
+
+    /// Mean |predicted − measured| / measured over everything observed.
+    pub fn mean_abs_rel_error(&self) -> Option<f64> {
+        self.calibrator.lock().unwrap().mean_abs_rel_error()
+    }
+
+    /// Calibration snapshot for reports.
+    pub fn calibration(&self) -> Vec<CalibrationEntry> {
+        self.calibrator.lock().unwrap().snapshot()
+    }
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Self::new(PlannerConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner() -> Planner {
+        Planner::default()
+    }
+
+    #[test]
+    fn auto_plan_is_best_admissible_candidate() {
+        let p = planner();
+        let shape = SystemShape::dense(2000);
+        let config = GmresConfig::default();
+        let cands = p.enumerate(&shape, &config);
+        assert!(!cands.is_empty());
+        let plan = p.plan(&shape, &config, None);
+        let best = cands.iter().find(|c| c.admitted).unwrap();
+        assert_eq!(plan, best.plan);
+        // ranking is admissible-first, ascending predicted seconds
+        for w in cands.windows(2) {
+            if w[0].admitted == w[1].admitted {
+                assert!(w[0].plan.predicted_seconds <= w[1].plan.predicted_seconds);
+            } else {
+                assert!(w[0].admitted && !w[1].admitted);
+            }
+        }
+    }
+
+    #[test]
+    fn enumeration_covers_the_advertised_space() {
+        let p = planner();
+        let config = GmresConfig { m: 25, ..Default::default() };
+        let cands = p.enumerate(&SystemShape::dense(500), &config);
+        // 4 policies × (3 configured + 1 requested restart) × 2 preconds
+        assert_eq!(cands.len(), 4 * 4 * 2);
+        assert!(cands.iter().any(|c| c.plan.m == 25), "request m enumerated");
+        assert!(cands.iter().any(|c| c.plan.precond == PrecondKind::Jacobi));
+    }
+
+    #[test]
+    fn requested_precond_pins_the_enumeration_axis() {
+        let p = planner();
+        let shape = SystemShape::dense(400);
+        // explicit jacobi: every candidate (and the chosen plan) honours it
+        let config = GmresConfig { precond: PrecondKind::Jacobi, ..Default::default() };
+        let cands = p.enumerate(&shape, &config);
+        assert!(cands.iter().all(|c| c.plan.precond == PrecondKind::Jacobi));
+        assert_eq!(p.plan(&shape, &config, None).precond, PrecondKind::Jacobi);
+        // default request: the configured axis is explored
+        let auto = p.enumerate(&shape, &GmresConfig::default());
+        assert!(auto.iter().any(|c| c.plan.precond == PrecondKind::Identity));
+        assert!(auto.iter().any(|c| c.plan.precond == PrecondKind::Jacobi));
+    }
+
+    #[test]
+    fn explicit_policy_keeps_requested_parameters() {
+        let p = planner();
+        let config = GmresConfig { m: 17, ..Default::default() };
+        let plan = p.plan(&SystemShape::dense(300), &config, Some(Policy::GmatrixLike));
+        assert_eq!(plan.policy, Policy::GmatrixLike);
+        assert_eq!(plan.m, 17);
+        assert!(!plan.downgraded);
+        assert!(plan.predicted_seconds > 0.0);
+    }
+
+    #[test]
+    fn inadmissible_explicit_policy_downgrades_to_fallback() {
+        let p = planner();
+        // 20000² dense = 3.2 GB > the 840M budget
+        let plan = p.plan(&SystemShape::dense(20_000), &GmresConfig::default(), Some(Policy::GpurVclLike));
+        assert_eq!(plan.policy, Policy::SerialR);
+        assert!(plan.downgraded);
+    }
+
+    #[test]
+    fn auto_plan_never_selects_inadmissible() {
+        let p = planner();
+        let shape = SystemShape::dense(50_000);
+        let plan = p.plan(&shape, &GmresConfig::default(), None);
+        assert!(!plan.policy.needs_runtime() || p.admits(plan.policy, &shape, plan.m));
+    }
+
+    #[test]
+    fn calibration_scales_served_predictions() {
+        let p = planner();
+        let shape = SystemShape::dense(600);
+        let config = GmresConfig::default();
+        let before = p.plan(&shape, &config, Some(Policy::SerialR));
+        // pretend every solve measures half the base prediction
+        for _ in 0..64 {
+            p.observe(&before, shape.format, before.base_seconds * 0.5);
+        }
+        let after = p.plan(&shape, &config, Some(Policy::SerialR));
+        assert_eq!(after.base_seconds, before.base_seconds);
+        assert!(
+            (after.predicted_seconds - 0.5 * before.predicted_seconds).abs()
+                < 0.05 * before.predicted_seconds,
+            "coeff {}",
+            p.coeff(Policy::SerialR, MatrixFormat::Dense)
+        );
+        assert_eq!(p.observations(), 64);
+        assert_eq!(p.calibration().len(), 1);
+    }
+
+    #[test]
+    fn price_cache_returns_identical_results() {
+        let p = planner();
+        let shape = SystemShape::csr(3000, 9000);
+        let config = GmresConfig::default();
+        let a = p.plan(&shape, &config, Some(Policy::GpurVclLike));
+        let b = p.plan(&shape, &config, Some(Policy::GpurVclLike));
+        assert_eq!(a, b);
+        // and matches the unmemoized analytic replay
+        let replay = costs::predict_seconds(
+            Policy::GpurVclLike,
+            &shape,
+            config.m,
+            a.predicted_cycles,
+        );
+        let rel = ((a.base_seconds - replay) / replay).abs();
+        assert!(rel < 1e-9, "split {} vs replay {replay}", a.base_seconds);
+    }
+}

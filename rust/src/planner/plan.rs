@@ -1,0 +1,82 @@
+//! Plan types: a fully-specified execution recipe plus its priced
+//! candidates.
+
+use crate::backend::Policy;
+use crate::gmres::PrecondKind;
+
+/// A fully-specified execution plan for one solve: which policy runs, with
+/// which restart length and preconditioner, and what the planner expects it
+/// to cost.  Carried through the router, batcher and worker, and returned
+/// in the [`crate::coordinator::SolveOutcome`] so callers can compare
+/// predicted against observed seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Plan {
+    pub policy: Policy,
+    /// Restart length the engine is built with.
+    pub m: usize,
+    /// Preconditioner applied at engine build.
+    pub precond: PrecondKind,
+    /// Cycles-to-tolerance the convergence model expects.
+    pub predicted_cycles: usize,
+    /// Uncalibrated cost-table seconds (setup + cycles × per-cycle).
+    pub base_seconds: f64,
+    /// Calibrated prediction: `base_seconds × coeff(policy, format)`.
+    pub predicted_seconds: f64,
+    /// True when an inadmissible requested policy was replaced by the
+    /// fallback.
+    pub downgraded: bool,
+}
+
+impl Plan {
+    /// A plan that pins execution parameters without pricing them (used by
+    /// unit tests driving workers directly; zero `base_seconds` means the
+    /// calibrator ignores the resulting observation).
+    pub fn pinned(policy: Policy, m: usize) -> Self {
+        Self {
+            policy,
+            m,
+            precond: PrecondKind::Identity,
+            predicted_cycles: 0,
+            base_seconds: 0.0,
+            predicted_seconds: 0.0,
+            downgraded: false,
+        }
+    }
+
+    /// One human line for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} m={} pre={} (predicted {:.4}s over {} modeled cycles{})",
+            self.policy,
+            self.m,
+            self.precond,
+            self.predicted_seconds,
+            self.predicted_cycles,
+            if self.downgraded { ", downgraded" } else { "" }
+        )
+    }
+}
+
+/// One priced point of the enumerated plan space.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanCandidate {
+    pub plan: Plan,
+    /// Whether the working set fits the device-memory budget (host
+    /// policies are always admitted).
+    pub admitted: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_plan_has_no_priced_cost() {
+        let p = Plan::pinned(Policy::SerialNative, 8);
+        assert_eq!(p.m, 8);
+        assert_eq!(p.precond, PrecondKind::Identity);
+        assert_eq!(p.base_seconds, 0.0);
+        assert!(!p.downgraded);
+        assert!(p.summary().contains("serial-native"));
+    }
+}

@@ -13,6 +13,7 @@ pub mod ascii_plot;
 pub mod figure5;
 pub mod model;
 pub mod paper;
+pub mod plan_table;
 pub mod sweep;
 pub mod table1;
 

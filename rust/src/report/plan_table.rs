@@ -1,0 +1,118 @@
+//! Explainability: render a planner's ranked candidate plans (and its
+//! calibration state) as an aligned table — the `plan` / `explain` CLI
+//! subcommands and the service's introspection surface.
+
+use crate::gmres::GmresConfig;
+use crate::linalg::SystemShape;
+use crate::planner::Planner;
+use crate::util::bench::Table;
+
+/// Render the ranked candidate plans for one solve shape.  The chosen plan
+/// (best-ranked admissible candidate) is marked `<=`.
+pub fn render_candidates(planner: &Planner, shape: &SystemShape, config: &GmresConfig) -> String {
+    let cands = planner.enumerate(shape, config);
+    let mut t = Table::new(&[
+        "rank",
+        "policy",
+        "m",
+        "precond",
+        "cycles",
+        "predicted [s]",
+        "coeff",
+        "fits",
+        "",
+    ]);
+    let mut chosen = false;
+    for (i, c) in cands.iter().enumerate() {
+        let pick = c.admitted && !chosen;
+        if pick {
+            chosen = true;
+        }
+        t.row(&[
+            (i + 1).to_string(),
+            c.plan.policy.name().to_string(),
+            c.plan.m.to_string(),
+            c.plan.precond.name().to_string(),
+            c.plan.predicted_cycles.to_string(),
+            format!("{:.6}", c.plan.predicted_seconds),
+            format!("{:.3}", planner.coeff(c.plan.policy, shape.format)),
+            if c.admitted { "yes" } else { "NO" }.to_string(),
+            if pick { "<=" } else { "" }.to_string(),
+        ]);
+    }
+    format!(
+        "candidate plans for n={} format={} nnz={} (tol {:.1e}):\n{}",
+        shape.n,
+        shape.format,
+        shape.nnz,
+        config.tol,
+        t.render()
+    )
+}
+
+/// Render the calibration state: one row per observed (policy, format)
+/// cell, plus the running prediction-error summary.
+pub fn render_calibration(planner: &Planner) -> String {
+    let entries = planner.calibration();
+    if entries.is_empty() {
+        return "calibration: no observations yet (coefficients at 1.0)".into();
+    }
+    let mut t = Table::new(&["policy", "format", "coeff", "observations"]);
+    for e in &entries {
+        t.row(&[
+            e.policy.name().to_string(),
+            e.format.name().to_string(),
+            format!("{:.4}", e.coeff),
+            e.observations.to_string(),
+        ]);
+    }
+    let err = planner
+        .mean_abs_rel_error()
+        .map(|e| format!("{:.1}%", e * 100.0))
+        .unwrap_or_else(|| "n/a".into());
+    format!(
+        "calibration after {} observed solves (mean |pred-meas|/meas = {}):\n{}",
+        planner.observations(),
+        err,
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Policy;
+    use crate::linalg::MatrixFormat;
+
+    #[test]
+    fn candidate_table_lists_every_policy_and_marks_choice() {
+        let p = Planner::default();
+        let shape = SystemShape::dense(2000);
+        let out = render_candidates(&p, &shape, &GmresConfig::default());
+        for policy in [Policy::SerialR, Policy::GmatrixLike, Policy::GputoolsLike, Policy::GpurVclLike]
+        {
+            assert!(out.contains(policy.name()), "missing {policy} in:\n{out}");
+        }
+        assert_eq!(out.matches("<=").count(), 1, "exactly one chosen plan:\n{out}");
+    }
+
+    #[test]
+    fn inadmissible_rows_are_flagged() {
+        let p = Planner::default();
+        // dense 20000² never fits the 840M
+        let out = render_candidates(&p, &SystemShape::dense(20_000), &GmresConfig::default());
+        assert!(out.contains("NO"), "{out}");
+    }
+
+    #[test]
+    fn calibration_rendering_covers_both_states() {
+        let p = Planner::default();
+        assert!(render_calibration(&p).contains("no observations"));
+        let shape = SystemShape::dense(400);
+        let plan = p.plan(&shape, &GmresConfig::default(), Some(Policy::SerialR));
+        p.observe(&plan, MatrixFormat::Dense, plan.base_seconds * 0.7);
+        let out = render_calibration(&p);
+        assert!(out.contains("serial-r") && out.contains("dense"), "{out}");
+        assert!(out.contains("1 observed") || out.contains("after 1"), "{out}");
+    }
+}

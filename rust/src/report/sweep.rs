@@ -91,6 +91,7 @@ pub fn reference_cycles(n: usize, cfg: &SweepConfig) -> Result<usize> {
         m: cfg.m,
         tol: cfg.tol,
         max_restarts: cfg.max_restarts,
+        ..Default::default()
     });
     let rep = solver.solve(engine.as_mut(), None)?;
     anyhow::ensure!(rep.converged, "reference solve did not converge at n={n}");
@@ -111,6 +112,7 @@ pub fn run_measured(
         m: cfg.m,
         tol: cfg.tol,
         max_restarts: cfg.max_restarts,
+        ..Default::default()
     });
     let rep = solver.solve(engine.as_mut(), None)?;
     Ok(SweepRecord {

@@ -115,7 +115,7 @@ fn all_policies_agree_on_the_solution() {
     let rt = runtime();
     let n = rt.sizes()[0];
     let m = rt.default_m();
-    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-10, max_restarts: 200 });
+    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-10, max_restarts: 200, ..Default::default() });
     let mut solutions = Vec::new();
     for policy in Policy::all() {
         let (a, b, _) = generators::table1_system(n, 7);

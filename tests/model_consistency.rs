@@ -35,7 +35,7 @@ fn engine_clock(
     let (a, b) = system(format, n);
     let shape = a.shape();
     let mut engine = build_engine(policy, a, b, m, rt, false).unwrap();
-    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-10, max_restarts: 100 });
+    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-10, max_restarts: 100, ..Default::default() });
     let rep = solver.solve(engine.as_mut(), None).unwrap();
     assert!(rep.converged);
     (engine.sim().elapsed(), rep.cycles, shape)

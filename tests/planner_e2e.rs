@@ -1,0 +1,216 @@
+//! End-to-end planner tests: Table-1-grid plan selection, online
+//! calibration, the worker feedback loop, and the Jacobi preconditioning
+//! path the planner's precond axis executes.
+
+use gmres_rs::backend::{build_engine, build_engine_preconditioned, Policy};
+use gmres_rs::coordinator::{MatrixSpec, ServiceConfig, SolveRequest, SolveService};
+use gmres_rs::device::costs;
+use gmres_rs::gmres::{GmresConfig, PrecondKind, RestartedGmres};
+use gmres_rs::linalg::{generators, LinearOperator, MatrixFormat, SystemMatrix, SystemShape};
+use gmres_rs::planner::{Planner, PlannerConfig};
+
+/// On the Table-1 sweep grid (dense and CSR), the planner must select the
+/// modeled-fastest admissible policy at the paper's m=30 for every (n,
+/// format) point.
+#[test]
+fn planner_selects_modeled_fastest_policy_across_table1_grid() {
+    // pin the plan space to the sweep's own axis (m=30, unpreconditioned)
+    // so "modeled-fastest" is well-defined per (n, format) point
+    let planner = Planner::new(PlannerConfig {
+        restarts: vec![30],
+        preconds: vec![PrecondKind::Identity],
+        ..PlannerConfig::default()
+    });
+    let config = GmresConfig::default(); // m=30, tol 1e-6
+    for n in [1000usize, 2000, 4000, 6000, 8000, 10_000] {
+        let sparse = MatrixSpec::ConvDiff1d { n, seed: 0 }.shape();
+        for shape in [SystemShape::dense(n), sparse] {
+            let cycles = planner.convergence().cycles_to_tolerance(
+                config.m,
+                config.tol,
+                PrecondKind::Identity,
+                config.max_restarts,
+            );
+            let mut best = Policy::SerialR;
+            let mut best_t = costs::predict_seconds(best, &shape, config.m, cycles);
+            for p in Policy::gpu_policies() {
+                if !planner.admits(p, &shape, config.m) {
+                    continue;
+                }
+                let t = costs::predict_seconds(p, &shape, config.m, cycles);
+                if t < best_t {
+                    best = p;
+                    best_t = t;
+                }
+            }
+            let plan = planner.plan(&shape, &config, None);
+            assert_eq!(
+                plan.policy, best,
+                "n={n} format={}: planner chose {} but modeled-fastest is {best}",
+                shape.format, plan.policy
+            );
+            assert_eq!(plan.m, 30);
+        }
+    }
+    // the paper's headline points, as hard anchors
+    let dense10k = planner.plan(&SystemShape::dense(10_000), &config, None);
+    assert_eq!(dense10k.policy, Policy::GpurVclLike, "gpuR wins dense N=10000");
+    let sparse1k = planner.plan(&SystemShape::csr(1000, 2998), &config, None);
+    assert!(!sparse1k.policy.needs_runtime(), "small sparse stays on host");
+}
+
+/// Acceptance: streaming (predicted, measured) pairs through the
+/// calibrator strictly reduces mean relative prediction error after >= 20
+/// observed solves versus the uncalibrated cost table.
+#[test]
+fn calibration_strictly_reduces_prediction_error_over_a_solve_stream() {
+    let calibrated = Planner::default();
+    let frozen = Planner::default(); // never observes: the uncalibrated table
+    let config = GmresConfig { m: 8, tol: 1e-8, max_restarts: 200, ..Default::default() };
+    let sizes = [48usize, 64, 80];
+    let mut err_calibrated = 0.0;
+    let mut err_uncalibrated = 0.0;
+    let mut count = 0usize;
+    for i in 0..24 {
+        let n = sizes[i % sizes.len()];
+        let shape = SystemShape::dense(n);
+        // predictions served *before* this solve is observed
+        let plan_c = calibrated.plan(&shape, &config, Some(Policy::SerialR));
+        let plan_u = frozen.plan(&shape, &config, Some(Policy::SerialR));
+        assert_eq!(plan_c.base_seconds, plan_u.base_seconds, "same cost table");
+
+        let (a, b, _) = generators::table1_system(n, 1000 + i as u64);
+        let mut engine =
+            build_engine(Policy::SerialR, SystemMatrix::Dense(a), b, config.m, None, false)
+                .unwrap();
+        let report = RestartedGmres::new(config).solve(engine.as_mut(), None).unwrap();
+        assert!(report.converged, "n={n} seed={i}");
+        let measured = report.sim_seconds;
+        assert!(measured > 0.0);
+
+        err_calibrated += ((plan_c.predicted_seconds - measured) / measured).abs();
+        err_uncalibrated += ((plan_u.predicted_seconds - measured) / measured).abs();
+        calibrated.observe(&plan_c, MatrixFormat::Dense, measured);
+        count += 1;
+    }
+    assert!(count >= 20, "need at least 20 observed solves");
+    assert!(calibrated.observations() >= 20);
+    let mean_c = err_calibrated / count as f64;
+    let mean_u = err_uncalibrated / count as f64;
+    assert!(
+        mean_c < mean_u,
+        "calibration must strictly reduce mean relative error: {mean_c:.4} vs {mean_u:.4}"
+    );
+    // the learned coefficient moved meaningfully off unity
+    let coeff = calibrated.coeff(Policy::SerialR, MatrixFormat::Dense);
+    assert!((coeff - 1.0).abs() > 0.05, "coeff stayed at {coeff}");
+    // and the planner's own error tally agrees that residual error is small
+    let tail = calibrated.mean_abs_rel_error().unwrap();
+    assert!(tail < mean_u, "running error {tail} vs uncalibrated {mean_u}");
+}
+
+/// The service wires the loop end-to-end: workers report measurements and
+/// the router's planner coefficients move off their priors.
+#[test]
+fn service_closes_the_calibration_feedback_loop() {
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 2, ..Default::default() });
+    for i in 0..6u64 {
+        let out = svc
+            .submit(SolveRequest {
+                matrix: MatrixSpec::Table1 { n: 64, seed: i },
+                config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 200, ..Default::default() },
+                policy: Some(Policy::SerialR),
+            })
+            .unwrap();
+        assert!(out.report.converged);
+        assert!(out.plan.predicted_seconds > 0.0, "explicit plans are priced");
+        assert!(out.report.sim_seconds > 0.0);
+    }
+    let planner = svc.router().planner();
+    assert!(planner.observations() >= 6, "worker feedback must reach the planner");
+    let coeff = planner.coeff(Policy::SerialR, MatrixFormat::Dense);
+    assert!((coeff - 1.0).abs() > 1e-3, "coefficient should move off unity, got {coeff}");
+    svc.shutdown();
+}
+
+/// Auto requests execute the planner's restart + preconditioner choice,
+/// not the request defaults.
+#[test]
+fn auto_plan_executes_with_planned_restart_and_precond() {
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 2, ..Default::default() });
+    let out = svc
+        .submit(SolveRequest {
+            matrix: MatrixSpec::Table1 { n: 300, seed: 5 },
+            config: GmresConfig::default(),
+            policy: None,
+        })
+        .unwrap();
+    assert!(out.report.converged);
+    assert_eq!(out.report.m, out.plan.m, "worker must run the plan's restart");
+    assert_eq!(out.report.precond, out.plan.precond);
+    assert!(
+        !out.policy.needs_runtime(),
+        "small dense should stay on host, got {}",
+        out.policy
+    );
+    svc.shutdown();
+}
+
+/// The wired-in Jacobi preconditioner cuts restart cycles on the
+/// variable-coefficient convection–diffusion workload (the satellite's
+/// convergence test), through the same engine path every policy uses.
+#[test]
+fn jacobi_cuts_cycles_on_varcoef_convection_diffusion() {
+    let n = 96;
+    let a = generators::convection_diffusion_1d_varcoef(n, 8.0, 1000.0);
+    let x_true = generators::random_vector(n, 7);
+    let b = a.apply(&x_true);
+    let run = |precond: PrecondKind| {
+        let config = GmresConfig { m: 10, tol: 1e-8, max_restarts: 500, precond };
+        let mut engine = build_engine_preconditioned(
+            Policy::SerialNative,
+            SystemMatrix::Csr(a.clone()),
+            b.clone(),
+            &config,
+            None,
+            false,
+        )
+        .unwrap();
+        RestartedGmres::new(config).solve(engine.as_mut(), None).unwrap()
+    };
+    let plain = run(PrecondKind::Identity);
+    let pre = run(PrecondKind::Jacobi);
+    assert!(plain.converged, "plain stalled at {} cycles", plain.cycles);
+    assert!(pre.converged);
+    assert_eq!(pre.precond, PrecondKind::Jacobi);
+    assert!(
+        pre.cycles * 3 <= plain.cycles,
+        "jacobi {} cycles vs plain {} cycles",
+        pre.cycles,
+        plain.cycles
+    );
+    let err = gmres_rs::linalg::vector::rel_err(&pre.x, &x_true);
+    assert!(err < 1e-3, "preconditioned solution error {err}");
+}
+
+/// Explicit `--precond jacobi` requests flow through the service intact.
+#[test]
+fn service_executes_requested_preconditioner() {
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    let out = svc
+        .submit(SolveRequest {
+            matrix: MatrixSpec::ConvDiff1d { n: 128, seed: 3 },
+            config: GmresConfig {
+                m: 10,
+                tol: 1e-8,
+                max_restarts: 300,
+                precond: PrecondKind::Jacobi,
+            },
+            policy: Some(Policy::SerialNative),
+        })
+        .unwrap();
+    assert!(out.report.converged);
+    assert_eq!(out.plan.precond, PrecondKind::Jacobi);
+    assert_eq!(out.report.precond, PrecondKind::Jacobi);
+    svc.shutdown();
+}

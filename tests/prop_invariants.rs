@@ -362,7 +362,7 @@ fn prop_all_policies_solve_csr_like_dense() {
     let x_true = generators::random_vector(n, 21);
     let b = csr.apply(&x_true);
     let m = 20;
-    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-9, max_restarts: 500 });
+    let solver = RestartedGmres::new(GmresConfig { m, tol: 1e-9, max_restarts: 500, ..Default::default() });
     let bnorm = blas::nrm2(&b);
 
     for policy in Policy::all() {

@@ -14,7 +14,7 @@ const M: usize = 8;
 fn req(n: usize, m: usize, policy: Option<Policy>, seed: u64) -> SolveRequest {
     SolveRequest {
         matrix: MatrixSpec::Table1 { n, seed },
-        config: GmresConfig { m, tol: 1e-8, max_restarts: 200 },
+        config: GmresConfig { m, tol: 1e-8, max_restarts: 200, ..Default::default() },
         policy,
     }
 }
@@ -22,7 +22,7 @@ fn req(n: usize, m: usize, policy: Option<Policy>, seed: u64) -> SolveRequest {
 fn sparse_req(n: usize, m: usize, policy: Option<Policy>, seed: u64) -> SolveRequest {
     SolveRequest {
         matrix: MatrixSpec::ConvDiff1d { n, seed },
-        config: GmresConfig { m, tol: 1e-8, max_restarts: 200 },
+        config: GmresConfig { m, tol: 1e-8, max_restarts: 200, ..Default::default() },
         policy,
     }
 }

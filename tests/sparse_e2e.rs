@@ -33,7 +33,7 @@ fn csr_convdiff_solves_through_all_policies_matching_dense_trails() {
     let (csr, b) = csr_system();
     let dense = generators::convection_diffusion_2d_dense(NX, NY, CX, CY);
     let bnorm = blas::nrm2(&b);
-    let solver = RestartedGmres::new(GmresConfig { m: M, tol: 1e-9, max_restarts: 500 });
+    let solver = RestartedGmres::new(GmresConfig { m: M, tol: 1e-9, max_restarts: 500, ..Default::default() });
 
     for policy in Policy::all() {
         let mut ec = build_engine(
@@ -119,7 +119,7 @@ fn csr_convdiff_solves_through_the_coordinator_service() {
     }));
     let mk = |policy, format| SolveRequest {
         matrix: MatrixSpec::ConvectionDiffusion { nx: NX, ny: NY, cx: CX, cy: CY, format },
-        config: GmresConfig { m: M, tol: 1e-9, max_restarts: 500 },
+        config: GmresConfig { m: M, tol: 1e-9, max_restarts: 500, ..Default::default() },
         policy: Some(policy),
     };
 
@@ -176,7 +176,7 @@ fn sparse_auto_routing_respects_admission_and_solves_at_scale() {
     let out = svc
         .submit(SolveRequest {
             matrix: MatrixSpec::ConvDiff1d { n: 2000, seed: 1 },
-            config: GmresConfig { m: 10, tol: 1e-8, max_restarts: 300 },
+            config: GmresConfig { m: 10, tol: 1e-8, max_restarts: 300, ..Default::default() },
             policy: Some(Policy::SerialNative),
         })
         .unwrap();
