@@ -24,6 +24,12 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> cargo bench --no-run (benches must keep compiling)"
+cargo bench --no-run
+
+echo "==> cargo doc --no-deps (warnings denied — docs can't rot)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "==> sparse-vs-dense smoke (5s budget)"
 # a CSR solve through a device policy and the dense twin of the same order;
 # both must converge through the native virtual device
@@ -34,5 +40,17 @@ echo "==> planner smoke"
 # ranked candidate table + preconditioned solve must both run
 ./target/release/gmres-rs plan --n 4000 --format dense
 ./target/release/gmres-rs solve --n 512 --format csr --precond jacobi --m 10
+
+echo "==> fleet smoke"
+# sharded placements enumerated across a two-card fleet; a served fleet
+# with calibration persistence round-trips through a warm restart
+./target/release/gmres-rs plan --n 20000 --fleet 840m,v100
+CALIB=$(mktemp /tmp/gmres-calib.XXXXXX)
+./target/release/gmres-rs serve --requests 6 --sizes 96,128 --m 8 \
+    --fleet 840m,v100,host --calib-file "$CALIB"
+test -s "$CALIB" || { echo "calibration snapshot not written"; exit 1; }
+./target/release/gmres-rs serve --requests 2 --sizes 96 --m 8 \
+    --fleet 840m,v100,host --calib-file "$CALIB"
+rm -f "$CALIB"
 
 echo "CI OK"

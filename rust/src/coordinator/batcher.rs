@@ -11,6 +11,7 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::backend::Policy;
+use crate::fleet::Placement;
 use crate::gmres::PrecondKind;
 use crate::linalg::MatrixFormat;
 
@@ -19,6 +20,10 @@ use crate::linalg::MatrixFormat;
 /// device only switches layout between batches, never inside one.  The
 /// preconditioner is too: a Jacobi job's resident matrix is the row-scaled
 /// `D⁻¹A`, not `A`, so it can never share residency with an identity job.
+/// And so is the placement: a matrix sharded across `840m+v100` occupies
+/// different residency than the same matrix whole on one card, so shards
+/// stay resident across a batch and never interleave with single-device
+/// jobs of the same shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub policy: Policy,
@@ -26,6 +31,7 @@ pub struct BatchKey {
     pub m: usize,
     pub format: MatrixFormat,
     pub precond: PrecondKind,
+    pub placement: Placement,
 }
 
 /// A queued item with arrival time.
@@ -125,7 +131,23 @@ mod tests {
             m: 30,
             format: MatrixFormat::Dense,
             precond: PrecondKind::Identity,
+            placement: Placement::Single(0),
         }
+    }
+
+    #[test]
+    fn placement_splits_batches() {
+        use crate::fleet::DeviceSet;
+        let mut b = Batcher::new(BatcherConfig { max_batch: 10, max_age: Duration::ZERO });
+        let sharded = Placement::Sharded(DeviceSet::from_ids(&[0, 1]));
+        b.push(key(100), 1);
+        b.push(BatchKey { placement: sharded, ..key(100) }, 2);
+        b.push(key(100), 3);
+        let (k, batch) = b.next_batch().unwrap();
+        assert_eq!(k.placement, Placement::Single(0));
+        assert_eq!(batch.iter().map(|p| p.item).collect::<Vec<_>>(), vec![1, 3]);
+        let (k2, _) = b.next_batch().unwrap();
+        assert_eq!(k2.placement, sharded);
     }
 
     #[test]

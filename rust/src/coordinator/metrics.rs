@@ -1,7 +1,23 @@
-//! Service metrics: counters + latency summaries, lock-free on the hot path.
+//! Service metrics: counters + latency summaries, lock-free on the hot
+//! path, plus per-device fleet accounting (solve counts, busy seconds,
+//! bytes moved) for the `serve` summary.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Per-device accounting: how much work one fleet member absorbed.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeviceStat {
+    /// Solves this device participated in (a sharded solve counts once per
+    /// member).
+    pub solves: u64,
+    /// Modeled busy seconds (kernel + transfer time attributed to the
+    /// device, not wall clock).
+    pub busy_seconds: f64,
+    /// Modeled bytes moved across the device's link.
+    pub bytes_moved: u64,
+}
 
 /// Aggregated service metrics.
 #[derive(Debug, Default)]
@@ -14,6 +30,8 @@ pub struct Metrics {
     /// completed-solve latencies, microseconds (mutex: cold path only)
     latencies_us: Mutex<Vec<u64>>,
     queue_us: Mutex<Vec<u64>>,
+    /// per-device stats, keyed by fleet device label (cold path)
+    per_device: Mutex<BTreeMap<String, DeviceStat>>,
 }
 
 /// Latency summary in seconds.
@@ -52,6 +70,25 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one device's share of a completed solve.
+    pub fn on_device(&self, label: &str, busy_seconds: f64, bytes_moved: u64) {
+        let mut map = self.per_device.lock().unwrap();
+        let stat = map.entry(label.to_string()).or_default();
+        stat.solves += 1;
+        stat.busy_seconds += busy_seconds;
+        stat.bytes_moved += bytes_moved;
+    }
+
+    /// Per-device stats, ordered by device label.
+    pub fn device_stats(&self) -> Vec<(String, DeviceStat)> {
+        self.per_device
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
     pub fn on_reject(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
@@ -82,6 +119,23 @@ impl Metrics {
 
     pub fn queue_summary(&self) -> Option<LatencySummary> {
         summarize(&self.queue_us.lock().unwrap())
+    }
+
+    /// Multi-line per-device summary (empty string when no device work
+    /// has been recorded).
+    pub fn render_devices(&self) -> String {
+        let stats = self.device_stats();
+        if stats.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from("per-device:\n");
+        for (label, s) in stats {
+            out.push_str(&format!(
+                "  {label:>10}: solves={} busy={:.4}s moved={}B\n",
+                s.solves, s.busy_seconds, s.bytes_moved
+            ));
+        }
+        out
     }
 
     /// One-line human summary.
@@ -157,5 +211,24 @@ mod tests {
     #[test]
     fn empty_summary_is_none() {
         assert!(Metrics::new().latency_summary().is_none());
+    }
+
+    #[test]
+    fn per_device_stats_accumulate() {
+        let m = Metrics::new();
+        assert!(m.device_stats().is_empty());
+        assert_eq!(m.render_devices(), "");
+        m.on_device("840m", 0.5, 1000);
+        m.on_device("v100", 0.1, 4000);
+        m.on_device("840m", 0.25, 500);
+        let stats = m.device_stats();
+        assert_eq!(stats.len(), 2);
+        let (label, s) = &stats[0];
+        assert_eq!(label, "840m");
+        assert_eq!(s.solves, 2);
+        assert!((s.busy_seconds - 0.75).abs() < 1e-12);
+        assert_eq!(s.bytes_moved, 1500);
+        let rendered = m.render_devices();
+        assert!(rendered.contains("840m") && rendered.contains("v100"), "{rendered}");
     }
 }

@@ -14,8 +14,9 @@
 //!   and prices candidate plans (policy × restart × preconditioner) and
 //!   learns cost coefficients online from worker feedback.
 //! * **[`batcher`]** — groups queued device jobs by `(policy, n, m,
-//!   format)` so one compiled executable and one resident matrix (dense or
-//!   CSR — never mixed in a batch) serve a whole batch.
+//!   format, precond, placement)` so one compiled executable and one
+//!   resident matrix ensemble (dense or CSR, whole or sharded — never
+//!   mixed in a batch) serve a whole batch.
 //! * **[`worker`]** — a dedicated *device thread* owning the (deliberately
 //!   `!Send`, single-stream) device runtime plus a CPU pool for serial
 //!   jobs.
@@ -30,6 +31,6 @@ pub mod service;
 pub mod worker;
 
 pub use job::{JobId, MatrixSpec, SolveOutcome, SolveRequest};
-pub use metrics::Metrics;
+pub use metrics::{DeviceStat, Metrics};
 pub use router::{Route, Router, RouterConfig};
 pub use service::{ServiceConfig, SolveService};

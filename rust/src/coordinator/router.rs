@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use crate::backend::Policy;
-use crate::device::GpuSpec;
+use crate::fleet::Fleet;
 use crate::gmres::GmresConfig;
 use crate::linalg::SystemShape;
 use crate::planner::{Plan, Planner, PlannerConfig};
@@ -30,17 +30,19 @@ pub struct Route {
     pub policy: Policy,
     /// True when the requested/auto policy was replaced by a host fallback.
     pub downgraded: bool,
-    /// The plan the worker executes (restart, preconditioner, prediction).
+    /// The plan the worker executes (restart, preconditioner, placement,
+    /// prediction).
     pub plan: Plan,
 }
 
 /// Router configuration.
 #[derive(Clone, Debug)]
 pub struct RouterConfig {
-    /// Device spec used for admission (capacity) and planner pricing.
-    pub gpu: GpuSpec,
-    /// Fraction of device memory a single job may claim (leave headroom for
-    /// batching).
+    /// Device fleet used for admission (per-device budgets), placement
+    /// enumeration and planner pricing.
+    pub fleet: Fleet,
+    /// Fraction of each device's memory a single job may claim (leave
+    /// headroom for batching).
     pub mem_fraction: f64,
     /// Policy used when a device policy cannot be admitted.
     pub fallback: Policy,
@@ -48,7 +50,7 @@ pub struct RouterConfig {
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self { gpu: GpuSpec::geforce_840m(), mem_fraction: 0.9, fallback: Policy::SerialR }
+        Self { fleet: Fleet::paper_default(), mem_fraction: 0.9, fallback: Policy::SerialR }
     }
 }
 
@@ -64,7 +66,7 @@ pub struct Router {
 impl Router {
     pub fn new(config: RouterConfig) -> Self {
         let planner = Arc::new(Planner::new(PlannerConfig {
-            gpu: config.gpu,
+            fleet: config.fleet,
             mem_fraction: config.mem_fraction,
             fallback: config.fallback,
             ..PlannerConfig::default()
@@ -194,6 +196,22 @@ mod tests {
         assert!(!tight.admits(Policy::GmatrixLike, &dense10k, 30));
         let loose = Router::new(RouterConfig::default());
         assert!(loose.admits(Policy::GmatrixLike, &dense10k, 30));
+    }
+
+    #[test]
+    fn oversized_request_shards_on_a_multi_device_fleet() {
+        // combined budgets fit what neither device fits alone: the route
+        // must carry a sharded placement instead of downgrading
+        let r = Router::new(RouterConfig {
+            fleet: crate::fleet::Fleet::parse("840m=2m,840m=2m").unwrap(),
+            ..Default::default()
+        });
+        let mut request = req(600, Some(Policy::GmatrixLike)); // 2.88 MB dense
+        request.config.m = 10;
+        let route = r.route(&request);
+        assert_eq!(route.policy, Policy::GmatrixLike);
+        assert!(route.plan.placement.is_sharded(), "got {:?}", route.plan.placement);
+        assert!(!route.downgraded);
     }
 
     #[test]

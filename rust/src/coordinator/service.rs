@@ -31,6 +31,9 @@ pub struct ServiceConfig {
     pub artifacts_dir: Option<PathBuf>,
     /// Bounded queue capacity (backpressure: submits fail fast beyond it).
     pub queue_capacity: usize,
+    /// Calibration snapshot path: loaded (if present) on start so the
+    /// router plans warm, saved on graceful shutdown.
+    pub calib_file: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -41,6 +44,7 @@ impl Default for ServiceConfig {
             cpu_workers: 2,
             artifacts_dir: None,
             queue_capacity: 256,
+            calib_file: None,
         }
     }
 }
@@ -55,6 +59,7 @@ pub struct SolveService {
     next_id: AtomicU64,
     inflight: Arc<AtomicU64>,
     queue_capacity: u64,
+    calib_file: Option<PathBuf>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -64,6 +69,18 @@ impl SolveService {
         let metrics = Arc::new(Metrics::new());
         let router = Router::new(config.router);
         let planner = router.planner().clone();
+        // warm start: reload the previous lifetime's calibration snapshot
+        if let Some(path) = &config.calib_file {
+            if path.exists() {
+                match planner.load_calibration(path) {
+                    Ok(cells) => eprintln!(
+                        "calibration: loaded {cells} cells from {}",
+                        path.display()
+                    ),
+                    Err(e) => eprintln!("calibration: ignoring {}: {e:#}", path.display()),
+                }
+            }
+        }
         let (device_tx, device_rx) = mpsc::channel();
         let (cpu_tx, cpu_rx) = mpsc::channel();
         let mut handles = Vec::new();
@@ -83,6 +100,7 @@ impl SolveService {
             next_id: AtomicU64::new(1),
             inflight: Arc::new(AtomicU64::new(0)),
             queue_capacity: config.queue_capacity as u64,
+            calib_file: config.calib_file,
             handles: Mutex::new(handles),
         })
     }
@@ -164,13 +182,18 @@ impl SolveService {
         self.inflight.fetch_sub(1, Ordering::SeqCst);
     }
 
-    /// Graceful shutdown: close intake, join workers.
+    /// Graceful shutdown: close intake, join workers, persist calibration.
     pub fn shutdown(&self) {
         *self.device_tx.lock().unwrap() = None;
         *self.cpu_tx.lock().unwrap() = None;
         let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
         for h in handles {
             let _ = h.join();
+        }
+        if let Some(path) = &self.calib_file {
+            if let Err(e) = self.router.planner().save_calibration(path) {
+                eprintln!("calibration: failed to save {}: {e:#}", path.display());
+            }
         }
     }
 }
@@ -254,6 +277,45 @@ mod tests {
         // capacity restored: submits succeed again
         assert!(svc.submit(req(16, Some(Policy::SerialNative))).is_ok());
         svc.shutdown();
+    }
+
+    #[test]
+    fn calibration_survives_a_service_restart() {
+        let dir = crate::util::tempdir::TempDir::new("svc-calib").unwrap();
+        let path = dir.path().join("calib.txt");
+        let cfg = || ServiceConfig {
+            cpu_workers: 1,
+            calib_file: Some(path.clone()),
+            ..Default::default()
+        };
+        let first = SolveService::start(cfg());
+        for i in 0..4u64 {
+            let out = first
+                .submit(SolveRequest {
+                    matrix: MatrixSpec::Table1 { n: 48, seed: i },
+                    config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 100, ..Default::default() },
+                    policy: Some(Policy::SerialR),
+                })
+                .unwrap();
+            assert!(out.report.converged);
+        }
+        let learned = first
+            .router()
+            .planner()
+            .coeff(Policy::SerialR, crate::linalg::MatrixFormat::Dense);
+        assert!((learned - 1.0).abs() > 1e-6, "coefficient moved");
+        first.shutdown();
+        assert!(path.exists(), "shutdown persists the snapshot");
+
+        // a fresh service starts warm
+        let second = SolveService::start(cfg());
+        let warm = second
+            .router()
+            .planner()
+            .coeff(Policy::SerialR, crate::linalg::MatrixFormat::Dense);
+        assert!((warm - learned).abs() < 1e-12, "warm {warm} vs learned {learned}");
+        assert!(second.router().planner().observations() >= 4);
+        second.shutdown();
     }
 
     #[test]

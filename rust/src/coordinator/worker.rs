@@ -6,9 +6,12 @@
 //! work stealing off a shared channel.
 //!
 //! Every worker executes the *plan* the router attached (policy + restart +
-//! preconditioner) and closes the planner's feedback loop: after each solve
-//! it reports the modeled seconds the engine actually accumulated, which
-//! the [`Planner`] folds into its per-policy cost coefficients.
+//! preconditioner + placement — sharded placements build the fleet's
+//! [`crate::fleet::ShardedCycleEngine`]) and closes the planner's feedback
+//! loops: after each solve it reports the modeled seconds the engine
+//! accumulated (cost calibration), the observed per-cycle contraction
+//! factor (convergence calibration) and per-device busy/bytes (fleet
+//! metrics).
 
 use std::path::PathBuf;
 use std::rc::Rc;
@@ -20,7 +23,8 @@ use crate::backend::build_engine_preconditioned;
 use crate::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
 use crate::coordinator::job::{JobId, SolveOutcome, SolveRequest};
 use crate::coordinator::metrics::Metrics;
-use crate::gmres::{GmresConfig, RestartedGmres};
+use crate::fleet::{costs as fleet_costs, build_sharded_engine, Placement};
+use crate::gmres::{GmresConfig, RestartedGmres, SolveReport};
 use crate::planner::{Plan, Planner};
 use crate::runtime::Runtime;
 use crate::Result;
@@ -41,16 +45,60 @@ fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, pla
     let started = Instant::now();
     let queue_seconds = started.duration_since(item.submitted_at).as_secs_f64();
     let plan = item.plan;
+    let shape = item.request.matrix.shape();
     let outcome = (|| -> Result<SolveOutcome> {
         let (a, b) = item.request.matrix.materialize();
         let format = a.format();
         let config = GmresConfig { m: plan.m, precond: plan.precond, ..item.request.config };
-        let mut engine =
-            build_engine_preconditioned(plan.policy, a, b, &config, runtime, false)?;
         let solver = RestartedGmres::new(config);
-        let report = solver.solve(engine.as_mut(), None)?;
-        // feedback: predicted vs measured modeled seconds -> calibration
+        // run the plan's placement: sharded plans build the fleet engine,
+        // everything else the ordinary single-device/host engine
+        let (report, device_shares) = match plan.placement {
+            Placement::Sharded(set) => {
+                let fleet = &planner.config().fleet;
+                let mut engine = build_sharded_engine(
+                    fleet,
+                    set,
+                    plan.policy,
+                    a,
+                    b,
+                    &config,
+                    planner.config().mem_fraction,
+                )?;
+                let report = solver.solve(&mut engine, None)?;
+                let shares: Vec<(String, f64, u64)> = engine
+                    .device_report()
+                    .into_iter()
+                    .map(|(id, busy, bytes)| {
+                        (fleet.placement_label(Placement::Single(id)), busy, bytes as u64)
+                    })
+                    .collect();
+                (report, shares)
+            }
+            _ => {
+                let mut engine =
+                    build_engine_preconditioned(plan.policy, a, b, &config, runtime, false)?;
+                let report = solver.solve(engine.as_mut(), None)?;
+                let label = planner.config().fleet.placement_label(plan.placement);
+                let bytes = fleet_costs::single_device_solve_bytes(
+                    plan.policy,
+                    &shape,
+                    plan.m,
+                    report.cycles,
+                ) as u64;
+                let shares = vec![(label, report.sim_seconds, bytes)];
+                (report, shares)
+            }
+        };
+        // feedback: predicted vs measured modeled seconds -> cost
+        // calibration; observed contraction -> convergence calibration
         planner.observe(&plan, format, report.sim_seconds);
+        if let Some(factor) = per_cycle_contraction(&report) {
+            planner.observe_convergence(format, plan.precond, plan.m, factor);
+        }
+        for (label, busy, bytes) in device_shares {
+            metrics.on_device(&label, busy, bytes);
+        }
         Ok(SolveOutcome {
             id: item.id,
             policy: plan.policy,
@@ -66,6 +114,22 @@ fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, pla
     }
     // receiver may have gone away (client cancelled); that's fine
     let _ = item.reply.send(outcome);
+}
+
+/// Observed per-cycle residual contraction of a finished solve: with a
+/// zero initial guess the initial residual is `b`, so the geometric mean
+/// contraction per cycle is `rel_resnorm^(1/cycles)`.  Only converged,
+/// strictly-contracting solves are usable signals.
+fn per_cycle_contraction(report: &SolveReport) -> Option<f64> {
+    if report.converged
+        && report.cycles >= 1
+        && report.rel_resnorm > 0.0
+        && report.rel_resnorm < 1.0
+    {
+        Some(report.rel_resnorm.powf(1.0 / report.cycles as f64))
+    } else {
+        None
+    }
 }
 
 /// Spawn the device thread.  Owns the (non-`Send`) device runtime; receives
@@ -124,14 +188,16 @@ pub fn spawn_device_thread(
 }
 
 fn push(batcher: &mut Batcher<WorkItem>, item: WorkItem) {
-    // batch by what actually executes: the plan's policy, restart and
-    // preconditioner (a Jacobi job's resident matrix is D⁻¹A, not A)
+    // batch by what actually executes: the plan's policy, restart,
+    // preconditioner (a Jacobi job's resident matrix is D⁻¹A, not A) and
+    // placement (a sharded residency cannot serve a single-device job)
     let key = BatchKey {
         policy: item.plan.policy,
         n: item.request.matrix.order(),
         m: item.plan.m,
         format: item.request.matrix.format(),
         precond: item.plan.precond,
+        placement: item.plan.placement,
     };
     batcher.push(key, item);
 }
@@ -228,6 +294,33 @@ mod tests {
         }
         assert_eq!(metrics.failed(), 1);
         assert_eq!(metrics.completed(), 1);
+    }
+
+    #[test]
+    fn sharded_plan_executes_and_reports_device_shares() {
+        use crate::fleet::{DeviceSet, Fleet, Placement};
+        let metrics = Arc::new(Metrics::new());
+        let planner = Arc::new(Planner::new(crate::planner::PlannerConfig {
+            fleet: Fleet::parse("840m,v100").unwrap(),
+            ..Default::default()
+        }));
+        let (tx, rx) = mpsc::channel();
+        let handles = spawn_cpu_pool(1, rx, metrics.clone(), planner.clone());
+        let (mut it, reply) = item(64, Policy::GmatrixLike);
+        it.plan.placement = Placement::Sharded(DeviceSet::from_ids(&[0, 1]));
+        tx.send(it).unwrap();
+        let outcome = reply.recv().unwrap().unwrap();
+        assert!(outcome.report.converged);
+        assert!(outcome.plan.placement.is_sharded());
+        assert!(outcome.report.sim_seconds > 0.0, "sharded engine charges modeled time");
+        let stats = metrics.device_stats();
+        assert_eq!(stats.len(), 2, "both shard members recorded: {stats:?}");
+        assert!(stats.iter().any(|(l, _)| l == "840m"));
+        assert!(stats.iter().any(|(l, _)| l == "v100"));
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

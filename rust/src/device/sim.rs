@@ -184,6 +184,16 @@ impl DeviceSim {
         self.trace.push(TraceEvent::Overhead { what: "r-call", seconds: s });
     }
 
+    /// Charge pre-computed modeled seconds from an external cost table
+    /// (the fleet's sharded executor prices whole collectives/cycles
+    /// through `fleet::costs` and books them here so its clock stays on
+    /// the same axis as every single-device engine).
+    pub fn charge_external(&mut self, what: &'static str, seconds: f64) {
+        assert!(seconds >= 0.0 && seconds.is_finite(), "bad external charge");
+        self.clock += seconds;
+        self.trace.push(TraceEvent::Overhead { what, seconds });
+    }
+
     /// Charge one vcl-path op dispatch (gpuR asynchronous enqueue).
     pub fn vcl_dispatch(&mut self) {
         let s = self.timing.spec().vcl_op_overhead;

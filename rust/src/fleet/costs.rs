@@ -1,0 +1,437 @@
+//! Fleet-aware analytic costs: what a sharded (or single-device) placement
+//! is modeled to cost, per device.
+//!
+//! The sharded execution style is host-orchestrated: every member device
+//! owns a contiguous row block of `A` (resident for the gmatrix/gpuR
+//! policies, re-staged per call for gputools); each matvec broadcasts `x`
+//! to the GPU members, runs the per-device GEMV/SpMV partial, and gathers
+//! the disjoint output blocks; each Arnoldi dot-product/norm runs as a
+//! per-device partial reduction plus a host-side combine — the
+//! cross-device reduction term that grows with fleet size and makes
+//! sharding lose whenever one device suffices.
+//!
+//! One [`ShardCosts`] table is computed per `(fleet, set, policy, shape,
+//! m)` point and used by *three* layers — planner pricing, admission and
+//! the live sharded engine's clock charges — so prediction and execution
+//! cannot drift (the single-device analogue of `device::costs` being
+//! shared by engines and replay).  One caveat is inherent to
+//! metadata-only planning: CSR admission/pricing attributes nonzeros to a
+//! row block *proportionally* ([`block_nnz`]) because a request is priced
+//! from its [`SystemShape`] alone — a matrix with strongly skewed row
+//! fill can put more real nonzeros on a device than the estimate said.
+//! The repo's stencil workloads have near-uniform row fill, so the
+//! estimate is tight there; budget headroom (`mem_fraction`) absorbs
+//! moderate skew.
+
+use crate::backend::Policy;
+use crate::device::{GpuSpec, HostSpec, KernelTimingModel, TransferModel};
+use crate::gmres::givens;
+use crate::linalg::{MatrixFormat, SystemShape};
+
+use super::{DeviceId, DeviceKind, DeviceSet, Fleet, ShardAssignment};
+
+/// Stored nonzeros attributed to a `rows`-row block of `shape`
+/// (proportional for CSR; exact for dense).
+pub fn block_nnz(shape: &SystemShape, rows: usize) -> usize {
+    match shape.format {
+        MatrixFormat::Dense => rows * shape.n,
+        MatrixFormat::Csr => {
+            if shape.n == 0 {
+                0
+            } else {
+                (shape.nnz as u128 * rows as u128 / shape.n as u128) as usize
+            }
+        }
+    }
+}
+
+/// Device bytes of a `rows`-row block of the matrix (dense slab or CSR
+/// arrays — mirrors [`SystemShape::matrix_device_bytes`]).
+pub fn block_matrix_bytes(shape: &SystemShape, rows: usize) -> usize {
+    match shape.format {
+        MatrixFormat::Dense => 8 * rows * shape.n,
+        MatrixFormat::Csr => 12 * block_nnz(shape, rows) + 4 * (rows + 1),
+    }
+}
+
+/// Working-set bytes one device needs for its `rows`-row shard of a
+/// GMRES(m) solve under `policy` — the sharded analogue of
+/// [`crate::device::memory::working_set_bytes`].  Every member holds the
+/// full-length `x` broadcast plus its own output block; the gpuR-style
+/// placement additionally keeps its row block of the Krylov basis
+/// device-resident.
+pub fn shard_working_set_bytes(
+    shape: &SystemShape,
+    rows: usize,
+    m: usize,
+    policy: Policy,
+) -> usize {
+    let f = std::mem::size_of::<f64>();
+    let n = shape.n;
+    let a = block_matrix_bytes(shape, rows);
+    match policy {
+        Policy::SerialR | Policy::SerialNative => a,
+        Policy::GmatrixLike | Policy::GputoolsLike => a + f * (n + rows),
+        Policy::GpurVclLike => a + f * (rows * (m + 1) + (m + 1) * m + n + 2 * rows),
+    }
+}
+
+/// One collective step's cost: the parallel critical path plus each
+/// member's own busy seconds.
+#[derive(Clone, Debug, Default)]
+struct StepCost {
+    critical: f64,
+    per_device: Vec<f64>,
+}
+
+/// The priced cost table of one sharded placement.
+#[derive(Clone, Debug)]
+pub struct ShardCosts {
+    /// Member device ids in canonical (ascending) shard order.
+    pub members: Vec<DeviceId>,
+    /// Rows owned by each member (aligned with `members`).
+    pub rows: Vec<usize>,
+    /// One-time residency establishment (uploads + dispatches).
+    pub setup_seconds: f64,
+    /// One full GMRES(m) cycle on the critical path.
+    pub cycle_seconds: f64,
+    /// Per-member busy seconds within one cycle (aligned with `members`).
+    pub per_device_cycle_busy: Vec<f64>,
+    /// Per-member modeled bytes across the link per cycle.
+    pub per_device_cycle_bytes: Vec<usize>,
+    /// Per-member busy seconds during setup.
+    pub per_device_setup_busy: Vec<f64>,
+    /// Per-member modeled bytes across the link during setup.
+    pub per_device_setup_bytes: Vec<usize>,
+}
+
+impl ShardCosts {
+    /// Fraction of the cycle critical path each member is busy
+    /// (utilization column of the plan table).
+    pub fn cycle_utilization(&self) -> Vec<(DeviceId, f64)> {
+        self.members
+            .iter()
+            .zip(&self.per_device_cycle_busy)
+            .map(|(&id, &busy)| {
+                (id, if self.cycle_seconds > 0.0 { busy / self.cycle_seconds } else { 0.0 })
+            })
+            .collect()
+    }
+}
+
+/// Per-device view used while assembling step costs.
+enum Member<'a> {
+    Gpu { timing: KernelTimingModel, transfer: TransferModel, spec: &'a GpuSpec },
+    Host(&'a HostSpec),
+}
+
+impl Member<'_> {
+    fn matvec_seconds(&self, shape: &SystemShape, rows: usize, per_call_upload: bool) -> f64 {
+        if rows == 0 {
+            return 0.0;
+        }
+        let nnz = block_nnz(shape, rows);
+        match self {
+            Member::Gpu { timing, transfer, .. } => {
+                let kernel = match shape.format {
+                    MatrixFormat::Dense => timing.gemv(rows, shape.n),
+                    MatrixFormat::Csr => timing.spmv(nnz, rows),
+                };
+                let staged = if per_call_upload {
+                    transfer.time(block_matrix_bytes(shape, rows))
+                } else {
+                    0.0
+                };
+                transfer.time(8 * shape.n) + staged + kernel + transfer.time(8 * rows)
+            }
+            Member::Host(h) => match shape.format {
+                MatrixFormat::Dense => h.gemv_time(rows, shape.n),
+                MatrixFormat::Csr => h.spmv_time(nnz),
+            },
+        }
+    }
+
+    fn matvec_bytes(&self, shape: &SystemShape, rows: usize, per_call_upload: bool) -> usize {
+        if rows == 0 {
+            return 0;
+        }
+        match self {
+            Member::Gpu { .. } => {
+                let staged = if per_call_upload { block_matrix_bytes(shape, rows) } else { 0 };
+                8 * shape.n + 8 * rows + staged
+            }
+            Member::Host(_) => 0,
+        }
+    }
+
+    /// Partial dot/norm over the member's block plus the scalar readback.
+    fn reduce_seconds(&self, rows: usize) -> f64 {
+        if rows == 0 {
+            return 0.0;
+        }
+        match self {
+            Member::Gpu { timing, transfer, .. } => timing.reduce(rows) + transfer.time(8),
+            Member::Host(h) => h.vecop_time(16 * rows),
+        }
+    }
+
+    /// Elementwise vector op over the member's block (`inputs` operands).
+    fn blas1_seconds(&self, rows: usize, inputs: usize) -> f64 {
+        if rows == 0 {
+            return 0.0;
+        }
+        match self {
+            Member::Gpu { timing, .. } => timing.blas1(inputs * rows, rows),
+            Member::Host(h) => h.vecop_time(8 * rows * (inputs + 1)),
+        }
+    }
+
+    /// Host-side per-collective coordination overhead this member adds
+    /// (command issue serializes on the orchestrator).
+    fn coord_seconds(&self) -> f64 {
+        match self {
+            Member::Gpu { spec, .. } => spec.transfer_latency,
+            Member::Host(h) => h.op_overhead,
+        }
+    }
+}
+
+fn member_view<'a>(fleet: &'a Fleet, id: DeviceId) -> Member<'a> {
+    match &fleet.device(id).kind {
+        DeviceKind::Gpu(spec) => Member::Gpu {
+            timing: KernelTimingModel::new(spec.clone()),
+            transfer: TransferModel::from_spec(spec),
+            spec,
+        },
+        DeviceKind::Host(h) => Member::Host(h),
+    }
+}
+
+fn collect_step(members: &[Member<'_>], f: impl Fn(&Member<'_>, usize) -> f64, rows: &[usize]) -> StepCost {
+    let per_device: Vec<f64> = members.iter().zip(rows).map(|(m, &r)| f(m, r)).collect();
+    let coord: f64 = members.iter().map(|m| m.coord_seconds()).sum();
+    let critical = per_device.iter().cloned().fold(0.0f64, f64::max) + coord;
+    StepCost { critical, per_device }
+}
+
+/// Price one sharded placement: per-device partials on each device's own
+/// cost tables, collectives on the critical path.
+pub fn shard_costs(
+    fleet: &Fleet,
+    set: DeviceSet,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    mem_fraction: f64,
+) -> ShardCosts {
+    let assignments: Vec<ShardAssignment> = fleet.shard_plan(set, shape.n, mem_fraction);
+    let members: Vec<DeviceId> = assignments.iter().map(|a| a.device).collect();
+    let rows: Vec<usize> = assignments.iter().map(|a| a.rows).collect();
+    let views: Vec<Member<'_>> = members.iter().map(|&id| member_view(fleet, id)).collect();
+    let host = HostSpec::r_interpreter_i7_4710hq();
+
+    let per_call_upload = policy == Policy::GputoolsLike;
+    let matvec = collect_step(&views, |v, r| v.matvec_seconds(shape, r, per_call_upload), &rows);
+    let dot = collect_step(&views, |v, r| v.reduce_seconds(r), &rows);
+    let vec1 = collect_step(&views, |v, r| v.blas1_seconds(r, 1), &rows);
+    let vec2 = collect_step(&views, |v, r| v.blas1_seconds(r, 2), &rows);
+
+    // Collective counts of one host-orchestrated CGS GMRES(m) cycle —
+    // mirrors the op anatomy of `device::costs::charge_cycle`:
+    //   r0 block: matvec + sub + nrm2 + scale
+    //   j in 0..m: matvec + (j+1) dots + (j+1)(scale+sub) + nrm2 + scale
+    //   Givens LS on the host; x update: m × (scale+add); final residual:
+    //   matvec + sub + nrm2.
+    let mf = m as f64;
+    let n_matvec = mf + 2.0;
+    let n_dot = mf * (mf + 1.0) / 2.0;
+    let n_norm = mf + 2.0;
+    let n_vec1 = 1.0 + mf * (mf + 1.0) / 2.0 + 2.0 * mf;
+    let n_vec2 = mf * (mf + 1.0) / 2.0 + mf + 2.0;
+    let ls_seconds = givens::flops(m) as f64 * host.op_overhead * 0.1;
+    // per-matvec dispatch on the orchestrator (one fleet step)
+    let dispatch = match policy {
+        Policy::GpurVclLike => views
+            .iter()
+            .map(|v| match v {
+                Member::Gpu { spec, .. } => spec.vcl_op_overhead,
+                Member::Host(h) => h.op_overhead,
+            })
+            .fold(0.0f64, f64::max),
+        _ => host.r_call_overhead,
+    };
+
+    let cycle_seconds = n_matvec * (matvec.critical + dispatch)
+        + (n_dot + n_norm) * dot.critical
+        + n_vec1 * vec1.critical
+        + n_vec2 * vec2.critical
+        + ls_seconds;
+
+    let per_device_cycle_busy: Vec<f64> = (0..members.len())
+        .map(|i| {
+            n_matvec * matvec.per_device[i]
+                + (n_dot + n_norm) * dot.per_device[i]
+                + n_vec1 * vec1.per_device[i]
+                + n_vec2 * vec2.per_device[i]
+        })
+        .collect();
+    let per_device_cycle_bytes: Vec<usize> = views
+        .iter()
+        .zip(&rows)
+        .map(|(v, &r)| {
+            let mv = v.matvec_bytes(shape, r, per_call_upload);
+            let readbacks = match v {
+                Member::Gpu { .. } if r > 0 => 8 * (n_dot + n_norm) as usize,
+                _ => 0,
+            };
+            (m + 2) * mv + readbacks
+        })
+        .collect();
+
+    // Setup: resident policies upload each shard once (uploads overlap
+    // across devices; the host serializes one dispatch per member).
+    let resident = policy != Policy::GputoolsLike && policy.needs_runtime();
+    let mut per_device_setup_busy = vec![0.0; members.len()];
+    let mut per_device_setup_bytes = vec![0usize; members.len()];
+    let mut setup_seconds = 0.0;
+    if resident {
+        let mut max_upload = 0.0f64;
+        for (i, (v, &r)) in views.iter().zip(&rows).enumerate() {
+            if let Member::Gpu { transfer, .. } = v {
+                if r > 0 {
+                    let bytes = block_matrix_bytes(shape, r);
+                    let t = transfer.time(bytes);
+                    per_device_setup_busy[i] = t;
+                    per_device_setup_bytes[i] = bytes;
+                    max_upload = max_upload.max(t);
+                }
+            }
+            setup_seconds += host.r_call_overhead;
+        }
+        setup_seconds += max_upload;
+    }
+
+    ShardCosts {
+        members,
+        rows,
+        setup_seconds,
+        cycle_seconds,
+        per_device_cycle_busy,
+        per_device_cycle_bytes,
+        per_device_setup_busy,
+        per_device_setup_bytes,
+    }
+}
+
+/// Modeled link bytes of one *single-device* solve under `policy` (the
+/// per-device bytes-moved metric for unsharded placements): resident
+/// policies stage the matrix once, the transfer-everything policy per
+/// matvec; every device matvec moves the `16n` vector round trip.
+pub fn single_device_solve_bytes(
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    cycles: usize,
+) -> usize {
+    let matvecs = cycles * (m + 2);
+    let vec_traffic = 16 * shape.n * matvecs;
+    match policy {
+        Policy::SerialR | Policy::SerialNative => 0,
+        Policy::GmatrixLike => shape.matrix_device_bytes() + vec_traffic,
+        Policy::GputoolsLike => matvecs * shape.matrix_device_bytes() + vec_traffic,
+        Policy::GpurVclLike => {
+            // matrix + b + x0 up once; per cycle: beta/norm readbacks
+            // (m+2 scalars), the small Hessenberg readback and y upload
+            shape.matrix_device_bytes()
+                + 16 * shape.n
+                + cycles * (8 * (m + 2) + 8 * (m + 1) * m + 8 * m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet_2gpu() -> Fleet {
+        Fleet::parse("840m,v100").unwrap()
+    }
+
+    fn set01() -> DeviceSet {
+        DeviceSet::from_ids(&[0, 1])
+    }
+
+    #[test]
+    fn shard_costs_cover_members_and_are_positive() {
+        let f = fleet_2gpu();
+        let shape = SystemShape::dense(4000);
+        let c = shard_costs(&f, set01(), Policy::GmatrixLike, &shape, 30, 0.9);
+        assert_eq!(c.members, vec![0, 1]);
+        assert_eq!(c.rows.iter().sum::<usize>(), 4000);
+        assert!(c.cycle_seconds > 0.0);
+        assert!(c.setup_seconds > 0.0, "resident shards charge setup uploads");
+        assert!(c.per_device_cycle_busy.iter().all(|&b| b >= 0.0));
+        for (i, &busy) in c.per_device_cycle_busy.iter().enumerate() {
+            assert!(busy <= c.cycle_seconds, "member {i} busier than the critical path");
+        }
+        let util = c.cycle_utilization();
+        assert_eq!(util.len(), 2);
+        assert!(util.iter().all(|&(_, u)| (0.0..=1.0).contains(&u)));
+    }
+
+    #[test]
+    fn reduction_term_penalizes_wider_fleets() {
+        // same total hardware class, more members => more cross-device
+        // reduction latency per dot: the per-cycle critical path of a
+        // 3-way shard of a small system must exceed the 2-way one
+        let f3 = Fleet::parse("840m,840m,840m").unwrap();
+        let shape = SystemShape::dense(512);
+        let c2 = shard_costs(&f3, DeviceSet::from_ids(&[0, 1]), Policy::GmatrixLike, &shape, 30, 0.9);
+        let c3 =
+            shard_costs(&f3, DeviceSet::from_ids(&[0, 1, 2]), Policy::GmatrixLike, &shape, 30, 0.9);
+        assert!(
+            c3.cycle_seconds > c2.cycle_seconds,
+            "3-way {} vs 2-way {}",
+            c3.cycle_seconds,
+            c2.cycle_seconds
+        );
+    }
+
+    #[test]
+    fn gputools_shards_pay_per_call_staging() {
+        let f = fleet_2gpu();
+        let shape = SystemShape::dense(2000);
+        let resident = shard_costs(&f, set01(), Policy::GmatrixLike, &shape, 30, 0.9);
+        let transfer = shard_costs(&f, set01(), Policy::GputoolsLike, &shape, 30, 0.9);
+        assert!(
+            transfer.cycle_seconds > 1.2 * resident.cycle_seconds,
+            "per-call staging must show up: {} vs {}",
+            transfer.cycle_seconds,
+            resident.cycle_seconds
+        );
+        assert_eq!(transfer.setup_seconds, 0.0, "nothing resident to establish");
+    }
+
+    #[test]
+    fn shard_working_set_is_block_sized() {
+        let shape = SystemShape::dense(10_000);
+        let whole = crate::device::memory::working_set_bytes(&shape, 30, Policy::GmatrixLike);
+        let half = shard_working_set_bytes(&shape, 5_000, 30, Policy::GmatrixLike);
+        assert!(half < whole, "a half shard must need less than the whole matrix");
+        assert!(half > whole / 4, "but not absurdly less");
+        // csr blocks are nnz-proportional
+        let sparse = SystemShape::csr(10_000, 50_000);
+        let sh = shard_working_set_bytes(&sparse, 2_500, 30, Policy::GpurVclLike);
+        assert!(sh < shard_working_set_bytes(&sparse, 10_000, 30, Policy::GpurVclLike));
+    }
+
+    #[test]
+    fn single_device_bytes_rank_policies() {
+        let shape = SystemShape::dense(1000);
+        let gm = single_device_solve_bytes(Policy::GmatrixLike, &shape, 30, 5);
+        let gp = single_device_solve_bytes(Policy::GputoolsLike, &shape, 30, 5);
+        let host = single_device_solve_bytes(Policy::SerialR, &shape, 30, 5);
+        assert_eq!(host, 0);
+        assert!(gp > gm, "transfer-everything moves more than resident");
+    }
+}

@@ -1,0 +1,378 @@
+//! The sharded executor: a [`CycleEngine`] that runs one GMRES(m) cycle
+//! with per-device row-block matvec partials and cross-device reductions.
+//!
+//! Numerics: the cycle is the same classical-Gram-Schmidt Arnoldi the
+//! host-orchestrated engines run, with two twists that mirror the fleet
+//! topology:
+//!
+//! * matvecs run shard-by-shard (`y[block] = A[block, :] x`) — bit-identical
+//!   to the unsharded reference because row blocks accumulate rows in the
+//!   same order;
+//! * dot-products and norms accumulate **per-shard partials first**, then
+//!   combine — exactly how a real fleet reduces, and within round-off of
+//!   the sequential reference (whole-solve agreement is tolerance-level,
+//!   not bitwise; `tests/fleet_e2e.rs` pins both properties).
+//!
+//! Costs: the engine books the *same* [`ShardCosts`] table the planner
+//! priced (one external charge per cycle plus the one-time setup), so
+//! predicted-vs-measured feedback calibrates cycle-count error rather than
+//! model drift, and tracks per-device busy seconds and bytes for the
+//! coordinator's per-device metrics.
+
+use anyhow::ensure;
+
+use crate::backend::{CycleEngine, CycleResult, Policy};
+use crate::device::DeviceSim;
+use crate::gmres::arnoldi::BREAKDOWN_RTOL;
+use crate::gmres::{givens, GmresConfig};
+use crate::linalg::{blas, SystemMatrix};
+use crate::Result;
+
+use super::costs::{shard_costs, ShardCosts};
+use super::shard::{RowBlocks, ShardedMatrix};
+use super::{DeviceId, DeviceSet, Fleet};
+
+/// Build the sharded engine for `policy` over `(a, b)` across `set`,
+/// applying the config's preconditioner first (same contract as
+/// [`crate::backend::build_engine_preconditioned`]).
+pub fn build_sharded_engine(
+    fleet: &Fleet,
+    set: DeviceSet,
+    policy: Policy,
+    a: SystemMatrix,
+    b: Vec<f64>,
+    config: &GmresConfig,
+    mem_fraction: f64,
+) -> Result<ShardedCycleEngine> {
+    let (a, b) = config.precond.apply_to_system(a, b);
+    ShardedCycleEngine::new(fleet, set, policy, a, b, config.m, mem_fraction)
+}
+
+/// Row-block sharded GMRES(m) cycle engine.
+pub struct ShardedCycleEngine {
+    policy: Policy,
+    sharded: ShardedMatrix,
+    b: Vec<f64>,
+    bnorm: f64,
+    n: usize,
+    m: usize,
+    sim: DeviceSim,
+    costs: ShardCosts,
+    device_busy: Vec<f64>,
+    device_bytes: Vec<usize>,
+    setup_charged: bool,
+}
+
+impl ShardedCycleEngine {
+    pub fn new(
+        fleet: &Fleet,
+        set: DeviceSet,
+        policy: Policy,
+        a: SystemMatrix,
+        b: Vec<f64>,
+        m: usize,
+        mem_fraction: f64,
+    ) -> Result<Self> {
+        let n = a.n();
+        ensure!(a.is_square(), "square systems only, got order {n} non-square");
+        ensure!(b.len() == n, "rhs length {} != system order {}", b.len(), n);
+        ensure!(m >= 1, "restart length must be >= 1");
+        ensure!(set.len() >= 2, "sharded placement needs >= 2 devices, got {}", set.len());
+        for id in set.iter() {
+            ensure!(id < fleet.len(), "device id {id} not in the {}-device fleet", fleet.len());
+        }
+        let shape = a.shape();
+        let costs = shard_costs(fleet, set, policy, &shape, m, mem_fraction);
+        let assignments = fleet.shard_plan(set, n, mem_fraction);
+        let rows: Vec<usize> = assignments.iter().map(|s| s.rows).collect();
+        let sharded = ShardedMatrix::split(&a, RowBlocks::from_rows(&rows));
+        let k = costs.members.len();
+        let bnorm = blas::nrm2(&b);
+        Ok(Self {
+            policy,
+            sharded,
+            b,
+            bnorm,
+            n,
+            m,
+            sim: DeviceSim::paper_testbed(false),
+            costs,
+            device_busy: vec![0.0; k],
+            device_bytes: vec![0; k],
+            setup_charged: false,
+        })
+    }
+
+    /// Per-device `(id, busy seconds, bytes moved)` accumulated so far.
+    pub fn device_report(&self) -> Vec<(DeviceId, f64, usize)> {
+        self.costs
+            .members
+            .iter()
+            .zip(self.device_busy.iter().zip(&self.device_bytes))
+            .map(|(&id, (&busy, &bytes))| (id, busy, bytes))
+            .collect()
+    }
+
+    /// The priced cost table this engine charges from.
+    pub fn costs(&self) -> &ShardCosts {
+        &self.costs
+    }
+
+    fn charge_setup_once(&mut self) {
+        if !self.setup_charged {
+            self.sim.charge_external("fleet-setup", self.costs.setup_seconds);
+            for (busy, add) in self.device_busy.iter_mut().zip(&self.costs.per_device_setup_busy) {
+                *busy += *add;
+            }
+            for (bytes, add) in self.device_bytes.iter_mut().zip(&self.costs.per_device_setup_bytes)
+            {
+                *bytes += *add;
+            }
+            self.setup_charged = true;
+        }
+    }
+
+    fn charge_cycle(&mut self) {
+        self.sim.charge_external("fleet-cycle", self.costs.cycle_seconds);
+        for (busy, add) in self.device_busy.iter_mut().zip(&self.costs.per_device_cycle_busy) {
+            *busy += *add;
+        }
+        for (bytes, add) in self.device_bytes.iter_mut().zip(&self.costs.per_device_cycle_bytes) {
+            *bytes += *add;
+        }
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n];
+        for k in 0..self.sharded.shard_count() {
+            let r = self.sharded.blocks().range(k);
+            self.sharded.apply_shard_into(k, x, &mut y[r]);
+        }
+        y
+    }
+
+    /// Cross-device dot: per-shard partials combined on the host.
+    fn fleet_dot(&self, x: &[f64], y: &[f64]) -> f64 {
+        (0..self.sharded.shard_count())
+            .map(|k| {
+                let r = self.sharded.blocks().range(k);
+                blas::dot(&x[r.clone()], &y[r])
+            })
+            .sum()
+    }
+
+    fn fleet_nrm2(&self, x: &[f64]) -> f64 {
+        self.fleet_dot(x, x).max(0.0).sqrt()
+    }
+}
+
+impl CycleEngine for ShardedCycleEngine {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    fn bnorm(&self) -> f64 {
+        self.bnorm
+    }
+
+    fn sim(&self) -> &DeviceSim {
+        &self.sim
+    }
+
+    fn cycle(&mut self, x0: &[f64]) -> Result<CycleResult> {
+        ensure!(x0.len() == self.n, "x0 length mismatch");
+        self.charge_setup_once();
+        self.charge_cycle();
+        let m = self.m;
+
+        // r0 = b - A x0; beta = ||r0|| (cross-device reduction)
+        let ax0 = self.matvec(x0);
+        let mut r0 = vec![0.0; self.n];
+        blas::sub_into(&self.b, &ax0, &mut r0);
+        let beta = self.fleet_nrm2(&r0);
+        if beta == 0.0 {
+            return Ok(CycleResult { x: x0.to_vec(), resnorm: 0.0 });
+        }
+
+        // v_1 = r0 / beta
+        let mut v: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+        let mut v1 = r0;
+        blas::scal(1.0 / beta, &mut v1);
+        v.push(v1);
+        let mut h = givens::zero_hessenberg(m);
+
+        let mut k = m;
+        for j in 0..m {
+            let mut w = self.matvec(&v[j]);
+            // CGS: all projection coefficients from the unmodified A v_j
+            let coeffs: Vec<f64> = (0..=j).map(|i| self.fleet_dot(&w, &v[i])).collect();
+            for (i, &hij) in coeffs.iter().enumerate() {
+                h[i][j] = hij;
+                blas::axpy(-hij, &v[i], &mut w);
+            }
+            let hj1 = self.fleet_nrm2(&w);
+            h[j + 1][j] = hj1;
+            if hj1 <= BREAKDOWN_RTOL * beta {
+                k = j + 1;
+                break;
+            }
+            blas::scal(1.0 / hj1, &mut w);
+            v.push(w);
+        }
+
+        // Givens least squares on the orchestrating host
+        let (y, _implied) = givens::solve_ls(&h, beta, k);
+
+        // x = x0 + V_k y
+        let mut x = x0.to_vec();
+        for (j, &yj) in y.iter().enumerate() {
+            blas::axpy(yj, &v[j], &mut x);
+        }
+
+        // true residual for the restart test
+        let ax = self.matvec(&x);
+        let mut r = vec![0.0; self.n];
+        blas::sub_into(&self.b, &ax, &mut r);
+        let resnorm = self.fleet_nrm2(&r);
+        Ok(CycleResult { x, resnorm })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::providers::{HostMode, NativeMatVec};
+    use crate::backend::HostCycleEngine;
+    use crate::gmres::RestartedGmres;
+    use crate::linalg::generators;
+
+    fn two_device_fleet() -> Fleet {
+        Fleet::parse("840m,v100").unwrap()
+    }
+
+    #[test]
+    fn sharded_solve_matches_single_device_reference() {
+        let n = 72;
+        let (a, b, xt) = generators::table1_system(n, 9);
+        let fleet = two_device_fleet();
+        let config = GmresConfig { m: 12, tol: 1e-10, max_restarts: 50, ..Default::default() };
+
+        let mut sharded = build_sharded_engine(
+            &fleet,
+            DeviceSet::from_ids(&[0, 1]),
+            Policy::GmatrixLike,
+            SystemMatrix::Dense(a.clone()),
+            b.clone(),
+            &config,
+            0.9,
+        )
+        .unwrap();
+        let solver = RestartedGmres::new(config);
+        let rep_sharded = solver.solve(&mut sharded, None).unwrap();
+        assert!(rep_sharded.converged);
+
+        let mut single = HostCycleEngine::new(
+            Policy::SerialNative,
+            NativeMatVec::new(a),
+            b,
+            12,
+            HostMode::Native,
+            false,
+        )
+        .unwrap();
+        let rep_single = solver.solve(&mut single, None).unwrap();
+        assert!(rep_single.converged);
+
+        let d = crate::linalg::vector::max_abs_diff(&rep_sharded.x, &rep_single.x);
+        assert!(d < 1e-6, "sharded vs single-device solutions diverged by {d}");
+        assert!(crate::linalg::vector::rel_err(&rep_sharded.x, &xt) < 1e-7);
+    }
+
+    #[test]
+    fn engine_charges_priced_costs_and_tracks_devices() {
+        let n = 48;
+        let (a, b, _) = generators::table1_system(n, 4);
+        let fleet = two_device_fleet();
+        let config = GmresConfig { m: 8, tol: 1e-8, max_restarts: 100, ..Default::default() };
+        let mut e = build_sharded_engine(
+            &fleet,
+            DeviceSet::from_ids(&[0, 1]),
+            Policy::GmatrixLike,
+            SystemMatrix::Dense(a),
+            b,
+            &config,
+            0.9,
+        )
+        .unwrap();
+        let report = RestartedGmres::new(config).solve(&mut e, None).unwrap();
+        assert!(report.converged);
+        let expected =
+            e.costs().setup_seconds + report.cycles as f64 * e.costs().cycle_seconds;
+        let got = e.sim().elapsed();
+        assert!(
+            (got - expected).abs() < 1e-12 * expected.max(1.0),
+            "engine clock {got} != priced {expected}"
+        );
+        let devs = e.device_report();
+        assert_eq!(devs.len(), 2);
+        assert!(devs.iter().all(|&(_, busy, _)| busy > 0.0), "every member worked");
+        assert!(devs.iter().any(|&(_, _, bytes)| bytes > 0), "transfers were booked");
+    }
+
+    #[test]
+    fn sharded_csr_solve_converges() {
+        let n = 120;
+        let (a, b, xt) = generators::convdiff_1d_system(n, 3);
+        let fleet = Fleet::parse("840m,840m,host").unwrap();
+        let config = GmresConfig { m: 10, tol: 1e-8, max_restarts: 200, ..Default::default() };
+        let mut e = build_sharded_engine(
+            &fleet,
+            DeviceSet::from_ids(&[0, 1, 2]),
+            Policy::GpurVclLike,
+            SystemMatrix::Csr(a),
+            b,
+            &config,
+            0.9,
+        )
+        .unwrap();
+        let report = RestartedGmres::new(config).solve(&mut e, None).unwrap();
+        assert!(report.converged, "cycles {}", report.cycles);
+        assert!(crate::linalg::vector::rel_err(&report.x, &xt) < 1e-5);
+    }
+
+    #[test]
+    fn rejects_degenerate_shards() {
+        let (a, b, _) = generators::table1_system(16, 0);
+        let fleet = two_device_fleet();
+        // one device is not a shard
+        assert!(ShardedCycleEngine::new(
+            &fleet,
+            DeviceSet::single(0),
+            Policy::GmatrixLike,
+            SystemMatrix::Dense(a.clone()),
+            b.clone(),
+            4,
+            0.9,
+        )
+        .is_err());
+        // out-of-fleet id
+        assert!(ShardedCycleEngine::new(
+            &fleet,
+            DeviceSet::from_ids(&[0, 5]),
+            Policy::GmatrixLike,
+            SystemMatrix::Dense(a),
+            b,
+            4,
+            0.9,
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,410 @@
+//! Multi-device fleet: registry, placement, sharding and fleet-aware costs.
+//!
+//! The paper benchmarks one GPU against one CPU; its conclusion — that
+//! throughput is bounded by how much of the available hardware the runtime
+//! actually uses — points straight at multi-device execution.  This
+//! subsystem makes horizontal scaling a *planner decision* instead of a
+//! hard-coded topology:
+//!
+//! * **[`Fleet`]** — a registry of heterogeneous devices (mixed
+//!   [`crate::device::GpuSpec`] / [`crate::device::HostSpec`] entries) with
+//!   per-device memory budgets and cost tables, parsed from CLI specs like
+//!   `840m,v100,host` (optionally `name=512m` to override a budget).
+//! * **[`Placement`]** — host / single-device / row-block-sharded; carried
+//!   end to end through [`crate::planner::Plan`], the batcher key and the
+//!   calibration cells.
+//! * **[`shard`]** — contiguous row-block splitting of a
+//!   [`crate::linalg::SystemMatrix`] (dense and CSR) whose partials are
+//!   bit-identical to the unsharded reference.
+//! * **[`costs`]** — the analytic fleet cost model: per-device matvec
+//!   partials on each device's own roofline/transfer tables, with the
+//!   Arnoldi cycle's dot-products and norms priced as cross-device
+//!   reductions (the term that makes sharding *lose* whenever a single
+//!   device suffices).
+//! * **[`exec`]** — the sharded executor: a [`crate::backend::CycleEngine`]
+//!   that runs per-device SpMV/GEMV partials and reduces, reporting
+//!   per-device busy seconds and bytes for metrics and calibration.
+//!
+//! The live single-device engines model the paper's card; a non-paper
+//! single placement (e.g. `v100`) is priced by its own spec and its
+//! engine-vs-model bias is learned online by the placement-keyed
+//! calibrator.
+
+pub mod costs;
+pub mod exec;
+pub mod placement;
+pub mod shard;
+
+pub use costs::ShardCosts;
+pub use exec::{build_sharded_engine, ShardedCycleEngine};
+pub use placement::{DeviceSet, Placement};
+pub use shard::{RowBlocks, ShardedMatrix};
+
+use anyhow::{anyhow, bail};
+
+use crate::device::{GpuSpec, HostSpec};
+use crate::Result;
+
+/// Index of a device within its [`Fleet`] (registration order).
+pub type DeviceId = usize;
+
+/// What kind of hardware a fleet entry is.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeviceKind {
+    /// An accelerator priced by its [`GpuSpec`] (roofline + PCIe link).
+    Gpu(GpuSpec),
+    /// A host compute peer priced by its [`HostSpec`] (no transfers).
+    Host(HostSpec),
+}
+
+/// One registered device.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetDevice {
+    pub id: DeviceId,
+    /// Short unique label (`840m`, `v100`, `host`, `840m#2`, ...).
+    pub label: String,
+    pub kind: DeviceKind,
+    /// Hard per-device byte budget; `None` means capacity × the planner's
+    /// `mem_fraction`.
+    pub budget_override: Option<usize>,
+}
+
+impl FleetDevice {
+    pub fn is_gpu(&self) -> bool {
+        matches!(self.kind, DeviceKind::Gpu(_))
+    }
+
+    pub fn gpu_spec(&self) -> Option<&GpuSpec> {
+        match &self.kind {
+            DeviceKind::Gpu(s) => Some(s),
+            DeviceKind::Host(_) => None,
+        }
+    }
+
+    pub fn host_spec(&self) -> Option<&HostSpec> {
+        match &self.kind {
+            DeviceKind::Host(s) => Some(s),
+            DeviceKind::Gpu(_) => None,
+        }
+    }
+
+    /// Memory capacity in bytes (host entries model their RAM share).
+    pub fn mem_capacity(&self) -> usize {
+        match &self.kind {
+            DeviceKind::Gpu(s) => s.mem_capacity,
+            DeviceKind::Host(_) => Fleet::HOST_MEM_CAPACITY,
+        }
+    }
+
+    /// Admission budget in bytes: the override when set, otherwise
+    /// capacity × `mem_fraction`.
+    pub fn budget(&self, mem_fraction: f64) -> usize {
+        self.budget_override
+            .unwrap_or_else(|| (self.mem_capacity() as f64 * mem_fraction) as usize)
+    }
+}
+
+/// One device's row-block assignment within a sharded placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardAssignment {
+    pub device: DeviceId,
+    pub start: usize,
+    pub rows: usize,
+}
+
+/// The device registry: heterogeneous compute entries with budgets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fleet {
+    devices: Vec<FleetDevice>,
+}
+
+impl Fleet {
+    /// Modeled RAM budget of a `host` fleet entry (16 GB — the paper's
+    /// laptop class).
+    pub const HOST_MEM_CAPACITY: usize = 16 * 1024 * 1024 * 1024;
+
+    /// Build from `(label, kind, budget_override)` entries; labels are
+    /// deduplicated with `#k` suffixes.
+    pub fn new(entries: Vec<(String, DeviceKind, Option<usize>)>) -> Self {
+        let mut devices = Vec::with_capacity(entries.len());
+        for (i, (base, kind, budget_override)) in entries.into_iter().enumerate() {
+            let dups = devices.iter().filter(|d: &&FleetDevice| labels_match(&d.label, &base)).count();
+            let label = if dups == 0 { base } else { format!("{base}#{}", dups + 1) };
+            devices.push(FleetDevice { id: i, label, kind, budget_override });
+        }
+        Self { devices }
+    }
+
+    /// The paper's testbed fleet: exactly one GeForce 840M.
+    pub fn paper_default() -> Self {
+        Self::new(vec![("840m".into(), DeviceKind::Gpu(GpuSpec::geforce_840m()), None)])
+    }
+
+    /// Parse a CLI fleet spec: comma-separated device names from the
+    /// catalog (`840m`, `v100`, `host`), each optionally suffixed with a
+    /// budget override like `840m=512m` (k/m/g suffixes, powers of 1024).
+    pub fn parse(spec: &str) -> Result<Fleet> {
+        let mut entries = Vec::new();
+        for raw in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (name, budget) = match raw.split_once('=') {
+                Some((n, b)) => (n.trim(), Some(parse_bytes(b.trim())?)),
+                None => (raw, None),
+            };
+            let (label, kind) = match name.to_ascii_lowercase().as_str() {
+                "840m" | "geforce-840m" | "geforce840m" => {
+                    ("840m".to_string(), DeviceKind::Gpu(GpuSpec::geforce_840m()))
+                }
+                "v100" | "tesla-v100" | "teslav100" => {
+                    ("v100".to_string(), DeviceKind::Gpu(GpuSpec::tesla_v100()))
+                }
+                "host" | "cpu" | "r-host" => (
+                    "host".to_string(),
+                    DeviceKind::Host(HostSpec::r_interpreter_i7_4710hq()),
+                ),
+                other => bail!(
+                    "unknown fleet device `{other}` (catalog: 840m | v100 | host; \
+                     optional budget override like 840m=512m)"
+                ),
+            };
+            entries.push((label, kind, budget));
+        }
+        if entries.is_empty() {
+            bail!("empty fleet spec");
+        }
+        if entries.len() > DeviceSet::MAX_DEVICES {
+            bail!("fleet too large: {} devices (max {})", entries.len(), DeviceSet::MAX_DEVICES);
+        }
+        Ok(Fleet::new(entries))
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn devices(&self) -> &[FleetDevice] {
+        &self.devices
+    }
+
+    pub fn device(&self, id: DeviceId) -> &FleetDevice {
+        &self.devices[id]
+    }
+
+    pub fn get(&self, id: DeviceId) -> Option<&FleetDevice> {
+        self.devices.get(id)
+    }
+
+    /// Ids of GPU devices, in registration order.
+    pub fn gpu_ids(&self) -> Vec<DeviceId> {
+        self.devices.iter().filter(|d| d.is_gpu()).map(|d| d.id).collect()
+    }
+
+    pub fn label_of(&self, id: DeviceId) -> &str {
+        &self.devices[id].label
+    }
+
+    /// `840m+v100`-style label for a device set.
+    pub fn set_label(&self, set: DeviceSet) -> String {
+        let labels: Vec<&str> = set.iter().filter_map(|i| self.get(i)).map(|d| d.label.as_str()).collect();
+        labels.join("+")
+    }
+
+    /// Human label for a placement (`host`, `v100`, `840m+v100`).
+    pub fn placement_label(&self, p: Placement) -> String {
+        match p {
+            Placement::Host => "host".into(),
+            Placement::Single(id) => {
+                self.get(id).map(|d| d.label.clone()).unwrap_or_else(|| format!("dev:{id}"))
+            }
+            Placement::Sharded(set) => self.set_label(set),
+        }
+    }
+
+    /// Candidate sharded device sets the planner enumerates: every subset
+    /// of size >= 2 containing at least one GPU for small fleets (<= 4
+    /// devices), registration-order prefixes otherwise (bounded candidate
+    /// count on big fleets).
+    pub fn shard_sets(&self) -> Vec<DeviceSet> {
+        let k = self.len();
+        if k < 2 {
+            return Vec::new();
+        }
+        let has_gpu = |set: &DeviceSet| set.iter().any(|i| self.devices[i].is_gpu());
+        let mut sets = Vec::new();
+        if k <= 4 {
+            for mask in 1u32..(1u32 << k) {
+                let set = DeviceSet::from_mask(mask);
+                if set.len() >= 2 && has_gpu(&set) {
+                    sets.push(set);
+                }
+            }
+            sets.sort_by_key(|s| (s.len(), s.mask()));
+        } else {
+            for len in 2..=k {
+                let set = DeviceSet::from_ids(&(0..len).collect::<Vec<_>>());
+                if has_gpu(&set) {
+                    sets.push(set);
+                }
+            }
+        }
+        sets
+    }
+
+    /// Contiguous row-block assignment of an order-`n` system across `set`,
+    /// weighted by per-device memory budget (capacity-proportional splits
+    /// are what let a fleet admit a matrix no single member fits).  The
+    /// same function drives admission, pricing and execution, so they can
+    /// never disagree about who owns which rows.
+    pub fn shard_plan(&self, set: DeviceSet, n: usize, mem_fraction: f64) -> Vec<ShardAssignment> {
+        let members: Vec<DeviceId> = set.iter().collect();
+        assert!(!members.is_empty(), "cannot shard across an empty device set");
+        let weights: Vec<f64> =
+            members.iter().map(|&id| self.devices[id].budget(mem_fraction) as f64).collect();
+        let blocks = RowBlocks::weighted(n, &weights);
+        members
+            .iter()
+            .enumerate()
+            .map(|(k, &device)| ShardAssignment {
+                device,
+                start: blocks.range(k).start,
+                rows: blocks.rows(k),
+            })
+            .collect()
+    }
+
+    /// One-line human summary (`840m(1.8G) v100(14.4G) host(14.4G)` style,
+    /// budgets at the given fraction).
+    pub fn summary(&self, mem_fraction: f64) -> String {
+        self.devices
+            .iter()
+            .map(|d| format!("{}({})", d.label, human_bytes(d.budget(mem_fraction))))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+fn labels_match(existing: &str, base: &str) -> bool {
+    existing == base
+        || existing.strip_prefix(base).map_or(false, |rest| rest.starts_with('#'))
+}
+
+/// Parse `512`, `64k`, `512m`, `2g` into bytes.
+fn parse_bytes(s: &str) -> Result<usize> {
+    let lower = s.to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = lower.strip_suffix('k') {
+        (d, 1usize << 10)
+    } else if let Some(d) = lower.strip_suffix('m') {
+        (d, 1usize << 20)
+    } else if let Some(d) = lower.strip_suffix('g') {
+        (d, 1usize << 30)
+    } else {
+        (lower.as_str(), 1usize)
+    };
+    digits
+        .parse::<usize>()
+        .map(|v| v * mult)
+        .map_err(|_| anyhow!("bad byte size `{s}` (expected digits with optional k/m/g suffix)"))
+}
+
+/// `1.8G`-style rendering.
+fn human_bytes(b: usize) -> String {
+    if b >= 1 << 30 {
+        format!("{:.1}G", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.0}M", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.0}K", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_catalog_and_budget_overrides() {
+        let f = Fleet::parse("840m,v100,host").unwrap();
+        assert_eq!(f.len(), 3);
+        assert_eq!(f.label_of(0), "840m");
+        assert_eq!(f.label_of(1), "v100");
+        assert!(f.device(1).is_gpu());
+        assert!(!f.device(2).is_gpu());
+        assert_eq!(f.gpu_ids(), vec![0, 1]);
+
+        let g = Fleet::parse("840m=2m,840m=2m").unwrap();
+        assert_eq!(g.label_of(0), "840m");
+        assert_eq!(g.label_of(1), "840m#2");
+        assert_eq!(g.device(0).budget(0.9), 2 << 20, "override ignores mem_fraction");
+
+        assert!(Fleet::parse("titan-x").is_err());
+        assert!(Fleet::parse("").is_err());
+    }
+
+    #[test]
+    fn parse_bytes_suffixes() {
+        assert_eq!(parse_bytes("512").unwrap(), 512);
+        assert_eq!(parse_bytes("64k").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("512M").unwrap(), 512 << 20);
+        assert_eq!(parse_bytes("2g").unwrap(), 2 << 30);
+        assert!(parse_bytes("2t").is_err());
+    }
+
+    #[test]
+    fn default_fleet_is_the_paper_card() {
+        let f = Fleet::paper_default();
+        assert_eq!(f.len(), 1);
+        assert!(f.device(0).is_gpu());
+        assert_eq!(f.device(0).mem_capacity(), 2 << 30);
+        assert!(f.shard_sets().is_empty(), "a single device cannot shard");
+    }
+
+    #[test]
+    fn shard_sets_enumerate_gpu_containing_subsets() {
+        let f = Fleet::parse("840m,v100,host").unwrap();
+        let sets = f.shard_sets();
+        // subsets of {0,1,2} with >= 2 members, all of which contain a GPU
+        assert_eq!(sets.len(), 4);
+        assert!(sets.iter().all(|s| s.len() >= 2));
+        assert!(sets.contains(&DeviceSet::from_ids(&[0, 1, 2])));
+        // a host-only fleet cannot shard device work
+        let h = Fleet::parse("host,host").unwrap();
+        assert!(h.shard_sets().is_empty());
+    }
+
+    #[test]
+    fn shard_plan_is_budget_weighted_and_contiguous() {
+        let f = Fleet::parse("840m=1m,840m=3m").unwrap();
+        let set = DeviceSet::from_ids(&[0, 1]);
+        let plan = f.shard_plan(set, 100, 0.9);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].rows, 25);
+        assert_eq!(plan[1].rows, 75);
+        assert_eq!(plan[0].start, 0);
+        assert_eq!(plan[1].start, 25);
+    }
+
+    #[test]
+    fn budgets_scale_with_mem_fraction() {
+        let f = Fleet::paper_default();
+        let full = f.device(0).budget(1.0);
+        let half = f.device(0).budget(0.5);
+        assert_eq!(full, 2 << 30);
+        assert_eq!(half, 1 << 30);
+    }
+
+    #[test]
+    fn placement_labels_use_device_names() {
+        let f = Fleet::parse("840m,v100").unwrap();
+        assert_eq!(f.placement_label(Placement::Host), "host");
+        assert_eq!(f.placement_label(Placement::Single(1)), "v100");
+        assert_eq!(
+            f.placement_label(Placement::Sharded(DeviceSet::from_ids(&[0, 1]))),
+            "840m+v100"
+        );
+    }
+}

@@ -1,0 +1,206 @@
+//! Placement types: where a solve runs.
+//!
+//! A [`Placement`] is the planner's answer to "which hardware executes this
+//! plan": the orchestrating host ([`Placement::Host`] — the serial
+//! policies), exactly one fleet device ([`Placement::Single`]), or a
+//! contiguous row-block shard across a set of fleet devices
+//! ([`Placement::Sharded`]).  Placements are `Copy` + `Hash` so they ride
+//! inside [`crate::planner::Plan`], key batcher residency and calibration
+//! cells, and sort deterministically in candidate rankings.
+
+use super::DeviceId;
+
+/// A set of fleet device ids as a bitmask (fleets are small: at most
+/// [`DeviceSet::MAX_DEVICES`] devices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceSet(u32);
+
+impl DeviceSet {
+    /// Largest fleet a `DeviceSet` can address.
+    pub const MAX_DEVICES: usize = 32;
+
+    pub fn empty() -> Self {
+        DeviceSet(0)
+    }
+
+    pub fn single(id: DeviceId) -> Self {
+        let mut s = Self::empty();
+        s.insert(id);
+        s
+    }
+
+    pub fn from_ids(ids: &[DeviceId]) -> Self {
+        let mut s = Self::empty();
+        for &id in ids {
+            s.insert(id);
+        }
+        s
+    }
+
+    /// Raw bitmask (bit `i` = device id `i` is a member).
+    pub fn from_mask(mask: u32) -> Self {
+        DeviceSet(mask)
+    }
+
+    pub fn mask(&self) -> u32 {
+        self.0
+    }
+
+    pub fn insert(&mut self, id: DeviceId) {
+        assert!(id < Self::MAX_DEVICES, "device id {id} exceeds DeviceSet capacity");
+        self.0 |= 1 << id;
+    }
+
+    pub fn contains(&self, id: DeviceId) -> bool {
+        id < Self::MAX_DEVICES && self.0 & (1 << id) != 0
+    }
+
+    /// Member count.
+    pub fn len(&self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+
+    /// Member ids in ascending order — the canonical shard order every
+    /// layer (splitting, pricing, execution, admission) iterates in.
+    pub fn iter(&self) -> impl Iterator<Item = DeviceId> + '_ {
+        (0..Self::MAX_DEVICES).filter(move |&i| self.contains(i))
+    }
+
+    /// Member ids as a vector (ascending).
+    pub fn ids(&self) -> Vec<DeviceId> {
+        self.iter().collect()
+    }
+}
+
+/// Where a plan executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Placement {
+    /// The orchestrating host itself (serial policies; also the downgrade
+    /// target when no device placement admits).
+    Host,
+    /// One fleet device holds the whole working set.
+    Single(DeviceId),
+    /// Contiguous row blocks across >= 2 fleet devices; matvec partials run
+    /// per device and dot-products/norms become cross-device reductions.
+    Sharded(DeviceSet),
+}
+
+impl Placement {
+    /// Member devices (empty for [`Placement::Host`]).
+    pub fn devices(&self) -> DeviceSet {
+        match self {
+            Placement::Host => DeviceSet::empty(),
+            Placement::Single(id) => DeviceSet::single(*id),
+            Placement::Sharded(set) => *set,
+        }
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        matches!(self, Placement::Sharded(_))
+    }
+
+    /// Stable text token (`host`, `dev:2`, `shard:0+1`) used by the
+    /// calibration file format; inverse of [`Placement::parse_token`].
+    pub fn token(&self) -> String {
+        match self {
+            Placement::Host => "host".into(),
+            Placement::Single(id) => format!("dev:{id}"),
+            Placement::Sharded(set) => {
+                let ids: Vec<String> = set.iter().map(|i| i.to_string()).collect();
+                format!("shard:{}", ids.join("+"))
+            }
+        }
+    }
+
+    /// Parse a [`Placement::token`] back.
+    pub fn parse_token(s: &str) -> Option<Placement> {
+        if s == "host" {
+            return Some(Placement::Host);
+        }
+        if let Some(id) = s.strip_prefix("dev:") {
+            return id
+                .parse::<usize>()
+                .ok()
+                .filter(|&id| id < DeviceSet::MAX_DEVICES)
+                .map(Placement::Single);
+        }
+        if let Some(ids) = s.strip_prefix("shard:") {
+            let mut set = DeviceSet::empty();
+            for part in ids.split('+') {
+                let id = part.parse::<usize>().ok()?;
+                if id >= DeviceSet::MAX_DEVICES {
+                    return None;
+                }
+                set.insert(id);
+            }
+            if set.len() < 2 {
+                return None;
+            }
+            return Some(Placement::Sharded(set));
+        }
+        None
+    }
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.token())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_basics() {
+        let mut s = DeviceSet::empty();
+        assert!(s.is_empty());
+        s.insert(0);
+        s.insert(3);
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(0) && s.contains(3) && !s.contains(1));
+        assert_eq!(s.ids(), vec![0, 3]);
+        assert_eq!(DeviceSet::from_ids(&[3, 0]), s, "order-insensitive construction");
+    }
+
+    #[test]
+    fn token_roundtrip() {
+        let cases = [
+            Placement::Host,
+            Placement::Single(2),
+            Placement::Sharded(DeviceSet::from_ids(&[0, 1])),
+            Placement::Sharded(DeviceSet::from_ids(&[0, 2, 5])),
+        ];
+        for p in cases {
+            assert_eq!(Placement::parse_token(&p.token()), Some(p), "token {}", p.token());
+        }
+        assert_eq!(Placement::parse_token("shard:1"), None, "shards need >= 2 members");
+        assert_eq!(Placement::parse_token("dev:999"), None, "out-of-range single device");
+        assert_eq!(Placement::parse_token("nope"), None);
+    }
+
+    #[test]
+    fn ordering_is_deterministic() {
+        let mut v = vec![
+            Placement::Sharded(DeviceSet::from_ids(&[0, 1])),
+            Placement::Single(1),
+            Placement::Host,
+            Placement::Single(0),
+        ];
+        v.sort();
+        assert_eq!(
+            v,
+            vec![
+                Placement::Host,
+                Placement::Single(0),
+                Placement::Single(1),
+                Placement::Sharded(DeviceSet::from_ids(&[0, 1])),
+            ]
+        );
+    }
+}

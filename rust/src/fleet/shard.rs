@@ -1,0 +1,255 @@
+//! Row-block sharding of a [`SystemMatrix`].
+//!
+//! A sharded placement partitions the system's rows into contiguous blocks,
+//! one per member device; each device computes the matvec partial for its
+//! block (`y[block] = A[block, :] x`), which needs the full `x` (broadcast)
+//! but writes a disjoint output slice (gather).  Row blocks accumulate each
+//! output element in exactly the same order as the unsharded reference, so
+//! sharded GEMV/SpMV is **bit-identical** to single-device execution — the
+//! property `tests/fleet_e2e.rs` pins.
+
+use std::ops::Range;
+
+use crate::linalg::{CsrMatrix, DenseMatrix, LinearOperator, MatrixFormat, SystemMatrix};
+
+/// A contiguous partition of `n` rows into `k` blocks (some possibly
+/// empty).  Stored as boundaries: block `i` spans `starts[i]..starts[i+1]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowBlocks {
+    starts: Vec<usize>,
+}
+
+impl RowBlocks {
+    /// Split `n` rows into blocks proportional to `weights` (largest-
+    /// remainder apportionment; deterministic, ties to the lower index).
+    /// All-zero weights fall back to an even split.
+    pub fn weighted(n: usize, weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "at least one block required");
+        let k = weights.len();
+        let total: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+        let quota: Vec<f64> = if total > 0.0 {
+            weights.iter().map(|w| n as f64 * w.max(0.0) / total).collect()
+        } else {
+            vec![n as f64 / k as f64; k]
+        };
+        let mut rows: Vec<usize> = quota.iter().map(|q| q.floor() as usize).collect();
+        let assigned: usize = rows.iter().sum();
+        // hand the leftover rows to the largest fractional remainders
+        let mut rema: Vec<(usize, f64)> =
+            quota.iter().enumerate().map(|(i, q)| (i, q - q.floor())).collect();
+        rema.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        for (i, _) in rema.iter().take(n.saturating_sub(assigned)) {
+            rows[*i] += 1;
+        }
+        let mut starts = Vec::with_capacity(k + 1);
+        let mut acc = 0usize;
+        starts.push(acc);
+        for r in &rows {
+            acc += r;
+            starts.push(acc);
+        }
+        debug_assert_eq!(*starts.last().unwrap(), n);
+        Self { starts }
+    }
+
+    /// Even split of `n` rows into `k` blocks.
+    pub fn even(n: usize, k: usize) -> Self {
+        Self::weighted(n, &vec![1.0; k])
+    }
+
+    /// Build directly from per-block row counts (the partition an already-
+    /// computed shard plan decided — no re-apportionment round trip).
+    pub fn from_rows(rows: &[usize]) -> Self {
+        assert!(!rows.is_empty(), "at least one block required");
+        let mut starts = Vec::with_capacity(rows.len() + 1);
+        let mut acc = 0usize;
+        starts.push(acc);
+        for r in rows {
+            acc += r;
+            starts.push(acc);
+        }
+        Self { starts }
+    }
+
+    /// Number of blocks.
+    pub fn count(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Row range of block `i`.
+    pub fn range(&self, i: usize) -> Range<usize> {
+        self.starts[i]..self.starts[i + 1]
+    }
+
+    /// Rows in block `i`.
+    pub fn rows(&self, i: usize) -> usize {
+        self.starts[i + 1] - self.starts[i]
+    }
+
+    /// Total rows across all blocks.
+    pub fn total(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+}
+
+/// A [`SystemMatrix`] split into per-device row-block shards.  Each shard is
+/// itself a `SystemMatrix` of shape `rows × n` in the parent's format, so
+/// per-device kernels and residency reasoning reuse the ordinary matrix
+/// machinery.
+#[derive(Clone, Debug)]
+pub struct ShardedMatrix {
+    n: usize,
+    format: MatrixFormat,
+    blocks: RowBlocks,
+    shards: Vec<SystemMatrix>,
+}
+
+impl ShardedMatrix {
+    /// Materialize the shards of `a` under the given row partition.
+    pub fn split(a: &SystemMatrix, blocks: RowBlocks) -> Self {
+        let n = a.n();
+        assert_eq!(blocks.total(), n, "row partition must cover the matrix");
+        let shards = (0..blocks.count())
+            .map(|k| {
+                let r = blocks.range(k);
+                match a {
+                    SystemMatrix::Dense(d) => {
+                        let data = d.data()[r.start * n..r.end * n].to_vec();
+                        SystemMatrix::Dense(DenseMatrix::from_vec(r.len(), n, data))
+                    }
+                    SystemMatrix::Csr(c) => {
+                        // one pass over exactly this block's rows via the
+                        // row pointers — O(shard nnz), not O(total nnz)
+                        let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
+                        let start = r.start;
+                        let triplets = r.clone().flat_map(|i| {
+                            (row_ptr[i]..row_ptr[i + 1])
+                                .map(move |p| (i - start, col_idx[p], values[p]))
+                        });
+                        SystemMatrix::Csr(CsrMatrix::from_triplets(r.len(), n, triplets))
+                    }
+                }
+            })
+            .collect();
+        Self { n, format: a.format(), blocks, shards }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn format(&self) -> MatrixFormat {
+        self.format
+    }
+
+    pub fn blocks(&self) -> &RowBlocks {
+        &self.blocks
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard `k` (a `rows × n` matrix in the parent format).
+    pub fn shard(&self, k: usize) -> &SystemMatrix {
+        &self.shards[k]
+    }
+
+    /// Stored nonzeros of shard `k`.
+    pub fn shard_nnz(&self, k: usize) -> usize {
+        self.shards[k].nnz()
+    }
+
+    /// Compute shard `k`'s matvec partial into `y_block`
+    /// (`len = blocks.rows(k)`).
+    pub fn apply_shard_into(&self, k: usize, x: &[f64], y_block: &mut [f64]) {
+        debug_assert_eq!(y_block.len(), self.blocks.rows(k));
+        if !y_block.is_empty() {
+            self.shards[k].apply_into(x, y_block);
+        }
+    }
+}
+
+impl LinearOperator for ShardedMatrix {
+    fn nrows(&self) -> usize {
+        self.n
+    }
+
+    fn ncols(&self) -> usize {
+        self.n
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for k in 0..self.shard_count() {
+            let r = self.blocks.range(k);
+            self.apply_shard_into(k, x, &mut y[r]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::generators;
+
+    #[test]
+    fn weighted_split_covers_and_respects_weights() {
+        let b = RowBlocks::weighted(100, &[1.0, 3.0]);
+        assert_eq!(b.count(), 2);
+        assert_eq!(b.rows(0), 25);
+        assert_eq!(b.rows(1), 75);
+        assert_eq!(b.total(), 100);
+        let uneven = RowBlocks::weighted(10, &[1.0, 1.0, 1.0]);
+        assert_eq!(uneven.rows(0) + uneven.rows(1) + uneven.rows(2), 10);
+    }
+
+    #[test]
+    fn zero_weights_fall_back_to_even() {
+        let b = RowBlocks::weighted(9, &[0.0, 0.0, 0.0]);
+        assert_eq!((b.rows(0), b.rows(1), b.rows(2)), (3, 3, 3));
+    }
+
+    #[test]
+    fn from_rows_reproduces_an_existing_partition() {
+        let b = RowBlocks::from_rows(&[25, 0, 75]);
+        assert_eq!(b.count(), 3);
+        assert_eq!(b.range(0), 0..25);
+        assert_eq!(b.range(1), 25..25);
+        assert_eq!(b.range(2), 25..100);
+        assert_eq!(b.total(), 100);
+        let w = RowBlocks::weighted(100, &[1.0, 3.0]);
+        assert_eq!(RowBlocks::from_rows(&[w.rows(0), w.rows(1)]), w);
+    }
+
+    #[test]
+    fn empty_blocks_are_legal() {
+        let b = RowBlocks::weighted(4, &[1.0, 1000.0]);
+        assert_eq!(b.rows(0) + b.rows(1), 4);
+        assert_eq!(b.range(0).start, 0);
+    }
+
+    #[test]
+    fn dense_shards_bit_match_reference() {
+        let a = SystemMatrix::Dense(generators::dense_shifted_random(64, 10.0, 7));
+        let x = generators::random_vector(64, 3);
+        let reference = a.apply(&x);
+        for blocks in [RowBlocks::even(64, 2), RowBlocks::weighted(64, &[1.0, 5.0, 2.0])] {
+            let s = ShardedMatrix::split(&a, blocks);
+            assert_eq!(s.apply(&x), reference, "sharded dense gemv must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn csr_shards_bit_match_reference() {
+        let a = SystemMatrix::Csr(generators::convection_diffusion_2d(9, 7, 2.0, 1.0));
+        let n = a.n();
+        let x = generators::random_vector(n, 11);
+        let reference = a.apply(&x);
+        let s = ShardedMatrix::split(&a, RowBlocks::weighted(n, &[2.0, 1.0, 4.0]));
+        assert_eq!(s.apply(&x), reference, "sharded spmv must be bit-identical");
+        let total_nnz: usize = (0..s.shard_count()).map(|k| s.shard_nnz(k)).sum();
+        assert_eq!(total_nnz, a.nnz(), "shards conserve stored entries");
+    }
+}

@@ -28,10 +28,15 @@
 //!   implementations, including the R-semantics host engine ([`backend::rvec`]).
 //! * **[`gmres`]** — restarted GMRES driver, host Arnoldi (MGS/CGS), Givens
 //!   least squares, preconditioners.
+//! * **[`fleet`]** — the multi-device fleet: a registry of heterogeneous
+//!   devices with per-device budgets, placements (single-device or
+//!   row-block sharded), the sharded executor, and the fleet cost model
+//!   that prices Arnoldi dot-products as cross-device reductions.
 //! * **[`planner`]** — the plan-and-calibrate subsystem: enumerates
-//!   candidate plans over policy × format × restart × preconditioner,
-//!   prices them through the shared cost table plus a convergence model,
-//!   and refines per-policy coefficients online from worker feedback.
+//!   candidate plans over policy × format × restart × preconditioner ×
+//!   placement, prices them through the shared cost table plus a
+//!   convergence model, and refines per-(policy, format, placement)
+//!   coefficients online from worker feedback.
 //! * **[`coordinator`]** — the L3 solve service: request router (delegating
 //!   auto-selection to the planner), admission by device memory, batcher,
 //!   worker pool, metrics.
@@ -41,6 +46,7 @@
 pub mod backend;
 pub mod coordinator;
 pub mod device;
+pub mod fleet;
 pub mod gmres;
 pub mod linalg;
 pub mod planner;

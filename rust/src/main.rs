@@ -6,11 +6,12 @@
 //! gmres-rs solve  [--n 512] [--policy serial-native] [--format dense|csr]
 //!                 [--m 30] [--tol 1e-6] [--precond identity|jacobi] [--seed 42]
 //! gmres-rs plan   [--n 512] [--format dense|csr] [--m 30] [--tol 1e-6]
-//!                 [--policy P]           (alias: explain)
+//!                 [--policy P] [--fleet 840m,v100,host]   (alias: explain)
 //! gmres-rs sweep  [--what table1|figure5|blas1|memcap] [--measured]
 //!                 [--format dense|csr] [--sizes a,b,..] [--m 30] [--csv out.csv]
 //! gmres-rs serve  [--requests 16] [--sizes 256,512] [--cpu-workers 2] [--m 8]
-//!                 [--format dense|csr]
+//!                 [--format dense|csr] [--fleet 840m,v100,host]
+//!                 [--calib-file path]
 //! gmres-rs info
 //! ```
 
@@ -19,8 +20,9 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail};
 
 use gmres_rs::backend::{build_engine_preconditioned, Policy};
-use gmres_rs::coordinator::{MatrixSpec, ServiceConfig, SolveRequest, SolveService};
+use gmres_rs::coordinator::{MatrixSpec, RouterConfig, ServiceConfig, SolveRequest, SolveService};
 use gmres_rs::device::GpuSpec;
+use gmres_rs::fleet::Fleet;
 use gmres_rs::gmres::{GmresConfig, PrecondKind, RestartedGmres};
 use gmres_rs::linalg::{generators, MatrixFormat, SystemMatrix, SystemShape};
 use gmres_rs::planner::{Planner, PlannerConfig};
@@ -35,16 +37,21 @@ USAGE:
   gmres-rs solve [--n N] [--policy P] [--format dense|csr] [--m M] [--tol T]
                  [--precond identity|jacobi] [--seed S]
   gmres-rs plan  [--n N] [--format dense|csr] [--m M] [--tol T] [--policy P]
+                 [--fleet 840m,v100,host]
                  (alias: explain — show ranked candidate plans + prediction)
   gmres-rs sweep [--what table1|figure5|blas1|memcap] [--measured]
                  [--format dense|csr] [--sizes a,b,..] [--m M] [--csv PATH]
   gmres-rs serve [--requests R] [--sizes a,b,..] [--cpu-workers W] [--m M]
-                 [--format dense|csr]
+                 [--format dense|csr] [--fleet 840m,v100,host]
+                 [--calib-file PATH]
   gmres-rs info
 
 POLICIES: serial-r | serial-native | gmatrix | gputools | gpuR
 FORMATS:  dense (Table-1 random ensemble) | csr (convection-diffusion stencil)
 PRECONDS: identity | jacobi (left diagonal scaling)
+FLEET:    comma-separated devices from the catalog 840m | v100 | host,
+          each optionally budget-capped (840m=512m); plans grow a placement
+          axis (single device or row-block shard) across the fleet
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -78,6 +85,14 @@ fn parse_format(args: &Args) -> anyhow::Result<MatrixFormat> {
 fn parse_precond(args: &Args) -> anyhow::Result<PrecondKind> {
     let s = args.get_choice("precond", &["identity", "none", "jacobi", "diag"], "identity")?;
     PrecondKind::parse(&s).ok_or_else(|| anyhow!("bad precond `{s}`"))
+}
+
+/// `--fleet 840m,v100,host` (default: the paper's single 840M).
+fn parse_fleet(args: &Args) -> anyhow::Result<Fleet> {
+    match args.get("fleet") {
+        None => Ok(Fleet::paper_default()),
+        Some(spec) => Fleet::parse(spec),
+    }
 }
 
 fn cmd_solve(args: &Args) -> anyhow::Result<()> {
@@ -143,7 +158,8 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
         MatrixFormat::Csr => MatrixSpec::ConvDiff1d { n, seed: 0 }.shape(),
     };
     let config = GmresConfig { m, tol, max_restarts: 200, precond };
-    let planner = Planner::new(PlannerConfig::default());
+    let fleet = parse_fleet(args)?;
+    let planner = Planner::new(PlannerConfig { fleet, ..PlannerConfig::default() });
     println!("{}", plan_table::render_candidates(&planner, &shape, &config));
     let plan = planner.plan(&shape, &config, policy);
     match policy {
@@ -233,8 +249,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cpu_workers = args.get_parse("cpu-workers", 2usize)?;
     let m = args.get_parse("m", 8usize)?;
     let format = parse_format(args)?;
+    let fleet = parse_fleet(args)?;
+    let calib_file = args.get("calib-file").map(std::path::PathBuf::from);
 
-    let svc = SolveService::start(ServiceConfig { cpu_workers, ..Default::default() });
+    let router = RouterConfig { fleet, ..Default::default() };
+    println!("fleet: {}", router.fleet.summary(router.mem_fraction));
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers,
+        router,
+        calib_file,
+        ..Default::default()
+    });
     let started = std::time::Instant::now();
     let handles: Vec<_> = (0..requests)
         .map(|i| {
@@ -260,10 +285,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             Ok(out) => {
                 ok += 1;
                 println!(
-                    "  {} n={} policy={} m={} pre={} cycles={} predicted={:.4}s measured={:.4}s queue={:.3}s{}",
+                    "  {} n={} policy={} @{} m={} pre={} cycles={} predicted={:.4}s measured={:.4}s queue={:.3}s{}",
                     out.id,
                     out.report.n,
                     out.policy,
+                    out.plan.placement,
                     out.plan.m,
                     out.plan.precond,
                     out.report.cycles,
@@ -279,6 +305,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let wall = started.elapsed().as_secs_f64();
     println!("{ok} / {requests} solved in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
     println!("metrics: {}", svc.metrics().render());
+    let devices = svc.metrics().render_devices();
+    if !devices.is_empty() {
+        print!("{devices}");
+    }
     println!(
         "{}",
         gmres_rs::report::plan_table::render_calibration(svc.router().planner())

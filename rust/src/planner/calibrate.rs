@@ -1,18 +1,28 @@
-//! Online cost calibration: exponentially-weighted per-(policy, format)
-//! coefficients refined from (predicted, measured) pairs the worker reports
-//! after every solve.
+//! Online cost calibration: exponentially-weighted per-(policy, format,
+//! placement) coefficients refined from (predicted, measured) pairs the
+//! worker reports after every solve.
 //!
-//! The estimator is deliberately one number per cell: the cost table gets
-//! the *shape* of each policy's cost right (it is charge-for-charge the
+//! The estimator is deliberately one number per cell: the cost tables get
+//! the *shape* of each policy's cost right (they are charge-for-charge the
 //! engines' own accounting), so what live traffic corrects is a
 //! multiplicative bias — dominated by the convergence model's
-//! cycles-to-tolerance error.  `coeff ← (1-α)·coeff + α·(measured/base)`
-//! converges to that bias and routing sharpens as traffic flows.
+//! cycles-to-tolerance error, and (for non-paper placements) by the gap
+//! between a device's spec sheet and its engine.  `coeff ← (1-α)·coeff +
+//! α·(measured/base)` converges to that bias and routing sharpens as
+//! traffic flows.
+//!
+//! The whole store serializes to a plain text snapshot
+//! ([`Calibrator::to_text`] / [`Calibrator::from_text`]) so a restarted
+//! router can plan warm (`--calib-file`).
 
 use std::collections::HashMap;
 
+use anyhow::{anyhow, bail};
+
 use crate::backend::Policy;
+use crate::fleet::Placement;
 use crate::linalg::MatrixFormat;
+use crate::Result;
 
 #[derive(Clone, Copy, Debug)]
 struct Cell {
@@ -25,15 +35,16 @@ struct Cell {
 pub struct CalibrationEntry {
     pub policy: Policy,
     pub format: MatrixFormat,
+    pub placement: Placement,
     pub coeff: f64,
     pub observations: u64,
 }
 
-/// Per-(policy, format) EWMA coefficient store.
+/// Per-(policy, format, placement) EWMA coefficient store.
 #[derive(Clone, Debug)]
 pub struct Calibrator {
     alpha: f64,
-    cells: HashMap<(Policy, MatrixFormat), Cell>,
+    cells: HashMap<(Policy, MatrixFormat, Placement), Cell>,
     observations: u64,
     abs_rel_err_sum: f64,
 }
@@ -46,8 +57,8 @@ impl Calibrator {
     }
 
     /// Current coefficient for a cell (1.0 until observed).
-    pub fn coeff(&self, policy: Policy, format: MatrixFormat) -> f64 {
-        self.cells.get(&(policy, format)).map_or(1.0, |c| c.coeff)
+    pub fn coeff(&self, policy: Policy, format: MatrixFormat, placement: Placement) -> f64 {
+        self.cells.get(&(policy, format, placement)).map_or(1.0, |c| c.coeff)
     }
 
     /// Ingest one solve: `base_seconds` is the uncalibrated cost-table
@@ -59,6 +70,7 @@ impl Calibrator {
         &mut self,
         policy: Policy,
         format: MatrixFormat,
+        placement: Placement,
         base_seconds: f64,
         predicted_seconds: f64,
         measured_seconds: f64,
@@ -73,7 +85,7 @@ impl Calibrator {
         }
         let cell = self
             .cells
-            .entry((policy, format))
+            .entry((policy, format, placement))
             .or_insert(Cell { coeff: 1.0, observations: 0 });
         cell.coeff = (1.0 - self.alpha) * cell.coeff + self.alpha * measured_seconds / base_seconds;
         cell.observations += 1;
@@ -100,15 +112,95 @@ impl Calibrator {
         let mut out: Vec<CalibrationEntry> = self
             .cells
             .iter()
-            .map(|(&(policy, format), c)| CalibrationEntry {
+            .map(|(&(policy, format, placement), c)| CalibrationEntry {
                 policy,
                 format,
+                placement,
                 coeff: c.coeff,
                 observations: c.observations,
             })
             .collect();
-        out.sort_by_key(|e| (e.policy.name(), e.format.name()));
+        out.sort_by(|a, b| {
+            (a.policy.name(), a.format.name(), a.placement)
+                .cmp(&(b.policy.name(), b.format.name(), b.placement))
+        });
         out
+    }
+
+    /// Serialize the full store as plain text (one `cell` line per
+    /// observed cell; placement uses [`Placement::token`]).
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("# gmres-rs calibrator v1\n");
+        out.push_str(&format!("alpha {}\n", self.alpha));
+        out.push_str(&format!("observations {}\n", self.observations));
+        out.push_str(&format!("err_sum {}\n", self.abs_rel_err_sum));
+        for e in self.snapshot() {
+            out.push_str(&format!(
+                "cell {} {} {} {} {}\n",
+                e.policy.name(),
+                e.format.name(),
+                e.placement.token(),
+                e.coeff,
+                e.observations
+            ));
+        }
+        out
+    }
+
+    /// Parse a [`Calibrator::to_text`] snapshot.  `default_alpha` is used
+    /// when the snapshot carries no (or an invalid) alpha line.
+    pub fn from_text(default_alpha: f64, text: &str) -> Result<Calibrator> {
+        let mut cal = Calibrator::new(default_alpha);
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            let bad = |what: &str| anyhow!("calibration line {}: {what}: `{line}`", lineno + 1);
+            match fields.first().copied() {
+                Some("alpha") => {
+                    let a: f64 =
+                        fields.get(1).and_then(|s| s.parse().ok()).ok_or_else(|| bad("bad alpha"))?;
+                    if a > 0.0 && a <= 1.0 {
+                        cal.alpha = a;
+                    }
+                }
+                Some("observations") => {
+                    cal.observations = fields
+                        .get(1)
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| bad("bad observation count"))?;
+                }
+                Some("err_sum") => {
+                    cal.abs_rel_err_sum = fields
+                        .get(1)
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| bad("bad error sum"))?;
+                }
+                Some("cell") => {
+                    if fields.len() != 6 {
+                        return Err(bad("expected `cell policy format placement coeff obs`"));
+                    }
+                    let policy =
+                        Policy::parse(fields[1]).ok_or_else(|| bad("unknown policy"))?;
+                    let format =
+                        MatrixFormat::parse(fields[2]).ok_or_else(|| bad("unknown format"))?;
+                    let placement = Placement::parse_token(fields[3])
+                        .ok_or_else(|| bad("unknown placement"))?;
+                    let coeff: f64 =
+                        fields[4].parse().map_err(|_| bad("bad coefficient"))?;
+                    let observations: u64 =
+                        fields[5].parse().map_err(|_| bad("bad cell observation count"))?;
+                    if !(coeff.is_finite() && coeff > 0.0) {
+                        return Err(bad("non-positive coefficient"));
+                    }
+                    cal.cells.insert((policy, format, placement), Cell { coeff, observations });
+                }
+                _ => bail!("calibration line {}: unknown record `{line}`", lineno + 1),
+            }
+        }
+        Ok(cal)
     }
 }
 
@@ -116,10 +208,12 @@ impl Calibrator {
 mod tests {
     use super::*;
 
+    const HOST: Placement = Placement::Host;
+
     #[test]
     fn unobserved_cells_predict_unity() {
         let c = Calibrator::new(0.3);
-        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Dense), 1.0);
+        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Dense, HOST), 1.0);
         assert_eq!(c.observations(), 0);
         assert!(c.mean_abs_rel_error().is_none());
     }
@@ -129,39 +223,69 @@ mod tests {
         let mut c = Calibrator::new(0.5);
         for _ in 0..32 {
             // consistently measures 40% of the base prediction
-            c.observe(Policy::SerialR, MatrixFormat::Dense, 1.0, 1.0, 0.4);
+            c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, 1.0, 1.0, 0.4);
         }
-        let k = c.coeff(Policy::SerialR, MatrixFormat::Dense);
+        let k = c.coeff(Policy::SerialR, MatrixFormat::Dense, HOST);
         assert!((k - 0.4).abs() < 1e-4, "coeff {k}");
         assert_eq!(c.observations(), 32);
     }
 
     #[test]
-    fn cells_are_independent() {
+    fn cells_are_independent_across_placements() {
         let mut c = Calibrator::new(1.0);
-        c.observe(Policy::SerialR, MatrixFormat::Dense, 1.0, 1.0, 2.0);
-        c.observe(Policy::GpurVclLike, MatrixFormat::Csr, 1.0, 1.0, 0.5);
-        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Dense), 2.0);
-        assert_eq!(c.coeff(Policy::GpurVclLike, MatrixFormat::Csr), 0.5);
-        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Csr), 1.0);
+        let shard = Placement::parse_token("shard:0+1").unwrap();
+        c.observe(Policy::GpurVclLike, MatrixFormat::Dense, Placement::Single(0), 1.0, 1.0, 2.0);
+        c.observe(Policy::GpurVclLike, MatrixFormat::Dense, shard, 1.0, 1.0, 0.5);
+        assert_eq!(c.coeff(Policy::GpurVclLike, MatrixFormat::Dense, Placement::Single(0)), 2.0);
+        assert_eq!(c.coeff(Policy::GpurVclLike, MatrixFormat::Dense, shard), 0.5);
+        assert_eq!(c.coeff(Policy::GpurVclLike, MatrixFormat::Dense, Placement::Single(1)), 1.0);
         assert_eq!(c.snapshot().len(), 2);
     }
 
     #[test]
     fn degenerate_observations_ignored() {
         let mut c = Calibrator::new(0.5);
-        c.observe(Policy::SerialNative, MatrixFormat::Dense, 0.0, 0.0, 0.0);
-        c.observe(Policy::SerialR, MatrixFormat::Dense, 1.0, 1.0, f64::NAN);
-        c.observe(Policy::SerialR, MatrixFormat::Dense, -1.0, 1.0, 1.0);
+        c.observe(Policy::SerialNative, MatrixFormat::Dense, HOST, 0.0, 0.0, 0.0);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, 1.0, 1.0, f64::NAN);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, -1.0, 1.0, 1.0);
         assert_eq!(c.observations(), 0);
     }
 
     #[test]
     fn error_tally_tracks_served_predictions() {
         let mut c = Calibrator::new(0.5);
-        c.observe(Policy::SerialR, MatrixFormat::Dense, 1.0, 2.0, 1.0);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, 1.0, 2.0, 1.0);
         assert!((c.mean_abs_rel_error().unwrap() - 1.0).abs() < 1e-12);
-        c.observe(Policy::SerialR, MatrixFormat::Dense, 1.0, 1.0, 1.0);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, 1.0, 1.0, 1.0);
         assert!((c.mean_abs_rel_error().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn text_snapshot_roundtrips() {
+        let mut c = Calibrator::new(0.25);
+        let shard = Placement::parse_token("shard:0+2").unwrap();
+        for _ in 0..5 {
+            c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, 1.0, 1.0, 0.8);
+            c.observe(Policy::GpurVclLike, MatrixFormat::Csr, shard, 2.0, 2.0, 3.0);
+        }
+        let text = c.to_text();
+        let back = Calibrator::from_text(0.9, &text).unwrap();
+        assert_eq!(back.observations(), c.observations());
+        assert_eq!(back.snapshot(), c.snapshot());
+        assert!(
+            (back.mean_abs_rel_error().unwrap() - c.mean_abs_rel_error().unwrap()).abs() < 1e-12
+        );
+        // alpha restored from the snapshot, not the fallback
+        assert!((back.alpha - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_snapshots_are_rejected() {
+        assert!(Calibrator::from_text(0.5, "cell nope dense host 1.0 3").is_err());
+        assert!(Calibrator::from_text(0.5, "cell serial-r dense host -1.0 3").is_err());
+        assert!(Calibrator::from_text(0.5, "garbage line").is_err());
+        // comments and blank lines are fine
+        let ok = Calibrator::from_text(0.5, "# hi\n\nalpha 0.5\n").unwrap();
+        assert_eq!(ok.observations(), 0);
     }
 }

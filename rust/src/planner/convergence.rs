@@ -48,6 +48,13 @@ impl Default for ConvergenceModel {
 }
 
 impl ConvergenceModel {
+    /// Effective inner iterations one GMRES(m) cycle contributes after the
+    /// restart penalty: `m·m / (m + restart_loss)`.
+    pub fn effective_iterations(&self, m: usize) -> f64 {
+        let mf = m.max(1) as f64;
+        mf * mf / (mf + self.restart_loss.max(0.0))
+    }
+
     /// Estimated restart cycles to reach relative tolerance `tol` with
     /// GMRES(m), clamped to `[1, max_restarts]`.
     pub fn cycles_to_tolerance(
@@ -57,20 +64,53 @@ impl ConvergenceModel {
         precond: PrecondKind,
         max_restarts: usize,
     ) -> usize {
+        self.cycles_with_rho(m, tol, precond, max_restarts, None)
+    }
+
+    /// [`ConvergenceModel::cycles_to_tolerance`] with an optional
+    /// *observed* per-iteration contraction overriding the prior `rho`.
+    /// An observed rho already reflects what the preconditioner bought on
+    /// that workload class (it was fitted from preconditioned solves), so
+    /// the analytic `jacobi_boost` is not applied on top of it.
+    pub fn cycles_with_rho(
+        &self,
+        m: usize,
+        tol: f64,
+        precond: PrecondKind,
+        max_restarts: usize,
+        observed_rho: Option<f64>,
+    ) -> usize {
         if tol >= 1.0 {
             return 1;
         }
-        let boost = match precond {
-            PrecondKind::Identity => 1.0,
-            PrecondKind::Jacobi => self.jacobi_boost.max(1.0),
+        let boost = match (precond, observed_rho) {
+            (_, Some(_)) => 1.0,
+            (PrecondKind::Identity, None) => 1.0,
+            (PrecondKind::Jacobi, None) => self.jacobi_boost.max(1.0),
         };
-        let mf = m.max(1) as f64;
-        let effective = mf * mf / (mf + self.restart_loss.max(0.0));
+        let rho = observed_rho.unwrap_or(self.rho);
+        let effective = self.effective_iterations(m);
         // rho in (0,1) => ln(rho) < 0 => per_cycle > 0
-        let per_cycle = -(effective * self.rho.clamp(1e-6, 1.0 - 1e-6).ln()) * boost;
+        let per_cycle = -(effective * rho.clamp(1e-6, 1.0 - 1e-6).ln()) * boost;
         let needed = -tol.max(1e-300).ln();
         let cycles = (needed / per_cycle).ceil();
         (cycles as usize).clamp(1, max_restarts.max(1))
+    }
+
+    /// Invert an *observed per-cycle* residual contraction factor (the
+    /// geometric mean `(||r_last|| / ||r_0||)^(1/cycles)` a finished solve
+    /// reports) into the per-iteration `rho` this model's effective
+    /// iteration count implies — the quantity the planner's online
+    /// convergence calibration EWMA-averages per workload class.
+    pub fn rho_from_cycle_factor(&self, m: usize, factor: f64) -> Option<f64> {
+        if !(factor > 0.0 && factor < 1.0) || !factor.is_finite() {
+            return None;
+        }
+        let effective = self.effective_iterations(m);
+        if effective <= 0.0 {
+            return None;
+        }
+        Some(factor.powf(1.0 / effective).clamp(1e-6, 1.0 - 1e-6))
     }
 }
 
@@ -128,5 +168,31 @@ mod tests {
         let m = ConvergenceModel::default();
         assert_eq!(m.cycles_to_tolerance(2, 1e-300, PrecondKind::Identity, 7), 7);
         assert_eq!(m.cycles_to_tolerance(30, 0.9, PrecondKind::Identity, 7), 1);
+    }
+
+    #[test]
+    fn observed_rho_overrides_the_prior() {
+        let m = ConvergenceModel::default();
+        // a much slower observed contraction must predict more cycles
+        let prior = m.cycles_to_tolerance(10, 1e-8, PrecondKind::Identity, 500);
+        let slow = m.cycles_with_rho(10, 1e-8, PrecondKind::Identity, 500, Some(0.95));
+        assert!(slow > prior, "slow {slow} vs prior {prior}");
+        // a faster observed contraction predicts fewer
+        let fast = m.cycles_with_rho(10, 1e-8, PrecondKind::Identity, 500, Some(0.01));
+        assert!(fast <= prior, "fast {fast} vs prior {prior}");
+    }
+
+    #[test]
+    fn rho_inversion_roundtrips_through_prediction() {
+        let m = ConvergenceModel::default();
+        // invert the model's own per-cycle factor: rho comes back
+        let eff = m.effective_iterations(10);
+        let factor = m.rho.powf(eff);
+        let rho = m.rho_from_cycle_factor(10, factor).unwrap();
+        assert!((rho - m.rho).abs() < 1e-9, "rho {rho}");
+        // degenerate factors are rejected
+        assert!(m.rho_from_cycle_factor(10, 0.0).is_none());
+        assert!(m.rho_from_cycle_factor(10, 1.0).is_none());
+        assert!(m.rho_from_cycle_factor(10, f64::NAN).is_none());
     }
 }

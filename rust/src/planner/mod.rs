@@ -2,23 +2,36 @@
 //!
 //! The paper's whole story is that *which* implementation wins flips with
 //! problem size; the crossover points move again with storage format,
-//! restart length and preconditioning.  This subsystem owns that decision:
+//! restart length, preconditioning — and, once the runtime spans more than
+//! one device, with *where* the solve runs.  This subsystem owns that
+//! decision:
 //!
 //! * **enumeration** — for a solve (shape + GMRES config) it generates
-//!   candidate plans over policy × restart `m` × preconditioner, dropping
-//!   candidates whose working set fails device-memory admission
-//!   ([`Planner::enumerate`]).
+//!   candidate plans over policy × restart `m` × preconditioner ×
+//!   placement, dropping candidates whose working set fails per-device
+//!   memory admission ([`Planner::enumerate`]).  Placements come from the
+//!   configured [`Fleet`]: every GPU device singly, plus row-block shards
+//!   across device sets — so a matrix no single card fits can still be
+//!   admitted sharded.
 //! * **pricing** — each candidate is priced through the shared
-//!   [`crate::device::costs`] table plus a [`ConvergenceModel`] estimating
-//!   cycles-to-tolerance, replacing the router's old hard-coded
-//!   `assumed_cycles`.  Setup/per-cycle cost splits are memoized per
-//!   `(policy, shape, m)`, so steady-state planning is microseconds.
-//! * **online calibration** — the worker reports `(plan, measured seconds)`
-//!   after every solve; a per-(policy, format) EWMA [`Calibrator`] learns
-//!   the cost table's multiplicative bias so routing sharpens under live
-//!   traffic.
+//!   [`crate::device::costs`] table (single placements, on the placement
+//!   device's own spec) or the [`crate::fleet::costs`] sharded model
+//!   (per-device partials + cross-device reduction terms), plus a
+//!   [`ConvergenceModel`] estimating cycles-to-tolerance.  Setup/per-cycle
+//!   cost splits are memoized per `(policy, shape, m, placement)`, so
+//!   steady-state planning is microseconds.
+//! * **online calibration** — the worker reports `(plan, measured
+//!   seconds)` after every solve; a per-(policy, format, placement) EWMA
+//!   [`Calibrator`] learns the cost table's multiplicative bias.  Workers
+//!   also report each finished solve's observed per-cycle contraction
+//!   factor, which calibrates the convergence model's `rho` per workload
+//!   class ([`Planner::observe_convergence`]) — so cycle-count prediction
+//!   sharpens online exactly like seconds-per-cycle does.  The calibrator
+//!   snapshot can be persisted and reloaded
+//!   ([`Planner::save_calibration`]) so a restarted router plans warm.
 //! * **explainability** — [`crate::report::plan_table`] renders the ranked
-//!   candidates (the CLI `plan` / `explain` subcommands).
+//!   candidates with placement and per-device utilization (the CLI `plan`
+//!   / `explain` subcommands).
 //!
 //! The planner sits below the coordinator: [`crate::coordinator::Router`]
 //! delegates auto-selection to it and shares it (via `Arc`) with the
@@ -33,23 +46,27 @@ pub use convergence::ConvergenceModel;
 pub use plan::{Plan, PlanCandidate};
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::Mutex;
 
 use crate::backend::Policy;
 use crate::device::costs;
 use crate::device::memory::working_set_bytes;
-use crate::device::{DeviceSim, GpuSpec};
+use crate::device::{DeviceSim, HostSpec};
+use crate::fleet::{costs as fleet_costs, DeviceKind, Fleet, Placement};
 use crate::gmres::{GmresConfig, PrecondKind};
 use crate::linalg::{MatrixFormat, SystemShape};
+use crate::Result;
 
 /// Planner configuration.
 #[derive(Clone, Debug)]
 pub struct PlannerConfig {
-    /// Device spec used for admission (capacity) and pricing context.
-    pub gpu: GpuSpec,
-    /// Fraction of device memory a single job may claim.
+    /// The device fleet placements are drawn from (admission budgets and
+    /// per-device cost tables).
+    pub fleet: Fleet,
+    /// Fraction of each device's memory a single job may claim.
     pub mem_fraction: f64,
-    /// Policy used when a device policy cannot be admitted (and the
+    /// Policy used when no device placement can be admitted (and the
     /// always-available host candidate in enumeration).
     pub fallback: Policy,
     /// Candidate restart lengths explored for auto requests (the request's
@@ -66,7 +83,7 @@ pub struct PlannerConfig {
 impl Default for PlannerConfig {
     fn default() -> Self {
         Self {
-            gpu: GpuSpec::geforce_840m(),
+            fleet: Fleet::paper_default(),
             mem_fraction: 0.9,
             fallback: Policy::SerialR,
             restarts: vec![10, 30, 60],
@@ -77,7 +94,7 @@ impl Default for PlannerConfig {
     }
 }
 
-/// Memoized cost split of one `(policy, shape, m)` point.
+/// Memoized cost split of one `(policy, shape, m, placement)` point.
 #[derive(Clone, Copy, Debug)]
 struct CostSplit {
     setup_seconds: f64,
@@ -91,12 +108,16 @@ struct CostSplit {
 pub struct Planner {
     config: PlannerConfig,
     calibrator: Mutex<Calibrator>,
-    price_cache: Mutex<HashMap<(Policy, SystemShape, usize), CostSplit>>,
+    /// Observed per-iteration contraction per (format, precond) workload
+    /// class — the convergence model's online calibration state.
+    observed_rho: Mutex<HashMap<(MatrixFormat, PrecondKind), f64>>,
+    price_cache: Mutex<HashMap<(Policy, SystemShape, usize, Placement), CostSplit>>,
 }
 
 impl Planner {
-    /// Price-cache bound (~16 splits per novel shape; the cap comfortably
-    /// covers thousands of concurrently-hot shapes in a few MB).
+    /// Price-cache bound (~16 splits per novel shape per placement; the
+    /// cap comfortably covers thousands of concurrently-hot shapes in a
+    /// few MB).
     const PRICE_CACHE_CAP: usize = 65_536;
 
     pub fn new(config: PlannerConfig) -> Self {
@@ -104,6 +125,7 @@ impl Planner {
         Self {
             config,
             calibrator: Mutex::new(Calibrator::new(alpha)),
+            observed_rho: Mutex::new(HashMap::new()),
             price_cache: Mutex::new(HashMap::new()),
         }
     }
@@ -116,30 +138,124 @@ impl Planner {
         &self.config.convergence
     }
 
-    /// Admission test: does the policy's working set at restart `m` fit the
-    /// configured device-memory budget?
-    pub fn admits(&self, policy: Policy, shape: &SystemShape, m: usize) -> bool {
-        let budget = (self.config.gpu.mem_capacity as f64 * self.config.mem_fraction) as usize;
-        working_set_bytes(shape, m, policy) <= budget
+    pub fn fleet(&self) -> &Fleet {
+        &self.config.fleet
     }
 
-    /// Memoized `(setup, per-cycle)` cost split — identical charges to
-    /// [`costs::predict_seconds`], paid once per distinct point.
+    /// Legacy single-device admission test: does the policy's working set
+    /// at restart `m` fit *some* single fleet device's budget?  (Host
+    /// policies, whose working set is zero, always admit.)
+    pub fn admits(&self, policy: Policy, shape: &SystemShape, m: usize) -> bool {
+        if !policy.needs_runtime() {
+            return true;
+        }
+        self.config
+            .fleet
+            .gpu_ids()
+            .into_iter()
+            .any(|id| self.admits_placement(policy, shape, m, Placement::Single(id)))
+    }
+
+    /// Placement-aware admission: do the working sets fit the placement's
+    /// per-device budgets?
+    pub fn admits_placement(
+        &self,
+        policy: Policy,
+        shape: &SystemShape,
+        m: usize,
+        placement: Placement,
+    ) -> bool {
+        let fleet = &self.config.fleet;
+        match placement {
+            Placement::Host => !policy.needs_runtime(),
+            Placement::Single(id) => match fleet.get(id) {
+                Some(d) if d.is_gpu() && policy.needs_runtime() => {
+                    working_set_bytes(shape, m, policy) <= d.budget(self.config.mem_fraction)
+                }
+                _ => false,
+            },
+            Placement::Sharded(set) => {
+                if set.len() < 2
+                    || !policy.needs_runtime()
+                    || set.iter().any(|id| fleet.get(id).is_none())
+                {
+                    return false;
+                }
+                fleet.shard_plan(set, shape.n, self.config.mem_fraction).iter().all(|a| {
+                    fleet_costs::shard_working_set_bytes(shape, a.rows, m, policy)
+                        <= fleet.device(a.device).budget(self.config.mem_fraction)
+                })
+            }
+        }
+    }
+
+    /// Candidate placements for a policy: the host for serial policies;
+    /// every GPU device singly plus the fleet's sharded sets for device
+    /// policies.
+    pub fn placements_for(&self, policy: Policy) -> Vec<Placement> {
+        if !policy.needs_runtime() {
+            return vec![Placement::Host];
+        }
+        let fleet = &self.config.fleet;
+        let mut out: Vec<Placement> =
+            fleet.gpu_ids().into_iter().map(Placement::Single).collect();
+        out.extend(fleet.shard_sets().into_iter().map(Placement::Sharded));
+        out
+    }
+
+    /// Memoized `(setup, per-cycle)` cost split.  Single placements charge
+    /// the shared [`costs`] table on the placement device's own spec;
+    /// sharded placements price per-device partials plus cross-device
+    /// reductions through [`fleet_costs::shard_costs`].
     ///
     /// Bounded: a long-lived service seeing arbitrarily many distinct
     /// shapes must not grow memory forever, so past `PRICE_CACHE_CAP`
     /// entries the cache resets (recomputing a split is milliseconds;
     /// steady traffic re-warms instantly).
-    fn cost_split(&self, policy: Policy, shape: &SystemShape, m: usize) -> CostSplit {
-        let key = (policy, *shape, m);
+    fn cost_split(
+        &self,
+        policy: Policy,
+        shape: &SystemShape,
+        m: usize,
+        placement: Placement,
+    ) -> CostSplit {
+        let key = (policy, *shape, m, placement);
         if let Some(split) = self.price_cache.lock().unwrap().get(&key) {
             return *split;
         }
-        let mut sim = DeviceSim::paper_testbed(false);
-        costs::charge_setup(&mut sim, policy, shape, m);
-        let setup_seconds = sim.elapsed();
-        costs::charge_cycle(&mut sim, policy, shape, m);
-        let split = CostSplit { setup_seconds, cycle_seconds: sim.elapsed() - setup_seconds };
+        let split = match placement {
+            Placement::Sharded(set) => {
+                let sc = fleet_costs::shard_costs(
+                    &self.config.fleet,
+                    set,
+                    policy,
+                    shape,
+                    m,
+                    self.config.mem_fraction,
+                );
+                CostSplit { setup_seconds: sc.setup_seconds, cycle_seconds: sc.cycle_seconds }
+            }
+            _ => {
+                let gpu_spec = match placement {
+                    Placement::Single(id) => self
+                        .config
+                        .fleet
+                        .get(id)
+                        .and_then(|d| match &d.kind {
+                            DeviceKind::Gpu(s) => Some(s.clone()),
+                            DeviceKind::Host(_) => None,
+                        })
+                        .unwrap_or_else(crate::device::GpuSpec::geforce_840m),
+                    _ => crate::device::GpuSpec::geforce_840m(),
+                };
+                let mut sim =
+                    DeviceSim::new(gpu_spec, HostSpec::r_interpreter_i7_4710hq(), false);
+                costs::charge_setup(&mut sim, policy, shape, m);
+                let setup_seconds = sim.elapsed();
+                costs::charge_cycle(&mut sim, policy, shape, m);
+                CostSplit { setup_seconds, cycle_seconds: sim.elapsed() - setup_seconds }
+            }
+        };
         let mut cache = self.price_cache.lock().unwrap();
         if cache.len() >= Self::PRICE_CACHE_CAP {
             cache.clear();
@@ -148,27 +264,32 @@ impl Planner {
         split
     }
 
-    /// Price one plan point: convergence model → cycles, cost table →
-    /// base seconds, calibrator → served prediction.
+    /// Price one plan point: convergence model (with any observed rho for
+    /// the workload class) → cycles, cost table → base seconds, calibrator
+    /// → served prediction.
     fn price(
         &self,
         policy: Policy,
         shape: &SystemShape,
         m: usize,
         precond: PrecondKind,
+        placement: Placement,
         config: &GmresConfig,
     ) -> Plan {
-        let predicted_cycles = self.config.convergence.cycles_to_tolerance(
+        let rho = self.observed_rho(shape.format, precond);
+        let predicted_cycles = self.config.convergence.cycles_with_rho(
             m,
             config.tol,
             precond,
             config.max_restarts,
+            rho,
         );
-        let split = self.cost_split(policy, shape, m);
+        let split = self.cost_split(policy, shape, m, placement);
         let base_seconds = split.setup_seconds + predicted_cycles as f64 * split.cycle_seconds;
-        let coeff = self.coeff(policy, shape.format);
+        let coeff = self.coeff_at(policy, shape.format, placement);
         Plan {
             policy,
+            placement,
             m,
             precond,
             predicted_cycles,
@@ -191,7 +312,7 @@ impl Planner {
 
     /// Enumerate and price the full candidate space for an auto request,
     /// ranked admissible-first by predicted seconds (deterministic
-    /// tie-break on policy order, then m, then precond).
+    /// tie-break on policy order, then m, then precond, then placement).
     pub fn enumerate(&self, shape: &SystemShape, config: &GmresConfig) -> Vec<PlanCandidate> {
         let mut policies = vec![self.config.fallback];
         for p in Policy::gpu_policies() {
@@ -212,11 +333,13 @@ impl Planner {
         for &m in &self.restart_grid(config) {
             for &precond in &preconds {
                 for &policy in &policies {
-                    let admitted = !policy.needs_runtime() || self.admits(policy, shape, m);
-                    out.push(PlanCandidate {
-                        plan: self.price(policy, shape, m, precond, config),
-                        admitted,
-                    });
+                    for placement in self.placements_for(policy) {
+                        let admitted = self.admits_placement(policy, shape, m, placement);
+                        out.push(PlanCandidate {
+                            plan: self.price(policy, shape, m, precond, placement, config),
+                            admitted,
+                        });
+                    }
                 }
             }
         }
@@ -228,14 +351,17 @@ impl Planner {
                 .then(rank(a.plan.policy).cmp(&rank(b.plan.policy)))
                 .then(a.plan.m.cmp(&b.plan.m))
                 .then(a.plan.precond.name().cmp(b.plan.precond.name()))
+                .then(a.plan.placement.cmp(&b.plan.placement))
         });
         out
     }
 
     /// Plan one solve.  Explicit policy requests keep their requested
-    /// restart and preconditioner (downgrading to the fallback when the
-    /// device budget rejects them); auto requests take the best-ranked
-    /// admissible candidate from [`Planner::enumerate`].
+    /// restart and preconditioner, placed on the cheapest admissible
+    /// placement for that policy (a matrix too big for any single device
+    /// shards before it downgrades; only when *no* placement admits does
+    /// it fall back).  Auto requests take the best-ranked admissible
+    /// candidate from [`Planner::enumerate`].
     pub fn plan(
         &self,
         shape: &SystemShape,
@@ -243,14 +369,28 @@ impl Planner {
         requested: Option<Policy>,
     ) -> Plan {
         match requested {
-            Some(p) if !p.needs_runtime() || self.admits(p, shape, config.m) => {
-                self.price(p, shape, config.m, config.precond, config)
-            }
-            Some(_) => {
-                let mut plan =
-                    self.price(self.config.fallback, shape, config.m, config.precond, config);
-                plan.downgraded = true;
-                plan
+            Some(p) => {
+                let best = self
+                    .placements_for(p)
+                    .into_iter()
+                    .filter(|&pl| self.admits_placement(p, shape, config.m, pl))
+                    .map(|pl| self.price(p, shape, config.m, config.precond, pl, config))
+                    .min_by(|a, b| a.predicted_seconds.total_cmp(&b.predicted_seconds));
+                match best {
+                    Some(plan) => plan,
+                    None => {
+                        let mut plan = self.price(
+                            self.config.fallback,
+                            shape,
+                            config.m,
+                            config.precond,
+                            Placement::Host,
+                            config,
+                        );
+                        plan.downgraded = true;
+                        plan
+                    }
+                }
             }
             None => self
                 .enumerate(shape, config)
@@ -258,7 +398,14 @@ impl Planner {
                 .find(|c| c.admitted)
                 .map(|c| c.plan)
                 .unwrap_or_else(|| {
-                    self.price(self.config.fallback, shape, config.m, config.precond, config)
+                    self.price(
+                        self.config.fallback,
+                        shape,
+                        config.m,
+                        config.precond,
+                        Placement::Host,
+                        config,
+                    )
                 }),
         }
     }
@@ -269,15 +416,70 @@ impl Planner {
         self.calibrator.lock().unwrap().observe(
             plan.policy,
             format,
+            plan.placement,
             plan.base_seconds,
             plan.predicted_seconds,
             measured_seconds,
         );
     }
 
-    /// Current calibration coefficient for a cell (1.0 until observed).
+    /// Worker feedback for the convergence model: a finished solve's
+    /// observed per-cycle residual contraction factor on a workload class.
+    /// EWMA-folded into the class's per-iteration rho with the same alpha
+    /// the cost calibrator uses.
+    pub fn observe_convergence(
+        &self,
+        format: MatrixFormat,
+        precond: PrecondKind,
+        m: usize,
+        cycle_factor: f64,
+    ) {
+        if let Some(rho) = self.config.convergence.rho_from_cycle_factor(m, cycle_factor) {
+            let mut obs = self.observed_rho.lock().unwrap();
+            match obs.get_mut(&(format, precond)) {
+                Some(cell) => {
+                    *cell = ((1.0 - self.config.alpha) * *cell + self.config.alpha * rho)
+                        .clamp(1e-6, 1.0 - 1e-6);
+                }
+                None => {
+                    obs.insert((format, precond), rho);
+                }
+            }
+        }
+    }
+
+    /// Observed per-iteration contraction for a workload class (None until
+    /// a converged solve of that class has been reported).
+    pub fn observed_rho(&self, format: MatrixFormat, precond: PrecondKind) -> Option<f64> {
+        self.observed_rho.lock().unwrap().get(&(format, precond)).copied()
+    }
+
+    /// Current calibration coefficient for a cell at its policy's default
+    /// placement (host for serial policies, the first GPU device
+    /// otherwise); 1.0 until observed.
     pub fn coeff(&self, policy: Policy, format: MatrixFormat) -> f64 {
-        self.calibrator.lock().unwrap().coeff(policy, format)
+        self.coeff_at(policy, format, self.default_placement(policy))
+    }
+
+    /// Current calibration coefficient for an exact (policy, format,
+    /// placement) cell (1.0 until observed).
+    pub fn coeff_at(&self, policy: Policy, format: MatrixFormat, placement: Placement) -> f64 {
+        self.calibrator.lock().unwrap().coeff(policy, format, placement)
+    }
+
+    /// The placement an unconstrained request of this policy lands on by
+    /// default.
+    pub fn default_placement(&self, policy: Policy) -> Placement {
+        if !policy.needs_runtime() {
+            Placement::Host
+        } else {
+            self.config
+                .fleet
+                .gpu_ids()
+                .first()
+                .map(|&id| Placement::Single(id))
+                .unwrap_or(Placement::Host)
+        }
     }
 
     /// Total usable observations ingested so far.
@@ -294,6 +496,25 @@ impl Planner {
     pub fn calibration(&self) -> Vec<CalibrationEntry> {
         self.calibrator.lock().unwrap().snapshot()
     }
+
+    /// Persist the calibrator snapshot as plain text (the `--calib-file`
+    /// shutdown path).
+    pub fn save_calibration(&self, path: &Path) -> Result<()> {
+        let text = self.calibrator.lock().unwrap().to_text();
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("writing calibration file {}: {e}", path.display()))
+    }
+
+    /// Replace the calibrator with a persisted snapshot (the
+    /// `--calib-file` startup path).  Returns the number of cells loaded.
+    pub fn load_calibration(&self, path: &Path) -> Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading calibration file {}: {e}", path.display()))?;
+        let loaded = Calibrator::from_text(self.config.alpha, &text)?;
+        let cells = loaded.snapshot().len();
+        *self.calibrator.lock().unwrap() = loaded;
+        Ok(cells)
+    }
 }
 
 impl Default for Planner {
@@ -305,9 +526,14 @@ impl Default for Planner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fleet::DeviceSet;
 
     fn planner() -> Planner {
         Planner::default()
+    }
+
+    fn fleet_planner(spec: &str) -> Planner {
+        Planner::new(PlannerConfig { fleet: Fleet::parse(spec).unwrap(), ..Default::default() })
     }
 
     #[test]
@@ -335,10 +561,27 @@ mod tests {
         let p = planner();
         let config = GmresConfig { m: 25, ..Default::default() };
         let cands = p.enumerate(&SystemShape::dense(500), &config);
-        // 4 policies × (3 configured + 1 requested restart) × 2 preconds
+        // single-device fleet: 4 policies × (3 configured + 1 requested
+        // restart) × 2 preconds, one placement each
         assert_eq!(cands.len(), 4 * 4 * 2);
         assert!(cands.iter().any(|c| c.plan.m == 25), "request m enumerated");
         assert!(cands.iter().any(|c| c.plan.precond == PrecondKind::Jacobi));
+    }
+
+    #[test]
+    fn fleet_enumeration_grows_a_placement_axis() {
+        let p = fleet_planner("840m,v100");
+        let cands = p.enumerate(&SystemShape::dense(500), &GmresConfig::default());
+        // device policies now enumerate 2 singles + 1 sharded pair
+        assert!(cands
+            .iter()
+            .any(|c| c.plan.placement == Placement::Single(1)), "v100 single placement");
+        assert!(cands.iter().any(|c| c.plan.placement.is_sharded()), "sharded placement");
+        // host policies stay on the host
+        assert!(cands
+            .iter()
+            .filter(|c| !c.plan.policy.needs_runtime())
+            .all(|c| c.plan.placement == Placement::Host));
     }
 
     #[test]
@@ -363,6 +606,7 @@ mod tests {
         let plan = p.plan(&SystemShape::dense(300), &config, Some(Policy::GmatrixLike));
         assert_eq!(plan.policy, Policy::GmatrixLike);
         assert_eq!(plan.m, 17);
+        assert_eq!(plan.placement, Placement::Single(0));
         assert!(!plan.downgraded);
         assert!(plan.predicted_seconds > 0.0);
     }
@@ -370,10 +614,43 @@ mod tests {
     #[test]
     fn inadmissible_explicit_policy_downgrades_to_fallback() {
         let p = planner();
-        // 20000² dense = 3.2 GB > the 840M budget
+        // 20000² dense = 3.2 GB > the 840M budget (and the single-device
+        // fleet has nothing to shard across)
         let plan = p.plan(&SystemShape::dense(20_000), &GmresConfig::default(), Some(Policy::GpurVclLike));
         assert_eq!(plan.policy, Policy::SerialR);
+        assert_eq!(plan.placement, Placement::Host);
         assert!(plan.downgraded);
+    }
+
+    #[test]
+    fn oversized_explicit_policy_shards_before_downgrading() {
+        // two devices whose *combined* budget fits what neither fits alone
+        let p = fleet_planner("840m=2m,840m=2m");
+        let shape = SystemShape::dense(600); // 2.88 MB dense
+        let plan = p.plan(&shape, &GmresConfig { m: 10, ..Default::default() }, Some(Policy::GmatrixLike));
+        assert_eq!(plan.policy, Policy::GmatrixLike);
+        assert!(plan.placement.is_sharded(), "got {:?}", plan.placement);
+        assert!(!plan.downgraded);
+    }
+
+    #[test]
+    fn memory_oversized_auto_plan_only_admits_sharded_device_candidates() {
+        let p = fleet_planner("840m=2m,840m=2m");
+        let shape = SystemShape::dense(600);
+        let config = GmresConfig { m: 10, ..Default::default() };
+        for c in p.enumerate(&shape, &config) {
+            if c.admitted && c.plan.policy.needs_runtime() {
+                assert!(
+                    c.plan.placement.is_sharded(),
+                    "single-device candidate admitted oversized: {:?}",
+                    c.plan
+                );
+            }
+        }
+        // and the sharded set really is admissible
+        let set = DeviceSet::from_ids(&[0, 1]);
+        assert!(p.admits_placement(Policy::GmatrixLike, &shape, 10, Placement::Sharded(set)));
+        assert!(!p.admits_placement(Policy::GmatrixLike, &shape, 10, Placement::Single(0)));
     }
 
     #[test]
@@ -381,7 +658,7 @@ mod tests {
         let p = planner();
         let shape = SystemShape::dense(50_000);
         let plan = p.plan(&shape, &GmresConfig::default(), None);
-        assert!(!plan.policy.needs_runtime() || p.admits(plan.policy, &shape, plan.m));
+        assert!(p.admits_placement(plan.policy, &shape, plan.m, plan.placement));
     }
 
     #[test]
@@ -423,5 +700,48 @@ mod tests {
         );
         let rel = ((a.base_seconds - replay) / replay).abs();
         assert!(rel < 1e-9, "split {} vs replay {replay}", a.base_seconds);
+    }
+
+    #[test]
+    fn observed_convergence_recalibrates_cycle_predictions() {
+        let p = planner();
+        let shape = SystemShape::dense(500);
+        let config = GmresConfig::default();
+        let before = p.plan(&shape, &config, Some(Policy::SerialR));
+        // report a much slower contraction than the prior for this class
+        for _ in 0..32 {
+            p.observe_convergence(MatrixFormat::Dense, PrecondKind::Identity, config.m, 0.9);
+        }
+        assert!(p.observed_rho(MatrixFormat::Dense, PrecondKind::Identity).is_some());
+        let after = p.plan(&shape, &config, Some(Policy::SerialR));
+        assert!(
+            after.predicted_cycles > before.predicted_cycles,
+            "slow observed contraction must raise cycle prediction: {} vs {}",
+            after.predicted_cycles,
+            before.predicted_cycles
+        );
+        // other classes are untouched
+        assert!(p.observed_rho(MatrixFormat::Csr, PrecondKind::Identity).is_none());
+    }
+
+    #[test]
+    fn calibration_save_load_roundtrip() {
+        let dir = crate::util::tempdir::TempDir::new("calib-roundtrip").unwrap();
+        let path = dir.path().join("calib.txt");
+        let p = planner();
+        let shape = SystemShape::dense(400);
+        let plan = p.plan(&shape, &GmresConfig::default(), Some(Policy::SerialR));
+        for _ in 0..8 {
+            p.observe(&plan, shape.format, plan.base_seconds * 0.7);
+        }
+        p.save_calibration(&path).unwrap();
+
+        let fresh = planner();
+        assert_eq!(fresh.coeff(Policy::SerialR, MatrixFormat::Dense), 1.0);
+        let cells = fresh.load_calibration(&path).unwrap();
+        assert_eq!(cells, 1);
+        let k = fresh.coeff(Policy::SerialR, MatrixFormat::Dense);
+        assert!((k - p.coeff(Policy::SerialR, MatrixFormat::Dense)).abs() < 1e-12);
+        assert_eq!(fresh.observations(), 8, "warm planner keeps its history");
     }
 }

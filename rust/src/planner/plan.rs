@@ -2,16 +2,21 @@
 //! candidates.
 
 use crate::backend::Policy;
+use crate::fleet::Placement;
 use crate::gmres::PrecondKind;
 
-/// A fully-specified execution plan for one solve: which policy runs, with
-/// which restart length and preconditioner, and what the planner expects it
-/// to cost.  Carried through the router, batcher and worker, and returned
-/// in the [`crate::coordinator::SolveOutcome`] so callers can compare
-/// predicted against observed seconds.
+/// A fully-specified execution plan for one solve: which policy runs,
+/// where (the fleet placement), with which restart length and
+/// preconditioner, and what the planner expects it to cost.  Carried
+/// through the router, batcher and worker, and returned in the
+/// [`crate::coordinator::SolveOutcome`] so callers can compare predicted
+/// against observed seconds.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Plan {
     pub policy: Policy,
+    /// Where the solve executes: host, one fleet device, or a row-block
+    /// shard across a device set.
+    pub placement: Placement,
     /// Restart length the engine is built with.
     pub m: usize,
     /// Preconditioner applied at engine build.
@@ -20,7 +25,8 @@ pub struct Plan {
     pub predicted_cycles: usize,
     /// Uncalibrated cost-table seconds (setup + cycles × per-cycle).
     pub base_seconds: f64,
-    /// Calibrated prediction: `base_seconds × coeff(policy, format)`.
+    /// Calibrated prediction: `base_seconds × coeff(policy, format,
+    /// placement)`.
     pub predicted_seconds: f64,
     /// True when an inadmissible requested policy was replaced by the
     /// fallback.
@@ -30,10 +36,12 @@ pub struct Plan {
 impl Plan {
     /// A plan that pins execution parameters without pricing them (used by
     /// unit tests driving workers directly; zero `base_seconds` means the
-    /// calibrator ignores the resulting observation).
+    /// calibrator ignores the resulting observation).  Placement is the
+    /// host — pinned plans exercise the unsharded execution path.
     pub fn pinned(policy: Policy, m: usize) -> Self {
         Self {
             policy,
+            placement: Placement::Host,
             m,
             precond: PrecondKind::Identity,
             predicted_cycles: 0,
@@ -46,8 +54,9 @@ impl Plan {
     /// One human line for CLI output.
     pub fn summary(&self) -> String {
         format!(
-            "{} m={} pre={} (predicted {:.4}s over {} modeled cycles{})",
+            "{} @{} m={} pre={} (predicted {:.4}s over {} modeled cycles{})",
             self.policy,
+            self.placement,
             self.m,
             self.precond,
             self.predicted_seconds,
@@ -61,8 +70,8 @@ impl Plan {
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PlanCandidate {
     pub plan: Plan,
-    /// Whether the working set fits the device-memory budget (host
-    /// policies are always admitted).
+    /// Whether the working set fits the placement's device-memory budgets
+    /// (host placements are always admitted).
     pub admitted: bool,
 }
 
@@ -75,8 +84,16 @@ mod tests {
         let p = Plan::pinned(Policy::SerialNative, 8);
         assert_eq!(p.m, 8);
         assert_eq!(p.precond, PrecondKind::Identity);
+        assert_eq!(p.placement, Placement::Host);
         assert_eq!(p.base_seconds, 0.0);
         assert!(!p.downgraded);
         assert!(p.summary().contains("serial-native"));
+    }
+
+    #[test]
+    fn summary_names_the_placement() {
+        let mut p = Plan::pinned(Policy::GpurVclLike, 30);
+        p.placement = Placement::Single(1);
+        assert!(p.summary().contains("@dev:1"), "{}", p.summary());
     }
 }

@@ -2,10 +2,44 @@
 //! calibration state) as an aligned table — the `plan` / `explain` CLI
 //! subcommands and the service's introspection surface.
 
+use crate::fleet::{costs as fleet_costs, Placement};
 use crate::gmres::GmresConfig;
 use crate::linalg::SystemShape;
 use crate::planner::Planner;
 use crate::util::bench::Table;
+
+/// Per-device utilization column for a candidate: `100%` for host/single
+/// placements, `840m 37% + v100 99%` style for shards (busy fraction of
+/// the cycle critical path).
+fn utilization_cell(
+    planner: &Planner,
+    placement: Placement,
+    shape: &SystemShape,
+    policy: crate::backend::Policy,
+    m: usize,
+) -> String {
+    match placement {
+        Placement::Sharded(set) => {
+            let costs = fleet_costs::shard_costs(
+                planner.fleet(),
+                set,
+                policy,
+                shape,
+                m,
+                planner.config().mem_fraction,
+            );
+            costs
+                .cycle_utilization()
+                .into_iter()
+                .map(|(id, u)| {
+                    format!("{} {:.0}%", planner.fleet().label_of(id), u * 100.0)
+                })
+                .collect::<Vec<_>>()
+                .join(" + ")
+        }
+        _ => "100%".into(),
+    }
+}
 
 /// Render the ranked candidate plans for one solve shape.  The chosen plan
 /// (best-ranked admissible candidate) is marked `<=`.
@@ -14,11 +48,13 @@ pub fn render_candidates(planner: &Planner, shape: &SystemShape, config: &GmresC
     let mut t = Table::new(&[
         "rank",
         "policy",
+        "placement",
         "m",
         "precond",
         "cycles",
         "predicted [s]",
         "coeff",
+        "util",
         "fits",
         "",
     ]);
@@ -31,37 +67,41 @@ pub fn render_candidates(planner: &Planner, shape: &SystemShape, config: &GmresC
         t.row(&[
             (i + 1).to_string(),
             c.plan.policy.name().to_string(),
+            planner.fleet().placement_label(c.plan.placement),
             c.plan.m.to_string(),
             c.plan.precond.name().to_string(),
             c.plan.predicted_cycles.to_string(),
             format!("{:.6}", c.plan.predicted_seconds),
-            format!("{:.3}", planner.coeff(c.plan.policy, shape.format)),
+            format!("{:.3}", planner.coeff_at(c.plan.policy, shape.format, c.plan.placement)),
+            utilization_cell(planner, c.plan.placement, shape, c.plan.policy, c.plan.m),
             if c.admitted { "yes" } else { "NO" }.to_string(),
             if pick { "<=" } else { "" }.to_string(),
         ]);
     }
     format!(
-        "candidate plans for n={} format={} nnz={} (tol {:.1e}):\n{}",
+        "candidate plans for n={} format={} nnz={} (tol {:.1e}, fleet {}):\n{}",
         shape.n,
         shape.format,
         shape.nnz,
         config.tol,
+        planner.fleet().summary(planner.config().mem_fraction),
         t.render()
     )
 }
 
-/// Render the calibration state: one row per observed (policy, format)
-/// cell, plus the running prediction-error summary.
+/// Render the calibration state: one row per observed (policy, format,
+/// placement) cell, plus the running prediction-error summary.
 pub fn render_calibration(planner: &Planner) -> String {
     let entries = planner.calibration();
     if entries.is_empty() {
         return "calibration: no observations yet (coefficients at 1.0)".into();
     }
-    let mut t = Table::new(&["policy", "format", "coeff", "observations"]);
+    let mut t = Table::new(&["policy", "format", "placement", "coeff", "observations"]);
     for e in &entries {
         t.row(&[
             e.policy.name().to_string(),
             e.format.name().to_string(),
+            planner.fleet().placement_label(e.placement),
             format!("{:.4}", e.coeff),
             e.observations.to_string(),
         ]);
@@ -82,7 +122,9 @@ pub fn render_calibration(planner: &Planner) -> String {
 mod tests {
     use super::*;
     use crate::backend::Policy;
+    use crate::fleet::Fleet;
     use crate::linalg::MatrixFormat;
+    use crate::planner::PlannerConfig;
 
     #[test]
     fn candidate_table_lists_every_policy_and_marks_choice() {
@@ -105,6 +147,18 @@ mod tests {
     }
 
     #[test]
+    fn fleet_table_shows_sharded_placements_with_utilization() {
+        let p = Planner::new(PlannerConfig {
+            fleet: Fleet::parse("840m,v100").unwrap(),
+            ..Default::default()
+        });
+        let out = render_candidates(&p, &SystemShape::dense(4000), &GmresConfig::default());
+        assert!(out.contains("840m+v100"), "sharded placement column:\n{out}");
+        assert!(out.contains('%'), "utilization column:\n{out}");
+        assert!(out.contains("v100"), "single placements named:\n{out}");
+    }
+
+    #[test]
     fn calibration_rendering_covers_both_states() {
         let p = Planner::default();
         assert!(render_calibration(&p).contains("no observations"));
@@ -114,5 +168,6 @@ mod tests {
         let out = render_calibration(&p);
         assert!(out.contains("serial-r") && out.contains("dense"), "{out}");
         assert!(out.contains("1 observed") || out.contains("after 1"), "{out}");
+        assert!(out.contains("host"), "placement column present:\n{out}");
     }
 }

@@ -1,0 +1,256 @@
+//! End-to-end fleet tests: sharded execution vs the single-device
+//! reference, fleet-aware planning (memory-oversized matrices admit only
+//! sharded), calibration persistence, and the service path that ties them
+//! together.
+
+use gmres_rs::backend::{build_engine, Policy};
+use gmres_rs::coordinator::{
+    MatrixSpec, RouterConfig, ServiceConfig, SolveRequest, SolveService,
+};
+use gmres_rs::fleet::{
+    build_sharded_engine, DeviceSet, Fleet, Placement, RowBlocks, ShardedMatrix,
+};
+use gmres_rs::gmres::{GmresConfig, PrecondKind, RestartedGmres};
+use gmres_rs::linalg::{generators, LinearOperator, MatrixFormat, SystemMatrix, SystemShape};
+use gmres_rs::planner::{Planner, PlannerConfig};
+use gmres_rs::util::tempdir::TempDir;
+
+/// Sharded SpMV/GEMV partials must be bit-identical to the single-device
+/// reference across both formats and deliberately uneven row splits.
+#[test]
+fn sharded_matvec_bit_compares_against_reference() {
+    let n = 257; // prime-ish order: uneven splits everywhere
+    let dense = SystemMatrix::Dense(generators::dense_shifted_random(n, 12.0, 5));
+    let csr = SystemMatrix::Csr(generators::convection_diffusion_1d(n, 4.0));
+    let x = generators::random_vector(n, 21);
+    for a in [dense, csr] {
+        let reference = a.apply(&x);
+        for weights in [
+            vec![1.0, 1.0],
+            vec![1.0, 7.0],
+            vec![0.001, 1.0, 1.0],
+            vec![5.0, 1.0, 3.0, 2.0],
+        ] {
+            let s = ShardedMatrix::split(&a, RowBlocks::weighted(n, &weights));
+            assert_eq!(
+                s.apply(&x),
+                reference,
+                "sharded {} matvec must be bit-identical ({} blocks)",
+                a.format(),
+                weights.len()
+            );
+        }
+    }
+}
+
+/// A full sharded solve agrees with the unsharded solve to within
+/// tolerance on dense and CSR systems.
+#[test]
+fn sharded_solve_matches_single_device_within_tolerance() {
+    let fleet = Fleet::parse("840m,v100,host").unwrap();
+    let set = DeviceSet::from_ids(&[0, 1, 2]);
+    let config = GmresConfig { m: 12, tol: 1e-10, max_restarts: 100, ..Default::default() };
+    let solver = RestartedGmres::new(config);
+
+    // dense
+    let (a, b, _) = generators::table1_system(96, 2);
+    let mut sharded = build_sharded_engine(
+        &fleet,
+        set,
+        Policy::GpurVclLike,
+        SystemMatrix::Dense(a.clone()),
+        b.clone(),
+        &config,
+        0.9,
+    )
+    .unwrap();
+    let rs = solver.solve(&mut sharded, None).unwrap();
+    let mut single = build_engine(
+        Policy::SerialNative,
+        SystemMatrix::Dense(a),
+        b,
+        config.m,
+        None,
+        false,
+    )
+    .unwrap();
+    let r1 = solver.solve(single.as_mut(), None).unwrap();
+    assert!(rs.converged && r1.converged);
+    let d = gmres_rs::linalg::vector::max_abs_diff(&rs.x, &r1.x);
+    assert!(d < 1e-6, "dense sharded vs single diverged by {d}");
+
+    // csr
+    let (a, b, xt) = generators::convdiff_1d_system(150, 7);
+    let mut sharded = build_sharded_engine(
+        &fleet,
+        set,
+        Policy::GmatrixLike,
+        SystemMatrix::Csr(a.clone()),
+        b.clone(),
+        &config,
+        0.9,
+    )
+    .unwrap();
+    let rs = solver.solve(&mut sharded, None).unwrap();
+    assert!(rs.converged);
+    assert!(gmres_rs::linalg::vector::rel_err(&rs.x, &xt) < 1e-6);
+}
+
+/// Acceptance: on a `--fleet 840m,v100` planner, sharded placements are
+/// enumerated, and a matrix exceeding any single device's budget is
+/// admitted *only* via a sharded placement.
+#[test]
+fn fleet_planner_admits_oversized_matrices_only_sharded() {
+    let planner = Planner::new(PlannerConfig {
+        fleet: Fleet::parse("840m,v100").unwrap(),
+        ..Default::default()
+    });
+    let config = GmresConfig::default();
+
+    // placement axis present at a comfortable size
+    let cands = planner.enumerate(&SystemShape::dense(4000), &config);
+    assert!(cands.iter().any(|c| c.plan.placement.is_sharded()), "sharded candidates enumerated");
+    assert!(cands.iter().any(|c| c.plan.placement == Placement::Single(1)));
+
+    // dense 8 * 44500^2 = 15.8 GB: over the V100's 0.9 x 16 GiB = 15.5 GB
+    // budget (and far over the 840M's 1.9 GB), but under their 17.4 GB
+    // combined budget — so only the row-block shard can admit it
+    let big = SystemShape::dense(44_500);
+    let cands = planner.enumerate(&big, &config);
+    let mut saw_admitted_shard = false;
+    for c in &cands {
+        if c.plan.policy.needs_runtime() && c.admitted {
+            assert!(
+                c.plan.placement.is_sharded(),
+                "oversized matrix admitted on a single device: {:?}",
+                c.plan
+            );
+            saw_admitted_shard = true;
+        }
+    }
+    assert!(saw_admitted_shard, "the sharded placement must admit the oversized matrix");
+
+    // auto planning picks a device policy sharded across the pair, not a
+    // host downgrade
+    let plan = planner.plan(&big, &config, None);
+    if plan.policy.needs_runtime() {
+        assert!(plan.placement.is_sharded(), "got {:?}", plan.placement);
+    }
+    // explicit device requests shard instead of downgrading
+    let explicit = planner.plan(&big, &config, Some(Policy::GmatrixLike));
+    assert_eq!(explicit.policy, Policy::GmatrixLike);
+    assert!(explicit.placement.is_sharded());
+    assert!(!explicit.downgraded);
+}
+
+/// The service executes a memory-oversized request end to end via a
+/// sharded placement (tiny budgets keep the test matrix small) and the
+/// result matches the host reference.
+#[test]
+fn service_solves_oversized_request_sharded() {
+    let fleet = Fleet::parse("840m=2m,840m=2m").unwrap();
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        router: RouterConfig { fleet, ..Default::default() },
+        ..Default::default()
+    });
+    // 600² dense = 2.88 MB: over each 2 MB budget, under the 4 MB total
+    let out = svc
+        .submit(SolveRequest {
+            matrix: MatrixSpec::Table1 { n: 600, seed: 11 },
+            config: GmresConfig { m: 10, tol: 1e-8, max_restarts: 200, ..Default::default() },
+            policy: Some(Policy::GmatrixLike),
+        })
+        .unwrap();
+    assert!(out.report.converged);
+    assert_eq!(out.policy, Policy::GmatrixLike);
+    assert!(out.plan.placement.is_sharded(), "got {:?}", out.plan.placement);
+    assert!(!out.downgraded);
+    assert!(out.report.sim_seconds > 0.0);
+
+    // per-device metrics saw both shard members
+    let stats = svc.metrics().device_stats();
+    assert_eq!(stats.len(), 2, "{stats:?}");
+    assert!(stats.iter().all(|(_, s)| s.solves == 1 && s.busy_seconds > 0.0));
+
+    // reference check against the plain host solve
+    let (a, b, _) = generators::table1_system(600, 11);
+    let mut reference = build_engine(
+        Policy::SerialNative,
+        SystemMatrix::Dense(a),
+        b,
+        10,
+        None,
+        false,
+    )
+    .unwrap();
+    let config = GmresConfig { m: 10, tol: 1e-8, max_restarts: 200, ..Default::default() };
+    let rr = RestartedGmres::new(config).solve(reference.as_mut(), None).unwrap();
+    let d = gmres_rs::linalg::vector::max_abs_diff(&out.report.x, &rr.x);
+    assert!(d < 1e-4, "sharded service solve diverged from reference by {d}");
+    svc.shutdown();
+}
+
+/// Calibration save/load round trip through the planner API, including
+/// placement-keyed cells.
+#[test]
+fn calibration_snapshot_roundtrips_with_placements() {
+    let dir = TempDir::new("fleet-calib").unwrap();
+    let path = dir.path().join("snapshot.txt");
+    let planner = Planner::new(PlannerConfig {
+        fleet: Fleet::parse("840m,v100").unwrap(),
+        ..Default::default()
+    });
+    let shape = SystemShape::dense(500);
+    let config = GmresConfig::default();
+    // observe a host cell and a sharded device cell
+    let host_plan = planner.plan(&shape, &config, Some(Policy::SerialR));
+    for _ in 0..6 {
+        planner.observe(&host_plan, MatrixFormat::Dense, host_plan.base_seconds * 0.6);
+    }
+    let mut device_plan = planner.plan(&shape, &config, Some(Policy::GmatrixLike));
+    device_plan.placement = Placement::Sharded(DeviceSet::from_ids(&[0, 1]));
+    for _ in 0..6 {
+        planner.observe(&device_plan, MatrixFormat::Dense, device_plan.base_seconds * 1.4);
+    }
+    assert_eq!(planner.calibration().len(), 2);
+    planner.save_calibration(&path).unwrap();
+
+    let warm = Planner::new(PlannerConfig {
+        fleet: Fleet::parse("840m,v100").unwrap(),
+        ..Default::default()
+    });
+    let cells = warm.load_calibration(&path).unwrap();
+    assert_eq!(cells, 2);
+    assert_eq!(warm.calibration(), planner.calibration());
+    assert_eq!(warm.observations(), planner.observations());
+    let k = warm.coeff_at(
+        Policy::GmatrixLike,
+        MatrixFormat::Dense,
+        Placement::Sharded(DeviceSet::from_ids(&[0, 1])),
+    );
+    assert!((k - 1.4).abs() < 0.1, "sharded cell survived the round trip: {k}");
+}
+
+/// Convergence feedback loop end to end: served solves teach the planner
+/// an observed contraction for the workload class.
+#[test]
+fn service_feeds_convergence_observations() {
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    for i in 0..4u64 {
+        let out = svc
+            .submit(SolveRequest {
+                matrix: MatrixSpec::Table1 { n: 64, seed: i },
+                config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 100, ..Default::default() },
+                policy: Some(Policy::SerialNative),
+            })
+            .unwrap();
+        assert!(out.report.converged);
+    }
+    let planner = svc.router().planner();
+    assert!(
+        planner.observed_rho(MatrixFormat::Dense, PrecondKind::Identity).is_some(),
+        "converged solves must calibrate the convergence model"
+    );
+    svc.shutdown();
+}

@@ -6,6 +6,8 @@ use gmres_rs::backend::providers::{HostMode, NativeMatVec};
 use gmres_rs::backend::{build_engine, rvec, CycleEngine, HostCycleEngine, Policy};
 use gmres_rs::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
 use gmres_rs::device::memory::{working_set_bytes, DeviceMemory};
+use gmres_rs::fleet::{DeviceSet, Placement, RowBlocks, ShardedMatrix};
+use gmres_rs::gmres::PrecondKind;
 use gmres_rs::device::{GpuSpec, TransferModel};
 use gmres_rs::gmres::arnoldi::{arnoldi, Ortho};
 use gmres_rs::gmres::givens;
@@ -424,6 +426,16 @@ fn prop_batcher_conserves_and_respects_keys() {
                 n: 64 * (1 + rng.below(3)),
                 m: 8,
                 format: if rng.next_f64() < 0.5 { MatrixFormat::Dense } else { MatrixFormat::Csr },
+                precond: if rng.next_f64() < 0.5 {
+                    PrecondKind::Identity
+                } else {
+                    PrecondKind::Jacobi
+                },
+                placement: if rng.next_f64() < 0.5 {
+                    Placement::Single(0)
+                } else {
+                    Placement::Sharded(DeviceSet::from_ids(&[0, 1]))
+                },
             };
             b.push(key, i as u64);
             pushed.push(i as u64);
@@ -436,6 +448,40 @@ fn prop_batcher_conserves_and_respects_keys() {
         }
         drained.sort_unstable();
         prop_assert!(drained == pushed, "items lost or duplicated");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fleet sharding invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sharded_matvec_bit_identical_any_partition() {
+    check(cfg(48), "sharded-matvec-exact", |rng| {
+        let n = 8 + rng.below(120);
+        let x = generators::random_vector(n, rng.below(1 << 16) as u64);
+        let parts = 2 + rng.below(3);
+        let weights: Vec<f64> = (0..parts).map(|_| rng.next_f64() * 10.0 + 0.01).collect();
+        let blocks = RowBlocks::weighted(n, &weights);
+        prop_assert!(blocks.total() == n, "partition must cover all rows");
+
+        let dense = SystemMatrix::Dense(generators::dense_shifted_random(
+            n,
+            10.0,
+            rng.below(1 << 16) as u64,
+        ));
+        let csr = SystemMatrix::Csr(generators::convection_diffusion_1d(n, 3.0));
+        for a in [dense, csr] {
+            let reference = a.apply(&x);
+            let sharded = ShardedMatrix::split(&a, blocks.clone());
+            let got = sharded.apply(&x);
+            prop_assert!(
+                got == reference,
+                "sharded matvec diverged bitwise ({:?}, {parts} parts)",
+                a.format()
+            );
+        }
         Ok(())
     });
 }
