@@ -1,0 +1,45 @@
+//! Precision ablation: what does halving the element width buy, per
+//! GMRES(m) cycle, across the size grid — the bandwidth win the precision
+//! axis exists to exploit (modeled on the paper testbed; every kernel in
+//! this workload is memory-bound, so f32 should approach 2x on the dense
+//! matvec-dominated regime and less on CSR, whose i32 index arrays do not
+//! narrow).
+
+use gmres_rs::backend::Policy;
+use gmres_rs::coordinator::MatrixSpec;
+use gmres_rs::device::costs;
+use gmres_rs::linalg::SystemShape;
+use gmres_rs::precision::Precision;
+use gmres_rs::util::bench::Table;
+
+fn main() {
+    let m = 30;
+    let cycles = 5;
+    println!("modeled f64 vs f32 solve seconds ({cycles} cycles of GMRES({m}), paper testbed)\n");
+    for policy in [Policy::GmatrixLike, Policy::GputoolsLike, Policy::GpurVclLike] {
+        let mut t = Table::new(&["n", "format", "f64 [s]", "f32 [s]", "f64/f32", "tf32 [s]"]);
+        for &n in &[1000usize, 2000, 4000, 8000, 10_000] {
+            for shape in [SystemShape::dense(n), MatrixSpec::ConvDiff1d { n, seed: 0 }.shape()] {
+                let t64 = costs::predict_seconds_p(policy, &shape, m, cycles, Precision::F64);
+                let t32 = costs::predict_seconds_p(policy, &shape, m, cycles, Precision::F32);
+                let ttf = costs::predict_seconds_p(policy, &shape, m, cycles, Precision::Tf32);
+                t.row(&[
+                    n.to_string(),
+                    shape.format.to_string(),
+                    format!("{t64:.4}"),
+                    format!("{t32:.4}"),
+                    format!("{:.2}x", t64 / t32),
+                    format!("{ttf:.4}"),
+                ]);
+            }
+        }
+        println!("policy {policy}:\n{}", t.render());
+    }
+    // the dense large-n regime must show a real bandwidth win
+    let big = SystemShape::dense(10_000);
+    let t64 = costs::predict_seconds_p(Policy::GpurVclLike, &big, m, cycles, Precision::F64);
+    let t32 = costs::predict_seconds_p(Policy::GpurVclLike, &big, m, cycles, Precision::F32);
+    let speedup = t64 / t32;
+    println!("gpuR dense n=10000 f32 speedup: {speedup:.2}x");
+    assert!(speedup > 1.3, "bandwidth win must be visible, got {speedup:.2}x");
+}

@@ -41,6 +41,14 @@ echo "==> planner smoke"
 ./target/release/gmres-rs plan --n 4000 --format dense
 ./target/release/gmres-rs solve --n 512 --format csr --precond jacobi --m 10
 
+echo "==> mixed-precision smoke"
+# loose tolerance: the planner's table must rank f32 candidates and the
+# mixed driver must solve with f64-verified residuals, pinned and auto
+./target/release/gmres-rs plan --n 4000 --tol 1e-4 --precision auto
+./target/release/gmres-rs solve --n 512 --policy gmatrix --m 10 --tol 1e-4 --precision f32
+./target/release/gmres-rs serve --requests 4 --sizes 96,128 --m 8 --tol 1e-4 --precision f32
+./target/release/gmres-rs serve --requests 4 --sizes 96,128 --m 8 --tol 1e-4 --precision auto
+
 echo "==> fleet smoke"
 # sharded placements enumerated across a two-card fleet; a served fleet
 # with calibration persistence round-trips through a warm restart

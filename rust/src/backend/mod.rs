@@ -191,17 +191,24 @@ pub fn build_engine(
     }
 }
 
-/// [`build_engine`] with the solve config's preconditioner applied first.
+/// [`build_engine`] with the solve config's preconditioner applied first
+/// and its precision request honoured.
 ///
 /// Left preconditioning is materialized *explicitly* (`M⁻¹A x = M⁻¹b`, a
 /// one-time `O(nnz)` row scaling for Jacobi), so every policy — including
 /// the fused device cycle — runs the preconditioned system through its
 /// unchanged engine, provider and cost-charging paths.
 ///
+/// A reduced precision pinned in the config (the worker pins the plan's
+/// choice; `Auto` means f64 here) wraps the policy engine in the
+/// mixed-precision driver: the inner cycle runs over the *narrowed*
+/// preconditioned system, the outer residual is verified in f64
+/// ([`crate::precision::engine`]).
+///
 /// Taking the whole [`GmresConfig`] keeps one source of truth: the engine
-/// is built with exactly the `m` and `precond` the solver (and thus the
-/// [`crate::gmres::SolveReport`]) will carry, so a report can never claim
-/// a preconditioner the engine did not run.
+/// is built with exactly the `m`, `precond` and precision the solver (and
+/// thus the [`crate::gmres::SolveReport`]) will carry, so a report can
+/// never claim a preconditioner or precision the engine did not run.
 pub fn build_engine_preconditioned(
     policy: Policy,
     a: SystemMatrix,
@@ -211,6 +218,12 @@ pub fn build_engine_preconditioned(
     trace: bool,
 ) -> Result<Box<dyn CycleEngine>> {
     let (a, b) = config.precond.apply_to_system(a, b);
+    let precision = config.precision.fixed_or_default();
+    if precision.is_reduced() {
+        return crate::precision::engine::build_reduced(
+            policy, a, b, config.m, precision, runtime, trace,
+        );
+    }
     build_engine(policy, a, b, config.m, runtime, trace)
 }
 

@@ -14,6 +14,7 @@ use crate::backend::Policy;
 use crate::fleet::Placement;
 use crate::gmres::PrecondKind;
 use crate::linalg::MatrixFormat;
+use crate::precision::Precision;
 
 /// Batch compatibility key.  Format is part of compatibility: a resident
 /// dense `gemv` executable cannot serve a CSR job and vice versa, so the
@@ -23,7 +24,9 @@ use crate::linalg::MatrixFormat;
 /// And so is the placement: a matrix sharded across `840m+v100` occupies
 /// different residency than the same matrix whole on one card, so shards
 /// stay resident across a batch and never interleave with single-device
-/// jobs of the same shape.
+/// jobs of the same shape.  Precision likewise: an f32-narrowed residency
+/// is a different byte pattern (and half the footprint) of the same
+/// matrix, so it can never serve an f64 job or vice versa.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub policy: Policy,
@@ -32,6 +35,7 @@ pub struct BatchKey {
     pub format: MatrixFormat,
     pub precond: PrecondKind,
     pub placement: Placement,
+    pub precision: Precision,
 }
 
 /// A queued item with arrival time.
@@ -132,7 +136,22 @@ mod tests {
             format: MatrixFormat::Dense,
             precond: PrecondKind::Identity,
             placement: Placement::Single(0),
+            precision: Precision::F64,
         }
+    }
+
+    #[test]
+    fn precision_splits_batches() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 10, max_age: Duration::ZERO });
+        b.push(key(100), 1);
+        b.push(BatchKey { precision: Precision::F32, ..key(100) }, 2);
+        b.push(key(100), 3);
+        let (k, batch) = b.next_batch().unwrap();
+        assert_eq!(k.precision, Precision::F64);
+        assert_eq!(batch.iter().map(|p| p.item).collect::<Vec<_>>(), vec![1, 3]);
+        let (k2, batch2) = b.next_batch().unwrap();
+        assert_eq!(k2.precision, Precision::F32);
+        assert_eq!(batch2.len(), 1);
     }
 
     #[test]

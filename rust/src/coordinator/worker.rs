@@ -49,7 +49,15 @@ fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, pla
     let outcome = (|| -> Result<SolveOutcome> {
         let (a, b) = item.request.matrix.materialize();
         let format = a.format();
-        let config = GmresConfig { m: plan.m, precond: plan.precond, ..item.request.config };
+        // pin the plan's choices so the engine build, the solver and the
+        // report all carry exactly what the planner decided (including the
+        // working precision the mixed driver narrows to)
+        let config = GmresConfig {
+            m: plan.m,
+            precond: plan.precond,
+            precision: crate::precision::PrecisionPolicy::Fixed(plan.precision),
+            ..item.request.config
+        };
         let solver = RestartedGmres::new(config);
         // run the plan's placement: sharded plans build the fleet engine,
         // everything else the ordinary single-device/host engine
@@ -80,11 +88,12 @@ fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, pla
                     build_engine_preconditioned(plan.policy, a, b, &config, runtime, false)?;
                 let report = solver.solve(engine.as_mut(), None)?;
                 let label = planner.config().fleet.placement_label(plan.placement);
-                let bytes = fleet_costs::single_device_solve_bytes(
+                let bytes = fleet_costs::single_device_solve_bytes_p(
                     plan.policy,
                     &shape,
                     plan.m,
                     report.cycles,
+                    plan.precision,
                 ) as u64;
                 let shares = vec![(label, report.sim_seconds, bytes)];
                 (report, shares)
@@ -94,7 +103,7 @@ fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, pla
         // calibration; observed contraction -> convergence calibration
         planner.observe(&plan, format, report.sim_seconds);
         if let Some(factor) = per_cycle_contraction(&report) {
-            planner.observe_convergence(format, plan.precond, plan.m, factor);
+            planner.observe_convergence_p(format, plan.precond, plan.precision, plan.m, factor);
         }
         for (label, busy, bytes) in device_shares {
             metrics.on_device(&label, busy, bytes);
@@ -189,8 +198,9 @@ pub fn spawn_device_thread(
 
 fn push(batcher: &mut Batcher<WorkItem>, item: WorkItem) {
     // batch by what actually executes: the plan's policy, restart,
-    // preconditioner (a Jacobi job's resident matrix is D⁻¹A, not A) and
+    // preconditioner (a Jacobi job's resident matrix is D⁻¹A, not A),
     // placement (a sharded residency cannot serve a single-device job)
+    // and precision (an f32 residency cannot serve an f64 job)
     let key = BatchKey {
         policy: item.plan.policy,
         n: item.request.matrix.order(),
@@ -198,6 +208,7 @@ fn push(batcher: &mut Batcher<WorkItem>, item: WorkItem) {
         format: item.request.matrix.format(),
         precond: item.plan.precond,
         placement: item.plan.placement,
+        precision: item.plan.precision,
     };
     batcher.push(key, item);
 }
@@ -317,6 +328,33 @@ mod tests {
         assert_eq!(stats.len(), 2, "both shard members recorded: {stats:?}");
         assert!(stats.iter().any(|(l, _)| l == "840m"));
         assert!(stats.iter().any(|(l, _)| l == "v100"));
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn reduced_precision_plan_executes_and_verifies_in_f64() {
+        use crate::linalg::MatrixFormat;
+        use crate::precision::Precision;
+        let metrics = Arc::new(Metrics::new());
+        let planner = Arc::new(Planner::default());
+        let (tx, rx) = mpsc::channel();
+        let handles = spawn_cpu_pool(1, rx, metrics.clone(), planner.clone());
+        let (mut it, reply) = item(64, Policy::SerialR);
+        it.request.config.tol = 1e-4;
+        it.plan = Plan::pinned(Policy::SerialR, 8);
+        it.plan.precision = Precision::F32;
+        tx.send(it).unwrap();
+        let outcome = reply.recv().unwrap().unwrap();
+        assert!(outcome.report.converged);
+        assert_eq!(outcome.report.precision, Precision::F32);
+        assert!(outcome.report.rel_resnorm <= 1e-4, "f64-verified residual");
+        // the observed contraction landed in the f32 class, not the f64 one
+        let identity = crate::gmres::PrecondKind::Identity;
+        assert!(planner.observed_rho_p(MatrixFormat::Dense, identity, Precision::F32).is_some());
+        assert!(planner.observed_rho(MatrixFormat::Dense, identity).is_none());
         drop(tx);
         for h in handles {
             h.join().unwrap();

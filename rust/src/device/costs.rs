@@ -31,14 +31,27 @@
 
 use crate::backend::Policy;
 use crate::linalg::{MatrixFormat, SystemShape};
+use crate::precision::Precision;
 
 use super::sim::DeviceSim;
 
 /// Replay the modeled charges of one full solve on a fresh paper-testbed
 /// simulator and return the modeled seconds.
 pub fn predict_seconds(policy: Policy, shape: &SystemShape, m: usize, cycles: usize) -> f64 {
+    predict_seconds_p(policy, shape, m, cycles, Precision::F64)
+}
+
+/// [`predict_seconds`] at a storage precision (the mixed-precision cycle
+/// anatomy: working-precision Arnoldi, f64 outer residual).
+pub fn predict_seconds_p(
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    cycles: usize,
+    precision: Precision,
+) -> f64 {
     let mut sim = DeviceSim::paper_testbed(false);
-    charge_solve(&mut sim, policy, shape, m, cycles);
+    charge_solve_p(&mut sim, policy, shape, m, cycles, precision);
     sim.elapsed()
 }
 
@@ -56,9 +69,21 @@ pub fn charge_solve(
     m: usize,
     cycles: usize,
 ) {
-    charge_setup(sim, policy, shape, m);
+    charge_solve_p(sim, policy, shape, m, cycles, Precision::F64);
+}
+
+/// [`charge_solve`] at a storage precision.
+pub fn charge_solve_p(
+    sim: &mut DeviceSim,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    cycles: usize,
+    precision: Precision,
+) {
+    charge_setup_p(sim, policy, shape, m, precision);
     for _ in 0..cycles {
-        charge_cycle(sim, policy, shape, m);
+        charge_cycle_p(sim, policy, shape, m, precision);
     }
 }
 
@@ -66,7 +91,14 @@ pub fn charge_solve(
 /// allocation + one R->CUDA call + the format-sized upload.  Shared by the
 /// gmatrix setup and the resident provider's lazy first-matvec charge.
 pub fn charge_matrix_upload(sim: &mut DeviceSim, shape: &SystemShape) {
-    let bytes = shape.matrix_device_bytes();
+    charge_matrix_upload_p(sim, shape, Precision::F64);
+}
+
+/// [`charge_matrix_upload`] at a storage precision: values are narrowed
+/// *before* the upload, so the transfer and the residency are both
+/// width-scaled (CSR index arrays keep their i32 layout).
+pub fn charge_matrix_upload_p(sim: &mut DeviceSim, shape: &SystemShape, precision: Precision) {
+    let bytes = crate::precision::matrix_device_bytes(shape, precision);
     let _ = sim.alloc(bytes);
     sim.r_call();
     sim.h2d(bytes);
@@ -74,31 +106,56 @@ pub fn charge_matrix_upload(sim: &mut DeviceSim, shape: &SystemShape) {
 
 /// One-time setup charges (device residency establishment).
 pub fn charge_setup(sim: &mut DeviceSim, policy: Policy, shape: &SystemShape, m: usize) {
+    charge_setup_p(sim, policy, shape, m, Precision::F64);
+}
+
+/// [`charge_setup`] at a storage precision.
+pub fn charge_setup_p(
+    sim: &mut DeviceSim,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    precision: Precision,
+) {
+    let w = precision.element_bytes();
     match policy {
         Policy::SerialR | Policy::SerialNative | Policy::GputoolsLike => {}
-        Policy::GmatrixLike => charge_matrix_upload(sim, shape),
+        Policy::GmatrixLike => charge_matrix_upload_p(sim, shape, precision),
         Policy::GpurVclLike => {
-            let bytes = super::memory::working_set_bytes(shape, m, policy);
+            let bytes = super::memory::working_set_bytes_p(shape, m, policy, precision);
             let _ = sim.alloc(bytes);
             sim.r_call();
-            sim.h2d(shape.matrix_device_bytes());
-            sim.h2d(8 * shape.n);
-            sim.h2d(8 * shape.n);
+            sim.h2d(crate::precision::matrix_device_bytes(shape, precision));
+            sim.h2d(w * shape.n);
+            sim.h2d(w * shape.n);
         }
     }
 }
 
 /// The device kernel for one matvec of the given shape.
-fn kernel_matvec(sim: &mut DeviceSim, shape: &SystemShape) {
+fn kernel_matvec(sim: &mut DeviceSim, shape: &SystemShape, precision: Precision) {
     match shape.format {
-        MatrixFormat::Dense => sim.kernel_gemv(shape.n, shape.n),
-        MatrixFormat::Csr => sim.kernel_spmv(shape.nnz, shape.n),
+        MatrixFormat::Dense => sim.kernel_gemv_p(shape.n, shape.n, precision),
+        MatrixFormat::Csr => sim.kernel_spmv_p(shape.nnz, shape.n, precision),
     }
 }
 
 /// One matvec under the policy (host-orchestrated policies only).
 pub fn charge_matvec(sim: &mut DeviceSim, policy: Policy, shape: &SystemShape) {
+    charge_matvec_p(sim, policy, shape, Precision::F64);
+}
+
+/// [`charge_matvec`] at a storage precision.  Device transfers and
+/// kernels narrow to the element width; host-side R arithmetic stays f64
+/// (R's numeric is double regardless of what the card stores).
+pub fn charge_matvec_p(
+    sim: &mut DeviceSim,
+    policy: Policy,
+    shape: &SystemShape,
+    precision: Precision,
+) {
     let n = shape.n;
+    let w = precision.element_bytes();
     match policy {
         Policy::SerialR => match shape.format {
             MatrixFormat::Dense => sim.host_gemv(n, n),
@@ -107,25 +164,25 @@ pub fn charge_matvec(sim: &mut DeviceSim, policy: Policy, shape: &SystemShape) {
         Policy::SerialNative => {}
         Policy::GmatrixLike => {
             sim.r_call();
-            sim.h2d(8 * n);
-            kernel_matvec(sim, shape);
-            sim.d2h(8 * n);
+            sim.h2d(w * n);
+            kernel_matvec(sim, shape, precision);
+            sim.d2h(w * n);
         }
         Policy::GputoolsLike => {
-            let a_bytes = shape.matrix_device_bytes();
-            let id = sim.alloc(a_bytes + 8 * n);
+            let a_bytes = crate::precision::matrix_device_bytes(shape, precision);
+            let id = sim.alloc(a_bytes + w * n);
             sim.r_call();
             sim.h2d(a_bytes);
-            sim.h2d(8 * n);
-            kernel_matvec(sim, shape);
-            sim.d2h(8 * n);
+            sim.h2d(w * n);
+            kernel_matvec(sim, shape, precision);
+            sim.d2h(w * n);
             if let Ok(id) = id {
                 let _ = sim.release(id);
             }
         }
         Policy::GpurVclLike => {
             sim.vcl_dispatch();
-            kernel_matvec(sim, shape);
+            kernel_matvec(sim, shape, precision);
         }
     }
 }
@@ -137,19 +194,36 @@ fn host_vecop(sim: &mut DeviceSim, what: &'static str, inputs: usize, n: usize) 
 }
 
 /// A vcl device vector op (kernel + asynchronous enqueue overhead).
-fn vcl_vecop(sim: &mut DeviceSim, reduce: bool, inputs: usize, n: usize) {
+fn vcl_vecop(sim: &mut DeviceSim, reduce: bool, inputs: usize, n: usize, p: Precision) {
     sim.vcl_dispatch();
     if reduce {
-        sim.kernel_reduce(n);
+        sim.kernel_reduce_p(n, p);
         let _ = inputs;
     } else {
-        sim.kernel_blas1(inputs * n, n);
+        sim.kernel_blas1_p(inputs * n, n, p);
     }
 }
 
 /// One GMRES(m) cycle under the policy — charge-for-charge identical to
 /// what `backend::host_cycle` / `backend::fused` execute.
 pub fn charge_cycle(sim: &mut DeviceSim, policy: Policy, shape: &SystemShape, m: usize) {
+    charge_cycle_p(sim, policy, shape, m, Precision::F64);
+}
+
+/// [`charge_cycle`] at a storage precision — the mixed-precision cycle
+/// anatomy the [`crate::precision::MixedPrecisionEngine`] books: the
+/// Arnoldi phase (its m+1 matvecs and vector ops) runs in the working
+/// precision, while the cycle's trailing *true-residual* matvec (paper
+/// line 9) is the iterative-refinement step and is charged at f64.  Host
+/// R vector arithmetic is f64 either way.  At `Precision::F64` this is
+/// charge-for-charge the plain cycle.
+pub fn charge_cycle_p(
+    sim: &mut DeviceSim,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    precision: Precision,
+) {
     let n = shape.n;
     let host_r = matches!(
         policy,
@@ -158,26 +232,26 @@ pub fn charge_cycle(sim: &mut DeviceSim, policy: Policy, shape: &SystemShape, m:
     let vcl = policy == Policy::GpurVclLike;
 
     // r0 = b - A x0; beta = ||r0||; v1 = r0/beta
-    charge_matvec(sim, policy, shape);
+    charge_matvec_p(sim, policy, shape, precision);
     if host_r {
         host_vecop(sim, "sub", 2, n);
         host_vecop(sim, "nrm2", 1, n);
         host_vecop(sim, "scale", 1, n);
     } else if vcl {
-        vcl_vecop(sim, false, 2, n); // sub
-        vcl_vecop(sim, true, 1, n); // nrm2
+        vcl_vecop(sim, false, 2, n, precision); // sub
+        vcl_vecop(sim, true, 1, n, precision); // nrm2
         sim.d2h(8); // beta readback for the breakdown test
-        vcl_vecop(sim, false, 1, n); // scale
+        vcl_vecop(sim, false, 1, n, precision); // scale
     }
 
     // m Arnoldi steps (CGS): j+1 dots + j+1 (scale+sub) + nrm2 + scale
     for j in 0..m {
-        charge_matvec(sim, policy, shape);
+        charge_matvec_p(sim, policy, shape, precision);
         for _ in 0..=j {
             if host_r {
                 host_vecop(sim, "dot", 2, n);
             } else if vcl {
-                vcl_vecop(sim, true, 2, n);
+                vcl_vecop(sim, true, 2, n, precision);
             }
         }
         for _ in 0..=j {
@@ -185,17 +259,17 @@ pub fn charge_cycle(sim: &mut DeviceSim, policy: Policy, shape: &SystemShape, m:
                 host_vecop(sim, "scale", 1, n);
                 host_vecop(sim, "sub", 2, n);
             } else if vcl {
-                vcl_vecop(sim, false, 1, n);
-                vcl_vecop(sim, false, 2, n);
+                vcl_vecop(sim, false, 1, n, precision);
+                vcl_vecop(sim, false, 2, n, precision);
             }
         }
         if host_r {
             host_vecop(sim, "nrm2", 1, n);
             host_vecop(sim, "scale", 1, n);
         } else if vcl {
-            vcl_vecop(sim, true, 1, n);
+            vcl_vecop(sim, true, 1, n, precision);
             sim.d2h(8);
-            vcl_vecop(sim, false, 1, n);
+            vcl_vecop(sim, false, 1, n, precision);
         }
     }
 
@@ -214,23 +288,40 @@ pub fn charge_cycle(sim: &mut DeviceSim, policy: Policy, shape: &SystemShape, m:
             host_vecop(sim, "add", 2, n);
         } else if vcl {
             // y went up as m scalars piggybacked on one transfer
-            vcl_vecop(sim, false, 1, n);
-            vcl_vecop(sim, false, 2, n);
+            vcl_vecop(sim, false, 1, n, precision);
+            vcl_vecop(sim, false, 2, n, precision);
         }
     }
     if vcl {
         sim.h2d(8 * m);
     }
 
-    // true residual for the restart test (paper line 9)
-    charge_matvec(sim, policy, shape);
-    if host_r {
+    // true residual for the restart test (paper line 9).  Reduced
+    // precision charges the iterative-refinement form instead: the f64
+    // operator lives on the host (only narrowed values went to the card),
+    // so the iterate is read back and the outer residual is a host f64
+    // matvec + sub + nrm2 — exactly what the mixed-precision engine
+    // executes.
+    if precision.is_reduced() && policy != Policy::SerialNative {
+        if policy.needs_runtime() {
+            sim.d2h(8 * n); // f64 iterate readback for the host-side check
+        }
+        match shape.format {
+            MatrixFormat::Dense => sim.host_gemv(n, n),
+            MatrixFormat::Csr => sim.host_spmv(shape.nnz),
+        }
         host_vecop(sim, "sub", 2, n);
         host_vecop(sim, "nrm2", 1, n);
-    } else if vcl {
-        vcl_vecop(sim, false, 2, n);
-        vcl_vecop(sim, true, 1, n);
-        sim.d2h(8);
+    } else {
+        charge_matvec_p(sim, policy, shape, precision);
+        if host_r {
+            host_vecop(sim, "sub", 2, n);
+            host_vecop(sim, "nrm2", 1, n);
+        } else if vcl {
+            vcl_vecop(sim, false, 2, n, precision);
+            vcl_vecop(sim, true, 1, n, precision);
+            sim.d2h(8);
+        }
     }
 }
 
@@ -303,6 +394,32 @@ mod tests {
         let ts = predict_seconds(Policy::GputoolsLike, &sparse, 30, 5);
         let td = predict_seconds(Policy::GputoolsLike, &dense, 30, 5);
         assert!(ts < td / 2.0, "sparse {ts} vs dense {td}");
+    }
+
+    #[test]
+    fn f32_cycles_price_below_f64_on_device_policies() {
+        // the bandwidth win the precision axis exists for: at matvec-
+        // dominated sizes a reduced-precision cycle (working-precision
+        // Arnoldi + host f64 refinement residual) beats the f64 cycle
+        for shape in [d(4000), SystemShape::csr(20_000, 100_000)] {
+            for p in Policy::gpu_policies() {
+                let t64 = predict_seconds_p(p, &shape, 30, 5, Precision::F64);
+                let t32 = predict_seconds_p(p, &shape, 30, 5, Precision::F32);
+                assert!(
+                    t32 < t64,
+                    "{p} {:?}: f32 {t32} must beat f64 {t64}",
+                    shape.format
+                );
+            }
+        }
+        // f64 delegation is exact: the _p path at F64 is the plain path
+        let shape = d(2000);
+        for p in Policy::all() {
+            assert_eq!(
+                predict_seconds_p(p, &shape, 30, 4, Precision::F64),
+                predict_seconds(p, &shape, 30, 4)
+            );
+        }
     }
 
     #[test]

@@ -120,19 +120,32 @@ pub fn working_set_bytes(
     m: usize,
     policy: crate::backend::Policy,
 ) -> usize {
+    working_set_bytes_p(shape, m, policy, crate::precision::Precision::F64)
+}
+
+/// Precision-aware working set: the matrix values and every
+/// device-resident vector (including the gpuR-style Krylov basis) narrow
+/// to the storage width, so reduced-precision plans admit at orders that
+/// would blow the budget in f64 — the memory half of the bandwidth win.
+pub fn working_set_bytes_p(
+    shape: &crate::linalg::SystemShape,
+    m: usize,
+    policy: crate::backend::Policy,
+    precision: crate::precision::Precision,
+) -> usize {
     use crate::backend::Policy;
-    let f = std::mem::size_of::<f64>();
+    let w = precision.element_bytes();
     let n = shape.n;
-    let a_bytes = shape.matrix_device_bytes();
+    let a_bytes = crate::precision::matrix_device_bytes(shape, precision);
     match policy {
         // nothing device-resident
         Policy::SerialR | Policy::SerialNative => 0,
         // A + in/out vectors
-        Policy::GmatrixLike => a_bytes + f * 2 * n,
+        Policy::GmatrixLike => a_bytes + w * 2 * n,
         // transient A + vectors per call (peak equals gmatrix's)
-        Policy::GputoolsLike => a_bytes + f * 2 * n,
+        Policy::GputoolsLike => a_bytes + w * 2 * n,
         // A + V (n x (m+1)) + H + b + x + scratch w
-        Policy::GpurVclLike => a_bytes + f * (n * (m + 1) + (m + 1) * m + 3 * n),
+        Policy::GpurVclLike => a_bytes + w * (n * (m + 1) + (m + 1) * m + 3 * n),
     }
 }
 
@@ -195,6 +208,23 @@ mod tests {
         let vcl = working_set_bytes(&shape, m, Policy::GpurVclLike);
         assert_eq!(serial, 0);
         assert!(vcl > gm, "vcl keeps the Krylov basis on device");
+    }
+
+    #[test]
+    fn reduced_precision_halves_the_dense_working_set() {
+        use crate::backend::Policy;
+        use crate::linalg::SystemShape;
+        use crate::precision::Precision;
+        let shape = SystemShape::dense(2000);
+        let f64_ws = working_set_bytes_p(&shape, 30, Policy::GpurVclLike, Precision::F64);
+        let f32_ws = working_set_bytes_p(&shape, 30, Policy::GpurVclLike, Precision::F32);
+        assert_eq!(f64_ws, 2 * f32_ws, "dense working set halves exactly");
+        assert_eq!(f64_ws, working_set_bytes(&shape, 30, Policy::GpurVclLike));
+        // CSR keeps its i32 index arrays, so the shrink is less than 2x
+        let sparse = SystemShape::csr(2000, 10_000);
+        let s64 = working_set_bytes_p(&sparse, 30, Policy::GmatrixLike, Precision::F64);
+        let s32 = working_set_bytes_p(&sparse, 30, Policy::GmatrixLike, Precision::F32);
+        assert!(s32 < s64 && s32 > s64 / 2, "csr: {s32} vs {s64}");
     }
 
     #[test]

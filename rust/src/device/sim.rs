@@ -6,6 +6,8 @@
 //! *modeled* wallclock that the Table-1 harness compares across policies
 //! (DESIGN.md §2: measured vs modeled duality).
 
+use crate::precision::Precision;
+
 use super::memory::{AllocError, AllocId, DeviceMemory};
 use super::spec::{GpuSpec, HostSpec};
 use super::timing::{KernelKind, KernelTimingModel};
@@ -106,28 +108,48 @@ impl DeviceSim {
 
     /// Charge a device GEMV kernel.
     pub fn kernel_gemv(&mut self, rows: usize, cols: usize) {
-        let s = self.timing.gemv(rows, cols);
+        self.kernel_gemv_p(rows, cols, Precision::F64);
+    }
+
+    /// Charge a device GEMV kernel at a storage precision.
+    pub fn kernel_gemv_p(&mut self, rows: usize, cols: usize, p: Precision) {
+        let s = self.timing.gemv_p(rows, cols, p);
         self.clock += s;
         self.trace.push(TraceEvent::Kernel { kind: KernelKind::Gemv, seconds: s });
     }
 
     /// Charge a device CSR SpMV kernel over `nnz` entries, `rows` outputs.
     pub fn kernel_spmv(&mut self, nnz: usize, rows: usize) {
-        let s = self.timing.spmv(nnz, rows);
+        self.kernel_spmv_p(nnz, rows, Precision::F64);
+    }
+
+    /// Charge a device SpMV kernel at a storage precision.
+    pub fn kernel_spmv_p(&mut self, nnz: usize, rows: usize, p: Precision) {
+        let s = self.timing.spmv_p(nnz, rows, p);
         self.clock += s;
         self.trace.push(TraceEvent::Kernel { kind: KernelKind::SpMv, seconds: s });
     }
 
     /// Charge a device BLAS-1 kernel.
     pub fn kernel_blas1(&mut self, n_in: usize, n_out: usize) {
-        let s = self.timing.blas1(n_in, n_out);
+        self.kernel_blas1_p(n_in, n_out, Precision::F64);
+    }
+
+    /// Charge a device BLAS-1 kernel at a storage precision.
+    pub fn kernel_blas1_p(&mut self, n_in: usize, n_out: usize, p: Precision) {
+        let s = self.timing.blas1_p(n_in, n_out, p);
         self.clock += s;
         self.trace.push(TraceEvent::Kernel { kind: KernelKind::Blas1, seconds: s });
     }
 
     /// Charge a device reduction kernel.
     pub fn kernel_reduce(&mut self, n: usize) {
-        let s = self.timing.reduce(n);
+        self.kernel_reduce_p(n, Precision::F64);
+    }
+
+    /// Charge a device reduction kernel at a storage precision.
+    pub fn kernel_reduce_p(&mut self, n: usize, p: Precision) {
+        let s = self.timing.reduce_p(n, p);
         self.clock += s;
         self.trace.push(TraceEvent::Kernel { kind: KernelKind::Reduce, seconds: s });
     }

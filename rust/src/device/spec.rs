@@ -8,6 +8,8 @@
 //! (copy-on-modify), which caps its effective bandwidth.
 
 
+use crate::precision::Precision;
+
 /// GPU-side parameters (the simulated device).
 #[derive(Clone, Debug, PartialEq)]
 pub struct GpuSpec {
@@ -19,6 +21,12 @@ pub struct GpuSpec {
     /// Peak f64 FLOP rate, flops/s.  Maxwell runs f64 at 1/32 of f32:
     /// 384 shaders * 1029 MHz * 2 / 32 ≈ 24.7 GFLOP/s.
     pub flops_f64: f64,
+    /// Peak f32 FLOP rate, flops/s — carried explicitly (not as a
+    /// documented ratio) so both cost tables ([`crate::device::costs`] and
+    /// [`crate::fleet::costs`]) price reduced-precision kernels from the
+    /// device's own spec: 384 shaders * 1029 MHz * 2 ≈ 790 GFLOP/s on the
+    /// 840M (the full 32x of its crippled f64 rate).
+    pub flops_f32: f64,
     /// Host<->device link bandwidth, bytes/s (PCIe 3.0 x16 effective —
     /// fitted to the paper's gputools column, see EXPERIMENTS.md
     /// §Calibration).
@@ -40,6 +48,7 @@ impl GpuSpec {
             mem_capacity: 2 * 1024 * 1024 * 1024,
             mem_bw: 16.0e9,
             flops_f64: 24.7e9,
+            flops_f32: 790.4e9,
             pcie_bw: 13.5e9,
             transfer_latency: 15e-6,
             launch_latency: 20e-6,
@@ -54,11 +63,27 @@ impl GpuSpec {
             mem_capacity: 16 * 1024 * 1024 * 1024,
             mem_bw: 900.0e9,
             flops_f64: 7.0e12,
+            flops_f32: 14.0e12,
             pcie_bw: 12.0e9,
             transfer_latency: 10e-6,
             launch_latency: 8e-6,
             vcl_op_overhead: 30e-6,
         }
+    }
+
+    /// Peak FLOP rate at a storage precision.  Tf32 runs at the f32 rate
+    /// on these cards (no tensor cores in the catalog); its win over f64
+    /// is bandwidth, its cost versus f32 is the coarser mantissa.
+    pub fn flops_at(&self, precision: Precision) -> f64 {
+        match precision {
+            Precision::F64 => self.flops_f64,
+            Precision::F32 | Precision::Tf32 => self.flops_f32,
+        }
+    }
+
+    /// f32:f64 throughput ratio (32 on Maxwell, 2 on the V100).
+    pub fn f32_ratio(&self) -> f64 {
+        self.flops_f32 / self.flops_f64
     }
 }
 
@@ -132,6 +157,17 @@ mod tests {
         assert!(g.flops_f64 < 100e9, "Maxwell f64 is crippled");
         let v = GpuSpec::tesla_v100();
         assert!(v.mem_bw > 10.0 * g.mem_bw);
+    }
+
+    #[test]
+    fn f32_ratios_match_the_datasheets() {
+        let g = GpuSpec::geforce_840m();
+        assert!((g.f32_ratio() - 32.0).abs() < 0.1, "Maxwell is 1/32 f64");
+        assert_eq!(g.flops_at(Precision::F32), g.flops_f32);
+        assert_eq!(g.flops_at(Precision::Tf32), g.flops_f32);
+        assert_eq!(g.flops_at(Precision::F64), g.flops_f64);
+        let v = GpuSpec::tesla_v100();
+        assert!((v.f32_ratio() - 2.0).abs() < 0.1, "Volta is 1/2 f64");
     }
 
     #[test]

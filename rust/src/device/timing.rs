@@ -5,6 +5,8 @@
 //! element), so on the 840M the model is dominated by `8N² / 16 GB/s`, which
 //! is exactly why the paper's speedups stay modest (§5).
 
+use crate::precision::Precision;
+
 use super::spec::GpuSpec;
 
 /// Classified kernel shapes so the trace can aggregate per-op statistics.
@@ -42,60 +44,102 @@ impl KernelTimingModel {
     /// Roofline time for a kernel doing `flops` work over `bytes` of device
     /// memory traffic.
     pub fn kernel_time(&self, flops: f64, bytes: f64) -> f64 {
-        self.spec.launch_latency + (flops / self.spec.flops_f64).max(bytes / self.spec.mem_bw)
+        self.kernel_time_p(flops, bytes, Precision::F64)
+    }
+
+    /// Roofline time at a storage precision: the flop rate is the spec's
+    /// own rate for that precision ([`GpuSpec::flops_at`]); `bytes` must
+    /// already be width-scaled by the caller.
+    pub fn kernel_time_p(&self, flops: f64, bytes: f64, p: Precision) -> f64 {
+        self.spec.launch_latency + (flops / self.spec.flops_at(p)).max(bytes / self.spec.mem_bw)
     }
 
     /// Dense matvec y = A x, A is rows x cols f64.
     pub fn gemv(&self, rows: usize, cols: usize) -> f64 {
+        self.gemv_p(rows, cols, Precision::F64)
+    }
+
+    /// Dense matvec at a storage precision (element width scales every
+    /// streamed byte — the whole bandwidth win).
+    pub fn gemv_p(&self, rows: usize, cols: usize, p: Precision) -> f64 {
+        let w = p.element_bytes() as f64;
         let flops = 2.0 * rows as f64 * cols as f64;
         // A streamed once + x + y (x is tiny next to A)
-        let bytes = 8.0 * (rows as f64 * cols as f64 + rows as f64 + cols as f64);
-        self.kernel_time(flops, bytes)
+        let bytes = w * (rows as f64 * cols as f64 + rows as f64 + cols as f64);
+        self.kernel_time_p(flops, bytes, p)
     }
 
     /// CSR matvec over `nnz` stored entries producing `rows` outputs:
-    /// 2·nnz flops; traffic = CSR arrays (12 B/entry: f64 value + i32
-    /// column index + amortized row pointer) + the gathered x reads
-    /// (8 B/entry, uncoalesced) + the y writes.  nnz-proportional, which is
-    /// the whole point of threading the format through the cost model.
+    /// 2·nnz flops; traffic = CSR arrays (value + i32 column index +
+    /// amortized row pointer) + the gathered x reads (uncoalesced) + the
+    /// y writes.  nnz-proportional, which is the whole point of threading
+    /// the format through the cost model.
     pub fn spmv(&self, nnz: usize, rows: usize) -> f64 {
+        self.spmv_p(nnz, rows, Precision::F64)
+    }
+
+    /// CSR matvec at a storage precision: values and gathered/written
+    /// vectors narrow to the element width, the 4-byte index arrays do
+    /// not (at f64 this is the familiar 20·nnz + 8·rows).
+    pub fn spmv_p(&self, nnz: usize, rows: usize, p: Precision) -> f64 {
+        let w = p.element_bytes() as f64;
         let flops = 2.0 * nnz as f64;
-        let bytes = 20.0 * nnz as f64 + 8.0 * rows as f64;
-        self.kernel_time(flops, bytes)
+        let bytes = (2.0 * w + 4.0) * nnz as f64 + w * rows as f64;
+        self.kernel_time_p(flops, bytes, p)
     }
 
     /// BLAS-1 op streaming `n_in` input and `n_out` output f64s.
     pub fn blas1(&self, n_in: usize, n_out: usize) -> f64 {
+        self.blas1_p(n_in, n_out, Precision::F64)
+    }
+
+    /// BLAS-1 op at a storage precision.
+    pub fn blas1_p(&self, n_in: usize, n_out: usize, p: Precision) -> f64 {
+        let w = p.element_bytes() as f64;
         let flops = n_in as f64;
-        let bytes = 8.0 * (n_in + n_out) as f64;
-        self.kernel_time(flops, bytes)
+        let bytes = w * (n_in + n_out) as f64;
+        self.kernel_time_p(flops, bytes, p)
     }
 
     /// Reduction over n f64 (dot: 2n reads, scalar out).
     pub fn reduce(&self, n: usize) -> f64 {
-        self.kernel_time(2.0 * n as f64, 8.0 * (2 * n) as f64)
+        self.reduce_p(n, Precision::F64)
+    }
+
+    /// Reduction at a storage precision.
+    pub fn reduce_p(&self, n: usize, p: Precision) -> f64 {
+        let w = p.element_bytes() as f64;
+        self.kernel_time_p(2.0 * n as f64, w * (2 * n) as f64, p)
     }
 
     /// One fused GMRES(m) Arnoldi cycle on order-n dense A: m matvecs +
     /// per-step panel projections (V^T w and V h, each streaming an
     /// n x (m+1) panel) + vector ops, all in one launch.
     pub fn fused_cycle(&self, n: usize, m: usize) -> f64 {
+        self.fused_cycle_p(n, m, Precision::F64)
+    }
+
+    /// Fused Arnoldi cycle at a storage precision (matrix, panel and
+    /// vector traffic all narrow to the element width).
+    pub fn fused_cycle_p(&self, n: usize, m: usize, p: Precision) -> f64 {
+        let w = p.element_bytes() as f64;
         let nf = n as f64;
         let mf = m as f64;
         let panel = nf * (mf + 1.0);
-        // matvecs: m * (2n^2 flops, 8n^2 bytes)
+        // matvecs: m * (2n^2 flops, w·n^2 bytes)
         let mv_flops = mf * 2.0 * nf * nf;
-        let mv_bytes = mf * 8.0 * nf * nf;
+        let mv_bytes = mf * w * nf * nf;
         // projections: per step two panel products
         let pr_flops = mf * 2.0 * 2.0 * panel;
-        let pr_bytes = mf * 2.0 * 8.0 * panel;
+        let pr_bytes = mf * 2.0 * w * panel;
         // vector updates/norms per step ~ 6n
         let v_flops = mf * 6.0 * nf;
-        let v_bytes = mf * 6.0 * 8.0 * nf;
+        let v_bytes = mf * 6.0 * w * nf;
         // single launch for the whole cycle (the scan is one executable) —
         // plus per-step internal dispatch modeled at 1/4 launch cost.
         let internal = mf * self.spec.launch_latency * 0.25;
-        self.kernel_time(mv_flops + pr_flops + v_flops, mv_bytes + pr_bytes + v_bytes) + internal
+        self.kernel_time_p(mv_flops + pr_flops + v_flops, mv_bytes + pr_bytes + v_bytes, p)
+            + internal
     }
 }
 
@@ -139,6 +183,28 @@ mod tests {
         assert!(m.fused_cycle(2000, 30) > m.fused_cycle(1000, 30));
         assert!(m.reduce(1 << 20) > m.reduce(1 << 10));
         assert!(m.spmv(20_000, 2000) > m.spmv(10_000, 2000));
+    }
+
+    #[test]
+    fn f32_kernels_run_on_half_the_traffic() {
+        // every kernel in this workload is bandwidth-bound, so halving the
+        // element width roughly halves the time (minus the launch floor)
+        let m = model();
+        let n = 4000;
+        let t64 = m.gemv(n, n);
+        let t32 = m.gemv_p(n, n, Precision::F32);
+        let ratio = (t32 - m.spec().launch_latency) / (t64 - m.spec().launch_latency);
+        assert!((ratio - 0.5).abs() < 0.05, "gemv f32/f64 ratio {ratio}");
+        // tf32 storage moves the same bytes as f32
+        assert_eq!(m.gemv_p(n, n, Precision::Tf32), t32);
+        // CSR narrows only the value/vector traffic, not the i32 indices
+        let s64 = m.spmv(20_000, n);
+        let s32 = m.spmv_p(20_000, n, Precision::F32);
+        assert!(s32 < s64, "sparse f32 must be cheaper");
+        let sratio = (s32 - m.spec().launch_latency) / (s64 - m.spec().launch_latency);
+        assert!(sratio > 0.5, "index arrays keep f32 SpMV above half: {sratio}");
+        assert!(m.reduce_p(1 << 20, Precision::F32) < m.reduce(1 << 20));
+        assert!(m.fused_cycle_p(2000, 30, Precision::F32) < m.fused_cycle(2000, 30));
     }
 
     #[test]

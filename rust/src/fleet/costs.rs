@@ -27,6 +27,7 @@ use crate::backend::Policy;
 use crate::device::{GpuSpec, HostSpec, KernelTimingModel, TransferModel};
 use crate::gmres::givens;
 use crate::linalg::{MatrixFormat, SystemShape};
+use crate::precision::Precision;
 
 use super::{DeviceId, DeviceKind, DeviceSet, Fleet, ShardAssignment};
 
@@ -48,9 +49,16 @@ pub fn block_nnz(shape: &SystemShape, rows: usize) -> usize {
 /// Device bytes of a `rows`-row block of the matrix (dense slab or CSR
 /// arrays — mirrors [`SystemShape::matrix_device_bytes`]).
 pub fn block_matrix_bytes(shape: &SystemShape, rows: usize) -> usize {
+    block_matrix_bytes_p(shape, rows, Precision::F64)
+}
+
+/// [`block_matrix_bytes`] at a storage precision (values narrow, CSR
+/// index arrays keep their i32 width).
+pub fn block_matrix_bytes_p(shape: &SystemShape, rows: usize, precision: Precision) -> usize {
+    let w = precision.element_bytes();
     match shape.format {
-        MatrixFormat::Dense => 8 * rows * shape.n,
-        MatrixFormat::Csr => 12 * block_nnz(shape, rows) + 4 * (rows + 1),
+        MatrixFormat::Dense => w * rows * shape.n,
+        MatrixFormat::Csr => (w + 4) * block_nnz(shape, rows) + 4 * (rows + 1),
     }
 }
 
@@ -66,13 +74,24 @@ pub fn shard_working_set_bytes(
     m: usize,
     policy: Policy,
 ) -> usize {
-    let f = std::mem::size_of::<f64>();
+    shard_working_set_bytes_p(shape, rows, m, policy, Precision::F64)
+}
+
+/// [`shard_working_set_bytes`] at a storage precision.
+pub fn shard_working_set_bytes_p(
+    shape: &SystemShape,
+    rows: usize,
+    m: usize,
+    policy: Policy,
+    precision: Precision,
+) -> usize {
+    let w = precision.element_bytes();
     let n = shape.n;
-    let a = block_matrix_bytes(shape, rows);
+    let a = block_matrix_bytes_p(shape, rows, precision);
     match policy {
         Policy::SerialR | Policy::SerialNative => a,
-        Policy::GmatrixLike | Policy::GputoolsLike => a + f * (n + rows),
-        Policy::GpurVclLike => a + f * (rows * (m + 1) + (m + 1) * m + n + 2 * rows),
+        Policy::GmatrixLike | Policy::GputoolsLike => a + w * (n + rows),
+        Policy::GpurVclLike => a + w * (rows * (m + 1) + (m + 1) * m + n + 2 * rows),
     }
 }
 
@@ -119,6 +138,26 @@ impl ShardCosts {
     }
 }
 
+/// Pricing options of one sharded placement.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardPricing {
+    /// Storage precision of the device-resident shards (host members
+    /// always compute in f64 — R's numeric is double).
+    pub precision: Precision,
+    /// Pipeline each matvec's x-broadcast against the previous matvec's
+    /// gather (double buffering): the per-matvec link term prices
+    /// `max(broadcast, gather)` instead of their serial sum.  On by
+    /// default; the un-pipelined pricing remains available as the
+    /// regression reference.
+    pub overlap: bool,
+}
+
+impl Default for ShardPricing {
+    fn default() -> Self {
+        Self { precision: Precision::F64, overlap: true }
+    }
+}
+
 /// Per-device view used while assembling step costs.
 enum Member<'a> {
     Gpu { timing: KernelTimingModel, transfer: TransferModel, spec: &'a GpuSpec },
@@ -126,23 +165,34 @@ enum Member<'a> {
 }
 
 impl Member<'_> {
-    fn matvec_seconds(&self, shape: &SystemShape, rows: usize, per_call_upload: bool) -> f64 {
+    fn matvec_seconds(
+        &self,
+        shape: &SystemShape,
+        rows: usize,
+        per_call_upload: bool,
+        pricing: ShardPricing,
+    ) -> f64 {
         if rows == 0 {
             return 0.0;
         }
         let nnz = block_nnz(shape, rows);
+        let p = pricing.precision;
+        let w = p.element_bytes();
         match self {
             Member::Gpu { timing, transfer, .. } => {
                 let kernel = match shape.format {
-                    MatrixFormat::Dense => timing.gemv(rows, shape.n),
-                    MatrixFormat::Csr => timing.spmv(nnz, rows),
+                    MatrixFormat::Dense => timing.gemv_p(rows, shape.n, p),
+                    MatrixFormat::Csr => timing.spmv_p(nnz, rows, p),
                 };
                 let staged = if per_call_upload {
-                    transfer.time(block_matrix_bytes(shape, rows))
+                    transfer.time(block_matrix_bytes_p(shape, rows, p))
                 } else {
                     0.0
                 };
-                transfer.time(8 * shape.n) + staged + kernel + transfer.time(8 * rows)
+                let broadcast = transfer.time(w * shape.n);
+                let gather = transfer.time(w * rows);
+                let link = if pricing.overlap { broadcast.max(gather) } else { broadcast + gather };
+                link + staged + kernel
             }
             Member::Host(h) => match shape.format {
                 MatrixFormat::Dense => h.gemv_time(rows, shape.n),
@@ -151,37 +201,47 @@ impl Member<'_> {
         }
     }
 
-    fn matvec_bytes(&self, shape: &SystemShape, rows: usize, per_call_upload: bool) -> usize {
+    fn matvec_bytes(
+        &self,
+        shape: &SystemShape,
+        rows: usize,
+        per_call_upload: bool,
+        precision: Precision,
+    ) -> usize {
         if rows == 0 {
             return 0;
         }
+        let w = precision.element_bytes();
         match self {
             Member::Gpu { .. } => {
-                let staged = if per_call_upload { block_matrix_bytes(shape, rows) } else { 0 };
-                8 * shape.n + 8 * rows + staged
+                let staged =
+                    if per_call_upload { block_matrix_bytes_p(shape, rows, precision) } else { 0 };
+                w * shape.n + w * rows + staged
             }
             Member::Host(_) => 0,
         }
     }
 
     /// Partial dot/norm over the member's block plus the scalar readback.
-    fn reduce_seconds(&self, rows: usize) -> f64 {
+    fn reduce_seconds(&self, rows: usize, precision: Precision) -> f64 {
         if rows == 0 {
             return 0.0;
         }
         match self {
-            Member::Gpu { timing, transfer, .. } => timing.reduce(rows) + transfer.time(8),
+            Member::Gpu { timing, transfer, .. } => {
+                timing.reduce_p(rows, precision) + transfer.time(8)
+            }
             Member::Host(h) => h.vecop_time(16 * rows),
         }
     }
 
     /// Elementwise vector op over the member's block (`inputs` operands).
-    fn blas1_seconds(&self, rows: usize, inputs: usize) -> f64 {
+    fn blas1_seconds(&self, rows: usize, inputs: usize, precision: Precision) -> f64 {
         if rows == 0 {
             return 0.0;
         }
         match self {
-            Member::Gpu { timing, .. } => timing.blas1(inputs * rows, rows),
+            Member::Gpu { timing, .. } => timing.blas1_p(inputs * rows, rows, precision),
             Member::Host(h) => h.vecop_time(8 * rows * (inputs + 1)),
         }
     }
@@ -215,7 +275,8 @@ fn collect_step(members: &[Member<'_>], f: impl Fn(&Member<'_>, usize) -> f64, r
 }
 
 /// Price one sharded placement: per-device partials on each device's own
-/// cost tables, collectives on the critical path.
+/// cost tables, collectives on the critical path.  f64 storage, with the
+/// x-broadcast pipelined against the previous gather (double buffering).
 pub fn shard_costs(
     fleet: &Fleet,
     set: DeviceSet,
@@ -224,17 +285,53 @@ pub fn shard_costs(
     m: usize,
     mem_fraction: f64,
 ) -> ShardCosts {
+    shard_costs_opts(fleet, set, policy, shape, m, mem_fraction, ShardPricing::default())
+}
+
+/// [`shard_costs`] at a storage precision (overlapped collectives).
+pub fn shard_costs_p(
+    fleet: &Fleet,
+    set: DeviceSet,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    mem_fraction: f64,
+    precision: Precision,
+) -> ShardCosts {
+    shard_costs_opts(
+        fleet,
+        set,
+        policy,
+        shape,
+        m,
+        mem_fraction,
+        ShardPricing { precision, ..Default::default() },
+    )
+}
+
+/// Fully-parameterized shard pricing (precision + collective overlap).
+pub fn shard_costs_opts(
+    fleet: &Fleet,
+    set: DeviceSet,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    mem_fraction: f64,
+    pricing: ShardPricing,
+) -> ShardCosts {
     let assignments: Vec<ShardAssignment> = fleet.shard_plan(set, shape.n, mem_fraction);
     let members: Vec<DeviceId> = assignments.iter().map(|a| a.device).collect();
     let rows: Vec<usize> = assignments.iter().map(|a| a.rows).collect();
     let views: Vec<Member<'_>> = members.iter().map(|&id| member_view(fleet, id)).collect();
     let host = HostSpec::r_interpreter_i7_4710hq();
+    let precision = pricing.precision;
 
     let per_call_upload = policy == Policy::GputoolsLike;
-    let matvec = collect_step(&views, |v, r| v.matvec_seconds(shape, r, per_call_upload), &rows);
-    let dot = collect_step(&views, |v, r| v.reduce_seconds(r), &rows);
-    let vec1 = collect_step(&views, |v, r| v.blas1_seconds(r, 1), &rows);
-    let vec2 = collect_step(&views, |v, r| v.blas1_seconds(r, 2), &rows);
+    let matvec =
+        collect_step(&views, |v, r| v.matvec_seconds(shape, r, per_call_upload, pricing), &rows);
+    let dot = collect_step(&views, |v, r| v.reduce_seconds(r, precision), &rows);
+    let vec1 = collect_step(&views, |v, r| v.blas1_seconds(r, 1, precision), &rows);
+    let vec2 = collect_step(&views, |v, r| v.blas1_seconds(r, 2, precision), &rows);
 
     // Collective counts of one host-orchestrated CGS GMRES(m) cycle —
     // mirrors the op anatomy of `device::costs::charge_cycle`:
@@ -242,12 +339,26 @@ pub fn shard_costs(
     //   j in 0..m: matvec + (j+1) dots + (j+1)(scale+sub) + nrm2 + scale
     //   Givens LS on the host; x update: m × (scale+add); final residual:
     //   matvec + sub + nrm2.
+    // Reduced precision moves that final residual to the orchestrating
+    // host in f64 (the iterative-refinement check — only narrowed values
+    // ever reached the cards), so one device collective of each kind is
+    // replaced by `refine_seconds`.
     let mf = m as f64;
-    let n_matvec = mf + 2.0;
+    let reduced = precision.is_reduced() && policy.needs_runtime();
+    let (n_matvec, n_norm, final_vec2) =
+        if reduced { (mf + 1.0, mf + 1.0, 1.0) } else { (mf + 2.0, mf + 2.0, 2.0) };
     let n_dot = mf * (mf + 1.0) / 2.0;
-    let n_norm = mf + 2.0;
     let n_vec1 = 1.0 + mf * (mf + 1.0) / 2.0 + 2.0 * mf;
-    let n_vec2 = mf * (mf + 1.0) / 2.0 + mf + 2.0;
+    let n_vec2 = mf * (mf + 1.0) / 2.0 + mf + final_vec2;
+    let refine_seconds = if reduced {
+        let mv = match shape.format {
+            MatrixFormat::Dense => host.gemv_time(shape.n, shape.n),
+            MatrixFormat::Csr => host.spmv_time(shape.nnz),
+        };
+        mv + host.vecop_time(8 * shape.n * 3) + host.vecop_time(8 * shape.n * 2)
+    } else {
+        0.0
+    };
     let ls_seconds = givens::flops(m) as f64 * host.op_overhead * 0.1;
     // per-matvec dispatch on the orchestrator (one fleet step)
     let dispatch = match policy {
@@ -265,7 +376,8 @@ pub fn shard_costs(
         + (n_dot + n_norm) * dot.critical
         + n_vec1 * vec1.critical
         + n_vec2 * vec2.critical
-        + ls_seconds;
+        + ls_seconds
+        + refine_seconds;
 
     let per_device_cycle_busy: Vec<f64> = (0..members.len())
         .map(|i| {
@@ -279,12 +391,12 @@ pub fn shard_costs(
         .iter()
         .zip(&rows)
         .map(|(v, &r)| {
-            let mv = v.matvec_bytes(shape, r, per_call_upload);
+            let mv = v.matvec_bytes(shape, r, per_call_upload, precision);
             let readbacks = match v {
                 Member::Gpu { .. } if r > 0 => 8 * (n_dot + n_norm) as usize,
                 _ => 0,
             };
-            (m + 2) * mv + readbacks
+            (n_matvec as usize) * mv + readbacks
         })
         .collect();
 
@@ -299,7 +411,7 @@ pub fn shard_costs(
         for (i, (v, &r)) in views.iter().zip(&rows).enumerate() {
             if let Member::Gpu { transfer, .. } = v {
                 if r > 0 {
-                    let bytes = block_matrix_bytes(shape, r);
+                    let bytes = block_matrix_bytes_p(shape, r, precision);
                     let t = transfer.time(bytes);
                     per_device_setup_busy[i] = t;
                     per_device_setup_bytes[i] = bytes;
@@ -333,18 +445,38 @@ pub fn single_device_solve_bytes(
     m: usize,
     cycles: usize,
 ) -> usize {
-    let matvecs = cycles * (m + 2);
-    let vec_traffic = 16 * shape.n * matvecs;
+    single_device_solve_bytes_p(policy, shape, m, cycles, Precision::F64)
+}
+
+/// [`single_device_solve_bytes`] at a storage precision: matrix and
+/// vector traffic narrow to the element width; the per-cycle f64 iterate
+/// readback of the reduced-precision refinement check rides on top.
+pub fn single_device_solve_bytes_p(
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    cycles: usize,
+    precision: Precision,
+) -> usize {
+    let w = precision.element_bytes();
+    // reduced cycles run only m+1 device matvecs: the trailing residual
+    // check moves to the host (mirrors `charge_cycle_p` / `shard_costs_p`)
+    let matvecs =
+        if precision.is_reduced() { cycles * (m + 1) } else { cycles * (m + 2) };
+    let vec_traffic = 2 * w * shape.n * matvecs;
+    let a_bytes = crate::precision::matrix_device_bytes(shape, precision);
+    let refine = if precision.is_reduced() { cycles * 8 * shape.n } else { 0 };
     match policy {
         Policy::SerialR | Policy::SerialNative => 0,
-        Policy::GmatrixLike => shape.matrix_device_bytes() + vec_traffic,
-        Policy::GputoolsLike => matvecs * shape.matrix_device_bytes() + vec_traffic,
+        Policy::GmatrixLike => a_bytes + vec_traffic + refine,
+        Policy::GputoolsLike => matvecs * a_bytes + vec_traffic + refine,
         Policy::GpurVclLike => {
             // matrix + b + x0 up once; per cycle: beta/norm readbacks
             // (m+2 scalars), the small Hessenberg readback and y upload
-            shape.matrix_device_bytes()
-                + 16 * shape.n
+            a_bytes
+                + 2 * w * shape.n
                 + cycles * (8 * (m + 2) + 8 * (m + 1) * m + 8 * m)
+                + refine
         }
     }
 }
@@ -423,6 +555,56 @@ mod tests {
         let sparse = SystemShape::csr(10_000, 50_000);
         let sh = shard_working_set_bytes(&sparse, 2_500, 30, Policy::GpurVclLike);
         assert!(sh < shard_working_set_bytes(&sparse, 10_000, 30, Policy::GpurVclLike));
+    }
+
+    #[test]
+    fn pipelined_collectives_price_below_the_serial_link_sum() {
+        // the overlap satellite: double-buffering the x-broadcast against
+        // the previous gather strictly shaves every multi-device cycle;
+        // single-device placements never flow through this model, so their
+        // costs are untouched by construction
+        let f = fleet_2gpu();
+        let shape = SystemShape::dense(4000);
+        for policy in [Policy::GmatrixLike, Policy::GputoolsLike, Policy::GpurVclLike] {
+            let piped = shard_costs(&f, set01(), policy, &shape, 30, 0.9);
+            let serial = shard_costs_opts(
+                &f,
+                set01(),
+                policy,
+                &shape,
+                30,
+                0.9,
+                ShardPricing { overlap: false, ..Default::default() },
+            );
+            assert!(
+                piped.cycle_seconds < serial.cycle_seconds,
+                "{policy}: piped {} !< serial {}",
+                piped.cycle_seconds,
+                serial.cycle_seconds
+            );
+            assert_eq!(piped.setup_seconds, serial.setup_seconds, "{policy}: setup unaffected");
+        }
+    }
+
+    #[test]
+    fn reduced_precision_shard_cycles_price_below_f64() {
+        // balanced slow cards + a big dense system: the per-device kernel
+        // stays bandwidth-dominated, so halving the width beats the f64
+        // host-side refinement residual the reduced cycle pays for
+        let f = Fleet::parse("840m,840m").unwrap();
+        let shape = SystemShape::dense(6000);
+        let c64 = shard_costs_p(&f, set01(), Policy::GmatrixLike, &shape, 30, 0.9, Precision::F64);
+        let c32 = shard_costs_p(&f, set01(), Policy::GmatrixLike, &shape, 30, 0.9, Precision::F32);
+        assert!(
+            c32.cycle_seconds < c64.cycle_seconds,
+            "f32 {} !< f64 {}",
+            c32.cycle_seconds,
+            c64.cycle_seconds
+        );
+        assert!(c32.setup_seconds < c64.setup_seconds, "narrowed uploads are smaller");
+        // the f64 pricing is exactly the default table
+        let plain = shard_costs(&f, set01(), Policy::GmatrixLike, &shape, 30, 0.9);
+        assert_eq!(plain.cycle_seconds, c64.cycle_seconds);
     }
 
     #[test]

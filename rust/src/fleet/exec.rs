@@ -25,16 +25,19 @@ use crate::backend::{CycleEngine, CycleResult, Policy};
 use crate::device::DeviceSim;
 use crate::gmres::arnoldi::BREAKDOWN_RTOL;
 use crate::gmres::{givens, GmresConfig};
-use crate::linalg::{blas, SystemMatrix};
+use crate::linalg::{blas, LinearOperator, SystemMatrix};
+use crate::precision::{narrow_system, narrow_vector, Precision};
 use crate::Result;
 
-use super::costs::{shard_costs, ShardCosts};
+use super::costs::{shard_costs_p, ShardCosts};
 use super::shard::{RowBlocks, ShardedMatrix};
 use super::{DeviceId, DeviceSet, Fleet};
 
 /// Build the sharded engine for `policy` over `(a, b)` across `set`,
 /// applying the config's preconditioner first (same contract as
-/// [`crate::backend::build_engine_preconditioned`]).
+/// [`crate::backend::build_engine_preconditioned`]).  A reduced precision
+/// pinned in the config shards the *narrowed* system and verifies each
+/// cycle's residual against the full-precision one in f64.
 pub fn build_sharded_engine(
     fleet: &Fleet,
     set: DeviceSet,
@@ -45,7 +48,8 @@ pub fn build_sharded_engine(
     mem_fraction: f64,
 ) -> Result<ShardedCycleEngine> {
     let (a, b) = config.precond.apply_to_system(a, b);
-    ShardedCycleEngine::new(fleet, set, policy, a, b, config.m, mem_fraction)
+    let precision = config.precision.fixed_or_default();
+    ShardedCycleEngine::new_mixed(fleet, set, policy, (a, b), config.m, mem_fraction, precision)
 }
 
 /// Row-block sharded GMRES(m) cycle engine.
@@ -56,6 +60,10 @@ pub struct ShardedCycleEngine {
     bnorm: f64,
     n: usize,
     m: usize,
+    precision: Precision,
+    /// Full-precision system kept for the f64 outer residual of reduced-
+    /// precision solves (`None` when the shards already are f64).
+    verify: Option<(SystemMatrix, Vec<f64>)>,
     sim: DeviceSim,
     costs: ShardCosts,
     device_busy: Vec<f64>,
@@ -73,6 +81,22 @@ impl ShardedCycleEngine {
         m: usize,
         mem_fraction: f64,
     ) -> Result<Self> {
+        Self::new_mixed(fleet, set, policy, (a, b), m, mem_fraction, Precision::F64)
+    }
+
+    /// [`ShardedCycleEngine::new`] at a storage precision: shards hold the
+    /// narrowed values, the cycle's restart residual is verified in f64
+    /// against the retained full-precision system.
+    pub fn new_mixed(
+        fleet: &Fleet,
+        set: DeviceSet,
+        policy: Policy,
+        system: (SystemMatrix, Vec<f64>),
+        m: usize,
+        mem_fraction: f64,
+        precision: Precision,
+    ) -> Result<Self> {
+        let (a, b) = system;
         let n = a.n();
         ensure!(a.is_square(), "square systems only, got order {n} non-square");
         ensure!(b.len() == n, "rhs length {} != system order {}", b.len(), n);
@@ -82,25 +106,38 @@ impl ShardedCycleEngine {
             ensure!(id < fleet.len(), "device id {id} not in the {}-device fleet", fleet.len());
         }
         let shape = a.shape();
-        let costs = shard_costs(fleet, set, policy, &shape, m, mem_fraction);
+        let costs = shard_costs_p(fleet, set, policy, &shape, m, mem_fraction, precision);
         let assignments = fleet.shard_plan(set, n, mem_fraction);
         let rows: Vec<usize> = assignments.iter().map(|s| s.rows).collect();
-        let sharded = ShardedMatrix::split(&a, RowBlocks::from_rows(&rows));
-        let k = costs.members.len();
         let bnorm = blas::nrm2(&b);
+        let (sharded, b_inner, verify) = if precision.is_reduced() {
+            let narrowed = narrow_system(a.clone(), precision);
+            let b_low = narrow_vector(&b, precision);
+            (ShardedMatrix::split(&narrowed, RowBlocks::from_rows(&rows)), b_low, Some((a, b)))
+        } else {
+            (ShardedMatrix::split(&a, RowBlocks::from_rows(&rows)), b, None)
+        };
+        let k = costs.members.len();
         Ok(Self {
             policy,
             sharded,
-            b,
+            b: b_inner,
             bnorm,
             n,
             m,
+            precision,
+            verify,
             sim: DeviceSim::paper_testbed(false),
             costs,
             device_busy: vec![0.0; k],
             device_bytes: vec![0; k],
             setup_charged: false,
         })
+    }
+
+    /// Storage precision of the device-resident shards.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Per-device `(id, busy seconds, bytes moved)` accumulated so far.
@@ -237,11 +274,23 @@ impl CycleEngine for ShardedCycleEngine {
             blas::axpy(yj, &v[j], &mut x);
         }
 
-        // true residual for the restart test
-        let ax = self.matvec(&x);
-        let mut r = vec![0.0; self.n];
-        blas::sub_into(&self.b, &ax, &mut r);
-        let resnorm = self.fleet_nrm2(&r);
+        // true residual for the restart test — in f64 against the full-
+        // precision system for reduced-precision shards (the iterative-
+        // refinement check on the orchestrating host)
+        let resnorm = match &self.verify {
+            Some((fa, fb)) => {
+                let ax = fa.apply(&x);
+                let mut r = vec![0.0; self.n];
+                blas::sub_into(fb, &ax, &mut r);
+                blas::nrm2(&r)
+            }
+            None => {
+                let ax = self.matvec(&x);
+                let mut r = vec![0.0; self.n];
+                blas::sub_into(&self.b, &ax, &mut r);
+                self.fleet_nrm2(&r)
+            }
+        };
         Ok(CycleResult { x, resnorm })
     }
 }
@@ -346,6 +395,54 @@ mod tests {
         let report = RestartedGmres::new(config).solve(&mut e, None).unwrap();
         assert!(report.converged, "cycles {}", report.cycles);
         assert!(crate::linalg::vector::rel_err(&report.x, &xt) < 1e-5);
+    }
+
+    #[test]
+    fn reduced_precision_shards_verify_in_f64_and_book_cheaper_cycles() {
+        use crate::precision::{Precision, PrecisionPolicy};
+        let n = 72;
+        let (a, b, xt) = generators::table1_system(n, 5);
+        let fleet = Fleet::parse("840m,840m").unwrap();
+        let config = GmresConfig {
+            m: 12,
+            tol: 1e-4,
+            max_restarts: 60,
+            precision: PrecisionPolicy::Fixed(Precision::F32),
+            ..Default::default()
+        };
+        let mut mixed = build_sharded_engine(
+            &fleet,
+            DeviceSet::from_ids(&[0, 1]),
+            Policy::GmatrixLike,
+            SystemMatrix::Dense(a.clone()),
+            b.clone(),
+            &config,
+            0.9,
+        )
+        .unwrap();
+        assert_eq!(mixed.precision(), Precision::F32);
+        let rep = RestartedGmres::new(config).solve(&mut mixed, None).unwrap();
+        assert!(rep.converged, "cycles {} rel {}", rep.cycles, rep.rel_resnorm);
+        // the report's residual is the true f64 one
+        let sys = SystemMatrix::Dense(a);
+        let ax = crate::linalg::LinearOperator::apply(&sys, &rep.x);
+        let mut r = vec![0.0; n];
+        crate::linalg::blas::sub_into(&b, &ax, &mut r);
+        let true_rel = crate::linalg::blas::nrm2(&r) / crate::linalg::blas::nrm2(&b);
+        assert!((true_rel - rep.rel_resnorm).abs() < 1e-12 * (1.0 + true_rel));
+        assert!(rep.rel_resnorm <= 1e-4);
+        assert!(crate::linalg::vector::rel_err(&rep.x, &xt) < 1e-2);
+        // and the engine booked the (cheaper) reduced-precision table
+        let f64_costs = shard_costs_p(
+            &fleet,
+            DeviceSet::from_ids(&[0, 1]),
+            Policy::GmatrixLike,
+            &crate::linalg::SystemShape::dense(n),
+            12,
+            0.9,
+            Precision::F64,
+        );
+        assert!(mixed.costs().cycle_seconds < f64_costs.cycle_seconds);
     }
 
     #[test]

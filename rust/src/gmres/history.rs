@@ -4,6 +4,7 @@
 
 use crate::backend::Policy;
 use crate::gmres::precond::PrecondKind;
+use crate::precision::Precision;
 
 /// Per-cycle residual trail.
 #[derive(Clone, Debug, Default)]
@@ -50,6 +51,12 @@ pub struct SolveReport {
     pub m: usize,
     /// Preconditioner the solve ran under.
     pub precond: PrecondKind,
+    /// Working (storage) precision the solve ran at.  Reduced-precision
+    /// solves still report `resnorm`/`rel_resnorm` in f64 — the mixed-
+    /// precision driver verifies every cycle against the full-precision
+    /// system — so a converged report means f64-verified accuracy
+    /// regardless of this field.
+    pub precision: Precision,
     /// Final iterate.
     pub x: Vec<f64>,
     /// Final true residual norm.
@@ -75,11 +82,12 @@ impl SolveReport {
     /// One human line for CLI output.
     pub fn summary(&self) -> String {
         format!(
-            "{:>14}  n={:<6} m={:<3} pre={:<8} cycles={:<4} rel_res={:.2e} conv={} wall={:.4}s sim={:.4}s",
+            "{:>14}  n={:<6} m={:<3} pre={:<8} prec={:<4} cycles={:<4} rel_res={:.2e} conv={} wall={:.4}s sim={:.4}s",
             self.policy.name(),
             self.n,
             self.m,
             self.precond.name(),
+            self.precision.name(),
             self.cycles,
             self.rel_resnorm,
             self.converged,

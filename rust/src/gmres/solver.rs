@@ -8,10 +8,11 @@ use std::time::Instant;
 use crate::backend::CycleEngine;
 use crate::gmres::history::{ConvergenceHistory, SolveReport};
 use crate::gmres::precond::PrecondKind;
+use crate::precision::PrecisionPolicy;
 use crate::Result;
 
 /// Solver configuration (defaults mirror the paper's setup: GMRES(30),
-/// relative tolerance 1e-6, unpreconditioned).
+/// relative tolerance 1e-6, unpreconditioned, f64).
 #[derive(Clone, Copy, Debug)]
 pub struct GmresConfig {
     /// Restart length m.
@@ -23,11 +24,21 @@ pub struct GmresConfig {
     /// Preconditioner the engine was (or should be) built with — carried so
     /// plans, reports and the service agree on what actually ran.
     pub precond: PrecondKind,
+    /// Storage-precision request: `Auto` lets the planner arbitrate the
+    /// axis; `Fixed` pins the working precision the engine is built with.
+    /// Direct (non-planned) engine builds treat `Auto` as f64.
+    pub precision: PrecisionPolicy,
 }
 
 impl Default for GmresConfig {
     fn default() -> Self {
-        Self { m: 30, tol: 1e-6, max_restarts: 200, precond: PrecondKind::Identity }
+        Self {
+            m: 30,
+            tol: 1e-6,
+            max_restarts: 200,
+            precond: PrecondKind::Identity,
+            precision: PrecisionPolicy::Auto,
+        }
     }
 }
 
@@ -85,6 +96,7 @@ impl RestartedGmres {
             n,
             m: self.config.m,
             precond: self.config.precond,
+            precision: self.config.precision.fixed_or_default(),
             x,
             resnorm,
             rel_resnorm: if bnorm > 0.0 { resnorm / bnorm } else { resnorm },

@@ -32,11 +32,16 @@
 //!   devices with per-device budgets, placements (single-device or
 //!   row-block sharded), the sharded executor, and the fleet cost model
 //!   that prices Arnoldi dot-products as cross-device reductions.
+//! * **[`precision`]** — the storage-precision subsystem: f64/f32/tf32
+//!   residency views (values narrowed once, index arrays untouched), the
+//!   mixed-precision GMRES driver whose outer loop verifies residuals in
+//!   f64 (iterative-refinement restarts), and the unit-roundoff model the
+//!   planner admits tolerances against.
 //! * **[`planner`]** — the plan-and-calibrate subsystem: enumerates
 //!   candidate plans over policy × format × restart × preconditioner ×
-//!   placement, prices them through the shared cost table plus a
-//!   convergence model, and refines per-(policy, format, placement)
-//!   coefficients online from worker feedback.
+//!   placement × precision, prices them through the shared cost table
+//!   plus a convergence model, and refines per-(policy, format,
+//!   placement, precision) coefficients online from worker feedback.
 //! * **[`coordinator`]** — the L3 solve service: request router (delegating
 //!   auto-selection to the planner), admission by device memory, batcher,
 //!   worker pool, metrics.
@@ -50,6 +55,7 @@ pub mod fleet;
 pub mod gmres;
 pub mod linalg;
 pub mod planner;
+pub mod precision;
 pub mod report;
 pub mod runtime;
 pub mod util;

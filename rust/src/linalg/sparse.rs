@@ -108,6 +108,13 @@ impl CsrMatrix {
         &self.values
     }
 
+    /// Mutable nonzero values (same alignment) — the reduced-precision
+    /// residency view narrows these in place without touching the
+    /// sparsity pattern.
+    pub fn values_mut(&mut self) -> &mut [f64] {
+        &mut self.values
+    }
+
     /// Compute `y[i - start_row] = (A x)_i` for the row block starting at
     /// `start_row` and spanning `y.len()` rows — the unit of work of the
     /// chunked multi-threaded SpMV provider.  Identical per-row accumulation

@@ -4,13 +4,16 @@
 //!
 //! ```text
 //! gmres-rs solve  [--n 512] [--policy serial-native] [--format dense|csr]
-//!                 [--m 30] [--tol 1e-6] [--precond identity|jacobi] [--seed 42]
+//!                 [--m 30] [--tol 1e-6] [--precond identity|jacobi]
+//!                 [--precision f64|f32|tf32] [--seed 42]
 //! gmres-rs plan   [--n 512] [--format dense|csr] [--m 30] [--tol 1e-6]
-//!                 [--policy P] [--fleet 840m,v100,host]   (alias: explain)
+//!                 [--policy P] [--precision auto|f64|f32|tf32]
+//!                 [--fleet 840m,v100,host]   (alias: explain)
 //! gmres-rs sweep  [--what table1|figure5|blas1|memcap] [--measured]
 //!                 [--format dense|csr] [--sizes a,b,..] [--m 30] [--csv out.csv]
 //! gmres-rs serve  [--requests 16] [--sizes 256,512] [--cpu-workers 2] [--m 8]
-//!                 [--format dense|csr] [--fleet 840m,v100,host]
+//!                 [--tol 1e-6] [--format dense|csr]
+//!                 [--precision auto|f64|f32|tf32] [--fleet 840m,v100,host]
 //!                 [--calib-file path]
 //! gmres-rs info
 //! ```
@@ -26,6 +29,7 @@ use gmres_rs::fleet::Fleet;
 use gmres_rs::gmres::{GmresConfig, PrecondKind, RestartedGmres};
 use gmres_rs::linalg::{generators, MatrixFormat, SystemMatrix, SystemShape};
 use gmres_rs::planner::{Planner, PlannerConfig};
+use gmres_rs::precision::PrecisionPolicy;
 use gmres_rs::report::{figure5, plan_table, sweep, table1, SweepConfig};
 use gmres_rs::runtime::Runtime;
 use gmres_rs::util::cli::Args;
@@ -35,23 +39,29 @@ gmres-rs — R-GPU GMRES reproduction (Oancea & Pospisil 2018)
 
 USAGE:
   gmres-rs solve [--n N] [--policy P] [--format dense|csr] [--m M] [--tol T]
-                 [--precond identity|jacobi] [--seed S]
+                 [--precond identity|jacobi] [--precision f64|f32|tf32]
+                 [--seed S]
   gmres-rs plan  [--n N] [--format dense|csr] [--m M] [--tol T] [--policy P]
-                 [--fleet 840m,v100,host]
+                 [--precision auto|f64|f32|tf32] [--fleet 840m,v100,host]
                  (alias: explain — show ranked candidate plans + prediction)
   gmres-rs sweep [--what table1|figure5|blas1|memcap] [--measured]
                  [--format dense|csr] [--sizes a,b,..] [--m M] [--csv PATH]
   gmres-rs serve [--requests R] [--sizes a,b,..] [--cpu-workers W] [--m M]
-                 [--format dense|csr] [--fleet 840m,v100,host]
+                 [--tol T] [--format dense|csr]
+                 [--precision auto|f64|f32|tf32] [--fleet 840m,v100,host]
                  [--calib-file PATH]
   gmres-rs info
 
-POLICIES: serial-r | serial-native | gmatrix | gputools | gpuR
-FORMATS:  dense (Table-1 random ensemble) | csr (convection-diffusion stencil)
-PRECONDS: identity | jacobi (left diagonal scaling)
-FLEET:    comma-separated devices from the catalog 840m | v100 | host,
-          each optionally budget-capped (840m=512m); plans grow a placement
-          axis (single device or row-block shard) across the fleet
+POLICIES:  serial-r | serial-native | gmatrix | gputools | gpuR
+FORMATS:   dense (Table-1 random ensemble) | csr (convection-diffusion stencil)
+PRECONDS:  identity | jacobi (left diagonal scaling)
+PRECISION: auto (planner arbitrates) | f64 | f32 | tf32 — reduced precisions
+           run working-precision Arnoldi with f64-verified residuals
+           (iterative refinement); tolerances below a precision's accuracy
+           floor admit only f64
+FLEET:     comma-separated devices from the catalog 840m | v100 | host,
+           each optionally budget-capped (840m=512m); plans grow a placement
+           axis (single device or row-block shard) across the fleet
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -87,6 +97,14 @@ fn parse_precond(args: &Args) -> anyhow::Result<PrecondKind> {
     PrecondKind::parse(&s).ok_or_else(|| anyhow!("bad precond `{s}`"))
 }
 
+/// `--precision auto|f64|f32|tf32`.  `solve` defaults to f64 (it builds
+/// an engine directly, nothing arbitrates); `plan`/`serve` default to
+/// auto (the planner arbitrates the axis).
+fn parse_precision(args: &Args, default: &str) -> anyhow::Result<PrecisionPolicy> {
+    let s = args.get_choice("precision", &["auto", "f64", "f32", "tf32"], default)?;
+    PrecisionPolicy::parse(&s).ok_or_else(|| anyhow!("bad precision `{s}`"))
+}
+
 /// `--fleet 840m,v100,host` (default: the paper's single 840M).
 fn parse_fleet(args: &Args) -> anyhow::Result<Fleet> {
     match args.get("fleet") {
@@ -102,6 +120,7 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_parse("seed", 42u64)?;
     let format = parse_format(args)?;
     let precond = parse_precond(args)?;
+    let precision = parse_precision(args, "f64")?;
     let policy_s = args.get_or("policy", "serial-native");
     let policy = Policy::parse(policy_s).ok_or_else(|| {
         anyhow!("unknown policy `{policy_s}` (valid: {})", Policy::names())
@@ -119,13 +138,14 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     };
     let shape = a.shape();
     println!(
-        "system: n={n} format={} nnz={} ({} B on device) precond={precond}",
+        "system: n={n} format={} nnz={} ({} B on device at {}) precond={precond}",
         shape.format,
         shape.nnz,
-        shape.matrix_device_bytes()
+        gmres_rs::precision::matrix_device_bytes(&shape, precision.fixed_or_default()),
+        precision.fixed_or_default(),
     );
     let runtime = runtime_if_needed(policy)?;
-    let config = GmresConfig { m, tol, max_restarts: 200, precond };
+    let config = GmresConfig { m, tol, max_restarts: 200, precond, precision };
     let mut engine = build_engine_preconditioned(policy, a, b, &config, runtime, false)?;
     let solver = RestartedGmres::new(config);
     let report = solver.solve(engine.as_mut(), None)?;
@@ -144,6 +164,7 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     let tol = args.get_parse("tol", 1e-6f64)?;
     let format = parse_format(args)?;
     let precond = parse_precond(args)?;
+    let precision = parse_precision(args, "auto")?;
     let policy = match args.get("policy") {
         None => None,
         Some(s) => Some(
@@ -157,7 +178,7 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
         MatrixFormat::Dense => SystemShape::dense(n),
         MatrixFormat::Csr => MatrixSpec::ConvDiff1d { n, seed: 0 }.shape(),
     };
-    let config = GmresConfig { m, tol, max_restarts: 200, precond };
+    let config = GmresConfig { m, tol, max_restarts: 200, precond, precision };
     let fleet = parse_fleet(args)?;
     let planner = Planner::new(PlannerConfig { fleet, ..PlannerConfig::default() });
     println!("{}", plan_table::render_candidates(&planner, &shape, &config));
@@ -248,7 +269,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let cpu_workers = args.get_parse("cpu-workers", 2usize)?;
     let m = args.get_parse("m", 8usize)?;
+    let tol = args.get_parse("tol", 1e-6f64)?;
     let format = parse_format(args)?;
+    let precision = parse_precision(args, "auto")?;
     let fleet = parse_fleet(args)?;
     let calib_file = args.get("calib-file").map(std::path::PathBuf::from);
 
@@ -272,7 +295,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 };
                 let req = SolveRequest {
                     matrix,
-                    config: GmresConfig { m, tol: 1e-6, max_restarts: 200, ..Default::default() },
+                    config: GmresConfig { m, tol, max_restarts: 200, precision, ..Default::default() },
                     policy: None,
                 };
                 svc.submit(req)
@@ -285,13 +308,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             Ok(out) => {
                 ok += 1;
                 println!(
-                    "  {} n={} policy={} @{} m={} pre={} cycles={} predicted={:.4}s measured={:.4}s queue={:.3}s{}",
+                    "  {} n={} policy={} @{} m={} pre={} prec={} cycles={} predicted={:.4}s measured={:.4}s queue={:.3}s{}",
                     out.id,
                     out.report.n,
                     out.policy,
                     out.plan.placement,
                     out.plan.m,
                     out.plan.precond,
+                    out.plan.precision,
                     out.report.cycles,
                     out.plan.predicted_seconds,
                     out.report.sim_seconds,
@@ -334,11 +358,13 @@ fn cmd_info() -> anyhow::Result<()> {
     }
     let g = GpuSpec::geforce_840m();
     println!(
-        "device model: {} — {} GB, {:.0} GB/s mem, {:.1} GF f64, {:.0} GB/s pcie",
+        "device model: {} — {} GB, {:.0} GB/s mem, {:.1} GF f64, {:.0} GF f32 ({}x), {:.0} GB/s pcie",
         g.name,
         g.mem_capacity >> 30,
         g.mem_bw / 1e9,
         g.flops_f64 / 1e9,
+        g.flops_f32 / 1e9,
+        g.f32_ratio().round(),
         g.pcie_bw / 1e9
     );
     Ok(())

@@ -1,6 +1,6 @@
 //! Online cost calibration: exponentially-weighted per-(policy, format,
-//! placement) coefficients refined from (predicted, measured) pairs the
-//! worker reports after every solve.
+//! placement, precision) coefficients refined from (predicted, measured)
+//! pairs the worker reports after every solve.
 //!
 //! The estimator is deliberately one number per cell: the cost tables get
 //! the *shape* of each policy's cost right (they are charge-for-charge the
@@ -22,6 +22,7 @@ use anyhow::{anyhow, bail};
 use crate::backend::Policy;
 use crate::fleet::Placement;
 use crate::linalg::MatrixFormat;
+use crate::precision::Precision;
 use crate::Result;
 
 #[derive(Clone, Copy, Debug)]
@@ -36,15 +37,19 @@ pub struct CalibrationEntry {
     pub policy: Policy,
     pub format: MatrixFormat,
     pub placement: Placement,
+    pub precision: Precision,
     pub coeff: f64,
     pub observations: u64,
 }
 
-/// Per-(policy, format, placement) EWMA coefficient store.
+/// Per-(policy, format, placement, precision) EWMA coefficient store.
+/// Precision is part of the key because the mixed-precision cycle has its
+/// own bias sources (refinement residuals, rounding-driven extra cycles)
+/// that must not pollute the f64 cell.
 #[derive(Clone, Debug)]
 pub struct Calibrator {
     alpha: f64,
-    cells: HashMap<(Policy, MatrixFormat, Placement), Cell>,
+    cells: HashMap<(Policy, MatrixFormat, Placement, Precision), Cell>,
     observations: u64,
     abs_rel_err_sum: f64,
 }
@@ -57,20 +62,29 @@ impl Calibrator {
     }
 
     /// Current coefficient for a cell (1.0 until observed).
-    pub fn coeff(&self, policy: Policy, format: MatrixFormat, placement: Placement) -> f64 {
-        self.cells.get(&(policy, format, placement)).map_or(1.0, |c| c.coeff)
+    pub fn coeff(
+        &self,
+        policy: Policy,
+        format: MatrixFormat,
+        placement: Placement,
+        precision: Precision,
+    ) -> f64 {
+        self.cells.get(&(policy, format, placement, precision)).map_or(1.0, |c| c.coeff)
     }
 
-    /// Ingest one solve: `base_seconds` is the uncalibrated cost-table
-    /// prediction, `predicted_seconds` the calibrated prediction that was
-    /// served, `measured_seconds` the modeled clock the engine actually
+    /// Ingest one solve into the `(policy, format, placement, precision)`
+    /// cell: `base_seconds` is the uncalibrated cost-table prediction,
+    /// `predicted_seconds` the calibrated prediction that was served,
+    /// `measured_seconds` the modeled clock the engine actually
     /// accumulated.  Degenerate pairs (zero/NaN) are ignored — the
     /// serial-native policy models zero seconds by design.
+    #[allow(clippy::too_many_arguments)]
     pub fn observe(
         &mut self,
         policy: Policy,
         format: MatrixFormat,
         placement: Placement,
+        precision: Precision,
         base_seconds: f64,
         predicted_seconds: f64,
         measured_seconds: f64,
@@ -85,7 +99,7 @@ impl Calibrator {
         }
         let cell = self
             .cells
-            .entry((policy, format, placement))
+            .entry((policy, format, placement, precision))
             .or_insert(Cell { coeff: 1.0, observations: 0 });
         cell.coeff = (1.0 - self.alpha) * cell.coeff + self.alpha * measured_seconds / base_seconds;
         cell.observations += 1;
@@ -112,17 +126,18 @@ impl Calibrator {
         let mut out: Vec<CalibrationEntry> = self
             .cells
             .iter()
-            .map(|(&(policy, format, placement), c)| CalibrationEntry {
+            .map(|(&(policy, format, placement, precision), c)| CalibrationEntry {
                 policy,
                 format,
                 placement,
+                precision,
                 coeff: c.coeff,
                 observations: c.observations,
             })
             .collect();
         out.sort_by(|a, b| {
-            (a.policy.name(), a.format.name(), a.placement)
-                .cmp(&(b.policy.name(), b.format.name(), b.placement))
+            (a.policy.name(), a.format.name(), a.placement, a.precision.name())
+                .cmp(&(b.policy.name(), b.format.name(), b.placement, b.precision.name()))
         });
         out
     }
@@ -130,16 +145,17 @@ impl Calibrator {
     /// Serialize the full store as plain text (one `cell` line per
     /// observed cell; placement uses [`Placement::token`]).
     pub fn to_text(&self) -> String {
-        let mut out = String::from("# gmres-rs calibrator v1\n");
+        let mut out = String::from("# gmres-rs calibrator v2\n");
         out.push_str(&format!("alpha {}\n", self.alpha));
         out.push_str(&format!("observations {}\n", self.observations));
         out.push_str(&format!("err_sum {}\n", self.abs_rel_err_sum));
         for e in self.snapshot() {
             out.push_str(&format!(
-                "cell {} {} {} {} {}\n",
+                "cell {} {} {} {} {} {}\n",
                 e.policy.name(),
                 e.format.name(),
                 e.placement.token(),
+                e.precision.name(),
                 e.coeff,
                 e.observations
             ));
@@ -148,7 +164,9 @@ impl Calibrator {
     }
 
     /// Parse a [`Calibrator::to_text`] snapshot.  `default_alpha` is used
-    /// when the snapshot carries no (or an invalid) alpha line.
+    /// when the snapshot carries no (or an invalid) alpha line.  v1
+    /// snapshots (no precision field) load their cells as f64, so a
+    /// pre-precision `--calib-file` still plans warm.
     pub fn from_text(default_alpha: f64, text: &str) -> Result<Calibrator> {
         let mut cal = Calibrator::new(default_alpha);
         for (lineno, line) in text.lines().enumerate() {
@@ -179,8 +197,10 @@ impl Calibrator {
                         .ok_or_else(|| bad("bad error sum"))?;
                 }
                 Some("cell") => {
-                    if fields.len() != 6 {
-                        return Err(bad("expected `cell policy format placement coeff obs`"));
+                    if fields.len() != 6 && fields.len() != 7 {
+                        return Err(bad(
+                            "expected `cell policy format placement [precision] coeff obs`",
+                        ));
                     }
                     let policy =
                         Policy::parse(fields[1]).ok_or_else(|| bad("unknown policy"))?;
@@ -188,14 +208,23 @@ impl Calibrator {
                         MatrixFormat::parse(fields[2]).ok_or_else(|| bad("unknown format"))?;
                     let placement = Placement::parse_token(fields[3])
                         .ok_or_else(|| bad("unknown placement"))?;
-                    let coeff: f64 =
-                        fields[4].parse().map_err(|_| bad("bad coefficient"))?;
+                    // v1 lines carry no precision field: load as f64
+                    let (precision, rest) = if fields.len() == 7 {
+                        (
+                            Precision::parse(fields[4]).ok_or_else(|| bad("unknown precision"))?,
+                            &fields[5..],
+                        )
+                    } else {
+                        (Precision::F64, &fields[4..])
+                    };
+                    let coeff: f64 = rest[0].parse().map_err(|_| bad("bad coefficient"))?;
                     let observations: u64 =
-                        fields[5].parse().map_err(|_| bad("bad cell observation count"))?;
+                        rest[1].parse().map_err(|_| bad("bad cell observation count"))?;
                     if !(coeff.is_finite() && coeff > 0.0) {
                         return Err(bad("non-positive coefficient"));
                     }
-                    cal.cells.insert((policy, format, placement), Cell { coeff, observations });
+                    cal.cells
+                        .insert((policy, format, placement, precision), Cell { coeff, observations });
                 }
                 _ => bail!("calibration line {}: unknown record `{line}`", lineno + 1),
             }
@@ -209,11 +238,13 @@ mod tests {
     use super::*;
 
     const HOST: Placement = Placement::Host;
+    const F64: Precision = Precision::F64;
+    const F32: Precision = Precision::F32;
 
     #[test]
     fn unobserved_cells_predict_unity() {
         let c = Calibrator::new(0.3);
-        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Dense, HOST), 1.0);
+        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Dense, HOST, F64), 1.0);
         assert_eq!(c.observations(), 0);
         assert!(c.mean_abs_rel_error().is_none());
     }
@@ -223,9 +254,9 @@ mod tests {
         let mut c = Calibrator::new(0.5);
         for _ in 0..32 {
             // consistently measures 40% of the base prediction
-            c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, 1.0, 1.0, 0.4);
+            c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, F64, 1.0, 1.0, 0.4);
         }
-        let k = c.coeff(Policy::SerialR, MatrixFormat::Dense, HOST);
+        let k = c.coeff(Policy::SerialR, MatrixFormat::Dense, HOST, F64);
         assert!((k - 0.4).abs() < 1e-4, "coeff {k}");
         assert_eq!(c.observations(), 32);
     }
@@ -234,29 +265,57 @@ mod tests {
     fn cells_are_independent_across_placements() {
         let mut c = Calibrator::new(1.0);
         let shard = Placement::parse_token("shard:0+1").unwrap();
-        c.observe(Policy::GpurVclLike, MatrixFormat::Dense, Placement::Single(0), 1.0, 1.0, 2.0);
-        c.observe(Policy::GpurVclLike, MatrixFormat::Dense, shard, 1.0, 1.0, 0.5);
-        assert_eq!(c.coeff(Policy::GpurVclLike, MatrixFormat::Dense, Placement::Single(0)), 2.0);
-        assert_eq!(c.coeff(Policy::GpurVclLike, MatrixFormat::Dense, shard), 0.5);
-        assert_eq!(c.coeff(Policy::GpurVclLike, MatrixFormat::Dense, Placement::Single(1)), 1.0);
+        c.observe(
+            Policy::GpurVclLike,
+            MatrixFormat::Dense,
+            Placement::Single(0),
+            F64,
+            1.0,
+            1.0,
+            2.0,
+        );
+        c.observe(Policy::GpurVclLike, MatrixFormat::Dense, shard, F64, 1.0, 1.0, 0.5);
+        assert_eq!(
+            c.coeff(Policy::GpurVclLike, MatrixFormat::Dense, Placement::Single(0), F64),
+            2.0
+        );
+        assert_eq!(c.coeff(Policy::GpurVclLike, MatrixFormat::Dense, shard, F64), 0.5);
+        assert_eq!(
+            c.coeff(Policy::GpurVclLike, MatrixFormat::Dense, Placement::Single(1), F64),
+            1.0
+        );
+        assert_eq!(c.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn cells_are_independent_across_precisions() {
+        let mut c = Calibrator::new(1.0);
+        c.observe(Policy::GmatrixLike, MatrixFormat::Dense, Placement::Single(0), F64, 1.0, 1.0, 2.0);
+        c.observe(Policy::GmatrixLike, MatrixFormat::Dense, Placement::Single(0), F32, 1.0, 1.0, 0.5);
+        assert_eq!(c.coeff(Policy::GmatrixLike, MatrixFormat::Dense, Placement::Single(0), F64), 2.0);
+        assert_eq!(c.coeff(Policy::GmatrixLike, MatrixFormat::Dense, Placement::Single(0), F32), 0.5);
+        assert_eq!(
+            c.coeff(Policy::GmatrixLike, MatrixFormat::Dense, Placement::Single(0), Precision::Tf32),
+            1.0
+        );
         assert_eq!(c.snapshot().len(), 2);
     }
 
     #[test]
     fn degenerate_observations_ignored() {
         let mut c = Calibrator::new(0.5);
-        c.observe(Policy::SerialNative, MatrixFormat::Dense, HOST, 0.0, 0.0, 0.0);
-        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, 1.0, 1.0, f64::NAN);
-        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, -1.0, 1.0, 1.0);
+        c.observe(Policy::SerialNative, MatrixFormat::Dense, HOST, F64, 0.0, 0.0, 0.0);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, F64, 1.0, 1.0, f64::NAN);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, F64, -1.0, 1.0, 1.0);
         assert_eq!(c.observations(), 0);
     }
 
     #[test]
     fn error_tally_tracks_served_predictions() {
         let mut c = Calibrator::new(0.5);
-        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, 1.0, 2.0, 1.0);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, F64, 1.0, 2.0, 1.0);
         assert!((c.mean_abs_rel_error().unwrap() - 1.0).abs() < 1e-12);
-        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, 1.0, 1.0, 1.0);
+        c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, F64, 1.0, 1.0, 1.0);
         assert!((c.mean_abs_rel_error().unwrap() - 0.5).abs() < 1e-12);
     }
 
@@ -265,10 +324,11 @@ mod tests {
         let mut c = Calibrator::new(0.25);
         let shard = Placement::parse_token("shard:0+2").unwrap();
         for _ in 0..5 {
-            c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, 1.0, 1.0, 0.8);
-            c.observe(Policy::GpurVclLike, MatrixFormat::Csr, shard, 2.0, 2.0, 3.0);
+            c.observe(Policy::SerialR, MatrixFormat::Dense, HOST, F64, 1.0, 1.0, 0.8);
+            c.observe(Policy::GpurVclLike, MatrixFormat::Csr, shard, F32, 2.0, 2.0, 3.0);
         }
         let text = c.to_text();
+        assert!(text.contains(" f32 "), "precision serialized: {text}");
         let back = Calibrator::from_text(0.9, &text).unwrap();
         assert_eq!(back.observations(), c.observations());
         assert_eq!(back.snapshot(), c.snapshot());
@@ -280,9 +340,20 @@ mod tests {
     }
 
     #[test]
+    fn v1_snapshots_load_cells_as_f64() {
+        let legacy = "# gmres-rs calibrator v1\nalpha 0.5\nobservations 3\nerr_sum 0.3\n\
+                      cell serial-r dense host 0.8 3\n";
+        let c = Calibrator::from_text(0.25, legacy).unwrap();
+        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Dense, HOST, F64), 0.8);
+        assert_eq!(c.coeff(Policy::SerialR, MatrixFormat::Dense, HOST, F32), 1.0);
+        assert_eq!(c.observations(), 3);
+    }
+
+    #[test]
     fn malformed_snapshots_are_rejected() {
         assert!(Calibrator::from_text(0.5, "cell nope dense host 1.0 3").is_err());
         assert!(Calibrator::from_text(0.5, "cell serial-r dense host -1.0 3").is_err());
+        assert!(Calibrator::from_text(0.5, "cell serial-r dense host f16 1.0 3").is_err());
         assert!(Calibrator::from_text(0.5, "garbage line").is_err());
         // comments and blank lines are fine
         let ok = Calibrator::from_text(0.5, "# hi\n\nalpha 0.5\n").unwrap();

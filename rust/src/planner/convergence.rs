@@ -18,6 +18,7 @@
 //! end-to-end seconds prediction.
 
 use crate::gmres::PrecondKind;
+use crate::precision::Precision;
 
 /// Analytic cycles-to-tolerance estimator.
 #[derive(Clone, Debug)]
@@ -80,8 +81,31 @@ impl ConvergenceModel {
         max_restarts: usize,
         observed_rho: Option<f64>,
     ) -> usize {
+        self.cycles_with_rho_p(m, tol, precond, max_restarts, observed_rho, Precision::F64)
+    }
+
+    /// [`ConvergenceModel::cycles_with_rho`] at a storage precision.
+    ///
+    /// Two precision effects are priced: a tolerance below the
+    /// precision's attainable-accuracy floor can never be met (the
+    /// estimate saturates at `max_restarts` — and admission refuses such
+    /// plans outright), and reduced-precision Arnoldi loses orthogonality
+    /// faster, modeled as a per-cycle contraction efficiency below 1
+    /// ([`ConvergenceModel::precision_efficiency`]).
+    pub fn cycles_with_rho_p(
+        &self,
+        m: usize,
+        tol: f64,
+        precond: PrecondKind,
+        max_restarts: usize,
+        observed_rho: Option<f64>,
+        precision: Precision,
+    ) -> usize {
         if tol >= 1.0 {
             return 1;
+        }
+        if !self.admits_tolerance(tol, precision) {
+            return max_restarts.max(1);
         }
         let boost = match (precond, observed_rho) {
             (_, Some(_)) => 1.0,
@@ -91,10 +115,36 @@ impl ConvergenceModel {
         let rho = observed_rho.unwrap_or(self.rho);
         let effective = self.effective_iterations(m);
         // rho in (0,1) => ln(rho) < 0 => per_cycle > 0
-        let per_cycle = -(effective * rho.clamp(1e-6, 1.0 - 1e-6).ln()) * boost;
+        let per_cycle = -(effective * rho.clamp(1e-6, 1.0 - 1e-6).ln())
+            * boost
+            * Self::precision_efficiency(precision);
         let needed = -tol.max(1e-300).ln();
         let cycles = (needed / per_cycle).ceil();
         (cycles as usize).clamp(1, max_restarts.max(1))
+    }
+
+    /// Modeled fraction of a cycle's f64 contraction a reduced-precision
+    /// Arnoldi retains (rounding noise degrades orthogonality): the
+    /// iteration-count penalty the cost of a reduced plan carries.
+    pub fn precision_efficiency(precision: Precision) -> f64 {
+        match precision {
+            Precision::F64 => 1.0,
+            Precision::F32 => 0.9,
+            Precision::Tf32 => 0.7,
+        }
+    }
+
+    /// The attainable relative-residual floor at a storage precision.
+    pub fn attainable_accuracy(&self, precision: Precision) -> f64 {
+        precision.accuracy_floor()
+    }
+
+    /// Admission rule of the precision axis: a tolerance is reachable at
+    /// a precision only when it sits at or above that precision's
+    /// attainable-accuracy floor (tolerances below the f32 floor admit
+    /// only f64).
+    pub fn admits_tolerance(&self, tol: f64, precision: Precision) -> bool {
+        tol >= self.attainable_accuracy(precision)
     }
 
     /// Invert an *observed per-cycle* residual contraction factor (the
@@ -180,6 +230,31 @@ mod tests {
         // a faster observed contraction predicts fewer
         let fast = m.cycles_with_rho(10, 1e-8, PrecondKind::Identity, 500, Some(0.01));
         assert!(fast <= prior, "fast {fast} vs prior {prior}");
+    }
+
+    #[test]
+    fn precision_floor_gates_admission_and_prices_a_penalty() {
+        let m = ConvergenceModel::default();
+        // default tolerance (1e-6) is below the f32 floor: admits only f64
+        assert!(m.admits_tolerance(1e-6, Precision::F64));
+        assert!(!m.admits_tolerance(1e-6, Precision::F32));
+        assert!(m.admits_tolerance(1e-4, Precision::F32));
+        assert!(!m.admits_tolerance(1e-4, Precision::Tf32));
+        assert!(m.admits_tolerance(5e-2, Precision::Tf32));
+        // an admitted reduced precision predicts >= the f64 cycle count
+        let c64 = m.cycles_with_rho_p(10, 1e-4, PrecondKind::Identity, 500, None, Precision::F64);
+        let c32 = m.cycles_with_rho_p(10, 1e-4, PrecondKind::Identity, 500, None, Precision::F32);
+        assert!(c32 >= c64, "f32 {c32} must not predict fewer cycles than f64 {c64}");
+        // a floored tolerance saturates the estimate at the restart budget
+        assert_eq!(
+            m.cycles_with_rho_p(10, 1e-8, PrecondKind::Identity, 500, None, Precision::F32),
+            500
+        );
+        // f64 delegation is exact
+        assert_eq!(
+            m.cycles_with_rho(10, 1e-8, PrecondKind::Identity, 500, None),
+            m.cycles_with_rho_p(10, 1e-8, PrecondKind::Identity, 500, None, Precision::F64)
+        );
     }
 
     #[test]

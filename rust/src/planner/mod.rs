@@ -8,11 +8,13 @@
 //!
 //! * **enumeration** — for a solve (shape + GMRES config) it generates
 //!   candidate plans over policy × restart `m` × preconditioner ×
-//!   placement, dropping candidates whose working set fails per-device
-//!   memory admission ([`Planner::enumerate`]).  Placements come from the
-//!   configured [`Fleet`]: every GPU device singly, plus row-block shards
-//!   across device sets — so a matrix no single card fits can still be
-//!   admitted sharded.
+//!   placement × storage precision, dropping candidates whose (narrowed)
+//!   working set fails per-device memory admission or whose precision's
+//!   attainable-accuracy floor cannot reach the requested tolerance
+//!   ([`Planner::enumerate`]).  Placements come from the configured
+//!   [`Fleet`]: every GPU device singly, plus row-block shards across
+//!   device sets — so a matrix no single card fits can still be admitted
+//!   sharded (or narrowed).
 //! * **pricing** — each candidate is priced through the shared
 //!   [`crate::device::costs`] table (single placements, on the placement
 //!   device's own spec) or the [`crate::fleet::costs`] sharded model
@@ -21,8 +23,9 @@
 //!   cost splits are memoized per `(policy, shape, m, placement)`, so
 //!   steady-state planning is microseconds.
 //! * **online calibration** — the worker reports `(plan, measured
-//!   seconds)` after every solve; a per-(policy, format, placement) EWMA
-//!   [`Calibrator`] learns the cost table's multiplicative bias.  Workers
+//!   seconds)` after every solve; a per-(policy, format, placement,
+//!   precision) EWMA [`Calibrator`] learns the cost table's
+//!   multiplicative bias.  Workers
 //!   also report each finished solve's observed per-cycle contraction
 //!   factor, which calibrates the convergence model's `rho` per workload
 //!   class ([`Planner::observe_convergence`]) — so cycle-count prediction
@@ -51,11 +54,12 @@ use std::sync::Mutex;
 
 use crate::backend::Policy;
 use crate::device::costs;
-use crate::device::memory::working_set_bytes;
+use crate::device::memory::working_set_bytes_p;
 use crate::device::{DeviceSim, HostSpec};
 use crate::fleet::{costs as fleet_costs, DeviceKind, Fleet, Placement};
 use crate::gmres::{GmresConfig, PrecondKind};
 use crate::linalg::{MatrixFormat, SystemShape};
+use crate::precision::Precision;
 use crate::Result;
 
 /// Planner configuration.
@@ -74,6 +78,11 @@ pub struct PlannerConfig {
     pub restarts: Vec<usize>,
     /// Candidate preconditioners explored for auto requests.
     pub preconds: Vec<PrecondKind>,
+    /// Candidate storage precisions explored for auto requests on device
+    /// policies (host placements always run f64 — R's numeric is double).
+    /// Floor admission still applies: a precision whose attainable
+    /// accuracy cannot reach the request's tolerance is never selected.
+    pub precisions: Vec<Precision>,
     /// Cycles-to-tolerance model.
     pub convergence: ConvergenceModel,
     /// EWMA weight of each calibration observation.
@@ -88,10 +97,22 @@ impl Default for PlannerConfig {
             fallback: Policy::SerialR,
             restarts: vec![10, 30, 60],
             preconds: vec![PrecondKind::Identity, PrecondKind::Jacobi],
+            precisions: vec![Precision::F64, Precision::F32, Precision::Tf32],
             convergence: ConvergenceModel::default(),
             alpha: 0.25,
         }
     }
+}
+
+/// One fully-identified point of the plan space (everything but the
+/// priced numbers a [`Plan`] adds on top).
+#[derive(Clone, Copy, Debug)]
+struct PlanPoint {
+    policy: Policy,
+    m: usize,
+    precond: PrecondKind,
+    placement: Placement,
+    precision: Precision,
 }
 
 /// Memoized cost split of one `(policy, shape, m, placement)` point.
@@ -108,10 +129,10 @@ struct CostSplit {
 pub struct Planner {
     config: PlannerConfig,
     calibrator: Mutex<Calibrator>,
-    /// Observed per-iteration contraction per (format, precond) workload
-    /// class — the convergence model's online calibration state.
-    observed_rho: Mutex<HashMap<(MatrixFormat, PrecondKind), f64>>,
-    price_cache: Mutex<HashMap<(Policy, SystemShape, usize, Placement), CostSplit>>,
+    /// Observed per-iteration contraction per (format, precond, precision)
+    /// workload class — the convergence model's online calibration state.
+    observed_rho: Mutex<HashMap<(MatrixFormat, PrecondKind, Precision), f64>>,
+    price_cache: Mutex<HashMap<(Policy, SystemShape, usize, Placement, Precision), CostSplit>>,
 }
 
 impl Planner {
@@ -157,7 +178,7 @@ impl Planner {
     }
 
     /// Placement-aware admission: do the working sets fit the placement's
-    /// per-device budgets?
+    /// per-device budgets?  (f64; see [`Planner::admits_placement_p`].)
     pub fn admits_placement(
         &self,
         policy: Policy,
@@ -165,12 +186,28 @@ impl Planner {
         m: usize,
         placement: Placement,
     ) -> bool {
+        self.admits_placement_p(policy, shape, m, placement, Precision::F64)
+    }
+
+    /// [`Planner::admits_placement`] at a storage precision: budgets are
+    /// checked against the *narrowed* working set (reduced plans admit at
+    /// orders f64 cannot), and host placements admit only f64 (R computes
+    /// in doubles; there is nothing to narrow on the host).
+    pub fn admits_placement_p(
+        &self,
+        policy: Policy,
+        shape: &SystemShape,
+        m: usize,
+        placement: Placement,
+        precision: Precision,
+    ) -> bool {
         let fleet = &self.config.fleet;
         match placement {
-            Placement::Host => !policy.needs_runtime(),
+            Placement::Host => !policy.needs_runtime() && precision == Precision::F64,
             Placement::Single(id) => match fleet.get(id) {
                 Some(d) if d.is_gpu() && policy.needs_runtime() => {
-                    working_set_bytes(shape, m, policy) <= d.budget(self.config.mem_fraction)
+                    working_set_bytes_p(shape, m, policy, precision)
+                        <= d.budget(self.config.mem_fraction)
                 }
                 _ => false,
             },
@@ -182,7 +219,7 @@ impl Planner {
                     return false;
                 }
                 fleet.shard_plan(set, shape.n, self.config.mem_fraction).iter().all(|a| {
-                    fleet_costs::shard_working_set_bytes(shape, a.rows, m, policy)
+                    fleet_costs::shard_working_set_bytes_p(shape, a.rows, m, policy, precision)
                         <= fleet.device(a.device).budget(self.config.mem_fraction)
                 })
             }
@@ -218,20 +255,22 @@ impl Planner {
         shape: &SystemShape,
         m: usize,
         placement: Placement,
+        precision: Precision,
     ) -> CostSplit {
-        let key = (policy, *shape, m, placement);
+        let key = (policy, *shape, m, placement, precision);
         if let Some(split) = self.price_cache.lock().unwrap().get(&key) {
             return *split;
         }
         let split = match placement {
             Placement::Sharded(set) => {
-                let sc = fleet_costs::shard_costs(
+                let sc = fleet_costs::shard_costs_p(
                     &self.config.fleet,
                     set,
                     policy,
                     shape,
                     m,
                     self.config.mem_fraction,
+                    precision,
                 );
                 CostSplit { setup_seconds: sc.setup_seconds, cycle_seconds: sc.cycle_seconds }
             }
@@ -250,9 +289,9 @@ impl Planner {
                 };
                 let mut sim =
                     DeviceSim::new(gpu_spec, HostSpec::r_interpreter_i7_4710hq(), false);
-                costs::charge_setup(&mut sim, policy, shape, m);
+                costs::charge_setup_p(&mut sim, policy, shape, m, precision);
                 let setup_seconds = sim.elapsed();
-                costs::charge_cycle(&mut sim, policy, shape, m);
+                costs::charge_cycle_p(&mut sim, policy, shape, m, precision);
                 CostSplit { setup_seconds, cycle_seconds: sim.elapsed() - setup_seconds }
             }
         };
@@ -265,38 +304,52 @@ impl Planner {
     }
 
     /// Price one plan point: convergence model (with any observed rho for
-    /// the workload class) → cycles, cost table → base seconds, calibrator
-    /// → served prediction.
-    fn price(
-        &self,
-        policy: Policy,
-        shape: &SystemShape,
-        m: usize,
-        precond: PrecondKind,
-        placement: Placement,
-        config: &GmresConfig,
-    ) -> Plan {
-        let rho = self.observed_rho(shape.format, precond);
-        let predicted_cycles = self.config.convergence.cycles_with_rho(
+    /// the workload class, plus the precision's floor/penalty) → cycles,
+    /// cost table → base seconds, calibrator → served prediction.
+    fn price(&self, shape: &SystemShape, point: PlanPoint, config: &GmresConfig) -> Plan {
+        let PlanPoint { policy, m, precond, placement, precision } = point;
+        let rho = self.observed_rho_p(shape.format, precond, precision);
+        let predicted_cycles = self.config.convergence.cycles_with_rho_p(
             m,
             config.tol,
             precond,
             config.max_restarts,
             rho,
+            precision,
         );
-        let split = self.cost_split(policy, shape, m, placement);
+        let split = self.cost_split(policy, shape, m, placement, precision);
         let base_seconds = split.setup_seconds + predicted_cycles as f64 * split.cycle_seconds;
-        let coeff = self.coeff_at(policy, shape.format, placement);
+        let coeff = self.coeff_cell(policy, shape.format, placement, precision);
         Plan {
             policy,
             placement,
             m,
             precond,
+            precision,
             predicted_cycles,
             base_seconds,
             predicted_seconds: base_seconds * coeff,
             downgraded: false,
         }
+    }
+
+    /// Candidate precisions for one policy under a request: a pinned
+    /// request fixes the axis (host placements will simply refuse reduced
+    /// pins at admission); auto requests explore the configured axis on
+    /// device policies and stay f64 on host policies.
+    fn precisions_for(&self, policy: Policy, config: &GmresConfig) -> Vec<Precision> {
+        if let Some(p) = config.precision.fixed() {
+            return vec![p];
+        }
+        if !policy.needs_runtime() {
+            return vec![Precision::F64];
+        }
+        let mut out = self.config.precisions.clone();
+        if out.is_empty() {
+            out.push(Precision::F64);
+        }
+        out.dedup();
+        out
     }
 
     /// Candidate restart lengths for a request: the configured grid plus
@@ -310,9 +363,26 @@ impl Planner {
         ms
     }
 
+    /// Full admission of one plan point: the placement's memory budgets
+    /// at the point's (narrowed) working set AND the precision's
+    /// attainable-accuracy floor against the request's tolerance — a
+    /// tolerance tighter than the f32 floor admits only f64.
+    fn admits_point(&self, shape: &SystemShape, point: PlanPoint, config: &GmresConfig) -> bool {
+        self.config.convergence.admits_tolerance(config.tol, point.precision)
+            && self.admits_placement_p(
+                point.policy,
+                shape,
+                point.m,
+                point.placement,
+                point.precision,
+            )
+    }
+
     /// Enumerate and price the full candidate space for an auto request,
     /// ranked admissible-first by predicted seconds (deterministic
-    /// tie-break on policy order, then m, then precond, then placement).
+    /// tie-break on policy order, then m, then precond, then placement,
+    /// then precision — so f64 wins exact ties against tf32's identical
+    /// pricing).
     pub fn enumerate(&self, shape: &SystemShape, config: &GmresConfig) -> Vec<PlanCandidate> {
         let mut policies = vec![self.config.fallback];
         for p in Policy::gpu_policies() {
@@ -334,16 +404,21 @@ impl Planner {
             for &precond in &preconds {
                 for &policy in &policies {
                     for placement in self.placements_for(policy) {
-                        let admitted = self.admits_placement(policy, shape, m, placement);
-                        out.push(PlanCandidate {
-                            plan: self.price(policy, shape, m, precond, placement, config),
-                            admitted,
-                        });
+                        for precision in self.precisions_for(policy, config) {
+                            let point = PlanPoint { policy, m, precond, placement, precision };
+                            out.push(PlanCandidate {
+                                plan: self.price(shape, point, config),
+                                admitted: self.admits_point(shape, point, config),
+                            });
+                        }
                     }
                 }
             }
         }
         let rank = |p: Policy| Policy::all().iter().position(|&q| q == p).unwrap_or(usize::MAX);
+        let prank = |p: Precision| {
+            Precision::all().iter().position(|&q| q == p).unwrap_or(usize::MAX)
+        };
         out.sort_by(|a, b| {
             b.admitted
                 .cmp(&a.admitted)
@@ -352,41 +427,55 @@ impl Planner {
                 .then(a.plan.m.cmp(&b.plan.m))
                 .then(a.plan.precond.name().cmp(b.plan.precond.name()))
                 .then(a.plan.placement.cmp(&b.plan.placement))
+                .then(prank(a.plan.precision).cmp(&prank(b.plan.precision)))
         });
         out
     }
 
     /// Plan one solve.  Explicit policy requests keep their requested
     /// restart and preconditioner, placed on the cheapest admissible
-    /// placement for that policy (a matrix too big for any single device
-    /// shards before it downgrades; only when *no* placement admits does
-    /// it fall back).  Auto requests take the best-ranked admissible
-    /// candidate from [`Planner::enumerate`].
+    /// (placement, precision) for that policy — a pinned precision
+    /// restricts that axis; a matrix too big for any single device shards
+    /// before it downgrades; only when *no* point admits does it fall
+    /// back to the f64 host fallback (visibly downgraded).  Auto requests
+    /// take the best-ranked admissible candidate from
+    /// [`Planner::enumerate`].
     pub fn plan(
         &self,
         shape: &SystemShape,
         config: &GmresConfig,
         requested: Option<Policy>,
     ) -> Plan {
+        let fallback = PlanPoint {
+            policy: self.config.fallback,
+            m: config.m,
+            precond: config.precond,
+            placement: Placement::Host,
+            precision: Precision::F64,
+        };
         match requested {
             Some(p) => {
-                let best = self
-                    .placements_for(p)
+                let mut points = Vec::new();
+                for placement in self.placements_for(p) {
+                    for precision in self.precisions_for(p, config) {
+                        points.push(PlanPoint {
+                            policy: p,
+                            m: config.m,
+                            precond: config.precond,
+                            placement,
+                            precision,
+                        });
+                    }
+                }
+                let best = points
                     .into_iter()
-                    .filter(|&pl| self.admits_placement(p, shape, config.m, pl))
-                    .map(|pl| self.price(p, shape, config.m, config.precond, pl, config))
+                    .filter(|&point| self.admits_point(shape, point, config))
+                    .map(|point| self.price(shape, point, config))
                     .min_by(|a, b| a.predicted_seconds.total_cmp(&b.predicted_seconds));
                 match best {
                     Some(plan) => plan,
                     None => {
-                        let mut plan = self.price(
-                            self.config.fallback,
-                            shape,
-                            config.m,
-                            config.precond,
-                            Placement::Host,
-                            config,
-                        );
+                        let mut plan = self.price(shape, fallback, config);
                         plan.downgraded = true;
                         plan
                     }
@@ -398,14 +487,12 @@ impl Planner {
                 .find(|c| c.admitted)
                 .map(|c| c.plan)
                 .unwrap_or_else(|| {
-                    self.price(
-                        self.config.fallback,
-                        shape,
-                        config.m,
-                        config.precond,
-                        Placement::Host,
-                        config,
-                    )
+                    let mut plan = self.price(shape, fallback, config);
+                    // a pinned reduced precision that no point admits is
+                    // an explicit request the fallback overrides
+                    plan.downgraded =
+                        config.precision.fixed().map_or(false, |p| p.is_reduced());
+                    plan
                 }),
         }
     }
@@ -417,6 +504,7 @@ impl Planner {
             plan.policy,
             format,
             plan.placement,
+            plan.precision,
             plan.base_seconds,
             plan.predicted_seconds,
             measured_seconds,
@@ -434,24 +522,49 @@ impl Planner {
         m: usize,
         cycle_factor: f64,
     ) {
+        self.observe_convergence_p(format, precond, Precision::F64, m, cycle_factor);
+    }
+
+    /// [`Planner::observe_convergence`] keyed on the solve's working
+    /// precision (reduced-precision contraction must not pollute the f64
+    /// class).
+    pub fn observe_convergence_p(
+        &self,
+        format: MatrixFormat,
+        precond: PrecondKind,
+        precision: Precision,
+        m: usize,
+        cycle_factor: f64,
+    ) {
         if let Some(rho) = self.config.convergence.rho_from_cycle_factor(m, cycle_factor) {
             let mut obs = self.observed_rho.lock().unwrap();
-            match obs.get_mut(&(format, precond)) {
+            match obs.get_mut(&(format, precond, precision)) {
                 Some(cell) => {
                     *cell = ((1.0 - self.config.alpha) * *cell + self.config.alpha * rho)
                         .clamp(1e-6, 1.0 - 1e-6);
                 }
                 None => {
-                    obs.insert((format, precond), rho);
+                    obs.insert((format, precond, precision), rho);
                 }
             }
         }
     }
 
-    /// Observed per-iteration contraction for a workload class (None until
-    /// a converged solve of that class has been reported).
+    /// Observed per-iteration contraction for an f64 workload class (None
+    /// until a converged solve of that class has been reported).
     pub fn observed_rho(&self, format: MatrixFormat, precond: PrecondKind) -> Option<f64> {
-        self.observed_rho.lock().unwrap().get(&(format, precond)).copied()
+        self.observed_rho_p(format, precond, Precision::F64)
+    }
+
+    /// [`Planner::observed_rho`] for an exact (format, precond, precision)
+    /// workload class.
+    pub fn observed_rho_p(
+        &self,
+        format: MatrixFormat,
+        precond: PrecondKind,
+        precision: Precision,
+    ) -> Option<f64> {
+        self.observed_rho.lock().unwrap().get(&(format, precond, precision)).copied()
     }
 
     /// Current calibration coefficient for a cell at its policy's default
@@ -461,10 +574,22 @@ impl Planner {
         self.coeff_at(policy, format, self.default_placement(policy))
     }
 
-    /// Current calibration coefficient for an exact (policy, format,
-    /// placement) cell (1.0 until observed).
+    /// Current calibration coefficient for an (policy, format, placement)
+    /// cell at f64 (1.0 until observed).
     pub fn coeff_at(&self, policy: Policy, format: MatrixFormat, placement: Placement) -> f64 {
-        self.calibrator.lock().unwrap().coeff(policy, format, placement)
+        self.coeff_cell(policy, format, placement, Precision::F64)
+    }
+
+    /// Current calibration coefficient for an exact (policy, format,
+    /// placement, precision) cell (1.0 until observed).
+    pub fn coeff_cell(
+        &self,
+        policy: Policy,
+        format: MatrixFormat,
+        placement: Placement,
+        precision: Precision,
+    ) -> f64 {
+        self.calibrator.lock().unwrap().coeff(policy, format, placement, precision)
     }
 
     /// The placement an unconstrained request of this policy lands on by
@@ -561,11 +686,100 @@ mod tests {
         let p = planner();
         let config = GmresConfig { m: 25, ..Default::default() };
         let cands = p.enumerate(&SystemShape::dense(500), &config);
-        // single-device fleet: 4 policies × (3 configured + 1 requested
-        // restart) × 2 preconds, one placement each
-        assert_eq!(cands.len(), 4 * 4 * 2);
+        // single-device fleet, per (m, precond) slice: the host fallback
+        // runs f64 only (1) + 3 device policies × 1 placement × 3
+        // precisions (9); × (3 configured + 1 requested restart) × 2
+        // preconds
+        assert_eq!(cands.len(), 4 * 2 * (1 + 3 * 3));
         assert!(cands.iter().any(|c| c.plan.m == 25), "request m enumerated");
         assert!(cands.iter().any(|c| c.plan.precond == PrecondKind::Jacobi));
+        assert!(cands.iter().any(|c| c.plan.precision == Precision::F32));
+        // host candidates never carry a reduced precision
+        assert!(cands
+            .iter()
+            .filter(|c| !c.plan.policy.needs_runtime())
+            .all(|c| c.plan.precision == Precision::F64));
+        // the default tolerance (1e-6) sits below the f32 floor: every
+        // reduced candidate is flagged inadmissible
+        assert!(cands
+            .iter()
+            .filter(|c| c.plan.precision.is_reduced())
+            .all(|c| !c.admitted));
+    }
+
+    #[test]
+    fn loose_tolerance_auto_plans_reduced_precision() {
+        let p = planner();
+        let shape = SystemShape::dense(8000);
+        // bandwidth-bound dense workload at a tolerance the f32 floor
+        // admits: the halved traffic must win the plan
+        let loose = GmresConfig { tol: 1e-4, ..Default::default() };
+        let plan = p.plan(&shape, &loose, None);
+        assert_eq!(plan.precision, Precision::F32, "plan: {}", plan.summary());
+        assert!(plan.policy.needs_runtime(), "reduced plans are device plans");
+        // the same request at a tight tolerance stays f64
+        let tight = GmresConfig { tol: 1e-8, ..Default::default() };
+        assert_eq!(p.plan(&shape, &tight, None).precision, Precision::F64);
+        // and tf32 is floor-blocked at 1e-4 (its floor is ~3e-2)
+        let cands = p.enumerate(&shape, &loose);
+        assert!(cands
+            .iter()
+            .filter(|c| c.plan.precision == Precision::Tf32)
+            .all(|c| !c.admitted));
+    }
+
+    #[test]
+    fn pinned_reduced_precision_is_honoured_or_visibly_downgraded() {
+        use crate::precision::PrecisionPolicy;
+        let p = planner();
+        let shape = SystemShape::dense(2000);
+        // pinned f32 at an admissible tolerance: every candidate carries it
+        let ok = GmresConfig {
+            tol: 1e-4,
+            precision: PrecisionPolicy::Fixed(Precision::F32),
+            ..Default::default()
+        };
+        let cands = p.enumerate(&shape, &ok);
+        assert!(cands.iter().all(|c| c.plan.precision == Precision::F32));
+        let plan = p.plan(&shape, &ok, Some(Policy::GmatrixLike));
+        assert_eq!(plan.precision, Precision::F32);
+        assert!(!plan.downgraded);
+        // pinned f32 at a tolerance below its floor: no point admits, the
+        // f64 host fallback runs and the downgrade is visible
+        let bad = GmresConfig {
+            tol: 1e-8,
+            precision: PrecisionPolicy::Fixed(Precision::F32),
+            ..Default::default()
+        };
+        let explicit = p.plan(&shape, &bad, Some(Policy::GmatrixLike));
+        assert_eq!(explicit.precision, Precision::F64);
+        assert_eq!(explicit.policy, Policy::SerialR);
+        assert!(explicit.downgraded);
+        let auto = p.plan(&shape, &bad, None);
+        assert_eq!(auto.precision, Precision::F64);
+        assert!(auto.downgraded);
+    }
+
+    #[test]
+    fn f32_admits_memory_that_f64_cannot() {
+        // dense 20000² is 3.2 GB in f64 (over the 840M budget) but 1.6 GB
+        // in f32: with a tolerance the floor admits, the narrowed plan
+        // runs on-device instead of downgrading
+        let p = planner();
+        let shape = SystemShape::dense(20_000);
+        assert!(!p.admits_placement(Policy::GmatrixLike, &shape, 30, Placement::Single(0)));
+        assert!(p.admits_placement_p(
+            Policy::GmatrixLike,
+            &shape,
+            30,
+            Placement::Single(0),
+            Precision::F32
+        ));
+        let loose = GmresConfig { tol: 1e-4, ..Default::default() };
+        let plan = p.plan(&shape, &loose, Some(Policy::GmatrixLike));
+        assert_eq!(plan.policy, Policy::GmatrixLike);
+        assert_eq!(plan.precision, Precision::F32);
+        assert!(!plan.downgraded);
     }
 
     #[test]

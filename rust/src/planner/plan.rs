@@ -4,6 +4,7 @@
 use crate::backend::Policy;
 use crate::fleet::Placement;
 use crate::gmres::PrecondKind;
+use crate::precision::Precision;
 
 /// A fully-specified execution plan for one solve: which policy runs,
 /// where (the fleet placement), with which restart length and
@@ -21,6 +22,10 @@ pub struct Plan {
     pub m: usize,
     /// Preconditioner applied at engine build.
     pub precond: PrecondKind,
+    /// Working (storage) precision the engine runs at.  Reduced
+    /// precisions are only planned when the convergence model's
+    /// accuracy floor admits the requested tolerance.
+    pub precision: Precision,
     /// Cycles-to-tolerance the convergence model expects.
     pub predicted_cycles: usize,
     /// Uncalibrated cost-table seconds (setup + cycles × per-cycle).
@@ -44,6 +49,7 @@ impl Plan {
             placement: Placement::Host,
             m,
             precond: PrecondKind::Identity,
+            precision: Precision::F64,
             predicted_cycles: 0,
             base_seconds: 0.0,
             predicted_seconds: 0.0,
@@ -54,11 +60,12 @@ impl Plan {
     /// One human line for CLI output.
     pub fn summary(&self) -> String {
         format!(
-            "{} @{} m={} pre={} (predicted {:.4}s over {} modeled cycles{})",
+            "{} @{} m={} pre={} prec={} (predicted {:.4}s over {} modeled cycles{})",
             self.policy,
             self.placement,
             self.m,
             self.precond,
+            self.precision,
             self.predicted_seconds,
             self.predicted_cycles,
             if self.downgraded { ", downgraded" } else { "" }
@@ -84,10 +91,12 @@ mod tests {
         let p = Plan::pinned(Policy::SerialNative, 8);
         assert_eq!(p.m, 8);
         assert_eq!(p.precond, PrecondKind::Identity);
+        assert_eq!(p.precision, Precision::F64);
         assert_eq!(p.placement, Placement::Host);
         assert_eq!(p.base_seconds, 0.0);
         assert!(!p.downgraded);
         assert!(p.summary().contains("serial-native"));
+        assert!(p.summary().contains("prec=f64"));
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! Storage-precision subsystem: the f64 / f32 / tf32 axis of the plan
+//! space.
+//!
+//! The paper's Maxwell-class card runs f64 at 1/32 of its f32 rate
+//! ([`crate::device::GpuSpec::flops_f32`]), and every kernel in this
+//! workload is bandwidth-bound — so halving the element width halves the
+//! dominant SpMV/GEMV traffic.  This module makes that win a *planner
+//! decision* with the same shape as the restart and placement axes:
+//!
+//! * **[`Precision`]** — the storage precision of the device-resident
+//!   system: element width, unit roundoff and the attainable-accuracy
+//!   floor the convergence model admits tolerances against.
+//! * **[`narrow`]** — the rounding model: values of a
+//!   [`crate::linalg::SystemMatrix`] are narrowed *once* at residency time
+//!   (dense slab or CSR value array; index arrays untouched), simulating
+//!   what a reduced-precision upload stores.
+//! * **[`engine`]** — the mixed-precision GMRES driver: the inner Arnoldi
+//!   cycle runs on the narrowed system in the working precision while the
+//!   outer restart loop recomputes the **true residual in f64** against
+//!   the full-precision system (iterative-refinement restarts), so a
+//!   converged report always means f64-verified accuracy.
+//!
+//! Pricing lives next to the other axes: [`crate::device::costs`] and
+//! [`crate::fleet::costs`] scale bytes-moved by [`Precision::element_bytes`]
+//! and flop rates by the device's own f32:f64 ratio;
+//! [`crate::planner::ConvergenceModel`] prices the iteration penalty and
+//! refuses tolerances below the precision's accuracy floor, so
+//! auto-planning picks f32/tf32 only when the requested tolerance is
+//! attainable — otherwise the plan falls back to f64.
+
+pub mod engine;
+pub mod narrow;
+
+pub use engine::MixedPrecisionEngine;
+pub use narrow::{narrow_system, narrow_vector, round_to};
+
+use crate::linalg::{MatrixFormat, SystemShape};
+
+/// Storage precision of the device-resident system state.
+///
+/// `Tf32` models the tensor-float storage trick: f32-width storage and
+/// traffic with a 10-bit mantissa, i.e. f32 bandwidth at a much larger
+/// unit roundoff.  On cards without tensor cores it runs at the f32 rate,
+/// so it is never priced *cheaper* than f32 — it exists as an explicit
+/// request and for devices whose spec gives it an edge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// IEEE double — the paper's (and R's) native numeric.
+    F64,
+    /// IEEE single storage: half the bytes, the device's f32 flop rate.
+    F32,
+    /// TensorFloat-32-style storage: f32 width, 10-bit mantissa.
+    Tf32,
+}
+
+impl Precision {
+    pub fn all() -> [Precision; 3] {
+        [Precision::F64, Precision::F32, Precision::Tf32]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::Tf32 => "tf32",
+        }
+    }
+
+    /// Case-insensitive parse of `f64` / `f32` / `tf32` (plus aliases).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" | "fp64" => Some(Precision::F64),
+            "f32" | "single" | "fp32" => Some(Precision::F32),
+            "tf32" => Some(Precision::Tf32),
+            _ => None,
+        }
+    }
+
+    /// Stored bytes per matrix/vector element (tf32 is stored in f32
+    /// containers, so it moves f32-width traffic).
+    pub fn element_bytes(&self) -> usize {
+        match self {
+            Precision::F64 => 8,
+            Precision::F32 | Precision::Tf32 => 4,
+        }
+    }
+
+    /// Unit roundoff `u` of the storage format: `2^-53` (f64), `2^-24`
+    /// (f32), `2^-11` (tf32's 10-bit mantissa).
+    pub fn unit_roundoff(&self) -> f64 {
+        match self {
+            Precision::F64 => 2f64.powi(-53),
+            Precision::F32 => 2f64.powi(-24),
+            Precision::Tf32 => 2f64.powi(-11),
+        }
+    }
+
+    /// Attainable relative-residual floor of a solve whose matrix values
+    /// were narrowed to this precision: the narrowed operator is a
+    /// relative elementwise perturbation of size `u`, so the true (f64)
+    /// residual of its exact solution sits at `O(u)`; the 64x headroom
+    /// absorbs moderate conditioning so admission guarantees convergence.
+    pub fn accuracy_floor(&self) -> f64 {
+        64.0 * self.unit_roundoff()
+    }
+
+    /// Anything narrower than f64 (i.e. needs the mixed-precision driver).
+    pub fn is_reduced(&self) -> bool {
+        !matches!(self, Precision::F64)
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Request-side precision selector: explore the axis, or pin it.
+///
+/// Mirrors the `policy: Option<Policy>` convention: `Auto` lets the
+/// planner arbitrate (it picks a reduced precision only when the
+/// tolerance clears the accuracy floor and the cost model says it wins);
+/// `Fixed` is honoured when admissible and downgraded to the f64 fallback
+/// (visibly, via `Plan::downgraded`) when not.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum PrecisionPolicy {
+    /// Planner arbitrates over the configured precision axis.
+    #[default]
+    Auto,
+    /// Pin the working precision.
+    Fixed(Precision),
+}
+
+impl PrecisionPolicy {
+    /// Case-insensitive parse of `auto` or a [`Precision`] name.
+    pub fn parse(s: &str) -> Option<PrecisionPolicy> {
+        if s.eq_ignore_ascii_case("auto") {
+            Some(PrecisionPolicy::Auto)
+        } else {
+            Precision::parse(s).map(PrecisionPolicy::Fixed)
+        }
+    }
+
+    pub fn fixed(&self) -> Option<Precision> {
+        match self {
+            PrecisionPolicy::Auto => None,
+            PrecisionPolicy::Fixed(p) => Some(*p),
+        }
+    }
+
+    /// The concrete precision a direct (non-planned) execution runs at:
+    /// the pinned one, or f64 for `Auto`.
+    pub fn fixed_or_default(&self) -> Precision {
+        self.fixed().unwrap_or(Precision::F64)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrecisionPolicy::Auto => "auto",
+            PrecisionPolicy::Fixed(p) => p.name(),
+        }
+    }
+}
+
+impl std::fmt::Display for PrecisionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Device bytes of the matrix at a storage precision — the
+/// precision-aware twin of [`SystemShape::matrix_device_bytes`].  Only
+/// the *values* narrow: CSR column indices and row pointers keep their
+/// i32 layout regardless of value width.
+pub fn matrix_device_bytes(shape: &SystemShape, precision: Precision) -> usize {
+    let w = precision.element_bytes();
+    match shape.format {
+        MatrixFormat::Dense => w * shape.n * shape.n,
+        MatrixFormat::Csr => (w + 4) * shape.nnz + 4 * (shape.n + 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for p in Precision::all() {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("DOUBLE"), Some(Precision::F64));
+        assert_eq!(Precision::parse("Single"), Some(Precision::F32));
+        assert_eq!(Precision::parse("bf16"), None);
+    }
+
+    #[test]
+    fn policy_parse_covers_auto_and_fixed() {
+        assert_eq!(PrecisionPolicy::parse("auto"), Some(PrecisionPolicy::Auto));
+        assert_eq!(
+            PrecisionPolicy::parse("F32"),
+            Some(PrecisionPolicy::Fixed(Precision::F32))
+        );
+        assert_eq!(PrecisionPolicy::parse("nope"), None);
+        assert_eq!(PrecisionPolicy::default().fixed_or_default(), Precision::F64);
+        assert_eq!(
+            PrecisionPolicy::Fixed(Precision::Tf32).fixed_or_default(),
+            Precision::Tf32
+        );
+    }
+
+    #[test]
+    fn widths_and_roundoffs_are_ordered() {
+        assert_eq!(Precision::F64.element_bytes(), 8);
+        assert_eq!(Precision::F32.element_bytes(), 4);
+        assert_eq!(Precision::Tf32.element_bytes(), 4);
+        assert!(Precision::F64.unit_roundoff() < Precision::F32.unit_roundoff());
+        assert!(Precision::F32.unit_roundoff() < Precision::Tf32.unit_roundoff());
+        // the floors bracket the repo's tolerance regimes: default 1e-6
+        // stays f64-only, 1e-4 opens f32
+        assert!(Precision::F64.accuracy_floor() < 1e-12);
+        assert!(Precision::F32.accuracy_floor() > 1e-6);
+        assert!(Precision::F32.accuracy_floor() < 1e-4);
+        assert!(Precision::Tf32.accuracy_floor() > 1e-2);
+        assert!(!Precision::F64.is_reduced());
+        assert!(Precision::F32.is_reduced());
+    }
+
+    #[test]
+    fn device_bytes_narrow_values_not_indices() {
+        let dense = SystemShape::dense(100);
+        assert_eq!(matrix_device_bytes(&dense, Precision::F64), 8 * 100 * 100);
+        assert_eq!(matrix_device_bytes(&dense, Precision::F32), 4 * 100 * 100);
+        assert_eq!(
+            matrix_device_bytes(&dense, Precision::F64),
+            dense.matrix_device_bytes()
+        );
+        let csr = SystemShape::csr(100, 500);
+        assert_eq!(matrix_device_bytes(&csr, Precision::F64), 12 * 500 + 4 * 101);
+        // f32 CSR: values halve, the 4-byte index arrays do not
+        assert_eq!(matrix_device_bytes(&csr, Precision::F32), 8 * 500 + 4 * 101);
+        assert_eq!(
+            matrix_device_bytes(&csr, Precision::Tf32),
+            matrix_device_bytes(&csr, Precision::F32)
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! The rounding model: narrow f64 values to a storage precision once, at
+//! residency time.
+//!
+//! The simulated device computes in f64 (like the virtual-device
+//! executor), so reduced-precision *storage* is modeled by rounding every
+//! stored value to the target format and computing on the rounded values
+//! — exactly the perturbation a real f32/tf32 upload would bake in.
+//! Dense slabs and CSR value arrays narrow; CSR index arrays are
+//! untouched ([`crate::precision::matrix_device_bytes`] prices them at
+//! their unchanged i32 width).
+
+use crate::linalg::SystemMatrix;
+
+use super::Precision;
+
+/// Round one value to the storage precision (round-to-nearest-even, the
+/// hardware conversion).
+pub fn round_to(x: f64, precision: Precision) -> f64 {
+    match precision {
+        Precision::F64 => x,
+        Precision::F32 => x as f32 as f64,
+        Precision::Tf32 => round_tf32(x as f32) as f64,
+    }
+}
+
+/// Round an f32 to the 10-bit tf32 mantissa (round-to-nearest, ties away
+/// via the carry — the standard bit trick NVIDIA's conversion uses).
+fn round_tf32(x: f32) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let rounded = bits.wrapping_add(0x0000_0FFF + ((bits >> 13) & 1)) & 0xFFFF_E000;
+    f32::from_bits(rounded)
+}
+
+/// Narrow every element of a vector.
+pub fn narrow_vector(v: &[f64], precision: Precision) -> Vec<f64> {
+    v.iter().map(|&x| round_to(x, precision)).collect()
+}
+
+/// Narrow a system matrix's stored values in place (consuming), keeping
+/// format and sparsity pattern: the reduced-precision residency view.
+pub fn narrow_system(a: SystemMatrix, precision: Precision) -> SystemMatrix {
+    if !precision.is_reduced() {
+        return a;
+    }
+    match a {
+        SystemMatrix::Dense(mut d) => {
+            for x in d.data_mut() {
+                *x = round_to(*x, precision);
+            }
+            SystemMatrix::Dense(d)
+        }
+        SystemMatrix::Csr(mut c) => {
+            for x in c.values_mut() {
+                *x = round_to(*x, precision);
+            }
+            SystemMatrix::Csr(c)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{generators, LinearOperator};
+
+    #[test]
+    fn f64_rounding_is_identity() {
+        for x in [0.0, 1.0, -3.25, 1.0e300, f64::MIN_POSITIVE] {
+            assert_eq!(round_to(x, Precision::F64), x);
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded_by_unit_roundoff() {
+        let mut v = 0.37;
+        for p in [Precision::F32, Precision::Tf32] {
+            let u = p.unit_roundoff();
+            for k in 0..200 {
+                let x = v * 10f64.powi((k % 13) - 6);
+                let r = round_to(x, p);
+                // tf32 narrows through f32 first, so allow the tiny
+                // double-rounding term on top of u|x|
+                assert!(
+                    (r - x).abs() <= u * x.abs() * (1.0 + 1e-3),
+                    "{p}: {x} -> {r} off by more than u"
+                );
+                v = (v * 1.618_034).fract() + 0.1;
+            }
+        }
+    }
+
+    #[test]
+    fn tf32_is_coarser_than_f32_but_exact_on_small_integers() {
+        let x = std::f64::consts::PI;
+        let e32 = (round_to(x, Precision::F32) - x).abs();
+        let etf = (round_to(x, Precision::Tf32) - x).abs();
+        assert!(etf > e32, "tf32 must round harder: {etf} vs {e32}");
+        // 10 mantissa bits hold every integer up to 2^11 exactly
+        for i in 0..=2048 {
+            let x = i as f64;
+            assert_eq!(round_to(x, Precision::Tf32), x, "integer {i}");
+        }
+        assert!(round_to(f64::NAN, Precision::Tf32).is_nan());
+    }
+
+    #[test]
+    fn narrowing_preserves_format_shape_and_pattern() {
+        let csr = generators::laplacian_1d(24);
+        let nnz = csr.nnz();
+        let dense = csr.to_dense();
+        let nc = narrow_system(SystemMatrix::Csr(csr), Precision::F32);
+        let nd = narrow_system(SystemMatrix::Dense(dense), Precision::F32);
+        assert_eq!(nc.shape().format, crate::linalg::MatrixFormat::Csr);
+        assert_eq!(nc.nnz(), nnz, "sparsity pattern untouched");
+        assert_eq!(nd.shape().format, crate::linalg::MatrixFormat::Dense);
+        // stencil entries (+-1, 2) are exact in every precision
+        let x = generators::random_vector(24, 3);
+        let yc = nc.apply(&narrow_vector(&x, Precision::F64));
+        let yd = nd.apply(&x);
+        for (a, b) in yc.iter().zip(&yd) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn narrowed_matvec_stays_within_roundoff_bound() {
+        // |A_p x - A x|_i <= u * (|A| |x|)_i elementwise: the property the
+        // planner's accuracy floor is derived from
+        let (a, _, _) = generators::table1_system(64, 11);
+        let x = generators::random_vector(64, 7);
+        let sys = SystemMatrix::Dense(a);
+        let y64 = sys.apply(&x);
+        for p in [Precision::F32, Precision::Tf32] {
+            let yp = narrow_system(sys.clone(), p).apply(&x);
+            let u = p.unit_roundoff();
+            for i in 0..64 {
+                let row_abs: f64 = match &sys {
+                    SystemMatrix::Dense(d) => {
+                        (0..64).map(|j| (d.get(i, j) * x[j]).abs()).sum()
+                    }
+                    _ => unreachable!(),
+                };
+                let err = (yp[i] - y64[i]).abs();
+                assert!(
+                    err <= u * row_abs * (1.0 + 1e-3) + 1e-300,
+                    "{p} row {i}: err {err} vs bound {}",
+                    u * row_abs
+                );
+            }
+        }
+    }
+}

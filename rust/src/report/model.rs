@@ -5,5 +5,6 @@
 //! actual [`crate::device::DeviceSim`] clocks at small N.
 
 pub use crate::device::costs::{
-    charge_cycle, charge_matvec, charge_setup, charge_solve, predict_seconds, predict_speedup,
+    charge_cycle, charge_cycle_p, charge_matvec, charge_matvec_p, charge_setup, charge_setup_p,
+    charge_solve, charge_solve_p, predict_seconds, predict_seconds_p, predict_speedup,
 };

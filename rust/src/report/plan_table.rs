@@ -5,28 +5,23 @@
 use crate::fleet::{costs as fleet_costs, Placement};
 use crate::gmres::GmresConfig;
 use crate::linalg::SystemShape;
-use crate::planner::Planner;
+use crate::planner::{Plan, Planner};
 use crate::util::bench::Table;
 
 /// Per-device utilization column for a candidate: `100%` for host/single
 /// placements, `840m 37% + v100 99%` style for shards (busy fraction of
-/// the cycle critical path).
-fn utilization_cell(
-    planner: &Planner,
-    placement: Placement,
-    shape: &SystemShape,
-    policy: crate::backend::Policy,
-    m: usize,
-) -> String {
-    match placement {
+/// the cycle critical path, priced at the candidate's own precision).
+fn utilization_cell(planner: &Planner, shape: &SystemShape, plan: &Plan) -> String {
+    match plan.placement {
         Placement::Sharded(set) => {
-            let costs = fleet_costs::shard_costs(
+            let costs = fleet_costs::shard_costs_p(
                 planner.fleet(),
                 set,
-                policy,
+                plan.policy,
                 shape,
-                m,
+                plan.m,
                 planner.config().mem_fraction,
+                plan.precision,
             );
             costs
                 .cycle_utilization()
@@ -51,6 +46,7 @@ pub fn render_candidates(planner: &Planner, shape: &SystemShape, config: &GmresC
         "placement",
         "m",
         "precond",
+        "prec",
         "cycles",
         "predicted [s]",
         "coeff",
@@ -70,10 +66,19 @@ pub fn render_candidates(planner: &Planner, shape: &SystemShape, config: &GmresC
             planner.fleet().placement_label(c.plan.placement),
             c.plan.m.to_string(),
             c.plan.precond.name().to_string(),
+            c.plan.precision.name().to_string(),
             c.plan.predicted_cycles.to_string(),
             format!("{:.6}", c.plan.predicted_seconds),
-            format!("{:.3}", planner.coeff_at(c.plan.policy, shape.format, c.plan.placement)),
-            utilization_cell(planner, c.plan.placement, shape, c.plan.policy, c.plan.m),
+            format!(
+                "{:.3}",
+                planner.coeff_cell(
+                    c.plan.policy,
+                    shape.format,
+                    c.plan.placement,
+                    c.plan.precision
+                )
+            ),
+            utilization_cell(planner, shape, &c.plan),
             if c.admitted { "yes" } else { "NO" }.to_string(),
             if pick { "<=" } else { "" }.to_string(),
         ]);
@@ -96,12 +101,13 @@ pub fn render_calibration(planner: &Planner) -> String {
     if entries.is_empty() {
         return "calibration: no observations yet (coefficients at 1.0)".into();
     }
-    let mut t = Table::new(&["policy", "format", "placement", "coeff", "observations"]);
+    let mut t = Table::new(&["policy", "format", "placement", "prec", "coeff", "observations"]);
     for e in &entries {
         t.row(&[
             e.policy.name().to_string(),
             e.format.name().to_string(),
             planner.fleet().placement_label(e.placement),
+            e.precision.name().to_string(),
             format!("{:.4}", e.coeff),
             e.observations.to_string(),
         ]);
@@ -156,6 +162,17 @@ mod tests {
         assert!(out.contains("840m+v100"), "sharded placement column:\n{out}");
         assert!(out.contains('%'), "utilization column:\n{out}");
         assert!(out.contains("v100"), "single placements named:\n{out}");
+    }
+
+    #[test]
+    fn precision_column_lists_the_axis() {
+        let p = Planner::default();
+        // a loose tolerance opens the f32 axis; the table must show it
+        let config = GmresConfig { tol: 1e-4, ..Default::default() };
+        let out = render_candidates(&p, &SystemShape::dense(4000), &config);
+        assert!(out.contains("prec"), "precision column header:\n{out}");
+        assert!(out.contains("f32"), "f32 candidates listed:\n{out}");
+        assert!(out.contains("tf32"), "tf32 candidates listed:\n{out}");
     }
 
     #[test]

@@ -166,7 +166,7 @@ fn jacobi_cuts_cycles_on_varcoef_convection_diffusion() {
     let x_true = generators::random_vector(n, 7);
     let b = a.apply(&x_true);
     let run = |precond: PrecondKind| {
-        let config = GmresConfig { m: 10, tol: 1e-8, max_restarts: 500, precond };
+        let config = GmresConfig { m: 10, tol: 1e-8, max_restarts: 500, precond, ..Default::default() };
         let mut engine = build_engine_preconditioned(
             Policy::SerialNative,
             SystemMatrix::Csr(a.clone()),
@@ -205,6 +205,7 @@ fn service_executes_requested_preconditioner() {
                 tol: 1e-8,
                 max_restarts: 300,
                 precond: PrecondKind::Jacobi,
+                ..Default::default()
             },
             policy: Some(Policy::SerialNative),
         })

@@ -1,0 +1,214 @@
+//! End-to-end tests of the mixed-precision subsystem: unit-roundoff
+//! property bounds for narrowed operators, accuracy-floor admission in
+//! auto-planning, and f64-verified residuals on every reduced-precision
+//! solve (the acceptance criteria of the precision axis).
+
+use gmres_rs::backend::Policy;
+use gmres_rs::coordinator::{MatrixSpec, ServiceConfig, SolveRequest, SolveService};
+use gmres_rs::gmres::GmresConfig;
+use gmres_rs::linalg::{generators, LinearOperator, SystemMatrix, SystemShape};
+use gmres_rs::planner::Planner;
+use gmres_rs::precision::{narrow_system, Precision, PrecisionPolicy};
+use gmres_rs::prop_assert;
+use gmres_rs::util::check::{check, Config};
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0x51f3_7a2e }
+}
+
+/// |A_p x - A x|_i <= u * (|A| |x|)_i for every row of every random
+/// system: the elementwise perturbation bound the planner's attainable-
+/// accuracy floor is derived from — for dense GEMV and CSR SpMV partials.
+#[test]
+fn prop_narrowed_matvec_partials_within_unit_roundoff_bound() {
+    check(cfg(32), "narrowed-matvec-bound", |rng| {
+        let n = 8 + rng.below(72);
+        let dense = generators::dense_shifted_random(
+            n,
+            2.0 + rng.uniform(0.0, 2.0) * (n as f64).sqrt(),
+            rng.next_u64(),
+        );
+        let csr = generators::convection_diffusion_1d_varcoef(n, 4.0, rng.uniform(1.0, 50.0));
+        let x = generators::random_vector(n, rng.next_u64());
+        for sys in [SystemMatrix::Dense(dense.clone()), SystemMatrix::Csr(csr.clone())] {
+            let y64 = sys.apply(&x);
+            for p in [Precision::F32, Precision::Tf32] {
+                let yp = narrow_system(sys.clone(), p).apply(&x);
+                let u = p.unit_roundoff();
+                for i in 0..n {
+                    // row of |A| |x|
+                    let row_abs: f64 = match &sys {
+                        SystemMatrix::Dense(d) => {
+                            (0..n).map(|j| (d.get(i, j) * x[j]).abs()).sum()
+                        }
+                        SystemMatrix::Csr(c) => (c.row_ptr()[i]..c.row_ptr()[i + 1])
+                            .map(|k| (c.values()[k] * x[c.col_idx()[k]]).abs())
+                            .sum(),
+                    };
+                    let err = (yp[i] - y64[i]).abs();
+                    // (1 + 1e-3) slack covers tf32's double rounding
+                    prop_assert!(
+                        err <= u * row_abs * (1.0 + 1e-3) + 1e-300,
+                        "{p} row {i}: err {err} vs bound {}",
+                        u * row_abs
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance criterion of the precision axis: a tight-tolerance
+/// request auto-plans f64 (the f32 floor refuses it), a loose-tolerance
+/// bandwidth-bound request auto-plans f32 — and only because the floor
+/// admits it.
+#[test]
+fn accuracy_floor_gates_auto_planned_precision() {
+    let planner = Planner::default();
+    let shape = SystemShape::dense(8000);
+    let tight = GmresConfig { tol: 1e-8, ..Default::default() };
+    let plan = planner.plan(&shape, &tight, None);
+    assert_eq!(plan.precision, Precision::F64, "tight tol must stay f64: {}", plan.summary());
+    let loose = GmresConfig { tol: 1e-4, ..Default::default() };
+    let plan = planner.plan(&shape, &loose, None);
+    assert_eq!(plan.precision, Precision::F32, "loose tol must go f32: {}", plan.summary());
+    assert!(plan.policy.needs_runtime());
+    assert!(
+        planner.convergence().admits_tolerance(loose.tol, Precision::F32)
+            && !planner.convergence().admits_tolerance(tight.tol, Precision::F32),
+        "the flip must be exactly the floor rule"
+    );
+    // every enumerated reduced candidate at the tight tolerance is flagged
+    for c in planner.enumerate(&shape, &tight) {
+        if c.plan.precision.is_reduced() {
+            assert!(!c.admitted, "floored candidate admitted: {}", c.plan.summary());
+        }
+    }
+}
+
+/// A loose-tolerance auto request through the full service stack lands on
+/// a reduced-precision device plan, converges, and its reported residual
+/// is the true f64 residual of the original system.
+#[test]
+fn service_auto_plans_f32_and_verifies_the_true_residual_in_f64() {
+    let n = 2000;
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    let out = svc
+        .submit(SolveRequest {
+            matrix: MatrixSpec::Table1 { n, seed: 7 },
+            config: GmresConfig { tol: 1e-4, ..Default::default() },
+            policy: None,
+        })
+        .unwrap();
+    assert_eq!(out.plan.precision, Precision::F32, "plan: {}", out.plan.summary());
+    assert!(out.plan.policy.needs_runtime(), "bandwidth-bound request must offload");
+    assert!(!out.downgraded);
+    assert!(out.report.converged, "cycles {} rel {}", out.report.cycles, out.report.rel_resnorm);
+    assert_eq!(out.report.precision, Precision::F32);
+    assert!(out.report.rel_resnorm <= 1e-4);
+    // recompute the residual in f64 from the original (unnarrowed) system:
+    // the report must carry exactly this
+    let (a, b) = MatrixSpec::Table1 { n, seed: 7 }.materialize();
+    let ax = a.apply(&out.report.x);
+    let res: f64 =
+        ax.iter().zip(&b).map(|(axi, bi)| (bi - axi) * (bi - axi)).sum::<f64>().sqrt();
+    let bnorm: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let true_rel = res / bnorm;
+    assert!(
+        (true_rel - out.report.rel_resnorm).abs() <= 1e-12 * (1.0 + true_rel),
+        "reported {} vs recomputed f64 {}",
+        out.report.rel_resnorm,
+        true_rel
+    );
+    // the observation landed in an f32 calibration cell
+    let cal = svc.router().planner().calibration();
+    assert!(
+        cal.iter().any(|e| e.precision == Precision::F32),
+        "f32 cell expected in {cal:?}"
+    );
+    svc.shutdown();
+}
+
+/// A pinned f32 request whose tolerance is below the f32 accuracy floor
+/// is visibly downgraded to the f64 fallback — and still meets the same
+/// tolerance the f64 path would.
+#[test]
+fn floored_f32_pin_downgrades_to_f64_and_meets_the_tolerance() {
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    let out = svc
+        .submit(SolveRequest {
+            matrix: MatrixSpec::Table1 { n: 128, seed: 3 },
+            config: GmresConfig {
+                m: 10,
+                tol: 1e-8,
+                max_restarts: 200,
+                precision: PrecisionPolicy::Fixed(Precision::F32),
+                ..Default::default()
+            },
+            policy: None,
+        })
+        .unwrap();
+    assert!(out.downgraded, "floored pin must downgrade visibly");
+    assert_eq!(out.plan.precision, Precision::F64);
+    assert_eq!(out.report.precision, Precision::F64);
+    assert!(out.report.converged);
+    assert!(out.report.rel_resnorm <= 1e-8);
+    svc.shutdown();
+}
+
+/// An explicitly pinned, floor-admissible f32 solve on a device policy
+/// flows through router, batcher (precision is a compatibility key),
+/// worker and mixed engine — and reports f64-verified convergence.
+#[test]
+fn pinned_f32_device_solve_executes_end_to_end() {
+    let n = 300;
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    let out = svc
+        .submit(SolveRequest {
+            matrix: MatrixSpec::Table1 { n, seed: 11 },
+            config: GmresConfig {
+                m: 10,
+                tol: 1e-4,
+                max_restarts: 100,
+                precision: PrecisionPolicy::Fixed(Precision::F32),
+                ..Default::default()
+            },
+            policy: Some(Policy::GmatrixLike),
+        })
+        .unwrap();
+    assert_eq!(out.policy, Policy::GmatrixLike);
+    assert!(!out.downgraded);
+    assert_eq!(out.plan.precision, Precision::F32);
+    assert_eq!(out.report.precision, Precision::F32);
+    assert!(out.report.converged);
+    assert!(out.report.rel_resnorm <= 1e-4);
+    assert!(out.report.sim_seconds > 0.0, "mixed engine books modeled time");
+    svc.shutdown();
+}
+
+/// tf32 exists on the axis but its floor keeps it out of every sane
+/// tolerance; it is only planned when explicitly pinned at a tolerance it
+/// can reach.
+#[test]
+fn tf32_is_floor_gated_but_usable_when_pinned_loose() {
+    let planner = Planner::default();
+    let shape = SystemShape::dense(1000);
+    // never auto-picked at 1e-4 (floor ~3e-2)
+    for c in planner.enumerate(&shape, &GmresConfig { tol: 1e-4, ..Default::default() }) {
+        assert!(
+            c.plan.precision != Precision::Tf32 || !c.admitted,
+            "tf32 admitted at 1e-4: {}",
+            c.plan.summary()
+        );
+    }
+    // pinned at a tolerance above its floor it is admitted on-device
+    let pinned = GmresConfig {
+        tol: 5e-2,
+        precision: PrecisionPolicy::Fixed(Precision::Tf32),
+        ..Default::default()
+    };
+    let plan = planner.plan(&shape, &pinned, Some(Policy::GmatrixLike));
+    assert_eq!(plan.precision, Precision::Tf32);
+    assert!(!plan.downgraded);
+}

@@ -436,6 +436,11 @@ fn prop_batcher_conserves_and_respects_keys() {
                 } else {
                     Placement::Sharded(DeviceSet::from_ids(&[0, 1]))
                 },
+                precision: if rng.next_f64() < 0.5 {
+                    gmres_rs::precision::Precision::F64
+                } else {
+                    gmres_rs::precision::Precision::F32
+                },
             };
             b.push(key, i as u64);
             pushed.push(i as u64);
