@@ -49,6 +49,20 @@ echo "==> mixed-precision smoke"
 ./target/release/gmres-rs serve --requests 4 --sizes 96,128 --m 8 --tol 1e-4 --precision f32
 ./target/release/gmres-rs serve --requests 4 --sizes 96,128 --m 8 --tol 1e-4 --precision auto
 
+echo "==> session / multi-RHS smoke"
+# a k-wide block solve over one residency; a priced batch column; and a
+# served burst of same-handle submissions that MUST fold at least once
+# (asserted via the fold metrics counters)
+./target/release/gmres-rs solve --n 256 --policy gmatrix --m 8 --rhs-count 3
+PLAN_OUT=$(./target/release/gmres-rs plan --n 2000 --rhs-count 4)
+echo "$PLAN_OUT" | grep -q "batch\[k=4\]" \
+    || { echo "plan smoke: batch column missing"; exit 1; }
+SERVE_OUT=$(./target/release/gmres-rs serve --requests 8 --sizes 128 --m 8 \
+    --policy gputools --rhs-count 4)
+echo "$SERVE_OUT" | tail -5
+echo "$SERVE_OUT" | grep -Eq "requests_folded=[1-9]" \
+    || { echo "session smoke: no fold occurred"; exit 1; }
+
 echo "==> fleet smoke"
 # sharded placements enumerated across a two-card fleet; a served fleet
 # with calibration persistence round-trips through a warm restart

@@ -227,6 +227,25 @@ pub fn build_engine_preconditioned(
     build_engine(policy, a, b, config.m, runtime, trace)
 }
 
+/// Build a single-residency multi-RHS [`crate::gmres::BlockEngine`] for a
+/// *folded* batch: the config's preconditioner is applied once to the
+/// matrix (each right-hand side scaled by the same `D⁻¹`), a pinned
+/// reduced precision narrows the shared residency and keeps the
+/// full-precision system for f64-verified residuals.  Like the fleet's
+/// sharded executor, the block engine is host-orchestrated — it needs no
+/// device runtime; its modeled costs book the shared k-wide batch tables
+/// ([`crate::device::costs::charge_cycle_batch_p`]).
+pub fn build_block_engine(
+    policy: Policy,
+    a: SystemMatrix,
+    bs: Vec<Vec<f64>>,
+    config: &crate::gmres::GmresConfig,
+) -> Result<crate::gmres::BlockEngine> {
+    let (a, bs) = config.precond.apply_to_block(a, bs);
+    let precision = config.precision.fixed_or_default();
+    crate::gmres::BlockEngine::resident(policy, a, bs, config.m, precision)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

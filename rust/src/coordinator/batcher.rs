@@ -11,6 +11,7 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::backend::Policy;
+use crate::coordinator::job::MatrixId;
 use crate::fleet::Placement;
 use crate::gmres::PrecondKind;
 use crate::linalg::MatrixFormat;
@@ -27,9 +28,18 @@ use crate::precision::Precision;
 /// jobs of the same shape.  Precision likewise: an f32-narrowed residency
 /// is a different byte pattern (and half the footprint) of the same
 /// matrix, so it can never serve an f64 job or vice versa.
+///
+/// And finally the *content-addressed matrix id*: same-id jobs share one
+/// residency EXACTLY — which upgrades the batch from "consecutive solves
+/// without an executable swap" to a *foldable* unit the device thread can
+/// run as a single multi-RHS block solve (one upload, k-wide per-cycle
+/// GEMMs) when the planner prices the fold cheaper.  The key detects
+/// "same matrix"; it never assumes it from shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub policy: Policy,
+    /// Content-addressed identity of the resident matrix.
+    pub matrix_id: MatrixId,
     pub n: usize,
     pub m: usize,
     pub format: MatrixFormat,
@@ -131,6 +141,7 @@ mod tests {
     fn key(n: usize) -> BatchKey {
         BatchKey {
             policy: Policy::GmatrixLike,
+            matrix_id: MatrixId(n as u64),
             n,
             m: 30,
             format: MatrixFormat::Dense,
@@ -138,6 +149,22 @@ mod tests {
             placement: Placement::Single(0),
             precision: Precision::F64,
         }
+    }
+
+    #[test]
+    fn matrix_id_splits_batches() {
+        // two same-shape jobs over DIFFERENT matrices must not share a
+        // batch (a fold would solve the wrong system)
+        let mut b = Batcher::new(BatcherConfig { max_batch: 10, max_age: Duration::ZERO });
+        b.push(key(100), 1);
+        b.push(BatchKey { matrix_id: MatrixId(999), ..key(100) }, 2);
+        b.push(key(100), 3);
+        let (k, batch) = b.next_batch().unwrap();
+        assert_eq!(k.matrix_id, MatrixId(100));
+        assert_eq!(batch.iter().map(|p| p.item).collect::<Vec<_>>(), vec![1, 3]);
+        let (k2, batch2) = b.next_batch().unwrap();
+        assert_eq!(k2.matrix_id, MatrixId(999));
+        assert_eq!(batch2.len(), 1);
     }
 
     #[test]

@@ -14,6 +14,46 @@ impl std::fmt::Display for JobId {
     }
 }
 
+/// Content-addressed matrix identity: two [`MatrixSpec`]s hash to the same
+/// `MatrixId` exactly when they materialize the same matrix, so the
+/// batcher can *detect* "same matrix" (and fold those requests into one
+/// multi-RHS solve) instead of guessing it from shape — the thing
+/// [`crate::coordinator::batcher::BatchKey`] deliberately refused to do
+/// before sessions existed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MatrixId(pub u64);
+
+impl std::fmt::Display for MatrixId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "mat-{:016x}", self.0)
+    }
+}
+
+/// FNV-1a over a canonical byte encoding (stable across runs/processes —
+/// unlike `DefaultHasher`, whose seed is process-random).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+}
+
 /// How the worker materializes the system matrix — requests stay small and
 /// `Send` even for N=10000 workloads, and they carry the storage *format*
 /// so the router, batcher and cost model reason about what will actually
@@ -34,6 +74,46 @@ pub enum MatrixSpec {
 }
 
 impl MatrixSpec {
+    /// Content-addressed identity of the matrix this spec materializes
+    /// (seeds, coefficients and explicit payloads all participate; the
+    /// spec's *b* ensemble does not define identity — right-hand sides are
+    /// per-request).  Stable across processes, so persisted workloads keep
+    /// their fold affinity.
+    pub fn content_id(&self) -> MatrixId {
+        let mut h = Fnv::new();
+        match self {
+            MatrixSpec::Table1 { n, seed } => {
+                h.byte(1);
+                h.u64(*n as u64);
+                h.u64(*seed);
+            }
+            MatrixSpec::ConvectionDiffusion { nx, ny, cx, cy, format } => {
+                h.byte(2);
+                h.u64(*nx as u64);
+                h.u64(*ny as u64);
+                h.f64(*cx);
+                h.f64(*cy);
+                h.byte(match format {
+                    MatrixFormat::Dense => 0,
+                    MatrixFormat::Csr => 1,
+                });
+            }
+            MatrixSpec::ConvDiff1d { n, seed } => {
+                h.byte(3);
+                h.u64(*n as u64);
+                h.u64(*seed);
+            }
+            MatrixSpec::Dense { n, data } => {
+                h.byte(4);
+                h.u64(*n as u64);
+                for v in data {
+                    h.f64(*v);
+                }
+            }
+        }
+        MatrixId(h.0)
+    }
+
     pub fn order(&self) -> usize {
         match self {
             MatrixSpec::Table1 { n, .. } => *n,
@@ -98,6 +178,39 @@ impl MatrixSpec {
                 let a = DenseMatrix::from_vec(*n, *n, data.clone());
                 let b = generators::random_vector(*n, 23);
                 (SystemMatrix::Dense(a), b)
+            }
+        }
+    }
+}
+
+/// Which right-hand side a job solves against its (session-shared)
+/// matrix.  Legacy one-shot requests use `Default` — the `b` the spec's
+/// own ensemble materializes, exactly what [`MatrixSpec::materialize`]
+/// returned before sessions existed — while session submissions may carry
+/// any explicit vector, which is what lets k same-handle requests with k
+/// *different* right-hand sides fold into one block solve.
+#[derive(Clone, Debug, Default)]
+pub enum RhsSpec {
+    /// The spec ensemble's own right-hand side.
+    #[default]
+    Default,
+    /// An explicit caller-provided right-hand side.
+    Explicit(Vec<f64>),
+}
+
+impl RhsSpec {
+    /// Resolve against the ensemble default the spec materialized.
+    pub fn resolve(&self, default_b: &[f64]) -> crate::Result<Vec<f64>> {
+        match self {
+            RhsSpec::Default => Ok(default_b.to_vec()),
+            RhsSpec::Explicit(v) => {
+                anyhow::ensure!(
+                    v.len() == default_b.len(),
+                    "explicit rhs length {} != system order {}",
+                    v.len(),
+                    default_b.len()
+                );
+                Ok(v.clone())
             }
         }
     }
@@ -208,6 +321,51 @@ mod tests {
             SystemMatrix::Dense(d) => assert_eq!(d.data(), &data[..]),
             other => panic!("expected dense, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn content_ids_distinguish_matrices_not_instances() {
+        let a = MatrixSpec::Table1 { n: 64, seed: 3 };
+        let b = MatrixSpec::Table1 { n: 64, seed: 3 };
+        assert_eq!(a.content_id(), b.content_id(), "same content, same id");
+        assert_ne!(
+            a.content_id(),
+            MatrixSpec::Table1 { n: 64, seed: 4 }.content_id(),
+            "seed changes the matrix"
+        );
+        assert_ne!(
+            a.content_id(),
+            MatrixSpec::ConvDiff1d { n: 64, seed: 3 }.content_id(),
+            "variant participates"
+        );
+        let d1 = MatrixSpec::Dense { n: 2, data: vec![1.0, 0.0, 0.0, 1.0] };
+        let d2 = MatrixSpec::Dense { n: 2, data: vec![1.0, 0.0, 0.0, 2.0] };
+        assert_ne!(d1.content_id(), d2.content_id(), "payload participates");
+        let c1 = MatrixSpec::ConvectionDiffusion {
+            nx: 4,
+            ny: 4,
+            cx: 1.0,
+            cy: 2.0,
+            format: MatrixFormat::Csr,
+        };
+        let c2 = MatrixSpec::ConvectionDiffusion {
+            nx: 4,
+            ny: 4,
+            cx: 1.0,
+            cy: 2.0,
+            format: MatrixFormat::Dense,
+        };
+        assert_ne!(c1.content_id(), c2.content_id(), "format is part of residency identity");
+    }
+
+    #[test]
+    fn rhs_spec_resolves_defaults_and_explicit() {
+        let spec = MatrixSpec::Table1 { n: 16, seed: 0 };
+        let (_, b) = spec.materialize();
+        assert_eq!(RhsSpec::Default.resolve(&b).unwrap(), b);
+        let custom = vec![1.0; 16];
+        assert_eq!(RhsSpec::Explicit(custom.clone()).resolve(&b).unwrap(), custom);
+        assert!(RhsSpec::Explicit(vec![1.0; 5]).resolve(&b).is_err(), "length checked");
     }
 
     #[test]

@@ -27,6 +27,16 @@ pub struct Metrics {
     failed: AtomicU64,
     downgraded: AtomicU64,
     rejected: AtomicU64,
+    /// Folded multi-RHS executions (each covering >= 2 requests).
+    folds: AtomicU64,
+    /// Requests that ran inside a fold (k per fold).
+    requests_folded: AtomicU64,
+    /// Matrix bytes that never crossed the bus thanks to folds — the
+    /// amortization win made observable.  Residency policies save `(k-1)
+    /// x matrix_device_bytes` (the one-time uploads); the
+    /// transfer-everything policy saves a matrix STREAM per extra batch
+    /// member on every joint matvec.
+    uploads_saved_bytes: AtomicU64,
     /// completed-solve latencies, microseconds (mutex: cold path only)
     latencies_us: Mutex<Vec<u64>>,
     queue_us: Mutex<Vec<u64>>,
@@ -93,6 +103,26 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one folded multi-RHS execution covering `k` requests that
+    /// saved `saved_bytes` of residency uploads.
+    pub fn on_fold(&self, k: u64, saved_bytes: u64) {
+        self.folds.fetch_add(1, Ordering::Relaxed);
+        self.requests_folded.fetch_add(k, Ordering::Relaxed);
+        self.uploads_saved_bytes.fetch_add(saved_bytes, Ordering::Relaxed);
+    }
+
+    pub fn folds(&self) -> u64 {
+        self.folds.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_folded(&self) -> u64 {
+        self.requests_folded.load(Ordering::Relaxed)
+    }
+
+    pub fn uploads_saved_bytes(&self) -> u64 {
+        self.uploads_saved_bytes.load(Ordering::Relaxed)
+    }
+
     pub fn submitted(&self) -> u64 {
         self.submitted.load(Ordering::Relaxed)
     }
@@ -145,12 +175,16 @@ impl Metrics {
             .map(|l| format!("p50={:.3}s p95={:.3}s max={:.3}s", l.p50, l.p95, l.max))
             .unwrap_or_else(|| "n/a".into());
         format!(
-            "submitted={} completed={} failed={} downgraded={} rejected={} latency[{}]",
+            "submitted={} completed={} failed={} downgraded={} rejected={} \
+             folds[folds={} requests_folded={} uploads_saved={}B] latency[{}]",
             self.submitted(),
             self.completed(),
             self.failed(),
             self.downgraded(),
             self.rejected(),
+            self.folds(),
+            self.requests_folded(),
+            self.uploads_saved_bytes(),
             lat
         )
     }
@@ -194,6 +228,20 @@ mod tests {
         assert_eq!(m.failed(), 1);
         assert_eq!(m.downgraded(), 1);
         assert_eq!(m.rejected(), 1);
+    }
+
+    #[test]
+    fn fold_counters_accumulate_and_render() {
+        let m = Metrics::new();
+        assert_eq!((m.folds(), m.requests_folded(), m.uploads_saved_bytes()), (0, 0, 0));
+        m.on_fold(4, 3000);
+        m.on_fold(2, 500);
+        assert_eq!(m.folds(), 2);
+        assert_eq!(m.requests_folded(), 6);
+        assert_eq!(m.uploads_saved_bytes(), 3500);
+        let rendered = m.render();
+        assert!(rendered.contains("requests_folded=6"), "{rendered}");
+        assert!(rendered.contains("uploads_saved=3500B"), "{rendered}");
     }
 
     #[test]

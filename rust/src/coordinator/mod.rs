@@ -5,7 +5,14 @@
 //! linear-solver service in the style of an inference router:
 //!
 //! * **[`job`]** — solve requests (matrix spec + GMRES config + policy
-//!   preference) and responses.
+//!   preference), content-addressed matrix identity ([`job::MatrixId`]),
+//!   per-request right-hand sides ([`job::RhsSpec`]) and responses.
+//! * **[`session`]** — the client-facing handle API: `register(spec)`
+//!   returns a refcounted, content-addressed [`session::MatrixHandle`];
+//!   `handle.solve_rhs(b).tol(..).submit()` builds typed requests whose
+//!   matrix identity rides to the batcher, where same-handle requests
+//!   *fold* into one multi-RHS block solve.  The legacy one-shot
+//!   [`service::SolveService::submit`] registers-and-releases internally.
 //! * **[`router`]** — picks the backend for each request: honours explicit
 //!   policy requests, performs *device-memory admission control* (a job
 //!   whose working set exceeds the card falls back to the host — the
@@ -13,10 +20,11 @@
 //!   delegates to the shared [`crate::planner::Planner`], which enumerates
 //!   and prices candidate plans (policy × restart × preconditioner) and
 //!   learns cost coefficients online from worker feedback.
-//! * **[`batcher`]** — groups queued device jobs by `(policy, n, m,
-//!   format, precond, placement)` so one compiled executable and one
-//!   resident matrix ensemble (dense or CSR, whole or sharded — never
-//!   mixed in a batch) serve a whole batch.
+//! * **[`batcher`]** — groups queued device jobs by `(policy, matrix_id,
+//!   n, m, format, precond, placement, precision)` so one compiled
+//!   executable and one resident matrix ensemble (dense or CSR, whole or
+//!   sharded — never mixed in a batch) serve a whole batch; same-id
+//!   batches are *foldable* into a single multi-RHS block solve.
 //! * **[`worker`]** — a dedicated *device thread* owning the (deliberately
 //!   `!Send`, single-stream) device runtime plus a CPU pool for serial
 //!   jobs.
@@ -28,9 +36,11 @@ pub mod job;
 pub mod metrics;
 pub mod router;
 pub mod service;
+pub mod session;
 pub mod worker;
 
-pub use job::{JobId, MatrixSpec, SolveOutcome, SolveRequest};
+pub use job::{JobId, MatrixId, MatrixSpec, RhsSpec, SolveOutcome, SolveRequest};
 pub use metrics::{DeviceStat, Metrics};
 pub use router::{Route, Router, RouterConfig};
 pub use service::{ServiceConfig, SolveService};
+pub use session::{MatrixHandle, SolveRequestBuilder};

@@ -12,6 +12,14 @@
 //! gets back a full [`Plan`] (policy + restart + preconditioner + predicted
 //! seconds), which rides with the work item so the worker can execute it
 //! and report the measured seconds back for online calibration.
+//!
+//! Routing is per-request and fold-agnostic on purpose: a session
+//! submission routes exactly like a one-shot (the plan prices ONE solve).
+//! The *fold* decision — collapsing k same-matrix routed jobs into one
+//! multi-RHS block solve — happens downstream in the device thread, which
+//! asks the same shared planner ([`Planner::evaluate_fold`]) once it can
+//! see the whole same-key batch; pricing both decisions from one model is
+//! what keeps them consistent.
 
 use std::sync::Arc;
 

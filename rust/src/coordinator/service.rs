@@ -6,6 +6,7 @@
 //! one): `submit` blocks the calling thread; concurrency comes from calling
 //! it from many threads, as the end-to-end driver does.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -13,11 +14,14 @@ use std::time::Instant;
 
 use anyhow::anyhow;
 
+use crate::backend::Policy;
 use crate::coordinator::batcher::BatcherConfig;
-use crate::coordinator::job::{JobId, SolveOutcome, SolveRequest};
+use crate::coordinator::job::{JobId, MatrixId, MatrixSpec, RhsSpec, SolveOutcome, SolveRequest};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{Router, RouterConfig};
+use crate::coordinator::session::MatrixHandle;
 use crate::coordinator::worker::{spawn_cpu_pool, spawn_device_thread, WorkItem};
+use crate::gmres::GmresConfig;
 use crate::Result;
 
 /// Service configuration.
@@ -61,6 +65,8 @@ pub struct SolveService {
     queue_capacity: u64,
     calib_file: Option<PathBuf>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Live matrix sessions: content-addressed id -> handle refcount.
+    sessions: Mutex<HashMap<MatrixId, u64>>,
 }
 
 impl SolveService {
@@ -102,7 +108,37 @@ impl SolveService {
             queue_capacity: config.queue_capacity as u64,
             calib_file: config.calib_file,
             handles: Mutex::new(handles),
+            sessions: Mutex::new(HashMap::new()),
         })
+    }
+
+    /// Register a matrix session: a content-addressed, refcounted
+    /// [`MatrixHandle`].  Registering the same spec twice returns handles
+    /// sharing one [`MatrixId`] — submissions through either can fold
+    /// into the same multi-RHS block solve.
+    pub fn register(self: &Arc<Self>, spec: MatrixSpec) -> MatrixHandle {
+        let id = spec.content_id();
+        self.session_ref(id);
+        MatrixHandle::new(self.clone(), id, spec)
+    }
+
+    /// Live matrix sessions (distinct content ids with >= 1 handle).
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    pub(crate) fn session_ref(&self, id: MatrixId) {
+        *self.sessions.lock().unwrap().entry(id).or_insert(0) += 1;
+    }
+
+    pub(crate) fn session_unref(&self, id: MatrixId) {
+        let mut map = self.sessions.lock().unwrap();
+        if let Some(refs) = map.get_mut(&id) {
+            *refs -= 1;
+            if *refs == 0 {
+                map.remove(&id);
+            }
+        }
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -123,18 +159,45 @@ impl SolveService {
     /// Backpressure: fails fast with an error when the queue is full.
     pub fn submit(&self, request: SolveRequest) -> Result<SolveOutcome> {
         let rx = self.submit_nowait(request)?;
-        let out = rx.recv().map_err(|_| anyhow!("worker dropped reply"))?;
+        let out = rx.recv();
+        // release in-flight accounting BEFORE propagating a dropped-worker
+        // error, or the slot leaks and backpressure rejects forever
         self.inflight.fetch_sub(1, Ordering::SeqCst);
-        out
+        out.map_err(|_| anyhow!("worker dropped reply"))?
     }
 
     /// Submit without waiting; returns the reply channel.  The caller must
     /// eventually `recv()`; in-flight accounting is released on completion
     /// via [`SolveService::finish`] or by using [`SolveService::submit`].
+    ///
+    /// Legacy one-shot path: internally registers-and-releases a session
+    /// around the submission, so the job still carries a content-addressed
+    /// matrix id (and folds with any same-matrix traffic) without the
+    /// caller managing a handle.
     pub fn submit_nowait(
         &self,
         request: SolveRequest,
     ) -> Result<mpsc::Receiver<Result<SolveOutcome>>> {
+        let SolveRequest { matrix, config, policy } = request;
+        let id = matrix.content_id();
+        self.session_ref(id);
+        let result = self.submit_session_nowait(id, matrix, RhsSpec::Default, config, policy);
+        self.session_unref(id);
+        result
+    }
+
+    /// The canonical submission path: every job — legacy one-shot or
+    /// session builder — flows through here with an explicit matrix
+    /// identity and right-hand side.
+    pub(crate) fn submit_session_nowait(
+        &self,
+        matrix_id: MatrixId,
+        matrix: MatrixSpec,
+        rhs: RhsSpec,
+        config: GmresConfig,
+        policy: Option<Policy>,
+    ) -> Result<mpsc::Receiver<Result<SolveOutcome>>> {
+        let request = SolveRequest { matrix, config, policy };
         // admission by queue depth (backpressure)
         let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
         if prev >= self.queue_capacity {
@@ -152,6 +215,8 @@ impl SolveService {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         let item = WorkItem {
             id,
+            matrix_id,
+            rhs,
             request,
             plan: route.plan,
             downgraded: route.downgraded,

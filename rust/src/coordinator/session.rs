@@ -1,0 +1,293 @@
+//! Matrix sessions: the client-facing handle API of the coordinator.
+//!
+//! The paper's central cost asymmetry — host↔GPU transfer dwarfing
+//! per-iteration arithmetic — rewards amortizing ONE matrix residency
+//! across MANY solves.  Before sessions, that was unreachable from the
+//! API: every [`crate::coordinator::SolveRequest`] carried its own matrix
+//! payload, so the batcher could only guess "same matrix" from shape.  A
+//! session makes matrix identity first-class:
+//!
+//! ```text
+//! let svc = SolveService::start(config);
+//! let handle = svc.register(MatrixSpec::Table1 { n: 4000, seed: 7 });
+//! let out = handle.solve_rhs(b).tol(1e-8).submit()?;      // blocking
+//! let rx  = handle.solve().m(20).submit_nowait()?;        // async
+//! handle.release();                                        // or just drop
+//! ```
+//!
+//! [`MatrixHandle`]s are *content-addressed* ([`MatrixSpec::content_id`])
+//! and refcounted: registering the same spec twice yields handles that
+//! share one [`MatrixId`], every submission through a handle stamps that
+//! id into the batch key, and the device thread *folds* same-id pending
+//! requests into a single multi-RHS block solve when the planner prices
+//! the fold cheaper than independent execution.  The legacy one-shot
+//! [`SolveService::submit`] path internally registers-and-releases, so
+//! pre-session callers keep working — and even inherit fold affinity when
+//! they happen to resubmit the same spec.
+
+use std::sync::{mpsc, Arc};
+
+use crate::backend::Policy;
+use crate::coordinator::job::{MatrixId, MatrixSpec, RhsSpec, SolveOutcome};
+use crate::coordinator::service::SolveService;
+use crate::gmres::{GmresConfig, PrecondKind};
+use crate::precision::PrecisionPolicy;
+use crate::Result;
+
+/// A refcounted, content-addressed session on one registered matrix.
+///
+/// Cloning shares the session (refcount bumps); dropping (or the explicit
+/// [`MatrixHandle::release`]) releases one reference.  The service keeps a
+/// session entry alive while any handle references it, which is what the
+/// `serve` CLI and long-lived clients lean on to keep fold affinity
+/// across bursts.
+pub struct MatrixHandle {
+    service: Arc<SolveService>,
+    id: MatrixId,
+    spec: MatrixSpec,
+}
+
+impl std::fmt::Debug for MatrixHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MatrixHandle").field("id", &self.id).field("spec", &self.spec).finish()
+    }
+}
+
+impl MatrixHandle {
+    pub(crate) fn new(service: Arc<SolveService>, id: MatrixId, spec: MatrixSpec) -> Self {
+        Self { service, id, spec }
+    }
+
+    /// The content-addressed matrix identity this handle shares.
+    pub fn id(&self) -> MatrixId {
+        self.id
+    }
+
+    /// The registered spec (small, `Send` — never a materialized matrix).
+    pub fn spec(&self) -> &MatrixSpec {
+        &self.spec
+    }
+
+    /// Start a solve against the spec ensemble's own right-hand side.
+    pub fn solve(&self) -> SolveRequestBuilder {
+        self.builder(RhsSpec::Default)
+    }
+
+    /// Start a solve against an explicit right-hand side (length checked
+    /// at materialization; this is the multi-RHS workhorse — k different
+    /// vectors against one residency).
+    pub fn solve_rhs(&self, rhs: Vec<f64>) -> SolveRequestBuilder {
+        self.builder(RhsSpec::Explicit(rhs))
+    }
+
+    fn builder(&self, rhs: RhsSpec) -> SolveRequestBuilder {
+        SolveRequestBuilder {
+            service: self.service.clone(),
+            matrix_id: self.id,
+            matrix: self.spec.clone(),
+            rhs,
+            config: GmresConfig::default(),
+            policy: None,
+        }
+    }
+
+    /// Release this reference explicitly (equivalent to dropping the
+    /// handle; the session entry disappears when the last reference
+    /// goes).
+    pub fn release(self) {
+        // Drop does the accounting.
+    }
+}
+
+impl Clone for MatrixHandle {
+    fn clone(&self) -> Self {
+        self.service.session_ref(self.id);
+        Self { service: self.service.clone(), id: self.id, spec: self.spec.clone() }
+    }
+}
+
+impl Drop for MatrixHandle {
+    fn drop(&mut self) {
+        self.service.session_unref(self.id);
+    }
+}
+
+/// Typed request builder bound to a session handle: set solver knobs,
+/// then [`SolveRequestBuilder::submit`] (blocking) or
+/// [`SolveRequestBuilder::submit_nowait`] (reply channel — burst k of
+/// these on one handle and the batcher folds them).
+pub struct SolveRequestBuilder {
+    service: Arc<SolveService>,
+    matrix_id: MatrixId,
+    matrix: MatrixSpec,
+    rhs: RhsSpec,
+    config: GmresConfig,
+    policy: Option<Policy>,
+}
+
+impl std::fmt::Debug for SolveRequestBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SolveRequestBuilder")
+            .field("matrix_id", &self.matrix_id)
+            .field("config", &self.config)
+            .field("policy", &self.policy)
+            .finish()
+    }
+}
+
+impl SolveRequestBuilder {
+    /// Replace the whole solver configuration.
+    pub fn config(mut self, config: GmresConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Restart length m.
+    pub fn m(mut self, m: usize) -> Self {
+        self.config.m = m;
+        self
+    }
+
+    /// Relative residual tolerance.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.config.tol = tol;
+        self
+    }
+
+    /// Restart-cycle budget.
+    pub fn max_restarts(mut self, max_restarts: usize) -> Self {
+        self.config.max_restarts = max_restarts;
+        self
+    }
+
+    /// Preconditioner request (honoured verbatim by the planner).
+    pub fn precond(mut self, precond: PrecondKind) -> Self {
+        self.config.precond = precond;
+        self
+    }
+
+    /// Storage-precision request (`Auto` lets the planner arbitrate).
+    pub fn precision(mut self, precision: PrecisionPolicy) -> Self {
+        self.config.precision = precision;
+        self
+    }
+
+    /// Pin the offload policy (`None`/unset = router auto-selection).
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Submit and block until the outcome is ready.
+    pub fn submit(self) -> Result<SolveOutcome> {
+        let service = self.service.clone();
+        let rx = self.submit_nowait()?;
+        let out = rx.recv();
+        // release accounting BEFORE propagating a dropped-worker error
+        service.finish();
+        out.map_err(|_| anyhow::anyhow!("worker dropped reply"))?
+    }
+
+    /// Submit without waiting; returns the reply channel.  The caller
+    /// must eventually `recv()` and then call [`SolveService::finish`] to
+    /// release in-flight accounting (exactly the legacy `submit_nowait`
+    /// contract).
+    pub fn submit_nowait(self) -> Result<mpsc::Receiver<Result<SolveOutcome>>> {
+        self.service.submit_session_nowait(
+            self.matrix_id,
+            self.matrix,
+            self.rhs,
+            self.config,
+            self.policy,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::ServiceConfig;
+
+    fn service() -> Arc<SolveService> {
+        SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() })
+    }
+
+    #[test]
+    fn register_release_lifecycle_is_refcounted() {
+        let svc = service();
+        assert_eq!(svc.active_sessions(), 0);
+        let h1 = svc.register(MatrixSpec::Table1 { n: 32, seed: 1 });
+        assert_eq!(svc.active_sessions(), 1);
+        // same content: same session, not a second one
+        let h2 = svc.register(MatrixSpec::Table1 { n: 32, seed: 1 });
+        assert_eq!(h1.id(), h2.id());
+        assert_eq!(svc.active_sessions(), 1);
+        // a different matrix is a different session
+        let h3 = svc.register(MatrixSpec::Table1 { n: 32, seed: 2 });
+        assert_ne!(h1.id(), h3.id());
+        assert_eq!(svc.active_sessions(), 2);
+        // clones bump the refcount; releases drain it
+        let h1b = h1.clone();
+        h1.release();
+        assert_eq!(svc.active_sessions(), 2, "clone keeps the session alive");
+        h1b.release();
+        h2.release();
+        assert_eq!(svc.active_sessions(), 1);
+        drop(h3);
+        assert_eq!(svc.active_sessions(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn builder_submits_through_the_session() {
+        let svc = service();
+        let handle = svc.register(MatrixSpec::Table1 { n: 48, seed: 0 });
+        let out = handle
+            .solve()
+            .m(8)
+            .tol(1e-8)
+            .max_restarts(100)
+            .policy(Policy::SerialNative)
+            .submit()
+            .unwrap();
+        assert!(out.report.converged);
+        assert_eq!(out.policy, Policy::SerialNative);
+        assert_eq!(svc.inflight(), 0, "blocking submit releases accounting");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn explicit_rhs_solves_that_system() {
+        use crate::linalg::LinearOperator;
+        let svc = service();
+        let spec = MatrixSpec::Table1 { n: 40, seed: 5 };
+        let (a, _) = spec.materialize();
+        let x_true = crate::linalg::generators::random_vector(40, 9);
+        let b = a.apply(&x_true);
+        let handle = svc.register(spec);
+        let out = handle
+            .solve_rhs(b)
+            .m(10)
+            .tol(1e-10)
+            .max_restarts(100)
+            .policy(Policy::SerialNative)
+            .submit()
+            .unwrap();
+        assert!(out.report.converged);
+        let err = crate::linalg::vector::rel_err(&out.report.x, &x_true);
+        assert!(err < 1e-7, "explicit-rhs solution error {err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mismatched_rhs_length_fails_the_job_not_the_service() {
+        let svc = service();
+        let handle = svc.register(MatrixSpec::Table1 { n: 32, seed: 0 });
+        let out = handle.solve_rhs(vec![1.0; 7]).policy(Policy::SerialNative).submit();
+        assert!(out.is_err(), "bad rhs must error");
+        // the service keeps serving
+        let ok = handle.solve().m(8).policy(Policy::SerialNative).submit().unwrap();
+        assert!(ok.report.converged);
+        svc.shutdown();
+    }
+}

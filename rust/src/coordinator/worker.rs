@@ -19,19 +19,28 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::backend::build_engine_preconditioned;
-use crate::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
-use crate::coordinator::job::{JobId, SolveOutcome, SolveRequest};
+use anyhow::anyhow;
+
+use crate::backend::{build_block_engine, build_engine_preconditioned};
+use crate::coordinator::batcher::{BatchKey, Batcher, BatcherConfig, Pending};
+use crate::coordinator::job::{JobId, MatrixId, RhsSpec, SolveOutcome, SolveRequest};
 use crate::coordinator::metrics::Metrics;
-use crate::fleet::{costs as fleet_costs, build_sharded_engine, Placement};
-use crate::gmres::{GmresConfig, RestartedGmres, SolveReport};
-use crate::planner::{Plan, Planner};
+use crate::fleet::{
+    build_sharded_block_engine, build_sharded_engine, costs as fleet_costs, Placement,
+};
+use crate::gmres::{BlockGmres, GmresConfig, RestartedGmres, SolveReport};
+use crate::planner::{FoldEvaluation, Plan, Planner};
+use crate::precision::PrecisionPolicy;
 use crate::runtime::Runtime;
 use crate::Result;
 
 /// Unit of work flowing to workers.
 pub struct WorkItem {
     pub id: JobId,
+    /// Content-addressed matrix identity (the session/fold key).
+    pub matrix_id: MatrixId,
+    /// Which right-hand side this job solves against the shared matrix.
+    pub rhs: RhsSpec,
     pub request: SolveRequest,
     /// The execution plan the router/planner produced for this request.
     pub plan: Plan,
@@ -47,7 +56,8 @@ fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, pla
     let plan = item.plan;
     let shape = item.request.matrix.shape();
     let outcome = (|| -> Result<SolveOutcome> {
-        let (a, b) = item.request.matrix.materialize();
+        let (a, b_default) = item.request.matrix.materialize();
+        let b = item.rhs.resolve(&b_default)?;
         let format = a.format();
         // pin the plan's choices so the engine build, the solver and the
         // report all carry exactly what the planner decided (including the
@@ -125,6 +135,195 @@ fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, pla
     let _ = item.reply.send(outcome);
 }
 
+/// Execute a whole same-key batch: when it holds >= 2 same-matrix jobs and
+/// the planner prices the fold cheaper than independent execution
+/// ([`Planner::evaluate_fold`]), run ONE k-wide block solve and fan the
+/// per-RHS outcomes back; otherwise run the items one by one.
+fn run_batch(
+    batch: Vec<Pending<WorkItem>>,
+    runtime: Option<Rc<Runtime>>,
+    metrics: &Metrics,
+    planner: &Planner,
+) {
+    // a member whose explicit rhs cannot resolve must fail ALONE, never
+    // poison same-batch siblings — such batches run unfolded so the bad
+    // item errors individually (run_item's resolve path)
+    let order = batch.first().map(|p| p.item.request.matrix.order()).unwrap_or(0);
+    let all_rhs_valid = batch.iter().all(|p| match &p.item.rhs {
+        RhsSpec::Default => true,
+        RhsSpec::Explicit(v) => v.len() == order,
+    });
+    if batch.len() >= 2 && all_rhs_valid {
+        let plan = batch[0].item.plan;
+        let shape = batch[0].item.request.matrix.shape();
+        // the fold must satisfy the TIGHTEST tolerance's precision floor;
+        // every member's own (tol, max_restarts) still applies per RHS
+        let min_tol = batch
+            .iter()
+            .map(|p| p.item.request.config.tol)
+            .fold(f64::INFINITY, f64::min);
+        let probe = GmresConfig { tol: min_tol, ..batch[0].item.request.config };
+        let eval = planner.evaluate_fold(&shape, &probe, &plan, batch.len());
+        if eval.worthwhile() {
+            run_folded(batch, metrics, planner, eval);
+            return;
+        }
+    }
+    for pending in batch {
+        run_item(pending.item, runtime.clone(), metrics, planner);
+    }
+}
+
+/// One folded k-wide block solve: materialize the matrix ONCE, resolve the
+/// k right-hand sides, run k Arnoldi processes over the single residency
+/// ([`BlockGmres`]), then fan per-RHS outcomes to their waiters, feed
+/// per-RHS (predicted, measured) shares into cost calibration and record
+/// the fold counters.
+fn run_folded(
+    batch: Vec<Pending<WorkItem>>,
+    metrics: &Metrics,
+    planner: &Planner,
+    eval: FoldEvaluation,
+) {
+    let started = Instant::now();
+    let k = batch.len();
+    let plan = batch[0].item.plan;
+    let items: Vec<WorkItem> = batch.into_iter().map(|p| p.item).collect();
+    let shape = items[0].request.matrix.shape();
+    let queue_seconds: Vec<f64> = items
+        .iter()
+        .map(|it| started.duration_since(it.submitted_at).as_secs_f64())
+        .collect();
+
+    type FoldRun = (Vec<SolveReport>, Vec<(String, f64, u64)>);
+    let result = (|| -> Result<FoldRun> {
+        let (a, b_default) = items[0].request.matrix.materialize();
+        let mut bs = Vec::with_capacity(k);
+        for it in &items {
+            bs.push(it.rhs.resolve(&b_default)?);
+        }
+        // pin the plan's choices per RHS, keeping each member's own
+        // tolerance and restart budget
+        let configs: Vec<GmresConfig> = items
+            .iter()
+            .map(|it| GmresConfig {
+                m: plan.m,
+                precond: plan.precond,
+                precision: PrecisionPolicy::Fixed(plan.precision),
+                ..it.request.config
+            })
+            .collect();
+        let build_config = configs[0];
+        let fleet = &planner.config().fleet;
+        let mut engine = match plan.placement {
+            Placement::Sharded(set) => build_sharded_block_engine(
+                fleet,
+                set,
+                plan.policy,
+                a,
+                bs,
+                &build_config,
+                planner.config().mem_fraction,
+            )?,
+            _ => build_block_engine(plan.policy, a, bs, &build_config)?,
+        };
+        let reports = BlockGmres::new(configs).solve(&mut engine)?;
+        // per-member shares (sharded placements; empty otherwise)
+        let shares: Vec<(String, f64, u64)> = engine
+            .device_report()
+            .into_iter()
+            .map(|(id, busy, bytes)| {
+                (fleet.placement_label(Placement::Single(id)), busy, bytes as u64)
+            })
+            .collect();
+        Ok((reports, shares))
+    })();
+
+    match result {
+        Ok((reports, device_shares)) => {
+            // The amortization observable.  Residency-class policies
+            // (gmatrix/gpuR) save (k-1) one-time uploads of the (possibly
+            // narrowed) matrix; the transfer-everything policy saves a
+            // matrix STREAM on every joint matvec a narrower batch would
+            // have repeated — per joint cycle of width w, (w-1) streams,
+            // summing to (total - max) cycles worth.
+            let a_bytes = crate::precision::matrix_device_bytes(&shape, plan.precision) as u64;
+            let matvecs_per_cycle =
+                if plan.precision.is_reduced() { plan.m + 1 } else { plan.m + 2 };
+            let total_cycles: usize = reports.iter().map(|r| r.cycles).sum();
+            let max_cycles = reports.iter().map(|r| r.cycles).max().unwrap_or(0);
+            let saved = match plan.policy {
+                crate::backend::Policy::GputoolsLike => {
+                    ((total_cycles - max_cycles) * matvecs_per_cycle) as u64 * a_bytes
+                }
+                _ => (k as u64 - 1) * a_bytes,
+            };
+            metrics.on_fold(k as u64, saved);
+            if device_shares.is_empty() {
+                // single-residency placement: one device row, bytes from
+                // the independent tally minus what the fold never moved
+                let label = planner.config().fleet.placement_label(plan.placement);
+                let busy: f64 = reports.iter().map(|r| r.sim_seconds).sum();
+                let indep_bytes: u64 = reports
+                    .iter()
+                    .map(|r| {
+                        fleet_costs::single_device_solve_bytes_p(
+                            plan.policy,
+                            &shape,
+                            plan.m,
+                            r.cycles,
+                            plan.precision,
+                        ) as u64
+                    })
+                    .sum();
+                metrics.on_device(&label, busy, indep_bytes.saturating_sub(saved));
+            } else {
+                for (label, busy, bytes) in &device_shares {
+                    metrics.on_device(label, *busy, *bytes);
+                }
+            }
+            let per_rhs_base = eval.folded_base_seconds / k as f64;
+            let per_rhs_pred = eval.folded_seconds / k as f64;
+            let wall = started.elapsed().as_secs_f64();
+            for (i, (item, report)) in items.into_iter().zip(reports).enumerate() {
+                planner.observe_measured(
+                    &plan,
+                    shape.format,
+                    per_rhs_base,
+                    per_rhs_pred,
+                    report.sim_seconds,
+                );
+                if let Some(factor) = per_cycle_contraction(&report) {
+                    planner.observe_convergence_p(
+                        shape.format,
+                        plan.precond,
+                        plan.precision,
+                        plan.m,
+                        factor,
+                    );
+                }
+                metrics.on_complete(wall, queue_seconds[i], item.downgraded);
+                let outcome = SolveOutcome {
+                    id: item.id,
+                    policy: plan.policy,
+                    downgraded: item.downgraded,
+                    plan,
+                    report,
+                    queue_seconds: queue_seconds[i],
+                };
+                let _ = item.reply.send(Ok(outcome));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for item in items {
+                metrics.on_fail();
+                let _ = item.reply.send(Err(anyhow!("folded block solve failed: {msg}")));
+            }
+        }
+    }
+}
+
 /// Observed per-cycle residual contraction of a finished solve: with a
 /// zero initial guess the initial residual is `b`, so the geometric mean
 /// contraction per cycle is `rel_resnorm^(1/cycles)`.  Only converged,
@@ -181,16 +380,12 @@ pub fn spawn_device_thread(
                     }
                 }
                 while let Some((_key, batch)) = batcher.next_batch() {
-                    for pending in batch {
-                        run_item(pending.item, runtime.clone(), &metrics, &planner);
-                    }
+                    run_batch(batch, runtime.clone(), &metrics, &planner);
                 }
             }
             // drain anything left after channel close
             while let Some((_k, batch)) = batcher.next_batch() {
-                for pending in batch {
-                    run_item(pending.item, runtime.clone(), &metrics, &planner);
-                }
+                run_batch(batch, runtime.clone(), &metrics, &planner);
             }
         })
         .expect("spawn device thread")
@@ -199,10 +394,13 @@ pub fn spawn_device_thread(
 fn push(batcher: &mut Batcher<WorkItem>, item: WorkItem) {
     // batch by what actually executes: the plan's policy, restart,
     // preconditioner (a Jacobi job's resident matrix is D⁻¹A, not A),
-    // placement (a sharded residency cannot serve a single-device job)
-    // and precision (an f32 residency cannot serve an f64 job)
+    // placement (a sharded residency cannot serve a single-device job),
+    // precision (an f32 residency cannot serve an f64 job) and the
+    // content-addressed matrix id (same-id members of a batch can FOLD
+    // into one multi-RHS block solve)
     let key = BatchKey {
         policy: item.plan.policy,
+        matrix_id: item.matrix_id,
         n: item.request.matrix.order(),
         m: item.plan.m,
         format: item.request.matrix.format(),
@@ -252,11 +450,14 @@ mod tests {
 
     fn item(n: usize, policy: Policy) -> (WorkItem, mpsc::Receiver<Result<SolveOutcome>>) {
         let (tx, rx) = mpsc::sync_channel(1);
+        let matrix = MatrixSpec::Table1 { n, seed: 0 };
         (
             WorkItem {
                 id: JobId(1),
+                matrix_id: matrix.content_id(),
+                rhs: RhsSpec::Default,
                 request: SolveRequest {
-                    matrix: MatrixSpec::Table1 { n, seed: 0 },
+                    matrix,
                     config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 100, ..Default::default() },
                     policy: Some(policy),
                 },
@@ -359,6 +560,119 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn same_matrix_batch_folds_into_one_block_solve() {
+        use std::time::Duration;
+        let metrics = Arc::new(Metrics::new());
+        let planner = Arc::new(Planner::default());
+        let mut batcher: Batcher<WorkItem> =
+            Batcher::new(BatcherConfig { max_batch: 4, max_age: Duration::ZERO });
+        let mut replies = Vec::new();
+        for _ in 0..4 {
+            let (mut it, rx) = item(96, Policy::GputoolsLike);
+            it.plan = planner.plan(
+                &it.request.matrix.shape(),
+                &it.request.config,
+                Some(Policy::GputoolsLike),
+            );
+            push(&mut batcher, it);
+            replies.push(rx);
+        }
+        let (_key, batch) = batcher.next_batch().unwrap();
+        assert_eq!(batch.len(), 4, "same matrix id, one batch");
+        run_batch(batch, None, &metrics, &planner);
+        let mut outs = Vec::new();
+        for rx in replies {
+            let out = rx.recv().unwrap().unwrap();
+            assert!(out.report.converged);
+            assert!(out.report.rel_resnorm <= 1e-8);
+            outs.push(out);
+        }
+        assert_eq!(metrics.folds(), 1, "exactly one fold");
+        assert_eq!(metrics.requests_folded(), 4);
+        // gputools streams A per matvec: the fold saved (total-max) cycles
+        // x (m+2) matrix streams of the 96x96 f64 slab (identical RHS, so
+        // all four converge in the same cycle count)
+        let cycles = outs[0].report.cycles;
+        assert!(outs.iter().all(|o| o.report.cycles == cycles), "identical rhs, same cycles");
+        assert_eq!(
+            metrics.uploads_saved_bytes(),
+            (3 * cycles * (8 + 2)) as u64 * (8 * 96 * 96) as u64
+        );
+        assert_eq!(metrics.completed(), 4);
+        assert_eq!(planner.observations(), 4, "per-RHS calibration pairs");
+    }
+
+    #[test]
+    fn invalid_rhs_never_poisons_fold_siblings() {
+        use std::time::Duration;
+        let metrics = Arc::new(Metrics::new());
+        let planner = Arc::new(Planner::default());
+        let mut batcher: Batcher<WorkItem> =
+            Batcher::new(BatcherConfig { max_batch: 4, max_age: Duration::ZERO });
+        let mut replies = Vec::new();
+        for j in 0..4 {
+            let (mut it, rx) = item(64, Policy::GmatrixLike);
+            if j == 1 {
+                it.rhs = RhsSpec::Explicit(vec![1.0; 7]); // wrong length
+            }
+            it.plan = planner.plan(
+                &it.request.matrix.shape(),
+                &it.request.config,
+                Some(Policy::GmatrixLike),
+            );
+            push(&mut batcher, it);
+            replies.push(rx);
+        }
+        let (_key, batch) = batcher.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        run_batch(batch, Some(Rc::new(Runtime::native())), &metrics, &planner);
+        for (j, rx) in replies.into_iter().enumerate() {
+            let out = rx.recv().unwrap();
+            if j == 1 {
+                assert!(out.is_err(), "bad rhs fails alone");
+            } else {
+                assert!(out.unwrap().report.converged, "sibling {j} must still solve");
+            }
+        }
+        assert_eq!(metrics.folds(), 0, "a batch with an unresolvable rhs runs unfolded");
+        assert_eq!(metrics.completed(), 3);
+        assert_eq!(metrics.failed(), 1);
+    }
+
+    #[test]
+    fn different_matrices_in_a_batch_do_not_fold() {
+        use std::time::Duration;
+        let metrics = Arc::new(Metrics::new());
+        let planner = Arc::new(Planner::default());
+        let mut batcher: Batcher<WorkItem> =
+            Batcher::new(BatcherConfig { max_batch: 4, max_age: Duration::ZERO });
+        let mut replies = Vec::new();
+        for seed in 0..2u64 {
+            let (mut it, rx) = item(64, Policy::GmatrixLike);
+            it.request.matrix = MatrixSpec::Table1 { n: 64, seed };
+            it.matrix_id = it.request.matrix.content_id();
+            it.plan = planner.plan(
+                &it.request.matrix.shape(),
+                &it.request.config,
+                Some(Policy::GmatrixLike),
+            );
+            push(&mut batcher, it);
+            replies.push(rx);
+        }
+        // distinct content ids split the batch: each drains alone
+        let rt = Some(Rc::new(Runtime::native()));
+        let (_k1, b1) = batcher.next_batch().unwrap();
+        assert_eq!(b1.len(), 1, "different matrix ids must not share a batch");
+        run_batch(b1, rt.clone(), &metrics, &planner);
+        let (_k2, b2) = batcher.next_batch().unwrap();
+        run_batch(b2, rt, &metrics, &planner);
+        for rx in replies {
+            assert!(rx.recv().unwrap().unwrap().report.converged);
+        }
+        assert_eq!(metrics.folds(), 0, "no fold across different matrices");
     }
 
     #[test]

@@ -55,6 +55,26 @@ pub fn predict_seconds_p(
     sim.elapsed()
 }
 
+/// Modeled seconds of one k-wide *folded* multi-RHS solve on the paper
+/// testbed: one residency setup plus `cycles` joint cycles at batch width
+/// `k`.  Compare against `k * predict_seconds_p(...)` to see the fold's
+/// amortization win.
+pub fn predict_seconds_batch_p(
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    cycles: usize,
+    k: usize,
+    precision: Precision,
+) -> f64 {
+    let mut sim = DeviceSim::paper_testbed(false);
+    charge_setup_batch_p(&mut sim, policy, shape, m, k, precision);
+    for _ in 0..cycles {
+        charge_cycle_batch_p(&mut sim, policy, shape, m, k, precision);
+    }
+    sim.elapsed()
+}
+
 /// Modeled speedup of `policy` vs the serial-R baseline.
 pub fn predict_speedup(policy: Policy, shape: &SystemShape, m: usize, cycles: usize) -> f64 {
     predict_seconds(Policy::SerialR, shape, m, cycles)
@@ -117,26 +137,46 @@ pub fn charge_setup_p(
     m: usize,
     precision: Precision,
 ) {
+    charge_setup_batch_p(sim, policy, shape, m, 1, precision);
+}
+
+/// [`charge_setup_p`] for a k-wide folded multi-RHS solve: ONE matrix
+/// residency establishment regardless of k (the fold's entire point),
+/// with only the per-RHS vectors (`b`, `x0` on the gpuR-style resident
+/// placement) uploaded k times.  `k == 1` is charge-for-charge the
+/// single-RHS setup.
+pub fn charge_setup_batch_p(
+    sim: &mut DeviceSim,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    k: usize,
+    precision: Precision,
+) {
     let w = precision.element_bytes();
+    let k = k.max(1);
     match policy {
         Policy::SerialR | Policy::SerialNative | Policy::GputoolsLike => {}
         Policy::GmatrixLike => charge_matrix_upload_p(sim, shape, precision),
         Policy::GpurVclLike => {
-            let bytes = super::memory::working_set_bytes_p(shape, m, policy, precision);
+            let bytes = super::memory::working_set_bytes_batch_p(shape, m, k, policy, precision);
             let _ = sim.alloc(bytes);
             sim.r_call();
             sim.h2d(crate::precision::matrix_device_bytes(shape, precision));
-            sim.h2d(w * shape.n);
-            sim.h2d(w * shape.n);
+            for _ in 0..k {
+                sim.h2d(w * shape.n);
+                sim.h2d(w * shape.n);
+            }
         }
     }
 }
 
-/// The device kernel for one matvec of the given shape.
-fn kernel_matvec(sim: &mut DeviceSim, shape: &SystemShape, precision: Precision) {
+/// The device kernel for one k-wide matvec/matmat of the given shape
+/// (`k == 1` books the plain GEMV/SpMV kernel).
+fn kernel_matvec_block(sim: &mut DeviceSim, shape: &SystemShape, k: usize, precision: Precision) {
     match shape.format {
-        MatrixFormat::Dense => sim.kernel_gemv_p(shape.n, shape.n, precision),
-        MatrixFormat::Csr => sim.kernel_spmv_p(shape.nnz, shape.n, precision),
+        MatrixFormat::Dense => sim.kernel_gemm_p(shape.n, shape.n, k, precision),
+        MatrixFormat::Csr => sim.kernel_spmm_p(shape.nnz, shape.n, k, precision),
     }
 }
 
@@ -154,35 +194,58 @@ pub fn charge_matvec_p(
     shape: &SystemShape,
     precision: Precision,
 ) {
+    charge_block_matvec_p(sim, policy, shape, 1, precision);
+}
+
+/// [`charge_matvec_p`] at batch width `k`: ONE dispatch (r-call / vcl
+/// enqueue), ONE matrix staging (gputools), one k-wide GEMM/SpMM kernel,
+/// k vector round trips.  The per-call fixed costs amortizing over k is
+/// what makes folding win even for residency-free policies.  The
+/// interpreted host loops its k columns (R has no blas-3 story in this
+/// workload's regime), so host policies gain nothing — the planner
+/// declines those folds.  `k == 1` is charge-for-charge the single-RHS
+/// matvec.
+pub fn charge_block_matvec_p(
+    sim: &mut DeviceSim,
+    policy: Policy,
+    shape: &SystemShape,
+    k: usize,
+    precision: Precision,
+) {
     let n = shape.n;
     let w = precision.element_bytes();
+    let k = k.max(1);
     match policy {
-        Policy::SerialR => match shape.format {
-            MatrixFormat::Dense => sim.host_gemv(n, n),
-            MatrixFormat::Csr => sim.host_spmv(shape.nnz),
-        },
+        Policy::SerialR => {
+            for _ in 0..k {
+                match shape.format {
+                    MatrixFormat::Dense => sim.host_gemv(n, n),
+                    MatrixFormat::Csr => sim.host_spmv(shape.nnz),
+                }
+            }
+        }
         Policy::SerialNative => {}
         Policy::GmatrixLike => {
             sim.r_call();
-            sim.h2d(w * n);
-            kernel_matvec(sim, shape, precision);
-            sim.d2h(w * n);
+            sim.h2d(w * n * k);
+            kernel_matvec_block(sim, shape, k, precision);
+            sim.d2h(w * n * k);
         }
         Policy::GputoolsLike => {
             let a_bytes = crate::precision::matrix_device_bytes(shape, precision);
-            let id = sim.alloc(a_bytes + w * n);
+            let id = sim.alloc(a_bytes + w * n * k);
             sim.r_call();
             sim.h2d(a_bytes);
-            sim.h2d(w * n);
-            kernel_matvec(sim, shape, precision);
-            sim.d2h(w * n);
+            sim.h2d(w * n * k);
+            kernel_matvec_block(sim, shape, k, precision);
+            sim.d2h(w * n * k);
             if let Ok(id) = id {
                 let _ = sim.release(id);
             }
         }
         Policy::GpurVclLike => {
             sim.vcl_dispatch();
-            kernel_matvec(sim, shape, precision);
+            kernel_matvec_block(sim, shape, k, precision);
         }
     }
 }
@@ -224,103 +287,136 @@ pub fn charge_cycle_p(
     m: usize,
     precision: Precision,
 ) {
+    charge_cycle_batch_p(sim, policy, shape, m, 1, precision);
+}
+
+/// [`charge_cycle_p`] at batch width `k` — one *joint* cycle of a folded
+/// multi-RHS solve: every matvec of the cycle anatomy becomes ONE k-wide
+/// GEMM/SpMM collective ([`charge_block_matvec_p`] — the matrix streams
+/// once for all k Krylov processes), while the per-RHS vector arithmetic
+/// (dots, norms, updates, the Givens LS and the trailing residual check)
+/// replicates k times — each right-hand side runs its own Arnoldi
+/// process, only the operator applications fuse.  `k == 1` is
+/// charge-for-charge the plain cycle.
+pub fn charge_cycle_batch_p(
+    sim: &mut DeviceSim,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    k: usize,
+    precision: Precision,
+) {
     let n = shape.n;
+    let k = k.max(1);
     let host_r = matches!(
         policy,
         Policy::SerialR | Policy::GmatrixLike | Policy::GputoolsLike
     );
     let vcl = policy == Policy::GpurVclLike;
 
-    // r0 = b - A x0; beta = ||r0||; v1 = r0/beta
-    charge_matvec_p(sim, policy, shape, precision);
-    if host_r {
-        host_vecop(sim, "sub", 2, n);
-        host_vecop(sim, "nrm2", 1, n);
-        host_vecop(sim, "scale", 1, n);
-    } else if vcl {
-        vcl_vecop(sim, false, 2, n, precision); // sub
-        vcl_vecop(sim, true, 1, n, precision); // nrm2
-        sim.d2h(8); // beta readback for the breakdown test
-        vcl_vecop(sim, false, 1, n, precision); // scale
+    // r0 = b - A x0; beta = ||r0||; v1 = r0/beta (per RHS; matvec k-wide)
+    charge_block_matvec_p(sim, policy, shape, k, precision);
+    for _ in 0..k {
+        if host_r {
+            host_vecop(sim, "sub", 2, n);
+            host_vecop(sim, "nrm2", 1, n);
+            host_vecop(sim, "scale", 1, n);
+        } else if vcl {
+            vcl_vecop(sim, false, 2, n, precision); // sub
+            vcl_vecop(sim, true, 1, n, precision); // nrm2
+            sim.d2h(8); // beta readback for the breakdown test
+            vcl_vecop(sim, false, 1, n, precision); // scale
+        }
     }
 
-    // m Arnoldi steps (CGS): j+1 dots + j+1 (scale+sub) + nrm2 + scale
+    // m Arnoldi steps (CGS): j+1 dots + j+1 (scale+sub) + nrm2 + scale,
+    // per RHS; the step's matvec is one k-wide collective
     for j in 0..m {
-        charge_matvec_p(sim, policy, shape, precision);
-        for _ in 0..=j {
+        charge_block_matvec_p(sim, policy, shape, k, precision);
+        for _ in 0..k {
+            for _ in 0..=j {
+                if host_r {
+                    host_vecop(sim, "dot", 2, n);
+                } else if vcl {
+                    vcl_vecop(sim, true, 2, n, precision);
+                }
+            }
+            for _ in 0..=j {
+                if host_r {
+                    host_vecop(sim, "scale", 1, n);
+                    host_vecop(sim, "sub", 2, n);
+                } else if vcl {
+                    vcl_vecop(sim, false, 1, n, precision);
+                    vcl_vecop(sim, false, 2, n, precision);
+                }
+            }
             if host_r {
-                host_vecop(sim, "dot", 2, n);
+                host_vecop(sim, "nrm2", 1, n);
+                host_vecop(sim, "scale", 1, n);
             } else if vcl {
-                vcl_vecop(sim, true, 2, n, precision);
+                vcl_vecop(sim, true, 1, n, precision);
+                sim.d2h(8);
+                vcl_vecop(sim, false, 1, n, precision);
             }
         }
-        for _ in 0..=j {
+    }
+
+    // Givens LS on the host, per RHS (gpuR pulls the small H back first)
+    for _ in 0..k {
+        if vcl {
+            sim.d2h(8 * (m + 1) * m);
+        }
+        if host_r || vcl {
+            sim.host_scalar_ops("givens-ls", crate::gmres::givens::flops(m));
+        }
+    }
+
+    // x = x0 + V y, per RHS
+    for _ in 0..k {
+        for _ in 0..m {
             if host_r {
                 host_vecop(sim, "scale", 1, n);
-                host_vecop(sim, "sub", 2, n);
+                host_vecop(sim, "add", 2, n);
             } else if vcl {
+                // y went up as m scalars piggybacked on one transfer
                 vcl_vecop(sim, false, 1, n, precision);
                 vcl_vecop(sim, false, 2, n, precision);
             }
         }
-        if host_r {
-            host_vecop(sim, "nrm2", 1, n);
-            host_vecop(sim, "scale", 1, n);
-        } else if vcl {
-            vcl_vecop(sim, true, 1, n, precision);
-            sim.d2h(8);
-            vcl_vecop(sim, false, 1, n, precision);
+        if vcl {
+            sim.h2d(8 * m);
         }
-    }
-
-    // Givens LS on the host (gpuR pulls the small H back first)
-    if vcl {
-        sim.d2h(8 * (m + 1) * m);
-    }
-    if host_r || vcl {
-        sim.host_scalar_ops("givens-ls", crate::gmres::givens::flops(m));
-    }
-
-    // x = x0 + V y
-    for _ in 0..m {
-        if host_r {
-            host_vecop(sim, "scale", 1, n);
-            host_vecop(sim, "add", 2, n);
-        } else if vcl {
-            // y went up as m scalars piggybacked on one transfer
-            vcl_vecop(sim, false, 1, n, precision);
-            vcl_vecop(sim, false, 2, n, precision);
-        }
-    }
-    if vcl {
-        sim.h2d(8 * m);
     }
 
     // true residual for the restart test (paper line 9).  Reduced
     // precision charges the iterative-refinement form instead: the f64
     // operator lives on the host (only narrowed values went to the card),
-    // so the iterate is read back and the outer residual is a host f64
-    // matvec + sub + nrm2 — exactly what the mixed-precision engine
-    // executes.
+    // so each iterate is read back and the outer residual is a host f64
+    // matvec + sub + nrm2 per RHS — exactly what the mixed-precision
+    // engines execute.
     if precision.is_reduced() && policy != Policy::SerialNative {
-        if policy.needs_runtime() {
-            sim.d2h(8 * n); // f64 iterate readback for the host-side check
-        }
-        match shape.format {
-            MatrixFormat::Dense => sim.host_gemv(n, n),
-            MatrixFormat::Csr => sim.host_spmv(shape.nnz),
-        }
-        host_vecop(sim, "sub", 2, n);
-        host_vecop(sim, "nrm2", 1, n);
-    } else {
-        charge_matvec_p(sim, policy, shape, precision);
-        if host_r {
+        for _ in 0..k {
+            if policy.needs_runtime() {
+                sim.d2h(8 * n); // f64 iterate readback for the host-side check
+            }
+            match shape.format {
+                MatrixFormat::Dense => sim.host_gemv(n, n),
+                MatrixFormat::Csr => sim.host_spmv(shape.nnz),
+            }
             host_vecop(sim, "sub", 2, n);
             host_vecop(sim, "nrm2", 1, n);
-        } else if vcl {
-            vcl_vecop(sim, false, 2, n, precision);
-            vcl_vecop(sim, true, 1, n, precision);
-            sim.d2h(8);
+        }
+    } else {
+        charge_block_matvec_p(sim, policy, shape, k, precision);
+        for _ in 0..k {
+            if host_r {
+                host_vecop(sim, "sub", 2, n);
+                host_vecop(sim, "nrm2", 1, n);
+            } else if vcl {
+                vcl_vecop(sim, false, 2, n, precision);
+                vcl_vecop(sim, true, 1, n, precision);
+                sim.d2h(8);
+            }
         }
     }
 }
@@ -420,6 +516,46 @@ mod tests {
                 predict_seconds(p, &shape, 30, 4)
             );
         }
+    }
+
+    #[test]
+    fn batch_width_one_is_exactly_the_single_rhs_table() {
+        for shape in [d(1500), SystemShape::csr(6000, 30_000)] {
+            for p in Policy::all() {
+                for prec in [Precision::F64, Precision::F32] {
+                    assert_eq!(
+                        predict_seconds_batch_p(p, &shape, 20, 4, 1, prec),
+                        predict_seconds_p(p, &shape, 20, 4, prec),
+                        "{p} {:?} {prec}: k=1 must be charge-for-charge",
+                        shape.format
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn folded_batches_price_below_independent_device_solves() {
+        // the fold's amortization: one residency + k-wide GEMM beats k
+        // independent solves on every device policy (transfer-bound shapes
+        // most of all: gputools re-uploads A per matvec otherwise)
+        for shape in [d(2000), SystemShape::csr(8000, 40_000)] {
+            for p in Policy::gpu_policies() {
+                let folded = predict_seconds_batch_p(p, &shape, 30, 5, 4, Precision::F64);
+                let indep = 4.0 * predict_seconds_p(p, &shape, 30, 5, Precision::F64);
+                assert!(
+                    folded < indep,
+                    "{p} {:?}: folded {folded} !< 4x independent {indep}",
+                    shape.format
+                );
+            }
+        }
+        // the interpreted host loops its k columns: no win, no loss — which
+        // is exactly why the planner declines host folds
+        let shape = d(1000);
+        let folded = predict_seconds_batch_p(Policy::SerialR, &shape, 30, 5, 4, Precision::F64);
+        let indep = 4.0 * predict_seconds_p(Policy::SerialR, &shape, 30, 5, Precision::F64);
+        assert!((folded - indep).abs() < 1e-9 * indep, "host fold must be cost-neutral");
     }
 
     #[test]

@@ -133,19 +133,36 @@ pub fn working_set_bytes_p(
     policy: crate::backend::Policy,
     precision: crate::precision::Precision,
 ) -> usize {
+    working_set_bytes_batch_p(shape, m, 1, policy, precision)
+}
+
+/// Working set of a k-wide *folded* multi-RHS solve: one matrix residency
+/// shared by all k right-hand sides, every per-RHS buffer (in/out vectors,
+/// the gpuR-style Krylov basis) replicated k times.  `k == 1` is exactly
+/// [`working_set_bytes_p`] — this is the admission side of the fold
+/// decision: a fold that fits k Krylov bases is priced, one that does not
+/// is declined and the batch runs as independent solves.
+pub fn working_set_bytes_batch_p(
+    shape: &crate::linalg::SystemShape,
+    m: usize,
+    k: usize,
+    policy: crate::backend::Policy,
+    precision: crate::precision::Precision,
+) -> usize {
     use crate::backend::Policy;
     let w = precision.element_bytes();
     let n = shape.n;
+    let k = k.max(1);
     let a_bytes = crate::precision::matrix_device_bytes(shape, precision);
     match policy {
         // nothing device-resident
         Policy::SerialR | Policy::SerialNative => 0,
-        // A + in/out vectors
-        Policy::GmatrixLike => a_bytes + w * 2 * n,
+        // A + per-RHS in/out vectors
+        Policy::GmatrixLike => a_bytes + w * 2 * n * k,
         // transient A + vectors per call (peak equals gmatrix's)
-        Policy::GputoolsLike => a_bytes + w * 2 * n,
-        // A + V (n x (m+1)) + H + b + x + scratch w
-        Policy::GpurVclLike => a_bytes + w * (n * (m + 1) + (m + 1) * m + 3 * n),
+        Policy::GputoolsLike => a_bytes + w * 2 * n * k,
+        // A + per-RHS V (n x (m+1)) + H + b + x + scratch w
+        Policy::GpurVclLike => a_bytes + w * (n * (m + 1) + (m + 1) * m + 3 * n) * k,
     }
 }
 

@@ -130,6 +130,27 @@ impl DeviceSim {
         self.trace.push(TraceEvent::Kernel { kind: KernelKind::SpMv, seconds: s });
     }
 
+    /// Charge a device k-wide dense matmat kernel (the folded multi-RHS
+    /// GEMM; `k == 1` books exactly one GEMV).
+    pub fn kernel_gemm_p(&mut self, rows: usize, cols: usize, k: usize, p: Precision) {
+        if k <= 1 {
+            return self.kernel_gemv_p(rows, cols, p);
+        }
+        let s = self.timing.gemm_p(rows, cols, k, p);
+        self.clock += s;
+        self.trace.push(TraceEvent::Kernel { kind: KernelKind::Gemm, seconds: s });
+    }
+
+    /// Charge a device k-wide CSR matmat kernel (`k == 1` books one SpMV).
+    pub fn kernel_spmm_p(&mut self, nnz: usize, rows: usize, k: usize, p: Precision) {
+        if k <= 1 {
+            return self.kernel_spmv_p(nnz, rows, p);
+        }
+        let s = self.timing.spmm_p(nnz, rows, k, p);
+        self.clock += s;
+        self.trace.push(TraceEvent::Kernel { kind: KernelKind::SpMm, seconds: s });
+    }
+
     /// Charge a device BLAS-1 kernel.
     pub fn kernel_blas1(&mut self, n_in: usize, n_out: usize) {
         self.kernel_blas1_p(n_in, n_out, Precision::F64);

@@ -27,6 +27,13 @@ pub struct GpuSpec {
     /// device's own spec: 384 shaders * 1029 MHz * 2 ≈ 790 GFLOP/s on the
     /// 840M (the full 32x of its crippled f64 rate).
     pub flops_f32: f64,
+    /// Genuine tensor-core TF32 FLOP rate, flops/s, when the card has one
+    /// (A100-class).  `None` means tf32 math runs on the ordinary f32
+    /// pipeline — the catalog's consumer cards — so tf32 is never priced
+    /// *cheaper* than f32 there.  Only dense matmul-shaped kernels (the
+    /// multi-RHS batch GEMM) can exploit the rate; bandwidth-bound GEMV
+    /// never leaves the memory roofline regardless.
+    pub tf32_flops: Option<f64>,
     /// Host<->device link bandwidth, bytes/s (PCIe 3.0 x16 effective —
     /// fitted to the paper's gputools column, see EXPERIMENTS.md
     /// §Calibration).
@@ -49,6 +56,7 @@ impl GpuSpec {
             mem_bw: 16.0e9,
             flops_f64: 24.7e9,
             flops_f32: 790.4e9,
+            tf32_flops: None,
             pcie_bw: 13.5e9,
             transfer_latency: 15e-6,
             launch_latency: 20e-6,
@@ -64,6 +72,7 @@ impl GpuSpec {
             mem_bw: 900.0e9,
             flops_f64: 7.0e12,
             flops_f32: 14.0e12,
+            tf32_flops: None,
             pcie_bw: 12.0e9,
             transfer_latency: 10e-6,
             launch_latency: 8e-6,
@@ -71,13 +80,34 @@ impl GpuSpec {
         }
     }
 
-    /// Peak FLOP rate at a storage precision.  Tf32 runs at the f32 rate
-    /// on these cards (no tensor cores in the catalog); its win over f64
-    /// is bandwidth, its cost versus f32 is the coarser mantissa.
+    /// A tensor-core datacenter card (A100 PCIe 40 GB): the only catalog
+    /// entry whose `tf32_flops` is a genuine rate (156 TF dense tensor-core
+    /// TF32, 8x its f32 pipeline), so flop-bound kernels — the k-wide batch
+    /// GEMM of folded multi-RHS solves — price strictly below f32 on it.
+    pub fn a100() -> Self {
+        Self {
+            name: "A100 PCIe".into(),
+            mem_capacity: 40 * 1024 * 1024 * 1024,
+            mem_bw: 1555.0e9,
+            flops_f64: 9.7e12,
+            flops_f32: 19.5e12,
+            tf32_flops: Some(156.0e12),
+            pcie_bw: 25.0e9,
+            transfer_latency: 10e-6,
+            launch_latency: 5e-6,
+            vcl_op_overhead: 20e-6,
+        }
+    }
+
+    /// Peak FLOP rate at a storage precision.  Tf32 runs at the genuine
+    /// tensor-core rate when the spec carries one ([`GpuSpec::a100`]) and
+    /// at the f32 rate otherwise — on tensor-core-less cards its win over
+    /// f64 is bandwidth only, its cost versus f32 the coarser mantissa.
     pub fn flops_at(&self, precision: Precision) -> f64 {
         match precision {
             Precision::F64 => self.flops_f64,
-            Precision::F32 | Precision::Tf32 => self.flops_f32,
+            Precision::F32 => self.flops_f32,
+            Precision::Tf32 => self.tf32_flops.unwrap_or(self.flops_f32),
         }
     }
 
@@ -168,6 +198,19 @@ mod tests {
         assert_eq!(g.flops_at(Precision::F64), g.flops_f64);
         let v = GpuSpec::tesla_v100();
         assert!((v.f32_ratio() - 2.0).abs() < 0.1, "Volta is 1/2 f64");
+    }
+
+    #[test]
+    fn tensor_core_tf32_rate_only_on_the_a100() {
+        // catalog consumer/datacenter cards without tensor cores run tf32
+        // on the f32 pipeline; the A100 spec carries the genuine rate
+        assert_eq!(GpuSpec::geforce_840m().tf32_flops, None);
+        assert_eq!(GpuSpec::tesla_v100().tf32_flops, None);
+        let a = GpuSpec::a100();
+        let tf = a.tf32_flops.expect("A100 has tensor cores");
+        assert_eq!(a.flops_at(Precision::Tf32), tf);
+        assert!(tf > a.flops_f32, "tensor-core TF32 outruns the f32 pipeline");
+        assert_eq!(a.flops_at(Precision::F32), a.flops_f32);
     }
 
     #[test]

@@ -16,6 +16,10 @@ pub enum KernelKind {
     Gemv,
     /// Sparse CSR matvec (nnz, rows).
     SpMv,
+    /// Dense k-wide matmat (rows, cols, k) — the folded multi-RHS kernel.
+    Gemm,
+    /// Sparse CSR k-wide matmat (nnz, rows, k).
+    SpMm,
     /// Transposed matvec.
     GemvT,
     /// BLAS-1 (axpy / scal / elementwise).
@@ -85,6 +89,40 @@ impl KernelTimingModel {
         let w = p.element_bytes() as f64;
         let flops = 2.0 * nnz as f64;
         let bytes = (2.0 * w + 4.0) * nnz as f64 + w * rows as f64;
+        self.kernel_time_p(flops, bytes, p)
+    }
+
+    /// Dense k-wide matmat `Y = A X` (A rows x cols, X cols x k): the
+    /// folded multi-RHS kernel.  A streams ONCE for all k right-hand
+    /// sides — that is the fold's arithmetic-intensity win: per-RHS
+    /// traffic drops from `w·n²` to `w·n²/k`, and at large k the kernel
+    /// leaves the memory roofline, where a genuine tensor-core
+    /// `tf32_flops` rate (A100) finally matters.  `k == 1` reduces
+    /// exactly to [`KernelTimingModel::gemv_p`].
+    pub fn gemm_p(&self, rows: usize, cols: usize, k: usize, p: Precision) -> f64 {
+        if k <= 1 {
+            return self.gemv_p(rows, cols, p);
+        }
+        let w = p.element_bytes() as f64;
+        let (rf, cf, kf) = (rows as f64, cols as f64, k as f64);
+        let flops = 2.0 * rf * cf * kf;
+        // A streamed once + k input and k output columns
+        let bytes = w * (rf * cf + kf * (rf + cf));
+        self.kernel_time_p(flops, bytes, p)
+    }
+
+    /// CSR k-wide matmat over `nnz` stored entries: CSR arrays stream
+    /// once, gathered x-columns and y-columns scale with k.  `k == 1`
+    /// reduces exactly to [`KernelTimingModel::spmv_p`].
+    pub fn spmm_p(&self, nnz: usize, rows: usize, k: usize, p: Precision) -> f64 {
+        if k <= 1 {
+            return self.spmv_p(nnz, rows, p);
+        }
+        let w = p.element_bytes() as f64;
+        let kf = k as f64;
+        let flops = 2.0 * nnz as f64 * kf;
+        // CSR values + indices once; per column: gathered reads + writes
+        let bytes = (w + 4.0) * nnz as f64 + kf * (w * nnz as f64 + w * rows as f64);
         self.kernel_time_p(flops, bytes, p)
     }
 
@@ -205,6 +243,46 @@ mod tests {
         assert!(sratio > 0.5, "index arrays keep f32 SpMV above half: {sratio}");
         assert!(m.reduce_p(1 << 20, Precision::F32) < m.reduce(1 << 20));
         assert!(m.fused_cycle_p(2000, 30, Precision::F32) < m.fused_cycle(2000, 30));
+    }
+
+    #[test]
+    fn batch_gemm_amortizes_the_matrix_stream() {
+        let m = model();
+        let n = 3000;
+        let k = 8;
+        // one k-wide GEMM moves A once: far below k GEMVs
+        let gemm = m.gemm_p(n, n, k, Precision::F64);
+        let k_gemvs = k as f64 * m.gemv(n, n);
+        assert!(gemm < k_gemvs / 2.0, "gemm {gemm} vs {k} gemvs {k_gemvs}");
+        assert_eq!(m.gemm_p(n, n, 1, Precision::F64), m.gemv(n, n), "k=1 is gemv");
+        // same story sparse
+        let nnz = 5 * n;
+        let spmm = m.spmm_p(nnz, n, k, Precision::F64);
+        assert!(spmm < k as f64 * m.spmv(nnz, n));
+        assert_eq!(m.spmm_p(nnz, n, 1, Precision::F64), m.spmv(nnz, n));
+    }
+
+    #[test]
+    fn tensor_core_tf32_wins_only_flop_bound_batch_gemm() {
+        let a100 = KernelTimingModel::new(GpuSpec::a100());
+        let n = 4000;
+        // bandwidth-bound GEMV: tf32 prices exactly like f32 even on the A100
+        assert_eq!(
+            a100.gemv_p(n, n, Precision::Tf32),
+            a100.gemv_p(n, n, Precision::F32)
+        );
+        // the k-wide batch GEMM goes flop-bound on the f32 pipeline; the
+        // tensor-core rate pulls tf32 strictly below it
+        let k = 32;
+        let f32_t = a100.gemm_p(n, n, k, Precision::F32);
+        let tf_t = a100.gemm_p(n, n, k, Precision::Tf32);
+        assert!(tf_t < f32_t, "A100 tf32 gemm {tf_t} !< f32 {f32_t}");
+        // no tensor cores on the 840M: identical at any width
+        let m840 = model();
+        assert_eq!(
+            m840.gemm_p(n, n, k, Precision::Tf32),
+            m840.gemm_p(n, n, k, Precision::F32)
+        );
     }
 
     #[test]

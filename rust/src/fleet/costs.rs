@@ -85,13 +85,29 @@ pub fn shard_working_set_bytes_p(
     policy: Policy,
     precision: Precision,
 ) -> usize {
+    shard_working_set_batch_bytes_p(shape, rows, m, 1, policy, precision)
+}
+
+/// Working-set bytes of one device's shard in a k-wide *folded* multi-RHS
+/// solve: the row block is resident once, every per-RHS vector (broadcast
+/// x, output block, the gpuR-style Krylov block) replicates k times.
+/// `k == 1` is exactly [`shard_working_set_bytes_p`].
+pub fn shard_working_set_batch_bytes_p(
+    shape: &SystemShape,
+    rows: usize,
+    m: usize,
+    k: usize,
+    policy: Policy,
+    precision: Precision,
+) -> usize {
     let w = precision.element_bytes();
     let n = shape.n;
+    let k = k.max(1);
     let a = block_matrix_bytes_p(shape, rows, precision);
     match policy {
         Policy::SerialR | Policy::SerialNative => a,
-        Policy::GmatrixLike | Policy::GputoolsLike => a + w * (n + rows),
-        Policy::GpurVclLike => a + w * (rows * (m + 1) + (m + 1) * m + n + 2 * rows),
+        Policy::GmatrixLike | Policy::GputoolsLike => a + w * (n + rows) * k,
+        Policy::GpurVclLike => a + w * (rows * (m + 1) + (m + 1) * m + n + 2 * rows) * k,
     }
 }
 
@@ -150,11 +166,17 @@ pub struct ShardPricing {
     /// default; the un-pipelined pricing remains available as the
     /// regression reference.
     pub overlap: bool,
+    /// Batch width of a folded multi-RHS solve: each per-device matvec
+    /// partial becomes a k-wide block GEMM/SpMM (the row block streams
+    /// once for all k RHS), per-RHS vector collectives are issued batched
+    /// (member busy scales with k, orchestration once per batched
+    /// collective).  `1` is the ordinary single-RHS table.
+    pub width: usize,
 }
 
 impl Default for ShardPricing {
     fn default() -> Self {
-        Self { precision: Precision::F64, overlap: true }
+        Self { precision: Precision::F64, overlap: true, width: 1 }
     }
 }
 
@@ -178,26 +200,33 @@ impl Member<'_> {
         let nnz = block_nnz(shape, rows);
         let p = pricing.precision;
         let w = p.element_bytes();
+        let k = pricing.width.max(1);
         match self {
             Member::Gpu { timing, transfer, .. } => {
+                // k-wide block matvec: the row block streams ONCE for all
+                // k RHS (gemm_p/spmm_p reduce to gemv/spmv at k == 1)
                 let kernel = match shape.format {
-                    MatrixFormat::Dense => timing.gemv_p(rows, shape.n, p),
-                    MatrixFormat::Csr => timing.spmv_p(nnz, rows, p),
+                    MatrixFormat::Dense => timing.gemm_p(rows, shape.n, k, p),
+                    MatrixFormat::Csr => timing.spmm_p(nnz, rows, k, p),
                 };
                 let staged = if per_call_upload {
                     transfer.time(block_matrix_bytes_p(shape, rows, p))
                 } else {
                     0.0
                 };
-                let broadcast = transfer.time(w * shape.n);
-                let gather = transfer.time(w * rows);
+                let broadcast = transfer.time(w * shape.n * k);
+                let gather = transfer.time(w * rows * k);
                 let link = if pricing.overlap { broadcast.max(gather) } else { broadcast + gather };
                 link + staged + kernel
             }
-            Member::Host(h) => match shape.format {
-                MatrixFormat::Dense => h.gemv_time(rows, shape.n),
-                MatrixFormat::Csr => h.spmv_time(nnz),
-            },
+            Member::Host(h) => {
+                // the host member loops its k columns — no blas-3 win
+                k as f64
+                    * match shape.format {
+                        MatrixFormat::Dense => h.gemv_time(rows, shape.n),
+                        MatrixFormat::Csr => h.spmv_time(nnz),
+                    }
+            }
         }
     }
 
@@ -207,16 +236,18 @@ impl Member<'_> {
         rows: usize,
         per_call_upload: bool,
         precision: Precision,
+        width: usize,
     ) -> usize {
         if rows == 0 {
             return 0;
         }
         let w = precision.element_bytes();
+        let k = width.max(1);
         match self {
             Member::Gpu { .. } => {
                 let staged =
                     if per_call_upload { block_matrix_bytes_p(shape, rows, precision) } else { 0 };
-                w * shape.n + w * rows + staged
+                (w * shape.n + w * rows) * k + staged
             }
             Member::Host(_) => 0,
         }
@@ -309,6 +340,30 @@ pub fn shard_costs_p(
     )
 }
 
+/// [`shard_costs_p`] at batch width `k` — the folded multi-RHS sharded
+/// table: one residency establishment, per-device k-wide block matvecs,
+/// per-RHS vector collectives.  `k == 1` is exactly [`shard_costs_p`].
+pub fn shard_costs_batch_p(
+    fleet: &Fleet,
+    set: DeviceSet,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    k: usize,
+    mem_fraction: f64,
+    precision: Precision,
+) -> ShardCosts {
+    shard_costs_opts(
+        fleet,
+        set,
+        policy,
+        shape,
+        m,
+        mem_fraction,
+        ShardPricing { precision, width: k.max(1), ..Default::default() },
+    )
+}
+
 /// Fully-parameterized shard pricing (precision + collective overlap).
 pub fn shard_costs_opts(
     fleet: &Fleet,
@@ -326,12 +381,15 @@ pub fn shard_costs_opts(
     let host = HostSpec::r_interpreter_i7_4710hq();
     let precision = pricing.precision;
 
+    let kf = pricing.width.max(1) as f64;
     let per_call_upload = policy == Policy::GputoolsLike;
     let matvec =
         collect_step(&views, |v, r| v.matvec_seconds(shape, r, per_call_upload, pricing), &rows);
-    let dot = collect_step(&views, |v, r| v.reduce_seconds(r, precision), &rows);
-    let vec1 = collect_step(&views, |v, r| v.blas1_seconds(r, 1, precision), &rows);
-    let vec2 = collect_step(&views, |v, r| v.blas1_seconds(r, 2, precision), &rows);
+    // per-RHS vector collectives issued batched: member busy scales with
+    // the width, orchestration is charged once per batched collective
+    let dot = collect_step(&views, |v, r| kf * v.reduce_seconds(r, precision), &rows);
+    let vec1 = collect_step(&views, |v, r| kf * v.blas1_seconds(r, 1, precision), &rows);
+    let vec2 = collect_step(&views, |v, r| kf * v.blas1_seconds(r, 2, precision), &rows);
 
     // Collective counts of one host-orchestrated CGS GMRES(m) cycle —
     // mirrors the op anatomy of `device::costs::charge_cycle`:
@@ -355,11 +413,11 @@ pub fn shard_costs_opts(
             MatrixFormat::Dense => host.gemv_time(shape.n, shape.n),
             MatrixFormat::Csr => host.spmv_time(shape.nnz),
         };
-        mv + host.vecop_time(8 * shape.n * 3) + host.vecop_time(8 * shape.n * 2)
+        kf * (mv + host.vecop_time(8 * shape.n * 3) + host.vecop_time(8 * shape.n * 2))
     } else {
         0.0
     };
-    let ls_seconds = givens::flops(m) as f64 * host.op_overhead * 0.1;
+    let ls_seconds = kf * givens::flops(m) as f64 * host.op_overhead * 0.1;
     // per-matvec dispatch on the orchestrator (one fleet step)
     let dispatch = match policy {
         Policy::GpurVclLike => views
@@ -391,9 +449,11 @@ pub fn shard_costs_opts(
         .iter()
         .zip(&rows)
         .map(|(v, &r)| {
-            let mv = v.matvec_bytes(shape, r, per_call_upload, precision);
+            let mv = v.matvec_bytes(shape, r, per_call_upload, precision, pricing.width);
             let readbacks = match v {
-                Member::Gpu { .. } if r > 0 => 8 * (n_dot + n_norm) as usize,
+                Member::Gpu { .. } if r > 0 => {
+                    8 * (n_dot + n_norm) as usize * pricing.width.max(1)
+                }
                 _ => 0,
             };
             (n_matvec as usize) * mv + readbacks
@@ -605,6 +665,35 @@ mod tests {
         // the f64 pricing is exactly the default table
         let plain = shard_costs(&f, set01(), Policy::GmatrixLike, &shape, 30, 0.9);
         assert_eq!(plain.cycle_seconds, c64.cycle_seconds);
+    }
+
+    #[test]
+    fn folded_shard_batches_price_below_independent_cycles() {
+        let f = fleet_2gpu();
+        let shape = SystemShape::dense(4000);
+        for policy in [Policy::GmatrixLike, Policy::GputoolsLike, Policy::GpurVclLike] {
+            let c1 = shard_costs(&f, set01(), policy, &shape, 30, 0.9);
+            let k1 = shard_costs_batch_p(&f, set01(), policy, &shape, 30, 1, 0.9, Precision::F64);
+            assert_eq!(c1.cycle_seconds, k1.cycle_seconds, "{policy}: k=1 delegation");
+            assert_eq!(c1.setup_seconds, k1.setup_seconds);
+            let c4 = shard_costs_batch_p(&f, set01(), policy, &shape, 30, 4, 0.9, Precision::F64);
+            assert!(
+                c4.cycle_seconds < 4.0 * c1.cycle_seconds,
+                "{policy}: folded joint cycle {} !< 4x {}",
+                c4.cycle_seconds,
+                c1.cycle_seconds
+            );
+            assert_eq!(c4.setup_seconds, c1.setup_seconds, "{policy}: one residency");
+        }
+        // the k-wide working set grows with the replicated Krylov bases
+        assert!(
+            shard_working_set_batch_bytes_p(&shape, 2000, 30, 4, Policy::GpurVclLike, Precision::F64)
+                > shard_working_set_bytes(&shape, 2000, 30, Policy::GpurVclLike)
+        );
+        assert_eq!(
+            shard_working_set_batch_bytes_p(&shape, 2000, 30, 1, Policy::GpurVclLike, Precision::F64),
+            shard_working_set_bytes(&shape, 2000, 30, Policy::GpurVclLike)
+        );
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::backend::{CycleEngine, CycleResult, Policy};
 use crate::device::DeviceSim;
 use crate::gmres::arnoldi::BREAKDOWN_RTOL;
 use crate::gmres::{givens, GmresConfig};
-use crate::linalg::{blas, LinearOperator, SystemMatrix};
+use crate::linalg::{blas, SystemMatrix};
 use crate::precision::{narrow_system, narrow_vector, Precision};
 use crate::Result;
 
@@ -50,6 +50,25 @@ pub fn build_sharded_engine(
     let (a, b) = config.precond.apply_to_system(a, b);
     let precision = config.precision.fixed_or_default();
     ShardedCycleEngine::new_mixed(fleet, set, policy, (a, b), config.m, mem_fraction, precision)
+}
+
+/// Build a row-block sharded multi-RHS [`crate::gmres::BlockEngine`] for a
+/// *folded* batch across `set`: one shard split serves all k right-hand
+/// sides, joint cycles book the fleet's k-wide batch tables
+/// ([`super::costs::shard_costs_batch_p`]).  Same precondition/precision
+/// contract as [`build_sharded_engine`].
+pub fn build_sharded_block_engine(
+    fleet: &Fleet,
+    set: DeviceSet,
+    policy: Policy,
+    a: SystemMatrix,
+    bs: Vec<Vec<f64>>,
+    config: &GmresConfig,
+    mem_fraction: f64,
+) -> Result<crate::gmres::BlockEngine> {
+    let (a, bs) = config.precond.apply_to_block(a, bs);
+    let precision = config.precision.fixed_or_default();
+    crate::gmres::BlockEngine::sharded(fleet, set, policy, a, bs, config.m, mem_fraction, precision)
 }
 
 /// Row-block sharded GMRES(m) cycle engine.
@@ -278,12 +297,7 @@ impl CycleEngine for ShardedCycleEngine {
         // precision system for reduced-precision shards (the iterative-
         // refinement check on the orchestrating host)
         let resnorm = match &self.verify {
-            Some((fa, fb)) => {
-                let ax = fa.apply(&x);
-                let mut r = vec![0.0; self.n];
-                blas::sub_into(fb, &ax, &mut r);
-                blas::nrm2(&r)
-            }
+            Some((fa, fb)) => fa.residual_norm(fb, &x),
             None => {
                 let ax = self.matvec(&x);
                 let mut r = vec![0.0; self.n];

@@ -36,7 +36,7 @@ pub mod placement;
 pub mod shard;
 
 pub use costs::ShardCosts;
-pub use exec::{build_sharded_engine, ShardedCycleEngine};
+pub use exec::{build_sharded_block_engine, build_sharded_engine, ShardedCycleEngine};
 pub use placement::{DeviceSet, Placement};
 pub use shard::{RowBlocks, ShardedMatrix};
 
@@ -157,12 +157,15 @@ impl Fleet {
                 "v100" | "tesla-v100" | "teslav100" => {
                     ("v100".to_string(), DeviceKind::Gpu(GpuSpec::tesla_v100()))
                 }
+                "a100" | "a100-pcie" => {
+                    ("a100".to_string(), DeviceKind::Gpu(GpuSpec::a100()))
+                }
                 "host" | "cpu" | "r-host" => (
                     "host".to_string(),
                     DeviceKind::Host(HostSpec::r_interpreter_i7_4710hq()),
                 ),
                 other => bail!(
-                    "unknown fleet device `{other}` (catalog: 840m | v100 | host; \
+                    "unknown fleet device `{other}` (catalog: 840m | v100 | a100 | host; \
                      optional budget override like 840m=512m)"
                 ),
             };
@@ -335,6 +338,10 @@ mod tests {
         assert!(f.device(1).is_gpu());
         assert!(!f.device(2).is_gpu());
         assert_eq!(f.gpu_ids(), vec![0, 1]);
+
+        let a = Fleet::parse("a100").unwrap();
+        assert!(a.device(0).is_gpu());
+        assert!(a.device(0).gpu_spec().unwrap().tf32_flops.is_some());
 
         let g = Fleet::parse("840m=2m,840m=2m").unwrap();
         assert_eq!(g.label_of(0), "840m");

@@ -1,0 +1,621 @@
+//! Multi-RHS block solves: k Arnoldi processes over ONE matrix residency.
+//!
+//! The paper's cost asymmetry — host↔device transfer dwarfing per-iteration
+//! arithmetic — rewards amortizing a single matrix upload across many
+//! solves.  This module is the execution half of that amortization (the
+//! batcher's *fold*): a [`BlockEngine`] owns one resident system (possibly
+//! narrowed to a reduced storage precision, possibly row-block sharded
+//! across a fleet) and `k` right-hand sides, and [`BlockGmres`] drives `k`
+//! *independent* restarted-GMRES(m) processes over it.
+//!
+//! Numerics: each right-hand side runs the same classical-Gram-Schmidt
+//! Arnoldi cycle ([`crate::gmres::arnoldi::cgs_cycle`]) an unfolded solve
+//! runs — per-RHS residuals and solutions therefore match k independent
+//! solves to round-off (pinned by `tests/session_e2e.rs`).  Only the
+//! *operator applications* fuse: the modeled cost of each joint cycle
+//! books the k-wide GEMM/SpMM batch tables
+//! ([`crate::device::costs::charge_cycle_batch_p`] for single-residency
+//! placements, [`crate::fleet::costs::shard_costs_batch_p`] for shards),
+//! which stream the matrix once per step for all k Krylov processes.
+//! Reduced precisions follow the iterative-refinement contract of
+//! [`crate::precision::engine`]: inner cycles run on the narrowed system,
+//! every reported residual is recomputed in f64 against the full-precision
+//! one.
+//!
+//! Per-RHS accounting: a joint cycle of width `w` attributes `1/w` of its
+//! modeled seconds to each participating right-hand side (setup `1/k` to
+//! all), so per-RHS `SolveReport::sim_seconds` sum to the engine total and
+//! the worker can feed per-RHS (predicted, measured) pairs into the
+//! planner's calibration without biasing the single-RHS cells.
+
+use anyhow::ensure;
+
+use crate::backend::Policy;
+use crate::device::{costs, DeviceSim};
+use crate::fleet::{costs as fleet_costs, DeviceId, DeviceSet, Fleet, RowBlocks, ShardedMatrix};
+use crate::gmres::arnoldi::cgs_cycle;
+use crate::gmres::history::{ConvergenceHistory, SolveReport};
+use crate::gmres::solver::GmresConfig;
+use crate::linalg::{blas, LinearOperator, SystemMatrix, SystemShape};
+use crate::precision::{narrow_system, narrow_vectors, Precision};
+use crate::Result;
+
+/// Row-block sharded operator view (same shard-by-shard application the
+/// fleet executor runs, wrapped as a [`LinearOperator`] so the per-RHS
+/// Arnoldi cycle is placement-agnostic).
+struct ShardedOp(ShardedMatrix);
+
+impl LinearOperator for ShardedOp {
+    fn nrows(&self) -> usize {
+        self.0.n()
+    }
+
+    fn ncols(&self) -> usize {
+        self.0.n()
+    }
+
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        for k in 0..self.0.shard_count() {
+            let r = self.0.blocks().range(k);
+            self.0.apply_shard_into(k, x, &mut y[r]);
+        }
+    }
+}
+
+/// How joint cycles are charged to the modeled clock.
+enum Charger {
+    /// Single-residency placement: the shared device batch cost table.
+    Device,
+    /// Sharded placement: precomputed fleet batch tables, one per active
+    /// width (`by_width[w-1]` prices a width-`w` joint cycle and carries
+    /// its per-member busy/bytes shares for the coordinator's per-device
+    /// metrics).
+    Sharded {
+        members: Vec<DeviceId>,
+        setup_seconds: f64,
+        setup_busy: Vec<f64>,
+        setup_bytes: Vec<usize>,
+        /// Per active width: (cycle seconds, per-member busy, per-member
+        /// bytes).
+        by_width: Vec<(f64, Vec<f64>, Vec<usize>)>,
+    },
+}
+
+/// One resident system serving `k` right-hand sides.
+pub struct BlockEngine {
+    policy: Policy,
+    op: Box<dyn LinearOperator>,
+    /// Inner right-hand sides (narrowed when the precision is reduced).
+    bs: Vec<Vec<f64>>,
+    /// `||b||` of each ORIGINAL (f64) right-hand side.
+    bnorms: Vec<f64>,
+    /// Full-precision system + right-hand sides for the f64 outer
+    /// residual of reduced-precision solves (`None` when f64 throughout).
+    verify: Option<(SystemMatrix, Vec<Vec<f64>>)>,
+    shape: SystemShape,
+    m: usize,
+    precision: Precision,
+    sim: DeviceSim,
+    charger: Charger,
+    setup_charged: bool,
+    /// Accumulated per-member busy seconds / bytes (sharded placements
+    /// only; empty otherwise).
+    device_busy: Vec<f64>,
+    device_bytes: Vec<usize>,
+}
+
+/// Validated, precision-split pieces shared by both placements.
+struct BlockParts {
+    shape: SystemShape,
+    bnorms: Vec<f64>,
+    /// The matrix the operator runs on (narrowed when reduced).
+    inner_a: SystemMatrix,
+    /// The right-hand sides the Arnoldi processes see (narrowed when
+    /// reduced).
+    inner_bs: Vec<Vec<f64>>,
+    /// Full-precision system for the f64 outer residual (reduced only).
+    verify: Option<(SystemMatrix, Vec<Vec<f64>>)>,
+}
+
+fn block_parts(a: SystemMatrix, bs: Vec<Vec<f64>>, precision: Precision) -> Result<BlockParts> {
+    let n = a.n();
+    ensure!(a.is_square(), "square systems only, got order {n} non-square");
+    ensure!(!bs.is_empty(), "block solve needs at least one right-hand side");
+    for (i, b) in bs.iter().enumerate() {
+        ensure!(b.len() == n, "rhs {i} length {} != system order {n}", b.len());
+    }
+    let shape = a.shape();
+    let bnorms: Vec<f64> = bs.iter().map(|b| blas::nrm2(b)).collect();
+    if precision.is_reduced() {
+        let inner_a = narrow_system(a.clone(), precision);
+        let inner_bs = narrow_vectors(&bs, precision);
+        Ok(BlockParts { shape, bnorms, inner_a, inner_bs, verify: Some((a, bs)) })
+    } else {
+        Ok(BlockParts { shape, bnorms, inner_a: a, inner_bs: bs, verify: None })
+    }
+}
+
+impl BlockEngine {
+    /// Build a single-residency block engine over an
+    /// already-preconditioned system (callers go through
+    /// [`crate::backend::build_block_engine`]).
+    pub fn resident(
+        policy: Policy,
+        a: SystemMatrix,
+        bs: Vec<Vec<f64>>,
+        m: usize,
+        precision: Precision,
+    ) -> Result<Self> {
+        ensure!(m >= 1, "restart length must be >= 1");
+        let p = block_parts(a, bs, precision)?;
+        Ok(Self {
+            policy,
+            op: Box::new(p.inner_a),
+            bs: p.inner_bs,
+            bnorms: p.bnorms,
+            verify: p.verify,
+            shape: p.shape,
+            m,
+            precision,
+            sim: DeviceSim::paper_testbed(false),
+            charger: Charger::Device,
+            setup_charged: false,
+            device_busy: Vec::new(),
+            device_bytes: Vec::new(),
+        })
+    }
+
+    /// Build a row-block sharded block engine across `set` (callers go
+    /// through [`crate::fleet::build_sharded_block_engine`]).
+    pub fn sharded(
+        fleet: &Fleet,
+        set: DeviceSet,
+        policy: Policy,
+        a: SystemMatrix,
+        bs: Vec<Vec<f64>>,
+        m: usize,
+        mem_fraction: f64,
+        precision: Precision,
+    ) -> Result<Self> {
+        ensure!(m >= 1, "restart length must be >= 1");
+        ensure!(set.len() >= 2, "sharded placement needs >= 2 devices, got {}", set.len());
+        for id in set.iter() {
+            ensure!(id < fleet.len(), "device id {id} not in the {}-device fleet", fleet.len());
+        }
+        let p = block_parts(a, bs, precision)?;
+        let k = p.inner_bs.len();
+        let rows: Vec<usize> =
+            fleet.shard_plan(set, p.shape.n, mem_fraction).iter().map(|s| s.rows).collect();
+        let sharded = ShardedMatrix::split(&p.inner_a, RowBlocks::from_rows(&rows));
+        // one fleet batch table per possible active width (the tail of a
+        // block solve narrows as right-hand sides converge)
+        let table = |w: usize| {
+            fleet_costs::shard_costs_batch_p(
+                fleet,
+                set,
+                policy,
+                &p.shape,
+                m,
+                w,
+                mem_fraction,
+                precision,
+            )
+        };
+        let by_width: Vec<(f64, Vec<f64>, Vec<usize>)> = (1..=k)
+            .map(|w| {
+                let t = table(w);
+                (t.cycle_seconds, t.per_device_cycle_busy, t.per_device_cycle_bytes)
+            })
+            .collect();
+        let full = table(k);
+        let nmembers = full.members.len();
+        Ok(Self {
+            policy,
+            op: Box::new(ShardedOp(sharded)),
+            bs: p.inner_bs,
+            bnorms: p.bnorms,
+            verify: p.verify,
+            shape: p.shape,
+            m,
+            precision,
+            sim: DeviceSim::paper_testbed(false),
+            charger: Charger::Sharded {
+                members: full.members,
+                setup_seconds: full.setup_seconds,
+                setup_busy: full.per_device_setup_busy,
+                setup_bytes: full.per_device_setup_bytes,
+                by_width,
+            },
+            setup_charged: false,
+            device_busy: vec![0.0; nmembers],
+            device_bytes: vec![0; nmembers],
+        })
+    }
+
+    /// Number of right-hand sides.
+    pub fn k(&self) -> usize {
+        self.bs.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.shape.n
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn shape(&self) -> &SystemShape {
+        &self.shape
+    }
+
+    /// `||b||` of each original (f64) right-hand side.
+    pub fn bnorms(&self) -> &[f64] {
+        &self.bnorms
+    }
+
+    /// The engine's modeled clock.
+    pub fn sim(&self) -> &DeviceSim {
+        &self.sim
+    }
+
+    /// Per-member `(id, busy seconds, bytes moved)` accumulated so far —
+    /// non-empty only for sharded placements (mirrors
+    /// [`crate::fleet::ShardedCycleEngine::device_report`]).
+    pub fn device_report(&self) -> Vec<(DeviceId, f64, usize)> {
+        match &self.charger {
+            Charger::Device => Vec::new(),
+            Charger::Sharded { members, .. } => members
+                .iter()
+                .zip(self.device_busy.iter().zip(&self.device_bytes))
+                .map(|(&id, (&busy, &bytes))| (id, busy, bytes))
+                .collect(),
+        }
+    }
+
+    /// Charge the one-time residency establishment; returns the modeled
+    /// seconds booked (0.0 after the first call).
+    fn charge_setup_once(&mut self) -> f64 {
+        if self.setup_charged {
+            return 0.0;
+        }
+        self.setup_charged = true;
+        let before = self.sim.elapsed();
+        let (policy, m, precision, k) = (self.policy, self.m, self.precision, self.bs.len());
+        let shape = self.shape;
+        match &self.charger {
+            Charger::Device => {
+                costs::charge_setup_batch_p(&mut self.sim, policy, &shape, m, k, precision)
+            }
+            Charger::Sharded { setup_seconds, setup_busy, setup_bytes, .. } => {
+                self.sim.charge_external("block-fleet-setup", *setup_seconds);
+                for (acc, add) in self.device_busy.iter_mut().zip(setup_busy) {
+                    *acc += *add;
+                }
+                for (acc, add) in self.device_bytes.iter_mut().zip(setup_bytes) {
+                    *acc += *add;
+                }
+            }
+        }
+        self.sim.elapsed() - before
+    }
+
+    /// Charge one joint cycle at the given active width; returns the
+    /// modeled seconds booked.
+    fn charge_joint_cycle(&mut self, width: usize) -> f64 {
+        let before = self.sim.elapsed();
+        let (policy, m, precision) = (self.policy, self.m, self.precision);
+        let shape = self.shape;
+        match &self.charger {
+            Charger::Device => {
+                costs::charge_cycle_batch_p(&mut self.sim, policy, &shape, m, width, precision)
+            }
+            Charger::Sharded { by_width, .. } => {
+                let (seconds, busy, bytes) = &by_width[width.clamp(1, by_width.len()) - 1];
+                self.sim.charge_external("block-fleet-cycle", *seconds);
+                for (acc, add) in self.device_busy.iter_mut().zip(busy) {
+                    *acc += *add;
+                }
+                for (acc, add) in self.device_bytes.iter_mut().zip(bytes) {
+                    *acc += *add;
+                }
+            }
+        }
+        self.sim.elapsed() - before
+    }
+
+    /// One restarted-GMRES(m) cycle for right-hand side `i` from `x0`:
+    /// returns the new iterate and its (f64-verified when reduced)
+    /// residual norm.
+    fn rhs_cycle(&self, i: usize, x0: &[f64]) -> (Vec<f64>, f64) {
+        let (x, inner_res) = cgs_cycle(self.op.as_ref(), &self.bs[i], x0, self.m);
+        match &self.verify {
+            Some((full, full_bs)) => {
+                let res = full.residual_norm(&full_bs[i], &x);
+                (x, res)
+            }
+            None => (x, inner_res),
+        }
+    }
+}
+
+/// The multi-RHS restart driver: per-RHS tolerances and restart budgets
+/// over one [`BlockEngine`].
+pub struct BlockGmres {
+    configs: Vec<GmresConfig>,
+}
+
+impl BlockGmres {
+    /// Per-RHS configurations (every `m` must equal the engine's).
+    pub fn new(configs: Vec<GmresConfig>) -> Self {
+        Self { configs }
+    }
+
+    /// The same configuration for all `k` right-hand sides.
+    pub fn uniform(config: GmresConfig, k: usize) -> Self {
+        Self { configs: vec![config; k] }
+    }
+
+    /// Drive all right-hand sides to their tolerances (or budgets),
+    /// narrowing the charged batch width as they converge.  Returns one
+    /// [`SolveReport`] per right-hand side, in input order.
+    pub fn solve(&self, engine: &mut BlockEngine) -> Result<Vec<SolveReport>> {
+        let k = engine.k();
+        ensure!(
+            self.configs.len() == k,
+            "{} configs for {k} right-hand sides",
+            self.configs.len()
+        );
+        for (i, c) in self.configs.iter().enumerate() {
+            ensure!(
+                c.m == engine.m(),
+                "config {i} restart length {} != engine m {}",
+                c.m,
+                engine.m()
+            );
+            // the engine was built ONCE for the whole block: a per-RHS
+            // config must not claim a preconditioner or precision the
+            // shared residency does not run (tol/max_restarts are the
+            // only legitimately per-RHS knobs)
+            ensure!(
+                c.precond == self.configs[0].precond,
+                "config {i} precond {} != block precond {}",
+                c.precond,
+                self.configs[0].precond
+            );
+            ensure!(
+                c.precision.fixed_or_default() == engine.precision(),
+                "config {i} precision {} != engine precision {}",
+                c.precision.fixed_or_default(),
+                engine.precision()
+            );
+        }
+        let n = engine.n();
+        let targets: Vec<f64> = self
+            .configs
+            .iter()
+            .zip(engine.bnorms())
+            .map(|(c, &bn)| c.tol * if bn > 0.0 { bn } else { 1.0 })
+            .collect();
+
+        let mut xs: Vec<Vec<f64>> = vec![vec![0.0; n]; k];
+        let mut active: Vec<bool> = vec![true; k];
+        let mut converged = vec![false; k];
+        let mut resnorms = vec![f64::INFINITY; k];
+        let mut cycles = vec![0usize; k];
+        let mut histories: Vec<ConvergenceHistory> = vec![ConvergenceHistory::default(); k];
+        let mut per_rhs_sim = vec![0.0f64; k];
+
+        let start = std::time::Instant::now();
+        let setup = engine.charge_setup_once();
+        for share in per_rhs_sim.iter_mut() {
+            *share += setup / k as f64;
+        }
+        loop {
+            let active_idx: Vec<usize> = (0..k).filter(|&i| active[i]).collect();
+            if active_idx.is_empty() {
+                break;
+            }
+            let width = active_idx.len();
+            let charged = engine.charge_joint_cycle(width);
+            let share = charged / width as f64;
+            for &i in &active_idx {
+                let (x, res) = engine.rhs_cycle(i, &xs[i]);
+                xs[i] = x;
+                resnorms[i] = res;
+                histories[i].push(res);
+                cycles[i] += 1;
+                per_rhs_sim[i] += share;
+                if res <= targets[i] {
+                    converged[i] = true;
+                    active[i] = false;
+                } else if cycles[i] >= self.configs[i].max_restarts {
+                    active[i] = false;
+                }
+            }
+        }
+        let wall = start.elapsed().as_secs_f64();
+
+        let mut reports = Vec::with_capacity(k);
+        for i in 0..k {
+            let bn = engine.bnorms()[i];
+            reports.push(SolveReport {
+                policy: engine.policy(),
+                n,
+                m: engine.m(),
+                precond: self.configs[i].precond,
+                precision: engine.precision(),
+                x: std::mem::take(&mut xs[i]),
+                resnorm: resnorms[i],
+                rel_resnorm: if bn > 0.0 { resnorms[i] / bn } else { resnorms[i] },
+                converged: converged[i],
+                cycles: cycles[i],
+                // per-RHS share of the block's wallclock (sums to total)
+                wall_seconds: wall / k as f64,
+                sim_seconds: per_rhs_sim[i],
+                history: std::mem::take(&mut histories[i]),
+            });
+        }
+        Ok(reports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::generators;
+
+    fn block_system(n: usize, k: usize, seed: u64) -> (SystemMatrix, Vec<Vec<f64>>) {
+        let (a, b, _) = generators::table1_system(n, seed);
+        let mut bs = vec![b];
+        for j in 1..k {
+            bs.push(generators::random_vector(n, seed + 100 + j as u64));
+        }
+        (SystemMatrix::Dense(a), bs)
+    }
+
+    #[test]
+    fn block_solve_matches_independent_solves() {
+        let (a, bs) = block_system(64, 3, 7);
+        let config = GmresConfig { m: 10, tol: 1e-9, max_restarts: 100, ..Default::default() };
+        let mut engine =
+            BlockEngine::resident(Policy::GmatrixLike, a.clone(), bs.clone(), 10, Precision::F64)
+                .unwrap();
+        let reports = BlockGmres::uniform(config, 3).solve(&mut engine).unwrap();
+        assert_eq!(reports.len(), 3);
+        for (i, rep) in reports.iter().enumerate() {
+            assert!(rep.converged, "rhs {i}: cycles {} rel {}", rep.cycles, rep.rel_resnorm);
+            // residual claim is the true f64 residual of THIS rhs
+            let ax = a.apply(&rep.x);
+            let mut r = vec![0.0; 64];
+            blas::sub_into(&bs[i], &ax, &mut r);
+            let true_rel = blas::nrm2(&r) / blas::nrm2(&bs[i]);
+            assert!(
+                (true_rel - rep.rel_resnorm).abs() < 1e-12 * (1.0 + true_rel),
+                "rhs {i}: reported {} vs true {true_rel}",
+                rep.rel_resnorm
+            );
+        }
+    }
+
+    #[test]
+    fn per_rhs_sim_shares_sum_to_engine_clock() {
+        let (a, bs) = block_system(48, 4, 3);
+        let config = GmresConfig { m: 8, tol: 1e-8, max_restarts: 100, ..Default::default() };
+        let mut engine =
+            BlockEngine::resident(Policy::GputoolsLike, a, bs, 8, Precision::F64).unwrap();
+        let reports = BlockGmres::uniform(config, 4).solve(&mut engine).unwrap();
+        let total: f64 = reports.iter().map(|r| r.sim_seconds).sum();
+        let clock = engine.sim().elapsed();
+        assert!((total - clock).abs() < 1e-9 * clock.max(1.0), "{total} vs {clock}");
+        assert!(clock > 0.0);
+    }
+
+    #[test]
+    fn reduced_precision_block_verifies_in_f64() {
+        let (a, bs) = block_system(56, 2, 11);
+        let config = GmresConfig {
+            m: 12,
+            tol: 1e-4,
+            max_restarts: 60,
+            precision: crate::precision::PrecisionPolicy::Fixed(Precision::F32),
+            ..Default::default()
+        };
+        let mut engine =
+            BlockEngine::resident(Policy::GmatrixLike, a.clone(), bs.clone(), 12, Precision::F32)
+                .unwrap();
+        assert_eq!(engine.precision(), Precision::F32);
+        let reports = BlockGmres::uniform(config, 2).solve(&mut engine).unwrap();
+        for (i, rep) in reports.iter().enumerate() {
+            assert!(rep.converged, "rhs {i}");
+            assert_eq!(rep.precision, Precision::F32);
+            let ax = a.apply(&rep.x);
+            let mut r = vec![0.0; 56];
+            blas::sub_into(&bs[i], &ax, &mut r);
+            let true_rel = blas::nrm2(&r) / blas::nrm2(&bs[i]);
+            assert!((true_rel - rep.rel_resnorm).abs() < 1e-12 * (1.0 + true_rel));
+            assert!(rep.rel_resnorm <= 1e-4, "f64-verified accuracy");
+        }
+    }
+
+    #[test]
+    fn sharded_block_engine_tracks_device_shares() {
+        let fleet = Fleet::parse("840m,v100").unwrap();
+        let (a, bs) = block_system(64, 3, 2);
+        let config = GmresConfig { m: 8, tol: 1e-8, max_restarts: 100, ..Default::default() };
+        let mut e = BlockEngine::sharded(
+            &fleet,
+            DeviceSet::from_ids(&[0, 1]),
+            Policy::GmatrixLike,
+            a,
+            bs,
+            8,
+            0.9,
+            Precision::F64,
+        )
+        .unwrap();
+        let reports = BlockGmres::uniform(config, 3).solve(&mut e).unwrap();
+        assert!(reports.iter().all(|r| r.converged));
+        let devs = e.device_report();
+        assert_eq!(devs.len(), 2, "both shard members tracked");
+        assert!(devs.iter().all(|&(_, busy, _)| busy > 0.0), "every member worked: {devs:?}");
+        assert!(devs.iter().any(|&(_, _, bytes)| bytes > 0), "transfers booked: {devs:?}");
+        // single-residency engines report no per-device shares
+        let (a2, bs2) = block_system(32, 2, 3);
+        let e2 = BlockEngine::resident(Policy::GmatrixLike, a2, bs2, 8, Precision::F64).unwrap();
+        assert!(e2.device_report().is_empty());
+    }
+
+    #[test]
+    fn mixed_targets_deactivate_independently() {
+        let (a, bs) = block_system(40, 2, 5);
+        let loose = GmresConfig { m: 6, tol: 1e-2, max_restarts: 100, ..Default::default() };
+        let tight = GmresConfig { m: 6, tol: 1e-10, max_restarts: 100, ..Default::default() };
+        let mut engine =
+            BlockEngine::resident(Policy::SerialNative, a, bs, 6, Precision::F64).unwrap();
+        let reports = BlockGmres::new(vec![loose, tight]).solve(&mut engine).unwrap();
+        assert!(reports[0].converged && reports[1].converged);
+        assert!(
+            reports[0].cycles <= reports[1].cycles,
+            "loose rhs must stop no later: {} vs {}",
+            reports[0].cycles,
+            reports[1].cycles
+        );
+        assert!(reports[1].rel_resnorm <= 1e-10);
+    }
+
+    #[test]
+    fn mismatched_block_configs_rejected() {
+        use crate::gmres::PrecondKind;
+        use crate::precision::PrecisionPolicy;
+        let (a, bs) = block_system(16, 2, 1);
+        let mut e = BlockEngine::resident(Policy::SerialR, a, bs, 4, Precision::F64).unwrap();
+        let base = GmresConfig { m: 4, ..Default::default() };
+        // a per-RHS precond the shared residency does not run is refused
+        let jac = GmresConfig { m: 4, precond: PrecondKind::Jacobi, ..Default::default() };
+        assert!(BlockGmres::new(vec![base, jac]).solve(&mut e).is_err());
+        // so is a precision claim the engine was not built with
+        let f32c = GmresConfig {
+            m: 4,
+            precision: PrecisionPolicy::Fixed(Precision::F32),
+            ..Default::default()
+        };
+        assert!(BlockGmres::new(vec![f32c, f32c]).solve(&mut e).is_err());
+    }
+
+    #[test]
+    fn degenerate_blocks_rejected() {
+        let (a, mut bs) = block_system(16, 2, 0);
+        bs[1] = vec![0.0; 7]; // wrong length
+        assert!(BlockEngine::resident(Policy::SerialR, a.clone(), bs, 4, Precision::F64).is_err());
+        assert!(BlockEngine::resident(Policy::SerialR, a, Vec::new(), 4, Precision::F64).is_err());
+    }
+}

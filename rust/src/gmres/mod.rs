@@ -4,12 +4,14 @@
 //! restart driver that runs any offload-policy [`crate::backend::CycleEngine`].
 
 pub mod arnoldi;
+pub mod block;
 pub mod givens;
 pub mod history;
 pub mod precond;
 pub mod solver;
 
 pub use arnoldi::Ortho;
+pub use block::{BlockEngine, BlockGmres};
 pub use history::{ConvergenceHistory, SolveReport};
 pub use precond::PrecondKind;
 pub use solver::{GmresConfig, RestartedGmres};

@@ -55,22 +55,37 @@ impl PrecondKind {
     /// Materialize the left-preconditioned system `(M⁻¹A, M⁻¹b)` in the
     /// same storage format (identity returns the inputs untouched).
     pub fn apply_to_system(&self, a: SystemMatrix, b: Vec<f64>) -> (SystemMatrix, Vec<f64>) {
+        let (a, mut bs) = self.apply_to_block(a, vec![b]);
+        (a, bs.pop().expect("one rhs in, one rhs out"))
+    }
+
+    /// [`PrecondKind::apply_to_system`] for a k-wide multi-RHS block: the
+    /// matrix is row-scaled ONCE and every right-hand side is scaled by
+    /// the same `D⁻¹` — the preconditioning analogue of the fold's single
+    /// residency.
+    pub fn apply_to_block(
+        &self,
+        a: SystemMatrix,
+        bs: Vec<Vec<f64>>,
+    ) -> (SystemMatrix, Vec<Vec<f64>>) {
         match self {
-            PrecondKind::Identity => (a, b),
-            PrecondKind::Jacobi => match a {
-                SystemMatrix::Dense(mut d) => {
-                    let j = Jacobi::from_dense(&d);
-                    d.scale_rows(j.inv_diag());
-                    let b = j.apply(&b);
-                    (SystemMatrix::Dense(d), b)
-                }
-                SystemMatrix::Csr(mut c) => {
-                    let j = Jacobi::from_csr(&c);
-                    c.scale_rows(j.inv_diag());
-                    let b = j.apply(&b);
-                    (SystemMatrix::Csr(c), b)
-                }
-            },
+            PrecondKind::Identity => (a, bs),
+            PrecondKind::Jacobi => {
+                let (a, j) = match a {
+                    SystemMatrix::Dense(mut d) => {
+                        let j = Jacobi::from_dense(&d);
+                        d.scale_rows(j.inv_diag());
+                        (SystemMatrix::Dense(d), j)
+                    }
+                    SystemMatrix::Csr(mut c) => {
+                        let j = Jacobi::from_csr(&c);
+                        c.scale_rows(j.inv_diag());
+                        (SystemMatrix::Csr(c), j)
+                    }
+                };
+                let bs = bs.into_iter().map(|b| j.apply(&b)).collect();
+                (a, bs)
+            }
         }
     }
 }

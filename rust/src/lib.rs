@@ -42,9 +42,12 @@
 //!   placement × precision, prices them through the shared cost table
 //!   plus a convergence model, and refines per-(policy, format,
 //!   placement, precision) coefficients online from worker feedback.
-//! * **[`coordinator`]** — the L3 solve service: request router (delegating
-//!   auto-selection to the planner), admission by device memory, batcher,
-//!   worker pool, metrics.
+//! * **[`coordinator`]** — the L3 solve service: content-addressed matrix
+//!   sessions (`register -> MatrixHandle`, typed request builders),
+//!   request router (delegating auto-selection to the planner), admission
+//!   by device memory, a fold-aware batcher (same-matrix batches collapse
+//!   into multi-RHS block solves when the planner prices the fold
+//!   cheaper), worker pool, metrics.
 //! * **[`report`]** — Table 1 / Figure 5 regeneration harness, ablations,
 //!   paper reference data.
 

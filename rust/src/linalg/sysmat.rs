@@ -142,6 +142,18 @@ impl SystemMatrix {
             SystemMatrix::Csr(a) => a.diagonal(),
         }
     }
+
+    /// `||b - A x||_2` in full f64 — the iterative-refinement verification
+    /// step.  ONE implementation shared by every engine that recomputes a
+    /// true residual against the full-precision system (the mixed-precision
+    /// driver, the sharded executor, the multi-RHS block engine), so the
+    /// verification contract cannot drift between them.
+    pub fn residual_norm(&self, b: &[f64], x: &[f64]) -> f64 {
+        let ax = self.apply(x);
+        let mut r = vec![0.0; b.len()];
+        crate::linalg::blas::sub_into(b, &ax, &mut r);
+        crate::linalg::blas::nrm2(&r)
+    }
 }
 
 impl From<DenseMatrix> for SystemMatrix {

@@ -5,16 +5,16 @@
 //! ```text
 //! gmres-rs solve  [--n 512] [--policy serial-native] [--format dense|csr]
 //!                 [--m 30] [--tol 1e-6] [--precond identity|jacobi]
-//!                 [--precision f64|f32|tf32] [--seed 42]
+//!                 [--precision f64|f32|tf32] [--rhs-count 1] [--seed 42]
 //! gmres-rs plan   [--n 512] [--format dense|csr] [--m 30] [--tol 1e-6]
 //!                 [--policy P] [--precision auto|f64|f32|tf32]
-//!                 [--fleet 840m,v100,host]   (alias: explain)
+//!                 [--rhs-count 1] [--fleet 840m,v100,a100,host]   (alias: explain)
 //! gmres-rs sweep  [--what table1|figure5|blas1|memcap] [--measured]
 //!                 [--format dense|csr] [--sizes a,b,..] [--m 30] [--csv out.csv]
 //! gmres-rs serve  [--requests 16] [--sizes 256,512] [--cpu-workers 2] [--m 8]
-//!                 [--tol 1e-6] [--format dense|csr]
-//!                 [--precision auto|f64|f32|tf32] [--fleet 840m,v100,host]
-//!                 [--calib-file path]
+//!                 [--tol 1e-6] [--format dense|csr] [--policy P]
+//!                 [--precision auto|f64|f32|tf32] [--rhs-count 1]
+//!                 [--fleet 840m,v100,a100,host] [--calib-file path]
 //! gmres-rs info
 //! ```
 
@@ -40,16 +40,17 @@ gmres-rs — R-GPU GMRES reproduction (Oancea & Pospisil 2018)
 USAGE:
   gmres-rs solve [--n N] [--policy P] [--format dense|csr] [--m M] [--tol T]
                  [--precond identity|jacobi] [--precision f64|f32|tf32]
-                 [--seed S]
+                 [--rhs-count K] [--seed S]
   gmres-rs plan  [--n N] [--format dense|csr] [--m M] [--tol T] [--policy P]
-                 [--precision auto|f64|f32|tf32] [--fleet 840m,v100,host]
+                 [--precision auto|f64|f32|tf32] [--rhs-count K]
+                 [--fleet 840m,v100,a100,host]
                  (alias: explain — show ranked candidate plans + prediction)
   gmres-rs sweep [--what table1|figure5|blas1|memcap] [--measured]
                  [--format dense|csr] [--sizes a,b,..] [--m M] [--csv PATH]
   gmres-rs serve [--requests R] [--sizes a,b,..] [--cpu-workers W] [--m M]
-                 [--tol T] [--format dense|csr]
-                 [--precision auto|f64|f32|tf32] [--fleet 840m,v100,host]
-                 [--calib-file PATH]
+                 [--tol T] [--format dense|csr] [--policy P]
+                 [--precision auto|f64|f32|tf32] [--rhs-count K]
+                 [--fleet 840m,v100,a100,host] [--calib-file PATH]
   gmres-rs info
 
 POLICIES:  serial-r | serial-native | gmatrix | gputools | gpuR
@@ -59,9 +60,14 @@ PRECISION: auto (planner arbitrates) | f64 | f32 | tf32 — reduced precisions
            run working-precision Arnoldi with f64-verified residuals
            (iterative refinement); tolerances below a precision's accuracy
            floor admit only f64
-FLEET:     comma-separated devices from the catalog 840m | v100 | host,
+FLEET:     comma-separated devices from the catalog 840m | v100 | a100 | host,
            each optionally budget-capped (840m=512m); plans grow a placement
            axis (single device or row-block shard) across the fleet
+RHS-COUNT: K > 1 exercises multi-RHS amortization — `solve` runs one k-wide
+           block solve over a single residency, `plan` prices folded batches
+           (batch column), `serve` registers matrix sessions and bursts
+           same-handle submissions so the batcher folds them (watch the
+           `folds[...]` metrics)
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -144,8 +150,30 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
         gmres_rs::precision::matrix_device_bytes(&shape, precision.fixed_or_default()),
         precision.fixed_or_default(),
     );
-    let runtime = runtime_if_needed(policy)?;
     let config = GmresConfig { m, tol, max_restarts: 200, precond, precision };
+    let rhs_count = args.get_parse("rhs-count", 1usize)?;
+    if rhs_count > 1 {
+        // k-wide block solve over ONE residency: the spec's own b plus
+        // k-1 random right-hand sides (the block engine is
+        // host-orchestrated, like the fleet executor — no runtime needed)
+        let mut bs = vec![b];
+        for j in 1..rhs_count {
+            bs.push(generators::random_vector(n, seed + 1000 + j as u64));
+        }
+        let mut engine = gmres_rs::backend::build_block_engine(policy, a, bs, &config)?;
+        let reports = gmres_rs::gmres::BlockGmres::uniform(config, rhs_count).solve(&mut engine)?;
+        for (i, report) in reports.iter().enumerate() {
+            println!("rhs {i}: {}", report.summary());
+        }
+        println!(
+            "  block total: {:.4}s modeled over one residency (k={rhs_count}); \
+             k independent solves would re-upload the matrix {} more times",
+            engine.sim().elapsed(),
+            rhs_count - 1
+        );
+        return Ok(());
+    }
+    let runtime = runtime_if_needed(policy)?;
     let mut engine = build_engine_preconditioned(policy, a, b, &config, runtime, false)?;
     let solver = RestartedGmres::new(config);
     let report = solver.solve(engine.as_mut(), None)?;
@@ -179,13 +207,27 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
         MatrixFormat::Csr => MatrixSpec::ConvDiff1d { n, seed: 0 }.shape(),
     };
     let config = GmresConfig { m, tol, max_restarts: 200, precond, precision };
+    let rhs_count = args.get_parse("rhs-count", 1usize)?;
     let fleet = parse_fleet(args)?;
     let planner = Planner::new(PlannerConfig { fleet, ..PlannerConfig::default() });
-    println!("{}", plan_table::render_candidates(&planner, &shape, &config));
+    println!("{}", plan_table::render_candidates_k(&planner, &shape, &config, rhs_count));
     let plan = planner.plan(&shape, &config, policy);
     match policy {
         Some(p) => println!("requested {p}: plan {}", plan.summary()),
         None => println!("auto plan: {}", plan.summary()),
+    }
+    if rhs_count > 1 {
+        let batch = planner.plan_batch(&shape, &config, policy, rhs_count);
+        let eval = planner.evaluate_fold(&shape, &config, &plan, rhs_count);
+        println!(
+            "batch plan (k={rhs_count}, folded total): {}\n  fold verdict: {} \
+             (folded {:.6}s vs {} independent {:.6}s)",
+            batch.summary(),
+            if eval.worthwhile() { "FOLD" } else { "keep independent" },
+            eval.folded_seconds,
+            rhs_count,
+            eval.independent_seconds,
+        );
     }
     // (calibration state lives in a *served* planner — `serve` prints it)
     Ok(())
@@ -261,6 +303,24 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn print_outcome(out: &gmres_rs::coordinator::SolveOutcome) {
+    println!(
+        "  {} n={} policy={} @{} m={} pre={} prec={} cycles={} predicted={:.4}s measured={:.4}s queue={:.3}s{}",
+        out.id,
+        out.report.n,
+        out.policy,
+        out.plan.placement,
+        out.plan.m,
+        out.plan.precond,
+        out.plan.precision,
+        out.report.cycles,
+        out.plan.predicted_seconds,
+        out.report.sim_seconds,
+        out.queue_seconds,
+        if out.downgraded { " (downgraded)" } else { "" }
+    );
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let requests = args.get_parse("requests", 16usize)?;
     let mut sizes: Vec<usize> = args.get_list("sizes")?;
@@ -270,10 +330,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cpu_workers = args.get_parse("cpu-workers", 2usize)?;
     let m = args.get_parse("m", 8usize)?;
     let tol = args.get_parse("tol", 1e-6f64)?;
+    let rhs_count = args.get_parse("rhs-count", 1usize)?;
     let format = parse_format(args)?;
     let precision = parse_precision(args, "auto")?;
     let fleet = parse_fleet(args)?;
     let calib_file = args.get("calib-file").map(std::path::PathBuf::from);
+    let policy = match args.get("policy") {
+        None => None,
+        Some(s) => Some(
+            Policy::parse(s)
+                .ok_or_else(|| anyhow!("unknown policy `{s}` (valid: {})", Policy::names()))?,
+        ),
+    };
 
     let router = RouterConfig { fleet, ..Default::default() };
     println!("fleet: {}", router.fleet.summary(router.mem_fraction));
@@ -284,46 +352,94 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ..Default::default()
     });
     let started = std::time::Instant::now();
-    let handles: Vec<_> = (0..requests)
-        .map(|i| {
-            let n = sizes[i % sizes.len()];
-            let svc = svc.clone();
-            std::thread::spawn(move || {
-                let matrix = match format {
-                    MatrixFormat::Dense => MatrixSpec::Table1 { n, seed: i as u64 },
-                    MatrixFormat::Csr => MatrixSpec::ConvDiff1d { n, seed: i as u64 },
-                };
-                let req = SolveRequest {
-                    matrix,
-                    config: GmresConfig { m, tol, max_restarts: 200, precision, ..Default::default() },
-                    policy: None,
-                };
-                svc.submit(req)
-            })
-        })
-        .collect();
     let mut ok = 0usize;
-    for h in handles {
-        match h.join().expect("request thread panicked") {
-            Ok(out) => {
-                ok += 1;
-                println!(
-                    "  {} n={} policy={} @{} m={} pre={} prec={} cycles={} predicted={:.4}s measured={:.4}s queue={:.3}s{}",
-                    out.id,
-                    out.report.n,
-                    out.policy,
-                    out.plan.placement,
-                    out.plan.m,
-                    out.plan.precond,
-                    out.plan.precision,
-                    out.report.cycles,
-                    out.plan.predicted_seconds,
-                    out.report.sim_seconds,
-                    out.queue_seconds,
-                    if out.downgraded { " (downgraded)" } else { "" }
-                );
+    if rhs_count > 1 {
+        // Session path: one content-addressed handle per size, submissions
+        // burst `rhs_count` deep on the same handle (different random
+        // right-hand sides) so the batcher can fold them into multi-RHS
+        // block solves — watch the `folds[...]` metrics below.
+        let session_handles: Vec<_> = sizes
+            .iter()
+            .map(|&n| {
+                let spec = match format {
+                    MatrixFormat::Dense => MatrixSpec::Table1 { n, seed: 0 },
+                    MatrixFormat::Csr => MatrixSpec::ConvDiff1d { n, seed: 0 },
+                };
+                svc.register(spec)
+            })
+            .collect();
+        println!(
+            "sessions: {} registered ({} live), bursts of {rhs_count} per handle",
+            session_handles.len(),
+            svc.active_sessions()
+        );
+        let mut receivers = Vec::new();
+        for i in 0..requests {
+            let handle = &session_handles[(i / rhs_count) % session_handles.len()];
+            let rhs = generators::random_vector(handle.spec().order(), 7 + i as u64);
+            let mut builder = handle.solve_rhs(rhs).config(GmresConfig {
+                m,
+                tol,
+                max_restarts: 200,
+                precision,
+                ..Default::default()
+            });
+            if let Some(p) = policy {
+                builder = builder.policy(p);
             }
-            Err(e) => println!("  failed: {e:#}"),
+            match builder.submit_nowait() {
+                Ok(rx) => receivers.push(Some(rx)),
+                Err(e) => {
+                    println!("  failed: {e:#}");
+                    receivers.push(None);
+                }
+            }
+        }
+        for rx in receivers.into_iter().flatten() {
+            match rx.recv() {
+                Ok(Ok(out)) => {
+                    ok += 1;
+                    print_outcome(&out);
+                }
+                Ok(Err(e)) => println!("  failed: {e:#}"),
+                Err(_) => println!("  failed: worker dropped reply"),
+            }
+            svc.finish();
+        }
+        drop(session_handles);
+    } else {
+        let threads: Vec<_> = (0..requests)
+            .map(|i| {
+                let n = sizes[i % sizes.len()];
+                let svc = svc.clone();
+                std::thread::spawn(move || {
+                    let matrix = match format {
+                        MatrixFormat::Dense => MatrixSpec::Table1 { n, seed: i as u64 },
+                        MatrixFormat::Csr => MatrixSpec::ConvDiff1d { n, seed: i as u64 },
+                    };
+                    let req = SolveRequest {
+                        matrix,
+                        config: GmresConfig {
+                            m,
+                            tol,
+                            max_restarts: 200,
+                            precision,
+                            ..Default::default()
+                        },
+                        policy,
+                    };
+                    svc.submit(req)
+                })
+            })
+            .collect();
+        for h in threads {
+            match h.join().expect("request thread panicked") {
+                Ok(out) => {
+                    ok += 1;
+                    print_outcome(&out);
+                }
+                Err(e) => println!("  failed: {e:#}"),
+            }
         }
     }
     let wall = started.elapsed().as_secs_f64();

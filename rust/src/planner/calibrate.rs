@@ -14,6 +14,16 @@
 //! The whole store serializes to a plain text snapshot
 //! ([`Calibrator::to_text`] / [`Calibrator::from_text`]) so a restarted
 //! router can plan warm (`--calib-file`).
+//!
+//! Folded multi-RHS solves feed the SAME cells: batch width is
+//! deliberately *not* part of the key, because the k-wide batch tables
+//! share every per-charge primitive with the single-RHS tables, so their
+//! bias is the same multiplicative signal.  To keep the ratio pure, the
+//! worker reports per-RHS *shares* of the fold's pricing —
+//! `(folded_base/k, folded_predicted/k)` against each right-hand side's
+//! measured share ([`crate::planner::Planner::observe_measured`]) — so a
+//! fold observation moves `coeff` exactly as much as an equally-biased
+//! single solve would.
 
 use std::collections::HashMap;
 

@@ -20,8 +20,14 @@
 //!   device's own spec) or the [`crate::fleet::costs`] sharded model
 //!   (per-device partials + cross-device reduction terms), plus a
 //!   [`ConvergenceModel`] estimating cycles-to-tolerance.  Setup/per-cycle
-//!   cost splits are memoized per `(policy, shape, m, placement)`, so
-//!   steady-state planning is microseconds.
+//!   cost splits are memoized per `(policy, shape, m, placement, precision,
+//!   batch width)`, so steady-state planning is microseconds.
+//! * **fold pricing** — the batch-width axis: [`Planner::evaluate_fold`]
+//!   prices k same-matrix requests as ONE k-wide block solve (one
+//!   residency upload, per-cycle GEMM→GEMV widening) against k independent
+//!   solves, with k-wide memory admission; the device thread's batcher
+//!   folds only when the fold is admissible and strictly modeled-cheaper
+//!   ([`FoldEvaluation::worthwhile`]).
 //! * **online calibration** — the worker reports `(plan, measured
 //!   seconds)` after every solve; a per-(policy, format, placement,
 //!   precision) EWMA [`Calibrator`] learns the cost table's
@@ -46,7 +52,7 @@ pub mod plan;
 
 pub use calibrate::{CalibrationEntry, Calibrator};
 pub use convergence::ConvergenceModel;
-pub use plan::{Plan, PlanCandidate};
+pub use plan::{FoldEvaluation, Plan, PlanCandidate};
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -54,7 +60,7 @@ use std::sync::Mutex;
 
 use crate::backend::Policy;
 use crate::device::costs;
-use crate::device::memory::working_set_bytes_p;
+use crate::device::memory::working_set_bytes_batch_p;
 use crate::device::{DeviceSim, HostSpec};
 use crate::fleet::{costs as fleet_costs, DeviceKind, Fleet, Placement};
 use crate::gmres::{GmresConfig, PrecondKind};
@@ -132,8 +138,13 @@ pub struct Planner {
     /// Observed per-iteration contraction per (format, precond, precision)
     /// workload class — the convergence model's online calibration state.
     observed_rho: Mutex<HashMap<(MatrixFormat, PrecondKind, Precision), f64>>,
-    price_cache: Mutex<HashMap<(Policy, SystemShape, usize, Placement, Precision), CostSplit>>,
+    /// Memoized cost splits, keyed on the full point plus the batch width
+    /// (`1` for ordinary single-RHS pricing).
+    price_cache: Mutex<HashMap<PriceKey, CostSplit>>,
 }
+
+/// Price-cache key: one plan point plus the batch width.
+type PriceKey = (Policy, SystemShape, usize, Placement, Precision, usize);
 
 impl Planner {
     /// Price-cache bound (~16 splits per novel shape per placement; the
@@ -201,12 +212,29 @@ impl Planner {
         placement: Placement,
         precision: Precision,
     ) -> bool {
+        self.admits_placement_batch_p(policy, shape, m, placement, precision, 1)
+    }
+
+    /// [`Planner::admits_placement_p`] at batch width `k`: the k-wide
+    /// working set holds ONE matrix residency plus k sets of per-RHS
+    /// vectors (Krylov bases included for the gpuR-style placement), so a
+    /// fold that would blow the budget is refused here and the batch runs
+    /// as independent solves instead.
+    pub fn admits_placement_batch_p(
+        &self,
+        policy: Policy,
+        shape: &SystemShape,
+        m: usize,
+        placement: Placement,
+        precision: Precision,
+        k: usize,
+    ) -> bool {
         let fleet = &self.config.fleet;
         match placement {
             Placement::Host => !policy.needs_runtime() && precision == Precision::F64,
             Placement::Single(id) => match fleet.get(id) {
                 Some(d) if d.is_gpu() && policy.needs_runtime() => {
-                    working_set_bytes_p(shape, m, policy, precision)
+                    working_set_bytes_batch_p(shape, m, k, policy, precision)
                         <= d.budget(self.config.mem_fraction)
                 }
                 _ => false,
@@ -219,8 +247,9 @@ impl Planner {
                     return false;
                 }
                 fleet.shard_plan(set, shape.n, self.config.mem_fraction).iter().all(|a| {
-                    fleet_costs::shard_working_set_bytes_p(shape, a.rows, m, policy, precision)
-                        <= fleet.device(a.device).budget(self.config.mem_fraction)
+                    fleet_costs::shard_working_set_batch_bytes_p(
+                        shape, a.rows, m, k, policy, precision,
+                    ) <= fleet.device(a.device).budget(self.config.mem_fraction)
                 })
             }
         }
@@ -240,35 +269,40 @@ impl Planner {
         out
     }
 
-    /// Memoized `(setup, per-cycle)` cost split.  Single placements charge
-    /// the shared [`costs`] table on the placement device's own spec;
-    /// sharded placements price per-device partials plus cross-device
-    /// reductions through [`fleet_costs::shard_costs`].
+    /// Memoized `(setup, per-cycle)` cost split at batch width `k` (`1`
+    /// is the ordinary single-RHS split; larger widths price one folded
+    /// k-wide multi-RHS solve).  Single placements charge the shared
+    /// [`costs`] batch table on the placement device's own spec; sharded
+    /// placements price per-device partials plus cross-device reductions
+    /// through [`fleet_costs::shard_costs_batch_p`].
     ///
     /// Bounded: a long-lived service seeing arbitrarily many distinct
     /// shapes must not grow memory forever, so past `PRICE_CACHE_CAP`
     /// entries the cache resets (recomputing a split is milliseconds;
     /// steady traffic re-warms instantly).
-    fn cost_split(
+    fn cost_split_k(
         &self,
         policy: Policy,
         shape: &SystemShape,
         m: usize,
         placement: Placement,
         precision: Precision,
+        k: usize,
     ) -> CostSplit {
-        let key = (policy, *shape, m, placement, precision);
+        let k = k.max(1);
+        let key = (policy, *shape, m, placement, precision, k);
         if let Some(split) = self.price_cache.lock().unwrap().get(&key) {
             return *split;
         }
         let split = match placement {
             Placement::Sharded(set) => {
-                let sc = fleet_costs::shard_costs_p(
+                let sc = fleet_costs::shard_costs_batch_p(
                     &self.config.fleet,
                     set,
                     policy,
                     shape,
                     m,
+                    k,
                     self.config.mem_fraction,
                     precision,
                 );
@@ -289,9 +323,9 @@ impl Planner {
                 };
                 let mut sim =
                     DeviceSim::new(gpu_spec, HostSpec::r_interpreter_i7_4710hq(), false);
-                costs::charge_setup_p(&mut sim, policy, shape, m, precision);
+                costs::charge_setup_batch_p(&mut sim, policy, shape, m, k, precision);
                 let setup_seconds = sim.elapsed();
-                costs::charge_cycle_p(&mut sim, policy, shape, m, precision);
+                costs::charge_cycle_batch_p(&mut sim, policy, shape, m, k, precision);
                 CostSplit { setup_seconds, cycle_seconds: sim.elapsed() - setup_seconds }
             }
         };
@@ -303,10 +337,13 @@ impl Planner {
         split
     }
 
-    /// Price one plan point: convergence model (with any observed rho for
-    /// the workload class, plus the precision's floor/penalty) → cycles,
-    /// cost table → base seconds, calibrator → served prediction.
-    fn price(&self, shape: &SystemShape, point: PlanPoint, config: &GmresConfig) -> Plan {
+    /// Price one plan point at batch width `k`: convergence model (with
+    /// any observed rho for the workload class, plus the precision's
+    /// floor/penalty) → cycles, cost table → base seconds, calibrator →
+    /// served prediction.  For `k > 1` the returned plan's seconds are
+    /// the TOTAL for one folded k-wide solve (k Arnoldi processes over
+    /// one residency), not per right-hand side.
+    fn price_k(&self, shape: &SystemShape, point: PlanPoint, config: &GmresConfig, k: usize) -> Plan {
         let PlanPoint { policy, m, precond, placement, precision } = point;
         let rho = self.observed_rho_p(shape.format, precond, precision);
         let predicted_cycles = self.config.convergence.cycles_with_rho_p(
@@ -317,7 +354,7 @@ impl Planner {
             rho,
             precision,
         );
-        let split = self.cost_split(policy, shape, m, placement, precision);
+        let split = self.cost_split_k(policy, shape, m, placement, precision, k);
         let base_seconds = split.setup_seconds + predicted_cycles as f64 * split.cycle_seconds;
         let coeff = self.coeff_cell(policy, shape.format, placement, precision);
         Plan {
@@ -363,18 +400,26 @@ impl Planner {
         ms
     }
 
-    /// Full admission of one plan point: the placement's memory budgets
-    /// at the point's (narrowed) working set AND the precision's
-    /// attainable-accuracy floor against the request's tolerance — a
-    /// tolerance tighter than the f32 floor admits only f64.
-    fn admits_point(&self, shape: &SystemShape, point: PlanPoint, config: &GmresConfig) -> bool {
+    /// Full admission of one plan point at batch width `k`: the
+    /// placement's memory budgets at the point's (narrowed, k-wide)
+    /// working set AND the precision's attainable-accuracy floor against
+    /// the request's tolerance — a tolerance tighter than the f32 floor
+    /// admits only f64.
+    fn admits_point_k(
+        &self,
+        shape: &SystemShape,
+        point: PlanPoint,
+        config: &GmresConfig,
+        k: usize,
+    ) -> bool {
         self.config.convergence.admits_tolerance(config.tol, point.precision)
-            && self.admits_placement_p(
+            && self.admits_placement_batch_p(
                 point.policy,
                 shape,
                 point.m,
                 point.placement,
                 point.precision,
+                k,
             )
     }
 
@@ -384,6 +429,19 @@ impl Planner {
     /// then precision — so f64 wins exact ties against tf32's identical
     /// pricing).
     pub fn enumerate(&self, shape: &SystemShape, config: &GmresConfig) -> Vec<PlanCandidate> {
+        self.enumerate_k(shape, config, 1)
+    }
+
+    /// [`Planner::enumerate`] at batch width `k`: candidates priced and
+    /// admitted as folded k-wide multi-RHS solves (seconds are the fold's
+    /// TOTAL; the `plan --rhs-count` batch column and
+    /// [`Planner::plan_batch`] feed from this).
+    pub fn enumerate_k(
+        &self,
+        shape: &SystemShape,
+        config: &GmresConfig,
+        k: usize,
+    ) -> Vec<PlanCandidate> {
         let mut policies = vec![self.config.fallback];
         for p in Policy::gpu_policies() {
             if p != self.config.fallback {
@@ -407,8 +465,8 @@ impl Planner {
                         for precision in self.precisions_for(policy, config) {
                             let point = PlanPoint { policy, m, precond, placement, precision };
                             out.push(PlanCandidate {
-                                plan: self.price(shape, point, config),
-                                admitted: self.admits_point(shape, point, config),
+                                plan: self.price_k(shape, point, config, k),
+                                admitted: self.admits_point_k(shape, point, config, k),
                             });
                         }
                     }
@@ -446,6 +504,23 @@ impl Planner {
         config: &GmresConfig,
         requested: Option<Policy>,
     ) -> Plan {
+        self.plan_batch(shape, config, requested, 1)
+    }
+
+    /// [`Planner::plan`] for a k-wide folded multi-RHS workload: the
+    /// chosen plan's seconds are the fold's TOTAL cost (one residency, k
+    /// Arnoldi processes), and admission uses the k-wide working set.
+    /// This is where a genuine tensor-core `tf32_flops` rate finally
+    /// matters: the k-wide batch GEMM leaves the memory roofline, so on
+    /// an A100-class device a loose-tolerance batch auto-plans tf32.
+    pub fn plan_batch(
+        &self,
+        shape: &SystemShape,
+        config: &GmresConfig,
+        requested: Option<Policy>,
+        k: usize,
+    ) -> Plan {
+        let k = k.max(1);
         let fallback = PlanPoint {
             policy: self.config.fallback,
             m: config.m,
@@ -469,25 +544,25 @@ impl Planner {
                 }
                 let best = points
                     .into_iter()
-                    .filter(|&point| self.admits_point(shape, point, config))
-                    .map(|point| self.price(shape, point, config))
+                    .filter(|&point| self.admits_point_k(shape, point, config, k))
+                    .map(|point| self.price_k(shape, point, config, k))
                     .min_by(|a, b| a.predicted_seconds.total_cmp(&b.predicted_seconds));
                 match best {
                     Some(plan) => plan,
                     None => {
-                        let mut plan = self.price(shape, fallback, config);
+                        let mut plan = self.price_k(shape, fallback, config, k);
                         plan.downgraded = true;
                         plan
                     }
                 }
             }
             None => self
-                .enumerate(shape, config)
+                .enumerate_k(shape, config, k)
                 .into_iter()
                 .find(|c| c.admitted)
                 .map(|c| c.plan)
                 .unwrap_or_else(|| {
-                    let mut plan = self.price(shape, fallback, config);
+                    let mut plan = self.price_k(shape, fallback, config, k);
                     // a pinned reduced precision that no point admits is
                     // an explicit request the fallback overrides
                     plan.downgraded =
@@ -497,16 +572,74 @@ impl Planner {
         }
     }
 
+    /// The fold decision: price k same-matrix requests of one plan run as
+    /// a single k-wide block solve (one residency upload, k-wide per-cycle
+    /// GEMMs) against k independent solves, and check the k-wide working
+    /// set still fits the plan's placement.  The batcher folds only when
+    /// [`FoldEvaluation::worthwhile`] — host plans (nothing to amortize)
+    /// and memory-tight placements run their batches unfolded.
+    pub fn evaluate_fold(
+        &self,
+        shape: &SystemShape,
+        config: &GmresConfig,
+        plan: &Plan,
+        k: usize,
+    ) -> FoldEvaluation {
+        let k = k.max(1);
+        let admitted = self.config.convergence.admits_tolerance(config.tol, plan.precision)
+            && self.admits_placement_batch_p(
+                plan.policy,
+                shape,
+                plan.m,
+                plan.placement,
+                plan.precision,
+                k,
+            );
+        let split = self.cost_split_k(plan.policy, shape, plan.m, plan.placement, plan.precision, k);
+        let folded_base = split.setup_seconds + plan.predicted_cycles as f64 * split.cycle_seconds;
+        let coeff = self.coeff_cell(plan.policy, shape.format, plan.placement, plan.precision);
+        FoldEvaluation {
+            k,
+            admitted,
+            folded_base_seconds: folded_base,
+            folded_seconds: folded_base * coeff,
+            independent_seconds: k as f64 * plan.predicted_seconds,
+        }
+    }
+
     /// Worker feedback: one executed plan and the modeled seconds its
     /// engine actually accumulated.
     pub fn observe(&self, plan: &Plan, format: MatrixFormat, measured_seconds: f64) {
+        self.observe_measured(
+            plan,
+            format,
+            plan.base_seconds,
+            plan.predicted_seconds,
+            measured_seconds,
+        );
+    }
+
+    /// Worker feedback with an explicit (base, predicted) pair — the
+    /// folded multi-RHS path reports per-RHS shares of the k-wide pricing
+    /// (`folded_base/k`, `folded_predicted/k`, per-RHS measured share), so
+    /// fold measurements refine the same (policy, format, placement,
+    /// precision) cell without biasing the single-RHS coefficient: the
+    /// measured/base ratio stays a pure model-bias signal either way.
+    pub fn observe_measured(
+        &self,
+        plan: &Plan,
+        format: MatrixFormat,
+        base_seconds: f64,
+        predicted_seconds: f64,
+        measured_seconds: f64,
+    ) {
         self.calibrator.lock().unwrap().observe(
             plan.policy,
             format,
             plan.placement,
             plan.precision,
-            plan.base_seconds,
-            plan.predicted_seconds,
+            base_seconds,
+            predicted_seconds,
             measured_seconds,
         );
     }
@@ -936,6 +1069,137 @@ mod tests {
         );
         // other classes are untouched
         assert!(p.observed_rho(MatrixFormat::Csr, PrecondKind::Identity).is_none());
+    }
+
+    #[test]
+    fn fold_pricing_beats_independent_on_transfer_bound_shapes() {
+        let p = planner();
+        let shape = SystemShape::dense(2000);
+        let config = GmresConfig::default();
+        // the transfer-bound extreme: gputools re-uploads A per matvec,
+        // so a k=4 fold amortizes 4x matrix traffic into one stream
+        for policy in [Policy::GputoolsLike, Policy::GmatrixLike, Policy::GpurVclLike] {
+            let plan = p.plan(&shape, &config, Some(policy));
+            assert!(!plan.downgraded);
+            let eval = p.evaluate_fold(&shape, &config, &plan, 4);
+            assert!(eval.admitted, "{policy}: k=4 fits easily");
+            assert!(
+                eval.folded_seconds < eval.independent_seconds,
+                "{policy}: folded {} !< independent {}",
+                eval.folded_seconds,
+                eval.independent_seconds
+            );
+            assert!(eval.worthwhile());
+            assert!(eval.saving_seconds() > 0.0);
+        }
+        // host plans have no upload to amortize: the fold is declined
+        let host = p.plan(&shape, &config, Some(Policy::SerialR));
+        let eval = p.evaluate_fold(&shape, &config, &host, 4);
+        assert!(!eval.worthwhile(), "host fold must decline: {eval:?}");
+        // k=1 is never worthwhile by definition
+        let single = p.plan(&shape, &config, Some(Policy::GputoolsLike));
+        assert!(!p.evaluate_fold(&shape, &config, &single, 1).worthwhile());
+    }
+
+    #[test]
+    fn memory_tight_placement_declines_wide_folds() {
+        // a 4 MB budget fits the gpuR working set with one Krylov basis
+        // but not eight of them: the planner must refuse the wide fold
+        let p = fleet_planner("840m=4m");
+        let shape = SystemShape::dense(600);
+        let config = GmresConfig::default();
+        let plan = p.plan(&shape, &config, Some(Policy::GpurVclLike));
+        assert_eq!(plan.policy, Policy::GpurVclLike);
+        assert!(!plan.downgraded, "k=1 admits");
+        let narrow = p.evaluate_fold(&shape, &config, &plan, 2);
+        assert!(narrow.admitted, "k=2 still fits");
+        let wide = p.evaluate_fold(&shape, &config, &plan, 8);
+        assert!(!wide.admitted, "k=8 Krylov bases exceed the 4 MB budget");
+        assert!(!wide.worthwhile());
+    }
+
+    #[test]
+    fn tensor_core_tf32_auto_selected_on_flop_bound_batches() {
+        // The ROADMAP follow-on: without a genuine tensor-core rate, tf32
+        // prices EXACTLY like f32 on every kernel (so the deterministic
+        // tie-break means auto-planning can never pick it).  On an
+        // A100-class spec the k-wide batch GEMM goes flop-bound on the
+        // f32 pipeline while tf32's 156 TF tensor-core rate keeps it on
+        // the memory roofline — tf32 candidates now price strictly below
+        // their f32 twins and win the reduced-precision choice outright.
+        let shape = SystemShape::dense(4000);
+        // loose enough for the tf32 accuracy floor (~3.1e-2)
+        let config = GmresConfig { tol: 5e-2, ..Default::default() };
+        let k = 32;
+
+        // ranking: on the A100, every device policy's tf32 candidate is
+        // strictly cheaper than its f32 twin at batch width k
+        let a100 = fleet_planner("a100");
+        let cands = a100.enumerate_k(&shape, &config, k);
+        let seconds = |cands: &[PlanCandidate], policy: Policy, prec: Precision| {
+            cands
+                .iter()
+                .find(|c| {
+                    c.plan.policy == policy
+                        && c.plan.precision == prec
+                        && c.plan.m == config.m
+                        && c.plan.precond == PrecondKind::Identity
+                })
+                .map(|c| c.plan.predicted_seconds)
+                .expect("candidate present")
+        };
+        for policy in Policy::gpu_policies() {
+            let tf = seconds(&cands, policy, Precision::Tf32);
+            let f32s = seconds(&cands, policy, Precision::F32);
+            assert!(tf < f32s, "{policy}: tf32 {tf} !< f32 {f32s} at k={k}");
+        }
+
+        // auto-selection: a deployment that opts into the reduced axis
+        // (f32|tf32) on an A100 fleet auto-plans tf32 for the wide batch —
+        // the choice the catalog's tensor-core-less cards can never make
+        let reduced_axis = Planner::new(PlannerConfig {
+            fleet: Fleet::parse("a100").unwrap(),
+            precisions: vec![Precision::F32, Precision::Tf32],
+            ..Default::default()
+        });
+        let wide = reduced_axis.plan_batch(&shape, &config, None, k);
+        assert_eq!(wide.precision, Precision::Tf32, "wide batch: {}", wide.summary());
+        assert!(wide.policy.needs_runtime());
+        // at k=1 the GEMV never leaves the memory roofline: tf32 ties f32
+        // and the deterministic tie-break keeps f32
+        let single = reduced_axis.plan_batch(&shape, &config, None, 1);
+        assert_eq!(single.precision, Precision::F32, "single: {}", single.summary());
+        assert_eq!(single, reduced_axis.plan(&shape, &config, None), "k=1 is plain planning");
+
+        // on the paper's tensor-core-less card the same candidates tie
+        // exactly, so tf32 still never wins
+        let m840 = planner();
+        let cands840 = m840.enumerate_k(&shape, &config, k);
+        for policy in Policy::gpu_policies() {
+            let tf = seconds(&cands840, policy, Precision::Tf32);
+            let f32s = seconds(&cands840, policy, Precision::F32);
+            assert_eq!(tf, f32s, "{policy}: no tensor cores, no tf32 edge");
+        }
+        let wide840 = m840.plan_batch(&shape, &config, None, k);
+        assert_ne!(wide840.precision, Precision::Tf32, "840m: {}", wide840.summary());
+    }
+
+    #[test]
+    fn observe_measured_keeps_fold_feedback_unbiased() {
+        let p = planner();
+        let shape = SystemShape::dense(800);
+        let config = GmresConfig::default();
+        let plan = p.plan(&shape, &config, Some(Policy::GmatrixLike));
+        let eval = p.evaluate_fold(&shape, &config, &plan, 4);
+        // a folded solve that measures exactly its per-RHS share leaves
+        // the coefficient at 1.0 (no bias signal)
+        let per_rhs_base = eval.folded_base_seconds / 4.0;
+        for _ in 0..16 {
+            p.observe_measured(&plan, shape.format, per_rhs_base, per_rhs_base, per_rhs_base);
+        }
+        let coeff = p.coeff_cell(plan.policy, shape.format, plan.placement, plan.precision);
+        assert!((coeff - 1.0).abs() < 1e-9, "unbiased fold feedback moved coeff to {coeff}");
+        assert_eq!(p.observations(), 16);
     }
 
     #[test]

@@ -82,6 +82,41 @@ pub struct PlanCandidate {
     pub admitted: bool,
 }
 
+/// The planner's verdict on folding k same-matrix requests into one
+/// multi-RHS block solve ([`crate::planner::Planner::evaluate_fold`]):
+/// one residency + k-wide per-cycle GEMMs priced against k independent
+/// solves of the same plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FoldEvaluation {
+    /// Batch width evaluated.
+    pub k: usize,
+    /// Does the k-wide working set (one matrix + k Krylov vector sets)
+    /// still fit the plan's placement budgets?
+    pub admitted: bool,
+    /// Uncalibrated cost-table seconds of the folded k-wide solve.
+    pub folded_base_seconds: f64,
+    /// Calibrated prediction of the folded solve (same coefficient cell
+    /// as the plan's).
+    pub folded_seconds: f64,
+    /// Calibrated prediction of k independent solves of the plan.
+    pub independent_seconds: f64,
+}
+
+impl FoldEvaluation {
+    /// Should the batcher fold?  Only when the fold is admissible, wider
+    /// than one, and strictly modeled-cheaper than running the batch as
+    /// independent solves — host plans (no upload to amortize) and
+    /// memory-tight placements decline here.
+    pub fn worthwhile(&self) -> bool {
+        self.k >= 2 && self.admitted && self.folded_seconds < self.independent_seconds
+    }
+
+    /// Modeled seconds the fold saves (negative when folding loses).
+    pub fn saving_seconds(&self) -> f64 {
+        self.independent_seconds - self.folded_seconds
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

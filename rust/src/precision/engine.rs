@@ -29,7 +29,7 @@ use std::rc::Rc;
 
 use crate::backend::{build_engine, CycleEngine, CycleResult, Policy};
 use crate::device::{costs, DeviceSim};
-use crate::linalg::{blas, LinearOperator, SystemMatrix, SystemShape};
+use crate::linalg::{blas, SystemMatrix, SystemShape};
 use crate::runtime::Runtime;
 use crate::Result;
 
@@ -133,10 +133,8 @@ impl CycleEngine for MixedPrecisionEngine {
         let inner = self.inner.cycle(x0)?;
 
         // outer: true residual in f64 against the full-precision system
-        let ax = self.a.apply(&inner.x);
-        let mut r = vec![0.0; self.b.len()];
-        blas::sub_into(&self.b, &ax, &mut r);
-        Ok(CycleResult { x: inner.x, resnorm: blas::nrm2(&r) })
+        let resnorm = self.a.residual_norm(&self.b, &inner.x);
+        Ok(CycleResult { x: inner.x, resnorm })
     }
 }
 
@@ -144,7 +142,7 @@ impl CycleEngine for MixedPrecisionEngine {
 mod tests {
     use super::*;
     use crate::gmres::{GmresConfig, RestartedGmres};
-    use crate::linalg::generators;
+    use crate::linalg::{generators, LinearOperator};
     use crate::precision::PrecisionPolicy;
 
     fn system(n: usize, seed: u64) -> (SystemMatrix, Vec<f64>, Vec<f64>) {

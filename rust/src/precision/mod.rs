@@ -32,7 +32,7 @@ pub mod engine;
 pub mod narrow;
 
 pub use engine::MixedPrecisionEngine;
-pub use narrow::{narrow_system, narrow_vector, round_to};
+pub use narrow::{narrow_system, narrow_vector, narrow_vectors, round_to};
 
 use crate::linalg::{MatrixFormat, SystemShape};
 

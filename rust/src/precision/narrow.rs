@@ -39,6 +39,12 @@ pub fn narrow_vector(v: &[f64], precision: Precision) -> Vec<f64> {
     v.iter().map(|&x| round_to(x, precision)).collect()
 }
 
+/// Narrow a whole set of right-hand sides (the k-wide residency view a
+/// folded multi-RHS solve stores next to its narrowed matrix).
+pub fn narrow_vectors(vs: &[Vec<f64>], precision: Precision) -> Vec<Vec<f64>> {
+    vs.iter().map(|v| narrow_vector(v, precision)).collect()
+}
+
 /// Narrow a system matrix's stored values in place (consuming), keeping
 /// format and sparsity pattern: the reduced-precision residency view.
 pub fn narrow_system(a: SystemMatrix, precision: Precision) -> SystemMatrix {

@@ -39,7 +39,22 @@ fn utilization_cell(planner: &Planner, shape: &SystemShape, plan: &Plan) -> Stri
 /// Render the ranked candidate plans for one solve shape.  The chosen plan
 /// (best-ranked admissible candidate) is marked `<=`.
 pub fn render_candidates(planner: &Planner, shape: &SystemShape, config: &GmresConfig) -> String {
+    render_candidates_k(planner, shape, config, 1)
+}
+
+/// [`render_candidates`] with a batch column: each candidate's `batch`
+/// cell prices a k-wide folded multi-RHS solve of that plan against k
+/// independent solves (`fold` when the planner would fold, `keep` when it
+/// declines — host plans, memory-tight widths).  `k == 1` renders `-`.
+pub fn render_candidates_k(
+    planner: &Planner,
+    shape: &SystemShape,
+    config: &GmresConfig,
+    k: usize,
+) -> String {
+    let k = k.max(1);
     let cands = planner.enumerate(shape, config);
+    let batch_header = format!("batch[k={k}]");
     let mut t = Table::new(&[
         "rank",
         "policy",
@@ -51,6 +66,7 @@ pub fn render_candidates(planner: &Planner, shape: &SystemShape, config: &GmresC
         "predicted [s]",
         "coeff",
         "util",
+        batch_header.as_str(),
         "fits",
         "",
     ]);
@@ -60,6 +76,16 @@ pub fn render_candidates(planner: &Planner, shape: &SystemShape, config: &GmresC
         if pick {
             chosen = true;
         }
+        let batch_cell = if k == 1 {
+            "-".to_string()
+        } else {
+            let eval = planner.evaluate_fold(shape, config, &c.plan, k);
+            format!(
+                "{:.6} {}",
+                eval.folded_seconds,
+                if eval.worthwhile() { "fold" } else { "keep" }
+            )
+        };
         t.row(&[
             (i + 1).to_string(),
             c.plan.policy.name().to_string(),
@@ -79,6 +105,7 @@ pub fn render_candidates(planner: &Planner, shape: &SystemShape, config: &GmresC
                 )
             ),
             utilization_cell(planner, shape, &c.plan),
+            batch_cell,
             if c.admitted { "yes" } else { "NO" }.to_string(),
             if pick { "<=" } else { "" }.to_string(),
         ]);
@@ -173,6 +200,21 @@ mod tests {
         assert!(out.contains("prec"), "precision column header:\n{out}");
         assert!(out.contains("f32"), "f32 candidates listed:\n{out}");
         assert!(out.contains("tf32"), "tf32 candidates listed:\n{out}");
+    }
+
+    #[test]
+    fn batch_column_marks_folds_and_keeps() {
+        let p = Planner::default();
+        let shape = SystemShape::dense(2000);
+        let config = GmresConfig::default();
+        let out = render_candidates_k(&p, &shape, &config, 4);
+        assert!(out.contains("batch[k=4]"), "batch column header:\n{out}");
+        assert!(out.contains("fold"), "device candidates fold at k=4:\n{out}");
+        assert!(out.contains("keep"), "host candidates decline:\n{out}");
+        // the plain table shows the placeholder
+        let plain = render_candidates(&p, &shape, &config);
+        assert!(plain.contains("batch[k=1]"), "{plain}");
+        assert!(!plain.contains("fold"), "{plain}");
     }
 
     #[test]

@@ -423,6 +423,7 @@ fn prop_batcher_conserves_and_respects_keys() {
         for i in 0..n_items {
             let key = BatchKey {
                 policy: if rng.next_f64() < 0.5 { Policy::GmatrixLike } else { Policy::GpurVclLike },
+                matrix_id: gmres_rs::coordinator::MatrixId(rng.below(3) as u64),
                 n: 64 * (1 + rng.below(3)),
                 m: 8,
                 format: if rng.next_f64() < 0.5 { MatrixFormat::Dense } else { MatrixFormat::Csr },

@@ -1,0 +1,263 @@
+//! Session-handle API end-to-end: register/solve/release lifecycle,
+//! fold-aware multi-RHS batching through the running service, and the
+//! block-vs-independent equivalence property across formats, precisions
+//! and placements.
+
+use std::time::Duration;
+
+use gmres_rs::backend::{build_block_engine, build_engine_preconditioned, Policy};
+use gmres_rs::coordinator::batcher::BatcherConfig;
+use gmres_rs::coordinator::{MatrixSpec, ServiceConfig, SolveRequest, SolveService};
+use gmres_rs::fleet::{build_sharded_block_engine, DeviceSet, Fleet};
+use gmres_rs::gmres::{BlockGmres, GmresConfig, RestartedGmres};
+use gmres_rs::linalg::{blas, generators, LinearOperator, MatrixFormat, SystemMatrix};
+use gmres_rs::precision::{Precision, PrecisionPolicy};
+
+/// The acceptance scenario: a k=4 same-matrix workload through the handle
+/// API performs exactly ONE residency upload (fold metrics), its
+/// planner-priced folded cost is strictly below 4 independent solves on a
+/// transfer-bound shape, and every per-RHS residual is the f64 truth,
+/// matching an independent solve of the same (matrix, rhs).
+#[test]
+fn same_handle_burst_folds_into_one_residency() {
+    const N: usize = 96;
+    const K: usize = 4;
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        batcher: BatcherConfig { max_batch: K, max_age: Duration::from_millis(500) },
+        ..Default::default()
+    });
+    let spec = MatrixSpec::Table1 { n: N, seed: 3 };
+    let (a, _) = spec.materialize();
+    let handle = svc.register(spec);
+    assert_eq!(svc.active_sessions(), 1);
+
+    // k distinct right-hand sides against one registered matrix; gmatrix
+    // is the residency policy — unfolded, each request would establish
+    // its own device-resident copy of A
+    let rhss: Vec<Vec<f64>> = (0..K).map(|i| generators::random_vector(N, 40 + i as u64)).collect();
+    let receivers: Vec<_> = rhss
+        .iter()
+        .map(|b| {
+            handle
+                .solve_rhs(b.clone())
+                .m(8)
+                .tol(1e-8)
+                .max_restarts(200)
+                .policy(Policy::GmatrixLike)
+                .submit_nowait()
+                .expect("submit")
+        })
+        .collect();
+    let mut outcomes = Vec::new();
+    for rx in receivers {
+        let out = rx.recv().expect("reply").expect("solve");
+        svc.finish();
+        outcomes.push(out);
+    }
+
+    // exactly one fold covering all four requests: ONE residency upload,
+    // three saved
+    assert_eq!(svc.metrics().folds(), 1, "metrics: {}", svc.metrics().render());
+    assert_eq!(svc.metrics().requests_folded(), K as u64);
+    assert_eq!(
+        svc.metrics().uploads_saved_bytes(),
+        (K as u64 - 1) * (8 * N * N) as u64,
+        "three dense f64 residency slabs never crossed the bus"
+    );
+
+    // the planner priced the fold strictly below K independent solves
+    let plan = outcomes[0].plan;
+    let planner = svc.router().planner();
+    let config = GmresConfig { m: 8, tol: 1e-8, max_restarts: 200, ..Default::default() };
+    let eval = planner.evaluate_fold(&MatrixSpec::Table1 { n: N, seed: 3 }.shape(), &config, &plan, K);
+    assert!(eval.admitted && eval.worthwhile());
+    assert!(
+        eval.folded_seconds < eval.independent_seconds,
+        "folded {} !< {K} independent {}",
+        eval.folded_seconds,
+        eval.independent_seconds
+    );
+
+    // per-RHS residuals: f64-verified, equal to an independent solve of
+    // the same (matrix, rhs) within tolerance
+    for (out, b) in outcomes.iter().zip(&rhss) {
+        assert!(out.report.converged);
+        assert!(out.report.rel_resnorm <= 1e-8);
+        // reported residual is the true f64 residual of this rhs
+        let ax = a.apply(&out.report.x);
+        let mut r = vec![0.0; N];
+        blas::sub_into(b, &ax, &mut r);
+        let true_rel = blas::nrm2(&r) / blas::nrm2(b);
+        assert!(
+            (true_rel - out.report.rel_resnorm).abs() < 1e-12 * (1.0 + true_rel),
+            "reported {} vs true {true_rel}",
+            out.report.rel_resnorm
+        );
+        // independent reference solve of the same system
+        let config = GmresConfig { m: 8, tol: 1e-8, max_restarts: 200, ..Default::default() };
+        let mut single = build_engine_preconditioned(
+            Policy::SerialNative,
+            a.clone(),
+            b.clone(),
+            &config,
+            None,
+            false,
+        )
+        .expect("reference engine");
+        let reference = RestartedGmres::new(config).solve(single.as_mut(), None).expect("reference");
+        assert!(reference.converged);
+        let d = gmres_rs::linalg::vector::rel_err(&out.report.x, &reference.x);
+        assert!(d < 1e-6, "folded vs independent solution diverged by {d}");
+    }
+
+    handle.release();
+    assert_eq!(svc.active_sessions(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn legacy_one_shot_submissions_still_fold_by_content() {
+    // two legacy submits of the SAME spec share a content id — the
+    // register-and-release path keeps fold affinity without handles
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        batcher: BatcherConfig { max_batch: 2, max_age: Duration::from_millis(500) },
+        ..Default::default()
+    });
+    let req = || SolveRequest {
+        matrix: MatrixSpec::Table1 { n: 64, seed: 9 },
+        config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 200, ..Default::default() },
+        policy: Some(Policy::GmatrixLike),
+    };
+    let rx1 = svc.submit_nowait(req()).unwrap();
+    let rx2 = svc.submit_nowait(req()).unwrap();
+    assert!(rx1.recv().unwrap().unwrap().report.converged);
+    svc.finish();
+    assert!(rx2.recv().unwrap().unwrap().report.converged);
+    svc.finish();
+    assert_eq!(svc.metrics().folds(), 1, "{}", svc.metrics().render());
+    assert_eq!(svc.active_sessions(), 0, "one-shot sessions released");
+    svc.shutdown();
+}
+
+#[test]
+fn different_handles_never_fold() {
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        batcher: BatcherConfig { max_batch: 4, max_age: Duration::from_millis(200) },
+        ..Default::default()
+    });
+    let h1 = svc.register(MatrixSpec::Table1 { n: 64, seed: 1 });
+    let h2 = svc.register(MatrixSpec::Table1 { n: 64, seed: 2 });
+    let rx1 = h1.solve().m(8).tol(1e-8).policy(Policy::GmatrixLike).submit_nowait().unwrap();
+    let rx2 = h2.solve().m(8).tol(1e-8).policy(Policy::GmatrixLike).submit_nowait().unwrap();
+    for rx in [rx1, rx2] {
+        assert!(rx.recv().unwrap().unwrap().report.converged);
+        svc.finish();
+    }
+    assert_eq!(svc.metrics().folds(), 0, "different matrices must not fold");
+    svc.shutdown();
+}
+
+/// The equivalence property behind folding: a k-RHS block solve produces
+/// residuals/solutions matching k independent solves within tolerance,
+/// across dense/CSR x f64/f32 x single-residency/sharded placements.
+#[test]
+fn folded_solves_match_independent_solves_across_the_grid() {
+    const K: usize = 3;
+    let fleet = Fleet::parse("840m,v100").unwrap();
+    for format in [MatrixFormat::Dense, MatrixFormat::Csr] {
+        for precision in [Precision::F64, Precision::F32] {
+            for sharded in [false, true] {
+                let n = 72;
+                let (a, b0) = match format {
+                    MatrixFormat::Dense => {
+                        let (a, b, _) = generators::table1_system(n, 21);
+                        (SystemMatrix::Dense(a), b)
+                    }
+                    MatrixFormat::Csr => {
+                        let (a, b, _) = generators::convdiff_1d_system(n, 21);
+                        (SystemMatrix::Csr(a), b)
+                    }
+                };
+                let mut bs = vec![b0];
+                for j in 1..K {
+                    bs.push(generators::random_vector(n, 60 + j as u64));
+                }
+                let (tol, xtol) = match precision {
+                    Precision::F64 => (1e-9, 1e-5),
+                    _ => (1e-4, 2e-2),
+                };
+                let config = GmresConfig {
+                    m: 12,
+                    tol,
+                    max_restarts: 200,
+                    precision: PrecisionPolicy::Fixed(precision),
+                    ..Default::default()
+                };
+                let label = format!("{format:?}/{precision}/sharded={sharded}");
+
+                let mut block = if sharded {
+                    build_sharded_block_engine(
+                        &fleet,
+                        DeviceSet::from_ids(&[0, 1]),
+                        Policy::GmatrixLike,
+                        a.clone(),
+                        bs.clone(),
+                        &config,
+                        0.9,
+                    )
+                    .expect("sharded block engine")
+                } else {
+                    build_block_engine(Policy::GmatrixLike, a.clone(), bs.clone(), &config)
+                        .expect("block engine")
+                };
+                let reports = BlockGmres::uniform(config, K).solve(&mut block).expect("block");
+
+                for (i, rep) in reports.iter().enumerate() {
+                    assert!(rep.converged, "{label} rhs {i}: cycles {}", rep.cycles);
+                    assert!(rep.rel_resnorm <= tol, "{label} rhs {i}: {}", rep.rel_resnorm);
+                    // independent reference on the same (matrix, rhs) at
+                    // the same working precision (serial-r needs no
+                    // runtime and honours the precision pin)
+                    let mut single = build_engine_preconditioned(
+                        Policy::SerialR,
+                        a.clone(),
+                        bs[i].clone(),
+                        &config,
+                        None,
+                        false,
+                    )
+                    .expect("reference engine");
+                    let reference =
+                        RestartedGmres::new(config).solve(single.as_mut(), None).expect("ref");
+                    assert!(reference.converged, "{label} rhs {i} reference");
+                    assert!(reference.rel_resnorm <= tol);
+                    let d = gmres_rs::linalg::vector::rel_err(&rep.x, &reference.x);
+                    assert!(d < xtol, "{label} rhs {i}: block vs independent diverged by {d}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn handle_survives_mixed_with_legacy_traffic() {
+    // sessions and one-shot requests interleave on one service
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 2, ..Default::default() });
+    let handle = svc.register(MatrixSpec::Table1 { n: 48, seed: 4 });
+    let legacy = SolveRequest {
+        matrix: MatrixSpec::Table1 { n: 48, seed: 5 },
+        config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 200, ..Default::default() },
+        policy: Some(Policy::SerialNative),
+    };
+    let out1 = svc.submit(legacy).unwrap();
+    let out2 = handle.solve().m(8).tol(1e-8).policy(Policy::SerialNative).submit().unwrap();
+    assert!(out1.report.converged && out2.report.converged);
+    assert_eq!(svc.metrics().completed(), 2);
+    assert_eq!(svc.active_sessions(), 1);
+    drop(handle);
+    assert_eq!(svc.active_sessions(), 0);
+    svc.shutdown();
+}
