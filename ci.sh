@@ -63,6 +63,29 @@ echo "$SERVE_OUT" | tail -5
 echo "$SERVE_OUT" | grep -Eq "requests_folded=[1-9]" \
     || { echo "session smoke: no fold occurred"; exit 1; }
 
+echo "==> scheduler / residency-cache smoke"
+# repeat waves over the same session handles must hit the cross-batch
+# residency cache (warm waves re-use the wave-1 residency, zero re-upload)
+# and emit the committed serve bench snapshot
+./target/release/gmres-rs serve --requests 6 --sizes 128,192 --m 8 \
+    --policy gmatrix --rhs-count 3 --waves 3 --cache-mb 64 \
+    --bench-json BENCH_serve.json
+test -s BENCH_serve.json \
+    || { echo "scheduler smoke: BENCH_serve.json not written"; exit 1; }
+grep -Eq '"cache_hits": [1-9]' BENCH_serve.json \
+    || { echo "scheduler smoke: warm waves produced no cache hits"; exit 1; }
+grep -Eq '"uploads_saved_bytes": [1-9]' BENCH_serve.json \
+    || { echo "scheduler smoke: warm hits saved no uploads"; exit 1; }
+
+echo "==> deadline / load-shedding smoke"
+# an over-deadline flood sheds typed refusals (counted) while every
+# admitted request still completes — degradation, not collapse
+SHED_OUT=$(./target/release/gmres-rs serve --requests 12 --sizes 600 --m 8 \
+    --policy gmatrix --rhs-count 2 --deadline-ms 1)
+echo "$SHED_OUT" | tail -4
+echo "$SHED_OUT" | grep -Eq "sheds=[1-9]" \
+    || { echo "shed smoke: a 1ms-deadline flood shed nothing"; exit 1; }
+
 echo "==> fleet smoke"
 # sharded placements enumerated across a two-card fleet; a served fleet
 # with calibration persistence round-trips through a warm restart

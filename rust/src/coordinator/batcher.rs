@@ -48,12 +48,16 @@ pub struct BatchKey {
     pub precision: Precision,
 }
 
-/// A queued item with arrival time.
+/// A queued item with arrival time and an optional completion deadline
+/// (admission control: the service sheds jobs whose deadline the queue
+/// depth cannot meet; the batcher flushes early for jobs whose deadline is
+/// nearer than the batching hold).
 #[derive(Clone, Debug)]
 pub struct Pending<T> {
     pub key: BatchKey,
     pub item: T,
     pub enqueued_at: Instant,
+    pub deadline: Option<Instant>,
 }
 
 /// Batching policy knobs.
@@ -94,16 +98,35 @@ impl<T> Batcher<T> {
     }
 
     pub fn push(&mut self, key: BatchKey, item: T) {
-        self.queue.push_back(Pending { key, item, enqueued_at: Instant::now() });
+        self.push_with_deadline(key, item, None);
+    }
+
+    /// [`Batcher::push`] with a completion deadline: deadline'd items make
+    /// the queue [`Batcher::ready`] as soon as holding the batch any
+    /// longer would eat into their slack (they flush early instead of
+    /// aging toward a shed).
+    pub fn push_with_deadline(&mut self, key: BatchKey, item: T, deadline: Option<Instant>) {
+        self.queue.push_back(Pending { key, item, enqueued_at: Instant::now(), deadline });
     }
 
     #[cfg(test)]
     fn push_at(&mut self, key: BatchKey, item: T, at: Instant) {
-        self.queue.push_back(Pending { key, item, enqueued_at: at });
+        self.queue.push_back(Pending { key, item, enqueued_at: at, deadline: None });
     }
 
-    /// Is a batch ready?  (full batch available for the head key, or the
-    /// head has aged out)
+    /// Batch key of the oldest queued item (what [`Batcher::next_batch`]
+    /// would drain), without draining it — the fleet scheduler peeks this
+    /// to check the head batch's placement against the busy-device mask
+    /// before claiming it.
+    pub fn head_key(&self) -> Option<BatchKey> {
+        self.queue.front().map(|p| p.key)
+    }
+
+    /// Is a batch ready?  (full batch available for the head key, the
+    /// head has aged out — or a queued item's *deadline* falls before the
+    /// head's age-out instant, in which case waiting the full `max_age`
+    /// would age that job toward a shed, so the pending batch flushes
+    /// early instead)
     pub fn ready(&self, now: Instant) -> bool {
         match self.queue.front() {
             None => false,
@@ -111,9 +134,37 @@ impl<T> Batcher<T> {
                 if now.duration_since(head.enqueued_at) >= self.config.max_age {
                     return true;
                 }
+                let flush_at = head.enqueued_at + self.config.max_age;
+                if self.queue.iter().any(|p| p.deadline.map_or(false, |dl| dl < flush_at)) {
+                    return true;
+                }
                 self.queue.iter().filter(|p| p.key == head.key).count() >= self.config.max_batch
             }
         }
+    }
+
+    /// How long the worker may hold before [`Batcher::ready`] flips on age
+    /// (the batching hold): the head's remaining `max_age`.  `None` when
+    /// the queue is empty or a batch is already ready.
+    pub fn hold_until(&self, now: Instant) -> Option<Duration> {
+        if self.ready(now) {
+            return None;
+        }
+        let head = self.queue.front()?;
+        Some((head.enqueued_at + self.config.max_age).saturating_duration_since(now))
+    }
+
+    /// Work stealing support: remove and return the single oldest item
+    /// that (a) satisfies `eligible` and (b) is the ONLY queued item of
+    /// its batch key — items with queued same-key siblings stay put, so a
+    /// thief never breaks up a foldable multi-RHS batch.  Bounded by
+    /// construction: one item per call.
+    pub fn steal_one(&mut self, eligible: impl Fn(&Pending<T>) -> bool) -> Option<Pending<T>> {
+        let idx = (0..self.queue.len()).find(|&i| {
+            let p = &self.queue[i];
+            eligible(p) && self.queue.iter().filter(|q| q.key == p.key).count() == 1
+        })?;
+        self.queue.remove(idx)
     }
 
     /// Drain the next batch: all jobs matching the head's key, FIFO order,
@@ -263,5 +314,65 @@ mod tests {
     fn empty_not_ready() {
         let b: Batcher<u32> = Batcher::new(BatcherConfig::default());
         assert!(!b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn near_deadline_flushes_the_pending_batch_early() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_age: Duration::from_secs(3600),
+        });
+        b.push(key(1), 1);
+        let now = Instant::now();
+        assert!(!b.ready(now), "young unfilled batch holds");
+        // a deadline'd sibling whose slack is far smaller than the hold:
+        // the whole pending batch must release now, not age toward a shed
+        b.push_with_deadline(key(1), 2, Some(now + Duration::from_millis(5)));
+        assert!(b.ready(Instant::now()), "near-deadline job must flush the batch");
+        // a distant deadline (beyond the age-out instant) does not
+        let mut c = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_age: Duration::from_millis(5),
+        });
+        c.push_with_deadline(key(1), 1, Some(Instant::now() + Duration::from_secs(3600)));
+        assert!(!c.ready(Instant::now()), "distant deadlines batch normally");
+    }
+
+    #[test]
+    fn hold_until_tracks_the_heads_remaining_age() {
+        let mut b: Batcher<u32> = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_age: Duration::from_millis(100),
+        });
+        assert!(b.hold_until(Instant::now()).is_none(), "empty queue has nothing to hold");
+        let now = Instant::now();
+        b.push_at(key(1), 1, now);
+        let hold = b.hold_until(now).expect("young head holds");
+        assert!(hold <= Duration::from_millis(100));
+        assert!(hold >= Duration::from_millis(50), "fresh head holds most of max_age: {hold:?}");
+        let past = now - Duration::from_millis(500);
+        let mut aged: Batcher<u32> = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_age: Duration::from_millis(100),
+        });
+        aged.push_at(key(1), 1, past);
+        assert!(aged.hold_until(Instant::now()).is_none(), "ready batch has no hold");
+    }
+
+    #[test]
+    fn steal_takes_lone_items_only_never_foldable_siblings() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 10, max_age: Duration::ZERO });
+        b.push(key(100), 1);
+        b.push(key(100), 2); // foldable pair — off limits
+        b.push(key(200), 3); // lone — stealable
+        let stolen = b.steal_one(|_| true).expect("lone item available");
+        assert_eq!(stolen.item, 3);
+        assert_eq!(b.len(), 2);
+        assert!(b.steal_one(|_| true).is_none(), "only foldable siblings remain");
+        // eligibility filter is respected
+        let mut c = Batcher::new(BatcherConfig { max_batch: 10, max_age: Duration::ZERO });
+        c.push(key(1), 7);
+        assert!(c.steal_one(|p| p.item != 7).is_none());
+        assert_eq!(c.steal_one(|p| p.item == 7).unwrap().item, 7);
     }
 }

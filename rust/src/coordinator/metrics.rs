@@ -37,11 +37,27 @@ pub struct Metrics {
     /// transfer-everything policy saves a matrix STREAM per extra batch
     /// member on every joint matvec.
     uploads_saved_bytes: AtomicU64,
+    /// Jobs moved by the fleet scheduler from a backlogged device queue to
+    /// an idle device whose placement admitted them.
+    steals: AtomicU64,
+    /// Jobs refused at admission because queue depth x predicted seconds
+    /// exceeded their deadline (typed [`crate::coordinator::ShedError`]).
+    sheds: AtomicU64,
+    /// Cross-batch residency cache: a claimed job found its matrix slab
+    /// already resident on its device (no re-upload).
+    cache_hits: AtomicU64,
+    /// Cross-batch residency cache: residency had to be (re-)established.
+    cache_misses: AtomicU64,
+    /// Residencies dropped by LRU memory pressure.
+    cache_evictions: AtomicU64,
     /// completed-solve latencies, microseconds (mutex: cold path only)
     latencies_us: Mutex<Vec<u64>>,
     queue_us: Mutex<Vec<u64>>,
     /// per-device stats, keyed by fleet device label (cold path)
     per_device: Mutex<BTreeMap<String, DeviceStat>>,
+    /// per-device work-queue depth gauge, keyed by device label (set by
+    /// the fleet scheduler on every enqueue/claim)
+    queue_depth: Mutex<BTreeMap<String, u64>>,
 }
 
 /// Latency summary in seconds.
@@ -111,6 +127,63 @@ impl Metrics {
         self.uploads_saved_bytes.fetch_add(saved_bytes, Ordering::Relaxed);
     }
 
+    /// Record `saved_bytes` of residency uploads avoided outside a fold
+    /// (a cross-batch residency-cache hit re-used a slab already on the
+    /// device instead of re-uploading it).
+    pub fn on_upload_saved(&self, saved_bytes: u64) {
+        self.uploads_saved_bytes.fetch_add(saved_bytes, Ordering::Relaxed);
+    }
+
+    /// One job stolen onto an idle device.
+    pub fn on_steal(&self) {
+        self.steals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One job shed at admission (deadline unmeetable at current depth).
+    pub fn on_shed(&self) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One residency-cache hit (matrix already on the claimed device).
+    pub fn on_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One residency-cache miss (slab established cold).
+    pub fn on_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` residencies evicted under memory pressure.
+    pub fn on_cache_evictions(&self, n: u64) {
+        self.cache_evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Update one device's work-queue depth gauge.
+    pub fn set_queue_depth(&self, label: &str, depth: u64) {
+        *self.queue_depth.lock().unwrap().entry(label.to_string()).or_default() = depth;
+    }
+
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    pub fn sheds(&self) -> u64 {
+        self.sheds.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache_evictions.load(Ordering::Relaxed)
+    }
+
     pub fn folds(&self) -> u64 {
         self.folds.load(Ordering::Relaxed)
     }
@@ -152,19 +225,31 @@ impl Metrics {
     }
 
     /// Multi-line per-device summary (empty string when no device work
-    /// has been recorded).
+    /// has been recorded): per-device solve/busy/bytes plus the scheduler
+    /// gauges — queue depth per device, steals, residency-cache
+    /// hits/misses/evictions and shed count.
     pub fn render_devices(&self) -> String {
         let stats = self.device_stats();
         if stats.is_empty() {
             return String::new();
         }
+        let depths = self.queue_depth.lock().unwrap().clone();
         let mut out = String::from("per-device:\n");
         for (label, s) in stats {
+            let depth = depths.get(&label).copied().unwrap_or(0);
             out.push_str(&format!(
-                "  {label:>10}: solves={} busy={:.4}s moved={}B\n",
+                "  {label:>10}: solves={} busy={:.4}s moved={}B queue={depth}\n",
                 s.solves, s.busy_seconds, s.bytes_moved
             ));
         }
+        out.push_str(&format!(
+            "scheduler: steals={} sheds={} cache[hits={} misses={} evictions={}]\n",
+            self.steals(),
+            self.sheds(),
+            self.cache_hits(),
+            self.cache_misses(),
+            self.cache_evictions()
+        ));
         out
     }
 
@@ -259,6 +344,33 @@ mod tests {
     #[test]
     fn empty_summary_is_none() {
         assert!(Metrics::new().latency_summary().is_none());
+    }
+
+    #[test]
+    fn scheduler_counters_accumulate_and_render() {
+        let m = Metrics::new();
+        assert_eq!((m.steals(), m.sheds()), (0, 0));
+        assert_eq!((m.cache_hits(), m.cache_misses(), m.cache_evictions()), (0, 0, 0));
+        m.on_steal();
+        m.on_shed();
+        m.on_shed();
+        m.on_cache_hit();
+        m.on_cache_miss();
+        m.on_cache_evictions(3);
+        m.set_queue_depth("840m", 5);
+        assert_eq!(m.steals(), 1);
+        assert_eq!(m.sheds(), 2);
+        assert_eq!(m.cache_hits(), 1);
+        assert_eq!(m.cache_misses(), 1);
+        assert_eq!(m.cache_evictions(), 3);
+        // gauges render once device work exists
+        m.on_device("840m", 0.5, 1000);
+        let rendered = m.render_devices();
+        assert!(rendered.contains("queue=5"), "{rendered}");
+        assert!(rendered.contains("steals=1"), "{rendered}");
+        assert!(rendered.contains("sheds=2"), "{rendered}");
+        assert!(rendered.contains("hits=1"), "{rendered}");
+        assert!(rendered.contains("evictions=3"), "{rendered}");
     }
 
     #[test]

@@ -25,9 +25,15 @@
 //!   executable and one resident matrix ensemble (dense or CSR, whole or
 //!   sharded — never mixed in a batch) serve a whole batch; same-id
 //!   batches are *foldable* into a single multi-RHS block solve.
-//! * **[`worker`]** — a dedicated *device thread* owning the (deliberately
-//!   `!Send`, single-stream) device runtime plus a CPU pool for serial
-//!   jobs.
+//! * **[`scheduler`]** — the fleet scheduler: one bounded work queue per
+//!   registered device with placement-aware claims (single-device jobs
+//!   overlap with shards that run elsewhere), bounded work stealing, a
+//!   cross-batch residency cache ([`scheduler::ResidencyCache`]) with
+//!   residency-pinned routing, and deadline admission control that sheds
+//!   load with a typed [`scheduler::ShedError`] instead of collapsing.
+//! * **[`worker`]** — per-device worker threads, each owning its own
+//!   (deliberately `!Send`, single-stream) device runtime and its queue,
+//!   plus a CPU pool for serial jobs.
 //! * **[`service`]** — the blocking facade: `submit`, graceful shutdown,
 //!   metrics.
 
@@ -35,6 +41,7 @@ pub mod batcher;
 pub mod job;
 pub mod metrics;
 pub mod router;
+pub mod scheduler;
 pub mod service;
 pub mod session;
 pub mod worker;
@@ -42,5 +49,8 @@ pub mod worker;
 pub use job::{JobId, MatrixId, MatrixSpec, RhsSpec, SolveOutcome, SolveRequest};
 pub use metrics::{DeviceStat, Metrics};
 pub use router::{Route, Router, RouterConfig};
+pub use scheduler::{
+    BeginOutcome, FleetScheduler, ResidencyCache, ResidencyKey, ShedError, ShedReason,
+};
 pub use service::{ServiceConfig, SolveService};
 pub use session::{MatrixHandle, SolveRequestBuilder};

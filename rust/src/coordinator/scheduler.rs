@@ -1,0 +1,889 @@
+//! Fleet scheduler: per-device work queues, residency-pinned routing, a
+//! cross-batch residency cache and deadline admission control.
+//!
+//! The previous coordinator drained ONE global device thread, so two
+//! single-device jobs pinned to different cards executed sequentially and
+//! every residency died at batch end.  This module gives each registered
+//! device its own [`Batcher`] queue drained by its own worker thread:
+//!
+//! * **placement-aware claims** — a worker only claims its head batch when
+//!   no device the batch's placement touches is busy, so single-device
+//!   jobs overlap freely with shards that run elsewhere;
+//! * **bounded work stealing** — an idle device steals ONE lone-key
+//!   single-device job from a backlogged peer, but only when the thief's
+//!   placement admits it ([`crate::planner::Planner::admits_placement_batch_p`]),
+//!   never a foldable sibling group, and never a job whose residency the
+//!   victim already holds (stealing it would forfeit a warm hit);
+//! * **cross-batch residency cache** — an LRU per device keyed by
+//!   `(MatrixId, format, precond, precision)` keeps the last-used matrix
+//!   slabs alive *between* batches; same-key traffic is routed to the
+//!   holding device and repriced there, and warm executions are priced by
+//!   the planner's [`crate::planner::Planner::warm_setup_discount`] so
+//!   scheduling and pricing share one cost table;
+//! * **admission control** — per-device queues are bounded and a request
+//!   carrying a deadline is refused with a typed [`ShedError`] when
+//!   `queue depth x predicted seconds` already exceeds its slack, so an
+//!   overload sheds load instead of collapsing into timeouts.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use crate::backend::Policy;
+use crate::coordinator::batcher::{BatchKey, Batcher, BatcherConfig, Pending};
+use crate::coordinator::job::MatrixId;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::worker::WorkItem;
+use crate::fleet::{DeviceId, Fleet, Placement};
+use crate::gmres::PrecondKind;
+use crate::linalg::MatrixFormat;
+use crate::planner::Planner;
+use crate::precision::Precision;
+use crate::Result;
+
+/// Why a request was refused at admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// `queue depth x predicted seconds` exceeds the request's deadline
+    /// slack: even if everything ahead runs exactly to prediction, this
+    /// job would finish late — refusing now is cheaper than timing out
+    /// later.
+    DeadlineUnmeetable,
+    /// The target device queue is at capacity.
+    QueueFull,
+}
+
+/// Typed load-shedding error: the scheduler refused the request instead of
+/// letting the queue collapse.  Clients downcast with
+/// `err.downcast_ref::<ShedError>()` and may retry elsewhere/later.
+#[derive(Clone, Debug)]
+pub struct ShedError {
+    pub reason: ShedReason,
+    /// Queue depth on the target device at refusal time.
+    pub depth: usize,
+    /// The plan's calibrated predicted seconds per queued job.
+    pub predicted_seconds: f64,
+    /// Remaining deadline slack at refusal time (0 for queue-full sheds).
+    pub deadline_seconds: f64,
+}
+
+impl fmt::Display for ShedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.reason {
+            ShedReason::DeadlineUnmeetable => write!(
+                f,
+                "shed: queue depth {} x predicted {:.6}s exceeds deadline slack {:.6}s",
+                self.depth, self.predicted_seconds, self.deadline_seconds
+            ),
+            ShedReason::QueueFull => {
+                write!(f, "shed: device queue full ({} queued)", self.depth)
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShedError {}
+
+/// Identity of one cached device residency: the content-addressed matrix
+/// plus everything that changes the resident byte pattern (format picks the
+/// layout, the preconditioner bakes `D⁻¹A` vs `A`, precision narrows the
+/// elements).  Deliberately the residency-relevant projection of
+/// [`BatchKey`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ResidencyKey {
+    pub matrix_id: MatrixId,
+    pub format: MatrixFormat,
+    pub precond: PrecondKind,
+    pub precision: Precision,
+}
+
+impl ResidencyKey {
+    /// The residency a batch of this key would establish.
+    pub fn of_batch(key: &BatchKey) -> Self {
+        Self {
+            matrix_id: key.matrix_id,
+            format: key.format,
+            precond: key.precond,
+            precision: key.precision,
+        }
+    }
+
+    /// Only policies that keep the matrix resident across cycles can
+    /// re-use a cached slab: gmatrix/gpuR.  The streaming policy re-sends
+    /// `A` every matvec (nothing to cache) and host policies never touch
+    /// device memory.
+    pub fn cacheable(policy: Policy) -> bool {
+        matches!(policy, Policy::GmatrixLike | Policy::GpurVclLike)
+    }
+}
+
+/// What [`ResidencyCache::begin`] decided for one execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BeginOutcome {
+    /// The slab was already resident: the execution skips the one-time
+    /// matrix upload ([`crate::planner::Planner::warm_setup_discount`]).
+    pub warm: bool,
+    /// Residencies evicted to make room.
+    pub evictions: u64,
+    /// The slab is tracked after this call (false when even an empty
+    /// device cannot fit the working set — the job runs uncached).
+    pub stored: bool,
+}
+
+/// One cached residency on one device.
+#[derive(Clone, Debug)]
+struct Slot {
+    key: ResidencyKey,
+    /// Resident slab footprint ([`crate::precision::matrix_device_bytes`]).
+    bytes: usize,
+    /// In-flight executions currently using the slab; pinned slots are
+    /// never evicted.
+    pins: usize,
+}
+
+/// Per-device LRU state: front = least recently used, back = most.
+#[derive(Debug, Default)]
+struct DeviceCache {
+    budget: usize,
+    used: usize,
+    lru: VecDeque<Slot>,
+}
+
+impl DeviceCache {
+    /// Evict unpinned residencies, LRU-first, until `need` extra bytes fit
+    /// the budget (or only pinned slots remain).  Returns evictions.
+    fn make_room(&mut self, need: usize) -> u64 {
+        let mut evictions = 0;
+        while self.used + need > self.budget {
+            match self.lru.iter().position(|s| s.pins == 0) {
+                Some(i) => {
+                    let victim = self.lru.remove(i).expect("position is in range");
+                    self.used -= victim.bytes;
+                    evictions += 1;
+                }
+                None => break,
+            }
+        }
+        evictions
+    }
+}
+
+/// Cross-batch residency cache: per-device LRU of matrix residencies kept
+/// alive BETWEEN batches, bounded by each device's memory budget (min of
+/// the fleet budget and an optional `--cache-mb` override).  `begin`
+/// pins a slot for the duration of an execution (pinned slots are never
+/// evicted); `end` unpins and touches it most-recently-used; `holder`
+/// answers "which device already has this matrix" for routing.
+#[derive(Debug)]
+pub struct ResidencyCache {
+    devices: Mutex<Vec<DeviceCache>>,
+}
+
+impl ResidencyCache {
+    pub fn new(fleet: &Fleet, mem_fraction: f64, budget_override: Option<usize>) -> Self {
+        let devices = (0..fleet.len())
+            .map(|id| {
+                let fleet_budget = fleet.device(id).budget(mem_fraction);
+                DeviceCache {
+                    budget: budget_override.map_or(fleet_budget, |b| b.min(fleet_budget)),
+                    used: 0,
+                    lru: VecDeque::new(),
+                }
+            })
+            .collect();
+        Self { devices: Mutex::new(devices) }
+    }
+
+    /// Explicit per-device budgets (tests / property harnesses).
+    pub fn with_budgets(budgets: Vec<usize>) -> Self {
+        let devices = budgets
+            .into_iter()
+            .map(|budget| DeviceCache { budget, used: 0, lru: VecDeque::new() })
+            .collect();
+        Self { devices: Mutex::new(devices) }
+    }
+
+    /// Claim the residency for one execution on `device`.  Warm when the
+    /// slab is already resident (pin + MRU touch); cold establishes it
+    /// after evicting unpinned LRU residencies under memory pressure.
+    /// `resident_bytes` is the slab footprint that persists between
+    /// batches; `working_set` the full in-flight footprint that must fit
+    /// during the execution.
+    pub fn begin(
+        &self,
+        device: DeviceId,
+        key: ResidencyKey,
+        resident_bytes: usize,
+        working_set: usize,
+    ) -> BeginOutcome {
+        let mut devices = self.devices.lock().unwrap();
+        let Some(dc) = devices.get_mut(device) else {
+            return BeginOutcome { warm: false, evictions: 0, stored: false };
+        };
+        if let Some(i) = dc.lru.iter().position(|s| s.key == key) {
+            let mut slot = dc.lru.remove(i).expect("position is in range");
+            slot.pins += 1;
+            dc.lru.push_back(slot);
+            // the slab is already counted in `used`; only the transient
+            // overshoot (Krylov basis etc.) needs headroom
+            let evictions = dc.make_room(working_set.saturating_sub(resident_bytes));
+            return BeginOutcome { warm: true, evictions, stored: true };
+        }
+        let evictions = dc.make_room(working_set);
+        let stored = dc.used + working_set <= dc.budget;
+        if stored {
+            dc.used += resident_bytes;
+            dc.lru.push_back(Slot { key, bytes: resident_bytes, pins: 1 });
+        }
+        BeginOutcome { warm: false, evictions, stored }
+    }
+
+    /// Release the pin [`ResidencyCache::begin`] took.  The slab STAYS
+    /// resident (that is the point) until memory pressure evicts it.
+    /// No-op when `begin` refused to store.
+    pub fn end(&self, device: DeviceId, key: ResidencyKey) {
+        let mut devices = self.devices.lock().unwrap();
+        let Some(dc) = devices.get_mut(device) else { return };
+        if let Some(i) = dc.lru.iter().position(|s| s.key == key) {
+            let mut slot = dc.lru.remove(i).expect("position is in range");
+            slot.pins = slot.pins.saturating_sub(1);
+            dc.lru.push_back(slot);
+        }
+    }
+
+    /// Which device currently holds this residency (routing: send
+    /// same-matrix traffic where the slab already lives).
+    pub fn holder(&self, key: &ResidencyKey) -> Option<DeviceId> {
+        let devices = self.devices.lock().unwrap();
+        devices
+            .iter()
+            .enumerate()
+            .find(|(_, dc)| dc.lru.iter().any(|s| s.key == *key))
+            .map(|(id, _)| id)
+    }
+
+    /// Resident bytes currently tracked on `device`.
+    pub fn used_bytes(&self, device: DeviceId) -> usize {
+        self.devices.lock().unwrap().get(device).map_or(0, |dc| dc.used)
+    }
+
+    /// `device`'s cache budget in bytes.
+    pub fn budget_of(&self, device: DeviceId) -> usize {
+        self.devices.lock().unwrap().get(device).map_or(0, |dc| dc.budget)
+    }
+
+    /// Cached residency keys on `device`, LRU-first.
+    pub fn lru_keys(&self, device: DeviceId) -> Vec<ResidencyKey> {
+        self.devices
+            .lock()
+            .unwrap()
+            .get(device)
+            .map_or_else(Vec::new, |dc| dc.lru.iter().map(|s| s.key).collect())
+    }
+
+    pub fn contains(&self, device: DeviceId, key: &ResidencyKey) -> bool {
+        self.devices
+            .lock()
+            .unwrap()
+            .get(device)
+            .is_some_and(|dc| dc.lru.iter().any(|s| s.key == *key))
+    }
+}
+
+/// The batch-compatibility key a work item executes under (what the old
+/// device thread computed at push time).
+pub fn batch_key(item: &WorkItem) -> BatchKey {
+    BatchKey {
+        policy: item.plan.policy,
+        matrix_id: item.matrix_id,
+        n: item.request.matrix.order(),
+        m: item.plan.m,
+        format: item.request.matrix.format(),
+        precond: item.plan.precond,
+        placement: item.plan.placement,
+        precision: item.plan.precision,
+    }
+}
+
+#[derive(Debug)]
+struct SchedInner {
+    /// One batching queue per fleet device id (only GPU ids get worker
+    /// threads; the rest stay empty).
+    device: Vec<Batcher<WorkItem>>,
+    /// Host-policy jobs (drained by the CPU pool).
+    host: VecDeque<WorkItem>,
+    /// Bitmask of devices currently executing a claimed batch.
+    busy: u32,
+    open: bool,
+}
+
+/// Placement-aware multi-queue scheduler (see module docs).
+pub struct FleetScheduler {
+    inner: Mutex<SchedInner>,
+    cv: Condvar,
+    planner: Arc<Planner>,
+    cache: Arc<ResidencyCache>,
+    metrics: Arc<Metrics>,
+    /// Device labels by id (queue-depth gauge keys).
+    labels: Vec<String>,
+    /// GPU device ids in registration order (steal scan order).
+    gpu: Vec<DeviceId>,
+    /// Per-device queue bound; submissions beyond it shed.
+    queue_capacity: usize,
+}
+
+impl FleetScheduler {
+    pub fn new(
+        planner: Arc<Planner>,
+        cache: Arc<ResidencyCache>,
+        metrics: Arc<Metrics>,
+        batcher_config: BatcherConfig,
+        queue_capacity: usize,
+    ) -> Self {
+        let fleet = planner.fleet();
+        let labels = (0..fleet.len()).map(|i| fleet.label_of(i).to_string()).collect();
+        let gpu = fleet.gpu_ids();
+        let device = (0..fleet.len()).map(|_| Batcher::new(batcher_config)).collect();
+        Self {
+            inner: Mutex::new(SchedInner {
+                device,
+                host: VecDeque::new(),
+                busy: 0,
+                open: true,
+            }),
+            cv: Condvar::new(),
+            planner,
+            cache,
+            metrics,
+            labels,
+            gpu,
+            queue_capacity: queue_capacity.max(1),
+        }
+    }
+
+    pub fn cache(&self) -> &Arc<ResidencyCache> {
+        &self.cache
+    }
+
+    pub fn gpu_ids(&self) -> &[DeviceId] {
+        &self.gpu
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.inner.lock().unwrap().open
+    }
+
+    /// Queued jobs on device `d` (tests / gauges).
+    pub fn queue_depth(&self, d: DeviceId) -> usize {
+        self.inner.lock().unwrap().device.get(d).map_or(0, |q| q.len())
+    }
+
+    /// Route one item: host-policy jobs to the host queue, device jobs to
+    /// their placement's queue (sharded jobs to the lowest member id —
+    /// the claim masks all members at execution).  Same-matrix traffic is
+    /// re-routed to the device already holding the residency and repriced
+    /// there, so warm hits follow the slab instead of re-uploading
+    /// elsewhere.  Deadline'd jobs shed ([`ShedError`]) when the target
+    /// queue's depth makes the deadline unmeetable.
+    pub fn submit(&self, mut item: WorkItem) -> Result<()> {
+        // residency-pinned routing: decided on submit-time cache state
+        // (warmness itself is re-checked at execution time by `begin`)
+        if let Placement::Single(d) = item.plan.placement {
+            if ResidencyKey::cacheable(item.plan.policy) {
+                let shape = item.request.matrix.shape();
+                let rkey = ResidencyKey {
+                    matrix_id: item.matrix_id,
+                    format: shape.format,
+                    precond: item.plan.precond,
+                    precision: item.plan.precision,
+                };
+                if let Some(h) = self.cache.holder(&rkey) {
+                    if h != d
+                        && self.planner.admits_placement_batch_p(
+                            item.plan.policy,
+                            &shape,
+                            item.plan.m,
+                            Placement::Single(h),
+                            item.plan.precision,
+                            1,
+                        )
+                    {
+                        item.plan = self.planner.reprice_at(
+                            &shape,
+                            &item.request.config,
+                            &item.plan,
+                            Placement::Single(h),
+                        );
+                    }
+                }
+            }
+        }
+
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.open {
+            return Err(anyhow!("service shut down"));
+        }
+        if !item.plan.policy.needs_runtime() {
+            inner.host.push_back(item);
+            drop(inner);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let Some(&first_gpu) = self.gpu.first() else {
+            // no devices registered: run on the host path (the job will
+            // error there if it truly needs a runtime, same as before)
+            inner.host.push_back(item);
+            drop(inner);
+            self.cv.notify_all();
+            return Ok(());
+        };
+        let target = match item.plan.placement {
+            Placement::Single(d) if self.gpu.contains(&d) => d,
+            Placement::Sharded(set) => set.iter().next().unwrap_or(first_gpu),
+            _ => first_gpu,
+        };
+        let depth = inner.device[target].len();
+        if depth >= self.queue_capacity {
+            self.metrics.on_shed();
+            return Err(anyhow::Error::new(ShedError {
+                reason: ShedReason::QueueFull,
+                depth,
+                predicted_seconds: item.plan.predicted_seconds,
+                deadline_seconds: 0.0,
+            }));
+        }
+        if let Some(dl) = item.deadline {
+            if depth > 0 {
+                let slack = dl.saturating_duration_since(Instant::now()).as_secs_f64();
+                let predicted = item.plan.predicted_seconds.max(0.0);
+                if depth as f64 * predicted > slack {
+                    self.metrics.on_shed();
+                    return Err(anyhow::Error::new(ShedError {
+                        reason: ShedReason::DeadlineUnmeetable,
+                        depth,
+                        predicted_seconds: predicted,
+                        deadline_seconds: slack,
+                    }));
+                }
+            }
+        }
+        let key = batch_key(&item);
+        let deadline = item.deadline;
+        inner.device[target].push_with_deadline(key, item, deadline);
+        self.metrics.set_queue_depth(&self.labels[target], inner.device[target].len() as u64);
+        drop(inner);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Device worker loop body: block until a batch is claimable for
+    /// device `d`, claim it (marking every placement member busy) and
+    /// return it with the busy mask to release via
+    /// [`FleetScheduler::complete`].  Steals one admissible lone job from
+    /// a backlogged peer when idle.  Returns `None` after
+    /// [`FleetScheduler::close`] once the queue is drained.
+    pub fn next_device_batch(&self, d: DeviceId) -> Option<(u32, Vec<Pending<WorkItem>>)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            if let Some(key) = inner.device[d].head_key() {
+                let mask = key.placement.devices().mask() | (1u32 << d);
+                if mask & inner.busy == 0 {
+                    if inner.device[d].ready(now) || !inner.open {
+                        let (_key, batch) =
+                            inner.device[d].next_batch().expect("head key implies a batch");
+                        inner.busy |= mask;
+                        self.metrics
+                            .set_queue_depth(&self.labels[d], inner.device[d].len() as u64);
+                        return Some((mask, batch));
+                    }
+                    // young unfilled batch: hold for age-out or arrivals
+                    let hold = inner.device[d]
+                        .hold_until(now)
+                        .unwrap_or(Duration::from_millis(1))
+                        .min(Duration::from_millis(50));
+                    inner = self.cv.wait_timeout(inner, hold).unwrap().0;
+                    continue;
+                }
+                // a placement member is busy (e.g. a shard is running on
+                // it): wait for a completion to release the mask
+                inner = self.cv.wait_timeout(inner, Duration::from_millis(5)).unwrap().0;
+                continue;
+            }
+            if inner.busy & (1u32 << d) == 0 {
+                if let Some(p) = self.try_steal(&mut inner, d) {
+                    inner.busy |= 1u32 << d;
+                    return Some((1u32 << d, vec![p]));
+                }
+            }
+            if !inner.open {
+                return None;
+            }
+            inner = self.cv.wait_timeout(inner, Duration::from_millis(20)).unwrap().0;
+        }
+    }
+
+    /// Steal ONE lone-key single-device job from a backlogged peer for
+    /// idle device `d`: never a foldable sibling group
+    /// ([`Batcher::steal_one`]), never a job whose residency the victim
+    /// already holds, and only when `d`'s budget admits the placement.
+    /// The stolen plan is repriced at `Single(d)` so its prediction (and
+    /// the calibration cell it lands in) matches where it actually runs.
+    fn try_steal(&self, inner: &mut SchedInner, d: DeviceId) -> Option<Pending<WorkItem>> {
+        for &v in &self.gpu {
+            if v == d {
+                continue;
+            }
+            let planner = &self.planner;
+            let cache = &self.cache;
+            let stolen = inner.device[v].steal_one(|p| {
+                if !matches!(p.key.placement, Placement::Single(_)) {
+                    return false;
+                }
+                if ResidencyKey::cacheable(p.key.policy)
+                    && cache.holder(&ResidencyKey::of_batch(&p.key)) == Some(v)
+                {
+                    return false;
+                }
+                let shape = p.item.request.matrix.shape();
+                planner.admits_placement_batch_p(
+                    p.key.policy,
+                    &shape,
+                    p.key.m,
+                    Placement::Single(d),
+                    p.key.precision,
+                    1,
+                )
+            });
+            if let Some(mut p) = stolen {
+                let shape = p.item.request.matrix.shape();
+                p.item.plan = self.planner.reprice_at(
+                    &shape,
+                    &p.item.request.config,
+                    &p.item.plan,
+                    Placement::Single(d),
+                );
+                p.key.placement = Placement::Single(d);
+                self.metrics.on_steal();
+                self.metrics.set_queue_depth(&self.labels[v], inner.device[v].len() as u64);
+                return Some(p);
+            }
+        }
+        None
+    }
+
+    /// Host worker loop body: next host-policy job, `None` after close
+    /// once drained.
+    pub fn next_host_job(&self) -> Option<WorkItem> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.host.pop_front() {
+                return Some(item);
+            }
+            if !inner.open {
+                return None;
+            }
+            inner = self.cv.wait_timeout(inner, Duration::from_millis(50)).unwrap().0;
+        }
+    }
+
+    /// Release the busy mask a claim took and wake waiting workers.
+    pub fn complete(&self, mask: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.busy &= !mask;
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    /// Stop accepting work; workers drain their queues and exit.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().open = false;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{JobId, MatrixSpec, RhsSpec, SolveOutcome, SolveRequest};
+    use crate::gmres::GmresConfig;
+    use crate::planner::{Plan, PlannerConfig};
+    use std::sync::mpsc;
+
+    fn rkey(id: u64) -> ResidencyKey {
+        ResidencyKey {
+            matrix_id: MatrixId(id),
+            format: MatrixFormat::Dense,
+            precond: PrecondKind::Identity,
+            precision: Precision::F64,
+        }
+    }
+
+    #[test]
+    fn cache_cold_then_warm_and_lru_eviction_order() {
+        let cache = ResidencyCache::with_budgets(vec![1000]);
+        let a = cache.begin(0, rkey(1), 300, 300);
+        assert_eq!(a, BeginOutcome { warm: false, evictions: 0, stored: true });
+        cache.end(0, rkey(1));
+        // repeat is warm, no re-upload
+        let a2 = cache.begin(0, rkey(1), 300, 300);
+        assert!(a2.warm && a2.stored && a2.evictions == 0);
+        cache.end(0, rkey(1));
+        // fill: 1 then 2 then 3 exceeds budget -> evicts LRU (key 1)
+        cache.begin(0, rkey(2), 300, 300);
+        cache.end(0, rkey(2));
+        let c = cache.begin(0, rkey(3), 500, 500);
+        assert!(!c.warm && c.stored);
+        assert_eq!(c.evictions, 1, "one LRU eviction makes room");
+        assert!(!cache.contains(0, &rkey(1)), "key 1 was least recently used");
+        assert!(cache.contains(0, &rkey(2)));
+        assert!(cache.used_bytes(0) <= cache.budget_of(0));
+    }
+
+    #[test]
+    fn warm_touch_refreshes_lru_position() {
+        let cache = ResidencyCache::with_budgets(vec![900]);
+        cache.begin(0, rkey(1), 300, 300);
+        cache.end(0, rkey(1));
+        cache.begin(0, rkey(2), 300, 300);
+        cache.end(0, rkey(2));
+        // touch 1 so 2 becomes LRU
+        cache.begin(0, rkey(1), 300, 300);
+        cache.end(0, rkey(1));
+        cache.begin(0, rkey(3), 600, 600);
+        assert!(!cache.contains(0, &rkey(2)), "2 was LRU after 1's touch");
+        assert!(cache.contains(0, &rkey(1)));
+    }
+
+    #[test]
+    fn pinned_residencies_are_never_evicted() {
+        let cache = ResidencyCache::with_budgets(vec![1000]);
+        let a = cache.begin(0, rkey(1), 600, 600);
+        assert!(a.stored);
+        // key 1 still pinned (no end): a job needing the whole budget
+        // cannot evict it and must run uncached
+        let b = cache.begin(0, rkey(2), 900, 900);
+        assert!(!b.stored, "cannot fit without evicting a pinned slab");
+        assert!(cache.contains(0, &rkey(1)), "pinned slab survived");
+        assert!(cache.used_bytes(0) <= cache.budget_of(0));
+        cache.end(0, rkey(1));
+        let c = cache.begin(0, rkey(2), 900, 900);
+        assert!(c.stored && c.evictions == 1, "unpinned slab evicts normally");
+    }
+
+    #[test]
+    fn oversized_working_set_is_refused_not_stored() {
+        let cache = ResidencyCache::with_budgets(vec![100]);
+        let a = cache.begin(0, rkey(1), 500, 500);
+        assert_eq!(a, BeginOutcome { warm: false, evictions: 0, stored: false });
+        assert_eq!(cache.used_bytes(0), 0);
+        cache.end(0, rkey(1)); // must be a no-op
+        assert_eq!(cache.used_bytes(0), 0);
+    }
+
+    #[test]
+    fn holder_reports_the_device_with_the_slab() {
+        let cache = ResidencyCache::with_budgets(vec![1000, 1000]);
+        assert_eq!(cache.holder(&rkey(1)), None);
+        cache.begin(1, rkey(1), 100, 100);
+        cache.end(1, rkey(1));
+        assert_eq!(cache.holder(&rkey(1)), Some(1));
+    }
+
+    fn item(
+        n: usize,
+        policy: Policy,
+        plan: Plan,
+        deadline: Option<Instant>,
+    ) -> (WorkItem, mpsc::Receiver<Result<SolveOutcome>>) {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let matrix = MatrixSpec::Table1 { n, seed: 0 };
+        (
+            WorkItem {
+                id: JobId(1),
+                matrix_id: matrix.content_id(),
+                rhs: RhsSpec::Default,
+                request: SolveRequest {
+                    matrix,
+                    config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 100, ..Default::default() },
+                    policy: Some(policy),
+                },
+                plan,
+                downgraded: false,
+                submitted_at: Instant::now(),
+                deadline,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    fn scheduler(fleet: &str) -> (FleetScheduler, Arc<Metrics>) {
+        let planner = Arc::new(Planner::new(PlannerConfig {
+            fleet: Fleet::parse(fleet).unwrap(),
+            ..Default::default()
+        }));
+        let cache = Arc::new(ResidencyCache::new(planner.fleet(), 0.9, None));
+        let metrics = Arc::new(Metrics::new());
+        let batcher = BatcherConfig { max_batch: 8, max_age: Duration::ZERO };
+        (FleetScheduler::new(planner, cache, metrics.clone(), batcher, 64), metrics)
+    }
+
+    #[test]
+    fn routes_host_policies_to_the_host_queue() {
+        let (sched, _m) = scheduler("840m,v100");
+        let (it, _rx) = item(32, Policy::SerialNative, Plan::pinned(Policy::SerialNative, 8), None);
+        sched.submit(it).unwrap();
+        assert_eq!(sched.queue_depth(0), 0);
+        let job = sched.next_host_job().expect("host job queued");
+        assert_eq!(job.plan.policy, Policy::SerialNative);
+    }
+
+    #[test]
+    fn claims_own_single_device_batch_and_masks_it() {
+        let (sched, _m) = scheduler("840m,v100");
+        let mut plan = Plan::pinned(Policy::GmatrixLike, 8);
+        plan.placement = Placement::Single(1);
+        let (it, _rx) = item(32, Policy::GmatrixLike, plan, None);
+        sched.submit(it).unwrap();
+        assert_eq!(sched.queue_depth(1), 1);
+        let (mask, batch) = sched.next_device_batch(1).expect("claimable");
+        assert_eq!(mask, 1 << 1);
+        assert_eq!(batch.len(), 1);
+        sched.complete(mask);
+    }
+
+    #[test]
+    fn sheds_when_depth_times_predicted_exceeds_deadline() {
+        let (sched, metrics) = scheduler("840m");
+        let mut plan = Plan::pinned(Policy::GmatrixLike, 8);
+        plan.placement = Placement::Single(0);
+        plan.predicted_seconds = 10.0;
+        // first job occupies the queue (no deadline, always admitted)
+        let (first, _rx1) = item(32, Policy::GmatrixLike, plan, None);
+        sched.submit(first).unwrap();
+        // second cannot finish behind a 10s prediction in 1ms
+        let dl = Some(Instant::now() + Duration::from_millis(1));
+        let (second, _rx2) = item(32, Policy::GmatrixLike, plan, dl);
+        let err = sched.submit(second).expect_err("must shed");
+        let shed = err.downcast_ref::<ShedError>().expect("typed shed error");
+        assert_eq!(shed.reason, ShedReason::DeadlineUnmeetable);
+        assert_eq!(shed.depth, 1);
+        assert_eq!(metrics.sheds(), 1);
+        // a relaxed deadline admits fine
+        let dl = Some(Instant::now() + Duration::from_secs(3600));
+        let (third, _rx3) = item(32, Policy::GmatrixLike, plan, dl);
+        sched.submit(third).unwrap();
+        assert_eq!(sched.queue_depth(0), 2);
+    }
+
+    #[test]
+    fn full_device_queue_sheds_typed() {
+        let planner = Arc::new(Planner::new(PlannerConfig {
+            fleet: Fleet::parse("840m").unwrap(),
+            ..Default::default()
+        }));
+        let cache = Arc::new(ResidencyCache::new(planner.fleet(), 0.9, None));
+        let metrics = Arc::new(Metrics::new());
+        let batcher = BatcherConfig { max_batch: 8, max_age: Duration::ZERO };
+        let sched = FleetScheduler::new(planner, cache, metrics.clone(), batcher, 1);
+        let mut plan = Plan::pinned(Policy::GmatrixLike, 8);
+        plan.placement = Placement::Single(0);
+        let (a, _rxa) = item(32, Policy::GmatrixLike, plan, None);
+        sched.submit(a).unwrap();
+        let (b, _rxb) = item(32, Policy::GmatrixLike, plan, None);
+        let err = sched.submit(b).expect_err("bounded queue");
+        let shed = err.downcast_ref::<ShedError>().expect("typed shed error");
+        assert_eq!(shed.reason, ShedReason::QueueFull);
+    }
+
+    #[test]
+    fn idle_device_steals_an_admissible_lone_job_and_reprices_it() {
+        let (sched, metrics) = scheduler("840m,v100");
+        let mut plan = Plan::pinned(Policy::GmatrixLike, 8);
+        plan.placement = Placement::Single(1);
+        let (it, _rx) = item(64, Policy::GmatrixLike, plan, None);
+        sched.submit(it).unwrap();
+        assert_eq!(sched.queue_depth(1), 1);
+        // device 0 is idle with an empty queue: it must steal the lone
+        // v100 job, and the stolen plan must be repriced at Single(0)
+        let (mask, batch) = sched.next_device_batch(0).expect("stolen work");
+        assert_eq!(mask, 1 << 0);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].item.plan.placement, Placement::Single(0));
+        assert_eq!(batch[0].key.placement, Placement::Single(0));
+        assert_eq!(metrics.steals(), 1);
+        assert_eq!(sched.queue_depth(1), 0);
+        sched.complete(mask);
+    }
+
+    #[test]
+    fn steal_never_takes_a_job_whose_residency_the_victim_holds() {
+        let (sched, metrics) = scheduler("840m,v100");
+        let mut plan = Plan::pinned(Policy::GmatrixLike, 8);
+        plan.placement = Placement::Single(1);
+        let (it, _rx) = item(64, Policy::GmatrixLike, plan, None);
+        // the victim (device 1) already holds this matrix's residency
+        let shape = it.request.matrix.shape();
+        let rk = ResidencyKey {
+            matrix_id: it.matrix_id,
+            format: shape.format,
+            precond: it.plan.precond,
+            precision: it.plan.precision,
+        };
+        sched.cache().begin(1, rk, 100, 100);
+        sched.cache().end(1, rk);
+        sched.submit(it).unwrap();
+        sched.close(); // so the probe below returns instead of blocking
+        assert!(
+            sched.next_device_batch(0).is_none(),
+            "warm job must stay on its holder's queue"
+        );
+        assert_eq!(metrics.steals(), 0);
+        assert_eq!(sched.queue_depth(1), 1, "job still queued on the holder");
+    }
+
+    #[test]
+    fn submit_routes_to_the_residency_holder_and_reprices() {
+        let (sched, _m) = scheduler("840m,v100");
+        let mut plan = Plan::pinned(Policy::GmatrixLike, 8);
+        plan.placement = Placement::Single(0);
+        let (it, _rx) = item(64, Policy::GmatrixLike, plan, None);
+        let shape = it.request.matrix.shape();
+        let rk = ResidencyKey {
+            matrix_id: it.matrix_id,
+            format: shape.format,
+            precond: it.plan.precond,
+            precision: it.plan.precision,
+        };
+        // device 1 holds the slab: the Single(0) submission must follow it
+        sched.cache().begin(1, rk, 100, 100);
+        sched.cache().end(1, rk);
+        sched.submit(it).unwrap();
+        assert_eq!(sched.queue_depth(0), 0);
+        assert_eq!(sched.queue_depth(1), 1, "routed to the residency holder");
+        let (mask, batch) = sched.next_device_batch(1).expect("claimable");
+        assert_eq!(batch[0].item.plan.placement, Placement::Single(1));
+        sched.complete(mask);
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let (sched, _m) = scheduler("840m");
+        let mut plan = Plan::pinned(Policy::GmatrixLike, 8);
+        plan.placement = Placement::Single(0);
+        let (it, _rx) = item(32, Policy::GmatrixLike, plan, None);
+        sched.submit(it).unwrap();
+        sched.close();
+        let (mask, batch) = sched.next_device_batch(0).expect("drains queued work");
+        assert_eq!(batch.len(), 1);
+        sched.complete(mask);
+        assert!(sched.next_device_batch(0).is_none(), "drained and closed");
+        assert!(sched.next_host_job().is_none());
+        let (late, _rx2) = item(32, Policy::SerialNative, Plan::pinned(Policy::SerialNative, 8), None);
+        assert!(sched.submit(late).is_err(), "closed scheduler refuses work");
+    }
+}

@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
@@ -19,8 +19,9 @@ use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::job::{JobId, MatrixId, MatrixSpec, RhsSpec, SolveOutcome, SolveRequest};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{Router, RouterConfig};
+use crate::coordinator::scheduler::{FleetScheduler, ResidencyCache};
 use crate::coordinator::session::MatrixHandle;
-use crate::coordinator::worker::{spawn_cpu_pool, spawn_device_thread, WorkItem};
+use crate::coordinator::worker::{spawn_fleet_workers, WorkItem};
 use crate::gmres::GmresConfig;
 use crate::Result;
 
@@ -35,6 +36,12 @@ pub struct ServiceConfig {
     pub artifacts_dir: Option<PathBuf>,
     /// Bounded queue capacity (backpressure: submits fail fast beyond it).
     pub queue_capacity: usize,
+    /// Per-device work-queue bound: submissions beyond it shed with a
+    /// typed [`crate::coordinator::ShedError`].
+    pub device_queue_capacity: usize,
+    /// Cross-batch residency cache budget per device, in bytes (`None` =
+    /// the device's fleet memory budget; the `--cache-mb` CLI flag).
+    pub cache_budget: Option<usize>,
     /// Calibration snapshot path: loaded (if present) on start so the
     /// router plans warm, saved on graceful shutdown.
     pub calib_file: Option<PathBuf>,
@@ -48,6 +55,8 @@ impl Default for ServiceConfig {
             cpu_workers: 2,
             artifacts_dir: None,
             queue_capacity: 256,
+            device_queue_capacity: 64,
+            cache_budget: None,
             calib_file: None,
         }
     }
@@ -58,8 +67,8 @@ impl Default for ServiceConfig {
 pub struct SolveService {
     router: Router,
     metrics: Arc<Metrics>,
-    device_tx: Mutex<Option<mpsc::Sender<WorkItem>>>,
-    cpu_tx: Mutex<Option<mpsc::Sender<WorkItem>>>,
+    /// Per-device work queues + residency cache + admission control.
+    scheduler: Arc<FleetScheduler>,
     next_id: AtomicU64,
     inflight: Arc<AtomicU64>,
     queue_capacity: u64,
@@ -87,22 +96,29 @@ impl SolveService {
                 }
             }
         }
-        let (device_tx, device_rx) = mpsc::channel();
-        let (cpu_tx, cpu_rx) = mpsc::channel();
-        let mut handles = Vec::new();
-        handles.push(spawn_device_thread(
-            config.artifacts_dir.clone(),
-            device_rx,
-            config.batcher,
-            metrics.clone(),
-            planner.clone(),
+        let cache = Arc::new(ResidencyCache::new(
+            planner.fleet(),
+            planner.config().mem_fraction,
+            config.cache_budget,
         ));
-        handles.extend(spawn_cpu_pool(config.cpu_workers, cpu_rx, metrics.clone(), planner));
+        let scheduler = Arc::new(FleetScheduler::new(
+            planner.clone(),
+            cache,
+            metrics.clone(),
+            config.batcher,
+            config.device_queue_capacity,
+        ));
+        let handles = spawn_fleet_workers(
+            config.artifacts_dir.clone(),
+            scheduler.clone(),
+            metrics.clone(),
+            planner,
+            config.cpu_workers,
+        );
         Arc::new(Self {
             router,
             metrics,
-            device_tx: Mutex::new(Some(device_tx)),
-            cpu_tx: Mutex::new(Some(cpu_tx)),
+            scheduler,
             next_id: AtomicU64::new(1),
             inflight: Arc::new(AtomicU64::new(0)),
             queue_capacity: config.queue_capacity as u64,
@@ -149,6 +165,11 @@ impl SolveService {
         &self.router
     }
 
+    /// The fleet scheduler (queues, residency cache, admission control).
+    pub fn scheduler(&self) -> &Arc<FleetScheduler> {
+        &self.scheduler
+    }
+
     /// Jobs admitted but not yet completed.
     pub fn inflight(&self) -> u64 {
         self.inflight.load(Ordering::Relaxed)
@@ -181,7 +202,8 @@ impl SolveService {
         let SolveRequest { matrix, config, policy } = request;
         let id = matrix.content_id();
         self.session_ref(id);
-        let result = self.submit_session_nowait(id, matrix, RhsSpec::Default, config, policy);
+        let result =
+            self.submit_session_nowait(id, matrix, RhsSpec::Default, config, policy, None);
         self.session_unref(id);
         result
     }
@@ -196,6 +218,7 @@ impl SolveService {
         rhs: RhsSpec,
         config: GmresConfig,
         policy: Option<Policy>,
+        deadline: Option<Duration>,
     ) -> Result<mpsc::Receiver<Result<SolveOutcome>>> {
         let request = SolveRequest { matrix, config, policy };
         // admission by queue depth (backpressure)
@@ -221,20 +244,13 @@ impl SolveService {
             plan: route.plan,
             downgraded: route.downgraded,
             submitted_at: Instant::now(),
+            deadline: deadline.map(|d| Instant::now() + d),
             reply: reply_tx,
         };
-        let send_result = {
-            let guard = if route.policy.needs_runtime() {
-                self.device_tx.lock().unwrap()
-            } else {
-                self.cpu_tx.lock().unwrap()
-            };
-            match guard.as_ref() {
-                Some(tx) => tx.send(item).map_err(|_| anyhow!("worker channel closed")),
-                None => Err(anyhow!("service shut down")),
-            }
-        };
-        if let Err(e) = send_result {
+        // the scheduler routes by placement (and to a residency holder),
+        // sheds deadline'd jobs its queues cannot meet, and refuses work
+        // once closed
+        if let Err(e) = self.scheduler.submit(item) {
             self.inflight.fetch_sub(1, Ordering::SeqCst);
             return Err(e);
         }
@@ -247,10 +263,10 @@ impl SolveService {
         self.inflight.fetch_sub(1, Ordering::SeqCst);
     }
 
-    /// Graceful shutdown: close intake, join workers, persist calibration.
+    /// Graceful shutdown: close intake, drain queues, join workers,
+    /// persist calibration.
     pub fn shutdown(&self) {
-        *self.device_tx.lock().unwrap() = None;
-        *self.cpu_tx.lock().unwrap() = None;
+        self.scheduler.close();
         let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
         for h in handles {
             let _ = h.join();

@@ -88,6 +88,7 @@ impl MatrixHandle {
             rhs,
             config: GmresConfig::default(),
             policy: None,
+            deadline: None,
         }
     }
 
@@ -123,6 +124,7 @@ pub struct SolveRequestBuilder {
     rhs: RhsSpec,
     config: GmresConfig,
     policy: Option<Policy>,
+    deadline: Option<std::time::Duration>,
 }
 
 impl std::fmt::Debug for SolveRequestBuilder {
@@ -178,6 +180,18 @@ impl SolveRequestBuilder {
         self
     }
 
+    /// Completion deadline, measured from submission.  Admission control:
+    /// the scheduler *sheds* the request with a typed
+    /// [`crate::coordinator::ShedError`] when the target queue's depth
+    /// times the plan's predicted seconds already exceeds this slack, and
+    /// the batcher flushes a pending batch early rather than age a
+    /// deadline'd member toward a shed.  No deadline (the default) means
+    /// never shed.
+    pub fn deadline(mut self, deadline: std::time::Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
     /// Submit and block until the outcome is ready.
     pub fn submit(self) -> Result<SolveOutcome> {
         let service = self.service.clone();
@@ -199,6 +213,7 @@ impl SolveRequestBuilder {
             self.rhs,
             self.config,
             self.policy,
+            self.deadline,
         )
     }
 }

@@ -25,8 +25,9 @@ use crate::backend::{build_block_engine, build_engine_preconditioned};
 use crate::coordinator::batcher::{BatchKey, Batcher, BatcherConfig, Pending};
 use crate::coordinator::job::{JobId, MatrixId, RhsSpec, SolveOutcome, SolveRequest};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::{FleetScheduler, ResidencyCache, ResidencyKey};
 use crate::fleet::{
-    build_sharded_block_engine, build_sharded_engine, costs as fleet_costs, Placement,
+    build_sharded_block_engine, build_sharded_engine, costs as fleet_costs, DeviceId, Placement,
 };
 use crate::gmres::{BlockGmres, GmresConfig, RestartedGmres, SolveReport};
 use crate::planner::{FoldEvaluation, Plan, Planner};
@@ -46,15 +47,92 @@ pub struct WorkItem {
     pub plan: Plan,
     pub downgraded: bool,
     pub submitted_at: Instant,
+    /// Completion deadline (admission control: the scheduler sheds jobs
+    /// the queue depth cannot meet; the batcher flushes early for them).
+    pub deadline: Option<Instant>,
     pub reply: mpsc::SyncSender<Result<SolveOutcome>>,
+}
+
+/// The residency cache a worker executes against: the cache plus the
+/// device id the worker owns.  `None` on host paths and in legacy
+/// single-thread tests (cold execution, no cross-batch residency).
+type CacheCtx<'a> = Option<(&'a ResidencyCache, DeviceId)>;
+
+/// Claim the residency for `plan` on the worker's device, if the policy
+/// keeps one.  Returns the warm setup discount (0 for cold), the resident
+/// slab bytes a warm hit avoided re-uploading, and the claim to release
+/// via [`ResidencyCache::end`] after the run.
+fn claim_residency(
+    cache_ctx: CacheCtx<'_>,
+    matrix_id: MatrixId,
+    plan: &Plan,
+    shape: &crate::linalg::SystemShape,
+    k: usize,
+    metrics: &Metrics,
+    planner: &Planner,
+) -> (f64, u64, Option<(DeviceId, ResidencyKey)>) {
+    let Some((cache, dev)) = cache_ctx else { return (0.0, 0, None) };
+    if !ResidencyKey::cacheable(plan.policy) || !matches!(plan.placement, Placement::Single(_)) {
+        return (0.0, 0, None);
+    }
+    let rkey = ResidencyKey {
+        matrix_id,
+        format: shape.format,
+        precond: plan.precond,
+        precision: plan.precision,
+    };
+    let resident = crate::precision::matrix_device_bytes(shape, plan.precision);
+    let working_set =
+        crate::device::memory::working_set_bytes_batch_p(shape, plan.m, k, plan.policy, plan.precision);
+    let begun = cache.begin(dev, rkey, resident, working_set);
+    if begun.evictions > 0 {
+        metrics.on_cache_evictions(begun.evictions);
+    }
+    let (discount, saved) = if begun.warm {
+        metrics.on_cache_hit();
+        metrics.on_upload_saved(resident as u64);
+        let discount = planner.warm_setup_discount_k(
+            plan.policy,
+            shape,
+            plan.m,
+            plan.placement,
+            plan.precision,
+            k,
+        );
+        (discount, resident as u64)
+    } else {
+        metrics.on_cache_miss();
+        (0.0, 0)
+    };
+    let claim = begun.stored.then_some((dev, rkey));
+    (discount, saved, claim)
 }
 
 /// Execute one item to completion (shared by device + cpu paths).
 fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, planner: &Planner) {
+    run_item_cached(item, runtime, metrics, planner, None)
+}
+
+/// [`run_item`] against a device's cross-batch residency cache.  The
+/// engine itself always runs the COLD cost model and its raw measurement
+/// feeds calibration unchanged (warm hits stay unbiased); a warm hit is
+/// accounted by discounting the one-time upload from every OUTWARD
+/// number — the outcome's modeled seconds, the plan's prices, and the
+/// device's busy/bytes shares — using the planner's warm setup table so
+/// scheduling and pricing cannot drift.
+fn run_item_cached(
+    item: WorkItem,
+    runtime: Option<Rc<Runtime>>,
+    metrics: &Metrics,
+    planner: &Planner,
+    cache_ctx: CacheCtx<'_>,
+) {
     let started = Instant::now();
     let queue_seconds = started.duration_since(item.submitted_at).as_secs_f64();
     let plan = item.plan;
     let shape = item.request.matrix.shape();
+    let (warm_discount, warm_saved_bytes, claim) =
+        claim_residency(cache_ctx, item.matrix_id, &plan, &shape, 1, metrics, planner);
     let outcome = (|| -> Result<SolveOutcome> {
         let (a, b_default) = item.request.matrix.materialize();
         let b = item.rhs.resolve(&b_default)?;
@@ -105,12 +183,21 @@ fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, pla
                     report.cycles,
                     plan.precision,
                 ) as u64;
-                let shares = vec![(label, report.sim_seconds, bytes)];
+                // a warm hit skipped the one-time upload the cold model
+                // charged: the device was busy that much less and moved
+                // that many fewer bytes
+                let shares = vec![(
+                    label,
+                    (report.sim_seconds - warm_discount).max(0.0),
+                    bytes.saturating_sub(warm_saved_bytes),
+                )];
                 (report, shares)
             }
         };
         // feedback: predicted vs measured modeled seconds -> cost
-        // calibration; observed contraction -> convergence calibration
+        // calibration; observed contraction -> convergence calibration.
+        // The RAW cold measurement is observed — warm hits calibrate the
+        // same cells unbiased.
         planner.observe(&plan, format, report.sim_seconds);
         if let Some(factor) = per_cycle_contraction(&report) {
             planner.observe_convergence_p(format, plan.precond, plan.precision, plan.m, factor);
@@ -118,15 +205,29 @@ fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, pla
         for (label, busy, bytes) in device_shares {
             metrics.on_device(&label, busy, bytes);
         }
+        let mut report = report;
+        let mut out_plan = plan;
+        if warm_discount > 0.0 {
+            report.sim_seconds = (report.sim_seconds - warm_discount).max(0.0);
+            let coeff = planner.coeff_cell(plan.policy, format, plan.placement, plan.precision);
+            out_plan.base_seconds = (out_plan.base_seconds - warm_discount).max(0.0);
+            out_plan.predicted_seconds =
+                (out_plan.predicted_seconds - warm_discount * coeff).max(0.0);
+        }
         Ok(SolveOutcome {
             id: item.id,
             policy: plan.policy,
             downgraded: item.downgraded,
-            plan,
+            plan: out_plan,
             report,
             queue_seconds,
         })
     })();
+    if let Some((dev, rkey)) = claim {
+        if let Some((cache, _)) = cache_ctx {
+            cache.end(dev, rkey);
+        }
+    }
     match &outcome {
         Ok(_) => metrics.on_complete(started.elapsed().as_secs_f64(), queue_seconds, item.downgraded),
         Err(_) => metrics.on_fail(),
@@ -144,6 +245,17 @@ fn run_batch(
     runtime: Option<Rc<Runtime>>,
     metrics: &Metrics,
     planner: &Planner,
+) {
+    run_batch_cached(batch, runtime, metrics, planner, None)
+}
+
+/// [`run_batch`] against a device's cross-batch residency cache.
+fn run_batch_cached(
+    batch: Vec<Pending<WorkItem>>,
+    runtime: Option<Rc<Runtime>>,
+    metrics: &Metrics,
+    planner: &Planner,
+    cache_ctx: CacheCtx<'_>,
 ) {
     // a member whose explicit rhs cannot resolve must fail ALONE, never
     // poison same-batch siblings — such batches run unfolded so the bad
@@ -165,12 +277,12 @@ fn run_batch(
         let probe = GmresConfig { tol: min_tol, ..batch[0].item.request.config };
         let eval = planner.evaluate_fold(&shape, &probe, &plan, batch.len());
         if eval.worthwhile() {
-            run_folded(batch, metrics, planner, eval);
+            run_folded(batch, metrics, planner, eval, cache_ctx);
             return;
         }
     }
     for pending in batch {
-        run_item(pending.item, runtime.clone(), metrics, planner);
+        run_item_cached(pending.item, runtime.clone(), metrics, planner, cache_ctx);
     }
 }
 
@@ -184,6 +296,7 @@ fn run_folded(
     metrics: &Metrics,
     planner: &Planner,
     eval: FoldEvaluation,
+    cache_ctx: CacheCtx<'_>,
 ) {
     let started = Instant::now();
     let k = batch.len();
@@ -194,6 +307,10 @@ fn run_folded(
         .iter()
         .map(|it| started.duration_since(it.submitted_at).as_secs_f64())
         .collect();
+    // one residency serves the whole fold: claim it once, discount the
+    // one-time upload once per batch on a warm hit
+    let (warm_discount, warm_saved_bytes, claim) =
+        claim_residency(cache_ctx, items[0].matrix_id, &plan, &shape, k, metrics, planner);
 
     type FoldRun = (Vec<SolveReport>, Vec<(String, f64, u64)>);
     let result = (|| -> Result<FoldRun> {
@@ -262,8 +379,10 @@ fn run_folded(
             if device_shares.is_empty() {
                 // single-residency placement: one device row, bytes from
                 // the independent tally minus what the fold never moved
+                // (and minus the warm residency the cache kept alive)
                 let label = planner.config().fleet.placement_label(plan.placement);
-                let busy: f64 = reports.iter().map(|r| r.sim_seconds).sum();
+                let busy: f64 =
+                    (reports.iter().map(|r| r.sim_seconds).sum::<f64>() - warm_discount).max(0.0);
                 let indep_bytes: u64 = reports
                     .iter()
                     .map(|r| {
@@ -276,7 +395,11 @@ fn run_folded(
                         ) as u64
                     })
                     .sum();
-                metrics.on_device(&label, busy, indep_bytes.saturating_sub(saved));
+                metrics.on_device(
+                    &label,
+                    busy,
+                    indep_bytes.saturating_sub(saved).saturating_sub(warm_saved_bytes),
+                );
             } else {
                 for (label, busy, bytes) in &device_shares {
                     metrics.on_device(label, *busy, *bytes);
@@ -284,8 +407,17 @@ fn run_folded(
             }
             let per_rhs_base = eval.folded_base_seconds / k as f64;
             let per_rhs_pred = eval.folded_seconds / k as f64;
+            // one residency, so the warm discount applies once per batch;
+            // each RHS outcome sheds its 1/k share
+            let per_rhs_discount = warm_discount / k as f64;
+            let coeff = if warm_discount > 0.0 {
+                planner.coeff_cell(plan.policy, shape.format, plan.placement, plan.precision)
+            } else {
+                0.0
+            };
             let wall = started.elapsed().as_secs_f64();
             for (i, (item, report)) in items.into_iter().zip(reports).enumerate() {
+                // calibration sees the RAW cold measurement (unbiased)
                 planner.observe_measured(
                     &plan,
                     shape.format,
@@ -303,11 +435,19 @@ fn run_folded(
                     );
                 }
                 metrics.on_complete(wall, queue_seconds[i], item.downgraded);
+                let mut report = report;
+                let mut out_plan = plan;
+                if per_rhs_discount > 0.0 {
+                    report.sim_seconds = (report.sim_seconds - per_rhs_discount).max(0.0);
+                    out_plan.base_seconds = (out_plan.base_seconds - per_rhs_discount).max(0.0);
+                    out_plan.predicted_seconds =
+                        (out_plan.predicted_seconds - per_rhs_discount * coeff).max(0.0);
+                }
                 let outcome = SolveOutcome {
                     id: item.id,
                     policy: plan.policy,
                     downgraded: item.downgraded,
-                    plan,
+                    plan: out_plan,
                     report,
                     queue_seconds: queue_seconds[i],
                 };
@@ -320,6 +460,11 @@ fn run_folded(
                 metrics.on_fail();
                 let _ = item.reply.send(Err(anyhow!("folded block solve failed: {msg}")));
             }
+        }
+    }
+    if let Some((dev, rkey)) = claim {
+        if let Some((cache, _)) = cache_ctx {
+            cache.end(dev, rkey);
         }
     }
 }
@@ -411,6 +556,71 @@ fn push(batcher: &mut Batcher<WorkItem>, item: WorkItem) {
     batcher.push(key, item);
 }
 
+/// Spawn the fleet: one device worker per registered GPU — each owning its
+/// OWN (non-`Send`) runtime instance and draining its own scheduler queue
+/// with placement-aware claims, work stealing and the device's residency
+/// cache — plus `cpu_workers` host threads draining the host queue.
+/// Workers exit once the scheduler is closed and drained.
+pub fn spawn_fleet_workers(
+    artifacts_dir: Option<PathBuf>,
+    scheduler: Arc<FleetScheduler>,
+    metrics: Arc<Metrics>,
+    planner: Arc<Planner>,
+    cpu_workers: usize,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let mut handles = Vec::new();
+    for &d in scheduler.gpu_ids() {
+        let scheduler = scheduler.clone();
+        let metrics = metrics.clone();
+        let planner = planner.clone();
+        let dir = artifacts_dir.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("gmres-dev-{d}"))
+                .spawn(move || {
+                    let runtime: Option<Rc<Runtime>> = match dir {
+                        Some(dir) => match Runtime::new(&dir) {
+                            Ok(rt) => Some(Rc::new(rt)),
+                            Err(e) => {
+                                eprintln!("device worker {d}: runtime unavailable: {e:#}");
+                                None
+                            }
+                        },
+                        None => Runtime::from_env().ok().map(Rc::new),
+                    };
+                    let cache = scheduler.cache().clone();
+                    while let Some((mask, batch)) = scheduler.next_device_batch(d) {
+                        run_batch_cached(
+                            batch,
+                            runtime.clone(),
+                            &metrics,
+                            &planner,
+                            Some((cache.as_ref(), d)),
+                        );
+                        scheduler.complete(mask);
+                    }
+                })
+                .expect("spawn device worker"),
+        );
+    }
+    for i in 0..cpu_workers.max(1) {
+        let scheduler = scheduler.clone();
+        let metrics = metrics.clone();
+        let planner = planner.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("gmres-cpu-{i}"))
+                .spawn(move || {
+                    while let Some(item) = scheduler.next_host_job() {
+                        run_item(item, None, &metrics, &planner);
+                    }
+                })
+                .expect("spawn cpu worker"),
+        );
+    }
+    handles
+}
+
 /// Spawn `count` CPU workers sharing one receiver.
 pub fn spawn_cpu_pool(
     count: usize,
@@ -464,6 +674,7 @@ mod tests {
                 plan: Plan::pinned(policy, 8),
                 downgraded: false,
                 submitted_at: Instant::now(),
+                deadline: None,
                 reply: tx,
             },
             rx,
@@ -673,6 +884,66 @@ mod tests {
             assert!(rx.recv().unwrap().unwrap().report.converged);
         }
         assert_eq!(metrics.folds(), 0, "no fold across different matrices");
+    }
+
+    #[test]
+    fn warm_repeat_discounts_outcome_but_calibrates_raw() {
+        use crate::coordinator::scheduler::ResidencyCache;
+        // two sequential solves of the same matrix through one device's
+        // residency cache: the first is cold, the second warm.  The warm
+        // outcome sheds EXACTLY the planner's warm setup discount (same
+        // deterministic cost model on both runs), while the calibrator
+        // observes the raw cold measurement both times.
+        let metrics = Arc::new(Metrics::new());
+        let planner = Arc::new(Planner::default());
+        let cache = ResidencyCache::with_budgets(vec![1 << 40]);
+        let rt = Some(Rc::new(Runtime::native()));
+        let mk = || {
+            let (mut it, rx) = item(64, Policy::GmatrixLike);
+            it.plan = planner.plan(
+                &it.request.matrix.shape(),
+                &it.request.config,
+                Some(Policy::GmatrixLike),
+            );
+            (it, rx)
+        };
+        let (it1, rx1) = mk();
+        let plan = it1.plan;
+        let shape = it1.request.matrix.shape();
+        assert!(matches!(plan.placement, Placement::Single(_)), "device placement expected");
+        run_item_cached(it1, rt.clone(), &metrics, &planner, Some((&cache, 0)));
+        let cold = rx1.recv().unwrap().unwrap();
+        let (it2, rx2) = mk();
+        run_item_cached(it2, rt.clone(), &metrics, &planner, Some((&cache, 0)));
+        let warm = rx2.recv().unwrap().unwrap();
+        assert_eq!(metrics.cache_misses(), 1);
+        assert_eq!(metrics.cache_hits(), 1);
+        let discount = planner.warm_setup_discount(
+            plan.policy,
+            &shape,
+            plan.m,
+            plan.placement,
+            plan.precision,
+        );
+        assert!(discount > 0.0, "residency policy must have a warm discount");
+        assert!(
+            warm.report.sim_seconds < cold.report.sim_seconds,
+            "warm repeat must book strictly less modeled time"
+        );
+        let measured_gap = cold.report.sim_seconds - warm.report.sim_seconds;
+        assert!(
+            (measured_gap - discount).abs() <= 1e-12 * discount.max(1.0),
+            "booked warm saving {measured_gap} must match the planner's {discount}"
+        );
+        let a_bytes = crate::precision::matrix_device_bytes(&shape, plan.precision) as u64;
+        assert_eq!(metrics.uploads_saved_bytes(), a_bytes, "one upload avoided");
+        // calibration saw RAW measurements: two observations, identical
+        // measured seconds, so the coefficient is the same as after one
+        assert_eq!(planner.observations(), 2);
+        assert!(
+            cache.lru_keys(0).len() == 1 && cache.used_bytes(0) >= a_bytes as usize,
+            "slab stays resident between batches"
+        );
     }
 
     #[test]

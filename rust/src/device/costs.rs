@@ -171,6 +171,43 @@ pub fn charge_setup_batch_p(
     }
 }
 
+/// [`charge_setup_batch_p`] when the matrix residency is already **warm**
+/// on the device (the cross-batch residency cache holds this exact
+/// `(matrix, format, precond, precision)` slab from an earlier batch): the
+/// matrix allocation and its h2d upload are skipped, while everything
+/// per-request — the gpuR-style per-RHS `b`/`x0` vector uploads and the
+/// dispatch call — is still charged.  Streaming and host policies have no
+/// residency to reuse, so their warm setup equals their cold setup
+/// (nothing).  The scheduler books warm hits with exactly this function
+/// and the planner prices them with exactly this function, which is the
+/// no-drift guarantee [`crate::planner::Planner::warm_setup_discount`]
+/// documents.
+pub fn charge_setup_batch_warm_p(
+    sim: &mut DeviceSim,
+    policy: Policy,
+    shape: &SystemShape,
+    m: usize,
+    k: usize,
+    precision: Precision,
+) {
+    let w = precision.element_bytes();
+    let k = k.max(1);
+    match policy {
+        Policy::SerialR | Policy::SerialNative | Policy::GputoolsLike => {}
+        Policy::GmatrixLike => {}
+        Policy::GpurVclLike => {
+            let a_bytes = crate::precision::matrix_device_bytes(shape, precision);
+            let bytes = super::memory::working_set_bytes_batch_p(shape, m, k, policy, precision);
+            let _ = sim.alloc(bytes.saturating_sub(a_bytes));
+            sim.r_call();
+            for _ in 0..k {
+                sim.h2d(w * shape.n);
+                sim.h2d(w * shape.n);
+            }
+        }
+    }
+}
+
 /// The device kernel for one k-wide matvec/matmat of the given shape
 /// (`k == 1` books the plain GEMV/SpMV kernel).
 fn kernel_matvec_block(sim: &mut DeviceSim, shape: &SystemShape, k: usize, precision: Precision) {
@@ -556,6 +593,38 @@ mod tests {
         let folded = predict_seconds_batch_p(Policy::SerialR, &shape, 30, 5, 4, Precision::F64);
         let indep = 4.0 * predict_seconds_p(Policy::SerialR, &shape, 30, 5, Precision::F64);
         assert!((folded - indep).abs() < 1e-9 * indep, "host fold must be cost-neutral");
+    }
+
+    #[test]
+    fn warm_setup_prices_strictly_below_cold_on_residency_policies() {
+        // warm = cold minus exactly the matrix slab's allocation + upload;
+        // policies with nothing resident price warm == cold
+        for shape in [d(2000), SystemShape::csr(8000, 40_000)] {
+            for prec in [Precision::F64, Precision::F32] {
+                for k in [1usize, 4] {
+                    for p in [Policy::GmatrixLike, Policy::GpurVclLike] {
+                        let mut cold = DeviceSim::paper_testbed(false);
+                        charge_setup_batch_p(&mut cold, p, &shape, 20, k, prec);
+                        let mut warm = DeviceSim::paper_testbed(false);
+                        charge_setup_batch_warm_p(&mut warm, p, &shape, 20, k, prec);
+                        assert!(
+                            warm.elapsed() < cold.elapsed(),
+                            "{p} {:?} {prec} k={k}: warm {} !< cold {}",
+                            shape.format,
+                            warm.elapsed(),
+                            cold.elapsed()
+                        );
+                    }
+                    for p in [Policy::SerialR, Policy::SerialNative, Policy::GputoolsLike] {
+                        let mut cold = DeviceSim::paper_testbed(false);
+                        charge_setup_batch_p(&mut cold, p, &shape, 20, k, prec);
+                        let mut warm = DeviceSim::paper_testbed(false);
+                        charge_setup_batch_warm_p(&mut warm, p, &shape, 20, k, prec);
+                        assert_eq!(warm.elapsed(), cold.elapsed(), "{p}: nothing resident");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //!                 [--tol 1e-6] [--format dense|csr] [--policy P]
 //!                 [--precision auto|f64|f32|tf32] [--rhs-count 1]
 //!                 [--fleet 840m,v100,a100,host] [--calib-file path]
+//!                 [--waves 1] [--deadline-ms 0] [--cache-mb 0] [--bench-json path]
 //! gmres-rs info
 //! ```
 
@@ -51,6 +52,8 @@ USAGE:
                  [--tol T] [--format dense|csr] [--policy P]
                  [--precision auto|f64|f32|tf32] [--rhs-count K]
                  [--fleet 840m,v100,a100,host] [--calib-file PATH]
+                 [--waves W] [--deadline-ms MS] [--cache-mb MB]
+                 [--bench-json PATH]
   gmres-rs info
 
 POLICIES:  serial-r | serial-native | gmatrix | gputools | gpuR
@@ -68,6 +71,12 @@ RHS-COUNT: K > 1 exercises multi-RHS amortization — `solve` runs one k-wide
            (batch column), `serve` registers matrix sessions and bursts
            same-handle submissions so the batcher folds them (watch the
            `folds[...]` metrics)
+WAVES:     serve repeats the whole burst W times over the SAME session
+           handles; waves after the first hit the cross-batch residency
+           cache (watch cache[hits/misses] and uploads_saved)
+DEADLINE:  serve stamps each request with a completion deadline; the scheduler
+           sheds requests it cannot meet (typed error, counted in sheds[..])
+CACHE-MB:  cap the per-device residency cache (default: the device budget)
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -330,7 +339,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cpu_workers = args.get_parse("cpu-workers", 2usize)?;
     let m = args.get_parse("m", 8usize)?;
     let tol = args.get_parse("tol", 1e-6f64)?;
-    let rhs_count = args.get_parse("rhs-count", 1usize)?;
+    let rhs_count = args.get_parse("rhs-count", 1usize)?.max(1);
+    let waves = args.get_parse("waves", 1usize)?.max(1);
+    let deadline_ms = args.get_parse("deadline-ms", 0u64)?;
+    let deadline = (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
+    let cache_mb = args.get_parse("cache-mb", 0usize)?;
     let format = parse_format(args)?;
     let precision = parse_precision(args, "auto")?;
     let fleet = parse_fleet(args)?;
@@ -349,15 +362,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cpu_workers,
         router,
         calib_file,
+        cache_budget: (cache_mb > 0).then(|| cache_mb << 20),
         ..Default::default()
     });
     let started = std::time::Instant::now();
+    let total = requests * waves;
     let mut ok = 0usize;
-    if rhs_count > 1 {
+    if rhs_count > 1 || waves > 1 {
         // Session path: one content-addressed handle per size, submissions
         // burst `rhs_count` deep on the same handle (different random
         // right-hand sides) so the batcher can fold them into multi-RHS
-        // block solves — watch the `folds[...]` metrics below.
+        // block solves — watch the `folds[...]` metrics below.  With
+        // `--waves W > 1` the whole burst repeats W times over the SAME
+        // handles: every wave after the first finds the matrices already
+        // resident in the cross-batch cache (cache[hits] / uploads_saved).
         let session_handles: Vec<_> = sizes
             .iter()
             .map(|&n| {
@@ -369,42 +387,50 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             })
             .collect();
         println!(
-            "sessions: {} registered ({} live), bursts of {rhs_count} per handle",
+            "sessions: {} registered ({} live), bursts of {rhs_count} per handle, {waves} wave(s)",
             session_handles.len(),
             svc.active_sessions()
         );
-        let mut receivers = Vec::new();
-        for i in 0..requests {
-            let handle = &session_handles[(i / rhs_count) % session_handles.len()];
-            let rhs = generators::random_vector(handle.spec().order(), 7 + i as u64);
-            let mut builder = handle.solve_rhs(rhs).config(GmresConfig {
-                m,
-                tol,
-                max_restarts: 200,
-                precision,
-                ..Default::default()
-            });
-            if let Some(p) = policy {
-                builder = builder.policy(p);
-            }
-            match builder.submit_nowait() {
-                Ok(rx) => receivers.push(Some(rx)),
-                Err(e) => {
-                    println!("  failed: {e:#}");
-                    receivers.push(None);
+        for wave in 0..waves {
+            let mut receivers = Vec::new();
+            for i in 0..requests {
+                let handle = &session_handles[(i / rhs_count) % session_handles.len()];
+                let rhs = generators::random_vector(
+                    handle.spec().order(),
+                    7 + (wave * requests + i) as u64,
+                );
+                let mut builder = handle.solve_rhs(rhs).config(GmresConfig {
+                    m,
+                    tol,
+                    max_restarts: 200,
+                    precision,
+                    ..Default::default()
+                });
+                if let Some(p) = policy {
+                    builder = builder.policy(p);
+                }
+                if let Some(d) = deadline {
+                    builder = builder.deadline(d);
+                }
+                match builder.submit_nowait() {
+                    Ok(rx) => receivers.push(Some(rx)),
+                    Err(e) => {
+                        println!("  failed: {e:#}");
+                        receivers.push(None);
+                    }
                 }
             }
-        }
-        for rx in receivers.into_iter().flatten() {
-            match rx.recv() {
-                Ok(Ok(out)) => {
-                    ok += 1;
-                    print_outcome(&out);
+            for rx in receivers.into_iter().flatten() {
+                match rx.recv() {
+                    Ok(Ok(out)) => {
+                        ok += 1;
+                        print_outcome(&out);
+                    }
+                    Ok(Err(e)) => println!("  failed: {e:#}"),
+                    Err(_) => println!("  failed: worker dropped reply"),
                 }
-                Ok(Err(e)) => println!("  failed: {e:#}"),
-                Err(_) => println!("  failed: worker dropped reply"),
+                svc.finish();
             }
-            svc.finish();
         }
         drop(session_handles);
     } else {
@@ -443,7 +469,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     }
     let wall = started.elapsed().as_secs_f64();
-    println!("{ok} / {requests} solved in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
+    println!("{ok} / {total} solved in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
     println!("metrics: {}", svc.metrics().render());
     let devices = svc.metrics().render_devices();
     if !devices.is_empty() {
@@ -453,6 +479,32 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "{}",
         gmres_rs::report::plan_table::render_calibration(svc.router().planner())
     );
+    if let Some(path) = args.get("bench-json") {
+        let met = svc.metrics();
+        let lat = met.latency_summary();
+        let (hits, misses) = (met.cache_hits(), met.cache_misses());
+        let hit_rate =
+            if hits + misses > 0 { hits as f64 / (hits + misses) as f64 } else { 0.0 };
+        let json = format!(
+            "{{\n  \"bench\": \"serve\",\n  \"requests\": {total},\n  \"waves\": {waves},\n  \
+             \"rhs_count\": {rhs_count},\n  \"ok\": {ok},\n  \"wall_seconds\": {wall:.6},\n  \
+             \"throughput_rps\": {:.3},\n  \"latency_p50_s\": {:.6},\n  \
+             \"latency_p95_s\": {:.6},\n  \"cache_hits\": {hits},\n  \
+             \"cache_misses\": {misses},\n  \"cache_hit_rate\": {hit_rate:.4},\n  \
+             \"cache_evictions\": {},\n  \"uploads_saved_bytes\": {},\n  \
+             \"steals\": {},\n  \"sheds\": {},\n  \"folds\": {}\n}}\n",
+            ok as f64 / wall.max(1e-9),
+            lat.as_ref().map_or(0.0, |l| l.p50),
+            lat.as_ref().map_or(0.0, |l| l.p95),
+            met.cache_evictions(),
+            met.uploads_saved_bytes(),
+            met.steals(),
+            met.sheds(),
+            met.folds(),
+        );
+        std::fs::write(path, json)?;
+        println!("wrote {path}");
+    }
     svc.shutdown();
     Ok(())
 }

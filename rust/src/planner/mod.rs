@@ -141,6 +141,9 @@ pub struct Planner {
     /// Memoized cost splits, keyed on the full point plus the batch width
     /// (`1` for ordinary single-RHS pricing).
     price_cache: Mutex<HashMap<PriceKey, CostSplit>>,
+    /// Memoized *warm* setup seconds (cross-batch residency cache hit)
+    /// for single-device placements, same key space as `price_cache`.
+    warm_setup_cache: Mutex<HashMap<PriceKey, f64>>,
 }
 
 /// Price-cache key: one plan point plus the batch width.
@@ -159,6 +162,7 @@ impl Planner {
             calibrator: Mutex::new(Calibrator::new(alpha)),
             observed_rho: Mutex::new(HashMap::new()),
             price_cache: Mutex::new(HashMap::new()),
+            warm_setup_cache: Mutex::new(HashMap::new()),
         }
     }
 
@@ -335,6 +339,112 @@ impl Planner {
         }
         cache.insert(key, split);
         split
+    }
+
+    /// Memoized *warm* setup seconds of one point on a single-device
+    /// placement: the setup charges when the matrix residency is already
+    /// on the card ([`costs::charge_setup_batch_warm_p`]).  Host and
+    /// sharded placements have no cross-batch residency cache, so their
+    /// warm setup is defined as the cold setup.
+    fn warm_setup_seconds_k(
+        &self,
+        policy: Policy,
+        shape: &SystemShape,
+        m: usize,
+        placement: Placement,
+        precision: Precision,
+        k: usize,
+    ) -> f64 {
+        let k = k.max(1);
+        let Placement::Single(id) = placement else {
+            return self.cost_split_k(policy, shape, m, placement, precision, k).setup_seconds;
+        };
+        let key = (policy, *shape, m, placement, precision, k);
+        if let Some(&s) = self.warm_setup_cache.lock().unwrap().get(&key) {
+            return s;
+        }
+        let gpu_spec = self
+            .config
+            .fleet
+            .get(id)
+            .and_then(|d| match &d.kind {
+                DeviceKind::Gpu(s) => Some(s.clone()),
+                DeviceKind::Host(_) => None,
+            })
+            .unwrap_or_else(crate::device::GpuSpec::geforce_840m);
+        let mut sim = DeviceSim::new(gpu_spec, HostSpec::r_interpreter_i7_4710hq(), false);
+        costs::charge_setup_batch_warm_p(&mut sim, policy, shape, m, k, precision);
+        let warm = sim.elapsed();
+        let mut cache = self.warm_setup_cache.lock().unwrap();
+        if cache.len() >= Self::PRICE_CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert(key, warm);
+        warm
+    }
+
+    /// Uncalibrated seconds a residency-cache **hit** saves off one cold
+    /// setup of this point: `cold_setup − warm_setup`, both charged on the
+    /// placement device's own spec through the same shared cost table the
+    /// scheduler books at execution — so scheduling and pricing cannot
+    /// drift.  Zero for host/sharded placements and for policies with
+    /// nothing resident (gputools streams A per matvec; serial policies
+    /// never touch the card).
+    pub fn warm_setup_discount(
+        &self,
+        policy: Policy,
+        shape: &SystemShape,
+        m: usize,
+        placement: Placement,
+        precision: Precision,
+    ) -> f64 {
+        self.warm_setup_discount_k(policy, shape, m, placement, precision, 1)
+    }
+
+    /// [`Planner::warm_setup_discount`] at batch width `k`: the residency
+    /// is one slab regardless of k, so the discount is charged once per
+    /// folded batch, not once per right-hand side.
+    pub fn warm_setup_discount_k(
+        &self,
+        policy: Policy,
+        shape: &SystemShape,
+        m: usize,
+        placement: Placement,
+        precision: Precision,
+        k: usize,
+    ) -> f64 {
+        if !matches!(placement, Placement::Single(_)) || !policy.needs_runtime() {
+            return 0.0;
+        }
+        let cold = self.cost_split_k(policy, shape, m, placement, precision, k).setup_seconds;
+        let warm = self.warm_setup_seconds_k(policy, shape, m, placement, precision, k);
+        (cold - warm).max(0.0)
+    }
+
+    /// Re-price an already-routed plan at a different placement, keeping
+    /// its policy / restart / preconditioner / precision pins.  The fleet
+    /// scheduler uses this when it re-routes a job: toward the device
+    /// already holding the matrix residency (warm routing), or onto an
+    /// idle thief device (work stealing) — either way the plan's predicted
+    /// seconds must be re-derived from the *target* device's own cost
+    /// table, not carried over from the original placement.
+    pub fn reprice_at(
+        &self,
+        shape: &SystemShape,
+        config: &GmresConfig,
+        plan: &Plan,
+        placement: Placement,
+    ) -> Plan {
+        let point = PlanPoint {
+            policy: plan.policy,
+            m: plan.m,
+            precond: plan.precond,
+            placement,
+            precision: plan.precision,
+        };
+        let mut repriced = self.price_k(shape, point, config, 1);
+        repriced.downgraded = plan.downgraded;
+        repriced
     }
 
     /// Price one plan point at batch width `k`: convergence model (with
@@ -838,6 +948,62 @@ mod tests {
             .iter()
             .filter(|c| c.plan.precision.is_reduced())
             .all(|c| !c.admitted));
+    }
+
+    #[test]
+    fn warm_setup_discount_matches_the_cost_table_exactly() {
+        // no-drift: the planner's discount is precisely the cold-minus-warm
+        // setup difference of the shared cost table on the same device sim
+        let p = planner();
+        let shape = SystemShape::dense(1200);
+        for policy in [Policy::GmatrixLike, Policy::GpurVclLike] {
+            let d = p.warm_setup_discount(policy, &shape, 10, Placement::Single(0), Precision::F64);
+            let mut cold = DeviceSim::new(
+                crate::device::GpuSpec::geforce_840m(),
+                HostSpec::r_interpreter_i7_4710hq(),
+                false,
+            );
+            costs::charge_setup_batch_p(&mut cold, policy, &shape, 10, 1, Precision::F64);
+            let mut warm = DeviceSim::new(
+                crate::device::GpuSpec::geforce_840m(),
+                HostSpec::r_interpreter_i7_4710hq(),
+                false,
+            );
+            costs::charge_setup_batch_warm_p(&mut warm, policy, &shape, 10, 1, Precision::F64);
+            let expect = cold.elapsed() - warm.elapsed();
+            assert!(d > 0.0, "{policy}: residency policies must gain from a warm hit");
+            assert!((d - expect).abs() <= 1e-15 * expect.max(1.0), "{policy}: {d} vs {expect}");
+        }
+        // nothing resident, nothing to reuse
+        for policy in [Policy::SerialR, Policy::SerialNative, Policy::GputoolsLike] {
+            let placement =
+                if policy.needs_runtime() { Placement::Single(0) } else { Placement::Host };
+            assert_eq!(p.warm_setup_discount(policy, &shape, 10, placement, Precision::F64), 0.0);
+        }
+        // no cross-batch cache on sharded placements
+        let p2 = fleet_planner("840m,v100");
+        let sharded = Placement::Sharded(DeviceSet::from_ids(&[0, 1]));
+        assert_eq!(
+            p2.warm_setup_discount(Policy::GmatrixLike, &shape, 10, sharded, Precision::F64),
+            0.0
+        );
+    }
+
+    #[test]
+    fn reprice_at_keeps_pins_and_prices_the_target_device() {
+        let p = fleet_planner("840m,v100");
+        let shape = SystemShape::dense(2000);
+        let config = GmresConfig { tol: 1e-8, ..Default::default() };
+        let plan = p.plan(&shape, &config, Some(Policy::GmatrixLike));
+        let moved = p.reprice_at(&shape, &config, &plan, Placement::Single(1));
+        assert_eq!(moved.policy, plan.policy);
+        assert_eq!(moved.m, plan.m);
+        assert_eq!(moved.precond, plan.precond);
+        assert_eq!(moved.precision, plan.precision);
+        assert_eq!(moved.placement, Placement::Single(1));
+        // the V100's transfer/kernel tables are not the 840M's
+        assert!(moved.base_seconds > 0.0);
+        assert_ne!(moved.base_seconds, p.reprice_at(&shape, &config, &plan, Placement::Single(0)).base_seconds);
     }
 
     #[test]

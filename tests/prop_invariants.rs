@@ -459,6 +459,258 @@ fn prop_batcher_conserves_and_respects_keys() {
 }
 
 // ---------------------------------------------------------------------------
+// Fleet scheduler invariants
+// ---------------------------------------------------------------------------
+
+fn sched_rkey(id: u64) -> gmres_rs::coordinator::ResidencyKey {
+    gmres_rs::coordinator::ResidencyKey {
+        matrix_id: gmres_rs::coordinator::MatrixId(id),
+        format: MatrixFormat::Dense,
+        precond: PrecondKind::Identity,
+        precision: gmres_rs::precision::Precision::F64,
+    }
+}
+
+/// State-machine property for the cross-batch residency cache: random
+/// begin/end sequences never exceed the byte budget, pinned slabs are
+/// never evicted, warm is reported iff the key was already resident, the
+/// touched key always lands most-recently-used, and evictions take the
+/// least-recently-used unpinned residencies first.
+#[test]
+fn prop_residency_cache_is_a_pin_respecting_bounded_lru() {
+    use gmres_rs::coordinator::ResidencyCache;
+    check(cfg(48), "residency-cache-lru", |rng| {
+        let budget = 500 + rng.below(1500);
+        let cache = ResidencyCache::with_budgets(vec![budget]);
+        let n_keys = 2 + rng.below(6);
+        // fixed slab size per key; some deliberately exceed the budget to
+        // exercise the refuse-to-store path
+        let bytes: Vec<usize> = (0..n_keys).map(|_| 50 + rng.below(budget)).collect();
+        let mut pins = vec![0usize; n_keys];
+        // logical clock of the last touch per key; the cache's LRU order
+        // must always equal touch order
+        let mut touch = vec![0u64; n_keys];
+        let mut clock = 0u64;
+        for _ in 0..120 {
+            let k = rng.below(n_keys);
+            let key = sched_rkey(k as u64);
+            if pins[k] > 0 && rng.next_f64() < 0.5 {
+                // a pinned slot always still exists, so `end` touches it MRU
+                cache.end(0, key);
+                pins[k] -= 1;
+                clock += 1;
+                touch[k] = clock;
+            } else {
+                let resident = bytes[k];
+                let working_set = resident + rng.below(resident / 2 + 1);
+                let was_resident = cache.contains(0, &key);
+                let before = cache.lru_keys(0);
+                let out = cache.begin(0, key, resident, working_set);
+                prop_assert!(out.warm == was_resident, "warm iff already resident");
+                if out.stored {
+                    pins[k] += 1;
+                    clock += 1;
+                    touch[k] = clock;
+                }
+                let after = cache.lru_keys(0);
+                if out.stored {
+                    prop_assert!(after.last() == Some(&key), "begin must leave the key MRU");
+                }
+                // evictions: unpinned only, strictly older than every
+                // surviving unpinned residency (LRU-first order), and
+                // counted exactly
+                let mut n_evicted = 0u64;
+                for e in &before {
+                    if *e == key || after.contains(e) {
+                        continue;
+                    }
+                    n_evicted += 1;
+                    let ek = e.matrix_id.0 as usize;
+                    prop_assert!(pins[ek] == 0, "evicted key {ek} was pinned");
+                    for s in &after {
+                        let sk = s.matrix_id.0 as usize;
+                        if *s != key && pins[sk] == 0 {
+                            prop_assert!(
+                                touch[ek] < touch[sk],
+                                "evicted {ek} (touch {}) outlived younger {sk} (touch {})",
+                                touch[ek],
+                                touch[sk]
+                            );
+                        }
+                    }
+                }
+                prop_assert!(out.evictions == n_evicted, "eviction count drift");
+            }
+            // global invariants after EVERY operation
+            let used = cache.used_bytes(0);
+            prop_assert!(used <= budget, "used {used} over budget {budget}");
+            let keys = cache.lru_keys(0);
+            let sum: usize = keys.iter().map(|k| bytes[k.matrix_id.0 as usize]).sum();
+            prop_assert!(used == sum, "byte accounting drift: used {used} vs slots {sum}");
+            for (j, &p) in pins.iter().enumerate() {
+                if p > 0 {
+                    prop_assert!(
+                        cache.contains(0, &sched_rkey(j as u64)),
+                        "pinned residency {j} vanished"
+                    );
+                }
+            }
+            for w in keys.windows(2) {
+                prop_assert!(
+                    touch[w[0].matrix_id.0 as usize] < touch[w[1].matrix_id.0 as usize],
+                    "LRU order diverged from touch order"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Work-stealing safety: whatever the thief takes must be admissible on
+/// the thief's placement (and repriced there), never a member of a
+/// foldable same-matrix group, and never a job whose residency the victim
+/// already holds — while everything eligible IS eventually stolen.
+#[test]
+fn prop_steal_takes_exactly_the_admissible_lone_jobs() {
+    use gmres_rs::coordinator::worker::WorkItem;
+    use gmres_rs::coordinator::{
+        FleetScheduler, JobId, MatrixSpec, Metrics, ResidencyCache, ResidencyKey, SolveRequest,
+    };
+    use gmres_rs::coordinator::RhsSpec;
+    use gmres_rs::planner::{Plan, Planner, PlannerConfig};
+    use std::sync::Arc;
+
+    check(cfg(24), "steal-admissibility", |rng| {
+        // thief (device 1) gets a small budget so only some jobs fit it
+        let thief_mb = 1 + rng.below(8);
+        let fleet =
+            gmres_rs::fleet::Fleet::parse(&format!("v100,840m={thief_mb}m")).unwrap();
+        let planner = Arc::new(Planner::new(PlannerConfig { fleet, ..Default::default() }));
+        let cache = Arc::new(ResidencyCache::new(planner.fleet(), 0.9, None));
+        let sched = FleetScheduler::new(
+            planner.clone(),
+            cache.clone(),
+            Arc::new(Metrics::new()),
+            BatcherConfig { max_batch: 8, max_age: std::time::Duration::ZERO },
+            64,
+        );
+
+        let mut expected_steals = Vec::new();
+        let mut receivers = Vec::new();
+        let n_jobs = 3 + rng.below(6);
+        for j in 0..n_jobs {
+            let n = 64 + rng.below(1100);
+            let policy = if rng.next_f64() < 0.5 {
+                Policy::GmatrixLike
+            } else {
+                Policy::GpurVclLike
+            };
+            let folded_pair = rng.next_f64() < 0.25;
+            let held_by_victim = !folded_pair && rng.next_f64() < 0.3;
+            let copies = if folded_pair { 2 } else { 1 };
+            let matrix = MatrixSpec::Table1 { n, seed: 1000 + j as u64 };
+            let shape = matrix.shape();
+            let mut plan = Plan::pinned(policy, 8);
+            plan.placement = Placement::Single(0);
+            if held_by_victim {
+                let rk = ResidencyKey {
+                    matrix_id: matrix.content_id(),
+                    format: shape.format,
+                    precond: plan.precond,
+                    precision: plan.precision,
+                };
+                cache.begin(0, rk, 64, 64);
+                cache.end(0, rk);
+            }
+            let admits_thief = planner.admits_placement_batch_p(
+                policy,
+                &shape,
+                plan.m,
+                Placement::Single(1),
+                plan.precision,
+                1,
+            );
+            if copies == 1 && !held_by_victim && admits_thief {
+                expected_steals.push(matrix.content_id());
+            }
+            for _ in 0..copies {
+                let (tx, rx) = std::sync::mpsc::sync_channel(1);
+                receivers.push(rx);
+                sched
+                    .submit(WorkItem {
+                        id: JobId(j as u64),
+                        matrix_id: matrix.content_id(),
+                        rhs: RhsSpec::Default,
+                        request: SolveRequest {
+                            matrix: matrix.clone(),
+                            config: GmresConfig {
+                                m: 8,
+                                tol: 1e-8,
+                                max_restarts: 100,
+                                ..Default::default()
+                            },
+                            policy: Some(policy),
+                        },
+                        plan,
+                        downgraded: false,
+                        submitted_at: std::time::Instant::now(),
+                        deadline: None,
+                        reply: tx,
+                    })
+                    .unwrap();
+            }
+        }
+
+        // drain the idle thief: with the scheduler closed, each call either
+        // steals one eligible job or reports exhaustion
+        sched.close();
+        let submitted = sched.queue_depth(0);
+        let mut stolen = Vec::new();
+        while let Some((mask, batch)) = sched.next_device_batch(1) {
+            prop_assert!(mask == 1 << 1, "a stolen lone job claims only the thief");
+            prop_assert!(batch.len() == 1, "steals are single jobs, never groups");
+            let p = &batch[0];
+            prop_assert!(
+                p.item.plan.placement == Placement::Single(1),
+                "stolen plan must be repriced at the thief"
+            );
+            prop_assert!(p.key.placement == Placement::Single(1), "stolen key follows");
+            let shape = p.item.request.matrix.shape();
+            prop_assert!(
+                planner.admits_placement_batch_p(
+                    p.key.policy,
+                    &shape,
+                    p.key.m,
+                    Placement::Single(1),
+                    p.key.precision,
+                    1,
+                ),
+                "stolen job does not fit the thief's budget (n={})",
+                shape.n
+            );
+            let rk = ResidencyKey::of_batch(&p.key);
+            prop_assert!(
+                !cache.contains(0, &rk),
+                "stole a job whose residency the victim holds"
+            );
+            stolen.push(p.item.matrix_id);
+            sched.complete(mask);
+        }
+        stolen.sort_unstable_by_key(|id| id.0);
+        expected_steals.sort_unstable_by_key(|id| id.0);
+        prop_assert!(
+            stolen == expected_steals,
+            "stolen set {stolen:?} != eligible set {expected_steals:?}"
+        );
+        prop_assert!(
+            sched.queue_depth(0) == submitted - stolen.len(),
+            "victim queue must keep exactly the non-eligible jobs"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Fleet sharding invariants
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,194 @@
+//! End-to-end fleet-scheduler tests: cross-batch residency cache warm
+//! hits priced by the planner's warm discount, wall-clock overlap of
+//! single-device jobs across a two-card fleet, and deadline admission
+//! control shedding typed errors under a flood instead of collapsing.
+
+use std::time::{Duration, Instant};
+
+use gmres_rs::backend::Policy;
+use gmres_rs::coordinator::{MatrixSpec, RouterConfig, ServiceConfig, ShedError, SolveService};
+use gmres_rs::fleet::{Fleet, Placement};
+use gmres_rs::precision::matrix_device_bytes;
+
+/// A repeat solve on the same session handle finds the matrix already
+/// resident: zero re-upload, and the booked cost drops by EXACTLY the
+/// planner's warm setup discount (scheduling and pricing share one cost
+/// table — a pinned policy with a sub-f32 tolerance fixes every plan
+/// axis, so the two raw modeled runs are identical).
+#[test]
+fn warm_repeat_hits_the_cache_and_books_the_planner_discount() {
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    let handle = svc.register(MatrixSpec::Table1 { n: 96, seed: 3 });
+    let run = || {
+        handle
+            .solve()
+            .m(8)
+            .tol(1e-8)
+            .max_restarts(100)
+            .policy(Policy::GmatrixLike)
+            .submit()
+            .unwrap()
+    };
+    let cold = run();
+    let warm = run();
+    assert!(cold.report.converged && warm.report.converged);
+    assert_eq!(svc.metrics().cache_misses(), 1, "first solve establishes the residency");
+    assert_eq!(svc.metrics().cache_hits(), 1, "the repeat must find the slab resident");
+
+    assert!(matches!(cold.plan.placement, Placement::Single(_)));
+    assert_eq!(warm.plan.m, cold.plan.m);
+    assert_eq!(warm.plan.precond, cold.plan.precond);
+    assert_eq!(warm.plan.precision, cold.plan.precision);
+    assert_eq!(warm.plan.placement, cold.plan.placement);
+
+    let shape = handle.spec().shape();
+    let discount = svc.router().planner().warm_setup_discount(
+        Policy::GmatrixLike,
+        &shape,
+        cold.plan.m,
+        cold.plan.placement,
+        cold.plan.precision,
+    );
+    assert!(discount > 0.0, "a resident-matrix policy has a one-time upload to skip");
+    assert!(
+        warm.report.sim_seconds < cold.report.sim_seconds,
+        "warm {} must beat cold {}",
+        warm.report.sim_seconds,
+        cold.report.sim_seconds
+    );
+    let gap = cold.report.sim_seconds - warm.report.sim_seconds;
+    assert!(
+        (gap - discount).abs() <= 1e-9 * discount.max(1.0),
+        "booked gap {gap} must equal the planner's warm discount {discount}"
+    );
+    assert!(
+        warm.plan.base_seconds < cold.plan.base_seconds,
+        "the warm outcome's plan must be priced below the cold one"
+    );
+    assert_eq!(
+        svc.metrics().uploads_saved_bytes(),
+        matrix_device_bytes(&shape, cold.plan.precision) as u64,
+        "exactly one matrix upload was skipped"
+    );
+    svc.shutdown();
+}
+
+/// Acceptance: on a two-card fleet, a burst of single-device jobs
+/// submitted concurrently finishes in strictly less wall time than the
+/// same jobs run one at a time — per-device queues (plus work stealing by
+/// the idle card) let them overlap, where the old single device thread
+/// serialized everything.
+#[test]
+fn concurrent_single_device_jobs_overlap_across_the_fleet() {
+    let fleet = Fleet::parse("840m,840m").unwrap();
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        router: RouterConfig { fleet, ..Default::default() },
+        ..Default::default()
+    });
+    let n = 900;
+    let solo = |seed: u64| {
+        let handle = svc.register(MatrixSpec::Table1 { n, seed });
+        let started = Instant::now();
+        let out = handle
+            .solve()
+            .m(12)
+            .tol(1e-8)
+            .max_restarts(200)
+            .policy(Policy::GmatrixLike)
+            .submit()
+            .unwrap();
+        assert!(out.report.converged);
+        assert!(
+            matches!(out.plan.placement, Placement::Single(_)),
+            "small dense jobs must not shard: {:?}",
+            out.plan.placement
+        );
+        started.elapsed()
+    };
+    // sequential baseline: one job in the system at a time
+    let wall_seq: Duration = (11..15u64).map(solo).sum();
+
+    // the same burst concurrently: distinct matrices, so no folding — the
+    // only way to go faster is genuine cross-device overlap
+    let started = Instant::now();
+    let threads: Vec<_> = (21..25u64)
+        .map(|seed| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let handle = svc.register(MatrixSpec::Table1 { n, seed });
+                handle
+                    .solve()
+                    .m(12)
+                    .tol(1e-8)
+                    .max_restarts(200)
+                    .policy(Policy::GmatrixLike)
+                    .submit()
+            })
+        })
+        .collect();
+    for t in threads {
+        let out = t.join().expect("request thread panicked").unwrap();
+        assert!(out.report.converged);
+    }
+    let wall_conc = started.elapsed();
+    assert!(
+        wall_conc < wall_seq,
+        "4 concurrent single-device jobs must overlap across 2 cards: \
+         {wall_conc:?} concurrent vs {wall_seq:?} sequential"
+    );
+    // both cards actually executed solves (the second one via routing or
+    // work stealing — either proves per-device queues drain in parallel)
+    let stats = svc.metrics().device_stats();
+    assert_eq!(stats.len(), 2, "both devices must appear in the stats: {stats:?}");
+    assert!(
+        stats.iter().all(|(_, s)| s.solves >= 1),
+        "work must spread over both cards: {stats:?}"
+    );
+    svc.shutdown();
+}
+
+/// A flood of tightly-deadlined submissions on one card sheds load with the
+/// typed [`ShedError`] (downcastable, structured) while every admitted job
+/// still completes — overload degrades by refusal, never by collapse.
+#[test]
+fn deadline_flood_sheds_typed_and_admitted_jobs_complete() {
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    let handle = svc.register(MatrixSpec::Table1 { n: 600, seed: 9 });
+    let total = 12;
+    let mut receivers = Vec::new();
+    let mut sheds = 0usize;
+    for _ in 0..total {
+        let attempt = handle
+            .solve()
+            .m(8)
+            .tol(1e-8)
+            .max_restarts(100)
+            .policy(Policy::GmatrixLike)
+            .deadline(Duration::from_micros(200))
+            .submit_nowait();
+        match attempt {
+            Ok(rx) => receivers.push(rx),
+            Err(e) => {
+                let shed = e
+                    .downcast_ref::<ShedError>()
+                    .unwrap_or_else(|| panic!("refusals must be typed sheds, got: {e:#}"));
+                assert!(shed.depth >= 1, "sheds happen behind a nonempty queue");
+                sheds += 1;
+            }
+        }
+    }
+    assert!(sheds >= 1, "a 200us deadline cannot absorb a 12-deep flood");
+    assert!(!receivers.is_empty(), "an empty queue always admits (depth 0)");
+    assert_eq!(svc.metrics().sheds(), sheds as u64);
+    let mut ok = 0usize;
+    for rx in receivers {
+        let out = rx.recv().expect("worker dropped reply").expect("admitted job failed");
+        assert!(out.report.converged);
+        ok += 1;
+        svc.finish();
+    }
+    assert_eq!(ok + sheds, total, "every request either completed or shed — nothing lost");
+    assert_eq!(svc.inflight(), 0);
+    svc.shutdown();
+}
