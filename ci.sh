@@ -86,6 +86,29 @@ echo "$SHED_OUT" | tail -4
 echo "$SHED_OUT" | grep -Eq "sheds=[1-9]" \
     || { echo "shed smoke: a 1ms-deadline flood shed nothing"; exit 1; }
 
+echo "==> trace / observability smoke"
+# a warm 2-wave folded serve must dump a parseable trace ring containing
+# warm-hit and fold-member spans, render a waterfall through the trace
+# subcommand, and snapshot nonzero cache hits in Prometheus text format
+TRACE=$(mktemp /tmp/gmres-trace.XXXXXX)
+PROM=$(mktemp /tmp/gmres-prom.XXXXXX)
+./target/release/gmres-rs serve --requests 6 --sizes 128 --m 8 \
+    --policy gmatrix --rhs-count 3 --waves 2 --cache-mb 64 \
+    --trace-json "$TRACE" --metrics-out "$PROM"
+test -s "$TRACE" || { echo "trace smoke: trace dump not written"; exit 1; }
+./target/release/gmres-rs trace --file "$TRACE" --list
+WATERFALL=$(./target/release/gmres-rs trace --file "$TRACE")
+echo "$WATERFALL" | head -20
+echo "$WATERFALL" | grep -q "cycle\[0\]" \
+    || { echo "trace smoke: waterfall shows no restart cycles"; exit 1; }
+grep -q '"phase": "residency-warm-hit"' "$TRACE" \
+    || { echo "trace smoke: no warm-hit span in a 2-wave serve"; exit 1; }
+grep -q '"phase": "fold-member"' "$TRACE" \
+    || { echo "trace smoke: no fold-member span in a burst serve"; exit 1; }
+grep -Eq '^gmres_cache_hits_total [1-9]' "$PROM" \
+    || { echo "trace smoke: prometheus snapshot shows no cache hits"; exit 1; }
+rm -f "$TRACE" "$PROM"
+
 echo "==> fleet smoke"
 # sharded placements enumerated across a two-card fleet; a served fleet
 # with calibration persistence round-trips through a warm restart

@@ -1,10 +1,122 @@
-//! Service metrics: counters + latency summaries, lock-free on the hot
-//! path, plus per-device fleet accounting (solve counts, busy seconds,
-//! bytes moved) for the `serve` summary.
+//! Service metrics: counters + fixed-bucket latency histograms, lock-free
+//! on the hot path, plus per-device fleet accounting (solve counts, busy
+//! seconds, bytes moved) for the `serve` summary and a Prometheus-text
+//! snapshot (`render_prometheus`) for machine scraping.
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Log-spaced histogram bucket upper bounds, seconds.  22 finite bounds
+/// spanning 10 µs … 100 s (a 1-2.5-5 ladder) plus an implicit +Inf
+/// overflow — enough resolution for sub-percent quantile error at the
+/// latencies this service sees, at 24 words of fixed memory per series.
+const BUCKET_BOUNDS_S: [f64; 22] = [
+    1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25,
+    0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0,
+];
+
+/// Fixed-memory latency recorder: per-bucket counts plus exact count /
+/// sum / max, all atomics — `observe` never allocates and never locks,
+/// and memory no longer grows with request volume (the old per-request
+/// `Vec<u64>` did, unboundedly, under `serve`).
+#[derive(Debug, Default)]
+struct Histogram {
+    /// One count per finite bound, plus the +Inf overflow bucket.
+    buckets: [AtomicU64; BUCKET_BOUNDS_S.len() + 1],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    /// Exact maximum in microseconds, so `LatencySummary::max` stays
+    /// exact rather than bucket-quantized.
+    max_us: AtomicU64,
+}
+
+impl Histogram {
+    fn observe(&self, seconds: f64) {
+        let s = seconds.max(0.0);
+        let us = (s * 1e6) as u64;
+        let idx = BUCKET_BOUNDS_S
+            .iter()
+            .position(|&b| s <= b)
+            .unwrap_or(BUCKET_BOUNDS_S.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    fn snapshot_counts(&self) -> [u64; BUCKET_BOUNDS_S.len() + 1] {
+        let mut counts = [0u64; BUCKET_BOUNDS_S.len() + 1];
+        for (c, b) in counts.iter_mut().zip(self.buckets.iter()) {
+            *c = b.load(Ordering::Relaxed);
+        }
+        counts
+    }
+
+    /// Quantile estimate: walk the cumulative counts to the target rank,
+    /// interpolate linearly inside the bucket, clamp to the exact max.
+    /// Monotone in `p`, so p50 <= p95 <= p99 <= max always holds.
+    fn quantile(counts: &[u64], total: u64, max_s: f64, p: f64) -> f64 {
+        let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                cum += c;
+                continue;
+            }
+            if cum + c >= rank {
+                let lo = if i == 0 { 0.0 } else { BUCKET_BOUNDS_S[i - 1] };
+                let hi = if i < BUCKET_BOUNDS_S.len() { BUCKET_BOUNDS_S[i] } else { max_s };
+                let frac = (rank - cum) as f64 / c as f64;
+                return (lo + (hi - lo).max(0.0) * frac).min(max_s);
+            }
+            cum += c;
+        }
+        max_s
+    }
+
+    fn summary(&self) -> Option<LatencySummary> {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return None;
+        }
+        let counts = self.snapshot_counts();
+        let max_s = self.max_us.load(Ordering::Relaxed) as f64 / 1e6;
+        let mean = self.sum_us.load(Ordering::Relaxed) as f64 / count as f64 / 1e6;
+        Some(LatencySummary {
+            count: count as usize,
+            mean,
+            p50: Self::quantile(&counts, count, max_s, 0.50),
+            p95: Self::quantile(&counts, count, max_s, 0.95),
+            p99: Self::quantile(&counts, count, max_s, 0.99),
+            max: max_s,
+        })
+    }
+
+    /// Append this series in Prometheus text exposition format
+    /// (cumulative `_bucket{le=...}` counts plus `_sum`/`_count`).
+    fn render_prometheus(&self, name: &str, help: &str, out: &mut String) {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let counts = self.snapshot_counts();
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if i < BUCKET_BOUNDS_S.len() {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", BUCKET_BOUNDS_S[i]);
+            } else {
+                let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            }
+        }
+        let _ = writeln!(
+            out,
+            "{name}_sum {:.6}",
+            self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+        );
+        let _ = writeln!(out, "{name}_count {}", self.count.load(Ordering::Relaxed));
+    }
+}
 
 /// Per-device accounting: how much work one fleet member absorbed.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -50,17 +162,20 @@ pub struct Metrics {
     cache_misses: AtomicU64,
     /// Residencies dropped by LRU memory pressure.
     cache_evictions: AtomicU64,
-    /// completed-solve latencies, microseconds (mutex: cold path only)
-    latencies_us: Mutex<Vec<u64>>,
-    queue_us: Mutex<Vec<u64>>,
+    /// Completed-solve latency distribution (fixed memory; lock-free).
+    latency: Histogram,
+    /// Queue-wait distribution (submission to worker claim).
+    queue_wait: Histogram,
     /// per-device stats, keyed by fleet device label (cold path)
     per_device: Mutex<BTreeMap<String, DeviceStat>>,
     /// per-device work-queue depth gauge, keyed by device label (set by
-    /// the fleet scheduler on every enqueue/claim)
+    /// the fleet scheduler on every enqueue/claim; zero-depth entries are
+    /// removed so a drained device never reports phantom backlog)
     queue_depth: Mutex<BTreeMap<String, u64>>,
 }
 
-/// Latency summary in seconds.
+/// Latency summary in seconds.  `p50`/`p95`/`p99` are histogram estimates
+/// (linear interpolation within a log-spaced bucket); `max` is exact.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LatencySummary {
     pub count: usize,
@@ -85,11 +200,8 @@ impl Metrics {
         if downgraded {
             self.downgraded.fetch_add(1, Ordering::Relaxed);
         }
-        self.latencies_us
-            .lock()
-            .unwrap()
-            .push((latency_seconds * 1e6) as u64);
-        self.queue_us.lock().unwrap().push((queue_seconds * 1e6) as u64);
+        self.latency.observe(latency_seconds);
+        self.queue_wait.observe(queue_seconds);
     }
 
     pub fn on_fail(&self) {
@@ -159,9 +271,16 @@ impl Metrics {
         self.cache_evictions.fetch_add(n, Ordering::Relaxed);
     }
 
-    /// Update one device's work-queue depth gauge.
+    /// Update one device's work-queue depth gauge.  A zero depth removes
+    /// the entry: a drained queue is indistinguishable from a device that
+    /// never queued, so `render_devices` can't report phantom backlog.
     pub fn set_queue_depth(&self, label: &str, depth: u64) {
-        *self.queue_depth.lock().unwrap().entry(label.to_string()).or_default() = depth;
+        let mut map = self.queue_depth.lock().unwrap();
+        if depth == 0 {
+            map.remove(label);
+        } else {
+            map.insert(label.to_string(), depth);
+        }
     }
 
     pub fn steals(&self) -> u64 {
@@ -217,11 +336,11 @@ impl Metrics {
     }
 
     pub fn latency_summary(&self) -> Option<LatencySummary> {
-        summarize(&self.latencies_us.lock().unwrap())
+        self.latency.summary()
     }
 
     pub fn queue_summary(&self) -> Option<LatencySummary> {
-        summarize(&self.queue_us.lock().unwrap())
+        self.queue_wait.summary()
     }
 
     /// Multi-line per-device summary (empty string when no device work
@@ -257,11 +376,20 @@ impl Metrics {
     pub fn render(&self) -> String {
         let lat = self
             .latency_summary()
-            .map(|l| format!("p50={:.3}s p95={:.3}s max={:.3}s", l.p50, l.p95, l.max))
+            .map(|l| {
+                format!(
+                    "p50={:.3}s p95={:.3}s p99={:.3}s max={:.3}s",
+                    l.p50, l.p95, l.p99, l.max
+                )
+            })
+            .unwrap_or_else(|| "n/a".into());
+        let queue = self
+            .queue_summary()
+            .map(|q| format!("p50={:.3}s p95={:.3}s", q.p50, q.p95))
             .unwrap_or_else(|| "n/a".into());
         format!(
             "submitted={} completed={} failed={} downgraded={} rejected={} \
-             folds[folds={} requests_folded={} uploads_saved={}B] latency[{}]",
+             folds[folds={} requests_folded={} uploads_saved={}B] latency[{}] queue[{}]",
             self.submitted(),
             self.completed(),
             self.failed(),
@@ -270,30 +398,81 @@ impl Metrics {
             self.folds(),
             self.requests_folded(),
             self.uploads_saved_bytes(),
-            lat
+            lat,
+            queue
         )
     }
-}
 
-fn summarize(us: &[u64]) -> Option<LatencySummary> {
-    if us.is_empty() {
-        return None;
+    /// Full metrics snapshot in Prometheus text exposition format:
+    /// request/scheduler/cache counters, per-device counters, queue-depth
+    /// gauges, and the latency/queue-wait histograms.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let mut counter = |name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        counter("gmres_requests_submitted_total", "Requests accepted at the service door", self.submitted());
+        counter("gmres_requests_completed_total", "Requests solved to completion", self.completed());
+        counter("gmres_requests_failed_total", "Requests that errored while executing", self.failed());
+        counter("gmres_requests_downgraded_total", "Requests planned onto a policy other than the requested one", self.downgraded());
+        counter("gmres_requests_rejected_total", "Requests refused by inflight backpressure", self.rejected());
+        counter("gmres_folds_total", "Folded multi-RHS executions", self.folds());
+        counter("gmres_requests_folded_total", "Requests that ran inside a fold", self.requests_folded());
+        counter("gmres_uploads_saved_bytes_total", "Matrix bytes never re-uploaded thanks to folds and warm residencies", self.uploads_saved_bytes());
+        counter("gmres_steals_total", "Jobs moved to an idle device by the work-stealing scheduler", self.steals());
+        counter("gmres_sheds_total", "Jobs refused by deadline/queue admission control", self.sheds());
+        counter("gmres_cache_hits_total", "Residency-cache hits (matrix already device-resident)", self.cache_hits());
+        counter("gmres_cache_misses_total", "Residency-cache misses (slab established cold)", self.cache_misses());
+        counter("gmres_cache_evictions_total", "Residencies evicted under memory pressure", self.cache_evictions());
+
+        let depths = self.queue_depth.lock().unwrap().clone();
+        out.push_str("# HELP gmres_queue_depth Current per-device work-queue depth\n");
+        out.push_str("# TYPE gmres_queue_depth gauge\n");
+        for (label, depth) in &depths {
+            let _ = writeln!(out, "gmres_queue_depth{{device=\"{label}\"}} {depth}");
+        }
+
+        let stats = self.device_stats();
+        if !stats.is_empty() {
+            out.push_str("# HELP gmres_device_solves_total Solves each device participated in\n");
+            out.push_str("# TYPE gmres_device_solves_total counter\n");
+            for (label, s) in &stats {
+                let _ = writeln!(out, "gmres_device_solves_total{{device=\"{label}\"}} {}", s.solves);
+            }
+            out.push_str("# HELP gmres_device_busy_seconds_total Modeled busy seconds per device\n");
+            out.push_str("# TYPE gmres_device_busy_seconds_total counter\n");
+            for (label, s) in &stats {
+                let _ = writeln!(
+                    out,
+                    "gmres_device_busy_seconds_total{{device=\"{label}\"}} {:.6}",
+                    s.busy_seconds
+                );
+            }
+            out.push_str("# HELP gmres_device_bytes_moved_total Modeled bytes moved per device link\n");
+            out.push_str("# TYPE gmres_device_bytes_moved_total counter\n");
+            for (label, s) in &stats {
+                let _ = writeln!(
+                    out,
+                    "gmres_device_bytes_moved_total{{device=\"{label}\"}} {}",
+                    s.bytes_moved
+                );
+            }
+        }
+
+        self.latency.render_prometheus(
+            "gmres_request_latency_seconds",
+            "End-to-end request latency (submission to completion)",
+            &mut out,
+        );
+        self.queue_wait.render_prometheus(
+            "gmres_queue_wait_seconds",
+            "Queue wait (submission to worker claim)",
+            &mut out,
+        );
+        out
     }
-    let mut v = us.to_vec();
-    v.sort_unstable();
-    let q = |p: f64| -> f64 {
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        v[idx] as f64 / 1e6
-    };
-    let mean = v.iter().sum::<u64>() as f64 / v.len() as f64 / 1e6;
-    Some(LatencySummary {
-        count: v.len(),
-        mean,
-        p50: q(0.50),
-        p95: q(0.95),
-        p99: q(0.99),
-        max: *v.last().unwrap() as f64 / 1e6,
-    })
 }
 
 #[cfg(test)]
@@ -342,8 +521,37 @@ mod tests {
     }
 
     #[test]
+    fn histogram_quantiles_stay_near_truth() {
+        // Uniform 0.01..=1.00: every quantile estimate must land within
+        // its bucket, i.e. within the bucket's relative width of truth.
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.on_complete(i as f64 / 100.0, 0.0, false);
+        }
+        let s = m.latency_summary().unwrap();
+        assert!((s.p50 - 0.50).abs() <= 0.25, "p50 {}", s.p50);
+        assert!((s.p95 - 0.95).abs() <= 0.50, "p95 {}", s.p95);
+        assert!((s.mean - 0.505).abs() < 1e-3, "mean {}", s.mean);
+    }
+
+    #[test]
     fn empty_summary_is_none() {
         assert!(Metrics::new().latency_summary().is_none());
+        assert!(Metrics::new().queue_summary().is_none());
+    }
+
+    #[test]
+    fn queue_summary_tracks_waits() {
+        let m = Metrics::new();
+        m.on_complete(0.5, 0.2, false);
+        m.on_complete(0.6, 0.4, false);
+        let q = m.queue_summary().unwrap();
+        assert_eq!(q.count, 2);
+        assert!((q.max - 0.4).abs() < 1e-9);
+        assert!(q.p50 <= q.p95 && q.p95 <= q.max);
+        let rendered = m.render();
+        assert!(rendered.contains("queue[p50="), "{rendered}");
+        assert!(rendered.contains("p99="), "{rendered}");
     }
 
     #[test]
@@ -374,6 +582,20 @@ mod tests {
     }
 
     #[test]
+    fn drained_queue_gauge_is_cleared() {
+        let m = Metrics::new();
+        m.on_device("840m", 0.5, 1000);
+        m.set_queue_depth("840m", 7);
+        assert!(m.render_devices().contains("queue=7"));
+        m.set_queue_depth("840m", 0);
+        let rendered = m.render_devices();
+        assert!(rendered.contains("queue=0"), "{rendered}");
+        assert!(!rendered.contains("queue=7"), "{rendered}");
+        // and the prometheus gauge disappears entirely
+        assert!(!m.render_prometheus().contains("gmres_queue_depth{"));
+    }
+
+    #[test]
     fn per_device_stats_accumulate() {
         let m = Metrics::new();
         assert!(m.device_stats().is_empty());
@@ -390,5 +612,31 @@ mod tests {
         assert_eq!(s.bytes_moved, 1500);
         let rendered = m.render_devices();
         assert!(rendered.contains("840m") && rendered.contains("v100"), "{rendered}");
+    }
+
+    #[test]
+    fn prometheus_snapshot_has_counters_and_histograms() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_cache_hit();
+        m.on_cache_hit();
+        m.on_complete(0.012, 0.003, false);
+        m.on_device("v100", 0.1, 4000);
+        m.set_queue_depth("v100", 2);
+        let text = m.render_prometheus();
+        assert!(text.contains("gmres_cache_hits_total 2"), "{text}");
+        assert!(text.contains("gmres_requests_submitted_total 1"), "{text}");
+        assert!(text.contains("gmres_queue_depth{device=\"v100\"} 2"), "{text}");
+        assert!(text.contains("gmres_device_solves_total{device=\"v100\"} 1"), "{text}");
+        assert!(text.contains("gmres_request_latency_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("gmres_request_latency_seconds_count 1"), "{text}");
+        assert!(text.contains("gmres_queue_wait_seconds_count 1"), "{text}");
+        // cumulative bucket counts are non-decreasing
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("gmres_request_latency_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "{line}");
+            last = v;
+        }
     }
 }

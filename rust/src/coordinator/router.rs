@@ -27,7 +27,7 @@ use crate::backend::Policy;
 use crate::fleet::Fleet;
 use crate::gmres::GmresConfig;
 use crate::linalg::SystemShape;
-use crate::planner::{Plan, Planner, PlannerConfig};
+use crate::planner::{Plan, PlanCandidate, Planner, PlannerConfig};
 
 use super::job::SolveRequest;
 
@@ -112,6 +112,14 @@ impl Router {
         let shape = req.matrix.shape();
         let plan = self.planner.plan(&shape, &req.config, req.policy);
         Route { policy: plan.policy, downgraded: plan.downgraded, plan }
+    }
+
+    /// [`Router::route`] plus the planner's ranked candidate table — the
+    /// plan-decision audit attached to every request trace.
+    pub fn route_audited(&self, req: &SolveRequest) -> (Route, Vec<PlanCandidate>) {
+        let shape = req.matrix.shape();
+        let (plan, candidates) = self.planner.plan_audited(&shape, &req.config, req.policy);
+        (Route { policy: plan.policy, downgraded: plan.downgraded, plan }, candidates)
     }
 }
 

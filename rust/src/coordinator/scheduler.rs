@@ -42,6 +42,7 @@ use crate::gmres::PrecondKind;
 use crate::linalg::MatrixFormat;
 use crate::planner::Planner;
 use crate::precision::Precision;
+use crate::trace::Tracer;
 use crate::Result;
 
 /// Why a request was refused at admission.
@@ -333,6 +334,9 @@ pub struct FleetScheduler {
     gpu: Vec<DeviceId>,
     /// Per-device queue bound; submissions beyond it shed.
     queue_capacity: usize,
+    /// Trace ring: shed jobs are finalized here (executed jobs are
+    /// finalized by their worker).
+    tracer: Arc<Tracer>,
 }
 
 impl FleetScheduler {
@@ -342,6 +346,7 @@ impl FleetScheduler {
         metrics: Arc<Metrics>,
         batcher_config: BatcherConfig,
         queue_capacity: usize,
+        tracer: Arc<Tracer>,
     ) -> Self {
         let fleet = planner.fleet();
         let labels = (0..fleet.len()).map(|i| fleet.label_of(i).to_string()).collect();
@@ -361,6 +366,7 @@ impl FleetScheduler {
             labels,
             gpu,
             queue_capacity: queue_capacity.max(1),
+            tracer,
         }
     }
 
@@ -417,6 +423,10 @@ impl FleetScheduler {
                             &item.plan,
                             Placement::Single(h),
                         );
+                        item.trace.event(format!(
+                            "rerouted: residency holder {} (was {})",
+                            self.labels[h], self.labels[d]
+                        ));
                     }
                 }
             }
@@ -424,9 +434,12 @@ impl FleetScheduler {
 
         let mut inner = self.inner.lock().unwrap();
         if !inner.open {
+            drop(inner);
+            self.tracer.record(item.trace.finish_failed("service shut down"));
             return Err(anyhow!("service shut down"));
         }
         if !item.plan.policy.needs_runtime() {
+            item.trace.mark_enqueued();
             inner.host.push_back(item);
             drop(inner);
             self.cv.notify_all();
@@ -435,6 +448,7 @@ impl FleetScheduler {
         let Some(&first_gpu) = self.gpu.first() else {
             // no devices registered: run on the host path (the job will
             // error there if it truly needs a runtime, same as before)
+            item.trace.mark_enqueued();
             inner.host.push_back(item);
             drop(inner);
             self.cv.notify_all();
@@ -448,12 +462,14 @@ impl FleetScheduler {
         let depth = inner.device[target].len();
         if depth >= self.queue_capacity {
             self.metrics.on_shed();
-            return Err(anyhow::Error::new(ShedError {
+            let shed = ShedError {
                 reason: ShedReason::QueueFull,
                 depth,
                 predicted_seconds: item.plan.predicted_seconds,
                 deadline_seconds: 0.0,
-            }));
+            };
+            self.tracer.record(item.trace.finish_shed(&shed.to_string()));
+            return Err(anyhow::Error::new(shed));
         }
         if let Some(dl) = item.deadline {
             if depth > 0 {
@@ -461,17 +477,20 @@ impl FleetScheduler {
                 let predicted = item.plan.predicted_seconds.max(0.0);
                 if depth as f64 * predicted > slack {
                     self.metrics.on_shed();
-                    return Err(anyhow::Error::new(ShedError {
+                    let shed = ShedError {
                         reason: ShedReason::DeadlineUnmeetable,
                         depth,
                         predicted_seconds: predicted,
                         deadline_seconds: slack,
-                    }));
+                    };
+                    self.tracer.record(item.trace.finish_shed(&shed.to_string()));
+                    return Err(anyhow::Error::new(shed));
                 }
             }
         }
         let key = batch_key(&item);
         let deadline = item.deadline;
+        item.trace.mark_enqueued();
         inner.device[target].push_with_deadline(key, item, deadline);
         self.metrics.set_queue_depth(&self.labels[target], inner.device[target].len() as u64);
         drop(inner);
@@ -567,6 +586,10 @@ impl FleetScheduler {
                     Placement::Single(d),
                 );
                 p.key.placement = Placement::Single(d);
+                p.item.trace.event(format!(
+                    "stolen: {} -> {} (victim backlogged, thief idle)",
+                    self.labels[v], self.labels[d]
+                ));
                 self.metrics.on_steal();
                 self.metrics.set_queue_depth(&self.labels[v], inner.device[v].len() as u64);
                 return Some(p);
@@ -701,10 +724,11 @@ mod tests {
     ) -> (WorkItem, mpsc::Receiver<Result<SolveOutcome>>) {
         let (tx, rx) = mpsc::sync_channel(1);
         let matrix = MatrixSpec::Table1 { n, seed: 0 };
+        let mid = matrix.content_id();
         (
             WorkItem {
                 id: JobId(1),
-                matrix_id: matrix.content_id(),
+                matrix_id: mid,
                 rhs: RhsSpec::Default,
                 request: SolveRequest {
                     matrix,
@@ -715,6 +739,7 @@ mod tests {
                 downgraded: false,
                 submitted_at: Instant::now(),
                 deadline,
+                trace: crate::trace::RequestTrace::begin(crate::trace::TraceId(1), 1, mid.0),
                 reply: tx,
             },
             rx,
@@ -729,7 +754,8 @@ mod tests {
         let cache = Arc::new(ResidencyCache::new(planner.fleet(), 0.9, None));
         let metrics = Arc::new(Metrics::new());
         let batcher = BatcherConfig { max_batch: 8, max_age: Duration::ZERO };
-        (FleetScheduler::new(planner, cache, metrics.clone(), batcher, 64), metrics)
+        let tracer = Arc::new(Tracer::new(64));
+        (FleetScheduler::new(planner, cache, metrics.clone(), batcher, 64, tracer), metrics)
     }
 
     #[test]
@@ -789,7 +815,8 @@ mod tests {
         let cache = Arc::new(ResidencyCache::new(planner.fleet(), 0.9, None));
         let metrics = Arc::new(Metrics::new());
         let batcher = BatcherConfig { max_batch: 8, max_age: Duration::ZERO };
-        let sched = FleetScheduler::new(planner, cache, metrics.clone(), batcher, 1);
+        let tracer = Arc::new(Tracer::new(64));
+        let sched = FleetScheduler::new(planner, cache, metrics.clone(), batcher, 1, tracer.clone());
         let mut plan = Plan::pinned(Policy::GmatrixLike, 8);
         plan.placement = Placement::Single(0);
         let (a, _rxa) = item(32, Policy::GmatrixLike, plan, None);
@@ -798,6 +825,11 @@ mod tests {
         let err = sched.submit(b).expect_err("bounded queue");
         let shed = err.downcast_ref::<ShedError>().expect("typed shed error");
         assert_eq!(shed.reason, ShedReason::QueueFull);
+        // the refused job still gets a terminal trace
+        assert_eq!(tracer.len(), 1);
+        let t = &tracer.snapshot()[0];
+        assert_eq!(t.status, crate::trace::TraceStatus::Shed);
+        assert!(t.audit.events.iter().any(|e| e.contains("queue full")));
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::coordinator::scheduler::{FleetScheduler, ResidencyCache};
 use crate::coordinator::session::MatrixHandle;
 use crate::coordinator::worker::{spawn_fleet_workers, WorkItem};
 use crate::gmres::GmresConfig;
+use crate::trace::{CandidateAudit, RequestTrace, Tracer};
 use crate::Result;
 
 /// Service configuration.
@@ -45,6 +46,9 @@ pub struct ServiceConfig {
     /// Calibration snapshot path: loaded (if present) on start so the
     /// router plans warm, saved on graceful shutdown.
     pub calib_file: Option<PathBuf>,
+    /// Bound of the request-trace ring buffer ([`Tracer`]); the oldest
+    /// trace is dropped (and counted) past it.
+    pub trace_capacity: usize,
 }
 
 impl Default for ServiceConfig {
@@ -58,6 +62,7 @@ impl Default for ServiceConfig {
             device_queue_capacity: 64,
             cache_budget: None,
             calib_file: None,
+            trace_capacity: 1024,
         }
     }
 }
@@ -67,6 +72,8 @@ impl Default for ServiceConfig {
 pub struct SolveService {
     router: Router,
     metrics: Arc<Metrics>,
+    /// Bounded ring of finalized request traces.
+    tracer: Arc<Tracer>,
     /// Per-device work queues + residency cache + admission control.
     scheduler: Arc<FleetScheduler>,
     next_id: AtomicU64,
@@ -101,12 +108,14 @@ impl SolveService {
             planner.config().mem_fraction,
             config.cache_budget,
         ));
+        let tracer = Arc::new(Tracer::new(config.trace_capacity));
         let scheduler = Arc::new(FleetScheduler::new(
             planner.clone(),
             cache,
             metrics.clone(),
             config.batcher,
             config.device_queue_capacity,
+            tracer.clone(),
         ));
         let handles = spawn_fleet_workers(
             config.artifacts_dir.clone(),
@@ -114,10 +123,12 @@ impl SolveService {
             metrics.clone(),
             planner,
             config.cpu_workers,
+            tracer.clone(),
         );
         Arc::new(Self {
             router,
             metrics,
+            tracer,
             scheduler,
             next_id: AtomicU64::new(1),
             inflight: Arc::new(AtomicU64::new(0)),
@@ -163,6 +174,11 @@ impl SolveService {
 
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    /// The bounded request-trace ring (export via [`Tracer::to_json`]).
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     /// The fleet scheduler (queues, residency cache, admission control).
@@ -221,11 +237,18 @@ impl SolveService {
         deadline: Option<Duration>,
     ) -> Result<mpsc::Receiver<Result<SolveOutcome>>> {
         let request = SolveRequest { matrix, config, policy };
+        let submitted_at = Instant::now();
+        let trace_id = self.tracer.mint();
         // admission by queue depth (backpressure)
         let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
         if prev >= self.queue_capacity {
             self.inflight.fetch_sub(1, Ordering::SeqCst);
             self.metrics.on_reject();
+            let trace = RequestTrace::begin_at(trace_id, 0, matrix_id.0, submitted_at);
+            self.tracer.record(trace.finish_rejected(&format!(
+                "backpressure: {prev} in flight >= capacity {}",
+                self.queue_capacity
+            )));
             return Err(anyhow!(
                 "queue full ({} in flight >= capacity {})",
                 prev,
@@ -233,8 +256,37 @@ impl SolveService {
             ));
         }
         self.metrics.on_submit();
-        let route = self.router.route(&request);
+        let (route, candidates) = self.router.route_audited(&request);
         let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        // plan-decision audit: what was considered, what won, and the
+        // calibration cell as it stood at planning time
+        let mut trace = RequestTrace::begin_at(trace_id, id.0, matrix_id.0, submitted_at);
+        trace.audit.requested = policy.map(|p| p.to_string());
+        trace.audit.candidates = candidates
+            .iter()
+            .take(5)
+            .map(|c| CandidateAudit {
+                plan: c.plan.summary(),
+                predicted_seconds: c.plan.predicted_seconds,
+                admitted: c.admitted,
+            })
+            .collect();
+        trace.audit.chosen = route.plan.summary();
+        trace.audit.predicted_seconds = route.plan.predicted_seconds;
+        trace.audit.predicted_cycles = route.plan.predicted_cycles;
+        let shape = request.matrix.shape();
+        trace.audit.coeff_at_plan = self.router.planner().coeff_cell(
+            route.plan.policy,
+            shape.format,
+            route.plan.placement,
+            route.plan.precision,
+        );
+        if route.downgraded {
+            trace.event(format!(
+                "downgraded: requested policy inadmissible, fell back to {}",
+                route.policy
+            ));
+        }
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         let item = WorkItem {
             id,
@@ -243,8 +295,9 @@ impl SolveService {
             request,
             plan: route.plan,
             downgraded: route.downgraded,
-            submitted_at: Instant::now(),
-            deadline: deadline.map(|d| Instant::now() + d),
+            submitted_at,
+            deadline: deadline.map(|d| submitted_at + d),
+            trace,
             reply: reply_tx,
         };
         // the scheduler routes by placement (and to a residency holder),
@@ -397,6 +450,25 @@ mod tests {
         assert!((warm - learned).abs() < 1e-12, "warm {warm} vs learned {learned}");
         assert!(second.router().planner().observations() >= 4);
         second.shutdown();
+    }
+
+    #[test]
+    fn traces_record_completed_requests_and_reconcile() {
+        let svc = service();
+        let out = svc.submit(req(48, Some(Policy::SerialNative))).unwrap();
+        assert!(out.report.converged);
+        let traces = svc.tracer().snapshot();
+        assert_eq!(traces.len(), 1, "exactly one trace per completed request");
+        let t = &traces[0];
+        assert_eq!(t.status, crate::trace::TraceStatus::Completed);
+        assert_eq!(t.job_id, out.id.0);
+        let rel = (t.execution_sim_total() - t.sim_seconds).abs()
+            / t.sim_seconds.max(f64::MIN_POSITIVE);
+        assert!(rel < 1e-9, "execution spans reconcile against the booked share");
+        assert!(t.coverage() > 0.99, "span chain covers the latency");
+        assert!(!t.audit.chosen.is_empty(), "plan audit captured");
+        assert!(t.audit.predicted_cycles >= 1);
+        svc.shutdown();
     }
 
     #[test]

@@ -33,6 +33,7 @@ use crate::gmres::{BlockGmres, GmresConfig, RestartedGmres, SolveReport};
 use crate::planner::{FoldEvaluation, Plan, Planner};
 use crate::precision::PrecisionPolicy;
 use crate::runtime::Runtime;
+use crate::trace::{ExecutionProfile, RequestTrace, Tracer};
 use crate::Result;
 
 /// Unit of work flowing to workers.
@@ -50,6 +51,9 @@ pub struct WorkItem {
     /// Completion deadline (admission control: the scheduler sheds jobs
     /// the queue depth cannot meet; the batcher flushes early for them).
     pub deadline: Option<Instant>,
+    /// In-flight lifecycle trace (minted at submission, finalized by the
+    /// executing worker — or by the scheduler for shed jobs).
+    pub trace: RequestTrace,
     pub reply: mpsc::SyncSender<Result<SolveOutcome>>,
 }
 
@@ -110,7 +114,7 @@ fn claim_residency(
 
 /// Execute one item to completion (shared by device + cpu paths).
 fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, planner: &Planner) {
-    run_item_cached(item, runtime, metrics, planner, None)
+    run_item_cached(item, runtime, metrics, planner, None, None)
 }
 
 /// [`run_item`] against a device's cross-batch residency cache.  The
@@ -126,16 +130,19 @@ fn run_item_cached(
     metrics: &Metrics,
     planner: &Planner,
     cache_ctx: CacheCtx<'_>,
+    tracer: Option<&Tracer>,
 ) {
     let started = Instant::now();
     let queue_seconds = started.duration_since(item.submitted_at).as_secs_f64();
-    let plan = item.plan;
-    let shape = item.request.matrix.shape();
+    let WorkItem { id, matrix_id, rhs, request, plan, downgraded, reply, mut trace, .. } = item;
+    trace.mark_claimed();
+    let shape = request.matrix.shape();
     let (warm_discount, warm_saved_bytes, claim) =
-        claim_residency(cache_ctx, item.matrix_id, &plan, &shape, 1, metrics, planner);
+        claim_residency(cache_ctx, matrix_id, &plan, &shape, 1, metrics, planner);
+    trace.mark_build_start();
     let outcome = (|| -> Result<SolveOutcome> {
-        let (a, b_default) = item.request.matrix.materialize();
-        let b = item.rhs.resolve(&b_default)?;
+        let (a, b_default) = request.matrix.materialize();
+        let b = rhs.resolve(&b_default)?;
         let format = a.format();
         // pin the plan's choices so the engine build, the solver and the
         // report all carry exactly what the planner decided (including the
@@ -144,7 +151,7 @@ fn run_item_cached(
             m: plan.m,
             precond: plan.precond,
             precision: crate::precision::PrecisionPolicy::Fixed(plan.precision),
-            ..item.request.config
+            ..request.config
         };
         let solver = RestartedGmres::new(config);
         // run the plan's placement: sharded plans build the fleet engine,
@@ -161,6 +168,7 @@ fn run_item_cached(
                     &config,
                     planner.config().mem_fraction,
                 )?;
+                trace.mark_exec_start();
                 let report = solver.solve(&mut engine, None)?;
                 let shares: Vec<(String, f64, u64)> = engine
                     .device_report()
@@ -174,6 +182,7 @@ fn run_item_cached(
             _ => {
                 let mut engine =
                     build_engine_preconditioned(plan.policy, a, b, &config, runtime, false)?;
+                trace.mark_exec_start();
                 let report = solver.solve(engine.as_mut(), None)?;
                 let label = planner.config().fleet.placement_label(plan.placement);
                 let bytes = fleet_costs::single_device_solve_bytes_p(
@@ -215,9 +224,9 @@ fn run_item_cached(
                 (out_plan.predicted_seconds - warm_discount * coeff).max(0.0);
         }
         Ok(SolveOutcome {
-            id: item.id,
+            id,
             policy: plan.policy,
-            downgraded: item.downgraded,
+            downgraded,
             plan: out_plan,
             report,
             queue_seconds,
@@ -228,12 +237,36 @@ fn run_item_cached(
             cache.end(dev, rkey);
         }
     }
-    match &outcome {
-        Ok(_) => metrics.on_complete(started.elapsed().as_secs_f64(), queue_seconds, item.downgraded),
-        Err(_) => metrics.on_fail(),
-    }
     // receiver may have gone away (client cancelled); that's fine
-    let _ = item.reply.send(outcome);
+    match outcome {
+        Ok(out) => {
+            metrics.on_complete(started.elapsed().as_secs_f64(), queue_seconds, downgraded);
+            if let Some(tr) = tracer {
+                trace.audit.measured_seconds = out.report.sim_seconds + warm_discount;
+                trace.audit.warm_discount = warm_discount;
+                trace.audit.coeff_after =
+                    planner.coeff_cell(plan.policy, shape.format, plan.placement, plan.precision);
+                let profile = ExecutionProfile {
+                    warm: warm_saved_bytes > 0,
+                    warm_discount,
+                    setup_sim_seconds: out.report.setup_sim_seconds,
+                    cycle_sim_seconds: &out.report.history.cycle_sim_seconds,
+                    cycle_wall_seconds: &out.report.history.cycle_wall_seconds,
+                    booked_sim_seconds: out.report.sim_seconds,
+                    fold_k: 1,
+                };
+                tr.record(trace.finish_completed(&profile));
+            }
+            let _ = reply.send(Ok(out));
+        }
+        Err(e) => {
+            metrics.on_fail();
+            if let Some(tr) = tracer {
+                tr.record(trace.finish_failed(&format!("{e:#}")));
+            }
+            let _ = reply.send(Err(e));
+        }
+    }
 }
 
 /// Execute a whole same-key batch: when it holds >= 2 same-matrix jobs and
@@ -246,7 +279,7 @@ fn run_batch(
     metrics: &Metrics,
     planner: &Planner,
 ) {
-    run_batch_cached(batch, runtime, metrics, planner, None)
+    run_batch_cached(batch, runtime, metrics, planner, None, None)
 }
 
 /// [`run_batch`] against a device's cross-batch residency cache.
@@ -256,6 +289,7 @@ fn run_batch_cached(
     metrics: &Metrics,
     planner: &Planner,
     cache_ctx: CacheCtx<'_>,
+    tracer: Option<&Tracer>,
 ) {
     // a member whose explicit rhs cannot resolve must fail ALONE, never
     // poison same-batch siblings — such batches run unfolded so the bad
@@ -277,12 +311,12 @@ fn run_batch_cached(
         let probe = GmresConfig { tol: min_tol, ..batch[0].item.request.config };
         let eval = planner.evaluate_fold(&shape, &probe, &plan, batch.len());
         if eval.worthwhile() {
-            run_folded(batch, metrics, planner, eval, cache_ctx);
+            run_folded(batch, metrics, planner, eval, cache_ctx, tracer);
             return;
         }
     }
     for pending in batch {
-        run_item_cached(pending.item, runtime.clone(), metrics, planner, cache_ctx);
+        run_item_cached(pending.item, runtime.clone(), metrics, planner, cache_ctx, tracer);
     }
 }
 
@@ -297,11 +331,19 @@ fn run_folded(
     planner: &Planner,
     eval: FoldEvaluation,
     cache_ctx: CacheCtx<'_>,
+    tracer: Option<&Tracer>,
 ) {
     let started = Instant::now();
     let k = batch.len();
     let plan = batch[0].item.plan;
-    let items: Vec<WorkItem> = batch.into_iter().map(|p| p.item).collect();
+    let mut items: Vec<WorkItem> = batch.into_iter().map(|p| p.item).collect();
+    for it in items.iter_mut() {
+        it.trace.mark_claimed();
+        it.trace.event(format!(
+            "folded: k={} modeled {:.6}s joint vs {:.6}s independent",
+            eval.k, eval.folded_seconds, eval.independent_seconds
+        ));
+    }
     let shape = items[0].request.matrix.shape();
     let queue_seconds: Vec<f64> = items
         .iter()
@@ -311,8 +353,11 @@ fn run_folded(
     // one-time upload once per batch on a warm hit
     let (warm_discount, warm_saved_bytes, claim) =
         claim_residency(cache_ctx, items[0].matrix_id, &plan, &shape, k, metrics, planner);
+    for it in items.iter_mut() {
+        it.trace.mark_build_start();
+    }
 
-    type FoldRun = (Vec<SolveReport>, Vec<(String, f64, u64)>);
+    type FoldRun = (Vec<SolveReport>, Vec<(String, f64, u64)>, Instant);
     let result = (|| -> Result<FoldRun> {
         let (a, b_default) = items[0].request.matrix.materialize();
         let mut bs = Vec::with_capacity(k);
@@ -344,6 +389,8 @@ fn run_folded(
             )?,
             _ => build_block_engine(plan.policy, a, bs, &build_config)?,
         };
+        // one engine-build boundary shared by all k member traces
+        let exec_started = Instant::now();
         let reports = BlockGmres::new(configs).solve(&mut engine)?;
         // per-member shares (sharded placements; empty otherwise)
         let shares: Vec<(String, f64, u64)> = engine
@@ -353,11 +400,11 @@ fn run_folded(
                 (fleet.placement_label(Placement::Single(id)), busy, bytes as u64)
             })
             .collect();
-        Ok((reports, shares))
+        Ok((reports, shares, exec_started))
     })();
 
     match result {
-        Ok((reports, device_shares)) => {
+        Ok((reports, device_shares, exec_started)) => {
             // The amortization observable.  Residency-class policies
             // (gmatrix/gpuR) save (k-1) one-time uploads of the (possibly
             // narrowed) matrix; the transfer-everything policy saves a
@@ -416,7 +463,7 @@ fn run_folded(
                 0.0
             };
             let wall = started.elapsed().as_secs_f64();
-            for (i, (item, report)) in items.into_iter().zip(reports).enumerate() {
+            for (i, (mut item, report)) in items.into_iter().zip(reports).enumerate() {
                 // calibration sees the RAW cold measurement (unbiased)
                 planner.observe_measured(
                     &plan,
@@ -443,6 +490,27 @@ fn run_folded(
                     out_plan.predicted_seconds =
                         (out_plan.predicted_seconds - per_rhs_discount * coeff).max(0.0);
                 }
+                if let Some(tr) = tracer {
+                    item.trace.mark_exec_start_at(exec_started);
+                    item.trace.audit.measured_seconds = report.sim_seconds + per_rhs_discount;
+                    item.trace.audit.warm_discount = per_rhs_discount;
+                    item.trace.audit.coeff_after = planner.coeff_cell(
+                        plan.policy,
+                        shape.format,
+                        plan.placement,
+                        plan.precision,
+                    );
+                    let profile = ExecutionProfile {
+                        warm: warm_saved_bytes > 0,
+                        warm_discount: per_rhs_discount,
+                        setup_sim_seconds: report.setup_sim_seconds,
+                        cycle_sim_seconds: &report.history.cycle_sim_seconds,
+                        cycle_wall_seconds: &report.history.cycle_wall_seconds,
+                        booked_sim_seconds: report.sim_seconds,
+                        fold_k: k,
+                    };
+                    tr.record(item.trace.finish_completed(&profile));
+                }
                 let outcome = SolveOutcome {
                     id: item.id,
                     policy: plan.policy,
@@ -458,6 +526,9 @@ fn run_folded(
             let msg = format!("{e:#}");
             for item in items {
                 metrics.on_fail();
+                if let Some(tr) = tracer {
+                    tr.record(item.trace.finish_failed(&msg));
+                }
                 let _ = item.reply.send(Err(anyhow!("folded block solve failed: {msg}")));
             }
         }
@@ -567,12 +638,14 @@ pub fn spawn_fleet_workers(
     metrics: Arc<Metrics>,
     planner: Arc<Planner>,
     cpu_workers: usize,
+    tracer: Arc<Tracer>,
 ) -> Vec<std::thread::JoinHandle<()>> {
     let mut handles = Vec::new();
     for &d in scheduler.gpu_ids() {
         let scheduler = scheduler.clone();
         let metrics = metrics.clone();
         let planner = planner.clone();
+        let tracer = tracer.clone();
         let dir = artifacts_dir.clone();
         handles.push(
             std::thread::Builder::new()
@@ -596,6 +669,7 @@ pub fn spawn_fleet_workers(
                             &metrics,
                             &planner,
                             Some((cache.as_ref(), d)),
+                            Some(&tracer),
                         );
                         scheduler.complete(mask);
                     }
@@ -607,12 +681,13 @@ pub fn spawn_fleet_workers(
         let scheduler = scheduler.clone();
         let metrics = metrics.clone();
         let planner = planner.clone();
+        let tracer = tracer.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("gmres-cpu-{i}"))
                 .spawn(move || {
                     while let Some(item) = scheduler.next_host_job() {
-                        run_item(item, None, &metrics, &planner);
+                        run_item_cached(item, None, &metrics, &planner, None, Some(&tracer));
                     }
                 })
                 .expect("spawn cpu worker"),
@@ -661,10 +736,11 @@ mod tests {
     fn item(n: usize, policy: Policy) -> (WorkItem, mpsc::Receiver<Result<SolveOutcome>>) {
         let (tx, rx) = mpsc::sync_channel(1);
         let matrix = MatrixSpec::Table1 { n, seed: 0 };
+        let mid = matrix.content_id();
         (
             WorkItem {
                 id: JobId(1),
-                matrix_id: matrix.content_id(),
+                matrix_id: mid,
                 rhs: RhsSpec::Default,
                 request: SolveRequest {
                     matrix,
@@ -675,6 +751,7 @@ mod tests {
                 downgraded: false,
                 submitted_at: Instant::now(),
                 deadline: None,
+                trace: RequestTrace::begin(crate::trace::TraceId(1), 1, mid.0),
                 reply: tx,
             },
             rx,
@@ -911,10 +988,10 @@ mod tests {
         let plan = it1.plan;
         let shape = it1.request.matrix.shape();
         assert!(matches!(plan.placement, Placement::Single(_)), "device placement expected");
-        run_item_cached(it1, rt.clone(), &metrics, &planner, Some((&cache, 0)));
+        run_item_cached(it1, rt.clone(), &metrics, &planner, Some((&cache, 0)), None);
         let cold = rx1.recv().unwrap().unwrap();
         let (it2, rx2) = mk();
-        run_item_cached(it2, rt.clone(), &metrics, &planner, Some((&cache, 0)));
+        run_item_cached(it2, rt.clone(), &metrics, &planner, Some((&cache, 0)), None);
         let warm = rx2.recv().unwrap().unwrap();
         assert_eq!(metrics.cache_misses(), 1);
         assert_eq!(metrics.cache_hits(), 1);

@@ -425,13 +425,24 @@ impl BlockGmres {
                 break;
             }
             let width = active_idx.len();
+            let cycle_start = std::time::Instant::now();
             let charged = engine.charge_joint_cycle(width);
             let share = charged / width as f64;
+            let mut stepped = Vec::with_capacity(width);
             for &i in &active_idx {
                 let (x, res) = engine.rhs_cycle(i, &xs[i]);
+                stepped.push((i, x, res));
+            }
+            // Per-RHS wall share of this joint cycle — recorded alongside
+            // the sim share so traces can lay fold-member cycle spans.
+            let wall_share = cycle_start.elapsed().as_secs_f64() / width as f64;
+            for (i, x, res) in stepped {
                 xs[i] = x;
                 resnorms[i] = res;
-                histories[i].push(res);
+                // `share` is pushed with the SAME value and order as the
+                // `per_rhs_sim` accumulation below, so the history trail
+                // sums back to `sim_seconds` bit-exactly.
+                histories[i].push_timed(res, share, wall_share);
                 cycles[i] += 1;
                 per_rhs_sim[i] += share;
                 if res <= targets[i] {
@@ -461,6 +472,7 @@ impl BlockGmres {
                 // per-RHS share of the block's wallclock (sums to total)
                 wall_seconds: wall / k as f64,
                 sim_seconds: per_rhs_sim[i],
+                setup_sim_seconds: setup / k as f64,
                 history: std::mem::take(&mut histories[i]),
             });
         }

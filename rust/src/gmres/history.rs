@@ -6,16 +6,33 @@ use crate::backend::Policy;
 use crate::gmres::precond::PrecondKind;
 use crate::precision::Precision;
 
-/// Per-cycle residual trail.
+/// Per-cycle residual trail, plus the per-cycle time attribution the
+/// trace layer turns into execution spans.
 #[derive(Clone, Debug, Default)]
 pub struct ConvergenceHistory {
     /// `||b - A x_k||` after each restart cycle (starting with cycle 1).
     pub resnorms: Vec<f64>,
+    /// Modeled (DeviceSim) seconds each cycle charged; same length as
+    /// `resnorms`.  These telescope: their sum plus the pre-cycle setup
+    /// charge equals the report's `sim_seconds` to f64 round-off.
+    pub cycle_sim_seconds: Vec<f64>,
+    /// Host wall seconds each cycle took; same length as `resnorms`.
+    pub cycle_wall_seconds: Vec<f64>,
 }
 
 impl ConvergenceHistory {
+    /// Record a cycle with no time attribution (drivers that don't sample
+    /// the clocks push zeros to keep the trails aligned).
     pub fn push(&mut self, r: f64) {
+        self.push_timed(r, 0.0, 0.0);
+    }
+
+    /// Record a cycle's residual together with the modeled and wall
+    /// seconds it consumed.
+    pub fn push_timed(&mut self, r: f64, sim_seconds: f64, wall_seconds: f64) {
         self.resnorms.push(r);
+        self.cycle_sim_seconds.push(sim_seconds);
+        self.cycle_wall_seconds.push(wall_seconds);
     }
 
     pub fn cycles(&self) -> usize {
@@ -75,6 +92,11 @@ pub struct SolveReport {
     pub wall_seconds: f64,
     /// Modeled seconds on the paper's testbed (DeviceSim clock).
     pub sim_seconds: f64,
+    /// Modeled seconds charged before the first cycle (upload / residency
+    /// establishment / engine build).  `setup_sim_seconds +
+    /// Σ history.cycle_sim_seconds == sim_seconds` up to f64 round-off —
+    /// the identity the trace layer audits.
+    pub setup_sim_seconds: f64,
     pub history: ConvergenceHistory,
 }
 
@@ -103,15 +125,15 @@ mod tests {
 
     #[test]
     fn monotone_detection() {
-        let h = ConvergenceHistory { resnorms: vec![1.0, 0.5, 0.25] };
+        let h = ConvergenceHistory { resnorms: vec![1.0, 0.5, 0.25], ..Default::default() };
         assert!(h.is_monotone(0.0));
-        let bad = ConvergenceHistory { resnorms: vec![1.0, 1.5] };
+        let bad = ConvergenceHistory { resnorms: vec![1.0, 1.5], ..Default::default() };
         assert!(!bad.is_monotone(1e-12));
     }
 
     #[test]
     fn convergence_factor_halving() {
-        let h = ConvergenceHistory { resnorms: vec![0.5, 0.25, 0.125] };
+        let h = ConvergenceHistory { resnorms: vec![0.5, 0.25, 0.125], ..Default::default() };
         let f = h.convergence_factor(1.0).unwrap();
         assert!((f - 0.5).abs() < 1e-12);
     }
@@ -120,7 +142,7 @@ mod tests {
     fn convergence_factor_degenerate_cases() {
         let empty = ConvergenceHistory::default();
         assert!(empty.convergence_factor(1.0).is_none());
-        let zero = ConvergenceHistory { resnorms: vec![0.0] };
+        let zero = ConvergenceHistory { resnorms: vec![0.0], ..Default::default() };
         assert!(zero.convergence_factor(1.0).is_none());
     }
 }

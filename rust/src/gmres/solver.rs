@@ -78,12 +78,23 @@ impl RestartedGmres {
         let mut resnorm = f64::INFINITY;
         let mut converged = false;
 
+        // Everything the engine charged before the first cycle (upload,
+        // residency establishment) is the setup share; per-cycle deltas of
+        // the same clock telescope back to the total, so the trace layer
+        // can reconcile spans against `sim_seconds` exactly.
+        let setup_sim_seconds = engine.sim().elapsed();
         let start = Instant::now();
         for _cycle in 0..self.config.max_restarts {
+            let cycle_start = Instant::now();
+            let sim_before = engine.sim().elapsed();
             let r = engine.cycle(&x)?;
             x = r.x;
             resnorm = r.resnorm;
-            history.push(resnorm);
+            history.push_timed(
+                resnorm,
+                engine.sim().elapsed() - sim_before,
+                cycle_start.elapsed().as_secs_f64(),
+            );
             if resnorm <= target {
                 converged = true;
                 break;
@@ -104,6 +115,7 @@ impl RestartedGmres {
             cycles: history.cycles(),
             wall_seconds,
             sim_seconds: engine.sim().elapsed(),
+            setup_sim_seconds,
             history,
         })
     }
@@ -159,6 +171,18 @@ mod tests {
         let rep = solver.solve(&mut e, Some(xt)).unwrap();
         assert!(rep.converged);
         assert_eq!(rep.cycles, 1);
+    }
+
+    #[test]
+    fn cycle_sim_attribution_telescopes() {
+        let (mut e, _) = native_engine(60, 5, 5);
+        let solver = RestartedGmres::new(GmresConfig { m: 5, tol: 1e-10, max_restarts: 100, ..Default::default() });
+        let rep = solver.solve(&mut e, None).unwrap();
+        assert_eq!(rep.history.cycle_sim_seconds.len(), rep.cycles);
+        assert_eq!(rep.history.cycle_wall_seconds.len(), rep.cycles);
+        let total = rep.setup_sim_seconds + rep.history.cycle_sim_seconds.iter().sum::<f64>();
+        let rel = (total - rep.sim_seconds).abs() / rep.sim_seconds.max(f64::MIN_POSITIVE);
+        assert!(rel < 1e-9, "setup+cycles {total} != sim {}", rep.sim_seconds);
     }
 
     #[test]

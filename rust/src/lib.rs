@@ -48,6 +48,11 @@
 //!   by device memory, a fold-aware batcher (same-matrix batches collapse
 //!   into multi-RHS block solves when the planner prices the fold
 //!   cheaper), worker pool, metrics.
+//! * **[`trace`]** — request-lifecycle observability: per-request span
+//!   timelines (admission → queue → residency → cycles → verify) with
+//!   dual wall/modeled accounting that reconciles against the booked
+//!   `sim_seconds`, plan-decision audit records, and the bounded
+//!   per-service trace ring exported by `serve --trace-json`.
 //! * **[`report`]** — Table 1 / Figure 5 regeneration harness, ablations,
 //!   paper reference data.
 
@@ -61,6 +66,7 @@ pub mod planner;
 pub mod precision;
 pub mod report;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result type (anyhow for ergonomic error context).

@@ -16,6 +16,8 @@
 //!                 [--precision auto|f64|f32|tf32] [--rhs-count 1]
 //!                 [--fleet 840m,v100,a100,host] [--calib-file path]
 //!                 [--waves 1] [--deadline-ms 0] [--cache-mb 0] [--bench-json path]
+//!                 [--trace-json path] [--metrics-out path]
+//! gmres-rs trace  --file path [--job N] [--list]
 //! gmres-rs info
 //! ```
 
@@ -53,7 +55,10 @@ USAGE:
                  [--precision auto|f64|f32|tf32] [--rhs-count K]
                  [--fleet 840m,v100,a100,host] [--calib-file PATH]
                  [--waves W] [--deadline-ms MS] [--cache-mb MB]
-                 [--bench-json PATH]
+                 [--bench-json PATH] [--trace-json PATH] [--metrics-out PATH]
+  gmres-rs trace --file PATH [--job N] [--list]
+                 (pretty-print one request's span waterfall from a
+                  --trace-json dump; --list shows one line per trace)
   gmres-rs info
 
 POLICIES:  serial-r | serial-native | gmatrix | gputools | gpuR
@@ -77,6 +82,11 @@ WAVES:     serve repeats the whole burst W times over the SAME session
 DEADLINE:  serve stamps each request with a completion deadline; the scheduler
            sheds requests it cannot meet (typed error, counted in sheds[..])
 CACHE-MB:  cap the per-device residency cache (default: the device budget)
+TRACING:   every request is traced end-to-end (admission, queue, residency,
+           per-cycle execution, verification, fold membership) with both wall
+           and modeled-seconds accounting; `serve --trace-json` dumps the
+           trace ring, `trace` renders a waterfall, `--metrics-out` writes a
+           Prometheus text snapshot
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -86,6 +96,7 @@ fn main() -> anyhow::Result<()> {
         Some("plan") | Some("explain") => cmd_plan(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("info") => cmd_info(),
         _ => {
             eprint!("{USAGE}");
@@ -471,6 +482,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let wall = started.elapsed().as_secs_f64();
     println!("{ok} / {total} solved in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
     println!("metrics: {}", svc.metrics().render());
+    if let Some(q) = svc.metrics().queue_summary() {
+        println!(
+            "queue-wait: p50={:.3}s p95={:.3}s max={:.3}s over {} claims",
+            q.p50, q.p95, q.max, q.count
+        );
+    }
     let devices = svc.metrics().render_devices();
     if !devices.is_empty() {
         print!("{devices}");
@@ -482,6 +499,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("bench-json") {
         let met = svc.metrics();
         let lat = met.latency_summary();
+        let queue = met.queue_summary();
         let (hits, misses) = (met.cache_hits(), met.cache_misses());
         let hit_rate =
             if hits + misses > 0 { hits as f64 / (hits + misses) as f64 } else { 0.0 };
@@ -489,13 +507,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             "{{\n  \"bench\": \"serve\",\n  \"requests\": {total},\n  \"waves\": {waves},\n  \
              \"rhs_count\": {rhs_count},\n  \"ok\": {ok},\n  \"wall_seconds\": {wall:.6},\n  \
              \"throughput_rps\": {:.3},\n  \"latency_p50_s\": {:.6},\n  \
-             \"latency_p95_s\": {:.6},\n  \"cache_hits\": {hits},\n  \
+             \"latency_p95_s\": {:.6},\n  \"latency_p99_s\": {:.6},\n  \
+             \"queue_p50_s\": {:.6},\n  \"queue_p95_s\": {:.6},\n  \"cache_hits\": {hits},\n  \
              \"cache_misses\": {misses},\n  \"cache_hit_rate\": {hit_rate:.4},\n  \
              \"cache_evictions\": {},\n  \"uploads_saved_bytes\": {},\n  \
              \"steals\": {},\n  \"sheds\": {},\n  \"folds\": {}\n}}\n",
             ok as f64 / wall.max(1e-9),
             lat.as_ref().map_or(0.0, |l| l.p50),
             lat.as_ref().map_or(0.0, |l| l.p95),
+            lat.as_ref().map_or(0.0, |l| l.p99),
+            queue.as_ref().map_or(0.0, |q| q.p50),
+            queue.as_ref().map_or(0.0, |q| q.p95),
             met.cache_evictions(),
             met.uploads_saved_bytes(),
             met.steals(),
@@ -505,7 +527,57 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, json)?;
         println!("wrote {path}");
     }
+    if let Some(path) = args.get("trace-json") {
+        std::fs::write(path, svc.tracer().to_json())?;
+        println!(
+            "wrote {path} ({} trace(s), {} dropped by the ring)",
+            svc.tracer().len(),
+            svc.tracer().dropped()
+        );
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, svc.metrics().render_prometheus())?;
+        println!("wrote {path}");
+    }
     svc.shutdown();
+    Ok(())
+}
+
+/// `trace`: pretty-print request waterfalls from a `serve --trace-json`
+/// dump.  `--list` prints one line per trace; otherwise one trace is
+/// selected (`--job N`, or the slowest completed request) and rendered as
+/// a span waterfall with wall + modeled-seconds accounting.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use gmres_rs::trace::{Trace, TraceStatus};
+    let path = args
+        .get("file")
+        .ok_or_else(|| anyhow!("trace: --file PATH is required (a `serve --trace-json` dump)"))?;
+    let text = std::fs::read_to_string(path)?;
+    let traces = Trace::parse_dump(&text)?;
+    if traces.is_empty() {
+        bail!("{path}: no traces recorded");
+    }
+    if args.flag("list") {
+        for t in &traces {
+            println!("{}", t.one_line());
+        }
+        return Ok(());
+    }
+    let chosen = match args.get("job") {
+        Some(j) => {
+            let job: u64 = j.parse().map_err(|_| anyhow!("bad --job `{j}`"))?;
+            traces
+                .iter()
+                .find(|t| t.job_id == job)
+                .ok_or_else(|| anyhow!("no trace for job-{job} in {path}"))?
+        }
+        None => traces
+            .iter()
+            .filter(|t| t.status == TraceStatus::Completed)
+            .max_by(|a, b| a.total_s.total_cmp(&b.total_s))
+            .unwrap_or(&traces[0]),
+    };
+    print!("{}", chosen.render_waterfall());
     Ok(())
 }
 

@@ -682,6 +682,20 @@ impl Planner {
         }
     }
 
+    /// [`Planner::plan`] plus the ranked candidate table the decision was
+    /// (or, for an explicit policy pin, would have been) made from — the
+    /// trace layer's plan-audit hook.  Pinned requests still get the full
+    /// auto ranking so the audit shows what the pin cost relative to the
+    /// planner's own choice.
+    pub fn plan_audited(
+        &self,
+        shape: &SystemShape,
+        config: &GmresConfig,
+        requested: Option<Policy>,
+    ) -> (Plan, Vec<PlanCandidate>) {
+        (self.plan(shape, config, requested), self.enumerate(shape, config))
+    }
+
     /// The fold decision: price k same-matrix requests of one plan run as
     /// a single k-wide block solve (one residency upload, k-wide per-cycle
     /// GEMMs) against k independent solves, and check the k-wide working

@@ -1,0 +1,879 @@
+//! Request-lifecycle tracing: where did each solve's latency go, and why
+//! did the planner choose what it chose?
+//!
+//! The paper's contribution is *measurement* — attributing GMRES time to
+//! its phases across implementations.  This module gives the serving stack
+//! the same discipline per request.  Every submission mints a [`TraceId`];
+//! a [`RequestTrace`] rides the work item through the scheduler and worker,
+//! collecting wall-clock phase boundaries (admission → queue → claim →
+//! residency → cycles → verify) plus a [`PlanAudit`] of the planner's
+//! decision.  Workers finalize it into an immutable [`Trace`] recorded in
+//! the service's bounded ring buffer ([`Tracer`]).
+//!
+//! Two accounting ledgers per span, reconciled by construction:
+//! - **wall**: `[start_s, end_s]` offsets from submission.  Spans within a
+//!   phase chain are laid contiguously, so the timeline covers the full
+//!   submit→complete latency with no gaps (the ≥99 % coverage acceptance
+//!   bar holds by construction, not by luck).
+//! - **sim**: modeled seconds on the paper's testbed charged to that span.
+//!   The sum of a trace's execution-span sims (residency + cycles) equals
+//!   the booked `sim_seconds` share to f64 round-off — the trace audits
+//!   the cost model rather than offering a second opinion.
+//!
+//! Hot-path cost is two `Instant::now()` reads per phase boundary and one
+//! short mutex acquisition at finalization; nothing allocates per cycle.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Identifier minted at submission; stable across queue moves and steals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub u64);
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "trace-{}", self.0)
+    }
+}
+
+/// Lifecycle phase a span belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Submission bookkeeping: routing, planning, audit capture.
+    Admission,
+    /// Waiting in a host or device queue (includes steal moves).
+    Queue,
+    /// Worker claim through residency lookup.
+    Claim,
+    /// Cold residency establishment (upload priced at full setup).
+    ResidencyEstablish,
+    /// Warm residency hit (setup priced at the planner's warm discount).
+    ResidencyWarmHit,
+    /// One restart cycle of Arnoldi + LSQ + update (0-indexed).
+    Cycle(usize),
+    /// Final f64 verification / teardown tail after the last cycle.  For
+    /// reduced-precision solves the per-cycle f64 residual check is priced
+    /// *inside* the cycle spans (the engine charges it there); this span
+    /// carries the wall-clock tail only, so its sim share is zero.
+    VerifyF64,
+    /// Membership in a k-wide fold (spans the shared block solve).
+    FoldMember,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Admission => "admission",
+            Phase::Queue => "queue",
+            Phase::Claim => "claim",
+            Phase::ResidencyEstablish => "residency-establish",
+            Phase::ResidencyWarmHit => "residency-warm-hit",
+            Phase::Cycle(_) => "cycle",
+            Phase::VerifyF64 => "verify-f64",
+            Phase::FoldMember => "fold-member",
+        }
+    }
+
+    /// Does this span book modeled execution time (residency + cycles)?
+    pub fn is_execution(&self) -> bool {
+        matches!(
+            self,
+            Phase::ResidencyEstablish | Phase::ResidencyWarmHit | Phase::Cycle(_)
+        )
+    }
+
+    fn from_parts(name: &str, index: Option<u64>) -> Result<Self> {
+        Ok(match name {
+            "admission" => Phase::Admission,
+            "queue" => Phase::Queue,
+            "claim" => Phase::Claim,
+            "residency-establish" => Phase::ResidencyEstablish,
+            "residency-warm-hit" => Phase::ResidencyWarmHit,
+            "cycle" => Phase::Cycle(index.unwrap_or(0) as usize),
+            "verify-f64" => Phase::VerifyF64,
+            "fold-member" => Phase::FoldMember,
+            other => bail!("unknown span phase `{other}`"),
+        })
+    }
+}
+
+/// One interval of a request's life: wall offsets from submission plus the
+/// modeled seconds booked to it.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub phase: Phase,
+    /// Wall offset from submission, seconds.
+    pub start_s: f64,
+    /// Wall offset from submission, seconds (`>= start_s`).
+    pub end_s: f64,
+    /// Modeled (DeviceSim) seconds charged to this span.
+    pub sim_seconds: f64,
+}
+
+impl Span {
+    pub fn wall_seconds(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// How the request's life ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceStatus {
+    Completed,
+    Failed,
+    Shed,
+    Rejected,
+}
+
+impl TraceStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceStatus::Completed => "completed",
+            TraceStatus::Failed => "failed",
+            TraceStatus::Shed => "shed",
+            TraceStatus::Rejected => "rejected",
+        }
+    }
+
+    fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "completed" => TraceStatus::Completed,
+            "failed" => TraceStatus::Failed,
+            "shed" => TraceStatus::Shed,
+            "rejected" => TraceStatus::Rejected,
+            other => bail!("unknown trace status `{other}`"),
+        })
+    }
+}
+
+/// One ranked plan the planner considered at admission.
+#[derive(Clone, Debug, Default)]
+pub struct CandidateAudit {
+    /// `Plan::summary()` of the candidate.
+    pub plan: String,
+    pub predicted_seconds: f64,
+    pub admitted: bool,
+}
+
+/// Why the planner did what it did — attached to every trace.
+///
+/// `predicted_seconds` vs `measured_seconds` and `coeff_at_plan` vs
+/// `coeff_after` let a reader see both the decision and how calibration
+/// moved because of this request.
+#[derive(Clone, Debug, Default)]
+pub struct PlanAudit {
+    /// Policy the client pinned, if any.
+    pub requested: Option<String>,
+    /// Top-ranked candidates considered (best first).
+    pub candidates: Vec<CandidateAudit>,
+    /// `Plan::summary()` of the chosen plan.
+    pub chosen: String,
+    pub predicted_seconds: f64,
+    pub predicted_cycles: usize,
+    /// EWMA calibration coefficient for the chosen cell when planned.
+    pub coeff_at_plan: f64,
+    /// Same cell after this request's measurement was observed.
+    pub coeff_after: f64,
+    /// Raw measured modeled seconds (pre-discount; what calibration saw).
+    pub measured_seconds: f64,
+    /// Warm residency discount applied to the booked time (0 when cold).
+    pub warm_discount: f64,
+    /// Scheduling events with reasons: downgrade, reroute, steal, shed,
+    /// fold admission — in the order they happened.
+    pub events: Vec<String>,
+}
+
+/// Per-solve numbers a worker hands to [`RequestTrace::finish_completed`].
+///
+/// `cycle_sim_seconds`/`cycle_wall_seconds` come from the solve report's
+/// history; `setup_sim_seconds` is everything the engine charged before the
+/// first cycle (upload + residency establishment), **pre-discount** — the
+/// warm discount is subtracted here so the residency span books what the
+/// request was actually charged.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecutionProfile<'a> {
+    pub warm: bool,
+    pub warm_discount: f64,
+    pub setup_sim_seconds: f64,
+    pub cycle_sim_seconds: &'a [f64],
+    pub cycle_wall_seconds: &'a [f64],
+    /// The discounted `sim_seconds` share booked on the outcome; the
+    /// execution spans must (and do) sum to this.
+    pub booked_sim_seconds: f64,
+    /// Fold width this request executed under (1 = solo).
+    pub fold_k: usize,
+}
+
+/// Mutable in-flight trace riding a `WorkItem` through the pipeline.
+#[derive(Debug)]
+pub struct RequestTrace {
+    pub id: TraceId,
+    pub job_id: u64,
+    pub matrix_id: u64,
+    start: Instant,
+    enqueued_s: Option<f64>,
+    claimed_s: Option<f64>,
+    build_start_s: Option<f64>,
+    exec_start_s: Option<f64>,
+    pub audit: PlanAudit,
+}
+
+impl RequestTrace {
+    /// Start the clock now (call at the top of submission).
+    pub fn begin(id: TraceId, job_id: u64, matrix_id: u64) -> Self {
+        Self::begin_at(id, job_id, matrix_id, Instant::now())
+    }
+
+    /// Start the clock at an externally captured instant so the trace and
+    /// the work item's `submitted_at` agree exactly.
+    pub fn begin_at(id: TraceId, job_id: u64, matrix_id: u64, start: Instant) -> Self {
+        Self {
+            id,
+            job_id,
+            matrix_id,
+            start,
+            enqueued_s: None,
+            claimed_s: None,
+            build_start_s: None,
+            exec_start_s: None,
+            audit: PlanAudit::default(),
+        }
+    }
+
+    pub fn started_at(&self) -> Instant {
+        self.start
+    }
+
+    fn now_s(&self) -> f64 {
+        Instant::now().saturating_duration_since(self.start).as_secs_f64()
+    }
+
+    /// Admission is done; the item is entering a queue.
+    pub fn mark_enqueued(&mut self) {
+        self.enqueued_s = Some(self.now_s());
+    }
+
+    /// A worker claimed the item off its queue.
+    pub fn mark_claimed(&mut self) {
+        self.claimed_s = Some(self.now_s());
+    }
+
+    /// Residency work (materialize + upload/cache hit) is starting.
+    pub fn mark_build_start(&mut self) {
+        self.build_start_s = Some(self.now_s());
+    }
+
+    /// The engine is built; restart cycles are starting.
+    pub fn mark_exec_start(&mut self) {
+        self.exec_start_s = Some(self.now_s());
+    }
+
+    /// Same, from an instant captured elsewhere (fold paths share one
+    /// engine-build boundary across k traces).
+    pub fn mark_exec_start_at(&mut self, at: Instant) {
+        self.exec_start_s = Some(at.saturating_duration_since(self.start).as_secs_f64());
+    }
+
+    /// Record a scheduling event (reroute, steal, downgrade, fold, …).
+    pub fn event(&mut self, what: String) {
+        self.audit.events.push(what);
+    }
+
+    /// Finalize a request that executed to completion.
+    pub fn finish_completed(self, prof: &ExecutionProfile<'_>) -> Trace {
+        let end = self.now_s();
+        let t_enq = self.enqueued_s.unwrap_or(0.0).min(end);
+        let t_claim = self.claimed_s.unwrap_or(t_enq).max(t_enq).min(end);
+        let t_build = self.build_start_s.unwrap_or(t_claim).max(t_claim).min(end);
+        let t_exec = self.exec_start_s.unwrap_or(t_build).max(t_build).min(end);
+
+        let mut spans = vec![
+            Span { phase: Phase::Admission, start_s: 0.0, end_s: t_enq, sim_seconds: 0.0 },
+            Span { phase: Phase::Queue, start_s: t_enq, end_s: t_claim, sim_seconds: 0.0 },
+            Span { phase: Phase::Claim, start_s: t_claim, end_s: t_build, sim_seconds: 0.0 },
+        ];
+        let residency = if prof.warm {
+            Phase::ResidencyWarmHit
+        } else {
+            Phase::ResidencyEstablish
+        };
+        spans.push(Span {
+            phase: residency,
+            start_s: t_build,
+            end_s: t_exec,
+            sim_seconds: (prof.setup_sim_seconds - prof.warm_discount).max(0.0),
+        });
+        // Cycles laid contiguously from exec start; the measured per-cycle
+        // walls sum to at most the solve wall, so the cursor stays <= end.
+        let mut cursor = t_exec;
+        for (i, (&sim, &wall)) in prof
+            .cycle_sim_seconds
+            .iter()
+            .zip(prof.cycle_wall_seconds.iter())
+            .enumerate()
+        {
+            let next = (cursor + wall).min(end);
+            spans.push(Span { phase: Phase::Cycle(i), start_s: cursor, end_s: next, sim_seconds: sim });
+            cursor = next;
+        }
+        // The verify/teardown tail absorbs whatever wall remains, keeping
+        // the chain gap-free through `end`.
+        spans.push(Span { phase: Phase::VerifyF64, start_s: cursor, end_s: end, sim_seconds: 0.0 });
+        if prof.fold_k >= 2 {
+            spans.push(Span {
+                phase: Phase::FoldMember,
+                start_s: t_claim,
+                end_s: end,
+                sim_seconds: 0.0,
+            });
+        }
+
+        Trace {
+            trace_id: self.id,
+            job_id: self.job_id,
+            matrix_id: self.matrix_id,
+            status: TraceStatus::Completed,
+            total_s: end,
+            sim_seconds: prof.booked_sim_seconds,
+            warm: prof.warm,
+            fold_k: prof.fold_k,
+            spans,
+            audit: self.audit,
+        }
+    }
+
+    /// Finalize a request that errored while executing.
+    pub fn finish_failed(mut self, error: &str) -> Trace {
+        self.audit.events.push(format!("failed: {error}"));
+        self.finish_terminal(TraceStatus::Failed)
+    }
+
+    /// Finalize a request the scheduler refused under load-shedding.
+    pub fn finish_shed(mut self, reason: &str) -> Trace {
+        self.audit.events.push(format!("shed: {reason}"));
+        self.finish_terminal(TraceStatus::Shed)
+    }
+
+    /// Finalize a request rejected at the service door (backpressure).
+    pub fn finish_rejected(mut self, reason: &str) -> Trace {
+        self.audit.events.push(format!("rejected: {reason}"));
+        self.finish_terminal(TraceStatus::Rejected)
+    }
+
+    fn finish_terminal(self, status: TraceStatus) -> Trace {
+        let end = self.now_s();
+        let mut spans = Vec::new();
+        let mut cursor = 0.0;
+        let mut extend = |phase: Phase, upto: Option<f64>, cursor: &mut f64| {
+            if let Some(t) = upto {
+                let t = t.max(*cursor).min(end);
+                spans.push(Span { phase, start_s: *cursor, end_s: t, sim_seconds: 0.0 });
+                *cursor = t;
+            }
+        };
+        // Chain through whichever boundaries were reached; the final phase
+        // reached runs to `end` so terminal traces also cover their life.
+        extend(Phase::Admission, Some(self.enqueued_s.unwrap_or(end)), &mut cursor);
+        extend(Phase::Queue, self.enqueued_s.map(|_| self.claimed_s.unwrap_or(end)), &mut cursor);
+        extend(Phase::Claim, self.claimed_s.map(|_| end), &mut cursor);
+        Trace {
+            trace_id: self.id,
+            job_id: self.job_id,
+            matrix_id: self.matrix_id,
+            status,
+            total_s: end,
+            sim_seconds: 0.0,
+            warm: false,
+            fold_k: 0,
+            spans,
+            audit: self.audit,
+        }
+    }
+}
+
+/// A finalized, immutable request trace.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub trace_id: TraceId,
+    pub job_id: u64,
+    pub matrix_id: u64,
+    pub status: TraceStatus,
+    /// End-to-end wall seconds, submission to finalization.
+    pub total_s: f64,
+    /// Booked modeled seconds (post warm-discount; per-RHS share in folds).
+    pub sim_seconds: f64,
+    pub warm: bool,
+    /// Fold width executed under (0 for terminal, 1 solo, k >= 2 folded).
+    pub fold_k: usize,
+    pub spans: Vec<Span>,
+    pub audit: PlanAudit,
+}
+
+impl Trace {
+    /// Sum of modeled seconds over execution spans (residency + cycles);
+    /// reconciles against `sim_seconds` to f64 round-off.
+    pub fn execution_sim_total(&self) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.phase.is_execution())
+            .map(|s| s.sim_seconds)
+            .sum()
+    }
+
+    /// Fraction of `total_s` covered by the primary phase chain (everything
+    /// except the overlay `FoldMember` span).
+    pub fn coverage(&self) -> f64 {
+        if self.total_s <= 0.0 {
+            return 1.0;
+        }
+        let covered: f64 = self
+            .spans
+            .iter()
+            .filter(|s| s.phase != Phase::FoldMember)
+            .map(Span::wall_seconds)
+            .sum();
+        covered / self.total_s
+    }
+
+    /// One-line digest for `trace --list`.
+    pub fn one_line(&self) -> String {
+        format!(
+            "{:>10}  job-{:<5} {:>9}  total={:>9.3}ms sim={:.6}s warm={} fold_k={} spans={}",
+            self.trace_id,
+            self.job_id,
+            self.status.name(),
+            self.total_s * 1e3,
+            self.sim_seconds,
+            self.warm,
+            self.fold_k,
+            self.spans.len()
+        )
+    }
+
+    /// Serialize this trace as a JSON object.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(1024);
+        self.write_json(&mut out);
+        out
+    }
+
+    fn write_json(&self, out: &mut String) {
+        use std::fmt::Write;
+        // floats use `{}` (shortest round-trip form) so a parsed dump
+        // preserves the reconciliation invariant bit-for-bit
+        let _ = write!(
+            out,
+            "{{\"trace_id\": {}, \"job_id\": {}, \"matrix_id\": \"mat-{:016x}\", \
+             \"status\": \"{}\", \"total_s\": {}, \"sim_seconds\": {}, \
+             \"warm\": {}, \"fold_k\": {}, \"spans\": [",
+            self.trace_id.0,
+            self.job_id,
+            self.matrix_id,
+            self.status.name(),
+            self.total_s,
+            self.sim_seconds,
+            self.warm,
+            self.fold_k
+        );
+        for (i, s) in self.spans.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{{\"phase\": \"{}\"", s.phase.name());
+            if let Phase::Cycle(idx) = s.phase {
+                let _ = write!(out, ", \"index\": {idx}");
+            }
+            let _ = write!(
+                out,
+                ", \"start_s\": {}, \"end_s\": {}, \"sim_seconds\": {}}}",
+                s.start_s, s.end_s, s.sim_seconds
+            );
+        }
+        out.push_str("], \"audit\": {");
+        let a = &self.audit;
+        match &a.requested {
+            Some(p) => {
+                let _ = write!(out, "\"requested\": \"{}\", ", json::escape(p));
+            }
+            None => out.push_str("\"requested\": null, "),
+        }
+        out.push_str("\"candidates\": [");
+        for (i, c) in a.candidates.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(
+                out,
+                "{{\"plan\": \"{}\", \"predicted_seconds\": {}, \"admitted\": {}}}",
+                json::escape(&c.plan),
+                c.predicted_seconds,
+                c.admitted
+            );
+        }
+        let _ = write!(
+            out,
+            "], \"chosen\": \"{}\", \"predicted_seconds\": {}, \
+             \"predicted_cycles\": {}, \"coeff_at_plan\": {}, \"coeff_after\": {}, \
+             \"measured_seconds\": {}, \"warm_discount\": {}, \"events\": [",
+            json::escape(&a.chosen),
+            a.predicted_seconds,
+            a.predicted_cycles,
+            a.coeff_at_plan,
+            a.coeff_after,
+            a.measured_seconds,
+            a.warm_discount
+        );
+        for (i, e) in a.events.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "\"{}\"", json::escape(e));
+        }
+        out.push_str("]}}");
+    }
+
+    /// Parse one trace object back from its JSON form.
+    pub fn from_json(v: &Value) -> Result<Trace> {
+        let matrix_raw = v.req_str("matrix_id")?;
+        let matrix_id = matrix_raw
+            .strip_prefix("mat-")
+            .and_then(|h| u64::from_str_radix(h, 16).ok())
+            .with_context(|| format!("bad matrix_id `{matrix_raw}`"))?;
+        let mut spans = Vec::new();
+        for sv in v.req("spans")?.as_array().context("spans is not an array")? {
+            let index = sv.get("index").and_then(Value::as_u64);
+            spans.push(Span {
+                phase: Phase::from_parts(sv.req_str("phase")?, index)?,
+                start_s: sv.req_f64("start_s")?,
+                end_s: sv.req_f64("end_s")?,
+                sim_seconds: sv.req_f64("sim_seconds")?,
+            });
+        }
+        let av = v.req("audit")?;
+        let mut audit = PlanAudit {
+            requested: av.get("requested").and_then(Value::as_str).map(str::to_string),
+            chosen: av.req_str("chosen")?.to_string(),
+            predicted_seconds: av.req_f64("predicted_seconds")?,
+            predicted_cycles: av.req_u64("predicted_cycles")? as usize,
+            coeff_at_plan: av.req_f64("coeff_at_plan")?,
+            coeff_after: av.req_f64("coeff_after")?,
+            measured_seconds: av.req_f64("measured_seconds")?,
+            warm_discount: av.req_f64("warm_discount")?,
+            ..PlanAudit::default()
+        };
+        for cv in av.req("candidates")?.as_array().context("candidates is not an array")? {
+            audit.candidates.push(CandidateAudit {
+                plan: cv.req_str("plan")?.to_string(),
+                predicted_seconds: cv.req_f64("predicted_seconds")?,
+                admitted: cv.req("admitted")?.as_bool().context("admitted not bool")?,
+            });
+        }
+        for ev in av.req("events")?.as_array().context("events is not an array")? {
+            audit.events.push(ev.as_str().context("event not a string")?.to_string());
+        }
+        Ok(Trace {
+            trace_id: TraceId(v.req_u64("trace_id")?),
+            job_id: v.req_u64("job_id")?,
+            matrix_id,
+            status: TraceStatus::from_name(v.req_str("status")?)?,
+            total_s: v.req_f64("total_s")?,
+            sim_seconds: v.req_f64("sim_seconds")?,
+            warm: v.req("warm")?.as_bool().context("warm not bool")?,
+            fold_k: v.req_u64("fold_k")? as usize,
+            spans,
+            audit,
+        })
+    }
+
+    /// Parse a full `--trace-json` dump (`{"traces": [...]}`).
+    pub fn parse_dump(text: &str) -> Result<Vec<Trace>> {
+        let root = json::parse(text).context("trace dump is not valid JSON")?;
+        let arr = root
+            .req("traces")?
+            .as_array()
+            .context("`traces` is not an array")?;
+        arr.iter().map(Trace::from_json).collect()
+    }
+
+    /// Pretty-print this trace as an ASCII waterfall.
+    pub fn render_waterfall(&self) -> String {
+        use std::fmt::Write;
+        const WIDTH: usize = 48;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{} job-{} mat-{:016x}  [{}]  total={:.3}ms  booked_sim={:.6}s  warm={} fold_k={}",
+            self.trace_id,
+            self.job_id,
+            self.matrix_id,
+            self.status.name(),
+            self.total_s * 1e3,
+            self.sim_seconds,
+            self.warm,
+            self.fold_k
+        );
+        let scale = if self.total_s > 0.0 { WIDTH as f64 / self.total_s } else { 0.0 };
+        for s in &self.spans {
+            let lead = (s.start_s * scale).round() as usize;
+            let mut bar = ((s.end_s - s.start_s) * scale).round() as usize;
+            if bar == 0 && s.end_s > s.start_s {
+                bar = 1;
+            }
+            let lead = lead.min(WIDTH);
+            let bar = bar.min(WIDTH - lead);
+            let label = match s.phase {
+                Phase::Cycle(i) => format!("cycle[{i}]"),
+                p => p.name().to_string(),
+            };
+            let _ = writeln!(
+                out,
+                "  {:<20} |{}{}{}| {:>9.3}ms  sim={:.6}s",
+                label,
+                " ".repeat(lead),
+                "#".repeat(bar),
+                " ".repeat(WIDTH - lead - bar),
+                s.wall_seconds() * 1e3,
+                s.sim_seconds
+            );
+        }
+        let a = &self.audit;
+        let _ = writeln!(
+            out,
+            "  plan: {}  (requested: {})",
+            a.chosen,
+            a.requested.as_deref().unwrap_or("auto")
+        );
+        let _ = writeln!(
+            out,
+            "  predicted={:.6}s measured={:.6}s cycles={}  coeff {:.4} -> {:.4}  warm_discount={:.6}s",
+            a.predicted_seconds,
+            a.measured_seconds,
+            a.predicted_cycles,
+            a.coeff_at_plan,
+            a.coeff_after,
+            a.warm_discount
+        );
+        if !a.candidates.is_empty() {
+            let _ = writeln!(out, "  candidates considered:");
+            for c in &a.candidates {
+                let _ = writeln!(
+                    out,
+                    "    {:<60} predicted={:.6}s admitted={}",
+                    c.plan, c.predicted_seconds, c.admitted
+                );
+            }
+        }
+        for e in &a.events {
+            let _ = writeln!(out, "  event: {e}");
+        }
+        out
+    }
+}
+
+/// Bounded per-service trace ring buffer.  Finalized traces are pushed under
+/// a short mutex; when full, the oldest trace is dropped (and counted).
+#[derive(Debug)]
+pub struct Tracer {
+    capacity: usize,
+    next_id: AtomicU64,
+    dropped: AtomicU64,
+    ring: Mutex<VecDeque<Trace>>,
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            next_id: AtomicU64::new(1),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Mint the next trace id (submission order).
+    pub fn mint(&self) -> TraceId {
+        TraceId(self.next_id.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Record a finalized trace, evicting the oldest past capacity.
+    pub fn record(&self, trace: Trace) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(trace);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Traces evicted by the ring bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the retained traces, oldest first.
+    pub fn snapshot(&self) -> Vec<Trace> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Serialize the whole ring as a `--trace-json` dump.
+    pub fn to_json(&self) -> String {
+        let ring = self.ring.lock().unwrap();
+        let mut out = String::with_capacity(1024 * ring.len().max(1));
+        out.push_str("{\"traces\": [\n");
+        for (i, t) in ring.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            t.write_json(&mut out);
+        }
+        use std::fmt::Write;
+        let _ = write!(
+            out,
+            "\n], \"dropped\": {}, \"capacity\": {}}}\n",
+            self.dropped.load(Ordering::Relaxed),
+            self.capacity
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile<'a>(sims: &'a [f64], walls: &'a [f64], warm: bool) -> ExecutionProfile<'a> {
+        let setup = 0.004;
+        let discount = if warm { 0.003 } else { 0.0 };
+        ExecutionProfile {
+            warm,
+            warm_discount: discount,
+            setup_sim_seconds: setup,
+            cycle_sim_seconds: sims,
+            cycle_wall_seconds: walls,
+            booked_sim_seconds: (setup - discount) + sims.iter().sum::<f64>(),
+            fold_k: 1,
+        }
+    }
+
+    fn finished(warm: bool) -> Trace {
+        let mut rt = RequestTrace::begin(TraceId(7), 3, 0xdead_beef);
+        rt.mark_enqueued();
+        rt.mark_claimed();
+        rt.mark_build_start();
+        rt.mark_exec_start();
+        rt.audit.chosen = "gmatrix dense".into();
+        let sims = [0.001, 0.0012, 0.0009];
+        let walls = [1e-6, 1e-6, 1e-6];
+        rt.finish_completed(&profile(&sims, &walls, warm))
+    }
+
+    #[test]
+    fn completed_trace_reconciles_and_covers() {
+        let t = finished(false);
+        assert_eq!(t.status, TraceStatus::Completed);
+        let rel = (t.execution_sim_total() - t.sim_seconds).abs() / t.sim_seconds;
+        assert!(rel < 1e-12, "rel {rel}");
+        assert!(t.coverage() > 0.999, "coverage {}", t.coverage());
+        // Primary chain is contiguous and non-overlapping.
+        let mut cursor = 0.0;
+        for s in t.spans.iter().filter(|s| s.phase != Phase::FoldMember) {
+            assert!((s.start_s - cursor).abs() < 1e-12);
+            assert!(s.end_s >= s.start_s);
+            cursor = s.end_s;
+        }
+        assert!((cursor - t.total_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warm_trace_prices_discounted_residency() {
+        let t = finished(true);
+        let res = t
+            .spans
+            .iter()
+            .find(|s| s.phase == Phase::ResidencyWarmHit)
+            .expect("warm-hit span");
+        assert!((res.sim_seconds - 0.001).abs() < 1e-12);
+        assert!(t.spans.iter().all(|s| s.phase != Phase::ResidencyEstablish));
+    }
+
+    #[test]
+    fn terminal_traces_have_spans_and_status() {
+        let mut rt = RequestTrace::begin(TraceId(1), 9, 1);
+        rt.mark_enqueued();
+        let t = rt.finish_shed("deadline unmeetable");
+        assert_eq!(t.status, TraceStatus::Shed);
+        assert!(t.spans.iter().any(|s| s.phase == Phase::Queue));
+        assert!(t.audit.events.iter().any(|e| e.contains("deadline")));
+        assert!(t.coverage() > 0.999);
+
+        let rt = RequestTrace::begin(TraceId(2), 10, 1);
+        let t = rt.finish_rejected("queue full");
+        assert_eq!(t.status, TraceStatus::Rejected);
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!(t.spans[0].phase, Phase::Admission);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let mut t = finished(true);
+        t.audit.requested = Some("gmatrix".into());
+        t.audit.candidates.push(CandidateAudit {
+            plan: "gpuRvcl csr dev:v100".into(),
+            predicted_seconds: 0.012,
+            admitted: true,
+        });
+        t.audit.events.push("rerouted: residency holder \"dev:0\"".into());
+        let doc = format!("{{\"traces\": [{}]}}", t.to_json());
+        let back = Trace::parse_dump(&doc).unwrap();
+        assert_eq!(back.len(), 1);
+        let b = &back[0];
+        assert_eq!(b.trace_id, t.trace_id);
+        assert_eq!(b.status, t.status);
+        assert_eq!(b.spans.len(), t.spans.len());
+        assert_eq!(b.audit.requested.as_deref(), Some("gmatrix"));
+        assert_eq!(b.audit.candidates.len(), 1);
+        assert_eq!(b.audit.events.last().unwrap(), t.audit.events.last().unwrap());
+        assert!((b.execution_sim_total() - t.execution_sim_total()).abs() < 1e-9);
+        for (bs, ts) in b.spans.iter().zip(t.spans.iter()) {
+            assert_eq!(bs.phase, ts.phase);
+            assert!((bs.sim_seconds - ts.sim_seconds).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ring_buffer_is_bounded() {
+        let tracer = Tracer::new(3);
+        for i in 0..5 {
+            let rt = RequestTrace::begin(tracer.mint(), i, 0);
+            tracer.record(rt.finish_rejected("x"));
+        }
+        assert_eq!(tracer.len(), 3);
+        assert_eq!(tracer.dropped(), 2);
+        let snap = tracer.snapshot();
+        assert_eq!(snap[0].job_id, 2);
+        assert_eq!(snap[2].job_id, 4);
+        assert!(Trace::parse_dump(&tracer.to_json()).unwrap().len() == 3);
+    }
+
+    #[test]
+    fn waterfall_renders() {
+        let w = finished(true).render_waterfall();
+        assert!(w.contains("residency-warm-hit"));
+        assert!(w.contains("cycle[0]"));
+        assert!(w.contains("plan: gmatrix dense"));
+    }
+}

@@ -3,11 +3,13 @@
 //! The build is fully offline and only the `xla` crate's vendored dependency
 //! closure exists, so the usual ecosystem helpers are implemented here
 //! instead of pulled in: a seeded PRNG ([`rng`]), a property-based test
-//! driver ([`check`]), a CLI flag parser ([`cli`]), and test temp-dir
-//! helpers ([`tempdir`]).
+//! driver ([`check`]), a CLI flag parser ([`cli`]), a serde-free JSON
+//! reader for the trace tooling ([`json`]), and test temp-dir helpers
+//! ([`tempdir`]).
 
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod json;
 pub mod rng;
 pub mod tempdir;

@@ -593,6 +593,7 @@ fn prop_steal_takes_exactly_the_admissible_lone_jobs() {
             Arc::new(Metrics::new()),
             BatcherConfig { max_batch: 8, max_age: std::time::Duration::ZERO },
             64,
+            Arc::new(gmres_rs::trace::Tracer::new(64)),
         );
 
         let mut expected_steals = Vec::new();
@@ -655,6 +656,11 @@ fn prop_steal_takes_exactly_the_admissible_lone_jobs() {
                         downgraded: false,
                         submitted_at: std::time::Instant::now(),
                         deadline: None,
+                        trace: gmres_rs::trace::RequestTrace::begin(
+                            gmres_rs::trace::TraceId(j as u64),
+                            j as u64,
+                            matrix.content_id().0,
+                        ),
                         reply: tx,
                     })
                     .unwrap();

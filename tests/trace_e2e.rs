@@ -1,0 +1,322 @@
+//! End-to-end trace invariants through the running service: exactly one
+//! trace per finished request, a gap-free primary span chain covering the
+//! request's whole life, execution spans that reconcile against the booked
+//! modeled seconds, warm hits priced at the planner discount, fold
+//! membership overlays, terminal traces for shed requests, and the bounded
+//! trace ring.
+
+use std::time::Duration;
+
+use gmres_rs::backend::Policy;
+use gmres_rs::coordinator::batcher::BatcherConfig;
+use gmres_rs::coordinator::{MatrixSpec, ServiceConfig, SolveService};
+use gmres_rs::trace::{Phase, Trace, TraceStatus};
+
+/// Relative reconciliation between a trace's execution spans and its
+/// booked modeled seconds (the ISSUE's 1e-9 acceptance bound).
+fn assert_reconciles(t: &Trace) {
+    let spans = t.execution_sim_total();
+    let rel = (spans - t.sim_seconds).abs() / t.sim_seconds.max(f64::MIN_POSITIVE);
+    assert!(
+        rel < 1e-9,
+        "{}: execution spans {spans} vs booked {} (rel {rel})",
+        t.trace_id,
+        t.sim_seconds
+    );
+}
+
+/// The primary chain (everything but the `FoldMember` overlay) must tile
+/// `[0, total_s]` without gaps or overlaps, in order.
+fn assert_contiguous_chain(t: &Trace) {
+    let chain: Vec<_> = t.spans.iter().filter(|s| s.phase != Phase::FoldMember).collect();
+    assert!(!chain.is_empty(), "{}: no primary spans", t.trace_id);
+    assert_eq!(chain[0].start_s, 0.0, "{}: chain must start at submission", t.trace_id);
+    for w in chain.windows(2) {
+        assert_eq!(
+            w[0].end_s, w[1].start_s,
+            "{}: gap/overlap between {} and {}",
+            t.trace_id,
+            w[0].phase.name(),
+            w[1].phase.name()
+        );
+    }
+    for s in &chain {
+        assert!(s.end_s >= s.start_s, "{}: negative span {}", t.trace_id, s.phase.name());
+    }
+    let last = chain.last().unwrap();
+    assert!(
+        (last.end_s - t.total_s).abs() < 1e-12,
+        "{}: chain ends at {} but the trace ends at {}",
+        t.trace_id,
+        last.end_s,
+        t.total_s
+    );
+    assert!(t.coverage() > 0.99, "{}: coverage {}", t.trace_id, t.coverage());
+}
+
+/// Three waves over one session handle: every completed request gets
+/// exactly one trace, every trace covers the request's whole latency with
+/// a contiguous span chain, execution spans reconcile against the booked
+/// share, and warm waves carry warm-hit residency spans priced at exactly
+/// the planner's warm setup discount below the cold establishment span.
+#[test]
+fn warm_waves_trace_every_request_and_reconcile() {
+    const WAVES: usize = 3;
+    const PER_WAVE: usize = 2;
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    let handle = svc.register(MatrixSpec::Table1 { n: 96, seed: 3 });
+    let mut outcomes = Vec::new();
+    for _ in 0..WAVES {
+        for _ in 0..PER_WAVE {
+            // blocking submits: no folding, so warm hits are the only
+            // residency effect in play
+            let out = handle
+                .solve()
+                .m(8)
+                .tol(1e-8)
+                .max_restarts(100)
+                .policy(Policy::GmatrixLike)
+                .submit()
+                .unwrap();
+            assert!(out.report.converged);
+            outcomes.push(out);
+        }
+    }
+
+    let traces = svc.tracer().snapshot();
+    assert_eq!(traces.len(), WAVES * PER_WAVE, "exactly one trace per completed request");
+    assert_eq!(svc.tracer().dropped(), 0);
+    let mut ids: Vec<_> = traces.iter().map(|t| t.trace_id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), traces.len(), "trace ids must be unique");
+
+    let mid = handle.spec().content_id();
+    for (t, out) in traces.iter().zip(&outcomes) {
+        assert_eq!(t.status, TraceStatus::Completed);
+        assert_eq!(t.job_id, out.id.0, "traces are recorded in completion order here");
+        assert_eq!(t.matrix_id, mid.0);
+        assert_contiguous_chain(t);
+        assert_reconciles(t);
+        assert!(
+            (t.sim_seconds - out.report.sim_seconds).abs() <= 1e-12,
+            "booked share must match the outcome"
+        );
+        // plan audit rode along
+        assert!(!t.audit.chosen.is_empty());
+        assert_eq!(t.audit.requested.as_deref(), Some(Policy::GmatrixLike.name()));
+        assert!(t.audit.predicted_seconds > 0.0);
+        assert!(t.audit.measured_seconds > 0.0);
+    }
+
+    // wave 1 establishes residency cold; every later request hits it warm
+    let cold = &traces[0];
+    assert!(!cold.warm);
+    let cold_res = cold
+        .spans
+        .iter()
+        .find(|s| s.phase == Phase::ResidencyEstablish)
+        .expect("cold trace must carry an establishment span");
+    let out0 = &outcomes[0];
+    let discount = svc.router().planner().warm_setup_discount(
+        Policy::GmatrixLike,
+        &handle.spec().shape(),
+        out0.plan.m,
+        out0.plan.placement,
+        out0.plan.precision,
+    );
+    assert!(discount > 0.0);
+    for t in &traces[1..] {
+        assert!(t.warm, "{}: every post-establishment request must hit warm", t.trace_id);
+        let warm_res = t
+            .spans
+            .iter()
+            .find(|s| s.phase == Phase::ResidencyWarmHit)
+            .expect("warm trace must carry a warm-hit span");
+        // priced at the warm discount: the warm span books exactly the
+        // cold establishment minus the planner's discount
+        let expect = (cold_res.sim_seconds - discount).max(0.0);
+        assert!(
+            (warm_res.sim_seconds - expect).abs() <= 1e-9 * cold_res.sim_seconds.max(1.0),
+            "{}: warm residency booked {} expected {expect}",
+            t.trace_id,
+            warm_res.sim_seconds
+        );
+        assert!((t.audit.warm_discount - discount).abs() <= 1e-12 * discount.max(1.0));
+        // calibration saw the RAW measurement: booked + discount
+        assert!(
+            (t.audit.measured_seconds - (t.sim_seconds + discount)).abs() <= 1e-9,
+            "{}: audit must reconstruct the pre-discount measurement",
+            t.trace_id
+        );
+    }
+    svc.shutdown();
+}
+
+/// A same-handle burst that folds into one block solve: every member trace
+/// carries the `FoldMember` overlay and the shared fold width, records the
+/// fold decision as an event, and still reconciles its own booked share.
+#[test]
+fn fold_member_traces_carry_overlay_and_reconcile() {
+    const K: usize = 3;
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        batcher: BatcherConfig { max_batch: K, max_age: Duration::from_millis(500) },
+        ..Default::default()
+    });
+    let handle = svc.register(MatrixSpec::Table1 { n: 96, seed: 5 });
+    let receivers: Vec<_> = (0..K)
+        .map(|i| {
+            handle
+                .solve_rhs(gmres_rs::linalg::generators::random_vector(96, 70 + i as u64))
+                .m(8)
+                .tol(1e-8)
+                .max_restarts(200)
+                .policy(Policy::GmatrixLike)
+                .submit_nowait()
+                .expect("submit")
+        })
+        .collect();
+    for rx in receivers {
+        assert!(rx.recv().expect("reply").expect("solve").report.converged);
+        svc.finish();
+    }
+    assert_eq!(svc.metrics().folds(), 1, "{}", svc.metrics().render());
+
+    let traces = svc.tracer().snapshot();
+    assert_eq!(traces.len(), K, "one trace per fold member");
+    for t in &traces {
+        assert_eq!(t.status, TraceStatus::Completed);
+        assert_eq!(t.fold_k, K);
+        let overlay = t
+            .spans
+            .iter()
+            .find(|s| s.phase == Phase::FoldMember)
+            .expect("fold member must carry the overlay span");
+        assert!(overlay.end_s > overlay.start_s, "the overlay spans the block solve");
+        assert!(
+            t.audit.events.iter().any(|e| e.starts_with("folded: k=3")),
+            "fold decision must be recorded: {:?}",
+            t.audit.events
+        );
+        assert_contiguous_chain(t);
+        assert_reconciles(t);
+    }
+    svc.shutdown();
+}
+
+/// Shed requests get terminal traces too: status `Shed`, a recorded
+/// reason, zero booked seconds, and full coverage of their short life —
+/// completed + shed traces together account for the entire flood.
+#[test]
+fn shed_requests_get_terminal_traces() {
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    let handle = svc.register(MatrixSpec::Table1 { n: 600, seed: 9 });
+    let total = 12;
+    let mut receivers = Vec::new();
+    for _ in 0..total {
+        match handle
+            .solve()
+            .m(8)
+            .tol(1e-8)
+            .max_restarts(100)
+            .policy(Policy::GmatrixLike)
+            .deadline(Duration::from_micros(200))
+            .submit_nowait()
+        {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => {}
+        }
+    }
+    let admitted = receivers.len();
+    assert!(admitted < total, "a 200us deadline cannot absorb a 12-deep flood");
+    for rx in receivers {
+        assert!(rx.recv().expect("reply").expect("admitted job failed").report.converged);
+        svc.finish();
+    }
+
+    let traces = svc.tracer().snapshot();
+    assert_eq!(traces.len(), total, "every request — completed or shed — leaves a trace");
+    let shed: Vec<_> = traces.iter().filter(|t| t.status == TraceStatus::Shed).collect();
+    let done = traces.iter().filter(|t| t.status == TraceStatus::Completed).count();
+    assert_eq!(shed.len() as u64, svc.metrics().sheds());
+    assert_eq!(done, admitted);
+    for t in &shed {
+        assert_eq!(t.sim_seconds, 0.0, "a shed request books nothing");
+        assert_eq!(t.fold_k, 0);
+        assert!(
+            t.audit.events.iter().any(|e| e.starts_with("shed: ")),
+            "shed reason must be recorded: {:?}",
+            t.audit.events
+        );
+        assert_contiguous_chain(t);
+    }
+    svc.shutdown();
+}
+
+/// The trace ring is bounded: past capacity the oldest traces are dropped
+/// and counted, and the survivors are the most recent requests.
+#[test]
+fn trace_ring_is_bounded_and_counts_drops() {
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        trace_capacity: 4,
+        ..Default::default()
+    });
+    let handle = svc.register(MatrixSpec::Table1 { n: 48, seed: 7 });
+    let mut last_jobs = Vec::new();
+    for _ in 0..8 {
+        let out = handle
+            .solve()
+            .m(8)
+            .tol(1e-8)
+            .max_restarts(100)
+            .policy(Policy::SerialNative)
+            .submit()
+            .unwrap();
+        assert!(out.report.converged);
+        last_jobs.push(out.id.0);
+    }
+    assert_eq!(svc.tracer().len(), 4);
+    assert_eq!(svc.tracer().dropped(), 4);
+    let kept: Vec<u64> = svc.tracer().snapshot().iter().map(|t| t.job_id).collect();
+    assert_eq!(kept, &last_jobs[4..], "the ring keeps the newest traces");
+    svc.shutdown();
+}
+
+/// JSON round-trip through the CLI dump format: `Tracer::to_json` parses
+/// back via `Trace::parse_dump` with statuses, spans, audits and the
+/// reconciliation invariant intact.
+#[test]
+fn trace_dump_round_trips_through_json() {
+    let svc = SolveService::start(ServiceConfig { cpu_workers: 1, ..Default::default() });
+    let handle = svc.register(MatrixSpec::Table1 { n: 96, seed: 11 });
+    for _ in 0..2 {
+        assert!(handle
+            .solve()
+            .m(8)
+            .tol(1e-8)
+            .max_restarts(100)
+            .policy(Policy::GmatrixLike)
+            .submit()
+            .unwrap()
+            .report
+            .converged);
+    }
+    let dump = svc.tracer().to_json();
+    let parsed = Trace::parse_dump(&dump).expect("dump must parse");
+    let live = svc.tracer().snapshot();
+    assert_eq!(parsed.len(), live.len());
+    for (p, l) in parsed.iter().zip(&live) {
+        assert_eq!(p.trace_id, l.trace_id);
+        assert_eq!(p.status, l.status);
+        assert_eq!(p.spans.len(), l.spans.len());
+        assert_eq!(p.audit.events, l.audit.events);
+        assert!((p.sim_seconds - l.sim_seconds).abs() < 1e-12);
+        assert_contiguous_chain(p);
+        assert_reconciles(p);
+        assert!(!p.render_waterfall().is_empty());
+        assert!(!p.one_line().is_empty());
+    }
+    svc.shutdown();
+}
