@@ -121,4 +121,35 @@ test -s "$CALIB" || { echo "calibration snapshot not written"; exit 1; }
     --fleet 840m,v100,host --calib-file "$CALIB"
 rm -f "$CALIB"
 
+echo "==> transport smoke"
+# the same sharded solve over OS-process shard workers must match the
+# in-process transport bit for bit; a process-mode serve must land
+# measured link spans in the trace ring and waterfall; and the committed
+# transport bench snapshot must regenerate with calibrated links
+IN_OUT=$(./target/release/gmres-rs solve --n 600 --m 10 --policy gmatrix \
+    --fleet 840m=2m,v100=2m --transport in-process)
+PROC_OUT=$(./target/release/gmres-rs solve --n 600 --m 10 --policy gmatrix \
+    --fleet 840m=2m,v100=2m --transport process)
+IN_BITS=$(echo "$IN_OUT" | grep -Eo 'resnorm_bits=0x[0-9a-f]+')
+PROC_BITS=$(echo "$PROC_OUT" | grep -Eo 'resnorm_bits=0x[0-9a-f]+')
+test -n "$IN_BITS" || { echo "transport smoke: no resnorm_bits token"; exit 1; }
+[ "$IN_BITS" = "$PROC_BITS" ] \
+    || { echo "transport smoke: residual bits diverged: $IN_BITS vs $PROC_BITS"; exit 1; }
+TRACE=$(mktemp /tmp/gmres-transport.XXXXXX)
+./target/release/gmres-rs serve --requests 2 --sizes 600 --m 8 \
+    --policy gmatrix --fleet 840m=2m,v100=2m --transport process \
+    --trace-json "$TRACE"
+grep -q '"phase": "link"' "$TRACE" \
+    || { echo "transport smoke: no link span in a process-mode serve"; exit 1; }
+./target/release/gmres-rs trace --file "$TRACE" | grep -q 'link\[' \
+    || { echo "transport smoke: waterfall shows no link lane"; exit 1; }
+rm -f "$TRACE"
+./target/release/gmres-rs transport-bench --out BENCH_transport.json
+test -s BENCH_transport.json \
+    || { echo "transport smoke: BENCH_transport.json not written"; exit 1; }
+grep -q '"latency_s"' BENCH_transport.json \
+    || { echo "transport smoke: bench has no calibrated links"; exit 1; }
+grep -q '"bit_identical": true' BENCH_transport.json \
+    || { echo "transport smoke: bench lost bit identity"; exit 1; }
+
 echo "CI OK"

@@ -162,6 +162,14 @@ pub struct Metrics {
     cache_misses: AtomicU64,
     /// Residencies dropped by LRU memory pressure.
     cache_evictions: AtomicU64,
+    /// Real wire bytes moved by the process transport (frame prefixes
+    /// included, both directions).
+    link_bytes: AtomicU64,
+    /// Process-transport round trips completed (request + reply).
+    link_round_trips: AtomicU64,
+    /// Shard-worker processes respawned after crashes or failed health
+    /// checks (gauge mirroring the worker pool's lifetime count).
+    worker_restarts: AtomicU64,
     /// Completed-solve latency distribution (fixed memory; lock-free).
     latency: Histogram,
     /// Queue-wait distribution (submission to worker claim).
@@ -271,6 +279,20 @@ impl Metrics {
         self.cache_evictions.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record process-transport wire traffic: `bytes` on the wire (both
+    /// directions, frame prefixes included) across `round_trips`
+    /// request/reply exchanges.
+    pub fn on_link_traffic(&self, bytes: u64, round_trips: u64) {
+        self.link_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.link_round_trips.fetch_add(round_trips, Ordering::Relaxed);
+    }
+
+    /// Mirror the worker pool's lifetime restart count.  `fetch_max`
+    /// keeps the gauge monotone even when updates race.
+    pub fn set_worker_restarts(&self, n: u64) {
+        self.worker_restarts.fetch_max(n, Ordering::Relaxed);
+    }
+
     /// Update one device's work-queue depth gauge.  A zero depth removes
     /// the entry: a drained queue is indistinguishable from a device that
     /// never queued, so `render_devices` can't report phantom backlog.
@@ -301,6 +323,18 @@ impl Metrics {
 
     pub fn cache_evictions(&self) -> u64 {
         self.cache_evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn link_bytes(&self) -> u64 {
+        self.link_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn link_round_trips(&self) -> u64 {
+        self.link_round_trips.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
     }
 
     pub fn folds(&self) -> u64 {
@@ -369,6 +403,14 @@ impl Metrics {
             self.cache_misses(),
             self.cache_evictions()
         ));
+        if self.link_bytes() > 0 || self.link_round_trips() > 0 || self.worker_restarts() > 0 {
+            out.push_str(&format!(
+                "transport: link_bytes={}B round_trips={} worker_restarts={}\n",
+                self.link_bytes(),
+                self.link_round_trips(),
+                self.worker_restarts()
+            ));
+        }
         out
     }
 
@@ -426,6 +468,9 @@ impl Metrics {
         counter("gmres_cache_hits_total", "Residency-cache hits (matrix already device-resident)", self.cache_hits());
         counter("gmres_cache_misses_total", "Residency-cache misses (slab established cold)", self.cache_misses());
         counter("gmres_cache_evictions_total", "Residencies evicted under memory pressure", self.cache_evictions());
+        counter("gmres_link_bytes_total", "Process-transport wire bytes (both directions, frames included)", self.link_bytes());
+        counter("gmres_link_round_trips_total", "Process-transport request/reply round trips", self.link_round_trips());
+        counter("gmres_worker_restarts_total", "Shard-worker processes respawned after crashes", self.worker_restarts());
 
         let depths = self.queue_depth.lock().unwrap().clone();
         out.push_str("# HELP gmres_queue_depth Current per-device work-queue depth\n");
@@ -579,6 +624,28 @@ mod tests {
         assert!(rendered.contains("sheds=2"), "{rendered}");
         assert!(rendered.contains("hits=1"), "{rendered}");
         assert!(rendered.contains("evictions=3"), "{rendered}");
+    }
+
+    #[test]
+    fn transport_counters_accumulate_and_render() {
+        let m = Metrics::new();
+        assert_eq!((m.link_bytes(), m.link_round_trips(), m.worker_restarts()), (0, 0, 0));
+        m.on_device("840m", 0.5, 1000);
+        // no transport traffic yet: the transport line is suppressed
+        assert!(!m.render_devices().contains("transport:"));
+        m.on_link_traffic(2048, 3);
+        m.on_link_traffic(1024, 2);
+        m.set_worker_restarts(2);
+        m.set_worker_restarts(1); // stale racing update must not regress the gauge
+        assert_eq!(m.link_bytes(), 3072);
+        assert_eq!(m.link_round_trips(), 5);
+        assert_eq!(m.worker_restarts(), 2);
+        let rendered = m.render_devices();
+        assert!(rendered.contains("transport: link_bytes=3072B round_trips=5 worker_restarts=2"), "{rendered}");
+        let text = m.render_prometheus();
+        assert!(text.contains("gmres_link_bytes_total 3072"), "{text}");
+        assert!(text.contains("gmres_link_round_trips_total 5"), "{text}");
+        assert!(text.contains("gmres_worker_restarts_total 2"), "{text}");
     }
 
     #[test]

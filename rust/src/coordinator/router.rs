@@ -28,6 +28,7 @@ use crate::fleet::Fleet;
 use crate::gmres::GmresConfig;
 use crate::linalg::SystemShape;
 use crate::planner::{Plan, PlanCandidate, Planner, PlannerConfig};
+use crate::transport::TransportKind;
 
 use super::job::SolveRequest;
 
@@ -54,11 +55,19 @@ pub struct RouterConfig {
     pub mem_fraction: f64,
     /// Policy used when a device policy cannot be admitted.
     pub fallback: Policy,
+    /// Member transport sharded placements execute over — the planner
+    /// prices process-mode shards with the per-link wire surcharge.
+    pub transport: TransportKind,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self { fleet: Fleet::paper_default(), mem_fraction: 0.9, fallback: Policy::SerialR }
+        Self {
+            fleet: Fleet::paper_default(),
+            mem_fraction: 0.9,
+            fallback: Policy::SerialR,
+            transport: TransportKind::InProcess,
+        }
     }
 }
 
@@ -77,6 +86,7 @@ impl Router {
             fleet: config.fleet,
             mem_fraction: config.mem_fraction,
             fallback: config.fallback,
+            transport: config.transport,
             ..PlannerConfig::default()
         }));
         Self { planner }

@@ -337,6 +337,11 @@ pub struct FleetScheduler {
     /// Trace ring: shed jobs are finalized here (executed jobs are
     /// finalized by their worker).
     tracer: Arc<Tracer>,
+    /// Shard-worker process pool when the service runs the OS-process
+    /// transport (`None` for the in-process transport).  The scheduler
+    /// owns worker lifecycle: executions check handles out per sharded
+    /// job and the pool respawns crashed workers on the next checkout.
+    pool: Option<Arc<crate::transport::WorkerPool>>,
 }
 
 impl FleetScheduler {
@@ -367,7 +372,20 @@ impl FleetScheduler {
             gpu,
             queue_capacity: queue_capacity.max(1),
             tracer,
+            pool: None,
         }
+    }
+
+    /// Attach the shard-worker process pool (OS-process transport).  Must
+    /// be called before the scheduler is shared across threads — the
+    /// service wires it up before wrapping the scheduler in an `Arc`.
+    pub fn set_worker_pool(&mut self, pool: Arc<crate::transport::WorkerPool>) {
+        self.pool = Some(pool);
+    }
+
+    /// The shard-worker pool, when the OS-process transport is active.
+    pub fn worker_pool(&self) -> Option<&Arc<crate::transport::WorkerPool>> {
+        self.pool.as_ref()
     }
 
     pub fn cache(&self) -> &Arc<ResidencyCache> {

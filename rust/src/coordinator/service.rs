@@ -24,6 +24,7 @@ use crate::coordinator::session::MatrixHandle;
 use crate::coordinator::worker::{spawn_fleet_workers, WorkItem};
 use crate::gmres::GmresConfig;
 use crate::trace::{CandidateAudit, RequestTrace, Tracer};
+use crate::transport::{TransportKind, WorkerPool};
 use crate::Result;
 
 /// Service configuration.
@@ -49,6 +50,11 @@ pub struct ServiceConfig {
     /// Bound of the request-trace ring buffer ([`Tracer`]); the oldest
     /// trace is dropped (and counted) past it.
     pub trace_capacity: usize,
+    /// Member transport sharded placements execute over.  `Process`
+    /// spawns a shard-worker OS process pool, probes every GPU link at
+    /// startup to seed the planner's calibration, and drives sharded
+    /// solves over the wire protocol.
+    pub transport: TransportKind,
 }
 
 impl Default for ServiceConfig {
@@ -63,6 +69,7 @@ impl Default for ServiceConfig {
             cache_budget: None,
             calib_file: None,
             trace_capacity: 1024,
+            transport: TransportKind::InProcess,
         }
     }
 }
@@ -87,7 +94,10 @@ pub struct SolveService {
 
 impl SolveService {
     /// Start workers and return the handle.
-    pub fn start(config: ServiceConfig) -> Arc<Self> {
+    pub fn start(mut config: ServiceConfig) -> Arc<Self> {
+        // one transport knob: the planner prices placements on the same
+        // axis the workers execute them
+        config.router.transport = config.transport;
         let metrics = Arc::new(Metrics::new());
         let router = Router::new(config.router);
         let planner = router.planner().clone();
@@ -109,14 +119,26 @@ impl SolveService {
             config.cache_budget,
         ));
         let tracer = Arc::new(Tracer::new(config.trace_capacity));
-        let scheduler = Arc::new(FleetScheduler::new(
+        let pool = match config.transport {
+            TransportKind::Process => {
+                let pool = Arc::new(WorkerPool::new(planner.fleet().len()));
+                Self::probe_links(&pool, &planner);
+                Some(pool)
+            }
+            TransportKind::InProcess => None,
+        };
+        let mut scheduler = FleetScheduler::new(
             planner.clone(),
             cache,
             metrics.clone(),
             config.batcher,
             config.device_queue_capacity,
             tracer.clone(),
-        ));
+        );
+        if let Some(pool) = &pool {
+            scheduler.set_worker_pool(pool.clone());
+        }
+        let scheduler = Arc::new(scheduler);
         let handles = spawn_fleet_workers(
             config.artifacts_dir.clone(),
             scheduler.clone(),
@@ -137,6 +159,38 @@ impl SolveService {
             handles: Mutex::new(handles),
             sessions: Mutex::new(HashMap::new()),
         })
+    }
+
+    /// Probe every GPU's worker link at startup: a burst of small pings
+    /// measures latency, a bulk probe measures bandwidth, and the window
+    /// seeds the planner's link calibration so even the first sharded
+    /// plan prices off a measured wire instead of the analytic table.
+    fn probe_links(pool: &WorkerPool, planner: &crate::planner::Planner) {
+        for d in planner.fleet().gpu_ids() {
+            match pool.checkout(d) {
+                Ok(mut h) => {
+                    for i in 0..8u64 {
+                        if !h.ping(0x5052_4f42 + i) {
+                            break;
+                        }
+                    }
+                    let _ = h.probe(1 << 20);
+                    let obs = h.take_observation();
+                    if !obs.is_empty() {
+                        planner.observe_link(d, &obs);
+                    }
+                    pool.checkin(h);
+                }
+                Err(e) => eprintln!("transport: link probe for device {d} failed: {e}"),
+            }
+        }
+        let (links, _) = planner.link_observations();
+        eprintln!("transport: process workers ready, {links} links calibrated");
+    }
+
+    /// The shard-worker process pool (`None` on the in-process transport).
+    pub fn worker_pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.scheduler.worker_pool()
     }
 
     /// Register a matrix session: a content-addressed, refcounted
@@ -323,6 +377,9 @@ impl SolveService {
         let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
         for h in handles {
             let _ = h.join();
+        }
+        if let Some(pool) = self.scheduler.worker_pool() {
+            pool.shutdown();
         }
         if let Some(path) = &self.calib_file {
             if let Err(e) = self.router.planner().save_calibration(path) {

@@ -27,13 +27,15 @@ use crate::coordinator::job::{JobId, MatrixId, RhsSpec, SolveOutcome, SolveReque
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{FleetScheduler, ResidencyCache, ResidencyKey};
 use crate::fleet::{
-    build_sharded_block_engine, build_sharded_engine, costs as fleet_costs, DeviceId, Placement,
+    build_sharded_block_engine, build_sharded_engine, build_sharded_engine_t,
+    costs as fleet_costs, DeviceId, Placement, TransportSpec,
 };
 use crate::gmres::{BlockGmres, GmresConfig, RestartedGmres, SolveReport};
 use crate::planner::{FoldEvaluation, Plan, Planner};
 use crate::precision::PrecisionPolicy;
 use crate::runtime::Runtime;
 use crate::trace::{ExecutionProfile, RequestTrace, Tracer};
+use crate::transport::WorkerPool;
 use crate::Result;
 
 /// Unit of work flowing to workers.
@@ -114,7 +116,7 @@ fn claim_residency(
 
 /// Execute one item to completion (shared by device + cpu paths).
 fn run_item(item: WorkItem, runtime: Option<Rc<Runtime>>, metrics: &Metrics, planner: &Planner) {
-    run_item_cached(item, runtime, metrics, planner, None, None)
+    run_item_cached(item, runtime, metrics, planner, None, None, None)
 }
 
 /// [`run_item`] against a device's cross-batch residency cache.  The
@@ -131,6 +133,7 @@ fn run_item_cached(
     planner: &Planner,
     cache_ctx: CacheCtx<'_>,
     tracer: Option<&Tracer>,
+    pool: Option<&WorkerPool>,
 ) {
     let started = Instant::now();
     let queue_seconds = started.duration_since(item.submitted_at).as_secs_f64();
@@ -140,6 +143,9 @@ fn run_item_cached(
     let (warm_discount, warm_saved_bytes, claim) =
         claim_residency(cache_ctx, matrix_id, &plan, &shape, 1, metrics, planner);
     trace.mark_build_start();
+    // real transport wall per cycle, harvested from process-mode engines
+    // for the trace waterfall's link spans
+    let mut link_wall: Vec<f64> = Vec::new();
     let outcome = (|| -> Result<SolveOutcome> {
         let (a, b_default) = request.matrix.materialize();
         let b = rhs.resolve(&b_default)?;
@@ -159,25 +165,97 @@ fn run_item_cached(
         let (report, device_shares) = match plan.placement {
             Placement::Sharded(set) => {
                 let fleet = &planner.config().fleet;
-                let mut engine = build_sharded_engine(
-                    fleet,
-                    set,
-                    plan.policy,
-                    a,
-                    b,
-                    &config,
-                    planner.config().mem_fraction,
-                )?;
-                trace.mark_exec_start();
-                let report = solver.solve(&mut engine, None)?;
-                let shares: Vec<(String, f64, u64)> = engine
-                    .device_report()
-                    .into_iter()
-                    .map(|(id, busy, bytes)| {
-                        (fleet.placement_label(Placement::Single(id)), busy, bytes as u64)
-                    })
-                    .collect();
-                (report, shares)
+                match pool {
+                    // OS-process transport: drive the members through
+                    // pooled worker processes, one per shard member
+                    Some(pool) => {
+                        let mut handles = Vec::new();
+                        for d in set.iter() {
+                            match pool.checkout(d) {
+                                Ok(h) => handles.push(h),
+                                Err(e) => {
+                                    for h in handles.drain(..) {
+                                        pool.checkin(h);
+                                    }
+                                    metrics.set_worker_restarts(pool.restarts());
+                                    return Err(anyhow::Error::new(e));
+                                }
+                            }
+                        }
+                        let leases: Vec<(DeviceId, u32)> =
+                            handles.iter().map(|h| (h.device(), h.pid())).collect();
+                        let built = build_sharded_engine_t(
+                            fleet,
+                            set,
+                            plan.policy,
+                            a,
+                            b,
+                            &config,
+                            planner.config().mem_fraction,
+                            TransportSpec::Workers(handles),
+                        );
+                        let mut engine = match built {
+                            Ok(e) => e,
+                            Err(e) => {
+                                // the failed build consumed (and dropped)
+                                // the handles: reconcile the pool's books
+                                for (d, pid) in leases {
+                                    pool.forget_lost(d, pid);
+                                }
+                                metrics.set_worker_restarts(pool.restarts());
+                                return Err(e);
+                            }
+                        };
+                        trace.mark_exec_start();
+                        let solved = solver.solve(&mut engine, None);
+                        // harvest wire accounting and return the workers
+                        // before propagating any solve error — a crashed
+                        // peer must not leak its siblings
+                        let stats = engine.transport_stats();
+                        let observations = engine.take_link_observations();
+                        link_wall = engine.cycle_link_wall().to_vec();
+                        for h in engine.detach_transport_workers() {
+                            pool.checkin(h);
+                        }
+                        metrics.on_link_traffic(stats.bytes, stats.round_trips);
+                        metrics.set_worker_restarts(pool.restarts());
+                        let report = solved?;
+                        // only successful solves calibrate the links: a
+                        // died-worker window would poison the EWMA
+                        for (d, obs) in observations {
+                            planner.observe_link(d, &obs);
+                        }
+                        let shares: Vec<(String, f64, u64)> = engine
+                            .device_report()
+                            .into_iter()
+                            .map(|(id, busy, bytes)| {
+                                (fleet.placement_label(Placement::Single(id)), busy, bytes as u64)
+                            })
+                            .collect();
+                        (report, shares)
+                    }
+                    None => {
+                        let mut engine = build_sharded_engine(
+                            fleet,
+                            set,
+                            plan.policy,
+                            a,
+                            b,
+                            &config,
+                            planner.config().mem_fraction,
+                        )?;
+                        trace.mark_exec_start();
+                        let report = solver.solve(&mut engine, None)?;
+                        let shares: Vec<(String, f64, u64)> = engine
+                            .device_report()
+                            .into_iter()
+                            .map(|(id, busy, bytes)| {
+                                (fleet.placement_label(Placement::Single(id)), busy, bytes as u64)
+                            })
+                            .collect();
+                        (report, shares)
+                    }
+                }
             }
             _ => {
                 let mut engine =
@@ -252,6 +330,7 @@ fn run_item_cached(
                     setup_sim_seconds: out.report.setup_sim_seconds,
                     cycle_sim_seconds: &out.report.history.cycle_sim_seconds,
                     cycle_wall_seconds: &out.report.history.cycle_wall_seconds,
+                    cycle_link_seconds: &link_wall,
                     booked_sim_seconds: out.report.sim_seconds,
                     fold_k: 1,
                 };
@@ -279,7 +358,7 @@ fn run_batch(
     metrics: &Metrics,
     planner: &Planner,
 ) {
-    run_batch_cached(batch, runtime, metrics, planner, None, None)
+    run_batch_cached(batch, runtime, metrics, planner, None, None, None)
 }
 
 /// [`run_batch`] against a device's cross-batch residency cache.
@@ -290,6 +369,7 @@ fn run_batch_cached(
     planner: &Planner,
     cache_ctx: CacheCtx<'_>,
     tracer: Option<&Tracer>,
+    pool: Option<&WorkerPool>,
 ) {
     // a member whose explicit rhs cannot resolve must fail ALONE, never
     // poison same-batch siblings — such batches run unfolded so the bad
@@ -299,7 +379,12 @@ fn run_batch_cached(
         RhsSpec::Default => true,
         RhsSpec::Explicit(v) => v.len() == order,
     });
-    if batch.len() >= 2 && all_rhs_valid {
+    // folded sharded batches still run the in-process block engine; with
+    // the process transport active, same-matrix sharded siblings run
+    // sequentially through the workers instead of folding
+    let process_sharded =
+        pool.is_some() && batch.first().is_some_and(|p| p.item.plan.placement.is_sharded());
+    if batch.len() >= 2 && all_rhs_valid && !process_sharded {
         let plan = batch[0].item.plan;
         let shape = batch[0].item.request.matrix.shape();
         // the fold must satisfy the TIGHTEST tolerance's precision floor;
@@ -316,7 +401,7 @@ fn run_batch_cached(
         }
     }
     for pending in batch {
-        run_item_cached(pending.item, runtime.clone(), metrics, planner, cache_ctx, tracer);
+        run_item_cached(pending.item, runtime.clone(), metrics, planner, cache_ctx, tracer, pool);
     }
 }
 
@@ -506,6 +591,7 @@ fn run_folded(
                         setup_sim_seconds: report.setup_sim_seconds,
                         cycle_sim_seconds: &report.history.cycle_sim_seconds,
                         cycle_wall_seconds: &report.history.cycle_wall_seconds,
+                        cycle_link_seconds: &[],
                         booked_sim_seconds: report.sim_seconds,
                         fold_k: k,
                     };
@@ -662,6 +748,7 @@ pub fn spawn_fleet_workers(
                         None => Runtime::from_env().ok().map(Rc::new),
                     };
                     let cache = scheduler.cache().clone();
+                    let pool = scheduler.worker_pool().cloned();
                     while let Some((mask, batch)) = scheduler.next_device_batch(d) {
                         run_batch_cached(
                             batch,
@@ -670,6 +757,7 @@ pub fn spawn_fleet_workers(
                             &planner,
                             Some((cache.as_ref(), d)),
                             Some(&tracer),
+                            pool.as_deref(),
                         );
                         scheduler.complete(mask);
                     }
@@ -687,7 +775,7 @@ pub fn spawn_fleet_workers(
                 .name(format!("gmres-cpu-{i}"))
                 .spawn(move || {
                     while let Some(item) = scheduler.next_host_job() {
-                        run_item_cached(item, None, &metrics, &planner, None, Some(&tracer));
+                        run_item_cached(item, None, &metrics, &planner, None, Some(&tracer), None);
                     }
                 })
                 .expect("spawn cpu worker"),
@@ -988,10 +1076,10 @@ mod tests {
         let plan = it1.plan;
         let shape = it1.request.matrix.shape();
         assert!(matches!(plan.placement, Placement::Single(_)), "device placement expected");
-        run_item_cached(it1, rt.clone(), &metrics, &planner, Some((&cache, 0)), None);
+        run_item_cached(it1, rt.clone(), &metrics, &planner, Some((&cache, 0)), None, None);
         let cold = rx1.recv().unwrap().unwrap();
         let (it2, rx2) = mk();
-        run_item_cached(it2, rt.clone(), &metrics, &planner, Some((&cache, 0)), None);
+        run_item_cached(it2, rt.clone(), &metrics, &planner, Some((&cache, 0)), None, None);
         let warm = rx2.recv().unwrap().unwrap();
         assert_eq!(metrics.cache_misses(), 1);
         assert_eq!(metrics.cache_hits(), 1);

@@ -18,6 +18,13 @@
 //! predicted-vs-measured feedback calibrates cycle-count error rather than
 //! model drift, and tracks per-device busy seconds and bytes for the
 //! coordinator's per-device metrics.
+//!
+//! Transport: every member collective goes through a
+//! [`Transport`] backend — the in-process channel (the historical
+//! semantics, and the bit-level reference) or OS worker processes
+//! spoken to over the wire protocol.  The modeled [`DeviceSim`] clock
+//! books identically either way; real wire wall time is tracked
+//! separately per cycle for link calibration and trace link spans.
 
 use anyhow::ensure;
 
@@ -27,11 +34,24 @@ use crate::gmres::arnoldi::BREAKDOWN_RTOL;
 use crate::gmres::{givens, GmresConfig};
 use crate::linalg::{blas, SystemMatrix};
 use crate::precision::{narrow_system, narrow_vector, Precision};
+use crate::transport::{
+    InProcTransport, LinkObservation, ProcessTransport, Transport, TransportKind, TransportStats,
+    WorkerHandle,
+};
 use crate::Result;
 
 use super::costs::{shard_costs_p, ShardCosts};
 use super::shard::{RowBlocks, ShardedMatrix};
 use super::{DeviceId, DeviceSet, Fleet};
+
+/// How a sharded engine should reach its members.
+pub enum TransportSpec {
+    /// Build a backend of this kind (process mode spawns fresh workers).
+    Kind(TransportKind),
+    /// Adopt already-live worker processes (pool checkout), one per
+    /// member in shard order.
+    Workers(Vec<WorkerHandle>),
+}
 
 /// Build the sharded engine for `policy` over `(a, b)` across `set`,
 /// applying the config's preconditioner first (same contract as
@@ -50,6 +70,32 @@ pub fn build_sharded_engine(
     let (a, b) = config.precond.apply_to_system(a, b);
     let precision = config.precision.fixed_or_default();
     ShardedCycleEngine::new_mixed(fleet, set, policy, (a, b), config.m, mem_fraction, precision)
+}
+
+/// [`build_sharded_engine`] with an explicit member transport.
+#[allow(clippy::too_many_arguments)]
+pub fn build_sharded_engine_t(
+    fleet: &Fleet,
+    set: DeviceSet,
+    policy: Policy,
+    a: SystemMatrix,
+    b: Vec<f64>,
+    config: &GmresConfig,
+    mem_fraction: f64,
+    transport: TransportSpec,
+) -> Result<ShardedCycleEngine> {
+    let (a, b) = config.precond.apply_to_system(a, b);
+    let precision = config.precision.fixed_or_default();
+    ShardedCycleEngine::new_mixed_t(
+        fleet,
+        set,
+        policy,
+        (a, b),
+        config.m,
+        mem_fraction,
+        precision,
+        transport,
+    )
 }
 
 /// Build a row-block sharded multi-RHS [`crate::gmres::BlockEngine`] for a
@@ -74,7 +120,8 @@ pub fn build_sharded_block_engine(
 /// Row-block sharded GMRES(m) cycle engine.
 pub struct ShardedCycleEngine {
     policy: Policy,
-    sharded: ShardedMatrix,
+    blocks: RowBlocks,
+    transport: Box<dyn Transport>,
     b: Vec<f64>,
     bnorm: f64,
     n: usize,
@@ -88,6 +135,9 @@ pub struct ShardedCycleEngine {
     device_busy: Vec<f64>,
     device_bytes: Vec<usize>,
     setup_charged: bool,
+    /// Real transport wall seconds measured per completed cycle (all
+    /// zeros for the in-process backend).
+    cycle_link_wall: Vec<f64>,
 }
 
 impl ShardedCycleEngine {
@@ -115,6 +165,34 @@ impl ShardedCycleEngine {
         mem_fraction: f64,
         precision: Precision,
     ) -> Result<Self> {
+        Self::new_mixed_t(
+            fleet,
+            set,
+            policy,
+            system,
+            m,
+            mem_fraction,
+            precision,
+            TransportSpec::Kind(TransportKind::InProcess),
+        )
+    }
+
+    /// [`ShardedCycleEngine::new_mixed`] with an explicit member
+    /// transport.  Process mode uploads the (possibly narrowed) shards
+    /// to the workers before the first cycle; f64 solves stay
+    /// bit-identical to the in-process backend because the workers run
+    /// the same kernels on the same bits in the same order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_mixed_t(
+        fleet: &Fleet,
+        set: DeviceSet,
+        policy: Policy,
+        system: (SystemMatrix, Vec<f64>),
+        m: usize,
+        mem_fraction: f64,
+        precision: Precision,
+        spec: TransportSpec,
+    ) -> Result<Self> {
         let (a, b) = system;
         let n = a.n();
         ensure!(a.is_square(), "square systems only, got order {n} non-square");
@@ -129,17 +207,41 @@ impl ShardedCycleEngine {
         let assignments = fleet.shard_plan(set, n, mem_fraction);
         let rows: Vec<usize> = assignments.iter().map(|s| s.rows).collect();
         let bnorm = blas::nrm2(&b);
-        let (sharded, b_inner, verify) = if precision.is_reduced() {
-            let narrowed = narrow_system(a.clone(), precision);
+        let blocks = RowBlocks::from_rows(&rows);
+        let narrowed = precision.is_reduced();
+        let (sharded, b_inner, verify) = if narrowed {
+            let low = narrow_system(a.clone(), precision);
             let b_low = narrow_vector(&b, precision);
-            (ShardedMatrix::split(&narrowed, RowBlocks::from_rows(&rows)), b_low, Some((a, b)))
+            (ShardedMatrix::split(&low, blocks.clone()), b_low, Some((a, b)))
         } else {
-            (ShardedMatrix::split(&a, RowBlocks::from_rows(&rows)), b, None)
+            (ShardedMatrix::split(&a, blocks.clone()), b, None)
+        };
+        let transport: Box<dyn Transport> = match spec {
+            TransportSpec::Kind(TransportKind::InProcess) => {
+                Box::new(InProcTransport::new(sharded))
+            }
+            TransportSpec::Kind(TransportKind::Process) => {
+                let mut t = ProcessTransport::spawn(&costs.members)?;
+                t.upload(&sharded, narrowed)?;
+                Box::new(t)
+            }
+            TransportSpec::Workers(handles) => {
+                ensure!(
+                    handles.len() == costs.members.len(),
+                    "pool handed {} workers for {} shard members",
+                    handles.len(),
+                    costs.members.len()
+                );
+                let mut t = ProcessTransport::from_workers(handles);
+                t.upload(&sharded, narrowed)?;
+                Box::new(t)
+            }
         };
         let k = costs.members.len();
         Ok(Self {
             policy,
-            sharded,
+            blocks,
+            transport,
             b: b_inner,
             bnorm,
             n,
@@ -151,6 +253,7 @@ impl ShardedCycleEngine {
             device_busy: vec![0.0; k],
             device_bytes: vec![0; k],
             setup_charged: false,
+            cycle_link_wall: Vec::new(),
         })
     }
 
@@ -172,6 +275,39 @@ impl ShardedCycleEngine {
     /// The priced cost table this engine charges from.
     pub fn costs(&self) -> &ShardCosts {
         &self.costs
+    }
+
+    /// Which transport backend drives the members.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.transport.kind()
+    }
+
+    /// Lifetime wire counters of the member transport (all zero for
+    /// in-process).
+    pub fn transport_stats(&self) -> TransportStats {
+        self.transport.stats()
+    }
+
+    /// Real transport wall seconds per completed cycle, in cycle order.
+    pub fn cycle_link_wall(&self) -> &[f64] {
+        &self.cycle_link_wall
+    }
+
+    /// Drain per-link measurement windows, tagged with the fleet device
+    /// each member stands in for.
+    pub fn take_link_observations(&mut self) -> Vec<(DeviceId, LinkObservation)> {
+        self.transport
+            .take_observations()
+            .into_iter()
+            .enumerate()
+            .map(|(k, obs)| (self.costs.members[k], obs))
+            .collect()
+    }
+
+    /// Surrender live worker processes for pool reclamation (empty for
+    /// in-process).  The engine must not run further cycles afterwards.
+    pub fn detach_transport_workers(&mut self) -> Vec<WorkerHandle> {
+        self.transport.detach_workers()
     }
 
     fn charge_setup_once(&mut self) {
@@ -198,27 +334,38 @@ impl ShardedCycleEngine {
         }
     }
 
-    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+    fn matvec(&mut self, x: &[f64]) -> Result<Vec<f64>> {
         let mut y = vec![0.0; self.n];
-        for k in 0..self.sharded.shard_count() {
-            let r = self.sharded.blocks().range(k);
-            self.sharded.apply_shard_into(k, x, &mut y[r]);
+        for k in 0..self.blocks.count() {
+            let r = self.blocks.range(k);
+            if !r.is_empty() {
+                self.transport.matvec(k, x, &mut y[r])?;
+            }
         }
-        y
+        Ok(y)
     }
 
     /// Cross-device dot: per-shard partials combined on the host.
-    fn fleet_dot(&self, x: &[f64], y: &[f64]) -> f64 {
-        (0..self.sharded.shard_count())
-            .map(|k| {
-                let r = self.sharded.blocks().range(k);
-                blas::dot(&x[r.clone()], &y[r])
-            })
-            .sum()
+    fn fleet_dot(&mut self, x: &[f64], y: &[f64]) -> Result<f64> {
+        let mut acc = 0.0;
+        for k in 0..self.blocks.count() {
+            let r = self.blocks.range(k);
+            if !r.is_empty() {
+                acc += self.transport.dot_partial(k, &x[r.clone()], &y[r])?;
+            }
+        }
+        Ok(acc)
     }
 
-    fn fleet_nrm2(&self, x: &[f64]) -> f64 {
-        self.fleet_dot(x, x).max(0.0).sqrt()
+    fn fleet_nrm2(&mut self, x: &[f64]) -> Result<f64> {
+        let mut acc = 0.0;
+        for k in 0..self.blocks.count() {
+            let r = self.blocks.range(k);
+            if !r.is_empty() {
+                acc += self.transport.norm_sq_partial(k, &x[r])?;
+            }
+        }
+        Ok(acc.max(0.0).sqrt())
     }
 }
 
@@ -244,16 +391,28 @@ impl CycleEngine for ShardedCycleEngine {
     }
 
     fn cycle(&mut self, x0: &[f64]) -> Result<CycleResult> {
+        // real wire wall attributable to this cycle, for link spans and
+        // calibration (zero on the in-process backend)
+        let link_start = self.transport.stats().wall_seconds;
+        let out = self.cycle_inner(x0);
+        let link_wall = self.transport.stats().wall_seconds - link_start;
+        self.cycle_link_wall.push(link_wall.max(0.0));
+        out
+    }
+}
+
+impl ShardedCycleEngine {
+    fn cycle_inner(&mut self, x0: &[f64]) -> Result<CycleResult> {
         ensure!(x0.len() == self.n, "x0 length mismatch");
         self.charge_setup_once();
         self.charge_cycle();
         let m = self.m;
 
         // r0 = b - A x0; beta = ||r0|| (cross-device reduction)
-        let ax0 = self.matvec(x0);
+        let ax0 = self.matvec(x0)?;
         let mut r0 = vec![0.0; self.n];
         blas::sub_into(&self.b, &ax0, &mut r0);
-        let beta = self.fleet_nrm2(&r0);
+        let beta = self.fleet_nrm2(&r0)?;
         if beta == 0.0 {
             return Ok(CycleResult { x: x0.to_vec(), resnorm: 0.0 });
         }
@@ -267,14 +426,17 @@ impl CycleEngine for ShardedCycleEngine {
 
         let mut k = m;
         for j in 0..m {
-            let mut w = self.matvec(&v[j]);
+            let mut w = self.matvec(&v[j])?;
             // CGS: all projection coefficients from the unmodified A v_j
-            let coeffs: Vec<f64> = (0..=j).map(|i| self.fleet_dot(&w, &v[i])).collect();
+            let mut coeffs = Vec::with_capacity(j + 1);
+            for i in 0..=j {
+                coeffs.push(self.fleet_dot(&w, &v[i])?);
+            }
             for (i, &hij) in coeffs.iter().enumerate() {
                 h[i][j] = hij;
                 blas::axpy(-hij, &v[i], &mut w);
             }
-            let hj1 = self.fleet_nrm2(&w);
+            let hj1 = self.fleet_nrm2(&w)?;
             h[j + 1][j] = hj1;
             if hj1 <= BREAKDOWN_RTOL * beta {
                 k = j + 1;
@@ -299,10 +461,10 @@ impl CycleEngine for ShardedCycleEngine {
         let resnorm = match &self.verify {
             Some((fa, fb)) => fa.residual_norm(fb, &x),
             None => {
-                let ax = self.matvec(&x);
+                let ax = self.matvec(&x)?;
                 let mut r = vec![0.0; self.n];
                 blas::sub_into(&self.b, &ax, &mut r);
-                self.fleet_nrm2(&r)
+                self.fleet_nrm2(&r)?
             }
         };
         Ok(CycleResult { x, resnorm })

@@ -36,7 +36,10 @@ pub mod placement;
 pub mod shard;
 
 pub use costs::ShardCosts;
-pub use exec::{build_sharded_block_engine, build_sharded_engine, ShardedCycleEngine};
+pub use exec::{
+    build_sharded_block_engine, build_sharded_engine, build_sharded_engine_t, ShardedCycleEngine,
+    TransportSpec,
+};
 pub use placement::{DeviceSet, Placement};
 pub use shard::{RowBlocks, ShardedMatrix};
 

@@ -53,6 +53,13 @@
 //!   dual wall/modeled accounting that reconciles against the booked
 //!   `sim_seconds`, plan-decision audit records, and the bounded
 //!   per-service trace ring exported by `serve --trace-json`.
+//! * **[`transport`]** — the shard-member boundary: a [`transport::Transport`]
+//!   trait with an in-process backend (the bit-level reference) and an
+//!   OS-process backend (`gmres-rs shard-worker` children speaking a
+//!   length-framed binary wire protocol over pipes), plus per-link
+//!   latency/bandwidth calibration the planner prices sharded
+//!   process-mode placements with, and the worker-process pool the
+//!   scheduler uses for spawn/health-check/respawn lifecycle.
 //! * **[`report`]** — Table 1 / Figure 5 regeneration harness, ablations,
 //!   paper reference data.
 
@@ -67,6 +74,7 @@ pub mod precision;
 pub mod report;
 pub mod runtime;
 pub mod trace;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result type (anyhow for ergonomic error context).

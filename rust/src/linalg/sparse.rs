@@ -55,6 +55,27 @@ impl CsrMatrix {
         Self { nrows, ncols, row_ptr, col_idx, values }
     }
 
+    /// Build directly from already-valid CSR arrays, preserving the
+    /// stored pattern verbatim — unlike [`CsrMatrix::from_triplets`],
+    /// explicit zeros are kept and values are not re-summed, so a
+    /// matrix reconstructed from its own `row_ptr`/`col_idx`/`values`
+    /// (e.g. after a wire round trip) is bit-identical to the original.
+    pub fn from_raw_parts(
+        nrows: usize,
+        ncols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        assert_eq!(row_ptr.len(), nrows + 1, "row_ptr must have nrows + 1 entries");
+        assert_eq!(row_ptr[0], 0, "row_ptr must start at 0");
+        assert_eq!(*row_ptr.last().unwrap(), values.len(), "row_ptr must end at nnz");
+        assert_eq!(col_idx.len(), values.len(), "one column index per value");
+        assert!(row_ptr.windows(2).all(|w| w[0] <= w[1]), "row_ptr must be nondecreasing");
+        assert!(col_idx.iter().all(|&j| j < ncols), "column index out of bounds");
+        Self { nrows, ncols, row_ptr, col_idx, values }
+    }
+
     pub fn nnz(&self) -> usize {
         self.values.len()
     }

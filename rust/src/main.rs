@@ -15,9 +15,13 @@
 //!                 [--tol 1e-6] [--format dense|csr] [--policy P]
 //!                 [--precision auto|f64|f32|tf32] [--rhs-count 1]
 //!                 [--fleet 840m,v100,a100,host] [--calib-file path]
+//!                 [--transport in-process|process]
 //!                 [--waves 1] [--deadline-ms 0] [--cache-mb 0] [--bench-json path]
 //!                 [--trace-json path] [--metrics-out path]
 //! gmres-rs trace  --file path [--job N] [--list]
+//! gmres-rs transport-bench [--fleet SPEC] [--out BENCH_transport.json]
+//! gmres-rs shard-worker     (internal: spawned shard member, speaks the
+//!                            wire protocol on stdin/stdout)
 //! gmres-rs info
 //! ```
 
@@ -35,6 +39,7 @@ use gmres_rs::planner::{Planner, PlannerConfig};
 use gmres_rs::precision::PrecisionPolicy;
 use gmres_rs::report::{figure5, plan_table, sweep, table1, SweepConfig};
 use gmres_rs::runtime::Runtime;
+use gmres_rs::transport::TransportKind;
 use gmres_rs::util::cli::Args;
 
 const USAGE: &str = "\
@@ -44,9 +49,12 @@ USAGE:
   gmres-rs solve [--n N] [--policy P] [--format dense|csr] [--m M] [--tol T]
                  [--precond identity|jacobi] [--precision f64|f32|tf32]
                  [--rhs-count K] [--seed S]
+                 [--fleet SPEC] [--transport in-process|process]
+                 (with --fleet: a plan that shards runs on the fleet executor
+                  over the chosen member transport)
   gmres-rs plan  [--n N] [--format dense|csr] [--m M] [--tol T] [--policy P]
                  [--precision auto|f64|f32|tf32] [--rhs-count K]
-                 [--fleet 840m,v100,a100,host]
+                 [--fleet 840m,v100,a100,host] [--transport in-process|process]
                  (alias: explain — show ranked candidate plans + prediction)
   gmres-rs sweep [--what table1|figure5|blas1|memcap] [--measured]
                  [--format dense|csr] [--sizes a,b,..] [--m M] [--csv PATH]
@@ -54,11 +62,18 @@ USAGE:
                  [--tol T] [--format dense|csr] [--policy P]
                  [--precision auto|f64|f32|tf32] [--rhs-count K]
                  [--fleet 840m,v100,a100,host] [--calib-file PATH]
+                 [--transport in-process|process]
                  [--waves W] [--deadline-ms MS] [--cache-mb MB]
                  [--bench-json PATH] [--trace-json PATH] [--metrics-out PATH]
   gmres-rs trace --file PATH [--job N] [--list]
                  (pretty-print one request's span waterfall from a
-                  --trace-json dump; --list shows one line per trace)
+                  --trace-json dump; --list shows one line per trace; --job
+                  renders that job's trace even when it was shed or failed)
+  gmres-rs transport-bench [--fleet SPEC] [--out BENCH_transport.json]
+                 (measure in-process vs process sharded cycle walls and the
+                  calibrated per-link latency/bandwidth; writes a JSON report)
+  gmres-rs shard-worker
+                 (internal: shard member process, wire protocol on stdin/stdout)
   gmres-rs info
 
 POLICIES:  serial-r | serial-native | gmatrix | gputools | gpuR
@@ -87,6 +102,11 @@ TRACING:   every request is traced end-to-end (admission, queue, residency,
            and modeled-seconds accounting; `serve --trace-json` dumps the
            trace ring, `trace` renders a waterfall, `--metrics-out` writes a
            Prometheus text snapshot
+TRANSPORT: in-process (default) runs shard members as function calls;
+           process runs each member as a spawned `gmres-rs shard-worker` OS
+           process over length-framed pipes — f64 results are bit-identical,
+           links are probed at startup and calibrated from measured wall
+           times, and the waterfall grows link[i] spans for real wire time
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -97,6 +117,8 @@ fn main() -> anyhow::Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
         Some("trace") => cmd_trace(&args),
+        Some("transport-bench") => cmd_transport_bench(&args),
+        Some("shard-worker") => gmres_rs::transport::worker::run(),
         Some("info") => cmd_info(),
         _ => {
             eprint!("{USAGE}");
@@ -139,6 +161,12 @@ fn parse_fleet(args: &Args) -> anyhow::Result<Fleet> {
     }
 }
 
+/// `--transport in-process|process` (default: in-process).
+fn parse_transport(args: &Args) -> anyhow::Result<TransportKind> {
+    let s = args.get_choice("transport", &["in-process", "process"], "in-process")?;
+    TransportKind::parse(&s).ok_or_else(|| anyhow!("bad transport `{s}`"))
+}
+
 fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     let n = args.get_parse("n", 512usize)?;
     let m = args.get_parse("m", 30usize)?;
@@ -172,6 +200,51 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     );
     let config = GmresConfig { m, tol, max_restarts: 200, precond, precision };
     let rhs_count = args.get_parse("rhs-count", 1usize)?;
+    if args.get("fleet").is_some() && rhs_count == 1 {
+        // Fleet path: plan the placement, and when it shards run the fleet
+        // executor over the chosen member transport.  The resnorm_bits
+        // token lets scripts compare transports bit-for-bit.
+        let fleet = parse_fleet(args)?;
+        let transport = parse_transport(args)?;
+        let planner = Planner::new(PlannerConfig {
+            fleet: fleet.clone(),
+            transport,
+            ..PlannerConfig::default()
+        });
+        let plan = planner.plan(&shape, &config, Some(policy));
+        if let gmres_rs::fleet::Placement::Sharded(set) = plan.placement {
+            use gmres_rs::fleet::{build_sharded_engine_t, TransportSpec};
+            println!("fleet: {} placement={}", fleet.summary(0.9), plan.placement);
+            let mut engine = build_sharded_engine_t(
+                &fleet,
+                set,
+                policy,
+                a,
+                b,
+                &config,
+                0.9,
+                TransportSpec::Kind(transport),
+            )?;
+            let solver = RestartedGmres::new(config);
+            let report = solver.solve(&mut engine, None)?;
+            println!("{}", report.summary());
+            let err = gmres_rs::linalg::vector::rel_err(&report.x, &x_true);
+            println!("  error vs known solution: {err:.2e}");
+            let stats = engine.transport_stats();
+            println!(
+                "  transport={} link_bytes={} round_trips={} resnorm_bits=0x{:016x}",
+                engine.transport_kind(),
+                stats.bytes,
+                stats.round_trips,
+                report.resnorm.to_bits()
+            );
+            return Ok(());
+        }
+        eprintln!(
+            "fleet plan placed {} (not sharded); running the single-engine path",
+            plan.placement
+        );
+    }
     if rhs_count > 1 {
         // k-wide block solve over ONE residency: the spec's own b plus
         // k-1 random right-hand sides (the block engine is
@@ -229,7 +302,8 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     let config = GmresConfig { m, tol, max_restarts: 200, precond, precision };
     let rhs_count = args.get_parse("rhs-count", 1usize)?;
     let fleet = parse_fleet(args)?;
-    let planner = Planner::new(PlannerConfig { fleet, ..PlannerConfig::default() });
+    let transport = parse_transport(args)?;
+    let planner = Planner::new(PlannerConfig { fleet, transport, ..PlannerConfig::default() });
     println!("{}", plan_table::render_candidates_k(&planner, &shape, &config, rhs_count));
     let plan = planner.plan(&shape, &config, policy);
     match policy {
@@ -358,6 +432,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let format = parse_format(args)?;
     let precision = parse_precision(args, "auto")?;
     let fleet = parse_fleet(args)?;
+    let transport = parse_transport(args)?;
     let calib_file = args.get("calib-file").map(std::path::PathBuf::from);
     let policy = match args.get("policy") {
         None => None,
@@ -374,6 +449,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         router,
         calib_file,
         cache_budget: (cache_mb > 0).then(|| cache_mb << 20),
+        transport,
         ..Default::default()
     });
     let started = std::time::Instant::now();
@@ -545,10 +621,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
 /// `trace`: pretty-print request waterfalls from a `serve --trace-json`
 /// dump.  `--list` prints one line per trace; otherwise one trace is
-/// selected (`--job N`, or the slowest completed request) and rendered as
-/// a span waterfall with wall + modeled-seconds accounting.
+/// selected and rendered as a span waterfall with wall + modeled-seconds
+/// accounting.  `--job N` renders that job's trace even when it ended
+/// shed/failed/rejected — a terminal trace is exactly what the caller
+/// asked to see; without a target the slowest completed request wins,
+/// falling back to the slowest of any status.
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
-    use gmres_rs::trace::{Trace, TraceStatus};
+    use gmres_rs::trace::{select_trace, Trace};
     let path = args
         .get("file")
         .ok_or_else(|| anyhow!("trace: --file PATH is required (a `serve --trace-json` dump)"))?;
@@ -563,21 +642,116 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         }
         return Ok(());
     }
-    let chosen = match args.get("job") {
-        Some(j) => {
-            let job: u64 = j.parse().map_err(|_| anyhow!("bad --job `{j}`"))?;
-            traces
-                .iter()
-                .find(|t| t.job_id == job)
-                .ok_or_else(|| anyhow!("no trace for job-{job} in {path}"))?
-        }
-        None => traces
-            .iter()
-            .filter(|t| t.status == TraceStatus::Completed)
-            .max_by(|a, b| a.total_s.total_cmp(&b.total_s))
-            .unwrap_or(&traces[0]),
+    let job = match args.get("job") {
+        Some(j) => Some(j.parse::<u64>().map_err(|_| anyhow!("bad --job `{j}`"))?),
+        None => None,
     };
+    let chosen = select_trace(&traces, job).ok_or_else(|| match job {
+        Some(id) => anyhow!("no trace for job-{id} in {path}"),
+        None => anyhow!("{path}: no traces recorded"),
+    })?;
     print!("{}", chosen.render_waterfall());
+    Ok(())
+}
+
+/// `transport-bench`: run the same sharded solves through both member
+/// transports on a real fleet executor, report per-cycle walls and the
+/// link models calibrated from the process runs, and write them as JSON.
+fn cmd_transport_bench(args: &Args) -> anyhow::Result<()> {
+    use gmres_rs::fleet::{build_sharded_engine_t, DeviceSet, TransportSpec};
+    use gmres_rs::transport::LinkCalibration;
+    use std::fmt::Write as _;
+
+    let out_path = args.get_or("out", "BENCH_transport.json");
+    let fleet = match args.get("fleet") {
+        Some(spec) => Fleet::parse(spec)?,
+        // two shardable cards so both shapes place as row blocks
+        None => Fleet::parse("840m=8m,v100=8m")?,
+    };
+    anyhow::ensure!(fleet.len() >= 2, "transport-bench needs a >= 2 device fleet");
+    let set = DeviceSet::from_ids(&(0..fleet.len()).collect::<Vec<_>>());
+    let shapes: &[(usize, usize)] = &[(600, 10), (1200, 10)];
+    let policy = Policy::GmatrixLike;
+    let mut calib = LinkCalibration::new(fleet.len(), 0.3);
+    let mut rows = Vec::new();
+    println!("fleet: {} members={}", fleet.summary(0.9), set.len());
+    for &(n, m) in shapes {
+        let config = GmresConfig { m, tol: 1e-8, max_restarts: 60, ..Default::default() };
+        let mut walls = [0.0f64; 2];
+        let mut link_wall = 0.0f64;
+        let mut cycles = [0usize; 2];
+        let mut bits = [0u64; 2];
+        for (which, kind) in
+            [TransportKind::InProcess, TransportKind::Process].into_iter().enumerate()
+        {
+            let (a, b, _x) = generators::table1_system(n, 42);
+            let mut engine = build_sharded_engine_t(
+                &fleet,
+                set,
+                policy,
+                SystemMatrix::Dense(a),
+                b,
+                &config,
+                0.9,
+                TransportSpec::Kind(kind),
+            )?;
+            let started = std::time::Instant::now();
+            let report = RestartedGmres::new(config).solve(&mut engine, None)?;
+            walls[which] = started.elapsed().as_secs_f64();
+            cycles[which] = report.cycles.max(1);
+            bits[which] = report.resnorm.to_bits();
+            if kind == TransportKind::Process {
+                link_wall = engine.cycle_link_wall().iter().sum::<f64>()
+                    / engine.cycle_link_wall().len().max(1) as f64;
+                for (d, obs) in engine.take_link_observations() {
+                    calib.observe(d, &obs);
+                }
+            }
+        }
+        anyhow::ensure!(
+            bits[0] == bits[1],
+            "transport mismatch at n={n}: in-process resnorm bits 0x{:016x} != process 0x{:016x}",
+            bits[0],
+            bits[1]
+        );
+        println!(
+            "n={n} m={m}: in-process {:.6}s/cycle, process {:.6}s/cycle (link {:.6}s/cycle), \
+             resnorm bits match",
+            walls[0] / cycles[0] as f64,
+            walls[1] / cycles[1] as f64,
+            link_wall
+        );
+        rows.push((n, m, walls[0] / cycles[0] as f64, walls[1] / cycles[1] as f64, link_wall));
+    }
+    // idle workers from completed engines have exited with their
+    // transports; nothing to tear down here
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"transport\",\n  \"links\": [");
+    for (i, (d, model)) in calib.snapshot().iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        let _ = write!(
+            json,
+            "\n    {{\"device\": {d}, \"latency_s\": {:.9}, \"bandwidth_bps\": {:.1}}}",
+            model.latency_seconds, model.bytes_per_second
+        );
+    }
+    let _ = write!(json, "\n  ],\n  \"observations\": {},\n  \"shapes\": [", calib.observations());
+    for (i, (n, m, inproc, process, link)) in rows.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        let _ = write!(
+            json,
+            "\n    {{\"n\": {n}, \"m\": {m}, \"inproc_cycle_s\": {inproc:.9}, \
+             \"process_cycle_s\": {process:.9}, \"process_link_s_per_cycle\": {link:.9}, \
+             \"bit_identical\": true}}"
+        );
+    }
+    json.push_str("\n  ]\n}\n");
+    std::fs::write(out_path, &json)?;
+    println!("wrote {out_path} ({} calibrated link(s))", calib.calibrated_links());
     Ok(())
 }
 

@@ -62,10 +62,12 @@ use crate::backend::Policy;
 use crate::device::costs;
 use crate::device::memory::working_set_bytes_batch_p;
 use crate::device::{DeviceSim, HostSpec};
-use crate::fleet::{costs as fleet_costs, DeviceKind, Fleet, Placement};
+use crate::fleet::{costs as fleet_costs, DeviceId, DeviceKind, DeviceSet, Fleet, Placement};
 use crate::gmres::{GmresConfig, PrecondKind};
 use crate::linalg::{MatrixFormat, SystemShape};
 use crate::precision::Precision;
+use crate::transport::link::{process_cycle_wire_seconds, process_setup_wire_seconds};
+use crate::transport::{LinkCalibration, LinkModel, LinkObservation, TransportKind};
 use crate::Result;
 
 /// Planner configuration.
@@ -93,6 +95,10 @@ pub struct PlannerConfig {
     pub convergence: ConvergenceModel,
     /// EWMA weight of each calibration observation.
     pub alpha: f64,
+    /// How sharded members are reached at execution time.  Process mode
+    /// adds per-link wire costs (calibrated when measurements exist,
+    /// analytic otherwise) to every sharded placement's prediction.
+    pub transport: TransportKind,
 }
 
 impl Default for PlannerConfig {
@@ -106,6 +112,7 @@ impl Default for PlannerConfig {
             precisions: vec![Precision::F64, Precision::F32, Precision::Tf32],
             convergence: ConvergenceModel::default(),
             alpha: 0.25,
+            transport: TransportKind::InProcess,
         }
     }
 }
@@ -144,6 +151,9 @@ pub struct Planner {
     /// Memoized *warm* setup seconds (cross-batch residency cache hit)
     /// for single-device placements, same key space as `price_cache`.
     warm_setup_cache: Mutex<HashMap<PriceKey, f64>>,
+    /// Per-device calibrated link models (process transport), seeded by
+    /// startup probes and refined from measured solve round trips.
+    links: Mutex<LinkCalibration>,
 }
 
 /// Price-cache key: one plan point plus the batch width.
@@ -157,12 +167,14 @@ impl Planner {
 
     pub fn new(config: PlannerConfig) -> Self {
         let alpha = config.alpha;
+        let devices = config.fleet.len();
         Self {
             config,
             calibrator: Mutex::new(Calibrator::new(alpha)),
             observed_rho: Mutex::new(HashMap::new()),
             price_cache: Mutex::new(HashMap::new()),
             warm_setup_cache: Mutex::new(HashMap::new()),
+            links: Mutex::new(LinkCalibration::new(devices, alpha)),
         }
     }
 
@@ -467,6 +479,21 @@ impl Planner {
         let split = self.cost_split_k(policy, shape, m, placement, precision, k);
         let base_seconds = split.setup_seconds + predicted_cycles as f64 * split.cycle_seconds;
         let coeff = self.coeff_cell(policy, shape.format, placement, precision);
+        // process-transport sharded placements pay real wire costs on top
+        // of the modeled device seconds — priced off calibrated links when
+        // measurements exist, the analytic table otherwise (NOT folded
+        // into base_seconds: the measured/base calibration signal must
+        // stay a pure device-model ratio)
+        let wire_seconds = match placement {
+            Placement::Sharded(set)
+                if self.config.transport == TransportKind::Process && policy.needs_runtime() =>
+            {
+                let (setup_wire, cycle_wire) =
+                    self.process_wire_split(set, shape, m, precision, true);
+                setup_wire + predicted_cycles as f64 * cycle_wire
+            }
+            _ => 0.0,
+        };
         Plan {
             policy,
             placement,
@@ -475,9 +502,86 @@ impl Planner {
             precision,
             predicted_cycles,
             base_seconds,
-            predicted_seconds: base_seconds * coeff,
+            predicted_seconds: base_seconds * coeff + wire_seconds,
             downgraded: false,
         }
+    }
+
+    /// Predicted wire seconds `(one-time upload, per-cycle)` of a
+    /// process-mode sharded placement.  `calibrated` prices each member
+    /// link from the measured calibration when available; `false` forces
+    /// the uncalibrated analytic table (the baseline
+    /// `tests/transport_e2e.rs` compares calibration against).
+    pub fn process_wire_split(
+        &self,
+        set: DeviceSet,
+        shape: &SystemShape,
+        m: usize,
+        precision: Precision,
+        calibrated: bool,
+    ) -> (f64, f64) {
+        let fleet = &self.config.fleet;
+        let assignments = fleet.shard_plan(set, shape.n, self.config.mem_fraction);
+        let rows: Vec<usize> = assignments.iter().map(|s| s.rows).collect();
+        let links: Vec<LinkModel> = assignments
+            .iter()
+            .map(|s| {
+                if calibrated {
+                    self.link_model(s.device)
+                } else {
+                    self.analytic_link_model(s.device)
+                }
+            })
+            .collect();
+        let upload: Vec<usize> = rows
+            .iter()
+            .map(|&r| fleet_costs::block_matrix_bytes_p(shape, r, precision))
+            .collect();
+        let setup = process_setup_wire_seconds(&links, &upload);
+        let cycle = process_cycle_wire_seconds(&links, &rows, shape.n, m, precision.is_reduced());
+        (setup, cycle)
+    }
+
+    /// The uncalibrated analytic link model for one device: its GPU
+    /// spec's PCIe latency/bandwidth, or the generic local-pipe prior
+    /// for host members.
+    pub fn analytic_link_model(&self, device: DeviceId) -> LinkModel {
+        match self.config.fleet.get(device).and_then(|d| d.gpu_spec()) {
+            Some(spec) => LinkModel::new(spec.transfer_latency, spec.pcie_bw),
+            None => LinkModel::pipe_default(),
+        }
+    }
+
+    /// The link model pricing uses for one device: calibrated when
+    /// measurements have reached it, analytic otherwise.
+    pub fn link_model(&self, device: DeviceId) -> LinkModel {
+        self.links
+            .lock()
+            .unwrap()
+            .model(device)
+            .unwrap_or_else(|| self.analytic_link_model(device))
+    }
+
+    /// Seed a device's link calibration (fleet-startup ping/probe pass).
+    pub fn seed_link(&self, device: DeviceId, model: LinkModel) {
+        self.links.lock().unwrap().seed(device, model);
+    }
+
+    /// Fold one measured link window (a solve's round trips against one
+    /// member) into the device's calibrated model.
+    pub fn observe_link(&self, device: DeviceId, obs: &LinkObservation) {
+        self.links.lock().unwrap().observe(device, obs);
+    }
+
+    /// Link-calibration summary: `(calibrated links, observation windows)`.
+    pub fn link_observations(&self) -> (usize, u64) {
+        let links = self.links.lock().unwrap();
+        (links.calibrated_links(), links.observations())
+    }
+
+    /// Snapshot of every calibrated link as `(device, model)` pairs.
+    pub fn link_snapshot(&self) -> Vec<(DeviceId, LinkModel)> {
+        self.links.lock().unwrap().snapshot()
     }
 
     /// Candidate precisions for one policy under a request: a pinned

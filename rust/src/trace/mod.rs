@@ -64,6 +64,10 @@ pub enum Phase {
     VerifyF64,
     /// Membership in a k-wide fold (spans the shared block solve).
     FoldMember,
+    /// Real wire time the process transport measured inside one restart
+    /// cycle (0-indexed; overlay over the matching [`Phase::Cycle`] span,
+    /// absent for in-process solves).
+    Link(usize),
 }
 
 impl Phase {
@@ -77,6 +81,7 @@ impl Phase {
             Phase::Cycle(_) => "cycle",
             Phase::VerifyF64 => "verify-f64",
             Phase::FoldMember => "fold-member",
+            Phase::Link(_) => "link",
         }
     }
 
@@ -86,6 +91,13 @@ impl Phase {
             self,
             Phase::ResidencyEstablish | Phase::ResidencyWarmHit | Phase::Cycle(_)
         )
+    }
+
+    /// Overlay spans annotate the primary chain (fold membership, wire
+    /// time inside a cycle) without extending it; coverage and
+    /// contiguity are judged on the chain alone.
+    pub fn is_overlay(&self) -> bool {
+        matches!(self, Phase::FoldMember | Phase::Link(_))
     }
 
     fn from_parts(name: &str, index: Option<u64>) -> Result<Self> {
@@ -98,6 +110,7 @@ impl Phase {
             "cycle" => Phase::Cycle(index.unwrap_or(0) as usize),
             "verify-f64" => Phase::VerifyF64,
             "fold-member" => Phase::FoldMember,
+            "link" => Phase::Link(index.unwrap_or(0) as usize),
             other => bail!("unknown span phase `{other}`"),
         })
     }
@@ -203,6 +216,10 @@ pub struct ExecutionProfile<'a> {
     pub setup_sim_seconds: f64,
     pub cycle_sim_seconds: &'a [f64],
     pub cycle_wall_seconds: &'a [f64],
+    /// Real wire wall the process transport measured per restart cycle
+    /// (empty for in-process solves).  Rendered as [`Phase::Link`]
+    /// overlay spans inside the matching cycle spans.
+    pub cycle_link_seconds: &'a [f64],
     /// The discounted `sim_seconds` share booked on the outcome; the
     /// execution spans must (and do) sum to this.
     pub booked_sim_seconds: f64,
@@ -312,6 +329,7 @@ impl RequestTrace {
         // Cycles laid contiguously from exec start; the measured per-cycle
         // walls sum to at most the solve wall, so the cursor stays <= end.
         let mut cursor = t_exec;
+        let mut cycle_bounds: Vec<(f64, f64)> = Vec::with_capacity(prof.cycle_sim_seconds.len());
         for (i, (&sim, &wall)) in prof
             .cycle_sim_seconds
             .iter()
@@ -320,11 +338,26 @@ impl RequestTrace {
         {
             let next = (cursor + wall).min(end);
             spans.push(Span { phase: Phase::Cycle(i), start_s: cursor, end_s: next, sim_seconds: sim });
+            cycle_bounds.push((cursor, next));
             cursor = next;
         }
         // The verify/teardown tail absorbs whatever wall remains, keeping
         // the chain gap-free through `end`.
         spans.push(Span { phase: Phase::VerifyF64, start_s: cursor, end_s: end, sim_seconds: 0.0 });
+        // Wire-time overlays: the process transport's measured link wall
+        // inside each cycle, anchored at the matching cycle's start.
+        for (i, &link) in prof.cycle_link_seconds.iter().enumerate() {
+            if link <= 0.0 {
+                continue;
+            }
+            let Some(&(cs, _)) = cycle_bounds.get(i) else { break };
+            spans.push(Span {
+                phase: Phase::Link(i),
+                start_s: cs,
+                end_s: (cs + link).min(end),
+                sim_seconds: 0.0,
+            });
+        }
         if prof.fold_k >= 2 {
             spans.push(Span {
                 phase: Phase::FoldMember,
@@ -427,7 +460,7 @@ impl Trace {
     }
 
     /// Fraction of `total_s` covered by the primary phase chain (everything
-    /// except the overlay `FoldMember` span).
+    /// except the overlay `FoldMember`/`Link` spans).
     pub fn coverage(&self) -> f64 {
         if self.total_s <= 0.0 {
             return 1.0;
@@ -435,7 +468,7 @@ impl Trace {
         let covered: f64 = self
             .spans
             .iter()
-            .filter(|s| s.phase != Phase::FoldMember)
+            .filter(|s| !s.phase.is_overlay())
             .map(Span::wall_seconds)
             .sum();
         covered / self.total_s
@@ -486,7 +519,7 @@ impl Trace {
                 out.push_str(", ");
             }
             let _ = write!(out, "{{\"phase\": \"{}\"", s.phase.name());
-            if let Phase::Cycle(idx) = s.phase {
+            if let Phase::Cycle(idx) | Phase::Link(idx) = s.phase {
                 let _ = write!(out, ", \"index\": {idx}");
             }
             let _ = write!(
@@ -629,6 +662,7 @@ impl Trace {
             let bar = bar.min(WIDTH - lead);
             let label = match s.phase {
                 Phase::Cycle(i) => format!("cycle[{i}]"),
+                Phase::Link(i) => format!("link[{i}]"),
                 p => p.name().to_string(),
             };
             let _ = writeln!(
@@ -674,6 +708,35 @@ impl Trace {
         }
         out
     }
+}
+
+/// Pick the trace to render from a dump.
+///
+/// With `--job N` the caller targeted a specific job: among its traces
+/// prefer the one with the richest phase chain (most spans, ties broken by
+/// longest life) **regardless of status** — a shed or failed trace was the
+/// whole point of asking for that job, not something to skip past.
+/// Without a target, prefer the slowest *completed* trace (the interesting
+/// tail latency), falling back to the slowest trace of any status.
+pub fn select_trace(traces: &[Trace], job: Option<u64>) -> Option<&Trace> {
+    if let Some(id) = job {
+        return traces
+            .iter()
+            .filter(|t| t.job_id == id)
+            .max_by(|a, b| {
+                (a.spans.len(), a.total_s)
+                    .partial_cmp(&(b.spans.len(), b.total_s))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+    }
+    let by_total = |a: &&Trace, b: &&Trace| {
+        a.total_s.partial_cmp(&b.total_s).unwrap_or(std::cmp::Ordering::Equal)
+    };
+    traces
+        .iter()
+        .filter(|t| t.status == TraceStatus::Completed)
+        .max_by(by_total)
+        .or_else(|| traces.iter().max_by(by_total))
 }
 
 /// Bounded per-service trace ring buffer.  Finalized traces are pushed under
@@ -764,6 +827,7 @@ mod tests {
             setup_sim_seconds: setup,
             cycle_sim_seconds: sims,
             cycle_wall_seconds: walls,
+            cycle_link_seconds: &[],
             booked_sim_seconds: (setup - discount) + sims.iter().sum::<f64>(),
             fold_k: 1,
         }
@@ -790,7 +854,7 @@ mod tests {
         assert!(t.coverage() > 0.999, "coverage {}", t.coverage());
         // Primary chain is contiguous and non-overlapping.
         let mut cursor = 0.0;
-        for s in t.spans.iter().filter(|s| s.phase != Phase::FoldMember) {
+        for s in t.spans.iter().filter(|s| !s.phase.is_overlay()) {
             assert!((s.start_s - cursor).abs() < 1e-12);
             assert!(s.end_s >= s.start_s);
             cursor = s.end_s;
@@ -875,5 +939,66 @@ mod tests {
         assert!(w.contains("residency-warm-hit"));
         assert!(w.contains("cycle[0]"));
         assert!(w.contains("plan: gmatrix dense"));
+    }
+
+    fn finished_with_links() -> Trace {
+        let mut rt = RequestTrace::begin(TraceId(11), 5, 0xfeed);
+        rt.mark_enqueued();
+        rt.mark_claimed();
+        rt.mark_build_start();
+        rt.mark_exec_start();
+        let sims = [0.001, 0.0012];
+        let walls = [1e-6, 1e-6];
+        let links = [4e-7, 0.0]; // second cycle measured no wire time
+        let mut prof = profile(&sims, &walls, false);
+        prof.cycle_link_seconds = &links;
+        rt.finish_completed(&prof)
+    }
+
+    #[test]
+    fn link_overlays_anchor_to_their_cycles() {
+        let t = finished_with_links();
+        let link_spans: Vec<&Span> =
+            t.spans.iter().filter(|s| matches!(s.phase, Phase::Link(_))).collect();
+        // zero-wall link entries are suppressed
+        assert_eq!(link_spans.len(), 1);
+        assert_eq!(link_spans[0].phase, Phase::Link(0));
+        assert_eq!(link_spans[0].sim_seconds, 0.0);
+        let cycle0 = t.spans.iter().find(|s| s.phase == Phase::Cycle(0)).unwrap();
+        assert_eq!(link_spans[0].start_s, cycle0.start_s);
+        assert!(link_spans[0].end_s <= t.total_s);
+        // overlays never break chain coverage or sim reconciliation
+        assert!(t.coverage() > 0.999, "coverage {}", t.coverage());
+        let rel = (t.execution_sim_total() - t.sim_seconds).abs() / t.sim_seconds;
+        assert!(rel < 1e-12, "rel {rel}");
+        // and they render + round-trip with their index
+        let w = t.render_waterfall();
+        assert!(w.contains("link[0]"), "waterfall:\n{w}");
+        let doc = format!("{{\"traces\": [{}]}}", t.to_json());
+        assert!(doc.contains("\"phase\": \"link\""));
+        let back = Trace::parse_dump(&doc).unwrap();
+        assert!(back[0].spans.iter().any(|s| s.phase == Phase::Link(0)));
+    }
+
+    #[test]
+    fn select_trace_honours_explicit_job_even_when_terminal() {
+        let completed = finished(false); // job 3
+        let mut rt = RequestTrace::begin(TraceId(20), 42, 1);
+        rt.mark_enqueued();
+        let shed = rt.finish_shed("deadline unmeetable");
+        let traces = vec![completed, shed];
+        // targeted: the shed trace is returned, not skipped for a
+        // slower completed one
+        let picked = select_trace(&traces, Some(42)).expect("job 42 present");
+        assert_eq!(picked.job_id, 42);
+        assert_eq!(picked.status, TraceStatus::Shed);
+        // untargeted: completed wins
+        let picked = select_trace(&traces, None).expect("non-empty");
+        assert_eq!(picked.status, TraceStatus::Completed);
+        // unknown job: none
+        assert!(select_trace(&traces, Some(999)).is_none());
+        // all-terminal dump without a target still renders something
+        let only_terminal = vec![traces[1].clone()];
+        assert_eq!(select_trace(&only_terminal, None).unwrap().job_id, 42);
     }
 }

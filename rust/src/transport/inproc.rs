@@ -1,0 +1,83 @@
+//! In-process transport: the historical sharded-executor semantics
+//! behind the [`Transport`] trait.
+//!
+//! Every member call is a plain function call against the owned
+//! [`ShardedMatrix`] — no serialization, no pipes, zero wire counters.
+//! This backend is the bit-level reference the process backend must
+//! match for f64.
+
+use crate::fleet::ShardedMatrix;
+use crate::linalg::blas;
+
+use super::{
+    LinkObservation, Transport, TransportError, TransportKind, TransportStats, WorkerHandle,
+};
+
+/// [`Transport`] backend that keeps all shard members in the calling
+/// process.
+pub struct InProcTransport {
+    sharded: ShardedMatrix,
+}
+
+impl InProcTransport {
+    /// Wrap an already-split sharded matrix.
+    pub fn new(sharded: ShardedMatrix) -> Self {
+        Self { sharded }
+    }
+
+    /// Borrow the underlying sharded matrix (shard inspection in tests).
+    pub fn sharded(&self) -> &ShardedMatrix {
+        &self.sharded
+    }
+}
+
+impl Transport for InProcTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProcess
+    }
+
+    fn members(&self) -> usize {
+        self.sharded.blocks().count()
+    }
+
+    fn matvec(
+        &mut self,
+        member: usize,
+        x: &[f64],
+        y_block: &mut [f64],
+    ) -> Result<(), TransportError> {
+        self.sharded.apply_shard_into(member, x, y_block);
+        Ok(())
+    }
+
+    fn dot_partial(
+        &mut self,
+        member: usize,
+        x_block: &[f64],
+        y_block: &[f64],
+    ) -> Result<f64, TransportError> {
+        let _ = member;
+        Ok(blas::dot(x_block, y_block))
+    }
+
+    fn norm_sq_partial(
+        &mut self,
+        member: usize,
+        x_block: &[f64],
+    ) -> Result<f64, TransportError> {
+        let _ = member;
+        Ok(blas::dot(x_block, x_block))
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats::default()
+    }
+
+    fn take_observations(&mut self) -> Vec<LinkObservation> {
+        Vec::new()
+    }
+
+    fn detach_workers(&mut self) -> Vec<WorkerHandle> {
+        Vec::new()
+    }
+}

@@ -1,0 +1,316 @@
+//! Per-link latency/bandwidth models and their online calibration.
+//!
+//! The analytic fleet cost model prices cross-device traffic off each
+//! GPU's PCIe spec — numbers that have never been validated against a
+//! real wire.  The process transport *measures* every round trip, and
+//! this module turns those measurements into a per-link
+//! `latency + bytes/bandwidth` model the planner can price sharded
+//! process-mode placements with, refined by EWMA exactly the way kernel
+//! cells calibrate today.
+//!
+//! Observations are split by frame size: round trips whose total wire
+//! bytes stay under [`SMALL_FRAME_BYTES`] are latency-dominated
+//! (reduction scalars, pings) and feed the latency estimate; everything
+//! larger is bandwidth-dominated (broadcasts, uploads) and feeds the
+//! bandwidth estimate after subtracting the current latency share.
+
+/// Round trips at or below this many total wire bytes count as
+/// latency-dominated "small" operations.
+pub const SMALL_FRAME_BYTES: u64 = 4096;
+
+/// A calibrated (or analytic) point-to-point link: one pipe or PCIe
+/// hop, priced as `latency + bytes / bandwidth`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    /// Fixed per-round-trip seconds.
+    pub latency_seconds: f64,
+    /// Sustained payload rate, bytes per second.
+    pub bytes_per_second: f64,
+}
+
+impl LinkModel {
+    /// Construct; bandwidth must be positive.
+    pub fn new(latency_seconds: f64, bytes_per_second: f64) -> Self {
+        assert!(bytes_per_second > 0.0, "link bandwidth must be positive");
+        assert!(latency_seconds >= 0.0, "link latency must be non-negative");
+        Self { latency_seconds, bytes_per_second }
+    }
+
+    /// Default analytic model of a local pipe to a worker process when
+    /// the device spec gives no better prior (host members).  Deliberately
+    /// modest: serialization shares the orchestrator's core.
+    pub fn pipe_default() -> Self {
+        Self::new(30e-6, 1.5e9)
+    }
+
+    /// Modeled seconds for one round trip moving `bytes` of payload.
+    pub fn time(&self, bytes: usize) -> f64 {
+        self.latency_seconds + bytes as f64 / self.bytes_per_second
+    }
+}
+
+/// One member-link's aggregated wall measurements over a window (a
+/// solve, a probe pass): small latency-dominated round trips and bulk
+/// bandwidth-dominated ones, kept separate so each refines the term it
+/// actually measures.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkObservation {
+    /// Round trips at or below [`SMALL_FRAME_BYTES`] total wire bytes.
+    pub small_ops: u64,
+    /// Wall seconds those small round trips took in total.
+    pub small_wall: f64,
+    /// Round trips above [`SMALL_FRAME_BYTES`].
+    pub bulk_ops: u64,
+    /// Total wire bytes moved by the bulk round trips.
+    pub bulk_bytes: u64,
+    /// Wall seconds the bulk round trips took in total.
+    pub bulk_wall: f64,
+}
+
+impl LinkObservation {
+    /// Fold one measured round trip into the window.
+    pub fn record(&mut self, wire_bytes: u64, wall_seconds: f64) {
+        if wire_bytes <= SMALL_FRAME_BYTES {
+            self.small_ops += 1;
+            self.small_wall += wall_seconds;
+        } else {
+            self.bulk_ops += 1;
+            self.bulk_bytes += wire_bytes;
+            self.bulk_wall += wall_seconds;
+        }
+    }
+
+    /// True when the window holds no measurements.
+    pub fn is_empty(&self) -> bool {
+        self.small_ops == 0 && self.bulk_ops == 0
+    }
+
+    /// Merge another window into this one.
+    pub fn merge(&mut self, other: &LinkObservation) {
+        self.small_ops += other.small_ops;
+        self.small_wall += other.small_wall;
+        self.bulk_ops += other.bulk_ops;
+        self.bulk_bytes += other.bulk_bytes;
+        self.bulk_wall += other.bulk_wall;
+    }
+}
+
+/// EWMA calibration state of every fleet link, indexed by
+/// [`crate::fleet::DeviceId`].  Seeded from startup probes, refined from
+/// per-solve transport observations; a device never observed reports
+/// `None` so callers can fall back to the analytic table.
+#[derive(Clone, Debug)]
+pub struct LinkCalibration {
+    links: Vec<Option<LinkModel>>,
+    alpha: f64,
+    observations: u64,
+}
+
+impl LinkCalibration {
+    /// One slot per fleet device, all unobserved.
+    pub fn new(devices: usize, alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "EWMA alpha must be in [0, 1]");
+        Self { links: vec![None; devices], alpha, observations: 0 }
+    }
+
+    /// Calibrated model for a device's link, if any measurement has
+    /// reached it.
+    pub fn model(&self, device: usize) -> Option<LinkModel> {
+        self.links.get(device).copied().flatten()
+    }
+
+    /// Number of devices with a calibrated link.
+    pub fn calibrated_links(&self) -> usize {
+        self.links.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Total observation windows folded in so far.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Seed a device's link directly (startup ping/probe pass) — an
+    /// unobserved slot takes the seed verbatim; an observed one EWMA-folds
+    /// it like any other measurement.
+    pub fn seed(&mut self, device: usize, model: LinkModel) {
+        if device >= self.links.len() {
+            return;
+        }
+        self.observations += 1;
+        self.links[device] = Some(match self.links[device] {
+            None => model,
+            Some(old) => Self::blend(self.alpha, old, model),
+        });
+    }
+
+    /// Fold one measurement window into a device's link model.  Small
+    /// round trips re-estimate latency; bulk ones re-estimate bandwidth
+    /// net of the latency share.  Empty windows are ignored.
+    pub fn observe(&mut self, device: usize, obs: &LinkObservation) {
+        if device >= self.links.len() || obs.is_empty() {
+            return;
+        }
+        let old = self.links[device];
+        let latency = if obs.small_ops > 0 {
+            obs.small_wall / obs.small_ops as f64
+        } else {
+            old.map(|l| l.latency_seconds).unwrap_or(LinkModel::pipe_default().latency_seconds)
+        };
+        let bandwidth = if obs.bulk_ops > 0 {
+            let payload_wall = (obs.bulk_wall - obs.bulk_ops as f64 * latency).max(1e-9);
+            (obs.bulk_bytes as f64 / payload_wall).max(1.0)
+        } else {
+            old.map(|l| l.bytes_per_second)
+                .unwrap_or(LinkModel::pipe_default().bytes_per_second)
+        };
+        let measured = LinkModel::new(latency.max(0.0), bandwidth);
+        self.observations += 1;
+        self.links[device] = Some(match old {
+            None => measured,
+            Some(prev) => Self::blend(self.alpha, prev, measured),
+        });
+    }
+
+    fn blend(alpha: f64, old: LinkModel, new: LinkModel) -> LinkModel {
+        LinkModel::new(
+            (1.0 - alpha) * old.latency_seconds + alpha * new.latency_seconds,
+            (1.0 - alpha) * old.bytes_per_second + alpha * new.bytes_per_second,
+        )
+    }
+
+    /// Snapshot of every calibrated link as `(device, model)` pairs.
+    pub fn snapshot(&self) -> Vec<(usize, LinkModel)> {
+        self.links
+            .iter()
+            .enumerate()
+            .filter_map(|(d, l)| l.map(|m| (d, m)))
+            .collect()
+    }
+}
+
+/// Wire seconds one GMRES(m) cycle adds in process mode across
+/// member links, given each member's link model and row count.  The
+/// orchestrator drives members sequentially per collective (one pipe at
+/// a time), so per-member costs SUM.  Per cycle each `rows > 0` member
+/// serves: `m + 2` matvecs (broadcast `8n` + gather `8·rows`; `m + 1`
+/// when the reduced-precision path verifies on the host), `m(m+1)/2`
+/// dot partials (`16·rows` out + scalar back) and `m + 2` norm partials
+/// (`8·rows` out + scalar back; `m + 1` reduced).  Empty members cost
+/// nothing — the engine never calls them.
+pub fn process_cycle_wire_seconds(
+    links: &[LinkModel],
+    rows: &[usize],
+    n: usize,
+    m: usize,
+    reduced: bool,
+) -> f64 {
+    assert_eq!(links.len(), rows.len(), "one link model per member");
+    let matvecs = if reduced { m + 1 } else { m + 2 };
+    let norms = matvecs;
+    let dots = m * (m + 1) / 2;
+    links
+        .iter()
+        .zip(rows)
+        .filter(|(_, &r)| r > 0)
+        .map(|(link, &r)| {
+            matvecs as f64 * link.time(8 * n + 8 * r)
+                + dots as f64 * link.time(16 * r + 8)
+                + norms as f64 * link.time(8 * r + 8)
+        })
+        .sum()
+}
+
+/// Wire seconds of the one-time shard upload in process mode: each
+/// `rows > 0` member receives its block (`bytes_per_member`) once.
+pub fn process_setup_wire_seconds(links: &[LinkModel], bytes_per_member: &[usize]) -> f64 {
+    assert_eq!(links.len(), bytes_per_member.len(), "one link model per member");
+    links
+        .iter()
+        .zip(bytes_per_member)
+        .filter(|(_, &b)| b > 0)
+        .map(|(link, &b)| link.time(b))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_time_is_latency_plus_bandwidth() {
+        let l = LinkModel::new(1e-4, 1e9);
+        assert!((l.time(0) - 1e-4).abs() < 1e-15);
+        assert!((l.time(1_000_000) - (1e-4 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observation_classifies_small_vs_bulk() {
+        let mut o = LinkObservation::default();
+        o.record(100, 1e-4);
+        o.record(SMALL_FRAME_BYTES, 1e-4);
+        o.record(SMALL_FRAME_BYTES + 1, 2e-3);
+        assert_eq!(o.small_ops, 2);
+        assert_eq!(o.bulk_ops, 1);
+        assert_eq!(o.bulk_bytes, SMALL_FRAME_BYTES + 1);
+        assert!((o.small_wall - 2e-4).abs() < 1e-12);
+        let mut merged = LinkObservation::default();
+        merged.merge(&o);
+        merged.merge(&o);
+        assert_eq!(merged.small_ops, 4);
+        assert_eq!(merged.bulk_ops, 2);
+    }
+
+    #[test]
+    fn calibration_recovers_a_synthetic_link() {
+        // a link with 50us latency and 2 GB/s: feed exact windows and the
+        // estimate must converge to the truth
+        let mut cal = LinkCalibration::new(2, 0.5);
+        assert!(cal.model(0).is_none());
+        let truth = LinkModel::new(50e-6, 2e9);
+        for _ in 0..32 {
+            let mut obs = LinkObservation::default();
+            for _ in 0..10 {
+                obs.record(64, truth.time(0)); // pure-latency scalar trips
+            }
+            obs.record(1 << 20, truth.time(1 << 20));
+            cal.observe(0, &obs);
+        }
+        let got = cal.model(0).unwrap();
+        assert!((got.latency_seconds - 50e-6).abs() / 50e-6 < 0.05, "{got:?}");
+        assert!((got.bytes_per_second - 2e9).abs() / 2e9 < 0.10, "{got:?}");
+        assert!(cal.model(1).is_none(), "unobserved link stays analytic");
+        assert_eq!(cal.calibrated_links(), 1);
+        assert!(cal.observations() >= 32);
+    }
+
+    #[test]
+    fn seeding_fills_unobserved_slots_verbatim() {
+        let mut cal = LinkCalibration::new(3, 0.25);
+        let seed = LinkModel::new(20e-6, 3e9);
+        cal.seed(1, seed);
+        assert_eq!(cal.model(1).unwrap(), seed);
+        assert_eq!(cal.snapshot(), vec![(1, seed)]);
+        // out-of-range device is ignored, not a panic
+        cal.seed(9, seed);
+        assert_eq!(cal.calibrated_links(), 1);
+    }
+
+    #[test]
+    fn cycle_wire_seconds_skips_empty_members_and_scales_with_m() {
+        let links = vec![LinkModel::new(1e-5, 1e9), LinkModel::new(1e-5, 1e9)];
+        let some = process_cycle_wire_seconds(&links, &[100, 100], 200, 8, false);
+        let one = process_cycle_wire_seconds(&links, &[200, 0], 200, 8, false);
+        assert!(some > one, "an empty member must cost nothing");
+        let bigger_m = process_cycle_wire_seconds(&links, &[100, 100], 200, 16, false);
+        assert!(bigger_m > some);
+        let reduced = process_cycle_wire_seconds(&links, &[100, 100], 200, 8, true);
+        assert!(reduced < some, "reduced cycles run one fewer matvec+norm");
+    }
+
+    #[test]
+    fn setup_wire_sums_member_uploads() {
+        let links = vec![LinkModel::new(1e-5, 1e9), LinkModel::new(1e-5, 2e9)];
+        let t = process_setup_wire_seconds(&links, &[1_000_000, 0]);
+        assert!((t - links[0].time(1_000_000)).abs() < 1e-15);
+    }
+}

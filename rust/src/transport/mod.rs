@@ -1,0 +1,214 @@
+//! Cross-process shard transport: how the sharded executor reaches its
+//! member devices.
+//!
+//! Until this subsystem existed, every row-block partial of a sharded
+//! solve was computed in-process — the fleet link model had never met a
+//! real wire.  [`Transport`] abstracts the member boundary: the
+//! [`inproc::InProcTransport`] backend keeps the existing
+//! function-call semantics, while [`process::ProcessTransport`] runs
+//! each member as a spawned `gmres-rs shard-worker` OS process speaking
+//! the length-framed binary protocol in [`wire`] over stdin/stdout
+//! pipes.  Both run the exact same kernels on the same bits in the same
+//! order, so f64 process-mode solves are **bit-identical** to the
+//! in-process reference — `tests/transport_e2e.rs` pins it.
+//!
+//! Per-link wall times measured by the process backend flow through
+//! [`link::LinkCalibration`] into the planner, which prices sharded
+//! process-mode placements off calibrated links instead of the analytic
+//! PCIe table alone.  Worker lifecycle (spawn, health checks, respawn
+//! after a crash) is owned by [`pool::WorkerPool`] on behalf of the
+//! fleet scheduler.
+
+pub mod inproc;
+pub mod link;
+pub mod pool;
+pub mod process;
+pub mod wire;
+pub mod worker;
+
+pub use inproc::InProcTransport;
+pub use link::{LinkCalibration, LinkModel, LinkObservation};
+pub use pool::WorkerPool;
+pub use process::{ProcessTransport, WorkerHandle};
+
+/// Which member boundary a sharded solve crosses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum TransportKind {
+    /// Members are function calls in the orchestrator's own process
+    /// (the historical executor; zero wire cost).
+    #[default]
+    InProcess,
+    /// Members are spawned `gmres-rs shard-worker` OS processes driven
+    /// over length-framed pipes.
+    Process,
+}
+
+impl TransportKind {
+    /// CLI token (`in-process` | `process`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "in-process",
+            TransportKind::Process => "process",
+        }
+    }
+
+    /// Case-insensitive parse of the CLI token.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "in-process" | "inprocess" | "inproc" | "channel" => Some(TransportKind::InProcess),
+            "process" | "os-process" | "proc" => Some(TransportKind::Process),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What went wrong at the transport boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportErrorKind {
+    /// The worker process died or its pipe closed mid-conversation.
+    WorkerDied,
+    /// The worker answered, but with a frame that violates the protocol.
+    Protocol,
+    /// The worker binary could not be spawned at all.
+    SpawnFailed,
+}
+
+impl TransportErrorKind {
+    /// Short stable token for logs and metrics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportErrorKind::WorkerDied => "worker-died",
+            TransportErrorKind::Protocol => "protocol",
+            TransportErrorKind::SpawnFailed => "spawn-failed",
+        }
+    }
+}
+
+/// Typed transport failure: which member, what kind, and the detail.
+/// Carried through `anyhow` so the coordinator can downcast and fail
+/// exactly the owning job while siblings keep running.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransportError {
+    /// Failure class.
+    pub kind: TransportErrorKind,
+    /// Shard member index the failure is attributed to.
+    pub member: usize,
+    /// Human-readable detail (io error text, offending frame name).
+    pub detail: String,
+}
+
+impl TransportError {
+    /// Construct a typed failure for one member.
+    pub fn new(kind: TransportErrorKind, member: usize, detail: impl Into<String>) -> Self {
+        Self { kind, member, detail: detail.into() }
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "transport failure [{}] at shard member {}: {}",
+            self.kind.name(),
+            self.member,
+            self.detail
+        )
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Aggregated transport-side counters of one engine's lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransportStats {
+    /// Total wire bytes moved (both directions, frame prefixes included).
+    pub bytes: u64,
+    /// Round trips completed (one request + one reply).
+    pub round_trips: u64,
+    /// Wall seconds spent inside round trips (serialize + pipe + worker
+    /// compute + deserialize).
+    pub wall_seconds: f64,
+}
+
+/// The member boundary of a sharded solve.  One implementor call maps
+/// to one collective leg against one member: a matvec partial with the
+/// full `x` broadcast in and the member's `y` block gathered out, or a
+/// partial reduction returning a scalar.  Implementations must perform
+/// the arithmetic with the crate's own kernels ([`crate::linalg::blas`]
+/// / [`crate::linalg::LinearOperator::apply_into`]) so every backend is
+/// bit-identical for f64.
+pub trait Transport: Send {
+    /// Which boundary this is.
+    fn kind(&self) -> TransportKind;
+
+    /// Number of shard members.
+    fn members(&self) -> usize;
+
+    /// Compute member `k`'s matvec partial: `y_block = A_k x`.
+    /// `y_block.len()` must equal the member's row count; zero-row
+    /// members are never called.
+    fn matvec(
+        &mut self,
+        member: usize,
+        x: &[f64],
+        y_block: &mut [f64],
+    ) -> Result<(), TransportError>;
+
+    /// Member `k`'s dot-product partial over its block slices.
+    fn dot_partial(
+        &mut self,
+        member: usize,
+        x_block: &[f64],
+        y_block: &[f64],
+    ) -> Result<f64, TransportError>;
+
+    /// Member `k`'s squared-norm partial over its block slice.
+    fn norm_sq_partial(&mut self, member: usize, x_block: &[f64])
+        -> Result<f64, TransportError>;
+
+    /// Lifetime wire counters (zero for the in-process backend).
+    fn stats(&self) -> TransportStats;
+
+    /// Drain per-member link measurement windows accumulated since the
+    /// last call, indexed by member (empty vec when nothing measured —
+    /// the in-process backend never measures).
+    fn take_observations(&mut self) -> Vec<LinkObservation>;
+
+    /// Surrender the live worker handles for pool reclamation (process
+    /// backend); the in-process backend returns an empty vec.  After
+    /// this call the transport must not be used again.
+    fn detach_workers(&mut self) -> Vec<WorkerHandle>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_cli_tokens() {
+        assert_eq!(TransportKind::parse("in-process"), Some(TransportKind::InProcess));
+        assert_eq!(TransportKind::parse("PROCESS"), Some(TransportKind::Process));
+        assert_eq!(TransportKind::parse("proc"), Some(TransportKind::Process));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+        assert_eq!(TransportKind::default(), TransportKind::InProcess);
+        assert_eq!(TransportKind::Process.to_string(), "process");
+    }
+
+    #[test]
+    fn transport_error_displays_and_downcasts_through_anyhow() {
+        let e = TransportError::new(TransportErrorKind::WorkerDied, 1, "pipe closed");
+        let text = e.to_string();
+        assert!(text.contains("worker-died"), "{text}");
+        assert!(text.contains("member 1"), "{text}");
+        let any: anyhow::Error = e.clone().into();
+        let back = any.downcast_ref::<TransportError>().expect("typed downcast");
+        assert_eq!(back, &e);
+        assert_eq!(back.kind, TransportErrorKind::WorkerDied);
+    }
+}

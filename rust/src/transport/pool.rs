@@ -1,0 +1,138 @@
+//! Worker-process lifecycle for the fleet scheduler.
+//!
+//! [`WorkerPool`] keeps idle shard-worker processes per fleet device
+//! and hands them to sharded process-mode jobs at claim time.  Checkout
+//! health-checks a reused worker with a ping — a dead worker is reaped,
+//! counted as a restart, and replaced with a fresh spawn, so a crash
+//! only fails the job that was talking to the worker when it died; the
+//! next wave gets a respawned process.  Check-in returns live workers
+//! to the idle slots and kills unhealthy ones.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::process::WorkerHandle;
+use super::TransportError;
+
+/// Per-device idle shard-worker slots with crash-respawn accounting.
+pub struct WorkerPool {
+    /// `idle[d]` holds parked workers for fleet device `d`.
+    idle: Mutex<Vec<Vec<WorkerHandle>>>,
+    /// Pids currently checked out per device (fault-injection target).
+    checked_out: Mutex<Vec<Vec<u32>>>,
+    restarts: AtomicU64,
+    nonce: AtomicU64,
+}
+
+impl WorkerPool {
+    /// A pool covering `devices` fleet slots, all initially empty —
+    /// workers are spawned lazily at first checkout.
+    pub fn new(devices: usize) -> Self {
+        Self {
+            idle: Mutex::new((0..devices).map(|_| Vec::new()).collect()),
+            checked_out: Mutex::new((0..devices).map(|_| Vec::new()).collect()),
+            restarts: AtomicU64::new(0),
+            nonce: AtomicU64::new(1),
+        }
+    }
+
+    /// Number of fleet device slots this pool covers.
+    pub fn devices(&self) -> usize {
+        self.idle.lock().unwrap().len()
+    }
+
+    /// Workers respawned after failed health checks or crash check-ins.
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Idle workers currently parked for `device`.
+    pub fn idle_count(&self, device: usize) -> usize {
+        self.idle.lock().unwrap()[device].len()
+    }
+
+    /// Check out a live worker for `device`: reuse an idle one when its
+    /// ping passes (reaping and counting a restart when it does not),
+    /// else spawn fresh.
+    pub fn checkout(&self, device: usize) -> Result<WorkerHandle, TransportError> {
+        loop {
+            let parked = self.idle.lock().unwrap()[device].pop();
+            match parked {
+                Some(mut handle) => {
+                    let nonce = self.nonce.fetch_add(1, Ordering::Relaxed);
+                    if handle.ping(nonce) {
+                        self.note_checkout(device, handle.pid());
+                        return Ok(handle);
+                    }
+                    // dead on arrival: reap, count, try the next slot
+                    handle.kill();
+                    drop(handle);
+                    self.restarts.fetch_add(1, Ordering::Relaxed);
+                }
+                None => {
+                    let handle = WorkerHandle::spawn(device)?;
+                    self.note_checkout(device, handle.pid());
+                    return Ok(handle);
+                }
+            }
+        }
+    }
+
+    /// Return a worker after a solve.  Healthy workers park for reuse;
+    /// unhealthy ones (their job saw a transport failure) are killed
+    /// and counted as a restart so the next checkout spawns fresh.
+    pub fn checkin(&self, mut handle: WorkerHandle) {
+        let device = handle.device();
+        self.forget_checkout(device, handle.pid());
+        if handle.is_healthy() {
+            self.idle.lock().unwrap()[device].push(handle);
+        } else {
+            handle.kill();
+            self.restarts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Forget a checked-out worker whose handle was consumed by a failed
+    /// engine build (the handle's drop already killed the process).
+    /// Counted as a restart: the next checkout spawns fresh.
+    pub fn forget_lost(&self, device: usize, pid: u32) {
+        self.forget_checkout(device, pid);
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fault injection for crash tests: SIGKILL one worker currently
+    /// checked out on `device`.  Returns the pid it killed, if any.
+    pub fn kill_checked_out(&self, device: usize) -> Option<u32> {
+        let pid = self.checked_out.lock().unwrap()[device].first().copied()?;
+        let _ = std::process::Command::new("kill")
+            .arg("-9")
+            .arg(pid.to_string())
+            .status();
+        Some(pid)
+    }
+
+    /// Kill and drop every idle worker (orderly service shutdown).
+    pub fn shutdown(&self) {
+        let mut idle = self.idle.lock().unwrap();
+        for slot in idle.iter_mut() {
+            for mut handle in slot.drain(..) {
+                handle.kill();
+            }
+        }
+    }
+
+    fn note_checkout(&self, device: usize, pid: u32) {
+        self.checked_out.lock().unwrap()[device].push(pid);
+    }
+
+    fn forget_checkout(&self, device: usize, pid: u32) {
+        let mut out = self.checked_out.lock().unwrap();
+        out[device].retain(|&p| p != pid);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

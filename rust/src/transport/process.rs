@@ -1,0 +1,387 @@
+//! OS-process transport: shard members as spawned `gmres-rs
+//! shard-worker` processes driven over length-framed pipes.
+//!
+//! Each [`WorkerHandle`] owns one child process plus its buffered
+//! stdin/stdout conversation; [`ProcessTransport`] maps shard members
+//! onto handles and implements [`Transport`] by exchanging
+//! [`wire`](super::wire) frames.  Every round trip is wall-clocked and
+//! size-accounted into a per-link [`LinkObservation`] window, which the
+//! coordinator drains into the planner's link calibration.  Runtime
+//! vectors always cross the wire as full f64 bits (Arnoldi vectors are
+//! f64 even in reduced-precision solves), so process-mode answers are
+//! bit-identical to the in-process backend; only the one-time shard
+//! upload narrows to f32 bits when the residency was narrowed.
+
+use std::io::{self, BufReader, Write};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::time::Instant;
+
+use crate::linalg::SystemMatrix;
+
+use crate::fleet::ShardedMatrix;
+
+use super::wire::{read_frame, write_frame, Frame, Values};
+use super::{
+    LinkObservation, Transport, TransportError, TransportErrorKind, TransportKind, TransportStats,
+};
+
+/// Resolve the command for spawning a shard worker.
+///
+/// Resolution order: the `GMRES_RS_WORKER_BIN` environment variable;
+/// the current executable when it *is* the `gmres-rs` binary; a
+/// `gmres-rs` sibling of the current executable (covers `cargo test`
+/// binaries under `target/<profile>/deps`); finally `gmres-rs` on
+/// `PATH`.
+pub fn worker_command() -> Command {
+    if let Ok(path) = std::env::var("GMRES_RS_WORKER_BIN") {
+        if !path.is_empty() {
+            return Command::new(path);
+        }
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        let own = exe
+            .file_name()
+            .map(|f| f.to_string_lossy().starts_with("gmres-rs"))
+            .unwrap_or(false);
+        if own {
+            return Command::new(exe);
+        }
+        let mut dirs = Vec::new();
+        if let Some(p) = exe.parent() {
+            dirs.push(p.to_path_buf());
+            if let Some(pp) = p.parent() {
+                dirs.push(pp.to_path_buf());
+            }
+        }
+        for dir in dirs {
+            let candidate = dir.join("gmres-rs");
+            if candidate.is_file() {
+                return Command::new(candidate);
+            }
+        }
+    }
+    Command::new("gmres-rs")
+}
+
+/// One buffered request/reply conversation with a worker, with wire
+/// accounting per round trip.
+struct WireConn {
+    writer: ChildStdin,
+    reader: BufReader<ChildStdout>,
+    bytes: u64,
+    round_trips: u64,
+    wall_seconds: f64,
+    window: LinkObservation,
+}
+
+impl WireConn {
+    fn new(writer: ChildStdin, reader: ChildStdout) -> Self {
+        Self {
+            writer,
+            reader: BufReader::new(reader),
+            bytes: 0,
+            round_trips: 0,
+            wall_seconds: 0.0,
+            window: LinkObservation::default(),
+        }
+    }
+
+    /// One measured round trip: write + flush + read the reply.
+    fn call(&mut self, frame: &Frame) -> io::Result<Frame> {
+        let started = Instant::now();
+        let wrote = write_frame(&mut self.writer, frame)?;
+        self.writer.flush()?;
+        let (reply, read) = read_frame(&mut self.reader)?;
+        let wall = started.elapsed().as_secs_f64();
+        let wire = (wrote + read) as u64;
+        self.bytes += wire;
+        self.round_trips += 1;
+        self.wall_seconds += wall;
+        self.window.record(wire, wall);
+        Ok(reply)
+    }
+}
+
+/// A live shard-worker process: the child, its conversation, the fleet
+/// device it stands in for, and a health flag the pool consults on
+/// check-in.
+pub struct WorkerHandle {
+    child: Child,
+    conn: WireConn,
+    device: usize,
+    pid: u32,
+    healthy: bool,
+}
+
+impl WorkerHandle {
+    /// Spawn a fresh worker for `device`.
+    pub fn spawn(device: usize) -> Result<WorkerHandle, TransportError> {
+        let mut cmd = worker_command();
+        cmd.arg("shard-worker").stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::null());
+        let mut child = cmd.spawn().map_err(|e| {
+            TransportError::new(
+                TransportErrorKind::SpawnFailed,
+                device,
+                format!("spawning shard worker: {e}"),
+            )
+        })?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let pid = child.id();
+        Ok(WorkerHandle { child, conn: WireConn::new(stdin, stdout), device, pid, healthy: true })
+    }
+
+    /// Fleet device this worker stands in for.
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    /// OS process id of the worker.
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    /// False once any round trip against this worker has failed.
+    pub fn is_healthy(&self) -> bool {
+        self.healthy
+    }
+
+    /// One measured round trip; marks the handle unhealthy on failure.
+    fn call(&mut self, frame: &Frame) -> io::Result<Frame> {
+        match self.conn.call(frame) {
+            Ok(reply) => Ok(reply),
+            Err(e) => {
+                self.healthy = false;
+                Err(e)
+            }
+        }
+    }
+
+    /// Liveness check: ping with `nonce`, expect the echoed pong.
+    pub fn ping(&mut self, nonce: u64) -> bool {
+        match self.call(&Frame::Ping { nonce }) {
+            Ok(Frame::Pong { nonce: echoed }) if echoed == nonce => true,
+            _ => {
+                self.healthy = false;
+                false
+            }
+        }
+    }
+
+    /// Bandwidth probe: ship `len` opaque bytes, expect the length ack.
+    /// The measurement lands in this handle's observation window.
+    pub fn probe(&mut self, len: usize) -> bool {
+        let payload = vec![0xA5u8; len];
+        match self.call(&Frame::Probe { payload }) {
+            Ok(Frame::ProbeAck { len: acked }) if acked == len as u64 => true,
+            _ => {
+                self.healthy = false;
+                false
+            }
+        }
+    }
+
+    /// Drain this handle's link measurement window.
+    pub fn take_observation(&mut self) -> LinkObservation {
+        std::mem::take(&mut self.conn.window)
+    }
+
+    /// Best-effort orderly shutdown, then kill + reap.
+    pub fn kill(&mut self) {
+        let _ = write_frame(&mut self.conn.writer, &Frame::Shutdown)
+            .and_then(|_| self.conn.writer.flush());
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        self.healthy = false;
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// [`Transport`] backend that drives shard members as worker processes.
+pub struct ProcessTransport {
+    workers: Vec<WorkerHandle>,
+    rows: Vec<usize>,
+}
+
+fn io_to_transport(member: usize, op: &str, e: &io::Error) -> TransportError {
+    let kind = match e.kind() {
+        io::ErrorKind::UnexpectedEof | io::ErrorKind::BrokenPipe | io::ErrorKind::WriteZero => {
+            TransportErrorKind::WorkerDied
+        }
+        _ => TransportErrorKind::Protocol,
+    };
+    TransportError::new(kind, member, format!("{op}: {e}"))
+}
+
+fn unexpected_reply(member: usize, op: &str, reply: &Frame) -> TransportError {
+    match reply {
+        Frame::Err { message } => TransportError::new(
+            TransportErrorKind::Protocol,
+            member,
+            format!("{op}: worker error: {message}"),
+        ),
+        other => TransportError::new(
+            TransportErrorKind::Protocol,
+            member,
+            format!("{op}: unexpected '{}' reply", other.name()),
+        ),
+    }
+}
+
+impl ProcessTransport {
+    /// Spawn one fresh worker per member, standing in for the given
+    /// fleet devices.
+    pub fn spawn(devices: &[usize]) -> Result<ProcessTransport, TransportError> {
+        let workers =
+            devices.iter().map(|&d| WorkerHandle::spawn(d)).collect::<Result<Vec<_>, _>>()?;
+        Ok(Self { rows: vec![0; workers.len()], workers })
+    }
+
+    /// Adopt already-live workers (pool checkout), one per member in
+    /// order.
+    pub fn from_workers(workers: Vec<WorkerHandle>) -> ProcessTransport {
+        Self { rows: vec![0; workers.len()], workers }
+    }
+
+    /// Upload every member's shard.  `narrow` ships values as f32 bits
+    /// (lossless for narrowed residencies).  Must be called once before
+    /// any collective.
+    pub fn upload(
+        &mut self,
+        sharded: &ShardedMatrix,
+        narrow: bool,
+    ) -> Result<(), TransportError> {
+        assert_eq!(
+            self.workers.len(),
+            sharded.blocks().count(),
+            "one worker per shard member"
+        );
+        for k in 0..self.workers.len() {
+            let rows = sharded.blocks().rows(k);
+            let n = sharded.n();
+            let frame = match sharded.shard(k) {
+                SystemMatrix::Dense(d) => Frame::UploadDense {
+                    rows: rows as u64,
+                    n: n as u64,
+                    values: Values::from_f64(d.data(), narrow),
+                },
+                SystemMatrix::Csr(c) => Frame::UploadCsr {
+                    rows: rows as u64,
+                    n: n as u64,
+                    row_ptr: c.row_ptr().iter().map(|&p| p as i32).collect(),
+                    col_idx: c.col_idx().iter().map(|&j| j as i32).collect(),
+                    values: Values::from_f64(c.values(), narrow),
+                },
+            };
+            let reply = self.workers[k]
+                .call(&frame)
+                .map_err(|e| io_to_transport(k, "upload", &e))?;
+            if reply != Frame::Ok {
+                return Err(unexpected_reply(k, "upload", &reply));
+            }
+            self.rows[k] = rows;
+        }
+        Ok(())
+    }
+
+    /// Fetch member `k`'s busy/bytes report.
+    pub fn report(&mut self, member: usize) -> Result<(f64, u64, u64), TransportError> {
+        let reply = self.workers[member]
+            .call(&Frame::Report)
+            .map_err(|e| io_to_transport(member, "report", &e))?;
+        match reply {
+            Frame::ReportReply { busy_seconds, bytes, ops } => Ok((busy_seconds, bytes, ops)),
+            other => Err(unexpected_reply(member, "report", &other)),
+        }
+    }
+
+    fn scalar_call(&mut self, member: usize, op: &str, frame: &Frame) -> Result<f64, TransportError> {
+        let reply = self.workers[member]
+            .call(frame)
+            .map_err(|e| io_to_transport(member, op, &e))?;
+        match reply {
+            Frame::Scalar { v } => Ok(v),
+            other => Err(unexpected_reply(member, op, &other)),
+        }
+    }
+}
+
+impl Transport for ProcessTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Process
+    }
+
+    fn members(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn matvec(
+        &mut self,
+        member: usize,
+        x: &[f64],
+        y_block: &mut [f64],
+    ) -> Result<(), TransportError> {
+        debug_assert_eq!(y_block.len(), self.rows[member], "gather block must match upload");
+        let frame = Frame::Matvec { x: Values::F64(x.to_vec()) };
+        let reply = self.workers[member]
+            .call(&frame)
+            .map_err(|e| io_to_transport(member, "matvec", &e))?;
+        match reply {
+            Frame::YBlock { y } if y.len() == y_block.len() => {
+                y_block.copy_from_slice(&y.to_f64_vec());
+                Ok(())
+            }
+            Frame::YBlock { y } => Err(TransportError::new(
+                TransportErrorKind::Protocol,
+                member,
+                format!("matvec: gather of {} rows, expected {}", y.len(), y_block.len()),
+            )),
+            other => Err(unexpected_reply(member, "matvec", &other)),
+        }
+    }
+
+    fn dot_partial(
+        &mut self,
+        member: usize,
+        x_block: &[f64],
+        y_block: &[f64],
+    ) -> Result<f64, TransportError> {
+        let frame = Frame::Dot {
+            x: Values::F64(x_block.to_vec()),
+            y: Values::F64(y_block.to_vec()),
+        };
+        self.scalar_call(member, "dot", &frame)
+    }
+
+    fn norm_sq_partial(
+        &mut self,
+        member: usize,
+        x_block: &[f64],
+    ) -> Result<f64, TransportError> {
+        let frame = Frame::NormSq { x: Values::F64(x_block.to_vec()) };
+        self.scalar_call(member, "norm-sq", &frame)
+    }
+
+    fn stats(&self) -> TransportStats {
+        let mut s = TransportStats::default();
+        for w in &self.workers {
+            s.bytes += w.conn.bytes;
+            s.round_trips += w.conn.round_trips;
+            s.wall_seconds += w.conn.wall_seconds;
+        }
+        s
+    }
+
+    fn take_observations(&mut self) -> Vec<LinkObservation> {
+        self.workers.iter_mut().map(|w| w.take_observation()).collect()
+    }
+
+    fn detach_workers(&mut self) -> Vec<WorkerHandle> {
+        std::mem::take(&mut self.workers)
+    }
+}

@@ -1,0 +1,696 @@
+//! Length-framed binary wire protocol for cross-process shard transport.
+//!
+//! Every message is one **frame**: a 4-byte little-endian body length
+//! followed by the body (a 1-byte tag plus the tag's payload).  The
+//! encoding is hand-rolled over `std::io` only — no serde, no external
+//! crates — and every numeric field crosses the wire as raw
+//! little-endian bits, so f64 payloads round-trip **bit-exactly**
+//! (including NaN payloads and signed zeros).  That bit-exactness is
+//! what lets the process transport promise results identical to the
+//! in-process reference: the worker runs the same kernels on the same
+//! bits in the same order.
+//!
+//! Reduced-precision shards ship narrowed: a value array whose every
+//! element is exactly f32-representable (the f32/tf32 residency views
+//! narrow through f32, and tf32's mantissa is a subset of f32's) is
+//! encoded as raw f32 bits and widened exactly on arrival —
+//! [`Values::F32`] halves upload traffic without losing a bit.
+
+use std::io::{self, Read, Write};
+
+/// Hard upper bound on one frame's body, bytes.  A length prefix past
+/// this is treated as stream corruption rather than honored with a
+/// gigantic allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// A numeric array on the wire: full-width f64 bits, or exactly
+/// f32-representable values shipped as f32 bits and widened losslessly
+/// on arrival.
+#[derive(Clone, Debug)]
+pub enum Values {
+    /// Raw little-endian f64 bits.
+    F64(Vec<f64>),
+    /// Raw little-endian f32 bits — only for arrays whose elements are
+    /// exactly f32-representable (narrowed f32/tf32 residency values).
+    F32(Vec<f32>),
+}
+
+impl Values {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            Values::F64(v) => v.len(),
+            Values::F32(v) => v.len(),
+        }
+    }
+
+    /// True when the array holds no elements (zero-row shards, empty
+    /// right-hand sides).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Widen to f64 — exact for [`Values::F32`] because every f32 is
+    /// exactly representable in f64.
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            Values::F64(v) => v.clone(),
+            Values::F32(v) => v.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// Encode an f64 array, narrowing to f32 bits when `narrow` is set.
+    /// Narrowing is only lossless when every element is exactly
+    /// f32-representable — the caller's contract (narrowed residency
+    /// values satisfy it by construction).
+    pub fn from_f64(values: &[f64], narrow: bool) -> Values {
+        if narrow {
+            Values::F32(values.iter().map(|&x| x as f32).collect())
+        } else {
+            Values::F64(values.to_vec())
+        }
+    }
+
+    /// Wire bytes of this array's payload (excluding the 1-byte width
+    /// tag and 8-byte length).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Values::F64(v) => 8 * v.len(),
+            Values::F32(v) => 4 * v.len(),
+        }
+    }
+}
+
+impl PartialEq for Values {
+    /// Bit-exact comparison (NaN payloads compare equal to themselves).
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Values::F64(a), Values::F64(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            (Values::F32(a), Values::F32(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            _ => false,
+        }
+    }
+}
+
+/// One wire message.  Request frames flow orchestrator → worker, reply
+/// frames flow back; [`Frame::Err`] reports a worker-side protocol
+/// failure in-band.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Generic acknowledgement (upload accepted, shutdown accepted).
+    Ok,
+    /// Establish a dense `rows × n` row-block shard on the worker.
+    UploadDense {
+        /// Rows of this shard (may be 0 for an empty block).
+        rows: u64,
+        /// Columns = the full system order.
+        n: u64,
+        /// Row-major slab values, `rows * n` elements.
+        values: Values,
+    },
+    /// Establish a CSR `rows × n` row-block shard on the worker.  Index
+    /// arrays use the device-standard i32 width.
+    UploadCsr {
+        /// Rows of this shard.
+        rows: u64,
+        /// Columns = the full system order.
+        n: u64,
+        /// Row pointers, `rows + 1` entries.
+        row_ptr: Vec<i32>,
+        /// Column indices, one per stored value.
+        col_idx: Vec<i32>,
+        /// Stored values, aligned with `col_idx`.
+        values: Values,
+    },
+    /// Broadcast `x` and request this shard's matvec partial.
+    Matvec {
+        /// Full-length input vector (length `n`).
+        x: Values,
+    },
+    /// Matvec gather reply: the shard's output block.
+    YBlock {
+        /// Partial result, `rows` elements of full-width f64.
+        y: Values,
+    },
+    /// Dot-product partial over two block slices of equal length.
+    Dot {
+        /// Left operand block.
+        x: Values,
+        /// Right operand block.
+        y: Values,
+    },
+    /// Squared-norm partial over one block slice.
+    NormSq {
+        /// Operand block.
+        x: Values,
+    },
+    /// Scalar reduction reply (raw f64 bits).
+    Scalar {
+        /// The partial reduction value.
+        v: f64,
+    },
+    /// Request the worker's accumulated busy/bytes report.
+    Report,
+    /// Busy/bytes report reply.
+    ReportReply {
+        /// Wall seconds the worker spent computing (not waiting on the
+        /// pipe).
+        busy_seconds: f64,
+        /// Payload bytes the worker has received + sent.
+        bytes: u64,
+        /// Operations served since upload.
+        ops: u64,
+    },
+    /// Liveness probe with an echo nonce.
+    Ping {
+        /// Echoed back verbatim in [`Frame::Pong`].
+        nonce: u64,
+    },
+    /// Liveness reply.
+    Pong {
+        /// The [`Frame::Ping`] nonce, echoed.
+        nonce: u64,
+    },
+    /// Bandwidth probe: an opaque payload the worker acknowledges by
+    /// length (startup link calibration).
+    Probe {
+        /// Opaque bytes; content is irrelevant, size is the point.
+        payload: Vec<u8>,
+    },
+    /// Bandwidth-probe acknowledgement.
+    ProbeAck {
+        /// Length of the probe payload received.
+        len: u64,
+    },
+    /// Orderly worker shutdown request.
+    Shutdown,
+    /// Worker-side protocol error, reported in-band.
+    Err {
+        /// Human-readable failure description.
+        message: String,
+    },
+}
+
+impl Frame {
+    /// Short frame name for error messages and span labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Ok => "ok",
+            Frame::UploadDense { .. } => "upload-dense",
+            Frame::UploadCsr { .. } => "upload-csr",
+            Frame::Matvec { .. } => "matvec",
+            Frame::YBlock { .. } => "y-block",
+            Frame::Dot { .. } => "dot",
+            Frame::NormSq { .. } => "norm-sq",
+            Frame::Scalar { .. } => "scalar",
+            Frame::Report => "report",
+            Frame::ReportReply { .. } => "report-reply",
+            Frame::Ping { .. } => "ping",
+            Frame::Pong { .. } => "pong",
+            Frame::Probe { .. } => "probe",
+            Frame::ProbeAck { .. } => "probe-ack",
+            Frame::Shutdown => "shutdown",
+            Frame::Err { .. } => "err",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// encoding
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_values(out: &mut Vec<u8>, v: &Values) {
+    match v {
+        Values::F64(xs) => {
+            out.push(0);
+            put_u64(out, xs.len() as u64);
+            for &x in xs {
+                put_f64(out, x);
+            }
+        }
+        Values::F32(xs) => {
+            out.push(1);
+            put_u64(out, xs.len() as u64);
+            for &x in xs {
+                out.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+        }
+    }
+}
+
+fn put_i32_array(out: &mut Vec<u8>, v: &[i32]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode a frame's body (tag byte + payload, no length prefix).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    match frame {
+        Frame::Ok => out.push(0),
+        Frame::UploadDense { rows, n, values } => {
+            out.push(1);
+            put_u64(&mut out, *rows);
+            put_u64(&mut out, *n);
+            put_values(&mut out, values);
+        }
+        Frame::UploadCsr { rows, n, row_ptr, col_idx, values } => {
+            out.push(2);
+            put_u64(&mut out, *rows);
+            put_u64(&mut out, *n);
+            put_i32_array(&mut out, row_ptr);
+            put_i32_array(&mut out, col_idx);
+            put_values(&mut out, values);
+        }
+        Frame::Matvec { x } => {
+            out.push(3);
+            put_values(&mut out, x);
+        }
+        Frame::YBlock { y } => {
+            out.push(4);
+            put_values(&mut out, y);
+        }
+        Frame::Dot { x, y } => {
+            out.push(5);
+            put_values(&mut out, x);
+            put_values(&mut out, y);
+        }
+        Frame::NormSq { x } => {
+            out.push(6);
+            put_values(&mut out, x);
+        }
+        Frame::Scalar { v } => {
+            out.push(7);
+            put_f64(&mut out, *v);
+        }
+        Frame::Report => out.push(8),
+        Frame::ReportReply { busy_seconds, bytes, ops } => {
+            out.push(9);
+            put_f64(&mut out, *busy_seconds);
+            put_u64(&mut out, *bytes);
+            put_u64(&mut out, *ops);
+        }
+        Frame::Ping { nonce } => {
+            out.push(10);
+            put_u64(&mut out, *nonce);
+        }
+        Frame::Pong { nonce } => {
+            out.push(11);
+            put_u64(&mut out, *nonce);
+        }
+        Frame::Probe { payload } => {
+            out.push(12);
+            put_u64(&mut out, payload.len() as u64);
+            out.extend_from_slice(payload);
+        }
+        Frame::ProbeAck { len } => {
+            out.push(13);
+            put_u64(&mut out, *len);
+        }
+        Frame::Shutdown => out.push(14),
+        Frame::Err { message } => {
+            out.push(15);
+            let b = message.as_bytes();
+            put_u64(&mut out, b.len() as u64);
+            out.extend_from_slice(b);
+        }
+    }
+    out
+}
+
+/// Write one length-prefixed frame; returns total wire bytes (prefix
+/// included).  The caller flushes (a worker round trip is
+/// write + flush + read).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<usize> {
+    let body = encode(frame);
+    if body.len() > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame body {} bytes exceeds cap {MAX_FRAME_BYTES}", body.len()),
+        ));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    Ok(4 + body.len())
+}
+
+// ---------------------------------------------------------------------
+// decoding
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(bad("frame body truncated"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(u64::from_le_bytes(self.take(8)?.try_into().unwrap())))
+    }
+
+    /// Element count guarded against the remaining body size (`width`
+    /// bytes per element) so a corrupt length cannot drive a huge
+    /// allocation.
+    fn len_guarded(&mut self, width: usize) -> io::Result<usize> {
+        let len = self.u64()? as usize;
+        if len.saturating_mul(width) > self.buf.len().saturating_sub(self.pos) {
+            return Err(bad("array length exceeds frame body"));
+        }
+        Ok(len)
+    }
+
+    fn values(&mut self) -> io::Result<Values> {
+        match self.u8()? {
+            0 => {
+                let len = self.len_guarded(8)?;
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(self.f64()?);
+                }
+                Ok(Values::F64(v))
+            }
+            1 => {
+                let len = self.len_guarded(4)?;
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(f32::from_bits(u32::from_le_bytes(
+                        self.take(4)?.try_into().unwrap(),
+                    )));
+                }
+                Ok(Values::F32(v))
+            }
+            t => Err(bad(&format!("unknown value-array width tag {t}"))),
+        }
+    }
+
+    fn i32_array(&mut self) -> io::Result<Vec<i32>> {
+        let len = self.len_guarded(4)?;
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(i32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Decode one frame body (tag byte + payload).
+pub fn decode(body: &[u8]) -> io::Result<Frame> {
+    let mut d = Dec { buf: body, pos: 0 };
+    let frame = match d.u8()? {
+        0 => Frame::Ok,
+        1 => Frame::UploadDense { rows: d.u64()?, n: d.u64()?, values: d.values()? },
+        2 => Frame::UploadCsr {
+            rows: d.u64()?,
+            n: d.u64()?,
+            row_ptr: d.i32_array()?,
+            col_idx: d.i32_array()?,
+            values: d.values()?,
+        },
+        3 => Frame::Matvec { x: d.values()? },
+        4 => Frame::YBlock { y: d.values()? },
+        5 => Frame::Dot { x: d.values()?, y: d.values()? },
+        6 => Frame::NormSq { x: d.values()? },
+        7 => Frame::Scalar { v: d.f64()? },
+        8 => Frame::Report,
+        9 => Frame::ReportReply { busy_seconds: d.f64()?, bytes: d.u64()?, ops: d.u64()? },
+        10 => Frame::Ping { nonce: d.u64()? },
+        11 => Frame::Pong { nonce: d.u64()? },
+        12 => {
+            let len = d.len_guarded(1)?;
+            Frame::Probe { payload: d.take(len)?.to_vec() }
+        }
+        13 => Frame::ProbeAck { len: d.u64()? },
+        14 => Frame::Shutdown,
+        15 => {
+            let len = d.len_guarded(1)?;
+            let bytes = d.take(len)?.to_vec();
+            Frame::Err {
+                message: String::from_utf8(bytes)
+                    .map_err(|_| bad("error message is not UTF-8"))?,
+            }
+        }
+        t => return Err(bad(&format!("unknown frame tag {t}"))),
+    };
+    if d.pos != body.len() {
+        return Err(bad("trailing bytes after frame payload"));
+    }
+    Ok(frame)
+}
+
+/// Read one length-prefixed frame; returns the frame and total wire
+/// bytes consumed (prefix included).
+pub fn read_frame(r: &mut impl Read) -> io::Result<(Frame, usize)> {
+    let mut prefix = [0u8; 4];
+    r.read_exact(&mut prefix)?;
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(bad(&format!("frame length {len} exceeds cap {MAX_FRAME_BYTES}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok((decode(&body)?, 4 + len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift64* generator — property tests without a
+    /// rand dependency.
+    struct Rng(u64);
+
+    impl Rng {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            self.0 = x;
+            x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        }
+
+        fn f64(&mut self) -> f64 {
+            // mix in subnormals, negatives and huge magnitudes
+            let bits = self.next();
+            let v = f64::from_bits(bits);
+            if v.is_nan() {
+                -0.0
+            } else {
+                v
+            }
+        }
+
+        fn f64_vec(&mut self, len: usize) -> Vec<f64> {
+            (0..len).map(|_| self.f64()).collect()
+        }
+
+        fn narrowed_vec(&mut self, len: usize) -> Vec<f64> {
+            // exactly f32-representable values (the narrowed-residency
+            // contract)
+            (0..len).map(|_| (self.f64() as f32) as f64).collect()
+        }
+    }
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut wire = Vec::new();
+        let wrote = write_frame(&mut wire, frame).unwrap();
+        assert_eq!(wrote, wire.len());
+        let mut cursor: &[u8] = &wire;
+        let (back, read) = read_frame(&mut cursor).unwrap();
+        assert_eq!(read, wire.len());
+        assert!(cursor.is_empty(), "no trailing bytes");
+        // byte-level identity is the strongest round-trip statement
+        assert_eq!(encode(&back), encode(frame));
+        back
+    }
+
+    #[test]
+    fn every_frame_type_round_trips_bit_exactly() {
+        let mut rng = Rng(0x9E3779B97F4A7C15);
+        let frames = vec![
+            Frame::Ok,
+            Frame::UploadDense { rows: 3, n: 5, values: Values::F64(rng.f64_vec(15)) },
+            Frame::UploadCsr {
+                rows: 4,
+                n: 6,
+                row_ptr: vec![0, 2, 2, 5, 7],
+                col_idx: vec![0, 3, 1, 2, 5, 0, 4],
+                values: Values::F64(rng.f64_vec(7)),
+            },
+            Frame::Matvec { x: Values::F64(rng.f64_vec(9)) },
+            Frame::YBlock { y: Values::F64(rng.f64_vec(4)) },
+            Frame::Dot {
+                x: Values::F64(rng.f64_vec(6)),
+                y: Values::F64(rng.f64_vec(6)),
+            },
+            Frame::NormSq { x: Values::F64(rng.f64_vec(6)) },
+            Frame::Scalar { v: rng.f64() },
+            Frame::Report,
+            Frame::ReportReply { busy_seconds: 0.125, bytes: 987_654_321, ops: 42 },
+            Frame::Ping { nonce: rng.next() },
+            Frame::Pong { nonce: rng.next() },
+            Frame::Probe { payload: (0..257u32).map(|i| (i % 251) as u8).collect() },
+            Frame::ProbeAck { len: 257 },
+            Frame::Shutdown,
+            Frame::Err { message: "shard 2: matvec before upload".into() },
+        ];
+        for frame in &frames {
+            let back = roundtrip(frame);
+            assert_eq!(&back, frame, "{} round trip", frame.name());
+        }
+    }
+
+    #[test]
+    fn narrowed_value_arrays_round_trip_exactly() {
+        let mut rng = Rng(7);
+        for len in [0usize, 1, 33, 1024] {
+            let narrowed = rng.narrowed_vec(len);
+            let wire = Values::from_f64(&narrowed, true);
+            assert!(matches!(wire, Values::F32(_)));
+            assert_eq!(wire.payload_bytes(), 4 * len, "f32 wire width");
+            let widened = roundtrip(&Frame::Matvec { x: wire });
+            let Frame::Matvec { x } = widened else { panic!("frame type changed") };
+            let back = x.to_f64_vec();
+            assert_eq!(back.len(), narrowed.len());
+            for (a, b) in back.iter().zip(&narrowed) {
+                assert_eq!(a.to_bits(), b.to_bits(), "narrowed widen must be exact");
+            }
+        }
+    }
+
+    #[test]
+    fn full_width_arrays_preserve_every_bit_pattern() {
+        let mut rng = Rng(99);
+        let mut xs = rng.f64_vec(500);
+        // adversarial payloads: signed zero, infinities, subnormals
+        xs.extend_from_slice(&[0.0, -0.0, f64::INFINITY, f64::NEG_INFINITY, 5e-324]);
+        let back = roundtrip(&Frame::YBlock { y: Values::F64(xs.clone()) });
+        let Frame::YBlock { y } = back else { panic!() };
+        let Values::F64(ys) = y else { panic!() };
+        for (a, b) in ys.iter().zip(&xs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_row_shard_and_empty_rhs_frames_round_trip() {
+        // a zero-row member still receives an upload (empty slab) and an
+        // empty gather; an n=0 system broadcasts an empty x
+        for frame in [
+            Frame::UploadDense { rows: 0, n: 8, values: Values::F64(vec![]) },
+            Frame::UploadCsr {
+                rows: 0,
+                n: 8,
+                row_ptr: vec![0],
+                col_idx: vec![],
+                values: Values::F64(vec![]),
+            },
+            Frame::Matvec { x: Values::F64(vec![]) },
+            Frame::YBlock { y: Values::F64(vec![]) },
+            Frame::Dot { x: Values::F64(vec![]), y: Values::F64(vec![]) },
+            Frame::NormSq { x: Values::F32(vec![]) },
+            Frame::Probe { payload: vec![] },
+        ] {
+            let back = roundtrip(&frame);
+            assert_eq!(back, frame, "{} empty-payload round trip", frame.name());
+        }
+    }
+
+    #[test]
+    fn csr_i32_indices_round_trip_including_extremes() {
+        let frame = Frame::UploadCsr {
+            rows: 2,
+            n: 3,
+            row_ptr: vec![0, i32::MAX, i32::MAX],
+            col_idx: vec![0, -1, i32::MIN, i32::MAX],
+            values: Values::F32(vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE]),
+        };
+        assert_eq!(roundtrip(&frame), frame);
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_not_misread() {
+        // oversized length prefix
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_FRAME_BYTES as u32 + 1).to_le_bytes());
+        assert!(read_frame(&mut wire.as_slice()).is_err());
+        // unknown tag
+        assert!(decode(&[200]).is_err());
+        // truncated payload
+        let body = encode(&Frame::Scalar { v: 1.0 });
+        assert!(decode(&body[..body.len() - 1]).is_err());
+        // trailing garbage
+        let mut long = encode(&Frame::Ok);
+        long.push(0);
+        assert!(decode(&long).is_err());
+        // array length that overruns the body
+        let mut lying = vec![3u8, 0u8]; // Matvec, f64 width
+        lying.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode(&lying).is_err());
+    }
+
+    #[test]
+    fn random_frame_fuzz_round_trips() {
+        let mut rng = Rng(0xDEADBEEF);
+        for i in 0..200 {
+            let frame = match rng.next() % 6 {
+                0 => Frame::Matvec {
+                    x: Values::F64(rng.f64_vec((rng.next() % 64) as usize)),
+                },
+                1 => Frame::Dot {
+                    x: Values::F64(rng.f64_vec(17)),
+                    y: Values::F64(rng.f64_vec(17)),
+                },
+                2 => Frame::Scalar { v: rng.f64() },
+                3 => Frame::UploadDense {
+                    rows: rng.next() % 8,
+                    n: rng.next() % 8,
+                    values: Values::F64(rng.f64_vec((rng.next() % 64) as usize)),
+                },
+                4 => Frame::Ping { nonce: rng.next() },
+                _ => Frame::NormSq {
+                    x: Values::F32(
+                        (0..(rng.next() % 64)).map(|_| rng.f64() as f32).collect(),
+                    ),
+                },
+            };
+            assert_eq!(roundtrip(&frame), frame, "fuzz iteration {i}");
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! The `gmres-rs shard-worker` serve loop: one shard member living in
+//! its own OS process.
+//!
+//! The worker speaks the [`wire`](super::wire) protocol over
+//! stdin/stdout: it accepts one shard upload, then answers matvec /
+//! dot / norm requests until [`Frame::Shutdown`] or EOF.  All
+//! arithmetic goes through the crate's own kernels
+//! ([`SystemMatrix::apply_into`](crate::linalg::LinearOperator::apply_into),
+//! [`blas::dot`]) on the exact bits the orchestrator sent, so worker
+//! answers are bit-identical to the in-process reference for f64.
+//! Protocol violations are answered in-band with [`Frame::Err`] rather
+//! than killing the process.
+
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::time::Instant;
+
+use crate::linalg::{blas, CsrMatrix, DenseMatrix, LinearOperator, SystemMatrix};
+
+use super::wire::{read_frame, write_frame, Frame, Values};
+
+/// One worker's in-memory state between frames.
+struct WorkerState {
+    shard: Option<SystemMatrix>,
+    rows: usize,
+    busy_seconds: f64,
+    bytes: u64,
+    ops: u64,
+}
+
+impl WorkerState {
+    fn new() -> Self {
+        Self { shard: None, rows: 0, busy_seconds: 0.0, bytes: 0, ops: 0 }
+    }
+
+    /// Answer one request frame.  `Ok(Some(reply))` continues the loop,
+    /// `Ok(None)` means orderly shutdown.
+    fn handle(&mut self, frame: Frame) -> Result<Option<Frame>, String> {
+        let started = Instant::now();
+        let reply = match frame {
+            Frame::UploadDense { rows, n, values } => {
+                let (rows, n) = (rows as usize, n as usize);
+                let data = values.to_f64_vec();
+                if data.len() != rows * n {
+                    return Err(format!(
+                        "dense upload: {} values for {rows}x{n} shard",
+                        data.len()
+                    ));
+                }
+                self.shard = Some(SystemMatrix::Dense(DenseMatrix::from_vec(rows, n, data)));
+                self.rows = rows;
+                self.ops = 0;
+                Frame::Ok
+            }
+            Frame::UploadCsr { rows, n, row_ptr, col_idx, values } => {
+                let (rows, n) = (rows as usize, n as usize);
+                if row_ptr.len() != rows + 1 {
+                    return Err(format!(
+                        "csr upload: {} row pointers for {rows} rows",
+                        row_ptr.len()
+                    ));
+                }
+                if row_ptr.iter().any(|&p| p < 0) || col_idx.iter().any(|&c| c < 0) {
+                    return Err("csr upload: negative index".into());
+                }
+                let rp: Vec<usize> = row_ptr.iter().map(|&p| p as usize).collect();
+                let ci: Vec<usize> = col_idx.iter().map(|&c| c as usize).collect();
+                let vals = values.to_f64_vec();
+                if ci.len() != vals.len() || *rp.last().unwrap() != vals.len() {
+                    return Err("csr upload: index/value arrays disagree".into());
+                }
+                self.shard =
+                    Some(SystemMatrix::Csr(CsrMatrix::from_raw_parts(rows, n, rp, ci, vals)));
+                self.rows = rows;
+                self.ops = 0;
+                Frame::Ok
+            }
+            Frame::Matvec { x } => {
+                let shard = self.shard.as_ref().ok_or("matvec before upload")?;
+                let x = x.to_f64_vec();
+                let mut y = vec![0.0f64; self.rows];
+                if self.rows > 0 {
+                    shard.apply_into(&x, &mut y);
+                }
+                self.ops += 1;
+                Frame::YBlock { y: Values::F64(y) }
+            }
+            Frame::Dot { x, y } => {
+                if x.len() != y.len() {
+                    return Err(format!("dot: operand lengths {} vs {}", x.len(), y.len()));
+                }
+                let (x, y) = (x.to_f64_vec(), y.to_f64_vec());
+                self.ops += 1;
+                Frame::Scalar { v: blas::dot(&x, &y) }
+            }
+            Frame::NormSq { x } => {
+                let x = x.to_f64_vec();
+                self.ops += 1;
+                Frame::Scalar { v: blas::dot(&x, &x) }
+            }
+            Frame::Report => Frame::ReportReply {
+                busy_seconds: self.busy_seconds,
+                bytes: self.bytes,
+                ops: self.ops,
+            },
+            Frame::Ping { nonce } => Frame::Pong { nonce },
+            Frame::Probe { payload } => Frame::ProbeAck { len: payload.len() as u64 },
+            Frame::Shutdown => return Ok(None),
+            other => return Err(format!("unexpected request frame '{}'", other.name())),
+        };
+        self.busy_seconds += started.elapsed().as_secs_f64();
+        Ok(Some(reply))
+    }
+}
+
+/// Serve the shard-worker protocol over the given streams until
+/// shutdown or EOF.  Returns the number of frames served.
+pub fn serve(input: impl Read, output: impl Write) -> io::Result<u64> {
+    let mut reader = BufReader::new(input);
+    let mut writer = BufWriter::new(output);
+    let mut state = WorkerState::new();
+    let mut served = 0u64;
+    loop {
+        let (frame, read_bytes) = match read_frame(&mut reader) {
+            Ok(ok) => ok,
+            // orchestrator went away without a Shutdown — exit quietly
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(served),
+            Err(e) => return Err(e),
+        };
+        state.bytes += read_bytes as u64;
+        served += 1;
+        let reply = match state.handle(frame) {
+            Ok(Some(reply)) => reply,
+            Ok(None) => {
+                state.bytes += write_frame(&mut writer, &Frame::Ok)? as u64;
+                writer.flush()?;
+                return Ok(served);
+            }
+            Err(message) => Frame::Err { message },
+        };
+        state.bytes += write_frame(&mut writer, &reply)? as u64;
+        writer.flush()?;
+    }
+}
+
+/// Entry point for the `gmres-rs shard-worker` subcommand: serve on
+/// this process's stdin/stdout.
+pub fn run() -> anyhow::Result<()> {
+    let stdin = io::stdin();
+    let stdout = io::stdout();
+    serve(stdin.lock(), stdout.lock())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{RowBlocks, ShardedMatrix};
+    use crate::linalg::generators;
+
+    /// Drive a frame script through an in-memory worker and collect the
+    /// replies.
+    fn converse(script: &[Frame]) -> Vec<Frame> {
+        let mut request_bytes = Vec::new();
+        for f in script {
+            write_frame(&mut request_bytes, f).unwrap();
+        }
+        let mut reply_bytes = Vec::new();
+        serve(request_bytes.as_slice(), &mut reply_bytes).unwrap();
+        let mut replies = Vec::new();
+        let mut cursor: &[u8] = &reply_bytes;
+        while !cursor.is_empty() {
+            replies.push(read_frame(&mut cursor).unwrap().0);
+        }
+        replies
+    }
+
+    #[test]
+    fn worker_matvec_matches_in_process_shard_bit_for_bit() {
+        let a = SystemMatrix::Dense(generators::dense_shifted_random(24, 8.0, 5));
+        let sharded = ShardedMatrix::split(&a, RowBlocks::even(24, 2));
+        let x = generators::random_vector(24, 3);
+        let mut reference = vec![0.0; sharded.blocks().rows(1)];
+        sharded.apply_shard_into(1, &x, &mut reference);
+
+        let shard = sharded.shard(1);
+        let SystemMatrix::Dense(d) = shard else { panic!("dense shard") };
+        let replies = converse(&[
+            Frame::UploadDense {
+                rows: d.nrows() as u64,
+                n: d.ncols() as u64,
+                values: Values::F64(d.data().to_vec()),
+            },
+            Frame::Matvec { x: Values::F64(x.clone()) },
+            Frame::Dot { x: Values::F64(x.clone()), y: Values::F64(x.clone()) },
+            Frame::Report,
+            Frame::Shutdown,
+        ]);
+        assert_eq!(replies.len(), 5);
+        assert_eq!(replies[0], Frame::Ok);
+        let Frame::YBlock { y: Values::F64(y) } = &replies[1] else {
+            panic!("matvec reply: {:?}", replies[1])
+        };
+        let got: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u64> = reference.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "worker matvec must be bit-identical");
+        let Frame::Scalar { v } = replies[2] else { panic!("dot reply") };
+        assert_eq!(v.to_bits(), blas::dot(&x, &x).to_bits());
+        let Frame::ReportReply { ops, bytes, .. } = replies[3] else { panic!("report") };
+        assert_eq!(ops, 2);
+        assert!(bytes > 0);
+        assert_eq!(replies[4], Frame::Ok, "shutdown ack");
+    }
+
+    #[test]
+    fn worker_answers_protocol_violations_in_band() {
+        let replies = converse(&[
+            Frame::Matvec { x: Values::F64(vec![1.0]) },
+            Frame::Ping { nonce: 77 },
+            Frame::Scalar { v: 1.0 },
+        ]);
+        assert!(matches!(&replies[0], Frame::Err { message } if message.contains("upload")));
+        assert_eq!(replies[1], Frame::Pong { nonce: 77 }, "worker survives a bad frame");
+        assert!(matches!(&replies[2], Frame::Err { message } if message.contains("scalar")));
+    }
+
+    #[test]
+    fn worker_accepts_zero_row_shard() {
+        let replies = converse(&[
+            Frame::UploadCsr {
+                rows: 0,
+                n: 4,
+                row_ptr: vec![0],
+                col_idx: vec![],
+                values: Values::F64(vec![]),
+            },
+            Frame::Matvec { x: Values::F64(vec![1.0, 2.0, 3.0, 4.0]) },
+            Frame::Shutdown,
+        ]);
+        assert_eq!(replies[0], Frame::Ok);
+        let Frame::YBlock { y } = &replies[1] else { panic!() };
+        assert!(y.is_empty(), "zero-row gather is empty");
+    }
+}

@@ -1,0 +1,247 @@
+//! End-to-end transport tests: process-mode sharded solves are
+//! bit-identical to the in-process reference, measured link calibration
+//! out-predicts the analytic wire model, and a shard-worker crash fails
+//! only the owning job with a typed error while siblings complete and
+//! the pool respawns the worker for the next wave.
+
+use std::time::{Duration, Instant};
+
+use gmres_rs::backend::Policy;
+use gmres_rs::coordinator::{
+    MatrixSpec, RouterConfig, ServiceConfig, SolveRequest, SolveService,
+};
+use gmres_rs::fleet::{build_sharded_engine_t, DeviceSet, Fleet, TransportSpec};
+use gmres_rs::gmres::{GmresConfig, RestartedGmres};
+use gmres_rs::linalg::{generators, SystemMatrix, SystemShape};
+use gmres_rs::planner::{Planner, PlannerConfig};
+use gmres_rs::precision::Precision;
+use gmres_rs::transport::{TransportError, TransportErrorKind, TransportKind};
+
+/// Point worker spawns at the binary cargo built for this test run, so
+/// the tests don't depend on `gmres-rs` being on PATH.
+fn use_test_worker_bin() {
+    std::env::set_var("GMRES_RS_WORKER_BIN", env!("CARGO_BIN_EXE_gmres-rs"));
+}
+
+/// Acceptance: the same sharded solve through OS-process workers returns
+/// the **same f64 bits** as the in-process transport — iterates, final
+/// residual, and the whole residual trail — on dense and CSR systems.
+#[test]
+fn process_transport_solves_bit_identical_to_in_process() {
+    use_test_worker_bin();
+    let fleet = Fleet::parse("840m,v100,host").unwrap();
+    let set = DeviceSet::from_ids(&[0, 1, 2]);
+    let config = GmresConfig { m: 12, tol: 1e-10, max_restarts: 100, ..Default::default() };
+    let (da, db, _) = generators::table1_system(97, 3);
+    let (ca, cb, _) = generators::convdiff_1d_system(151, 9);
+    let systems: Vec<(SystemMatrix, Vec<f64>, Policy)> = vec![
+        (SystemMatrix::Dense(da), db, Policy::GmatrixLike),
+        (SystemMatrix::Csr(ca), cb, Policy::GpurVclLike),
+    ];
+    for (a, b, policy) in systems {
+        let mut reports = Vec::new();
+        for kind in [TransportKind::InProcess, TransportKind::Process] {
+            let mut engine = build_sharded_engine_t(
+                &fleet,
+                set,
+                policy,
+                a.clone(),
+                b.clone(),
+                &config,
+                0.9,
+                TransportSpec::Kind(kind),
+            )
+            .unwrap();
+            assert_eq!(engine.transport_kind(), kind);
+            let report = RestartedGmres::new(config).solve(&mut engine, None).unwrap();
+            if kind == TransportKind::Process {
+                let stats = engine.transport_stats();
+                assert!(stats.bytes > 0, "process solve must move wire bytes");
+                assert!(stats.round_trips > 0, "process solve must count round trips");
+                assert!(
+                    !engine.cycle_link_wall().is_empty(),
+                    "per-cycle link wall must be recorded"
+                );
+                assert!(
+                    !engine.take_link_observations().is_empty(),
+                    "measurement windows must be drainable"
+                );
+            } else {
+                assert_eq!(engine.transport_stats().bytes, 0);
+            }
+            reports.push(report);
+        }
+        let (r0, r1) = (&reports[0], &reports[1]);
+        assert!(r0.converged && r1.converged);
+        assert_eq!(r0.cycles, r1.cycles, "{} cycle counts differ", a.format());
+        assert_eq!(
+            r0.resnorm.to_bits(),
+            r1.resnorm.to_bits(),
+            "{} final residual bits differ",
+            a.format()
+        );
+        assert_eq!(r0.x.len(), r1.x.len());
+        for (i, (x0, x1)) in r0.x.iter().zip(r1.x.iter()).enumerate() {
+            assert_eq!(x0.to_bits(), x1.to_bits(), "{} x[{i}] bits differ", a.format());
+        }
+        for (h0, h1) in r0.history.resnorms.iter().zip(r1.history.resnorms.iter()) {
+            assert_eq!(h0.to_bits(), h1.to_bits(), "{} residual trail diverged", a.format());
+        }
+    }
+}
+
+/// Acceptance: after >= 20 calibrated solves, the planner's predicted
+/// per-cycle wire seconds for a process-mode sharded placement have
+/// strictly lower mean relative error against the measured cycle link
+/// walls than the uncalibrated analytic link model.
+#[test]
+fn calibrated_link_model_out_predicts_analytic_wire_model() {
+    use_test_worker_bin();
+    let fleet = Fleet::parse("840m,v100").unwrap();
+    let planner = Planner::new(PlannerConfig {
+        fleet: fleet.clone(),
+        transport: TransportKind::Process,
+        ..Default::default()
+    });
+    let set = DeviceSet::from_ids(&[0, 1]);
+    let n = 64;
+    let m = 4;
+    let shape = SystemShape::dense(n);
+    let config = GmresConfig { m, tol: 1e-10, max_restarts: 40, ..Default::default() };
+    // one measurement per solve: the mean measured wire wall per cycle
+    let mut measured = Vec::new();
+    for i in 0..25u64 {
+        let (a, b, _) = generators::table1_system(n, 100 + i);
+        let mut engine = build_sharded_engine_t(
+            &fleet,
+            set,
+            Policy::GmatrixLike,
+            SystemMatrix::Dense(a),
+            b,
+            &config,
+            0.9,
+            TransportSpec::Kind(TransportKind::Process),
+        )
+        .unwrap();
+        let _ = RestartedGmres::new(config).solve(&mut engine, None).unwrap();
+        let walls = engine.cycle_link_wall();
+        assert!(!walls.is_empty(), "solve {i} recorded no cycles");
+        measured.push(walls.iter().sum::<f64>() / walls.len() as f64);
+        for (d, obs) in engine.take_link_observations() {
+            planner.observe_link(d, &obs);
+        }
+    }
+    let (calibrated_links, windows) = planner.link_observations();
+    assert_eq!(calibrated_links, 2, "both member links must be calibrated");
+    assert!(windows >= 20, "need >= 20 observation windows, got {windows}");
+
+    let (_, cycle_calibrated) = planner.process_wire_split(set, &shape, m, Precision::F64, true);
+    let (_, cycle_analytic) = planner.process_wire_split(set, &shape, m, Precision::F64, false);
+    let mean_rel_err = |pred: f64| {
+        measured.iter().map(|&w| ((pred - w) / w).abs()).sum::<f64>() / measured.len() as f64
+    };
+    let err_calibrated = mean_rel_err(cycle_calibrated);
+    let err_analytic = mean_rel_err(cycle_analytic);
+    assert!(
+        err_calibrated < err_analytic,
+        "calibrated mean relative error {err_calibrated:.4} must be strictly below \
+         analytic {err_analytic:.4} (predicted {cycle_calibrated:.3e} vs {cycle_analytic:.3e}, \
+         measured mean {:.3e})",
+        measured.iter().sum::<f64>() / measured.len() as f64
+    );
+}
+
+/// Crash robustness through the whole service: SIGKILL a shard worker
+/// mid-solve.  The owning job fails with a typed [`TransportError`], a
+/// solo job runs to completion untouched, in-flight accounting drains to
+/// zero, the pool counts the respawn, and the next wave's identical
+/// sharded job completes on fresh workers.
+#[test]
+fn worker_crash_fails_owner_typed_spares_siblings_and_respawns() {
+    use_test_worker_bin();
+    // n=600 dense (2.88 MB) exceeds every single budget here, so it is
+    // admissible only as a row-block shard over process workers
+    let fleet = Fleet::parse("840m=2m,v100=2m,a100=1m").unwrap();
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        router: RouterConfig { fleet, ..Default::default() },
+        transport: TransportKind::Process,
+        ..Default::default()
+    });
+    let pool = svc.worker_pool().expect("process transport owns a worker pool").clone();
+
+    // owner: unreachable tolerance keeps it cycling until the fault lands
+    let owner_rx = svc
+        .submit_nowait(SolveRequest {
+            matrix: MatrixSpec::Table1 { n: 600, seed: 11 },
+            config: GmresConfig {
+                m: 10,
+                tol: 1e-300,
+                max_restarts: 100_000,
+                ..Default::default()
+            },
+            policy: Some(Policy::GmatrixLike),
+        })
+        .unwrap();
+    // sibling: a solo device job; workers belong to sharded jobs only,
+    // so a peer worker's death must not touch it
+    let sibling_rx = svc
+        .submit_nowait(SolveRequest {
+            matrix: MatrixSpec::Table1 { n: 300, seed: 5 },
+            config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 200, ..Default::default() },
+            policy: Some(Policy::GmatrixLike),
+        })
+        .unwrap();
+
+    // fault injection: SIGKILL whichever shard worker is checked out
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut killed = false;
+    'outer: while Instant::now() < deadline {
+        for d in 0..3 {
+            if pool.kill_checked_out(d).is_some() {
+                killed = true;
+                break 'outer;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(killed, "no shard worker was ever checked out to kill");
+
+    let owner = owner_rx.recv().expect("owner reply channel dropped");
+    svc.finish();
+    let err = owner.expect_err("owner must fail after its worker died");
+    let typed = err
+        .chain()
+        .find_map(|c| c.downcast_ref::<TransportError>())
+        .unwrap_or_else(|| panic!("owner error is not a typed TransportError: {err:#}"));
+    assert!(
+        matches!(typed.kind, TransportErrorKind::WorkerDied | TransportErrorKind::Protocol),
+        "unexpected transport error kind: {typed}"
+    );
+
+    let sibling = sibling_rx.recv().expect("sibling reply channel dropped");
+    svc.finish();
+    let sibling = sibling.expect("solo sibling must survive the peer worker's death");
+    assert!(sibling.report.converged);
+    assert!(!sibling.plan.placement.is_sharded(), "got {:?}", sibling.plan.placement);
+
+    assert_eq!(svc.inflight(), 0, "in-flight accounting must drain to zero");
+    assert!(pool.restarts() >= 1, "the dead worker must be counted toward respawn");
+    assert!(
+        svc.metrics().worker_restarts() >= 1,
+        "worker restarts must surface in service metrics"
+    );
+
+    // next wave: the identical sharded job completes on respawned workers
+    let out = svc
+        .submit(SolveRequest {
+            matrix: MatrixSpec::Table1 { n: 600, seed: 11 },
+            config: GmresConfig { m: 10, tol: 1e-8, max_restarts: 200, ..Default::default() },
+            policy: Some(Policy::GmatrixLike),
+        })
+        .expect("post-crash wave must succeed");
+    assert!(out.report.converged);
+    assert!(out.plan.placement.is_sharded(), "got {:?}", out.plan.placement);
+    assert!(svc.metrics().link_bytes() > 0, "link traffic must reach the metrics");
+    svc.shutdown();
+}
