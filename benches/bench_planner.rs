@@ -5,6 +5,12 @@
 //! microsecond range; (2) how fast does online calibration squeeze the
 //! cost table's bias out of the served predictions over a stream of real
 //! solves.
+//!
+//! `cargo bench --bench bench_planner -- --json BENCH_planner.json` also
+//! writes the numbers as the committed structured snapshot ci.sh
+//! regenerates.
+
+use std::fmt::Write as _;
 
 use gmres_rs::backend::{build_engine, Policy};
 use gmres_rs::coordinator::MatrixSpec;
@@ -12,14 +18,45 @@ use gmres_rs::gmres::{GmresConfig, RestartedGmres};
 use gmres_rs::linalg::{generators, MatrixFormat, SystemMatrix, SystemShape};
 use gmres_rs::planner::Planner;
 use gmres_rs::util::bench::{black_box, human_time, Bencher, Table};
+use gmres_rs::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
-    planning_overhead();
-    calibration_convergence()?;
+    let args = Args::from_env()?;
+    let (cold_per_plan, warm_per_plan) = planning_overhead();
+    let calib = calibration_convergence()?;
+    if let Some(path) = args.get("json") {
+        let mut json = format!(
+            "{{\n  \"bench\": \"planner\",\n  \"cold_per_plan_s\": {cold_per_plan:.9},\n  \
+             \"warm_per_plan_s\": {warm_per_plan:.9},\n  \
+             \"warm_speedup\": {:.2},\n  \"observations\": {},\n  \
+             \"final_mean_abs_rel_error\": {:.6},\n  \
+             \"final_coeff_serial_r\": {:.6},\n  \"windows\": [",
+            cold_per_plan / warm_per_plan.max(1e-12),
+            calib.observations,
+            calib.final_error,
+            calib.final_coeff,
+        );
+        for (i, w) in calib.windows.iter().enumerate() {
+            if i > 0 {
+                json.push(',');
+            }
+            let _ = write!(
+                json,
+                "\n    {{\"solves\": {}, \"window_mean_abs_rel_error\": {:.6}, \
+                 \"coeff_serial_r\": {:.6}}}",
+                w.solves, w.error, w.coeff
+            );
+        }
+        json.push_str("\n  ]\n}\n");
+        std::fs::write(path, &json)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
-fn planning_overhead() {
+/// Measure cold (first sight of a shape) vs warm (memoized cost splits)
+/// planning cost; returns `(cold_per_plan_s, warm_per_plan_s)`.
+fn planning_overhead() -> (f64, f64) {
     println!("planning overhead per request (auto enumeration, 32 candidates)\n");
     let planner = Planner::default();
     let config = GmresConfig::default();
@@ -47,9 +84,10 @@ fn planning_overhead() {
             }
         }
     });
+    let cold_per_plan = cold.mean / shapes.len() as f64;
     let per_plan = warm.mean / (rounds * shapes.len()) as f64;
     let mut t = Table::new(&["path", "per plan"]);
-    t.row(&["cold (first sight of shape)".into(), human_time(cold.mean / shapes.len() as f64)]);
+    t.row(&["cold (first sight of shape)".into(), human_time(cold_per_plan)]);
     t.row(&["warm (memoized splits)".into(), human_time(per_plan)]);
     println!("{}", t.render());
     assert!(
@@ -62,14 +100,29 @@ fn planning_overhead() {
         human_time(per_plan),
         if per_plan < 100e-6 { "microsecond range, OK" } else { "WARN: above 100 µs" }
     );
+    (cold_per_plan, per_plan)
 }
 
-fn calibration_convergence() -> anyhow::Result<()> {
+struct CalibWindow {
+    solves: usize,
+    error: f64,
+    coeff: f64,
+}
+
+struct CalibResult {
+    windows: Vec<CalibWindow>,
+    observations: usize,
+    final_error: f64,
+    final_coeff: f64,
+}
+
+fn calibration_convergence() -> anyhow::Result<CalibResult> {
     println!("calibration convergence: served prediction error over a solve stream\n");
     let planner = Planner::default();
     let config = GmresConfig { m: 8, tol: 1e-8, max_restarts: 200, ..Default::default() };
     let sizes = [48usize, 64, 80];
     let mut t = Table::new(&["solves", "window mean |pred-meas|/meas", "coeff(serial-r)"]);
+    let mut windows = Vec::new();
     let mut window_err = 0.0;
     let window = 8usize;
     for i in 0..40 {
@@ -84,19 +137,31 @@ fn calibration_convergence() -> anyhow::Result<()> {
         window_err += ((plan.predicted_seconds - measured) / measured).abs();
         planner.observe(&plan, MatrixFormat::Dense, measured);
         if (i + 1) % window == 0 {
+            let w = CalibWindow {
+                solves: i + 1,
+                error: window_err / window as f64,
+                coeff: planner.coeff(Policy::SerialR, MatrixFormat::Dense),
+            };
             t.row(&[
-                (i + 1).to_string(),
-                format!("{:.1}%", window_err / window as f64 * 100.0),
-                format!("{:.3}", planner.coeff(Policy::SerialR, MatrixFormat::Dense)),
+                w.solves.to_string(),
+                format!("{:.1}%", w.error * 100.0),
+                format!("{:.3}", w.coeff),
             ]);
+            windows.push(w);
             window_err = 0.0;
         }
     }
     println!("{}", t.render());
+    let final_error = planner.mean_abs_rel_error().unwrap_or(f64::NAN);
     println!(
         "running mean error after {} solves: {:.1}%",
         planner.observations(),
-        planner.mean_abs_rel_error().unwrap_or(f64::NAN) * 100.0
+        final_error * 100.0
     );
-    Ok(())
+    Ok(CalibResult {
+        windows,
+        observations: planner.observations(),
+        final_error,
+        final_coeff: planner.coeff(Policy::SerialR, MatrixFormat::Dense),
+    })
 }

@@ -4,6 +4,12 @@
 //! this workload is memory-bound, so f32 should approach 2x on the dense
 //! matvec-dominated regime and less on CSR, whose i32 index arrays do not
 //! narrow).
+//!
+//! `cargo bench --bench bench_precision -- --json BENCH_precision.json`
+//! also writes the grid as the committed structured snapshot ci.sh
+//! regenerates.
+
+use std::fmt::Write as _;
 
 use gmres_rs::backend::Policy;
 use gmres_rs::coordinator::MatrixSpec;
@@ -12,10 +18,13 @@ use gmres_rs::linalg::SystemShape;
 use gmres_rs::precision::Precision;
 use gmres_rs::util::bench::Table;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let args = gmres_rs::util::cli::Args::from_env()?;
     let m = 30;
     let cycles = 5;
     println!("modeled f64 vs f32 solve seconds ({cycles} cycles of GMRES({m}), paper testbed)\n");
+    // (policy name, n, format name, t64, t32, ttf)
+    let mut rows: Vec<(&'static str, usize, String, f64, f64, f64)> = Vec::new();
     for policy in [Policy::GmatrixLike, Policy::GputoolsLike, Policy::GpurVclLike] {
         let mut t = Table::new(&["n", "format", "f64 [s]", "f32 [s]", "f64/f32", "tf32 [s]"]);
         for &n in &[1000usize, 2000, 4000, 8000, 10_000] {
@@ -31,6 +40,7 @@ fn main() {
                     format!("{:.2}x", t64 / t32),
                     format!("{ttf:.4}"),
                 ]);
+                rows.push((policy.name(), n, shape.format.to_string(), t64, t32, ttf));
             }
         }
         println!("policy {policy}:\n{}", t.render());
@@ -42,4 +52,27 @@ fn main() {
     let speedup = t64 / t32;
     println!("gpuR dense n=10000 f32 speedup: {speedup:.2}x");
     assert!(speedup > 1.3, "bandwidth win must be visible, got {speedup:.2}x");
+
+    if let Some(path) = args.get("json") {
+        let mut json = format!(
+            "{{\n  \"bench\": \"precision\",\n  \"m\": {m},\n  \"cycles\": {cycles},\n  \
+             \"gpur_dense_n10000_f32_speedup\": {speedup:.4},\n  \"rows\": ["
+        );
+        for (i, (policy, n, format, t64, t32, ttf)) in rows.iter().enumerate() {
+            if i > 0 {
+                json.push(',');
+            }
+            let _ = write!(
+                json,
+                "\n    {{\"policy\": \"{policy}\", \"n\": {n}, \"format\": \"{format}\", \
+                 \"f64_s\": {t64:.6}, \"f32_s\": {t32:.6}, \"tf32_s\": {ttf:.6}, \
+                 \"f64_over_f32\": {:.4}}}",
+                t64 / t32
+            );
+        }
+        json.push_str("\n  ]\n}\n");
+        std::fs::write(path, &json)?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }

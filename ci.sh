@@ -152,4 +152,45 @@ grep -q '"latency_s"' BENCH_transport.json \
 grep -q '"bit_identical": true' BENCH_transport.json \
     || { echo "transport smoke: bench lost bit identity"; exit 1; }
 
+echo "==> load / SLO smoke"
+# a short seeded open-loop run across three offered rates: the low rate
+# must attain (0,1], the overload rate must shed at least once, every
+# breakdown must sum to 1 within 1e-6 and all three ledgers reconcile
+# (--check asserts those inside the binary); the committed load bench
+# snapshot regenerates from the same run
+MANIFEST_A=$(mktemp /tmp/gmres-load-a.XXXXXX)
+MANIFEST_B=$(mktemp /tmp/gmres-load-b.XXXXXX)
+./target/release/gmres-rs load --arrivals poisson --rates 40,400,4000 \
+    --duration 0.8 --reuse 0.6 --deadline-ms 400 --policy gmatrix --seed 42 \
+    --check --bench-json BENCH_load.json --manifest-out "$MANIFEST_A"
+test -s BENCH_load.json \
+    || { echo "load smoke: BENCH_load.json not written"; exit 1; }
+grep -q '"low_rate_attainment"' BENCH_load.json \
+    || { echo "load smoke: no attainment recorded"; exit 1; }
+grep -Eq '"overload_sheds": [1-9]' BENCH_load.json \
+    || { echo "load smoke: overload rate shed nothing"; exit 1; }
+grep -q '"share_sum"' BENCH_load.json \
+    || { echo "load smoke: no breakdown share reconciliation"; exit 1; }
+# determinism: a second same-seed run submits the identical request
+# sequence, byte for byte at the manifest level
+./target/release/gmres-rs load --arrivals poisson --rates 40 \
+    --duration 0.8 --reuse 0.6 --deadline-ms 400 --policy gmatrix --seed 42 \
+    --manifest-out "$MANIFEST_B"
+cmp -s "$MANIFEST_A" "$MANIFEST_B" \
+    || { echo "load smoke: same-seed manifests diverged"; exit 1; }
+rm -f "$MANIFEST_A" "$MANIFEST_B"
+
+echo "==> bench snapshots (planner + precision)"
+# the committed structured snapshots regenerate from the benches
+cargo bench --bench bench_planner -- --json BENCH_planner.json
+test -s BENCH_planner.json \
+    || { echo "planner bench: BENCH_planner.json not written"; exit 1; }
+grep -q '"final_mean_abs_rel_error"' BENCH_planner.json \
+    || { echo "planner bench: no calibration convergence recorded"; exit 1; }
+cargo bench --bench bench_precision -- --json BENCH_precision.json
+test -s BENCH_precision.json \
+    || { echo "precision bench: BENCH_precision.json not written"; exit 1; }
+grep -q '"gpur_dense_n10000_f32_speedup"' BENCH_precision.json \
+    || { echo "precision bench: no headline speedup recorded"; exit 1; }
+
 echo "CI OK"

@@ -33,14 +33,21 @@ struct Histogram {
 }
 
 impl Histogram {
+    /// The bucket a sample belongs to: the first bound with `s <= bound`
+    /// (Prometheus `le` semantics), the overflow bucket past the last.
+    /// `<=` makes boundary samples deterministic: a sample exactly on a
+    /// bound always lands in that bound's bucket, never the next one.
+    fn bucket_index(s: f64) -> usize {
+        BUCKET_BOUNDS_S
+            .iter()
+            .position(|&b| s <= b)
+            .unwrap_or(BUCKET_BOUNDS_S.len())
+    }
+
     fn observe(&self, seconds: f64) {
         let s = seconds.max(0.0);
         let us = (s * 1e6) as u64;
-        let idx = BUCKET_BOUNDS_S
-            .iter()
-            .position(|&b| s <= b)
-            .unwrap_or(BUCKET_BOUNDS_S.len());
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.buckets[Self::bucket_index(s)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
         self.max_us.fetch_max(us, Ordering::Relaxed);
@@ -62,7 +69,6 @@ impl Histogram {
         let mut cum = 0u64;
         for (i, &c) in counts.iter().enumerate() {
             if c == 0 {
-                cum += c;
                 continue;
             }
             if cum + c >= rank {
@@ -170,6 +176,14 @@ pub struct Metrics {
     /// Shard-worker processes respawned after crashes or failed health
     /// checks (gauge mirroring the worker pool's lifetime count).
     worker_restarts: AtomicU64,
+    /// Checkout health-check pings that found a dead worker (mirrors
+    /// [`crate::transport::WorkerPool::ping_failures`]; a subset of
+    /// `worker_restarts`).
+    worker_ping_failures: AtomicU64,
+    /// Traces evicted from the bounded trace ring (mirrors
+    /// [`crate::trace::Tracer::dropped`]): nonzero means trace-driven
+    /// reports under-count and cannot fully reconcile.
+    trace_ring_dropped: AtomicU64,
     /// Completed-solve latency distribution (fixed memory; lock-free).
     latency: Histogram,
     /// Queue-wait distribution (submission to worker claim).
@@ -293,6 +307,17 @@ impl Metrics {
         self.worker_restarts.fetch_max(n, Ordering::Relaxed);
     }
 
+    /// Mirror the worker pool's lifetime checkout-ping-failure count
+    /// (same monotone `fetch_max` discipline as `set_worker_restarts`).
+    pub fn set_worker_ping_failures(&self, n: u64) {
+        self.worker_ping_failures.fetch_max(n, Ordering::Relaxed);
+    }
+
+    /// Mirror the trace ring's lifetime eviction count.
+    pub fn set_trace_ring_dropped(&self, n: u64) {
+        self.trace_ring_dropped.fetch_max(n, Ordering::Relaxed);
+    }
+
     /// Update one device's work-queue depth gauge.  A zero depth removes
     /// the entry: a drained queue is indistinguishable from a device that
     /// never queued, so `render_devices` can't report phantom backlog.
@@ -335,6 +360,14 @@ impl Metrics {
 
     pub fn worker_restarts(&self) -> u64 {
         self.worker_restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_ping_failures(&self) -> u64 {
+        self.worker_ping_failures.load(Ordering::Relaxed)
+    }
+
+    pub fn trace_ring_dropped(&self) -> u64 {
+        self.trace_ring_dropped.load(Ordering::Relaxed)
     }
 
     pub fn folds(&self) -> u64 {
@@ -405,13 +438,41 @@ impl Metrics {
         ));
         if self.link_bytes() > 0 || self.link_round_trips() > 0 || self.worker_restarts() > 0 {
             out.push_str(&format!(
-                "transport: link_bytes={}B round_trips={} worker_restarts={}\n",
+                "transport: link_bytes={}B round_trips={} worker_restarts={} ping_failures={}\n",
                 self.link_bytes(),
                 self.link_round_trips(),
-                self.worker_restarts()
+                self.worker_restarts(),
+                self.worker_ping_failures()
             ));
         }
         out
+    }
+
+    /// Every scalar counter this service exports, as `(prometheus_name,
+    /// help, value)` — the single source of truth [`render_prometheus`]
+    /// iterates, so a counter cannot be tracked internally yet missing
+    /// (or drifting in name) from the scrape text.
+    pub fn counter_snapshot(&self) -> Vec<(&'static str, &'static str, u64)> {
+        vec![
+            ("gmres_requests_submitted_total", "Requests accepted at the service door", self.submitted()),
+            ("gmres_requests_completed_total", "Requests solved to completion", self.completed()),
+            ("gmres_requests_failed_total", "Requests that errored while executing", self.failed()),
+            ("gmres_requests_downgraded_total", "Requests planned onto a policy other than the requested one", self.downgraded()),
+            ("gmres_requests_rejected_total", "Requests refused by inflight backpressure", self.rejected()),
+            ("gmres_folds_total", "Folded multi-RHS executions", self.folds()),
+            ("gmres_requests_folded_total", "Requests that ran inside a fold", self.requests_folded()),
+            ("gmres_uploads_saved_bytes_total", "Matrix bytes never re-uploaded thanks to folds and warm residencies", self.uploads_saved_bytes()),
+            ("gmres_steals_total", "Jobs moved to an idle device by the work-stealing scheduler", self.steals()),
+            ("gmres_sheds_total", "Jobs refused by deadline/queue admission control", self.sheds()),
+            ("gmres_cache_hits_total", "Residency-cache hits (matrix already device-resident)", self.cache_hits()),
+            ("gmres_cache_misses_total", "Residency-cache misses (slab established cold)", self.cache_misses()),
+            ("gmres_cache_evictions_total", "Residencies evicted under memory pressure", self.cache_evictions()),
+            ("gmres_link_bytes_total", "Process-transport wire bytes (both directions, frames included)", self.link_bytes()),
+            ("gmres_link_round_trips_total", "Process-transport request/reply round trips", self.link_round_trips()),
+            ("gmres_worker_restarts_total", "Shard-worker processes respawned after crashes", self.worker_restarts()),
+            ("gmres_worker_ping_failures_total", "Checkout health-check pings that found a dead shard worker", self.worker_ping_failures()),
+            ("gmres_trace_ring_dropped_total", "Traces evicted from the bounded trace ring", self.trace_ring_dropped()),
+        ]
     }
 
     /// One-line human summary.
@@ -450,27 +511,11 @@ impl Metrics {
     /// gauges, and the latency/queue-wait histograms.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::with_capacity(4096);
-        let mut counter = |name: &str, help: &str, v: u64| {
+        for (name, help, v) in self.counter_snapshot() {
             let _ = writeln!(out, "# HELP {name} {help}");
             let _ = writeln!(out, "# TYPE {name} counter");
             let _ = writeln!(out, "{name} {v}");
-        };
-        counter("gmres_requests_submitted_total", "Requests accepted at the service door", self.submitted());
-        counter("gmres_requests_completed_total", "Requests solved to completion", self.completed());
-        counter("gmres_requests_failed_total", "Requests that errored while executing", self.failed());
-        counter("gmres_requests_downgraded_total", "Requests planned onto a policy other than the requested one", self.downgraded());
-        counter("gmres_requests_rejected_total", "Requests refused by inflight backpressure", self.rejected());
-        counter("gmres_folds_total", "Folded multi-RHS executions", self.folds());
-        counter("gmres_requests_folded_total", "Requests that ran inside a fold", self.requests_folded());
-        counter("gmres_uploads_saved_bytes_total", "Matrix bytes never re-uploaded thanks to folds and warm residencies", self.uploads_saved_bytes());
-        counter("gmres_steals_total", "Jobs moved to an idle device by the work-stealing scheduler", self.steals());
-        counter("gmres_sheds_total", "Jobs refused by deadline/queue admission control", self.sheds());
-        counter("gmres_cache_hits_total", "Residency-cache hits (matrix already device-resident)", self.cache_hits());
-        counter("gmres_cache_misses_total", "Residency-cache misses (slab established cold)", self.cache_misses());
-        counter("gmres_cache_evictions_total", "Residencies evicted under memory pressure", self.cache_evictions());
-        counter("gmres_link_bytes_total", "Process-transport wire bytes (both directions, frames included)", self.link_bytes());
-        counter("gmres_link_round_trips_total", "Process-transport request/reply round trips", self.link_round_trips());
-        counter("gmres_worker_restarts_total", "Shard-worker processes respawned after crashes", self.worker_restarts());
+        }
 
         let depths = self.queue_depth.lock().unwrap().clone();
         out.push_str("# HELP gmres_queue_depth Current per-device work-queue depth\n");
@@ -637,15 +682,130 @@ mod tests {
         m.on_link_traffic(1024, 2);
         m.set_worker_restarts(2);
         m.set_worker_restarts(1); // stale racing update must not regress the gauge
+        m.set_worker_ping_failures(1);
+        m.set_worker_ping_failures(0); // same monotone discipline
+        m.set_trace_ring_dropped(4);
         assert_eq!(m.link_bytes(), 3072);
         assert_eq!(m.link_round_trips(), 5);
         assert_eq!(m.worker_restarts(), 2);
+        assert_eq!(m.worker_ping_failures(), 1);
+        assert_eq!(m.trace_ring_dropped(), 4);
         let rendered = m.render_devices();
-        assert!(rendered.contains("transport: link_bytes=3072B round_trips=5 worker_restarts=2"), "{rendered}");
+        assert!(
+            rendered.contains(
+                "transport: link_bytes=3072B round_trips=5 worker_restarts=2 ping_failures=1"
+            ),
+            "{rendered}"
+        );
         let text = m.render_prometheus();
         assert!(text.contains("gmres_link_bytes_total 3072"), "{text}");
         assert!(text.contains("gmres_link_round_trips_total 5"), "{text}");
         assert!(text.contains("gmres_worker_restarts_total 2"), "{text}");
+        assert!(text.contains("gmres_worker_ping_failures_total 1"), "{text}");
+        assert!(text.contains("gmres_trace_ring_dropped_total 4"), "{text}");
+    }
+
+    #[test]
+    fn every_tracked_counter_reaches_the_prometheus_text() {
+        let m = Metrics::new();
+        // exercise every counter so nonzero values must round-trip
+        m.on_submit();
+        m.on_complete(0.5, 0.1, true);
+        m.on_fail();
+        m.on_reject();
+        m.on_fold(3, 700);
+        m.on_upload_saved(100);
+        m.on_steal();
+        m.on_shed();
+        m.on_cache_hit();
+        m.on_cache_miss();
+        m.on_cache_evictions(2);
+        m.on_link_traffic(512, 1);
+        m.set_worker_restarts(1);
+        m.set_worker_ping_failures(1);
+        m.set_trace_ring_dropped(1);
+        let snapshot = m.counter_snapshot();
+        let text = m.render_prometheus();
+        let mut names = std::collections::HashSet::new();
+        for (name, help, v) in &snapshot {
+            assert!(name.starts_with("gmres_"), "{name} lacks the gmres_ prefix");
+            assert!(names.insert(*name), "duplicate counter {name}");
+            assert!(!help.is_empty(), "{name} has no help text");
+            assert!(
+                text.contains(&format!("\n{name} {v}\n")) || text.starts_with(&format!("{name} {v}")) || text.contains(&format!("{name} {v}\n")),
+                "{name} missing from prometheus text: {text}"
+            );
+            assert!(text.contains(&format!("# TYPE {name} counter")), "{name} untyped");
+        }
+        // and nothing render()/render_devices() reports is outside the
+        // snapshot: every numeric token family has a prometheus name
+        assert!(names.contains("gmres_requests_submitted_total"));
+        assert!(names.contains("gmres_worker_ping_failures_total"));
+        assert!(names.contains("gmres_trace_ring_dropped_total"));
+        assert_eq!(snapshot.len(), 18, "new counters must be added to counter_snapshot");
+    }
+
+    #[test]
+    fn boundary_samples_land_in_exactly_one_deterministic_bucket() {
+        for (i, &b) in BUCKET_BOUNDS_S.iter().enumerate() {
+            // a sample exactly on the bound lands in that bound's bucket
+            assert_eq!(Histogram::bucket_index(b), i, "bound {b}");
+            // nudged infinitesimally above, it lands strictly in the next
+            // (the overflow bucket past the last finite bound)
+            let above = b * (1.0 + 1e-12);
+            assert_eq!(Histogram::bucket_index(above), i + 1, "just above {b}");
+            // and repeated classification is stable (no ties, no drift)
+            for _ in 0..3 {
+                assert_eq!(Histogram::bucket_index(b), i);
+            }
+        }
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(1e9), BUCKET_BOUNDS_S.len());
+    }
+
+    #[test]
+    fn quantile_interpolation_is_monotone_including_overflow() {
+        // property test over seeded log-uniform sample sets spanning the
+        // whole bucket range AND the overflow region past 100 s
+        let mut rng = crate::util::rng::Rng::seed_from_u64(0x51a7);
+        for case in 0..20 {
+            let h = Histogram::default();
+            let n = 50 + case * 37;
+            for _ in 0..n {
+                // log-uniform over [1e-6, 1e3): exercises underflow of the
+                // first bound and the +Inf overflow bucket
+                let exp = rng.uniform(-6.0, 3.0);
+                h.observe(10f64.powf(exp));
+            }
+            let counts = h.snapshot_counts();
+            let total = counts.iter().sum::<u64>();
+            assert_eq!(total as usize, n);
+            let max_s = h.max_us.load(Ordering::Relaxed) as f64 / 1e6;
+            let mut last = 0.0;
+            for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0] {
+                let v = Histogram::quantile(&counts, total, max_s, q);
+                assert!(
+                    v >= last,
+                    "case {case}: quantile({q}) = {v} < previous {last}"
+                );
+                assert!(v <= max_s + 1e-12, "case {case}: quantile({q}) = {v} > max {max_s}");
+                last = v;
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_only_sample_set_quantiles_clamp_to_max() {
+        let h = Histogram::default();
+        h.observe(250.0);
+        h.observe(500.0);
+        let counts = h.snapshot_counts();
+        assert_eq!(counts[BUCKET_BOUNDS_S.len()], 2, "both in overflow");
+        let max_s = h.max_us.load(Ordering::Relaxed) as f64 / 1e6;
+        let p50 = Histogram::quantile(&counts, 2, max_s, 0.5);
+        let p99 = Histogram::quantile(&counts, 2, max_s, 0.99);
+        assert!(p50 <= p99 && p99 <= max_s);
+        assert!((max_s - 500.0).abs() < 1e-3);
     }
 
     #[test]

@@ -370,9 +370,23 @@ impl SolveService {
         self.inflight.fetch_sub(1, Ordering::SeqCst);
     }
 
+    /// Mirror pool- and tracer-internal lifetime counters into
+    /// [`Metrics`] so a scrape (or a metrics render) sees them even when
+    /// no transport work has run recently.  Called before reading
+    /// metrics by the load harness and on shutdown; callers polling
+    /// `render_prometheus` long-term should call it per scrape.
+    pub fn sync_observability(&self) {
+        self.metrics.set_trace_ring_dropped(self.tracer.dropped());
+        if let Some(pool) = self.scheduler.worker_pool() {
+            self.metrics.set_worker_restarts(pool.restarts());
+            self.metrics.set_worker_ping_failures(pool.ping_failures());
+        }
+    }
+
     /// Graceful shutdown: close intake, drain queues, join workers,
     /// persist calibration.
     pub fn shutdown(&self) {
+        self.sync_observability();
         self.scheduler.close();
         let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
         for h in handles {

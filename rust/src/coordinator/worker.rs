@@ -178,6 +178,7 @@ fn run_item_cached(
                                         pool.checkin(h);
                                     }
                                     metrics.set_worker_restarts(pool.restarts());
+                                    metrics.set_worker_ping_failures(pool.ping_failures());
                                     return Err(anyhow::Error::new(e));
                                 }
                             }
@@ -203,6 +204,7 @@ fn run_item_cached(
                                     pool.forget_lost(d, pid);
                                 }
                                 metrics.set_worker_restarts(pool.restarts());
+                                metrics.set_worker_ping_failures(pool.ping_failures());
                                 return Err(e);
                             }
                         };
@@ -219,6 +221,7 @@ fn run_item_cached(
                         }
                         metrics.on_link_traffic(stats.bytes, stats.round_trips);
                         metrics.set_worker_restarts(pool.restarts());
+                        metrics.set_worker_ping_failures(pool.ping_failures());
                         let report = solved?;
                         // only successful solves calibrate the links: a
                         // died-worker window would poison the EWMA

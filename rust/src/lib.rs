@@ -60,6 +60,12 @@
 //!   latency/bandwidth calibration the planner prices sharded
 //!   process-mode placements with, and the worker-process pool the
 //!   scheduler uses for spawn/health-check/respawn lifecycle.
+//! * **[`load`]** — the open-loop load harness: deterministic Poisson /
+//!   bursty workload generation over a mixed matrix population with a
+//!   controlled reuse rate, open-loop submission through the session API,
+//!   and trace-driven SLO reporting (per-class attainment, exact
+//!   quantiles, latency breakdown, shed reconciliation) exported as the
+//!   committed `BENCH_load.json` attainment curve.
 //! * **[`report`]** — Table 1 / Figure 5 regeneration harness, ablations,
 //!   paper reference data.
 
@@ -69,6 +75,7 @@ pub mod device;
 pub mod fleet;
 pub mod gmres;
 pub mod linalg;
+pub mod load;
 pub mod planner;
 pub mod precision;
 pub mod report;

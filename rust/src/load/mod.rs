@@ -1,0 +1,34 @@
+//! L4 load harness — open-loop workload generation and SLO reporting.
+//!
+//! The serving layer (coordinator + scheduler + transport) is exercised
+//! everywhere else by *closed-loop* drivers: `serve --waves` submits a
+//! burst, waits, submits the next.  Closed loops throttle themselves —
+//! a slow service slows the generator — so they structurally cannot show
+//! queueing collapse, shed behavior at overload, or cache dynamics at a
+//! controlled reuse rate.  This module is the open-loop complement:
+//!
+//! * **[`population`]** — deterministic workload planning: Poisson or
+//!   bursty on-off arrivals, a mixed matrix population over size × format
+//!   × precond × tolerance classes, a reuse knob that concentrates
+//!   traffic onto few matrices (driving residency warm hits and folds at
+//!   controlled rates), and per-class deadlines.  One seed threads every
+//!   draw, so a plan is reproducible down to the request manifest.
+//! * **[`runner`]** — submits the plan through the session API paced by
+//!   the planned clock, never waiting on completions; drains and
+//!   reconciles afterwards.
+//! * **[`slo`]** — the trace-driven reporter: per-class SLO attainment,
+//!   exact latency quantiles, the admission/queue/claim/residency/cycles/
+//!   verify/wire breakdown (via [`crate::trace::Breakdown`]), and
+//!   shed/deadline accounting reconciled across the submitter's counts,
+//!   the service metrics, and the trace ring.
+//!
+//! Surfaced as `gmres-rs load` (see `main.rs`), which emits the committed
+//! `BENCH_load.json` attainment curve.
+
+pub mod population;
+pub mod runner;
+pub mod slo;
+
+pub use population::{classes, ArrivalProcess, LoadConfig, PlannedRequest, Workload, WorkloadClass};
+pub use runner::{run_load, LoadOutcome};
+pub use slo::{ClassSlo, SloReport};

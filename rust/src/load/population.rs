@@ -1,0 +1,455 @@
+//! Deterministic open-loop workload generation: arrival processes, the
+//! mixed matrix population, and the planned request sequence.
+//!
+//! Everything is sampled from ONE seeded [`Rng`] in generation order —
+//! arrival gaps, class picks, reuse decisions, member picks and RHS seeds
+//! alike — so two [`Workload::generate`] calls with the same
+//! [`LoadConfig`] plan *identical* request sequences (asserted by
+//! comparing [`Workload::manifest`] strings).  The runner then replays the
+//! plan against the session API without re-sampling anything.
+
+use std::fmt;
+
+use crate::backend::Policy;
+use crate::coordinator::MatrixSpec;
+use crate::gmres::PrecondKind;
+use crate::linalg::MatrixFormat;
+use crate::util::rng::Rng;
+
+/// Arrival process shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate_rps` (exponential inter-arrival gaps).
+    Poisson,
+    /// On-off bursts: `burst_mult x rate_rps` Poisson arrivals inside
+    /// `burst_on_s` windows, silence for `burst_off_s` between them.
+    Burst,
+}
+
+impl ArrivalProcess {
+    pub fn parse(s: &str) -> Option<ArrivalProcess> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" => Some(ArrivalProcess::Poisson),
+            "burst" | "bursty" => Some(ArrivalProcess::Burst),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Burst => "burst",
+        }
+    }
+}
+
+impl fmt::Display for ArrivalProcess {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One slice of the mixed matrix population: size x format x precond x
+/// tolerance, with a traffic weight and a per-class deadline multiplier
+/// (bigger systems get proportionally more slack).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadClass {
+    pub name: &'static str,
+    pub n: usize,
+    pub format: MatrixFormat,
+    pub precond: PrecondKind,
+    pub tol: f64,
+    /// Relative traffic share (normalized over the class table).
+    pub weight: f64,
+    /// The class deadline is `deadline_ms x deadline_mult`.
+    pub deadline_mult: f64,
+}
+
+/// The serving mix: small latency-sensitive dense traffic dominates, with
+/// mid/large dense and a sparse preconditioned class behind it.  The loose
+/// 1e-4 tolerance on the small class keeps the planner's precision axis in
+/// play under load (f32 candidates stay admissible).
+pub fn classes() -> &'static [WorkloadClass] {
+    const CLASSES: [WorkloadClass; 4] = [
+        WorkloadClass {
+            name: "dense-small",
+            n: 96,
+            format: MatrixFormat::Dense,
+            precond: PrecondKind::Identity,
+            tol: 1e-4,
+            weight: 0.35,
+            deadline_mult: 1.0,
+        },
+        WorkloadClass {
+            name: "dense-mid",
+            n: 160,
+            format: MatrixFormat::Dense,
+            precond: PrecondKind::Identity,
+            tol: 1e-6,
+            weight: 0.30,
+            deadline_mult: 2.0,
+        },
+        WorkloadClass {
+            name: "csr-jacobi",
+            n: 128,
+            format: MatrixFormat::Csr,
+            precond: PrecondKind::Jacobi,
+            tol: 1e-6,
+            weight: 0.20,
+            deadline_mult: 2.0,
+        },
+        WorkloadClass {
+            name: "dense-large",
+            n: 256,
+            format: MatrixFormat::Dense,
+            precond: PrecondKind::Identity,
+            tol: 1e-6,
+            weight: 0.15,
+            deadline_mult: 4.0,
+        },
+    ];
+    &CLASSES
+}
+
+/// Knobs of one load run.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    pub arrivals: ArrivalProcess,
+    /// Mean offered arrival rate, requests per second.
+    pub rate_rps: f64,
+    /// Offered window length, seconds (arrivals stop at the window edge).
+    pub duration_s: f64,
+    /// Probability in [0, 1] that a request re-uses an already-seen matrix
+    /// of its class instead of minting a fresh one — the knob that makes
+    /// residency-cache hits and multi-RHS folds trigger at controlled
+    /// rates.
+    pub reuse: f64,
+    /// Base completion deadline, milliseconds (0 = no deadlines; each
+    /// class scales it by its `deadline_mult`).
+    pub deadline_ms: u64,
+    /// Master seed: arrivals, class mix, reuse and RHS vectors all derive
+    /// from it.
+    pub seed: u64,
+    /// Hard cap on planned requests (guards absurd rate x duration).
+    pub max_requests: usize,
+    /// Burst process: on-window seconds.
+    pub burst_on_s: f64,
+    /// Burst process: off-window (silent) seconds.
+    pub burst_off_s: f64,
+    /// Burst process: in-window rate multiplier over `rate_rps`.
+    pub burst_mult: f64,
+    /// Restart length every request is submitted with.
+    pub m: usize,
+    /// Policy pin for every request (`None` = planner auto-selection;
+    /// pinning a device policy makes overload sheds observable, since
+    /// host queues are unbounded).
+    pub policy: Option<Policy>,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        Self {
+            arrivals: ArrivalProcess::Poisson,
+            rate_rps: 50.0,
+            duration_s: 1.0,
+            reuse: 0.6,
+            deadline_ms: 250,
+            seed: 42,
+            max_requests: 4096,
+            burst_on_s: 0.2,
+            burst_off_s: 0.2,
+            burst_mult: 2.0,
+            m: 8,
+            policy: None,
+        }
+    }
+}
+
+/// One planned submission: when, against which matrix, with what deadline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlannedRequest {
+    /// Submission order (0-based).
+    pub index: usize,
+    /// Arrival offset from the run start, seconds.
+    pub at_s: f64,
+    /// Index into [`classes`].
+    pub class: usize,
+    /// Class-local matrix member (1-based mint order; reused members
+    /// repeat earlier values).
+    pub matrix_seed: u64,
+    /// Seed of this request's right-hand side vector.
+    pub rhs_seed: u64,
+    /// Absolute deadline from submission, seconds (0 = none).
+    pub deadline_s: f64,
+}
+
+/// A fully planned request sequence plus the config that generated it.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub config: LoadConfig,
+    pub requests: Vec<PlannedRequest>,
+}
+
+fn exp_gap(rng: &mut Rng, rate_rps: f64) -> f64 {
+    // inverse-CDF exponential; next_f64 < 1 so the ln argument is > 0
+    -(1.0 - rng.next_f64()).ln() / rate_rps
+}
+
+/// Advance `t` to the next burst-process arrival: exponential gaps at
+/// `rate x mult` inside on-windows, skipping off-windows entirely.
+fn next_burst_arrival(rng: &mut Rng, mut t: f64, cfg: &LoadConfig) -> f64 {
+    let period = cfg.burst_on_s + cfg.burst_off_s;
+    loop {
+        let pos = t % period;
+        if pos >= cfg.burst_on_s {
+            // silent window: jump to the next on-window start
+            t += period - pos;
+            continue;
+        }
+        let gap = exp_gap(rng, cfg.rate_rps * cfg.burst_mult);
+        if pos + gap < cfg.burst_on_s {
+            return t + gap;
+        }
+        // the gap crosses into silence: consume the rest of the window
+        // and keep sampling from the next one (memoryless, so no bias)
+        t += cfg.burst_on_s - pos;
+    }
+}
+
+impl Workload {
+    /// Plan the full request sequence for `config` (pure; nothing is
+    /// submitted).  All randomness flows from `config.seed` in a fixed
+    /// draw order, so equal configs plan equal sequences.
+    pub fn generate(config: LoadConfig) -> Workload {
+        assert!(config.rate_rps > 0.0, "rate must be positive");
+        assert!(config.duration_s > 0.0, "duration must be positive");
+        assert!((0.0..=1.0).contains(&config.reuse), "reuse must be in [0,1]");
+        let cls = classes();
+        let total_weight: f64 = cls.iter().map(|c| c.weight).sum();
+        let mut rng = Rng::seed_from_u64(config.seed);
+        // per-class population: members seen so far, and the next fresh id
+        let mut seen: Vec<Vec<u64>> = vec![Vec::new(); cls.len()];
+        let mut next_member: Vec<u64> = vec![0; cls.len()];
+        let mut requests = Vec::new();
+        let mut t = 0.0f64;
+        while requests.len() < config.max_requests {
+            t = match config.arrivals {
+                ArrivalProcess::Poisson => t + exp_gap(&mut rng, config.rate_rps),
+                ArrivalProcess::Burst => next_burst_arrival(&mut rng, t, &config),
+            };
+            if t >= config.duration_s {
+                break;
+            }
+            // weighted class pick
+            let mut pick = rng.next_f64() * total_weight;
+            let mut class = cls.len() - 1;
+            for (i, c) in cls.iter().enumerate() {
+                pick -= c.weight;
+                if pick < 0.0 {
+                    class = i;
+                    break;
+                }
+            }
+            // reuse an existing member of the class, or mint a fresh one
+            let matrix_seed = if !seen[class].is_empty() && rng.next_f64() < config.reuse {
+                seen[class][rng.below(seen[class].len())]
+            } else {
+                next_member[class] += 1;
+                let id = next_member[class];
+                seen[class].push(id);
+                id
+            };
+            let rhs_seed = rng.next_u64();
+            let deadline_s = if config.deadline_ms == 0 {
+                0.0
+            } else {
+                config.deadline_ms as f64 * 1e-3 * cls[class].deadline_mult
+            };
+            requests.push(PlannedRequest {
+                index: requests.len(),
+                at_s: t,
+                class,
+                matrix_seed,
+                rhs_seed,
+                deadline_s,
+            });
+        }
+        Workload { config, requests }
+    }
+
+    /// The matrix spec a planned request registers (content-addressed, so
+    /// reused members resolve to the same session and can fold / warm-hit).
+    pub fn spec_of(&self, r: &PlannedRequest) -> MatrixSpec {
+        let c = &classes()[r.class];
+        match c.format {
+            MatrixFormat::Dense => MatrixSpec::Table1 { n: c.n, seed: r.matrix_seed },
+            MatrixFormat::Csr => MatrixSpec::ConvDiff1d { n: c.n, seed: r.matrix_seed },
+        }
+    }
+
+    /// Offered request rate over the planned window.
+    pub fn offered_rps(&self) -> f64 {
+        self.requests.len() as f64 / self.config.duration_s
+    }
+
+    /// Planned request count per class.
+    pub fn class_offered(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; classes().len()];
+        for r in &self.requests {
+            counts[r.class] += 1;
+        }
+        counts
+    }
+
+    /// Distinct matrix members per class (the realized population size).
+    pub fn class_population(&self) -> Vec<usize> {
+        let mut seen: Vec<std::collections::HashSet<u64>> =
+            vec![Default::default(); classes().len()];
+        for r in &self.requests {
+            seen[r.class].insert(r.matrix_seed);
+        }
+        seen.iter().map(|s| s.len()).collect()
+    }
+
+    /// The canonical request manifest: one header line of knobs plus one
+    /// line per planned request.  Two runs submit identical sequences
+    /// exactly when their manifests compare equal — the determinism
+    /// contract `tests/load_e2e.rs` asserts.
+    pub fn manifest(&self) -> String {
+        use std::fmt::Write;
+        let c = &self.config;
+        let mut out = format!(
+            "# load manifest seed={} arrivals={} rate_rps={} duration_s={} reuse={} \
+             deadline_ms={} m={} policy={}\n",
+            c.seed,
+            c.arrivals,
+            c.rate_rps,
+            c.duration_s,
+            c.reuse,
+            c.deadline_ms,
+            c.m,
+            c.policy.map(|p| p.name()).unwrap_or("auto"),
+        );
+        for r in &self.requests {
+            let _ = writeln!(
+                out,
+                "{} t={:.9} class={} mat={} rhs={:016x} deadline_s={:.6}",
+                r.index,
+                r.at_s,
+                classes()[r.class].name,
+                r.matrix_seed,
+                r.rhs_seed,
+                r.deadline_s
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64) -> LoadConfig {
+        LoadConfig { rate_rps: 200.0, duration_s: 0.5, seed, ..Default::default() }
+    }
+
+    #[test]
+    fn same_seed_plans_identical_sequences() {
+        let a = Workload::generate(cfg(7));
+        let b = Workload::generate(cfg(7));
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.manifest(), b.manifest());
+        let c = Workload::generate(cfg(8));
+        assert_ne!(a.manifest(), c.manifest());
+    }
+
+    #[test]
+    fn poisson_rate_is_roughly_honoured() {
+        let wl = Workload::generate(LoadConfig {
+            rate_rps: 400.0,
+            duration_s: 1.0,
+            ..Default::default()
+        });
+        let n = wl.requests.len() as f64;
+        // 400 expected, sd = 20: a 5-sigma band is deterministic per seed
+        assert!((300.0..500.0).contains(&n), "planned {n} arrivals");
+        let mut last = 0.0;
+        for r in &wl.requests {
+            assert!(r.at_s >= last && r.at_s < 1.0);
+            last = r.at_s;
+        }
+    }
+
+    #[test]
+    fn burst_arrivals_stay_inside_on_windows() {
+        let config = LoadConfig {
+            arrivals: ArrivalProcess::Burst,
+            rate_rps: 300.0,
+            duration_s: 1.0,
+            burst_on_s: 0.1,
+            burst_off_s: 0.15,
+            burst_mult: 3.0,
+            ..Default::default()
+        };
+        let period = config.burst_on_s + config.burst_off_s;
+        let on = config.burst_on_s;
+        let wl = Workload::generate(config);
+        assert!(!wl.requests.is_empty());
+        for r in &wl.requests {
+            let pos = r.at_s % period;
+            assert!(pos < on, "arrival at {} falls in an off-window", r.at_s);
+        }
+    }
+
+    #[test]
+    fn reuse_controls_the_population_size() {
+        let fresh = Workload::generate(LoadConfig { reuse: 0.0, ..cfg(3) });
+        let pop: usize = fresh.class_population().iter().sum();
+        assert_eq!(pop, fresh.requests.len(), "reuse=0 mints every member fresh");
+        let hot = Workload::generate(LoadConfig { reuse: 0.9, ..cfg(3) });
+        let hot_pop: usize = hot.class_population().iter().sum();
+        assert!(
+            hot_pop * 3 < hot.requests.len(),
+            "reuse=0.9 must concentrate traffic: {} members for {} requests",
+            hot_pop,
+            hot.requests.len()
+        );
+    }
+
+    #[test]
+    fn deadlines_scale_per_class_and_zero_disables() {
+        let wl = Workload::generate(LoadConfig { deadline_ms: 100, ..cfg(5) });
+        for r in &wl.requests {
+            let expect = 0.1 * classes()[r.class].deadline_mult;
+            assert!((r.deadline_s - expect).abs() < 1e-12);
+        }
+        let none = Workload::generate(LoadConfig { deadline_ms: 0, ..cfg(5) });
+        assert!(none.requests.iter().all(|r| r.deadline_s == 0.0));
+    }
+
+    #[test]
+    fn max_requests_caps_the_plan() {
+        let wl = Workload::generate(LoadConfig {
+            rate_rps: 10_000.0,
+            duration_s: 10.0,
+            max_requests: 64,
+            ..Default::default()
+        });
+        assert_eq!(wl.requests.len(), 64);
+    }
+
+    #[test]
+    fn class_weights_are_positive_and_mix_is_exercised() {
+        let total: f64 = classes().iter().map(|c| c.weight).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        let wl = Workload::generate(LoadConfig {
+            rate_rps: 2000.0,
+            duration_s: 1.0,
+            ..Default::default()
+        });
+        for (i, &count) in wl.class_offered().iter().enumerate() {
+            assert!(count > 0, "class {} never drawn", classes()[i].name);
+        }
+    }
+}

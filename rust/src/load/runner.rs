@@ -1,0 +1,222 @@
+//! Open-loop execution of a planned [`Workload`] against a running
+//! [`SolveService`].
+//!
+//! Open-loop means the generator NEVER waits on a completion before the
+//! next submission: arrivals are paced purely by the planned clock, so a
+//! service falling behind accumulates backlog (and sheds / rejects)
+//! instead of silently throttling the offered rate — the failure mode a
+//! closed-loop driver like `serve --waves` structurally cannot expose.
+//! Replies drain only after the offered window closes; every receiver is
+//! then received and accounted, and the trace ring is snapshotted *after*
+//! the drain, so the reporter sees a finalized trace for every admitted
+//! request (workers record traces before replying).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{ShedError, SolveOutcome, SolveService};
+use crate::gmres::GmresConfig;
+use crate::linalg::generators;
+use crate::trace::Trace;
+use crate::Result;
+
+use super::population::Workload;
+
+/// Everything one load run produced, reconciled from three independent
+/// ledgers: the submitter's own counts, the service metrics, and the
+/// finalized trace ring.
+#[derive(Debug)]
+pub struct LoadOutcome {
+    /// Requests the plan offered (submission attempts).
+    pub offered: usize,
+    /// Replies that carried a successful solve.
+    pub completed: usize,
+    /// Replies that carried an execution error (worker died, bad rhs...).
+    pub failed: usize,
+    /// Submissions refused with a typed [`ShedError`] (admission control).
+    pub shed_submits: usize,
+    /// Submissions refused by inflight backpressure (untyped error).
+    pub rejected_submits: usize,
+    /// Wall clock of the whole run, submission through drain, seconds.
+    pub wall_seconds: f64,
+    /// The offered window (last planned arrival is strictly inside it).
+    pub window_seconds: f64,
+    /// Finalized traces snapshotted after the drain.
+    pub traces: Vec<Trace>,
+    /// Content-addressed matrix id -> workload class index, learned from
+    /// the session handles — how the reporter buckets traces per class.
+    pub matrix_class: HashMap<u64, usize>,
+    /// Service-side shed counter (must reconcile with `shed_submits`).
+    pub sheds_metric: u64,
+    /// Residency-cache hits observed during the run.
+    pub cache_hits: u64,
+    /// Residency-cache misses observed during the run.
+    pub cache_misses: u64,
+    /// Folded multi-RHS executions observed during the run.
+    pub folds: u64,
+    /// Traces the bounded ring evicted (0 means the reporter saw all).
+    pub trace_dropped: u64,
+}
+
+impl LoadOutcome {
+    /// Completed-request throughput over the offered window.
+    pub fn completed_rps(&self) -> f64 {
+        self.completed as f64 / self.window_seconds
+    }
+
+    /// Shed + rejected, as a fraction of offered.
+    pub fn refusal_rate(&self) -> f64 {
+        (self.shed_submits + self.rejected_submits) as f64 / (self.offered as f64).max(1.0)
+    }
+}
+
+/// Submit the planned workload open-loop, drain the replies, snapshot the
+/// observability state.  The service outlives the call; run several
+/// workloads against one service to study warm-up, or a fresh service per
+/// rate point for independent measurements (what `gmres-rs load` does).
+pub fn run_load(svc: &Arc<SolveService>, wl: &Workload) -> LoadOutcome {
+    let classes = super::population::classes();
+    // session handles live for the whole run so reused members keep fold
+    // affinity and residency warmth, keyed by (class, member)
+    let mut handles = HashMap::new();
+    let mut matrix_class: HashMap<u64, usize> = HashMap::new();
+    let mut pending: Vec<mpsc::Receiver<Result<SolveOutcome>>> =
+        Vec::with_capacity(wl.requests.len());
+    let mut shed_submits = 0usize;
+    let mut rejected_submits = 0usize;
+
+    let start = Instant::now();
+    for r in &wl.requests {
+        // pace to the planned clock; a late submitter just fires
+        // immediately (the backlog is the signal, not an error)
+        let elapsed = start.elapsed().as_secs_f64();
+        if r.at_s > elapsed {
+            std::thread::sleep(Duration::from_secs_f64(r.at_s - elapsed));
+        }
+        let c = &classes[r.class];
+        let handle = handles
+            .entry((r.class, r.matrix_seed))
+            .or_insert_with(|| svc.register(wl.spec_of(r)));
+        matrix_class.insert(handle.id().0, r.class);
+        let mut builder = handle
+            .solve_rhs(generators::random_vector(c.n, r.rhs_seed))
+            .config(GmresConfig {
+                m: wl.config.m,
+                tol: c.tol,
+                max_restarts: 200,
+                precond: c.precond,
+                ..Default::default()
+            });
+        if let Some(p) = wl.config.policy {
+            builder = builder.policy(p);
+        }
+        if r.deadline_s > 0.0 {
+            builder = builder.deadline(Duration::from_secs_f64(r.deadline_s));
+        }
+        match builder.submit_nowait() {
+            Ok(rx) => pending.push(rx),
+            Err(e) if e.downcast_ref::<ShedError>().is_some() => shed_submits += 1,
+            Err(_) => rejected_submits += 1,
+        }
+    }
+
+    // the window is over: drain every admitted reply (open-loop ends here)
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => completed += 1,
+            _ => failed += 1,
+        }
+        svc.finish();
+    }
+    let wall_seconds = start.elapsed().as_secs_f64();
+
+    // mirror pool/tracer-internal counters into Metrics, then snapshot the
+    // ring — workers record a trace strictly before replying, so after the
+    // drain every admitted request's trace is finalized and visible
+    svc.sync_observability();
+    let metrics = svc.metrics();
+    LoadOutcome {
+        offered: wl.requests.len(),
+        completed,
+        failed,
+        shed_submits,
+        rejected_submits,
+        wall_seconds,
+        window_seconds: wl.config.duration_s,
+        traces: svc.tracer().snapshot(),
+        matrix_class,
+        sheds_metric: metrics.sheds(),
+        cache_hits: metrics.cache_hits(),
+        cache_misses: metrics.cache_misses(),
+        folds: metrics.folds(),
+        trace_dropped: svc.tracer().dropped(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServiceConfig;
+    use crate::load::population::LoadConfig;
+    use crate::trace::TraceStatus;
+
+    fn quiet_service() -> Arc<SolveService> {
+        SolveService::start(ServiceConfig {
+            cpu_workers: 2,
+            queue_capacity: 4096,
+            trace_capacity: 8192,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn low_rate_run_completes_everything() {
+        let svc = quiet_service();
+        let wl = Workload::generate(LoadConfig {
+            rate_rps: 60.0,
+            duration_s: 0.4,
+            deadline_ms: 0,
+            ..Default::default()
+        });
+        let out = run_load(&svc, &wl);
+        assert!(out.offered > 0);
+        assert_eq!(out.completed, out.offered, "no deadlines, ample queue: all complete");
+        assert_eq!(out.shed_submits + out.rejected_submits, 0);
+        assert_eq!(out.trace_dropped, 0);
+        assert_eq!(out.traces.len(), out.offered, "one finalized trace per request");
+        assert!(out
+            .traces
+            .iter()
+            .all(|t| t.status == TraceStatus::Completed));
+        // every trace's matrix id maps back to a workload class
+        for t in &out.traces {
+            assert!(out.matrix_class.contains_key(&t.matrix_id), "unmapped {:#x}", t.matrix_id);
+        }
+        assert_eq!(svc.inflight(), 0, "drain released all accounting");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn reuse_heavy_run_touches_the_residency_machinery() {
+        let svc = quiet_service();
+        let wl = Workload::generate(LoadConfig {
+            rate_rps: 150.0,
+            duration_s: 0.4,
+            reuse: 0.9,
+            deadline_ms: 0,
+            seed: 11,
+            ..Default::default()
+        });
+        let pop: usize = wl.class_population().iter().sum();
+        assert!(pop < wl.requests.len(), "reuse must shrink the population");
+        let out = run_load(&svc, &wl);
+        assert_eq!(out.completed, out.offered);
+        // distinct sessions == realized population
+        assert_eq!(out.matrix_class.len(), pop);
+        svc.shutdown();
+    }
+}

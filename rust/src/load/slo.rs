@@ -1,0 +1,381 @@
+//! SLO-attainment reporting over the finalized trace ring.
+//!
+//! The reporter is deliberately trace-driven: everything it states —
+//! attainment, quantiles, the latency breakdown, shed accounting — is
+//! recomputed from the span waterfalls the workers recorded, then
+//! *reconciled* against the submitter's own counts and the service
+//! metrics.  Three independent ledgers agreeing is the observability
+//! claim this PR makes; [`SloReport::reconciled`] is false the moment any
+//! of them drifts (e.g. the bounded ring dropped a trace).
+
+use crate::trace::{Breakdown, Trace, TraceStatus};
+
+use super::population::{classes, Workload};
+use super::runner::LoadOutcome;
+
+/// Per-class SLO accounting.
+#[derive(Clone, Debug)]
+pub struct ClassSlo {
+    pub name: &'static str,
+    /// Requests the plan offered for this class.
+    pub offered: usize,
+    /// Traces that completed.
+    pub completed: usize,
+    /// Completed within the class deadline (all completed when the run
+    /// had no deadlines).
+    pub on_time: usize,
+    /// Typed admission sheds.
+    pub shed: usize,
+    /// Backpressure rejections.
+    pub rejected: usize,
+    /// Execution failures.
+    pub failed: usize,
+    /// The class deadline, seconds (0 = none).
+    pub deadline_s: f64,
+    /// Exact quantiles over completed end-to-end latencies, seconds.
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl ClassSlo {
+    /// Fraction of offered requests completed within deadline.
+    pub fn attainment(&self) -> f64 {
+        if self.offered == 0 {
+            return 1.0;
+        }
+        self.on_time as f64 / self.offered as f64
+    }
+}
+
+/// Exact quantile over a sorted sample set (rank = ceil(p·n), 1-based).
+fn exact_quantile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// One run's SLO report, reconciled across ledgers.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    pub classes: Vec<ClassSlo>,
+    /// Offered request count (the whole plan).
+    pub offered: usize,
+    pub completed: usize,
+    pub on_time: usize,
+    /// Shed traces found in the ring (status [`TraceStatus::Shed`]).
+    pub shed_traces: usize,
+    pub rejected_traces: usize,
+    pub failed_traces: usize,
+    /// Offered request rate over the window, rps.
+    pub offered_rps: f64,
+    /// Completed throughput over the window, rps.
+    pub completed_rps: f64,
+    /// Exact overall quantiles over completed latencies, seconds.
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// Aggregate latency breakdown over every trace (terminal included).
+    pub breakdown: Breakdown,
+    /// All ledgers agree: submitter sheds == shed traces == the metric,
+    /// the ring dropped nothing, and every offered request left a trace.
+    pub reconciled: bool,
+    /// Residency-cache hits / misses / folds observed during the run.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub folds: u64,
+}
+
+impl SloReport {
+    /// Overall attainment: on-time completions over offered.
+    pub fn attainment(&self) -> f64 {
+        if self.offered == 0 {
+            return 1.0;
+        }
+        self.on_time as f64 / self.offered as f64
+    }
+
+    /// Build the report from the plan and the run outcome.  Traces are
+    /// bucketed per class through the content-addressed matrix ids the
+    /// runner learned from its session handles.
+    pub fn build(wl: &Workload, out: &LoadOutcome) -> SloReport {
+        let cls = classes();
+        let offered_per_class = wl.class_offered();
+        let mut per_class: Vec<Vec<&Trace>> = vec![Vec::new(); cls.len()];
+        let mut unmapped = 0usize;
+        for t in &out.traces {
+            match out.matrix_class.get(&t.matrix_id) {
+                Some(&c) => per_class[c].push(t),
+                None => unmapped += 1,
+            }
+        }
+        let mut all_latencies: Vec<f64> = Vec::new();
+        let mut classes_out = Vec::with_capacity(cls.len());
+        let mut on_time_total = 0usize;
+        for (i, c) in cls.iter().enumerate() {
+            let deadline_s = if wl.config.deadline_ms == 0 {
+                0.0
+            } else {
+                wl.config.deadline_ms as f64 * 1e-3 * c.deadline_mult
+            };
+            let mut lat: Vec<f64> = Vec::new();
+            let (mut n_completed, mut n_shed, mut n_rejected, mut n_failed) = (0, 0, 0, 0);
+            let mut on_time = 0usize;
+            for t in &per_class[i] {
+                match t.status {
+                    TraceStatus::Completed => {
+                        n_completed += 1;
+                        lat.push(t.total_s);
+                        if deadline_s == 0.0 || t.total_s <= deadline_s {
+                            on_time += 1;
+                        }
+                    }
+                    TraceStatus::Shed => n_shed += 1,
+                    TraceStatus::Rejected => n_rejected += 1,
+                    TraceStatus::Failed => n_failed += 1,
+                }
+            }
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            all_latencies.extend_from_slice(&lat);
+            on_time_total += on_time;
+            classes_out.push(ClassSlo {
+                name: c.name,
+                offered: offered_per_class[i],
+                completed: n_completed,
+                on_time,
+                shed: n_shed,
+                rejected: n_rejected,
+                failed: n_failed,
+                deadline_s,
+                p50: exact_quantile(&lat, 0.50),
+                p95: exact_quantile(&lat, 0.95),
+                p99: exact_quantile(&lat, 0.99),
+            });
+        }
+        all_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let shed_traces: usize = classes_out.iter().map(|c| c.shed).sum();
+        let rejected_traces: usize =
+            classes_out.iter().map(|c| c.rejected).sum::<usize>() + unmapped;
+        let failed_traces: usize = classes_out.iter().map(|c| c.failed).sum();
+        let completed: usize = classes_out.iter().map(|c| c.completed).sum();
+        let reconciled = shed_traces == out.shed_submits
+            && out.sheds_metric as usize == out.shed_submits
+            && out.trace_dropped == 0
+            && out.traces.len() == out.offered
+            && completed == out.completed;
+        SloReport {
+            classes: classes_out,
+            offered: out.offered,
+            completed,
+            on_time: on_time_total,
+            shed_traces,
+            rejected_traces,
+            failed_traces,
+            offered_rps: out.offered as f64 / out.window_seconds,
+            completed_rps: out.completed_rps(),
+            p50: exact_quantile(&all_latencies, 0.50),
+            p95: exact_quantile(&all_latencies, 0.95),
+            p99: exact_quantile(&all_latencies, 0.99),
+            breakdown: Breakdown::aggregate(out.traces.iter()),
+            reconciled,
+            cache_hits: out.cache_hits,
+            cache_misses: out.cache_misses,
+            folds: out.folds,
+        }
+    }
+
+    /// One rate point of `BENCH_load.json`: the machine-readable record
+    /// the CI smoke greps and the attainment curve is plotted from.
+    pub fn to_json_point(&self) -> String {
+        let shares = self.breakdown.shares();
+        let share_fields: Vec<String> = Breakdown::NAMES
+            .iter()
+            .zip(shares.iter())
+            .map(|(n, s)| format!("\"{n}\": {s:.6}"))
+            .collect();
+        let class_points: Vec<String> = self
+            .classes
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"class\": \"{}\", \"offered\": {}, \"completed\": {}, \"shed\": {}, \
+                     \"attainment\": {:.6}, \"p50_s\": {:.6}, \"p95_s\": {:.6}, \"p99_s\": {:.6}}}",
+                    c.name,
+                    c.offered,
+                    c.completed,
+                    c.shed,
+                    c.attainment(),
+                    c.p50,
+                    c.p95,
+                    c.p99
+                )
+            })
+            .collect();
+        format!(
+            "{{\"offered_rps\": {:.3}, \"completed_rps\": {:.3}, \"attainment\": {:.6}, \
+             \"completed\": {}, \"shed\": {}, \"rejected\": {}, \"failed\": {}, \
+             \"p50_s\": {:.6}, \"p95_s\": {:.6}, \"p99_s\": {:.6}, \
+             \"breakdown_shares\": {{{}}}, \"share_sum\": {:.9}, \"reconciled\": {}, \
+             \"cache_hits\": {}, \"cache_misses\": {}, \"folds\": {}, \"classes\": [{}]}}",
+            self.offered_rps,
+            self.completed_rps,
+            self.attainment(),
+            self.completed,
+            self.shed_traces,
+            self.rejected_traces,
+            self.failed_traces,
+            self.p50,
+            self.p95,
+            self.p99,
+            share_fields.join(", "),
+            self.breakdown.share_sum(),
+            self.reconciled,
+            self.cache_hits,
+            self.cache_misses,
+            self.folds,
+            class_points.join(", ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::load::population::LoadConfig;
+    use crate::trace::{ExecutionProfile, RequestTrace, TraceId};
+
+    fn completed_trace(id: u64, matrix_id: u64, slow: bool) -> Trace {
+        let mut rt = RequestTrace::begin(TraceId(id), id, matrix_id);
+        rt.mark_enqueued();
+        rt.mark_claimed();
+        rt.mark_build_start();
+        rt.mark_exec_start();
+        if slow {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let sims = [1e-3];
+        let walls = [1e-6];
+        rt.finish_completed(&ExecutionProfile {
+            warm: false,
+            warm_discount: 0.0,
+            setup_sim_seconds: 1e-3,
+            cycle_sim_seconds: &sims,
+            cycle_wall_seconds: &walls,
+            cycle_link_seconds: &[],
+            booked_sim_seconds: 2e-3,
+            fold_k: 1,
+        })
+    }
+
+    fn shed_trace(id: u64, matrix_id: u64) -> Trace {
+        let mut rt = RequestTrace::begin(TraceId(id), id, matrix_id);
+        rt.mark_enqueued();
+        rt.finish_shed("deadline unmeetable")
+    }
+
+    fn outcome(wl: &Workload, traces: Vec<Trace>, sheds: usize) -> LoadOutcome {
+        // fabricate the runner's ledger: map every class to a synthetic
+        // matrix id equal to its index
+        let matrix_class = (0..classes().len()).map(|i| (i as u64, i)).collect();
+        let completed = traces.iter().filter(|t| t.status == TraceStatus::Completed).count();
+        LoadOutcome {
+            offered: traces.len(),
+            completed,
+            failed: 0,
+            shed_submits: sheds,
+            rejected_submits: 0,
+            wall_seconds: wl.config.duration_s,
+            window_seconds: wl.config.duration_s,
+            traces,
+            matrix_class,
+            sheds_metric: sheds as u64,
+            cache_hits: 0,
+            cache_misses: 0,
+            folds: 0,
+            trace_dropped: 0,
+        }
+    }
+
+    #[test]
+    fn all_completed_with_no_deadline_attains_fully() {
+        let wl = Workload::generate(LoadConfig {
+            rate_rps: 50.0,
+            duration_s: 0.2,
+            deadline_ms: 0,
+            ..Default::default()
+        });
+        let traces: Vec<Trace> = (0..wl.requests.len())
+            .map(|i| completed_trace(i as u64 + 1, (i % classes().len()) as u64, false))
+            .collect();
+        let n = traces.len();
+        let report = SloReport::build(&wl, &outcome(&wl, traces, 0));
+        // the plan's class counts differ from the fabricated round-robin,
+        // so attainment is checked on the totals
+        assert_eq!(report.completed, n);
+        assert_eq!(report.on_time, n);
+        assert!(report.p50 <= report.p95 && report.p95 <= report.p99);
+        assert!((report.breakdown.share_sum() - 1.0).abs() < 1e-9);
+        let json = report.to_json_point();
+        assert!(json.contains("\"share_sum\""), "{json}");
+        assert!(json.contains("\"classes\""), "{json}");
+    }
+
+    #[test]
+    fn sheds_count_against_attainment_and_reconcile() {
+        let wl = Workload::generate(LoadConfig {
+            rate_rps: 50.0,
+            duration_s: 0.2,
+            deadline_ms: 100,
+            ..Default::default()
+        });
+        let mut traces = vec![
+            completed_trace(1, 0, false),
+            completed_trace(2, 1, false),
+            shed_trace(3, 0),
+            shed_trace(4, 2),
+        ];
+        let report = SloReport::build(&wl, &outcome(&wl, traces.clone(), 2));
+        assert_eq!(report.shed_traces, 2);
+        assert_eq!(report.completed, 2);
+        assert!(report.reconciled, "all ledgers agree");
+        // drop one shed from the submitter ledger: reconciliation breaks
+        let report2 = SloReport::build(&wl, &outcome(&wl, traces.clone(), 1));
+        assert!(!report2.reconciled);
+        // a dropped trace breaks it too
+        traces.pop();
+        let mut out = outcome(&wl, traces, 2);
+        out.offered += 1;
+        out.trace_dropped = 1;
+        assert!(!SloReport::build(&wl, &out).reconciled);
+    }
+
+    #[test]
+    fn deadline_misses_are_late_not_on_time() {
+        let wl = Workload::generate(LoadConfig {
+            rate_rps: 50.0,
+            duration_s: 0.2,
+            deadline_ms: 1, // 1 ms base deadline: the slow trace misses
+            ..Default::default()
+        });
+        let traces = vec![completed_trace(1, 0, true), completed_trace(2, 0, false)];
+        let report = SloReport::build(&wl, &outcome(&wl, traces, 0));
+        assert_eq!(report.completed, 2);
+        assert!(report.on_time < 2, "the 2 ms trace must miss the 1 ms deadline");
+    }
+
+    #[test]
+    fn exact_quantiles_are_monotone_and_within_range() {
+        let sorted = vec![0.1, 0.2, 0.3, 0.4, 0.5];
+        let mut last = 0.0;
+        for q in [0.01, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let v = exact_quantile(&sorted, q);
+            assert!(v >= last, "quantile not monotone at {q}");
+            assert!((0.1..=0.5).contains(&v));
+            last = v;
+        }
+        assert_eq!(exact_quantile(&[], 0.5), 0.0);
+        assert_eq!(exact_quantile(&sorted, 0.5), 0.3);
+    }
+}

@@ -19,6 +19,10 @@
 //!                 [--waves 1] [--deadline-ms 0] [--cache-mb 0] [--bench-json path]
 //!                 [--trace-json path] [--metrics-out path]
 //! gmres-rs trace  --file path [--job N] [--list]
+//! gmres-rs load   [--arrivals poisson|burst] [--rate R | --rates a,b,..]
+//!                 [--duration S] [--reuse P] [--deadline-ms D] [--seed S]
+//!                 [--policy P] [--transport ...] [--check]
+//!                 [--bench-json path] [--manifest-out path] [--trace-json path]
 //! gmres-rs transport-bench [--fleet SPEC] [--out BENCH_transport.json]
 //! gmres-rs shard-worker     (internal: spawned shard member, speaks the
 //!                            wire protocol on stdin/stdout)
@@ -69,6 +73,21 @@ USAGE:
                  (pretty-print one request's span waterfall from a
                   --trace-json dump; --list shows one line per trace; --job
                   renders that job's trace even when it was shed or failed)
+  gmres-rs load  [--arrivals poisson|burst] [--rate R | --rates a,b,..]
+                 [--duration S] [--reuse P] [--deadline-ms MS] [--seed S]
+                 [--m M] [--cpu-workers W] [--policy P] [--fleet SPEC]
+                 [--transport in-process|process] [--max-requests N]
+                 [--burst-on S] [--burst-off S] [--burst-mult X] [--check]
+                 [--bench-json PATH] [--manifest-out PATH] [--trace-json PATH]
+                 (open-loop load harness: seeded Poisson/bursty arrivals over
+                  a mixed matrix population with a --reuse hot-set knob,
+                  per-class deadlines, and a trace-driven SLO report —
+                  per-class attainment, exact p50/p95/p99, a latency
+                  breakdown over admission/queue/claim/residency/cycles/
+                  verify/wire spans, shed accounting reconciled against
+                  typed ShedErrors; each --rates point runs against a fresh
+                  service; --check self-asserts, --bench-json writes the
+                  attainment curve)
   gmres-rs transport-bench [--fleet SPEC] [--out BENCH_transport.json]
                  (measure in-process vs process sharded cycle walls and the
                   calibrated per-link latency/bandwidth; writes a JSON report)
@@ -117,6 +136,7 @@ fn main() -> anyhow::Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
         Some("trace") => cmd_trace(&args),
+        Some("load") => cmd_load(&args),
         Some("transport-bench") => cmd_transport_bench(&args),
         Some("shard-worker") => gmres_rs::transport::worker::run(),
         Some("info") => cmd_info(),
@@ -651,6 +671,152 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         None => anyhow!("{path}: no traces recorded"),
     })?;
     print!("{}", chosen.render_waterfall());
+    Ok(())
+}
+
+/// `load`: the open-loop load harness.  Each rate point plans a seeded
+/// workload, submits it open-loop against a FRESH service (so points are
+/// independent measurements and the queue capacity never masks sheds),
+/// and reports trace-driven SLO attainment.  `--check` turns the run
+/// into a self-asserting smoke: attainment sane at the lowest rate,
+/// sheds present and fully reconciled at the highest, breakdown shares
+/// summing to 1 everywhere.
+fn cmd_load(args: &Args) -> anyhow::Result<()> {
+    use gmres_rs::load::{run_load, ArrivalProcess, LoadConfig, SloReport, Workload};
+    use gmres_rs::report::slo_table;
+    use std::fmt::Write as _;
+
+    let arrivals_s = args.get_choice("arrivals", &["poisson", "burst", "bursty"], "poisson")?;
+    let arrivals = ArrivalProcess::parse(&arrivals_s)
+        .ok_or_else(|| anyhow!("bad arrivals `{arrivals_s}`"))?;
+    let mut rates: Vec<f64> = args.get_list("rates")?;
+    if rates.is_empty() {
+        rates = vec![args.get_parse("rate", 50.0f64)?];
+    }
+    anyhow::ensure!(rates.iter().all(|&r| r > 0.0), "rates must be positive");
+    let duration_s = args.get_parse("duration", 1.0f64)?;
+    let reuse = args.get_parse("reuse", 0.6f64)?;
+    let deadline_ms = args.get_parse("deadline-ms", 250u64)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let m = args.get_parse("m", 8usize)?;
+    let cpu_workers = args.get_parse("cpu-workers", 2usize)?;
+    let max_requests = args.get_parse("max-requests", 4096usize)?;
+    let burst_on_s = args.get_parse("burst-on", 0.2f64)?;
+    let burst_off_s = args.get_parse("burst-off", 0.2f64)?;
+    let burst_mult = args.get_parse("burst-mult", 2.0f64)?;
+    let fleet = parse_fleet(args)?;
+    let transport = parse_transport(args)?;
+    let check = args.flag("check");
+    let policy = match args.get("policy") {
+        None => None,
+        Some(s) => Some(
+            Policy::parse(s)
+                .ok_or_else(|| anyhow!("unknown policy `{s}` (valid: {})", Policy::names()))?,
+        ),
+    };
+
+    let mut reports: Vec<(f64, SloReport)> = Vec::new();
+    for (i, &rate_rps) in rates.iter().enumerate() {
+        let config = LoadConfig {
+            arrivals,
+            rate_rps,
+            duration_s,
+            reuse,
+            deadline_ms,
+            seed,
+            max_requests,
+            burst_on_s,
+            burst_off_s,
+            burst_mult,
+            m,
+            policy,
+        };
+        let wl = Workload::generate(config);
+        if i == 0 {
+            if let Some(path) = args.get("manifest-out") {
+                std::fs::write(path, wl.manifest())?;
+                println!("wrote {path} ({} planned request(s))", wl.requests.len());
+            }
+        }
+        // fresh, roomy service per point: points stay independent, host
+        // backpressure never hides device-queue sheds, and the ring holds
+        // every trace so reconciliation can be exact
+        let svc = SolveService::start(ServiceConfig {
+            cpu_workers,
+            router: RouterConfig { fleet: fleet.clone(), ..Default::default() },
+            queue_capacity: max_requests.max(wl.requests.len()),
+            trace_capacity: (2 * max_requests).max(wl.requests.len() + 1),
+            transport,
+            ..Default::default()
+        });
+        println!(
+            "== rate point {rate_rps} rps ({} arrivals planned over {duration_s}s, {}) ==",
+            wl.requests.len(),
+            arrivals
+        );
+        let out = run_load(&svc, &wl);
+        let report = SloReport::build(&wl, &out);
+        print!("{}", slo_table::render(&report));
+        if i + 1 == rates.len() {
+            if let Some(path) = args.get("trace-json") {
+                std::fs::write(path, svc.tracer().to_json())?;
+                println!("wrote {path} ({} trace(s))", svc.tracer().len());
+            }
+        }
+        svc.shutdown();
+        reports.push((rate_rps, report));
+    }
+
+    if check {
+        for (rate, report) in &reports {
+            anyhow::ensure!(
+                (report.breakdown.share_sum() - 1.0).abs() <= 1e-6,
+                "rate {rate}: breakdown shares sum to {} (want 1 +- 1e-6)",
+                report.breakdown.share_sum()
+            );
+            anyhow::ensure!(
+                report.reconciled,
+                "rate {rate}: trace/metric/submitter ledgers do not reconcile"
+            );
+        }
+        let (low_rate, low) = &reports[0];
+        anyhow::ensure!(
+            low.attainment() > 0.0 && low.attainment() <= 1.0,
+            "low rate {low_rate}: attainment {} outside (0, 1]",
+            low.attainment()
+        );
+        if reports.len() >= 2 {
+            let (top_rate, top) = reports.last().unwrap();
+            anyhow::ensure!(
+                top.shed_traces >= 1,
+                "overload rate {top_rate}: expected >= 1 shed, saw none"
+            );
+        }
+        println!("load check: OK ({} rate point(s))", reports.len());
+    }
+
+    if let Some(path) = args.get("bench-json") {
+        let (_, low) = &reports[0];
+        let overload_sheds = reports.last().map(|(_, r)| r.shed_traces).unwrap_or(0);
+        let mut json = format!(
+            "{{\n  \"bench\": \"load\",\n  \"arrivals\": \"{arrivals}\",\n  \"seed\": {seed},\n  \
+             \"duration_s\": {duration_s},\n  \"reuse\": {reuse},\n  \
+             \"deadline_ms\": {deadline_ms},\n  \"policy\": \"{}\",\n  \
+             \"low_rate_attainment\": {:.6},\n  \"overload_sheds\": {overload_sheds},\n  \
+             \"points\": [",
+            policy.map(|p| p.name()).unwrap_or("auto"),
+            low.attainment()
+        );
+        for (i, (_, report)) in reports.iter().enumerate() {
+            if i > 0 {
+                json.push(',');
+            }
+            let _ = write!(json, "\n    {}", report.to_json_point());
+        }
+        json.push_str("\n  ]\n}\n");
+        std::fs::write(path, &json)?;
+        println!("wrote {path} ({} rate point(s))", reports.len());
+    }
     Ok(())
 }
 

@@ -14,6 +14,7 @@ pub mod figure5;
 pub mod model;
 pub mod paper;
 pub mod plan_table;
+pub mod slo_table;
 pub mod sweep;
 pub mod table1;
 

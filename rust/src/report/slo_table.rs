@@ -1,0 +1,120 @@
+//! Human-readable rendering of a load run's [`SloReport`]: the per-class
+//! attainment table and the latency-breakdown table the README's "Load
+//! harness & SLOs" section shows.
+
+use crate::load::SloReport;
+use crate::trace::Breakdown;
+use crate::util::bench::Table;
+
+/// Per-class attainment table: offered / completed / shed / late counts,
+/// attainment, and exact latency quantiles in milliseconds.
+pub fn render_class_table(report: &SloReport) -> String {
+    let mut table = Table::new(&[
+        "class", "offered", "completed", "shed", "late", "attainment", "p50 ms", "p95 ms",
+        "p99 ms",
+    ]);
+    for c in &report.classes {
+        table.row(&[
+            c.name.to_string(),
+            c.offered.to_string(),
+            c.completed.to_string(),
+            c.shed.to_string(),
+            (c.completed - c.on_time).to_string(),
+            format!("{:.4}", c.attainment()),
+            format!("{:.3}", c.p50 * 1e3),
+            format!("{:.3}", c.p95 * 1e3),
+            format!("{:.3}", c.p99 * 1e3),
+        ]);
+    }
+    table.row(&[
+        "TOTAL".to_string(),
+        report.offered.to_string(),
+        report.completed.to_string(),
+        report.shed_traces.to_string(),
+        (report.completed - report.on_time).to_string(),
+        format!("{:.4}", report.attainment()),
+        format!("{:.3}", report.p50 * 1e3),
+        format!("{:.3}", report.p95 * 1e3),
+        format!("{:.3}", report.p99 * 1e3),
+    ]);
+    table.render()
+}
+
+/// Latency-breakdown table: wall seconds and share per lifecycle phase,
+/// with the share-sum reconciliation line the harness asserts on.
+pub fn render_breakdown_table(breakdown: &Breakdown) -> String {
+    let mut table = Table::new(&["phase", "seconds", "share"]);
+    for (name, (value, share)) in Breakdown::NAMES
+        .iter()
+        .zip(breakdown.values().into_iter().zip(breakdown.shares()))
+    {
+        table.row(&[
+            name.to_string(),
+            format!("{value:.6}"),
+            format!("{share:.4}"),
+        ]);
+    }
+    let mut out = table.render();
+    out.push_str(&format!(
+        "breakdown: total={:.6}s share_sum={:.9}\n",
+        breakdown.total(),
+        breakdown.share_sum()
+    ));
+    out
+}
+
+/// The full report block `gmres-rs load` prints per rate point.
+pub fn render(report: &SloReport) -> String {
+    let mut out = format!(
+        "offered={:.1}rps completed={:.1}rps attainment={:.4} sheds={} rejected={} failed={} \
+         reconciled={} cache[hits={} misses={}] folds={}\n",
+        report.offered_rps,
+        report.completed_rps,
+        report.attainment(),
+        report.shed_traces,
+        report.rejected_traces,
+        report.failed_traces,
+        report.reconciled,
+        report.cache_hits,
+        report.cache_misses,
+        report.folds
+    );
+    out.push_str(&render_class_table(report));
+    out.push_str(&render_breakdown_table(&report.breakdown));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ServiceConfig, SolveService};
+    use crate::load::{run_load, LoadConfig, Workload};
+
+    #[test]
+    fn report_renders_all_classes_and_reconciles() {
+        let svc = SolveService::start(ServiceConfig {
+            cpu_workers: 2,
+            queue_capacity: 4096,
+            trace_capacity: 8192,
+            ..Default::default()
+        });
+        let wl = Workload::generate(LoadConfig {
+            rate_rps: 120.0,
+            duration_s: 0.4,
+            deadline_ms: 0,
+            ..Default::default()
+        });
+        let out = run_load(&svc, &wl);
+        let report = crate::load::SloReport::build(&wl, &out);
+        let text = render(&report);
+        for c in crate::load::classes() {
+            assert!(text.contains(c.name), "missing class {} in:\n{text}", c.name);
+        }
+        for phase in crate::trace::Breakdown::NAMES {
+            assert!(text.contains(phase), "missing phase {phase} in:\n{text}");
+        }
+        assert!(text.contains("reconciled=true"), "{text}");
+        assert!(text.contains("share_sum="), "{text}");
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,198 @@
+//! Latency-breakdown aggregation over span waterfalls.
+//!
+//! The SLO reporter wants one question answered per request and per run:
+//! *where did the wall-clock go?*  A [`Breakdown`] buckets a trace's span
+//! walls into the seven phases a reader reasons about — admission, queue,
+//! claim, residency, cycles, verify, wire — with the wire time (the
+//! [`Phase::Link`] overlays the process transport measures inside cycles)
+//! attributed *out of* the cycle bucket so the seven buckets still sum to
+//! the primary chain's wall, i.e. to `total_s`, exactly.
+//!
+//! Because the primary chain is gap-free by construction (see the module
+//! docs in [`crate::trace`]), per-trace `breakdown.total() == total_s` to
+//! f64 round-off, and aggregate shares sum to 1 whenever any wall was
+//! recorded — the invariant `ci.sh` and the load harness assert to 1e-6.
+
+use super::{Phase, Trace};
+
+/// Wall seconds attributed to each lifecycle bucket.
+///
+/// `wire` is carved out of `cycles`: a link overlay measures real wire
+/// wall *inside* a restart cycle, so the pair partitions what the cycle
+/// spans booked rather than double-counting it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    pub admission: f64,
+    pub queue: f64,
+    pub claim: f64,
+    pub residency: f64,
+    pub cycles: f64,
+    pub verify: f64,
+    pub wire: f64,
+}
+
+impl Breakdown {
+    /// Bucket labels, in the order [`Breakdown::values`] returns them.
+    pub const NAMES: [&'static str; 7] =
+        ["admission", "queue", "claim", "residency", "cycles", "verify", "wire"];
+
+    /// Attribute one trace's span walls.  Works for completed and terminal
+    /// (shed / rejected / failed) traces alike — a terminal trace simply
+    /// has zeros past the phase it died in.
+    pub fn of_trace(t: &Trace) -> Breakdown {
+        let mut b = Breakdown::default();
+        let mut wire = 0.0;
+        for s in &t.spans {
+            let w = s.wall_seconds();
+            match s.phase {
+                Phase::Admission => b.admission += w,
+                Phase::Queue => b.queue += w,
+                Phase::Claim => b.claim += w,
+                Phase::ResidencyEstablish | Phase::ResidencyWarmHit => b.residency += w,
+                Phase::Cycle(_) => b.cycles += w,
+                Phase::VerifyF64 => b.verify += w,
+                Phase::Link(_) => wire += w,
+                // fold membership overlays the whole execution; it is an
+                // annotation, not a place time went
+                Phase::FoldMember => {}
+            }
+        }
+        // wire overlays cycles: move the measured wire wall out of the
+        // cycle bucket (clamped — overlays can never exceed their hosts)
+        b.wire = wire.min(b.cycles);
+        b.cycles -= b.wire;
+        b
+    }
+
+    /// Sum many traces' breakdowns.
+    pub fn aggregate<'a>(traces: impl IntoIterator<Item = &'a Trace>) -> Breakdown {
+        let mut total = Breakdown::default();
+        for t in traces {
+            total.add(&Self::of_trace(t));
+        }
+        total
+    }
+
+    pub fn add(&mut self, other: &Breakdown) {
+        self.admission += other.admission;
+        self.queue += other.queue;
+        self.claim += other.claim;
+        self.residency += other.residency;
+        self.cycles += other.cycles;
+        self.verify += other.verify;
+        self.wire += other.wire;
+    }
+
+    /// Bucket values in [`Breakdown::NAMES`] order.
+    pub fn values(&self) -> [f64; 7] {
+        [
+            self.admission,
+            self.queue,
+            self.claim,
+            self.residency,
+            self.cycles,
+            self.verify,
+            self.wire,
+        ]
+    }
+
+    /// Total attributed wall seconds (equals the primary-chain wall).
+    pub fn total(&self) -> f64 {
+        self.values().iter().sum()
+    }
+
+    /// Normalized shares.  Each bucket divided by the total; all zeros
+    /// when nothing was recorded (so `share_sum` distinguishes "empty"
+    /// from "reconciled").
+    pub fn shares(&self) -> [f64; 7] {
+        let total = self.total();
+        if total <= 0.0 {
+            return [0.0; 7];
+        }
+        self.values().map(|v| v / total)
+    }
+
+    /// Sum of [`Breakdown::shares`]: 1.0 when any wall was attributed,
+    /// 0.0 when empty.  The load harness asserts `|share_sum - 1| <= 1e-6`.
+    pub fn share_sum(&self) -> f64 {
+        self.shares().iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{ExecutionProfile, RequestTrace, TraceId};
+
+    fn completed(link: &[f64], fold_k: usize) -> Trace {
+        let mut rt = RequestTrace::begin(TraceId(1), 1, 0xabc);
+        rt.mark_enqueued();
+        rt.mark_claimed();
+        rt.mark_build_start();
+        rt.mark_exec_start();
+        let sims = [1e-3, 1e-3];
+        let walls = [2e-6, 2e-6];
+        rt.finish_completed(&ExecutionProfile {
+            warm: false,
+            warm_discount: 0.0,
+            setup_sim_seconds: 4e-3,
+            cycle_sim_seconds: &sims,
+            cycle_wall_seconds: &walls,
+            cycle_link_seconds: link,
+            booked_sim_seconds: 6e-3,
+            fold_k,
+        })
+    }
+
+    #[test]
+    fn breakdown_total_matches_trace_wall_exactly() {
+        let t = completed(&[], 1);
+        let b = Breakdown::of_trace(&t);
+        assert!((b.total() - t.total_s).abs() < 1e-12, "{} vs {}", b.total(), t.total_s);
+        assert!((b.share_sum() - 1.0).abs() < 1e-9);
+        assert_eq!(b.wire, 0.0);
+    }
+
+    #[test]
+    fn wire_is_carved_out_of_cycles_not_double_counted() {
+        let t = completed(&[1e-6, 1e-6], 1);
+        let b = Breakdown::of_trace(&t);
+        assert!(b.wire > 0.0);
+        let no_link = Breakdown::of_trace(&completed(&[], 1));
+        // wire + cycles together book what the cycle spans booked
+        assert!((b.wire + b.cycles - no_link.cycles).abs() < 1e-9);
+        assert!((b.total() - t.total_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fold_overlay_does_not_inflate_the_total() {
+        let t = completed(&[], 3);
+        assert!(t.spans.iter().any(|s| s.phase == Phase::FoldMember));
+        let b = Breakdown::of_trace(&t);
+        assert!((b.total() - t.total_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn terminal_trace_attributes_what_it_reached() {
+        let mut rt = RequestTrace::begin(TraceId(2), 2, 0xdef);
+        rt.mark_enqueued();
+        let t = rt.finish_shed("queue full");
+        let b = Breakdown::of_trace(&t);
+        assert!((b.total() - t.total_s).abs() < 1e-12);
+        assert_eq!(b.cycles, 0.0);
+        assert_eq!(b.verify, 0.0);
+    }
+
+    #[test]
+    fn aggregate_sums_and_empty_is_zero() {
+        let traces = vec![completed(&[], 1), completed(&[], 1)];
+        let agg = Breakdown::aggregate(&traces);
+        let one = Breakdown::of_trace(&traces[0]);
+        let two = Breakdown::of_trace(&traces[1]);
+        assert!((agg.total() - one.total() - two.total()).abs() < 1e-12);
+        assert!((agg.share_sum() - 1.0).abs() < 1e-9);
+        let empty = Breakdown::aggregate(&[]);
+        assert_eq!(empty.share_sum(), 0.0);
+        assert_eq!(empty.total(), 0.0);
+    }
+}

@@ -23,6 +23,10 @@
 //! Hot-path cost is two `Instant::now()` reads per phase boundary and one
 //! short mutex acquisition at finalization; nothing allocates per cycle.
 
+pub mod breakdown;
+
+pub use breakdown::Breakdown;
+
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;

@@ -21,6 +21,9 @@ pub struct WorkerPool {
     /// Pids currently checked out per device (fault-injection target).
     checked_out: Mutex<Vec<Vec<u32>>>,
     restarts: AtomicU64,
+    /// Checkout health-check pings that found a dead worker (a strict
+    /// subset of `restarts`: the dead-on-arrival reap path).
+    ping_failures: AtomicU64,
     nonce: AtomicU64,
 }
 
@@ -32,6 +35,7 @@ impl WorkerPool {
             idle: Mutex::new((0..devices).map(|_| Vec::new()).collect()),
             checked_out: Mutex::new((0..devices).map(|_| Vec::new()).collect()),
             restarts: AtomicU64::new(0),
+            ping_failures: AtomicU64::new(0),
             nonce: AtomicU64::new(1),
         }
     }
@@ -44,6 +48,12 @@ impl WorkerPool {
     /// Workers respawned after failed health checks or crash check-ins.
     pub fn restarts(&self) -> u64 {
         self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Checkout pings that found a parked worker dead (each also counts
+    /// as a restart).
+    pub fn ping_failures(&self) -> u64 {
+        self.ping_failures.load(Ordering::Relaxed)
     }
 
     /// Idle workers currently parked for `device`.
@@ -67,6 +77,7 @@ impl WorkerPool {
                     // dead on arrival: reap, count, try the next slot
                     handle.kill();
                     drop(handle);
+                    self.ping_failures.fetch_add(1, Ordering::Relaxed);
                     self.restarts.fetch_add(1, Ordering::Relaxed);
                 }
                 None => {

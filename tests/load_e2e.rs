@@ -1,0 +1,168 @@
+//! End-to-end load-harness tests: seed determinism at the manifest level,
+//! low-rate SLO attainment with full-ledger reconciliation, and terminal
+//! traces (shed under overload) carrying a complete span chain plus a
+//! populated plan audit — the satellite acceptance bars of the
+//! observability PR, driven through the public `load` API exactly as the
+//! CLI drives it.
+
+use gmres_rs::backend::Policy;
+use gmres_rs::coordinator::{ServiceConfig, SolveService};
+use gmres_rs::load::{run_load, ArrivalProcess, LoadConfig, SloReport, Workload};
+use gmres_rs::trace::TraceStatus;
+
+fn service(queue: usize, traces: usize) -> std::sync::Arc<SolveService> {
+    SolveService::start(ServiceConfig {
+        cpu_workers: 2,
+        queue_capacity: queue,
+        trace_capacity: traces,
+        ..Default::default()
+    })
+}
+
+/// One seed threads arrivals, matrix population and RHS generation: two
+/// same-seed plans are identical down to the request manifest; changing
+/// the seed changes the sequence.
+#[test]
+fn same_seed_runs_submit_identical_request_sequences() {
+    let config = LoadConfig {
+        rate_rps: 200.0,
+        duration_s: 0.5,
+        reuse: 0.7,
+        seed: 1234,
+        ..Default::default()
+    };
+    let a = Workload::generate(config.clone());
+    let b = Workload::generate(config.clone());
+    assert_eq!(a.requests, b.requests, "same seed, same plan");
+    assert_eq!(a.manifest(), b.manifest(), "same seed, same manifest");
+
+    let c = Workload::generate(LoadConfig { seed: 1235, ..config.clone() });
+    assert_ne!(a.manifest(), c.manifest(), "different seed, different manifest");
+
+    // bursty arrivals are deterministic under the same seed too
+    let burst = LoadConfig { arrivals: ArrivalProcess::Burst, ..config };
+    assert_eq!(
+        Workload::generate(burst.clone()).manifest(),
+        Workload::generate(burst).manifest()
+    );
+}
+
+/// At a rate far below capacity with generous deadlines, every offered
+/// request completes on time: attainment >= 0.99, the latency breakdown
+/// partitions end-to-end time to 1e-6, and all three ledgers reconcile.
+#[test]
+fn low_rate_attainment_is_high_and_ledgers_reconcile() {
+    let svc = service(4096, 8192);
+    let wl = Workload::generate(LoadConfig {
+        rate_rps: 60.0,
+        duration_s: 0.4,
+        reuse: 0.6,
+        deadline_ms: 10_000,
+        seed: 42,
+        ..Default::default()
+    });
+    let out = run_load(&svc, &wl);
+    let report = SloReport::build(&wl, &out);
+    assert!(
+        report.attainment() >= 0.99,
+        "low-rate attainment {} below bar; sheds={} rejected={} failed={}",
+        report.attainment(),
+        report.shed_traces,
+        report.rejected_traces,
+        report.failed_traces
+    );
+    assert!(
+        (report.breakdown.share_sum() - 1.0).abs() < 1e-6,
+        "breakdown shares must sum to 1, got {}",
+        report.breakdown.share_sum()
+    );
+    assert!(report.reconciled, "ledgers must agree at low rate");
+    assert_eq!(report.offered, wl.requests.len());
+    assert!(report.p50 <= report.p95 && report.p95 <= report.p99);
+    svc.shutdown();
+}
+
+/// Satellite: overload against a pinned device policy sheds, and every
+/// shed trace is terminal-complete — span chain covering the latency up
+/// to the terminal event, a populated [`PlanAudit`] (the decision that
+/// admitted it far enough to be shed), and a typed shed event string.
+#[test]
+fn overload_sheds_leave_complete_terminal_traces() {
+    let svc = service(16_384, 32_768);
+    let wl = Workload::generate(LoadConfig {
+        rate_rps: 4000.0,
+        duration_s: 0.4,
+        reuse: 0.6,
+        deadline_ms: 250,
+        seed: 7,
+        policy: Some(Policy::GmatrixLike),
+        ..Default::default()
+    });
+    let out = run_load(&svc, &wl);
+    assert!(
+        out.shed_submits > 0,
+        "2x+ saturation against bounded device queues must shed (offered {})",
+        out.offered
+    );
+    let shed_traces: Vec<_> =
+        out.traces.iter().filter(|t| t.status == TraceStatus::Shed).collect();
+    assert_eq!(shed_traces.len(), out.shed_submits, "every shed leaves a trace");
+    for t in &shed_traces {
+        assert!(
+            t.coverage() > 0.99,
+            "shed trace {} span chain must cover its latency, got {}",
+            t.trace_id,
+            t.coverage()
+        );
+        assert!(
+            !t.spans.is_empty(),
+            "shed trace {} must carry its span chain up to the terminal event",
+            t.trace_id
+        );
+        assert!(
+            !t.audit.chosen.is_empty(),
+            "shed trace {} must carry the plan audit that admitted it",
+            t.trace_id
+        );
+        assert!(
+            t.audit.events.iter().any(|e| e.starts_with("shed: ")),
+            "shed trace {} must record its typed shed reason, events: {:?}",
+            t.trace_id,
+            t.audit.events
+        );
+    }
+    let report = SloReport::build(&wl, &out);
+    assert!(report.reconciled, "shed accounting reconciles across all three ledgers");
+    assert!(report.attainment() < 1.0, "overload cannot attain fully");
+    svc.shutdown();
+}
+
+/// Reuse-heavy load against a device policy drives the residency cache:
+/// repeated matrix ids land warm (or fold) instead of re-uploading.
+#[test]
+fn reuse_heavy_load_exercises_residency_and_folding() {
+    let svc = service(4096, 8192);
+    let wl = Workload::generate(LoadConfig {
+        rate_rps: 100.0,
+        duration_s: 0.4,
+        reuse: 0.95,
+        deadline_ms: 0,
+        seed: 11,
+        policy: Some(Policy::GmatrixLike),
+        ..Default::default()
+    });
+    let out = run_load(&svc, &wl);
+    assert!(out.offered > 0);
+    assert_eq!(out.completed + out.failed, out.offered, "no deadline, nothing shed");
+    assert!(
+        out.cache_hits + out.folds > 0,
+        "0.95 reuse must warm the residency cache or fold RHS \
+         (hits={} folds={} misses={})",
+        out.cache_hits,
+        out.folds,
+        out.cache_misses
+    );
+    let report = SloReport::build(&wl, &out);
+    assert!(report.reconciled);
+    svc.shutdown();
+}
