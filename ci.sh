@@ -151,6 +151,41 @@ grep -q '"latency_s"' BENCH_transport.json \
     || { echo "transport smoke: bench has no calibrated links"; exit 1; }
 grep -q '"bit_identical": true' BENCH_transport.json \
     || { echo "transport smoke: bench lost bit identity"; exit 1; }
+grep -q '"socket_cycle_s"' BENCH_transport.json \
+    || { echo "transport smoke: bench has no socket leg"; exit 1; }
+grep -q '"overlap_saving_s"' BENCH_transport.json \
+    || { echo "transport smoke: bench has no overlap pricing delta"; exit 1; }
+
+echo "==> socket smoke"
+# a loopback shard-server daemon: the same sharded solve dialed over TCP
+# must match the in-process residual bit for bit, and a same-handle burst
+# on the socket-sharded placement must fold on the wire (fold counters)
+SRV_LOG=$(mktemp /tmp/gmres-shard-server.XXXXXX)
+./target/release/gmres-rs shard-server --listen tcp://127.0.0.1:0 2>"$SRV_LOG" &
+SRV_PID=$!
+EP=""
+for _ in $(seq 1 50); do
+    EP=$(grep -Eom1 'tcp://[0-9.]+:[0-9]+' "$SRV_LOG" || true)
+    [ -n "$EP" ] && break
+    sleep 0.1
+done
+[ -n "$EP" ] || { echo "socket smoke: shard-server never reported its endpoint"; \
+                  kill "$SRV_PID" 2>/dev/null || true; exit 1; }
+SOCK_OUT=$(./target/release/gmres-rs solve --n 600 --m 10 --policy gmatrix \
+    --fleet "840m@$EP=2m,v100@$EP=2m" --transport socket)
+SOCK_BITS=$(echo "$SOCK_OUT" | grep -Eo 'resnorm_bits=0x[0-9a-f]+')
+test -n "$SOCK_BITS" || { echo "socket smoke: no resnorm_bits token"; exit 1; }
+[ "$IN_BITS" = "$SOCK_BITS" ] \
+    || { echo "socket smoke: residual bits diverged: $IN_BITS vs $SOCK_BITS"; exit 1; }
+SOCK_SERVE=$(./target/release/gmres-rs serve --requests 4 --sizes 600 --m 8 \
+    --policy gmatrix --fleet "840m@$EP=2m,v100@$EP=2m" --transport socket \
+    --rhs-count 4)
+echo "$SOCK_SERVE" | tail -5
+echo "$SOCK_SERVE" | grep -Eq "requests_folded=[1-9]" \
+    || { echo "socket smoke: no fold crossed the wire"; exit 1; }
+kill "$SRV_PID" 2>/dev/null || true
+wait "$SRV_PID" 2>/dev/null || true
+rm -f "$SRV_LOG"
 
 echo "==> load / SLO smoke"
 # a short seeded open-loop run across three offered rates: the low rate

@@ -180,6 +180,9 @@ pub struct Metrics {
     /// [`crate::transport::WorkerPool::ping_failures`]; a subset of
     /// `worker_restarts`).
     worker_ping_failures: AtomicU64,
+    /// Successful redials of a remote shard endpoint after its connection
+    /// was lost (mirrors [`crate::transport::WorkerPool::reconnects`]).
+    worker_reconnects: AtomicU64,
     /// Traces evicted from the bounded trace ring (mirrors
     /// [`crate::trace::Tracer::dropped`]): nonzero means trace-driven
     /// reports under-count and cannot fully reconcile.
@@ -194,6 +197,10 @@ pub struct Metrics {
     /// the fleet scheduler on every enqueue/claim; zero-depth entries are
     /// removed so a drained device never reports phantom backlog)
     queue_depth: Mutex<BTreeMap<String, u64>>,
+    /// calibrated per-link model gauges, keyed by device label:
+    /// `(latency seconds, bandwidth bytes/s)` as the planner currently
+    /// prices that device's wire (mirrored by `sync_observability`)
+    link_models: Mutex<BTreeMap<String, (f64, f64)>>,
 }
 
 /// Latency summary in seconds.  `p50`/`p95`/`p99` are histogram estimates
@@ -313,9 +320,35 @@ impl Metrics {
         self.worker_ping_failures.fetch_max(n, Ordering::Relaxed);
     }
 
+    /// Mirror the worker pool's lifetime endpoint-reconnect count (same
+    /// monotone `fetch_max` discipline as `set_worker_restarts`).
+    pub fn set_worker_reconnects(&self, n: u64) {
+        self.worker_reconnects.fetch_max(n, Ordering::Relaxed);
+    }
+
     /// Mirror the trace ring's lifetime eviction count.
     pub fn set_trace_ring_dropped(&self, n: u64) {
         self.trace_ring_dropped.fetch_max(n, Ordering::Relaxed);
+    }
+
+    /// Publish one device's calibrated link model as a pair of gauges
+    /// (latency seconds, bandwidth bytes/s).  Overwrites: the gauge always
+    /// shows the model the planner currently prices with.
+    pub fn set_link_model(&self, label: &str, latency_seconds: f64, bytes_per_second: f64) {
+        self.link_models
+            .lock()
+            .unwrap()
+            .insert(label.to_string(), (latency_seconds, bytes_per_second));
+    }
+
+    /// Calibrated link-model gauges, ordered by device label.
+    pub fn link_models(&self) -> Vec<(String, f64, f64)> {
+        self.link_models
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, &(l, b))| (k.clone(), l, b))
+            .collect()
     }
 
     /// Update one device's work-queue depth gauge.  A zero depth removes
@@ -364,6 +397,10 @@ impl Metrics {
 
     pub fn worker_ping_failures(&self) -> u64 {
         self.worker_ping_failures.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_reconnects(&self) -> u64 {
+        self.worker_reconnects.load(Ordering::Relaxed)
     }
 
     pub fn trace_ring_dropped(&self) -> u64 {
@@ -438,11 +475,13 @@ impl Metrics {
         ));
         if self.link_bytes() > 0 || self.link_round_trips() > 0 || self.worker_restarts() > 0 {
             out.push_str(&format!(
-                "transport: link_bytes={}B round_trips={} worker_restarts={} ping_failures={}\n",
+                "transport: link_bytes={}B round_trips={} worker_restarts={} ping_failures={} \
+                 reconnects={}\n",
                 self.link_bytes(),
                 self.link_round_trips(),
                 self.worker_restarts(),
-                self.worker_ping_failures()
+                self.worker_ping_failures(),
+                self.worker_reconnects()
             ));
         }
         out
@@ -471,6 +510,7 @@ impl Metrics {
             ("gmres_link_round_trips_total", "Process-transport request/reply round trips", self.link_round_trips()),
             ("gmres_worker_restarts_total", "Shard-worker processes respawned after crashes", self.worker_restarts()),
             ("gmres_worker_ping_failures_total", "Checkout health-check pings that found a dead shard worker", self.worker_ping_failures()),
+            ("gmres_worker_reconnects_total", "Successful redials of a remote shard endpoint after a lost connection", self.worker_reconnects()),
             ("gmres_trace_ring_dropped_total", "Traces evicted from the bounded trace ring", self.trace_ring_dropped()),
         ]
     }
@@ -547,6 +587,30 @@ impl Metrics {
                     out,
                     "gmres_device_bytes_moved_total{{device=\"{label}\"}} {}",
                     s.bytes_moved
+                );
+            }
+        }
+
+        let links = self.link_models();
+        if !links.is_empty() {
+            out.push_str(
+                "# HELP gmres_link_latency_seconds Calibrated per-link round-trip latency the planner prices with\n",
+            );
+            out.push_str("# TYPE gmres_link_latency_seconds gauge\n");
+            for (label, latency, _) in &links {
+                let _ = writeln!(
+                    out,
+                    "gmres_link_latency_seconds{{device=\"{label}\"}} {latency:.9}"
+                );
+            }
+            out.push_str(
+                "# HELP gmres_link_bandwidth_bytes_per_s Calibrated per-link sustained bandwidth the planner prices with\n",
+            );
+            out.push_str("# TYPE gmres_link_bandwidth_bytes_per_s gauge\n");
+            for (label, _, bandwidth) in &links {
+                let _ = writeln!(
+                    out,
+                    "gmres_link_bandwidth_bytes_per_s{{device=\"{label}\"}} {bandwidth:.3}"
                 );
             }
         }
@@ -723,6 +787,7 @@ mod tests {
         m.on_link_traffic(512, 1);
         m.set_worker_restarts(1);
         m.set_worker_ping_failures(1);
+        m.set_worker_reconnects(1);
         m.set_trace_ring_dropped(1);
         let snapshot = m.counter_snapshot();
         let text = m.render_prometheus();
@@ -742,7 +807,50 @@ mod tests {
         assert!(names.contains("gmres_requests_submitted_total"));
         assert!(names.contains("gmres_worker_ping_failures_total"));
         assert!(names.contains("gmres_trace_ring_dropped_total"));
-        assert_eq!(snapshot.len(), 18, "new counters must be added to counter_snapshot");
+        assert_eq!(snapshot.len(), 19, "new counters must be added to counter_snapshot");
+    }
+
+    #[test]
+    fn link_model_gauges_render_completely_per_device() {
+        let m = Metrics::new();
+        // no links calibrated: the gauge families are absent entirely
+        assert!(!m.render_prometheus().contains("gmres_link_latency_seconds"));
+        m.set_link_model("840m", 35e-6, 1.2e9);
+        m.set_link_model("v100", 80e-6, 0.9e9);
+        // a recalibration overwrites in place, it does not duplicate
+        m.set_link_model("840m", 40e-6, 1.5e9);
+        let links = m.link_models();
+        assert_eq!(links.len(), 2);
+        let text = m.render_prometheus();
+        for (label, latency, bandwidth) in &links {
+            assert!(
+                text.contains(&format!(
+                    "gmres_link_latency_seconds{{device=\"{label}\"}} {latency:.9}"
+                )),
+                "latency gauge for {label} missing: {text}"
+            );
+            assert!(
+                text.contains(&format!(
+                    "gmres_link_bandwidth_bytes_per_s{{device=\"{label}\"}} {bandwidth:.3}"
+                )),
+                "bandwidth gauge for {label} missing: {text}"
+            );
+        }
+        assert!(text.contains("# TYPE gmres_link_latency_seconds gauge"), "{text}");
+        assert!(text.contains("# TYPE gmres_link_bandwidth_bytes_per_s gauge"), "{text}");
+        assert_eq!(
+            text.matches("gmres_link_latency_seconds{").count(),
+            2,
+            "one latency gauge per calibrated device: {text}"
+        );
+        let (_, lat, bw) = links.iter().find(|(l, _, _)| l == "840m").unwrap().clone();
+        assert!((lat - 40e-6).abs() < 1e-15 && (bw - 1.5e9).abs() < 1e-3);
+        // reconnect counter rides the standard counter snapshot
+        m.set_worker_reconnects(3);
+        assert_eq!(m.worker_reconnects(), 3);
+        m.set_worker_reconnects(2); // monotone under racing stale updates
+        assert_eq!(m.worker_reconnects(), 3);
+        assert!(m.render_prometheus().contains("gmres_worker_reconnects_total 3"));
     }
 
     #[test]

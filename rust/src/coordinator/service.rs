@@ -125,6 +125,13 @@ impl SolveService {
                 Self::probe_links(&pool, &planner);
                 Some(pool)
             }
+            TransportKind::Socket => {
+                // devices with a fleet endpoint are dialed; the rest fall
+                // back to spawned local worker processes
+                let pool = Arc::new(WorkerPool::with_endpoints(planner.fleet().endpoints()));
+                Self::probe_links(&pool, &planner);
+                Some(pool)
+            }
             TransportKind::InProcess => None,
         };
         let mut scheduler = FleetScheduler::new(
@@ -380,6 +387,18 @@ impl SolveService {
         if let Some(pool) = self.scheduler.worker_pool() {
             self.metrics.set_worker_restarts(pool.restarts());
             self.metrics.set_worker_ping_failures(pool.ping_failures());
+            self.metrics.set_worker_reconnects(pool.reconnects());
+        }
+        // mirror the planner's calibrated per-link models so a scrape sees
+        // what sharded wire placements are currently priced with
+        let planner = self.router.planner();
+        for (d, model) in planner.link_snapshot() {
+            let label = planner
+                .fleet()
+                .get(d)
+                .map(|dev| dev.label.clone())
+                .unwrap_or_else(|| format!("dev:{d}"));
+            self.metrics.set_link_model(&label, model.latency_seconds, model.bytes_per_second);
         }
     }
 

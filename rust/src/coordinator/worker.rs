@@ -27,8 +27,8 @@ use crate::coordinator::job::{JobId, MatrixId, RhsSpec, SolveOutcome, SolveReque
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{FleetScheduler, ResidencyCache, ResidencyKey};
 use crate::fleet::{
-    build_sharded_block_engine, build_sharded_engine, build_sharded_engine_t,
-    costs as fleet_costs, DeviceId, Placement, TransportSpec,
+    build_sharded_block_engine, build_sharded_block_engine_t, build_sharded_engine,
+    build_sharded_engine_t, costs as fleet_costs, DeviceId, Placement, TransportSpec,
 };
 use crate::gmres::{BlockGmres, GmresConfig, RestartedGmres, SolveReport};
 use crate::planner::{FoldEvaluation, Plan, Planner};
@@ -382,12 +382,13 @@ fn run_batch_cached(
         RhsSpec::Default => true,
         RhsSpec::Explicit(v) => v.len() == order,
     });
-    // folded sharded batches still run the in-process block engine; with
-    // the process transport active, same-matrix sharded siblings run
-    // sequentially through the workers instead of folding
-    let process_sharded =
-        pool.is_some() && batch.first().is_some_and(|p| p.item.plan.placement.is_sharded());
-    if batch.len() >= 2 && all_rhs_valid && !process_sharded {
+    // wire-sharded folds travel as k-wide MatvecBlock frames, so they
+    // need every connected peer to speak a fold-capable protocol
+    // version: gate on the pool's capability (vacuously true before the
+    // first connection — the handshake refuses incompatible peers at
+    // spawn/dial time) instead of declining wire folds outright
+    let wire_fold_capable = pool.map_or(true, |p| p.supports_wire_folds());
+    if batch.len() >= 2 && all_rhs_valid && wire_fold_capable {
         let plan = batch[0].item.plan;
         let shape = batch[0].item.request.matrix.shape();
         // the fold must satisfy the TIGHTEST tolerance's precision floor;
@@ -399,7 +400,7 @@ fn run_batch_cached(
         let probe = GmresConfig { tol: min_tol, ..batch[0].item.request.config };
         let eval = planner.evaluate_fold(&shape, &probe, &plan, batch.len());
         if eval.worthwhile() {
-            run_folded(batch, metrics, planner, eval, cache_ctx, tracer);
+            run_folded(batch, metrics, planner, eval, cache_ctx, tracer, pool);
             return;
         }
     }
@@ -412,7 +413,9 @@ fn run_batch_cached(
 /// k right-hand sides, run k Arnoldi processes over the single residency
 /// ([`BlockGmres`]), then fan per-RHS outcomes to their waiters, feed
 /// per-RHS (predicted, measured) shares into cost calibration and record
-/// the fold counters.
+/// the fold counters.  With a worker pool and a sharded placement, the
+/// fold's operator applications travel the wire as k-wide `MatvecBlock`
+/// frames through pooled (possibly remote) workers.
 fn run_folded(
     batch: Vec<Pending<WorkItem>>,
     metrics: &Metrics,
@@ -420,6 +423,7 @@ fn run_folded(
     eval: FoldEvaluation,
     cache_ctx: CacheCtx<'_>,
     tracer: Option<&Tracer>,
+    pool: Option<&WorkerPool>,
 ) {
     let started = Instant::now();
     let k = batch.len();
@@ -444,6 +448,9 @@ fn run_folded(
     for it in items.iter_mut() {
         it.trace.mark_build_start();
     }
+    // real transport wall per joint cycle, harvested from wire-mode block
+    // engines for the trace waterfall's link spans
+    let mut link_wall: Vec<f64> = Vec::new();
 
     type FoldRun = (Vec<SolveReport>, Vec<(String, f64, u64)>, Instant);
     let result = (|| -> Result<FoldRun> {
@@ -465,30 +472,106 @@ fn run_folded(
             .collect();
         let build_config = configs[0];
         let fleet = &planner.config().fleet;
-        let mut engine = match plan.placement {
-            Placement::Sharded(set) => build_sharded_block_engine(
-                fleet,
-                set,
-                plan.policy,
-                a,
-                bs,
-                &build_config,
-                planner.config().mem_fraction,
-            )?,
-            _ => build_block_engine(plan.policy, a, bs, &build_config)?,
-        };
-        // one engine-build boundary shared by all k member traces
-        let exec_started = Instant::now();
-        let reports = BlockGmres::new(configs).solve(&mut engine)?;
         // per-member shares (sharded placements; empty otherwise)
-        let shares: Vec<(String, f64, u64)> = engine
-            .device_report()
-            .into_iter()
-            .map(|(id, busy, bytes)| {
-                (fleet.placement_label(Placement::Single(id)), busy, bytes as u64)
-            })
-            .collect();
-        Ok((reports, shares, exec_started))
+        let share_rows = |engine: &crate::gmres::BlockEngine| -> Vec<(String, f64, u64)> {
+            engine
+                .device_report()
+                .into_iter()
+                .map(|(id, busy, bytes)| {
+                    (fleet.placement_label(Placement::Single(id)), busy, bytes as u64)
+                })
+                .collect()
+        };
+        match plan.placement {
+            // wire transport: checkout one pooled worker per member and
+            // carry the fold as k-wide MatvecBlock frames
+            Placement::Sharded(set) if pool.is_some() => {
+                let pool = pool.expect("guarded by the match arm");
+                let mut handles = Vec::new();
+                for d in set.iter() {
+                    match pool.checkout(d) {
+                        Ok(h) => handles.push(h),
+                        Err(e) => {
+                            for h in handles.drain(..) {
+                                pool.checkin(h);
+                            }
+                            metrics.set_worker_restarts(pool.restarts());
+                            metrics.set_worker_ping_failures(pool.ping_failures());
+                            return Err(anyhow::Error::new(e));
+                        }
+                    }
+                }
+                let leases: Vec<(DeviceId, u32)> =
+                    handles.iter().map(|h| (h.device(), h.pid())).collect();
+                let built = build_sharded_block_engine_t(
+                    fleet,
+                    set,
+                    plan.policy,
+                    a,
+                    bs,
+                    &build_config,
+                    planner.config().mem_fraction,
+                    TransportSpec::Workers(handles),
+                );
+                let mut engine = match built {
+                    Ok(e) => e,
+                    Err(e) => {
+                        // the failed build consumed (and dropped) the
+                        // handles: reconcile the pool's books
+                        for (d, pid) in leases {
+                            pool.forget_lost(d, pid);
+                        }
+                        metrics.set_worker_restarts(pool.restarts());
+                        metrics.set_worker_ping_failures(pool.ping_failures());
+                        return Err(e);
+                    }
+                };
+                // one engine-build boundary shared by all k member traces
+                let exec_started = Instant::now();
+                let solved = BlockGmres::new(configs).solve(&mut engine);
+                // harvest wire accounting and return the workers before
+                // propagating any solve error — a crashed peer must not
+                // leak its siblings
+                let stats = engine.transport_stats();
+                let observations = engine.take_link_observations();
+                link_wall = engine.cycle_link_wall().to_vec();
+                for h in engine.detach_transport_workers() {
+                    pool.checkin(h);
+                }
+                metrics.on_link_traffic(stats.bytes, stats.round_trips);
+                metrics.set_worker_restarts(pool.restarts());
+                metrics.set_worker_ping_failures(pool.ping_failures());
+                let reports = solved?;
+                // only successful solves calibrate the links
+                for (d, obs) in observations {
+                    planner.observe_link(d, &obs);
+                }
+                let shares = share_rows(&engine);
+                Ok((reports, shares, exec_started))
+            }
+            Placement::Sharded(set) => {
+                let mut engine = build_sharded_block_engine(
+                    fleet,
+                    set,
+                    plan.policy,
+                    a,
+                    bs,
+                    &build_config,
+                    planner.config().mem_fraction,
+                )?;
+                let exec_started = Instant::now();
+                let reports = BlockGmres::new(configs).solve(&mut engine)?;
+                let shares = share_rows(&engine);
+                Ok((reports, shares, exec_started))
+            }
+            _ => {
+                let mut engine = build_block_engine(plan.policy, a, bs, &build_config)?;
+                let exec_started = Instant::now();
+                let reports = BlockGmres::new(configs).solve(&mut engine)?;
+                let shares = share_rows(&engine);
+                Ok((reports, shares, exec_started))
+            }
+        }
     })();
 
     match result {
@@ -551,6 +634,10 @@ fn run_folded(
                 0.0
             };
             let wall = started.elapsed().as_secs_f64();
+            // the joint cycle's wire wall is shared by the whole block:
+            // each RHS trace carries its 1/k share (the trace layer
+            // truncates to the RHS's own cycle count)
+            let per_rhs_link: Vec<f64> = link_wall.iter().map(|l| l / k as f64).collect();
             for (i, (mut item, report)) in items.into_iter().zip(reports).enumerate() {
                 // calibration sees the RAW cold measurement (unbiased)
                 planner.observe_measured(
@@ -594,7 +681,7 @@ fn run_folded(
                         setup_sim_seconds: report.setup_sim_seconds,
                         cycle_sim_seconds: &report.history.cycle_sim_seconds,
                         cycle_wall_seconds: &report.history.cycle_wall_seconds,
-                        cycle_link_seconds: &[],
+                        cycle_link_seconds: &per_rhs_link,
                         booked_sim_seconds: report.sim_seconds,
                         fold_k: k,
                     };

@@ -117,6 +117,35 @@ pub fn build_sharded_block_engine(
     crate::gmres::BlockEngine::sharded(fleet, set, policy, a, bs, config.m, mem_fraction, precision)
 }
 
+/// [`build_sharded_block_engine`] with an explicit member transport:
+/// wire transports (pool workers, spawned processes, dialed sockets)
+/// carry the fold as k-wide `MatvecBlock` frames.
+#[allow(clippy::too_many_arguments)]
+pub fn build_sharded_block_engine_t(
+    fleet: &Fleet,
+    set: DeviceSet,
+    policy: Policy,
+    a: SystemMatrix,
+    bs: Vec<Vec<f64>>,
+    config: &GmresConfig,
+    mem_fraction: f64,
+    transport: TransportSpec,
+) -> Result<crate::gmres::BlockEngine> {
+    let (a, bs) = config.precond.apply_to_block(a, bs);
+    let precision = config.precision.fixed_or_default();
+    crate::gmres::BlockEngine::sharded_t(
+        fleet,
+        set,
+        policy,
+        a,
+        bs,
+        config.m,
+        mem_fraction,
+        precision,
+        transport,
+    )
+}
+
 /// Row-block sharded GMRES(m) cycle engine.
 pub struct ShardedCycleEngine {
     policy: Policy,
@@ -222,6 +251,17 @@ impl ShardedCycleEngine {
             }
             TransportSpec::Kind(TransportKind::Process) => {
                 let mut t = ProcessTransport::spawn(&costs.members)?;
+                t.upload(&sharded, narrowed)?;
+                Box::new(t)
+            }
+            TransportSpec::Kind(TransportKind::Socket) => {
+                let endpoints: Vec<_> =
+                    costs.members.iter().map(|&id| fleet.device(id).endpoint.clone()).collect();
+                let mut t = ProcessTransport::spawn_or_dial(
+                    &costs.members,
+                    &endpoints,
+                    std::time::Duration::from_secs(5),
+                )?;
                 t.upload(&sharded, narrowed)?;
                 Box::new(t)
             }
@@ -335,11 +375,16 @@ impl ShardedCycleEngine {
     }
 
     fn matvec(&mut self, x: &[f64]) -> Result<Vec<f64>> {
+        // fan out as one broadcast leg: wire backends write every request
+        // before reading any reply, overlapping broadcast with compute
+        let mut y_blocks: Vec<Vec<f64>> =
+            (0..self.blocks.count()).map(|k| vec![0.0; self.blocks.rows(k)]).collect();
+        self.transport.matvec_fanout(1, x, &mut y_blocks)?;
         let mut y = vec![0.0; self.n];
-        for k in 0..self.blocks.count() {
+        for (k, block) in y_blocks.iter().enumerate() {
             let r = self.blocks.range(k);
             if !r.is_empty() {
-                self.transport.matvec(k, x, &mut y[r])?;
+                y[r].copy_from_slice(block);
             }
         }
         Ok(y)

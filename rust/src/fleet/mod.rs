@@ -37,8 +37,8 @@ pub mod shard;
 
 pub use costs::ShardCosts;
 pub use exec::{
-    build_sharded_block_engine, build_sharded_engine, build_sharded_engine_t, ShardedCycleEngine,
-    TransportSpec,
+    build_sharded_block_engine, build_sharded_block_engine_t, build_sharded_engine,
+    build_sharded_engine_t, ShardedCycleEngine, TransportSpec,
 };
 pub use placement::{DeviceSet, Placement};
 pub use shard::{RowBlocks, ShardedMatrix};
@@ -46,6 +46,7 @@ pub use shard::{RowBlocks, ShardedMatrix};
 use anyhow::{anyhow, bail};
 
 use crate::device::{GpuSpec, HostSpec};
+use crate::transport::Endpoint;
 use crate::Result;
 
 /// Index of a device within its [`Fleet`] (registration order).
@@ -70,6 +71,9 @@ pub struct FleetDevice {
     /// Hard per-device byte budget; `None` means capacity × the planner's
     /// `mem_fraction`.
     pub budget_override: Option<usize>,
+    /// Where this device's shard worker lives when the transport is
+    /// socket mode (`v100@tcp://host:7070`); `None` spawns locally.
+    pub endpoint: Option<Endpoint>,
 }
 
 impl FleetDevice {
@@ -126,32 +130,49 @@ impl Fleet {
     /// laptop class).
     pub const HOST_MEM_CAPACITY: usize = 16 * 1024 * 1024 * 1024;
 
-    /// Build from `(label, kind, budget_override)` entries; labels are
-    /// deduplicated with `#k` suffixes.
-    pub fn new(entries: Vec<(String, DeviceKind, Option<usize>)>) -> Self {
+    /// Build from `(label, kind, budget_override, endpoint)` entries;
+    /// labels are deduplicated with `#k` suffixes.
+    pub fn new(entries: Vec<(String, DeviceKind, Option<usize>, Option<Endpoint>)>) -> Self {
         let mut devices = Vec::with_capacity(entries.len());
-        for (i, (base, kind, budget_override)) in entries.into_iter().enumerate() {
+        for (i, (base, kind, budget_override, endpoint)) in entries.into_iter().enumerate() {
             let dups = devices.iter().filter(|d: &&FleetDevice| labels_match(&d.label, &base)).count();
             let label = if dups == 0 { base } else { format!("{base}#{}", dups + 1) };
-            devices.push(FleetDevice { id: i, label, kind, budget_override });
+            devices.push(FleetDevice { id: i, label, kind, budget_override, endpoint });
         }
         Self { devices }
     }
 
     /// The paper's testbed fleet: exactly one GeForce 840M.
     pub fn paper_default() -> Self {
-        Self::new(vec![("840m".into(), DeviceKind::Gpu(GpuSpec::geforce_840m()), None)])
+        Self::new(vec![("840m".into(), DeviceKind::Gpu(GpuSpec::geforce_840m()), None, None)])
     }
 
     /// Parse a CLI fleet spec: comma-separated device names from the
     /// catalog (`840m`, `v100`, `host`), each optionally suffixed with a
-    /// budget override like `840m=512m` (k/m/g suffixes, powers of 1024).
+    /// budget override like `840m=512m` (k/m/g suffixes, powers of 1024)
+    /// and/or a remote endpoint like `v100@tcp://host:7070` or
+    /// `840m@unix:/tmp/shard.sock` (socket-transport dial target; the
+    /// budget override, when present, follows the endpoint:
+    /// `v100@tcp://host:7070=512m`).
     pub fn parse(spec: &str) -> Result<Fleet> {
         let mut entries = Vec::new();
         for raw in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             let (name, budget) = match raw.split_once('=') {
                 Some((n, b)) => (n.trim(), Some(parse_bytes(b.trim())?)),
                 None => (raw, None),
+            };
+            let (name, endpoint) = match name.split_once('@') {
+                Some((n, ep)) => {
+                    let ep = ep.trim();
+                    let parsed = Endpoint::parse(ep).ok_or_else(|| {
+                        anyhow!(
+                            "bad fleet endpoint `{ep}` for `{n}` \
+                             (expected tcp://host:port or unix:/path)"
+                        )
+                    })?;
+                    (n.trim(), Some(parsed))
+                }
+                None => (name, None),
             };
             let (label, kind) = match name.to_ascii_lowercase().as_str() {
                 "840m" | "geforce-840m" | "geforce840m" => {
@@ -169,10 +190,11 @@ impl Fleet {
                 ),
                 other => bail!(
                     "unknown fleet device `{other}` (catalog: 840m | v100 | a100 | host; \
-                     optional budget override like 840m=512m)"
+                     optional budget override like 840m=512m, optional endpoint like \
+                     v100@tcp://host:7070)"
                 ),
             };
-            entries.push((label, kind, budget));
+            entries.push((label, kind, budget, endpoint));
         }
         if entries.is_empty() {
             bail!("empty fleet spec");
@@ -210,6 +232,18 @@ impl Fleet {
 
     pub fn label_of(&self, id: DeviceId) -> &str {
         &self.devices[id].label
+    }
+
+    /// Per-device dial targets in registration order (`None` = spawn a
+    /// local worker) — the shape [`crate::transport::WorkerPool`] and
+    /// the sharded executor consume for socket-mode fleets.
+    pub fn endpoints(&self) -> Vec<Option<Endpoint>> {
+        self.devices.iter().map(|d| d.endpoint.clone()).collect()
+    }
+
+    /// True when any device names a remote endpoint.
+    pub fn has_remote_endpoints(&self) -> bool {
+        self.devices.iter().any(|d| d.endpoint.is_some())
     }
 
     /// `840m+v100`-style label for a device set.
@@ -353,6 +387,33 @@ mod tests {
 
         assert!(Fleet::parse("titan-x").is_err());
         assert!(Fleet::parse("").is_err());
+    }
+
+    #[test]
+    fn parse_remote_endpoints() {
+        let f = Fleet::parse("v100@tcp://gpubox:7070,host").unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.label_of(0), "v100");
+        assert_eq!(
+            f.device(0).endpoint,
+            Some(Endpoint::Tcp("gpubox:7070".into())),
+            "endpoint rides the device entry"
+        );
+        assert_eq!(f.device(1).endpoint, None);
+        assert!(f.has_remote_endpoints());
+        assert_eq!(f.endpoints(), vec![Some(Endpoint::Tcp("gpubox:7070".into())), None]);
+
+        // budget override composes with an endpoint (endpoint first)
+        let g = Fleet::parse("840m@unix:/tmp/shard.sock=2m").unwrap();
+        assert_eq!(g.device(0).endpoint, Some(Endpoint::Unix("/tmp/shard.sock".into())));
+        assert_eq!(g.device(0).budget(0.9), 2 << 20);
+
+        // plain fleets report no remotes
+        assert!(!Fleet::parse("840m,host").unwrap().has_remote_endpoints());
+
+        let err = Fleet::parse("v100@tcp://no-port").unwrap_err().to_string();
+        assert!(err.contains("endpoint"), "{err}");
+        assert!(Fleet::parse("v100@carrier://x").is_err());
     }
 
     #[test]

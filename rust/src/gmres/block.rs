@@ -32,12 +32,18 @@ use anyhow::ensure;
 
 use crate::backend::Policy;
 use crate::device::{costs, DeviceSim};
-use crate::fleet::{costs as fleet_costs, DeviceId, DeviceSet, Fleet, RowBlocks, ShardedMatrix};
-use crate::gmres::arnoldi::cgs_cycle;
+use crate::fleet::{
+    costs as fleet_costs, DeviceId, DeviceSet, Fleet, RowBlocks, ShardedMatrix, TransportSpec,
+};
+use crate::gmres::arnoldi::{cgs_cycle, BREAKDOWN_RTOL};
+use crate::gmres::givens;
 use crate::gmres::history::{ConvergenceHistory, SolveReport};
 use crate::gmres::solver::GmresConfig;
 use crate::linalg::{blas, LinearOperator, SystemMatrix, SystemShape};
 use crate::precision::{narrow_system, narrow_vectors, Precision};
+use crate::transport::{
+    LinkObservation, ProcessTransport, Transport, TransportKind, TransportStats, WorkerHandle,
+};
 use crate::Result;
 
 /// Row-block sharded operator view (same shard-by-shard application the
@@ -62,6 +68,19 @@ impl LinearOperator for ShardedOp {
     }
 }
 
+/// How the block engine applies its operator.
+enum BlockOp {
+    /// Host-side operator: dense/CSR residency or in-process shards.
+    Local(Box<dyn LinearOperator>),
+    /// Shard members behind a wire: each joint step broadcasts the
+    /// active columns as ONE k-wide [`crate::transport::wire::Frame::MatvecBlock`]
+    /// fanout per member, while every dot/norm runs on the coordinator
+    /// with the same `blas` kernels the local path uses — so per-RHS
+    /// f64 arithmetic is bit-identical to [`BlockOp::Local`] over
+    /// in-process shards.
+    Remote { transport: Box<dyn Transport>, blocks: RowBlocks },
+}
+
 /// How joint cycles are charged to the modeled clock.
 enum Charger {
     /// Single-residency placement: the shared device batch cost table.
@@ -84,7 +103,7 @@ enum Charger {
 /// One resident system serving `k` right-hand sides.
 pub struct BlockEngine {
     policy: Policy,
-    op: Box<dyn LinearOperator>,
+    op: BlockOp,
     /// Inner right-hand sides (narrowed when the precision is reduced).
     bs: Vec<Vec<f64>>,
     /// `||b||` of each ORIGINAL (f64) right-hand side.
@@ -102,6 +121,9 @@ pub struct BlockEngine {
     /// only; empty otherwise).
     device_busy: Vec<f64>,
     device_bytes: Vec<usize>,
+    /// Real transport wall seconds measured per joint cycle (empty for
+    /// local operators).
+    cycle_link_wall: Vec<f64>,
 }
 
 /// Validated, precision-split pieces shared by both placements.
@@ -150,7 +172,7 @@ impl BlockEngine {
         let p = block_parts(a, bs, precision)?;
         Ok(Self {
             policy,
-            op: Box::new(p.inner_a),
+            op: BlockOp::Local(Box::new(p.inner_a)),
             bs: p.inner_bs,
             bnorms: p.bnorms,
             verify: p.verify,
@@ -162,11 +184,13 @@ impl BlockEngine {
             setup_charged: false,
             device_busy: Vec::new(),
             device_bytes: Vec::new(),
+            cycle_link_wall: Vec::new(),
         })
     }
 
     /// Build a row-block sharded block engine across `set` (callers go
     /// through [`crate::fleet::build_sharded_block_engine`]).
+    #[allow(clippy::too_many_arguments)]
     pub fn sharded(
         fleet: &Fleet,
         set: DeviceSet,
@@ -176,6 +200,35 @@ impl BlockEngine {
         m: usize,
         mem_fraction: f64,
         precision: Precision,
+    ) -> Result<Self> {
+        Self::sharded_t(
+            fleet,
+            set,
+            policy,
+            a,
+            bs,
+            m,
+            mem_fraction,
+            precision,
+            TransportSpec::Kind(TransportKind::InProcess),
+        )
+    }
+
+    /// [`BlockEngine::sharded`] with an explicit member transport: wire
+    /// backends carry the fold as k-wide `MatvecBlock` frames, so a
+    /// process- or socket-sharded placement runs the whole batch as one
+    /// block solve instead of declining the fold.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sharded_t(
+        fleet: &Fleet,
+        set: DeviceSet,
+        policy: Policy,
+        a: SystemMatrix,
+        bs: Vec<Vec<f64>>,
+        m: usize,
+        mem_fraction: f64,
+        precision: Precision,
+        spec: TransportSpec,
     ) -> Result<Self> {
         ensure!(m >= 1, "restart length must be >= 1");
         ensure!(set.len() >= 2, "sharded placement needs >= 2 devices, got {}", set.len());
@@ -209,9 +262,42 @@ impl BlockEngine {
             .collect();
         let full = table(k);
         let nmembers = full.members.len();
+        let narrowed = precision.is_reduced();
+        let op = match spec {
+            TransportSpec::Kind(TransportKind::InProcess) => {
+                BlockOp::Local(Box::new(ShardedOp(sharded)))
+            }
+            TransportSpec::Kind(TransportKind::Process) => {
+                let mut t = ProcessTransport::spawn(&full.members)?;
+                t.upload(&sharded, narrowed)?;
+                BlockOp::Remote { transport: Box::new(t), blocks: sharded.blocks().clone() }
+            }
+            TransportSpec::Kind(TransportKind::Socket) => {
+                let endpoints: Vec<_> =
+                    full.members.iter().map(|&id| fleet.device(id).endpoint.clone()).collect();
+                let mut t = ProcessTransport::spawn_or_dial(
+                    &full.members,
+                    &endpoints,
+                    std::time::Duration::from_secs(5),
+                )?;
+                t.upload(&sharded, narrowed)?;
+                BlockOp::Remote { transport: Box::new(t), blocks: sharded.blocks().clone() }
+            }
+            TransportSpec::Workers(handles) => {
+                ensure!(
+                    handles.len() == full.members.len(),
+                    "pool handed {} workers for {} shard members",
+                    handles.len(),
+                    full.members.len()
+                );
+                let mut t = ProcessTransport::from_workers(handles);
+                t.upload(&sharded, narrowed)?;
+                BlockOp::Remote { transport: Box::new(t), blocks: sharded.blocks().clone() }
+            }
+        };
         Ok(Self {
             policy,
-            op: Box::new(ShardedOp(sharded)),
+            op,
             bs: p.inner_bs,
             bnorms: p.bnorms,
             verify: p.verify,
@@ -229,6 +315,7 @@ impl BlockEngine {
             setup_charged: false,
             device_busy: vec![0.0; nmembers],
             device_bytes: vec![0; nmembers],
+            cycle_link_wall: Vec::new(),
         })
     }
 
@@ -332,17 +419,244 @@ impl BlockEngine {
         self.sim.elapsed() - before
     }
 
-    /// One restarted-GMRES(m) cycle for right-hand side `i` from `x0`:
-    /// returns the new iterate and its (f64-verified when reduced)
-    /// residual norm.
-    fn rhs_cycle(&self, i: usize, x0: &[f64]) -> (Vec<f64>, f64) {
-        let (x, inner_res) = cgs_cycle(self.op.as_ref(), &self.bs[i], x0, self.m);
+    /// One restarted-GMRES(m) cycle for right-hand side `i` from `x0`
+    /// on a local operator: returns the new iterate and its
+    /// (f64-verified when reduced) residual norm.
+    fn rhs_cycle_local(&self, op: &dyn LinearOperator, i: usize, x0: &[f64]) -> (Vec<f64>, f64) {
+        let (x, inner_res) = cgs_cycle(op, &self.bs[i], x0, self.m);
         match &self.verify {
             Some((full, full_bs)) => {
                 let res = full.residual_norm(&full_bs[i], &x);
                 (x, res)
             }
             None => (x, inner_res),
+        }
+    }
+
+    /// One joint restart cycle over the active right-hand sides:
+    /// `(i, new x, residual)` in `active_idx` order.  Local operators
+    /// loop the per-RHS reference cycle; remote operators run the
+    /// step-synchronous block cycle whose matvecs fan out as k-wide
+    /// folded frames (identical per-RHS f64 arithmetic either way).
+    fn joint_cycle(
+        &mut self,
+        active_idx: &[usize],
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<(usize, Vec<f64>, f64)>> {
+        let link_start = self.transport_stats().wall_seconds;
+        let out = match &self.op {
+            BlockOp::Local(op_box) => {
+                // split the borrow: clone nothing, loop the reference cycle
+                let op: &dyn LinearOperator = op_box.as_ref();
+                Ok(active_idx
+                    .iter()
+                    .map(|&i| {
+                        let (x, res) = self.rhs_cycle_local(op, i, &xs[i]);
+                        (i, x, res)
+                    })
+                    .collect())
+            }
+            BlockOp::Remote { .. } => self.remote_joint_cycle(active_idx, xs),
+        };
+        let link_wall = self.transport_stats().wall_seconds - link_start;
+        self.cycle_link_wall.push(link_wall.max(0.0));
+        out
+    }
+
+    /// Step-synchronous block CGS Arnoldi over a wire transport.  Every
+    /// operator application across the still-iterating right-hand sides
+    /// is ONE `matvec_fanout` of k concatenated columns per member; all
+    /// dots, norms and the Givens least-squares run on the coordinator
+    /// with the crate's `blas` kernels — exactly the arithmetic
+    /// [`cgs_cycle`] performs per RHS, in the same order, so f64 results
+    /// are bit-identical to the in-process fold.
+    fn remote_joint_cycle(
+        &mut self,
+        active_idx: &[usize],
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<(usize, Vec<f64>, f64)>> {
+        let n = self.shape.n;
+        let m = self.m;
+        let w = active_idx.len();
+
+        // r0 = b - A x0 for every active RHS, one fanout
+        let cols: Vec<&[f64]> = active_idx.iter().map(|&i| xs[i].as_slice()).collect();
+        let ax0s = self.remote_fanout(&cols)?;
+
+        // Per-RHS Arnoldi state, indexed like `active_idx`.
+        let mut beta = vec![0.0f64; w];
+        let mut vs: Vec<Vec<Vec<f64>>> = (0..w).map(|_| Vec::with_capacity(m + 1)).collect();
+        let mut hs: Vec<Vec<Vec<f64>>> = (0..w).map(|_| givens::zero_hessenberg(m)).collect();
+        let mut ks = vec![m; w];
+        // still running the j-loop (false after breakdown or beta == 0)
+        let mut iterating = vec![true; w];
+        // exact solution at restart: finished before the j-loop started
+        let mut at_solution = vec![false; w];
+
+        for (s, (&i, ax0)) in active_idx.iter().zip(&ax0s).enumerate() {
+            let mut r0 = vec![0.0; n];
+            blas::sub_into(&self.bs[i], ax0, &mut r0);
+            beta[s] = blas::nrm2(&r0);
+            if beta[s] == 0.0 {
+                iterating[s] = false;
+                at_solution[s] = true;
+                continue;
+            }
+            blas::scal(1.0 / beta[s], &mut r0);
+            vs[s].push(r0);
+        }
+
+        for j in 0..m {
+            let stepping: Vec<usize> = (0..w).filter(|&s| iterating[s]).collect();
+            if stepping.is_empty() {
+                break;
+            }
+            let cols: Vec<&[f64]> = stepping.iter().map(|&s| vs[s][j].as_slice()).collect();
+            let ws = self.remote_fanout(&cols)?;
+            for (&s, mut wv) in stepping.iter().zip(ws) {
+                // CGS: all projection coefficients from the unmodified A v_j
+                let mut coeffs = Vec::with_capacity(j + 1);
+                for i in 0..=j {
+                    coeffs.push(blas::dot(&wv, &vs[s][i]));
+                }
+                for (i, &hij) in coeffs.iter().enumerate() {
+                    hs[s][i][j] = hij;
+                    blas::axpy(-hij, &vs[s][i], &mut wv);
+                }
+                let hj1 = blas::nrm2(&wv);
+                hs[s][j + 1][j] = hj1;
+                if hj1 <= BREAKDOWN_RTOL * beta[s] {
+                    ks[s] = j + 1;
+                    iterating[s] = false;
+                    continue;
+                }
+                blas::scal(1.0 / hj1, &mut wv);
+                vs[s].push(wv);
+            }
+        }
+
+        // x = x0 + V_k y per RHS (host-side Givens least squares)
+        let mut new_xs: Vec<Vec<f64>> = Vec::with_capacity(w);
+        for (s, &i) in active_idx.iter().enumerate() {
+            if at_solution[s] {
+                new_xs.push(xs[i].clone());
+                continue;
+            }
+            let (y, _implied) = givens::solve_ls(&hs[s], beta[s], ks[s]);
+            let mut x = xs[i].clone();
+            for (jj, &yj) in y.iter().enumerate() {
+                blas::axpy(yj, &vs[s][jj], &mut x);
+            }
+            new_xs.push(x);
+        }
+
+        // true residuals for the restart test: f64 verification on the
+        // coordinator when reduced, one more fanout otherwise
+        let mut res = vec![0.0f64; w];
+        match &self.verify {
+            Some((full, full_bs)) => {
+                for (s, &i) in active_idx.iter().enumerate() {
+                    res[s] = full.residual_norm(&full_bs[i], &new_xs[s]);
+                }
+            }
+            None => {
+                let need: Vec<usize> = (0..w).filter(|&s| !at_solution[s]).collect();
+                if !need.is_empty() {
+                    let cols: Vec<&[f64]> = need.iter().map(|&s| new_xs[s].as_slice()).collect();
+                    let axs = self.remote_fanout(&cols)?;
+                    for (&s, ax) in need.iter().zip(&axs) {
+                        let i = active_idx[s];
+                        let mut r = vec![0.0; n];
+                        blas::sub_into(&self.bs[i], ax, &mut r);
+                        res[s] = blas::nrm2(&r);
+                    }
+                }
+            }
+        }
+
+        Ok(active_idx
+            .iter()
+            .enumerate()
+            .map(|(s, &i)| (i, std::mem::take(&mut new_xs[s]), res[s]))
+            .collect())
+    }
+
+    /// One k-wide folded operator application over the wire: broadcast
+    /// `cols` to every member as a `MatvecBlock` fanout, reassemble the
+    /// gathered row blocks into full-length results, one per column.
+    fn remote_fanout(&mut self, cols: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let BlockOp::Remote { transport, blocks } = &mut self.op else {
+            unreachable!("remote_fanout is only called on wire operators");
+        };
+        let n = self.shape.n;
+        let k = cols.len();
+        let mut xs = Vec::with_capacity(k * n);
+        for c in cols {
+            xs.extend_from_slice(c);
+        }
+        let mut y_blocks: Vec<Vec<f64>> =
+            (0..blocks.count()).map(|mb| vec![0.0; k * blocks.rows(mb)]).collect();
+        transport.matvec_fanout(k, &xs, &mut y_blocks)?;
+        let mut ys = vec![vec![0.0; n]; k];
+        for mb in 0..blocks.count() {
+            let rows = blocks.rows(mb);
+            if rows == 0 {
+                continue;
+            }
+            let r = blocks.range(mb);
+            for (c, y) in ys.iter_mut().enumerate() {
+                y[r.clone()].copy_from_slice(&y_blocks[mb][c * rows..(c + 1) * rows]);
+            }
+        }
+        Ok(ys)
+    }
+
+    /// Which transport backend applies the operator (`InProcess` for
+    /// local residencies).
+    pub fn transport_kind(&self) -> TransportKind {
+        match &self.op {
+            BlockOp::Local(_) => TransportKind::InProcess,
+            BlockOp::Remote { transport, .. } => transport.kind(),
+        }
+    }
+
+    /// Lifetime wire counters (all zero for local operators).
+    pub fn transport_stats(&self) -> TransportStats {
+        match &self.op {
+            BlockOp::Local(_) => TransportStats::default(),
+            BlockOp::Remote { transport, .. } => transport.stats(),
+        }
+    }
+
+    /// Real transport wall seconds per joint cycle, in cycle order.
+    pub fn cycle_link_wall(&self) -> &[f64] {
+        &self.cycle_link_wall
+    }
+
+    /// Drain per-link measurement windows, tagged with the fleet device
+    /// each member stands in for (empty for local operators).
+    pub fn take_link_observations(&mut self) -> Vec<(DeviceId, LinkObservation)> {
+        let BlockOp::Remote { transport, .. } = &mut self.op else {
+            return Vec::new();
+        };
+        let members = match &self.charger {
+            Charger::Sharded { members, .. } => members.clone(),
+            Charger::Device => Vec::new(),
+        };
+        transport
+            .take_observations()
+            .into_iter()
+            .enumerate()
+            .map(|(k, obs)| (members.get(k).copied().unwrap_or(k), obs))
+            .collect()
+    }
+
+    /// Surrender live worker handles for pool reclamation (empty for
+    /// local operators).  The engine must not run further cycles after.
+    pub fn detach_transport_workers(&mut self) -> Vec<WorkerHandle> {
+        match &mut self.op {
+            BlockOp::Local(_) => Vec::new(),
+            BlockOp::Remote { transport, .. } => transport.detach_workers(),
         }
     }
 }
@@ -428,11 +742,7 @@ impl BlockGmres {
             let cycle_start = std::time::Instant::now();
             let charged = engine.charge_joint_cycle(width);
             let share = charged / width as f64;
-            let mut stepped = Vec::with_capacity(width);
-            for &i in &active_idx {
-                let (x, res) = engine.rhs_cycle(i, &xs[i]);
-                stepped.push((i, x, res));
-            }
+            let stepped = engine.joint_cycle(&active_idx, &xs)?;
             // Per-RHS wall share of this joint cycle — recorded alongside
             // the sim share so traces can lay fold-member cycle spans.
             let wall_share = cycle_start.elapsed().as_secs_f64() / width as f64;

@@ -24,6 +24,9 @@
 //!                 [--policy P] [--transport ...] [--check]
 //!                 [--bench-json path] [--manifest-out path] [--trace-json path]
 //! gmres-rs transport-bench [--fleet SPEC] [--out BENCH_transport.json]
+//! gmres-rs shard-server   --listen tcp://0.0.0.0:7070 | unix:/path
+//!                          (daemon hosting shard members for remote
+//!                           fleets; one isolated worker per connection)
 //! gmres-rs shard-worker     (internal: spawned shard member, speaks the
 //!                            wire protocol on stdin/stdout)
 //! gmres-rs info
@@ -89,8 +92,14 @@ USAGE:
                   service; --check self-asserts, --bench-json writes the
                   attainment curve)
   gmres-rs transport-bench [--fleet SPEC] [--out BENCH_transport.json]
-                 (measure in-process vs process sharded cycle walls and the
-                  calibrated per-link latency/bandwidth; writes a JSON report)
+                 (measure in-process vs process vs loopback-socket sharded
+                  cycle walls, the calibrated per-link latency/bandwidth, and
+                  the overlap-on/off pricing delta; writes a JSON report)
+  gmres-rs shard-server --listen tcp://HOST:PORT | unix:/PATH
+                 (daemon hosting shard members for remote fleets: accepts
+                  any number of connections, each an isolated worker behind
+                  the version handshake; point fleet specs at it with
+                  name@tcp://host:port)
   gmres-rs shard-worker
                  (internal: shard member process, wire protocol on stdin/stdout)
   gmres-rs info
@@ -103,8 +112,11 @@ PRECISION: auto (planner arbitrates) | f64 | f32 | tf32 — reduced precisions
            (iterative refinement); tolerances below a precision's accuracy
            floor admit only f64
 FLEET:     comma-separated devices from the catalog 840m | v100 | a100 | host,
-           each optionally budget-capped (840m=512m); plans grow a placement
-           axis (single device or row-block shard) across the fleet
+           each optionally budget-capped (840m=512m) and/or pinned to a
+           remote endpoint (v100@tcp://gpubox:7070, 840m@unix:/tmp/s.sock=2m);
+           plans grow a placement axis (single device or row-block shard)
+           across the fleet; endpoint devices need --transport socket and a
+           reachable `gmres-rs shard-server`
 RHS-COUNT: K > 1 exercises multi-RHS amortization — `solve` runs one k-wide
            block solve over a single residency, `plan` prices folded batches
            (batch column), `serve` registers matrix sessions and bursts
@@ -125,7 +137,11 @@ TRANSPORT: in-process (default) runs shard members as function calls;
            process runs each member as a spawned `gmres-rs shard-worker` OS
            process over length-framed pipes — f64 results are bit-identical,
            links are probed at startup and calibrated from measured wall
-           times, and the waterfall grows link[i] spans for real wire time
+           times, and the waterfall grows link[i] spans for real wire time;
+           socket dials fleet devices with @endpoints over TCP/Unix sockets
+           (same frames, same handshake, same bit-identical f64 results) and
+           spawns local workers for the rest — a dropped connection fails
+           only its owning job and is redialed with backoff next wave
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -138,6 +154,7 @@ fn main() -> anyhow::Result<()> {
         Some("trace") => cmd_trace(&args),
         Some("load") => cmd_load(&args),
         Some("transport-bench") => cmd_transport_bench(&args),
+        Some("shard-server") => cmd_shard_server(&args),
         Some("shard-worker") => gmres_rs::transport::worker::run(),
         Some("info") => cmd_info(),
         _ => {
@@ -181,9 +198,9 @@ fn parse_fleet(args: &Args) -> anyhow::Result<Fleet> {
     }
 }
 
-/// `--transport in-process|process` (default: in-process).
+/// `--transport in-process|process|socket` (default: in-process).
 fn parse_transport(args: &Args) -> anyhow::Result<TransportKind> {
-    let s = args.get_choice("transport", &["in-process", "process"], "in-process")?;
+    let s = args.get_choice("transport", &["in-process", "process", "socket"], "in-process")?;
     TransportKind::parse(&s).ok_or_else(|| anyhow!("bad transport `{s}`"))
 }
 
@@ -820,39 +837,80 @@ fn cmd_load(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `transport-bench`: run the same sharded solves through both member
-/// transports on a real fleet executor, report per-cycle walls and the
-/// link models calibrated from the process runs, and write them as JSON.
+/// One transport-bench shape's measured and predicted numbers.
+struct TransportBenchRow {
+    n: usize,
+    m: usize,
+    inproc_cycle: f64,
+    process_cycle: f64,
+    process_link: f64,
+    socket_cycle: f64,
+    socket_link: f64,
+    /// Predicted per-cycle wire seconds, serialized fanout (overlap off).
+    wire_serial: f64,
+    /// Predicted per-cycle wire seconds, overlapped fanout (overlap on).
+    wire_overlapped: f64,
+}
+
+/// `transport-bench`: run the same sharded solves through all three
+/// member transports (in-process, worker pipes, loopback sockets) on a
+/// real fleet executor, report per-cycle walls, the link models
+/// calibrated from the wire runs, and the overlap-on/off pricing delta;
+/// writes a JSON report.
 fn cmd_transport_bench(args: &Args) -> anyhow::Result<()> {
     use gmres_rs::fleet::{build_sharded_engine_t, DeviceSet, TransportSpec};
-    use gmres_rs::transport::LinkCalibration;
+    use gmres_rs::transport::link::{
+        process_cycle_wire_seconds, process_cycle_wire_seconds_overlapped,
+    };
+    use gmres_rs::transport::{net, Endpoint, LinkCalibration, LinkModel};
     use std::fmt::Write as _;
 
     let out_path = args.get_or("out", "BENCH_transport.json");
-    let fleet = match args.get("fleet") {
-        Some(spec) => Fleet::parse(spec)?,
-        // two shardable cards so both shapes place as row blocks
-        None => Fleet::parse("840m=8m,v100=8m")?,
-    };
+    // two shardable cards by default so both shapes place as row blocks
+    let spec = args.get_or("fleet", "840m=8m,v100=8m");
+    let fleet = Fleet::parse(spec)?;
     anyhow::ensure!(fleet.len() >= 2, "transport-bench needs a >= 2 device fleet");
+    // loopback socket leg: one local daemon hosts every member; devices
+    // in the spec that already carry an @endpoint keep theirs
+    let bound = net::spawn_server(&Endpoint::Tcp("127.0.0.1:0".into()))?;
+    let socket_spec: String = spec
+        .split(',')
+        .map(|tok| {
+            let tok = tok.trim();
+            if tok.contains('@') {
+                tok.to_string()
+            } else {
+                match tok.split_once('=') {
+                    Some((name, budget)) => format!("{name}@{bound}={budget}"),
+                    None => format!("{tok}@{bound}"),
+                }
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    let socket_fleet = Fleet::parse(&socket_spec)?;
     let set = DeviceSet::from_ids(&(0..fleet.len()).collect::<Vec<_>>());
     let shapes: &[(usize, usize)] = &[(600, 10), (1200, 10)];
     let policy = Policy::GmatrixLike;
     let mut calib = LinkCalibration::new(fleet.len(), 0.3);
-    let mut rows = Vec::new();
-    println!("fleet: {} members={}", fleet.summary(0.9), set.len());
+    let mut socket_calib = LinkCalibration::new(fleet.len(), 0.3);
+    let mut rows: Vec<TransportBenchRow> = Vec::new();
+    println!("fleet: {} members={} socket-server={bound}", fleet.summary(0.9), set.len());
     for &(n, m) in shapes {
         let config = GmresConfig { m, tol: 1e-8, max_restarts: 60, ..Default::default() };
-        let mut walls = [0.0f64; 2];
-        let mut link_wall = 0.0f64;
-        let mut cycles = [0usize; 2];
-        let mut bits = [0u64; 2];
+        let mut walls = [0.0f64; 3];
+        let mut link_walls = [0.0f64; 3];
+        let mut cycles = [0usize; 3];
+        let mut bits = [0u64; 3];
         for (which, kind) in
-            [TransportKind::InProcess, TransportKind::Process].into_iter().enumerate()
+            [TransportKind::InProcess, TransportKind::Process, TransportKind::Socket]
+                .into_iter()
+                .enumerate()
         {
+            let bench_fleet = if kind == TransportKind::Socket { &socket_fleet } else { &fleet };
             let (a, b, _x) = generators::table1_system(n, 42);
             let mut engine = build_sharded_engine_t(
-                &fleet,
+                bench_fleet,
                 set,
                 policy,
                 SystemMatrix::Dense(a),
@@ -866,31 +924,63 @@ fn cmd_transport_bench(args: &Args) -> anyhow::Result<()> {
             walls[which] = started.elapsed().as_secs_f64();
             cycles[which] = report.cycles.max(1);
             bits[which] = report.resnorm.to_bits();
-            if kind == TransportKind::Process {
-                link_wall = engine.cycle_link_wall().iter().sum::<f64>()
+            if kind.is_wire() {
+                link_walls[which] = engine.cycle_link_wall().iter().sum::<f64>()
                     / engine.cycle_link_wall().len().max(1) as f64;
                 for (d, obs) in engine.take_link_observations() {
-                    calib.observe(d, &obs);
+                    if kind == TransportKind::Process {
+                        calib.observe(d, &obs);
+                    } else {
+                        socket_calib.observe(d, &obs);
+                    }
                 }
             }
         }
         anyhow::ensure!(
-            bits[0] == bits[1],
-            "transport mismatch at n={n}: in-process resnorm bits 0x{:016x} != process 0x{:016x}",
+            bits[0] == bits[1] && bits[1] == bits[2],
+            "transport mismatch at n={n}: in-process resnorm bits 0x{:016x}, \
+             process 0x{:016x}, socket 0x{:016x}",
             bits[0],
-            bits[1]
+            bits[1],
+            bits[2]
         );
+        // overlap-on/off pricing delta from the freshly calibrated links
+        let assignments = fleet.shard_plan(set, n, 0.9);
+        let member_rows: Vec<usize> = assignments.iter().map(|s| s.rows).collect();
+        let links: Vec<LinkModel> = assignments
+            .iter()
+            .map(|s| calib.model(s.device).unwrap_or_else(LinkModel::pipe_default))
+            .collect();
+        let wire_serial = process_cycle_wire_seconds(&links, &member_rows, n, m, false);
+        let wire_overlapped =
+            process_cycle_wire_seconds_overlapped(&links, &member_rows, n, m, false);
         println!(
-            "n={n} m={m}: in-process {:.6}s/cycle, process {:.6}s/cycle (link {:.6}s/cycle), \
-             resnorm bits match",
+            "n={n} m={m}: in-process {:.6}s/cycle, process {:.6}s/cycle (link {:.6}), \
+             socket {:.6}s/cycle (link {:.6}), resnorm bits match; \
+             overlap pricing saves {:.6}s/cycle ({:.6} -> {:.6})",
             walls[0] / cycles[0] as f64,
             walls[1] / cycles[1] as f64,
-            link_wall
+            link_walls[1],
+            walls[2] / cycles[2] as f64,
+            link_walls[2],
+            wire_serial - wire_overlapped,
+            wire_serial,
+            wire_overlapped
         );
-        rows.push((n, m, walls[0] / cycles[0] as f64, walls[1] / cycles[1] as f64, link_wall));
+        rows.push(TransportBenchRow {
+            n,
+            m,
+            inproc_cycle: walls[0] / cycles[0] as f64,
+            process_cycle: walls[1] / cycles[1] as f64,
+            process_link: link_walls[1],
+            socket_cycle: walls[2] / cycles[2] as f64,
+            socket_link: link_walls[2],
+            wire_serial,
+            wire_overlapped,
+        });
     }
     // idle workers from completed engines have exited with their
-    // transports; nothing to tear down here
+    // transports; the loopback daemon thread dies with the process
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"transport\",\n  \"links\": [");
     for (i, (d, model)) in calib.snapshot().iter().enumerate() {
@@ -903,21 +993,76 @@ fn cmd_transport_bench(args: &Args) -> anyhow::Result<()> {
             model.latency_seconds, model.bytes_per_second
         );
     }
-    let _ = write!(json, "\n  ],\n  \"observations\": {},\n  \"shapes\": [", calib.observations());
-    for (i, (n, m, inproc, process, link)) in rows.iter().enumerate() {
+    json.push_str("\n  ],\n  \"socket_links\": [");
+    for (i, (d, model)) in socket_calib.snapshot().iter().enumerate() {
         if i > 0 {
             json.push(',');
         }
         let _ = write!(
             json,
-            "\n    {{\"n\": {n}, \"m\": {m}, \"inproc_cycle_s\": {inproc:.9}, \
-             \"process_cycle_s\": {process:.9}, \"process_link_s_per_cycle\": {link:.9}, \
-             \"bit_identical\": true}}"
+            "\n    {{\"device\": {d}, \"latency_s\": {:.9}, \"bandwidth_bps\": {:.1}}}",
+            model.latency_seconds, model.bytes_per_second
+        );
+    }
+    let _ = write!(
+        json,
+        "\n  ],\n  \"observations\": {},\n  \"shapes\": [",
+        calib.observations() + socket_calib.observations()
+    );
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        let _ = write!(
+            json,
+            "\n    {{\"n\": {}, \"m\": {}, \"inproc_cycle_s\": {:.9}, \
+             \"process_cycle_s\": {:.9}, \"process_link_s_per_cycle\": {:.9}, \
+             \"socket_cycle_s\": {:.9}, \"socket_link_s_per_cycle\": {:.9}, \
+             \"wire_cycle_serial_s\": {:.9}, \"wire_cycle_overlapped_s\": {:.9}, \
+             \"overlap_saving_s\": {:.9}, \"bit_identical\": true}}",
+            r.n,
+            r.m,
+            r.inproc_cycle,
+            r.process_cycle,
+            r.process_link,
+            r.socket_cycle,
+            r.socket_link,
+            r.wire_serial,
+            r.wire_overlapped,
+            r.wire_serial - r.wire_overlapped
         );
     }
     json.push_str("\n  ]\n}\n");
     std::fs::write(out_path, &json)?;
-    println!("wrote {out_path} ({} calibrated link(s))", calib.calibrated_links());
+    println!(
+        "wrote {out_path} ({} pipe + {} socket link(s) calibrated)",
+        calib.calibrated_links(),
+        socket_calib.calibrated_links()
+    );
+    Ok(())
+}
+
+/// `shard-server --listen ADDR`: host shard members for remote fleets.
+/// Binds the endpoint and accepts forever; every connection runs its own
+/// isolated worker conversation (own shard, own counters), opened by the
+/// wire-protocol version handshake, so one daemon serves any number of
+/// fleet devices — and a connection that dies takes down only itself.
+fn cmd_shard_server(args: &Args) -> anyhow::Result<()> {
+    use gmres_rs::transport::net;
+    use gmres_rs::transport::Endpoint;
+
+    let listen = args.get_or("listen", "tcp://127.0.0.1:7070");
+    let endpoint = Endpoint::parse(listen).ok_or_else(|| {
+        anyhow!("bad --listen `{listen}` (expected tcp://host:port or unix:/path)")
+    })?;
+    let listener = net::bind(&endpoint)?;
+    let bound = listener.local_endpoint()?;
+    eprintln!(
+        "shard-server: listening on {bound} (wire protocol v{}); \
+         dial it from fleet specs, e.g. --fleet v100@{bound} --transport socket",
+        gmres_rs::transport::wire::PROTOCOL_VERSION
+    );
+    listener.serve_forever()?;
     Ok(())
 }
 

@@ -66,7 +66,9 @@ use crate::fleet::{costs as fleet_costs, DeviceId, DeviceKind, DeviceSet, Fleet,
 use crate::gmres::{GmresConfig, PrecondKind};
 use crate::linalg::{MatrixFormat, SystemShape};
 use crate::precision::Precision;
-use crate::transport::link::{process_cycle_wire_seconds, process_setup_wire_seconds};
+use crate::transport::link::{
+    process_cycle_wire_seconds, process_cycle_wire_seconds_overlapped, process_setup_wire_seconds,
+};
 use crate::transport::{LinkCalibration, LinkModel, LinkObservation, TransportKind};
 use crate::Result;
 
@@ -479,14 +481,14 @@ impl Planner {
         let split = self.cost_split_k(policy, shape, m, placement, precision, k);
         let base_seconds = split.setup_seconds + predicted_cycles as f64 * split.cycle_seconds;
         let coeff = self.coeff_cell(policy, shape.format, placement, precision);
-        // process-transport sharded placements pay real wire costs on top
-        // of the modeled device seconds — priced off calibrated links when
-        // measurements exist, the analytic table otherwise (NOT folded
-        // into base_seconds: the measured/base calibration signal must
-        // stay a pure device-model ratio)
+        // wire-transport (process or socket) sharded placements pay real
+        // wire costs on top of the modeled device seconds — priced off
+        // calibrated links when measurements exist, the analytic table
+        // otherwise (NOT folded into base_seconds: the measured/base
+        // calibration signal must stay a pure device-model ratio)
         let wire_seconds = match placement {
             Placement::Sharded(set)
-                if self.config.transport == TransportKind::Process && policy.needs_runtime() =>
+                if self.config.transport.is_wire() && policy.needs_runtime() =>
             {
                 let (setup_wire, cycle_wire) =
                     self.process_wire_split(set, shape, m, precision, true);
@@ -508,10 +510,13 @@ impl Planner {
     }
 
     /// Predicted wire seconds `(one-time upload, per-cycle)` of a
-    /// process-mode sharded placement.  `calibrated` prices each member
-    /// link from the measured calibration when available; `false` forces
-    /// the uncalibrated analytic table (the baseline
-    /// `tests/transport_e2e.rs` compares calibration against).
+    /// wire-mode (process or socket) sharded placement.  `calibrated`
+    /// prices each member link from the measured calibration when
+    /// available; `false` forces the uncalibrated analytic table (the
+    /// baseline `tests/transport_e2e.rs` compares calibration against).
+    /// Cycles price the *overlapped* fanout — the wire backends write
+    /// every member's matvec request before reading any reply, realizing
+    /// `ShardPricing { overlap: true }` on the real wire.
     pub fn process_wire_split(
         &self,
         set: DeviceSet,
@@ -519,6 +524,22 @@ impl Planner {
         m: usize,
         precision: Precision,
         calibrated: bool,
+    ) -> (f64, f64) {
+        self.process_wire_split_priced(set, shape, m, precision, calibrated, true)
+    }
+
+    /// [`Planner::process_wire_split`] with the collective overlap made
+    /// explicit: `overlap: false` prices the serialized fanout (each
+    /// member's matvec leg waits for the previous member's reply) — the
+    /// regression reference the transport bench reports deltas against.
+    pub fn process_wire_split_priced(
+        &self,
+        set: DeviceSet,
+        shape: &SystemShape,
+        m: usize,
+        precision: Precision,
+        calibrated: bool,
+        overlap: bool,
     ) -> (f64, f64) {
         let fleet = &self.config.fleet;
         let assignments = fleet.shard_plan(set, shape.n, self.config.mem_fraction);
@@ -538,7 +559,11 @@ impl Planner {
             .map(|&r| fleet_costs::block_matrix_bytes_p(shape, r, precision))
             .collect();
         let setup = process_setup_wire_seconds(&links, &upload);
-        let cycle = process_cycle_wire_seconds(&links, &rows, shape.n, m, precision.is_reduced());
+        let cycle = if overlap {
+            process_cycle_wire_seconds_overlapped(&links, &rows, shape.n, m, precision.is_reduced())
+        } else {
+            process_cycle_wire_seconds(&links, &rows, shape.n, m, precision.is_reduced())
+        };
         (setup, cycle)
     }
 

@@ -220,6 +220,45 @@ pub fn process_cycle_wire_seconds(
         .sum()
 }
 
+/// Wire seconds one cycle adds when the transport *overlaps* its matvec
+/// fanout — every member's request is written before any reply is read
+/// (`Transport::matvec_fanout` on the wire backends), so the per-member
+/// matvec legs drain concurrently and that term prices as the MAX
+/// across members instead of their serial sum.  This is the wire-side
+/// realization of `ShardPricing { overlap: true }`.  The reduction
+/// scalars (dot and norm partials) stay serialized — they are
+/// latency-bound and the coordinator folds each partial in order — so
+/// those terms still SUM, exactly as in
+/// [`process_cycle_wire_seconds`], which remains the un-pipelined
+/// regression reference.
+pub fn process_cycle_wire_seconds_overlapped(
+    links: &[LinkModel],
+    rows: &[usize],
+    n: usize,
+    m: usize,
+    reduced: bool,
+) -> f64 {
+    assert_eq!(links.len(), rows.len(), "one link model per member");
+    let matvecs = if reduced { m + 1 } else { m + 2 };
+    let norms = matvecs;
+    let dots = m * (m + 1) / 2;
+    let matvec_leg = links
+        .iter()
+        .zip(rows)
+        .filter(|(_, &r)| r > 0)
+        .map(|(link, &r)| link.time(8 * n + 8 * r))
+        .fold(0.0_f64, f64::max);
+    let serial: f64 = links
+        .iter()
+        .zip(rows)
+        .filter(|(_, &r)| r > 0)
+        .map(|(link, &r)| {
+            dots as f64 * link.time(16 * r + 8) + norms as f64 * link.time(8 * r + 8)
+        })
+        .sum();
+    matvecs as f64 * matvec_leg + serial
+}
+
 /// Wire seconds of the one-time shard upload in process mode: each
 /// `rows > 0` member receives its block (`bytes_per_member`) once.
 pub fn process_setup_wire_seconds(links: &[LinkModel], bytes_per_member: &[usize]) -> f64 {
@@ -305,6 +344,28 @@ mod tests {
         assert!(bigger_m > some);
         let reduced = process_cycle_wire_seconds(&links, &[100, 100], 200, 8, true);
         assert!(reduced < some, "reduced cycles run one fewer matvec+norm");
+    }
+
+    #[test]
+    fn overlapped_cycle_is_cheaper_and_converges_for_one_member() {
+        let links = vec![LinkModel::new(1e-5, 1e9), LinkModel::new(2e-5, 0.5e9)];
+        let serial = process_cycle_wire_seconds(&links, &[100, 100], 200, 8, false);
+        let overlapped = process_cycle_wire_seconds_overlapped(&links, &[100, 100], 200, 8, false);
+        assert!(
+            overlapped < serial,
+            "overlapping the fanout must shed the slower member's matvec wait: \
+             {overlapped} vs {serial}"
+        );
+        // a single working member has nothing to overlap with: both
+        // pricings agree exactly
+        let one = vec![LinkModel::new(1e-5, 1e9)];
+        let s1 = process_cycle_wire_seconds(&one, &[200], 200, 8, false);
+        let o1 = process_cycle_wire_seconds_overlapped(&one, &[200], 200, 8, false);
+        assert!((s1 - o1).abs() < 1e-15, "{s1} vs {o1}");
+        // empty members cost nothing in either pricing
+        let with_empty =
+            process_cycle_wire_seconds_overlapped(&links, &[200, 0], 200, 8, false);
+        assert!((with_empty - o1).abs() < 1e-15);
     }
 
     #[test]

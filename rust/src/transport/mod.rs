@@ -7,10 +7,14 @@
 //! [`inproc::InProcTransport`] backend keeps the existing
 //! function-call semantics, while [`process::ProcessTransport`] runs
 //! each member as a spawned `gmres-rs shard-worker` OS process speaking
-//! the length-framed binary protocol in [`wire`] over stdin/stdout
-//! pipes.  Both run the exact same kernels on the same bits in the same
-//! order, so f64 process-mode solves are **bit-identical** to the
-//! in-process reference — `tests/transport_e2e.rs` pins it.
+//! the length-framed, checksummed binary protocol in [`wire`] over
+//! stdin/stdout pipes — or, with [`TransportKind::Socket`], dials the
+//! same protocol to a `gmres-rs shard-server` daemon over TCP or
+//! Unix-domain sockets ([`net`]), so shard members can live on other
+//! hosts.  All backends run the exact same kernels on the same bits in
+//! the same order, so f64 process- and socket-mode solves are
+//! **bit-identical** to the in-process reference —
+//! `tests/transport_e2e.rs` pins it.
 //!
 //! Per-link wall times measured by the process backend flow through
 //! [`link::LinkCalibration`] into the planner, which prices sharded
@@ -21,6 +25,7 @@
 
 pub mod inproc;
 pub mod link;
+pub mod net;
 pub mod pool;
 pub mod process;
 pub mod wire;
@@ -28,6 +33,7 @@ pub mod worker;
 
 pub use inproc::InProcTransport;
 pub use link::{LinkCalibration, LinkModel, LinkObservation};
+pub use net::Endpoint;
 pub use pool::WorkerPool;
 pub use process::{ProcessTransport, WorkerHandle};
 
@@ -41,14 +47,20 @@ pub enum TransportKind {
     /// Members are spawned `gmres-rs shard-worker` OS processes driven
     /// over length-framed pipes.
     Process,
+    /// Members are dialed over TCP or Unix-domain sockets — a
+    /// `gmres-rs shard-server` daemon, possibly on another host.
+    /// Fleet devices without an endpoint fall back to spawned local
+    /// worker processes.
+    Socket,
 }
 
 impl TransportKind {
-    /// CLI token (`in-process` | `process`).
+    /// CLI token (`in-process` | `process` | `socket`).
     pub fn name(&self) -> &'static str {
         match self {
             TransportKind::InProcess => "in-process",
             TransportKind::Process => "process",
+            TransportKind::Socket => "socket",
         }
     }
 
@@ -57,8 +69,16 @@ impl TransportKind {
         match s.to_ascii_lowercase().as_str() {
             "in-process" | "inprocess" | "inproc" | "channel" => Some(TransportKind::InProcess),
             "process" | "os-process" | "proc" => Some(TransportKind::Process),
+            "socket" | "net" | "tcp" => Some(TransportKind::Socket),
             _ => None,
         }
+    }
+
+    /// True when members live behind a real wire (worker processes or
+    /// sockets) — the placements whose collectives the planner must
+    /// price with link models.
+    pub fn is_wire(&self) -> bool {
+        *self != TransportKind::InProcess
     }
 }
 
@@ -172,6 +192,52 @@ pub trait Transport: Send {
     fn norm_sq_partial(&mut self, member: usize, x_block: &[f64])
         -> Result<f64, TransportError>;
 
+    /// Compute member `k`'s matvec partials for `k_cols` folded columns
+    /// in one leg: `xs` is `k_cols` concatenated full-length inputs,
+    /// `ys` receives `k_cols` concatenated row blocks.  The default
+    /// loops the single-column [`Transport::matvec`] (identical
+    /// arithmetic); wire backends override it with one
+    /// [`wire::Frame::MatvecBlock`] round trip.
+    fn matvec_block(
+        &mut self,
+        member: usize,
+        k_cols: usize,
+        xs: &[f64],
+        ys: &mut [f64],
+    ) -> Result<(), TransportError> {
+        debug_assert!(k_cols > 0, "fold width must be positive");
+        debug_assert_eq!(xs.len() % k_cols, 0, "xs must split into k columns");
+        debug_assert_eq!(ys.len() % k_cols, 0, "ys must split into k blocks");
+        let n = xs.len() / k_cols;
+        let rows = ys.len() / k_cols;
+        for c in 0..k_cols {
+            self.matvec(member, &xs[c * n..(c + 1) * n], &mut ys[c * rows..(c + 1) * rows])?;
+        }
+        Ok(())
+    }
+
+    /// Broadcast `k_cols` folded columns to *every* working member and
+    /// gather each member's blocks: `y_blocks[m]` must be sized
+    /// `k_cols * rows_m` (empty for zero-row members, which are
+    /// skipped).  The default runs members sequentially; wire backends
+    /// override it to write every request before reading any reply, so
+    /// member broadcasts overlap member compute — the double-buffered
+    /// collective that `ShardPricing { overlap }` prices.
+    fn matvec_fanout(
+        &mut self,
+        k_cols: usize,
+        xs: &[f64],
+        y_blocks: &mut [Vec<f64>],
+    ) -> Result<(), TransportError> {
+        for (member, y) in y_blocks.iter_mut().enumerate() {
+            if y.is_empty() {
+                continue;
+            }
+            self.matvec_block(member, k_cols, xs, y)?;
+        }
+        Ok(())
+    }
+
     /// Lifetime wire counters (zero for the in-process backend).
     fn stats(&self) -> TransportStats;
 
@@ -195,9 +261,15 @@ mod tests {
         assert_eq!(TransportKind::parse("in-process"), Some(TransportKind::InProcess));
         assert_eq!(TransportKind::parse("PROCESS"), Some(TransportKind::Process));
         assert_eq!(TransportKind::parse("proc"), Some(TransportKind::Process));
+        assert_eq!(TransportKind::parse("socket"), Some(TransportKind::Socket));
+        assert_eq!(TransportKind::parse("TCP"), Some(TransportKind::Socket));
         assert_eq!(TransportKind::parse("carrier-pigeon"), None);
         assert_eq!(TransportKind::default(), TransportKind::InProcess);
         assert_eq!(TransportKind::Process.to_string(), "process");
+        assert_eq!(TransportKind::Socket.to_string(), "socket");
+        assert!(!TransportKind::InProcess.is_wire());
+        assert!(TransportKind::Process.is_wire());
+        assert!(TransportKind::Socket.is_wire());
     }
 
     #[test]

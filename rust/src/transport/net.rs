@@ -1,0 +1,319 @@
+//! Socket-backed shard transport: remote fleet members over TCP or
+//! Unix-domain sockets.
+//!
+//! An [`Endpoint`] names where a shard member lives (`tcp://host:port`
+//! or `unix:/path`); [`connect`] dials it and hands back the split
+//! read/write streams plus a [`ControlHandle`] for the out-of-band
+//! operations a pipe never needed (read deadlines for health pings,
+//! half-close on orderly teardown).  The server side is
+//! [`shard_server`]: an accept loop that runs one
+//! [`worker::serve`](super::worker::serve) conversation per connection,
+//! so one daemon hosts any number of shard members — each dial gets a
+//! fresh, isolated [`WorkerState`](super::worker).
+//!
+//! The bytes on a socket are exactly the bytes on a worker pipe — the
+//! same checksummed [`wire`](super::wire) frames, opened by the same
+//! version handshake — so a socket-mode f64 sharded solve is
+//! bit-identical to the in-process reference, and a corrupted or
+//! version-skewed peer is refused with a typed error instead of a
+//! misread.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Where a remote shard member can be dialed.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    /// TCP `host:port` (hostname or literal address).
+    Tcp(String),
+    /// Unix-domain socket path.
+    Unix(PathBuf),
+}
+
+impl Endpoint {
+    /// Parse `tcp://host:port`, `unix:/path`, or `unix:///path`.
+    /// Returns `None` for anything else — the fleet parser treats that
+    /// as a malformed device spec, not a local device.
+    pub fn parse(s: &str) -> Option<Endpoint> {
+        if let Some(rest) = s.strip_prefix("tcp://") {
+            if rest.is_empty() || !rest.contains(':') {
+                return None;
+            }
+            return Some(Endpoint::Tcp(rest.to_string()));
+        }
+        let path = s.strip_prefix("unix://").or_else(|| s.strip_prefix("unix:"))?;
+        if path.is_empty() {
+            return None;
+        }
+        Some(Endpoint::Unix(PathBuf::from(path)))
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Tcp(addr) => write!(f, "tcp://{addr}"),
+            Endpoint::Unix(path) => write!(f, "unix:{}", path.display()),
+        }
+    }
+}
+
+/// Out-of-band control over a dialed connection, held alongside the
+/// buffered conversation streams.  Pipes to child processes need
+/// neither operation; sockets need both.
+pub enum ControlHandle {
+    /// Control clone of a TCP connection.
+    Tcp(TcpStream),
+    /// Control clone of a Unix-domain connection.
+    Unix(UnixStream),
+}
+
+impl ControlHandle {
+    /// Bound how long a blocking read may wait (used to give health
+    /// pings a deadline; `None` restores blocking reads).
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            ControlHandle::Tcp(s) => s.set_read_timeout(d),
+            ControlHandle::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    /// Half-close both directions — the socket analogue of dropping a
+    /// child's pipes.
+    pub fn shutdown(&self) -> io::Result<()> {
+        match self {
+            ControlHandle::Tcp(s) => s.shutdown(Shutdown::Both),
+            ControlHandle::Unix(s) => s.shutdown(Shutdown::Both),
+        }
+    }
+}
+
+/// Dial an endpoint with a connect deadline; returns the write stream,
+/// the read stream, and the control clone.  TCP resolution tries every
+/// address the name maps to before giving up.
+pub fn connect(
+    endpoint: &Endpoint,
+    timeout: Duration,
+) -> io::Result<(Box<dyn Write + Send>, Box<dyn Read + Send>, ControlHandle)> {
+    match endpoint {
+        Endpoint::Tcp(addr) => {
+            let mut last: Option<io::Error> = None;
+            for sa in addr.to_socket_addrs()? {
+                match TcpStream::connect_timeout(&sa, timeout) {
+                    Ok(s) => {
+                        // small frames are latency probes and scalar
+                        // reductions — never Nagle them
+                        s.set_nodelay(true)?;
+                        let reader = s.try_clone()?;
+                        let control = s.try_clone()?;
+                        return Ok((Box::new(s), Box::new(reader), ControlHandle::Tcp(control)));
+                    }
+                    Err(e) => last = Some(e),
+                }
+            }
+            Err(last.unwrap_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::AddrNotAvailable,
+                    format!("{addr} resolved to no addresses"),
+                )
+            }))
+        }
+        Endpoint::Unix(path) => {
+            let s = UnixStream::connect(path)?;
+            let reader = s.try_clone()?;
+            let control = s.try_clone()?;
+            Ok((Box::new(s), Box::new(reader), ControlHandle::Unix(control)))
+        }
+    }
+}
+
+/// A bound shard-server listener, not yet accepting.
+pub enum ServerListener {
+    /// Bound TCP listener.
+    Tcp(TcpListener),
+    /// Bound Unix-domain listener.
+    Unix(UnixListener),
+}
+
+/// Bind a listener on `endpoint`.  A stale Unix socket file from an
+/// earlier run is removed first; TCP port 0 binds an ephemeral port
+/// (read it back with [`ServerListener::local_endpoint`]).
+pub fn bind(endpoint: &Endpoint) -> io::Result<ServerListener> {
+    match endpoint {
+        Endpoint::Tcp(addr) => Ok(ServerListener::Tcp(TcpListener::bind(addr)?)),
+        Endpoint::Unix(path) => {
+            let _ = std::fs::remove_file(path);
+            Ok(ServerListener::Unix(UnixListener::bind(path)?))
+        }
+    }
+}
+
+impl ServerListener {
+    /// The endpoint this listener actually bound (resolves ephemeral
+    /// TCP ports).
+    pub fn local_endpoint(&self) -> io::Result<Endpoint> {
+        match self {
+            ServerListener::Tcp(l) => Ok(Endpoint::Tcp(l.local_addr()?.to_string())),
+            ServerListener::Unix(l) => {
+                let addr = l.local_addr()?;
+                let path = addr
+                    .as_pathname()
+                    .ok_or_else(|| io::Error::new(io::ErrorKind::Other, "unnamed unix socket"))?;
+                Ok(Endpoint::Unix(path.to_path_buf()))
+            }
+        }
+    }
+
+    /// Accept forever, one [`worker::serve`](super::worker::serve)
+    /// thread per connection.  Every connection is an isolated worker:
+    /// its own shard, its own counters, its own lifetime.  A connection
+    /// that errors or disconnects takes down only its own thread.
+    pub fn serve_forever(self) -> io::Result<()> {
+        match self {
+            ServerListener::Tcp(l) => loop {
+                let (stream, _) = l.accept()?;
+                let _ = stream.set_nodelay(true);
+                let reader = match stream.try_clone() {
+                    Ok(r) => r,
+                    Err(_) => continue,
+                };
+                std::thread::spawn(move || {
+                    let _ = super::worker::serve(reader, stream);
+                });
+            },
+            ServerListener::Unix(l) => loop {
+                let (stream, _) = l.accept()?;
+                let reader = match stream.try_clone() {
+                    Ok(r) => r,
+                    Err(_) => continue,
+                };
+                std::thread::spawn(move || {
+                    let _ = super::worker::serve(reader, stream);
+                });
+            },
+        }
+    }
+}
+
+/// Bind `endpoint` and serve it on a background thread; returns the
+/// bound endpoint (ephemeral ports resolved).  This is the loopback
+/// harness tests and `transport-bench` use — production runs the same
+/// loop through `gmres-rs shard-server`.
+pub fn spawn_server(endpoint: &Endpoint) -> io::Result<Endpoint> {
+    let listener = bind(endpoint)?;
+    let bound = listener.local_endpoint()?;
+    std::thread::spawn(move || {
+        let _ = listener.serve_forever();
+    });
+    Ok(bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::wire::{
+        read_frame, write_frame, Frame, Values, PROTOCOL_VERSION,
+    };
+    use std::io::BufReader;
+
+    fn call(
+        w: &mut impl Write,
+        r: &mut impl Read,
+        frame: &Frame,
+    ) -> io::Result<Frame> {
+        write_frame(w, frame)?;
+        w.flush()?;
+        Ok(read_frame(r)?.0)
+    }
+
+    #[test]
+    fn endpoint_syntax_parses_and_displays() {
+        assert_eq!(
+            Endpoint::parse("tcp://node7:7070"),
+            Some(Endpoint::Tcp("node7:7070".into()))
+        );
+        assert_eq!(
+            Endpoint::parse("unix:/tmp/gmres.sock"),
+            Some(Endpoint::Unix(PathBuf::from("/tmp/gmres.sock")))
+        );
+        assert_eq!(
+            Endpoint::parse("unix:///tmp/gmres.sock"),
+            Some(Endpoint::Unix(PathBuf::from("/tmp/gmres.sock")))
+        );
+        assert_eq!(Endpoint::parse("tcp://noport"), None);
+        assert_eq!(Endpoint::parse("tcp://"), None);
+        assert_eq!(Endpoint::parse("unix:"), None);
+        assert_eq!(Endpoint::parse("http://x:1"), None);
+        assert_eq!(Endpoint::Tcp("h:1".into()).to_string(), "tcp://h:1");
+        assert_eq!(
+            Endpoint::Unix(PathBuf::from("/a/b")).to_string(),
+            "unix:/a/b"
+        );
+        // display round-trips through parse
+        for ep in [Endpoint::Tcp("host:9".into()), Endpoint::Unix(PathBuf::from("/x"))] {
+            assert_eq!(Endpoint::parse(&ep.to_string()), Some(ep));
+        }
+    }
+
+    #[test]
+    fn loopback_tcp_server_answers_handshake_and_work_frames() {
+        let bound = spawn_server(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+        let (mut w, r, _control) = connect(&bound, Duration::from_secs(5)).unwrap();
+        let mut r = BufReader::new(r);
+        let hello = call(&mut w, &mut r, &Frame::Hello { version: PROTOCOL_VERSION }).unwrap();
+        assert_eq!(hello, Frame::HelloAck { version: PROTOCOL_VERSION });
+        let pong = call(&mut w, &mut r, &Frame::Ping { nonce: 42 }).unwrap();
+        assert_eq!(pong, Frame::Pong { nonce: 42 });
+        // a 1x2 dense shard, then its matvec over the socket
+        let up = call(
+            &mut w,
+            &mut r,
+            &Frame::UploadDense { rows: 1, n: 2, values: Values::F64(vec![2.0, 3.0]) },
+        )
+        .unwrap();
+        assert_eq!(up, Frame::Ok);
+        let y = call(&mut w, &mut r, &Frame::Matvec { x: Values::F64(vec![10.0, 1.0]) }).unwrap();
+        assert_eq!(y, Frame::YBlock { y: Values::F64(vec![23.0]) });
+    }
+
+    #[test]
+    fn each_connection_is_an_isolated_worker() {
+        let bound = spawn_server(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+        let (mut w1, r1, _c1) = connect(&bound, Duration::from_secs(5)).unwrap();
+        let mut r1 = BufReader::new(r1);
+        let (mut w2, r2, _c2) = connect(&bound, Duration::from_secs(5)).unwrap();
+        let mut r2 = BufReader::new(r2);
+        let up = call(
+            &mut w1,
+            &mut r1,
+            &Frame::UploadDense { rows: 1, n: 1, values: Values::F64(vec![4.0]) },
+        )
+        .unwrap();
+        assert_eq!(up, Frame::Ok);
+        // connection 2 never uploaded — its worker must refuse matvec
+        let reply = call(&mut w2, &mut r2, &Frame::Matvec { x: Values::F64(vec![1.0]) }).unwrap();
+        assert!(
+            matches!(&reply, Frame::Err { message } if message.contains("upload")),
+            "{reply:?}"
+        );
+        // and connection 1 still works
+        let y = call(&mut w1, &mut r1, &Frame::Matvec { x: Values::F64(vec![2.0]) }).unwrap();
+        assert_eq!(y, Frame::YBlock { y: Values::F64(vec![8.0]) });
+    }
+
+    #[test]
+    fn unix_domain_socket_round_trips() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("gmres-net-test-{}.sock", std::process::id()));
+        let bound = spawn_server(&Endpoint::Unix(path.clone())).unwrap();
+        let (mut w, r, _c) = connect(&bound, Duration::from_secs(5)).unwrap();
+        let mut r = BufReader::new(r);
+        let pong = call(&mut w, &mut r, &Frame::Ping { nonce: 7 }).unwrap();
+        assert_eq!(pong, Frame::Pong { nonce: 7 });
+        let _ = std::fs::remove_file(&path);
+    }
+}

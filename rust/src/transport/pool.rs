@@ -1,18 +1,37 @@
-//! Worker-process lifecycle for the fleet scheduler.
+//! Worker lifecycle for the fleet scheduler: local children and remote
+//! endpoints behind one pool.
 //!
-//! [`WorkerPool`] keeps idle shard-worker processes per fleet device
-//! and hands them to sharded process-mode jobs at claim time.  Checkout
+//! [`WorkerPool`] keeps idle shard workers per fleet device and hands
+//! them to sharded wire-mode jobs at claim time.  Checkout
 //! health-checks a reused worker with a ping — a dead worker is reaped,
-//! counted as a restart, and replaced with a fresh spawn, so a crash
-//! only fails the job that was talking to the worker when it died; the
-//! next wave gets a respawned process.  Check-in returns live workers
-//! to the idle slots and kills unhealthy ones.
+//! counted as a restart, and replaced, so a crash only fails the job
+//! that was talking to the worker when it died; the next wave gets a
+//! fresh one.  Devices with a configured [`Endpoint`] are *dialed*
+//! (with capped exponential backoff) instead of spawned, and a
+//! successful redial after the endpoint was ever up counts as a
+//! reconnect.  Check-in returns live workers to the idle slots and
+//! kills unhealthy ones.
+//!
+//! The pool also tracks the minimum protocol version its peers acked:
+//! the batcher consults [`WorkerPool::supports_wire_folds`] before
+//! folding a sharded placement, so a fold is only attempted when every
+//! peer can carry the k-wide `MatvecBlock` frames.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
+use super::net::Endpoint;
 use super::process::WorkerHandle;
+use super::wire::MIN_FOLD_VERSION;
 use super::TransportError;
+
+/// Dial attempts per checkout, backing off `DIAL_BACKOFF_BASE * 2^i`
+/// between tries (50ms, 100ms, 200ms — capped, so a dead endpoint
+/// costs a checkout well under a second before the typed failure).
+const DIAL_ATTEMPTS: u32 = 4;
+const DIAL_BACKOFF_BASE: Duration = Duration::from_millis(50);
+const DIAL_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Per-device idle shard-worker slots with crash-respawn accounting.
 pub struct WorkerPool {
@@ -20,22 +39,44 @@ pub struct WorkerPool {
     idle: Mutex<Vec<Vec<WorkerHandle>>>,
     /// Pids currently checked out per device (fault-injection target).
     checked_out: Mutex<Vec<Vec<u32>>>,
+    /// `endpoints[d]` dials instead of spawning when set.
+    endpoints: Vec<Option<Endpoint>>,
+    /// Devices whose endpoint has connected at least once — a later
+    /// successful dial is then a *re*connect.
+    ever_connected: Mutex<Vec<bool>>,
     restarts: AtomicU64,
     /// Checkout health-check pings that found a dead worker (a strict
     /// subset of `restarts`: the dead-on-arrival reap path).
     ping_failures: AtomicU64,
+    /// Successful redials of an endpoint that had connected before
+    /// (connection-loss recoveries, not first contact).
+    reconnects: AtomicU64,
+    /// Minimum protocol version acked by any peer this pool has
+    /// connected (u32::MAX until the first connection).
+    min_peer_version: AtomicU32,
     nonce: AtomicU64,
 }
 
 impl WorkerPool {
     /// A pool covering `devices` fleet slots, all initially empty —
-    /// workers are spawned lazily at first checkout.
+    /// local workers are spawned lazily at first checkout.
     pub fn new(devices: usize) -> Self {
+        Self::with_endpoints(vec![None; devices])
+    }
+
+    /// A pool whose devices may name remote endpoints: slot `d` dials
+    /// `endpoints[d]` when set, spawns a local child otherwise.
+    pub fn with_endpoints(endpoints: Vec<Option<Endpoint>>) -> Self {
+        let devices = endpoints.len();
         Self {
             idle: Mutex::new((0..devices).map(|_| Vec::new()).collect()),
             checked_out: Mutex::new((0..devices).map(|_| Vec::new()).collect()),
+            ever_connected: Mutex::new(vec![false; devices]),
+            endpoints,
             restarts: AtomicU64::new(0),
             ping_failures: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            min_peer_version: AtomicU32::new(u32::MAX),
             nonce: AtomicU64::new(1),
         }
     }
@@ -43,6 +84,11 @@ impl WorkerPool {
     /// Number of fleet device slots this pool covers.
     pub fn devices(&self) -> usize {
         self.idle.lock().unwrap().len()
+    }
+
+    /// The endpoint configured for `device`, if any.
+    pub fn endpoint(&self, device: usize) -> Option<&Endpoint> {
+        self.endpoints.get(device).and_then(|e| e.as_ref())
     }
 
     /// Workers respawned after failed health checks or crash check-ins.
@@ -56,6 +102,20 @@ impl WorkerPool {
         self.ping_failures.load(Ordering::Relaxed)
     }
 
+    /// Successful endpoint redials after a connection was lost.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// True when every peer this pool has connected acked a protocol
+    /// version that carries k-wide fold frames.  Vacuously true before
+    /// the first connection: the handshake at spawn/dial will refuse
+    /// any peer that cannot.
+    pub fn supports_wire_folds(&self) -> bool {
+        let min = self.min_peer_version.load(Ordering::Relaxed);
+        min == u32::MAX || min >= MIN_FOLD_VERSION
+    }
+
     /// Idle workers currently parked for `device`.
     pub fn idle_count(&self, device: usize) -> usize {
         self.idle.lock().unwrap()[device].len()
@@ -63,7 +123,8 @@ impl WorkerPool {
 
     /// Check out a live worker for `device`: reuse an idle one when its
     /// ping passes (reaping and counting a restart when it does not),
-    /// else spawn fresh.
+    /// else spawn a child — or dial the device's endpoint with capped
+    /// exponential backoff.
     pub fn checkout(&self, device: usize) -> Result<WorkerHandle, TransportError> {
         loop {
             let parked = self.idle.lock().unwrap()[device].pop();
@@ -81,7 +142,8 @@ impl WorkerPool {
                     self.restarts.fetch_add(1, Ordering::Relaxed);
                 }
                 None => {
-                    let handle = WorkerHandle::spawn(device)?;
+                    let handle = self.bring_up(device)?;
+                    self.note_connected(device, &handle);
                     self.note_checkout(device, handle.pid());
                     return Ok(handle);
                 }
@@ -89,9 +151,44 @@ impl WorkerPool {
         }
     }
 
+    /// Spawn or dial a fresh worker for `device`.  Dial failures retry
+    /// with capped exponential backoff; protocol refusals (version
+    /// skew) fail immediately — retrying cannot fix a wrong build.
+    fn bring_up(&self, device: usize) -> Result<WorkerHandle, TransportError> {
+        let Some(endpoint) = self.endpoint(device) else {
+            return WorkerHandle::spawn(device);
+        };
+        let mut last: Option<TransportError> = None;
+        for attempt in 0..DIAL_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(DIAL_BACKOFF_BASE * (1 << (attempt - 1).min(8)));
+            }
+            match WorkerHandle::dial(device, endpoint, DIAL_TIMEOUT) {
+                Ok(handle) => return Ok(handle),
+                Err(e) if e.kind == super::TransportErrorKind::SpawnFailed => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last.expect("at least one dial attempt"))
+    }
+
+    /// Record a fresh connection's handshake outcome and whether it was
+    /// a reconnect.
+    fn note_connected(&self, device: usize, handle: &WorkerHandle) {
+        self.min_peer_version.fetch_min(handle.peer_version(), Ordering::Relaxed);
+        if handle.is_remote() {
+            let mut ever = self.ever_connected.lock().unwrap();
+            if ever[device] {
+                self.reconnects.fetch_add(1, Ordering::Relaxed);
+            }
+            ever[device] = true;
+        }
+    }
+
     /// Return a worker after a solve.  Healthy workers park for reuse;
     /// unhealthy ones (their job saw a transport failure) are killed
-    /// and counted as a restart so the next checkout spawns fresh.
+    /// and counted as a restart so the next checkout brings up a fresh
+    /// one.
     pub fn checkin(&self, mut handle: WorkerHandle) {
         let device = handle.device();
         self.forget_checkout(device, handle.pid());
@@ -105,16 +202,24 @@ impl WorkerPool {
 
     /// Forget a checked-out worker whose handle was consumed by a failed
     /// engine build (the handle's drop already killed the process).
-    /// Counted as a restart: the next checkout spawns fresh.
+    /// Counted as a restart: the next checkout brings up a fresh one.
     pub fn forget_lost(&self, device: usize, pid: u32) {
         self.forget_checkout(device, pid);
         self.restarts.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Fault injection for crash tests: SIGKILL one worker currently
-    /// checked out on `device`.  Returns the pid it killed, if any.
+    /// Fault injection for crash tests: SIGKILL one *child* worker
+    /// currently checked out on `device`.  Remote workers have no
+    /// local process to signal — kill the shard-server instead.
+    /// Returns the pid it killed, if any.
     pub fn kill_checked_out(&self, device: usize) -> Option<u32> {
-        let pid = self.checked_out.lock().unwrap()[device].first().copied()?;
+        let pid = self
+            .checked_out
+            .lock()
+            .unwrap()[device]
+            .iter()
+            .copied()
+            .find(|&p| p & 0x8000_0000 == 0)?;
         let _ = std::process::Command::new("kill")
             .arg("-9")
             .arg(pid.to_string())

@@ -1,26 +1,35 @@
-//! OS-process transport: shard members as spawned `gmres-rs
-//! shard-worker` processes driven over length-framed pipes.
+//! Wire transport: shard members as spawned `gmres-rs shard-worker`
+//! child processes over pipes, or remote `gmres-rs shard-server`
+//! connections dialed over sockets — one [`WorkerHandle`] type either
+//! way.
 //!
-//! Each [`WorkerHandle`] owns one child process plus its buffered
-//! stdin/stdout conversation; [`ProcessTransport`] maps shard members
-//! onto handles and implements [`Transport`] by exchanging
-//! [`wire`](super::wire) frames.  Every round trip is wall-clocked and
-//! size-accounted into a per-link [`LinkObservation`] window, which the
-//! coordinator drains into the planner's link calibration.  Runtime
-//! vectors always cross the wire as full f64 bits (Arnoldi vectors are
-//! f64 even in reduced-precision solves), so process-mode answers are
-//! bit-identical to the in-process backend; only the one-time shard
-//! upload narrows to f32 bits when the residency was narrowed.
+//! Each [`WorkerHandle`] owns one conversation (a child's
+//! stdin/stdout, or a socket's split streams plus its
+//! [`ControlHandle`](super::net::ControlHandle)); [`ProcessTransport`]
+//! maps shard members onto handles and implements [`Transport`] by
+//! exchanging [`wire`](super::wire) frames.  Every conversation opens
+//! with the [`Frame::Hello`] version handshake.  Every round trip is
+//! wall-clocked and size-accounted into a per-link [`LinkObservation`]
+//! window, which the coordinator drains into the planner's link
+//! calibration — per *link*, not per device pair, so asymmetric
+//! topologies (one member over loopback, one across a rack) price
+//! correctly.  Runtime vectors always cross the wire as full f64 bits
+//! (Arnoldi vectors are f64 even in reduced-precision solves), so
+//! wire-mode answers are bit-identical to the in-process backend; only
+//! the one-time shard upload narrows to f32 bits when the residency
+//! was narrowed.
 
-use std::io::{self, BufReader, Write};
-use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
-use std::time::Instant;
+use std::io::{self, BufReader, Read, Write};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::time::{Duration, Instant};
 
 use crate::linalg::SystemMatrix;
 
 use crate::fleet::ShardedMatrix;
 
-use super::wire::{read_frame, write_frame, Frame, Values};
+use super::net::{self, ControlHandle, Endpoint};
+use super::wire::{read_frame, write_frame, Frame, Values, PROTOCOL_VERSION};
 use super::{
     LinkObservation, Transport, TransportError, TransportErrorKind, TransportKind, TransportStats,
 };
@@ -64,10 +73,12 @@ pub fn worker_command() -> Command {
 }
 
 /// One buffered request/reply conversation with a worker, with wire
-/// accounting per round trip.
+/// accounting per round trip.  The streams are trait objects so a
+/// child's pipes and a dialed socket share every code path above the
+/// byte layer.
 struct WireConn {
-    writer: ChildStdin,
-    reader: BufReader<ChildStdout>,
+    writer: Box<dyn Write + Send>,
+    reader: BufReader<Box<dyn Read + Send>>,
     bytes: u64,
     round_trips: u64,
     wall_seconds: f64,
@@ -75,7 +86,7 @@ struct WireConn {
 }
 
 impl WireConn {
-    fn new(writer: ChildStdin, reader: ChildStdout) -> Self {
+    fn new(writer: Box<dyn Write + Send>, reader: Box<dyn Read + Send>) -> Self {
         Self {
             writer,
             reader: BufReader::new(reader),
@@ -89,32 +100,67 @@ impl WireConn {
     /// One measured round trip: write + flush + read the reply.
     fn call(&mut self, frame: &Frame) -> io::Result<Frame> {
         let started = Instant::now();
+        let wrote = self.send(frame)?;
+        let (reply, read) = self.recv()?;
+        self.account((wrote + read) as u64, started.elapsed().as_secs_f64());
+        Ok(reply)
+    }
+
+    /// Write + flush one request without waiting for the reply — the
+    /// first half of an overlapped fanout.  Returns wire bytes written.
+    fn send(&mut self, frame: &Frame) -> io::Result<usize> {
         let wrote = write_frame(&mut self.writer, frame)?;
         self.writer.flush()?;
-        let (reply, read) = read_frame(&mut self.reader)?;
-        let wall = started.elapsed().as_secs_f64();
-        let wire = (wrote + read) as u64;
+        Ok(wrote)
+    }
+
+    /// Read one reply — the second half of an overlapped fanout.
+    fn recv(&mut self) -> io::Result<(Frame, usize)> {
+        read_frame(&mut self.reader)
+    }
+
+    /// Book one completed round trip into the lifetime counters and
+    /// the calibration window.
+    fn account(&mut self, wire: u64, wall: f64) {
         self.bytes += wire;
         self.round_trips += 1;
         self.wall_seconds += wall;
         self.window.record(wire, wall);
-        Ok(reply)
     }
 }
 
-/// A live shard-worker process: the child, its conversation, the fleet
-/// device it stands in for, and a health flag the pool consults on
-/// check-in.
+/// What stands behind a [`WorkerHandle`]'s conversation.
+enum Backing {
+    /// A spawned `gmres-rs shard-worker` child (pipes).
+    Child(Child),
+    /// A dialed `gmres-rs shard-server` connection (socket) with its
+    /// control clone for read deadlines and teardown.
+    Remote { endpoint: Endpoint, control: ControlHandle },
+}
+
+/// Synthetic "pid" space for remote workers: high bit set, counter
+/// below, so pool bookkeeping that keys on pid works identically for
+/// children and dialed connections without ever colliding with a real
+/// child pid.
+static REMOTE_ID: AtomicU32 = AtomicU32::new(1);
+
+const REMOTE_PID_BIT: u32 = 0x8000_0000;
+
+/// A live shard worker: a child process or a dialed remote connection,
+/// its conversation, the fleet device it stands in for, and a health
+/// flag the pool consults on check-in.
 pub struct WorkerHandle {
-    child: Child,
+    backing: Backing,
     conn: WireConn,
     device: usize,
     pid: u32,
+    peer_version: u32,
     healthy: bool,
 }
 
 impl WorkerHandle {
-    /// Spawn a fresh worker for `device`.
+    /// Spawn a fresh worker child for `device` and complete the
+    /// version handshake.
     pub fn spawn(device: usize) -> Result<WorkerHandle, TransportError> {
         let mut cmd = worker_command();
         cmd.arg("shard-worker").stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::null());
@@ -128,7 +174,78 @@ impl WorkerHandle {
         let stdin = child.stdin.take().expect("piped stdin");
         let stdout = child.stdout.take().expect("piped stdout");
         let pid = child.id();
-        Ok(WorkerHandle { child, conn: WireConn::new(stdin, stdout), device, pid, healthy: true })
+        let mut handle = WorkerHandle {
+            backing: Backing::Child(child),
+            conn: WireConn::new(Box::new(stdin), Box::new(stdout)),
+            device,
+            pid,
+            peer_version: 0,
+            healthy: true,
+        };
+        handle.handshake()?;
+        Ok(handle)
+    }
+
+    /// Dial a remote shard-server for `device` and complete the
+    /// version handshake.  Dial failures are [`SpawnFailed`]
+    /// (retryable — the pool backs off and redials); a reachable peer
+    /// speaking the wrong protocol is a [`Protocol`] error
+    /// (not retryable).
+    ///
+    /// [`SpawnFailed`]: TransportErrorKind::SpawnFailed
+    /// [`Protocol`]: TransportErrorKind::Protocol
+    pub fn dial(
+        device: usize,
+        endpoint: &Endpoint,
+        timeout: Duration,
+    ) -> Result<WorkerHandle, TransportError> {
+        let (writer, reader, control) = net::connect(endpoint, timeout).map_err(|e| {
+            TransportError::new(
+                TransportErrorKind::SpawnFailed,
+                device,
+                format!("dialing {endpoint}: {e}"),
+            )
+        })?;
+        let pid = REMOTE_PID_BIT | (REMOTE_ID.fetch_add(1, Ordering::Relaxed) & !REMOTE_PID_BIT);
+        let mut handle = WorkerHandle {
+            backing: Backing::Remote { endpoint: endpoint.clone(), control },
+            conn: WireConn::new(writer, reader),
+            device,
+            pid,
+            peer_version: 0,
+            healthy: true,
+        };
+        handle.handshake()?;
+        Ok(handle)
+    }
+
+    /// Open the conversation: send our [`PROTOCOL_VERSION`], require
+    /// the matching ack.  A version-skewed peer answers with an
+    /// in-band error and is reported as a [`Protocol`] failure.
+    ///
+    /// [`Protocol`]: TransportErrorKind::Protocol
+    fn handshake(&mut self) -> Result<(), TransportError> {
+        let reply = self
+            .call(&Frame::Hello { version: PROTOCOL_VERSION })
+            .map_err(|e| io_to_transport(self.device, "hello", &e))?;
+        match reply {
+            Frame::HelloAck { version } if version == PROTOCOL_VERSION => {
+                self.peer_version = version;
+                Ok(())
+            }
+            Frame::HelloAck { version } => {
+                self.healthy = false;
+                Err(TransportError::new(
+                    TransportErrorKind::Protocol,
+                    self.device,
+                    format!("peer acked protocol v{version}, need v{PROTOCOL_VERSION}"),
+                ))
+            }
+            other => {
+                self.healthy = false;
+                Err(unexpected_reply(self.device, "hello", &other))
+            }
+        }
     }
 
     /// Fleet device this worker stands in for.
@@ -136,9 +253,29 @@ impl WorkerHandle {
         self.device
     }
 
-    /// OS process id of the worker.
+    /// OS process id of a child worker, or a synthetic high-bit id for
+    /// a dialed remote.
     pub fn pid(&self) -> u32 {
         self.pid
+    }
+
+    /// True when this handle speaks to a dialed remote endpoint rather
+    /// than a spawned child.
+    pub fn is_remote(&self) -> bool {
+        matches!(self.backing, Backing::Remote { .. })
+    }
+
+    /// The endpoint behind a remote handle (`None` for children).
+    pub fn endpoint(&self) -> Option<&Endpoint> {
+        match &self.backing {
+            Backing::Remote { endpoint, .. } => Some(endpoint),
+            Backing::Child(_) => None,
+        }
+    }
+
+    /// The protocol version the peer acked during the handshake.
+    pub fn peer_version(&self) -> u32 {
+        self.peer_version
     }
 
     /// False once any round trip against this worker has failed.
@@ -158,14 +295,25 @@ impl WorkerHandle {
     }
 
     /// Liveness check: ping with `nonce`, expect the echoed pong.
+    /// Remote handles bound the wait with `PING_TIMEOUT` — a hung or
+    /// partitioned peer fails the ping instead of blocking checkout
+    /// forever (a dead child's pipe errors immediately, so children
+    /// need no deadline).
     pub fn ping(&mut self, nonce: u64) -> bool {
-        match self.call(&Frame::Ping { nonce }) {
-            Ok(Frame::Pong { nonce: echoed }) if echoed == nonce => true,
-            _ => {
-                self.healthy = false;
-                false
-            }
+        if let Backing::Remote { control, .. } = &self.backing {
+            let _ = control.set_read_timeout(Some(PING_TIMEOUT));
         }
+        let ok = matches!(
+            self.call(&Frame::Ping { nonce }),
+            Ok(Frame::Pong { nonce: echoed }) if echoed == nonce
+        );
+        if let Backing::Remote { control, .. } = &self.backing {
+            let _ = control.set_read_timeout(None);
+        }
+        if !ok {
+            self.healthy = false;
+        }
+        ok
     }
 
     /// Bandwidth probe: ship `len` opaque bytes, expect the length ack.
@@ -186,15 +334,28 @@ impl WorkerHandle {
         std::mem::take(&mut self.conn.window)
     }
 
-    /// Best-effort orderly shutdown, then kill + reap.
+    /// Best-effort orderly shutdown: a Shutdown frame, then kill + reap
+    /// for children or a socket half-close for remotes (the server's
+    /// connection thread ends; the daemon itself keeps serving).
     pub fn kill(&mut self) {
         let _ = write_frame(&mut self.conn.writer, &Frame::Shutdown)
             .and_then(|_| self.conn.writer.flush());
-        let _ = self.child.kill();
-        let _ = self.child.wait();
+        match &mut self.backing {
+            Backing::Child(child) => {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            Backing::Remote { control, .. } => {
+                let _ = control.shutdown();
+            }
+        }
         self.healthy = false;
     }
 }
+
+/// How long a remote health ping may wait before the peer is declared
+/// unreachable.
+const PING_TIMEOUT: Duration = Duration::from_secs(2);
 
 impl Drop for WorkerHandle {
     fn drop(&mut self) {
@@ -202,7 +363,8 @@ impl Drop for WorkerHandle {
     }
 }
 
-/// [`Transport`] backend that drives shard members as worker processes.
+/// [`Transport`] backend that drives shard members as worker processes
+/// and/or dialed remote connections.
 pub struct ProcessTransport {
     workers: Vec<WorkerHandle>,
     rows: Vec<usize>,
@@ -239,6 +401,26 @@ impl ProcessTransport {
     pub fn spawn(devices: &[usize]) -> Result<ProcessTransport, TransportError> {
         let workers =
             devices.iter().map(|&d| WorkerHandle::spawn(d)).collect::<Result<Vec<_>, _>>()?;
+        Ok(Self { rows: vec![0; workers.len()], workers })
+    }
+
+    /// One worker per member: dial the endpoint where one is given,
+    /// spawn a local child otherwise.  `endpoints` is indexed like
+    /// `devices`.
+    pub fn spawn_or_dial(
+        devices: &[usize],
+        endpoints: &[Option<Endpoint>],
+        dial_timeout: Duration,
+    ) -> Result<ProcessTransport, TransportError> {
+        assert_eq!(devices.len(), endpoints.len(), "one endpoint slot per member");
+        let workers = devices
+            .iter()
+            .zip(endpoints)
+            .map(|(&d, ep)| match ep {
+                Some(ep) => WorkerHandle::dial(d, ep, dial_timeout),
+                None => WorkerHandle::spawn(d),
+            })
+            .collect::<Result<Vec<_>, _>>()?;
         Ok(Self { rows: vec![0; workers.len()], workers })
     }
 
@@ -313,7 +495,11 @@ impl ProcessTransport {
 
 impl Transport for ProcessTransport {
     fn kind(&self) -> TransportKind {
-        TransportKind::Process
+        if self.workers.iter().any(WorkerHandle::is_remote) {
+            TransportKind::Socket
+        } else {
+            TransportKind::Process
+        }
     }
 
     fn members(&self) -> usize {
@@ -343,6 +529,103 @@ impl Transport for ProcessTransport {
             )),
             other => Err(unexpected_reply(member, "matvec", &other)),
         }
+    }
+
+    fn matvec_block(
+        &mut self,
+        member: usize,
+        k_cols: usize,
+        xs: &[f64],
+        ys: &mut [f64],
+    ) -> Result<(), TransportError> {
+        debug_assert_eq!(ys.len(), k_cols * self.rows[member], "block gather must match upload");
+        let frame = Frame::MatvecBlock { k: k_cols as u64, xs: Values::F64(xs.to_vec()) };
+        let reply = self.workers[member]
+            .call(&frame)
+            .map_err(|e| io_to_transport(member, "matvec-block", &e))?;
+        match reply {
+            Frame::YBlock { y } if y.len() == ys.len() => {
+                ys.copy_from_slice(&y.to_f64_vec());
+                Ok(())
+            }
+            Frame::YBlock { y } => Err(TransportError::new(
+                TransportErrorKind::Protocol,
+                member,
+                format!("matvec-block: gather of {} values, expected {}", y.len(), ys.len()),
+            )),
+            other => Err(unexpected_reply(member, "matvec-block", &other)),
+        }
+    }
+
+    /// Overlapped fanout: every member's request frame goes out before
+    /// any reply is read, so the wire time of member `i`'s broadcast
+    /// overlaps member `j`'s compute.  Per-member wall attribution is
+    /// the delta between consecutive reply completions — the deltas sum
+    /// to the fanout's total elapsed time, keeping cycle link-wall
+    /// accounting consistent while the calibration windows learn the
+    /// *overlapped* per-link behavior they will be used to predict.
+    fn matvec_fanout(
+        &mut self,
+        k_cols: usize,
+        xs: &[f64],
+        y_blocks: &mut [Vec<f64>],
+    ) -> Result<(), TransportError> {
+        debug_assert_eq!(y_blocks.len(), self.workers.len(), "one gather slot per member");
+        let started = Instant::now();
+        let mut sent = vec![0u64; y_blocks.len()];
+        for (member, y) in y_blocks.iter().enumerate() {
+            if y.is_empty() {
+                continue;
+            }
+            let frame = if k_cols == 1 {
+                Frame::Matvec { x: Values::F64(xs.to_vec()) }
+            } else {
+                Frame::MatvecBlock { k: k_cols as u64, xs: Values::F64(xs.to_vec()) }
+            };
+            let h = &mut self.workers[member];
+            match h.conn.send(&frame) {
+                Ok(wrote) => sent[member] = wrote as u64,
+                Err(e) => {
+                    h.healthy = false;
+                    return Err(io_to_transport(member, "matvec-fanout send", &e));
+                }
+            }
+        }
+        let mut prev = 0.0;
+        for (member, y) in y_blocks.iter_mut().enumerate() {
+            if y.is_empty() {
+                continue;
+            }
+            let h = &mut self.workers[member];
+            let (reply, read) = match h.conn.recv() {
+                Ok(ok) => ok,
+                Err(e) => {
+                    h.healthy = false;
+                    return Err(io_to_transport(member, "matvec-fanout recv", &e));
+                }
+            };
+            let now = started.elapsed().as_secs_f64();
+            h.conn.account(sent[member] + read as u64, (now - prev).max(0.0));
+            prev = now;
+            match reply {
+                Frame::YBlock { y: got } if got.len() == y.len() => {
+                    y.copy_from_slice(&got.to_f64_vec());
+                }
+                Frame::YBlock { y: got } => {
+                    return Err(TransportError::new(
+                        TransportErrorKind::Protocol,
+                        member,
+                        format!(
+                            "matvec-fanout: gather of {} values, expected {}",
+                            got.len(),
+                            y.len()
+                        ),
+                    ))
+                }
+                other => return Err(unexpected_reply(member, "matvec-fanout", &other)),
+            }
+        }
+        Ok(())
     }
 
     fn dot_partial(

@@ -16,7 +16,7 @@ use std::time::Instant;
 
 use crate::linalg::{blas, CsrMatrix, DenseMatrix, LinearOperator, SystemMatrix};
 
-use super::wire::{read_frame, write_frame, Frame, Values};
+use super::wire::{read_frame, write_frame, Frame, Values, PROTOCOL_VERSION};
 
 /// One worker's in-memory state between frames.
 struct WorkerState {
@@ -84,6 +84,35 @@ impl WorkerState {
                 self.ops += 1;
                 Frame::YBlock { y: Values::F64(y) }
             }
+            Frame::MatvecBlock { k, xs } => {
+                let shard = self.shard.as_ref().ok_or("matvec-block before upload")?;
+                let k = k as usize;
+                if k == 0 {
+                    return Err("matvec-block: zero columns".into());
+                }
+                let xs = xs.to_f64_vec();
+                if xs.len() % k != 0 {
+                    return Err(format!(
+                        "matvec-block: {} values do not split into {k} columns",
+                        xs.len()
+                    ));
+                }
+                let n = xs.len() / k;
+                let mut ys = vec![0.0f64; k * self.rows];
+                if self.rows > 0 {
+                    // column by column through the same kernel the
+                    // single-RHS path uses — per-column results are
+                    // bit-identical to k separate Matvec frames
+                    for c in 0..k {
+                        shard.apply_into(
+                            &xs[c * n..(c + 1) * n],
+                            &mut ys[c * self.rows..(c + 1) * self.rows],
+                        );
+                    }
+                }
+                self.ops += k as u64;
+                Frame::YBlock { y: Values::F64(ys) }
+            }
             Frame::Dot { x, y } => {
                 if x.len() != y.len() {
                     return Err(format!("dot: operand lengths {} vs {}", x.len(), y.len()));
@@ -103,6 +132,15 @@ impl WorkerState {
                 ops: self.ops,
             },
             Frame::Ping { nonce } => Frame::Pong { nonce },
+            Frame::Hello { version } => {
+                if version != PROTOCOL_VERSION {
+                    return Err(format!(
+                        "protocol version mismatch: peer speaks v{version}, \
+                         this worker speaks v{PROTOCOL_VERSION}"
+                    ));
+                }
+                Frame::HelloAck { version: PROTOCOL_VERSION }
+            }
             Frame::Probe { payload } => Frame::ProbeAck { len: payload.len() as u64 },
             Frame::Shutdown => return Ok(None),
             other => return Err(format!("unexpected request frame '{}'", other.name())),
@@ -221,6 +259,71 @@ mod tests {
         assert!(matches!(&replies[0], Frame::Err { message } if message.contains("upload")));
         assert_eq!(replies[1], Frame::Pong { nonce: 77 }, "worker survives a bad frame");
         assert!(matches!(&replies[2], Frame::Err { message } if message.contains("scalar")));
+    }
+
+    #[test]
+    fn worker_block_matvec_matches_k_single_matvecs_bit_for_bit() {
+        let a = SystemMatrix::Dense(generators::dense_shifted_random(18, 6.0, 9));
+        let sharded = ShardedMatrix::split(&a, RowBlocks::even(18, 2));
+        let shard = sharded.shard(0);
+        let SystemMatrix::Dense(d) = shard else { panic!("dense shard") };
+        let upload = Frame::UploadDense {
+            rows: d.nrows() as u64,
+            n: d.ncols() as u64,
+            values: Values::F64(d.data().to_vec()),
+        };
+        let cols: Vec<Vec<f64>> =
+            (0..3).map(|s| generators::random_vector(18, 40 + s)).collect();
+        let mut xs = Vec::new();
+        for c in &cols {
+            xs.extend_from_slice(c);
+        }
+        let mut script = vec![upload.clone(), Frame::MatvecBlock { k: 3, xs: Values::F64(xs) }];
+        for c in &cols {
+            script.push(Frame::Matvec { x: Values::F64(c.clone()) });
+        }
+        let replies = converse(&script);
+        let Frame::YBlock { y: Values::F64(block) } = &replies[1] else {
+            panic!("block reply: {:?}", replies[1])
+        };
+        let rows = d.nrows();
+        assert_eq!(block.len(), 3 * rows);
+        for (c, reply) in replies[2..].iter().enumerate() {
+            let Frame::YBlock { y: Values::F64(single) } = reply else { panic!() };
+            for (a, b) in block[c * rows..(c + 1) * rows].iter().zip(single) {
+                assert_eq!(a.to_bits(), b.to_bits(), "column {c} must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_handshake_acks_matching_version_and_refuses_others() {
+        let replies = converse(&[
+            Frame::Hello { version: PROTOCOL_VERSION },
+            Frame::Hello { version: PROTOCOL_VERSION + 1 },
+            Frame::Ping { nonce: 5 },
+        ]);
+        assert_eq!(replies[0], Frame::HelloAck { version: PROTOCOL_VERSION });
+        assert!(
+            matches!(&replies[1], Frame::Err { message } if message.contains("version")),
+            "mismatch must be refused in-band: {:?}",
+            replies[1]
+        );
+        assert_eq!(replies[2], Frame::Pong { nonce: 5 }, "worker survives the refusal");
+    }
+
+    #[test]
+    fn worker_rejects_malformed_block_requests_in_band() {
+        let replies = converse(&[
+            Frame::MatvecBlock { k: 2, xs: Values::F64(vec![1.0; 8]) },
+            Frame::UploadDense { rows: 2, n: 2, values: Values::F64(vec![1.0, 0.0, 0.0, 1.0]) },
+            Frame::MatvecBlock { k: 0, xs: Values::F64(vec![]) },
+            Frame::MatvecBlock { k: 3, xs: Values::F64(vec![1.0; 7]) },
+        ]);
+        assert!(matches!(&replies[0], Frame::Err { message } if message.contains("upload")));
+        assert_eq!(replies[1], Frame::Ok);
+        assert!(matches!(&replies[2], Frame::Err { message } if message.contains("zero")));
+        assert!(matches!(&replies[3], Frame::Err { message } if message.contains("columns")));
     }
 
     #[test]

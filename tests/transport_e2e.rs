@@ -1,12 +1,20 @@
-//! End-to-end transport tests: process-mode sharded solves are
-//! bit-identical to the in-process reference, measured link calibration
-//! out-predicts the analytic wire model, and a shard-worker crash fails
-//! only the owning job with a typed error while siblings complete and
-//! the pool respawns the worker for the next wave.
+//! End-to-end transport tests: wire-mode sharded solves (worker pipes
+//! and loopback sockets) are bit-identical to the in-process reference,
+//! measured link calibration out-predicts the analytic wire model, a
+//! shard-worker crash or dropped socket connection fails only the owning
+//! job with a typed error while siblings complete and the pool
+//! respawns/redials for the next wave, a version-skewed socket peer is
+//! refused at dial time, and a same-matrix burst on a socket-sharded
+//! placement folds into one wire-level block solve.
 
+use std::io::BufReader;
+use std::net::Shutdown;
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use gmres_rs::backend::Policy;
+use gmres_rs::coordinator::batcher::BatcherConfig;
 use gmres_rs::coordinator::{
     MatrixSpec, RouterConfig, ServiceConfig, SolveRequest, SolveService,
 };
@@ -15,7 +23,10 @@ use gmres_rs::gmres::{GmresConfig, RestartedGmres};
 use gmres_rs::linalg::{generators, SystemMatrix, SystemShape};
 use gmres_rs::planner::{Planner, PlannerConfig};
 use gmres_rs::precision::Precision;
-use gmres_rs::transport::{TransportError, TransportErrorKind, TransportKind};
+use gmres_rs::transport::wire::{read_frame, write_frame, Frame, PROTOCOL_VERSION};
+use gmres_rs::transport::{
+    net, worker, Endpoint, TransportError, TransportErrorKind, TransportKind, WorkerHandle,
+};
 
 /// Point worker spawns at the binary cargo built for this test run, so
 /// the tests don't depend on `gmres-rs` being on PATH.
@@ -244,4 +255,310 @@ fn worker_crash_fails_owner_typed_spares_siblings_and_respawns() {
     assert!(out.plan.placement.is_sharded(), "got {:?}", out.plan.placement);
     assert!(svc.metrics().link_bytes() > 0, "link traffic must reach the metrics");
     svc.shutdown();
+}
+
+/// Acceptance: the same sharded solve dialed over a loopback TCP
+/// shard-server returns the **same f64 bits** as the in-process
+/// transport — iterates, final residual, solution vector, and the whole
+/// residual trail.
+#[test]
+fn socket_transport_solves_bit_identical_to_in_process() {
+    use_test_worker_bin();
+    let bound = net::spawn_server(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+    // every member dials the one daemon; each connection is isolated
+    let fleet = Fleet::parse(&format!("840m@{bound},v100@{bound},host@{bound}")).unwrap();
+    let set = DeviceSet::from_ids(&[0, 1, 2]);
+    let config = GmresConfig { m: 12, tol: 1e-10, max_restarts: 100, ..Default::default() };
+    let (a, b, _) = generators::table1_system(97, 3);
+    let mut reports = Vec::new();
+    for kind in [TransportKind::InProcess, TransportKind::Socket] {
+        let mut engine = build_sharded_engine_t(
+            &fleet,
+            set,
+            Policy::GmatrixLike,
+            SystemMatrix::Dense(a.clone()),
+            b.clone(),
+            &config,
+            0.9,
+            TransportSpec::Kind(kind),
+        )
+        .unwrap();
+        assert_eq!(engine.transport_kind(), kind);
+        let report = RestartedGmres::new(config).solve(&mut engine, None).unwrap();
+        if kind == TransportKind::Socket {
+            let stats = engine.transport_stats();
+            assert!(stats.bytes > 0, "socket solve must move wire bytes");
+            assert!(stats.round_trips > 0, "socket solve must count round trips");
+            assert!(!engine.cycle_link_wall().is_empty(), "per-cycle link wall must be recorded");
+            assert!(
+                !engine.take_link_observations().is_empty(),
+                "socket measurement windows must be drainable"
+            );
+        }
+        reports.push(report);
+    }
+    let (r0, r1) = (&reports[0], &reports[1]);
+    assert!(r0.converged && r1.converged);
+    assert_eq!(r0.cycles, r1.cycles, "cycle counts differ across the socket");
+    assert_eq!(r0.resnorm.to_bits(), r1.resnorm.to_bits(), "final residual bits differ");
+    for (i, (x0, x1)) in r0.x.iter().zip(r1.x.iter()).enumerate() {
+        assert_eq!(x0.to_bits(), x1.to_bits(), "x[{i}] bits differ across the socket");
+    }
+    for (h0, h1) in r0.history.resnorms.iter().zip(r1.history.resnorms.iter()) {
+        assert_eq!(h0.to_bits(), h1.to_bits(), "residual trail diverged across the socket");
+    }
+}
+
+/// A reachable peer that acks the wrong protocol version is refused at
+/// dial time with a typed, non-retryable [`TransportErrorKind::Protocol`]
+/// error — never a misread conversation.
+#[test]
+fn socket_dial_refuses_version_skewed_peer() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let skewed = PROTOCOL_VERSION + 7;
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (hello, _) = read_frame(&mut reader).unwrap();
+        assert!(
+            matches!(hello, Frame::Hello { version } if version == PROTOCOL_VERSION),
+            "client must lead with its own version: {hello:?}"
+        );
+        let mut w = stream;
+        write_frame(&mut w, &Frame::HelloAck { version: skewed }).unwrap();
+        use std::io::Write as _;
+        w.flush().unwrap();
+    });
+    let err = WorkerHandle::dial(
+        1,
+        &Endpoint::Tcp(addr.to_string()),
+        Duration::from_secs(5),
+    )
+    .expect_err("a version-skewed ack must refuse the dial");
+    assert_eq!(err.kind, TransportErrorKind::Protocol, "{err}");
+    assert_eq!(err.member, 1);
+    assert!(err.detail.contains(&format!("v{skewed}")), "{err}");
+    server.join().unwrap();
+}
+
+/// Crash robustness over real sockets: sever every live connection to
+/// the shard-server mid-solve.  The owning sharded job fails with a
+/// typed [`TransportError`], a solo sibling completes untouched,
+/// accounting drains to zero, and the next wave's identical job
+/// completes over fresh redials (counted as reconnects).
+#[test]
+fn connection_loss_fails_owner_typed_spares_sibling_and_redials() {
+    use_test_worker_bin();
+    // the test owns the accept loop so it can sever live connections;
+    // each accepted stream still gets the real per-connection server
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let conns: Arc<Mutex<Vec<std::net::TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let accepted = conns.clone();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let _ = stream.set_nodelay(true);
+            let Ok(reader) = stream.try_clone() else { continue };
+            let Ok(control) = stream.try_clone() else { continue };
+            accepted.lock().unwrap().push(control);
+            std::thread::spawn(move || {
+                let _ = worker::serve(reader, stream);
+            });
+        }
+    });
+
+    // n=600 dense (2.88 MB) exceeds every single budget, so it is
+    // admissible only as a row-block shard over the dialed endpoints
+    let fleet = Fleet::parse(&format!(
+        "840m@tcp://{addr}=2m,v100@tcp://{addr}=2m,a100@tcp://{addr}=1m"
+    ))
+    .unwrap();
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        router: RouterConfig { fleet, ..Default::default() },
+        transport: TransportKind::Socket,
+        ..Default::default()
+    });
+    let pool = svc.worker_pool().expect("socket transport owns a worker pool").clone();
+
+    // owner: unreachable tolerance keeps it cycling until the cut lands
+    let owner_rx = svc
+        .submit_nowait(SolveRequest {
+            matrix: MatrixSpec::Table1 { n: 600, seed: 11 },
+            config: GmresConfig {
+                m: 10,
+                tol: 1e-300,
+                max_restarts: 100_000,
+                ..Default::default()
+            },
+            policy: Some(Policy::GmatrixLike),
+        })
+        .unwrap();
+    // sibling: a solo device job; remote workers belong to sharded jobs
+    // only, so the severed connections must not touch it
+    let sibling_rx = svc
+        .submit_nowait(SolveRequest {
+            matrix: MatrixSpec::Table1 { n: 300, seed: 5 },
+            config: GmresConfig { m: 8, tol: 1e-8, max_restarts: 200, ..Default::default() },
+            policy: Some(Policy::GmatrixLike),
+        })
+        .unwrap();
+
+    // fault injection: keep severing whatever is connected until the
+    // owner reports (redials in between are severed too, so the owner
+    // cannot outrun the fault)
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let owner = loop {
+        assert!(Instant::now() < deadline, "owner did not fail before the deadline");
+        for s in conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        match owner_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(reply) => break reply,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => panic!("owner reply channel dropped"),
+        }
+    };
+    svc.finish();
+    let err = owner.expect_err("owner must fail after its connections died");
+    let typed = err
+        .chain()
+        .find_map(|c| c.downcast_ref::<TransportError>())
+        .unwrap_or_else(|| panic!("owner error is not a typed TransportError: {err:#}"));
+    assert!(
+        matches!(typed.kind, TransportErrorKind::WorkerDied | TransportErrorKind::Protocol),
+        "unexpected transport error kind: {typed}"
+    );
+
+    let sibling = sibling_rx.recv().expect("sibling reply channel dropped");
+    svc.finish();
+    let sibling = sibling.expect("solo sibling must survive the severed shard links");
+    assert!(sibling.report.converged);
+    assert!(!sibling.plan.placement.is_sharded(), "got {:?}", sibling.plan.placement);
+    assert_eq!(svc.inflight(), 0, "in-flight accounting must drain to zero");
+
+    // next wave: the identical sharded job completes over fresh redials
+    let out = svc
+        .submit(SolveRequest {
+            matrix: MatrixSpec::Table1 { n: 600, seed: 11 },
+            config: GmresConfig { m: 10, tol: 1e-8, max_restarts: 200, ..Default::default() },
+            policy: Some(Policy::GmatrixLike),
+        })
+        .expect("post-cut wave must succeed over redialed endpoints");
+    assert!(out.report.converged);
+    assert!(out.plan.placement.is_sharded(), "got {:?}", out.plan.placement);
+    assert!(pool.reconnects() >= 1, "redials after the cut must be counted");
+    assert!(
+        svc.metrics().worker_reconnects() >= 1,
+        "reconnects must surface in service metrics"
+    );
+    svc.shutdown();
+}
+
+/// Acceptance: a k=4 same-matrix burst on a socket-sharded placement
+/// executes as ONE wire-folded block solve — the pool's handshaken
+/// protocol version admits wire folds, the fold counters move, and
+/// every member converges over the wire.
+#[test]
+fn socket_sharded_same_matrix_burst_folds_on_the_wire() {
+    use_test_worker_bin();
+    const K: usize = 4;
+    let bound = net::spawn_server(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+    // budgets force n=600 to shard; endpoints make the shard remote
+    let fleet =
+        Fleet::parse(&format!("840m@{bound}=2m,v100@{bound}=2m,a100@{bound}=1m")).unwrap();
+    let svc = SolveService::start(ServiceConfig {
+        cpu_workers: 1,
+        batcher: BatcherConfig { max_batch: K, max_age: Duration::from_millis(500) },
+        router: RouterConfig { fleet, ..Default::default() },
+        transport: TransportKind::Socket,
+        ..Default::default()
+    });
+    let pool = svc.worker_pool().expect("socket transport owns a worker pool").clone();
+    let handle = svc.register(MatrixSpec::Table1 { n: 600, seed: 7 });
+    let receivers: Vec<_> = (0..K)
+        .map(|i| {
+            handle
+                .solve_rhs(generators::random_vector(600, 70 + i as u64))
+                .m(10)
+                .tol(1e-8)
+                .max_restarts(200)
+                .policy(Policy::GmatrixLike)
+                .submit_nowait()
+                .expect("submit")
+        })
+        .collect();
+    for rx in receivers {
+        let out = rx.recv().expect("reply").expect("fold member must solve");
+        assert!(out.report.converged);
+        assert!(out.plan.placement.is_sharded(), "got {:?}", out.plan.placement);
+        svc.finish();
+    }
+    assert!(
+        pool.supports_wire_folds(),
+        "handshaken peers must admit wire folds (min peer version)"
+    );
+    assert_eq!(svc.metrics().folds(), 1, "{}", svc.metrics().render());
+    assert_eq!(svc.metrics().requests_folded(), K as u64);
+    assert!(svc.metrics().link_bytes() > 0, "the fold must move wire bytes");
+    svc.shutdown();
+}
+
+/// Calibration parity on sockets: after >= 20 calibrated loopback-socket
+/// solves, the planner's calibrated per-link models predict the measured
+/// cycle link walls strictly better than the analytic constants.
+#[test]
+fn calibrated_socket_links_out_predict_analytic_wire_model() {
+    use_test_worker_bin();
+    let bound = net::spawn_server(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+    let fleet = Fleet::parse(&format!("840m@{bound},v100@{bound}")).unwrap();
+    let planner = Planner::new(PlannerConfig {
+        fleet: fleet.clone(),
+        transport: TransportKind::Socket,
+        ..Default::default()
+    });
+    let set = DeviceSet::from_ids(&[0, 1]);
+    let n = 64;
+    let m = 4;
+    let shape = SystemShape::dense(n);
+    let config = GmresConfig { m, tol: 1e-10, max_restarts: 40, ..Default::default() };
+    let mut measured = Vec::new();
+    for i in 0..25u64 {
+        let (a, b, _) = generators::table1_system(n, 300 + i);
+        let mut engine = build_sharded_engine_t(
+            &fleet,
+            set,
+            Policy::GmatrixLike,
+            SystemMatrix::Dense(a),
+            b,
+            &config,
+            0.9,
+            TransportSpec::Kind(TransportKind::Socket),
+        )
+        .unwrap();
+        let _ = RestartedGmres::new(config).solve(&mut engine, None).unwrap();
+        let walls = engine.cycle_link_wall();
+        assert!(!walls.is_empty(), "solve {i} recorded no cycles");
+        measured.push(walls.iter().sum::<f64>() / walls.len() as f64);
+        for (d, obs) in engine.take_link_observations() {
+            planner.observe_link(d, &obs);
+        }
+    }
+    let (calibrated_links, windows) = planner.link_observations();
+    assert_eq!(calibrated_links, 2, "both socket links must be calibrated");
+    assert!(windows >= 20, "need >= 20 observation windows, got {windows}");
+
+    let (_, cycle_calibrated) = planner.process_wire_split(set, &shape, m, Precision::F64, true);
+    let (_, cycle_analytic) = planner.process_wire_split(set, &shape, m, Precision::F64, false);
+    let mean_rel_err = |pred: f64| {
+        measured.iter().map(|&w| ((pred - w) / w).abs()).sum::<f64>() / measured.len() as f64
+    };
+    assert!(
+        mean_rel_err(cycle_calibrated) < mean_rel_err(cycle_analytic),
+        "calibrated socket links must out-predict the analytic constants \
+         (predicted {cycle_calibrated:.3e} vs {cycle_analytic:.3e}, measured mean {:.3e})",
+        measured.iter().sum::<f64>() / measured.len() as f64
+    );
 }
